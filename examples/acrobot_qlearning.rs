@@ -1,0 +1,92 @@
+//! E5 — the paper's §4.2 reinforcement-learning experiment: Q-learning
+//! on Acrobot-v1 with an MLP Q-function, then a comparison of the
+//! greedy policy under three inference paths:
+//!
+//! * the fp32 rust network,
+//! * the SPx-quantized network on the FPGA simulator's decoded path,
+//! * the fp32 network through the XLA/PJRT `qnet_fp32_b1` artifact.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example acrobot_qlearning -- 60
+//! ```
+//! (optional first arg = training episodes, default 80)
+
+use edgemlp::fpga::accelerator::{AccelConfig, Accelerator, QuantizedMlp};
+use edgemlp::quant::spx::SpxConfig;
+use edgemlp::quant::Calibration;
+use edgemlp::rl::qlearn::{evaluate_policy, QLearnConfig, QLearner};
+use edgemlp::rl::Acrobot;
+use edgemlp::runtime::executable::qnet_inputs;
+use edgemlp::runtime::{Registry, Runtime};
+use edgemlp::util::mean;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let episodes: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(80);
+
+    // ---- Train. ----
+    let mut env = Acrobot::new();
+    let mut learner = QLearner::new(&env, QLearnConfig { episodes, ..Default::default() });
+    println!("training Q-learning on Acrobot-v1 ({episodes} episodes)...");
+    let stats = learner.train(&mut env);
+    for chunk in stats.chunks(10) {
+        let mean_ret: f64 =
+            chunk.iter().map(|s| s.return_sum as f64).sum::<f64>() / chunk.len() as f64;
+        println!(
+            "  episodes {:>3}-{:>3}: mean return {:>7.1}  ε={:.2}",
+            chunk[0].episode,
+            chunk.last().unwrap().episode,
+            mean_ret,
+            chunk.last().unwrap().epsilon
+        );
+    }
+    let early: f64 = stats[..10.min(stats.len())]
+        .iter()
+        .map(|s| s.return_sum as f64)
+        .sum::<f64>()
+        / 10.0f64.min(stats.len() as f64);
+    let late: f64 = stats[stats.len().saturating_sub(10)..]
+        .iter()
+        .map(|s| s.return_sum as f64)
+        .sum::<f64>()
+        / 10.0f64.min(stats.len() as f64);
+    println!("learning progress: first-10 mean {early:.1} → last-10 mean {late:.1}");
+
+    // ---- Evaluate the greedy policy through each inference path. ----
+    let eval_eps = 10;
+    let qnet = learner.qnet.clone();
+
+    let mut fp32_q = |obs: &[f32]| qnet.forward_one(obs);
+    let fp32 = evaluate_policy(&mut env, &mut fp32_q, eval_eps, 123);
+
+    let quant =
+        QuantizedMlp::from_mlp(&learner.qnet, &SpxConfig::spx(8, 2), Calibration::MaxAbs, None);
+    let accel = Accelerator::new(quant, AccelConfig::default_fpga());
+    let mut spx_q = |obs: &[f32]| accel.forward_decoded(obs);
+    let spx = evaluate_policy(&mut env, &mut spx_q, eval_eps, 123);
+
+    let to64 = |v: &[f32]| v.iter().map(|&x| x as f64).collect::<Vec<_>>();
+    println!("\ngreedy-policy mean return over {eval_eps} episodes:");
+    println!("  fp32 rust:        {:>8.1}", mean(&to64(&fp32)));
+    println!("  SPx(b=8,x=2) sim: {:>8.1}", mean(&to64(&spx)));
+
+    // XLA path (optional — needs artifacts).
+    let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if artifacts.join("manifest.json").exists() {
+        let rt = Runtime::new(Registry::open(&artifacts)?)?;
+        let model = rt.load("qnet_fp32_b1")?;
+        let qnet2 = learner.qnet.clone();
+        let mut xla_q =
+            |obs: &[f32]| model.run(&qnet_inputs(&qnet2, obs)).expect("xla qnet run");
+        let xla = evaluate_policy(&mut env, &mut xla_q, eval_eps, 123);
+        println!("  fp32 via XLA:     {:>8.1}", mean(&to64(&xla)));
+        // fp32 rust and fp32-via-XLA compute the same function, so the
+        // greedy trajectories — and returns — must match exactly.
+        assert_eq!(fp32, xla, "fp32 rust and XLA policies diverged");
+    } else {
+        println!("  (XLA path skipped — run `make artifacts`)");
+    }
+
+    println!("\nacrobot_qlearning OK");
+    Ok(())
+}

@@ -1,0 +1,171 @@
+//! End-to-end driver (deliverable (e) of DESIGN.md): the full edge
+//! serving scenario on a real small workload.
+//!
+//! * trains the paper's MLP on the digit dataset, logging the loss
+//!   curve (recorded in EXPERIMENTS.md);
+//! * starts the coordinator with all three backends — rust CPU, the
+//!   cycle-accurate FPGA simulator, and the XLA/PJRT artifact;
+//! * serves a Poisson request stream against each backend through the
+//!   dynamic batcher;
+//! * reports latency percentiles, throughput, accuracy, and (for the
+//!   FPGA backend) simulated time-per-sample and power — the live
+//!   version of Table I.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example digit_serving
+//! ```
+
+use edgemlp::coordinator::backend::{Backend, CpuBackend, FnBackend, FpgaBackend};
+use edgemlp::coordinator::batcher::BatchPolicy;
+use edgemlp::coordinator::server::{BackendFactory, Coordinator, CoordinatorConfig};
+use edgemlp::data::batch::SampleStream;
+use edgemlp::data::load_digits;
+use edgemlp::fpga::accelerator::{AccelConfig, Accelerator, QuantizedMlp};
+use edgemlp::fpga::power::PlatformPower;
+use edgemlp::nn::metrics::accuracy;
+use edgemlp::nn::mlp::{argmax, Mlp, MlpConfig};
+use edgemlp::nn::train::{train, TrainConfig};
+use edgemlp::quant::spx::SpxConfig;
+use edgemlp::quant::Calibration;
+use edgemlp::runtime::executable::mlp_fp32_inputs;
+use edgemlp::runtime::{Registry, Runtime};
+use edgemlp::util::rng::Pcg32;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    // ---- 1. Train (loss curve logged). ----
+    let (train_set, test_set) = load_digits(4000, 800, 2021);
+    println!("## training ({} samples, {})", train_set.len(), train_set.source);
+    let mut rng = Pcg32::new(42);
+    let mut mlp = Mlp::new(MlpConfig::paper_mnist(), &mut rng);
+    let log = train(
+        &mut mlp,
+        &train_set.inputs,
+        &train_set.labels,
+        &TrainConfig { epochs: 6, ..Default::default() },
+    );
+    for s in &log {
+        println!("epoch {:>2}  loss {:.4}  train-acc {:.3}", s.epoch, s.loss, s.train_accuracy);
+    }
+    let fp32_acc = accuracy(&mlp, &test_set.inputs, &test_set.labels);
+    println!("fp32 test accuracy: {fp32_acc:.3}\n");
+
+    // ---- 2. Coordinator with three backends. ----
+    let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    anyhow::ensure!(
+        artifacts.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    let cpu_mlp = mlp.clone();
+    let cpu_factory: BackendFactory =
+        Box::new(move || Ok(Box::new(CpuBackend::new(cpu_mlp)) as Box<dyn Backend>));
+
+    let q = QuantizedMlp::from_mlp(
+        &mlp,
+        &SpxConfig::sp2(5),
+        Calibration::MaxAbs,
+        Some(&train_set.inputs),
+    );
+    let q_for_fpga = q.clone();
+    let fpga_factory: BackendFactory = Box::new(move || {
+        Ok(Box::new(FpgaBackend::new(Accelerator::new(
+            q_for_fpga,
+            AccelConfig::default_fpga(),
+        ))) as Box<dyn Backend>)
+    });
+
+    let xla_mlp = mlp.clone();
+    let xla_factory: BackendFactory = Box::new(move || {
+        let rt = Runtime::new(Registry::open(&artifacts)?)?;
+        let model = rt.load("mlp_fp32_b1")?;
+        Ok(Box::new(FnBackend::new("xla", 1, move |inputs: &[Vec<f32>]| {
+            let _keep_alive = &rt;
+            inputs.iter().map(|x| model.run(&mlp_fp32_inputs(&xla_mlp, x))).collect()
+        })) as Box<dyn Backend>)
+    });
+
+    let coord = Coordinator::start(
+        vec![
+            ("cpu".into(), cpu_factory),
+            ("fpga".into(), fpga_factory),
+            ("xla".into(), xla_factory),
+        ],
+        CoordinatorConfig {
+            queue_capacity: 512,
+            policy: BatchPolicy::windowed(64, Duration::from_millis(2)),
+        },
+    )?;
+
+    // ---- 3. Poisson load against each backend. ----
+    let n_requests = 400usize;
+    let rate_rps = 600.0f64;
+    println!("## serving {n_requests} requests at {rate_rps} rps per backend\n");
+    let platform = PlatformPower::paper_measured();
+    for backend in ["cpu", "fpga", "xla"] {
+        let idx = coord.backend_index(backend).unwrap();
+        let mut stream = SampleStream::new(&test_set, 5);
+        let mut load_rng = Pcg32::new(99);
+        let mut expected = Vec::with_capacity(n_requests);
+        let mut receivers = Vec::with_capacity(n_requests);
+        let t0 = Instant::now();
+        let mut next_arrival = 0.0f64;
+        let mut shed = 0u64;
+        for _ in 0..n_requests {
+            let u: f64 = load_rng.uniform().max(1e-12);
+            next_arrival += -u.ln() / rate_rps;
+            let wait = next_arrival - t0.elapsed().as_secs_f64();
+            if wait > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(wait));
+            }
+            let (payload, label) = stream.next_sample();
+            match coord.try_submit_to(idx, payload) {
+                Ok(rx) => {
+                    receivers.push(rx);
+                    expected.push(label);
+                }
+                Err(_) => shed += 1,
+            }
+        }
+        let mut latencies = Vec::new();
+        let mut correct = 0usize;
+        for (rx, label) in receivers.into_iter().zip(&expected) {
+            let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap().unwrap();
+            latencies.push(resp.latency_s);
+            if argmax(&resp.output) == *label {
+                correct += 1;
+            }
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+        let snap = coord.metrics().snapshot();
+        let m = &snap.backends[backend];
+        println!("backend {backend}:");
+        println!("  served {} ({} shed), {:.0} req/s", latencies.len(), shed, latencies.len() as f64 / elapsed);
+        println!(
+            "  latency p50 {:.2} ms  p99 {:.2} ms  mean batch {:.1}",
+            edgemlp::util::percentile(&latencies, 50.0) * 1e3,
+            edgemlp::util::percentile(&latencies, 99.0) * 1e3,
+            m.mean_batch()
+        );
+        println!("  accuracy {:.3}", correct as f64 / latencies.len() as f64);
+        match backend {
+            "fpga" => {
+                let accel = Accelerator::new(q.clone(), AccelConfig::default_fpga());
+                let cs = &m.cycle_stats;
+                let sim_time = accel.config.pipeline.clocks.cycles_to_seconds(cs.compute_cycles);
+                println!(
+                    "  simulated device: {:.2} µs/sample at {} MHz, {:.1} W (activity model)",
+                    sim_time / latencies.len() as f64 * 1e6,
+                    accel.config.pipeline.clocks.clk_compute_mhz,
+                    accel.config.energy.average_power_w(cs, sim_time)
+                );
+            }
+            "cpu" => println!("  platform power (paper-measured constant): {:.1} W", platform.cpu_w),
+            _ => println!("  platform power (paper-measured constant): {:.1} W", platform.gpu_w),
+        }
+        println!();
+    }
+    coord.shutdown();
+    println!("digit_serving OK");
+    Ok(())
+}

@@ -1,0 +1,37 @@
+//! Host-side performance probe used by the §Perf pass: wallclock
+//! throughput of the FPGA simulator and the rust CPU forward.
+//! `cargo run --release --example perf_probe`
+
+use edgemlp::data::load_digits;
+use edgemlp::fpga::accelerator::{AccelConfig, Accelerator, QuantizedMlp};
+use edgemlp::nn::mlp::{Mlp, MlpConfig};
+use edgemlp::quant::spx::SpxConfig;
+use edgemlp::quant::Calibration;
+use edgemlp::util::rng::Pcg32;
+use std::time::Instant;
+fn main() {
+    let (_, test) = load_digits(64, 200, 2021);
+    let mut rng = Pcg32::new(42);
+    let mlp = Mlp::new(MlpConfig::paper_mnist(), &mut rng);
+    // 1. FPGA simulator host throughput
+    let q = QuantizedMlp::from_mlp(&mlp, &SpxConfig::sp2(5), Calibration::MaxAbs, None);
+    let accel = Accelerator::new(q, AccelConfig::default_fpga());
+    for i in 0..5 { let _ = accel.infer_one(test.inputs.row(i)); }
+    let t0 = Instant::now();
+    let n = 200;
+    for i in 0..n { std::hint::black_box(accel.infer_one(test.inputs.row(i % test.len()))); }
+    let dt = t0.elapsed().as_secs_f64();
+    println!("fpga-sim: {:.1} samples/s host ({:.3} ms/sample)", n as f64 / dt, dt / n as f64 * 1e3);
+    // 2. CPU batched forward
+    let x = edgemlp::data::batch::gather(&test.inputs, &(0..64).collect::<Vec<_>>());
+    let t0 = Instant::now();
+    let iters = 200;
+    for _ in 0..iters { std::hint::black_box(mlp.forward(&x)); }
+    let dt = t0.elapsed().as_secs_f64();
+    println!("cpu fwd b64: {:.3} ms/batch = {:.2} us/sample", dt / iters as f64 * 1e3, dt / iters as f64 / 64.0 * 1e6);
+    // 3. single-sample cpu
+    let t0 = Instant::now();
+    for i in 0..1000 { std::hint::black_box(mlp.forward_one(test.inputs.row(i % test.len()))); }
+    let dt = t0.elapsed().as_secs_f64();
+    println!("cpu fwd b1: {:.2} us/sample", dt / 1000.0 * 1e6);
+}

@@ -1,0 +1,134 @@
+//! Design-space exploration: sweep SPx configurations (bit budget ×
+//! term count) and microarchitectures (PU count, clocks) on the
+//! cycle-accurate simulator, reporting the accuracy / latency / power
+//! frontier — the codesign loop an FPGA team would actually run before
+//! committing RTL.
+//!
+//! ```bash
+//! cargo run --release --example power_explorer
+//! ```
+
+use edgemlp::bench_harness::Table;
+use edgemlp::data::load_digits;
+use edgemlp::fpga::accelerator::{AccelConfig, Accelerator, QuantizedMlp};
+use edgemlp::fpga::clock::ClockConfig;
+use edgemlp::fpga::pipeline::PipelineConfig;
+use edgemlp::fpga::stats::CycleStats;
+use edgemlp::nn::mlp::{Mlp, MlpConfig};
+use edgemlp::nn::train::{train, TrainConfig};
+use edgemlp::quant::spx::SpxConfig;
+use edgemlp::quant::Calibration;
+use edgemlp::util::rng::Pcg32;
+
+fn main() {
+    // Shared trained model.
+    let (train_set, test_set) = load_digits(3000, 400, 2021);
+    let mut rng = Pcg32::new(42);
+    let mut mlp = Mlp::new(MlpConfig::paper_mnist(), &mut rng);
+    let _ = train(
+        &mut mlp,
+        &train_set.inputs,
+        &train_set.labels,
+        &TrainConfig { epochs: 5, ..Default::default() },
+    );
+
+    let n_eval = 120usize;
+
+    // ---- Sweep 1: quantization configs at the default microarch. ----
+    println!("## SPx design space (accuracy vs energy, default microarchitecture)\n");
+    let mut t = Table::new(&[
+        "scheme",
+        "bits",
+        "x",
+        "accuracy",
+        "µs/sample",
+        "power (W)",
+        "µJ/inference",
+        "weight KiB",
+    ]);
+    let mut configs: Vec<(String, SpxConfig)> = Vec::new();
+    for bits in [3u32, 4, 5, 6, 8] {
+        configs.push((format!("sp2(b={bits})"), SpxConfig::sp2(bits.max(3))));
+    }
+    configs.push(("spx(b=6,x=3)".into(), SpxConfig::spx(6, 3)));
+    configs.push(("spx(b=8,x=3)".into(), SpxConfig::spx(8, 3)));
+    for (name, spx) in configs {
+        let q = QuantizedMlp::from_mlp(&mlp, &spx, Calibration::MaxAbs, None);
+        let weight_kib = q.weight_bits() as f64 / 8.0 / 1024.0;
+        let accel = Accelerator::new(q, AccelConfig::default_fpga());
+        let (acc, stats) = evaluate(&accel, &test_set, n_eval);
+        let time = accel.seconds_per_inference(&stats) / n_eval as f64;
+        let power = accel.power_w(&stats);
+        let energy_uj =
+            accel.config.energy.total_energy_j(&stats, time * n_eval as f64) / n_eval as f64 * 1e6;
+        t.row(&[
+            name,
+            spx.total_bits().to_string(),
+            spx.num_terms().to_string(),
+            format!("{acc:.3}"),
+            format!("{:.2}", time * 1e6),
+            format!("{power:.1}"),
+            format!("{energy_uj:.1}"),
+            format!("{weight_kib:.0}"),
+        ]);
+    }
+    t.print();
+
+    // ---- Sweep 2: microarchitecture at fixed SP2(b=5). ----
+    println!("\n## Microarchitecture sweep at SP2(b=5)\n");
+    let q = QuantizedMlp::from_mlp(&mlp, &SpxConfig::sp2(5), Calibration::MaxAbs, None);
+    let mut t = Table::new(&["PUs", "clk MHz", "bw words", "µs/sample", "stall %", "power (W)"]);
+    for (pus, clk, bw) in [
+        (32usize, 100.0f64, 64u32),
+        (64, 100.0, 128),
+        (128, 150.0, 256),
+        (128, 200.0, 256),
+        (256, 150.0, 512),
+    ] {
+        let config = AccelConfig {
+            pipeline: PipelineConfig {
+                clocks: ClockConfig {
+                    clk_inbuff_mhz: clk / 2.0,
+                    clk_compute_mhz: clk,
+                    bandwidth_words: bw,
+                },
+                num_pus: pus,
+                buffer_capacity_rows: 32,
+                pipeline_depth: 3,
+                lanes: 8,
+                weight_resident: true,
+            },
+            energy: edgemlp::fpga::power::EnergyModel::default_fpga(),
+        };
+        let accel = Accelerator::new(q.clone(), config);
+        let (_, stats) = evaluate(&accel, &test_set, n_eval);
+        let time = accel.seconds_per_inference(&stats) / n_eval as f64;
+        t.row(&[
+            pus.to_string(),
+            format!("{clk:.0}"),
+            bw.to_string(),
+            format!("{:.2}", time * 1e6),
+            format!("{:.1}", 100.0 * stats.stall_fraction()),
+            format!("{:.1}", accel.power_w(&stats)),
+        ]);
+    }
+    t.print();
+    println!("\npower_explorer OK");
+}
+
+fn evaluate(
+    accel: &Accelerator,
+    test_set: &edgemlp::data::Dataset,
+    n: usize,
+) -> (f64, CycleStats) {
+    let mut stats = CycleStats::default();
+    let mut correct = 0usize;
+    for i in 0..n.min(test_set.len()) {
+        let (pred, s) = accel.classify_one(test_set.inputs.row(i));
+        stats.merge(&s);
+        if pred == test_set.labels[i] {
+            correct += 1;
+        }
+    }
+    (correct as f64 / n as f64, stats)
+}

@@ -1,0 +1,75 @@
+//! Quickstart: the minimal end-to-end path through the three layers.
+//!
+//! 1. Train the paper's 784-128-10 MLP on the digit dataset (pure rust).
+//! 2. Quantize it with SP2 (Eq 3.3) — the paper's non-uniform scheme.
+//! 3. Run the same sample through all three inference backends:
+//!    rust CPU, the cycle-accurate FPGA simulator, and the AOT-compiled
+//!    XLA artifact loaded via PJRT (no python at runtime).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use edgemlp::data::load_digits;
+use edgemlp::fpga::accelerator::{AccelConfig, Accelerator, QuantizedMlp};
+use edgemlp::nn::mlp::{argmax, Mlp, MlpConfig};
+use edgemlp::nn::train::{train, TrainConfig};
+use edgemlp::quant::spx::SpxConfig;
+use edgemlp::quant::Calibration;
+use edgemlp::runtime::executable::mlp_fp32_inputs;
+use edgemlp::runtime::Runtime;
+use edgemlp::util::rng::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Data + training (B=64, η=0.5, MSE — the paper's §4.1 recipe).
+    let (train_set, test_set) = load_digits(2000, 200, 2021);
+    println!("dataset: {} train / {} test ({})", train_set.len(), test_set.len(), train_set.source);
+    let mut rng = Pcg32::new(42);
+    let mut mlp = Mlp::new(MlpConfig::paper_mnist(), &mut rng);
+    let log = train(
+        &mut mlp,
+        &train_set.inputs,
+        &train_set.labels,
+        &TrainConfig { epochs: 4, ..Default::default() },
+    );
+    println!("final train loss {:.4}", log.last().unwrap().loss);
+
+    // 2. SP2 quantization at b=5 (1 sign + 2+2 exponent bits).
+    let q = QuantizedMlp::from_mlp(&mlp, &SpxConfig::sp2(5), Calibration::MaxAbs, None);
+    println!(
+        "quantized: {} bits/weight vs 32 ({}x compression)",
+        5,
+        32 / 5
+    );
+
+    // 3a. CPU backend.
+    let x = test_set.inputs.row(0);
+    let label = test_set.labels[0];
+    let cpu_pred = mlp.classify_one(x);
+
+    // 3b. FPGA simulator backend.
+    let accel = Accelerator::new(q, AccelConfig::default_fpga());
+    let (fpga_pred, stats) = accel.classify_one(x);
+    println!(
+        "fpga sim: {} cycles = {:.2} µs at {} MHz, {:.1} W average",
+        stats.compute_cycles,
+        accel.seconds_per_inference(&stats) * 1e6,
+        accel.config.pipeline.clocks.clk_compute_mhz,
+        accel.power_w(&stats),
+    );
+
+    // 3c. XLA/PJRT backend (AOT artifact; python was only used at build
+    // time by `make artifacts`).
+    let rt = Runtime::new_default()?;
+    let model = rt.load("mlp_fp32_b1")?;
+    let out = model.run(&mlp_fp32_inputs(&mlp, x))?;
+    let xla_pred = argmax(&out);
+
+    println!("\nsample label = {label}");
+    println!("  cpu  backend → {cpu_pred}");
+    println!("  fpga backend → {fpga_pred}");
+    println!("  xla  backend → {xla_pred}");
+    anyhow::ensure!(cpu_pred == xla_pred, "cpu and xla must agree exactly");
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,176 @@
+"""AOT pipeline: lower the L2 graphs to HLO *text* artifacts + manifest.
+
+HLO text (not ``.serialize()``) is the interchange format — the image's
+xla_extension 0.5.1 rejects jax>=0.5 serialized protos (64-bit
+instruction ids); the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Usage (from ``make artifacts``):
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Emits one ``<name>.hlo.txt`` per model variant and ``manifest.json``
+describing every artifact's inputs/outputs so the rust runtime can
+validate shapes before feeding buffers.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .quant import SpxConfig
+
+# The paper's architecture (§4.1) and the Q-network (§4.2).
+MNIST_SIZES = (784, 128, 10)
+QNET_SIZES = (6, 64, 64, 3)
+# SPx configuration baked into the quantized artifacts: SP2 at b=5
+# (1 sign + 2+2 term bits), the paper's headline scheme.
+SPX_TERMS = 2
+SPX_TOTAL_BITS = 5
+# Batch variants: single-sample (edge latency) and the paper's B=64.
+BATCHES = (1, 64)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def mlp_fp32_specs(batch: int):
+    d, h, o = MNIST_SIZES
+    return [
+        ("x", _spec((batch, d))),
+        ("w2", _spec((h, d))),
+        ("b2", _spec((h,))),
+        ("w3", _spec((o, h))),
+        ("b3", _spec((o,))),
+    ]
+
+
+def mlp_spx_specs(batch: int):
+    d, h, o = MNIST_SIZES
+    x = SPX_TERMS
+    return [
+        ("x", _spec((batch, d))),
+        ("signs2", _spec((h, d), jnp.int32)),
+        ("planes2", _spec((x, h, d), jnp.int32)),
+        ("scale2", _spec((1,))),
+        ("b2", _spec((h,))),
+        ("signs3", _spec((o, h), jnp.int32)),
+        ("planes3", _spec((x, o, h), jnp.int32)),
+        ("scale3", _spec((1,))),
+        ("b3", _spec((o,))),
+    ]
+
+
+def qnet_specs(batch: int):
+    d, h1, h2, o = QNET_SIZES
+    return [
+        ("x", _spec((batch, d))),
+        ("w1", _spec((h1, d))),
+        ("b1", _spec((h1,))),
+        ("w2", _spec((h2, h1))),
+        ("b2", _spec((h2,))),
+        ("w3", _spec((o, h2))),
+        ("b3", _spec((o,))),
+    ]
+
+
+def artifact_defs():
+    """(name, fn, specs, meta) for every artifact we ship."""
+    defs = []
+    for batch in BATCHES:
+        defs.append(
+            (
+                f"mlp_fp32_b{batch}",
+                model.mlp_fp32,
+                mlp_fp32_specs(batch),
+                {"model": "mlp_fp32", "batch": batch, "sizes": list(MNIST_SIZES)},
+            )
+        )
+        defs.append(
+            (
+                f"mlp_spx_b{batch}",
+                model.mlp_spx,
+                mlp_spx_specs(batch),
+                {
+                    "model": "mlp_spx",
+                    "batch": batch,
+                    "sizes": list(MNIST_SIZES),
+                    "spx_terms": SPX_TERMS,
+                    "spx_total_bits": SPX_TOTAL_BITS,
+                    "spx_term_bits": list(
+                        SpxConfig.spx(SPX_TOTAL_BITS, SPX_TERMS).term_bits
+                    ),
+                },
+            )
+        )
+    defs.append(
+        (
+            "qnet_fp32_b1",
+            model.qnet_fp32,
+            qnet_specs(1),
+            {"model": "qnet_fp32", "batch": 1, "sizes": list(QNET_SIZES)},
+        )
+    )
+    return defs
+
+
+def build(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: dict = {"format": "hlo-text", "artifacts": {}}
+    for name, fn, specs, meta in artifact_defs():
+        lowered = jax.jit(fn).lower(*[s for _, s in specs])
+        text = to_hlo_text(lowered)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": path,
+            "inputs": [
+                {
+                    "name": arg_name,
+                    "shape": list(s.shape),
+                    "dtype": s.dtype.name,
+                }
+                for arg_name, s in specs
+            ],
+            "outputs": [
+                {
+                    "shape": [meta["batch"], meta["sizes"][-1]],
+                    "dtype": "float32",
+                }
+            ],
+            "meta": meta,
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({len(manifest['artifacts'])} artifacts)")
+    return manifest
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output directory")
+    args = parser.parse_args()
+    build(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Everything here is straight-line jax.numpy with no pallas, no tiling —
+the semantics the kernels must reproduce. pytest compares kernel output
+against these under hypothesis-driven shape/seed sweeps.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def spx_decode_ref(signs, planes, scale):
+    """Decode SPx operands to an f32 weight matrix.
+
+    signs:  (m, n) int32 in {+1, -1}
+    planes: (x, m, n) int32 exponent codes (0 = absent, k -> 2^-k)
+    scale:  (1,) f32 — alpha / max_sum
+    """
+    mags = jnp.where(planes == 0, 0.0, jnp.exp2(-planes.astype(jnp.float32)))
+    w = signs.astype(jnp.float32) * mags.sum(axis=0)
+    return w * scale[0]
+
+
+def spx_matvec_ref(x, signs, planes, scale, bias):
+    """y = x @ decode(W)^T + b for batched x: (B, n) -> (B, m)."""
+    w = spx_decode_ref(signs, planes, scale)  # (m, n)
+    return x @ w.T + bias
+
+
+def dense_ref(x, w, b):
+    """Plain f32 dense layer: (B, n) @ (m, n)^T + (m,)."""
+    return x @ w.T + b
+
+
+def sigmoid_ref(z):
+    return 1.0 / (1.0 + jnp.exp(-z))
+
+
+def mlp_fp32_ref(x, w2, b2, w3, b3):
+    """The paper's Eq 4.2: sigma(W3 sigma(W2 x + b2) + b3), batched."""
+    h = sigmoid_ref(dense_ref(x, w2, b2))
+    return sigmoid_ref(dense_ref(h, w3, b3))
+
+
+def mlp_spx_ref(x, signs2, planes2, scale2, b2, signs3, planes3, scale3, b3):
+    """Eq 4.2 with SPx-decoded weights."""
+    h = sigmoid_ref(spx_matvec_ref(x, signs2, planes2, scale2, b2))
+    return sigmoid_ref(spx_matvec_ref(h, signs3, planes3, scale3, b3))
+
+
+def qnet_ref(x, w1, b1, w2, b2, w3, b3):
+    """Acrobot Q-network: relu-relu-identity."""
+    h1 = jnp.maximum(dense_ref(x, w1, b1), 0.0)
+    h2 = jnp.maximum(dense_ref(h1, w2, b2), 0.0)
+    return dense_ref(h2, w3, b3)

@@ -1,0 +1,128 @@
+"""L1 Pallas kernel: the SPx shift-add matmul (§3.1 + §3.2 on TPU).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the FPGA design's
+shift-add MAC becomes *exponent-field decode* on the VPU — an SPx code k
+IS the (negated, biased) f32 exponent, so decoding is integer work:
+
+    bits = (127 - k) << 23          # f32 for 2^-k, k in 1..127
+    w    = sign * bitcast_f32(bits) # zero when the term is absent
+
+— no transcendental, no table, no multiply. The decoded tile then feeds
+``jnp.dot`` which lowers to the MXU systolic array. The paper's input
+buffer / dual-clock decoupling maps onto the Pallas grid's implicit
+HBM->VMEM double buffering: while the MXU contracts k-tile t, the next
+tile's operands stream in.
+
+Grid/tiling: the output (B, m) is produced in one shot per m-tile
+(grid = m / TILE_M), with the full reduction dimension n resident — for
+the paper's sizes (n = 784, B <= 64) one m-tile's working set is
+  x: B*n*4 = 200 KiB, codes: x_terms*TILE_M*n, dec: TILE_M*n*4
+which for TILE_M = 128, x = 2 is ~1.1 MiB — comfortably inside a 16 MiB
+VMEM budget (exact numbers in DESIGN.md §8).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same artifact
+runs on the rust runtime. Real-TPU perf is *estimated* structurally, not
+measured here.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spx_matvec_kernel(x_ref, signs_ref, planes_ref, scale_ref, bias_ref, o_ref):
+    """One m-tile: decode the SPx codes bitwise, then MXU matmul.
+
+    x_ref:      (B, n)            f32
+    signs_ref:  (TILE_M, n)       int32 (+1/-1)
+    planes_ref: (x, TILE_M, n)    int32 exponent codes
+    scale_ref:  (1,)              f32
+    bias_ref:   (TILE_M,)         f32
+    o_ref:      (B, TILE_M)       f32
+    """
+    planes = planes_ref[...]
+    # Exponent-field decode: 2^-k as bit pattern (127 - k) << 23.
+    bits = ((127 - planes) << 23).astype(jnp.int32)
+    mags = jnp.where(
+        planes == 0,
+        jnp.float32(0.0),
+        jax.lax.bitcast_convert_type(bits, jnp.float32),
+    )
+    # Sum the x term planes, apply the sign plane -> decoded tile.
+    w = signs_ref[...].astype(jnp.float32) * mags.sum(axis=0)  # (TILE_M, n)
+    # MXU contraction: (B, n) x (TILE_M, n)^T.
+    acc = jnp.dot(x_ref[...], w.T, preferred_element_type=jnp.float32)
+    o_ref[...] = acc * scale_ref[0] + bias_ref[...][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m",))
+def spx_matvec(x, signs, planes, scale, bias, *, tile_m: int = 128):
+    """y = x @ decode(signs, planes, scale)^T + bias via the Pallas kernel.
+
+    Shapes: x (B, n); signs (m, n); planes (x, m, n); scale (1,);
+    bias (m,). m must be divisible by tile_m (pad upstream; the paper's
+    m = 128 hidden layer fits exactly, m = 10 output uses tile_m = 10).
+    """
+    batch, n = x.shape
+    m = signs.shape[0]
+    if m % tile_m != 0:
+        raise ValueError(f"m={m} not divisible by tile_m={tile_m}")
+    x_terms = planes.shape[0]
+    grid = (m // tile_m,)
+    return pl.pallas_call(
+        _spx_matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((batch, n), lambda i: (0, 0)),
+            pl.BlockSpec((tile_m, n), lambda i: (i, 0)),
+            pl.BlockSpec((x_terms, tile_m, n), lambda i: (0, i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((tile_m,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((batch, tile_m), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((batch, m), jnp.float32),
+        interpret=True,
+    )(x, signs, planes, scale, bias)
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref):
+    """f32 dense tile: (B, n) x (TILE_M, n)^T + b."""
+    acc = jnp.dot(x_ref[...], w_ref[...].T, preferred_element_type=jnp.float32)
+    o_ref[...] = acc + b_ref[...][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m",))
+def dense(x, w, b, *, tile_m: int = 128):
+    """Plain f32 dense layer as a Pallas kernel (fp32 baseline path)."""
+    batch, n = x.shape
+    m = w.shape[0]
+    if m % tile_m != 0:
+        raise ValueError(f"m={m} not divisible by tile_m={tile_m}")
+    return pl.pallas_call(
+        _dense_kernel,
+        grid=(m // tile_m,),
+        in_specs=[
+            pl.BlockSpec((batch, n), lambda i: (0, 0)),
+            pl.BlockSpec((tile_m, n), lambda i: (i, 0)),
+            pl.BlockSpec((tile_m,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((batch, tile_m), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((batch, m), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+
+
+def vmem_bytes_estimate(batch: int, n: int, tile_m: int, x_terms: int) -> int:
+    """Static VMEM working-set estimate for one grid step of
+    ``spx_matvec`` (DESIGN.md §8 uses this for the L1 perf targets)."""
+    x_bytes = batch * n * 4
+    signs_bytes = tile_m * n * 4
+    planes_bytes = x_terms * tile_m * n * 4
+    decode_bytes = tile_m * n * 4  # the decoded tile
+    out_bytes = batch * tile_m * 4
+    return x_bytes + signs_bytes + planes_bytes + decode_bytes + out_bytes

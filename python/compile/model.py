@@ -1,0 +1,48 @@
+"""L2: the paper's compute graphs in JAX, built on the L1 kernels.
+
+Two MLP variants (Eq 4.2, 784-128-10 sigmoid) — fp32 and SPx — plus the
+Acrobot Q-network. These are the functions ``aot.py`` lowers to HLO
+text; weights are runtime *inputs* (not baked constants) so one artifact
+serves any training checkpoint the rust side produces.
+
+The output layer (m = 10) is not 128-divisible, so its kernel runs with
+tile_m = 10 (a single grid step); the hidden layer uses the full
+tile_m = 128. Sigmoids stay in the XLA graph where they fuse with the
+kernel's output write.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import spx_matmul as k
+
+
+def sigmoid(z):
+    return 1.0 / (1.0 + jnp.exp(-z))
+
+
+def mlp_fp32(x, w2, b2, w3, b3):
+    """Eq 4.2 with f32 weights, dense layers as Pallas kernels.
+
+    x (B, 784); w2 (128, 784); b2 (128,); w3 (10, 128); b3 (10,).
+    Returns (B, 10) class scores in (0, 1).
+    """
+    h = sigmoid(k.dense(x, w2, b2, tile_m=w2.shape[0]))
+    return sigmoid(k.dense(h, w3, b3, tile_m=w3.shape[0]))
+
+
+def mlp_spx(x, signs2, planes2, scale2, b2, signs3, planes3, scale3, b3):
+    """Eq 4.2 with SPx-quantized weights decoded in the L1 kernel.
+
+    signs* (m, n) int32; planes* (x, m, n) int32; scale* (1,) f32.
+    """
+    h = sigmoid(k.spx_matvec(x, signs2, planes2, scale2, b2, tile_m=signs2.shape[0]))
+    return sigmoid(k.spx_matvec(h, signs3, planes3, scale3, b3, tile_m=signs3.shape[0]))
+
+
+def qnet_fp32(x, w1, b1, w2, b2, w3, b3):
+    """Acrobot Q-network (6-64-64-3, relu/relu/identity)."""
+    h1 = jnp.maximum(k.dense(x, w1, b1, tile_m=w1.shape[0]), 0.0)
+    h2 = jnp.maximum(k.dense(h1, w2, b2, tile_m=w2.shape[0]), 0.0)
+    return k.dense(h2, w3, b3, tile_m=w3.shape[0])

@@ -1,0 +1,168 @@
+"""SPx quantization — python mirror of ``rust/src/quant/spx.rs``.
+
+The rust side owns the canonical implementation (it quantizes trained
+weights before they are fed to any backend); this mirror exists so the
+build-time pytest suite can generate hardware-layout operands (sign
+plane + exponent-code planes + scale) for the Pallas kernel without a
+round-trip through rust. The two implementations are pinned together by
+``python/tests/test_quant.py`` which re-derives the level sets from the
+same Eq 3.3/3.4 definitions.
+
+Representation (identical to rust):
+  * per weight: a sign in {+1, -1} and ``x`` exponent codes, where code
+    0 means "term absent" and code k in 1..2^{b_i}-1 contributes 2^-k;
+  * the level set is normalized by its maximum sum so levels span
+    [-1, 1]; the residual per-tensor scale is ``alpha / max_sum``.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class SpxConfig:
+    """Bit widths of the x terms; total bits b = 1 + sum(term_bits)."""
+
+    term_bits: tuple[int, ...]
+
+    def __post_init__(self) -> None:
+        if not self.term_bits:
+            raise ValueError("need at least one term")
+        if any(not (1 <= b <= 7) for b in self.term_bits):
+            raise ValueError(f"term bits must be in 1..=7: {self.term_bits}")
+
+    @staticmethod
+    def sp2(total_bits: int) -> "SpxConfig":
+        if total_bits < 3:
+            raise ValueError("sp2 needs b >= 3")
+        payload = total_bits - 1
+        return SpxConfig((-(-payload // 2), payload // 2))
+
+    @staticmethod
+    def spx(total_bits: int, x: int) -> "SpxConfig":
+        if not (x >= 1 and total_bits > x):
+            raise ValueError("need b > x >= 1")
+        payload = total_bits - 1
+        base, extra = divmod(payload, x)
+        return SpxConfig(tuple(base + (1 if i < extra else 0) for i in range(x)))
+
+    @property
+    def num_terms(self) -> int:
+        return len(self.term_bits)
+
+    @property
+    def total_bits(self) -> int:
+        return 1 + sum(self.term_bits)
+
+
+def code_magnitude(code: tuple[int, ...]) -> float:
+    """Raw (un-normalized) magnitude of a code vector."""
+    return float(sum(0.0 if k == 0 else 2.0 ** (-k) for k in code))
+
+
+@dataclass
+class SpxCodebook:
+    """Normalized level table plus canonical code per level."""
+
+    config: SpxConfig
+    levels: np.ndarray = field(init=False)  # sorted, includes negatives
+    codes_by_level: list[tuple[int, ...]] = field(init=False)
+    max_sum: float = field(init=False)
+
+    def __post_init__(self) -> None:
+        spaces = [range(1 << b) for b in self.config.term_bits]
+        by_mag: dict[float, tuple[int, ...]] = {}
+        for combo in itertools.product(*spaces):
+            mag = code_magnitude(combo)
+            active = sum(1 for k in combo if k != 0)
+            old = by_mag.get(mag)
+            if old is None or (active, combo) < (
+                sum(1 for k in old if k != 0),
+                old,
+            ):
+                by_mag[mag] = combo
+        self.max_sum = max(by_mag)
+        if self.max_sum <= 0.0:
+            raise ValueError("degenerate SPx codebook")
+        levels: list[float] = []
+        mag_to_code: dict[float, tuple[int, ...]] = {}
+        for mag, code in sorted(by_mag.items()):
+            # Normalize in f32 so keys match the stored level values
+            # exactly (the rust side also stores f32 levels).
+            norm = float(np.float32(mag) / np.float32(self.max_sum))
+            mag_to_code[norm] = code
+            levels.append(norm)
+            if norm > 0.0:
+                levels.append(-norm)
+        self.levels = np.array(sorted(levels), dtype=np.float32)
+        self.codes_by_level = []
+        for lvl in self.levels:
+            self.codes_by_level.append(mag_to_code[abs(float(lvl))])
+
+    def nearest(self, x: np.ndarray) -> np.ndarray:
+        """Index of the nearest level, ties to the lower level (matches
+        rust ``Codebook::nearest``)."""
+        ls = self.levels
+        idx = np.searchsorted(ls, x)
+        idx = np.clip(idx, 1, len(ls) - 1)
+        below = ls[idx - 1]
+        above = ls[idx]
+        pick_below = (x - below) <= (above - x)
+        out = np.where(pick_below, idx - 1, idx)
+        # Clamp handled by searchsorted bounds above.
+        out = np.where(x <= ls[0], 0, out)
+        out = np.where(x >= ls[-1], len(ls) - 1, out)
+        return out.astype(np.int64)
+
+
+@dataclass
+class SpxTensor:
+    """Hardware-layout quantized tensor."""
+
+    config: SpxConfig
+    shape: tuple[int, ...]
+    signs: np.ndarray  # int32, +1/-1, flat
+    planes: np.ndarray  # int32, (x, numel) exponent codes
+    scale: float  # alpha / max_sum
+    indices: np.ndarray  # level index per element
+    table: SpxCodebook
+
+    def decode(self) -> np.ndarray:
+        alpha = self.scale * self.table.max_sum
+        return (self.table.levels[self.indices] * alpha).reshape(self.shape)
+
+    def decode_shift_add(self) -> np.ndarray:
+        """Sign · Σ 2^-k · scale — the hardware path (and what the Pallas
+        kernel computes)."""
+        mags = np.where(self.planes == 0, 0.0, np.ldexp(1.0, -self.planes)).sum(axis=0)
+        return (self.signs * mags * self.scale).astype(np.float32).reshape(self.shape)
+
+
+def encode(config: SpxConfig, data: np.ndarray) -> SpxTensor:
+    """Quantize ``data`` with max-abs calibration (the paper's implicit
+    choice and the rust default)."""
+    flat = np.asarray(data, dtype=np.float32).ravel()
+    table = SpxCodebook(config)
+    alpha = float(np.max(np.abs(flat))) if flat.size else 0.0
+    inv = 1.0 / alpha if alpha > 0.0 else 0.0
+    normalized = np.clip(flat * inv, -1.0, 1.0)
+    indices = table.nearest(normalized)
+    levels = table.levels[indices]
+    signs = np.where(levels < 0.0, -1, 1).astype(np.int32)
+    planes = np.zeros((config.num_terms, flat.size), dtype=np.int32)
+    for e, idx in enumerate(indices):
+        for t, k in enumerate(table.codes_by_level[idx]):
+            planes[t, e] = k
+    return SpxTensor(
+        config=config,
+        shape=tuple(np.asarray(data).shape),
+        signs=signs,
+        planes=planes,
+        scale=alpha / table.max_sum,
+        indices=indices,
+        table=table,
+    )

@@ -1,0 +1,119 @@
+"""L2 model graphs: shapes, reference agreement, and AOT lowering."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import aot, model
+from compile.kernels import ref
+from compile.quant import SpxConfig, encode
+
+
+def _mlp_params(seed, scale=0.1):
+    rng = np.random.default_rng(seed)
+    w2 = jnp.array((rng.normal(size=(128, 784)) * scale).astype(np.float32))
+    b2 = jnp.array(rng.normal(size=(128,)).astype(np.float32) * scale)
+    w3 = jnp.array((rng.normal(size=(10, 128)) * scale).astype(np.float32))
+    b3 = jnp.array(rng.normal(size=(10,)).astype(np.float32) * scale)
+    return w2, b2, w3, b3
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    batch=st.sampled_from([1, 3, 64]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_mlp_fp32_matches_reference(batch, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.array(rng.random(size=(batch, 784)).astype(np.float32))
+    params = _mlp_params(seed)
+    got = model.mlp_fp32(x, *params)
+    want = ref.mlp_fp32_ref(x, *params)
+    assert got.shape == (batch, 10)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    # Sigmoid outputs live in (0, 1).
+    assert float(got.min()) > 0.0 and float(got.max()) < 1.0
+
+
+def test_mlp_spx_matches_reference():
+    rng = np.random.default_rng(11)
+    w2, b2, w3, b3 = _mlp_params(11)
+    cfg = SpxConfig.sp2(5)
+    t2 = encode(cfg, np.asarray(w2))
+    t3 = encode(cfg, np.asarray(w3))
+    args = (
+        jnp.array(rng.random(size=(4, 784)).astype(np.float32)),
+        jnp.array(t2.signs.reshape(128, 784)),
+        jnp.array(t2.planes.reshape(2, 128, 784)),
+        jnp.array([t2.scale], dtype=jnp.float32),
+        b2,
+        jnp.array(t3.signs.reshape(10, 128)),
+        jnp.array(t3.planes.reshape(2, 10, 128)),
+        jnp.array([t3.scale], dtype=jnp.float32),
+        b3,
+    )
+    got = model.mlp_spx(*args)
+    want = ref.mlp_spx_ref(*args)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_mlp_spx_tracks_fp32_at_moderate_bits():
+    """Quantized model should be close to fp32 in output space (sigmoid
+    squashes weight error); this is the accuracy-preservation premise."""
+    rng = np.random.default_rng(5)
+    w2, b2, w3, b3 = _mlp_params(5)
+    x = jnp.array(rng.random(size=(8, 784)).astype(np.float32))
+    fp = model.mlp_fp32(x, w2, b2, w3, b3)
+    cfg = SpxConfig.spx(8, 2)
+    t2 = encode(cfg, np.asarray(w2))
+    t3 = encode(cfg, np.asarray(w3))
+    q = model.mlp_spx(
+        x,
+        jnp.array(t2.signs.reshape(128, 784)),
+        jnp.array(t2.planes.reshape(2, 128, 784)),
+        jnp.array([t2.scale], dtype=jnp.float32),
+        b2,
+        jnp.array(t3.signs.reshape(10, 128)),
+        jnp.array(t3.planes.reshape(2, 10, 128)),
+        jnp.array([t3.scale], dtype=jnp.float32),
+        b3,
+    )
+    assert float(jnp.abs(q - fp).max()) < 0.08
+
+
+def test_qnet_matches_reference():
+    rng = np.random.default_rng(3)
+    x = jnp.array(rng.normal(size=(1, 6)).astype(np.float32))
+    params = []
+    for shape in [(64, 6), (64,), (64, 64), (64,), (3, 64), (3,)]:
+        params.append(jnp.array(rng.normal(size=shape).astype(np.float32) * 0.3))
+    got = model.qnet_fp32(x, *params)
+    want = ref.qnet_ref(x, *params)
+    assert got.shape == (1, 3)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_artifact_defs_cover_all_variants():
+    names = [name for name, *_ in aot.artifact_defs()]
+    assert names == [
+        "mlp_fp32_b1",
+        "mlp_spx_b1",
+        "mlp_fp32_b64",
+        "mlp_spx_b64",
+        "qnet_fp32_b1",
+    ]
+
+
+def test_lowering_produces_hlo_text():
+    """Smoke the full AOT path for the smallest artifact: HLO text with
+    an ENTRY computation and the right parameter count."""
+    name, fn, specs, _meta = aot.artifact_defs()[0]  # mlp_fp32_b1
+    import jax
+
+    lowered = jax.jit(fn).lower(*[s for _, s in specs])
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "HloModule" in text
+    for i in range(len(specs)):
+        assert f"parameter({i})" in text, f"missing parameter({i})"

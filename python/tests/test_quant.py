@@ -1,0 +1,110 @@
+"""SPx quantization properties (python mirror) — pinned to the same
+Eq 3.3/3.4 semantics the rust implementation tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.quant import SpxCodebook, SpxConfig, code_magnitude, encode
+
+
+def test_sp2_split():
+    assert SpxConfig.sp2(5).term_bits == (2, 2)
+    assert SpxConfig.sp2(6).term_bits == (3, 2)
+
+
+def test_spx_split_total_bits():
+    for b in range(3, 9):
+        for x in range(1, 4):
+            if b > x:
+                assert SpxConfig.spx(b, x).total_bits == b
+
+
+def test_invalid_configs_rejected():
+    with pytest.raises(ValueError):
+        SpxConfig(())
+    with pytest.raises(ValueError):
+        SpxConfig((8,))
+    with pytest.raises(ValueError):
+        SpxConfig.spx(2, 2)
+
+
+def test_sp2_b3_codebook_manual():
+    # b1=b2=1 -> q_i in {0, 1/2} -> levels {0, +-1/2, +-1} (max_sum 1).
+    t = SpxCodebook(SpxConfig((1, 1)))
+    assert t.max_sum == 1.0
+    np.testing.assert_allclose(t.levels, [-1.0, -0.5, 0.0, 0.5, 1.0])
+
+
+def test_code_magnitude():
+    assert code_magnitude((0, 0)) == 0.0
+    assert code_magnitude((1, 0)) == 0.5
+    assert code_magnitude((1, 1)) == 1.0
+    assert code_magnitude((2, 3)) == 0.375
+
+
+def test_canonical_code_prefers_fewer_terms():
+    t = SpxCodebook(SpxConfig((2, 2)))
+    idx = int(np.where(t.levels == 0.5)[0][0])
+    code = t.codes_by_level[idx]
+    assert sum(1 for k in code if k != 0) == 1
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b=st.integers(min_value=3, max_value=8),
+    x=st.integers(min_value=1, max_value=3),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_decode_paths_agree(b, x, seed):
+    """Table decode == shift-add decode (the kernel's semantics)."""
+    if b <= x:
+        return
+    rng = np.random.default_rng(seed)
+    data = rng.normal(size=64).astype(np.float32)
+    t = encode(SpxConfig.spx(b, x), data)
+    np.testing.assert_allclose(t.decode(), t.decode_shift_add(), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_quantization_idempotent(seed):
+    rng = np.random.default_rng(seed)
+    data = rng.uniform(-3.0, 3.0, size=32).astype(np.float32)
+    cfg = SpxConfig.sp2(5)
+    once = encode(cfg, data).decode()
+    twice = encode(cfg, once).decode()
+    np.testing.assert_allclose(twice, once, rtol=1e-6, atol=1e-7)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_quantization_error_bounded_by_max_gap(seed):
+    rng = np.random.default_rng(seed)
+    data = rng.normal(size=128).astype(np.float32)
+    cfg = SpxConfig.sp2(6)
+    t = encode(cfg, data)
+    alpha = t.scale * t.table.max_sum
+    gaps = np.diff(t.table.levels)
+    max_gap = float(gaps.max())
+    err = np.abs(t.decode() - data)
+    assert err.max() <= (max_gap / 2) * alpha * (1 + 1e-5)
+
+
+def test_levels_symmetric_and_contain_zero():
+    for b in range(3, 8):
+        for x in (1, 2, 3):
+            if b <= x:
+                continue
+            t = SpxCodebook(SpxConfig.spx(b, x))
+            assert 0.0 in t.levels
+            np.testing.assert_allclose(np.sort(-t.levels), t.levels, atol=0)
+
+
+def test_planes_shape_and_sign_values():
+    data = np.linspace(-1, 1, 24).astype(np.float32).reshape(4, 6)
+    t = encode(SpxConfig.spx(7, 3), data)
+    assert t.planes.shape == (3, 24)
+    assert set(np.unique(t.signs)) <= {-1, 1}
+    assert t.shape == (4, 6)

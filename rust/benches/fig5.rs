@@ -1,0 +1,16 @@
+//! Bench: regenerate the paper's Figure 5 (inference time per sample
+//! across training epochs). `cargo bench --bench fig5`.
+
+use edgemlp::experiments::common::ExperimentScale;
+use edgemlp::experiments::fig5;
+
+fn main() {
+    let scale = ExperimentScale::from_env();
+    let points = fig5::run(scale);
+    println!("\n=== Figure 5 — per-epoch inference time per sample (CPU) ===\n");
+    println!("{}", fig5::render(&points));
+    println!(
+        "flatness: CV of the time series = {:.3} (paper's figure is a flat line)",
+        fig5::flatness(&points)
+    );
+}

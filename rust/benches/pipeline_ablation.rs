@@ -1,0 +1,11 @@
+//! Bench: §3.1's dataflow claims — pipelined vs serialized, dual-clock
+//! decoupling, buffer sizing, PU scaling.
+//! `cargo bench --bench pipeline_ablation`.
+
+use edgemlp::experiments::pipeline_ablation;
+
+fn main() {
+    let a = pipeline_ablation::run();
+    println!("\n=== Pipeline ablation (§3.1, Fig 1/2) ===\n");
+    println!("{}", pipeline_ablation::render(&a));
+}

@@ -1,0 +1,18 @@
+//! Bench: §3.2's quantization claims — uniform vs PoT vs SP2 vs SPx
+//! across bit budgets. `cargo bench --bench quant_ablation`.
+
+use edgemlp::experiments::common::ExperimentScale;
+use edgemlp::experiments::quant_ablation;
+
+fn main() {
+    let scale = ExperimentScale::from_env();
+    let bits = if std::env::var("EDGEMLP_BENCH_QUICK").is_ok() {
+        vec![4u32, 5]
+    } else {
+        vec![3u32, 4, 5, 6, 8]
+    };
+    let fp32 = quant_ablation::fp32_accuracy(scale);
+    let rows = quant_ablation::run(scale, &bits);
+    println!("\n=== Quantization ablation (§3.2) ===\n");
+    println!("{}", quant_ablation::render(&rows, fp32));
+}

@@ -1,0 +1,29 @@
+//! Bench: regenerate the paper's Table I (time per sample + power for
+//! CPU / GPU-stand-in / FPGA-sim). `cargo bench --bench table1`.
+
+use edgemlp::experiments::common::ExperimentScale;
+use edgemlp::experiments::table1;
+
+fn main() {
+    let scale = ExperimentScale::from_env();
+    let with_xla = edgemlp::runtime::Registry::open_default().is_ok();
+    if !with_xla {
+        eprintln!("note: artifacts not built — GPU/XLA row skipped (run `make artifacts`)");
+    }
+    match table1::run(scale, with_xla) {
+        Ok(t) => {
+            println!("\n=== Table I — CPU vs GPU vs FPGA, digit recognition ===\n");
+            println!("{}", table1::render(&t));
+            println!(
+                "paper shape check: FPGA fastest ({}), FPGA lowest power ({})",
+                t.rows.iter().all(|r| t.rows.last().unwrap().time_per_sample_s
+                    <= r.time_per_sample_s),
+                t.rows.iter().all(|r| t.rows.last().unwrap().power_w <= r.power_w),
+            );
+        }
+        Err(e) => {
+            eprintln!("table1 failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

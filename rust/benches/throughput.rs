@@ -1,0 +1,19 @@
+//! Bench: coordinator serving throughput/latency under Poisson load —
+//! the edge-deployment scenario. `cargo bench --bench throughput`.
+
+use edgemlp::experiments::common::ExperimentScale;
+use edgemlp::experiments::throughput;
+
+fn main() {
+    let scale = ExperimentScale::from_env();
+    match throughput::run(scale) {
+        Ok(rows) => {
+            println!("\n=== Serving throughput/latency (coordinator, Poisson load) ===\n");
+            println!("{}", throughput::render(&rows));
+        }
+        Err(e) => {
+            eprintln!("throughput bench failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

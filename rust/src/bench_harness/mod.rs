@@ -1,0 +1,191 @@
+//! Hand-rolled benchmark harness (criterion is not in the offline vendor
+//! set). Provides warmed-up, repeated timing with mean/σ/p50/p99 stats
+//! and an aligned table reporter used by every bench binary.
+
+use crate::util::{mean, percentile, stddev};
+use std::time::Instant;
+
+/// Result of timing one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub name: String,
+    /// Per-iteration wall-clock seconds.
+    pub samples: Vec<f64>,
+}
+
+impl Timing {
+    pub fn mean_s(&self) -> f64 {
+        mean(&self.samples)
+    }
+
+    pub fn std_s(&self) -> f64 {
+        stddev(&self.samples)
+    }
+
+    pub fn p50_s(&self) -> f64 {
+        percentile(&self.samples, 50.0)
+    }
+
+    pub fn p99_s(&self) -> f64 {
+        percentile(&self.samples, 99.0)
+    }
+}
+
+/// Benchmark configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup_iters: u32,
+    pub measure_iters: u32,
+    /// Hard cap on total measurement time; stops early once exceeded.
+    pub max_seconds: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup_iters: 3, measure_iters: 30, max_seconds: 10.0 }
+    }
+}
+
+impl BenchConfig {
+    /// Quick mode for CI / smoke runs (EDGEMLP_BENCH_QUICK=1).
+    pub fn from_env() -> Self {
+        if std::env::var("EDGEMLP_BENCH_QUICK").is_ok() {
+            BenchConfig { warmup_iters: 1, measure_iters: 5, max_seconds: 2.0 }
+        } else {
+            BenchConfig::default()
+        }
+    }
+}
+
+/// Time `f` under `config`; `f` is called once per iteration and its
+/// return value is black-boxed so the call is not optimized away.
+pub fn bench<T>(name: &str, config: BenchConfig, mut f: impl FnMut() -> T) -> Timing {
+    for _ in 0..config.warmup_iters {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(config.measure_iters as usize);
+    let start = Instant::now();
+    for _ in 0..config.measure_iters {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+        if start.elapsed().as_secs_f64() > config.max_seconds {
+            break;
+        }
+    }
+    Timing { name: name.to_string(), samples }
+}
+
+/// Identity function the optimizer must treat as opaque.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Format seconds with an adaptive unit.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// An aligned text table writer for bench reports (also understood by
+/// EXPERIMENTS.md — the benches print markdown tables).
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row width");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render as a markdown table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {c:<w$} |"));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let cfg = BenchConfig { warmup_iters: 1, measure_iters: 5, max_seconds: 5.0 };
+        let t = bench("noop", cfg, || 42u64);
+        assert_eq!(t.samples.len(), 5);
+        assert!(t.mean_s() >= 0.0);
+    }
+
+    #[test]
+    fn bench_respects_time_cap() {
+        let cfg = BenchConfig { warmup_iters: 0, measure_iters: 1000, max_seconds: 0.05 };
+        let t = bench("sleepy", cfg, || std::thread::sleep(std::time::Duration::from_millis(5)));
+        assert!(t.samples.len() < 1000);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert_eq!(fmt_time(2.0), "2.000 s");
+        assert_eq!(fmt_time(2.5e-3), "2.500 ms");
+        assert_eq!(fmt_time(2.5e-6), "2.500 µs");
+        assert_eq!(fmt_time(3e-9), "3.0 ns");
+    }
+
+    #[test]
+    fn table_renders_markdown() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.starts_with("| a"));
+        assert_eq!(s.lines().count(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a"]);
+        t.row(&["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,189 @@
+//! Inference backends the router can dispatch to.
+//!
+//! A [`Backend`] consumes a batch of flattened inputs and returns one
+//! output vector per input. Three implementations mirror Table I's
+//! device rows:
+//!
+//! * [`CpuBackend`] — the rust [`crate::nn::Mlp`] forward (Table I "CPU");
+//! * [`FpgaBackend`] — the cycle-accurate simulator (Table I "FPGA"),
+//!   which also reports [`CycleStats`] for the power model;
+//! * the XLA backend — built *inside* its worker thread via a factory
+//!   because PJRT handles are not `Send` (see [`super::server`]); the
+//!   generic [`FnBackend`] adapter wraps it and any test double.
+
+use crate::fpga::accelerator::Accelerator;
+use crate::fpga::stats::CycleStats;
+use crate::nn::tensor::Matrix;
+use crate::nn::Mlp;
+use anyhow::Result;
+
+/// A batch-oriented inference engine.
+pub trait Backend {
+    fn name(&self) -> &str;
+    /// Largest batch `infer` accepts (the batcher caps at this).
+    fn max_batch(&self) -> usize;
+    /// Run a batch; `inputs[i]` is one flattened sample. Returns one
+    /// output per input plus simulator stats if this backend has them.
+    fn infer(&mut self, inputs: &[Vec<f32>]) -> Result<(Vec<Vec<f32>>, Option<CycleStats>)>;
+}
+
+/// Table I "CPU": the pure-rust MLP forward at f32.
+pub struct CpuBackend {
+    pub mlp: Mlp,
+    name: String,
+}
+
+impl CpuBackend {
+    pub fn new(mlp: Mlp) -> Self {
+        CpuBackend { mlp, name: "cpu".into() }
+    }
+}
+
+impl Backend for CpuBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn max_batch(&self) -> usize {
+        256
+    }
+
+    fn infer(&mut self, inputs: &[Vec<f32>]) -> Result<(Vec<Vec<f32>>, Option<CycleStats>)> {
+        let d = self.mlp.input_dim();
+        let mut x = Matrix::zeros(inputs.len(), d);
+        for (i, sample) in inputs.iter().enumerate() {
+            anyhow::ensure!(sample.len() == d, "sample {i}: {} != input dim {d}", sample.len());
+            x.data[i * d..(i + 1) * d].copy_from_slice(sample);
+        }
+        let y = self.mlp.forward(&x);
+        let out = (0..inputs.len()).map(|r| y.row(r).to_vec()).collect();
+        Ok((out, None))
+    }
+}
+
+/// Table I "FPGA": the cycle-accurate accelerator simulator. Processes
+/// samples one at a time (the paper's design is a single-sample stream
+/// engine) and accumulates the event trace.
+pub struct FpgaBackend {
+    pub accel: Accelerator,
+    name: String,
+}
+
+impl FpgaBackend {
+    pub fn new(accel: Accelerator) -> Self {
+        FpgaBackend { accel, name: "fpga".into() }
+    }
+}
+
+impl Backend for FpgaBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn max_batch(&self) -> usize {
+        // The engine streams samples; batching only amortizes queue
+        // overhead, so accept moderate batches.
+        64
+    }
+
+    fn infer(&mut self, inputs: &[Vec<f32>]) -> Result<(Vec<Vec<f32>>, Option<CycleStats>)> {
+        let mut stats = CycleStats::default();
+        let mut out = Vec::with_capacity(inputs.len());
+        for sample in inputs {
+            let (y, s) = self.accel.infer_one(sample);
+            stats.merge(&s);
+            out.push(y);
+        }
+        Ok((out, Some(stats)))
+    }
+}
+
+/// Adapter turning a closure into a [`Backend`] — used for the XLA
+/// backend (closure captures the non-`Send` runtime inside its worker
+/// thread) and for test doubles.
+pub struct FnBackend<F> {
+    name: String,
+    max_batch: usize,
+    f: F,
+}
+
+impl<F> FnBackend<F>
+where
+    F: FnMut(&[Vec<f32>]) -> Result<Vec<Vec<f32>>>,
+{
+    pub fn new(name: impl Into<String>, max_batch: usize, f: F) -> Self {
+        FnBackend { name: name.into(), max_batch, f }
+    }
+}
+
+impl<F> Backend for FnBackend<F>
+where
+    F: FnMut(&[Vec<f32>]) -> Result<Vec<Vec<f32>>>,
+{
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn infer(&mut self, inputs: &[Vec<f32>]) -> Result<(Vec<Vec<f32>>, Option<CycleStats>)> {
+        Ok(((self.f)(inputs)?, None))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::accelerator::{AccelConfig, QuantizedMlp};
+    use crate::nn::mlp::MlpConfig;
+    use crate::quant::spx::SpxConfig;
+    use crate::quant::Calibration;
+    use crate::util::check::assert_allclose;
+    use crate::util::rng::Pcg32;
+
+    fn mnist_mlp() -> Mlp {
+        let mut rng = Pcg32::new(1);
+        Mlp::new(MlpConfig { sizes: vec![8, 6, 3], activations: MlpConfig::paper_mnist().activations }, &mut rng)
+    }
+
+    #[test]
+    fn cpu_backend_matches_direct_forward() {
+        let mlp = mnist_mlp();
+        let mut be = CpuBackend::new(mlp.clone());
+        let inputs = vec![vec![0.3f32; 8], vec![0.7f32; 8]];
+        let (out, stats) = be.infer(&inputs).unwrap();
+        assert!(stats.is_none());
+        assert_allclose(&out[0], &mlp.forward_one(&inputs[0]), 1e-6, 1e-6);
+        assert_allclose(&out[1], &mlp.forward_one(&inputs[1]), 1e-6, 1e-6);
+    }
+
+    #[test]
+    fn cpu_backend_rejects_bad_dims() {
+        let mut be = CpuBackend::new(mnist_mlp());
+        assert!(be.infer(&[vec![0.0; 5]]).is_err());
+    }
+
+    #[test]
+    fn fpga_backend_returns_stats() {
+        let mlp = mnist_mlp();
+        let q = QuantizedMlp::from_mlp(&mlp, &SpxConfig::sp2(6), Calibration::MaxAbs, None);
+        let mut be = FpgaBackend::new(Accelerator::new(q, AccelConfig::default_fpga()));
+        let (out, stats) = be.infer(&[vec![0.5f32; 8], vec![0.1f32; 8]]).unwrap();
+        assert_eq!(out.len(), 2);
+        let stats = stats.unwrap();
+        // 2 samples × (8·6 + 6·3) MACs.
+        assert_eq!(stats.macs, 2 * (48 + 18));
+    }
+
+    #[test]
+    fn fn_backend_wraps_closure() {
+        let mut be = FnBackend::new("echo", 4, |inputs: &[Vec<f32>]| {
+            Ok(inputs.iter().map(|v| v.clone()).collect())
+        });
+        assert_eq!(be.name(), "echo");
+        let (out, _) = be.infer(&[vec![1.0, 2.0]]).unwrap();
+        assert_eq!(out[0], vec![1.0, 2.0]);
+    }
+}

@@ -1,0 +1,71 @@
+//! Dynamic batching policy: how many requests to coalesce and how long
+//! to wait for stragglers. The throughput bench (E6) sweeps these.
+
+use std::time::Duration;
+
+/// Batching knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchPolicy {
+    /// Upper bound on batch size (further capped by the backend's
+    /// `max_batch`).
+    pub max_batch: usize,
+    /// How long to hold the first request while waiting for more.
+    pub max_wait: Duration,
+}
+
+impl BatchPolicy {
+    /// Latency-first: serve immediately, batch only what is already
+    /// queued.
+    pub fn immediate(max_batch: usize) -> Self {
+        BatchPolicy { max_batch, max_wait: Duration::ZERO }
+    }
+
+    /// Throughput-first: the paper's B = 64 with a small window.
+    pub fn windowed(max_batch: usize, max_wait: Duration) -> Self {
+        BatchPolicy { max_batch, max_wait }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.max_batch == 0 {
+            return Err("max_batch must be positive".into());
+        }
+        if self.max_wait > Duration::from_secs(10) {
+            return Err("max_wait over 10s is surely a bug".into());
+        }
+        Ok(())
+    }
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(2) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_papers_batch() {
+        assert_eq!(BatchPolicy::default().max_batch, 64);
+    }
+
+    #[test]
+    fn immediate_has_zero_wait() {
+        let p = BatchPolicy::immediate(8);
+        assert_eq!(p.max_wait, Duration::ZERO);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_zero_batch() {
+        assert!(BatchPolicy::immediate(0).validate().is_err());
+    }
+
+    #[test]
+    fn validation_rejects_absurd_wait() {
+        let p = BatchPolicy::windowed(8, Duration::from_secs(60));
+        assert!(p.validate().is_err());
+    }
+}

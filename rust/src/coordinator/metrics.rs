@@ -1,0 +1,195 @@
+//! Serving metrics: counters, a log-bucketed latency histogram, and
+//! per-backend aggregation. Shared across threads via `Arc<Metrics>`;
+//! everything is lock-protected (contention is negligible next to
+//! inference work — confirmed in the §Perf pass).
+
+use crate::fpga::stats::CycleStats;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Latency histogram with power-of-two microsecond buckets:
+/// bucket i covers [2^i, 2^{i+1}) µs, 32 buckets ≈ up to ~70 minutes.
+#[derive(Debug, Default, Clone)]
+pub struct Histogram {
+    buckets: [u64; 32],
+    count: u64,
+    sum_s: f64,
+    max_s: f64,
+}
+
+impl Histogram {
+    pub fn record(&mut self, latency_s: f64) {
+        let us = (latency_s * 1e6).max(0.0);
+        let idx = if us < 1.0 { 0 } else { (us.log2() as usize).min(31) };
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_s += latency_s;
+        self.max_s = self.max_s.max(latency_s);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_s / self.count as f64
+        }
+    }
+
+    pub fn max_s(&self) -> f64 {
+        self.max_s
+    }
+
+    /// Approximate quantile from the buckets (upper bound of the bucket
+    /// containing the q-th sample).
+    pub fn quantile_s(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                return (1u64 << (i + 1)) as f64 * 1e-6;
+            }
+        }
+        self.max_s
+    }
+}
+
+/// Per-backend counters.
+#[derive(Debug, Default, Clone)]
+pub struct BackendMetrics {
+    pub latency: Histogram,
+    pub requests: u64,
+    pub batches: u64,
+    pub batch_size_sum: u64,
+    pub errors: u64,
+    /// Accumulated simulator events (FPGA backend only).
+    pub cycle_stats: CycleStats,
+}
+
+impl BackendMetrics {
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batch_size_sum as f64 / self.batches as f64
+        }
+    }
+}
+
+/// Snapshot for reporting.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub backends: BTreeMap<String, BackendMetrics>,
+    pub rejected: u64,
+}
+
+/// Thread-shared metrics sink.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<MetricsInner>,
+}
+
+#[derive(Debug, Default)]
+struct MetricsInner {
+    backends: BTreeMap<String, BackendMetrics>,
+    rejected: u64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one served batch for `backend`.
+    pub fn record_batch(
+        &self,
+        backend: &str,
+        batch_size: usize,
+        latencies_s: &[f64],
+        cycle_stats: Option<&CycleStats>,
+    ) {
+        let mut inner = self.inner.lock().unwrap();
+        let m = inner.backends.entry(backend.to_string()).or_default();
+        m.batches += 1;
+        m.batch_size_sum += batch_size as u64;
+        m.requests += latencies_s.len() as u64;
+        for &l in latencies_s {
+            m.latency.record(l);
+        }
+        if let Some(cs) = cycle_stats {
+            m.cycle_stats.merge(cs);
+        }
+    }
+
+    pub fn record_error(&self, backend: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.backends.entry(backend.to_string()).or_default().errors += 1;
+    }
+
+    /// A request was shed due to backpressure.
+    pub fn record_rejected(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let inner = self.inner.lock().unwrap();
+        MetricsSnapshot { backends: inner.backends.clone(), rejected: inner.rejected }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_mean_and_count() {
+        let mut h = Histogram::default();
+        h.record(1e-3);
+        h.record(3e-3);
+        assert_eq!(h.count(), 2);
+        assert!((h.mean_s() - 2e-3).abs() < 1e-9);
+        assert_eq!(h.max_s(), 3e-3);
+    }
+
+    #[test]
+    fn histogram_quantile_monotone() {
+        let mut h = Histogram::default();
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-4);
+        }
+        assert!(h.quantile_s(0.5) <= h.quantile_s(0.99));
+        // p50 ≈ 5 ms: bucket upper bound within 2×.
+        let p50 = h.quantile_s(0.5);
+        assert!(p50 >= 4e-3 && p50 <= 1.7e-2, "p50 {p50}");
+    }
+
+    #[test]
+    fn metrics_aggregate_per_backend() {
+        let m = Metrics::new();
+        m.record_batch("cpu", 4, &[1e-3; 4], None);
+        m.record_batch("cpu", 2, &[2e-3; 2], None);
+        m.record_batch("fpga", 1, &[1e-6], Some(&CycleStats { macs: 10, ..Default::default() }));
+        m.record_rejected();
+        let snap = m.snapshot();
+        assert_eq!(snap.backends["cpu"].requests, 6);
+        assert_eq!(snap.backends["cpu"].batches, 2);
+        assert!((snap.backends["cpu"].mean_batch() - 3.0).abs() < 1e-9);
+        assert_eq!(snap.backends["fpga"].cycle_stats.macs, 10);
+        assert_eq!(snap.rejected, 1);
+    }
+
+    #[test]
+    fn zero_latency_goes_to_first_bucket() {
+        let mut h = Histogram::default();
+        h.record(0.0);
+        assert_eq!(h.count(), 1);
+        assert!(h.quantile_s(1.0) > 0.0);
+    }
+}

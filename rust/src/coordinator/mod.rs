@@ -1,0 +1,34 @@
+//! L3 serving coordinator — the edge-inference deployment shell the
+//! paper's introduction motivates (camera → edge box → answer).
+//!
+//! Architecture (threads + bounded channels; tokio is not in the
+//! offline vendor set, and a thread-per-backend design is required
+//! anyway because PJRT handles are not `Send`):
+//!
+//! ```text
+//!  clients ──submit──► router ──► per-backend BoundedQueue (backpressure)
+//!                                    │ dynamic batcher (max_batch / max_wait)
+//!                                    ▼
+//!                         backend worker thread
+//!                         (CPU | FPGA-sim | XLA/PJRT)
+//!                                    │ per-request response channel
+//!                                    ▼
+//!                               metrics (latency histogram, power)
+//! ```
+//!
+//! Requests carry their payload and a oneshot response sender; the
+//! batcher groups up to `max_batch` requests within a `max_wait`
+//! window (vLLM-style dynamic batching, scaled to this paper's sizes).
+
+pub mod backend;
+pub mod batcher;
+pub mod metrics;
+pub mod queue;
+pub mod request;
+pub mod server;
+
+pub use backend::{Backend, CpuBackend, FpgaBackend};
+pub use batcher::BatchPolicy;
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use request::{InferRequest, InferResponse};
+pub use server::{Coordinator, CoordinatorConfig};

@@ -1,0 +1,213 @@
+//! Bounded MPSC queue with blocking push (backpressure), non-blocking
+//! try-push (load shedding), and a batch-draining pop designed for the
+//! dynamic batcher: wait for the first item, then keep collecting until
+//! either `max` items are in hand or `window` has elapsed.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Why a push or pop did not complete.
+#[derive(Debug, PartialEq, Eq)]
+pub enum QueueError {
+    /// Queue is full (try_push only).
+    Full,
+    /// Queue was closed.
+    Closed,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// The queue. Clone-free: share via `Arc`.
+pub struct BoundedQueue<T> {
+    state: Mutex<State<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        BoundedQueue {
+            state: Mutex::new(State { items: VecDeque::new(), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Blocking push; waits while full. Errors only if closed.
+    pub fn push(&self, item: T) -> Result<(), QueueError> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(QueueError::Closed);
+            }
+            if st.items.len() < self.capacity {
+                st.items.push_back(item);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking push — `Err(Full)` signals backpressure to the
+    /// caller (load shedding at the edge).
+    pub fn try_push(&self, item: T) -> Result<(), QueueError> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(QueueError::Closed);
+        }
+        if st.items.len() >= self.capacity {
+            return Err(QueueError::Full);
+        }
+        st.items.push_back(item);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Dynamic-batch pop: block until at least one item (or close),
+    /// then drain up to `max` items, waiting at most `window` after the
+    /// first item for stragglers. Returns an empty vec only when the
+    /// queue is closed and drained.
+    pub fn pop_batch(&self, max: usize, window: Duration) -> Vec<T> {
+        assert!(max > 0);
+        let mut st = self.state.lock().unwrap();
+        // Phase 1: wait for the first item.
+        while st.items.is_empty() {
+            if st.closed {
+                return Vec::new();
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+        let deadline = Instant::now() + window;
+        // Phase 2: batch window.
+        loop {
+            if st.items.len() >= max || st.closed {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, timeout) = self.not_empty.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        let take = st.items.len().min(max);
+        let batch: Vec<T> = st.items.drain(..take).collect();
+        for _ in 0..take {
+            self.not_full.notify_one();
+        }
+        batch
+    }
+
+    /// Close: unblock all waiters; further pushes fail.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(8);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        let batch = q.pop_batch(5, Duration::ZERO);
+        assert_eq!(batch, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn try_push_full_signals_backpressure() {
+        let q = BoundedQueue::new(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert_eq!(q.try_push(3), Err(QueueError::Full));
+    }
+
+    #[test]
+    fn pop_respects_max() {
+        let q = BoundedQueue::new(16);
+        for i in 0..10 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.pop_batch(4, Duration::ZERO).len(), 4);
+        assert_eq!(q.len(), 6);
+    }
+
+    #[test]
+    fn pop_waits_for_first_item() {
+        let q = Arc::new(BoundedQueue::new(4));
+        let q2 = q.clone();
+        let t = thread::spawn(move || q2.pop_batch(4, Duration::from_millis(1)));
+        thread::sleep(Duration::from_millis(20));
+        q.push(42).unwrap();
+        let batch = t.join().unwrap();
+        assert_eq!(batch, vec![42]);
+    }
+
+    #[test]
+    fn batch_window_collects_stragglers() {
+        let q = Arc::new(BoundedQueue::new(16));
+        let q2 = q.clone();
+        q.push(1).unwrap();
+        let t = thread::spawn(move || q2.pop_batch(4, Duration::from_millis(80)));
+        thread::sleep(Duration::from_millis(10));
+        q.push(2).unwrap();
+        q.push(3).unwrap();
+        let batch = t.join().unwrap();
+        assert!(batch.len() >= 3, "batch {batch:?}");
+    }
+
+    #[test]
+    fn close_unblocks_poppers() {
+        let q = Arc::new(BoundedQueue::<u32>::new(4));
+        let q2 = q.clone();
+        let t = thread::spawn(move || q2.pop_batch(4, Duration::from_millis(50)));
+        thread::sleep(Duration::from_millis(10));
+        q.close();
+        assert!(t.join().unwrap().is_empty());
+        assert_eq!(q.push(1), Err(QueueError::Closed));
+    }
+
+    #[test]
+    fn blocking_push_resumes_after_pop() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.push(1).unwrap();
+        let q2 = q.clone();
+        let t = thread::spawn(move || q2.push(2));
+        thread::sleep(Duration::from_millis(10));
+        assert_eq!(q.pop_batch(1, Duration::ZERO), vec![1]);
+        t.join().unwrap().unwrap();
+        assert_eq!(q.pop_batch(1, Duration::ZERO), vec![2]);
+    }
+}

@@ -1,0 +1,60 @@
+//! Request/response types crossing the coordinator's queues.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+/// What a request's response channel carries: the response, or a
+/// backend error description.
+pub type InferResult = Result<InferResponse, String>;
+
+/// A single inference request: one flattened input vector.
+pub struct InferRequest {
+    pub id: u64,
+    pub payload: Vec<f32>,
+    /// Enqueue timestamp — latency is measured from here.
+    pub enqueued_at: Instant,
+    /// Oneshot-style response channel.
+    pub respond_to: Sender<InferResult>,
+}
+
+/// The answer: output vector plus accounting.
+#[derive(Debug, Clone)]
+pub struct InferResponse {
+    pub id: u64,
+    pub output: Vec<f32>,
+    /// End-to-end latency (enqueue → response send).
+    pub latency_s: f64,
+    /// Which backend served it.
+    pub backend: String,
+    /// Size of the batch this request was served in.
+    pub batch_size: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn request_roundtrip_through_channel() {
+        let (tx, rx) = channel();
+        let req = InferRequest {
+            id: 7,
+            payload: vec![1.0, 2.0],
+            enqueued_at: Instant::now(),
+            respond_to: tx,
+        };
+        req.respond_to
+            .send(Ok(InferResponse {
+                id: req.id,
+                output: vec![0.5],
+                latency_s: 0.001,
+                backend: "test".into(),
+                batch_size: 1,
+            }))
+            .unwrap();
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.id, 7);
+        assert_eq!(resp.batch_size, 1);
+    }
+}

@@ -1,0 +1,380 @@
+//! The coordinator proper: per-backend queues + worker threads, request
+//! routing, graceful shutdown.
+//!
+//! Backends are supplied as *factories* executed inside each worker
+//! thread — the XLA backend's PJRT handles are not `Send`, so the
+//! runtime must be constructed where it is used. Worker startup is
+//! confirmed through a handshake channel so `Coordinator::start`
+//! surfaces backend construction errors synchronously.
+
+use super::backend::Backend;
+use super::batcher::BatchPolicy;
+use super::metrics::Metrics;
+use super::queue::{BoundedQueue, QueueError};
+use super::request::{InferRequest, InferResult, InferResponse};
+use anyhow::{bail, Context, Result};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Factory run on the worker thread to build its backend.
+pub type BackendFactory = Box<dyn FnOnce() -> Result<Box<dyn Backend>> + Send>;
+
+/// Coordinator-wide knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct CoordinatorConfig {
+    /// Per-backend queue capacity (requests beyond this are shed).
+    pub queue_capacity: usize,
+    pub policy: BatchPolicy,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig { queue_capacity: 1024, policy: BatchPolicy::default() }
+    }
+}
+
+/// Submission failure modes surfaced to clients.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Queue full — backpressure; retry later or shed.
+    Backpressure,
+    /// Coordinator is shutting down.
+    Closed,
+    /// No backend with that name.
+    UnknownBackend,
+}
+
+/// Running coordinator. Drop or call [`Coordinator::shutdown`] to stop.
+pub struct Coordinator {
+    queues: Vec<Arc<BoundedQueue<InferRequest>>>,
+    names: Vec<String>,
+    workers: Vec<JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    round_robin: AtomicUsize,
+}
+
+impl Coordinator {
+    /// Spawn one worker per `(name, factory)` pair; blocks until every
+    /// backend reports ready (or fails).
+    pub fn start(
+        backends: Vec<(String, BackendFactory)>,
+        config: CoordinatorConfig,
+    ) -> Result<Coordinator> {
+        config.policy.validate().map_err(|e| anyhow::anyhow!(e))?;
+        if backends.is_empty() {
+            bail!("need at least one backend");
+        }
+        let metrics = Arc::new(Metrics::new());
+        let mut queues = Vec::new();
+        let mut names = Vec::new();
+        let mut workers = Vec::new();
+        for (name, factory) in backends {
+            let queue = Arc::new(BoundedQueue::<InferRequest>::new(config.queue_capacity));
+            let (ready_tx, ready_rx) = channel::<Result<()>>();
+            let worker = {
+                let queue = queue.clone();
+                let metrics = metrics.clone();
+                let name = name.clone();
+                let policy = config.policy;
+                std::thread::Builder::new()
+                    .name(format!("edgemlp-{name}"))
+                    .spawn(move || {
+                        let mut backend = match factory() {
+                            Ok(b) => {
+                                let _ = ready_tx.send(Ok(()));
+                                b
+                            }
+                            Err(e) => {
+                                let _ = ready_tx.send(Err(e));
+                                return;
+                            }
+                        };
+                        worker_loop(&name, backend.as_mut(), &queue, &metrics, policy);
+                    })
+                    .context("spawn worker")?
+            };
+            ready_rx
+                .recv()
+                .context("worker handshake lost")?
+                .with_context(|| format!("backend '{name}' failed to start"))?;
+            queues.push(queue);
+            names.push(name);
+            workers.push(worker);
+        }
+        Ok(Coordinator {
+            queues,
+            names,
+            workers,
+            metrics,
+            next_id: AtomicU64::new(0),
+            round_robin: AtomicUsize::new(0),
+        })
+    }
+
+    pub fn backend_names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn backend_index(&self, name: &str) -> Option<usize> {
+        self.names.iter().position(|n| n == name)
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+
+    fn make_request(&self, payload: Vec<f32>) -> (InferRequest, Receiver<InferResult>) {
+        let (tx, rx) = channel();
+        let req = InferRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            payload,
+            enqueued_at: Instant::now(),
+            respond_to: tx,
+        };
+        (req, rx)
+    }
+
+    /// Blocking submit to a specific backend.
+    pub fn submit_to(
+        &self,
+        backend: usize,
+        payload: Vec<f32>,
+    ) -> Result<Receiver<InferResult>, SubmitError> {
+        let queue = self.queues.get(backend).ok_or(SubmitError::UnknownBackend)?;
+        let (req, rx) = self.make_request(payload);
+        match queue.push(req) {
+            Ok(()) => Ok(rx),
+            Err(QueueError::Closed) => Err(SubmitError::Closed),
+            Err(QueueError::Full) => unreachable!("push blocks on full"),
+        }
+    }
+
+    /// Non-blocking submit — `Backpressure` tells the edge client to
+    /// shed or retry.
+    pub fn try_submit_to(
+        &self,
+        backend: usize,
+        payload: Vec<f32>,
+    ) -> Result<Receiver<InferResult>, SubmitError> {
+        let queue = self.queues.get(backend).ok_or(SubmitError::UnknownBackend)?;
+        let (req, rx) = self.make_request(payload);
+        match queue.try_push(req) {
+            Ok(()) => Ok(rx),
+            Err(QueueError::Closed) => Err(SubmitError::Closed),
+            Err(QueueError::Full) => {
+                self.metrics.record_rejected();
+                Err(SubmitError::Backpressure)
+            }
+        }
+    }
+
+    /// Round-robin submit across backends.
+    pub fn submit(&self, payload: Vec<f32>) -> Result<Receiver<InferResult>, SubmitError> {
+        let idx = self.round_robin.fetch_add(1, Ordering::Relaxed) % self.queues.len();
+        self.submit_to(idx, payload)
+    }
+
+    /// Close queues and join workers (drains in-flight requests).
+    pub fn shutdown(mut self) {
+        for q in &self.queues {
+            q.close();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        for q in &self.queues {
+            q.close();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Body of a backend worker thread.
+fn worker_loop(
+    name: &str,
+    backend: &mut dyn Backend,
+    queue: &BoundedQueue<InferRequest>,
+    metrics: &Metrics,
+    policy: BatchPolicy,
+) {
+    let max_batch = policy.max_batch.min(backend.max_batch()).max(1);
+    loop {
+        let batch = queue.pop_batch(max_batch, policy.max_wait);
+        if batch.is_empty() {
+            return; // closed + drained
+        }
+        let inputs: Vec<Vec<f32>> = batch.iter().map(|r| r.payload.clone()).collect();
+        match backend.infer(&inputs) {
+            Ok((outputs, cycle_stats)) => {
+                debug_assert_eq!(outputs.len(), batch.len());
+                let now = Instant::now();
+                let latencies: Vec<f64> = batch
+                    .iter()
+                    .map(|r| now.duration_since(r.enqueued_at).as_secs_f64())
+                    .collect();
+                metrics.record_batch(name, batch.len(), &latencies, cycle_stats.as_ref());
+                for ((req, output), &latency_s) in
+                    batch.into_iter().zip(outputs).zip(&latencies)
+                {
+                    let _ = req.respond_to.send(Ok(InferResponse {
+                        id: req.id,
+                        output,
+                        latency_s,
+                        backend: name.to_string(),
+                        batch_size: inputs.len(),
+                    }));
+                }
+            }
+            Err(e) => {
+                metrics.record_error(name);
+                let msg = format!("backend '{name}': {e:#}");
+                for req in batch {
+                    let _ = req.respond_to.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::FnBackend;
+    use std::time::Duration;
+
+    fn echo_factory(name: &str) -> (String, BackendFactory) {
+        let n = name.to_string();
+        (
+            n.clone(),
+            Box::new(move || {
+                Ok(Box::new(FnBackend::new(n, 16, |inputs: &[Vec<f32>]| {
+                    Ok(inputs.iter().map(|v| v.iter().map(|x| x * 2.0).collect()).collect())
+                })) as Box<dyn Backend>)
+            }),
+        )
+    }
+
+    #[test]
+    fn serves_requests_end_to_end() {
+        let coord =
+            Coordinator::start(vec![echo_factory("echo")], CoordinatorConfig::default())
+                .unwrap();
+        let rx = coord.submit(vec![1.0, 2.0]).unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        assert_eq!(resp.output, vec![2.0, 4.0]);
+        assert_eq!(resp.backend, "echo");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn many_concurrent_requests_all_answered() {
+        let coord = Coordinator::start(
+            vec![echo_factory("echo")],
+            CoordinatorConfig {
+                queue_capacity: 512,
+                policy: BatchPolicy::windowed(8, Duration::from_millis(1)),
+            },
+        )
+        .unwrap();
+        let receivers: Vec<_> =
+            (0..200).map(|i| coord.submit(vec![i as f32]).unwrap()).collect();
+        for (i, rx) in receivers.into_iter().enumerate() {
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+            assert_eq!(resp.output, vec![2.0 * i as f32]);
+            assert!(resp.batch_size >= 1 && resp.batch_size <= 8);
+        }
+        let snap = coord.metrics().snapshot();
+        assert_eq!(snap.backends["echo"].requests, 200);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn failing_backend_start_is_synchronous_error() {
+        let failing: (String, BackendFactory) = (
+            "bad".into(),
+            Box::new(|| anyhow::bail!("no device")),
+        );
+        match Coordinator::start(vec![failing], CoordinatorConfig::default()) {
+            Ok(_) => panic!("expected startup failure"),
+            Err(e) => assert!(format!("{e:#}").contains("no device")),
+        }
+    }
+
+    #[test]
+    fn backend_error_propagates_to_clients() {
+        let flaky: (String, BackendFactory) = (
+            "flaky".into(),
+            Box::new(|| {
+                Ok(Box::new(FnBackend::new("flaky", 8, |_inputs: &[Vec<f32>]| {
+                    anyhow::bail!("kaboom")
+                })) as Box<dyn Backend>)
+            }),
+        );
+        let coord = Coordinator::start(vec![flaky], CoordinatorConfig::default()).unwrap();
+        let rx = coord.submit(vec![1.0]).unwrap();
+        let result = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(result.unwrap_err().contains("kaboom"));
+        assert_eq!(coord.metrics().snapshot().backends["flaky"].errors, 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn backpressure_on_tiny_queue() {
+        // A backend that blocks forever would hang shutdown; instead use
+        // a slow backend and a capacity-1 queue.
+        let slow: (String, BackendFactory) = (
+            "slow".into(),
+            Box::new(|| {
+                Ok(Box::new(FnBackend::new("slow", 1, |inputs: &[Vec<f32>]| {
+                    std::thread::sleep(Duration::from_millis(50));
+                    Ok(inputs.to_vec())
+                })) as Box<dyn Backend>)
+            }),
+        );
+        let coord = Coordinator::start(
+            vec![slow],
+            CoordinatorConfig { queue_capacity: 1, policy: BatchPolicy::immediate(1) },
+        )
+        .unwrap();
+        // Fill: one in flight + one queued; the third must shed.
+        let _a = coord.try_submit_to(0, vec![1.0]).unwrap();
+        let mut shed = false;
+        for _ in 0..50 {
+            match coord.try_submit_to(0, vec![2.0]) {
+                Err(SubmitError::Backpressure) => {
+                    shed = true;
+                    break;
+                }
+                Ok(_) => continue,
+                Err(e) => panic!("unexpected {e:?}"),
+            }
+        }
+        assert!(shed, "expected backpressure on capacity-1 queue");
+        assert!(coord.metrics().snapshot().rejected >= 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn routes_by_backend_index() {
+        let coord = Coordinator::start(
+            vec![echo_factory("a"), echo_factory("b")],
+            CoordinatorConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(coord.backend_index("b"), Some(1));
+        let rx = coord.submit_to(1, vec![3.0]).unwrap();
+        assert_eq!(rx.recv().unwrap().unwrap().backend, "b");
+        coord.shutdown();
+    }
+}

@@ -1,0 +1,107 @@
+//! Mini-batch iteration helpers shared by training and the serving
+//! benches (request generators draw samples through these).
+
+use super::Dataset;
+use crate::nn::tensor::Matrix;
+use crate::util::rng::Pcg32;
+
+/// Copy the rows at `idx` into a fresh `len(idx) × d` matrix.
+pub fn gather(inputs: &Matrix, idx: &[usize]) -> Matrix {
+    let d = inputs.cols;
+    let mut out = Matrix::zeros(idx.len(), d);
+    for (bi, &si) in idx.iter().enumerate() {
+        out.data[bi * d..(bi + 1) * d].copy_from_slice(inputs.row(si));
+    }
+    out
+}
+
+/// Iterator over shuffled mini-batches of `(inputs, labels)`.
+pub struct BatchIter<'a> {
+    dataset: &'a Dataset,
+    order: Vec<usize>,
+    pos: usize,
+    batch_size: usize,
+}
+
+impl<'a> BatchIter<'a> {
+    pub fn new(dataset: &'a Dataset, batch_size: usize, rng: &mut Pcg32) -> Self {
+        assert!(batch_size > 0);
+        let mut order: Vec<usize> = (0..dataset.len()).collect();
+        rng.shuffle(&mut order);
+        BatchIter { dataset, order, pos: 0, batch_size }
+    }
+}
+
+impl<'a> Iterator for BatchIter<'a> {
+    type Item = (Matrix, Vec<usize>);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.pos >= self.order.len() {
+            return None;
+        }
+        let end = (self.pos + self.batch_size).min(self.order.len());
+        let idx = &self.order[self.pos..end];
+        let x = gather(&self.dataset.inputs, idx);
+        let y = idx.iter().map(|&i| self.dataset.labels[i]).collect();
+        self.pos = end;
+        Some((x, y))
+    }
+}
+
+/// Infinite sampler of single rows (used by the serving workload
+/// generator to draw request payloads).
+pub struct SampleStream<'a> {
+    dataset: &'a Dataset,
+    rng: Pcg32,
+}
+
+impl<'a> SampleStream<'a> {
+    pub fn new(dataset: &'a Dataset, seed: u64) -> Self {
+        SampleStream { dataset, rng: Pcg32::new(seed) }
+    }
+
+    pub fn next_sample(&mut self) -> (Vec<f32>, usize) {
+        let i = self.rng.index(self.dataset.len());
+        (self.dataset.inputs.row(i).to_vec(), self.dataset.labels[i])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::generate;
+
+    #[test]
+    fn batches_cover_dataset_once() {
+        let ds = generate(25, 0);
+        let mut rng = Pcg32::new(1);
+        let mut seen = 0;
+        let mut last_batch = 0;
+        for (x, y) in BatchIter::new(&ds, 8, &mut rng) {
+            assert_eq!(x.rows, y.len());
+            seen += y.len();
+            last_batch = y.len();
+        }
+        assert_eq!(seen, 25);
+        assert_eq!(last_batch, 1); // 25 = 3×8 + 1
+    }
+
+    #[test]
+    fn gather_copies_rows() {
+        let ds = generate(10, 0);
+        let g = gather(&ds.inputs, &[3, 7]);
+        assert_eq!(g.row(0), ds.inputs.row(3));
+        assert_eq!(g.row(1), ds.inputs.row(7));
+    }
+
+    #[test]
+    fn sample_stream_draws_valid_rows() {
+        let ds = generate(10, 0);
+        let mut s = SampleStream::new(&ds, 2);
+        for _ in 0..20 {
+            let (x, y) = s.next_sample();
+            assert_eq!(x.len(), 784);
+            assert!(y < 10);
+        }
+    }
+}

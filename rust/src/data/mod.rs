@@ -1,0 +1,89 @@
+//! Dataset pipeline (§4.3 of the paper): MNIST if real idx files are
+//! available (`MNIST_DIR`), otherwise a deterministic synthetic 28×28
+//! digit set with the same dimensionality and class structure — see
+//! DESIGN.md §5 (Substitutions) for why this preserves the experiments'
+//! behaviour.
+
+pub mod batch;
+pub mod mnist;
+pub mod synth;
+
+use crate::nn::tensor::Matrix;
+
+/// A labeled image-classification dataset: flattened inputs in `[0, 1]`
+/// plus integer labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// `n × d` inputs (d = 784 for 28×28 digits).
+    pub inputs: Matrix,
+    pub labels: Vec<usize>,
+    pub classes: usize,
+    /// Provenance tag: `"mnist"` or `"synthetic"`.
+    pub source: String,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Split off the last `n` samples as a held-out set.
+    pub fn split_holdout(mut self, n: usize) -> (Dataset, Dataset) {
+        assert!(n < self.len(), "holdout {n} >= dataset {}", self.len());
+        let train_n = self.len() - n;
+        let d = self.inputs.cols;
+        let test_inputs =
+            Matrix::from_vec(n, d, self.inputs.data.split_off(train_n * d));
+        let test_labels = self.labels.split_off(train_n);
+        self.inputs.rows = train_n;
+        let test = Dataset {
+            inputs: test_inputs,
+            labels: test_labels,
+            classes: self.classes,
+            source: self.source.clone(),
+        };
+        (self, test)
+    }
+}
+
+/// Load the experiment dataset: real MNIST when `MNIST_DIR` points at the
+/// idx files, synthetic otherwise. `n_train`/`n_test` cap the sizes so
+/// benches stay fast.
+pub fn load_digits(n_train: usize, n_test: usize, seed: u64) -> (Dataset, Dataset) {
+    if let Ok(dir) = std::env::var("MNIST_DIR") {
+        match mnist::load_mnist(std::path::Path::new(&dir), n_train, n_test) {
+            Ok(pair) => return pair,
+            Err(e) => eprintln!("MNIST_DIR set but load failed ({e}); falling back to synthetic"),
+        }
+    }
+    let train = synth::generate(n_train, seed);
+    let test = synth::generate(n_test, seed ^ 0x5EED_7E57);
+    (train, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_holdout_partitions() {
+        let ds = synth::generate(50, 1);
+        let (train, test) = ds.split_holdout(10);
+        assert_eq!(train.len(), 40);
+        assert_eq!(test.len(), 10);
+        assert_eq!(train.inputs.rows, 40);
+        assert_eq!(test.inputs.rows, 10);
+        assert_eq!(test.inputs.cols, 784);
+    }
+
+    #[test]
+    fn load_digits_returns_requested_sizes() {
+        let (train, test) = load_digits(32, 8, 3);
+        assert_eq!(train.len(), 32);
+        assert_eq!(test.len(), 8);
+    }
+}

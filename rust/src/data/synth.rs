@@ -1,0 +1,203 @@
+//! Deterministic synthetic 28×28 digit generator — the offline stand-in
+//! for MNIST (DESIGN.md §5).
+//!
+//! Each digit class is a polyline skeleton (a seven-segment-style glyph
+//! with diagonals for 4/7); a sample applies a random affine jitter
+//! (translation, rotation, scale), draws the strokes with a soft
+//! distance-falloff pen, and adds pixel noise. The result has MNIST's
+//! shape (784 inputs in `[0,1]`, 10 classes) and non-trivial intra-class
+//! variation, which is what the quantization-accuracy experiments need.
+
+use super::Dataset;
+use crate::nn::tensor::Matrix;
+use crate::util::rng::Pcg32;
+
+const SIZE: usize = 28;
+
+/// Segment endpoints in a normalized [0,1]² glyph box.
+type Seg = ((f32, f32), (f32, f32));
+
+/// Polyline skeletons per digit. Coordinates are (x, y) with y downward.
+fn skeleton(digit: usize) -> Vec<Seg> {
+    // Seven-segment corner points.
+    let (l, r, t, m, b) = (0.2f32, 0.8f32, 0.1f32, 0.5f32, 0.9f32);
+    let top = ((l, t), (r, t));
+    let mid = ((l, m), (r, m));
+    let bot = ((l, b), (r, b));
+    let tl = ((l, t), (l, m));
+    let tr = ((r, t), (r, m));
+    let bl = ((l, m), (l, b));
+    let br = ((r, m), (r, b));
+    match digit {
+        0 => vec![top, bot, tl, tr, bl, br],
+        1 => vec![tr, br, ((0.55, t), (r, t))],
+        2 => vec![top, tr, mid, bl, bot],
+        3 => vec![top, tr, mid, br, bot],
+        4 => vec![tl, mid, tr, br, ((r, t), (l, m))],
+        5 => vec![top, tl, mid, br, bot],
+        6 => vec![top, tl, mid, br, bot, bl],
+        7 => vec![top, ((r, t), (0.4, b))],
+        8 => vec![top, mid, bot, tl, tr, bl, br],
+        9 => vec![top, mid, bot, tl, tr, br],
+        other => panic!("digit {other} out of range"),
+    }
+}
+
+/// Render one jittered digit into a 784-length buffer.
+pub fn render_digit(digit: usize, rng: &mut Pcg32) -> Vec<f32> {
+    let segs = skeleton(digit);
+    // Affine jitter parameters.
+    let angle = rng.range(-0.17, 0.17) as f32; // ±10°
+    let scale = rng.range(0.85, 1.1) as f32;
+    let dx = rng.range(-1.5, 1.5) as f32;
+    let dy = rng.range(-1.5, 1.5) as f32;
+    let thickness = rng.range(0.9, 1.6) as f32;
+    let (sin, cos) = angle.sin_cos();
+    let center = SIZE as f32 / 2.0;
+    let to_px = |p: (f32, f32)| -> (f32, f32) {
+        // Glyph box → pixel coords, rotated and scaled around the center.
+        let gx = (p.0 - 0.5) * 22.0 * scale;
+        let gy = (p.1 - 0.5) * 22.0 * scale;
+        (
+            center + gx * cos - gy * sin + dx,
+            center + gx * sin + gy * cos + dy,
+        )
+    };
+    let segs_px: Vec<((f32, f32), (f32, f32))> =
+        segs.iter().map(|&(a, b)| (to_px(a), to_px(b))).collect();
+
+    let mut img = vec![0.0f32; SIZE * SIZE];
+    for (y, row) in img.chunks_mut(SIZE).enumerate() {
+        for (x, px) in row.iter_mut().enumerate() {
+            let p = (x as f32 + 0.5, y as f32 + 0.5);
+            let mut d = f32::INFINITY;
+            for &(a, b) in &segs_px {
+                d = d.min(dist_point_segment(p, a, b));
+            }
+            // Soft pen: full ink inside `thickness`, smooth falloff after.
+            let v = (1.0 - (d - thickness).max(0.0) / 1.2).clamp(0.0, 1.0);
+            *px = v;
+        }
+    }
+    // Pixel noise + occasional dead pixels, as scanner-like corruption.
+    for px in &mut img {
+        let noise = rng.range(-0.06, 0.06) as f32;
+        *px = (*px + noise).clamp(0.0, 1.0);
+    }
+    img
+}
+
+fn dist_point_segment(p: (f32, f32), a: (f32, f32), b: (f32, f32)) -> f32 {
+    let (px, py) = (p.0 - a.0, p.1 - a.1);
+    let (vx, vy) = (b.0 - a.0, b.1 - a.1);
+    let len2 = vx * vx + vy * vy;
+    let t = if len2 > 0.0 { ((px * vx + py * vy) / len2).clamp(0.0, 1.0) } else { 0.0 };
+    let (cx, cy) = (a.0 + t * vx - p.0, a.1 + t * vy - p.1);
+    (cx * cx + cy * cy).sqrt()
+}
+
+/// Generate `n` samples with round-robin class balance.
+pub fn generate(n: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg32::new(seed);
+    let mut inputs = Matrix::zeros(n, SIZE * SIZE);
+    let mut labels = Vec::with_capacity(n);
+    // Shuffled class sequence so mini-batches are mixed.
+    let mut classes: Vec<usize> = (0..n).map(|i| i % 10).collect();
+    rng.shuffle(&mut classes);
+    for (i, &digit) in classes.iter().enumerate() {
+        let img = render_digit(digit, &mut rng);
+        inputs.data[i * SIZE * SIZE..(i + 1) * SIZE * SIZE].copy_from_slice(&img);
+        labels.push(digit);
+    }
+    Dataset { inputs, labels, classes: 10, source: "synthetic".into() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_shape_and_range() {
+        let mut rng = Pcg32::new(0);
+        for d in 0..10 {
+            let img = render_digit(d, &mut rng);
+            assert_eq!(img.len(), 784);
+            assert!(img.iter().all(|&v| (0.0..=1.0).contains(&v)));
+            // Some ink, not all ink.
+            let ink: f32 = img.iter().sum();
+            assert!(ink > 10.0 && ink < 500.0, "digit {d} ink {ink}");
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = generate(20, 42);
+        let b = generate(20, 42);
+        assert_eq!(a.inputs.data, b.inputs.data);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = generate(10, 1);
+        let b = generate(10, 2);
+        assert_ne!(a.inputs.data, b.inputs.data);
+    }
+
+    #[test]
+    fn classes_balanced() {
+        let ds = generate(100, 7);
+        for c in 0..10 {
+            let count = ds.labels.iter().filter(|&&l| l == c).count();
+            assert_eq!(count, 10, "class {c}");
+        }
+    }
+
+    #[test]
+    fn same_class_samples_vary() {
+        let mut rng = Pcg32::new(9);
+        let a = render_digit(3, &mut rng);
+        let b = render_digit(3, &mut rng);
+        assert_ne!(a, b);
+        // But they should still overlap substantially (same skeleton):
+        let dot: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!(dot > 5.0);
+    }
+
+    #[test]
+    fn digits_are_separable_by_template_matching() {
+        // Nearest-mean classification on clean renders should beat 60% —
+        // sanity that classes are actually distinguishable.
+        let train = generate(200, 3);
+        let test = generate(50, 4);
+        let d = 784;
+        let mut means = vec![vec![0.0f32; d]; 10];
+        let mut counts = [0usize; 10];
+        for (i, &l) in train.labels.iter().enumerate() {
+            for (m, &v) in means[l].iter_mut().zip(train.inputs.row(i)) {
+                *m += v;
+            }
+            counts[l] += 1;
+        }
+        for (m, &c) in means.iter_mut().zip(&counts) {
+            for v in m.iter_mut() {
+                *v /= c as f32;
+            }
+        }
+        let mut correct = 0;
+        for (i, &l) in test.labels.iter().enumerate() {
+            let row = test.inputs.row(i);
+            let best = (0..10)
+                .min_by(|&a, &b| {
+                    let da: f32 = means[a].iter().zip(row).map(|(m, v)| (m - v).powi(2)).sum();
+                    let db: f32 = means[b].iter().zip(row).map(|(m, v)| (m - v).powi(2)).sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if best == l {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 30, "template matching got {correct}/50");
+    }
+}

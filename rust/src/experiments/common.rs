@@ -1,0 +1,82 @@
+//! Shared experiment setup: dataset + trained model, built once per
+//! process with fixed seeds so every table starts from the same θ.
+
+use crate::data::{load_digits, Dataset};
+use crate::nn::mlp::{Mlp, MlpConfig};
+use crate::nn::train::{train, EpochStats, TrainConfig};
+
+/// Sizes used by the experiment drivers. `quick` shrinks everything for
+/// CI (`EDGEMLP_BENCH_QUICK=1`).
+#[derive(Debug, Clone, Copy)]
+pub struct ExperimentScale {
+    pub n_train: usize,
+    pub n_test: usize,
+    pub epochs: usize,
+}
+
+impl ExperimentScale {
+    pub fn from_env() -> Self {
+        if std::env::var("EDGEMLP_BENCH_QUICK").is_ok() {
+            ExperimentScale { n_train: 600, n_test: 200, epochs: 2 }
+        } else {
+            ExperimentScale { n_train: 4000, n_test: 1000, epochs: 5 }
+        }
+    }
+}
+
+/// Everything a Table-I-style experiment needs.
+pub struct TrainedSetup {
+    pub train_set: Dataset,
+    pub test_set: Dataset,
+    pub mlp: Mlp,
+    pub training_log: Vec<EpochStats>,
+}
+
+/// Train the paper's 784-128-10 MLP (B=64, η=0.5, MSE) on the digit
+/// dataset. Deterministic for a given scale.
+pub fn trained_mnist_mlp(scale: ExperimentScale) -> TrainedSetup {
+    let (train_set, test_set) = load_digits(scale.n_train, scale.n_test, 2021);
+    let mut rng = crate::util::rng::Pcg32::new(42);
+    let mut mlp = Mlp::new(MlpConfig::paper_mnist(), &mut rng);
+    let config = TrainConfig { epochs: scale.epochs, ..Default::default() };
+    let training_log = train(&mut mlp, &train_set.inputs, &train_set.labels, &config);
+    TrainedSetup { train_set, test_set, mlp, training_log }
+}
+
+/// Format a float in scientific notation like the paper's Table I
+/// (`2.6 × 10^-3`).
+pub fn sci(x: f64) -> String {
+    if x == 0.0 {
+        return "0".into();
+    }
+    let exp = x.abs().log10().floor() as i32;
+    let mant = x / 10f64.powi(exp);
+    format!("{mant:.2}e{exp}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::metrics::accuracy;
+
+    #[test]
+    fn training_learns_digits() {
+        // Convergence reference (probed on this dataset): n=1000/e=10 →
+        // ~0.78 test accuracy; the full experiment scale (4000/5) hits
+        // ~0.99.
+        let setup =
+            trained_mnist_mlp(ExperimentScale { n_train: 1500, n_test: 300, epochs: 8 });
+        let acc = accuracy(&setup.mlp, &setup.test_set.inputs, &setup.test_set.labels);
+        assert!(acc > 0.6, "test accuracy {acc} too low for the experiments to be meaningful");
+        // Loss decreased across epochs.
+        let log = &setup.training_log;
+        assert!(log.last().unwrap().loss < log[0].loss);
+    }
+
+    #[test]
+    fn sci_format() {
+        assert_eq!(sci(2.6e-3), "2.60e-3");
+        assert_eq!(sci(0.0), "0");
+        assert_eq!(sci(115.2), "1.15e2");
+    }
+}

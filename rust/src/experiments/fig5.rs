@@ -1,0 +1,92 @@
+//! E2 — Figure 5: measured inference time per sample across training
+//! epochs (CPU). The paper's figure shows an essentially flat series —
+//! inference cost does not depend on the weights' values — and we
+//! reproduce it literally: retrain epoch by epoch, timing a batched
+//! inference pass after each.
+
+use super::common::{sci, ExperimentScale};
+use crate::bench_harness::{bench, BenchConfig, Table};
+use crate::data::batch::gather;
+use crate::data::load_digits;
+use crate::nn::mlp::{Mlp, MlpConfig};
+use crate::nn::train::{train, TrainConfig};
+use crate::util::rng::Pcg32;
+
+/// One epoch's measurement.
+#[derive(Debug, Clone)]
+pub struct EpochPoint {
+    pub epoch: usize,
+    pub time_per_sample_s: f64,
+    pub train_loss: f64,
+}
+
+/// Run E2: `epochs` training epochs, measuring after each.
+pub fn run(scale: ExperimentScale) -> Vec<EpochPoint> {
+    let (train_set, test_set) = load_digits(scale.n_train, scale.n_test, 2021);
+    let mut rng = Pcg32::new(42);
+    let mut mlp = Mlp::new(MlpConfig::paper_mnist(), &mut rng);
+    let bench_cfg = BenchConfig::from_env();
+    let batch = 64.min(test_set.len());
+    let idx: Vec<usize> = (0..batch).collect();
+    let x = gather(&test_set.inputs, &idx);
+
+    let mut points = Vec::with_capacity(scale.epochs);
+    for epoch in 0..scale.epochs {
+        // One epoch of training (same hyper-parameters as the paper).
+        let stats = train(
+            &mut mlp,
+            &train_set.inputs,
+            &train_set.labels,
+            &TrainConfig { epochs: 1, seed: 7 + epoch as u64, ..Default::default() },
+        );
+        let timing = bench(&format!("epoch{epoch}"), bench_cfg, || mlp.forward(&x));
+        points.push(EpochPoint {
+            epoch,
+            time_per_sample_s: timing.mean_s() / batch as f64,
+            train_loss: stats[0].loss,
+        });
+    }
+    points
+}
+
+/// Render the series (the "figure" as a table of its points).
+pub fn render(points: &[EpochPoint]) -> String {
+    let mut table = Table::new(&["epoch", "time/sample (s)", "train loss"]);
+    for p in points {
+        table.row(&[
+            p.epoch.to_string(),
+            sci(p.time_per_sample_s),
+            format!("{:.4}", p.train_loss),
+        ]);
+    }
+    table.render()
+}
+
+/// Coefficient of variation of the timing series — Figure 5's flatness
+/// claim quantified.
+pub fn flatness(points: &[EpochPoint]) -> f64 {
+    let times: Vec<f64> = points.iter().map(|p| p.time_per_sample_s).collect();
+    let mean = crate::util::mean(&times);
+    if mean == 0.0 {
+        return 0.0;
+    }
+    crate::util::stddev(&times) / mean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_series_is_flat_and_loss_decreases() {
+        let points = run(ExperimentScale { n_train: 600, n_test: 128, epochs: 3 });
+        assert_eq!(points.len(), 3);
+        // Inference time varies far less than the loss does: the CV of
+        // the time series stays small (generous bound — CI machines are
+        // noisy).
+        assert!(flatness(&points) < 0.5, "cv {}", flatness(&points));
+        // Training actually progressed.
+        assert!(points.last().unwrap().train_loss < points[0].train_loss);
+        assert!(render(&points).contains("epoch"));
+    }
+}

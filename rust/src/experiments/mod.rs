@@ -1,0 +1,19 @@
+//! Experiment drivers — one per paper table/figure (DESIGN.md §4).
+//! Both the CLI subcommands (`rust/src/main.rs`) and the bench binaries
+//! (`rust/benches/*.rs`) call into these, so a table is regenerated the
+//! same way everywhere.
+//!
+//! | driver | paper artifact |
+//! |--------|----------------|
+//! | [`table1`] | Table I — CPU/GPU/FPGA time-per-sample + power |
+//! | [`fig5`] | Figure 5 — per-epoch inference time per sample |
+//! | [`pipeline_ablation`] | §3.1 pipelining + clock-decoupling claims |
+//! | [`quant_ablation`] | §3.2 uniform/PoT/SP2/SPx accuracy + error |
+//! | [`throughput`] | edge-serving latency/throughput (coordinator) |
+
+pub mod common;
+pub mod fig5;
+pub mod pipeline_ablation;
+pub mod quant_ablation;
+pub mod table1;
+pub mod throughput;

@@ -1,0 +1,171 @@
+//! E4 — quantization-scheme ablation (§3.2's argument quantified):
+//! uniform vs PoT vs SP2 vs SPx(3) across bit budgets, reporting test
+//! accuracy, SQNR, and the tail-region MSE where PoT is weakest.
+
+use super::common::{trained_mnist_mlp, ExperimentScale, TrainedSetup};
+use crate::bench_harness::Table;
+use crate::nn::metrics::accuracy;
+use crate::nn::Mlp;
+use crate::quant::error::{sqnr_db, tail_split_mse};
+use crate::quant::spx::{SpxConfig, SpxTensor};
+use crate::quant::uniform::uniform;
+use crate::quant::{fake_quantize, pot::pot, Calibration};
+
+/// One (scheme, bits) cell.
+#[derive(Debug, Clone)]
+pub struct QuantRow {
+    pub scheme: String,
+    pub bits: u32,
+    pub accuracy: f64,
+    pub sqnr_db: f64,
+    pub tail_mse: f64,
+    /// Shift-adds per MAC this scheme costs in hardware (1 for
+    /// uniform/PoT-style single-term, x for SPx).
+    pub shifts_per_mac: usize,
+}
+
+/// Quantize every layer of `mlp` with `quantize` and return the copy.
+fn quantize_model(mlp: &Mlp, quantize: &dyn Fn(&[f32]) -> Vec<f32>) -> Mlp {
+    let mut q = mlp.clone();
+    for layer in &mut q.layers {
+        layer.w.data = quantize(&layer.w.data);
+    }
+    q
+}
+
+/// Weight-space error metrics of a quantized copy vs the original.
+fn weight_metrics(original: &Mlp, quantized: &Mlp) -> (f64, f64) {
+    let orig: Vec<f32> =
+        original.layers.iter().flat_map(|l| l.w.data.iter().copied()).collect();
+    let quant: Vec<f32> =
+        quantized.layers.iter().flat_map(|l| l.w.data.iter().copied()).collect();
+    let (tail, _, _) = tail_split_mse(&orig, &quant, 0.5);
+    (sqnr_db(&orig, &quant), tail)
+}
+
+/// Run the ablation over `bits_range`.
+pub fn run(scale: ExperimentScale, bits_range: &[u32]) -> Vec<QuantRow> {
+    let setup: TrainedSetup = trained_mnist_mlp(scale);
+    let mut rows = Vec::new();
+    for &bits in bits_range {
+        // (scheme name, quantizer fn, shift cost)
+        type Quantizer<'a> = Box<dyn Fn(&[f32]) -> Vec<f32> + 'a>;
+        let mut schemes: Vec<(String, Quantizer, usize)> = vec![(
+            format!("uniform(b={bits})"),
+            Box::new(move |w: &[f32]| fake_quantize(&uniform(bits), w, Calibration::MaxAbs)),
+            1,
+        )];
+        if (2..=6).contains(&bits) {
+            schemes.push((
+                format!("pot(b={bits})"),
+                Box::new(move |w: &[f32]| fake_quantize(&pot(bits), w, Calibration::MaxAbs)),
+                1,
+            ));
+        }
+        if bits >= 3 {
+            schemes.push((
+                format!("sp2(b={bits})"),
+                Box::new(move |w: &[f32]| {
+                    SpxTensor::encode(&SpxConfig::sp2(bits), w, &[w.len()], Calibration::MaxAbs)
+                        .decode()
+                }),
+                2,
+            ));
+        }
+        if bits >= 4 {
+            schemes.push((
+                format!("spx(b={bits},x=3)"),
+                Box::new(move |w: &[f32]| {
+                    SpxTensor::encode(
+                        &SpxConfig::spx(bits, 3),
+                        w,
+                        &[w.len()],
+                        Calibration::MaxAbs,
+                    )
+                    .decode()
+                }),
+                3,
+            ));
+        }
+        for (name, quantize, shifts) in schemes {
+            let q = quantize_model(&setup.mlp, quantize.as_ref());
+            let acc = accuracy(&q, &setup.test_set.inputs, &setup.test_set.labels);
+            let (sqnr, tail) = weight_metrics(&setup.mlp, &q);
+            rows.push(QuantRow {
+                scheme: name,
+                bits,
+                accuracy: acc,
+                sqnr_db: sqnr,
+                tail_mse: tail,
+                shifts_per_mac: shifts,
+            });
+        }
+    }
+    rows
+}
+
+/// fp32 reference accuracy for the header line.
+pub fn fp32_accuracy(scale: ExperimentScale) -> f64 {
+    let setup = trained_mnist_mlp(scale);
+    accuracy(&setup.mlp, &setup.test_set.inputs, &setup.test_set.labels)
+}
+
+pub fn render(rows: &[QuantRow], fp32_acc: f64) -> String {
+    let mut table = Table::new(&[
+        "scheme",
+        "bits",
+        "accuracy",
+        "Δ vs fp32",
+        "SQNR (dB)",
+        "tail MSE",
+        "shifts/MAC",
+    ]);
+    for r in rows {
+        table.row(&[
+            r.scheme.clone(),
+            r.bits.to_string(),
+            format!("{:.3}", r.accuracy),
+            format!("{:+.3}", r.accuracy - fp32_acc),
+            format!("{:.1}", r.sqnr_db),
+            format!("{:.2e}", r.tail_mse),
+            r.shifts_per_mac.to_string(),
+        ]);
+    }
+    format!("fp32 reference accuracy: {fp32_acc:.3}\n{}", table.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spx_beats_pot_in_tail_mse_and_tracks_accuracy() {
+        let scale = ExperimentScale { n_train: 500, n_test: 200, epochs: 2 };
+        let rows = run(scale, &[5]);
+        let find = |prefix: &str| rows.iter().find(|r| r.scheme.starts_with(prefix)).unwrap();
+        let pot = find("pot");
+        let sp2 = find("sp2");
+        // §3.2's quantitative core: same bit budget, smaller tail error.
+        assert!(
+            sp2.tail_mse < pot.tail_mse,
+            "sp2 tail {} vs pot {}",
+            sp2.tail_mse,
+            pot.tail_mse
+        );
+        // SQNR ordering follows.
+        assert!(sp2.sqnr_db > pot.sqnr_db);
+        // At b=5 neither scheme collapses accuracy by more than 25 pts
+        // relative to uniform.
+        let uni = find("uniform");
+        assert!(sp2.accuracy > uni.accuracy - 0.25);
+    }
+
+    #[test]
+    fn more_bits_never_hurt_sqnr() {
+        let scale = ExperimentScale { n_train: 300, n_test: 100, epochs: 1 };
+        let rows = run(scale, &[3, 5, 7]);
+        let sp2: Vec<&QuantRow> =
+            rows.iter().filter(|r| r.scheme.starts_with("sp2")).collect();
+        assert!(sp2.windows(2).all(|w| w[1].sqnr_db >= w[0].sqnr_db - 0.5));
+    }
+}

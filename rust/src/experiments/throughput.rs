@@ -1,0 +1,177 @@
+//! E6 — serving throughput/latency of the coordinator under Poisson
+//! load: the edge-deployment scenario (§1) quantified. Sweeps the
+//! dynamic-batching window to expose the latency/throughput trade-off
+//! Table I's CPU-batch-64 vs FPGA-stream rows embody.
+
+use super::common::{sci, trained_mnist_mlp, ExperimentScale};
+use crate::bench_harness::Table;
+use crate::coordinator::backend::{Backend, CpuBackend, FpgaBackend};
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::server::{BackendFactory, Coordinator, CoordinatorConfig};
+use crate::data::batch::SampleStream;
+use crate::fpga::accelerator::{AccelConfig, Accelerator, QuantizedMlp};
+use crate::quant::spx::SpxConfig;
+use crate::quant::Calibration;
+use crate::util::rng::Pcg32;
+use anyhow::Result;
+use std::time::{Duration, Instant};
+
+/// One (backend, policy, rate) measurement.
+#[derive(Debug, Clone)]
+pub struct ThroughputRow {
+    pub backend: String,
+    pub window_ms: f64,
+    pub offered_rps: f64,
+    pub achieved_rps: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub mean_batch: f64,
+    pub shed: u64,
+}
+
+/// Drive `n_requests` Poisson arrivals at `rate_rps` into `backend_idx`.
+fn drive(
+    coord: &Coordinator,
+    backend_idx: usize,
+    stream: &mut SampleStream<'_>,
+    rate_rps: f64,
+    n_requests: usize,
+    rng: &mut Pcg32,
+) -> (Vec<f64>, u64, f64) {
+    let mut receivers = Vec::with_capacity(n_requests);
+    let mut shed = 0u64;
+    let t0 = Instant::now();
+    let mut next_arrival = 0.0f64;
+    for _ in 0..n_requests {
+        // Exponential inter-arrival times.
+        let u: f64 = rng.uniform().max(1e-12);
+        next_arrival += -u.ln() / rate_rps;
+        let wait = next_arrival - t0.elapsed().as_secs_f64();
+        if wait > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(wait));
+        }
+        let (payload, _) = stream.next_sample();
+        match coord.try_submit_to(backend_idx, payload) {
+            Ok(rx) => receivers.push(rx),
+            Err(_) => shed += 1,
+        }
+    }
+    let mut latencies = Vec::with_capacity(receivers.len());
+    for rx in receivers {
+        if let Ok(Ok(resp)) = rx.recv_timeout(Duration::from_secs(30)) {
+            latencies.push(resp.latency_s);
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    (latencies, shed, elapsed)
+}
+
+/// Run the sweep with sizes derived from the environment.
+pub fn run(scale: ExperimentScale) -> Result<Vec<ThroughputRow>> {
+    run_with(scale, std::env::var("EDGEMLP_BENCH_QUICK").is_ok())
+}
+
+/// Run the sweep. Spawns a fresh coordinator per policy so histograms
+/// do not mix.
+pub fn run_with(scale: ExperimentScale, quick: bool) -> Result<Vec<ThroughputRow>> {
+    let setup = trained_mnist_mlp(scale);
+    let n_requests = if quick { 150 } else { 600 };
+    let rates = if quick { vec![500.0] } else { vec![300.0, 1500.0] };
+    let windows = [Duration::ZERO, Duration::from_millis(2)];
+
+    let mut rows = Vec::new();
+    for &window in &windows {
+        for &rate in &rates {
+            // Fresh backends per run.
+            let mlp = setup.mlp.clone();
+            let cpu_factory: BackendFactory =
+                Box::new(move || Ok(Box::new(CpuBackend::new(mlp)) as Box<dyn Backend>));
+            let q = QuantizedMlp::from_mlp(
+                &setup.mlp,
+                &SpxConfig::sp2(5),
+                Calibration::MaxAbs,
+                None,
+            );
+            let fpga_factory: BackendFactory = Box::new(move || {
+                Ok(Box::new(FpgaBackend::new(Accelerator::new(q, AccelConfig::default_fpga())))
+                    as Box<dyn Backend>)
+            });
+            let coord = Coordinator::start(
+                vec![("cpu".into(), cpu_factory), ("fpga".into(), fpga_factory)],
+                CoordinatorConfig {
+                    queue_capacity: 256,
+                    policy: BatchPolicy { max_batch: 64, max_wait: window },
+                },
+            )?;
+            let mut rng = Pcg32::new(99);
+            for backend in ["cpu", "fpga"] {
+                let idx = coord.backend_index(backend).unwrap();
+                let mut stream = SampleStream::new(&setup.test_set, 5);
+                let (latencies, shed, elapsed) =
+                    drive(&coord, idx, &mut stream, rate, n_requests, &mut rng);
+                let snap = coord.metrics().snapshot();
+                let m = &snap.backends[backend];
+                rows.push(ThroughputRow {
+                    backend: backend.into(),
+                    window_ms: window.as_secs_f64() * 1e3,
+                    offered_rps: rate,
+                    achieved_rps: latencies.len() as f64 / elapsed,
+                    p50_s: crate::util::percentile(&latencies, 50.0),
+                    p99_s: crate::util::percentile(&latencies, 99.0),
+                    mean_batch: m.mean_batch(),
+                    shed,
+                });
+            }
+            coord.shutdown();
+        }
+    }
+    Ok(rows)
+}
+
+pub fn render(rows: &[ThroughputRow]) -> String {
+    let mut table = Table::new(&[
+        "backend",
+        "window (ms)",
+        "offered rps",
+        "achieved rps",
+        "p50",
+        "p99",
+        "mean batch",
+        "shed",
+    ]);
+    for r in rows {
+        table.row(&[
+            r.backend.clone(),
+            format!("{:.1}", r.window_ms),
+            format!("{:.0}", r.offered_rps),
+            format!("{:.0}", r.achieved_rps),
+            sci(r.p50_s),
+            sci(r.p99_s),
+            format!("{:.1}", r.mean_batch),
+            r.shed.to_string(),
+        ]);
+    }
+    table.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_sweep_completes_and_serves() {
+        let rows =
+            run_with(ExperimentScale { n_train: 300, n_test: 100, epochs: 1 }, true).unwrap();
+        assert!(!rows.is_empty());
+        for r in &rows {
+            // Served the vast majority of offered load.
+            assert!(
+                r.achieved_rps > 0.0,
+                "{}: no requests served",
+                r.backend
+            );
+            assert!(r.p50_s <= r.p99_s + 1e-12);
+        }
+        assert!(render(&rows).contains("backend"));
+    }
+}

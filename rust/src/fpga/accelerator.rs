@@ -1,0 +1,313 @@
+//! The whole-MLP accelerator: layer sequencing over the pipelined
+//! matmul engine, bias add, and the sigmoid LUT — the "FPGA" device of
+//! Table I.
+//!
+//! A [`QuantizedMlp`] is an [`crate::nn::Mlp`] whose weight matrices
+//! have been SPx-quantized and whose per-layer input scales (`d_scale`,
+//! the Q1.15 range) were calibrated on sample data. [`Accelerator`]
+//! executes it sample-by-sample, returning both the bit-accurate outputs
+//! and the cycle/event trace that the Table-I bench converts to
+//! time-per-sample and watts.
+
+use super::pipeline::{run_matvec, LayerRun, PipelineConfig};
+use super::power::EnergyModel;
+use super::stats::CycleStats;
+use crate::nn::activations::{sigmoid_lut, Activation};
+use crate::nn::mlp::{argmax, Mlp};
+use crate::nn::tensor::Matrix;
+use crate::quant::spx::{SpxConfig, SpxTensor};
+use crate::quant::Calibration;
+
+/// One quantized layer.
+#[derive(Debug, Clone)]
+pub struct QuantizedLayer {
+    pub w: SpxTensor,
+    pub b: Vec<f32>,
+    pub activation: Activation,
+    /// Q1.15 input range for this layer's data operand.
+    pub d_scale: f32,
+}
+
+/// An MLP with SPx-quantized weights, ready for the accelerator.
+#[derive(Debug, Clone)]
+pub struct QuantizedMlp {
+    pub layers: Vec<QuantizedLayer>,
+}
+
+impl QuantizedMlp {
+    /// Quantize a trained MLP. `calib_inputs` (if given) calibrates each
+    /// layer's `d_scale` as the max-abs activation over the batch;
+    /// otherwise scales default to 1.0 (correct for sigmoid networks on
+    /// `[0,1]` inputs — the paper's MNIST setting).
+    pub fn from_mlp(
+        mlp: &Mlp,
+        spx: &SpxConfig,
+        calibration: Calibration,
+        calib_inputs: Option<&Matrix>,
+    ) -> Self {
+        // Per-layer input ranges from a calibration pass.
+        let mut d_scales = vec![1.0f32; mlp.layers.len()];
+        if let Some(x) = calib_inputs {
+            let trace = mlp.forward_trace(x);
+            for (i, scale) in d_scales.iter_mut().enumerate() {
+                let max = trace[i].data.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                if max > 0.0 {
+                    *scale = max;
+                }
+            }
+        }
+        let layers = mlp
+            .layers
+            .iter()
+            .zip(d_scales)
+            .map(|(l, d_scale)| QuantizedLayer {
+                w: SpxTensor::encode(
+                    spx,
+                    &l.w.data,
+                    &[l.w.rows, l.w.cols],
+                    calibration,
+                ),
+                b: l.b.clone(),
+                activation: l.activation,
+                d_scale,
+            })
+            .collect();
+        QuantizedMlp { layers }
+    }
+
+    /// Dequantize back to a plain [`Mlp`] — the "fake-quantized" model
+    /// used by the XLA/CPU backends so every backend computes with the
+    /// same effective weights.
+    pub fn to_dequantized_mlp(&self, reference: &Mlp) -> Mlp {
+        let mut out = reference.clone();
+        for (layer, q) in out.layers.iter_mut().zip(&self.layers) {
+            layer.w.data = q.w.decode();
+            layer.b = q.b.clone();
+        }
+        out
+    }
+
+    /// Total weight-storage bits under this quantization (signs + codes),
+    /// for the compression ratio report.
+    pub fn weight_bits(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| l.w.numel() as u64 * l.w.config.total_bits() as u64)
+            .sum()
+    }
+}
+
+/// Accelerator configuration: microarchitecture + energy model.
+#[derive(Debug, Clone, Copy)]
+pub struct AccelConfig {
+    pub pipeline: PipelineConfig,
+    pub energy: EnergyModel,
+}
+
+impl AccelConfig {
+    pub fn default_fpga() -> Self {
+        AccelConfig {
+            pipeline: PipelineConfig::default_fpga(),
+            energy: EnergyModel::default_fpga(),
+        }
+    }
+}
+
+/// The simulated board: a quantized model + its microarchitecture.
+pub struct Accelerator {
+    pub model: QuantizedMlp,
+    pub config: AccelConfig,
+}
+
+impl Accelerator {
+    pub fn new(model: QuantizedMlp, config: AccelConfig) -> Self {
+        Accelerator { model, config }
+    }
+
+    /// Run one sample through every layer; returns the output vector and
+    /// the merged cycle/event stats.
+    pub fn infer_one(&self, x: &[f32]) -> (Vec<f32>, CycleStats) {
+        let mut stats = CycleStats::default();
+        let lut = sigmoid_lut();
+        let mut a = x.to_vec();
+        for layer in &self.model.layers {
+            let LayerRun { mut outputs, stats: layer_stats } =
+                run_matvec(&layer.w, &a, layer.d_scale, &self.config.pipeline);
+            stats.merge(&layer_stats);
+            // Bias add + activation in the output stage.
+            for (o, &b) in outputs.iter_mut().zip(&layer.b) {
+                *o += b;
+                stats.adds += 1;
+                *o = match layer.activation {
+                    Activation::Sigmoid => {
+                        stats.lut_lookups += 1;
+                        lut.eval(*o)
+                    }
+                    Activation::Relu => o.max(0.0),
+                    Activation::Identity => *o,
+                };
+            }
+            a = outputs;
+        }
+        (a, stats)
+    }
+
+    /// Classify one sample (Eq 4.3).
+    pub fn classify_one(&self, x: &[f32]) -> (usize, CycleStats) {
+        let (out, stats) = self.infer_one(x);
+        (argmax(&out), stats)
+    }
+
+    /// Wall-clock seconds one inference takes at the configured compute
+    /// clock.
+    pub fn seconds_per_inference(&self, stats: &CycleStats) -> f64 {
+        self.config.pipeline.clocks.cycles_to_seconds(stats.compute_cycles)
+    }
+
+    /// Average power over one inference, watts.
+    pub fn power_w(&self, stats: &CycleStats) -> f64 {
+        let t = self.seconds_per_inference(stats);
+        self.config.energy.average_power_w(stats, t)
+    }
+
+    /// Fast functional model: forward with dequantized weights + the
+    /// sigmoid LUT, skipping the cycle simulation. Used by accuracy
+    /// sweeps where only the numbers matter. Matches [`infer_one`] up to
+    /// data-quantization error (pinned by a test).
+    pub fn forward_decoded(&self, x: &[f32]) -> Vec<f32> {
+        let lut = sigmoid_lut();
+        let mut a = x.to_vec();
+        for layer in &self.model.layers {
+            let w = layer.w.decode();
+            let (m, n) = (layer.w.shape[0], layer.w.shape[1]);
+            let mut out = vec![0.0f32; m];
+            for (r, o) in out.iter_mut().enumerate() {
+                let mut acc = 0.0f32;
+                for (j, &aj) in a.iter().enumerate() {
+                    acc += w[r * n + j] * aj;
+                }
+                *o = acc + layer.b[r];
+                *o = match layer.activation {
+                    Activation::Sigmoid => lut.eval(*o),
+                    Activation::Relu => o.max(0.0),
+                    Activation::Identity => *o,
+                };
+            }
+            a = out;
+        }
+        a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::mlp::MlpConfig;
+    use crate::util::check::assert_allclose;
+    use crate::util::rng::Pcg32;
+
+    fn small_mlp(rng: &mut Pcg32) -> Mlp {
+        Mlp::new(
+            MlpConfig {
+                sizes: vec![12, 8, 4],
+                activations: vec![Activation::Sigmoid, Activation::Sigmoid],
+            },
+            rng,
+        )
+    }
+
+    #[test]
+    fn accelerator_matches_decoded_forward() {
+        let mut rng = Pcg32::new(10);
+        let mlp = small_mlp(&mut rng);
+        let q = QuantizedMlp::from_mlp(&mlp, &SpxConfig::sp2(6), Calibration::MaxAbs, None);
+        let acc = Accelerator::new(q, AccelConfig::default_fpga());
+        for _ in 0..8 {
+            let x: Vec<f32> = (0..12).map(|_| rng.uniform() as f32).collect();
+            let (hw, _) = acc.infer_one(&x);
+            let sw = acc.forward_decoded(&x);
+            // Fixed-point data path adds ≤ ~n·2^-15 per pre-activation.
+            assert_allclose(&hw, &sw, 5e-3, 1e-2);
+        }
+    }
+
+    #[test]
+    fn quantized_tracks_fp32_at_high_bits() {
+        let mut rng = Pcg32::new(11);
+        let mlp = small_mlp(&mut rng);
+        let q = QuantizedMlp::from_mlp(&mlp, &SpxConfig::spx(8, 2), Calibration::MaxAbs, None);
+        let acc = Accelerator::new(q, AccelConfig::default_fpga());
+        for _ in 0..8 {
+            let x: Vec<f32> = (0..12).map(|_| rng.uniform() as f32).collect();
+            let (hw, _) = acc.infer_one(&x);
+            let fp = mlp.forward_one(&x);
+            assert_allclose(&hw, &fp, 0.06, 0.1);
+        }
+    }
+
+    #[test]
+    fn stats_accumulate_across_layers() {
+        let mut rng = Pcg32::new(12);
+        let mlp = small_mlp(&mut rng);
+        let q = QuantizedMlp::from_mlp(&mlp, &SpxConfig::sp2(5), Calibration::MaxAbs, None);
+        let acc = Accelerator::new(q, AccelConfig::default_fpga());
+        let x = vec![0.5f32; 12];
+        let (_, stats) = acc.infer_one(&x);
+        // MACs = 12·8 + 8·4 = 128.
+        assert_eq!(stats.macs, 128);
+        // One sigmoid LUT lookup per neuron = 8 + 4.
+        assert_eq!(stats.lut_lookups, 12);
+        assert!(stats.compute_cycles > 0);
+    }
+
+    #[test]
+    fn dequantized_mlp_has_decoded_weights() {
+        let mut rng = Pcg32::new(13);
+        let mlp = small_mlp(&mut rng);
+        let q = QuantizedMlp::from_mlp(&mlp, &SpxConfig::sp2(4), Calibration::MaxAbs, None);
+        let deq = q.to_dequantized_mlp(&mlp);
+        assert_eq!(deq.layers[0].w.data, q.layers[0].w.decode());
+        // Low-bit decode differs from the original weights.
+        assert_ne!(deq.layers[0].w.data, mlp.layers[0].w.data);
+    }
+
+    #[test]
+    fn calibration_sets_layer_scales() {
+        let mut rng = Pcg32::new(14);
+        let mlp = small_mlp(&mut rng);
+        let x = Matrix::random_uniform(16, 12, 3.0, &mut rng);
+        let q =
+            QuantizedMlp::from_mlp(&mlp, &SpxConfig::sp2(5), Calibration::MaxAbs, Some(&x));
+        // First layer sees the raw inputs (range 3), later layers sigmoid
+        // outputs (range ≤ 1).
+        assert!(q.layers[0].d_scale > 1.5);
+        assert!(q.layers[1].d_scale <= 1.0 + 1e-6);
+    }
+
+    #[test]
+    fn weight_bits_compression() {
+        let mut rng = Pcg32::new(15);
+        let mlp = small_mlp(&mut rng);
+        let q = QuantizedMlp::from_mlp(&mlp, &SpxConfig::sp2(5), Calibration::MaxAbs, None);
+        let params = (12 * 8 + 8 * 4) as u64;
+        assert_eq!(q.weight_bits(), params * 5);
+        // vs 32-bit floats: >6× compression.
+        assert!(params * 32 / q.weight_bits() >= 6);
+    }
+
+    #[test]
+    fn time_and_power_are_positive_and_sane() {
+        let mut rng = Pcg32::new(16);
+        let mlp = Mlp::new(MlpConfig::paper_mnist(), &mut rng);
+        let q = QuantizedMlp::from_mlp(&mlp, &SpxConfig::sp2(5), Calibration::MaxAbs, None);
+        let acc = Accelerator::new(q, AccelConfig::default_fpga());
+        let x = vec![0.5f32; 784];
+        let (_, stats) = acc.infer_one(&x);
+        let t = acc.seconds_per_inference(&stats);
+        let p = acc.power_w(&stats);
+        // The paper's FPGA row is 1.6 µs @ 10 W; our model should land
+        // within two orders of magnitude on time and ~3x on power.
+        assert!(t > 1e-7 && t < 1e-3, "time/sample {t}");
+        assert!(p > 1.0 && p < 40.0, "power {p} W");
+    }
+}

@@ -1,0 +1,117 @@
+//! The two asynchronous clock domains of §3.1: `clk_inbuff` paces RAM →
+//! input-buffer loading, `clk_compute` paces the PU pipeline. The paper's
+//! feasibility argument — loading outruns computing despite a slower
+//! load clock, because each load moves `bandwidth` words — is encoded in
+//! [`ClockConfig::words_per_compute_cycle`].
+
+/// Dual-clock configuration. Frequencies in MHz.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClockConfig {
+    /// Input-buffer write clock (RAM side). The paper notes this is
+    /// *slower* per cycle (e.g. >300 ns example) but wide.
+    pub clk_inbuff_mhz: f64,
+    /// PU compute clock.
+    pub clk_compute_mhz: f64,
+    /// Words transferred into the buffer per `clk_inbuff` cycle
+    /// (the RAM–buffer bandwidth, in elements).
+    pub bandwidth_words: u32,
+}
+
+impl ClockConfig {
+    /// APEX-class defaults: 150 MHz compute, 75 MHz load clock moving
+    /// 256 words/cycle — a wide internal BRAM port, exactly the §3.1
+    /// argument: the load *clock* is slower (its period is "necessarily
+    /// larger than the computing clock-cycle") but each load cycle moves
+    /// a whole burst, so aggregate loading outruns computing.
+    pub fn default_fpga() -> Self {
+        ClockConfig { clk_inbuff_mhz: 75.0, clk_compute_mhz: 150.0, bandwidth_words: 256 }
+    }
+
+    pub fn compute_period_ns(&self) -> f64 {
+        1e3 / self.clk_compute_mhz
+    }
+
+    pub fn inbuff_period_ns(&self) -> f64 {
+        1e3 / self.clk_inbuff_mhz
+    }
+
+    /// Effective load throughput measured in words per *compute* cycle —
+    /// the number that must exceed the pipeline's consumption rate for
+    /// stall-free operation.
+    pub fn words_per_compute_cycle(&self) -> f64 {
+        self.bandwidth_words as f64 * self.clk_inbuff_mhz / self.clk_compute_mhz
+    }
+
+    /// Convert a compute-cycle count to seconds.
+    pub fn cycles_to_seconds(&self, cycles: u64) -> f64 {
+        cycles as f64 * self.compute_period_ns() * 1e-9
+    }
+
+    /// Compute cycle (fractional) at which `words` words have finished
+    /// loading, assuming loading starts at compute-cycle 0 and moves
+    /// `bandwidth_words` per inbuff cycle (a word is visible only at the
+    /// inbuff clock edge that completes it).
+    pub fn load_finish_cycle(&self, words: u64) -> f64 {
+        let inbuff_cycles = (words as f64 / self.bandwidth_words as f64).ceil();
+        inbuff_cycles * self.clk_compute_mhz / self.clk_inbuff_mhz
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.clk_inbuff_mhz <= 0.0 || self.clk_compute_mhz <= 0.0 {
+            return Err("clock frequencies must be positive".into());
+        }
+        if self.bandwidth_words == 0 {
+            return Err("bandwidth_words must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_validates() {
+        ClockConfig::default_fpga().validate().unwrap();
+    }
+
+    #[test]
+    fn periods() {
+        let c = ClockConfig { clk_inbuff_mhz: 100.0, clk_compute_mhz: 200.0, bandwidth_words: 4 };
+        assert!((c.compute_period_ns() - 5.0).abs() < 1e-12);
+        assert!((c.inbuff_period_ns() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn words_per_compute_cycle_scales_with_ratio() {
+        let c = ClockConfig { clk_inbuff_mhz: 50.0, clk_compute_mhz: 100.0, bandwidth_words: 8 };
+        // 8 words every 2 compute cycles → 4 words/compute-cycle.
+        assert!((c.words_per_compute_cycle() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn load_finish_cycle_edges() {
+        let c = ClockConfig { clk_inbuff_mhz: 100.0, clk_compute_mhz: 100.0, bandwidth_words: 8 };
+        // 8 words → exactly 1 inbuff cycle → compute cycle 1.
+        assert!((c.load_finish_cycle(8) - 1.0).abs() < 1e-12);
+        // 9 words → 2 inbuff cycles.
+        assert!((c.load_finish_cycle(9) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_example_load_slower_but_wider() {
+        // The §3.1 example: load clock slower (>300 ns) than compute,
+        // yet loading keeps up because of width. 3 MHz load × 256 words
+        // vs 100 MHz compute consuming 1 word/PU-cycle × 2 PUs.
+        let c = ClockConfig { clk_inbuff_mhz: 3.3, clk_compute_mhz: 100.0, bandwidth_words: 256 };
+        assert!(c.words_per_compute_cycle() > 2.0);
+    }
+
+    #[test]
+    fn cycles_to_seconds_roundtrip() {
+        let c = ClockConfig { clk_inbuff_mhz: 50.0, clk_compute_mhz: 100.0, bandwidth_words: 8 };
+        let s = c.cycles_to_seconds(100_000_000);
+        assert!((s - 1.0).abs() < 1e-9); // 1e8 cycles at 100 MHz = 1 s.
+    }
+}

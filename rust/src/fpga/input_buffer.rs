@@ -1,0 +1,183 @@
+//! The input buffer of Fig 1: written from RAM at `clk_inbuff`, read by
+//! the PU pipeline at `clk_compute`, with bounded capacity and therefore
+//! backpressure on the loader.
+//!
+//! Loading is modeled at row granularity: one *reorganized row*
+//! (`wᵢ ‖ d`, `2n` words) takes `ceil(2n / bandwidth)` inbuff cycles,
+//! and a row becomes visible to the PUs at the inbuff clock edge that
+//! completes it (clock-domain crossing — a word cannot be consumed
+//! mid-transfer). When the buffer already holds `capacity_rows` rows the
+//! loader stalls until the pipeline releases one.
+//!
+//! All times are expressed in (fractional) compute-clock cycles so the
+//! pipeline can compare them directly with PU busy times.
+
+use super::clock::ClockConfig;
+
+/// Loader + occupancy model for one layer's row stream.
+#[derive(Debug)]
+pub struct InputBuffer {
+    /// Compute cycles per inbuff cycle (`f_compute / f_inbuff`).
+    ratio: f64,
+    /// Inbuff cycles needed to transfer one row.
+    load_cycles_per_row: u64,
+    capacity_rows: usize,
+    /// Loader's next-free time (compute cycles).
+    loader_free: f64,
+    /// Row availability times, in row order.
+    avail: Vec<f64>,
+    /// Row release times (set by the pipeline as PUs finish), row order.
+    released: Vec<f64>,
+}
+
+impl InputBuffer {
+    /// `row_words` is the reorganized-row width `2n`.
+    pub fn new(clocks: &ClockConfig, capacity_rows: usize, row_words: usize) -> Self {
+        assert!(capacity_rows >= 1, "buffer must hold at least one row");
+        assert!(row_words >= 1);
+        let load_cycles_per_row =
+            (row_words as u64).div_ceil(clocks.bandwidth_words as u64);
+        InputBuffer {
+            ratio: clocks.clk_compute_mhz / clocks.clk_inbuff_mhz,
+            load_cycles_per_row,
+            capacity_rows,
+            loader_free: 0.0,
+            avail: Vec::new(),
+            released: Vec::new(),
+        }
+    }
+
+    /// Compute cycles one row spends in transfer.
+    pub fn row_load_compute_cycles(&self) -> f64 {
+        self.load_cycles_per_row as f64 * self.ratio
+    }
+
+    /// Schedule the load of the next row (row index = number of prior
+    /// calls). Returns the time the row becomes available to a PU.
+    ///
+    /// Backpressure: loading row `r` cannot *start* before row
+    /// `r - capacity` has been released (its slot must be free).
+    pub fn load_next_row(&mut self) -> f64 {
+        let r = self.avail.len();
+        let gate = if r >= self.capacity_rows {
+            *self
+                .released
+                .get(r - self.capacity_rows)
+                .expect("pipeline must release rows before loading capacity+r")
+        } else {
+            0.0
+        };
+        let begin = self.loader_free.max(gate);
+        // Align the start to the next inbuff clock edge.
+        let begin_edge = (begin / self.ratio).ceil();
+        let done = (begin_edge + self.load_cycles_per_row as f64) * self.ratio;
+        self.loader_free = done;
+        self.avail.push(done);
+        done
+    }
+
+    /// The pipeline reports that row `r` has been fully consumed at `t`.
+    /// Must be called in row order.
+    pub fn release_row(&mut self, r: usize, t: f64) {
+        assert_eq!(r, self.released.len(), "releases must be in row order");
+        debug_assert!(t >= self.avail[r], "released before available");
+        self.released.push(t);
+    }
+
+    /// High-water mark of simultaneously buffered rows: row `r` occupies
+    /// the buffer in `[avail[r], released[r])` (transfer slots counted at
+    /// completion; in-flight transfer occupies its slot too via the gate).
+    pub fn peak_occupancy(&self) -> u64 {
+        let mut peak = 0u64;
+        // Two-pointer sweep: at each availability event, count rows not
+        // yet released.
+        let mut rel_ptr = 0usize;
+        for (r, &a) in self.avail.iter().enumerate() {
+            while rel_ptr < self.released.len() && self.released[rel_ptr] <= a {
+                rel_ptr += 1;
+            }
+            peak = peak.max((r + 1 - rel_ptr) as u64);
+        }
+        peak
+    }
+
+    pub fn rows_loaded(&self) -> usize {
+        self.avail.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn clocks(inbuff: f64, compute: f64, bw: u32) -> ClockConfig {
+        ClockConfig { clk_inbuff_mhz: inbuff, clk_compute_mhz: compute, bandwidth_words: bw }
+    }
+
+    #[test]
+    fn first_row_arrives_after_transfer_time() {
+        // 16-word rows, 8 words/cycle, equal clocks → 2 cycles per row.
+        let c = clocks(100.0, 100.0, 8);
+        let mut buf = InputBuffer::new(&c, 4, 16);
+        assert_eq!(buf.load_next_row(), 2.0);
+        assert_eq!(buf.load_next_row(), 4.0);
+    }
+
+    #[test]
+    fn clock_ratio_scales_availability() {
+        // Load clock at half the compute clock: 2 inbuff cycles = 4
+        // compute cycles.
+        let c = clocks(50.0, 100.0, 8);
+        let mut buf = InputBuffer::new(&c, 4, 16);
+        assert_eq!(buf.load_next_row(), 4.0);
+    }
+
+    #[test]
+    fn backpressure_gates_on_release() {
+        let c = clocks(100.0, 100.0, 16);
+        let mut buf = InputBuffer::new(&c, 2, 16); // capacity 2 rows, 1 cycle each
+        let a0 = buf.load_next_row(); // t=1
+        let a1 = buf.load_next_row(); // t=2
+        assert_eq!((a0, a1), (1.0, 2.0));
+        // Row 2 cannot start loading until row 0 is released at t=10.
+        buf.release_row(0, 10.0);
+        let a2 = buf.load_next_row();
+        assert_eq!(a2, 11.0);
+    }
+
+    #[test]
+    fn no_backpressure_with_huge_capacity() {
+        let c = clocks(100.0, 100.0, 16);
+        let mut buf = InputBuffer::new(&c, 1000, 16);
+        for r in 0..100 {
+            assert_eq!(buf.load_next_row(), (r + 1) as f64);
+        }
+    }
+
+    #[test]
+    fn peak_occupancy_counts_unreleased_rows() {
+        let c = clocks(100.0, 100.0, 16);
+        let mut buf = InputBuffer::new(&c, 8, 16);
+        for _ in 0..4 {
+            buf.load_next_row(); // avail at 1,2,3,4
+        }
+        // Releases long after all four loaded → peak 4.
+        for r in 0..4 {
+            buf.release_row(r, 100.0 + r as f64);
+        }
+        assert_eq!(buf.peak_occupancy(), 4);
+    }
+
+    #[test]
+    fn loader_aligns_to_inbuff_edges() {
+        // ratio = 3 compute cycles per inbuff cycle; a gate at t=4 must
+        // round the load start up to the edge at t=6.
+        let c = clocks(100.0, 300.0, 16);
+        let mut buf = InputBuffer::new(&c, 1, 16);
+        let a0 = buf.load_next_row(); // edge 1 → t=3
+        assert_eq!(a0, 3.0);
+        buf.release_row(0, 4.0);
+        let a1 = buf.load_next_row(); // gate 4 → edge 2 (t=6) → done t=9
+        assert_eq!(a1, 9.0);
+    }
+}

@@ -1,0 +1,31 @@
+//! Cycle-accurate model of the paper's FPGA accelerator (§3.1, Fig 1/2):
+//! a dual-clock input buffer feeding a pipelined array of shift-add
+//! processing units, with a sigmoid LUT between layers and an
+//! activity-based power model on top.
+//!
+//! The simulator is *exact* under its microarchitectural model — it
+//! derives per-row start/finish times analytically from the clock ratio
+//! and buffer state rather than ticking every cycle, so Table-I runs
+//! finish in milliseconds while still reporting the same cycle counts a
+//! tick-by-tick simulation of the model would (a test in [`pipeline`]
+//! cross-checks a small tick-level reference).
+//!
+//! Two outputs per inference:
+//! * **numbers** — bit-accurate fixed-point shift-add arithmetic
+//!   ([`pu`]), so the accelerator's accuracy can be measured end-to-end;
+//! * **events** — cycle and primitive-operation counts ([`stats`]),
+//!   which [`power`] converts to energy/power and the Table-I bench
+//!   converts to time-per-sample at the configured `clk_compute`.
+
+pub mod accelerator;
+pub mod clock;
+pub mod input_buffer;
+pub mod pipeline;
+pub mod power;
+pub mod pu;
+pub mod stats;
+pub mod tick_ref;
+pub mod verilog;
+
+pub use accelerator::{AccelConfig, Accelerator};
+pub use stats::CycleStats;

@@ -1,0 +1,444 @@
+//! The pipelined matrix-multiply engine of §3.1 / Fig 2.
+//!
+//! For `W (m×n) · d (n×1)`: the weight matrix is decomposed into rows
+//! `w₁ … w_m`, each concatenated with `d` into a reorganized row and
+//! streamed through the input buffer to an array of `P` first-level PUs.
+//! Row `i` starts one compute cycle behind row `i-1` (the paper's
+//! pipeline stagger); a PU executes `lanes` MACs per cycle, so row `i`'s
+//! dot product emerges `ceil(n/lanes) + depth` cycles after it starts.
+//! Outputs concatenate into `W · d`. Two schedules exist: the literal
+//! §3.1 *streaming* dataflow (reorganized rows re-loaded per sample) and
+//! the *weight-resident* serving mode — see [`PipelineConfig`].
+//!
+//! The schedule is computed row-analytically (each row's start time is
+//! the max of its buffer-availability, its PU's free time, and the
+//! stagger constraint) — exact under the model, no per-cycle ticking.
+
+use super::clock::ClockConfig;
+use super::input_buffer::InputBuffer;
+use super::pu::{dot_shift_add, quantize_data};
+use super::stats::CycleStats;
+use crate::quant::spx::SpxTensor;
+
+/// Pipeline micro-architecture parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct PipelineConfig {
+    pub clocks: ClockConfig,
+    /// Number of first-level PUs (`P`). Rows are assigned round-robin.
+    pub num_pus: usize,
+    /// Input-buffer capacity in reorganized rows.
+    pub buffer_capacity_rows: usize,
+    /// Extra output-stage latency in cycles (shift/add-tree/rescale
+    /// registers).
+    pub pipeline_depth: u32,
+    /// Parallel MAC lanes inside each PU — a row finishes in
+    /// `ceil(n / lanes)` cycles. The paper's 1.6 µs/sample implies a
+    /// multi-lane array (101k MACs in ~200 cycles); lanes = 8 with 128
+    /// PUs is a 1024-MAC fabric, plausible on a mid-size part.
+    pub lanes: usize,
+    /// Weight residency. `true`: weight rows stay in on-chip SRAM
+    /// across samples and only the data vector streams per inference —
+    /// the steady-state serving mode, and the only reading of §3.1
+    /// consistent with Table I's 1.6 µs (re-streaming 200 KiB of
+    /// weights per sample cannot). `false`: every sample streams full
+    /// reorganized rows (`wᵢ ‖ d`) through the input buffer — the
+    /// literal Fig 1/2 dataflow, used by the §3.1 ablation study.
+    pub weight_resident: bool,
+}
+
+impl PipelineConfig {
+    /// The Table-I device: weight-resident, 8-lane PUs.
+    pub fn default_fpga() -> Self {
+        PipelineConfig {
+            clocks: ClockConfig::default_fpga(),
+            num_pus: 128,
+            buffer_capacity_rows: 32,
+            pipeline_depth: 3,
+            lanes: 8,
+            weight_resident: true,
+        }
+    }
+
+    /// The literal §3.1 streaming dataflow (Fig 1/2): single-lane PUs,
+    /// reorganized rows re-loaded per sample. The pipeline-ablation
+    /// experiment studies this configuration.
+    pub fn streaming() -> Self {
+        PipelineConfig {
+            clocks: ClockConfig::default_fpga(),
+            num_pus: 128,
+            buffer_capacity_rows: 32,
+            pipeline_depth: 3,
+            lanes: 1,
+            weight_resident: false,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        self.clocks.validate()?;
+        if self.num_pus == 0 {
+            return Err("num_pus must be positive".into());
+        }
+        if self.buffer_capacity_rows == 0 {
+            return Err("buffer capacity must be positive".into());
+        }
+        if self.lanes == 0 {
+            return Err("lanes must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+/// Result of one `W · d` pass.
+#[derive(Debug, Clone)]
+pub struct LayerRun {
+    /// The m dot products (bit-accurate shift-add arithmetic).
+    pub outputs: Vec<f32>,
+    pub stats: CycleStats,
+}
+
+/// Execute `W · d` through the pipelined engine.
+///
+/// * `w` — SPx-quantized `m × n` weight matrix.
+/// * `d` — data vector (length n), values scaled by `d_scale` into Q1.15.
+pub fn run_matvec(
+    w: &SpxTensor,
+    d: &[f32],
+    d_scale: f32,
+    cfg: &PipelineConfig,
+) -> LayerRun {
+    assert_eq!(w.shape.len(), 2, "weights must be a matrix");
+    let n = w.shape[1];
+    assert_eq!(d.len(), n, "data length {} vs weight cols {n}", d.len());
+    cfg.validate().expect("invalid pipeline config");
+    if cfg.weight_resident {
+        run_matvec_resident(w, d, d_scale, cfg)
+    } else {
+        run_matvec_streaming(w, d, d_scale, cfg)
+    }
+}
+
+/// Streaming schedule: every sample loads full reorganized rows.
+fn run_matvec_streaming(
+    w: &SpxTensor,
+    d: &[f32],
+    d_scale: f32,
+    cfg: &PipelineConfig,
+) -> LayerRun {
+    let (m, n) = (w.shape[0], w.shape[1]);
+    let mut stats = CycleStats::default();
+    let row_words = 2 * n; // reorganized row = wᵢ ‖ d
+    let mut buffer = InputBuffer::new(&cfg.clocks, cfg.buffer_capacity_rows, row_words);
+
+    // RAM traffic: m weight rows + the data vector read once by the
+    // preprocessor; the buffer then holds m full reorganized rows.
+    stats.ram_reads += (m * n + n) as u64;
+    stats.buffer_writes += (m * row_words) as u64;
+    stats.buffer_reads += (m * row_words) as u64;
+
+    let d_fixed = quantize_data(d, d_scale);
+    let busy_cycles = (n as f64 / cfg.lanes as f64).ceil();
+
+    let mut pu_free = vec![0.0f64; cfg.num_pus];
+    let mut prev_start = f64::NEG_INFINITY;
+    let mut outputs = Vec::with_capacity(m);
+    let mut last_finish = 0.0f64;
+    let mut stall = 0.0f64;
+
+    for r in 0..m {
+        let avail = buffer.load_next_row();
+        let p = r % cfg.num_pus;
+        // Stagger: one cycle behind the previous row; PU must be free.
+        let ready = pu_free[p].max(if r == 0 { 0.0 } else { prev_start + 1.0 });
+        let start = ready.max(avail);
+        stall += (avail - ready).max(0.0);
+        let busy_until = start + busy_cycles;
+        let finish = busy_until + cfg.pipeline_depth as f64;
+        pu_free[p] = busy_until;
+        prev_start = start;
+        last_finish = last_finish.max(finish);
+        buffer.release_row(r, busy_until);
+
+        outputs.push(dot_shift_add(w, r, &d_fixed, d_scale, &mut stats));
+    }
+
+    stats.compute_cycles = last_finish.ceil() as u64;
+    stats.stall_cycles = stall.ceil() as u64;
+    stats.buffer_peak_rows = buffer.peak_occupancy();
+    LayerRun { outputs, stats }
+}
+
+/// Weight-resident schedule: weights live in on-chip SRAM; only the
+/// data vector crosses the input buffer per sample, so all rows become
+/// eligible as soon as the `n`-word data transfer lands.
+fn run_matvec_resident(
+    w: &SpxTensor,
+    d: &[f32],
+    d_scale: f32,
+    cfg: &PipelineConfig,
+) -> LayerRun {
+    let (m, n) = (w.shape[0], w.shape[1]);
+    let mut stats = CycleStats::default();
+
+    // Per-sample traffic: the data vector only. (The one-time weight
+    // fill is amortized across the deployment and not charged here —
+    // DESIGN.md §5 documents this accounting.)
+    stats.ram_reads += n as u64;
+    stats.buffer_writes += n as u64;
+    // PUs read weights from their SRAM banks and data from the buffer.
+    stats.buffer_reads += (m * n + n) as u64;
+
+    let data_avail = cfg.clocks.load_finish_cycle(n as u64);
+    let d_fixed = quantize_data(d, d_scale);
+    let busy_cycles = (n as f64 / cfg.lanes as f64).ceil();
+
+    let mut pu_free = vec![0.0f64; cfg.num_pus];
+    let mut prev_start = f64::NEG_INFINITY;
+    let mut outputs = Vec::with_capacity(m);
+    let mut last_finish = 0.0f64;
+    let mut stall = 0.0f64;
+
+    for r in 0..m {
+        let p = r % cfg.num_pus;
+        let ready = pu_free[p].max(if r == 0 { 0.0 } else { prev_start + 1.0 });
+        let start = ready.max(data_avail);
+        stall += (data_avail - ready).max(0.0);
+        let busy_until = start + busy_cycles;
+        let finish = busy_until + cfg.pipeline_depth as f64;
+        pu_free[p] = busy_until;
+        prev_start = start;
+        last_finish = last_finish.max(finish);
+
+        outputs.push(dot_shift_add(w, r, &d_fixed, d_scale, &mut stats));
+    }
+
+    stats.compute_cycles = last_finish.ceil() as u64;
+    stats.stall_cycles = stall.ceil() as u64;
+    stats.buffer_peak_rows = 1;
+    LayerRun { outputs, stats }
+}
+
+/// Reference (non-pipelined) schedule for the ablation bench E3: rows
+/// are processed strictly sequentially by a single PU, and every row's
+/// load waits for the previous row's compute to finish (no
+/// load/compute decoupling — the design §3.1 replaces).
+pub fn run_matvec_unpipelined(
+    w: &SpxTensor,
+    d: &[f32],
+    d_scale: f32,
+    cfg: &PipelineConfig,
+) -> LayerRun {
+    let (m, n) = (w.shape[0], w.shape[1]);
+    assert_eq!(d.len(), n);
+    let mut stats = CycleStats::default();
+    let row_words = 2 * n;
+    stats.ram_reads += (m * n + n) as u64;
+    stats.buffer_writes += (m * row_words) as u64;
+    stats.buffer_reads += (m * row_words) as u64;
+
+    let d_fixed = quantize_data(d, d_scale);
+    let buffer = InputBuffer::new(&cfg.clocks, 1, row_words);
+    let load_cycles = buffer.row_load_compute_cycles();
+    let mut t = 0.0f64;
+    let mut outputs = Vec::with_capacity(m);
+    for r in 0..m {
+        t += load_cycles; // serialized load
+        t += n as f64 + cfg.pipeline_depth as f64; // then compute
+        outputs.push(dot_shift_add(w, r, &d_fixed, d_scale, &mut stats));
+    }
+    stats.compute_cycles = t.ceil() as u64;
+    stats.stall_cycles = (m as f64 * load_cycles).ceil() as u64;
+    stats.buffer_peak_rows = 1;
+    LayerRun { outputs, stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::spx::SpxConfig;
+    use crate::quant::Calibration;
+    use crate::util::check::{assert_allclose, property};
+    use crate::util::rng::Pcg32;
+
+    fn quantized(m: usize, n: usize, rng: &mut Pcg32) -> SpxTensor {
+        let data: Vec<f32> = (0..m * n).map(|_| rng.normal() as f32 * 0.4).collect();
+        SpxTensor::encode(&SpxConfig::sp2(5), &data, &[m, n], Calibration::MaxAbs)
+    }
+
+    fn fast_load_cfg(num_pus: usize) -> PipelineConfig {
+        PipelineConfig {
+            clocks: ClockConfig {
+                clk_inbuff_mhz: 1000.0,
+                clk_compute_mhz: 1.0,
+                bandwidth_words: 4096,
+            },
+            num_pus,
+            buffer_capacity_rows: 4096,
+            pipeline_depth: 3,
+            lanes: 1,
+            weight_resident: false,
+        }
+    }
+
+    #[test]
+    fn classic_pipeline_formula_under_infinite_bandwidth() {
+        // With loading effectively free and P ≥ m, the schedule is the
+        // textbook pipeline: total = (m-1) stagger + n MACs + depth,
+        // plus the sub-cycle first-row load latency that rounds up once.
+        let mut rng = Pcg32::new(1);
+        let (m, n) = (16, 32);
+        let w = quantized(m, n, &mut rng);
+        let d: Vec<f32> = (0..n).map(|_| rng.uniform() as f32).collect();
+        let run = run_matvec(&w, &d, 1.0, &fast_load_cfg(m));
+        assert_eq!(
+            run.stats.compute_cycles,
+            (m - 1 + n + 3) as u64 + 1,
+            "stats: {:?}",
+            run.stats
+        );
+        // The only stall is waiting for the very first row to land.
+        assert!(run.stats.stall_cycles <= 1);
+    }
+
+    #[test]
+    fn outputs_match_pu_reference() {
+        property("pipeline outputs == direct dot products", 16, |rng| {
+            let (m, n) = (1 + rng.index(12), 1 + rng.index(24));
+            let w = quantized(m, n, rng);
+            let d: Vec<f32> = (0..n).map(|_| rng.uniform() as f32).collect();
+            let run = run_matvec(&w, &d, 1.0, &PipelineConfig::default_fpga());
+            let d_fixed = quantize_data(&d, 1.0);
+            let mut s = CycleStats::default();
+            let expect: Vec<f32> =
+                (0..m).map(|r| dot_shift_add(&w, r, &d_fixed, 1.0, &mut s)).collect();
+            assert_allclose(&run.outputs, &expect, 1e-7, 1e-6);
+        });
+    }
+
+    #[test]
+    fn slow_loading_stalls_pipeline() {
+        let mut rng = Pcg32::new(2);
+        let (m, n) = (32, 64);
+        let w = quantized(m, n, &mut rng);
+        let d: Vec<f32> = (0..n).map(|_| rng.uniform() as f32).collect();
+        let slow = PipelineConfig {
+            clocks: ClockConfig {
+                clk_inbuff_mhz: 1.0,
+                clk_compute_mhz: 100.0,
+                bandwidth_words: 8,
+            },
+            num_pus: m,
+            buffer_capacity_rows: 64,
+            pipeline_depth: 3,
+            lanes: 1,
+            weight_resident: false,
+        };
+        let run = run_matvec(&w, &d, 1.0, &slow);
+        assert!(run.stats.stall_cycles > 0, "expected starvation: {:?}", run.stats);
+        // Load-bound: total ≈ m rows × row-load-time.
+        let per_row = 2.0 * n as f64 / 8.0 * 100.0; // inbuff cycles × ratio
+        assert!(run.stats.compute_cycles as f64 >= m as f64 * per_row * 0.9);
+    }
+
+    #[test]
+    fn faster_load_clock_never_hurts() {
+        property("monotone in load clock", 8, |rng| {
+            let (m, n) = (8 + rng.index(24), 8 + rng.index(56));
+            let w = quantized(m, n, rng);
+            let d: Vec<f32> = (0..n).map(|_| rng.uniform() as f32).collect();
+            let mut last = u64::MAX;
+            for inbuff in [5.0, 20.0, 80.0, 320.0] {
+                let cfg = PipelineConfig {
+                    clocks: ClockConfig {
+                        clk_inbuff_mhz: inbuff,
+                        clk_compute_mhz: 100.0,
+                        bandwidth_words: 16,
+                    },
+                    num_pus: 16,
+                    buffer_capacity_rows: 16,
+                    pipeline_depth: 3,
+                    lanes: 1,
+                    weight_resident: false,
+                };
+                let run = run_matvec(&w, &d, 1.0, &cfg);
+                assert!(
+                    run.stats.compute_cycles <= last,
+                    "cycles grew when load clock rose to {inbuff} MHz"
+                );
+                last = run.stats.compute_cycles;
+            }
+        });
+    }
+
+    #[test]
+    fn bigger_buffer_never_hurts() {
+        property("monotone in buffer capacity", 8, |rng| {
+            let (m, n) = (16 + rng.index(16), 8 + rng.index(24));
+            let w = quantized(m, n, rng);
+            let d: Vec<f32> = (0..n).map(|_| rng.uniform() as f32).collect();
+            let mut last = u64::MAX;
+            for cap in [1usize, 2, 8, 64] {
+                let cfg = PipelineConfig {
+                    clocks: ClockConfig {
+                        clk_inbuff_mhz: 30.0,
+                        clk_compute_mhz: 100.0,
+                        bandwidth_words: 8,
+                    },
+                    num_pus: 8,
+                    buffer_capacity_rows: cap,
+                    pipeline_depth: 3,
+                    lanes: 1,
+                    weight_resident: false,
+                };
+                let run = run_matvec(&w, &d, 1.0, &cfg);
+                assert!(run.stats.compute_cycles <= last, "cap {cap} worsened schedule");
+                last = run.stats.compute_cycles;
+            }
+        });
+    }
+
+    #[test]
+    fn pipelined_beats_unpipelined() {
+        // E3's headline: the §3.1 design vs the serialized baseline.
+        let mut rng = Pcg32::new(3);
+        let (m, n) = (128, 784);
+        let w = quantized(m, n, &mut rng);
+        let d: Vec<f32> = (0..n).map(|_| rng.uniform() as f32).collect();
+        let cfg = PipelineConfig::default_fpga();
+        let piped = run_matvec(&w, &d, 1.0, &cfg);
+        let serial = run_matvec_unpipelined(&w, &d, 1.0, &cfg);
+        assert!(
+            piped.stats.compute_cycles * 4 < serial.stats.compute_cycles,
+            "pipelined {} vs serial {}",
+            piped.stats.compute_cycles,
+            serial.stats.compute_cycles
+        );
+        // Same arithmetic, same answers.
+        assert_allclose(&piped.outputs, &serial.outputs, 1e-7, 1e-6);
+    }
+
+    #[test]
+    fn buffer_peak_bounded_by_capacity_plus_transfer() {
+        let mut rng = Pcg32::new(4);
+        let (m, n) = (64, 32);
+        let w = quantized(m, n, &mut rng);
+        let d: Vec<f32> = (0..n).map(|_| rng.uniform() as f32).collect();
+        let cfg = PipelineConfig {
+            clocks: ClockConfig {
+                clk_inbuff_mhz: 200.0,
+                clk_compute_mhz: 100.0,
+                bandwidth_words: 64,
+            },
+            num_pus: 4,
+            buffer_capacity_rows: 8,
+            pipeline_depth: 3,
+            lanes: 1,
+            weight_resident: false,
+        };
+        let run = run_matvec(&w, &d, 1.0, &cfg);
+        assert!(
+            run.stats.buffer_peak_rows <= 9,
+            "peak {} exceeds capacity+in-flight",
+            run.stats.buffer_peak_rows
+        );
+    }
+}

@@ -1,0 +1,293 @@
+//! Processing Unit: the shift-add MAC datapath of §3.1/§3.2.
+//!
+//! A PU consumes one *reorganized row* — the concatenation `wᵢ ‖ d` of a
+//! quantized weight row and the data vector (after Sudrajat [5]) — and
+//! produces the dot product `wᵢ · d`, one MAC per compute cycle.
+//!
+//! Datapath: data elements are Q1.15 fixed point; a weight is a sign and
+//! `x` exponent codes; one MAC is `x` barrel shifts of the data word
+//! into a guarded 48-bit accumulator (15 guard bits, the width a
+//! DSP-free FPGA accumulator would use) plus `x` adds. The only real
+//! multipliers in the design sit *after* the accumulator: one per output
+//! for the `α/max_sum · d_scale` rescale (§3.1's "quantized float
+//! multiplication"), counted as `mults` in the stats.
+
+use crate::quant::spx::SpxTensor;
+use super::stats::CycleStats;
+
+/// Fractional bits of the data fixed-point format (Q1.15).
+pub const DATA_FRAC_BITS: u32 = 15;
+/// Guard bits kept during shifting so truncation error stays below
+/// 2^-30 per term (48-bit accumulator datapath). Shared with the packed
+/// layout's precomputed shift sums.
+pub const GUARD_BITS: u32 = crate::quant::spx::FIXED_GUARD_BITS;
+
+/// Quantize a data value to Q1.15 against `d_scale` (saturating).
+#[inline]
+pub fn to_fixed(x: f32, d_scale: f32) -> i32 {
+    let norm = if d_scale > 0.0 { x / d_scale } else { 0.0 };
+    let v = (norm * (1 << DATA_FRAC_BITS) as f32).round();
+    v.clamp(-(1 << DATA_FRAC_BITS) as f32, ((1 << DATA_FRAC_BITS) - 1) as f32) as i32
+}
+
+/// Back to f32.
+#[inline]
+pub fn from_fixed(v: i64, d_scale: f32) -> f32 {
+    v as f32 / (1u64 << DATA_FRAC_BITS) as f32 * d_scale
+}
+
+/// One shift-add MAC: accumulate `w · d` where `w` is (sign, codes) and
+/// `d` is a Q1.15 word extended with guard bits. Returns the signed
+/// contribution in Q(1.30) (`DATA_FRAC_BITS + GUARD_BITS` fractional
+/// bits) and bumps the event counters.
+#[inline]
+pub fn mac_shift_add(
+    d_fixed: i32,
+    sign: i8,
+    codes: &[u8],
+    stats: &mut CycleStats,
+) -> i64 {
+    let extended = (d_fixed as i64) << GUARD_BITS;
+    let mut term_sum = 0i64;
+    for &k in codes {
+        stats.shifts += 1;
+        if k != 0 {
+            term_sum += extended >> k;
+            stats.adds += 1;
+        }
+    }
+    stats.macs += 1;
+    stats.adds += 1; // accumulate into the running dot product
+    if sign < 0 {
+        -term_sum
+    } else {
+        term_sum
+    }
+}
+
+/// Compute the full dot product of quantized weight row `row` of `w`
+/// against data `d` (f32, scaled by `d_scale`) through the fixed-point
+/// shift-add datapath. `w` must be 2-D with rows of length `d.len()`.
+///
+/// Hot path: arithmetic runs over the element-major [`PackedCodes`]
+/// stream (one u32 per weight) with the event counters charged
+/// analytically per row — bit-identical to the per-MAC reference
+/// [`dot_shift_add_reference`], which a test pins down.
+pub fn dot_shift_add(
+    w: &SpxTensor,
+    row: usize,
+    d_fixed: &[i32],
+    d_scale: f32,
+    stats: &mut CycleStats,
+) -> f32 {
+    let n = w.shape[1];
+    debug_assert_eq!(d_fixed.len(), n);
+    let packed = w.packed();
+    let words = &packed.words[row * n..(row + 1) * n];
+    let mut acc = 0i64;
+    if packed.row_fast[row] {
+        // Every code k in this row satisfies k ≤ G, so
+        // `(d << G) >> k == d · 2^{G−k}` exactly and the whole MAC
+        // collapses to an integer multiply by the precomputed shift sum
+        // — a plain (auto-vectorizable) integer dot product,
+        // bit-identical to the shift datapath.
+        let values = &packed.values[row * n..(row + 1) * n];
+        for (&df, &v) in d_fixed.iter().zip(values) {
+            acc += df as i64 * v;
+        }
+        stats.macs += n as u64;
+        stats.shifts += (n * packed.x) as u64;
+        stats.adds += packed.row_active_terms[row] as u64 + n as u64;
+        stats.mults += 1;
+        return from_fixed(acc >> GUARD_BITS, d_scale) * w.scale;
+    }
+    match packed.x {
+        1 => {
+            for (&df, &word) in d_fixed.iter().zip(words) {
+                let extended = (df as i64) << GUARD_BITS;
+                let k0 = word & 0x7f;
+                let mut term = if k0 != 0 { extended >> k0 } else { 0 };
+                if word >> 31 != 0 {
+                    term = -term;
+                }
+                acc += term;
+            }
+        }
+        2 => {
+            for (&df, &word) in d_fixed.iter().zip(words) {
+                let extended = (df as i64) << GUARD_BITS;
+                let (k0, k1) = (word & 0x7f, (word >> 7) & 0x7f);
+                let mut term = if k0 != 0 { extended >> k0 } else { 0 };
+                if k1 != 0 {
+                    term += extended >> k1;
+                }
+                if word >> 31 != 0 {
+                    term = -term;
+                }
+                acc += term;
+            }
+        }
+        _ => {
+            for (&df, &word) in d_fixed.iter().zip(words) {
+                let extended = (df as i64) << GUARD_BITS;
+                let mut term = 0i64;
+                for t in 0..packed.x {
+                    let k = (word >> (7 * t)) & 0x7f;
+                    if k != 0 {
+                        term += extended >> k;
+                    }
+                }
+                if word >> 31 != 0 {
+                    term = -term;
+                }
+                acc += term;
+            }
+        }
+    }
+    // Event accounting, hoisted out of the MAC loop (exact: shifts and
+    // MACs are data-independent; adds count the active terms plus one
+    // accumulate per MAC; one real multiply at the output stage).
+    stats.macs += n as u64;
+    stats.shifts += (n * packed.x) as u64;
+    stats.adds += packed.row_active_terms[row] as u64 + n as u64;
+    stats.mults += 1;
+    from_fixed(acc >> GUARD_BITS, d_scale) * w.scale
+}
+
+/// Per-MAC reference implementation of [`dot_shift_add`] (kept for the
+/// equivalence test and as executable documentation of the datapath).
+pub fn dot_shift_add_reference(
+    w: &SpxTensor,
+    row: usize,
+    d_fixed: &[i32],
+    d_scale: f32,
+    stats: &mut CycleStats,
+) -> f32 {
+    let n = w.shape[1];
+    debug_assert_eq!(d_fixed.len(), n);
+    let base = row * n;
+    let mut acc = 0i64;
+    for (j, &df) in d_fixed.iter().enumerate() {
+        let e = base + j;
+        let sign = w.signs[e];
+        // Gather this element's codes across planes (x of them).
+        let mut codes_buf = [0u8; 8];
+        let x = w.planes.len();
+        for (t, plane) in w.planes.iter().enumerate() {
+            codes_buf[t] = plane[e];
+        }
+        acc += mac_shift_add(df, sign, &codes_buf[..x], stats);
+    }
+    // Output stage: one real multiply by (scale · d_scale).
+    stats.mults += 1;
+    from_fixed(acc >> GUARD_BITS, d_scale) * w.scale
+}
+
+/// Quantize a whole data vector once (shared across the m rows that all
+/// multiply the same `d`, exactly as the reorganized-row preprocessing
+/// reuses `d`).
+pub fn quantize_data(d: &[f32], d_scale: f32) -> Vec<i32> {
+    d.iter().map(|&x| to_fixed(x, d_scale)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::spx::{SpxConfig, SpxTensor};
+    use crate::quant::Calibration;
+    use crate::util::check::{assert_allclose, property};
+
+    #[test]
+    fn fixed_roundtrip_error_bounded() {
+        property("Q1.15 roundtrip", 128, |rng| {
+            let scale = rng.range(0.1, 10.0) as f32;
+            let x = rng.range(-(scale as f64), scale as f64) as f32;
+            let back = from_fixed(to_fixed(x, scale) as i64, scale);
+            assert!(
+                (x - back).abs() <= scale / 32768.0 + 1e-7,
+                "x={x} back={back} scale={scale}"
+            );
+        });
+    }
+
+    #[test]
+    fn to_fixed_saturates() {
+        assert_eq!(to_fixed(2.0, 1.0), (1 << DATA_FRAC_BITS) - 1);
+        assert_eq!(to_fixed(-2.0, 1.0), -(1 << DATA_FRAC_BITS));
+    }
+
+    #[test]
+    fn dot_matches_decoded_f32_reference() {
+        // The central PU invariant: the fixed-point shift-add dot product
+        // equals the f32 dot product with decoded weights, up to data
+        // quantization error (≈ n · d_scale·2^-15 worst case).
+        property("shift-add dot == decoded dot", 32, |rng| {
+            let n = 8 + rng.index(48);
+            let cfg = SpxConfig::spx(2 + rng.index(4) as u32 + 1, 1 + rng.index(2) as u32);
+            let wdata: Vec<f32> = (0..2 * n).map(|_| rng.normal() as f32 * 0.4).collect();
+            let w = SpxTensor::encode(&cfg, &wdata, &[2, n], Calibration::MaxAbs);
+            let d: Vec<f32> = (0..n).map(|_| rng.range(0.0, 1.0) as f32).collect();
+            let d_scale = 1.0f32;
+            let d_fixed = quantize_data(&d, d_scale);
+            let decoded = w.decode();
+            let mut stats = CycleStats::default();
+            for row in 0..2 {
+                let hw = dot_shift_add(&w, row, &d_fixed, d_scale, &mut stats);
+                let reference: f32 =
+                    decoded[row * n..(row + 1) * n].iter().zip(&d).map(|(a, b)| a * b).sum();
+                let tol = n as f32 * d_scale / 32768.0 * w.scale.abs().max(1.0) + 1e-4;
+                assert_allclose(&[hw], &[reference], tol, 1e-3);
+            }
+        });
+    }
+
+    #[test]
+    fn event_counts_match_formula() {
+        let n = 16;
+        let x = 3;
+        let cfg = SpxConfig::spx(7, x as u32);
+        let wdata: Vec<f32> = (0..n).map(|i| (i as f32 - 8.0) / 8.0).collect();
+        let w = SpxTensor::encode(&cfg, &wdata, &[1, n], Calibration::MaxAbs);
+        let d = vec![0.5f32; n];
+        let d_fixed = quantize_data(&d, 1.0);
+        let mut stats = CycleStats::default();
+        let _ = dot_shift_add(&w, 0, &d_fixed, 1.0, &mut stats);
+        assert_eq!(stats.macs, n as u64);
+        assert_eq!(stats.shifts, (n * x) as u64);
+        assert_eq!(stats.mults, 1);
+        // adds: ≤ x per MAC (absent terms don't add) + 1 accumulate each.
+        assert!(stats.adds >= n as u64 && stats.adds <= (n * (x + 1)) as u64);
+    }
+
+    #[test]
+    fn packed_dot_equals_reference() {
+        // The hot path must match the per-MAC reference bit-for-bit —
+        // outputs AND event counts.
+        property("packed == reference dot", 32, |rng| {
+            let n = 1 + rng.index(64);
+            let x = 1 + rng.index(3) as u32;
+            let cfg = SpxConfig::spx(x + 2 + rng.index(3) as u32, x);
+            let wdata: Vec<f32> = (0..3 * n).map(|_| rng.normal() as f32).collect();
+            let w = SpxTensor::encode(&cfg, &wdata, &[3, n], Calibration::MaxAbs);
+            let d: Vec<f32> = (0..n).map(|_| rng.range(-1.0, 1.0) as f32).collect();
+            let d_fixed = quantize_data(&d, 1.0);
+            for row in 0..3 {
+                let mut s1 = CycleStats::default();
+                let mut s2 = CycleStats::default();
+                let fast = dot_shift_add(&w, row, &d_fixed, 1.0, &mut s1);
+                let slow = dot_shift_add_reference(&w, row, &d_fixed, 1.0, &mut s2);
+                assert_eq!(fast.to_bits(), slow.to_bits(), "row {row}");
+                assert_eq!(s1, s2, "stats diverged at row {row}");
+            }
+        });
+    }
+
+    #[test]
+    fn zero_weights_zero_output() {
+        let cfg = SpxConfig::sp2(4);
+        let w = SpxTensor::encode(&cfg, &[0.0; 8], &[1, 8], Calibration::MaxAbs);
+        let d_fixed = quantize_data(&[1.0; 8], 1.0);
+        let mut stats = CycleStats::default();
+        assert_eq!(dot_shift_add(&w, 0, &d_fixed, 1.0, &mut stats), 0.0);
+    }
+}

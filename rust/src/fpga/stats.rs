@@ -1,0 +1,98 @@
+//! Event and cycle counters shared by every stage of the simulator.
+//! These are the raw material for both the Table-I time-per-sample
+//! number (cycles ÷ clk_compute) and the power model (events × energy).
+
+/// Aggregate counts for one or more simulated inferences.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CycleStats {
+    /// Total compute-clock cycles from first load to last output.
+    pub compute_cycles: u64,
+    /// Cycles a PU spent waiting on the input buffer (starvation).
+    pub stall_cycles: u64,
+    /// Multiply-accumulate operations executed (one weight×data each).
+    pub macs: u64,
+    /// Barrel-shift operations (SPx terms: `x` per MAC).
+    pub shifts: u64,
+    /// Integer additions (term sums + accumulation).
+    pub adds: u64,
+    /// Full multiplications (only the per-output `α/max_sum · d_scale`
+    /// rescale and bias path — the design's whole point is that MACs
+    /// don't multiply).
+    pub mults: u64,
+    /// Sigmoid LUT lookups.
+    pub lut_lookups: u64,
+    /// Words read from external RAM.
+    pub ram_reads: u64,
+    /// Words written into the input buffer.
+    pub buffer_writes: u64,
+    /// Words read out of the input buffer by PUs.
+    pub buffer_reads: u64,
+    /// High-water mark of buffered rows (capacity sizing).
+    pub buffer_peak_rows: u64,
+}
+
+impl CycleStats {
+    /// Accumulate another stats block (sequential composition: cycles
+    /// add; peak occupancy takes the max).
+    pub fn merge(&mut self, other: &CycleStats) {
+        self.compute_cycles += other.compute_cycles;
+        self.stall_cycles += other.stall_cycles;
+        self.macs += other.macs;
+        self.shifts += other.shifts;
+        self.adds += other.adds;
+        self.mults += other.mults;
+        self.lut_lookups += other.lut_lookups;
+        self.ram_reads += other.ram_reads;
+        self.buffer_writes += other.buffer_writes;
+        self.buffer_reads += other.buffer_reads;
+        self.buffer_peak_rows = self.buffer_peak_rows.max(other.buffer_peak_rows);
+    }
+
+    /// MACs per compute cycle — pipeline utilization (1.0 per PU is the
+    /// roofline; reported per-array by dividing by the PU count).
+    pub fn macs_per_cycle(&self) -> f64 {
+        if self.compute_cycles == 0 {
+            0.0
+        } else {
+            self.macs as f64 / self.compute_cycles as f64
+        }
+    }
+
+    /// Fraction of cycles lost to buffer starvation.
+    pub fn stall_fraction(&self) -> f64 {
+        if self.compute_cycles == 0 {
+            0.0
+        } else {
+            self.stall_cycles as f64 / self.compute_cycles as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_adds_and_maxes() {
+        let mut a = CycleStats { compute_cycles: 10, buffer_peak_rows: 3, macs: 5, ..Default::default() };
+        let b = CycleStats { compute_cycles: 7, buffer_peak_rows: 9, macs: 2, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.compute_cycles, 17);
+        assert_eq!(a.macs, 7);
+        assert_eq!(a.buffer_peak_rows, 9);
+    }
+
+    #[test]
+    fn utilization_zero_when_idle() {
+        let s = CycleStats::default();
+        assert_eq!(s.macs_per_cycle(), 0.0);
+        assert_eq!(s.stall_fraction(), 0.0);
+    }
+
+    #[test]
+    fn utilization_basic() {
+        let s = CycleStats { compute_cycles: 100, macs: 50, stall_cycles: 25, ..Default::default() };
+        assert_eq!(s.macs_per_cycle(), 0.5);
+        assert_eq!(s.stall_fraction(), 0.25);
+    }
+}

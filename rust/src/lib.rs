@@ -1,0 +1,43 @@
+//! # edgemlp
+//!
+//! Reproduction of *"A Deep Learning Inference Scheme Based on Pipelined
+//! Matrix Multiplication Acceleration Design and Non-uniform Quantization"*
+//! (Zhang et al., 2021) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The paper proposes a low-power MLP inference accelerator for edge
+//! devices built from two ingredients:
+//!
+//! 1. a **pipelined matrix-multiplication dataflow** whose input buffer
+//!    decouples data *loading* (clocked by `clk_inbuff`, fed from RAM)
+//!    from data *computing* (clocked by `clk_compute`, fed from the
+//!    buffer) — see [`fpga`];
+//! 2. an **extended sum-of-power-of-two ("SPx") non-uniform
+//!    quantization** that turns multiplications into shift-adds — see
+//!    [`quant`].
+//!
+//! Layer map:
+//!
+//! * **L3 (this crate)** — the coordinator: request [`coordinator`]
+//!   (batching, routing, backpressure), the [`runtime`] that executes
+//!   AOT-compiled XLA artifacts via PJRT, and every substrate the paper
+//!   depends on: a cycle-accurate [`fpga`] simulator with a power model,
+//!   a pure-Rust [`nn`] training stack, the [`data`] pipeline and the
+//!   [`rl`] (Acrobot-v1 + Q-learning) harness.
+//! * **L2 (python/compile/model.py)** — the JAX MLP forward graph,
+//!   lowered once to HLO text under `artifacts/`.
+//! * **L1 (python/compile/kernels/)** — the Pallas SPx shift-add matmul
+//!   kernel called from L2.
+//!
+//! Python never runs on the request path: `make artifacts` is the only
+//! step that invokes it.
+
+pub mod bench_harness;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod fpga;
+pub mod nn;
+pub mod quant;
+pub mod rl;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,300 @@
+//! `edgemlp` CLI — the leader entrypoint.
+//!
+//! ```text
+//! edgemlp train            --epochs 5 --out /tmp/mlp.emlp
+//! edgemlp infer            --model /tmp/mlp.emlp --backend fpga
+//! edgemlp serve            --requests 500 --rate 800
+//! edgemlp table1           [--no-xla]         # paper Table I
+//! edgemlp fig5                                 # paper Figure 5
+//! edgemlp quant-ablation   --bits 3,4,5,6,7,8  # §3.2 schemes
+//! edgemlp pipeline-ablation                    # §3.1 claims
+//! edgemlp rl               --episodes 80       # §4.2 Acrobot
+//! edgemlp verilog          --out design.v      # emit the RTL
+//! edgemlp info                                 # artifact registry
+//! ```
+
+use anyhow::{bail, Context, Result};
+use edgemlp::data::load_digits;
+use edgemlp::experiments::common::ExperimentScale;
+use edgemlp::experiments::{fig5, pipeline_ablation, quant_ablation, table1, throughput};
+use edgemlp::fpga::accelerator::{AccelConfig, Accelerator, QuantizedMlp};
+use edgemlp::fpga::verilog::{emit_design, VerilogConfig};
+use edgemlp::nn::metrics::{accuracy, confusion_matrix, format_confusion};
+use edgemlp::nn::mlp::{argmax, Mlp, MlpConfig};
+use edgemlp::nn::train::{train, TrainConfig};
+use edgemlp::quant::spx::SpxConfig;
+use edgemlp::quant::Calibration;
+use edgemlp::rl::qlearn::{evaluate_policy, QLearnConfig, QLearner};
+use edgemlp::rl::Acrobot;
+use edgemlp::runtime::Runtime;
+use edgemlp::util::cli::Args;
+use edgemlp::util::rng::Pcg32;
+use std::path::PathBuf;
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n");
+            usage();
+            std::process::exit(2);
+        }
+    };
+    let command = args.command.clone().unwrap_or_else(|| "help".into());
+    let result = match command.as_str() {
+        "train" => cmd_train(&args),
+        "infer" => cmd_infer(&args),
+        "serve" => cmd_serve(&args),
+        "table1" => cmd_table1(&args),
+        "fig5" => cmd_fig5(&args),
+        "quant-ablation" => cmd_quant_ablation(&args),
+        "pipeline-ablation" => cmd_pipeline_ablation(&args),
+        "rl" => cmd_rl(&args),
+        "verilog" => cmd_verilog(&args),
+        "info" => cmd_info(&args),
+        "help" => {
+            usage();
+            Ok(())
+        }
+        other => {
+            usage();
+            Err(anyhow::anyhow!("unknown command '{other}'"))
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "edgemlp — pipelined matmul + SPx quantization MLP accelerator (paper reproduction)\n\
+         commands: train infer serve table1 fig5 quant-ablation pipeline-ablation rl verilog info"
+    );
+}
+
+fn scale_from(args: &Args) -> Result<ExperimentScale> {
+    let base = ExperimentScale::from_env();
+    Ok(ExperimentScale {
+        n_train: args.get_parse("train-samples", base.n_train).map_err(anyhow::Error::msg)?,
+        n_test: args.get_parse("test-samples", base.n_test).map_err(anyhow::Error::msg)?,
+        epochs: args.get_parse("epochs", base.epochs).map_err(anyhow::Error::msg)?,
+    })
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let epochs: usize = args.get_parse("epochs", 5).map_err(anyhow::Error::msg)?;
+    let n_train: usize = args.get_parse("train-samples", 4000).map_err(anyhow::Error::msg)?;
+    let out = PathBuf::from(args.get("out", "/tmp/edgemlp_mlp.emlp"));
+    args.finish().map_err(anyhow::Error::msg)?;
+
+    let (train_set, test_set) = load_digits(n_train, n_train / 4, 2021);
+    println!(
+        "dataset: {} train / {} test ({})",
+        train_set.len(),
+        test_set.len(),
+        train_set.source
+    );
+    let mut rng = Pcg32::new(42);
+    let mut mlp = Mlp::new(MlpConfig::paper_mnist(), &mut rng);
+    let log = train(
+        &mut mlp,
+        &train_set.inputs,
+        &train_set.labels,
+        &TrainConfig { epochs, ..Default::default() },
+    );
+    for s in &log {
+        println!("epoch {:>2}  loss {:.4}  train acc {:.3}", s.epoch, s.loss, s.train_accuracy);
+    }
+    let acc = accuracy(&mlp, &test_set.inputs, &test_set.labels);
+    println!("test accuracy: {acc:.3}");
+    mlp.save(&out).with_context(|| format!("save {}", out.display()))?;
+    println!("saved checkpoint to {}", out.display());
+    Ok(())
+}
+
+fn cmd_infer(args: &Args) -> Result<()> {
+    let model_path = PathBuf::from(args.get("model", "/tmp/edgemlp_mlp.emlp"));
+    let backend = args.get("backend", "fpga");
+    let n: usize = args.get_parse("samples", 32).map_err(anyhow::Error::msg)?;
+    args.finish().map_err(anyhow::Error::msg)?;
+
+    let mlp = Mlp::load(&model_path)
+        .with_context(|| format!("load {} (run `edgemlp train` first)", model_path.display()))?;
+    let (_, test_set) = load_digits(64, n.max(16), 2021);
+    let labels = &test_set.labels[..n.min(test_set.len())];
+
+    let preds: Vec<usize> = match backend.as_str() {
+        "cpu" => (0..labels.len()).map(|i| mlp.classify_one(test_set.inputs.row(i))).collect(),
+        "fpga" => {
+            let q = QuantizedMlp::from_mlp(&mlp, &SpxConfig::sp2(5), Calibration::MaxAbs, None);
+            let accel = Accelerator::new(q, AccelConfig::default_fpga());
+            let mut total = edgemlp::fpga::CycleStats::default();
+            let preds = (0..labels.len())
+                .map(|i| {
+                    let (p, s) = accel.classify_one(test_set.inputs.row(i));
+                    total.merge(&s);
+                    p
+                })
+                .collect();
+            let t = accel.seconds_per_inference(&total) / labels.len() as f64;
+            println!(
+                "fpga sim: {:.2} µs/sample, {:.1} W, {:.1}% stalls",
+                t * 1e6,
+                accel.power_w(&total),
+                100.0 * total.stall_fraction()
+            );
+            preds
+        }
+        "xla" => {
+            let rt = Runtime::new_default()?;
+            let model = rt.load("mlp_fp32_b1")?;
+            (0..labels.len())
+                .map(|i| {
+                    let out = model
+                        .run(&edgemlp::runtime::executable::mlp_fp32_inputs(
+                            &mlp,
+                            test_set.inputs.row(i),
+                        ))
+                        .expect("xla run");
+                    argmax(&out)
+                })
+                .collect()
+        }
+        other => bail!("unknown backend '{other}' (cpu|fpga|xla)"),
+    };
+    let acc = edgemlp::nn::metrics::accuracy_from_preds(&preds, labels);
+    println!("backend {backend}: accuracy {acc:.3} on {} samples", labels.len());
+    println!("{}", format_confusion(&confusion_matrix(&preds, labels, 10)));
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let scale = scale_from(args)?;
+    args.finish().map_err(anyhow::Error::msg)?;
+    let rows = throughput::run(scale)?;
+    println!("{}", throughput::render(&rows));
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> Result<()> {
+    let no_xla = args.get_bool("no-xla").map_err(anyhow::Error::msg)?;
+    let scale = scale_from(args)?;
+    args.finish().map_err(anyhow::Error::msg)?;
+    let t = table1::run(scale, !no_xla)?;
+    println!("Table I — time per sample and power (paper values alongside)\n");
+    println!("{}", table1::render(&t));
+    Ok(())
+}
+
+fn cmd_fig5(args: &Args) -> Result<()> {
+    let scale = scale_from(args)?;
+    args.finish().map_err(anyhow::Error::msg)?;
+    let points = fig5::run(scale);
+    println!("Figure 5 — inference time per sample across training epochs\n");
+    println!("{}", fig5::render(&points));
+    println!("flatness (CV of time series): {:.3}", fig5::flatness(&points));
+    Ok(())
+}
+
+fn cmd_quant_ablation(args: &Args) -> Result<()> {
+    let bits_str = args.get("bits", "3,4,5,6,8");
+    let scale = scale_from(args)?;
+    args.finish().map_err(anyhow::Error::msg)?;
+    let bits: Vec<u32> = bits_str
+        .split(',')
+        .map(|s| s.trim().parse().map_err(|e| anyhow::anyhow!("--bits: {e}")))
+        .collect::<Result<_>>()?;
+    let fp32 = quant_ablation::fp32_accuracy(scale);
+    let rows = quant_ablation::run(scale, &bits);
+    println!("Quantization ablation (§3.2) — uniform vs PoT vs SP2 vs SPx\n");
+    println!("{}", quant_ablation::render(&rows, fp32));
+    Ok(())
+}
+
+fn cmd_pipeline_ablation(args: &Args) -> Result<()> {
+    args.finish().map_err(anyhow::Error::msg)?;
+    let a = pipeline_ablation::run();
+    println!("Pipeline ablation (§3.1)\n");
+    println!("{}", pipeline_ablation::render(&a));
+    Ok(())
+}
+
+fn cmd_rl(args: &Args) -> Result<()> {
+    let episodes: usize = args.get_parse("episodes", 80).map_err(anyhow::Error::msg)?;
+    let eval_episodes: usize =
+        args.get_parse("eval-episodes", 10).map_err(anyhow::Error::msg)?;
+    args.finish().map_err(anyhow::Error::msg)?;
+
+    let mut env = Acrobot::new();
+    let config = QLearnConfig { episodes, ..Default::default() };
+    let mut learner = QLearner::new(&env, config);
+    println!("training Q-learning on Acrobot-v1 for {episodes} episodes...");
+    let stats = learner.train(&mut env);
+    for chunk in stats.chunks(10) {
+        let mean_ret: f64 =
+            chunk.iter().map(|s| s.return_sum as f64).sum::<f64>() / chunk.len() as f64;
+        println!(
+            "episodes {:>3}-{:>3}  mean return {:>7.1}  ε {:.2}",
+            chunk[0].episode,
+            chunk.last().unwrap().episode,
+            mean_ret,
+            chunk.last().unwrap().epsilon
+        );
+    }
+
+    // E5: fp32 policy vs SPx-quantized policy.
+    let qnet = learner.qnet.clone();
+    let mut fp32_q = |obs: &[f32]| qnet.forward_one(obs);
+    let fp32_returns = evaluate_policy(&mut env, &mut fp32_q, eval_episodes, 123);
+
+    let quant =
+        QuantizedMlp::from_mlp(&learner.qnet, &SpxConfig::spx(8, 2), Calibration::MaxAbs, None);
+    let accel = Accelerator::new(quant, AccelConfig::default_fpga());
+    let mut spx_q = |obs: &[f32]| accel.forward_decoded(obs);
+    let spx_returns = evaluate_policy(&mut env, &mut spx_q, eval_episodes, 123);
+
+    let mean = |v: &[f32]| v.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64;
+    println!("\nE5 — greedy-policy returns over {eval_episodes} episodes:");
+    println!("  fp32 Q-network:       {:>7.1}", mean(&fp32_returns));
+    println!("  SPx(b=8,x=2) on sim:  {:>7.1}", mean(&spx_returns));
+    Ok(())
+}
+
+fn cmd_verilog(args: &Args) -> Result<()> {
+    let out = args.get("out", "-");
+    let bits: u32 = args.get_parse("bits", 5).map_err(anyhow::Error::msg)?;
+    let terms: u32 = args.get_parse("terms", 2).map_err(anyhow::Error::msg)?;
+    args.finish().map_err(anyhow::Error::msg)?;
+    let cfg = VerilogConfig {
+        spx: SpxConfig::spx(bits, terms),
+        ..VerilogConfig::default_design()
+    };
+    let design = emit_design(&cfg);
+    if out == "-" {
+        println!("{design}");
+    } else {
+        std::fs::write(&out, &design)?;
+        println!("wrote {} ({} lines)", out, design.lines().count());
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    args.finish().map_err(anyhow::Error::msg)?;
+    let rt = Runtime::new_default()?;
+    println!("PJRT platform: {}", rt.platform());
+    println!("artifacts ({}):", rt.registry.len());
+    for name in rt.registry.names() {
+        let spec = rt.registry.get(name)?;
+        println!(
+            "  {name}: model={} batch={} inputs={} ({})",
+            spec.model,
+            spec.batch,
+            spec.inputs.len(),
+            spec.path.display()
+        );
+    }
+    Ok(())
+}

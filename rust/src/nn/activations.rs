@@ -1,0 +1,181 @@
+//! Activation functions. The paper uses sigmoid on both the hidden and
+//! output layers (Eq 4.2); ReLU and identity are provided for the RL
+//! Q-network and for ablations.
+//!
+//! [`sigmoid_lut`] is the 256-entry lookup table the FPGA design would
+//! burn into block RAM — the simulator uses it so the hardware path's
+//! activation error is modeled, and a unit test bounds that error.
+
+/// Activation function selector (serialized into checkpoints by name).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    Sigmoid,
+    Relu,
+    Identity,
+}
+
+impl Activation {
+    pub fn apply(&self, x: f32) -> f32 {
+        match self {
+            Activation::Sigmoid => sigmoid(x),
+            Activation::Relu => x.max(0.0),
+            Activation::Identity => x,
+        }
+    }
+
+    /// Derivative expressed in terms of the *activation output* `a`
+    /// (cheap for sigmoid: `a(1-a)`), as used by backprop.
+    pub fn derivative_from_output(&self, a: f32) -> f32 {
+        match self {
+            Activation::Sigmoid => a * (1.0 - a),
+            Activation::Relu => {
+                if a > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Activation::Identity => 1.0,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Activation::Sigmoid => "sigmoid",
+            Activation::Relu => "relu",
+            Activation::Identity => "identity",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Activation> {
+        match name {
+            "sigmoid" => Some(Activation::Sigmoid),
+            "relu" => Some(Activation::Relu),
+            "identity" => Some(Activation::Identity),
+            _ => None,
+        }
+    }
+}
+
+/// `σ(x) = 1 / (1 + e^{-x})`.
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Hardware sigmoid: piecewise-linear interpolation over a 256-entry
+/// table spanning `[-8, 8]`, saturating outside — the standard BRAM
+/// implementation on FPGA. Max absolute error vs [`sigmoid`] is < 1e-3
+/// (pinned by a test).
+pub struct SigmoidLut {
+    table: [f32; 257],
+}
+
+impl SigmoidLut {
+    pub const LO: f32 = -8.0;
+    pub const HI: f32 = 8.0;
+
+    pub fn new() -> Self {
+        let mut table = [0.0f32; 257];
+        for (i, t) in table.iter_mut().enumerate() {
+            let x = Self::LO + (Self::HI - Self::LO) * i as f32 / 256.0;
+            *t = sigmoid(x);
+        }
+        SigmoidLut { table }
+    }
+
+    #[inline]
+    pub fn eval(&self, x: f32) -> f32 {
+        if x <= Self::LO {
+            return self.table[0];
+        }
+        if x >= Self::HI {
+            return self.table[256];
+        }
+        let pos = (x - Self::LO) / (Self::HI - Self::LO) * 256.0;
+        let i = pos as usize;
+        let frac = pos - i as f32;
+        self.table[i] * (1.0 - frac) + self.table[i + 1] * frac
+    }
+}
+
+impl Default for SigmoidLut {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Shared LUT instance (the table is immutable after construction).
+pub fn sigmoid_lut() -> &'static SigmoidLut {
+    use once_cell::sync::Lazy;
+    static LUT: Lazy<SigmoidLut> = Lazy::new(SigmoidLut::new);
+    &LUT
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::property;
+
+    #[test]
+    fn sigmoid_known_points() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+        assert!(sigmoid(10.0) > 0.9999);
+        assert!(sigmoid(-10.0) < 0.0001);
+    }
+
+    #[test]
+    fn sigmoid_symmetry() {
+        property("σ(-x) == 1 - σ(x)", 64, |rng| {
+            let x = rng.range(-20.0, 20.0) as f32;
+            assert!((sigmoid(-x) - (1.0 - sigmoid(x))).abs() < 1e-6);
+        });
+    }
+
+    #[test]
+    fn sigmoid_monotone() {
+        property("σ monotone", 64, |rng| {
+            let a = rng.range(-10.0, 10.0) as f32;
+            let b = a + rng.range(0.001, 5.0) as f32;
+            assert!(sigmoid(b) > sigmoid(a));
+        });
+    }
+
+    #[test]
+    fn derivative_from_output_matches_finite_difference() {
+        property("σ' matches FD", 64, |rng| {
+            let x = rng.range(-5.0, 5.0) as f32;
+            let h = 1e-3f32;
+            let fd = (sigmoid(x + h) - sigmoid(x - h)) / (2.0 * h);
+            let a = sigmoid(x);
+            let an = Activation::Sigmoid.derivative_from_output(a);
+            assert!((fd - an).abs() < 1e-3, "x={x} fd={fd} an={an}");
+        });
+    }
+
+    #[test]
+    fn lut_error_bound() {
+        let lut = SigmoidLut::new();
+        let mut max_err = 0.0f32;
+        for i in 0..=4000 {
+            let x = -10.0 + 20.0 * i as f32 / 4000.0;
+            max_err = max_err.max((lut.eval(x) - sigmoid(x)).abs());
+        }
+        assert!(max_err < 1e-3, "LUT max error {max_err}");
+    }
+
+    #[test]
+    fn lut_saturates() {
+        let lut = SigmoidLut::new();
+        assert_eq!(lut.eval(-100.0), lut.eval(-8.0));
+        assert_eq!(lut.eval(100.0), lut.eval(8.0));
+    }
+
+    #[test]
+    fn activation_name_roundtrip() {
+        for a in [Activation::Sigmoid, Activation::Relu, Activation::Identity] {
+            assert_eq!(Activation::from_name(a.name()), Some(a));
+        }
+        assert_eq!(Activation::from_name("tanh"), None);
+    }
+}

@@ -1,0 +1,92 @@
+//! Classification metrics: accuracy (Eq 4.3 argmax decision) and a
+//! confusion matrix for the examples' reports.
+
+use super::mlp::{argmax, Mlp};
+use super::tensor::Matrix;
+
+/// Fraction of samples whose argmax matches the label.
+pub fn accuracy(mlp: &Mlp, inputs: &Matrix, labels: &[usize]) -> f64 {
+    assert_eq!(inputs.rows, labels.len());
+    if labels.is_empty() {
+        return 0.0;
+    }
+    let out = mlp.forward(inputs);
+    let correct = labels
+        .iter()
+        .enumerate()
+        .filter(|&(r, &label)| argmax(out.row(r)) == label)
+        .count();
+    correct as f64 / labels.len() as f64
+}
+
+/// Accuracy from precomputed predictions.
+pub fn accuracy_from_preds(preds: &[usize], labels: &[usize]) -> f64 {
+    assert_eq!(preds.len(), labels.len());
+    if labels.is_empty() {
+        return 0.0;
+    }
+    let correct = preds.iter().zip(labels).filter(|(p, l)| p == l).count();
+    correct as f64 / labels.len() as f64
+}
+
+/// `classes × classes` confusion matrix; `m[true][pred]` counts.
+pub fn confusion_matrix(preds: &[usize], labels: &[usize], classes: usize) -> Vec<Vec<usize>> {
+    let mut m = vec![vec![0usize; classes]; classes];
+    for (&p, &l) in preds.iter().zip(labels) {
+        m[l][p] += 1;
+    }
+    m
+}
+
+/// Render a confusion matrix as an aligned text table.
+pub fn format_confusion(m: &[Vec<usize>]) -> String {
+    let mut s = String::from("true\\pred");
+    for c in 0..m.len() {
+        s.push_str(&format!("{c:>6}"));
+    }
+    s.push('\n');
+    for (r, row) in m.iter().enumerate() {
+        s.push_str(&format!("{r:>9}"));
+        for &v in row {
+            s.push_str(&format!("{v:>6}"));
+        }
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_from_preds_basic() {
+        assert_eq!(accuracy_from_preds(&[0, 1, 2], &[0, 1, 1]), 2.0 / 3.0);
+        assert_eq!(accuracy_from_preds(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn confusion_diagonal_for_perfect() {
+        let m = confusion_matrix(&[0, 1, 1, 2], &[0, 1, 1, 2], 3);
+        assert_eq!(m[0][0], 1);
+        assert_eq!(m[1][1], 2);
+        assert_eq!(m[2][2], 1);
+        assert_eq!(m[0][1] + m[1][0] + m[2][0], 0);
+    }
+
+    #[test]
+    fn confusion_counts_sum_to_n() {
+        let preds = [0usize, 1, 2, 0, 1];
+        let labels = [1usize, 1, 2, 0, 0];
+        let m = confusion_matrix(&preds, &labels, 3);
+        let total: usize = m.iter().flatten().sum();
+        assert_eq!(total, 5);
+    }
+
+    #[test]
+    fn format_confusion_has_all_rows() {
+        let m = confusion_matrix(&[0, 1], &[0, 1], 2);
+        let s = format_confusion(&m);
+        assert_eq!(s.lines().count(), 3);
+    }
+}

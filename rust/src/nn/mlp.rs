@@ -1,0 +1,344 @@
+//! The paper's MLP (Eq 4.1/4.2): an alternating stack of affine maps and
+//! activations. `F₁(x) = σ¹(x + b¹)` (the paper's layer 1 is the input
+//! layer; in practice b¹ = 0 and σ¹ = identity, matching Eq 4.2 which
+//! only shows W²/W³), `Fᵢ(x) = σⁱ(Wⁱ Fᵢ₋₁ + bⁱ)`.
+//!
+//! Weights are stored `out×in` so the batched forward is `X · Wᵀ + b`
+//! with both operands streamed row-major, and a weight *row* `wᵢ` is
+//! contiguous — exactly the unit the paper's input buffer streams
+//! (`wᵢ ‖ d` reorganized rows, §3.1).
+
+use super::activations::Activation;
+use super::tensor::Matrix;
+use crate::util::rng::Pcg32;
+use crate::util::serde::{load_tensors, save_tensors, NamedTensor};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// One affine + activation layer.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    /// `out × in` weight matrix (`W⁽ⁱ⁾ ∈ R^{Nᵢ×Nᵢ₋₁}`).
+    pub w: Matrix,
+    /// Bias `b⁽ⁱ⁾ ∈ R^{Nᵢ}`.
+    pub b: Vec<f32>,
+    pub activation: Activation,
+}
+
+/// Architecture description: layer sizes plus activations.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MlpConfig {
+    /// `[N₁, N₂, …, N_N]` — e.g. the paper's `[784, 128, 10]`.
+    pub sizes: Vec<usize>,
+    /// One activation per affine layer (`sizes.len() - 1` entries).
+    pub activations: Vec<Activation>,
+}
+
+impl MlpConfig {
+    /// The paper's §4.1 network: 784-128-10, sigmoid on hidden and output.
+    pub fn paper_mnist() -> Self {
+        MlpConfig {
+            sizes: vec![784, 128, 10],
+            activations: vec![Activation::Sigmoid, Activation::Sigmoid],
+        }
+    }
+
+    /// Q-network for Acrobot-v1 (§4.2): 6 state dims → 3 actions,
+    /// ReLU hidden layers, identity output (Q-values are unbounded).
+    pub fn paper_qnet() -> Self {
+        MlpConfig {
+            sizes: vec![6, 64, 64, 3],
+            activations: vec![Activation::Relu, Activation::Relu, Activation::Identity],
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.sizes.len() < 2 {
+            bail!("MLP needs at least 2 layers, got {:?}", self.sizes);
+        }
+        if self.activations.len() != self.sizes.len() - 1 {
+            bail!(
+                "need {} activations, got {}",
+                self.sizes.len() - 1,
+                self.activations.len()
+            );
+        }
+        if self.sizes.iter().any(|&s| s == 0) {
+            bail!("zero-width layer in {:?}", self.sizes);
+        }
+        Ok(())
+    }
+}
+
+/// A multi-layer perceptron with row-major `out×in` weights.
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    pub config: MlpConfig,
+    pub layers: Vec<Layer>,
+}
+
+impl Mlp {
+    /// Random init: uniform `±1/√fan_in` weights, zero biases.
+    pub fn new(config: MlpConfig, rng: &mut Pcg32) -> Self {
+        config.validate().expect("invalid MLP config");
+        let layers = config
+            .sizes
+            .windows(2)
+            .zip(&config.activations)
+            .map(|(io, &activation)| {
+                let (fan_in, fan_out) = (io[0], io[1]);
+                let scale = 1.0 / (fan_in as f32).sqrt();
+                Layer {
+                    w: Matrix::random_uniform(fan_out, fan_in, scale, rng),
+                    b: vec![0.0; fan_out],
+                    activation,
+                }
+            })
+            .collect();
+        Mlp { config, layers }
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.config.sizes[0]
+    }
+
+    pub fn output_dim(&self) -> usize {
+        *self.config.sizes.last().unwrap()
+    }
+
+    /// Total parameter count.
+    pub fn num_params(&self) -> usize {
+        self.layers.iter().map(|l| l.w.data.len() + l.b.len()).sum()
+    }
+
+    /// Batched forward: `X` is `B × input_dim`; returns `B × output_dim`.
+    pub fn forward(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols, self.input_dim(), "input dim");
+        let mut a = x.clone();
+        for layer in &self.layers {
+            let mut z = a.matmul_bt(&layer.w);
+            z.add_row_inplace(&layer.b);
+            z.map_inplace(|v| layer.activation.apply(v));
+            a = z;
+        }
+        a
+    }
+
+    /// Forward keeping every layer's activation (for backprop):
+    /// `activations[0] = x`, `activations[i]` = output of layer i.
+    pub fn forward_trace(&self, x: &Matrix) -> Vec<Matrix> {
+        let mut acts = Vec::with_capacity(self.layers.len() + 1);
+        acts.push(x.clone());
+        for layer in &self.layers {
+            let mut z = acts.last().unwrap().matmul_bt(&layer.w);
+            z.add_row_inplace(&layer.b);
+            z.map_inplace(|v| layer.activation.apply(v));
+            acts.push(z);
+        }
+        acts
+    }
+
+    /// Single-sample forward (convenience; allocates a 1-row matrix).
+    pub fn forward_one(&self, x: &[f32]) -> Vec<f32> {
+        let m = Matrix::from_vec(1, x.len(), x.to_vec());
+        self.forward(&m).data
+    }
+
+    /// Eq 4.3: classification by argmax over the output vector.
+    pub fn classify_one(&self, x: &[f32]) -> usize {
+        argmax(&self.forward_one(x))
+    }
+
+    /// Flatten all parameters as named tensors (w0, b0, w1, b1, …).
+    pub fn to_tensors(&self) -> Vec<NamedTensor> {
+        let mut out = Vec::new();
+        for (i, layer) in self.layers.iter().enumerate() {
+            out.push(NamedTensor::new(
+                format!("w{i}"),
+                vec![layer.w.rows, layer.w.cols],
+                layer.w.data.clone(),
+            ));
+            out.push(NamedTensor::new(format!("b{i}"), vec![layer.b.len()], layer.b.clone()));
+            out.push(NamedTensor::new(
+                format!("act{i}"),
+                vec![1],
+                vec![match layer.activation {
+                    Activation::Sigmoid => 0.0,
+                    Activation::Relu => 1.0,
+                    Activation::Identity => 2.0,
+                }],
+            ));
+        }
+        out
+    }
+
+    /// Rebuild from [`Mlp::to_tensors`] output.
+    pub fn from_tensors(tensors: &[NamedTensor]) -> Result<Self> {
+        let find = |name: &str| -> Result<&NamedTensor> {
+            tensors
+                .iter()
+                .find(|t| t.name == name)
+                .with_context(|| format!("missing tensor '{name}'"))
+        };
+        let n_layers = tensors.iter().filter(|t| t.name.starts_with('w')).count();
+        if n_layers == 0 {
+            bail!("no weight tensors found");
+        }
+        let mut layers = Vec::with_capacity(n_layers);
+        let mut sizes = Vec::new();
+        let mut activations = Vec::new();
+        for i in 0..n_layers {
+            let w = find(&format!("w{i}"))?;
+            let b = find(&format!("b{i}"))?;
+            let act = find(&format!("act{i}"))?;
+            if w.shape.len() != 2 {
+                bail!("w{i} is not a matrix");
+            }
+            if b.shape != vec![w.shape[0]] {
+                bail!("b{i} shape {:?} vs w{i} rows {}", b.shape, w.shape[0]);
+            }
+            let activation = match act.data[0] as i32 {
+                0 => Activation::Sigmoid,
+                1 => Activation::Relu,
+                2 => Activation::Identity,
+                other => bail!("unknown activation code {other}"),
+            };
+            if i == 0 {
+                sizes.push(w.shape[1]);
+            } else if sizes.last() != Some(&w.shape[1]) {
+                bail!("layer {i} fan_in {} mismatches previous fan_out", w.shape[1]);
+            }
+            sizes.push(w.shape[0]);
+            activations.push(activation);
+            layers.push(Layer {
+                w: Matrix::from_vec(w.shape[0], w.shape[1], w.data.clone()),
+                b: b.data.clone(),
+                activation,
+            });
+        }
+        let config = MlpConfig { sizes, activations };
+        config.validate()?;
+        Ok(Mlp { config, layers })
+    }
+
+    /// Save to an EMLP blob.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        save_tensors(path, &self.to_tensors())
+    }
+
+    /// Load from an EMLP blob.
+    pub fn load(path: &Path) -> Result<Self> {
+        Mlp::from_tensors(&load_tensors(path)?)
+    }
+}
+
+/// Index of the maximum element (first on ties) — Eq 4.3.
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{assert_allclose, property};
+
+    fn tiny(rng: &mut Pcg32) -> Mlp {
+        Mlp::new(
+            MlpConfig {
+                sizes: vec![4, 5, 3],
+                activations: vec![Activation::Sigmoid, Activation::Sigmoid],
+            },
+            rng,
+        )
+    }
+
+    #[test]
+    fn paper_config_shapes() {
+        let mut rng = Pcg32::new(0);
+        let mlp = Mlp::new(MlpConfig::paper_mnist(), &mut rng);
+        assert_eq!(mlp.input_dim(), 784);
+        assert_eq!(mlp.output_dim(), 10);
+        assert_eq!(mlp.layers[0].w.rows, 128);
+        assert_eq!(mlp.layers[0].w.cols, 784);
+        // 784·128 + 128 + 128·10 + 10 = 101_770 params.
+        assert_eq!(mlp.num_params(), 101_770);
+    }
+
+    #[test]
+    fn forward_output_in_sigmoid_range() {
+        property("sigmoid MLP output in (0,1)", 16, |rng| {
+            let mlp = tiny(rng);
+            let x = Matrix::random_uniform(3, 4, 5.0, rng);
+            let y = mlp.forward(&x);
+            assert_eq!((y.rows, y.cols), (3, 3));
+            assert!(y.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        });
+    }
+
+    #[test]
+    fn forward_batch_equals_per_sample() {
+        property("batched == per-sample forward", 16, |rng| {
+            let mlp = tiny(rng);
+            let x = Matrix::random_uniform(4, 4, 2.0, rng);
+            let batched = mlp.forward(&x);
+            for r in 0..4 {
+                let single = mlp.forward_one(x.row(r));
+                assert_allclose(batched.row(r), &single, 1e-6, 1e-6);
+            }
+        });
+    }
+
+    #[test]
+    fn forward_trace_last_equals_forward() {
+        let mut rng = Pcg32::new(3);
+        let mlp = tiny(&mut rng);
+        let x = Matrix::random_uniform(2, 4, 1.0, &mut rng);
+        let trace = mlp.forward_trace(&x);
+        assert_eq!(trace.len(), 3);
+        assert_eq!(trace.last().unwrap(), &mlp.forward(&x));
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut rng = Pcg32::new(5);
+        let mlp = Mlp::new(MlpConfig::paper_qnet(), &mut rng);
+        let dir = std::env::temp_dir().join("edgemlp_mlp_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("qnet.emlp");
+        mlp.save(&path).unwrap();
+        let back = Mlp::load(&path).unwrap();
+        assert_eq!(back.config, mlp.config);
+        let x = vec![0.1f32, -0.2, 0.3, 0.0, 0.5, -0.9];
+        assert_eq!(back.forward_one(&x), mlp.forward_one(&x));
+    }
+
+    #[test]
+    fn argmax_ties_first() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0]), 1);
+        assert_eq!(argmax(&[-5.0]), 0);
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(MlpConfig { sizes: vec![4], activations: vec![] }.validate().is_err());
+        assert!(MlpConfig {
+            sizes: vec![4, 0, 2],
+            activations: vec![Activation::Relu, Activation::Relu]
+        }
+        .validate()
+        .is_err());
+        assert!(MlpConfig {
+            sizes: vec![4, 3],
+            activations: vec![Activation::Relu, Activation::Relu]
+        }
+        .validate()
+        .is_err());
+        assert!(MlpConfig::paper_mnist().validate().is_ok());
+    }
+}

@@ -1,0 +1,18 @@
+//! Pure-Rust neural-network substrate: the paper's MLP (Eq 4.1/4.2), its
+//! MSE + SGD training loop (Eq 4.4–4.6), and the dense-matrix kernels
+//! they need. This is simultaneously
+//!
+//! * the **pre-training path** (the paper pre-trains θ on CPU/GPU before
+//!   deploying to the accelerator),
+//! * the **CPU baseline** of Table I, and
+//! * the reference semantics that the FPGA simulator and the XLA
+//!   artifacts are tested against.
+
+pub mod activations;
+pub mod metrics;
+pub mod mlp;
+pub mod tensor;
+pub mod train;
+
+pub use mlp::{Mlp, MlpConfig};
+pub use tensor::Matrix;

@@ -1,0 +1,264 @@
+//! Dense row-major f32 matrix with exactly the operations the MLP stack
+//! needs. The matmul kernels use the cache-friendly i-k-j loop order with
+//! an unrolled inner accumulation — good enough that the "CPU" row of
+//! Table I is a fair software baseline (see EXPERIMENTS.md §Perf).
+
+use crate::util::rng::Pcg32;
+
+/// Row-major `rows × cols` f32 matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(rows * cols, data.len(), "shape {rows}x{cols} vs len {}", data.len());
+        Matrix { rows, cols, data }
+    }
+
+    /// Uniform init in `[-scale, scale]` — the classic "small random
+    /// weights" init the paper's era of MLPs used; scale defaults to
+    /// `1/sqrt(fan_in)` at the call sites.
+    pub fn random_uniform(rows: usize, cols: usize, scale: f32, rng: &mut Pcg32) -> Self {
+        let data = (0..rows * cols)
+            .map(|_| rng.range(-scale as f64, scale as f64) as f32)
+            .collect();
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// `C = A · B` (i-k-j order: streams B rows, accumulates into C rows).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul {}x{} · {}x{}", self.rows, self.cols, other.rows, other.cols);
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            let a_row = self.row(i);
+            let c_row = &mut out.data[i * other.cols..(i + 1) * other.cols];
+            for (k, &a) in a_row.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let b_row = other.row(k);
+                for (c, &b) in c_row.iter_mut().zip(b_row) {
+                    *c += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// `C = A · Bᵀ` (both operands streamed row-major — the layout used
+    /// by the batched forward pass, where B is a `out×in` weight matrix).
+    pub fn matmul_bt(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols, "matmul_bt inner dims");
+        let mut out = Matrix::zeros(self.rows, other.rows);
+        for i in 0..self.rows {
+            let a_row = self.row(i);
+            for j in 0..other.rows {
+                let b_row = other.row(j);
+                // Eight independent accumulators so the compiler can
+                // vectorize the reduction (a single serial accumulator
+                // forces scalar FP adds); see EXPERIMENTS.md §Perf.
+                let mut acc = [0.0f32; 8];
+                let a_chunks = a_row.chunks_exact(8);
+                let b_chunks = b_row.chunks_exact(8);
+                let mut tail = 0.0f32;
+                for (ar, br) in a_chunks.remainder().iter().zip(b_chunks.remainder()) {
+                    tail += ar * br;
+                }
+                for (ac, bc) in a_chunks.zip(b_chunks) {
+                    for l in 0..8 {
+                        acc[l] += ac[l] * bc[l];
+                    }
+                }
+                let total = (acc[0] + acc[1]) + (acc[2] + acc[3])
+                    + (acc[4] + acc[5]) + (acc[6] + acc[7]) + tail;
+                out.data[i * other.rows + j] = total;
+            }
+        }
+        out
+    }
+
+    /// `C = Aᵀ · B` (used by the gradient `∂L/∂W = δᵀ · X`).
+    pub fn matmul_at(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows, "matmul_at inner dims");
+        let mut out = Matrix::zeros(self.cols, other.cols);
+        for k in 0..self.rows {
+            let a_row = self.row(k);
+            let b_row = other.row(k);
+            for (i, &a) in a_row.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let c_row = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for (c, &b) in c_row.iter_mut().zip(b_row) {
+                    *c += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Add a row vector to every row (bias broadcast).
+    pub fn add_row_inplace(&mut self, bias: &[f32]) {
+        assert_eq!(bias.len(), self.cols);
+        for r in 0..self.rows {
+            let row = &mut self.data[r * self.cols..(r + 1) * self.cols];
+            for (x, &b) in row.iter_mut().zip(bias) {
+                *x += b;
+            }
+        }
+    }
+
+    /// Elementwise map.
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for x in &mut self.data {
+            *x = f(*x);
+        }
+    }
+
+    /// `self -= scale * other` (SGD step).
+    pub fn axpy_inplace(&mut self, scale: f32, other: &Matrix) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, &g) in self.data.iter_mut().zip(&other.data) {
+            *a -= scale * g;
+        }
+    }
+
+    /// Elementwise product (Hadamard), consuming neither operand.
+    pub fn hadamard(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(&a, &b)| a * b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Column sums (bias gradient).
+    pub fn col_sums(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.cols];
+        for r in 0..self.rows {
+            for (o, &x) in out.iter_mut().zip(self.row(r)) {
+                *o += x;
+            }
+        }
+        out
+    }
+
+    /// Transpose (copying).
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.at(r, c);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{assert_allclose, property};
+
+    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut acc = 0.0;
+                for k in 0..a.cols {
+                    acc += a.at(i, k) * b.at(k, j);
+                }
+                out.data[i * b.cols + j] = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(a.matmul(&b).data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        property("ikj matmul == naive", 32, |rng| {
+            let (m, k, n) = (1 + rng.index(8), 1 + rng.index(8), 1 + rng.index(8));
+            let a = Matrix::random_uniform(m, k, 2.0, rng);
+            let b = Matrix::random_uniform(k, n, 2.0, rng);
+            assert_allclose(&a.matmul(&b).data, &naive_matmul(&a, &b).data, 1e-5, 1e-5);
+        });
+    }
+
+    #[test]
+    fn matmul_bt_matches_matmul_of_transpose() {
+        property("A·Bᵀ == A·(Bᵀ)", 32, |rng| {
+            let (m, k, n) = (1 + rng.index(6), 1 + rng.index(6), 1 + rng.index(6));
+            let a = Matrix::random_uniform(m, k, 1.0, rng);
+            let b = Matrix::random_uniform(n, k, 1.0, rng);
+            assert_allclose(&a.matmul_bt(&b).data, &a.matmul(&b.transpose()).data, 1e-5, 1e-5);
+        });
+    }
+
+    #[test]
+    fn matmul_at_matches_transpose_matmul() {
+        property("Aᵀ·B == (Aᵀ)·B", 32, |rng| {
+            let (m, k, n) = (1 + rng.index(6), 1 + rng.index(6), 1 + rng.index(6));
+            let a = Matrix::random_uniform(k, m, 1.0, rng);
+            let b = Matrix::random_uniform(k, n, 1.0, rng);
+            assert_allclose(&a.matmul_at(&b).data, &a.transpose().matmul(&b).data, 1e-5, 1e-5);
+        });
+    }
+
+    #[test]
+    fn transpose_involution() {
+        property("(Aᵀ)ᵀ == A", 16, |rng| {
+            let a = Matrix::random_uniform(1 + rng.index(7), 1 + rng.index(7), 1.0, rng);
+            assert_eq!(a.transpose().transpose(), a);
+        });
+    }
+
+    #[test]
+    fn bias_broadcast() {
+        let mut m = Matrix::zeros(2, 3);
+        m.add_row_inplace(&[1.0, 2.0, 3.0]);
+        assert_eq!(m.data, vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn col_sums_basic() {
+        let m = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m.col_sums(), vec![4.0, 6.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn matmul_shape_mismatch_panics() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(2, 3);
+        let _ = a.matmul(&b);
+    }
+}

@@ -1,0 +1,314 @@
+//! SGD training with MSE loss — Eq 4.4–4.6 of the paper.
+//!
+//! The paper trains with mini-batch size `B = 64` and learning rate
+//! `η = 0.5` (large, but appropriate for sigmoid+MSE where gradients are
+//! small), estimating the full loss by Eq 4.5 and stepping by Eq 4.6.
+
+use super::mlp::{argmax, Mlp};
+use super::tensor::Matrix;
+use crate::util::rng::Pcg32;
+
+/// Training hyper-parameters (defaults = the paper's §4.1).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub batch_size: usize,
+    pub learning_rate: f32,
+    pub epochs: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { batch_size: 64, learning_rate: 0.5, epochs: 5, seed: 2021 }
+    }
+}
+
+/// Per-epoch record returned by [`train`].
+#[derive(Debug, Clone)]
+pub struct EpochStats {
+    pub epoch: usize,
+    pub loss: f64,
+    pub train_accuracy: f64,
+}
+
+/// Gradients of one mini-batch (same shapes as the model's layers).
+pub struct Gradients {
+    pub dw: Vec<Matrix>,
+    pub db: Vec<Vec<f32>>,
+}
+
+/// MSE loss (Eq 4.5) against one-hot labels, averaged over the batch.
+pub fn mse_loss(pred: &Matrix, labels: &[usize]) -> f64 {
+    assert_eq!(pred.rows, labels.len());
+    let mut total = 0.0f64;
+    for (r, &label) in labels.iter().enumerate() {
+        for (c, &p) in pred.row(r).iter().enumerate() {
+            let y = if c == label { 1.0f32 } else { 0.0 };
+            total += ((p - y) as f64).powi(2);
+        }
+    }
+    total / labels.len() as f64
+}
+
+/// Backprop for MSE + per-layer activations.
+///
+/// With `L = (1/B) Σ ‖a_N − Y‖²`, the output delta is
+/// `δ_N = (2/B)(a_N − Y) ⊙ σ'(z_N)` and recursively
+/// `δ_i = (δ_{i+1} · W_{i+1}) ⊙ σ'(z_i)`; gradients are
+/// `∂L/∂W_i = δ_iᵀ · a_{i-1}`, `∂L/∂b_i = Σ_batch δ_i`.
+pub fn backward(mlp: &Mlp, activations: &[Matrix], labels: &[usize]) -> Gradients {
+    let n_layers = mlp.layers.len();
+    let batch = labels.len() as f32;
+    let output = activations.last().unwrap();
+
+    // δ for the output layer.
+    let mut delta = Matrix::zeros(output.rows, output.cols);
+    for (r, &label) in labels.iter().enumerate() {
+        for c in 0..output.cols {
+            let a = output.at(r, c);
+            let y = if c == label { 1.0f32 } else { 0.0 };
+            let dact = mlp.layers[n_layers - 1].activation.derivative_from_output(a);
+            *delta.at_mut(r, c) = 2.0 / batch * (a - y) * dact;
+        }
+    }
+
+    let mut dw = vec![Matrix::zeros(0, 0); n_layers];
+    let mut db = vec![Vec::new(); n_layers];
+    for i in (0..n_layers).rev() {
+        // ∂L/∂W_i = δᵀ · a_{i-1}  (δ: B×out, a_{i-1}: B×in → out×in).
+        dw[i] = delta.matmul_at(&activations[i]);
+        db[i] = delta.col_sums();
+        if i > 0 {
+            // δ_{i-1} = (δ_i · W_i) ⊙ σ'(a_{i-1}).
+            let mut prev = delta.matmul(&mlp.layers[i].w);
+            let a_prev = &activations[i];
+            debug_assert_eq!((prev.rows, prev.cols), (a_prev.rows, a_prev.cols));
+            let act = mlp.layers[i - 1].activation;
+            for (p, &a) in prev.data.iter_mut().zip(&a_prev.data) {
+                *p *= act.derivative_from_output(a);
+            }
+            delta = prev;
+        }
+    }
+    Gradients { dw, db }
+}
+
+/// Backprop for masked regression: loss `(1/B) Σ mask ⊙ (a_N − T)²`
+/// where `T` is a dense target matrix. Used by Q-learning, where only
+/// the taken action's Q-value receives gradient (mask one-hot per row).
+pub fn backward_regression(
+    mlp: &Mlp,
+    activations: &[Matrix],
+    targets: &Matrix,
+    mask: Option<&Matrix>,
+) -> Gradients {
+    let n_layers = mlp.layers.len();
+    let output = activations.last().unwrap();
+    assert_eq!((output.rows, output.cols), (targets.rows, targets.cols));
+    let batch = output.rows as f32;
+
+    let mut delta = Matrix::zeros(output.rows, output.cols);
+    for r in 0..output.rows {
+        for c in 0..output.cols {
+            let m = mask.map(|m| m.at(r, c)).unwrap_or(1.0);
+            if m == 0.0 {
+                continue;
+            }
+            let a = output.at(r, c);
+            let dact = mlp.layers[n_layers - 1].activation.derivative_from_output(a);
+            *delta.at_mut(r, c) = 2.0 / batch * m * (a - targets.at(r, c)) * dact;
+        }
+    }
+
+    let mut dw = vec![Matrix::zeros(0, 0); n_layers];
+    let mut db = vec![Vec::new(); n_layers];
+    for i in (0..n_layers).rev() {
+        dw[i] = delta.matmul_at(&activations[i]);
+        db[i] = delta.col_sums();
+        if i > 0 {
+            let mut prev = delta.matmul(&mlp.layers[i].w);
+            let a_prev = &activations[i];
+            let act = mlp.layers[i - 1].activation;
+            for (p, &a) in prev.data.iter_mut().zip(&a_prev.data) {
+                *p *= act.derivative_from_output(a);
+            }
+            delta = prev;
+        }
+    }
+    Gradients { dw, db }
+}
+
+/// One SGD step (Eq 4.6): `θ ← θ − η ∇L`.
+pub fn apply_gradients(mlp: &mut Mlp, grads: &Gradients, lr: f32) {
+    for (layer, (dw, db)) in mlp.layers.iter_mut().zip(grads.dw.iter().zip(&grads.db)) {
+        layer.w.axpy_inplace(lr, dw);
+        for (b, &g) in layer.b.iter_mut().zip(db) {
+            *b -= lr * g;
+        }
+    }
+}
+
+/// Train `mlp` on `(inputs, labels)` for `config.epochs` epochs of
+/// shuffled mini-batches; returns per-epoch loss/accuracy.
+pub fn train(
+    mlp: &mut Mlp,
+    inputs: &Matrix,
+    labels: &[usize],
+    config: &TrainConfig,
+) -> Vec<EpochStats> {
+    assert_eq!(inputs.rows, labels.len());
+    let mut rng = Pcg32::new(config.seed);
+    let mut order: Vec<usize> = (0..inputs.rows).collect();
+    let mut stats = Vec::with_capacity(config.epochs);
+    for epoch in 0..config.epochs {
+        rng.shuffle(&mut order);
+        let mut epoch_loss = 0.0f64;
+        let mut correct = 0usize;
+        let mut batches = 0usize;
+        for chunk in order.chunks(config.batch_size) {
+            // Gather the mini-batch.
+            let mut x = Matrix::zeros(chunk.len(), inputs.cols);
+            let mut y = Vec::with_capacity(chunk.len());
+            for (bi, &si) in chunk.iter().enumerate() {
+                x.data[bi * inputs.cols..(bi + 1) * inputs.cols]
+                    .copy_from_slice(inputs.row(si));
+                y.push(labels[si]);
+            }
+            let acts = mlp.forward_trace(&x);
+            let out = acts.last().unwrap();
+            epoch_loss += mse_loss(out, &y);
+            for (r, &label) in y.iter().enumerate() {
+                if argmax(out.row(r)) == label {
+                    correct += 1;
+                }
+            }
+            let grads = backward(mlp, &acts, &y);
+            apply_gradients(mlp, &grads, config.learning_rate);
+            batches += 1;
+        }
+        stats.push(EpochStats {
+            epoch,
+            loss: epoch_loss / batches as f64,
+            train_accuracy: correct as f64 / inputs.rows as f64,
+        });
+    }
+    stats
+}
+
+/// Gradient check helper: numerical ∂L/∂θ via central differences for a
+/// single scalar parameter. Test-only but exported for the integration
+/// suite.
+pub fn numerical_grad_w(
+    mlp: &mut Mlp,
+    layer: usize,
+    r: usize,
+    c: usize,
+    x: &Matrix,
+    labels: &[usize],
+    h: f32,
+) -> f64 {
+    let orig = mlp.layers[layer].w.at(r, c);
+    *mlp.layers[layer].w.at_mut(r, c) = orig + h;
+    let up = mse_loss(&mlp.forward(x), labels);
+    *mlp.layers[layer].w.at_mut(r, c) = orig - h;
+    let down = mse_loss(&mlp.forward(x), labels);
+    *mlp.layers[layer].w.at_mut(r, c) = orig;
+    (up - down) / (2.0 * h as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::activations::Activation;
+    use crate::nn::mlp::MlpConfig;
+    use crate::util::check::property;
+
+    fn tiny_config() -> MlpConfig {
+        MlpConfig {
+            sizes: vec![3, 6, 2],
+            activations: vec![Activation::Sigmoid, Activation::Sigmoid],
+        }
+    }
+
+    #[test]
+    fn gradients_match_numerical() {
+        property("analytic grad == numerical grad", 8, |rng| {
+            let mut mlp = Mlp::new(tiny_config(), rng);
+            let x = Matrix::random_uniform(5, 3, 1.0, rng);
+            let labels: Vec<usize> = (0..5).map(|_| rng.index(2)).collect();
+            let acts = mlp.forward_trace(&x);
+            let grads = backward(&mlp, &acts, &labels);
+            for layer in 0..2 {
+                let (rr, cc) = (
+                    rng.index(mlp.layers[layer].w.rows),
+                    rng.index(mlp.layers[layer].w.cols),
+                );
+                let num = numerical_grad_w(&mut mlp, layer, rr, cc, &x, &labels, 1e-3);
+                let ana = grads.dw[layer].at(rr, cc) as f64;
+                assert!(
+                    (num - ana).abs() < 1e-3 + 0.05 * num.abs(),
+                    "layer {layer} ({rr},{cc}): num {num} vs ana {ana}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn loss_decreases_on_learnable_task() {
+        // XOR-ish separable task: label = (x0 > 0).
+        let mut rng = Pcg32::new(11);
+        let n = 256;
+        let mut data = Matrix::zeros(n, 3);
+        let mut labels = Vec::with_capacity(n);
+        for r in 0..n {
+            for c in 0..3 {
+                *data.at_mut(r, c) = rng.range(-1.0, 1.0) as f32;
+            }
+            labels.push(usize::from(data.at(r, 0) > 0.0));
+        }
+        let mut mlp = Mlp::new(tiny_config(), &mut rng);
+        let config = TrainConfig { epochs: 30, learning_rate: 0.5, batch_size: 32, seed: 1 };
+        let stats = train(&mut mlp, &data, &labels, &config);
+        assert!(
+            stats.last().unwrap().loss < stats[0].loss * 0.6,
+            "loss {} → {}",
+            stats[0].loss,
+            stats.last().unwrap().loss
+        );
+        assert!(stats.last().unwrap().train_accuracy > 0.9);
+    }
+
+    #[test]
+    fn mse_loss_perfect_prediction_is_zero() {
+        let pred = Matrix::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(mse_loss(&pred, &[0, 1]), 0.0);
+    }
+
+    #[test]
+    fn apply_gradients_moves_weights() {
+        let mut rng = Pcg32::new(3);
+        let mut mlp = Mlp::new(tiny_config(), &mut rng);
+        let before = mlp.layers[0].w.clone();
+        let x = Matrix::random_uniform(4, 3, 1.0, &mut rng);
+        let acts = mlp.forward_trace(&x);
+        let grads = backward(&mlp, &acts, &[0, 1, 0, 1]);
+        apply_gradients(&mut mlp, &grads, 0.5);
+        assert_ne!(mlp.layers[0].w.data, before.data);
+    }
+
+    #[test]
+    fn training_is_deterministic_given_seed() {
+        let build = || {
+            let mut rng = Pcg32::new(17);
+            let mut mlp = Mlp::new(tiny_config(), &mut rng);
+            let x = Matrix::random_uniform(64, 3, 1.0, &mut rng);
+            let labels: Vec<usize> = (0..64).map(|i| i % 2).collect();
+            let stats = train(&mut mlp, &x, &labels, &TrainConfig::default());
+            (stats.last().unwrap().loss, mlp.layers[0].w.data.clone())
+        };
+        let (l1, w1) = build();
+        let (l2, w2) = build();
+        assert_eq!(l1, l2);
+        assert_eq!(w1, w2);
+    }
+}

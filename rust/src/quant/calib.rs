@@ -1,0 +1,130 @@
+//! Scale (`α`) calibration strategies for tensor quantization.
+//!
+//! The paper quantizes into `[-α, α]` (Eq 3.1) without specifying how α
+//! is chosen; max-abs is the implicit choice and the default everywhere.
+//! Percentile clipping and MSE search are provided for the ablation
+//! benches (they matter once the weight distribution has outliers).
+
+use super::{Calibration, Codebook};
+
+/// Pick α for `data` under `calibration`.
+pub fn pick_alpha(codebook: &Codebook, data: &[f32], calibration: Calibration) -> f32 {
+    match calibration {
+        Calibration::MaxAbs => max_abs(data),
+        Calibration::Percentile(p) => percentile_abs(data, p),
+        Calibration::MseSearch => mse_search(codebook, data),
+    }
+}
+
+fn max_abs(data: &[f32]) -> f32 {
+    data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+}
+
+fn percentile_abs(data: &[f32], p: f64) -> f32 {
+    if data.is_empty() {
+        return 0.0;
+    }
+    let mut mags: Vec<f32> = data.iter().map(|x| x.abs()).collect();
+    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (mags.len() as f64 - 1.0)).round() as usize;
+    mags[rank.min(mags.len() - 1)]
+}
+
+/// Quantization MSE of `data` at scale `alpha`.
+fn quant_mse(codebook: &Codebook, data: &[f32], alpha: f32) -> f64 {
+    if alpha <= 0.0 {
+        return data.iter().map(|&x| (x as f64).powi(2)).sum::<f64>();
+    }
+    let inv = 1.0 / alpha;
+    data.iter()
+        .map(|&x| {
+            let q = codebook.nearest((x * inv).clamp(-1.0, 1.0)).1 * alpha;
+            ((x - q) as f64).powi(2)
+        })
+        .sum::<f64>()
+}
+
+/// Coarse-to-fine grid search over α ∈ [0.3, 1.2]·max_abs.
+fn mse_search(codebook: &Codebook, data: &[f32]) -> f32 {
+    let hi = max_abs(data);
+    if hi == 0.0 {
+        return 0.0;
+    }
+    let mut best = (f64::INFINITY, hi);
+    for step in 0..=24 {
+        let alpha = hi * (0.3 + 0.9 * step as f32 / 24.0);
+        let mse = quant_mse(codebook, data, alpha);
+        if mse < best.0 {
+            best = (mse, alpha);
+        }
+    }
+    // Refine around the winner.
+    let center = best.1;
+    for step in 0..=16 {
+        let alpha = center * (0.92 + 0.16 * step as f32 / 16.0);
+        let mse = quant_mse(codebook, data, alpha);
+        if mse < best.0 {
+            best = (mse, alpha);
+        }
+    }
+    best.1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::uniform::uniform;
+    use crate::util::check::property;
+
+    #[test]
+    fn max_abs_basic() {
+        assert_eq!(max_abs(&[1.0, -3.0, 2.0]), 3.0);
+        assert_eq!(max_abs(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentile_100_equals_max() {
+        let data = [0.1f32, -0.9, 0.5];
+        assert_eq!(percentile_abs(&data, 100.0), 0.9);
+    }
+
+    #[test]
+    fn percentile_clips_outlier() {
+        let mut data = vec![0.1f32; 999];
+        data.push(100.0);
+        let p = percentile_abs(&data, 99.0);
+        assert!(p < 1.0, "p99 {p} should ignore the single outlier");
+    }
+
+    #[test]
+    fn mse_search_never_worse_than_maxabs() {
+        property("mse_search <= maxabs mse", 24, |rng| {
+            let cb = uniform(4);
+            // Heavy-tailed data: normal + occasional outlier.
+            let data: Vec<f32> = (0..256)
+                .map(|_| {
+                    let x = rng.normal() as f32;
+                    if rng.uniform() < 0.02 {
+                        x * 10.0
+                    } else {
+                        x
+                    }
+                })
+                .collect();
+            let maxabs_mse = quant_mse(&cb, &data, max_abs(&data));
+            let searched = mse_search(&cb, &data);
+            let searched_mse = quant_mse(&cb, &data, searched);
+            assert!(
+                searched_mse <= maxabs_mse * (1.0 + 1e-9),
+                "searched {searched_mse} > maxabs {maxabs_mse}"
+            );
+        });
+    }
+
+    #[test]
+    fn zero_data_gives_zero_alpha() {
+        let cb = uniform(4);
+        assert_eq!(pick_alpha(&cb, &[0.0; 16], super::super::Calibration::MseSearch), 0.0);
+        assert_eq!(pick_alpha(&cb, &[0.0; 16], super::super::Calibration::MaxAbs), 0.0);
+    }
+}

@@ -1,0 +1,128 @@
+//! Quantization error metrics used by the E4 ablation bench
+//! (`benches/quant_ablation.rs`): MSE, SQNR, max error, and the tail-MSE
+//! split that quantifies the paper's §3.2 claim about PoT's weakness at
+//! the interval ends.
+
+/// Mean squared error between `original` and `quantized`.
+pub fn mse(original: &[f32], quantized: &[f32]) -> f64 {
+    assert_eq!(original.len(), quantized.len());
+    if original.is_empty() {
+        return 0.0;
+    }
+    original
+        .iter()
+        .zip(quantized)
+        .map(|(&a, &b)| ((a - b) as f64).powi(2))
+        .sum::<f64>()
+        / original.len() as f64
+}
+
+/// Signal-to-quantization-noise ratio in dB: `10·log10(Σx² / Σ(x-q)²)`.
+/// Returns `f64::INFINITY` for exact reproduction.
+pub fn sqnr_db(original: &[f32], quantized: &[f32]) -> f64 {
+    assert_eq!(original.len(), quantized.len());
+    let signal: f64 = original.iter().map(|&x| (x as f64).powi(2)).sum();
+    let noise: f64 = original
+        .iter()
+        .zip(quantized)
+        .map(|(&a, &b)| ((a - b) as f64).powi(2))
+        .sum();
+    if noise == 0.0 {
+        f64::INFINITY
+    } else {
+        10.0 * (signal / noise).log10()
+    }
+}
+
+/// Largest absolute elementwise error.
+pub fn max_abs_err(original: &[f32], quantized: &[f32]) -> f32 {
+    original
+        .iter()
+        .zip(quantized)
+        .map(|(&a, &b)| (a - b).abs())
+        .fold(0.0, f32::max)
+}
+
+/// MSE restricted to elements whose |x| exceeds `threshold · max|x|` —
+/// the "tail" region where PoT levels are sparse. Returns `(tail_mse,
+/// center_mse, tail_fraction)`.
+pub fn tail_split_mse(
+    original: &[f32],
+    quantized: &[f32],
+    threshold: f64,
+) -> (f64, f64, f64) {
+    assert_eq!(original.len(), quantized.len());
+    let max = original.iter().fold(0.0f32, |m, &x| m.max(x.abs())) as f64;
+    let cut = max * threshold;
+    let (mut tail_sq, mut tail_n, mut center_sq, mut center_n) = (0.0f64, 0usize, 0.0f64, 0usize);
+    for (&a, &b) in original.iter().zip(quantized) {
+        let e = ((a - b) as f64).powi(2);
+        if (a.abs() as f64) > cut {
+            tail_sq += e;
+            tail_n += 1;
+        } else {
+            center_sq += e;
+            center_n += 1;
+        }
+    }
+    let tail_mse = if tail_n > 0 { tail_sq / tail_n as f64 } else { 0.0 };
+    let center_mse = if center_n > 0 { center_sq / center_n as f64 } else { 0.0 };
+    (tail_mse, center_mse, tail_n as f64 / original.len() as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::spx::{SpxConfig, SpxTensor};
+    use crate::quant::{fake_quantize, pot::pot, Calibration};
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn mse_zero_for_identical() {
+        assert_eq!(mse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+    }
+
+    #[test]
+    fn sqnr_infinite_for_identical() {
+        assert!(sqnr_db(&[1.0, 2.0], &[1.0, 2.0]).is_infinite());
+    }
+
+    #[test]
+    fn sqnr_decreases_with_noise() {
+        let x = [1.0f32, -1.0, 0.5, -0.5];
+        let small: Vec<f32> = x.iter().map(|v| v + 0.01).collect();
+        let big: Vec<f32> = x.iter().map(|v| v + 0.1).collect();
+        assert!(sqnr_db(&x, &small) > sqnr_db(&x, &big));
+    }
+
+    #[test]
+    fn spx_beats_pot_in_the_tails() {
+        // The paper's quantitative claim, as a unit test: at the same bit
+        // budget, SP2's tail MSE on normal weights is lower than PoT's.
+        let mut rng = Pcg32::new(2021);
+        let data: Vec<f32> = (0..4096).map(|_| rng.normal() as f32 * 0.3).collect();
+        let b = 5;
+        let pot_q = fake_quantize(&pot(b), &data, Calibration::MaxAbs);
+        let sp2 = SpxTensor::encode(&SpxConfig::sp2(b), &data, &[4096], Calibration::MaxAbs);
+        let sp2_q = sp2.decode();
+        let (pot_tail, _, _) = tail_split_mse(&data, &pot_q, 0.5);
+        let (sp2_tail, _, _) = tail_split_mse(&data, &sp2_q, 0.5);
+        assert!(
+            sp2_tail < pot_tail,
+            "sp2 tail mse {sp2_tail} should beat pot {pot_tail}"
+        );
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let mut rng = Pcg32::new(7);
+        let data: Vec<f32> = (0..1024).map(|_| rng.normal() as f32).collect();
+        let mut last = f64::INFINITY;
+        for b in [3u32, 4, 5, 6, 7] {
+            let q = SpxTensor::encode(&SpxConfig::sp2(b), &data, &[1024], Calibration::MaxAbs);
+            let e = mse(&data, &q.decode());
+            assert!(e <= last * 1.001, "b={b}: mse {e} > previous {last}");
+            last = e;
+        }
+    }
+}

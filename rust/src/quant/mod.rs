@@ -1,0 +1,297 @@
+//! Quantization schemes from the paper's §3.2: uniform (binary / ternary /
+//! b-bit), Power-of-Two (PoT, Eq 3.1), SP2 (Eq 3.3, after Chang et al.
+//! HPCA'21) and the paper's generalized **SPx** (Eq 3.4) where a level is
+//! `±α·Σᵢ qᵢ` with each `qᵢ` a (possibly absent) negative power of two.
+//!
+//! Everything funnels through a [`Codebook`]: a sorted set of *normalized*
+//! levels in `[-1, 1]`. Encoding a tensor picks a scale `α` (see [`calib`]),
+//! normalizes, and maps each weight to its nearest level; decoding is a
+//! table lookup times `α`. SPx codebooks additionally carry the per-level
+//! shift decomposition ([`spx::SpxCode`]) that the FPGA simulator's
+//! shift-add MACs and the Pallas kernel's exponent-field decode both use —
+//! bit-identical by construction, which the property tests pin down.
+
+pub mod calib;
+pub mod error;
+pub mod pot;
+pub mod spx;
+pub mod uniform;
+
+use crate::util::serde::NamedTensor;
+
+/// A sorted table of normalized quantization levels in `[-1, 1]`.
+///
+/// Invariants (checked in debug builds and by property tests):
+/// levels are strictly increasing, symmetric around 0, contain 0, and
+/// `|level| <= 1`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Codebook {
+    levels: Vec<f32>,
+    /// Human-readable scheme tag, e.g. `"pot(b=4)"` or `"spx(b=[2,2])"`.
+    pub scheme: String,
+}
+
+impl Codebook {
+    /// Build from raw levels; sorts, dedupes, and validates.
+    pub fn new(mut levels: Vec<f32>, scheme: impl Into<String>) -> Self {
+        levels.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        levels.dedup();
+        let cb = Codebook { levels, scheme: scheme.into() };
+        debug_assert!(cb.validate().is_ok(), "invalid codebook: {:?}", cb.validate());
+        cb
+    }
+
+    /// Check the codebook invariants; returns a description of the first
+    /// violation. Used by property tests across all schemes.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.levels.is_empty() {
+            return Err("empty codebook".into());
+        }
+        if !self.levels.contains(&0.0) {
+            return Err("codebook lacks 0".into());
+        }
+        for w in self.levels.windows(2) {
+            if w[0] >= w[1] {
+                return Err(format!("levels not strictly increasing at {} >= {}", w[0], w[1]));
+            }
+        }
+        for &l in &self.levels {
+            if !(-1.0..=1.0).contains(&l) {
+                return Err(format!("level {l} outside [-1,1]"));
+            }
+            // Symmetry: -l must also be a level.
+            if self.nearest(-l).1 != -l {
+                return Err(format!("level {l} has no negative counterpart"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of levels.
+    pub fn len(&self) -> usize {
+        self.levels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.levels.is_empty()
+    }
+
+    /// The sorted normalized levels.
+    pub fn levels(&self) -> &[f32] {
+        &self.levels
+    }
+
+    /// Nearest level to `x` (clamping outside `[-1,1]`): returns
+    /// `(index, level)`. Ties resolve to the lower level, matching the
+    /// python mirror (`python/compile/quant.py`).
+    pub fn nearest(&self, x: f32) -> (usize, f32) {
+        let ls = &self.levels;
+        // Binary search for the insertion point.
+        let mut lo = 0usize;
+        let mut hi = ls.len();
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if ls[mid] < x {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        if lo == 0 {
+            return (0, ls[0]);
+        }
+        if lo == ls.len() {
+            return (ls.len() - 1, ls[ls.len() - 1]);
+        }
+        let (below, above) = (ls[lo - 1], ls[lo]);
+        if (x - below) <= (above - x) {
+            (lo - 1, below)
+        } else {
+            (lo, above)
+        }
+    }
+
+    /// Fraction of levels whose magnitude exceeds `threshold` — the
+    /// paper's "tail end" density argument for SPx (§3.2.B).
+    pub fn tail_density(&self, threshold: f32) -> f64 {
+        let tail = self.levels.iter().filter(|l| l.abs() > threshold).count();
+        tail as f64 / self.levels.len() as f64
+    }
+
+    /// Largest gap between adjacent levels inside `[lo, hi]` — resolution
+    /// metric used by the quant ablation bench.
+    pub fn max_gap_in(&self, lo: f32, hi: f32) -> f32 {
+        self.levels
+            .windows(2)
+            .filter(|w| w[0] >= lo && w[1] <= hi)
+            .map(|w| w[1] - w[0])
+            .fold(0.0, f32::max)
+    }
+}
+
+/// How the scale `α` is chosen when encoding a tensor.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Calibration {
+    /// `α = max |w|` — the paper's implicit choice (levels span `[-α, α]`).
+    MaxAbs,
+    /// `α = p`-th percentile of `|w|` (clips outliers).
+    Percentile(f64),
+    /// Grid-search `α` minimizing quantization MSE.
+    MseSearch,
+}
+
+/// A tensor quantized against a [`Codebook`]: per-element level indices
+/// plus the scale. `decode()` reproduces the dequantized f32 values that
+/// every backend (rust CPU, FPGA sim, XLA artifact) must agree on.
+#[derive(Debug, Clone)]
+pub struct QuantizedTensor {
+    pub codebook: Codebook,
+    pub alpha: f32,
+    pub shape: Vec<usize>,
+    /// Level index per element (codebooks are small; u16 suffices).
+    pub indices: Vec<u16>,
+}
+
+impl QuantizedTensor {
+    /// Quantize `data` (row-major, any shape) against `codebook`.
+    pub fn encode(
+        codebook: &Codebook,
+        data: &[f32],
+        shape: &[usize],
+        calibration: Calibration,
+    ) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        let alpha = calib::pick_alpha(codebook, data, calibration);
+        let inv = if alpha > 0.0 { 1.0 / alpha } else { 0.0 };
+        let indices = data
+            .iter()
+            .map(|&w| {
+                let x = (w * inv).clamp(-1.0, 1.0);
+                codebook.nearest(x).0 as u16
+            })
+            .collect();
+        QuantizedTensor {
+            codebook: codebook.clone(),
+            alpha,
+            shape: shape.to_vec(),
+            indices,
+        }
+    }
+
+    /// Dequantize to f32.
+    pub fn decode(&self) -> Vec<f32> {
+        self.indices
+            .iter()
+            .map(|&i| self.codebook.levels[i as usize] * self.alpha)
+            .collect()
+    }
+
+    /// Dequantize into a [`NamedTensor`].
+    pub fn decode_named(&self, name: &str) -> NamedTensor {
+        NamedTensor::new(name, self.shape.clone(), self.decode())
+    }
+
+    pub fn numel(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Storage cost in bits per weight for this codebook (`ceil(log2 L)`
+    /// — the paper's `b`).
+    pub fn bits_per_weight(&self) -> u32 {
+        (self.codebook.len() as f64).log2().ceil() as u32
+    }
+}
+
+/// Convenience: quantize-then-dequantize ("fake quantization") — what the
+/// accuracy experiments apply to trained weights.
+pub fn fake_quantize(
+    codebook: &Codebook,
+    data: &[f32],
+    calibration: Calibration,
+) -> Vec<f32> {
+    let shape = [data.len()];
+    QuantizedTensor::encode(codebook, data, &shape, calibration).decode()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_codebook() -> Codebook {
+        Codebook::new(vec![-1.0, -0.5, 0.0, 0.5, 1.0], "toy")
+    }
+
+    #[test]
+    fn nearest_picks_closest() {
+        let cb = toy_codebook();
+        assert_eq!(cb.nearest(0.6).1, 0.5);
+        assert_eq!(cb.nearest(0.8).1, 1.0);
+        assert_eq!(cb.nearest(-0.6).1, -0.5);
+        assert_eq!(cb.nearest(0.0).1, 0.0);
+    }
+
+    #[test]
+    fn nearest_clamps() {
+        let cb = toy_codebook();
+        assert_eq!(cb.nearest(5.0).1, 1.0);
+        assert_eq!(cb.nearest(-5.0).1, -1.0);
+    }
+
+    #[test]
+    fn nearest_tie_breaks_low() {
+        let cb = toy_codebook();
+        // 0.25 is equidistant from 0.0 and 0.5.
+        assert_eq!(cb.nearest(0.25).1, 0.0);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_on_levels() {
+        let cb = toy_codebook();
+        let data = [1.0, -0.5, 0.0, 0.5];
+        let q = QuantizedTensor::encode(&cb, &data, &[4], Calibration::MaxAbs);
+        assert_eq!(q.alpha, 1.0);
+        assert_eq!(q.decode(), data.to_vec());
+    }
+
+    #[test]
+    fn encode_scales_by_alpha() {
+        let cb = toy_codebook();
+        let data = [4.0, -2.0, 0.0, 2.0];
+        let q = QuantizedTensor::encode(&cb, &data, &[4], Calibration::MaxAbs);
+        assert_eq!(q.alpha, 4.0);
+        assert_eq!(q.decode(), vec![4.0, -2.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn all_zero_tensor_is_fine() {
+        let cb = toy_codebook();
+        let data = [0.0; 8];
+        let q = QuantizedTensor::encode(&cb, &data, &[8], Calibration::MaxAbs);
+        assert_eq!(q.decode(), vec![0.0; 8]);
+    }
+
+    #[test]
+    fn tail_density_toy() {
+        let cb = toy_codebook();
+        // |l| > 0.75 → {-1, 1} → 2/5.
+        assert!((cb.tail_density(0.75) - 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn max_gap_toy() {
+        let cb = toy_codebook();
+        assert_eq!(cb.max_gap_in(-1.0, 1.0), 0.5);
+    }
+
+    #[test]
+    fn validate_rejects_asymmetric() {
+        let cb = Codebook { levels: vec![0.0, 0.5], scheme: "bad".into() };
+        assert!(cb.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_missing_zero() {
+        let cb = Codebook { levels: vec![-0.5, 0.5], scheme: "bad".into() };
+        assert!(cb.validate().is_err());
+    }
+}

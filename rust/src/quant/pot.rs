@@ -1,0 +1,109 @@
+//! Power-of-Two (PoT) quantization — Eq 3.1 of the paper:
+//!
+//! ```text
+//! Q(b, α) = α × {0, ±2^-(2^{b-1}-1), …, ±1/2, ±1}
+//! ```
+//!
+//! Multiplication by a level is a pure shift (Eq 3.2), but the levels
+//! crowd near 0 and thin out toward ±α — the "tail end" weakness that
+//! SP2/SPx (see [`super::spx`]) address.
+
+use super::Codebook;
+
+/// PoT b-bit codebook: zero plus `±2^-k` for `k ∈ 0..2^{b-1}-1`,
+/// i.e. `2^b - 1` levels (one code is the sign, one pattern is 0).
+pub fn pot(bits: u32) -> Codebook {
+    assert!((2..=6).contains(&bits), "pot bits must be in 2..=6, got {bits}");
+    let max_exp = (1u32 << (bits - 1)) - 1; // 2^{b-1} - 1 magnitudes
+    let mut levels = vec![0.0f32];
+    for k in 0..max_exp {
+        let mag = (2.0f32).powi(-(k as i32));
+        levels.push(mag);
+        levels.push(-mag);
+    }
+    Codebook::new(levels, format!("pot(b={bits})"))
+}
+
+/// Shift semantics of Eq 3.2 on a fixed-point accumulator: multiply a
+/// Q(17.15) fixed-point value `q` by `2^{-k}` via an arithmetic right
+/// shift. This is the primitive the FPGA simulator's PUs execute.
+#[inline]
+pub fn shift_mul_fixed(q: i32, k: u32) -> i32 {
+    q >> k
+}
+
+/// Exact f32 multiplication by `±2^{-k}` via exponent arithmetic —
+/// the software mirror of the shift (used to cross-check the simulator).
+#[inline]
+pub fn shift_mul_f32(x: f32, k: u32, negative: bool) -> f32 {
+    let scaled = x * (2.0f32).powi(-(k as i32));
+    if negative {
+        -scaled
+    } else {
+        scaled
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::property;
+
+    #[test]
+    fn pot_level_count() {
+        for b in 2..=6 {
+            assert_eq!(pot(b).len(), (1usize << b) - 1, "b={b}");
+        }
+    }
+
+    #[test]
+    fn pot_contains_expected_levels_b3() {
+        // b=3: max_exp = 3 → {0, ±1, ±1/2, ±1/4}.
+        let cb = pot(3);
+        let expect = [-1.0, -0.5, -0.25, 0.0, 0.25, 0.5, 1.0];
+        assert_eq!(cb.levels(), &expect);
+    }
+
+    #[test]
+    fn pot_tails_sparser_than_center() {
+        // The §3.2.B complaint: gap near ±1 is much larger than near 0.
+        let cb = pot(4);
+        let tail_gap = cb.max_gap_in(0.5, 1.0);
+        let center_gap = cb.max_gap_in(-0.05, 0.05);
+        assert!(
+            tail_gap > 4.0 * center_gap,
+            "tail {tail_gap} vs center {center_gap}"
+        );
+    }
+
+    #[test]
+    fn shift_mul_fixed_matches_division() {
+        property("fixed shift = /2^k", 128, |rng| {
+            let q = (rng.next_u32() as i32) >> 8; // keep headroom
+            let k = rng.index(8) as u32;
+            // Arithmetic shift rounds toward -inf; compare against that.
+            let expect = (q as i64).div_euclid(1i64 << k) as i32;
+            assert_eq!(shift_mul_fixed(q, k), expect, "q={q} k={k}");
+        });
+    }
+
+    #[test]
+    fn shift_mul_f32_exact_for_pot_levels() {
+        property("f32 shift exact", 64, |rng| {
+            let x = rng.range(-1e3, 1e3) as f32;
+            let k = rng.index(10) as u32;
+            let neg = rng.uniform() < 0.5;
+            let level = if neg { -(2.0f32).powi(-(k as i32)) } else { (2.0f32).powi(-(k as i32)) };
+            // Multiplying by a power of two is exact in IEEE 754 (barring
+            // underflow, impossible at these magnitudes).
+            assert_eq!(shift_mul_f32(x, k, neg), x * level);
+        });
+    }
+
+    #[test]
+    fn pot_validates() {
+        for b in 2..=6 {
+            pot(b).validate().unwrap();
+        }
+    }
+}

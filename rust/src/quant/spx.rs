@@ -1,0 +1,517 @@
+//! SP2 / SPx non-uniform quantization — Eq 3.3 / Eq 3.4 of the paper.
+//!
+//! A level is `±α · Σᵢ qᵢ` where each term `qᵢ` is either absent (0) or a
+//! negative power of two `2^{-k}`, `k ∈ 1..2^{bᵢ}-1`, and the bit budget
+//! is `b = 1 + Σ bᵢ` (one sign bit). `x = 1` degenerates to a PoT-like
+//! scheme, `x = 2` is SP2 (Chang et al., HPCA'21), larger `x` is the
+//! paper's extension: each extra term densifies the level set near the
+//! interval tails at the cost of one more shift-add per MAC.
+//!
+//! Representation: a weight is a global sign plus one exponent code per
+//! term (`0` = term absent, `k` = contribute `2^{-k}`). The level set is
+//! normalized by its maximum sum so the [`Codebook`] spans `[-1, 1]`;
+//! the residual scale `α / max_sum` is a single per-tensor f32 multiply
+//! that hardware applies once at the output stage (the "quantized float
+//! multiplication" of §3.1), so the per-MAC arithmetic stays shift-add.
+
+use super::{Calibration, Codebook};
+
+/// Static configuration: bit width of each of the `x` terms.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpxConfig {
+    /// `bᵢ` for each term; `x = term_bits.len()`, `b = 1 + Σ bᵢ`.
+    pub term_bits: Vec<u32>,
+}
+
+impl SpxConfig {
+    pub fn new(term_bits: Vec<u32>) -> Self {
+        assert!(!term_bits.is_empty(), "need at least one term");
+        assert!(
+            term_bits.iter().all(|&b| (1..=7).contains(&b)),
+            "term bits must be in 1..=7: {term_bits:?}"
+        );
+        SpxConfig { term_bits }
+    }
+
+    /// SP2 with an even split of `b - 1` bits (paper Eq 3.3).
+    pub fn sp2(total_bits: u32) -> Self {
+        assert!(total_bits >= 3, "sp2 needs b >= 3");
+        let payload = total_bits - 1;
+        SpxConfig::new(vec![payload.div_ceil(2), payload / 2])
+    }
+
+    /// SPx with `x` equal terms from a total budget of `b` bits.
+    pub fn spx(total_bits: u32, x: u32) -> Self {
+        assert!(x >= 1 && total_bits > x, "need b > x >= 1");
+        let payload = total_bits - 1;
+        let base = payload / x;
+        let extra = payload % x;
+        let bits = (0..x).map(|i| base + u32::from(i < extra)).collect();
+        SpxConfig::new(bits)
+    }
+
+    /// Number of terms `x`.
+    pub fn num_terms(&self) -> usize {
+        self.term_bits.len()
+    }
+
+    /// Total bit budget `b = 1 + Σ bᵢ`.
+    pub fn total_bits(&self) -> u32 {
+        1 + self.term_bits.iter().sum::<u32>()
+    }
+
+    /// Shift-adds one MAC costs under this scheme (hardware cost model).
+    pub fn shifts_per_mac(&self) -> usize {
+        self.num_terms()
+    }
+}
+
+/// Exponent codes of one quantized weight: `codes[i] == 0` means term `i`
+/// is absent, `codes[i] == k` means it contributes `2^{-k}`.
+pub type SpxCode = Vec<u8>;
+
+/// Magnitude of a code: `Σ 2^{-kᵢ}` (the *raw*, un-normalized sum).
+pub fn code_magnitude(code: &[u8]) -> f32 {
+    code.iter()
+        .map(|&k| if k == 0 { 0.0 } else { (2.0f32).powi(-(k as i32)) })
+        .sum()
+}
+
+/// An SPx level table: the normalized [`Codebook`] plus, for every level,
+/// a canonical code (minimal active terms, then lexicographically least —
+/// fewest shift-adds in hardware).
+#[derive(Debug, Clone)]
+pub struct SpxCodebook {
+    pub config: SpxConfig,
+    pub codebook: Codebook,
+    /// `codes[i]` decodes (after normalization) to `codebook.levels()[i].abs()`
+    /// — codes carry magnitudes only; the sign is stored separately.
+    codes_by_level: Vec<SpxCode>,
+    /// Largest raw sum — the normalization factor.
+    pub max_sum: f32,
+}
+
+impl SpxCodebook {
+    /// Enumerate all code combinations, dedupe magnitudes, normalize.
+    pub fn build(config: SpxConfig) -> Self {
+        // Enumerate the cartesian product of per-term code spaces.
+        let mut sums: Vec<(f32, SpxCode)> = vec![(0.0, vec![0; config.num_terms()])];
+        for (t, &bits) in config.term_bits.iter().enumerate() {
+            let max_code = (1u32 << bits) - 1;
+            let mut next = Vec::with_capacity(sums.len() * (max_code as usize + 1));
+            for (sum, code) in &sums {
+                for c in 0..=max_code {
+                    let mut code2 = code.clone();
+                    code2[t] = c as u8;
+                    let add = if c == 0 { 0.0 } else { (2.0f32).powi(-(c as i32)) };
+                    next.push((sum + add, code2));
+                }
+            }
+            sums = next;
+        }
+        // Canonical code per distinct magnitude: fewest active terms, then
+        // lexicographically least.
+        let mut by_mag: std::collections::BTreeMap<u32, SpxCode> = Default::default();
+        for (sum, code) in sums {
+            let key = sum.to_bits(); // magnitudes are non-negative dyadics → bit-ordered
+            let better = match by_mag.get(&key) {
+                None => true,
+                Some(old) => {
+                    let active = |c: &SpxCode| c.iter().filter(|&&k| k != 0).count();
+                    (active(&code), code.clone()) < (active(old), old.clone())
+                }
+            };
+            if better {
+                by_mag.insert(key, code);
+            }
+        }
+        let max_sum = f32::from_bits(*by_mag.keys().last().unwrap());
+        assert!(max_sum > 0.0, "degenerate SPx codebook");
+        // Normalized symmetric level set; magnitudes only in codes_by_level.
+        let mut levels = Vec::new();
+        let mut mags: Vec<(f32, SpxCode)> = Vec::new();
+        for (bits, code) in by_mag {
+            let mag = f32::from_bits(bits);
+            let norm = mag / max_sum;
+            mags.push((norm, code));
+            levels.push(norm);
+            if norm > 0.0 {
+                levels.push(-norm);
+            }
+        }
+        let codebook = Codebook::new(
+            levels,
+            format!(
+                "spx(b=[{}])",
+                config
+                    .term_bits
+                    .iter()
+                    .map(|b| b.to_string())
+                    .collect::<Vec<_>>()
+                    .join(",")
+            ),
+        );
+        // Align codes with the positive half of the codebook.
+        let mut codes_by_level = Vec::with_capacity(codebook.len());
+        for &l in codebook.levels() {
+            let mag = l.abs();
+            let code = mags
+                .iter()
+                .find(|(m, _)| (*m - mag).abs() < 1e-12)
+                .map(|(_, c)| c.clone())
+                .expect("level without code");
+            codes_by_level.push(code);
+        }
+        SpxCodebook { config, codebook, codes_by_level, max_sum }
+    }
+
+    /// Number of distinct levels.
+    pub fn len(&self) -> usize {
+        self.codebook.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.codebook.is_empty()
+    }
+
+    /// Canonical code for level index `i` (magnitude part).
+    pub fn code_for_level(&self, i: usize) -> &SpxCode {
+        &self.codes_by_level[i]
+    }
+
+    /// Decode a (sign, code) pair to the normalized level — the value the
+    /// shift-add hardware reconstructs before the `α/max_sum` rescale.
+    pub fn decode_code(&self, negative: bool, code: &[u8]) -> f32 {
+        let mag = code_magnitude(code) / self.max_sum;
+        if negative {
+            -mag
+        } else {
+            mag
+        }
+    }
+}
+
+/// Guard bits of the simulator's fixed-point datapath (see
+/// `fpga::pu`); the packed layout precomputes shift sums at this width.
+pub const FIXED_GUARD_BITS: u32 = 15;
+
+/// Element-major packed layout of an [`SpxTensor`]'s codes: one u32 per
+/// element carrying the sign (bit 31) and up to four 7-bit exponent
+/// codes — a single cache stream for the simulator's inner MAC loop
+/// (the plane-major layout costs one stream per term; see
+/// EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone)]
+pub struct PackedCodes {
+    /// Number of terms packed per word.
+    pub x: usize,
+    /// `words[e]`: bit 31 = negative, bits `7t..7t+7` = code of term t.
+    pub words: Vec<u32>,
+    /// Per row (for 2-D tensors): number of *active* (non-zero) codes —
+    /// the data-dependent add count the stats charge per dot product.
+    pub row_active_terms: Vec<u32>,
+    /// Precomputed signed shift sum per element:
+    /// `sign · Σ_{k≠0} 2^{G−k}` with `G = FIXED_GUARD_BITS`. Because
+    /// `(d << G) >> k == d · 2^{G−k}` exactly whenever `k ≤ G`, a MAC
+    /// collapses to one integer multiply by this value — bit-identical
+    /// to the shift-add datapath.
+    pub values: Vec<i64>,
+    /// Per row: true iff every active code satisfies `k ≤ G`, i.e. the
+    /// multiply fast path is exact for the whole row.
+    pub row_fast: Vec<bool>,
+}
+
+/// A tensor quantized under SPx: hardware-ready planes of exponent codes.
+#[derive(Debug, Clone)]
+pub struct SpxTensor {
+    pub config: SpxConfig,
+    pub shape: Vec<usize>,
+    /// `signs[e]` ∈ {+1, -1} per element.
+    pub signs: Vec<i8>,
+    /// `planes[t][e]` = exponent code of term `t` for element `e`.
+    pub planes: Vec<Vec<u8>>,
+    /// Output-stage scale: `α / max_sum`.
+    pub scale: f32,
+    /// Level index per element (for fast table-based decode).
+    pub indices: Vec<u16>,
+    /// The level table this tensor was encoded against.
+    pub table: SpxCodebook,
+    /// Lazily built packed layout (see [`PackedCodes`]).
+    packed: once_cell::sync::OnceCell<PackedCodes>,
+}
+
+impl SpxTensor {
+    /// Quantize `data` under `config`.
+    pub fn encode(
+        config: &SpxConfig,
+        data: &[f32],
+        shape: &[usize],
+        calibration: Calibration,
+    ) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        let table = SpxCodebook::build(config.clone());
+        let alpha = super::calib::pick_alpha(&table.codebook, data, calibration);
+        let inv = if alpha > 0.0 { 1.0 / alpha } else { 0.0 };
+        let x = config.num_terms();
+        let mut signs = Vec::with_capacity(data.len());
+        let mut planes = vec![Vec::with_capacity(data.len()); x];
+        let mut indices = Vec::with_capacity(data.len());
+        for &w in data {
+            let normalized = (w * inv).clamp(-1.0, 1.0);
+            let (idx, level) = table.codebook.nearest(normalized);
+            let code = table.code_for_level(idx).clone();
+            signs.push(if level < 0.0 { -1 } else { 1 });
+            for (t, plane) in planes.iter_mut().enumerate() {
+                plane.push(code[t]);
+            }
+            indices.push(idx as u16);
+        }
+        SpxTensor {
+            config: config.clone(),
+            shape: shape.to_vec(),
+            signs,
+            planes,
+            scale: alpha / table.max_sum,
+            indices,
+            table,
+            packed: once_cell::sync::OnceCell::new(),
+        }
+    }
+
+    /// Element-major packed codes (built once, cached). Requires
+    /// `x <= 4` and codes < 128, which every valid [`SpxConfig`]
+    /// satisfies for the configurations this crate constructs.
+    pub fn packed(&self) -> &PackedCodes {
+        self.packed.get_or_init(|| {
+            let x = self.planes.len();
+            assert!(x <= 4, "packed layout supports up to 4 terms, got {x}");
+            let numel = self.signs.len();
+            let g = FIXED_GUARD_BITS;
+            let mut words = Vec::with_capacity(numel);
+            let mut values = Vec::with_capacity(numel);
+            let mut elem_fast = vec![true; numel];
+            for e in 0..numel {
+                let negative = self.signs[e] < 0;
+                let mut w = if negative { 1u32 << 31 } else { 0 };
+                let mut v = 0i64;
+                for (t, plane) in self.planes.iter().enumerate() {
+                    let k = plane[e] as u32;
+                    debug_assert!(k < 128);
+                    w |= k << (7 * t);
+                    if k != 0 {
+                        if k <= g {
+                            v += 1i64 << (g - k);
+                        } else {
+                            elem_fast[e] = false;
+                        }
+                    }
+                }
+                words.push(w);
+                values.push(if negative { -v } else { v });
+            }
+            // Per-row aggregates (2-D) or the whole tensor as one row.
+            let (rows, cols) = if self.shape.len() == 2 {
+                (self.shape[0], self.shape[1])
+            } else {
+                (1, numel)
+            };
+            let mut row_active_terms = Vec::with_capacity(rows);
+            let mut row_fast = Vec::with_capacity(rows);
+            for r in 0..rows {
+                let mut active = 0u32;
+                let mut fast = true;
+                for e in r * cols..(r + 1) * cols {
+                    for plane in &self.planes {
+                        active += u32::from(plane[e] != 0);
+                    }
+                    fast &= elem_fast[e];
+                }
+                row_active_terms.push(active);
+                row_fast.push(fast);
+            }
+            PackedCodes { x, words, row_active_terms, values, row_fast }
+        })
+    }
+
+    /// Dequantize via the level table (reference path).
+    pub fn decode(&self) -> Vec<f32> {
+        let alpha = self.scale * self.table.max_sum;
+        self.indices
+            .iter()
+            .map(|&i| self.table.codebook.levels()[i as usize] * alpha)
+            .collect()
+    }
+
+    /// Dequantize via the shift-add path (hardware semantics): per element
+    /// `sign · (Σ 2^{-kᵢ}) · scale`. Property tests pin this equal (to f32
+    /// rounding) to [`SpxTensor::decode`].
+    pub fn decode_shift_add(&self) -> Vec<f32> {
+        (0..self.signs.len())
+            .map(|e| {
+                let mut sum = 0.0f32;
+                for plane in &self.planes {
+                    let k = plane[e];
+                    if k != 0 {
+                        sum += (2.0f32).powi(-(k as i32));
+                    }
+                }
+                let v = sum * self.scale;
+                if self.signs[e] < 0 {
+                    -v
+                } else {
+                    v
+                }
+            })
+            .collect()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.signs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::Calibration;
+    use crate::util::check::{assert_allclose, property};
+
+    #[test]
+    fn sp2_split() {
+        assert_eq!(SpxConfig::sp2(5).term_bits, vec![2, 2]);
+        assert_eq!(SpxConfig::sp2(6).term_bits, vec![3, 2]);
+    }
+
+    #[test]
+    fn spx_split() {
+        assert_eq!(SpxConfig::spx(7, 3).term_bits, vec![2, 2, 2]);
+        assert_eq!(SpxConfig::spx(8, 3).term_bits, vec![3, 2, 2]);
+        assert_eq!(SpxConfig::spx(4, 1).term_bits, vec![3]);
+    }
+
+    #[test]
+    fn total_bits_roundtrip() {
+        for b in 3..=8 {
+            for x in 1..=3 {
+                if b > x {
+                    assert_eq!(SpxConfig::spx(b, x).total_bits(), b, "b={b} x={x}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sp2_codebook_matches_eq33_manually() {
+        // b=3 → b1=b2=1 → qᵢ ∈ {0, 1/2} → raw sums {0, 1/2, 1}.
+        let t = SpxCodebook::build(SpxConfig::new(vec![1, 1]));
+        assert_eq!(t.max_sum, 1.0);
+        assert_eq!(t.codebook.levels(), &[-1.0, -0.5, 0.0, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn canonical_code_prefers_fewer_terms() {
+        // Magnitude 1/2 is reachable as (2^-1, absent) and (2^-2, 2^-2);
+        // the canonical code must be the single-term one.
+        let t = SpxCodebook::build(SpxConfig::new(vec![2, 2]));
+        let idx = t.codebook.levels().iter().position(|&l| l == 0.5).unwrap();
+        let code = t.code_for_level(idx);
+        assert_eq!(code.iter().filter(|&&k| k != 0).count(), 1, "code {code:?}");
+    }
+
+    #[test]
+    fn spx_denser_tails_than_pot_at_same_bits() {
+        // The paper's core claim (§3.2): at the same bit budget, SP2 has
+        // more levels near the interval ends than PoT.
+        let pot = crate::quant::pot::pot(5);
+        let sp2 = SpxCodebook::build(SpxConfig::sp2(5)).codebook;
+        let pot_tail = pot.levels().iter().filter(|l| l.abs() > 0.5).count();
+        let sp2_tail = sp2.levels().iter().filter(|l| l.abs() > 0.5).count();
+        assert!(
+            sp2_tail > pot_tail,
+            "sp2 tail levels {sp2_tail} <= pot {pot_tail}"
+        );
+        // And the largest tail gap shrinks.
+        assert!(sp2.max_gap_in(0.5, 1.0) < pot.max_gap_in(0.5, 1.0));
+    }
+
+    #[test]
+    fn more_terms_denser_tails() {
+        // Splitting the bit budget across more terms *reduces* the total
+        // level count (combinations collide) but *increases* resolution
+        // at the interval tails — Eq 3.4's "more choices at the two tail
+        // ends". Count normalized levels with |l| > 0.5:
+        // ends". Resolution metric: the largest gap between adjacent
+        // levels in the outer half of the interval shrinks with x.
+        let tail_gap = |x: u32| {
+            SpxCodebook::build(SpxConfig::spx(7, x)).codebook.max_gap_in(0.5, 1.0)
+        };
+        let (g1, g2, g3) = (tail_gap(1), tail_gap(2), tail_gap(3));
+        assert!(g2 < g1, "x=2 tail gap {g2} vs x=1 {g1}");
+        assert!(g3 < g2, "x=3 tail gap {g3} vs x=2 {g2}");
+        // And level *count* in the tail grows from x=1 to x=2.
+        let tail_count = |x: u32| {
+            SpxCodebook::build(SpxConfig::spx(7, x))
+                .codebook
+                .levels()
+                .iter()
+                .filter(|l| l.abs() > 0.5)
+                .count()
+        };
+        assert!(tail_count(2) > tail_count(1));
+    }
+
+    #[test]
+    fn decode_paths_agree() {
+        property("table decode == shift-add decode", 48, |rng| {
+            let x = 1 + rng.index(3) as u32;
+            let b = (x + 2) + rng.index(3) as u32;
+            let cfg = SpxConfig::spx(b, x);
+            let data: Vec<f32> = (0..128).map(|_| rng.normal() as f32).collect();
+            let t = SpxTensor::encode(&cfg, &data, &[128], Calibration::MaxAbs);
+            assert_allclose(&t.decode_shift_add(), &t.decode(), 1e-6, 1e-5);
+        });
+    }
+
+    #[test]
+    fn decode_exact_when_max_sum_is_pow2() {
+        // x=2 → max_sum = 1.0 → both decode paths are bit-identical.
+        let cfg = SpxConfig::sp2(6);
+        let data: Vec<f32> = (0..64).map(|i| ((i as f32) - 32.0) / 17.0).collect();
+        let t = SpxTensor::encode(&cfg, &data, &[64], Calibration::MaxAbs);
+        assert_eq!(t.table.max_sum, 1.0);
+        assert_eq!(t.decode(), t.decode_shift_add());
+    }
+
+    #[test]
+    fn quantization_is_idempotent() {
+        property("Q(Q(w)) == Q(w)", 32, |rng| {
+            let cfg = SpxConfig::sp2(5);
+            let data: Vec<f32> = (0..64).map(|_| rng.range(-3.0, 3.0) as f32).collect();
+            let t1 = SpxTensor::encode(&cfg, &data, &[64], Calibration::MaxAbs);
+            let once = t1.decode();
+            let t2 = SpxTensor::encode(&cfg, &once, &[64], Calibration::MaxAbs);
+            assert_allclose(&t2.decode(), &once, 1e-7, 1e-6);
+        });
+    }
+
+    #[test]
+    fn planes_shape_matches_config() {
+        let cfg = SpxConfig::spx(7, 3);
+        let data = vec![0.5f32; 10];
+        let t = SpxTensor::encode(&cfg, &data, &[2, 5], Calibration::MaxAbs);
+        assert_eq!(t.planes.len(), 3);
+        assert!(t.planes.iter().all(|p| p.len() == 10));
+        assert_eq!(t.numel(), 10);
+    }
+
+    #[test]
+    fn all_spx_codebooks_validate() {
+        for b in 3..=8u32 {
+            for x in 1..=3u32 {
+                if b > x {
+                    let t = SpxCodebook::build(SpxConfig::spx(b, x));
+                    t.codebook.validate().unwrap();
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,322 @@
+//! Acrobot-v1: a two-link pendulum that must swing its tip above the
+//! bar. Faithful port of OpenAI Gym's `AcrobotEnv` (the "book" dynamics
+//! of Sutton & Barto §11.3 / Gym's default):
+//!
+//! * state `(θ₁, θ₂, θ̇₁, θ̇₂)`, observation
+//!   `[cos θ₁, sin θ₁, cos θ₂, sin θ₂, θ̇₁, θ̇₂]`;
+//! * actions `{0, 1, 2}` → torque `{-1, 0, +1}` on the second joint;
+//! * RK4 integration with `dt = 0.2`, velocities clipped to
+//!   `±4π / ±9π`, angles wrapped to `[-π, π)`;
+//! * reward −1 per step; terminates when
+//!   `-cos θ₁ − cos(θ₁ + θ₂) > 1` or after 500 steps;
+//! * reset draws all four state components uniformly from `[-0.1, 0.1]`.
+
+use super::env::{Environment, Step};
+use crate::util::rng::Pcg32;
+use std::f64::consts::PI;
+
+const LINK_LENGTH_1: f64 = 1.0;
+const LINK_MASS_1: f64 = 1.0;
+const LINK_MASS_2: f64 = 1.0;
+const LINK_COM_POS_1: f64 = 0.5;
+const LINK_COM_POS_2: f64 = 0.5;
+const LINK_MOI: f64 = 1.0;
+const GRAVITY: f64 = 9.8;
+const DT: f64 = 0.2;
+const MAX_VEL_1: f64 = 4.0 * PI;
+const MAX_VEL_2: f64 = 9.0 * PI;
+const TORQUES: [f64; 3] = [-1.0, 0.0, 1.0];
+const MAX_STEPS: u32 = 500;
+
+/// The Acrobot-v1 environment.
+#[derive(Debug, Clone)]
+pub struct Acrobot {
+    /// `(θ₁, θ₂, θ̇₁, θ̇₂)`.
+    state: [f64; 4],
+    steps: u32,
+}
+
+impl Default for Acrobot {
+    fn default() -> Self {
+        Acrobot { state: [0.0; 4], steps: 0 }
+    }
+}
+
+impl Acrobot {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Gym's `_dsdt`: time derivative of the augmented state under
+    /// torque `a` ("book" variant).
+    fn dsdt(s: &[f64; 4], a: f64) -> [f64; 4] {
+        let (m1, m2) = (LINK_MASS_1, LINK_MASS_2);
+        let (l1, lc1, lc2) = (LINK_LENGTH_1, LINK_COM_POS_1, LINK_COM_POS_2);
+        let (i1, i2, g) = (LINK_MOI, LINK_MOI, GRAVITY);
+        let [theta1, theta2, dtheta1, dtheta2] = *s;
+
+        let d1 = m1 * lc1 * lc1
+            + m2 * (l1 * l1 + lc2 * lc2 + 2.0 * l1 * lc2 * theta2.cos())
+            + i1
+            + i2;
+        let d2 = m2 * (lc2 * lc2 + l1 * lc2 * theta2.cos()) + i2;
+        let phi2 = m2 * lc2 * g * (theta1 + theta2 - PI / 2.0).cos();
+        let phi1 = -m2 * l1 * lc2 * dtheta2 * dtheta2 * theta2.sin()
+            - 2.0 * m2 * l1 * lc2 * dtheta2 * dtheta1 * theta2.sin()
+            + (m1 * lc1 + m2 * l1) * g * (theta1 - PI / 2.0).cos()
+            + phi2;
+        // "book" dynamics (Gym's default `book_or_nips = "book"`).
+        let ddtheta2 = (a + d2 / d1 * phi1
+            - m2 * l1 * lc2 * dtheta1 * dtheta1 * theta2.sin()
+            - phi2)
+            / (m2 * lc2 * lc2 + i2 - d2 * d2 / d1);
+        let ddtheta1 = -(d2 * ddtheta2 + phi1) / d1;
+        [dtheta1, dtheta2, ddtheta1, ddtheta2]
+    }
+
+    /// One RK4 step of length `DT` under constant torque `a`.
+    fn rk4(s: &[f64; 4], a: f64) -> [f64; 4] {
+        let add = |x: &[f64; 4], k: &[f64; 4], h: f64| {
+            [x[0] + h * k[0], x[1] + h * k[1], x[2] + h * k[2], x[3] + h * k[3]]
+        };
+        let k1 = Self::dsdt(s, a);
+        let k2 = Self::dsdt(&add(s, &k1, DT / 2.0), a);
+        let k3 = Self::dsdt(&add(s, &k2, DT / 2.0), a);
+        let k4 = Self::dsdt(&add(s, &k3, DT), a);
+        [
+            s[0] + DT / 6.0 * (k1[0] + 2.0 * k2[0] + 2.0 * k3[0] + k4[0]),
+            s[1] + DT / 6.0 * (k1[1] + 2.0 * k2[1] + 2.0 * k3[1] + k4[1]),
+            s[2] + DT / 6.0 * (k1[2] + 2.0 * k2[2] + 2.0 * k3[2] + k4[2]),
+            s[3] + DT / 6.0 * (k1[3] + 2.0 * k2[3] + 2.0 * k3[3] + k4[3]),
+        ]
+    }
+
+    fn observation(&self) -> Vec<f32> {
+        let [t1, t2, dt1, dt2] = self.state;
+        vec![
+            t1.cos() as f32,
+            t1.sin() as f32,
+            t2.cos() as f32,
+            t2.sin() as f32,
+            dt1 as f32,
+            dt2 as f32,
+        ]
+    }
+
+    fn terminal(&self) -> bool {
+        let [t1, t2, _, _] = self.state;
+        -t1.cos() - (t1 + t2).cos() > 1.0
+    }
+
+    /// Direct state access for physics tests.
+    pub fn state(&self) -> [f64; 4] {
+        self.state
+    }
+
+    pub fn set_state(&mut self, s: [f64; 4]) {
+        self.state = s;
+        self.steps = 0;
+    }
+
+    /// Total mechanical energy (kinetic + potential), used by the
+    /// integration-accuracy test (conserved under zero torque up to RK4
+    /// error).
+    pub fn energy(&self) -> f64 {
+        let (m1, m2) = (LINK_MASS_1, LINK_MASS_2);
+        let (l1, lc1, lc2) = (LINK_LENGTH_1, LINK_COM_POS_1, LINK_COM_POS_2);
+        let (i1, i2, g) = (LINK_MOI, LINK_MOI, GRAVITY);
+        let [t1, t2, dt1, dt2] = self.state;
+        // Heights of the two centers of mass (y up, pivot at origin;
+        // θ measured from the downward vertical).
+        let y1 = -lc1 * t1.cos();
+        let y2 = -l1 * t1.cos() - lc2 * (t1 + t2).cos();
+        let potential = m1 * g * y1 + m2 * g * y2;
+        // Velocities of the COMs.
+        let v1sq = (lc1 * dt1) * (lc1 * dt1);
+        let v2x = l1 * dt1 * t1.cos() + lc2 * (dt1 + dt2) * (t1 + t2).cos();
+        let v2y = l1 * dt1 * t1.sin() + lc2 * (dt1 + dt2) * (t1 + t2).sin();
+        let kinetic = 0.5 * m1 * v1sq
+            + 0.5 * m2 * (v2x * v2x + v2y * v2y)
+            + 0.5 * i1 * dt1 * dt1
+            + 0.5 * i2 * (dt1 + dt2) * (dt1 + dt2);
+        kinetic + potential
+    }
+}
+
+/// Wrap an angle to `[-π, π)`.
+fn wrap_pi(x: f64) -> f64 {
+    let two_pi = 2.0 * PI;
+    let mut v = (x + PI) % two_pi;
+    if v < 0.0 {
+        v += two_pi;
+    }
+    v - PI
+}
+
+impl Environment for Acrobot {
+    fn observation_dim(&self) -> usize {
+        6
+    }
+
+    fn num_actions(&self) -> usize {
+        3
+    }
+
+    fn reset(&mut self, rng: &mut Pcg32) -> Vec<f32> {
+        for s in &mut self.state {
+            *s = rng.range(-0.1, 0.1);
+        }
+        self.steps = 0;
+        self.observation()
+    }
+
+    fn step(&mut self, action: usize) -> Step {
+        assert!(action < 3, "acrobot action {action}");
+        let torque = TORQUES[action];
+        let mut next = Self::rk4(&self.state, torque);
+        next[0] = wrap_pi(next[0]);
+        next[1] = wrap_pi(next[1]);
+        next[2] = next[2].clamp(-MAX_VEL_1, MAX_VEL_1);
+        next[3] = next[3].clamp(-MAX_VEL_2, MAX_VEL_2);
+        self.state = next;
+        self.steps += 1;
+        let terminated = self.terminal();
+        let reward = if terminated { 0.0 } else { -1.0 };
+        Step {
+            observation: self.observation(),
+            reward,
+            terminated,
+            truncated: !terminated && self.steps >= MAX_STEPS,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::property;
+
+    #[test]
+    fn reset_starts_near_rest() {
+        let mut env = Acrobot::new();
+        let mut rng = Pcg32::new(0);
+        let obs = env.reset(&mut rng);
+        assert_eq!(obs.len(), 6);
+        // Near-downward: cos θ₁ ≈ 1.
+        assert!(obs[0] > 0.99);
+        assert!(!env.terminal());
+    }
+
+    #[test]
+    fn observation_components_consistent() {
+        property("cos²+sin² == 1", 32, |rng| {
+            let mut env = Acrobot::new();
+            let _ = env.reset(rng);
+            for _ in 0..10 {
+                let s = env.step(rng.index(3));
+                let o = &s.observation;
+                assert!((o[0] * o[0] + o[1] * o[1] - 1.0).abs() < 1e-5);
+                assert!((o[2] * o[2] + o[3] * o[3] - 1.0).abs() < 1e-5);
+            }
+        });
+    }
+
+    #[test]
+    fn velocities_clipped() {
+        let mut env = Acrobot::new();
+        let mut rng = Pcg32::new(1);
+        let _ = env.reset(&mut rng);
+        for _ in 0..500 {
+            let s = env.step(2);
+            assert!(s.observation[4].abs() <= (MAX_VEL_1 as f32) + 1e-4);
+            assert!(s.observation[5].abs() <= (MAX_VEL_2 as f32) + 1e-4);
+            if s.done() {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn episode_caps_at_500_steps() {
+        let mut env = Acrobot::new();
+        let mut rng = Pcg32::new(2);
+        let _ = env.reset(&mut rng);
+        let mut steps = 0;
+        loop {
+            let s = env.step(1); // zero torque: hangs forever
+            steps += 1;
+            if s.done() {
+                assert!(s.truncated && !s.terminated);
+                break;
+            }
+            assert!(steps <= 500);
+        }
+        assert_eq!(steps, 500);
+    }
+
+    #[test]
+    fn energy_conserved_without_torque() {
+        // RK4 at dt=0.2 drifts slightly; over 50 steps the drift should
+        // stay under 1% of the energy scale.
+        let mut env = Acrobot::new();
+        env.set_state([1.0, 0.5, 0.0, 0.0]);
+        let e0 = env.energy();
+        for _ in 0..50 {
+            let _ = env.step(1); // zero torque
+        }
+        let e1 = env.energy();
+        assert!(
+            (e1 - e0).abs() < 0.3,
+            "energy drift {e0} → {e1}"
+        );
+    }
+
+    #[test]
+    fn torque_injects_energy() {
+        let mut env = Acrobot::new();
+        env.set_state([0.01, 0.0, 0.0, 0.0]);
+        let e0 = env.energy();
+        // Bang-bang torque pumps energy into the system.
+        for i in 0..40 {
+            let a = if (i / 5) % 2 == 0 { 2 } else { 0 };
+            let _ = env.step(a);
+        }
+        assert!(env.energy() > e0 + 0.5, "e0={e0} e1={}", env.energy());
+    }
+
+    #[test]
+    fn terminal_condition_matches_formula() {
+        let mut env = Acrobot::new();
+        // Tip straight up: θ₁ = π (link 1 up), θ₂ = 0 → height = 2.
+        env.set_state([PI, 0.0, 0.0, 0.0]);
+        assert!(env.terminal());
+        // Hanging down: height = -2.
+        env.set_state([0.0, 0.0, 0.0, 0.0]);
+        assert!(!env.terminal());
+    }
+
+    #[test]
+    fn wrap_pi_range() {
+        property("wrap_pi ∈ [-π, π)", 64, |rng| {
+            let x = rng.range(-50.0, 50.0);
+            let w = wrap_pi(x);
+            assert!((-PI..PI).contains(&w), "{x} → {w}");
+            // Same angle modulo 2π.
+            let turns = (x - w) / (2.0 * PI);
+            assert!((turns - turns.round()).abs() < 1e-9);
+        });
+    }
+
+    #[test]
+    fn dynamics_deterministic() {
+        let mut a = Acrobot::new();
+        let mut b = Acrobot::new();
+        a.set_state([0.05, -0.03, 0.01, 0.02]);
+        b.set_state([0.05, -0.03, 0.01, 0.02]);
+        for i in 0..20 {
+            let sa = a.step(i % 3);
+            let sb = b.step(i % 3);
+            assert_eq!(sa.observation, sb.observation);
+        }
+    }
+}

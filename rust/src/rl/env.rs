@@ -1,0 +1,76 @@
+//! Minimal episodic-environment interface (the slice of Gym's API the
+//! Q-learning experiment needs).
+
+use crate::util::rng::Pcg32;
+
+/// One environment step's outcome. `terminated` is a *true* MDP
+/// terminal state (bootstrap stops); `truncated` is an artificial
+/// episode cap (bootstrapping must continue through it — conflating the
+/// two is the classic time-limit bug that stalls Q-learning).
+#[derive(Debug, Clone)]
+pub struct Step {
+    pub observation: Vec<f32>,
+    pub reward: f32,
+    pub terminated: bool,
+    pub truncated: bool,
+}
+
+impl Step {
+    /// Episode is over for control-flow purposes.
+    pub fn done(&self) -> bool {
+        self.terminated || self.truncated
+    }
+}
+
+/// An episodic RL environment with discrete actions.
+pub trait Environment {
+    /// Observation vector length.
+    fn observation_dim(&self) -> usize;
+    /// Number of discrete actions.
+    fn num_actions(&self) -> usize;
+    /// Reset to a fresh episode; returns the initial observation.
+    fn reset(&mut self, rng: &mut Pcg32) -> Vec<f32>;
+    /// Apply `action`; advances one step.
+    fn step(&mut self, action: usize) -> Step;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A two-step dummy env for harness tests elsewhere.
+    pub struct Dummy {
+        t: u32,
+    }
+
+    impl Environment for Dummy {
+        fn observation_dim(&self) -> usize {
+            1
+        }
+        fn num_actions(&self) -> usize {
+            2
+        }
+        fn reset(&mut self, _rng: &mut Pcg32) -> Vec<f32> {
+            self.t = 0;
+            vec![0.0]
+        }
+        fn step(&mut self, _action: usize) -> Step {
+            self.t += 1;
+            Step {
+                observation: vec![self.t as f32],
+                reward: -1.0,
+                terminated: self.t >= 2,
+                truncated: false,
+            }
+        }
+    }
+
+    #[test]
+    fn dummy_terminates() {
+        let mut env = Dummy { t: 0 };
+        let mut rng = Pcg32::new(0);
+        let _ = env.reset(&mut rng);
+        assert!(!env.step(0).done());
+        assert!(env.step(0).done());
+    }
+}

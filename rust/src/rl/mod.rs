@@ -1,0 +1,19 @@
+//! Reinforcement-learning substrate for the paper's §4.2 experiment:
+//! Q-learning with an MLP Q-function on Acrobot-v1.
+//!
+//! OpenAI Gym is not available offline, so [`acrobot`] is a faithful
+//! port of Gym's `AcrobotEnv` ("book" dynamics, RK4, dt = 0.2) — see
+//! DESIGN.md §5. [`qlearn`] implements semi-gradient Q-learning with an
+//! experience-replay buffer and a periodically synced target network,
+//! training through the [`crate::nn`] substrate. Evaluation can swap
+//! the greedy policy's Q-network for any quantized backend, which is
+//! how E5 measures fp32-vs-SPx control quality.
+
+pub mod acrobot;
+pub mod env;
+pub mod qlearn;
+pub mod replay;
+
+pub use acrobot::Acrobot;
+pub use env::Environment;
+pub use qlearn::{QLearnConfig, QLearner};

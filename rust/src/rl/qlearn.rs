@@ -1,0 +1,299 @@
+//! Semi-gradient Q-learning with an MLP function approximator (§4.2):
+//! ε-greedy exploration, experience replay, and a periodically synced
+//! target network (the standard DQN stabilizers — without them sigmoid
+//! Q-MLPs of this size diverge on Acrobot).
+//!
+//! The *policy* at evaluation time is pluggable: any `Fn(&[f32]) ->
+//! Vec<f32>` can provide Q-values, so the same evaluation harness runs
+//! the fp32 network, the SPx-quantized accelerator, or the XLA artifact
+//! — that comparison is experiment E5.
+
+use super::env::Environment;
+use super::replay::{ReplayBuffer, Transition};
+use crate::nn::mlp::{argmax, Mlp, MlpConfig};
+use crate::nn::tensor::Matrix;
+use crate::nn::train::{apply_gradients, backward_regression};
+use crate::util::rng::Pcg32;
+
+/// Q-learning hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct QLearnConfig {
+    pub episodes: usize,
+    pub gamma: f32,
+    pub learning_rate: f32,
+    pub batch_size: usize,
+    pub replay_capacity: usize,
+    /// Linear ε decay from `eps_start` to `eps_end` over `eps_decay_steps`.
+    pub eps_start: f64,
+    pub eps_end: f64,
+    pub eps_decay_steps: u64,
+    /// Sync the target network every this many gradient steps.
+    pub target_sync_every: u64,
+    /// Environment steps before learning starts.
+    pub warmup_steps: u64,
+    pub seed: u64,
+}
+
+impl Default for QLearnConfig {
+    fn default() -> Self {
+        QLearnConfig {
+            episodes: 150,
+            gamma: 0.99,
+            learning_rate: 0.01,
+            batch_size: 64,
+            replay_capacity: 50_000,
+            eps_start: 1.0,
+            eps_end: 0.05,
+            eps_decay_steps: 20_000,
+            target_sync_every: 500,
+            warmup_steps: 1_000,
+            seed: 7,
+        }
+    }
+}
+
+/// Per-episode training record.
+#[derive(Debug, Clone)]
+pub struct EpisodeStats {
+    pub episode: usize,
+    pub return_sum: f32,
+    pub steps: u32,
+    pub epsilon: f64,
+}
+
+/// The learner: online network, target network, replay.
+pub struct QLearner {
+    pub qnet: Mlp,
+    target: Mlp,
+    replay: ReplayBuffer,
+    config: QLearnConfig,
+    env_steps: u64,
+    grad_steps: u64,
+    rng: Pcg32,
+}
+
+impl QLearner {
+    pub fn new(env: &dyn Environment, config: QLearnConfig) -> Self {
+        let mut rng = Pcg32::new(config.seed);
+        let arch = MlpConfig {
+            sizes: vec![env.observation_dim(), 64, 64, env.num_actions()],
+            activations: MlpConfig::paper_qnet().activations,
+        };
+        let qnet = Mlp::new(arch, &mut rng);
+        let target = qnet.clone();
+        let replay = ReplayBuffer::new(config.replay_capacity);
+        QLearner { qnet, target, replay, config, env_steps: 0, grad_steps: 0, rng }
+    }
+
+    /// Current exploration rate.
+    pub fn epsilon(&self) -> f64 {
+        let c = &self.config;
+        let frac = (self.env_steps as f64 / c.eps_decay_steps as f64).min(1.0);
+        c.eps_start + (c.eps_end - c.eps_start) * frac
+    }
+
+    /// ε-greedy action from the online network.
+    fn act(&mut self, obs: &[f32]) -> usize {
+        if self.rng.uniform() < self.epsilon() {
+            self.rng.index(self.qnet.output_dim())
+        } else {
+            argmax(&self.qnet.forward_one(obs))
+        }
+    }
+
+    /// One replayed gradient step (if warm enough).
+    fn learn(&mut self) {
+        if self.replay.len() < self.config.batch_size
+            || self.env_steps < self.config.warmup_steps
+        {
+            return;
+        }
+        let batch = self.config.batch_size;
+        let obs_dim = self.qnet.input_dim();
+        let n_actions = self.qnet.output_dim();
+        // Assemble the batch.
+        let samples = self.replay.sample(batch, &mut self.rng);
+        let mut states = Matrix::zeros(batch, obs_dim);
+        let mut next_states = Matrix::zeros(batch, obs_dim);
+        let mut actions = Vec::with_capacity(batch);
+        let mut rewards = Vec::with_capacity(batch);
+        let mut dones = Vec::with_capacity(batch);
+        for (i, t) in samples.iter().enumerate() {
+            states.data[i * obs_dim..(i + 1) * obs_dim].copy_from_slice(&t.state);
+            next_states.data[i * obs_dim..(i + 1) * obs_dim].copy_from_slice(&t.next_state);
+            actions.push(t.action);
+            rewards.push(t.reward);
+            dones.push(t.done);
+        }
+        // TD targets from the frozen target network.
+        let next_q = self.target.forward(&next_states);
+        let acts = self.qnet.forward_trace(&states);
+        let current_q = acts.last().unwrap();
+        let mut targets = current_q.clone();
+        let mut mask = Matrix::zeros(batch, n_actions);
+        for i in 0..batch {
+            let max_next = next_q.row(i).iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let td = if dones[i] {
+                rewards[i]
+            } else {
+                rewards[i] + self.config.gamma * max_next
+            };
+            *targets.at_mut(i, actions[i]) = td;
+            *mask.at_mut(i, actions[i]) = 1.0;
+        }
+        let grads = backward_regression(&self.qnet, &acts, &targets, Some(&mask));
+        apply_gradients(&mut self.qnet, &grads, self.config.learning_rate);
+        self.grad_steps += 1;
+        if self.grad_steps % self.config.target_sync_every == 0 {
+            self.target = self.qnet.clone();
+        }
+    }
+
+    /// Train for `config.episodes` episodes on `env`.
+    pub fn train(&mut self, env: &mut dyn Environment) -> Vec<EpisodeStats> {
+        let mut stats = Vec::with_capacity(self.config.episodes);
+        for episode in 0..self.config.episodes {
+            let mut obs = env.reset(&mut self.rng);
+            let mut return_sum = 0.0f32;
+            let mut steps = 0u32;
+            loop {
+                let action = self.act(&obs);
+                let step = env.step(action);
+                self.env_steps += 1;
+                return_sum += step.reward;
+                steps += 1;
+                self.replay.push(Transition {
+                    state: obs.clone(),
+                    action,
+                    reward: step.reward,
+                    next_state: step.observation.clone(),
+                    // Bootstrap through truncation — only true terminals
+                    // stop the TD backup (time-limit correctness).
+                    done: step.terminated,
+                });
+                self.learn();
+                let done = step.done();
+                obs = step.observation;
+                if done {
+                    break;
+                }
+            }
+            stats.push(EpisodeStats { episode, return_sum, steps, epsilon: self.epsilon() });
+        }
+        stats
+    }
+}
+
+/// Evaluate a greedy policy given by `q_fn` for `episodes` episodes;
+/// returns per-episode returns. This is the harness E5 uses with
+/// different inference backends.
+pub fn evaluate_policy(
+    env: &mut dyn Environment,
+    q_fn: &mut dyn FnMut(&[f32]) -> Vec<f32>,
+    episodes: usize,
+    seed: u64,
+) -> Vec<f32> {
+    let mut rng = Pcg32::new(seed);
+    let mut returns = Vec::with_capacity(episodes);
+    for _ in 0..episodes {
+        let mut obs = env.reset(&mut rng);
+        let mut total = 0.0f32;
+        loop {
+            let action = argmax(&q_fn(&obs));
+            let step = env.step(action);
+            total += step.reward;
+            let done = step.done();
+            obs = step.observation;
+            if done {
+                break;
+            }
+        }
+        returns.push(total);
+    }
+    returns
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rl::acrobot::Acrobot;
+    use crate::util::mean;
+
+    /// Trivial env: two states; action 0 ends the episode with reward
+    /// +1, action 1 continues with reward 0 (cap 10 steps). Optimal
+    /// return = 1 immediately.
+    struct Bandit {
+        t: u32,
+    }
+
+    impl Environment for Bandit {
+        fn observation_dim(&self) -> usize {
+            2
+        }
+        fn num_actions(&self) -> usize {
+            2
+        }
+        fn reset(&mut self, _rng: &mut Pcg32) -> Vec<f32> {
+            self.t = 0;
+            vec![1.0, 0.0]
+        }
+        fn step(&mut self, action: usize) -> super::super::env::Step {
+            self.t += 1;
+            let terminated = action == 0 || self.t >= 10;
+            super::super::env::Step {
+                observation: vec![0.0, 1.0],
+                reward: if action == 0 { 1.0 } else { 0.0 },
+                terminated,
+                truncated: false,
+            }
+        }
+    }
+
+    #[test]
+    fn learns_trivial_bandit() {
+        let mut env = Bandit { t: 0 };
+        let config = QLearnConfig {
+            episodes: 200,
+            warmup_steps: 50,
+            eps_decay_steps: 300,
+            target_sync_every: 50,
+            learning_rate: 0.05,
+            batch_size: 16,
+            ..Default::default()
+        };
+        let mut learner = QLearner::new(&env, config);
+        let _ = learner.train(&mut env);
+        // Greedy policy should pick action 0 in the start state.
+        let q = learner.qnet.forward_one(&[1.0, 0.0]);
+        assert!(q[0] > q[1], "q-values {q:?}");
+    }
+
+    #[test]
+    fn epsilon_decays_linearly() {
+        let env = Bandit { t: 0 };
+        let mut learner = QLearner::new(&env, QLearnConfig::default());
+        assert_eq!(learner.epsilon(), 1.0);
+        learner.env_steps = learner.config.eps_decay_steps;
+        assert!((learner.epsilon() - learner.config.eps_end).abs() < 1e-9);
+        learner.env_steps = learner.config.eps_decay_steps * 10;
+        assert!((learner.epsilon() - learner.config.eps_end).abs() < 1e-9);
+    }
+
+    #[test]
+    fn evaluate_policy_runs_episodes() {
+        let mut env = Acrobot::new();
+        let mut constant_q = |_obs: &[f32]| vec![0.0, 1.0, 0.0];
+        let returns = evaluate_policy(&mut env, &mut constant_q, 3, 0);
+        assert_eq!(returns.len(), 3);
+        // Zero-torque policy never solves acrobot: returns = -500.
+        assert!(mean(&returns.iter().map(|&r| r as f64).collect::<Vec<_>>()) <= -499.0);
+    }
+
+    #[test]
+    fn qnet_shapes_match_env() {
+        let env = Acrobot::new();
+        let learner = QLearner::new(&env, QLearnConfig::default());
+        assert_eq!(learner.qnet.input_dim(), 6);
+        assert_eq!(learner.qnet.output_dim(), 3);
+    }
+}

@@ -1,0 +1,107 @@
+//! Fixed-capacity experience-replay ring buffer with uniform sampling.
+
+use crate::util::rng::Pcg32;
+
+/// One transition `(s, a, r, s', done)`.
+#[derive(Debug, Clone)]
+pub struct Transition {
+    pub state: Vec<f32>,
+    pub action: usize,
+    pub reward: f32,
+    pub next_state: Vec<f32>,
+    pub done: bool,
+}
+
+/// Ring buffer of transitions.
+pub struct ReplayBuffer {
+    capacity: usize,
+    items: Vec<Transition>,
+    head: usize,
+}
+
+impl ReplayBuffer {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        ReplayBuffer { capacity, items: Vec::with_capacity(capacity), head: 0 }
+    }
+
+    pub fn push(&mut self, t: Transition) {
+        if self.items.len() < self.capacity {
+            self.items.push(t);
+        } else {
+            self.items[self.head] = t;
+            self.head = (self.head + 1) % self.capacity;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Sample `n` transitions uniformly with replacement.
+    pub fn sample<'a>(&'a self, n: usize, rng: &mut Pcg32) -> Vec<&'a Transition> {
+        assert!(!self.is_empty(), "sampling empty replay buffer");
+        (0..n).map(|_| &self.items[rng.index(self.items.len())]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: f32) -> Transition {
+        Transition {
+            state: vec![v],
+            action: 0,
+            reward: v,
+            next_state: vec![v + 1.0],
+            done: false,
+        }
+    }
+
+    #[test]
+    fn grows_until_capacity_then_overwrites() {
+        let mut buf = ReplayBuffer::new(3);
+        for i in 0..5 {
+            buf.push(t(i as f32));
+        }
+        assert_eq!(buf.len(), 3);
+        // 0 and 1 were overwritten by 3 and 4.
+        let rewards: Vec<f32> = buf.items.iter().map(|x| x.reward).collect();
+        assert!(rewards.contains(&2.0) && rewards.contains(&3.0) && rewards.contains(&4.0));
+    }
+
+    #[test]
+    fn sample_returns_requested_count() {
+        let mut buf = ReplayBuffer::new(8);
+        for i in 0..4 {
+            buf.push(t(i as f32));
+        }
+        let mut rng = Pcg32::new(0);
+        assert_eq!(buf.sample(16, &mut rng).len(), 16);
+    }
+
+    #[test]
+    #[should_panic]
+    fn sample_empty_panics() {
+        let buf = ReplayBuffer::new(4);
+        let mut rng = Pcg32::new(0);
+        let _ = buf.sample(1, &mut rng);
+    }
+
+    #[test]
+    fn sampling_covers_buffer() {
+        let mut buf = ReplayBuffer::new(16);
+        for i in 0..16 {
+            buf.push(t(i as f32));
+        }
+        let mut rng = Pcg32::new(1);
+        let seen: std::collections::BTreeSet<i32> =
+            buf.sample(400, &mut rng).iter().map(|t| t.reward as i32).collect();
+        assert!(seen.len() >= 14, "only {} distinct transitions sampled", seen.len());
+    }
+}

@@ -1,0 +1,61 @@
+//! PJRT CPU client wrapper: compile HLO text once, hand out
+//! [`LoadedModel`]s.
+
+use super::executable::LoadedModel;
+use super::registry::{ArtifactSpec, Registry};
+use anyhow::{Context, Result};
+
+/// One PJRT client plus the artifact registry. Not `Send` — construct
+/// and use on a single thread (see module docs).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub registry: Registry,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and open the registry at `dir`
+    /// (or the default location).
+    pub fn new(registry: Registry) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime { client, registry })
+    }
+
+    pub fn new_default() -> Result<Runtime> {
+        Runtime::new(Registry::open_default()?)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact by name.
+    pub fn load(&self, name: &str) -> Result<LoadedModel> {
+        let spec: ArtifactSpec = self.registry.get(name)?.clone();
+        let proto = xla::HloModuleProto::from_text_file(&spec.path)
+            .with_context(|| format!("parse HLO text {}", spec.path.display()))?;
+        let computation = xla::XlaComputation::from_proto(&proto);
+        let executable = self
+            .client
+            .compile(&computation)
+            .with_context(|| format!("PJRT compile '{name}'"))?;
+        Ok(LoadedModel::new(spec, executable))
+    }
+}
+
+// Tests that need a live PJRT client live in `rust/tests/` (integration)
+// because compiling artifacts requires `make artifacts` to have run.
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    #[test]
+    fn load_fails_cleanly_for_unknown_artifact() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this environment
+        }
+        let rt = Runtime::new(Registry::open(&dir).unwrap()).unwrap();
+        assert!(rt.load("does_not_exist").is_err());
+    }
+}

@@ -1,0 +1,21 @@
+//! PJRT runtime: load the AOT-compiled HLO-text artifacts produced by
+//! `make artifacts` and execute them from the L3 hot path.
+//!
+//! Python is *never* involved here — [`client::Runtime`] wraps the `xla`
+//! crate's PJRT CPU client, [`registry::Registry`] reads
+//! `artifacts/manifest.json` (written by `python/compile/aot.py`), and
+//! [`executable::LoadedModel`] validates shapes and converts between
+//! rust buffers and XLA literals.
+//!
+//! Threading note: the `xla` crate's types wrap raw PJRT pointers and
+//! are not `Send`; a [`client::Runtime`] must be created *and used* on
+//! one thread. The coordinator accommodates this by giving the XLA
+//! backend its own worker thread that constructs the runtime in-place.
+
+pub mod client;
+pub mod executable;
+pub mod registry;
+
+pub use client::Runtime;
+pub use executable::LoadedModel;
+pub use registry::{ArtifactSpec, Registry, TensorSpec};

@@ -1,0 +1,221 @@
+//! Artifact manifest: what `python/compile/aot.py` built, parsed from
+//! `artifacts/manifest.json` so the runtime can validate inputs before
+//! PJRT sees them (shape bugs surface as readable errors, not XLA
+//! aborts).
+
+use crate::util::serde::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Supported tensor dtypes on the artifact boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "float32" => Ok(Dtype::F32),
+            "int32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype '{other}'"),
+        }
+    }
+}
+
+/// One input or output tensor of an artifact.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT artifact: HLO file + typed I/O signature + build metadata.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// `meta.batch` from the manifest.
+    pub batch: usize,
+    /// `meta.model` tag (`mlp_fp32`, `mlp_spx`, `qnet_fp32`).
+    pub model: String,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Registry {
+    pub dir: PathBuf,
+    artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn parse_tensor(j: &Json, fallback_name: &str) -> Result<TensorSpec> {
+    let shape = j
+        .field("shape")?
+        .as_arr()?
+        .iter()
+        .map(|d| d.as_usize())
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = Dtype::parse(j.field("dtype")?.as_str()?)?;
+    let name = match j.field("name") {
+        Ok(n) => n.as_str()?.to_string(),
+        Err(_) => fallback_name.to_string(),
+    };
+    Ok(TensorSpec { name, shape, dtype })
+}
+
+impl Registry {
+    /// Load `dir/manifest.json`.
+    pub fn open(dir: &Path) -> Result<Registry> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("read {} (run `make artifacts`)", manifest_path.display()))?;
+        let json = Json::parse(&text).context("parse manifest.json")?;
+        let format = json.field("format")?.as_str()?;
+        if format != "hlo-text" {
+            bail!("unsupported artifact format '{format}'");
+        }
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in json.field("artifacts")?.as_obj()? {
+            let file = entry.field("file")?.as_str()?;
+            let inputs = entry
+                .field("inputs")?
+                .as_arr()?
+                .iter()
+                .enumerate()
+                .map(|(i, t)| parse_tensor(t, &format!("in{i}")))
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = entry
+                .field("outputs")?
+                .as_arr()?
+                .iter()
+                .enumerate()
+                .map(|(i, t)| parse_tensor(t, &format!("out{i}")))
+                .collect::<Result<Vec<_>>>()?;
+            let meta = entry.field("meta")?;
+            let spec = ArtifactSpec {
+                name: name.clone(),
+                path: dir.join(file),
+                inputs,
+                outputs,
+                batch: meta.field("batch")?.as_usize()?,
+                model: meta.field("model")?.as_str()?.to_string(),
+            };
+            if !spec.path.exists() {
+                bail!("manifest references missing file {}", spec.path.display());
+            }
+            artifacts.insert(name.clone(), spec);
+        }
+        Ok(Registry { dir: dir.to_path_buf(), artifacts })
+    }
+
+    /// Default location: `$EDGEMLP_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<Registry> {
+        let dir = std::env::var("EDGEMLP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Registry::open(Path::new(&dir))
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("unknown artifact '{name}' (have: {:?})", self.names()))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.artifacts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.artifacts.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fake_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("m.hlo.txt"), "HloModule fake").unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{
+              "format": "hlo-text",
+              "artifacts": {
+                "m_b2": {
+                  "file": "m.hlo.txt",
+                  "inputs": [
+                    {"name": "x", "shape": [2, 4], "dtype": "float32"},
+                    {"name": "codes", "shape": [2, 3, 4], "dtype": "int32"}
+                  ],
+                  "outputs": [{"shape": [2, 3], "dtype": "float32"}],
+                  "meta": {"model": "mlp_fp32", "batch": 2, "sizes": [4, 3]}
+                }
+              }
+            }"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join("edgemlp_registry_test");
+        write_fake_manifest(&dir);
+        let reg = Registry::open(&dir).unwrap();
+        assert_eq!(reg.len(), 1);
+        let spec = reg.get("m_b2").unwrap();
+        assert_eq!(spec.batch, 2);
+        assert_eq!(spec.inputs.len(), 2);
+        assert_eq!(spec.inputs[0].shape, vec![2, 4]);
+        assert_eq!(spec.inputs[1].dtype, Dtype::I32);
+        assert_eq!(spec.outputs[0].numel(), 6);
+    }
+
+    #[test]
+    fn unknown_artifact_is_error() {
+        let dir = std::env::temp_dir().join("edgemlp_registry_test2");
+        write_fake_manifest(&dir);
+        let reg = Registry::open(&dir).unwrap();
+        assert!(reg.get("nope").is_err());
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        let dir = std::env::temp_dir().join("edgemlp_registry_test3");
+        write_fake_manifest(&dir);
+        std::fs::remove_file(dir.join("m.hlo.txt")).unwrap();
+        assert!(Registry::open(&dir).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make() {
+        let err = Registry::open(Path::new("/nonexistent_artifacts")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        // When `make artifacts` has run, validate the real thing.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let reg = Registry::open(&dir).unwrap();
+            assert!(reg.get("mlp_fp32_b1").is_ok());
+            assert!(reg.get("mlp_spx_b64").is_ok());
+            assert_eq!(reg.get("qnet_fp32_b1").unwrap().inputs.len(), 7);
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! Minimal property-based testing driver (no `proptest` in the offline
+//! vendor set).
+//!
+//! [`property`] runs a closure over `n` PCG-seeded cases; on failure it
+//! reports the case index and the seed that reproduces it, so a failing
+//! property can be replayed with `Pcg32::new(seed)` in a unit test.
+//!
+//! ```no_run
+//! # // no_run: rustdoc test binaries miss the xla rpath in this image.
+//! use edgemlp::util::check::property;
+//! property("abs is non-negative", 256, |rng| {
+//!     let x = rng.range(-1e6, 1e6);
+//!     assert!(x.abs() >= 0.0);
+//! });
+//! ```
+
+use super::rng::Pcg32;
+
+/// Base seed; fixed so CI is deterministic. Override with the
+/// `EDGEMLP_CHECK_SEED` environment variable to explore other streams.
+fn base_seed() -> u64 {
+    std::env::var("EDGEMLP_CHECK_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xED6E_517u64)
+}
+
+/// Run `f` on `n` independently seeded RNGs. Panics (re-raising the
+/// inner panic) with the reproducing seed on the first failing case.
+pub fn property<F: Fn(&mut Pcg32) + std::panic::RefUnwindSafe>(name: &str, n: u32, f: F) {
+    let base = base_seed();
+    for case in 0..n {
+        let seed = base ^ ((case as u64) << 32) ^ case as u64;
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Pcg32::new(seed);
+            f(&mut rng);
+        });
+        if let Err(payload) = result {
+            eprintln!(
+                "property '{name}' failed at case {case}/{n} (replay: Pcg32::new({seed:#x}))"
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// Assert two f32 slices are elementwise close (absolute + relative).
+#[track_caller]
+pub fn assert_allclose(actual: &[f32], expected: &[f32], atol: f32, rtol: f32) {
+    assert_eq!(actual.len(), expected.len(), "length mismatch");
+    for (i, (&a, &e)) in actual.iter().zip(expected).enumerate() {
+        let tol = atol + rtol * e.abs();
+        assert!(
+            (a - e).abs() <= tol,
+            "index {i}: actual {a} vs expected {e} (|diff| {} > tol {tol})",
+            (a - e).abs()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn property_runs_all_cases() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        static COUNT: AtomicU32 = AtomicU32::new(0);
+        property("counts", 17, |_| {
+            COUNT.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(COUNT.load(Ordering::SeqCst), 17);
+    }
+
+    #[test]
+    #[should_panic]
+    fn property_propagates_failure() {
+        property("fails", 8, |rng| {
+            assert!(rng.uniform() < 0.5, "eventually exceeds 0.5");
+        });
+    }
+
+    #[test]
+    fn allclose_accepts_equal() {
+        assert_allclose(&[1.0, 2.0], &[1.0, 2.0], 0.0, 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn allclose_rejects_far() {
+        assert_allclose(&[1.0], &[2.0], 1e-3, 1e-3);
+    }
+}

@@ -1,0 +1,133 @@
+//! Tiny `--flag value` argument parser (no `clap` offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--key`, and a leading
+//! subcommand word. Unknown flags are an error so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: an optional subcommand plus string flags.
+#[derive(Debug, Default)]
+pub struct Args {
+    /// First non-flag token, if any (`edgemlp table1 --runs 5` → `table1`).
+    pub command: Option<String>,
+    flags: BTreeMap<String, String>,
+    /// Flag names the caller has consumed — used by [`Args::finish`].
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (typically `std::env::args().skip(1)`).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Self, String> {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (key, val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), v.to_string()),
+                    None => {
+                        // Value is the next token unless it is another flag.
+                        let takes_value =
+                            it.peek().map(|n| !n.starts_with("--")).unwrap_or(false);
+                        if takes_value {
+                            (stripped.to_string(), it.next().unwrap())
+                        } else {
+                            (stripped.to_string(), "true".to_string())
+                        }
+                    }
+                };
+                if args.flags.insert(key.clone(), val).is_some() {
+                    return Err(format!("duplicate flag --{key}"));
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                return Err(format!("unexpected positional argument '{tok}'"));
+            }
+        }
+        Ok(args)
+    }
+
+    /// String flag with default.
+    pub fn get(&self, key: &str, default: &str) -> String {
+        self.seen.borrow_mut().push(key.to_string());
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Typed flag with default; parse errors become `Err`.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.seen.borrow_mut().push(key.to_string());
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+        }
+    }
+
+    /// Boolean flag (present without value, or `--key true/false`).
+    pub fn get_bool(&self, key: &str) -> Result<bool, String> {
+        self.seen.borrow_mut().push(key.to_string());
+        match self.flags.get(key).map(String::as_str) {
+            None => Ok(false),
+            Some("true") | Some("1") => Ok(true),
+            Some("false") | Some("0") => Ok(false),
+            Some(v) => Err(format!("--{key}: expected boolean, got '{v}'")),
+        }
+    }
+
+    /// Error on any flag that no `get*` call consumed (typo protection).
+    pub fn finish(&self) -> Result<(), String> {
+        let seen = self.seen.borrow();
+        for key in self.flags.keys() {
+            if !seen.iter().any(|s| s == key) {
+                return Err(format!("unknown flag --{key}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["table1", "--runs", "5", "--batch=64", "--verbose"]);
+        assert_eq!(a.command.as_deref(), Some("table1"));
+        assert_eq!(a.get_parse("runs", 1u32).unwrap(), 5);
+        assert_eq!(a.get_parse("batch", 1u32).unwrap(), 64);
+        assert!(a.get_bool("verbose").unwrap());
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.command, None);
+        assert_eq!(a.get("model", "mlp"), "mlp");
+        assert_eq!(a.get_parse("epochs", 3u32).unwrap(), 3);
+    }
+
+    #[test]
+    fn duplicate_flag_rejected() {
+        assert!(Args::parse(["--x", "1", "--x", "2"].iter().map(|s| s.to_string())).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let a = parse(&["--oops", "1"]);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn negative_number_value() {
+        let a = parse(&["--lr", "-0.5"]);
+        assert_eq!(a.get_parse("lr", 0.0f64).unwrap(), -0.5);
+    }
+}

@@ -1,0 +1,184 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! PCG32 (O'Neill 2014, `pcg32_srandom_r`/`pcg32_random_r` reference
+//! implementation) seeded through SplitMix64. Every stochastic component
+//! in the repo (data synthesis, weight init, exploration, property tests)
+//! takes an explicit [`Pcg32`] so runs are reproducible from a single
+//! seed recorded in EXPERIMENTS.md.
+
+/// SplitMix64 step — used to expand a single u64 seed into PCG state.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// PCG32: 64-bit state, 32-bit XSH-RR output.
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    const MULT: u64 = 6_364_136_223_846_793_005;
+
+    /// Construct from a seed; the stream constant is derived from the
+    /// seed via SplitMix64 so distinct seeds give independent streams.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let initstate = splitmix64(&mut sm);
+        let initseq = splitmix64(&mut sm);
+        let mut rng = Pcg32 { state: 0, inc: (initseq << 1) | 1 };
+        rng.state = rng.state.wrapping_mul(Self::MULT).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add(initstate);
+        rng.state = rng.state.wrapping_mul(Self::MULT).wrapping_add(rng.inc);
+        rng
+    }
+
+    /// Derive an independent child stream (for parallel components).
+    pub fn fork(&mut self) -> Self {
+        let s = (self.next_u32() as u64) << 32 | self.next_u32() as u64;
+        Pcg32::new(s)
+    }
+
+    /// Next 32 uniformly random bits.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(Self::MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next 64 uniformly random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, 1)` with 32 bits of resolution.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        self.next_u32() as f64 * (1.0 / 4_294_967_296.0)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in `[0, n)` via Lemire's unbiased method.
+    pub fn below(&mut self, n: u32) -> u32 {
+        assert!(n > 0, "below(0)");
+        loop {
+            let x = self.next_u32();
+            let m = (x as u64).wrapping_mul(n as u64);
+            let l = m as u32;
+            if l >= n || l >= (n.wrapping_neg() % n) {
+                return (m >> 32) as u32;
+            }
+        }
+    }
+
+    /// Standard normal via Box–Muller (one value per call; simple > fast).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.uniform();
+            if u1 > 1e-12 {
+                let u2 = self.uniform();
+                return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u32 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample an index in `[0, len)` — convenience for usize containers.
+    pub fn index(&mut self, len: usize) -> usize {
+        assert!(len > 0 && len <= u32::MAX as usize);
+        self.below(len as u32) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Pcg32::new(42);
+        let mut b = Pcg32::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Pcg32::new(1);
+        let mut b = Pcg32::new(2);
+        let same = (0..32).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Pcg32::new(7);
+        for _ in 0..1000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Pcg32::new(9);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.below(10);
+            assert!(v < 10);
+            seen[v as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_mean_and_var_close() {
+        let mut r = Pcg32::new(11);
+        let xs: Vec<f64> = (0..20_000).map(|_| r.normal()).collect();
+        let m = crate::util::mean(&xs);
+        let s = crate::util::stddev(&xs);
+        assert!(m.abs() < 0.05, "mean {m}");
+        assert!((s - 1.0).abs() < 0.05, "std {s}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg32::new(13);
+        let mut v: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut a = Pcg32::new(5);
+        let mut c = a.fork();
+        let same = (0..32).filter(|_| a.next_u32() == c.next_u32()).count();
+        assert!(same < 4);
+    }
+}

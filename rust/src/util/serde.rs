@@ -1,0 +1,444 @@
+//! Versioned binary blob format for named f32 tensors ("EMLP" files),
+//! plus a minimal JSON value parser for the artifact manifest emitted by
+//! `python/compile/aot.py`.
+//!
+//! Blob layout (all little-endian):
+//!
+//! ```text
+//! magic "EMLP" | u32 version | u32 count |
+//!   count × [ u32 name_len | name bytes | u32 ndim | ndim × u64 dim | f32 data ]
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 4] = b"EMLP";
+const VERSION: u32 = 1;
+
+/// A named tensor: shape + row-major f32 data.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NamedTensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl NamedTensor {
+    pub fn new(name: impl Into<String>, shape: Vec<usize>, data: Vec<f32>) -> Self {
+        let t = NamedTensor { name: name.into(), shape, data };
+        assert_eq!(t.shape.iter().product::<usize>(), t.data.len(), "shape/data mismatch");
+        t
+    }
+}
+
+/// Write a set of tensors to `path`.
+pub fn save_tensors(path: &Path, tensors: &[NamedTensor]) -> Result<()> {
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for t in tensors {
+        buf.extend_from_slice(&(t.name.len() as u32).to_le_bytes());
+        buf.extend_from_slice(t.name.as_bytes());
+        buf.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
+        for &d in &t.shape {
+            buf.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        for &x in &t.data {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+/// Read a tensor set written by [`save_tensors`].
+pub fn load_tensors(path: &Path) -> Result<Vec<NamedTensor>> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?
+        .read_to_end(&mut bytes)?;
+    let mut cur = Cursor { bytes: &bytes, pos: 0 };
+    if cur.take(4)? != MAGIC {
+        bail!("bad magic (not an EMLP blob)");
+    }
+    let version = cur.u32()?;
+    if version != VERSION {
+        bail!("unsupported blob version {version}");
+    }
+    let count = cur.u32()? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = cur.u32()? as usize;
+        let name = String::from_utf8(cur.take(name_len)?.to_vec())
+            .context("tensor name not utf8")?;
+        let ndim = cur.u32()? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(cur.u64()? as usize);
+        }
+        let numel: usize = shape.iter().product();
+        let data = cur
+            .take(numel * 4)?
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        out.push(NamedTensor { name, shape, data });
+    }
+    if cur.pos != bytes.len() {
+        bail!("{} trailing bytes after last tensor", bytes.len() - cur.pos);
+    }
+    Ok(out)
+}
+
+/// Bounds-checked byte reader used by [`load_tensors`].
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.bytes.len() {
+            bail!("truncated blob at offset {} (+{n})", self.pos);
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Minimal JSON (parse-only; enough for aot.py's manifest).
+// ---------------------------------------------------------------------------
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn parse(text: &str) -> Result<Json> {
+        let mut p = JsonParser { bytes: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            bail!("trailing JSON content at byte {}", p.pos);
+        }
+        Ok(v)
+    }
+
+    pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Ok(m),
+            other => bail!("expected object, got {other:?}"),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(v) => Ok(v),
+            other => bail!("expected array, got {other:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            other => bail!("expected string, got {other:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Json::Num(n) => Ok(*n),
+            other => bail!("expected number, got {other:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let n = self.as_f64()?;
+        if n < 0.0 || n.fract() != 0.0 {
+            bail!("expected non-negative integer, got {n}");
+        }
+        Ok(n as usize)
+    }
+
+    /// `obj["key"]` with a path-aware error.
+    pub fn field(&self, key: &str) -> Result<&Json> {
+        self.as_obj()?
+            .get(key)
+            .with_context(|| format!("missing field '{key}'"))
+    }
+}
+
+struct JsonParser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> JsonParser<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn eat(&mut self, b: u8) -> Result<()> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            bail!("expected '{}' at byte {}", b as char, self.pos)
+        }
+    }
+
+    fn lit(&mut self, s: &str, v: Json) -> Result<Json> {
+        if self.bytes[self.pos..].starts_with(s.as_bytes()) {
+            self.pos += s.len();
+            Ok(v)
+        } else {
+            bail!("bad literal at byte {}", self.pos)
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b'[') => self.array(),
+            Some(b'{') => self.object(),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => bail!("unexpected {:?} at byte {}", other.map(|c| c as char), self.pos),
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => bail!("unterminated string"),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    let esc = self.peek().context("dangling escape")?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            if self.pos + 4 > self.bytes.len() {
+                                bail!("truncated \\u escape");
+                            }
+                            let hex = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])?;
+                            let cp = u32::from_str_radix(hex, 16).context("bad \\u escape")?;
+                            self.pos += 4;
+                            out.push(char::from_u32(cp).context("bad codepoint")?);
+                        }
+                        other => bail!("bad escape '\\{}'", other as char),
+                    }
+                }
+                Some(_) => {
+                    // Consume one UTF-8 scalar.
+                    let rest = std::str::from_utf8(&self.bytes[self.pos..])?;
+                    let ch = rest.chars().next().unwrap();
+                    out.push(ch);
+                    self.pos += ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos])?;
+        Ok(Json::Num(s.parse().with_context(|| format!("bad number '{s}'"))?))
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.eat(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.pos += 1;
+                }
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                other => bail!("expected ',' or ']', got {other:?}"),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.eat(b'{')?;
+        let mut map = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(map));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.eat(b':')?;
+            let val = self.value()?;
+            map.insert(key, val);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.pos += 1;
+                }
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(map));
+                }
+                other => bail!("expected ',' or '}}', got {other:?}"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn tensor_roundtrip() {
+        let dir = std::env::temp_dir().join("edgemlp_serde_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.emlp");
+        let tensors = vec![
+            NamedTensor::new("w1", vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+            NamedTensor::new("b1", vec![3], vec![-0.5, 0.0, 0.5]),
+            NamedTensor::new("scalar", vec![], vec![7.25]),
+        ];
+        save_tensors(&path, &tensors).unwrap();
+        let back = load_tensors(&path).unwrap();
+        assert_eq!(back, tensors);
+    }
+
+    #[test]
+    fn tensor_roundtrip_property() {
+        let dir = std::env::temp_dir().join("edgemlp_serde_prop");
+        std::fs::create_dir_all(&dir).unwrap();
+        crate::util::check::property("blob roundtrip", 24, |rng| {
+            let dir = std::env::temp_dir().join("edgemlp_serde_prop");
+            let path = dir.join(format!("t{}.emlp", rng.next_u32()));
+            let n = rng.index(4) + 1;
+            let tensors: Vec<NamedTensor> = (0..n)
+                .map(|i| {
+                    let rows = rng.index(5) + 1;
+                    let cols = rng.index(5) + 1;
+                    let data = (0..rows * cols).map(|_| rng.range(-10.0, 10.0) as f32).collect();
+                    NamedTensor::new(format!("t{i}"), vec![rows, cols], data)
+                })
+                .collect();
+            save_tensors(&path, &tensors).unwrap();
+            assert_eq!(load_tensors(&path).unwrap(), tensors);
+            let _ = std::fs::remove_file(&path);
+        });
+        // Silence unused warning for the rng-free helper.
+        let _ = Pcg32::new(0);
+    }
+
+    #[test]
+    fn truncated_blob_rejected() {
+        let dir = std::env::temp_dir().join("edgemlp_serde_trunc");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.emlp");
+        save_tensors(&path, &[NamedTensor::new("w", vec![4], vec![1.0; 4])]).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
+        assert!(load_tensors(&path).is_err());
+    }
+
+    #[test]
+    fn json_basic() {
+        let v = Json::parse(r#"{"a": [1, 2.5, -3e2], "b": "hi\n", "c": null, "d": true}"#)
+            .unwrap();
+        assert_eq!(v.field("b").unwrap().as_str().unwrap(), "hi\n");
+        let arr = v.field("a").unwrap().as_arr().unwrap();
+        assert_eq!(arr[2].as_f64().unwrap(), -300.0);
+        assert!(matches!(v.field("c").unwrap(), Json::Null));
+    }
+
+    #[test]
+    fn json_nested() {
+        let v = Json::parse(r#"{"m": {"shape": [64, 784], "batch": 64}}"#).unwrap();
+        let m = v.field("m").unwrap();
+        assert_eq!(m.field("batch").unwrap().as_usize().unwrap(), 64);
+        assert_eq!(m.field("shape").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn json_rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("{\"a\":1} x").is_err());
+        assert!(Json::parse("nul").is_err());
+    }
+
+    #[test]
+    fn json_unicode_escape() {
+        let v = Json::parse(r#""Aé""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "Aé");
+    }
+}

@@ -1,0 +1,164 @@
+//! Integration: rust runtime ⇄ real AOT artifacts (requires
+//! `make artifacts`). Every test is skipped gracefully when the
+//! artifacts are absent so `cargo test` works pre-build, but the CI
+//! flow (`make test`) always exercises them.
+
+use edgemlp::fpga::accelerator::QuantizedMlp;
+use edgemlp::nn::mlp::{Mlp, MlpConfig};
+use edgemlp::nn::tensor::Matrix;
+use edgemlp::quant::spx::SpxConfig;
+use edgemlp::quant::Calibration;
+use edgemlp::runtime::executable::{mlp_fp32_inputs, mlp_spx_inputs, qnet_inputs};
+use edgemlp::runtime::{Registry, Runtime};
+use edgemlp::util::check::assert_allclose;
+use edgemlp::util::rng::Pcg32;
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+fn runtime(dir: &Path) -> Runtime {
+    Runtime::new(Registry::open(dir).unwrap()).unwrap()
+}
+
+fn mnist_mlp(seed: u64) -> Mlp {
+    let mut rng = Pcg32::new(seed);
+    Mlp::new(MlpConfig::paper_mnist(), &mut rng)
+}
+
+#[test]
+fn all_artifacts_compile() {
+    let dir = require_artifacts!();
+    let rt = runtime(&dir);
+    for name in ["mlp_fp32_b1", "mlp_fp32_b64", "mlp_spx_b1", "mlp_spx_b64", "qnet_fp32_b1"] {
+        let model = rt.load(name).unwrap_or_else(|e| panic!("load {name}: {e:#}"));
+        assert_eq!(model.spec.name, name);
+    }
+}
+
+#[test]
+fn fp32_artifact_matches_rust_forward_b1() {
+    let dir = require_artifacts!();
+    let rt = runtime(&dir);
+    let model = rt.load("mlp_fp32_b1").unwrap();
+    let mlp = mnist_mlp(1);
+    let mut rng = Pcg32::new(2);
+    for _ in 0..4 {
+        let x: Vec<f32> = (0..784).map(|_| rng.uniform() as f32).collect();
+        let out = model.run(&mlp_fp32_inputs(&mlp, &x)).unwrap();
+        let expect = mlp.forward_one(&x);
+        assert_allclose(&out, &expect, 1e-5, 1e-4);
+    }
+}
+
+#[test]
+fn fp32_artifact_matches_rust_forward_b64() {
+    let dir = require_artifacts!();
+    let rt = runtime(&dir);
+    let model = rt.load("mlp_fp32_b64").unwrap();
+    let mlp = mnist_mlp(3);
+    let mut rng = Pcg32::new(4);
+    let x = Matrix::random_uniform(64, 784, 0.5, &mut rng);
+    let out = model.run(&mlp_fp32_inputs(&mlp, &x.data)).unwrap();
+    let expect = mlp.forward(&x);
+    assert_eq!(out.len(), 64 * 10);
+    assert_allclose(&out, &expect.data, 1e-5, 1e-4);
+}
+
+#[test]
+fn spx_artifact_matches_dequantized_forward() {
+    let dir = require_artifacts!();
+    let rt = runtime(&dir);
+    let model = rt.load("mlp_spx_b1").unwrap();
+    let mlp = mnist_mlp(5);
+    // The artifact is built for SP2 (x = 2) — see aot.py SPX_TERMS.
+    let q = QuantizedMlp::from_mlp(&mlp, &SpxConfig::sp2(5), Calibration::MaxAbs, None);
+    let deq = q.to_dequantized_mlp(&mlp);
+    let mut rng = Pcg32::new(6);
+    for _ in 0..4 {
+        let x: Vec<f32> = (0..784).map(|_| rng.uniform() as f32).collect();
+        let out = model.run(&mlp_spx_inputs(&q, &x)).unwrap();
+        // The artifact decodes the SPx codes inside the Pallas kernel;
+        // the rust dequantized forward is the oracle.
+        let expect = deq.forward_one(&x);
+        assert_allclose(&out, &expect, 1e-4, 1e-3);
+    }
+}
+
+#[test]
+fn spx_artifact_b64_batches_correctly() {
+    let dir = require_artifacts!();
+    let rt = runtime(&dir);
+    let model = rt.load("mlp_spx_b64").unwrap();
+    let mlp = mnist_mlp(7);
+    let q = QuantizedMlp::from_mlp(&mlp, &SpxConfig::sp2(5), Calibration::MaxAbs, None);
+    let deq = q.to_dequantized_mlp(&mlp);
+    let mut rng = Pcg32::new(8);
+    let x = Matrix::random_uniform(64, 784, 0.5, &mut rng);
+    let out = model.run(&mlp_spx_inputs(&q, &x.data)).unwrap();
+    let expect = deq.forward(&x);
+    assert_allclose(&out, &expect.data, 1e-4, 1e-3);
+}
+
+#[test]
+fn qnet_artifact_matches_rust_forward() {
+    let dir = require_artifacts!();
+    let rt = runtime(&dir);
+    let model = rt.load("qnet_fp32_b1").unwrap();
+    let mut rng = Pcg32::new(9);
+    let qnet = Mlp::new(MlpConfig::paper_qnet(), &mut rng);
+    for _ in 0..4 {
+        let obs: Vec<f32> = (0..6).map(|_| rng.range(-1.0, 1.0) as f32).collect();
+        let out = model.run(&qnet_inputs(&qnet, &obs)).unwrap();
+        let expect = qnet.forward_one(&obs);
+        assert_allclose(&out, &expect, 1e-5, 1e-4);
+    }
+}
+
+#[test]
+fn shape_validation_rejects_bad_inputs() {
+    let dir = require_artifacts!();
+    let rt = runtime(&dir);
+    let model = rt.load("mlp_fp32_b1").unwrap();
+    let mlp = mnist_mlp(10);
+    // Wrong number of inputs.
+    assert!(model.run(&[]).is_err());
+    // Wrong element count in x.
+    let mut inputs = mlp_fp32_inputs(&mlp, &vec![0.0f32; 10]);
+    assert!(model.run(&inputs).is_err());
+    // Wrong dtype (i32 where f32 expected).
+    inputs = mlp_fp32_inputs(&mlp, &vec![0.0f32; 784]);
+    inputs[0] = edgemlp::runtime::executable::InputValue::I32(vec![0; 784]);
+    assert!(model.run(&inputs).is_err());
+}
+
+#[test]
+fn artifact_is_weight_agnostic() {
+    // One artifact, two different checkpoints — weights are runtime
+    // inputs, so outputs must track the weights.
+    let dir = require_artifacts!();
+    let rt = runtime(&dir);
+    let model = rt.load("mlp_fp32_b1").unwrap();
+    let mlp_a = mnist_mlp(11);
+    let mlp_b = mnist_mlp(12);
+    let x: Vec<f32> = vec![0.5; 784];
+    let out_a = model.run(&mlp_fp32_inputs(&mlp_a, &x)).unwrap();
+    let out_b = model.run(&mlp_fp32_inputs(&mlp_b, &x)).unwrap();
+    assert_ne!(out_a, out_b);
+    assert_allclose(&out_a, &mlp_a.forward_one(&x), 1e-5, 1e-4);
+    assert_allclose(&out_b, &mlp_b.forward_one(&x), 1e-5, 1e-4);
+}

@@ -1,0 +1,146 @@
+//! Integration: the full serving stack — coordinator + all three
+//! backends (CPU, FPGA-sim, XLA/PJRT) over real artifacts — agreeing on
+//! classifications for the same trained model.
+
+use edgemlp::coordinator::backend::{Backend, CpuBackend, FnBackend, FpgaBackend};
+use edgemlp::coordinator::batcher::BatchPolicy;
+use edgemlp::coordinator::server::{BackendFactory, Coordinator, CoordinatorConfig};
+use edgemlp::data::load_digits;
+use edgemlp::fpga::accelerator::{AccelConfig, Accelerator, QuantizedMlp};
+use edgemlp::nn::mlp::{argmax, Mlp, MlpConfig};
+use edgemlp::nn::train::{train, TrainConfig};
+use edgemlp::quant::spx::SpxConfig;
+use edgemlp::quant::Calibration;
+use edgemlp::runtime::executable::mlp_fp32_inputs;
+use edgemlp::runtime::{Registry, Runtime};
+use edgemlp::util::rng::Pcg32;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+/// Quickly trained model shared by the tests in this file.
+fn trained() -> (Mlp, edgemlp::data::Dataset) {
+    let (train_set, test_set) = load_digits(1500, 200, 77);
+    let mut rng = Pcg32::new(1);
+    let mut mlp = Mlp::new(MlpConfig::paper_mnist(), &mut rng);
+    let _ = train(
+        &mut mlp,
+        &train_set.inputs,
+        &train_set.labels,
+        &TrainConfig { epochs: 4, ..Default::default() },
+    );
+    (mlp, test_set)
+}
+
+#[test]
+fn three_backends_agree_through_coordinator() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let (mlp, test_set) = trained();
+
+    let cpu_mlp = mlp.clone();
+    let cpu_factory: BackendFactory =
+        Box::new(move || Ok(Box::new(CpuBackend::new(cpu_mlp)) as Box<dyn Backend>));
+
+    let q = QuantizedMlp::from_mlp(&mlp, &SpxConfig::spx(8, 2), Calibration::MaxAbs, None);
+    let fpga_factory: BackendFactory = Box::new(move || {
+        Ok(Box::new(FpgaBackend::new(Accelerator::new(q, AccelConfig::default_fpga())))
+            as Box<dyn Backend>)
+    });
+
+    // XLA backend: construct the non-Send runtime inside the worker.
+    let xla_mlp = mlp.clone();
+    let xla_factory: BackendFactory = Box::new(move || {
+        let rt = Runtime::new(Registry::open(&dir)?)?;
+        let model = rt.load("mlp_fp32_b1")?;
+        Ok(Box::new(FnBackend::new("xla", 1, move |inputs: &[Vec<f32>]| {
+            // _rt must stay alive as long as the model: keep both in the
+            // closure's environment.
+            let _keep_alive = &rt;
+            let mut out = Vec::with_capacity(inputs.len());
+            for x in inputs {
+                out.push(model.run(&mlp_fp32_inputs(&xla_mlp, x))?);
+            }
+            Ok(out)
+        })) as Box<dyn Backend>)
+    });
+
+    let coord = Coordinator::start(
+        vec![
+            ("cpu".into(), cpu_factory),
+            ("fpga".into(), fpga_factory),
+            ("xla".into(), xla_factory),
+        ],
+        CoordinatorConfig {
+            queue_capacity: 64,
+            policy: BatchPolicy::windowed(16, Duration::from_millis(1)),
+        },
+    )
+    .unwrap();
+
+    let n = 24;
+    let mut agreements = 0usize;
+    for i in 0..n {
+        let x = test_set.inputs.row(i).to_vec();
+        let mut preds = Vec::new();
+        for backend in ["cpu", "fpga", "xla"] {
+            let idx = coord.backend_index(backend).unwrap();
+            let rx = coord.submit_to(idx, x.clone()).unwrap();
+            let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap().unwrap();
+            assert_eq!(resp.output.len(), 10, "{backend} output size");
+            preds.push(argmax(&resp.output));
+        }
+        // CPU and XLA compute the identical fp32 function.
+        assert_eq!(preds[0], preds[2], "cpu vs xla disagree on sample {i}");
+        if preds[0] == preds[1] {
+            agreements += 1;
+        }
+    }
+    // The 8-bit SPx accelerator should agree with fp32 on the vast
+    // majority of samples.
+    assert!(agreements * 10 >= n * 8, "fpga agreed on only {agreements}/{n}");
+
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.backends.len(), 3);
+    assert_eq!(snap.backends["xla"].requests, n as u64);
+    // FPGA backend reported simulator cycles.
+    assert!(snap.backends["fpga"].cycle_stats.compute_cycles > 0);
+    coord.shutdown();
+}
+
+#[test]
+fn coordinator_survives_mixed_load_with_real_xla() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let (mlp, test_set) = trained();
+    let xla_mlp = mlp.clone();
+    let xla_factory: BackendFactory = Box::new(move || {
+        let rt = Runtime::new(Registry::open(&dir)?)?;
+        let model = rt.load("mlp_fp32_b1")?;
+        Ok(Box::new(FnBackend::new("xla", 1, move |inputs: &[Vec<f32>]| {
+            let _keep_alive = &rt;
+            inputs.iter().map(|x| model.run(&mlp_fp32_inputs(&xla_mlp, x))).collect()
+        })) as Box<dyn Backend>)
+    });
+    let coord = Coordinator::start(
+        vec![("xla".into(), xla_factory)],
+        CoordinatorConfig { queue_capacity: 128, policy: BatchPolicy::immediate(1) },
+    )
+    .unwrap();
+    let receivers: Vec<_> = (0..40)
+        .map(|i| coord.submit(test_set.inputs.row(i % test_set.len()).to_vec()).unwrap())
+        .collect();
+    for rx in receivers {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap().unwrap();
+        assert_eq!(resp.output.len(), 10);
+    }
+    coord.shutdown();
+}

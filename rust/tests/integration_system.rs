@@ -1,0 +1,186 @@
+//! Cross-module integration tests that need no PJRT artifacts: the
+//! quantize → simulate → verify path, failure injection, and
+//! end-to-end invariants across substrates.
+
+use edgemlp::coordinator::backend::{Backend, FnBackend};
+use edgemlp::coordinator::batcher::BatchPolicy;
+use edgemlp::coordinator::server::{BackendFactory, Coordinator, CoordinatorConfig};
+use edgemlp::data::load_digits;
+use edgemlp::fpga::accelerator::{AccelConfig, Accelerator, QuantizedMlp};
+use edgemlp::fpga::clock::ClockConfig;
+use edgemlp::fpga::pipeline::PipelineConfig;
+use edgemlp::fpga::verilog::{emit_design, VerilogConfig};
+use edgemlp::nn::metrics::accuracy;
+use edgemlp::nn::mlp::{Mlp, MlpConfig};
+use edgemlp::nn::train::{train, TrainConfig};
+use edgemlp::quant::spx::{SpxConfig, SpxTensor};
+use edgemlp::quant::Calibration;
+use edgemlp::util::check::assert_allclose;
+use edgemlp::util::rng::Pcg32;
+use std::time::Duration;
+
+/// Full codesign loop: train → quantize → run on the simulator →
+/// accuracy within a few points of fp32 at b=8.
+#[test]
+fn trained_model_survives_quantized_hardware_path() {
+    let (train_set, test_set) = load_digits(1500, 300, 11);
+    let mut rng = Pcg32::new(5);
+    let mut mlp = Mlp::new(MlpConfig::paper_mnist(), &mut rng);
+    let _ = train(
+        &mut mlp,
+        &train_set.inputs,
+        &train_set.labels,
+        &TrainConfig { epochs: 6, ..Default::default() },
+    );
+    let fp32 = accuracy(&mlp, &test_set.inputs, &test_set.labels);
+    let q = QuantizedMlp::from_mlp(&mlp, &SpxConfig::spx(8, 2), Calibration::MaxAbs, None);
+    let accel = Accelerator::new(q, AccelConfig::default_fpga());
+    let mut correct = 0;
+    let n = 150;
+    for i in 0..n {
+        let (pred, _) = accel.classify_one(test_set.inputs.row(i));
+        if pred == test_set.labels[i] {
+            correct += 1;
+        }
+    }
+    let hw = correct as f64 / n as f64;
+    assert!(
+        hw > fp32 - 0.05,
+        "hardware path accuracy {hw} fell more than 5 points below fp32 {fp32}"
+    );
+}
+
+/// The ReLU Q-network also runs on the accelerator (identity output,
+/// negative activations — exercises d_scale calibration).
+#[test]
+fn qnet_runs_on_accelerator_with_calibration() {
+    let mut rng = Pcg32::new(9);
+    let qnet = Mlp::new(MlpConfig::paper_qnet(), &mut rng);
+    // Calibration batch spanning acrobot-like ranges.
+    let mut calib = edgemlp::nn::tensor::Matrix::zeros(32, 6);
+    for r in 0..32 {
+        for c in 0..6 {
+            let range = if c < 4 { 1.0 } else { 12.0 };
+            *calib.at_mut(r, c) = rng.range(-range, range) as f32;
+        }
+    }
+    let q = QuantizedMlp::from_mlp(&qnet, &SpxConfig::spx(8, 2), Calibration::MaxAbs, Some(&calib));
+    assert!(q.layers[0].d_scale > 1.0, "input layer must see the velocity range");
+    let accel = Accelerator::new(q, AccelConfig::default_fpga());
+    for _ in 0..8 {
+        let obs: Vec<f32> = (0..6)
+            .map(|c| {
+                let range = if c < 4 { 1.0 } else { 10.0 };
+                rng.range(-range, range) as f32
+            })
+            .collect();
+        let (hw, _) = accel.infer_one(&obs);
+        let sw = qnet.forward_one(&obs);
+        // b=8 quantization + fixed point: coarse agreement is enough to
+        // preserve argmax most of the time; check magnitudes track.
+        assert_eq!(hw.len(), 3);
+        assert_allclose(&hw, &sw, 0.5, 0.5);
+    }
+}
+
+/// Streaming vs resident schedules compute identical numbers (only the
+/// timing model differs).
+#[test]
+fn schedules_agree_numerically() {
+    let mut rng = Pcg32::new(3);
+    let wdata: Vec<f32> = (0..64 * 96).map(|_| rng.normal() as f32 * 0.3).collect();
+    let w = SpxTensor::encode(&SpxConfig::sp2(6), &wdata, &[64, 96], Calibration::MaxAbs);
+    let d: Vec<f32> = (0..96).map(|_| rng.uniform() as f32).collect();
+    let resident = edgemlp::fpga::pipeline::run_matvec(&w, &d, 1.0, &PipelineConfig::default_fpga());
+    let streaming = edgemlp::fpga::pipeline::run_matvec(&w, &d, 1.0, &PipelineConfig::streaming());
+    assert_eq!(resident.outputs, streaming.outputs);
+    // Resident schedule must be faster and touch less RAM.
+    assert!(resident.stats.compute_cycles < streaming.stats.compute_cycles);
+    assert!(resident.stats.ram_reads < streaming.stats.ram_reads);
+}
+
+/// Verilog emission stays multiplier-free for every supported config.
+#[test]
+fn verilog_multiplier_free_across_configs() {
+    for (b, x) in [(3u32, 1u32), (5, 2), (7, 3), (9, 4)] {
+        let cfg = VerilogConfig { spx: SpxConfig::spx(b, x), ..VerilogConfig::default_design() };
+        let design = emit_design(&cfg);
+        for line in design.lines() {
+            assert!(!line.contains(" * "), "multiplier in (b={b},x={x}): {line}");
+        }
+        assert_eq!(design.matches(">>>").count(), x as usize, "b={b} x={x}");
+    }
+}
+
+/// Coordinator drop (without explicit shutdown) joins workers and does
+/// not hang or leak panics.
+#[test]
+fn coordinator_drop_is_clean() {
+    let echo: (String, BackendFactory) = (
+        "echo".into(),
+        Box::new(|| {
+            Ok(Box::new(FnBackend::new("echo", 8, |inputs: &[Vec<f32>]| {
+                Ok(inputs.to_vec())
+            })) as Box<dyn Backend>)
+        }),
+    );
+    let coord = Coordinator::start(
+        vec![echo],
+        CoordinatorConfig { queue_capacity: 16, policy: BatchPolicy::immediate(8) },
+    )
+    .unwrap();
+    let rx = coord.submit(vec![1.0]).unwrap();
+    let _ = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+    drop(coord); // must join workers, not deadlock
+}
+
+/// Degenerate-but-legal configurations don't panic anywhere in the
+/// simulator (failure injection on the config surface).
+#[test]
+fn simulator_handles_degenerate_configs() {
+    let mut rng = Pcg32::new(1);
+    let wdata: Vec<f32> = (0..4).map(|_| rng.normal() as f32).collect();
+    let w = SpxTensor::encode(&SpxConfig::spx(3, 1), &wdata, &[2, 2], Calibration::MaxAbs);
+    let d = vec![0.5f32, -0.5];
+    for cfg in [
+        PipelineConfig {
+            clocks: ClockConfig { clk_inbuff_mhz: 0.001, clk_compute_mhz: 1000.0, bandwidth_words: 1 },
+            num_pus: 1,
+            buffer_capacity_rows: 1,
+            pipeline_depth: 0,
+            lanes: 1,
+            weight_resident: false,
+        },
+        PipelineConfig {
+            clocks: ClockConfig { clk_inbuff_mhz: 1e6, clk_compute_mhz: 0.001, bandwidth_words: 4096 },
+            num_pus: 64,
+            buffer_capacity_rows: 4096,
+            pipeline_depth: 100,
+            lanes: 64,
+            weight_resident: true,
+        },
+    ] {
+        let run = edgemlp::fpga::pipeline::run_matvec(&w, &d, 1.0, &cfg);
+        assert_eq!(run.outputs.len(), 2);
+        assert!(run.stats.compute_cycles > 0);
+    }
+}
+
+/// All-zero weights (alpha = 0) flow through the whole accelerator.
+#[test]
+fn zero_model_is_well_defined() {
+    let mut rng = Pcg32::new(2);
+    let mut mlp = Mlp::new(
+        MlpConfig { sizes: vec![4, 3, 2], activations: MlpConfig::paper_mnist().activations },
+        &mut rng,
+    );
+    for layer in &mut mlp.layers {
+        layer.w.data.iter_mut().for_each(|w| *w = 0.0);
+        layer.b.iter_mut().for_each(|b| *b = 0.0);
+    }
+    let q = QuantizedMlp::from_mlp(&mlp, &SpxConfig::sp2(4), Calibration::MaxAbs, None);
+    let accel = Accelerator::new(q, AccelConfig::default_fpga());
+    let (out, _) = accel.infer_one(&[1.0, 1.0, 1.0, 1.0]);
+    // σ(0) = 0.5 everywhere.
+    assert_allclose(&out, &[0.5, 0.5], 1e-3, 1e-3);
+}
