@@ -22,11 +22,19 @@ fn main() {
     for i in 0..n { std::hint::black_box(accel.infer_one(test.inputs.row(i % test.len()))); }
     let dt = t0.elapsed().as_secs_f64();
     println!("fpga-sim: {:.1} samples/s host ({:.3} ms/sample)", n as f64 / dt, dt / n as f64 * 1e3);
-    // 2. CPU batched forward
-    let x = edgemlp::data::batch::gather(&test.inputs, &(0..64).collect::<Vec<_>>());
+    // 1b. batched SPx shift-add kernel (weight-stationary) at batch 64
+    let xb = edgemlp::data::batch::gather(&test.inputs, &(0..64).collect::<Vec<_>>());
+    for _ in 0..3 { let _ = accel.forward_batch(&xb); }
+    let t0 = Instant::now();
+    let bit = 50;
+    for _ in 0..bit { std::hint::black_box(accel.forward_batch(&xb)); }
+    let dt = t0.elapsed().as_secs_f64();
+    println!("spx batch64: {:.1} samples/s host ({:.3} ms/batch)", bit as f64 * 64.0 / dt, dt / bit as f64 * 1e3);
+    // 2. CPU batched forward (blocked GEMM through reusable scratch)
+    let mut scratch = edgemlp::nn::mlp::ForwardScratch::new();
     let t0 = Instant::now();
     let iters = 200;
-    for _ in 0..iters { std::hint::black_box(mlp.forward(&x)); }
+    for _ in 0..iters { std::hint::black_box(mlp.forward_with(&xb, &mut scratch).data[0]); }
     let dt = t0.elapsed().as_secs_f64();
     println!("cpu fwd b64: {:.3} ms/batch = {:.2} us/sample", dt / iters as f64 * 1e3, dt / iters as f64 / 64.0 * 1e6);
     // 3. single-sample cpu

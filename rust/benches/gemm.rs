@@ -1,0 +1,98 @@
+//! Bench: the blocked GEMM vs the seed single-pass baseline at the
+//! Table-I layer shapes, plus the batched SPx serving kernel vs the
+//! per-sample stream path. Emits `BENCH_gemm.json` (override the path
+//! with `EDGEMLP_BENCH_JSON`) so future PRs have a perf trajectory.
+//! `cargo bench --bench gemm` — see EXPERIMENTS.md §Perf.
+
+use edgemlp::bench_harness::{bench, fmt_time, BenchConfig, BenchJson, Table};
+use edgemlp::fpga::accelerator::{AccelConfig, Accelerator, QuantizedMlp};
+use edgemlp::nn::mlp::{Mlp, MlpConfig};
+use edgemlp::nn::tensor::Matrix;
+use edgemlp::quant::spx::SpxConfig;
+use edgemlp::quant::Calibration;
+use edgemlp::util::rng::Pcg32;
+use std::hint::black_box;
+use std::path::Path;
+
+fn gflops(m: usize, k: usize, n: usize, secs: f64) -> f64 {
+    if secs > 0.0 {
+        2.0 * m as f64 * k as f64 * n as f64 / secs / 1e9
+    } else {
+        f64::INFINITY
+    }
+}
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let mut rng = Pcg32::new(7);
+    let mut json = BenchJson::new();
+    let mut table = Table::new(&["kernel", "shape", "mean", "GFLOP/s", "vs seed"]);
+
+    // The forward pass computes A·Bᵀ with A = batch×in activations and
+    // B = out×in weights; these are the shapes Table I exercises.
+    // (m, k, n) = (batch, fan_in, fan_out).
+    for &(m, k, n) in &[(256usize, 784usize, 128usize), (64, 784, 128), (64, 128, 10)] {
+        let a = Matrix::random_uniform(m, k, 1.0, &mut rng);
+        let b = Matrix::random_uniform(n, k, 1.0, &mut rng);
+        let shape = format!("{m}x{k}.{k}x{n}");
+        let blocked = bench(&format!("gemm {shape}"), cfg, || a.matmul_bt(&b));
+        let seed = bench(&format!("seed {shape}"), cfg, || a.matmul_bt_unblocked(&b));
+        let (gb, gs) = (gflops(m, k, n, blocked.mean_s()), gflops(m, k, n, seed.mean_s()));
+        let speedup = seed.mean_s() / blocked.mean_s();
+        table.row(&[
+            "blocked gemm".into(),
+            shape.clone(),
+            fmt_time(blocked.mean_s()),
+            format!("{gb:.2}"),
+            format!("{speedup:.2}x"),
+        ]);
+        table.row(&[
+            "seed matmul_bt".into(),
+            shape.clone(),
+            fmt_time(seed.mean_s()),
+            format!("{gs:.2}"),
+            "1.00x".into(),
+        ]);
+        json.num(&format!("gemm_bt_{shape}_gflops"), gb);
+        json.num(&format!("seed_bt_{shape}_gflops"), gs);
+        json.num(&format!("gemm_bt_{shape}_speedup"), speedup);
+    }
+
+    // Batched SPx serving kernel at the paper's network, batch 64.
+    let mlp = Mlp::new(MlpConfig::paper_mnist(), &mut rng);
+    let q = QuantizedMlp::from_mlp(&mlp, &SpxConfig::sp2(5), Calibration::MaxAbs, None);
+    let accel = Accelerator::new(q, AccelConfig::default_fpga());
+    let x = Matrix::random_uniform(64, 784, 0.5, &mut rng);
+    let batched = bench("spx forward_batch b64", cfg, || accel.forward_batch(&x));
+    let streamed = bench("spx infer_one x64", cfg, || {
+        for r in 0..x.rows {
+            black_box(accel.infer_one(x.row(r)));
+        }
+    });
+    let batch_sps = 64.0 / batched.mean_s();
+    let stream_sps = 64.0 / streamed.mean_s();
+    table.row(&[
+        "spx batch64".into(),
+        "784-128-10".into(),
+        fmt_time(batched.mean_s()),
+        format!("{batch_sps:.0}/s"),
+        format!("{:.2}x", batch_sps / stream_sps),
+    ]);
+    table.row(&[
+        "spx per-sample".into(),
+        "784-128-10".into(),
+        fmt_time(streamed.mean_s()),
+        format!("{stream_sps:.0}/s"),
+        "1.00x".into(),
+    ]);
+    json.num("spx_batch64_samples_per_s", batch_sps);
+    json.num("spx_per_sample_samples_per_s", stream_sps);
+    json.num("spx_batch_speedup", batch_sps / stream_sps);
+
+    println!("\n=== GEMM + batched-SPx kernel bench (EXPERIMENTS.md §Perf) ===\n");
+    table.print();
+
+    let path = std::env::var("EDGEMLP_BENCH_JSON").unwrap_or_else(|_| "BENCH_gemm.json".into());
+    json.write(Path::new(&path)).expect("write bench json");
+    println!("\nwrote {path}");
+}

@@ -95,6 +95,65 @@ pub fn fmt_time(s: f64) -> String {
     }
 }
 
+/// Escape a string for a JSON string literal (RFC 8259 — note Rust's
+/// `escape_default` is NOT JSON: it emits `\'` and `\u{…}`).
+fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Minimal flat JSON-object writer for the `BENCH_*.json`
+/// perf-trajectory files (EXPERIMENTS.md §Perf) — no serde in the
+/// offline vendor set. Keys keep insertion order; values are finite
+/// numbers (non-finite renders as `null`) or strings.
+#[derive(Debug, Default)]
+pub struct BenchJson {
+    fields: Vec<(String, String)>,
+}
+
+impl BenchJson {
+    pub fn new() -> Self {
+        BenchJson::default()
+    }
+
+    pub fn num(&mut self, key: &str, value: f64) -> &mut Self {
+        let rendered = if value.is_finite() { format!("{value}") } else { "null".into() };
+        self.fields.push((key.to_string(), rendered));
+        self
+    }
+
+    pub fn text(&mut self, key: &str, value: &str) -> &mut Self {
+        self.fields.push((key.to_string(), format!("\"{}\"", escape_json(value))));
+        self
+    }
+
+    /// Render the object (pretty-printed, trailing newline).
+    pub fn render(&self) -> String {
+        let body = self
+            .fields
+            .iter()
+            .map(|(k, v)| format!("  \"{}\": {v}", escape_json(k)))
+            .collect::<Vec<_>>()
+            .join(",\n");
+        format!("{{\n{body}\n}}\n")
+    }
+
+    pub fn write(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.render())
+    }
+}
+
 /// An aligned text table writer for bench reports (also understood by
 /// EXPERIMENTS.md — the benches print markdown tables).
 pub struct Table {
@@ -171,6 +230,37 @@ mod tests {
         assert_eq!(fmt_time(2.5e-3), "2.500 ms");
         assert_eq!(fmt_time(2.5e-6), "2.500 µs");
         assert_eq!(fmt_time(3e-9), "3.0 ns");
+    }
+
+    #[test]
+    fn bench_json_renders_valid_flat_object() {
+        let mut j = BenchJson::new();
+        j.num("gflops", 12.5).num("bad", f64::NAN).text("host", "ci");
+        let s = j.render();
+        assert_eq!(s, "{\n  \"gflops\": 12.5,\n  \"bad\": null,\n  \"host\": \"ci\"\n}\n");
+    }
+
+    #[test]
+    fn bench_json_escapes_are_valid_json() {
+        let mut j = BenchJson::new();
+        j.text("quote\"key", "bob's \"mac\"\nline2\ttab é");
+        let s = j.render();
+        // JSON-legal escapes only: no \' and no rust-style \u{..}.
+        assert_eq!(
+            s,
+            "{\n  \"quote\\\"key\": \"bob's \\\"mac\\\"\\nline2\\ttab é\"\n}\n"
+        );
+        assert!(!s.contains("\\'"));
+        assert!(!s.contains("\\u{"));
+    }
+
+    #[test]
+    fn bench_json_write_round_trips() {
+        let path = std::env::temp_dir().join("edgemlp_bench_json_test.json");
+        let mut j = BenchJson::new();
+        j.num("x", 1.0);
+        j.write(&path).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), j.render());
     }
 
     #[test]

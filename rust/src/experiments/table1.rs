@@ -47,11 +47,14 @@ pub fn run(scale: ExperimentScale, with_xla: bool) -> Result<Table1> {
     let platform = PlatformPower::paper_measured();
     let mut rows = Vec::new();
 
-    // --- CPU row: batched rust forward (batch 64, per §4.4.A). ---
+    // --- CPU row: batched rust forward (batch 64, per §4.4.A) through
+    // the blocked GEMM + reusable scratch, so the row measures the
+    // kernel rather than allocator churn (EXPERIMENTS.md §Perf). ---
     let batch = 64.min(setup.test_set.len());
     let idx: Vec<usize> = (0..batch).collect();
     let x64 = gather(&setup.test_set.inputs, &idx);
-    let timing = bench("cpu", bench_cfg, || setup.mlp.forward(&x64));
+    let mut scratch = crate::nn::mlp::ForwardScratch::new();
+    let timing = bench("cpu", bench_cfg, || setup.mlp.forward_with(&x64, &mut scratch).data[0]);
     let cpu_acc = accuracy(&setup.mlp, &setup.test_set.inputs, &setup.test_set.labels);
     rows.push(DeviceRow {
         device: "CPU".into(),

@@ -1,7 +1,10 @@
 //! E6 — serving throughput/latency of the coordinator under Poisson
 //! load: the edge-deployment scenario (§1) quantified. Sweeps the
 //! dynamic-batching window to expose the latency/throughput trade-off
-//! Table I's CPU-batch-64 vs FPGA-stream rows embody.
+//! Table I's CPU-batch-64 vs FPGA-stream rows embody. Both backends
+//! dispatch whole batches through the blocked/batched kernels
+//! (EXPERIMENTS.md §Perf), so a wider window buys real per-sample
+//! savings rather than just amortized queue overhead.
 
 use super::common::{sci, trained_mnist_mlp, ExperimentScale};
 use crate::bench_harness::Table;

@@ -11,8 +11,10 @@
 
 use super::pipeline::{run_matvec, LayerRun, PipelineConfig};
 use super::power::EnergyModel;
+use super::pu::to_fixed;
 use super::stats::CycleStats;
 use crate::nn::activations::{sigmoid_lut, Activation};
+use crate::nn::kernels::{spx_matmul_batch, transpose_to_columns};
 use crate::nn::mlp::{argmax, Mlp};
 use crate::nn::tensor::Matrix;
 use crate::quant::spx::{SpxConfig, SpxTensor};
@@ -115,13 +117,31 @@ impl AccelConfig {
 
 /// The simulated board: a quantized model + its microarchitecture.
 pub struct Accelerator {
+    /// Invariant: treat as read-only after construction — `decoded`
+    /// and `sample_stats` below are derived from it at/after
+    /// `Accelerator::new`, and mutating the model in place would
+    /// silently desynchronize them. Re-quantizing means building a new
+    /// `Accelerator`.
     pub model: QuantizedMlp,
     pub config: AccelConfig,
+    /// Per-layer dequantized weight matrices, decoded once at
+    /// construction — [`Accelerator::forward_decoded`] used to re-run
+    /// `decode()` on every call, which dominated accuracy sweeps.
+    decoded: Vec<Matrix>,
+    /// One sample's full simulator trace, computed lazily. Every
+    /// counter is data-independent (see [`CycleStats::scaled`]), so the
+    /// batched path reports `stats × B` exactly.
+    sample_stats: once_cell::sync::OnceCell<CycleStats>,
 }
 
 impl Accelerator {
     pub fn new(model: QuantizedMlp, config: AccelConfig) -> Self {
-        Accelerator { model, config }
+        let decoded = model
+            .layers
+            .iter()
+            .map(|l| Matrix::from_vec(l.w.shape[0], l.w.shape[1], l.w.decode()))
+            .collect();
+        Accelerator { model, config, decoded, sample_stats: once_cell::sync::OnceCell::new() }
     }
 
     /// Run one sample through every layer; returns the output vector and
@@ -170,21 +190,20 @@ impl Accelerator {
         self.config.energy.average_power_w(stats, t)
     }
 
-    /// Fast functional model: forward with dequantized weights + the
-    /// sigmoid LUT, skipping the cycle simulation. Used by accuracy
-    /// sweeps where only the numbers matter. Matches [`infer_one`] up to
+    /// Fast functional model: forward with the construction-time
+    /// dequantized weights + the sigmoid LUT, skipping the cycle
+    /// simulation. Used by accuracy sweeps where only the numbers
+    /// matter. Matches [`Accelerator::infer_one`] up to
     /// data-quantization error (pinned by a test).
     pub fn forward_decoded(&self, x: &[f32]) -> Vec<f32> {
         let lut = sigmoid_lut();
         let mut a = x.to_vec();
-        for layer in &self.model.layers {
-            let w = layer.w.decode();
-            let (m, n) = (layer.w.shape[0], layer.w.shape[1]);
-            let mut out = vec![0.0f32; m];
+        for (layer, w) in self.model.layers.iter().zip(&self.decoded) {
+            let mut out = vec![0.0f32; w.rows];
             for (r, o) in out.iter_mut().enumerate() {
                 let mut acc = 0.0f32;
-                for (j, &aj) in a.iter().enumerate() {
-                    acc += w[r * n + j] * aj;
+                for (&wv, &aj) in w.row(r).iter().zip(&a) {
+                    acc += wv * aj;
                 }
                 *o = acc + layer.b[r];
                 *o = match layer.activation {
@@ -196,6 +215,105 @@ impl Accelerator {
             a = out;
         }
         a
+    }
+
+    /// The construction-time dequantized weight matrix of layer `i`
+    /// (what [`Accelerator::forward_decoded`] multiplies by).
+    pub fn decoded_weights(&self, i: usize) -> &Matrix {
+        &self.decoded[i]
+    }
+
+    /// Batched forward through the weight-stationary SPx shift-add
+    /// kernel ([`crate::nn::kernels::spx_batch`]): `x` is
+    /// `B × input_dim`, the result `B × output_dim`. One pass over each
+    /// layer's packed codes serves the whole batch; per sample the
+    /// integer arithmetic is bit-identical to [`Accelerator::infer_one`]
+    /// (pinned by a test).
+    pub fn forward_batch(&self, x: &Matrix) -> Matrix {
+        assert_eq!(
+            x.cols,
+            self.model.layers[0].w.shape[1],
+            "input dim {} vs {}",
+            x.cols,
+            self.model.layers[0].w.shape[1]
+        );
+        // Layer outputs ping-pong between two locally owned buffers
+        // (layer 0 reads `x` directly — no input clone), and the
+        // fixed-point staging vectors are reused across layers.
+        let mut ping = Matrix::zeros(0, 0);
+        let mut pong = Matrix::zeros(0, 0);
+        let mut d_fixed: Vec<i32> = Vec::new();
+        let mut d_t: Vec<i32> = Vec::new();
+        for (li, layer) in self.model.layers.iter().enumerate() {
+            if li == 0 {
+                spx_layer_pass(layer, x, &mut ping, &mut d_fixed, &mut d_t);
+            } else if li % 2 == 1 {
+                spx_layer_pass(layer, &ping, &mut pong, &mut d_fixed, &mut d_t);
+            } else {
+                spx_layer_pass(layer, &pong, &mut ping, &mut d_fixed, &mut d_t);
+            }
+        }
+        // Layer i writes ping when i is even (cf. Mlp::forward_with).
+        if self.model.layers.len() % 2 == 1 {
+            ping
+        } else {
+            pong
+        }
+    }
+
+    /// Run a whole batch: outputs from [`Accelerator::forward_batch`],
+    /// simulator stats as `B ×` the (data-independent) single-sample
+    /// trace — exactly what `B` sequential [`Accelerator::infer_one`]
+    /// calls would merge, at a fraction of the host cost.
+    pub fn infer_batch(&self, x: &Matrix) -> (Matrix, CycleStats) {
+        let outputs = self.forward_batch(x);
+        let stats = self.per_sample_stats().scaled(x.rows as u64);
+        (outputs, stats)
+    }
+
+    /// Lazily computed single-sample simulator trace (the input values
+    /// are irrelevant: every counter is shape/weight-dependent only).
+    fn per_sample_stats(&self) -> &CycleStats {
+        self.sample_stats.get_or_init(|| {
+            let zeros = vec![0.0f32; self.model.layers[0].w.shape[1]];
+            self.infer_one(&zeros).1
+        })
+    }
+}
+
+/// One quantized layer of the batched path: quantize `src` to Q1.15,
+/// run the weight-stationary kernel into `dst` (resized in place —
+/// every element is overwritten), then bias + activation in the same
+/// element order as the per-sample path.
+fn spx_layer_pass(
+    layer: &QuantizedLayer,
+    src: &Matrix,
+    dst: &mut Matrix,
+    d_fixed: &mut Vec<i32>,
+    d_t: &mut Vec<i32>,
+) {
+    let batch = src.rows;
+    let (m, n) = (layer.w.shape[0], layer.w.shape[1]);
+    debug_assert_eq!(src.cols, n);
+    let lut = sigmoid_lut();
+    d_fixed.clear();
+    d_fixed.extend(src.data.iter().map(|&v| to_fixed(v, layer.d_scale)));
+    transpose_to_columns(d_fixed, batch, n, d_t);
+    dst.rows = batch;
+    dst.cols = m;
+    dst.data.resize(batch * m, 0.0);
+    // Stats sink None: Accelerator::infer_batch reports the cached
+    // simulator trace instead (see Accelerator::per_sample_stats).
+    spx_matmul_batch(&layer.w, d_t, batch, layer.d_scale, &mut dst.data, None);
+    for row in dst.data.chunks_exact_mut(m) {
+        for (o, &bias) in row.iter_mut().zip(&layer.b) {
+            *o += bias;
+            *o = match layer.activation {
+                Activation::Sigmoid => lut.eval(*o),
+                Activation::Relu => o.max(0.0),
+                Activation::Identity => *o,
+            };
+        }
     }
 }
 
@@ -258,6 +376,56 @@ mod tests {
         // One sigmoid LUT lookup per neuron = 8 + 4.
         assert_eq!(stats.lut_lookups, 12);
         assert!(stats.compute_cycles > 0);
+    }
+
+    #[test]
+    fn forward_batch_matches_infer_one_bitwise() {
+        // The batched weight-stationary kernel is exact integer
+        // arithmetic — outputs must equal the per-sample path bit for
+        // bit, not just approximately.
+        let mut rng = Pcg32::new(20);
+        let mlp = small_mlp(&mut rng);
+        let q = QuantizedMlp::from_mlp(&mlp, &SpxConfig::sp2(5), Calibration::MaxAbs, None);
+        let acc = Accelerator::new(q, AccelConfig::default_fpga());
+        for &batch in &[1usize, 2, 7] {
+            let x = Matrix::random_uniform(batch, 12, 1.0, &mut rng);
+            let batched = acc.forward_batch(&x);
+            assert_eq!((batched.rows, batched.cols), (batch, 4));
+            for b in 0..batch {
+                let (single, _) = acc.infer_one(x.row(b));
+                for (got, want) in batched.row(b).iter().zip(&single) {
+                    assert_eq!(got.to_bits(), want.to_bits(), "sample {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn infer_batch_stats_equal_merged_per_sample_stats() {
+        let mut rng = Pcg32::new(21);
+        let mlp = small_mlp(&mut rng);
+        let q = QuantizedMlp::from_mlp(&mlp, &SpxConfig::spx(7, 3), Calibration::MaxAbs, None);
+        let acc = Accelerator::new(q, AccelConfig::default_fpga());
+        let x = Matrix::random_uniform(5, 12, 1.0, &mut rng);
+        let (_, batch_stats) = acc.infer_batch(&x);
+        let mut merged = CycleStats::default();
+        for b in 0..5 {
+            let (_, s) = acc.infer_one(x.row(b));
+            merged.merge(&s);
+        }
+        assert_eq!(batch_stats, merged);
+    }
+
+    #[test]
+    fn decoded_weights_cached_at_construction() {
+        let mut rng = Pcg32::new(22);
+        let mlp = small_mlp(&mut rng);
+        let q = QuantizedMlp::from_mlp(&mlp, &SpxConfig::sp2(5), Calibration::MaxAbs, None);
+        let acc = Accelerator::new(q, AccelConfig::default_fpga());
+        for (i, layer) in acc.model.layers.iter().enumerate() {
+            assert_eq!(acc.decoded_weights(i).data, layer.w.decode());
+            assert_eq!(acc.decoded_weights(i).rows, layer.w.shape[0]);
+        }
     }
 
     #[test]

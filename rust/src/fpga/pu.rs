@@ -65,6 +65,28 @@ pub fn mac_shift_add(
     }
 }
 
+/// Signed shift-add contribution of one packed weight word applied to a
+/// guard-extended data value: `sign(word) · Σ_{k≠0} extended >> k` over
+/// the `x` 7-bit exponent fields. Shared by the generic per-sample path
+/// below and the batched kernel
+/// ([`crate::nn::kernels::spx_batch`]) so both compute the identical
+/// integer on the slow (k > G) rows.
+#[inline(always)]
+pub fn packed_term(word: u32, x: usize, extended: i64) -> i64 {
+    let mut term = 0i64;
+    for t in 0..x {
+        let k = (word >> (7 * t)) & 0x7f;
+        if k != 0 {
+            term += extended >> k;
+        }
+    }
+    if word >> 31 != 0 {
+        -term
+    } else {
+        term
+    }
+}
+
 /// Compute the full dot product of quantized weight row `row` of `w`
 /// against data `d` (f32, scaled by `d_scale`) through the fixed-point
 /// shift-add datapath. `w` must be 2-D with rows of length `d.len()`.
@@ -83,7 +105,7 @@ pub fn dot_shift_add(
     let n = w.shape[1];
     debug_assert_eq!(d_fixed.len(), n);
     let packed = w.packed();
-    let words = &packed.words[row * n..(row + 1) * n];
+    let words = packed.row_words(row);
     let mut acc = 0i64;
     if packed.row_fast[row] {
         // Every code k in this row satisfies k ≤ G, so
@@ -91,7 +113,7 @@ pub fn dot_shift_add(
         // collapses to an integer multiply by the precomputed shift sum
         // — a plain (auto-vectorizable) integer dot product,
         // bit-identical to the shift datapath.
-        let values = &packed.values[row * n..(row + 1) * n];
+        let values = packed.row_values(row);
         for (&df, &v) in d_fixed.iter().zip(values) {
             acc += df as i64 * v;
         }
@@ -130,17 +152,7 @@ pub fn dot_shift_add(
         _ => {
             for (&df, &word) in d_fixed.iter().zip(words) {
                 let extended = (df as i64) << GUARD_BITS;
-                let mut term = 0i64;
-                for t in 0..packed.x {
-                    let k = (word >> (7 * t)) & 0x7f;
-                    if k != 0 {
-                        term += extended >> k;
-                    }
-                }
-                if word >> 31 != 0 {
-                    term = -term;
-                }
-                acc += term;
+                acc += packed_term(word, packed.x, extended);
             }
         }
     }

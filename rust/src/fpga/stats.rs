@@ -48,6 +48,29 @@ impl CycleStats {
         self.buffer_peak_rows = self.buffer_peak_rows.max(other.buffer_peak_rows);
     }
 
+    /// Sequential composition of `k` identical inferences: additive
+    /// counters scale, peak occupancy does not. Every counter the
+    /// simulator charges is data-independent (schedules are analytic in
+    /// the shape; adds count *weight* sparsity, not data), so the batch
+    /// paths ([`crate::fpga::accelerator::Accelerator::infer_batch`])
+    /// report exactly what `k` sequential [`CycleStats::merge`]s of one
+    /// sample's stats would.
+    pub fn scaled(&self, k: u64) -> CycleStats {
+        CycleStats {
+            compute_cycles: self.compute_cycles * k,
+            stall_cycles: self.stall_cycles * k,
+            macs: self.macs * k,
+            shifts: self.shifts * k,
+            adds: self.adds * k,
+            mults: self.mults * k,
+            lut_lookups: self.lut_lookups * k,
+            ram_reads: self.ram_reads * k,
+            buffer_writes: self.buffer_writes * k,
+            buffer_reads: self.buffer_reads * k,
+            buffer_peak_rows: self.buffer_peak_rows,
+        }
+    }
+
     /// MACs per compute cycle — pipeline utilization (1.0 per PU is the
     /// roofline; reported per-array by dividing by the PU count).
     pub fn macs_per_cycle(&self) -> f64 {
@@ -80,6 +103,28 @@ mod tests {
         assert_eq!(a.compute_cycles, 17);
         assert_eq!(a.macs, 7);
         assert_eq!(a.buffer_peak_rows, 9);
+    }
+
+    #[test]
+    fn scaled_matches_repeated_merge() {
+        let s = CycleStats {
+            compute_cycles: 10,
+            stall_cycles: 1,
+            macs: 5,
+            shifts: 12,
+            adds: 9,
+            mults: 2,
+            lut_lookups: 3,
+            ram_reads: 7,
+            buffer_writes: 6,
+            buffer_reads: 8,
+            buffer_peak_rows: 4,
+        };
+        let mut merged = CycleStats::default();
+        for _ in 0..5 {
+            merged.merge(&s);
+        }
+        assert_eq!(s.scaled(5), merged);
     }
 
     #[test]

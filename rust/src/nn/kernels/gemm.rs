@@ -1,0 +1,387 @@
+//! Cache-blocked, multithreaded f32 GEMM (EXPERIMENTS.md §Perf).
+//!
+//! Structure follows the BLIS/GotoBLAS decomposition:
+//!
+//! ```text
+//! for jc in 0..n  step NC        // C/B column block   (shared per band)
+//!   for pc in 0..k  step KC      // depth block → pack B (KC×NC, NR strips)
+//!     for ic in 0..m  step MC    // row block   → pack A (MC×KC, MR strips)
+//!       for jr, ir ...           // MR×NR micro-kernel over packed panels
+//! ```
+//!
+//! The micro-kernel keeps an `MR×NR` accumulator block live across the
+//! whole depth loop, so each loaded A/B element is reused `NR`/`MR`
+//! times from registers — versus once in the naive dot-product form.
+//! Panels are packed contiguously (zero-padded to full `MR`/`NR`
+//! strips), so the micro-kernel sees unit-stride streams regardless of
+//! operand transposition; `A·B`, `A·Bᵀ` and `Aᵀ·B` all funnel through
+//! the same inner loop and differ only in how packing walks the source.
+//!
+//! Parallelism: the output rows are split into contiguous bands, one
+//! `std::thread::scope` worker per band. Each band re-packs B itself —
+//! redundant work that buys zero synchronization (the right trade at
+//! the few-hundred-row shapes this crate serves). Small problems
+//! (< ~2 MFLOP) stay on the calling thread. Packing buffers are
+//! thread-local, so the single-thread path (every small/medium shape)
+//! re-uses warm scratch and allocates nothing per call; the parallel
+//! path pays a thread spawn + cold panel allocation per worker per
+//! call — acceptable against its O(m·n·k) work, and a pool would be
+//! the upgrade if profiles ever say otherwise.
+
+use crate::nn::tensor::Matrix;
+use std::cell::RefCell;
+
+/// Micro-kernel rows: C rows accumulated in registers at once.
+pub const MR: usize = 8;
+/// Micro-kernel columns: one SIMD-width worth of C columns.
+pub const NR: usize = 8;
+/// Row-block: A panel is `MC×KC` (~64 KiB — L2-resident).
+const MC: usize = 64;
+/// Depth-block: panels span this much of the k dimension.
+const KC: usize = 256;
+/// Column-block: B panel is `KC×NC` (~512 KiB — outer-cache resident).
+const NC: usize = 512;
+
+/// Threads stop paying for themselves below this many FLOPs.
+const MIN_PARALLEL_FLOPS: f64 = 2.0e6;
+
+/// Per-thread packing scratch, reused across calls on the same thread.
+#[derive(Default)]
+struct Scratch {
+    a_panel: Vec<f32>,
+    b_panel: Vec<f32>,
+}
+
+fn with_scratch<R>(f: impl FnOnce(&mut Scratch) -> R) -> R {
+    thread_local! {
+        static SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::default());
+    }
+    SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
+
+/// A possibly-transposed view of a row-major matrix: `at(r, c)` reads
+/// element `(r, c)` of `op(M)`.
+#[derive(Clone, Copy)]
+struct MatView<'a> {
+    data: &'a [f32],
+    cols: usize,
+    trans: bool,
+}
+
+impl<'a> MatView<'a> {
+    fn new(m: &'a Matrix, trans: bool) -> Self {
+        MatView { data: &m.data, cols: m.cols, trans }
+    }
+
+    #[inline(always)]
+    fn at(&self, r: usize, c: usize) -> f32 {
+        if self.trans {
+            self.data[c * self.cols + r]
+        } else {
+            self.data[r * self.cols + c]
+        }
+    }
+}
+
+/// One band's worth of work: rows `row0..row0+rows` of `op(A)` against
+/// all of `op(B)` (`kdim×n`).
+struct BandJob<'a> {
+    a: MatView<'a>,
+    b: MatView<'a>,
+    row0: usize,
+    rows: usize,
+    n: usize,
+    kdim: usize,
+}
+
+/// `out = op(A) · op(B)` where `op` is transpose when the flag is set.
+///
+/// `out` must already have shape `m×n` (`m`/`n` being the dims of the
+/// *operated* matrices); its contents are overwritten. Deterministic:
+/// the same shape always uses the same blocking, so results are
+/// bitwise reproducible across calls and thread counts (each output
+/// element is accumulated by exactly one worker in a fixed k-order).
+pub fn gemm_into(out: &mut Matrix, a: &Matrix, ta: bool, b: &Matrix, tb: bool) {
+    let (m, kdim) = if ta { (a.cols, a.rows) } else { (a.rows, a.cols) };
+    let (kb, n) = if tb { (b.cols, b.rows) } else { (b.rows, b.cols) };
+    assert_eq!(kdim, kb, "gemm inner dims: {m}x{kdim} · {kb}x{n}");
+    assert_eq!(
+        (out.rows, out.cols),
+        (m, n),
+        "gemm output shape: want {m}x{n}, got {}x{}",
+        out.rows,
+        out.cols
+    );
+    out.data.fill(0.0);
+    if m == 0 || n == 0 || kdim == 0 {
+        return;
+    }
+    let av = MatView::new(a, ta);
+    let bv = MatView::new(b, tb);
+    let nt = num_threads(m, n, kdim);
+    if nt <= 1 {
+        let job = BandJob { a: av, b: bv, row0: 0, rows: m, n, kdim };
+        with_scratch(|s| gemm_band(&mut out.data, &job, s));
+        return;
+    }
+    let band = m.div_ceil(nt);
+    std::thread::scope(|scope| {
+        for (t, c_band) in out.data.chunks_mut(band * n).enumerate() {
+            let rows = c_band.len() / n;
+            let job = BandJob { a: av, b: bv, row0: t * band, rows, n, kdim };
+            scope.spawn(move || with_scratch(|s| gemm_band(c_band, &job, s)));
+        }
+    });
+}
+
+/// Worker-thread cap: `EDGEMLP_GEMM_THREADS` env override, else
+/// available parallelism capped at 8 (row bands beyond that stop
+/// scaling at MLP-sized shapes).
+fn configured_threads() -> usize {
+    static OVERRIDE: once_cell::sync::Lazy<Option<usize>> = once_cell::sync::Lazy::new(|| {
+        std::env::var("EDGEMLP_GEMM_THREADS").ok().and_then(|s| s.parse().ok())
+    });
+    if let Some(t) = *OVERRIDE {
+        return t.max(1);
+    }
+    std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1).min(8)
+}
+
+fn num_threads(m: usize, n: usize, kdim: usize) -> usize {
+    let cap = configured_threads();
+    if cap <= 1 {
+        return 1;
+    }
+    let flops = 2.0 * m as f64 * n as f64 * kdim as f64;
+    if flops < MIN_PARALLEL_FLOPS {
+        return 1;
+    }
+    // Keep at least a couple of MR strips per band.
+    cap.min(m.div_ceil(2 * MR)).max(1)
+}
+
+/// Serial blocked GEMM over one row band. `c` is the band's `rows×n`
+/// slice of the output (assumed zeroed), row `i` of `c` being row
+/// `job.row0 + i` of the full product.
+fn gemm_band(c: &mut [f32], job: &BandJob<'_>, scratch: &mut Scratch) {
+    let (n, kdim, m) = (job.n, job.kdim, job.rows);
+    for jc in (0..n).step_by(NC) {
+        let nc = NC.min(n - jc);
+        for pc in (0..kdim).step_by(KC) {
+            let kc = KC.min(kdim - pc);
+            pack_b(job.b, pc, jc, kc, nc, &mut scratch.b_panel);
+            for ic in (0..m).step_by(MC) {
+                let mc = MC.min(m - ic);
+                pack_a(job.a, job.row0 + ic, pc, mc, kc, &mut scratch.a_panel);
+                for jr in (0..nc).step_by(NR) {
+                    let nr = NR.min(nc - jr);
+                    let bp = &scratch.b_panel[(jr / NR) * NR * kc..][..NR * kc];
+                    for ir in (0..mc).step_by(MR) {
+                        let mr = MR.min(mc - ir);
+                        let ap = &scratch.a_panel[(ir / MR) * MR * kc..][..MR * kc];
+                        let mut acc = [[0.0f32; NR]; MR];
+                        micro_kernel(ap, bp, &mut acc);
+                        // Write back the valid mr×nr corner (padding
+                        // rows/cols accumulated zeros).
+                        for (i, acc_row) in acc.iter().enumerate().take(mr) {
+                            let base = (ic + ir + i) * n + jc + jr;
+                            for (cv, &av) in c[base..base + nr].iter_mut().zip(acc_row) {
+                                *cv += av;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The register-tiled inner loop: `acc += Ap · Bp` over one depth
+/// block. `ap` is `kc` column-slices of `MR` A values; `bp` is `kc`
+/// row-slices of `NR` B values; both unit-stride by construction.
+#[inline(always)]
+fn micro_kernel(ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+    for (ak, bk) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
+        for (i, acc_row) in acc.iter_mut().enumerate() {
+            let ai = ak[i];
+            for (av, &bv) in acc_row.iter_mut().zip(bk) {
+                *av += ai * bv;
+            }
+        }
+    }
+}
+
+/// Pack rows `r0..r0+mc`, depth `k0..k0+kc` of `op(A)` into `MR`-row
+/// strips, column-major within a strip (`buf[strip][k][i]`), zero-
+/// padding the final partial strip.
+fn pack_a(a: MatView<'_>, r0: usize, k0: usize, mc: usize, kc: usize, buf: &mut Vec<f32>) {
+    let strips = mc.div_ceil(MR);
+    buf.clear();
+    buf.resize(strips * MR * kc, 0.0);
+    for s in 0..strips {
+        let dst = &mut buf[s * MR * kc..(s + 1) * MR * kc];
+        let rbase = r0 + s * MR;
+        let rows = MR.min(mc - s * MR);
+        for k in 0..kc {
+            let col = &mut dst[k * MR..k * MR + rows];
+            for (i, slot) in col.iter_mut().enumerate() {
+                *slot = a.at(rbase + i, k0 + k);
+            }
+        }
+    }
+}
+
+/// Pack depth `k0..k0+kc`, columns `j0..j0+nc` of `op(B)` into `NR`-
+/// column strips, row-major within a strip (`buf[strip][k][j]`), zero-
+/// padding the final partial strip.
+fn pack_b(b: MatView<'_>, k0: usize, j0: usize, kc: usize, nc: usize, buf: &mut Vec<f32>) {
+    let strips = nc.div_ceil(NR);
+    buf.clear();
+    buf.resize(strips * NR * kc, 0.0);
+    for s in 0..strips {
+        let dst = &mut buf[s * NR * kc..(s + 1) * NR * kc];
+        let jbase = j0 + s * NR;
+        let cols = NR.min(nc - s * NR);
+        for k in 0..kc {
+            let row = &mut dst[k * NR..k * NR + cols];
+            for (j, slot) in row.iter_mut().enumerate() {
+                *slot = b.at(k0 + k, jbase + j);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{assert_allclose, property};
+    use crate::util::rng::Pcg32;
+
+    fn naive(a: &Matrix, ta: bool, b: &Matrix, tb: bool) -> Matrix {
+        let av = MatView::new(a, ta);
+        let bv = MatView::new(b, tb);
+        let (m, kdim) = if ta { (a.cols, a.rows) } else { (a.rows, a.cols) };
+        let n = if tb { b.rows } else { b.cols };
+        let mut out = Matrix::zeros(m, n);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for k in 0..kdim {
+                    acc += av.at(i, k) * bv.at(k, j);
+                }
+                out.data[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    fn check_all_ops(m: usize, k: usize, n: usize, rng: &mut Pcg32) {
+        // A is m×k, B is k×n; also build the transposed storages so all
+        // three op combinations exercise the same logical product.
+        let a = Matrix::random_uniform(m, k, 1.0, rng);
+        let b = Matrix::random_uniform(k, n, 1.0, rng);
+        let at = a.transpose(); // k×m
+        let bt = b.transpose(); // n×k
+        let reference = naive(&a, false, &b, false);
+
+        let mut out = Matrix::zeros(m, n);
+        gemm_into(&mut out, &a, false, &b, false);
+        assert_allclose(&out.data, &reference.data, 1e-5, 1e-5);
+
+        gemm_into(&mut out, &a, false, &bt, true);
+        assert_allclose(&out.data, &reference.data, 1e-5, 1e-5);
+
+        gemm_into(&mut out, &at, true, &b, false);
+        assert_allclose(&out.data, &reference.data, 1e-5, 1e-5);
+
+        gemm_into(&mut out, &at, true, &bt, true);
+        assert_allclose(&out.data, &reference.data, 1e-5, 1e-5);
+    }
+
+    #[test]
+    fn exact_tile_multiples() {
+        let mut rng = Pcg32::new(1);
+        check_all_ops(MR, 16, NR, &mut rng);
+        check_all_ops(2 * MR, KC.min(32), 2 * NR, &mut rng);
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        let mut rng = Pcg32::new(2);
+        check_all_ops(1, 1, 1, &mut rng);
+        check_all_ops(1, 9, 1, &mut rng);
+        check_all_ops(1, 3, 11, &mut rng);
+        check_all_ops(13, 5, 1, &mut rng);
+    }
+
+    #[test]
+    fn empty_dims_give_empty_or_zero() {
+        // k = 0: the product is defined and all-zero.
+        let a = Matrix::zeros(3, 0);
+        let b = Matrix::zeros(0, 4);
+        let mut out = Matrix::from_vec(3, 4, vec![7.0; 12]);
+        gemm_into(&mut out, &a, false, &b, false);
+        assert!(out.data.iter().all(|&v| v == 0.0));
+        // m = 0 / n = 0: empty outputs, no panics.
+        let mut empty = Matrix::zeros(0, 4);
+        gemm_into(&mut empty, &Matrix::zeros(0, 5), false, &Matrix::zeros(5, 4), false);
+        assert!(empty.data.is_empty());
+        let mut empty2 = Matrix::zeros(3, 0);
+        gemm_into(&mut empty2, &Matrix::zeros(3, 5), false, &Matrix::zeros(5, 0), false);
+        assert!(empty2.data.is_empty());
+    }
+
+    #[test]
+    fn tail_sizes_not_divisible_by_tiles() {
+        property("blocked gemm == naive on ragged shapes", 24, |rng| {
+            let m = 1 + rng.index(3 * MR + 1);
+            let k = 1 + rng.index(40);
+            let n = 1 + rng.index(3 * NR + 1);
+            check_all_ops(m, k, n, rng);
+        });
+    }
+
+    #[test]
+    fn multithreaded_band_split_matches_naive() {
+        // Big enough to clear MIN_PARALLEL_FLOPS → exercises the
+        // scoped-thread row-band path (when >1 core is available).
+        let mut rng = Pcg32::new(3);
+        check_all_ops(150, 300, 70, &mut rng);
+    }
+
+    #[test]
+    fn depth_blocking_accumulates_across_kc() {
+        // k > KC forces multiple pc iterations accumulating into C.
+        let mut rng = Pcg32::new(4);
+        check_all_ops(9, KC + 37, 11, &mut rng);
+    }
+
+    #[test]
+    fn output_is_overwritten_not_accumulated() {
+        let mut rng = Pcg32::new(5);
+        let a = Matrix::random_uniform(4, 6, 1.0, &mut rng);
+        let b = Matrix::random_uniform(6, 5, 1.0, &mut rng);
+        let mut out = Matrix::from_vec(4, 5, vec![1e6; 20]);
+        gemm_into(&mut out, &a, false, &b, false);
+        assert_allclose(&out.data, &naive(&a, false, &b, false).data, 1e-5, 1e-5);
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        let mut rng = Pcg32::new(6);
+        let a = Matrix::random_uniform(64, 120, 1.0, &mut rng);
+        let b = Matrix::random_uniform(120, 48, 1.0, &mut rng);
+        let mut out1 = Matrix::zeros(64, 48);
+        let mut out2 = Matrix::zeros(64, 48);
+        gemm_into(&mut out1, &a, false, &b, false);
+        gemm_into(&mut out2, &a, false, &b, false);
+        assert_eq!(out1.data, out2.data);
+    }
+
+    #[test]
+    #[should_panic]
+    fn inner_dim_mismatch_panics() {
+        let mut out = Matrix::zeros(2, 2);
+        gemm_into(&mut out, &Matrix::zeros(2, 3), false, &Matrix::zeros(4, 2), false);
+    }
+}

@@ -1,0 +1,25 @@
+//! Software hot-path kernels (EXPERIMENTS.md §Perf).
+//!
+//! The paper's whole premise is that matrix multiplication dominates
+//! MLP inference time, so the *software* baselines the experiments
+//! measure against (the "CPU" row of Table I, the coordinator's
+//! serving throughput) must be real kernels rather than naive loops:
+//!
+//! * [`gemm`] — a cache-blocked f32 GEMM in the BLIS style: an `MR×NR`
+//!   register-tiled micro-kernel over packed operand panels, row-band
+//!   parallelism via `std::thread::scope`, and a single-thread fallback
+//!   for small shapes. It backs every `Matrix::matmul*` entry point
+//!   through reusable thread-local packing scratch.
+//! * [`spx_batch`] — a batched, weight-stationary SPx shift-add kernel
+//!   over the element-major [`crate::quant::spx::PackedCodes`] stream:
+//!   one pass over a weight row's codes serves the whole batch, where
+//!   the per-sample path re-reads the codes for every sample. Bit-
+//!   identical to [`crate::fpga::pu::dot_shift_add`] per sample (the
+//!   accumulator is exact integer arithmetic, so summation order does
+//!   not matter), which a property test pins down.
+
+pub mod gemm;
+pub mod spx_batch;
+
+pub use gemm::gemm_into;
+pub use spx_batch::{spx_matmul_batch, transpose_to_columns};

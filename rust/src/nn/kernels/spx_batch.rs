@@ -1,0 +1,239 @@
+//! Batched, weight-stationary SPx shift-add matmul (EXPERIMENTS.md
+//! §Perf).
+//!
+//! [`crate::fpga::pu::dot_shift_add`] streams a weight row's packed
+//! codes once *per sample*; for a batch of `B` samples that re-reads
+//! `m×n` codes `B` times. This kernel inverts the loop nest: the data
+//! batch is transposed once to column-major (`d_t[j][b]` contiguous in
+//! `b`), then each weight element is loaded once and applied to every
+//! sample in the block — one pass over the codes per batch, the same
+//! weight-stationary dataflow RedMulE/FantastIC4 use in hardware.
+//!
+//! Bit-exactness: the accumulator is plain `i64` arithmetic (the fast
+//! path multiplies by the precomputed shift sum, the fallback replays
+//! the shifts), so each sample's dot product is the *identical integer*
+//! the per-sample path computes — integer addition is associative, so
+//! the loop interchange cannot change a single bit. A property test
+//! pins the outputs (and the event accounting) to the per-sample path.
+
+use crate::fpga::pu::{from_fixed, packed_term};
+use crate::fpga::stats::CycleStats;
+use crate::quant::spx::{SpxTensor, FIXED_GUARD_BITS};
+
+/// Samples processed per weight pass: keeps the `i64` accumulator block
+/// and the active `d_t` columns inside L1 while amortizing one code
+/// stream over many samples.
+const BB: usize = 128;
+
+/// Transpose a row-major `batch×n` fixed-point batch into column-major
+/// `n×batch` (`out[j * batch + b]`), reusing `out`'s allocation.
+pub fn transpose_to_columns(d_fixed: &[i32], batch: usize, n: usize, out: &mut Vec<i32>) {
+    assert_eq!(d_fixed.len(), batch * n, "batch {batch} × n {n} vs len {}", d_fixed.len());
+    out.clear();
+    out.resize(batch * n, 0);
+    for (b, row) in d_fixed.chunks_exact(n.max(1)).enumerate().take(batch) {
+        for (j, &v) in row.iter().enumerate() {
+            out[j * batch + b] = v;
+        }
+    }
+}
+
+/// `out[b][r] = (w · d_b)` for every sample `b` in the batch, through
+/// the fixed-point shift-add datapath.
+///
+/// * `w` — SPx-quantized `m×n` weight matrix.
+/// * `d_t` — column-major `n×batch` Q1.15 data (see
+///   [`transpose_to_columns`]).
+/// * `out` — row-major `batch×m` output.
+/// * `stats` — pass `Some` to charge event accounting analytically:
+///   exactly `batch` times what
+///   [`crate::fpga::pu::dot_shift_add`] charges per row (the counts
+///   are data-independent). Callers that report simulator stats some
+///   other way (e.g.
+///   [`crate::fpga::accelerator::Accelerator::infer_batch`], which
+///   scales a cached per-sample trace) pass `None` and skip the work.
+pub fn spx_matmul_batch(
+    w: &SpxTensor,
+    d_t: &[i32],
+    batch: usize,
+    d_scale: f32,
+    out: &mut [f32],
+    stats: Option<&mut CycleStats>,
+) {
+    assert_eq!(w.shape.len(), 2, "weights must be a matrix");
+    let (m, n) = (w.shape[0], w.shape[1]);
+    assert_eq!(d_t.len(), n * batch, "data {} vs {n}×{batch}", d_t.len());
+    assert_eq!(out.len(), batch * m, "output {} vs {batch}×{m}", out.len());
+    if batch == 0 || m == 0 {
+        return;
+    }
+    let packed = w.packed();
+    let g = FIXED_GUARD_BITS;
+    let mut acc_buf = vec![0i64; BB.min(batch)];
+    for b0 in (0..batch).step_by(BB) {
+        let bb = BB.min(batch - b0);
+        let acc = &mut acc_buf[..bb];
+        for r in 0..m {
+            acc.fill(0);
+            if packed.row_fast[r] {
+                // Every code k in this row satisfies k ≤ G, so the MAC
+                // collapses to an integer multiply by the precomputed
+                // signed shift sum — same as the per-sample fast path.
+                let values = packed.row_values(r);
+                for (j, &v) in values.iter().enumerate() {
+                    if v == 0 {
+                        continue; // absent weight: contributes exactly 0
+                    }
+                    let col = &d_t[j * batch + b0..j * batch + b0 + bb];
+                    for (a, &df) in acc.iter_mut().zip(col) {
+                        *a += df as i64 * v;
+                    }
+                }
+            } else {
+                // Rare rows with k > G replay the literal barrel shifts.
+                let words = packed.row_words(r);
+                for (j, &word) in words.iter().enumerate() {
+                    let col = &d_t[j * batch + b0..j * batch + b0 + bb];
+                    for (a, &df) in acc.iter_mut().zip(col) {
+                        *a += packed_term(word, packed.x, (df as i64) << g);
+                    }
+                }
+            }
+            for (bi, &a) in acc.iter().enumerate() {
+                out[(b0 + bi) * m + r] = from_fixed(a >> g, d_scale) * w.scale;
+            }
+        }
+    }
+    // Hoisted event accounting (exact: every counter is data-
+    // independent, matching dot_shift_add's per-row formulas × batch).
+    if let Some(stats) = stats {
+        let b = batch as u64;
+        stats.macs += (m * n) as u64 * b;
+        stats.shifts += (m * n * packed.x) as u64 * b;
+        let active: u64 = packed.row_active_terms.iter().map(|&a| a as u64).sum();
+        stats.adds += (active + (m * n) as u64) * b;
+        stats.mults += m as u64 * b;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::pu::{dot_shift_add, quantize_data};
+    use crate::quant::spx::SpxConfig;
+    use crate::quant::Calibration;
+    use crate::util::check::property;
+
+    fn run_batched(w: &SpxTensor, d: &[Vec<f32>], d_scale: f32) -> (Vec<f32>, CycleStats) {
+        let (m, n) = (w.shape[0], w.shape[1]);
+        let batch = d.len();
+        let mut flat = Vec::with_capacity(batch * n);
+        for row in d {
+            flat.extend(quantize_data(row, d_scale));
+        }
+        let mut d_t = Vec::new();
+        transpose_to_columns(&flat, batch, n, &mut d_t);
+        let mut out = vec![0.0f32; batch * m];
+        let mut stats = CycleStats::default();
+        spx_matmul_batch(w, &d_t, batch, d_scale, &mut out, Some(&mut stats));
+        (out, stats)
+    }
+
+    fn run_per_sample(w: &SpxTensor, d: &[Vec<f32>], d_scale: f32) -> (Vec<f32>, CycleStats) {
+        let m = w.shape[0];
+        let mut out = Vec::with_capacity(d.len() * m);
+        let mut stats = CycleStats::default();
+        for row in d {
+            let d_fixed = quantize_data(row, d_scale);
+            for r in 0..m {
+                out.push(dot_shift_add(w, r, &d_fixed, d_scale, &mut stats));
+            }
+        }
+        (out, stats)
+    }
+
+    fn assert_bitwise_eq(batched: &[f32], reference: &[f32]) {
+        assert_eq!(batched.len(), reference.len());
+        for (i, (a, e)) in batched.iter().zip(reference).enumerate() {
+            assert_eq!(a.to_bits(), e.to_bits(), "index {i}: {a} vs {e}");
+        }
+    }
+
+    #[test]
+    fn batched_matches_per_sample_bitwise() {
+        property("batched SPx == per-sample dot", 24, |rng| {
+            let m = 1 + rng.index(6);
+            let n = 1 + rng.index(32);
+            let batch = 1 + rng.index(9);
+            let x = 1 + rng.index(3) as u32;
+            let cfg = SpxConfig::spx(x + 2 + rng.index(3) as u32, x);
+            let wdata: Vec<f32> = (0..m * n).map(|_| rng.normal() as f32).collect();
+            let w = SpxTensor::encode(&cfg, &wdata, &[m, n], Calibration::MaxAbs);
+            let d: Vec<Vec<f32>> = (0..batch)
+                .map(|_| (0..n).map(|_| rng.range(-1.0, 1.0) as f32).collect())
+                .collect();
+            let (fast, s1) = run_batched(&w, &d, 1.0);
+            let (slow, s2) = run_per_sample(&w, &d, 1.0);
+            assert_bitwise_eq(&fast, &slow);
+            assert_eq!(s1, s2, "event accounting diverged");
+        });
+    }
+
+    #[test]
+    fn slow_rows_with_deep_shifts_match() {
+        // A single-term b=8 config reaches codes k up to 127 > G when
+        // the dynamic range is extreme, forcing the non-fast fallback.
+        let cfg = SpxConfig::new(vec![7]);
+        let n = 8;
+        let mut wdata = vec![0.5f32; n];
+        wdata[1] = 0.5 * (2.0f32).powi(-20); // → k ≈ 21 > G on this row
+        let w = SpxTensor::encode(&cfg, &wdata, &[1, n], Calibration::MaxAbs);
+        assert!(
+            !w.packed().row_fast[0],
+            "test setup: expected a non-fast row, codes too shallow"
+        );
+        let d: Vec<Vec<f32>> = (0..5).map(|b| vec![0.1 * (b as f32 + 1.0); n]).collect();
+        let (fast, _) = run_batched(&w, &d, 1.0);
+        let (slow, _) = run_per_sample(&w, &d, 1.0);
+        assert_bitwise_eq(&fast, &slow);
+    }
+
+    #[test]
+    fn batch_blocking_covers_batches_beyond_bb() {
+        let cfg = SpxConfig::sp2(5);
+        let (m, n) = (3, 7);
+        let mut rng = crate::util::rng::Pcg32::new(11);
+        let wdata: Vec<f32> = (0..m * n).map(|_| rng.normal() as f32 * 0.3).collect();
+        let w = SpxTensor::encode(&cfg, &wdata, &[m, n], Calibration::MaxAbs);
+        let batch = BB + 17; // spans two blocks
+        let d: Vec<Vec<f32>> = (0..batch)
+            .map(|_| (0..n).map(|_| rng.range(-1.0, 1.0) as f32).collect())
+            .collect();
+        let (fast, s1) = run_batched(&w, &d, 1.0);
+        let (slow, s2) = run_per_sample(&w, &d, 1.0);
+        assert_bitwise_eq(&fast, &slow);
+        assert_eq!(s1, s2);
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let cfg = SpxConfig::sp2(5);
+        let w = SpxTensor::encode(&cfg, &[0.25; 6], &[2, 3], Calibration::MaxAbs);
+        let mut out = Vec::new();
+        let mut stats = CycleStats::default();
+        spx_matmul_batch(&w, &[], 0, 1.0, &mut out, Some(&mut stats));
+        assert_eq!(stats, CycleStats::default());
+    }
+
+    #[test]
+    fn transpose_round_trips() {
+        let flat: Vec<i32> = (0..12).collect(); // 3 samples × 4 dims
+        let mut t = Vec::new();
+        transpose_to_columns(&flat, 3, 4, &mut t);
+        for b in 0..3 {
+            for j in 0..4 {
+                assert_eq!(t[j * 3 + b], flat[b * 4 + j]);
+            }
+        }
+    }
+}

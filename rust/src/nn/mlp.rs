@@ -77,6 +77,40 @@ pub struct Mlp {
     pub layers: Vec<Layer>,
 }
 
+/// Reusable ping-pong activation buffers for [`Mlp::forward_with`]:
+/// layer `i` writes one buffer while reading the other, so a steady-
+/// state serving loop performs zero allocations per batch.
+#[derive(Debug, Clone, Default)]
+pub struct ForwardScratch {
+    ping: Matrix,
+    pong: Matrix,
+}
+
+impl ForwardScratch {
+    pub fn new() -> Self {
+        ForwardScratch::default()
+    }
+
+    /// Move the finished output of an `n_layers` forward pass out of
+    /// the scratch (leaving an empty buffer behind) — lets
+    /// [`Mlp::forward`] return by move instead of cloning.
+    fn take_output(&mut self, n_layers: usize) -> Matrix {
+        if n_layers % 2 == 1 {
+            std::mem::take(&mut self.ping)
+        } else {
+            std::mem::take(&mut self.pong)
+        }
+    }
+}
+
+/// Output-stage tail shared by every forward variant: bias broadcast
+/// then elementwise activation.
+fn apply_bias_activation(z: &mut Matrix, layer: &Layer) {
+    z.add_row_inplace(&layer.b);
+    let act = layer.activation;
+    z.map_inplace(|v| act.apply(v));
+}
+
 impl Mlp {
     /// Random init: uniform `±1/√fan_in` weights, zero biases.
     pub fn new(config: MlpConfig, rng: &mut Pcg32) -> Self {
@@ -112,30 +146,68 @@ impl Mlp {
     }
 
     /// Batched forward: `X` is `B × input_dim`; returns `B × output_dim`.
+    ///
+    /// Convenience wrapper that allocates fresh scratch; hot paths
+    /// (backends, benches) hold a [`ForwardScratch`] and call
+    /// [`Mlp::forward_with`] to reuse layer buffers across batches.
     pub fn forward(&self, x: &Matrix) -> Matrix {
+        let mut scratch = ForwardScratch::new();
+        self.forward_with(x, &mut scratch);
+        scratch.take_output(self.layers.len())
+    }
+
+    /// Batched forward through caller-owned scratch: no allocation once
+    /// the two ping-pong layer buffers are warm. Returns a view of the
+    /// final activation living inside `scratch`.
+    pub fn forward_with<'s>(&self, x: &Matrix, scratch: &'s mut ForwardScratch) -> &'s Matrix {
         assert_eq!(x.cols, self.input_dim(), "input dim");
-        let mut a = x.clone();
-        for layer in &self.layers {
-            let mut z = a.matmul_bt(&layer.w);
-            z.add_row_inplace(&layer.b);
-            z.map_inplace(|v| layer.activation.apply(v));
-            a = z;
+        let ForwardScratch { ping, pong } = scratch;
+        for (li, layer) in self.layers.iter().enumerate() {
+            if li == 0 {
+                x.matmul_bt_into(&layer.w, ping);
+                apply_bias_activation(ping, layer);
+            } else if li % 2 == 1 {
+                ping.matmul_bt_into(&layer.w, pong);
+                apply_bias_activation(pong, layer);
+            } else {
+                pong.matmul_bt_into(&layer.w, ping);
+                apply_bias_activation(ping, layer);
+            }
         }
-        a
+        // Layer i writes ping when i is even, so an odd layer count
+        // finishes in ping.
+        if self.layers.len() % 2 == 1 {
+            ping
+        } else {
+            pong
+        }
     }
 
     /// Forward keeping every layer's activation (for backprop):
     /// `activations[0] = x`, `activations[i]` = output of layer i.
     pub fn forward_trace(&self, x: &Matrix) -> Vec<Matrix> {
-        let mut acts = Vec::with_capacity(self.layers.len() + 1);
-        acts.push(x.clone());
-        for layer in &self.layers {
-            let mut z = acts.last().unwrap().matmul_bt(&layer.w);
-            z.add_row_inplace(&layer.b);
-            z.map_inplace(|v| layer.activation.apply(v));
-            acts.push(z);
-        }
+        let mut acts = Vec::new();
+        self.forward_trace_into(x, &mut acts);
         acts
+    }
+
+    /// [`Mlp::forward_trace`] into a reusable activation stack: the
+    /// training loop calls this once per mini-batch, so after the first
+    /// batch every per-layer buffer is reused instead of reallocated.
+    pub fn forward_trace_into(&self, x: &Matrix, acts: &mut Vec<Matrix>) {
+        assert_eq!(x.cols, self.input_dim(), "input dim");
+        let needed = self.layers.len() + 1;
+        if acts.len() != needed {
+            acts.clear();
+            acts.resize(needed, Matrix::zeros(0, 0));
+        }
+        acts[0].copy_from(x);
+        for (i, layer) in self.layers.iter().enumerate() {
+            let (before, after) = acts.split_at_mut(i + 1);
+            let dst = &mut after[0];
+            before[i].matmul_bt_into(&layer.w, dst);
+            apply_bias_activation(dst, layer);
+        }
     }
 
     /// Single-sample forward (convenience; allocates a 1-row matrix).
@@ -292,6 +364,44 @@ mod tests {
                 assert_allclose(batched.row(r), &single, 1e-6, 1e-6);
             }
         });
+    }
+
+    #[test]
+    fn forward_with_matches_forward_across_batch_sizes() {
+        // The same scratch must serve changing batch sizes (the
+        // coordinator's dynamic batching produces ragged batches).
+        let mut rng = Pcg32::new(21);
+        let mlp = tiny(&mut rng);
+        let mut scratch = ForwardScratch::new();
+        for &batch in &[1usize, 4, 3, 7, 1] {
+            let x = Matrix::random_uniform(batch, 4, 2.0, &mut rng);
+            let expect = mlp.forward(&x);
+            let got = mlp.forward_with(&x, &mut scratch);
+            assert_eq!(got, &expect);
+        }
+    }
+
+    #[test]
+    fn forward_with_odd_layer_count() {
+        let mut rng = Pcg32::new(22);
+        let mlp = Mlp::new(MlpConfig::paper_qnet(), &mut rng); // 3 layers
+        let x = Matrix::random_uniform(2, 6, 1.0, &mut rng);
+        let mut scratch = ForwardScratch::new();
+        assert_eq!(mlp.forward_with(&x, &mut scratch), &mlp.forward(&x));
+    }
+
+    #[test]
+    fn forward_trace_into_reuses_buffers() {
+        let mut rng = Pcg32::new(23);
+        let mlp = tiny(&mut rng);
+        let mut acts = Vec::new();
+        for _ in 0..3 {
+            let x = Matrix::random_uniform(5, 4, 1.0, &mut rng);
+            mlp.forward_trace_into(&x, &mut acts);
+            assert_eq!(acts.len(), 3);
+            assert_eq!(acts[0], x);
+            assert_eq!(acts.last().unwrap(), &mlp.forward(&x));
+        }
     }
 
     #[test]

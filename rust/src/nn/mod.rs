@@ -9,6 +9,7 @@
 //!   artifacts are tested against.
 
 pub mod activations;
+pub mod kernels;
 pub mod metrics;
 pub mod mlp;
 pub mod tensor;

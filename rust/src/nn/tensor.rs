@@ -1,12 +1,16 @@
 //! Dense row-major f32 matrix with exactly the operations the MLP stack
-//! needs. The matmul kernels use the cache-friendly i-k-j loop order with
-//! an unrolled inner accumulation — good enough that the "CPU" row of
-//! Table I is a fair software baseline (see EXPERIMENTS.md §Perf).
+//! needs. All three matmul entry points (`A·B`, `A·Bᵀ`, `Aᵀ·B`) funnel
+//! through the cache-blocked, multithreaded GEMM in
+//! [`crate::nn::kernels::gemm`], so the "CPU" row of Table I measures a
+//! real kernel rather than allocator churn (see EXPERIMENTS.md §Perf).
+//! The pre-kernel single-pass loops survive as `*_unblocked` references
+//! for tests and the BENCH_gemm.json baseline.
 
+use crate::nn::kernels::gemm::gemm_into;
 use crate::util::rng::Pcg32;
 
 /// Row-major `rows × cols` f32 matrix.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, PartialEq, Default)]
 pub struct Matrix {
     pub rows: usize,
     pub cols: usize,
@@ -49,29 +53,66 @@ impl Matrix {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
 
-    /// `C = A · B` (i-k-j order: streams B rows, accumulates into C rows).
+    /// Reshape to `rows × cols`, zero-filling every element (reuses the
+    /// existing allocation when it is large enough). The resize target
+    /// for scratch buffers fed to [`Matrix::matmul_bt_into`] &c.
+    pub fn resize_zeroed(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Become a copy of `other`, reusing this matrix's allocation.
+    pub fn copy_from(&mut self, other: &Matrix) {
+        self.rows = other.rows;
+        self.cols = other.cols;
+        self.data.clear();
+        self.data.extend_from_slice(&other.data);
+    }
+
+    /// `C = A · B` (blocked GEMM; see [`crate::nn::kernels::gemm`]).
     pub fn matmul(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul {}x{} · {}x{}", self.rows, self.cols, other.rows, other.cols);
         let mut out = Matrix::zeros(self.rows, other.cols);
-        for i in 0..self.rows {
-            let a_row = self.row(i);
-            let c_row = &mut out.data[i * other.cols..(i + 1) * other.cols];
-            for (k, &a) in a_row.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let b_row = other.row(k);
-                for (c, &b) in c_row.iter_mut().zip(b_row) {
-                    *c += a * b;
-                }
-            }
-        }
+        gemm_into(&mut out, self, false, other, false);
         out
     }
 
-    /// `C = A · Bᵀ` (both operands streamed row-major — the layout used
-    /// by the batched forward pass, where B is a `out×in` weight matrix).
+    /// `C = A · Bᵀ` (the batched-forward layout, where B is an `out×in`
+    /// weight matrix whose rows are contiguous).
     pub fn matmul_bt(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols, "matmul_bt inner dims");
+        let mut out = Matrix::zeros(self.rows, other.rows);
+        gemm_into(&mut out, self, false, other, true);
+        out
+    }
+
+    /// `C = A · Bᵀ` into a reusable output buffer (resized in place) —
+    /// the allocation-free hot path used by
+    /// [`crate::nn::mlp::Mlp::forward_with`]. Only the shape is fixed
+    /// up here; `gemm_into` owns the (single) zeroing pass.
+    pub fn matmul_bt_into(&self, other: &Matrix, out: &mut Matrix) {
+        assert_eq!(self.cols, other.cols, "matmul_bt inner dims");
+        out.rows = self.rows;
+        out.cols = other.rows;
+        out.data.resize(self.rows * other.rows, 0.0);
+        gemm_into(out, self, false, other, true);
+    }
+
+    /// `C = Aᵀ · B` (used by the gradient `∂L/∂W = δᵀ · X`).
+    pub fn matmul_at(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows, "matmul_at inner dims");
+        let mut out = Matrix::zeros(self.cols, other.cols);
+        gemm_into(&mut out, self, true, other, false);
+        out
+    }
+
+    /// The seed's single-pass `A · Bᵀ` (one dot product per output, 8
+    /// unrolled accumulators). Kept as the measured baseline the
+    /// BENCH_gemm.json speedup column is computed against, and as an
+    /// independent reference for the blocked kernel's tests.
+    pub fn matmul_bt_unblocked(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.cols, "matmul_bt inner dims");
         let mut out = Matrix::zeros(self.rows, other.rows);
         for i in 0..self.rows {
@@ -96,26 +137,6 @@ impl Matrix {
                 let total = (acc[0] + acc[1]) + (acc[2] + acc[3])
                     + (acc[4] + acc[5]) + (acc[6] + acc[7]) + tail;
                 out.data[i * other.rows + j] = total;
-            }
-        }
-        out
-    }
-
-    /// `C = Aᵀ · B` (used by the gradient `∂L/∂W = δᵀ · X`).
-    pub fn matmul_at(&self, other: &Matrix) -> Matrix {
-        assert_eq!(self.rows, other.rows, "matmul_at inner dims");
-        let mut out = Matrix::zeros(self.cols, other.cols);
-        for k in 0..self.rows {
-            let a_row = self.row(k);
-            let b_row = other.row(k);
-            for (i, &a) in a_row.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let c_row = &mut out.data[i * other.cols..(i + 1) * other.cols];
-                for (c, &b) in c_row.iter_mut().zip(b_row) {
-                    *c += a * b;
-                }
             }
         }
         out
@@ -210,6 +231,31 @@ mod tests {
             let a = Matrix::random_uniform(m, k, 2.0, rng);
             let b = Matrix::random_uniform(k, n, 2.0, rng);
             assert_allclose(&a.matmul(&b).data, &naive_matmul(&a, &b).data, 1e-5, 1e-5);
+        });
+    }
+
+    #[test]
+    fn matmul_bt_into_reuses_buffer() {
+        property("matmul_bt_into == matmul_bt across resizes", 16, |rng| {
+            let mut out = Matrix::zeros(0, 0);
+            for _ in 0..3 {
+                let (m, k, n) = (1 + rng.index(9), 1 + rng.index(20), 1 + rng.index(9));
+                let a = Matrix::random_uniform(m, k, 1.0, rng);
+                let b = Matrix::random_uniform(n, k, 1.0, rng);
+                a.matmul_bt_into(&b, &mut out);
+                assert_eq!((out.rows, out.cols), (m, n));
+                assert_eq!(out.data, a.matmul_bt(&b).data);
+            }
+        });
+    }
+
+    #[test]
+    fn blocked_bt_matches_unblocked_baseline() {
+        property("blocked A·Bᵀ == seed unblocked A·Bᵀ", 16, |rng| {
+            let (m, k, n) = (1 + rng.index(24), 1 + rng.index(48), 1 + rng.index(24));
+            let a = Matrix::random_uniform(m, k, 1.0, rng);
+            let b = Matrix::random_uniform(n, k, 1.0, rng);
+            assert_allclose(&a.matmul_bt(&b).data, &a.matmul_bt_unblocked(&b).data, 1e-5, 1e-5);
         });
     }
 

@@ -160,6 +160,11 @@ pub fn train(
     let mut rng = Pcg32::new(config.seed);
     let mut order: Vec<usize> = (0..inputs.rows).collect();
     let mut stats = Vec::with_capacity(config.epochs);
+    // Reused across every mini-batch: the gather staging matrix and the
+    // activation stack (see Mlp::forward_trace_into) — the training
+    // loop allocates nothing per batch once these are warm.
+    let mut x = Matrix::zeros(0, 0);
+    let mut acts: Vec<Matrix> = Vec::new();
     for epoch in 0..config.epochs {
         rng.shuffle(&mut order);
         let mut epoch_loss = 0.0f64;
@@ -167,14 +172,14 @@ pub fn train(
         let mut batches = 0usize;
         for chunk in order.chunks(config.batch_size) {
             // Gather the mini-batch.
-            let mut x = Matrix::zeros(chunk.len(), inputs.cols);
+            x.resize_zeroed(chunk.len(), inputs.cols);
             let mut y = Vec::with_capacity(chunk.len());
             for (bi, &si) in chunk.iter().enumerate() {
                 x.data[bi * inputs.cols..(bi + 1) * inputs.cols]
                     .copy_from_slice(inputs.row(si));
                 y.push(labels[si]);
             }
-            let acts = mlp.forward_trace(&x);
+            mlp.forward_trace_into(&x, &mut acts);
             let out = acts.last().unwrap();
             epoch_loss += mse_loss(out, &y);
             for (r, &label) in y.iter().enumerate() {

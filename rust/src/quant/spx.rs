@@ -218,6 +218,26 @@ pub struct PackedCodes {
     /// Per row: true iff every active code satisfies `k ≤ G`, i.e. the
     /// multiply fast path is exact for the whole row.
     pub row_fast: Vec<bool>,
+    /// Elements per row (2-D tensors) or the whole tensor (1-D).
+    pub cols: usize,
+}
+
+impl PackedCodes {
+    /// Number of packed rows.
+    pub fn rows(&self) -> usize {
+        self.row_fast.len()
+    }
+
+    /// Precomputed signed shift sums of row `r` (the multiply fast
+    /// path's operand stream).
+    pub fn row_values(&self, r: usize) -> &[i64] {
+        &self.values[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Packed sign+code words of row `r` (the shift fallback's stream).
+    pub fn row_words(&self, r: usize) -> &[u32] {
+        &self.words[r * self.cols..(r + 1) * self.cols]
+    }
 }
 
 /// A tensor quantized under SPx: hardware-ready planes of exponent codes.
@@ -328,7 +348,7 @@ impl SpxTensor {
                 row_active_terms.push(active);
                 row_fast.push(fast);
             }
-            PackedCodes { x, words, row_active_terms, values, row_fast }
+            PackedCodes { x, words, row_active_terms, values, row_fast, cols }
         })
     }
 
@@ -501,6 +521,19 @@ mod tests {
         assert_eq!(t.planes.len(), 3);
         assert!(t.planes.iter().all(|p| p.len() == 10));
         assert_eq!(t.numel(), 10);
+    }
+
+    #[test]
+    fn packed_row_accessors_match_layout() {
+        let cfg = SpxConfig::sp2(5);
+        let data: Vec<f32> = (0..12).map(|i| (i as f32 - 6.0) / 6.0).collect();
+        let t = SpxTensor::encode(&cfg, &data, &[3, 4], Calibration::MaxAbs);
+        let p = t.packed();
+        assert_eq!((p.rows(), p.cols), (3, 4));
+        for r in 0..3 {
+            assert_eq!(p.row_values(r), &p.values[r * 4..(r + 1) * 4]);
+            assert_eq!(p.row_words(r), &p.words[r * 4..(r + 1) * 4]);
+        }
     }
 
     #[test]

@@ -1,48 +1,27 @@
-//! A compiled artifact plus typed input/output conversion.
+//! A compiled artifact plus typed input/output conversion (requires the
+//! `xla` feature; the default build substitutes `executable_stub.rs`).
 //!
-//! Callers hand over plain rust buffers ([`InputValue`]); the model
-//! validates them against the manifest signature, builds XLA literals,
-//! executes, and unwraps the 1-tuple result (`aot.py` lowers with
-//! `return_tuple=True`) back into `Vec<f32>`.
+//! Callers hand over plain rust buffers ([`InputValue`], defined in the
+//! shared [`super::inputs`] module); the model validates them against
+//! the manifest signature, builds XLA literals, executes, and unwraps
+//! the 1-tuple result (`aot.py` lowers with `return_tuple=True`) back
+//! into `Vec<f32>`.
 
-use super::registry::{ArtifactSpec, Dtype, TensorSpec};
+use super::registry::{ArtifactSpec, TensorSpec};
 use anyhow::{bail, Context, Result};
 
-/// An input buffer: f32 or i32, shape implied by the artifact signature.
-#[derive(Debug, Clone)]
-pub enum InputValue {
-    F32(Vec<f32>),
-    I32(Vec<i32>),
-}
+pub use super::inputs::{mlp_fp32_inputs, mlp_spx_inputs, qnet_inputs, InputValue};
 
-impl InputValue {
-    pub fn len(&self) -> usize {
-        match self {
-            InputValue::F32(v) => v.len(),
-            InputValue::I32(v) => v.len(),
-        }
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
-    }
-
-    fn dtype(&self) -> Dtype {
-        match self {
-            InputValue::F32(_) => Dtype::F32,
-            InputValue::I32(_) => Dtype::I32,
-        }
-    }
-
-    fn to_literal(&self, spec: &TensorSpec) -> Result<xla::Literal> {
-        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
-        let lit = match self {
-            InputValue::F32(v) => xla::Literal::vec1(v),
-            InputValue::I32(v) => xla::Literal::vec1(v),
-        };
-        lit.reshape(&dims)
-            .with_context(|| format!("reshape input '{}' to {:?}", spec.name, spec.shape))
-    }
+/// PJRT-side conversion, kept out of [`super::inputs`] so the shared
+/// half stays free of `xla` types.
+fn to_literal(value: &InputValue, spec: &TensorSpec) -> Result<xla::Literal> {
+    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+    let lit = match value {
+        InputValue::F32(v) => xla::Literal::vec1(v),
+        InputValue::I32(v) => xla::Literal::vec1(v),
+    };
+    lit.reshape(&dims)
+        .with_context(|| format!("reshape input '{}' to {:?}", spec.name, spec.shape))
 }
 
 /// A compiled artifact ready to execute.
@@ -90,7 +69,7 @@ impl LoadedModel {
                     tensor_spec.shape
                 );
             }
-            literals.push(value.to_literal(tensor_spec)?);
+            literals.push(to_literal(value, tensor_spec)?);
         }
         let result = self
             .executable
@@ -112,71 +91,5 @@ impl LoadedModel {
             );
         }
         Ok(values)
-    }
-}
-
-/// Helper: build the input list for the fp32 MLP artifacts from a
-/// trained [`crate::nn::Mlp`] (layers w2/b2, w3/b3) and a batch of
-/// flattened images.
-pub fn mlp_fp32_inputs(mlp: &crate::nn::Mlp, x: &[f32]) -> Vec<InputValue> {
-    assert_eq!(mlp.layers.len(), 2, "fp32 MLP artifact is 2-layer");
-    vec![
-        InputValue::F32(x.to_vec()),
-        InputValue::F32(mlp.layers[0].w.data.clone()),
-        InputValue::F32(mlp.layers[0].b.clone()),
-        InputValue::F32(mlp.layers[1].w.data.clone()),
-        InputValue::F32(mlp.layers[1].b.clone()),
-    ]
-}
-
-/// Helper: build the input list for the SPx MLP artifacts from a
-/// [`crate::fpga::accelerator::QuantizedMlp`] and a batch of images.
-/// Plane/sign integers widen to i32 (the artifact's dtype).
-pub fn mlp_spx_inputs(
-    q: &crate::fpga::accelerator::QuantizedMlp,
-    x: &[f32],
-) -> Vec<InputValue> {
-    assert_eq!(q.layers.len(), 2, "SPx MLP artifact is 2-layer");
-    let mut inputs = vec![InputValue::F32(x.to_vec())];
-    for layer in &q.layers {
-        let signs: Vec<i32> = layer.w.signs.iter().map(|&s| s as i32).collect();
-        let mut planes: Vec<i32> = Vec::with_capacity(layer.w.numel() * layer.w.planes.len());
-        for plane in &layer.w.planes {
-            planes.extend(plane.iter().map(|&c| c as i32));
-        }
-        inputs.push(InputValue::I32(signs));
-        inputs.push(InputValue::I32(planes));
-        inputs.push(InputValue::F32(vec![layer.w.scale]));
-        inputs.push(InputValue::F32(layer.b.clone()));
-    }
-    inputs
-}
-
-/// Helper: inputs for the Q-network artifact.
-pub fn qnet_inputs(qnet: &crate::nn::Mlp, obs: &[f32]) -> Vec<InputValue> {
-    assert_eq!(qnet.layers.len(), 3, "qnet artifact is 3-layer");
-    let mut inputs = vec![InputValue::F32(obs.to_vec())];
-    for layer in &qnet.layers {
-        inputs.push(InputValue::F32(layer.w.data.clone()));
-        inputs.push(InputValue::F32(layer.b.clone()));
-    }
-    inputs
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn input_value_lengths() {
-        assert_eq!(InputValue::F32(vec![1.0; 3]).len(), 3);
-        assert_eq!(InputValue::I32(vec![1; 5]).len(), 5);
-        assert_eq!(InputValue::F32(vec![]).len(), 0);
-    }
-
-    #[test]
-    fn dtype_tags() {
-        assert_eq!(InputValue::F32(vec![]).dtype(), Dtype::F32);
-        assert_eq!(InputValue::I32(vec![]).dtype(), Dtype::I32);
     }
 }

@@ -1,0 +1,35 @@
+//! Stub of the executable layer compiled when the `xla` feature is off.
+//!
+//! Everything pure-rust ([`InputValue`], the `*_inputs` marshalling
+//! helpers) lives in the shared [`super::inputs`] module and is merely
+//! re-exported here, so both build configurations expose the identical
+//! API from `runtime::executable::*`. Only [`LoadedModel`] is a
+//! stand-in — it cannot be constructed because the stub
+//! [`super::client::Runtime::new`] never succeeds, so
+//! [`LoadedModel::run`] is unreachable.
+
+use super::registry::ArtifactSpec;
+use anyhow::{bail, Result};
+
+pub use super::inputs::{mlp_fp32_inputs, mlp_spx_inputs, qnet_inputs, InputValue};
+
+/// Stand-in for a compiled artifact. Never constructed in stub builds.
+pub struct LoadedModel {
+    pub spec: ArtifactSpec,
+}
+
+impl LoadedModel {
+    /// Batch size this artifact was lowered for.
+    pub fn batch(&self) -> usize {
+        self.spec.batch
+    }
+
+    /// Unreachable in stub builds ([`super::client::Runtime::load`]
+    /// never returns a model); kept for API parity.
+    pub fn run(&self, _inputs: &[InputValue]) -> Result<Vec<f32>> {
+        bail!(
+            "cannot execute artifact '{}': built without the `xla` cargo feature",
+            self.spec.name
+        )
+    }
+}

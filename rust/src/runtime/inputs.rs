@@ -1,0 +1,111 @@
+//! Typed input buffers + marshalling helpers for the AOT artifacts.
+//!
+//! Pure rust (no PJRT types), so this module is shared verbatim by the
+//! real `xla`-feature executable layer and its stub — keeping the two
+//! build configurations' public API identical and edits single-sited.
+
+use super::registry::Dtype;
+
+/// An input buffer: f32 or i32, shape implied by the artifact signature.
+#[derive(Debug, Clone)]
+pub enum InputValue {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl InputValue {
+    pub fn len(&self) -> usize {
+        match self {
+            InputValue::F32(v) => v.len(),
+            InputValue::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            InputValue::F32(_) => Dtype::F32,
+            InputValue::I32(_) => Dtype::I32,
+        }
+    }
+}
+
+/// Helper: build the input list for the fp32 MLP artifacts from a
+/// trained [`crate::nn::Mlp`] (layers w2/b2, w3/b3) and a batch of
+/// flattened images.
+pub fn mlp_fp32_inputs(mlp: &crate::nn::Mlp, x: &[f32]) -> Vec<InputValue> {
+    assert_eq!(mlp.layers.len(), 2, "fp32 MLP artifact is 2-layer");
+    vec![
+        InputValue::F32(x.to_vec()),
+        InputValue::F32(mlp.layers[0].w.data.clone()),
+        InputValue::F32(mlp.layers[0].b.clone()),
+        InputValue::F32(mlp.layers[1].w.data.clone()),
+        InputValue::F32(mlp.layers[1].b.clone()),
+    ]
+}
+
+/// Helper: build the input list for the SPx MLP artifacts from a
+/// [`crate::fpga::accelerator::QuantizedMlp`] and a batch of images.
+/// Plane/sign integers widen to i32 (the artifact's dtype).
+pub fn mlp_spx_inputs(
+    q: &crate::fpga::accelerator::QuantizedMlp,
+    x: &[f32],
+) -> Vec<InputValue> {
+    assert_eq!(q.layers.len(), 2, "SPx MLP artifact is 2-layer");
+    let mut inputs = vec![InputValue::F32(x.to_vec())];
+    for layer in &q.layers {
+        let signs: Vec<i32> = layer.w.signs.iter().map(|&s| s as i32).collect();
+        let mut planes: Vec<i32> = Vec::with_capacity(layer.w.numel() * layer.w.planes.len());
+        for plane in &layer.w.planes {
+            planes.extend(plane.iter().map(|&c| c as i32));
+        }
+        inputs.push(InputValue::I32(signs));
+        inputs.push(InputValue::I32(planes));
+        inputs.push(InputValue::F32(vec![layer.w.scale]));
+        inputs.push(InputValue::F32(layer.b.clone()));
+    }
+    inputs
+}
+
+/// Helper: inputs for the Q-network artifact.
+pub fn qnet_inputs(qnet: &crate::nn::Mlp, obs: &[f32]) -> Vec<InputValue> {
+    assert_eq!(qnet.layers.len(), 3, "qnet artifact is 3-layer");
+    let mut inputs = vec![InputValue::F32(obs.to_vec())];
+    for layer in &qnet.layers {
+        inputs.push(InputValue::F32(layer.w.data.clone()));
+        inputs.push(InputValue::F32(layer.b.clone()));
+    }
+    inputs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn input_value_lengths() {
+        assert_eq!(InputValue::F32(vec![1.0; 3]).len(), 3);
+        assert_eq!(InputValue::I32(vec![1; 5]).len(), 5);
+        assert_eq!(InputValue::F32(vec![]).len(), 0);
+    }
+
+    #[test]
+    fn dtype_tags() {
+        assert_eq!(InputValue::F32(vec![]).dtype(), Dtype::F32);
+        assert_eq!(InputValue::I32(vec![]).dtype(), Dtype::I32);
+    }
+
+    #[test]
+    fn fp32_input_marshalling_shapes() {
+        let mut rng = crate::util::rng::Pcg32::new(1);
+        let mlp = crate::nn::Mlp::new(crate::nn::MlpConfig::paper_mnist(), &mut rng);
+        let x = vec![0.0f32; 784];
+        let inputs = mlp_fp32_inputs(&mlp, &x);
+        assert_eq!(inputs.len(), 5);
+        assert_eq!(inputs[1].len(), 128 * 784);
+        assert_eq!(inputs[4].len(), 10);
+    }
+}

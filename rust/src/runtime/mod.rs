@@ -11,9 +11,25 @@
 //! are not `Send`; a [`client::Runtime`] must be created *and used* on
 //! one thread. The coordinator accommodates this by giving the XLA
 //! backend its own worker thread that constructs the runtime in-place.
+//!
+//! Build note: the `xla` bindings crate is not part of the offline
+//! vendor set, so the PJRT-touching halves ([`client`]/[`executable`])
+//! are compiled only under the `xla` cargo feature. The default build
+//! substitutes API-compatible stubs whose [`client::Runtime::new`]
+//! returns an error — every XLA-dependent code path already handles
+//! that (it is indistinguishable from `make artifacts` not having run).
 
+#[cfg(feature = "xla")]
 pub mod client;
+#[cfg(not(feature = "xla"))]
+#[path = "client_stub.rs"]
+pub mod client;
+#[cfg(feature = "xla")]
 pub mod executable;
+#[cfg(not(feature = "xla"))]
+#[path = "executable_stub.rs"]
+pub mod executable;
+pub mod inputs;
 pub mod registry;
 
 pub use client::Runtime;
