@@ -1,0 +1,101 @@
+//! Bench: end-to-end TCP serving throughput/latency of the network
+//! subsystem (wire protocol → connection pool → coordinator batching →
+//! CPU/FPGA-sim backends). Emits `BENCH_serving.json` (override the
+//! path with `EDGEMLP_BENCH_JSON`) alongside `BENCH_gemm.json` for the
+//! perf trajectory. `cargo bench --bench serving` — see EXPERIMENTS.md
+//! §Serving.
+
+use edgemlp::bench_harness::{fmt_time, BenchJson, Table};
+use edgemlp::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use edgemlp::fpga::accelerator::AccelConfig;
+use edgemlp::nn::mlp::{Mlp, MlpConfig};
+use edgemlp::quant::spx::SpxConfig;
+use edgemlp::serve::{
+    run_loadgen, swappable_cpu_factory, swappable_fpga_factory, LoadGenConfig, ModelRegistry,
+    ServeConfig, Server,
+};
+use edgemlp::util::rng::Pcg32;
+use std::path::Path;
+use std::time::Duration;
+
+struct Scenario {
+    label: &'static str,
+    backend: u32,
+    connections: usize,
+    batch: usize,
+    pipeline: usize,
+}
+
+fn main() {
+    let quick = std::env::var("EDGEMLP_BENCH_QUICK").is_ok();
+    let requests = if quick { 2_000 } else { 20_000 };
+
+    // The paper's MNIST network; weights random — serving cost is
+    // weight-value independent.
+    let mut rng = Pcg32::new(2021);
+    let mlp = Mlp::new(MlpConfig::paper_mnist(), &mut rng);
+    let registry = ModelRegistry::new("default", mlp, SpxConfig::sp2(5));
+    let coord = Coordinator::start(
+        vec![
+            ("cpu".into(), swappable_cpu_factory(registry.clone())),
+            (
+                "fpga".into(),
+                swappable_fpga_factory(registry.clone(), AccelConfig::default_fpga()),
+            ),
+        ],
+        CoordinatorConfig {
+            queue_capacity: 4096,
+            policy: BatchPolicy::windowed(64, Duration::from_millis(1)),
+        },
+    )
+    .expect("start coordinator");
+    let server = Server::start(coord, registry, "127.0.0.1:0", ServeConfig::default())
+        .expect("start server");
+    let addr = server.local_addr();
+
+    let scenarios = [
+        Scenario { label: "cpu_single_c8_p8", backend: 0, connections: 8, batch: 1, pipeline: 8 },
+        Scenario { label: "cpu_batch16_c4", backend: 0, connections: 4, batch: 16, pipeline: 1 },
+        Scenario { label: "fpga_single_c4_p8", backend: 1, connections: 4, batch: 1, pipeline: 8 },
+    ];
+
+    let mut json = BenchJson::new();
+    let mut table = Table::new(&["scenario", "requests", "req/s", "p50", "p99", "shed"]);
+    for s in &scenarios {
+        let report = run_loadgen(
+            addr,
+            LoadGenConfig {
+                requests,
+                connections: s.connections,
+                backend: s.backend,
+                dim: 784,
+                batch: s.batch,
+                pipeline: s.pipeline,
+                ..LoadGenConfig::default()
+            },
+        )
+        .expect("loadgen");
+        assert_eq!(report.ok + report.shed + report.errors, report.sent, "lost responses");
+        table.row(&[
+            s.label.to_string(),
+            report.sent.to_string(),
+            format!("{:.0}", report.throughput_rps()),
+            fmt_time(report.p50_s()),
+            fmt_time(report.p99_s()),
+            report.shed.to_string(),
+        ]);
+        json.num(&format!("serving_{}_rps", s.label), report.throughput_rps());
+        json.num(&format!("serving_{}_p50_ms", s.label), report.p50_s() * 1e3);
+        json.num(&format!("serving_{}_p99_ms", s.label), report.p99_s() * 1e3);
+        json.num(&format!("serving_{}_shed", s.label), report.shed as f64);
+    }
+    server.shutdown();
+
+    println!("\n=== TCP serving bench (EXPERIMENTS.md §Serving) ===\n");
+    table.print();
+
+    let path =
+        std::env::var("EDGEMLP_BENCH_JSON").unwrap_or_else(|_| "BENCH_serving.json".into());
+    json.write(Path::new(&path)).expect("write bench json");
+    println!("\nwrote {path}");
+}

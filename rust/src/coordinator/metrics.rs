@@ -43,6 +43,27 @@ impl Histogram {
         self.max_s
     }
 
+    /// Approximate quantile from the buckets — [`Histogram::quantile_s`]
+    /// under the name the serving `Stats` opcode documents.
+    pub fn quantile(&self, q: f64) -> f64 {
+        self.quantile_s(q)
+    }
+
+    /// Median latency in seconds.
+    pub fn p50_s(&self) -> f64 {
+        self.quantile_s(0.50)
+    }
+
+    /// 95th-percentile latency in seconds.
+    pub fn p95_s(&self) -> f64 {
+        self.quantile_s(0.95)
+    }
+
+    /// 99th-percentile latency in seconds.
+    pub fn p99_s(&self) -> f64 {
+        self.quantile_s(0.99)
+    }
+
     /// Approximate quantile from the buckets (upper bound of the bucket
     /// containing the q-th sample).
     pub fn quantile_s(&self, q: f64) -> f64 {
@@ -88,6 +109,35 @@ impl BackendMetrics {
 pub struct MetricsSnapshot {
     pub backends: BTreeMap<String, BackendMetrics>,
     pub rejected: u64,
+}
+
+impl MetricsSnapshot {
+    /// Requests served across all backends.
+    pub fn total_requests(&self) -> u64 {
+        self.backends.values().map(|b| b.requests).sum()
+    }
+
+    /// One line per backend with counters and latency percentiles —
+    /// what the serving `Stats` opcode puts on the wire.
+    pub fn render(&self) -> String {
+        use crate::bench_harness::fmt_time;
+        let mut out = format!("rejected: {}\n", self.rejected);
+        for (name, m) in &self.backends {
+            out.push_str(&format!(
+                "backend {name}: requests={} batches={} errors={} mean_batch={:.1} \
+                 p50={} p95={} p99={} max={}\n",
+                m.requests,
+                m.batches,
+                m.errors,
+                m.mean_batch(),
+                fmt_time(m.latency.p50_s()),
+                fmt_time(m.latency.p95_s()),
+                fmt_time(m.latency.p99_s()),
+                fmt_time(m.latency.max_s()),
+            ));
+        }
+        out
+    }
 }
 
 /// Thread-shared metrics sink.
@@ -183,6 +233,32 @@ mod tests {
         assert!((snap.backends["cpu"].mean_batch() - 3.0).abs() < 1e-9);
         assert_eq!(snap.backends["fpga"].cycle_stats.macs, 10);
         assert_eq!(snap.rejected, 1);
+    }
+
+    #[test]
+    fn quantile_accessors_are_ordered() {
+        let mut h = Histogram::default();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-5);
+        }
+        assert_eq!(h.quantile(0.5), h.quantile_s(0.5));
+        assert!(h.p50_s() <= h.p95_s());
+        assert!(h.p95_s() <= h.p99_s());
+        assert!(h.p99_s() <= h.max_s() * 2.0 + 1e-12);
+    }
+
+    #[test]
+    fn snapshot_render_includes_percentiles() {
+        let m = Metrics::new();
+        m.record_batch("cpu", 3, &[1e-3, 2e-3, 3e-3], None);
+        m.record_rejected();
+        let snap = m.snapshot();
+        assert_eq!(snap.total_requests(), 3);
+        let text = snap.render();
+        assert!(text.contains("rejected: 1"));
+        assert!(text.contains("backend cpu"));
+        assert!(text.contains("p50="));
+        assert!(text.contains("p99="));
     }
 
     #[test]

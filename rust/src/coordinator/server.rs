@@ -178,6 +178,18 @@ impl Coordinator {
         self.submit_to(idx, payload)
     }
 
+    /// Close the submission queues without consuming the coordinator:
+    /// later submits fail with [`SubmitError::Closed`] while workers
+    /// drain everything already queued and then exit. Needed by owners
+    /// that hold the coordinator behind an `Arc` (the TCP server) and
+    /// therefore cannot call [`Coordinator::shutdown`]; joining happens
+    /// in `Drop`.
+    pub fn stop(&self) {
+        for q in &self.queues {
+            q.close();
+        }
+    }
+
     /// Close queues and join workers (drains in-flight requests).
     pub fn shutdown(mut self) {
         for q in &self.queues {
@@ -362,6 +374,87 @@ mod tests {
         }
         assert!(shed, "expected backpressure on capacity-1 queue");
         assert!(coord.metrics().snapshot().rejected >= 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn try_submit_full_on_saturated_queue() {
+        // A capacity-1 queue behind a backend that never finishes its
+        // first batch within the test window: once one request is in
+        // flight and one is parked in the queue, try_submit must shed.
+        let slow: (String, BackendFactory) = (
+            "slow".into(),
+            Box::new(|| {
+                Ok(Box::new(FnBackend::new("slow", 1, |inputs: &[Vec<f32>]| {
+                    std::thread::sleep(Duration::from_millis(200));
+                    Ok(inputs.to_vec())
+                })) as Box<dyn Backend>)
+            }),
+        );
+        let coord = Coordinator::start(
+            vec![slow],
+            CoordinatorConfig { queue_capacity: 1, policy: BatchPolicy::immediate(1) },
+        )
+        .unwrap();
+        let _a = coord.try_submit_to(0, vec![1.0]).unwrap();
+        let mut saw_full = false;
+        let mut held = Vec::new();
+        for _ in 0..50 {
+            match coord.try_submit_to(0, vec![2.0]) {
+                Ok(rx) => held.push(rx),
+                Err(SubmitError::Backpressure) => {
+                    saw_full = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected {e:?}"),
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(saw_full, "saturated queue never reported Full/Backpressure");
+        assert!(coord.metrics().snapshot().rejected >= 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn submit_after_stop_returns_closed() {
+        let coord =
+            Coordinator::start(vec![echo_factory("echo")], CoordinatorConfig::default())
+                .unwrap();
+        coord.stop();
+        assert!(matches!(coord.submit(vec![1.0]), Err(SubmitError::Closed)));
+        assert!(matches!(coord.try_submit_to(0, vec![1.0]), Err(SubmitError::Closed)));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn stop_drains_in_flight_work() {
+        // Queue a pile of requests against a deliberately slow backend,
+        // close the queues immediately, and verify every queued request
+        // still gets an answer (graceful drain, not drop).
+        let slow: (String, BackendFactory) = (
+            "slow".into(),
+            Box::new(|| {
+                Ok(Box::new(FnBackend::new("slow", 4, |inputs: &[Vec<f32>]| {
+                    std::thread::sleep(Duration::from_millis(2));
+                    Ok(inputs.to_vec())
+                })) as Box<dyn Backend>)
+            }),
+        );
+        let coord = Coordinator::start(
+            vec![slow],
+            CoordinatorConfig {
+                queue_capacity: 64,
+                policy: BatchPolicy::windowed(4, Duration::from_millis(1)),
+            },
+        )
+        .unwrap();
+        let receivers: Vec<_> =
+            (0..20).map(|i| coord.submit(vec![i as f32]).unwrap()).collect();
+        coord.stop();
+        for (i, rx) in receivers.into_iter().enumerate() {
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+            assert_eq!(resp.output, vec![i as f32], "request {i} lost in drain");
+        }
         coord.shutdown();
     }
 

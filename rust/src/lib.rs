@@ -18,11 +18,13 @@
 //! Layer map:
 //!
 //! * **L3 (this crate)** — the coordinator: request [`coordinator`]
-//!   (batching, routing, backpressure), the [`runtime`] that executes
-//!   AOT-compiled XLA artifacts via PJRT, and every substrate the paper
-//!   depends on: a cycle-accurate [`fpga`] simulator with a power model,
-//!   a pure-Rust [`nn`] training stack, the [`data`] pipeline and the
-//!   [`rl`] (Acrobot-v1 + Q-learning) harness.
+//!   (batching, routing, backpressure), the [`serve`] network subsystem
+//!   (binary wire protocol, TCP server, hot-swappable model registry,
+//!   load generator), the [`runtime`] that executes AOT-compiled XLA
+//!   artifacts via PJRT, and every substrate the paper depends on: a
+//!   cycle-accurate [`fpga`] simulator with a power model, a pure-Rust
+//!   [`nn`] training stack, the [`data`] pipeline and the [`rl`]
+//!   (Acrobot-v1 + Q-learning) harness.
 //! * **L2 (python/compile/model.py)** — the JAX MLP forward graph,
 //!   lowered once to HLO text under `artifacts/`.
 //! * **L1 (python/compile/kernels/)** — the Pallas SPx shift-add matmul
@@ -40,4 +42,5 @@ pub mod nn;
 pub mod quant;
 pub mod rl;
 pub mod runtime;
+pub mod serve;
 pub mod util;

@@ -3,7 +3,10 @@
 //! ```text
 //! edgemlp train            --epochs 5 --out /tmp/mlp.emlp
 //! edgemlp infer            --model /tmp/mlp.emlp --backend fpga
-//! edgemlp serve            --requests 500 --rate 800
+//! edgemlp serve            --addr 127.0.0.1:7878 --model /tmp/mlp.emlp
+//! edgemlp loadgen          --addr 127.0.0.1:7878 --requests 10000
+//! edgemlp ctl              --addr 127.0.0.1:7878 --op stats|ping|swap
+//! edgemlp throughput       --requests 500       # in-process E6 sweep
 //! edgemlp table1           [--no-xla]         # paper Table I
 //! edgemlp fig5                                 # paper Figure 5
 //! edgemlp quant-ablation   --bits 3,4,5,6,7,8  # §3.2 schemes
@@ -29,7 +32,7 @@ use edgemlp::rl::Acrobot;
 use edgemlp::runtime::Runtime;
 use edgemlp::util::cli::Args;
 use edgemlp::util::rng::Pcg32;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 fn main() {
     let args = match Args::parse(std::env::args().skip(1)) {
@@ -45,6 +48,9 @@ fn main() {
         "train" => cmd_train(&args),
         "infer" => cmd_infer(&args),
         "serve" => cmd_serve(&args),
+        "loadgen" => cmd_loadgen(&args),
+        "ctl" => cmd_ctl(&args),
+        "throughput" => cmd_throughput(&args),
         "table1" => cmd_table1(&args),
         "fig5" => cmd_fig5(&args),
         "quant-ablation" => cmd_quant_ablation(&args),
@@ -70,7 +76,8 @@ fn main() {
 fn usage() {
     eprintln!(
         "edgemlp — pipelined matmul + SPx quantization MLP accelerator (paper reproduction)\n\
-         commands: train infer serve table1 fig5 quant-ablation pipeline-ablation rl verilog info"
+         commands: train infer serve loadgen ctl throughput table1 fig5 quant-ablation \
+         pipeline-ablation rl verilog info"
     );
 }
 
@@ -170,7 +177,165 @@ fn cmd_infer(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Start the real TCP server: coordinator + swappable backends behind
+/// the wire protocol. Blocks until killed.
 fn cmd_serve(args: &Args) -> Result<()> {
+    use edgemlp::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+    use edgemlp::serve::{
+        swappable_cpu_factory, swappable_fpga_factory, ModelRegistry, ServeConfig, Server,
+    };
+    use std::time::Duration;
+
+    let addr = args.get("addr", "127.0.0.1:7878");
+    let model_path = PathBuf::from(args.get("model", "/tmp/edgemlp_mlp.emlp"));
+    let random = args.get_bool("random").map_err(anyhow::Error::msg)?;
+    let models = args.get("models", "");
+    let backends = args.get("backends", "cpu,fpga");
+    let queue_capacity: usize =
+        args.get_parse("queue-capacity", 1024).map_err(anyhow::Error::msg)?;
+    let max_batch: usize = args.get_parse("max-batch", 64).map_err(anyhow::Error::msg)?;
+    let window_ms: f64 = args.get_parse("window-ms", 2.0).map_err(anyhow::Error::msg)?;
+    let max_conns: usize = args.get_parse("max-conns", 64).map_err(anyhow::Error::msg)?;
+    let spx_bits: u32 = args.get_parse("spx-bits", 5).map_err(anyhow::Error::msg)?;
+    args.finish().map_err(anyhow::Error::msg)?;
+    // SpxConfig::sp2 asserts on its range; turn bad flags into a CLI
+    // error instead of a panic.
+    if !(3..=15).contains(&spx_bits) {
+        bail!("--spx-bits must be in 3..=15, got {spx_bits}");
+    }
+
+    let mlp = if random {
+        let mut rng = Pcg32::new(2021);
+        Mlp::new(MlpConfig::paper_mnist(), &mut rng)
+    } else {
+        Mlp::load(&model_path).with_context(|| {
+            format!(
+                "load {} (run `edgemlp train` first, or pass --random)",
+                model_path.display()
+            )
+        })?
+    };
+    let registry = ModelRegistry::new("default", mlp, SpxConfig::sp2(spx_bits));
+    for entry in models.split(',').filter(|s| !s.is_empty()) {
+        let (name, path) = entry
+            .split_once('=')
+            .with_context(|| format!("--models entry '{entry}' is not name=path"))?;
+        let model = registry.load_blob(name, Path::new(path))?;
+        println!("registered model '{}' v{} from {path}", model.name, model.version);
+    }
+
+    let mut factories = Vec::new();
+    for b in backends.split(',').filter(|s| !s.is_empty()) {
+        match b.trim() {
+            "cpu" => factories.push(("cpu".to_string(), swappable_cpu_factory(registry.clone()))),
+            "fpga" => factories.push((
+                "fpga".to_string(),
+                swappable_fpga_factory(registry.clone(), AccelConfig::default_fpga()),
+            )),
+            other => bail!("unknown backend '{other}' (cpu|fpga)"),
+        }
+    }
+    let coord = Coordinator::start(
+        factories,
+        CoordinatorConfig {
+            queue_capacity,
+            policy: BatchPolicy::windowed(max_batch, Duration::from_secs_f64(window_ms / 1e3)),
+        },
+    )?;
+    let server = Server::start(
+        coord,
+        registry.clone(),
+        &addr,
+        ServeConfig { max_conns, ..ServeConfig::default() },
+    )?;
+    let active = registry.active();
+    println!(
+        "serving on {} — backends [{backends}], model {} v{} ({}→{}), queue {queue_capacity}, \
+         batch {max_batch}@{window_ms}ms",
+        server.local_addr(),
+        active.name,
+        active.version,
+        active.input_dim(),
+        active.output_dim(),
+    );
+    println!("stop with ctrl-c; `edgemlp ctl --op stats` for live metrics");
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+/// Drive a running server with synthetic load and report latency.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    use edgemlp::serve::{run_loadgen, LoadGenConfig, BACKEND_ANY};
+
+    let addr = args.get("addr", "127.0.0.1:7878");
+    let backend_arg = args.get("backend", "any");
+    let config = LoadGenConfig {
+        requests: args.get_parse("requests", 10_000).map_err(anyhow::Error::msg)?,
+        connections: args.get_parse("connections", 8).map_err(anyhow::Error::msg)?,
+        backend: if backend_arg == "any" {
+            BACKEND_ANY
+        } else {
+            backend_arg.parse().map_err(|e| anyhow::anyhow!("--backend: {e}"))?
+        },
+        dim: args.get_parse("dim", 784).map_err(anyhow::Error::msg)?,
+        rate_rps: args.get_parse("rate", 0.0).map_err(anyhow::Error::msg)?,
+        batch: args.get_parse("batch", 1).map_err(anyhow::Error::msg)?,
+        pipeline: args.get_parse("pipeline", 8).map_err(anyhow::Error::msg)?,
+        seed: args.get_parse("seed", 7).map_err(anyhow::Error::msg)?,
+    };
+    args.finish().map_err(anyhow::Error::msg)?;
+
+    // Resolve hostnames too, so `--addr localhost:7878` works like it
+    // does for `serve` and `ctl` — and probe each resolved address,
+    // because `localhost` is often [::1, 127.0.0.1] and the server may
+    // listen on only one of them.
+    use std::net::ToSocketAddrs;
+    let candidates: Vec<std::net::SocketAddr> = addr
+        .to_socket_addrs()
+        .map_err(|e| anyhow::anyhow!("--addr '{addr}': {e}"))?
+        .collect();
+    let addr = candidates
+        .iter()
+        .find(|a| {
+            std::net::TcpStream::connect_timeout(a, std::time::Duration::from_secs(2)).is_ok()
+        })
+        .copied()
+        .with_context(|| format!("--addr '{addr}': no resolved address accepts connections"))?;
+    let report = run_loadgen(addr, config)?;
+    println!("{}", report.render());
+    Ok(())
+}
+
+/// One-shot control operations against a running server.
+fn cmd_ctl(args: &Args) -> Result<()> {
+    use edgemlp::serve::Client;
+
+    let addr = args.get("addr", "127.0.0.1:7878");
+    let op = args.get("op", "stats");
+    let model = args.get("model", "");
+    args.finish().map_err(anyhow::Error::msg)?;
+
+    let mut client = Client::connect(&addr)?;
+    match op.as_str() {
+        "ping" => {
+            let rtt = client.ping()?;
+            println!("pong from {addr} in {:.1} µs", rtt.as_secs_f64() * 1e6);
+        }
+        "stats" => print!("{}", client.stats()?),
+        "swap" => {
+            if model.is_empty() {
+                bail!("--op swap needs --model <name>");
+            }
+            println!("{}", client.swap_model(&model)?);
+        }
+        other => bail!("unknown op '{other}' (ping|stats|swap)"),
+    }
+    Ok(())
+}
+
+/// The in-process E6 throughput sweep (pre-PR-2 `serve` behavior).
+fn cmd_throughput(args: &Args) -> Result<()> {
     let scale = scale_from(args)?;
     args.finish().map_err(anyhow::Error::msg)?;
     let rows = throughput::run(scale)?;

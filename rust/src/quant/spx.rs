@@ -297,6 +297,52 @@ impl SpxTensor {
         }
     }
 
+    /// Rebuild a tensor from persisted parts — the form the serving
+    /// model registry stores in EMLP blobs: per-element level indices
+    /// plus the output-stage scale. Signs and code planes are re-derived
+    /// from the canonical codebook, so a reloaded tensor decodes
+    /// bit-identically to the one that was saved (pinned by a test).
+    pub fn from_parts(
+        config: &SpxConfig,
+        shape: &[usize],
+        indices: Vec<u16>,
+        scale: f32,
+    ) -> Result<Self, String> {
+        let numel: usize = shape.iter().product();
+        if indices.len() != numel {
+            return Err(format!("{} indices for shape {shape:?}", indices.len()));
+        }
+        let table = SpxCodebook::build(config.clone());
+        let x = config.num_terms();
+        let mut signs = Vec::with_capacity(numel);
+        let mut planes = vec![Vec::with_capacity(numel); x];
+        for &idx in &indices {
+            let idx = idx as usize;
+            if idx >= table.len() {
+                return Err(format!(
+                    "level index {idx} out of range (codebook has {})",
+                    table.len()
+                ));
+            }
+            let level = table.codebook.levels()[idx];
+            signs.push(if level < 0.0 { -1 } else { 1 });
+            let code = table.code_for_level(idx);
+            for (t, plane) in planes.iter_mut().enumerate() {
+                plane.push(code[t]);
+            }
+        }
+        Ok(SpxTensor {
+            config: config.clone(),
+            shape: shape.to_vec(),
+            signs,
+            planes,
+            scale,
+            indices,
+            table,
+            packed: once_cell::sync::OnceCell::new(),
+        })
+    }
+
     /// Element-major packed codes (built once, cached). Requires
     /// `x <= 4` and codes < 128, which every valid [`SpxConfig`]
     /// satisfies for the configurations this crate constructs.
@@ -394,6 +440,30 @@ mod tests {
     use super::*;
     use crate::quant::Calibration;
     use crate::util::check::{assert_allclose, property};
+
+    #[test]
+    fn from_parts_rebuilds_encode_bitwise() {
+        let mut rng = crate::util::rng::Pcg32::new(31);
+        let config = SpxConfig::spx(6, 2);
+        let data: Vec<f32> = (0..40).map(|_| rng.range(-2.0, 2.0) as f32).collect();
+        let t = SpxTensor::encode(&config, &data, &[8, 5], Calibration::MaxAbs);
+        let back =
+            SpxTensor::from_parts(&config, &t.shape, t.indices.clone(), t.scale).unwrap();
+        assert_eq!(back.signs, t.signs);
+        assert_eq!(back.planes, t.planes);
+        assert_eq!(back.decode(), t.decode());
+        assert_eq!(back.decode_shift_add(), t.decode_shift_add());
+        assert_eq!(back.packed().words, t.packed().words);
+    }
+
+    #[test]
+    fn from_parts_rejects_bad_parts() {
+        let config = SpxConfig::sp2(5);
+        // Wrong element count.
+        assert!(SpxTensor::from_parts(&config, &[2, 2], vec![0; 3], 1.0).is_err());
+        // Out-of-range level index.
+        assert!(SpxTensor::from_parts(&config, &[1], vec![u16::MAX], 1.0).is_err());
+    }
 
     #[test]
     fn sp2_split() {

@@ -148,6 +148,39 @@ impl Registry {
 mod tests {
     use super::*;
 
+    /// Unique per-test scratch directory, removed on drop. The old
+    /// fixed `temp_dir()/edgemlp_registry_test{,2,3}` names collided
+    /// under parallel or repeated `cargo test` runs.
+    struct TestDir(PathBuf);
+
+    impl TestDir {
+        fn new(tag: &str) -> TestDir {
+            use std::sync::atomic::{AtomicU32, Ordering};
+            static SEQ: AtomicU32 = AtomicU32::new(0);
+            let nanos = std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .subsec_nanos();
+            let dir = std::env::temp_dir().join(format!(
+                "edgemlp_registry_{tag}_{}_{}_{nanos}",
+                std::process::id(),
+                SEQ.fetch_add(1, Ordering::Relaxed)
+            ));
+            std::fs::create_dir_all(&dir).unwrap();
+            TestDir(dir)
+        }
+
+        fn path(&self) -> &Path {
+            &self.0
+        }
+    }
+
+    impl Drop for TestDir {
+        fn drop(&mut self) {
+            let _ = std::fs::remove_dir_all(&self.0);
+        }
+    }
+
     fn write_fake_manifest(dir: &Path) {
         std::fs::create_dir_all(dir).unwrap();
         std::fs::write(dir.join("m.hlo.txt"), "HloModule fake").unwrap();
@@ -173,9 +206,10 @@ mod tests {
 
     #[test]
     fn parses_manifest() {
-        let dir = std::env::temp_dir().join("edgemlp_registry_test");
-        write_fake_manifest(&dir);
-        let reg = Registry::open(&dir).unwrap();
+        let tmp = TestDir::new("parse");
+        let dir = tmp.path();
+        write_fake_manifest(dir);
+        let reg = Registry::open(dir).unwrap();
         assert_eq!(reg.len(), 1);
         let spec = reg.get("m_b2").unwrap();
         assert_eq!(spec.batch, 2);
@@ -187,18 +221,20 @@ mod tests {
 
     #[test]
     fn unknown_artifact_is_error() {
-        let dir = std::env::temp_dir().join("edgemlp_registry_test2");
-        write_fake_manifest(&dir);
-        let reg = Registry::open(&dir).unwrap();
+        let tmp = TestDir::new("unknown");
+        let dir = tmp.path();
+        write_fake_manifest(dir);
+        let reg = Registry::open(dir).unwrap();
         assert!(reg.get("nope").is_err());
     }
 
     #[test]
     fn missing_file_is_error() {
-        let dir = std::env::temp_dir().join("edgemlp_registry_test3");
-        write_fake_manifest(&dir);
+        let tmp = TestDir::new("missing");
+        let dir = tmp.path();
+        write_fake_manifest(dir);
         std::fs::remove_file(dir.join("m.hlo.txt")).unwrap();
-        assert!(Registry::open(&dir).is_err());
+        assert!(Registry::open(dir).is_err());
     }
 
     #[test]

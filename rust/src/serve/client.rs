@@ -1,0 +1,363 @@
+//! Blocking wire-protocol client plus the load generator the serving
+//! benchmark and `edgemlp loadgen` drive.
+//!
+//! The client supports both call-and-wait methods (`infer`, `stats`,
+//! `swap_model`) and a pipelined pair (`send_infer` / `recv_infer`)
+//! that keeps a window of requests in flight on one connection — the
+//! open-loop load generator uses the latter so the server's dynamic
+//! batcher actually sees batches.
+
+use super::wire::{self, Frame, Opcode, Status, BACKEND_ANY, DEFAULT_MAX_PAYLOAD};
+use crate::util::rng::Pcg32;
+use anyhow::{bail, Context, Result};
+use std::collections::VecDeque;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+/// Outcome of one inference request, load-shed and failure modes
+/// surfaced as data rather than transport errors.
+#[derive(Debug, Clone, PartialEq)]
+pub enum InferReply {
+    /// The model's output vector.
+    Output(Vec<f32>),
+    /// Request shed under backpressure (retry later).
+    Shed(String),
+    /// Any other error status.
+    Failed { status: Status, message: String },
+}
+
+/// Outcome of one `InferBatch` request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BatchReply {
+    Outputs(Vec<Vec<f32>>),
+    Shed(String),
+    Failed { status: Status, message: String },
+}
+
+/// A blocking protocol client over one TCP connection.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    next_id: u64,
+}
+
+impl Client {
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Client> {
+        let stream = TcpStream::connect(addr).context("connect")?;
+        stream.set_nodelay(true).ok();
+        let write_half = stream.try_clone().context("clone stream")?;
+        Ok(Client {
+            reader: BufReader::new(stream),
+            writer: BufWriter::new(write_half),
+            next_id: 0,
+        })
+    }
+
+    fn send(&mut self, opcode: Opcode, payload: Vec<u8>) -> Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        wire::write_frame(&mut self.writer, &Frame::ok(opcode, id, payload))?;
+        self.writer.flush()?;
+        Ok(id)
+    }
+
+    fn recv(&mut self) -> Result<Frame> {
+        wire::read_frame(&mut self.reader, DEFAULT_MAX_PAYLOAD)
+            .map_err(|e| anyhow::anyhow!("read response: {e}"))
+    }
+
+    /// Liveness probe; round-trips an opaque payload.
+    pub fn ping(&mut self) -> Result<Duration> {
+        let t0 = Instant::now();
+        let id = self.send(Opcode::Ping, b"ping".to_vec())?;
+        let resp = self.recv()?;
+        if resp.request_id != id || resp.status != Status::Ok || resp.payload != b"ping" {
+            bail!("bad ping response: {resp:?}");
+        }
+        Ok(t0.elapsed())
+    }
+
+    /// One inference round-trip on `backend` ([`BACKEND_ANY`] lets the
+    /// server round-robin).
+    pub fn infer(&mut self, backend: u32, x: &[f32]) -> Result<InferReply> {
+        let id = self.send(Opcode::Infer, wire::encode_infer(backend, x))?;
+        let (got, reply) = Self::parse_infer(self.recv()?)?;
+        if got != id {
+            bail!("response id {got} for request {id}");
+        }
+        Ok(reply)
+    }
+
+    /// Send an inference without waiting; pair with
+    /// [`Client::recv_infer`]. Replies arrive in send order.
+    pub fn send_infer(&mut self, backend: u32, x: &[f32]) -> Result<u64> {
+        self.send(Opcode::Infer, wire::encode_infer(backend, x))
+    }
+
+    /// Receive the next pipelined inference reply.
+    pub fn recv_infer(&mut self) -> Result<(u64, InferReply)> {
+        let frame = self.recv()?;
+        Self::parse_infer(frame)
+    }
+
+    fn parse_infer(frame: Frame) -> Result<(u64, InferReply)> {
+        let id = frame.request_id;
+        let reply = match frame.status {
+            Status::Ok => InferReply::Output(
+                wire::decode_outputs(&frame.payload).map_err(|e| anyhow::anyhow!(e))?,
+            ),
+            Status::Backpressure => InferReply::Shed(frame.message()),
+            status => InferReply::Failed { status, message: frame.message() },
+        };
+        Ok((id, reply))
+    }
+
+    /// One batched inference round-trip.
+    pub fn infer_batch(&mut self, backend: u32, samples: &[Vec<f32>]) -> Result<BatchReply> {
+        let payload =
+            wire::encode_infer_batch(backend, samples).map_err(|e| anyhow::anyhow!(e))?;
+        let id = self.send(Opcode::InferBatch, payload)?;
+        let resp = self.recv()?;
+        if resp.request_id != id {
+            bail!("response id {} for request {id}", resp.request_id);
+        }
+        Ok(match resp.status {
+            Status::Ok => BatchReply::Outputs(
+                wire::decode_batch_outputs(&resp.payload).map_err(|e| anyhow::anyhow!(e))?,
+            ),
+            Status::Backpressure => BatchReply::Shed(resp.message()),
+            status => BatchReply::Failed { status, message: resp.message() },
+        })
+    }
+
+    /// Metrics snapshot (text, includes latency percentiles and the
+    /// active model).
+    pub fn stats(&mut self) -> Result<String> {
+        let id = self.send(Opcode::Stats, Vec::new())?;
+        let resp = self.recv()?;
+        if resp.request_id != id || resp.status != Status::Ok {
+            bail!("stats failed: {} {}", resp.status, resp.message());
+        }
+        Ok(resp.message())
+    }
+
+    /// Activate a registered model version; returns the server's
+    /// confirmation line.
+    pub fn swap_model(&mut self, name: &str) -> Result<String> {
+        let id = self.send(Opcode::SwapModel, wire::encode_str(name))?;
+        let resp = self.recv()?;
+        if resp.request_id != id {
+            bail!("response id {} for request {id}", resp.request_id);
+        }
+        if resp.status != Status::Ok {
+            bail!("swap to '{name}' failed: {} — {}", resp.status, resp.message());
+        }
+        Ok(resp.message())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Load generator.
+// ---------------------------------------------------------------------------
+
+/// Load-generator knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadGenConfig {
+    /// Total requests across all connections.
+    pub requests: usize,
+    /// Concurrent connections (one thread each).
+    pub connections: usize,
+    /// Backend index, or [`BACKEND_ANY`].
+    pub backend: u32,
+    /// Input dimension of the served model.
+    pub dim: usize,
+    /// Offered load in requests/s across all connections; 0 = closed
+    /// loop (each connection sends as fast as replies return).
+    pub rate_rps: f64,
+    /// Samples per request: 1 = `Infer` frames, >1 = `InferBatch`.
+    pub batch: usize,
+    /// Outstanding requests per connection (pipelining window; only
+    /// meaningful for `batch == 1`).
+    pub pipeline: usize,
+    pub seed: u64,
+}
+
+impl Default for LoadGenConfig {
+    fn default() -> Self {
+        LoadGenConfig {
+            requests: 10_000,
+            connections: 8,
+            backend: BACKEND_ANY,
+            dim: 784,
+            rate_rps: 0.0,
+            batch: 1,
+            pipeline: 1,
+            seed: 7,
+        }
+    }
+}
+
+/// Aggregated result of one load-generator run. `latencies` are
+/// client-observed seconds, send → reply.
+#[derive(Debug, Default, Clone)]
+pub struct LoadGenReport {
+    pub sent: usize,
+    pub ok: usize,
+    pub shed: usize,
+    pub errors: usize,
+    pub latencies: Vec<f64>,
+    pub elapsed_s: f64,
+}
+
+impl LoadGenReport {
+    /// Completed (answered) requests per second.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.elapsed_s > 0.0 {
+            self.ok as f64 / self.elapsed_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn p50_s(&self) -> f64 {
+        crate::util::percentile(&self.latencies, 50.0)
+    }
+
+    pub fn p99_s(&self) -> f64 {
+        crate::util::percentile(&self.latencies, 99.0)
+    }
+
+    pub fn render(&self) -> String {
+        use crate::bench_harness::fmt_time;
+        format!(
+            "sent {} | ok {} | shed {} | errors {} | {:.0} req/s | p50 {} | p99 {}",
+            self.sent,
+            self.ok,
+            self.shed,
+            self.errors,
+            self.throughput_rps(),
+            fmt_time(self.p50_s()),
+            fmt_time(self.p99_s()),
+        )
+    }
+
+    fn merge(&mut self, other: LoadGenReport) {
+        self.sent += other.sent;
+        self.ok += other.ok;
+        self.shed += other.shed;
+        self.errors += other.errors;
+        self.latencies.extend(other.latencies);
+    }
+}
+
+/// Drive `config.requests` inferences at `addr` and aggregate the
+/// outcome. Request payloads are uniform random vectors in `[0, 1)`.
+pub fn run_loadgen(addr: std::net::SocketAddr, config: LoadGenConfig) -> Result<LoadGenReport> {
+    anyhow::ensure!(config.connections > 0, "need at least one connection");
+    anyhow::ensure!(config.batch > 0, "batch must be positive");
+    let per_conn = config.requests.div_ceil(config.connections);
+    let t0 = Instant::now();
+    let mut threads = Vec::new();
+    for c in 0..config.connections {
+        let remaining = config.requests.saturating_sub(c * per_conn);
+        let quota = per_conn.min(remaining);
+        if quota == 0 {
+            break;
+        }
+        threads.push(std::thread::spawn(move || -> Result<LoadGenReport> {
+            connection_worker(addr, config, quota, config.seed ^ (c as u64).wrapping_mul(0x9e37))
+        }));
+    }
+    let mut report = LoadGenReport::default();
+    for t in threads {
+        report.merge(t.join().expect("loadgen thread panicked")?);
+    }
+    report.elapsed_s = t0.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+fn connection_worker(
+    addr: std::net::SocketAddr,
+    config: LoadGenConfig,
+    quota: usize,
+    seed: u64,
+) -> Result<LoadGenReport> {
+    let mut client = Client::connect(addr)?;
+    let mut rng = Pcg32::new(seed);
+    let mut report = LoadGenReport::default();
+    let sample = |rng: &mut Pcg32| -> Vec<f32> {
+        (0..config.dim).map(|_| rng.uniform() as f32).collect()
+    };
+    // Per-connection share of the offered rate, Poisson arrivals.
+    let conn_rate = config.rate_rps / config.connections as f64;
+    let t0 = Instant::now();
+    let mut next_arrival = 0.0f64;
+    let mut pace = |rng: &mut Pcg32| {
+        if conn_rate > 0.0 {
+            let u: f64 = rng.uniform().max(1e-12);
+            next_arrival += -u.ln() / conn_rate;
+            let wait = next_arrival - t0.elapsed().as_secs_f64();
+            if wait > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(wait));
+            }
+        }
+    };
+
+    if config.batch > 1 {
+        let mut sent = 0usize;
+        while sent < quota {
+            let b = config.batch.min(quota - sent);
+            let samples: Vec<Vec<f32>> = (0..b).map(|_| sample(&mut rng)).collect();
+            pace(&mut rng);
+            let t = Instant::now();
+            match client.infer_batch(config.backend, &samples)? {
+                BatchReply::Outputs(rows) => {
+                    anyhow::ensure!(rows.len() == b, "batch reply size {} != {b}", rows.len());
+                    report.ok += b;
+                    report.latencies.push(t.elapsed().as_secs_f64());
+                }
+                BatchReply::Shed(_) => report.shed += b,
+                BatchReply::Failed { .. } => report.errors += b,
+            }
+            sent += b;
+            report.sent += b;
+        }
+        return Ok(report);
+    }
+
+    // Single-sample path with a pipelining window.
+    let window = config.pipeline.max(1);
+    let mut in_flight: VecDeque<(u64, Instant)> = VecDeque::with_capacity(window);
+    let drain_one = |client: &mut Client,
+                     in_flight: &mut VecDeque<(u64, Instant)>,
+                     report: &mut LoadGenReport|
+     -> Result<()> {
+        let (id, sent_at) = in_flight.pop_front().expect("drain on empty window");
+        let (got, reply) = client.recv_infer()?;
+        anyhow::ensure!(got == id, "reply {got} out of order (expected {id})");
+        match reply {
+            InferReply::Output(_) => {
+                report.ok += 1;
+                report.latencies.push(sent_at.elapsed().as_secs_f64());
+            }
+            InferReply::Shed(_) => report.shed += 1,
+            InferReply::Failed { .. } => report.errors += 1,
+        }
+        Ok(())
+    };
+    for _ in 0..quota {
+        if in_flight.len() >= window {
+            drain_one(&mut client, &mut in_flight, &mut report)?;
+        }
+        let x = sample(&mut rng);
+        pace(&mut rng);
+        let id = client.send_infer(config.backend, &x)?;
+        in_flight.push_back((id, Instant::now()));
+        report.sent += 1;
+    }
+    while !in_flight.is_empty() {
+        drain_one(&mut client, &mut in_flight, &mut report)?;
+    }
+    Ok(report)
+}

@@ -1,0 +1,35 @@
+//! Network serving subsystem: the process boundary in front of the
+//! [`crate::coordinator`].
+//!
+//! ```text
+//!  loadgen/client ──TCP──► acceptor ──► per-conn reader ─submit─► coordinator queues
+//!      ▲                                  (bounded pool)              │ batcher
+//!      │                               per-conn writer ◄──response───┘
+//!      └───────────── frames (wire.rs) ────────┘
+//!
+//!  SwapModel ──► ModelRegistry (versioned EMLP + SPx blobs)
+//!                     │ generation counter
+//!                     ▼
+//!        Swappable{Cpu,Fpga}Backend refresh between batches
+//! ```
+//!
+//! * [`wire`] — the versioned length-prefixed binary protocol
+//!   (`docs/wire-protocol.md` is the spec);
+//! * [`server`] — `TcpListener` acceptor + bounded connection pool
+//!   bridging frames onto the coordinator's batching queues;
+//! * [`registry`] — hot-swappable versioned model store with EMLP+SPx
+//!   persistence and registry-following backends;
+//! * [`client`] — blocking client and the open/closed-loop load
+//!   generator behind `edgemlp loadgen` and `BENCH_serving.json`.
+
+pub mod client;
+pub mod registry;
+pub mod server;
+pub mod wire;
+
+pub use client::{run_loadgen, BatchReply, Client, InferReply, LoadGenConfig, LoadGenReport};
+pub use registry::{
+    swappable_cpu_factory, swappable_fpga_factory, ModelRegistry, ModelVersion, SwapError,
+};
+pub use server::{ServeConfig, Server};
+pub use wire::{Frame, Opcode, Status, BACKEND_ANY};

@@ -1,0 +1,508 @@
+//! Hot-swappable model registry: versioned EMLP blobs + SPx code
+//! tensors, atomically activated into running backends.
+//!
+//! The registry holds every registered [`ModelVersion`] behind `Arc`s
+//! and tracks the active one plus a monotonically increasing
+//! *generation* counter. The swappable backends below check the
+//! generation between batches: a batch that is already on a backend
+//! finishes on the model it started with, the next batch picks up the
+//! newly activated version — so `SwapModel` never drops in-flight
+//! requests. Persistence reuses the EMLP blob format (`util::serde`):
+//! a model file carries the fp32 tensors [`Mlp::to_tensors`] emits plus
+//! sidecar tensors with the SPx level indices, per-tensor scales and
+//! per-layer data ranges, so the quantized model reloads bit-identically
+//! without re-running calibration.
+
+use crate::coordinator::backend::{Backend, CpuBackend, FpgaBackend};
+use crate::coordinator::server::BackendFactory;
+use crate::fpga::accelerator::{AccelConfig, Accelerator, QuantizedLayer, QuantizedMlp};
+use crate::fpga::stats::CycleStats;
+use crate::nn::Mlp;
+use crate::quant::spx::{SpxConfig, SpxTensor};
+use crate::quant::Calibration;
+use crate::util::serde::{load_tensors, save_tensors, NamedTensor};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One immutable registered model: the fp32 network plus its SPx
+/// quantization (what the FPGA-sim backend executes).
+#[derive(Debug, Clone)]
+pub struct ModelVersion {
+    pub name: String,
+    /// Monotonic per-name version, starting at 1.
+    pub version: u32,
+    pub mlp: Mlp,
+    pub quantized: QuantizedMlp,
+}
+
+impl ModelVersion {
+    pub fn input_dim(&self) -> usize {
+        self.mlp.input_dim()
+    }
+
+    pub fn output_dim(&self) -> usize {
+        self.mlp.output_dim()
+    }
+}
+
+/// Why a swap was refused.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SwapError {
+    /// No model registered under that name.
+    UnknownModel(String),
+    /// The named model's I/O shape differs from the active one — a swap
+    /// would break requests already sized for the current signature.
+    Incompatible(String),
+}
+
+impl std::fmt::Display for SwapError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SwapError::UnknownModel(name) => write!(f, "unknown model '{name}'"),
+            SwapError::Incompatible(msg) => write!(f, "incompatible model: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SwapError {}
+
+struct RegistryInner {
+    models: BTreeMap<String, Arc<ModelVersion>>,
+    active: Arc<ModelVersion>,
+}
+
+/// Thread-shared model store. See the module docs for the swap
+/// semantics.
+pub struct ModelRegistry {
+    spx: SpxConfig,
+    /// Bumped on every [`ModelRegistry::activate`]; backends compare it
+    /// against the generation they last refreshed at.
+    generation: AtomicU64,
+    inner: Mutex<RegistryInner>,
+}
+
+impl ModelRegistry {
+    /// Create a registry with `mlp` registered under `name` (version 1)
+    /// and active. `spx` is used to quantize every model registered
+    /// through [`ModelRegistry::register_mlp`].
+    pub fn new(name: &str, mlp: Mlp, spx: SpxConfig) -> Arc<ModelRegistry> {
+        let quantized = QuantizedMlp::from_mlp(&mlp, &spx, Calibration::MaxAbs, None);
+        let first = Arc::new(ModelVersion { name: name.to_string(), version: 1, mlp, quantized });
+        let mut models = BTreeMap::new();
+        models.insert(name.to_string(), first.clone());
+        Arc::new(ModelRegistry {
+            spx,
+            generation: AtomicU64::new(1),
+            inner: Mutex::new(RegistryInner { models, active: first }),
+        })
+    }
+
+    /// Register (or re-register, bumping the version) a model under
+    /// `name` without activating it.
+    pub fn register_mlp(&self, name: &str, mlp: Mlp) -> Arc<ModelVersion> {
+        let quantized = QuantizedMlp::from_mlp(&mlp, &self.spx, Calibration::MaxAbs, None);
+        let mut inner = self.inner.lock().unwrap();
+        let version = inner.models.get(name).map(|m| m.version + 1).unwrap_or(1);
+        let model =
+            Arc::new(ModelVersion { name: name.to_string(), version, mlp, quantized });
+        inner.models.insert(name.to_string(), model.clone());
+        model
+    }
+
+    /// Atomically make `name` the active model. Fails if the name is
+    /// unknown or its I/O signature differs from the active model's.
+    /// Returns the model and the new generation.
+    pub fn activate(&self, name: &str) -> Result<(Arc<ModelVersion>, u64), SwapError> {
+        let mut inner = self.inner.lock().unwrap();
+        let model = inner
+            .models
+            .get(name)
+            .cloned()
+            .ok_or_else(|| SwapError::UnknownModel(name.to_string()))?;
+        let active = &inner.active;
+        if model.input_dim() != active.input_dim() || model.output_dim() != active.output_dim()
+        {
+            return Err(SwapError::Incompatible(format!(
+                "'{name}' is {}→{}, active '{}' is {}→{}",
+                model.input_dim(),
+                model.output_dim(),
+                active.name,
+                active.input_dim(),
+                active.output_dim()
+            )));
+        }
+        inner.active = model.clone();
+        // The generation bump happens under the lock so a backend that
+        // observes the new counter also observes the new active model.
+        let generation = self.generation.fetch_add(1, Ordering::SeqCst) + 1;
+        Ok((model, generation))
+    }
+
+    /// The currently active model.
+    pub fn active(&self) -> Arc<ModelVersion> {
+        self.inner.lock().unwrap().active.clone()
+    }
+
+    /// Current swap generation (starts at 1, bumped per activate).
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::SeqCst)
+    }
+
+    /// Registered model names.
+    pub fn names(&self) -> Vec<String> {
+        self.inner.lock().unwrap().models.keys().cloned().collect()
+    }
+
+    /// Look up a registered model without activating it.
+    pub fn get(&self, name: &str) -> Option<Arc<ModelVersion>> {
+        self.inner.lock().unwrap().models.get(name).cloned()
+    }
+
+    /// Persist `name`'s latest version: the fp32 tensors plus SPx
+    /// sidecar tensors (level indices, scales, data ranges, term bits).
+    pub fn save_blob(&self, name: &str, path: &Path) -> Result<()> {
+        let model = self.get(name).with_context(|| format!("unknown model '{name}'"))?;
+        let mut tensors = model.mlp.to_tensors();
+        tensors.push(NamedTensor::new(
+            "spx_term_bits",
+            vec![model.quantized.layers[0].w.config.num_terms()],
+            model.quantized.layers[0]
+                .w
+                .config
+                .term_bits
+                .iter()
+                .map(|&b| b as f32)
+                .collect(),
+        ));
+        for (i, layer) in model.quantized.layers.iter().enumerate() {
+            tensors.push(NamedTensor::new(
+                format!("spx_idx{i}"),
+                layer.w.shape.clone(),
+                layer.w.indices.iter().map(|&ix| ix as f32).collect(),
+            ));
+            tensors.push(NamedTensor::new(format!("spx_scale{i}"), vec![1], vec![layer.w.scale]));
+            tensors.push(NamedTensor::new(
+                format!("spx_dscale{i}"),
+                vec![1],
+                vec![layer.d_scale],
+            ));
+        }
+        save_tensors(path, &tensors)
+    }
+
+    /// Load a blob written by [`ModelRegistry::save_blob`] (or a plain
+    /// `Mlp::save` checkpoint, which is then quantized with the
+    /// registry's SPx config) and register it under `name`.
+    pub fn load_blob(&self, name: &str, path: &Path) -> Result<Arc<ModelVersion>> {
+        let tensors =
+            load_tensors(path).with_context(|| format!("load model blob {}", path.display()))?;
+        let mlp = Mlp::from_tensors(&tensors)?;
+        let find = |tag: &str| tensors.iter().find(|t| t.name == tag);
+        let quantized = match find("spx_term_bits") {
+            None => QuantizedMlp::from_mlp(&mlp, &self.spx, Calibration::MaxAbs, None),
+            Some(bits) => {
+                // Validate before SpxConfig::new / SpxCodebook::build /
+                // PackedCodes, whose asserts would panic on a corrupt
+                // blob (the packed layout supports at most 4 terms).
+                let term_bits: Vec<u32> = bits.data.iter().map(|&b| b as u32).collect();
+                if term_bits.is_empty()
+                    || term_bits.len() > 4
+                    || term_bits.iter().any(|&b| !(1..=7).contains(&b))
+                {
+                    bail!("spx_term_bits {:?} out of range", bits.data);
+                }
+                let config = SpxConfig::new(term_bits);
+                let mut layers = Vec::with_capacity(mlp.layers.len());
+                for (i, layer) in mlp.layers.iter().enumerate() {
+                    let idx = find(&format!("spx_idx{i}"))
+                        .with_context(|| format!("blob missing spx_idx{i}"))?;
+                    let scale = find(&format!("spx_scale{i}"))
+                        .with_context(|| format!("blob missing spx_scale{i}"))?;
+                    let d_scale = find(&format!("spx_dscale{i}"))
+                        .with_context(|| format!("blob missing spx_dscale{i}"))?;
+                    let indices: Vec<u16> = idx
+                        .data
+                        .iter()
+                        .map(|&v| {
+                            if v < 0.0 || v.fract() != 0.0 || v > u16::MAX as f32 {
+                                bail!("spx_idx{i}: bad level index {v}")
+                            } else {
+                                Ok(v as u16)
+                            }
+                        })
+                        .collect::<Result<_>>()?;
+                    let scale_val = scale
+                        .data
+                        .first()
+                        .copied()
+                        .with_context(|| format!("spx_scale{i} is empty"))?;
+                    let d_scale_val = d_scale
+                        .data
+                        .first()
+                        .copied()
+                        .with_context(|| format!("spx_dscale{i} is empty"))?;
+                    let w = SpxTensor::from_parts(&config, &idx.shape, indices, scale_val)
+                        .map_err(|e| anyhow::anyhow!("spx_idx{i}: {e}"))?;
+                    if w.shape != vec![layer.w.rows, layer.w.cols] {
+                        bail!(
+                            "spx_idx{i} shape {:?} vs weight {}x{}",
+                            w.shape,
+                            layer.w.rows,
+                            layer.w.cols
+                        );
+                    }
+                    layers.push(QuantizedLayer {
+                        w,
+                        b: layer.b.clone(),
+                        activation: layer.activation,
+                        d_scale: d_scale_val,
+                    });
+                }
+                QuantizedMlp { layers }
+            }
+        };
+        let mut inner = self.inner.lock().unwrap();
+        let version = inner.models.get(name).map(|m| m.version + 1).unwrap_or(1);
+        let model = Arc::new(ModelVersion {
+            name: name.to_string(),
+            version,
+            mlp,
+            quantized,
+        });
+        inner.models.insert(name.to_string(), model.clone());
+        Ok(model)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Swappable backends: coordinator backends that refresh themselves from
+// the registry between batches.
+// ---------------------------------------------------------------------------
+
+/// CPU backend following the registry's active model.
+pub struct SwappableCpuBackend {
+    registry: Arc<ModelRegistry>,
+    seen: u64,
+    inner: CpuBackend,
+}
+
+impl SwappableCpuBackend {
+    pub fn new(registry: Arc<ModelRegistry>) -> Self {
+        let seen = registry.generation();
+        let inner = CpuBackend::new(registry.active().mlp.clone());
+        SwappableCpuBackend { registry, seen, inner }
+    }
+
+    fn refresh(&mut self) {
+        let generation = self.registry.generation();
+        if generation != self.seen {
+            self.inner = CpuBackend::new(self.registry.active().mlp.clone());
+            self.seen = generation;
+        }
+    }
+}
+
+impl Backend for SwappableCpuBackend {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn max_batch(&self) -> usize {
+        self.inner.max_batch()
+    }
+
+    fn infer(&mut self, inputs: &[Vec<f32>]) -> Result<(Vec<Vec<f32>>, Option<CycleStats>)> {
+        self.refresh();
+        self.inner.infer(inputs)
+    }
+}
+
+/// FPGA-simulator backend following the registry's active model: a swap
+/// rebuilds the [`Accelerator`] (decoded-weight caches and all) from
+/// the new version's SPx tensors.
+pub struct SwappableFpgaBackend {
+    registry: Arc<ModelRegistry>,
+    config: AccelConfig,
+    seen: u64,
+    inner: FpgaBackend,
+}
+
+impl SwappableFpgaBackend {
+    pub fn new(registry: Arc<ModelRegistry>, config: AccelConfig) -> Self {
+        let seen = registry.generation();
+        let accel = Accelerator::new(registry.active().quantized.clone(), config);
+        SwappableFpgaBackend { registry, config, seen, inner: FpgaBackend::new(accel) }
+    }
+
+    fn refresh(&mut self) {
+        let generation = self.registry.generation();
+        if generation != self.seen {
+            let accel = Accelerator::new(self.registry.active().quantized.clone(), self.config);
+            self.inner = FpgaBackend::new(accel);
+            self.seen = generation;
+        }
+    }
+}
+
+impl Backend for SwappableFpgaBackend {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn max_batch(&self) -> usize {
+        self.inner.max_batch()
+    }
+
+    fn infer(&mut self, inputs: &[Vec<f32>]) -> Result<(Vec<Vec<f32>>, Option<CycleStats>)> {
+        self.refresh();
+        self.inner.infer(inputs)
+    }
+}
+
+/// Coordinator factory for a registry-backed CPU worker.
+pub fn swappable_cpu_factory(registry: Arc<ModelRegistry>) -> BackendFactory {
+    Box::new(move || Ok(Box::new(SwappableCpuBackend::new(registry)) as Box<dyn Backend>))
+}
+
+/// Coordinator factory for a registry-backed FPGA-sim worker.
+pub fn swappable_fpga_factory(
+    registry: Arc<ModelRegistry>,
+    config: AccelConfig,
+) -> BackendFactory {
+    Box::new(move || {
+        Ok(Box::new(SwappableFpgaBackend::new(registry, config)) as Box<dyn Backend>)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::mlp::MlpConfig;
+    use crate::nn::activations::Activation;
+    use crate::util::rng::Pcg32;
+    use std::path::PathBuf;
+
+    fn small_mlp(seed: u64) -> Mlp {
+        let mut rng = Pcg32::new(seed);
+        Mlp::new(
+            MlpConfig {
+                sizes: vec![8, 6, 3],
+                activations: vec![Activation::Sigmoid, Activation::Sigmoid],
+            },
+            &mut rng,
+        )
+    }
+
+    fn registry() -> Arc<ModelRegistry> {
+        ModelRegistry::new("default", small_mlp(1), SpxConfig::sp2(5))
+    }
+
+    struct TestFile(PathBuf);
+
+    impl TestFile {
+        fn new(tag: &str) -> TestFile {
+            TestFile(std::env::temp_dir().join(format!(
+                "edgemlp_model_{tag}_{}_{}.emlp",
+                std::process::id(),
+                std::time::SystemTime::now()
+                    .duration_since(std::time::UNIX_EPOCH)
+                    .unwrap()
+                    .subsec_nanos()
+            )))
+        }
+    }
+
+    impl Drop for TestFile {
+        fn drop(&mut self) {
+            let _ = std::fs::remove_file(&self.0);
+        }
+    }
+
+    #[test]
+    fn register_and_activate_bumps_generation() {
+        let reg = registry();
+        assert_eq!(reg.generation(), 1);
+        assert_eq!(reg.active().version, 1);
+        let v = reg.register_mlp("retrained", small_mlp(2));
+        assert_eq!(v.version, 1);
+        // Re-register under the same name bumps the version.
+        assert_eq!(reg.register_mlp("retrained", small_mlp(3)).version, 2);
+        let (model, generation) = reg.activate("retrained").unwrap();
+        assert_eq!(model.version, 2);
+        assert_eq!(generation, 2);
+        assert_eq!(reg.active().name, "retrained");
+        assert_eq!(reg.names(), vec!["default".to_string(), "retrained".to_string()]);
+    }
+
+    #[test]
+    fn activate_unknown_and_incompatible_rejected() {
+        let reg = registry();
+        assert!(matches!(
+            reg.activate("nope"),
+            Err(SwapError::UnknownModel(name)) if name == "nope"
+        ));
+        let mut rng = Pcg32::new(9);
+        let wide = Mlp::new(
+            MlpConfig { sizes: vec![16, 4, 3], activations: vec![Activation::Sigmoid; 2] },
+            &mut rng,
+        );
+        reg.register_mlp("wide", wide);
+        assert!(matches!(reg.activate("wide"), Err(SwapError::Incompatible(_))));
+        // A refused swap leaves the active model and generation alone.
+        assert_eq!(reg.active().name, "default");
+        assert_eq!(reg.generation(), 1);
+    }
+
+    #[test]
+    fn blob_roundtrip_preserves_quantized_model_bitwise() {
+        let reg = registry();
+        let file = TestFile::new("roundtrip");
+        reg.save_blob("default", &file.0).unwrap();
+        let back = reg.load_blob("reloaded", &file.0).unwrap();
+        let orig = reg.get("default").unwrap();
+        for (a, b) in back.quantized.layers.iter().zip(&orig.quantized.layers) {
+            assert_eq!(a.w.decode(), b.w.decode());
+            assert_eq!(a.w.indices, b.w.indices);
+            assert_eq!(a.d_scale, b.d_scale);
+            assert_eq!(a.b, b.b);
+        }
+        assert_eq!(back.mlp.layers[0].w.data, orig.mlp.layers[0].w.data);
+    }
+
+    #[test]
+    fn plain_checkpoint_loads_and_requantizes() {
+        let reg = registry();
+        let file = TestFile::new("plain");
+        small_mlp(4).save(&file.0).unwrap();
+        let model = reg.load_blob("ckpt", &file.0).unwrap();
+        assert_eq!(model.quantized.layers.len(), 2);
+        assert_eq!(model.input_dim(), 8);
+    }
+
+    #[test]
+    fn swappable_backends_follow_activation() {
+        let reg = registry();
+        let v2 = small_mlp(2);
+        reg.register_mlp("v2", v2.clone());
+        let x = vec![0.4f32; 8];
+
+        let mut cpu = SwappableCpuBackend::new(reg.clone());
+        let (before, _) = cpu.infer(&[x.clone()]).unwrap();
+        assert_eq!(before[0], reg.get("default").unwrap().mlp.forward_one(&x));
+
+        let mut fpga =
+            SwappableFpgaBackend::new(reg.clone(), AccelConfig::default_fpga());
+        let (fpga_before, _) = fpga.infer(&[x.clone()]).unwrap();
+
+        reg.activate("v2").unwrap();
+        let (after, _) = cpu.infer(&[x.clone()]).unwrap();
+        assert_eq!(after[0], v2.forward_one(&x));
+        assert_ne!(before[0], after[0], "swap did not change cpu outputs");
+
+        let (fpga_after, _) = fpga.infer(&[x.clone()]).unwrap();
+        assert_ne!(fpga_before[0], fpga_after[0], "swap did not change fpga outputs");
+    }
+}

@@ -1,0 +1,536 @@
+//! The TCP serving front-end: a `TcpListener` acceptor plus a bounded
+//! pool of per-connection worker threads layered on the
+//! [`crate::coordinator::Coordinator`].
+//!
+//! Each accepted connection gets a *reader* thread (decodes frames,
+//! submits into the coordinator's batching queues) and a *writer*
+//! thread (resolves responses in submission order and puts them back on
+//! the wire, echoing each request's id). Because the reader never waits
+//! for inference to finish, a single connection can keep many requests
+//! in flight — that pipelining is what lets the dynamic batcher form
+//! real batches from one client.
+//!
+//! Load shedding and shutdown map onto protocol status codes
+//! ([`SubmitError::Backpressure`] → `Status::Backpressure`,
+//! [`SubmitError::Closed`] → `Status::Closed`); connections over the
+//! pool limit are answered with a `Status::Busy` error frame and
+//! dropped.
+
+use super::registry::ModelRegistry;
+use super::wire::{self, Frame, Opcode, ReadError, Status, BACKEND_ANY, DEFAULT_MAX_PAYLOAD};
+use crate::coordinator::request::InferResult;
+use crate::coordinator::server::{Coordinator, SubmitError};
+use anyhow::{Context, Result};
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Server knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Connection-pool bound; further connections get `Status::Busy`.
+    pub max_conns: usize,
+    /// Per-frame payload cap.
+    pub max_payload: u32,
+    /// How long the writer waits for one inference result before
+    /// answering `Status::Internal`.
+    pub response_timeout: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_conns: 64,
+            max_payload: DEFAULT_MAX_PAYLOAD,
+            response_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// How often blocked connection reads wake up to check the stop flag.
+const READ_TICK: Duration = Duration::from_millis(100);
+
+struct Shared {
+    coord: Coordinator,
+    registry: Arc<ModelRegistry>,
+    config: ServeConfig,
+    /// Input dimension of the served model — invariant for the server's
+    /// lifetime (`ModelRegistry::activate` refuses dim changes), cached
+    /// here so per-frame validation does not lock the registry.
+    input_dim: usize,
+    stop: AtomicBool,
+    round_robin: AtomicUsize,
+    active_conns: AtomicUsize,
+    conn_seq: AtomicUsize,
+}
+
+/// A running server. [`Server::shutdown`] (or drop) stops accepting,
+/// winds down connections, and drains the coordinator.
+pub struct Server {
+    shared: Arc<Shared>,
+    local_addr: SocketAddr,
+    acceptor: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl Server {
+    /// Bind `addr` (use port 0 for an ephemeral port) and start
+    /// accepting. The server owns the coordinator; submit paths go
+    /// through the wire protocol from here on.
+    pub fn start(
+        coord: Coordinator,
+        registry: Arc<ModelRegistry>,
+        addr: &str,
+        config: ServeConfig,
+    ) -> Result<Server> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let local_addr = listener.local_addr()?;
+        let input_dim = registry.active().input_dim();
+        let shared = Arc::new(Shared {
+            coord,
+            registry,
+            config,
+            input_dim,
+            stop: AtomicBool::new(false),
+            round_robin: AtomicUsize::new(0),
+            active_conns: AtomicUsize::new(0),
+            conn_seq: AtomicUsize::new(0),
+        });
+        let conns = Arc::new(Mutex::new(Vec::new()));
+        let acceptor = {
+            let shared = shared.clone();
+            let conns = conns.clone();
+            std::thread::Builder::new()
+                .name("edgemlp-accept".into())
+                .spawn(move || accept_loop(listener, shared, conns))
+                .context("spawn acceptor")?
+        };
+        Ok(Server { shared, local_addr, acceptor: Some(acceptor), conns })
+    }
+
+    /// The bound address (resolves ephemeral ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Shared serving metrics (the coordinator's sink).
+    pub fn metrics(&self) -> Arc<crate::coordinator::Metrics> {
+        self.shared.coord.metrics()
+    }
+
+    /// Stop accepting, wind down connection threads (their in-flight
+    /// responses are still written), close the coordinator queues and
+    /// join everything.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        // Unblock the acceptor with a throwaway connection. A bind to
+        // 0.0.0.0/:: is not connectable on every platform — aim the
+        // wakeup at loopback on the bound port instead.
+        let mut wake = self.local_addr;
+        if wake.ip().is_unspecified() {
+            match wake.ip() {
+                std::net::IpAddr::V4(_) => {
+                    wake.set_ip(std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST))
+                }
+                std::net::IpAddr::V6(_) => {
+                    wake.set_ip(std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST))
+                }
+            }
+        }
+        let _ = TcpStream::connect_timeout(&wake, Duration::from_secs(1));
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        for h in self.conns.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+        // Queues close only after every connection finished submitting;
+        // workers drain what is left and exit (joined by Coordinator's
+        // Drop when `shared` goes away).
+        self.shared.coord.stop();
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        if !self.shared.stop.load(Ordering::SeqCst) {
+            self.stop_and_join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    shared: Arc<Shared>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+) {
+    loop {
+        let (stream, _peer) = match listener.accept() {
+            Ok(s) => s,
+            Err(_) if shared.stop.load(Ordering::SeqCst) => return,
+            Err(_) => {
+                // Persistent failures (e.g. EMFILE when the fd limit is
+                // hit) must not busy-spin the acceptor core.
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        };
+        if shared.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        // Reap finished handlers so the vec stays bounded.
+        {
+            let mut held = conns.lock().unwrap();
+            let mut live = Vec::with_capacity(held.len());
+            for h in held.drain(..) {
+                if h.is_finished() {
+                    let _ = h.join();
+                } else {
+                    live.push(h);
+                }
+            }
+            *held = live;
+        }
+        if shared.active_conns.load(Ordering::SeqCst) >= shared.config.max_conns {
+            // Over the pool bound: answer Busy, then close carefully so
+            // the frame survives (see `drain_then_close`).
+            {
+                let mut w = BufWriter::new(&stream);
+                let frame = Frame::error(
+                    Opcode::Ping,
+                    0,
+                    Status::Busy,
+                    "server connection limit reached",
+                );
+                let _ = wire::write_frame(&mut w, &frame);
+                let _ = w.flush();
+            }
+            // Off-thread: the drain can dwell up to its deadline and
+            // must not stall the acceptor during a connection flood.
+            std::thread::spawn(move || drain_then_close(stream));
+            continue;
+        }
+        shared.active_conns.fetch_add(1, Ordering::SeqCst);
+        let id = shared.conn_seq.fetch_add(1, Ordering::Relaxed);
+        let shared2 = shared.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("edgemlp-conn-{id}"))
+            .spawn(move || {
+                let _guard = ConnGuard(shared2.clone());
+                handle_connection(stream, &shared2);
+            });
+        match handle {
+            Ok(h) => conns.lock().unwrap().push(h),
+            Err(_) => {
+                shared.active_conns.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+    }
+}
+
+struct ConnGuard(Arc<Shared>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.active_conns.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Work items handed from the reader to the writer, in request order.
+enum Outgoing {
+    /// Response already known (ping, stats, errors, swap results).
+    Ready(Frame),
+    /// Waiting on one coordinator response.
+    Pending { request_id: u64, rx: Receiver<InferResult> },
+    /// Waiting on a whole submitted batch.
+    PendingBatch { request_id: u64, receivers: Vec<Receiver<InferResult>> },
+}
+
+fn handle_connection(stream: TcpStream, shared: &Shared) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(READ_TICK));
+    let write_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let _ = write_stream.set_write_timeout(Some(Duration::from_secs(10)));
+    let (tx, rx) = channel::<Outgoing>();
+    let response_timeout = shared.config.response_timeout;
+    let writer = std::thread::Builder::new()
+        .name("edgemlp-conn-writer".into())
+        .spawn(move || writer_loop(write_stream, rx, response_timeout));
+    let writer = match writer {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+
+    let mut reader = BufReader::new(stream);
+    let mut framing_error = false;
+    loop {
+        match wire::read_frame_with(&mut reader, shared.config.max_payload, Some(&shared.stop))
+        {
+            Ok(frame) => {
+                if !dispatch(frame, &tx, shared) {
+                    break;
+                }
+            }
+            Err(ReadError::Eof) | Err(ReadError::Stopped) | Err(ReadError::Io(_)) => break,
+            Err(ReadError::Protocol(msg)) => {
+                // The stream position is unreliable after a framing
+                // error: answer once, then close.
+                let _ = tx.send(Outgoing::Ready(Frame::error(
+                    Opcode::Ping,
+                    0,
+                    Status::BadRequest,
+                    &msg,
+                )));
+                framing_error = true;
+                break;
+            }
+        }
+    }
+    // Dropping the sender lets the writer drain every queued/pending
+    // response before exiting — in-flight work is never dropped.
+    drop(tx);
+    let _ = writer.join();
+    if framing_error {
+        // A malformed stream usually has more bytes in flight; closing
+        // with unread data would RST away the BadRequest frame.
+        drain_then_close(reader.into_inner());
+    }
+}
+
+/// Close a socket so that a just-written error frame survives: send our
+/// FIN first, then briefly discard whatever the peer already sent —
+/// closing with unread receive data turns into a RST that destroys
+/// in-flight output on common TCP stacks.
+fn drain_then_close(mut stream: TcpStream) {
+    use std::io::Read;
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+    let mut sink = [0u8; 4096];
+    let deadline = std::time::Instant::now() + Duration::from_millis(250);
+    while std::time::Instant::now() < deadline {
+        match stream.read(&mut sink) {
+            Ok(0) => break, // peer acknowledged the FIN and closed
+            Ok(_) => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) => {}
+            Err(_) => break,
+        }
+    }
+}
+
+fn writer_loop(stream: TcpStream, rx: Receiver<Outgoing>, response_timeout: Duration) {
+    let mut w = BufWriter::new(stream);
+    for item in rx {
+        let frame = resolve(item, response_timeout);
+        if wire::write_frame(&mut w, &frame).is_err() || w.flush().is_err() {
+            return;
+        }
+    }
+}
+
+/// Turn one queued work item into the frame that goes on the wire.
+fn resolve(item: Outgoing, timeout: Duration) -> Frame {
+    match item {
+        Outgoing::Ready(frame) => frame,
+        Outgoing::Pending { request_id, rx } => match rx.recv_timeout(timeout) {
+            Ok(Ok(resp)) => {
+                Frame::ok(Opcode::Infer, request_id, wire::encode_outputs(&resp.output))
+            }
+            Ok(Err(msg)) => Frame::error(Opcode::Infer, request_id, Status::BackendError, &msg),
+            Err(_) => Frame::error(
+                Opcode::Infer,
+                request_id,
+                Status::Internal,
+                "response channel lost or timed out",
+            ),
+        },
+        Outgoing::PendingBatch { request_id, receivers } => {
+            // One deadline for the whole batch — a per-receiver timeout
+            // would multiply worst-case head-of-line blocking by the
+            // batch size.
+            let deadline = std::time::Instant::now() + timeout;
+            let mut rows = Vec::with_capacity(receivers.len());
+            for rx in receivers {
+                let left = deadline.saturating_duration_since(std::time::Instant::now());
+                match rx.recv_timeout(left) {
+                    Ok(Ok(resp)) => rows.push(resp.output),
+                    Ok(Err(msg)) => {
+                        return Frame::error(
+                            Opcode::InferBatch,
+                            request_id,
+                            Status::BackendError,
+                            &msg,
+                        )
+                    }
+                    Err(_) => {
+                        return Frame::error(
+                            Opcode::InferBatch,
+                            request_id,
+                            Status::Internal,
+                            "response channel lost or timed out",
+                        )
+                    }
+                }
+            }
+            Frame::ok(Opcode::InferBatch, request_id, wire::encode_batch_outputs(&rows))
+        }
+    }
+}
+
+/// Handle one request frame. Returns `false` to close the connection.
+fn dispatch(frame: Frame, tx: &Sender<Outgoing>, shared: &Shared) -> bool {
+    let id = frame.request_id;
+    let out = match frame.opcode {
+        Opcode::Ping => Outgoing::Ready(Frame::ok(Opcode::Ping, id, frame.payload)),
+        Opcode::Stats => {
+            let snap = shared.coord.metrics().snapshot();
+            let active = shared.registry.active();
+            let text = format!(
+                "model: {} v{} (generation {})\nconnections: {}\n{}",
+                active.name,
+                active.version,
+                shared.registry.generation(),
+                shared.active_conns.load(Ordering::SeqCst),
+                snap.render()
+            );
+            Outgoing::Ready(Frame::ok(Opcode::Stats, id, text.into_bytes()))
+        }
+        Opcode::SwapModel => match wire::decode_str(&frame.payload) {
+            Err(e) => bad_request(Opcode::SwapModel, id, &e),
+            Ok(name) => match shared.registry.activate(&name) {
+                Ok((model, generation)) => Outgoing::Ready(Frame::ok(
+                    Opcode::SwapModel,
+                    id,
+                    format!(
+                        "model {} v{} active (generation {generation})",
+                        model.name, model.version
+                    )
+                    .into_bytes(),
+                )),
+                Err(e @ super::registry::SwapError::UnknownModel(_)) => Outgoing::Ready(
+                    Frame::error(Opcode::SwapModel, id, Status::UnknownModel, &e.to_string()),
+                ),
+                Err(e) => bad_request(Opcode::SwapModel, id, &e.to_string()),
+            },
+        },
+        Opcode::Infer => match wire::decode_infer(&frame.payload) {
+            Err(e) => bad_request(Opcode::Infer, id, &e),
+            Ok((backend, x)) => match check_dim(shared, x.len())
+                .and_then(|()| resolve_backend(shared, backend))
+            {
+                Err(out) => Outgoing::Ready(out.into_frame(Opcode::Infer, id)),
+                Ok(idx) => match shared.coord.try_submit_to(idx, x) {
+                    Ok(rx) => Outgoing::Pending { request_id: id, rx },
+                    Err(e) => Outgoing::Ready(submit_error_frame(Opcode::Infer, id, e)),
+                },
+            },
+        },
+        Opcode::InferBatch => match wire::decode_infer_batch(&frame.payload) {
+            Err(e) => bad_request(Opcode::InferBatch, id, &e),
+            Ok((backend, samples)) => match check_dim(shared, samples[0].len())
+                .and_then(|()| resolve_backend(shared, backend))
+            {
+                Err(out) => Outgoing::Ready(out.into_frame(Opcode::InferBatch, id)),
+                Ok(idx) => {
+                    let total = samples.len();
+                    let mut receivers = Vec::with_capacity(total);
+                    let mut failed = None;
+                    for x in samples {
+                        match shared.coord.try_submit_to(idx, x) {
+                            Ok(rx) => receivers.push(rx),
+                            Err(e) => {
+                                failed = Some(e);
+                                break;
+                            }
+                        }
+                    }
+                    match failed {
+                        // Partially submitted samples still run; their
+                        // receivers are dropped and the batch is
+                        // reported shed as a unit.
+                        Some(SubmitError::Backpressure) => Outgoing::Ready(Frame::error(
+                            Opcode::InferBatch,
+                            id,
+                            Status::Backpressure,
+                            &format!("queue full after {}/{total} samples", receivers.len()),
+                        )),
+                        Some(e) => Outgoing::Ready(submit_error_frame(Opcode::InferBatch, id, e)),
+                        None => Outgoing::PendingBatch { request_id: id, receivers },
+                    }
+                }
+            },
+        },
+    };
+    tx.send(out).is_ok()
+}
+
+fn bad_request(opcode: Opcode, id: u64, msg: &str) -> Outgoing {
+    Outgoing::Ready(Frame::error(opcode, id, Status::BadRequest, msg))
+}
+
+/// A backend-resolution failure, opcode-agnostic.
+struct BackendLookupError(Status, String);
+
+impl BackendLookupError {
+    fn into_frame(self, opcode: Opcode, id: u64) -> Frame {
+        Frame::error(opcode, id, self.0, &self.1)
+    }
+}
+
+/// Reject wrong-dimension payloads before they reach a queue: a batch
+/// formed by the coordinator mixes requests from every connection, and
+/// one bad sample would fail the whole batch (`stage_inputs` errors are
+/// batch-wide) — other clients' valid requests must not pay for it.
+fn check_dim(shared: &Shared, got: usize) -> Result<(), BackendLookupError> {
+    let want = shared.input_dim;
+    if got != want {
+        return Err(BackendLookupError(
+            Status::BadRequest,
+            format!("input dimension {got} != model input {want}"),
+        ));
+    }
+    Ok(())
+}
+
+fn resolve_backend(shared: &Shared, requested: u32) -> Result<usize, BackendLookupError> {
+    let n = shared.coord.backend_names().len();
+    if requested == BACKEND_ANY {
+        return Ok(shared.round_robin.fetch_add(1, Ordering::Relaxed) % n);
+    }
+    let idx = requested as usize;
+    if idx >= n {
+        return Err(BackendLookupError(
+            Status::UnknownBackend,
+            format!("backend index {idx} out of range ({n} backends)"),
+        ));
+    }
+    Ok(idx)
+}
+
+fn submit_error_frame(opcode: Opcode, id: u64, e: SubmitError) -> Frame {
+    match e {
+        SubmitError::Backpressure => {
+            Frame::error(opcode, id, Status::Backpressure, "queue full — retry later")
+        }
+        SubmitError::Closed => {
+            Frame::error(opcode, id, Status::Closed, "coordinator shutting down")
+        }
+        SubmitError::UnknownBackend => {
+            Frame::error(opcode, id, Status::UnknownBackend, "unknown backend")
+        }
+    }
+}

@@ -1,0 +1,593 @@
+//! Versioned, length-prefixed binary wire protocol for the TCP serving
+//! subsystem (`docs/wire-protocol.md` is the normative spec).
+//!
+//! Frame layout (little-endian, 20-byte fixed header):
+//!
+//! ```text
+//! magic "EMWP" | u16 version | u8 opcode | u8 status | u64 request_id |
+//! u32 payload_len | payload bytes
+//! ```
+//!
+//! Requests always carry status [`Status::Ok`]; responses echo the
+//! request's opcode and id. A non-`Ok` status turns the payload into a
+//! UTF-8 error message. Coordinator-level failure modes map onto the
+//! status byte (`SubmitError::Backpressure` → [`Status::Backpressure`],
+//! `SubmitError::Closed` → [`Status::Closed`]) so clients can tell
+//! "retry later" apart from "server going away" without parsing text.
+
+use std::io::{ErrorKind, Read, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Frame magic: "EMWP" (EdgeMlp Wire Protocol).
+pub const MAGIC: [u8; 4] = *b"EMWP";
+/// Protocol version; bumped on any incompatible frame-layout change.
+pub const VERSION: u16 = 1;
+/// Fixed header size in bytes.
+pub const HEADER_LEN: usize = 20;
+/// Default cap on payload size — guards the server (and client) against
+/// hostile or corrupt length prefixes.
+pub const DEFAULT_MAX_PAYLOAD: u32 = 16 * 1024 * 1024;
+/// `Infer`/`InferBatch` backend field value asking the server to
+/// round-robin across its backends.
+pub const BACKEND_ANY: u32 = u32::MAX;
+
+/// Request kinds a client can send; responses echo the opcode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Opcode {
+    /// Liveness probe; the response echoes the request payload.
+    Ping = 0,
+    /// One flattened sample → one output vector.
+    Infer = 1,
+    /// A batch of same-dimension samples in one frame.
+    InferBatch = 2,
+    /// Metrics snapshot (text payload with latency percentiles).
+    Stats = 3,
+    /// Activate a registered model version by name.
+    SwapModel = 4,
+}
+
+impl Opcode {
+    pub fn from_u8(v: u8) -> Option<Opcode> {
+        match v {
+            0 => Some(Opcode::Ping),
+            1 => Some(Opcode::Infer),
+            2 => Some(Opcode::InferBatch),
+            3 => Some(Opcode::Stats),
+            4 => Some(Opcode::SwapModel),
+            _ => None,
+        }
+    }
+}
+
+/// Response status byte. Anything but `Ok` makes the payload a UTF-8
+/// error message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Status {
+    Ok = 0,
+    /// Load shed: the target backend queue was full (retry later).
+    Backpressure = 1,
+    /// The coordinator is shutting down.
+    Closed = 2,
+    /// No backend at the requested index.
+    UnknownBackend = 3,
+    /// Request frame decoded but its payload was malformed.
+    BadRequest = 4,
+    /// The backend accepted the request and then failed.
+    BackendError = 5,
+    /// `SwapModel` named a model the registry does not hold.
+    UnknownModel = 6,
+    /// Connection rejected: the server is at its connection limit.
+    Busy = 7,
+    /// Unexpected server-side failure (response channel lost, timeout).
+    Internal = 8,
+}
+
+impl Status {
+    pub fn from_u8(v: u8) -> Option<Status> {
+        match v {
+            0 => Some(Status::Ok),
+            1 => Some(Status::Backpressure),
+            2 => Some(Status::Closed),
+            3 => Some(Status::UnknownBackend),
+            4 => Some(Status::BadRequest),
+            5 => Some(Status::BackendError),
+            6 => Some(Status::UnknownModel),
+            7 => Some(Status::Busy),
+            8 => Some(Status::Internal),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Status {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+/// One protocol frame, request or response.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub opcode: Opcode,
+    pub status: Status,
+    pub request_id: u64,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    /// A success frame (request, or `Ok` response).
+    pub fn ok(opcode: Opcode, request_id: u64, payload: Vec<u8>) -> Frame {
+        Frame { opcode, status: Status::Ok, request_id, payload }
+    }
+
+    /// An error response: status + UTF-8 message payload.
+    pub fn error(opcode: Opcode, request_id: u64, status: Status, message: &str) -> Frame {
+        Frame { opcode, status, request_id, payload: message.as_bytes().to_vec() }
+    }
+
+    /// The payload as an error message (lossy UTF-8).
+    pub fn message(&self) -> String {
+        String::from_utf8_lossy(&self.payload).into_owned()
+    }
+}
+
+/// Why a frame could not be read.
+#[derive(Debug)]
+pub enum ReadError {
+    /// Transport failure.
+    Io(std::io::Error),
+    /// The bytes violate the protocol (bad magic/version/opcode,
+    /// oversized payload, mid-frame EOF).
+    Protocol(String),
+    /// Clean EOF on a frame boundary (peer closed the connection).
+    Eof,
+    /// The caller's stop flag was raised while waiting for bytes.
+    Stopped,
+}
+
+impl std::fmt::Display for ReadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReadError::Io(e) => write!(f, "io error: {e}"),
+            ReadError::Protocol(m) => write!(f, "protocol error: {m}"),
+            ReadError::Eof => write!(f, "connection closed"),
+            ReadError::Stopped => write!(f, "stopped"),
+        }
+    }
+}
+
+impl std::error::Error for ReadError {}
+
+/// Serialize `frame` to `w` (single buffered write).
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> std::io::Result<()> {
+    let mut buf = Vec::with_capacity(HEADER_LEN + frame.payload.len());
+    buf.extend_from_slice(&MAGIC);
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.push(frame.opcode as u8);
+    buf.push(frame.status as u8);
+    buf.extend_from_slice(&frame.request_id.to_le_bytes());
+    buf.extend_from_slice(&(frame.payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&frame.payload);
+    w.write_all(&buf)
+}
+
+/// Read one frame, failing on payloads larger than `max_payload`.
+pub fn read_frame(r: &mut impl Read, max_payload: u32) -> Result<Frame, ReadError> {
+    read_frame_with(r, max_payload, None)
+}
+
+/// [`read_frame`] with an interruption flag: on sockets configured with
+/// a read timeout, every timeout tick checks `stop` and returns
+/// [`ReadError::Stopped`] once it is raised — how server connection
+/// threads wind down without losing partially received frames.
+pub fn read_frame_with(
+    r: &mut impl Read,
+    max_payload: u32,
+    stop: Option<&AtomicBool>,
+) -> Result<Frame, ReadError> {
+    let mut header = [0u8; HEADER_LEN];
+    read_full(r, &mut header, stop, true)?;
+    if header[0..4] != MAGIC {
+        return Err(ReadError::Protocol(format!("bad magic {:02x?}", &header[0..4])));
+    }
+    let version = u16::from_le_bytes([header[4], header[5]]);
+    if version != VERSION {
+        return Err(ReadError::Protocol(format!(
+            "unsupported protocol version {version} (want {VERSION})"
+        )));
+    }
+    let opcode = Opcode::from_u8(header[6])
+        .ok_or_else(|| ReadError::Protocol(format!("unknown opcode {}", header[6])))?;
+    let status = Status::from_u8(header[7])
+        .ok_or_else(|| ReadError::Protocol(format!("unknown status {}", header[7])))?;
+    let request_id = u64::from_le_bytes(header[8..16].try_into().unwrap());
+    let len = u32::from_le_bytes(header[16..20].try_into().unwrap());
+    if len > max_payload {
+        return Err(ReadError::Protocol(format!(
+            "payload length {len} exceeds cap {max_payload}"
+        )));
+    }
+    let mut payload = vec![0u8; len as usize];
+    read_full(r, &mut payload, stop, false)?;
+    Ok(Frame { opcode, status, request_id, payload })
+}
+
+/// `read_exact` that survives read-timeout ticks (checking `stop` on
+/// each) and distinguishes boundary EOF from mid-frame truncation.
+fn read_full(
+    r: &mut impl Read,
+    buf: &mut [u8],
+    stop: Option<&AtomicBool>,
+    eof_ok_at_start: bool,
+) -> Result<(), ReadError> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return Err(if filled == 0 && eof_ok_at_start {
+                    ReadError::Eof
+                } else {
+                    ReadError::Protocol("connection closed mid-frame".into())
+                })
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                match stop {
+                    Some(s) if s.load(Ordering::Relaxed) => return Err(ReadError::Stopped),
+                    Some(_) => {} // timeout tick: keep waiting
+                    None => return Err(ReadError::Io(e)),
+                }
+            }
+            Err(e) => return Err(ReadError::Io(e)),
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Payload codecs. All multi-byte values little-endian, mirroring the
+// EMLP blob format in `util::serde`.
+// ---------------------------------------------------------------------------
+
+/// Bounds-checked payload reader.
+struct Buf<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Buf<'a> {
+    fn new(bytes: &'a [u8]) -> Self {
+        Buf { bytes, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.bytes.len() {
+            return Err(format!("truncated payload at byte {} (+{n})", self.pos));
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>, String> {
+        Ok(self
+            .take(n * 4)?
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn remaining(&self) -> usize {
+        self.bytes.len() - self.pos
+    }
+
+    fn finish(&self) -> Result<(), String> {
+        if self.pos != self.bytes.len() {
+            return Err(format!("{} trailing payload bytes", self.bytes.len() - self.pos));
+        }
+        Ok(())
+    }
+}
+
+fn push_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    out.reserve(xs.len() * 4);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// `Infer` request payload: `u32 backend | u32 dim | dim × f32`.
+pub fn encode_infer(backend: u32, x: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + x.len() * 4);
+    out.extend_from_slice(&backend.to_le_bytes());
+    out.extend_from_slice(&(x.len() as u32).to_le_bytes());
+    push_f32s(&mut out, x);
+    out
+}
+
+pub fn decode_infer(payload: &[u8]) -> Result<(u32, Vec<f32>), String> {
+    let mut b = Buf::new(payload);
+    let backend = b.u32()?;
+    let dim = b.u32()? as usize;
+    let x = b.f32s(dim)?;
+    b.finish()?;
+    Ok((backend, x))
+}
+
+/// `InferBatch` request payload:
+/// `u32 backend | u32 batch | u32 dim | batch × dim × f32`.
+pub fn encode_infer_batch(backend: u32, samples: &[Vec<f32>]) -> Result<Vec<u8>, String> {
+    let dim = samples.first().map(|s| s.len()).unwrap_or(0);
+    if samples.iter().any(|s| s.len() != dim) {
+        return Err("ragged batch: samples differ in dimension".into());
+    }
+    let mut out = Vec::with_capacity(12 + samples.len() * dim * 4);
+    out.extend_from_slice(&backend.to_le_bytes());
+    out.extend_from_slice(&(samples.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(dim as u32).to_le_bytes());
+    for s in samples {
+        push_f32s(&mut out, s);
+    }
+    Ok(out)
+}
+
+pub fn decode_infer_batch(payload: &[u8]) -> Result<(u32, Vec<Vec<f32>>), String> {
+    let mut b = Buf::new(payload);
+    let backend = b.u32()?;
+    let batch = b.u32()? as usize;
+    let dim = b.u32()? as usize;
+    check_grid(batch, dim, b.remaining())?;
+    let mut samples = Vec::with_capacity(batch);
+    for _ in 0..batch {
+        samples.push(b.f32s(dim)?);
+    }
+    b.finish()?;
+    Ok((backend, samples))
+}
+
+/// Reject a declared `batch × dim` geometry that does not match the
+/// bytes actually present — BEFORE any batch-sized allocation, so a
+/// hostile 12-byte header cannot request a multi-gigabyte `Vec`.
+fn check_grid(batch: usize, dim: usize, remaining: usize) -> Result<(), String> {
+    if batch == 0 || dim == 0 {
+        return Err(format!("degenerate batch geometry {batch}×{dim}"));
+    }
+    let expected = (batch as u64) * (dim as u64) * 4;
+    if expected != remaining as u64 {
+        return Err(format!(
+            "batch {batch} × dim {dim} needs {expected} payload bytes, have {remaining}"
+        ));
+    }
+    Ok(())
+}
+
+/// `Infer` response payload: `u32 dim | dim × f32`.
+pub fn encode_outputs(out: &[f32]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(4 + out.len() * 4);
+    buf.extend_from_slice(&(out.len() as u32).to_le_bytes());
+    push_f32s(&mut buf, out);
+    buf
+}
+
+pub fn decode_outputs(payload: &[u8]) -> Result<Vec<f32>, String> {
+    let mut b = Buf::new(payload);
+    let dim = b.u32()? as usize;
+    let out = b.f32s(dim)?;
+    b.finish()?;
+    Ok(out)
+}
+
+/// `InferBatch` response payload: `u32 batch | u32 dim | batch × dim × f32`.
+pub fn encode_batch_outputs(rows: &[Vec<f32>]) -> Vec<u8> {
+    let dim = rows.first().map(|r| r.len()).unwrap_or(0);
+    debug_assert!(rows.iter().all(|r| r.len() == dim), "ragged outputs");
+    let mut buf = Vec::with_capacity(8 + rows.len() * dim * 4);
+    buf.extend_from_slice(&(rows.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&(dim as u32).to_le_bytes());
+    for r in rows {
+        push_f32s(&mut buf, r);
+    }
+    buf
+}
+
+pub fn decode_batch_outputs(payload: &[u8]) -> Result<Vec<Vec<f32>>, String> {
+    let mut b = Buf::new(payload);
+    let batch = b.u32()? as usize;
+    let dim = b.u32()? as usize;
+    check_grid(batch, dim, b.remaining())?;
+    let mut rows = Vec::with_capacity(batch);
+    for _ in 0..batch {
+        rows.push(b.f32s(dim)?);
+    }
+    b.finish()?;
+    Ok(rows)
+}
+
+/// Length-prefixed UTF-8 string (`SwapModel` request payload).
+pub fn encode_str(s: &str) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(4 + s.len());
+    buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    buf.extend_from_slice(s.as_bytes());
+    buf
+}
+
+pub fn decode_str(payload: &[u8]) -> Result<String, String> {
+    let mut b = Buf::new(payload);
+    let len = b.u32()? as usize;
+    let s = String::from_utf8(b.take(len)?.to_vec()).map_err(|e| e.to_string())?;
+    b.finish()?;
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn roundtrip(frame: &Frame) -> Frame {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, frame).unwrap();
+        read_frame(&mut Cursor::new(buf), DEFAULT_MAX_PAYLOAD).unwrap()
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        let f = Frame::ok(Opcode::Infer, 42, encode_infer(0, &[1.0, -2.5]));
+        assert_eq!(roundtrip(&f), f);
+        let e = Frame::error(Opcode::SwapModel, 7, Status::UnknownModel, "no such model");
+        let back = roundtrip(&e);
+        assert_eq!(back.status, Status::UnknownModel);
+        assert_eq!(back.message(), "no such model");
+    }
+
+    #[test]
+    fn empty_payload_frame() {
+        let f = Frame::ok(Opcode::Stats, 1, Vec::new());
+        assert_eq!(roundtrip(&f), f);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::ok(Opcode::Ping, 0, Vec::new())).unwrap();
+        buf[0] = b'X';
+        match read_frame(&mut Cursor::new(buf), DEFAULT_MAX_PAYLOAD) {
+            Err(ReadError::Protocol(m)) => assert!(m.contains("magic"), "{m}"),
+            other => panic!("expected protocol error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn wrong_version_rejected() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::ok(Opcode::Ping, 0, Vec::new())).unwrap();
+        buf[4] = 99;
+        assert!(matches!(
+            read_frame(&mut Cursor::new(buf), DEFAULT_MAX_PAYLOAD),
+            Err(ReadError::Protocol(_))
+        ));
+    }
+
+    #[test]
+    fn unknown_opcode_rejected() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::ok(Opcode::Ping, 0, Vec::new())).unwrap();
+        buf[6] = 200;
+        assert!(matches!(
+            read_frame(&mut Cursor::new(buf), DEFAULT_MAX_PAYLOAD),
+            Err(ReadError::Protocol(_))
+        ));
+    }
+
+    #[test]
+    fn oversized_payload_rejected_before_allocation() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::ok(Opcode::Ping, 0, vec![0u8; 64])).unwrap();
+        // Read with a cap below the declared length.
+        match read_frame(&mut Cursor::new(buf), 16) {
+            Err(ReadError::Protocol(m)) => assert!(m.contains("exceeds cap"), "{m}"),
+            other => panic!("expected protocol error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn clean_eof_vs_truncation() {
+        assert!(matches!(
+            read_frame(&mut Cursor::new(Vec::<u8>::new()), 1024),
+            Err(ReadError::Eof)
+        ));
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::ok(Opcode::Ping, 0, vec![1, 2, 3])).unwrap();
+        buf.truncate(buf.len() - 2);
+        assert!(matches!(
+            read_frame(&mut Cursor::new(buf), 1024),
+            Err(ReadError::Protocol(_))
+        ));
+    }
+
+    #[test]
+    fn infer_payload_roundtrip() {
+        let x = vec![0.25f32, -1.0, 3.5];
+        let (backend, back) = decode_infer(&encode_infer(BACKEND_ANY, &x)).unwrap();
+        assert_eq!(backend, BACKEND_ANY);
+        assert_eq!(back, x);
+        // Trailing garbage rejected.
+        let mut p = encode_infer(0, &x);
+        p.push(0);
+        assert!(decode_infer(&p).is_err());
+    }
+
+    #[test]
+    fn infer_batch_payload_roundtrip() {
+        let samples = vec![vec![1.0f32, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]];
+        let payload = encode_infer_batch(2, &samples).unwrap();
+        let (backend, back) = decode_infer_batch(&payload).unwrap();
+        assert_eq!(backend, 2);
+        assert_eq!(back, samples);
+        assert!(encode_infer_batch(0, &[vec![1.0], vec![1.0, 2.0]]).is_err());
+        assert!(decode_infer_batch(&encode_infer_batch(0, &[]).unwrap()).is_err());
+    }
+
+    #[test]
+    fn hostile_batch_header_rejected_before_allocation() {
+        // batch = u32::MAX with dim = 0 in a 12-byte payload must be
+        // rejected up front, not via a ~4-billion-element Vec.
+        let mut p = Vec::new();
+        p.extend_from_slice(&0u32.to_le_bytes());
+        p.extend_from_slice(&u32::MAX.to_le_bytes());
+        p.extend_from_slice(&0u32.to_le_bytes());
+        assert!(decode_infer_batch(&p).is_err());
+        // Declared geometry must match the byte count actually present.
+        let mut q = encode_infer_batch(0, &[vec![1.0f32; 4], vec![2.0f32; 4]]).unwrap();
+        q[4..8].copy_from_slice(&100u32.to_le_bytes()); // lie about batch
+        assert!(decode_infer_batch(&q).is_err());
+        // Same guard on the response decoder (malicious server).
+        let mut r = Vec::new();
+        r.extend_from_slice(&u32::MAX.to_le_bytes());
+        r.extend_from_slice(&1u32.to_le_bytes());
+        assert!(decode_batch_outputs(&r).is_err());
+    }
+
+    #[test]
+    fn outputs_payload_roundtrip() {
+        let out = vec![0.1f32; 10];
+        assert_eq!(decode_outputs(&encode_outputs(&out)).unwrap(), out);
+        let rows = vec![vec![1.0f32, 2.0], vec![3.0, 4.0]];
+        assert_eq!(decode_batch_outputs(&encode_batch_outputs(&rows)).unwrap(), rows);
+    }
+
+    #[test]
+    fn str_payload_roundtrip() {
+        assert_eq!(decode_str(&encode_str("model-v2")).unwrap(), "model-v2");
+        assert!(decode_str(&[5, 0, 0, 0, b'a']).is_err()); // declared 5, got 1
+    }
+
+    #[test]
+    fn stop_flag_interrupts_timeout_reads() {
+        // A reader that always reports WouldBlock simulates a socket
+        // read-timeout tick; with the flag raised the read must stop.
+        struct AlwaysTimeout;
+        impl std::io::Read for AlwaysTimeout {
+            fn read(&mut self, _buf: &mut [u8]) -> std::io::Result<usize> {
+                Err(std::io::Error::from(ErrorKind::WouldBlock))
+            }
+        }
+        let stop = AtomicBool::new(true);
+        assert!(matches!(
+            read_frame_with(&mut AlwaysTimeout, 1024, Some(&stop)),
+            Err(ReadError::Stopped)
+        ));
+        // Without a stop flag a timeout is a plain IO error.
+        assert!(matches!(
+            read_frame(&mut AlwaysTimeout, 1024),
+            Err(ReadError::Io(_))
+        ));
+    }
+}

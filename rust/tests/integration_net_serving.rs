@@ -1,0 +1,328 @@
+//! Integration: the network serving subsystem end-to-end over real TCP
+//! — load generator traffic, mixed single/batch frames, a mid-run model
+//! swap, load shedding under saturation, and protocol error handling.
+
+use edgemlp::coordinator::backend::{Backend, FnBackend};
+use edgemlp::coordinator::server::BackendFactory;
+use edgemlp::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use edgemlp::nn::activations::Activation;
+use edgemlp::nn::mlp::{Mlp, MlpConfig};
+use edgemlp::quant::spx::SpxConfig;
+use edgemlp::serve::wire;
+use edgemlp::serve::{
+    run_loadgen, swappable_cpu_factory, BatchReply, Client, InferReply, LoadGenConfig,
+    ModelRegistry, ServeConfig, Server, Status,
+};
+use edgemlp::util::rng::Pcg32;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// An MNIST-shaped model (784 in, 10 out) small enough for debug-build
+/// test runs; weights are random — serving correctness does not need a
+/// trained network, only a deterministic one.
+fn mnist_shaped(seed: u64) -> Mlp {
+    let mut rng = Pcg32::new(seed);
+    Mlp::new(
+        MlpConfig {
+            sizes: vec![784, 32, 10],
+            activations: vec![Activation::Sigmoid, Activation::Sigmoid],
+        },
+        &mut rng,
+    )
+}
+
+/// Server with a swappable CPU backend, "default" (seed 1) active and
+/// "retrained" (seed 2) registered.
+fn start_model_server(
+    queue_capacity: usize,
+    policy: BatchPolicy,
+) -> (Server, Arc<ModelRegistry>) {
+    let registry = ModelRegistry::new("default", mnist_shaped(1), SpxConfig::sp2(5));
+    registry.register_mlp("retrained", mnist_shaped(2));
+    let coord = Coordinator::start(
+        vec![("cpu".into(), swappable_cpu_factory(registry.clone()))],
+        CoordinatorConfig { queue_capacity, policy },
+    )
+    .unwrap();
+    let server =
+        Server::start(coord, registry.clone(), "127.0.0.1:0", ServeConfig::default()).unwrap();
+    (server, registry)
+}
+
+fn probe() -> Vec<f32> {
+    vec![0.37f32; 784]
+}
+
+fn assert_vec_close(a: &[f32], b: &[f32], tol: f32) {
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!((x - y).abs() <= tol, "elem {i}: {x} vs {y}");
+    }
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[test]
+fn ping_and_stats_roundtrip() {
+    let (server, _registry) =
+        start_model_server(256, BatchPolicy::windowed(16, Duration::from_millis(1)));
+    let mut client = Client::connect(server.local_addr()).unwrap();
+    client.ping().unwrap();
+    match client.infer(0, &probe()).unwrap() {
+        InferReply::Output(out) => assert_eq!(out.len(), 10),
+        other => panic!("expected output, got {other:?}"),
+    }
+    let stats = client.stats().unwrap();
+    assert!(stats.contains("model: default v1"), "{stats}");
+    assert!(stats.contains("backend cpu"), "{stats}");
+    assert!(stats.contains("p50="), "{stats}");
+    assert!(stats.contains("p99="), "{stats}");
+    server.shutdown();
+}
+
+/// The acceptance scenario: ≥10k mixed single/batch requests over TCP
+/// with a mid-run `SwapModel`, zero lost responses, and served outputs
+/// that verifiably change with the swap.
+#[test]
+fn e2e_mixed_traffic_with_midrun_swap() {
+    let (server, _registry) =
+        start_model_server(4096, BatchPolicy::windowed(64, Duration::from_millis(1)));
+    let addr = server.local_addr();
+    let v1 = mnist_shaped(1);
+    let v2 = mnist_shaped(2);
+    let want1 = v1.forward_one(&probe());
+    let want2 = v2.forward_one(&probe());
+    assert!(
+        max_abs_diff(&want1, &want2) > 1e-3,
+        "test models must disagree on the probe"
+    );
+
+    let mut ctl = Client::connect(addr).unwrap();
+    match ctl.infer(0, &probe()).unwrap() {
+        InferReply::Output(out) => assert_vec_close(&out, &want1, 1e-5),
+        other => panic!("probe before swap: {other:?}"),
+    }
+
+    // Single-sample pipelined traffic on 6 connections…
+    let single = std::thread::spawn(move || {
+        run_loadgen(
+            addr,
+            LoadGenConfig {
+                requests: 7200,
+                connections: 6,
+                backend: 0,
+                dim: 784,
+                pipeline: 8,
+                ..LoadGenConfig::default()
+            },
+        )
+        .unwrap()
+    });
+    // …plus InferBatch traffic on 2 more (mixed frame types).
+    let batched = std::thread::spawn(move || {
+        run_loadgen(
+            addr,
+            LoadGenConfig {
+                requests: 2880,
+                connections: 2,
+                backend: 0,
+                dim: 784,
+                batch: 16,
+                ..LoadGenConfig::default()
+            },
+        )
+        .unwrap()
+    });
+
+    // Swap while traffic is in flight.
+    std::thread::sleep(Duration::from_millis(30));
+    let ack = ctl.swap_model("retrained").unwrap();
+    assert!(ack.contains("retrained"), "{ack}");
+
+    let single = single.join().unwrap();
+    let batched = batched.join().unwrap();
+    let total_sent = single.sent + batched.sent;
+    assert!(total_sent >= 10_000, "only {total_sent} requests sent");
+    // Zero lost responses: every request came back, none shed (the
+    // queue is deep and clients are closed-loop), none errored.
+    assert_eq!(single.ok, single.sent, "single: {single:?}");
+    assert_eq!(batched.ok, batched.sent, "batched: {batched:?}");
+    assert_eq!(single.shed + batched.shed, 0);
+    assert_eq!(single.errors + batched.errors, 0);
+
+    // The swap took effect without dropping anything.
+    match ctl.infer(0, &probe()).unwrap() {
+        InferReply::Output(out) => {
+            assert_vec_close(&out, &want2, 1e-5);
+            assert!(
+                max_abs_diff(&out, &want1) > 1e-3,
+                "served outputs did not change after swap"
+            );
+        }
+        other => panic!("probe after swap: {other:?}"),
+    }
+
+    // Server-side accounting agrees: nothing vanished.
+    let stats = ctl.stats().unwrap();
+    assert!(stats.contains("generation 2"), "{stats}");
+    let snap = server.metrics().snapshot();
+    assert!(snap.backends["cpu"].requests >= total_sent as u64);
+    assert_eq!(snap.rejected, 0);
+    server.shutdown();
+}
+
+/// A saturated coordinator queue must answer with `Backpressure` error
+/// frames — the wire mapping of `SubmitError::Backpressure` — while
+/// accepted requests still complete.
+#[test]
+fn saturation_sheds_with_backpressure_frames() {
+    // Slow single-slot backend behind a capacity-1 queue.
+    let registry = ModelRegistry::new("default", mnist_shaped(1), SpxConfig::sp2(5));
+    let slow: BackendFactory = Box::new(|| {
+        Ok(Box::new(FnBackend::new("slow", 1, |inputs: &[Vec<f32>]| {
+            std::thread::sleep(Duration::from_millis(20));
+            Ok(inputs.to_vec())
+        })) as Box<dyn Backend>)
+    });
+    let coord = Coordinator::start(
+        vec![("slow".into(), slow)],
+        CoordinatorConfig { queue_capacity: 1, policy: BatchPolicy::immediate(1) },
+    )
+    .unwrap();
+    let server =
+        Server::start(coord, registry, "127.0.0.1:0", ServeConfig::default()).unwrap();
+
+    let mut client = Client::connect(server.local_addr()).unwrap();
+    let n = 40;
+    let x = probe(); // dims must match the registry's model (784)
+    for _ in 0..n {
+        client.send_infer(0, &x).unwrap();
+    }
+    let (mut ok, mut shed) = (0, 0);
+    for _ in 0..n {
+        match client.recv_infer().unwrap().1 {
+            InferReply::Output(out) => {
+                assert_eq!(out, x, "echo backend must return the input");
+                ok += 1;
+            }
+            InferReply::Shed(msg) => {
+                assert!(!msg.is_empty());
+                shed += 1;
+            }
+            InferReply::Failed { status, message } => panic!("unexpected {status} {message}"),
+        }
+    }
+    assert_eq!(ok + shed, n);
+    assert!(ok >= 1, "nothing served");
+    assert!(shed >= 1, "nothing shed under saturation");
+    assert_eq!(server.metrics().snapshot().rejected, shed as u64);
+
+    // Batch frames shed as a unit with the same status.
+    match client.infer_batch(0, &vec![vec![0.5f32; 784]; 30]).unwrap() {
+        BatchReply::Outputs(_) | BatchReply::Shed(_) => {}
+        BatchReply::Failed { status, message } => panic!("unexpected {status} {message}"),
+    }
+    server.shutdown();
+}
+
+/// One client's wrong-dimension request must bounce as `BadRequest` at
+/// the server edge instead of poisoning a coordinator batch shared with
+/// well-behaved connections.
+#[test]
+fn wrong_dimension_rejected_without_poisoning_batches() {
+    let (server, _registry) =
+        start_model_server(256, BatchPolicy::windowed(16, Duration::from_millis(1)));
+    let mut good = Client::connect(server.local_addr()).unwrap();
+    let mut bad = Client::connect(server.local_addr()).unwrap();
+    // Interleave: bad sends garbage dims while good sends valid traffic.
+    for _ in 0..20 {
+        bad.send_infer(0, &[1.0, 2.0, 3.0]).unwrap();
+        good.send_infer(0, &probe()).unwrap();
+    }
+    for _ in 0..20 {
+        match bad.recv_infer().unwrap().1 {
+            InferReply::Failed { status, message } => {
+                assert_eq!(status, Status::BadRequest);
+                assert!(message.contains("dimension"), "{message}");
+            }
+            other => panic!("expected BadRequest, got {other:?}"),
+        }
+        match good.recv_infer().unwrap().1 {
+            InferReply::Output(out) => assert_eq!(out.len(), 10),
+            other => panic!("good client poisoned: {other:?}"),
+        }
+    }
+    server.shutdown();
+}
+
+#[test]
+fn swap_to_unknown_model_is_error_frame() {
+    let (server, _registry) = start_model_server(64, BatchPolicy::immediate(8));
+    let mut client = Client::connect(server.local_addr()).unwrap();
+    let err = client.swap_model("nope").unwrap_err().to_string();
+    assert!(err.contains("UnknownModel"), "{err}");
+    assert!(err.contains("nope"), "{err}");
+    // The connection survives an error frame.
+    client.ping().unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn unknown_backend_index_is_error_frame() {
+    let (server, _registry) = start_model_server(64, BatchPolicy::immediate(8));
+    let mut client = Client::connect(server.local_addr()).unwrap();
+    match client.infer(7, &probe()).unwrap() {
+        InferReply::Failed { status, message } => {
+            assert_eq!(status, Status::UnknownBackend);
+            assert!(message.contains("out of range"), "{message}");
+        }
+        other => panic!("expected UnknownBackend, got {other:?}"),
+    }
+    server.shutdown();
+}
+
+#[test]
+fn bad_magic_answered_then_connection_closed() {
+    use std::io::{Read, Write};
+    let (server, _registry) = start_model_server(64, BatchPolicy::immediate(8));
+    let mut raw = std::net::TcpStream::connect(server.local_addr()).unwrap();
+    // More than one header's worth of garbage: the trailing bytes sit
+    // unread server-side, so this also exercises the drain-before-close
+    // path that keeps the error frame from being lost to a TCP RST.
+    raw.write_all(&[0xde; 32]).unwrap();
+    let frame = wire::read_frame(&mut raw, wire::DEFAULT_MAX_PAYLOAD).unwrap();
+    assert_eq!(frame.status, Status::BadRequest);
+    assert!(frame.message().contains("magic"), "{}", frame.message());
+    // Server closes after a framing error.
+    let mut rest = Vec::new();
+    raw.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty());
+    server.shutdown();
+}
+
+#[test]
+fn over_limit_connection_gets_busy_frame() {
+    let registry = ModelRegistry::new("default", mnist_shaped(1), SpxConfig::sp2(5));
+    let coord = Coordinator::start(
+        vec![("cpu".into(), swappable_cpu_factory(registry.clone()))],
+        CoordinatorConfig { queue_capacity: 64, policy: BatchPolicy::immediate(8) },
+    )
+    .unwrap();
+    let server = Server::start(
+        coord,
+        registry,
+        "127.0.0.1:0",
+        ServeConfig { max_conns: 1, ..ServeConfig::default() },
+    )
+    .unwrap();
+    let mut first = Client::connect(server.local_addr()).unwrap();
+    first.ping().unwrap(); // guarantees the handler is registered
+    let mut second = std::net::TcpStream::connect(server.local_addr()).unwrap();
+    let frame = wire::read_frame(&mut second, wire::DEFAULT_MAX_PAYLOAD).unwrap();
+    assert_eq!(frame.status, Status::Busy);
+    // The first connection is unaffected.
+    first.ping().unwrap();
+    server.shutdown();
+}
