@@ -1,21 +1,27 @@
 //! Bench: end-to-end TCP serving throughput/latency of the network
-//! subsystem (wire protocol → connection pool → coordinator batching →
-//! CPU/FPGA-sim backends). Emits `BENCH_serving.json` (override the
+//! subsystem (wire protocol → connection pool → model routing →
+//! coordinator worker pools → CPU/FPGA-sim backends), plus the E8
+//! replica-scaling sweep. Emits `BENCH_serving.json` (override the
 //! path with `EDGEMLP_BENCH_JSON`) alongside `BENCH_gemm.json` for the
 //! perf trajectory. `cargo bench --bench serving` — see EXPERIMENTS.md
-//! §Serving.
+//! §Serving and §Scaling the engine.
+//!
+//! The whole process pins `EDGEMLP_GEMM_THREADS=1`: each replica worker
+//! runs its GEMMs single-threaded, so worker-pool replication is the
+//! only parallelism variable the sweep measures (intra-op threading
+//! would otherwise oversubscribe the cores and mask the scaling).
 
 use edgemlp::bench_harness::{fmt_time, BenchJson, Table};
-use edgemlp::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use edgemlp::coordinator::{BatchPolicy, CoordinatorConfig};
 use edgemlp::fpga::accelerator::AccelConfig;
 use edgemlp::nn::mlp::{Mlp, MlpConfig};
 use edgemlp::quant::spx::SpxConfig;
 use edgemlp::serve::{
-    run_loadgen, swappable_cpu_factory, swappable_fpga_factory, LoadGenConfig, ModelRegistry,
-    ServeConfig, Server,
+    run_loadgen, BackendKind, EngineConfig, LoadGenConfig, ModelRegistry, ServeConfig, Server,
 };
 use edgemlp::util::rng::Pcg32;
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Duration;
 
 struct Scenario {
@@ -26,31 +32,40 @@ struct Scenario {
     pipeline: usize,
 }
 
-fn main() {
-    let quick = std::env::var("EDGEMLP_BENCH_QUICK").is_ok();
-    let requests = if quick { 2_000 } else { 20_000 };
-
-    // The paper's MNIST network; weights random — serving cost is
-    // weight-value independent.
+/// The paper's MNIST network; weights random — serving cost is
+/// weight-value independent.
+fn registry() -> Arc<ModelRegistry> {
     let mut rng = Pcg32::new(2021);
     let mlp = Mlp::new(MlpConfig::paper_mnist(), &mut rng);
-    let registry = ModelRegistry::new("default", mlp, SpxConfig::sp2(5));
-    let coord = Coordinator::start(
-        vec![
-            ("cpu".into(), swappable_cpu_factory(registry.clone())),
-            (
-                "fpga".into(),
-                swappable_fpga_factory(registry.clone(), AccelConfig::default_fpga()),
-            ),
-        ],
-        CoordinatorConfig {
+    ModelRegistry::new("default", mlp, SpxConfig::sp2(5))
+}
+
+fn engine(replicas: usize, backends: Vec<BackendKind>) -> EngineConfig {
+    EngineConfig {
+        replicas,
+        backends,
+        coordinator: CoordinatorConfig {
             queue_capacity: 4096,
             policy: BatchPolicy::windowed(64, Duration::from_millis(1)),
         },
+        serve: ServeConfig::default(),
+    }
+}
+
+fn main() {
+    // Before any GEMM runs (the cap is latched on first use).
+    std::env::set_var("EDGEMLP_GEMM_THREADS", "1");
+    let quick = std::env::var("EDGEMLP_BENCH_QUICK").is_ok();
+    let requests = if quick { 2_000 } else { 20_000 };
+    let mut json = BenchJson::new();
+
+    // ---- Fixed scenarios (labels pinned since PR 2). ----
+    let server = Server::serve(
+        registry(),
+        "127.0.0.1:0",
+        engine(1, vec![BackendKind::Cpu, BackendKind::FpgaSim(AccelConfig::default_fpga())]),
     )
-    .expect("start coordinator");
-    let server = Server::start(coord, registry, "127.0.0.1:0", ServeConfig::default())
-        .expect("start server");
+    .expect("start server");
     let addr = server.local_addr();
 
     let scenarios = [
@@ -59,7 +74,6 @@ fn main() {
         Scenario { label: "fpga_single_c4_p8", backend: 1, connections: 4, batch: 1, pipeline: 8 },
     ];
 
-    let mut json = BenchJson::new();
     let mut table = Table::new(&["scenario", "requests", "req/s", "p50", "p99", "shed"]);
     for s in &scenarios {
         let report = run_loadgen(
@@ -93,6 +107,67 @@ fn main() {
 
     println!("\n=== TCP serving bench (EXPERIMENTS.md §Serving) ===\n");
     table.print();
+
+    // ---- E8: replica sweep 1 → num_cpus on the CPU backend. ----
+    // Powers of two up to the core count, with 4 always included so the
+    // ≥4-replica acceptance point exists even on small CI machines.
+    let cores = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    let top = cores.max(4);
+    let mut sweep = vec![1usize];
+    while *sweep.last().unwrap() * 2 <= top {
+        sweep.push(sweep.last().unwrap() * 2);
+    }
+    if !sweep.contains(&top) {
+        sweep.push(top);
+    }
+    let sweep_requests = if quick { 1_500 } else { 10_000 };
+    // Warm-up keeps replica spawn + first-batch cache effects out of
+    // the recorded percentiles.
+    let warmup = sweep_requests / 10;
+
+    let mut sweep_table = Table::new(&["replicas", "req/s", "p50", "p99", "vs 1 replica"]);
+    let mut base_rps = 0.0f64;
+    for &r in &sweep {
+        let server = Server::serve(registry(), "127.0.0.1:0", engine(r, vec![BackendKind::Cpu]))
+            .expect("start sweep server");
+        let report = run_loadgen(
+            server.local_addr(),
+            LoadGenConfig {
+                requests: sweep_requests,
+                connections: 8,
+                backend: 0,
+                dim: 784,
+                batch: 1,
+                pipeline: 8,
+                warmup,
+                ..LoadGenConfig::default()
+            },
+        )
+        .expect("sweep loadgen");
+        server.shutdown();
+        assert_eq!(report.ok + report.shed + report.errors, report.sent, "lost responses");
+        let rps = report.throughput_rps();
+        if r == 1 {
+            base_rps = rps;
+        }
+        let speedup = if base_rps > 0.0 { rps / base_rps } else { 0.0 };
+        sweep_table.row(&[
+            r.to_string(),
+            format!("{rps:.0}"),
+            fmt_time(report.p50_s()),
+            fmt_time(report.p99_s()),
+            format!("{speedup:.2}x"),
+        ]);
+        json.num(&format!("serving_replicas_{r}_rps"), rps);
+        json.num(&format!("serving_replicas_{r}_p50_ms"), report.p50_s() * 1e3);
+        json.num(&format!("serving_replicas_{r}_p99_ms"), report.p99_s() * 1e3);
+        json.num(&format!("serving_replicas_{r}_speedup"), speedup);
+    }
+    json.num("serving_replica_sweep_max", *sweep.last().unwrap() as f64);
+    json.num("serving_replica_sweep_cores", cores as f64);
+
+    println!("\n=== E8: replica sweep, CPU backend (EXPERIMENTS.md §Scaling) ===\n");
+    sweep_table.print();
 
     let path =
         std::env::var("EDGEMLP_BENCH_JSON").unwrap_or_else(|_| "BENCH_serving.json".into());

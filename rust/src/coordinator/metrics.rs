@@ -64,8 +64,18 @@ impl Histogram {
         self.quantile_s(0.99)
     }
 
+    /// 99.9th-percentile latency in seconds — the tail the replica
+    /// sweep (E8) watches, since queueing behind a saturated pool shows
+    /// up here long before it moves p50.
+    pub fn p999_s(&self) -> f64 {
+        self.quantile_s(0.999)
+    }
+
     /// Approximate quantile from the buckets (upper bound of the bucket
-    /// containing the q-th sample).
+    /// containing the q-th sample). Edge cases, pinned by tests: an
+    /// empty histogram reports 0.0 for every quantile, and a histogram
+    /// whose samples all fell into one bucket reports that bucket's
+    /// upper bound for every quantile (`q = 0.0` included).
     pub fn quantile_s(&self, q: f64) -> f64 {
         if self.count == 0 {
             return 0.0;
@@ -117,15 +127,17 @@ impl MetricsSnapshot {
         self.backends.values().map(|b| b.requests).sum()
     }
 
-    /// One line per backend with counters and latency percentiles —
-    /// what the serving `Stats` opcode puts on the wire.
+    /// One line per pool with counters and latency percentiles — what
+    /// the serving `Stats` opcode puts on the wire. Pool labels embed
+    /// the served model for engine-built pools (`cpu/mnist`), so this
+    /// is the per-pool/per-model breakdown.
     pub fn render(&self) -> String {
         use crate::bench_harness::fmt_time;
         let mut out = format!("rejected: {}\n", self.rejected);
         for (name, m) in &self.backends {
             out.push_str(&format!(
-                "backend {name}: requests={} batches={} errors={} mean_batch={:.1} \
-                 p50={} p95={} p99={} max={}\n",
+                "pool {name}: requests={} batches={} errors={} mean_batch={:.1} \
+                 p50={} p95={} p99={} p99.9={} max={}\n",
                 m.requests,
                 m.batches,
                 m.errors,
@@ -133,6 +145,7 @@ impl MetricsSnapshot {
                 fmt_time(m.latency.p50_s()),
                 fmt_time(m.latency.p95_s()),
                 fmt_time(m.latency.p99_s()),
+                fmt_time(m.latency.p999_s()),
                 fmt_time(m.latency.max_s()),
             ));
         }
@@ -244,7 +257,51 @@ mod tests {
         assert_eq!(h.quantile(0.5), h.quantile_s(0.5));
         assert!(h.p50_s() <= h.p95_s());
         assert!(h.p95_s() <= h.p99_s());
-        assert!(h.p99_s() <= h.max_s() * 2.0 + 1e-12);
+        assert!(h.p99_s() <= h.p999_s());
+        assert!(h.p999_s() <= h.max_s() * 2.0 + 1e-12);
+    }
+
+    #[test]
+    fn p999_separates_a_heavy_tail_p99_misses() {
+        // 9989 fast samples (~100 µs) + 11 slow outliers (~100 ms): the
+        // outliers are ~0.1% of traffic, so p99 stays in the fast
+        // bucket while the 9990th-ranked sample (p99.9 of 10000) is the
+        // first outlier.
+        let mut h = Histogram::default();
+        for _ in 0..9989 {
+            h.record(1e-4);
+        }
+        for _ in 0..11 {
+            h.record(1e-1);
+        }
+        assert!(h.p99_s() < 1e-3, "p99 {} caught the outliers", h.p99_s());
+        assert!(h.p999_s() > 5e-2, "p99.9 {} missed the outliers", h.p999_s());
+    }
+
+    #[test]
+    fn quantiles_on_empty_histogram_are_zero() {
+        let h = Histogram::default();
+        for q in [0.0, 0.5, 0.99, 0.999, 1.0] {
+            assert_eq!(h.quantile_s(q), 0.0, "q={q}");
+        }
+        assert_eq!(h.p999_s(), 0.0);
+        assert_eq!(h.max_s(), 0.0);
+        assert_eq!(h.mean_s(), 0.0);
+    }
+
+    #[test]
+    fn single_bucket_histogram_reports_bucket_bound_for_all_quantiles() {
+        // All samples in the [1024, 2048) µs bucket: every quantile —
+        // including q = 0 — reports that bucket's upper bound.
+        let mut h = Histogram::default();
+        for _ in 0..100 {
+            h.record(1.5e-3);
+        }
+        let bound = h.quantile_s(1.0);
+        assert!((bound - 2048e-6).abs() < 1e-9, "bound {bound}");
+        for q in [0.0, 0.25, 0.5, 0.99, 0.999] {
+            assert_eq!(h.quantile_s(q), bound, "q={q}");
+        }
     }
 
     #[test]
@@ -256,9 +313,10 @@ mod tests {
         assert_eq!(snap.total_requests(), 3);
         let text = snap.render();
         assert!(text.contains("rejected: 1"));
-        assert!(text.contains("backend cpu"));
+        assert!(text.contains("pool cpu"));
         assert!(text.contains("p50="));
         assert!(text.contains("p99="));
+        assert!(text.contains("p99.9="));
     }
 
     #[test]

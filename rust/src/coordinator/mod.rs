@@ -6,19 +6,23 @@
 //! anyway because PJRT handles are not `Send`):
 //!
 //! ```text
-//!  clients ──submit──► router ──► per-backend BoundedQueue (backpressure)
-//!                                    │ dynamic batcher (max_batch / max_wait)
-//!                                    ▼
-//!                         backend worker thread
-//!                         (CPU | FPGA-sim | XLA/PJRT)
-//!                                    │ per-request response channel
-//!                                    ▼
-//!                               metrics (latency histogram, power)
+//!  clients ──submit──► router (least-loaded) ──► per-pool BoundedQueue (MPMC)
+//!                                                   │ dynamic batcher (max_batch / max_wait)
+//!                                                   ▼
+//!                                     N replica worker threads per pool
+//!                                         (CPU | FPGA-sim | XLA/PJRT)
+//!                                                   │ per-request response channel
+//!                                                   ▼
+//!                                          metrics (latency histogram, power)
 //! ```
 //!
 //! Requests carry their payload and a oneshot response sender; the
 //! batcher groups up to `max_batch` requests within a `max_wait`
 //! window (vLLM-style dynamic batching, scaled to this paper's sizes).
+//! A pool's replicas share one queue and pop batches concurrently —
+//! the software analogue of the paper's parallel PU array — and the
+//! router picks the pool with the shallowest queue instead of blind
+//! round-robin.
 
 pub mod backend;
 pub mod batcher;
@@ -31,4 +35,4 @@ pub use backend::{Backend, CpuBackend, FpgaBackend};
 pub use batcher::BatchPolicy;
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use request::{InferRequest, InferResponse};
-pub use server::{Coordinator, CoordinatorConfig};
+pub use server::{Coordinator, CoordinatorConfig, PoolSpec, SharedBackendFactory};

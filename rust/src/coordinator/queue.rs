@@ -1,7 +1,15 @@
-//! Bounded MPSC queue with blocking push (backpressure), non-blocking
+//! Bounded MPMC queue with blocking push (backpressure), non-blocking
 //! try-push (load shedding), and a batch-draining pop designed for the
 //! dynamic batcher: wait for the first item, then keep collecting until
 //! either `max` items are in hand or `window` has elapsed.
+//!
+//! Multiple consumers may call [`BoundedQueue::pop_batch`] concurrently
+//! — that is how a replicated worker pool shares one submission queue.
+//! Each item is delivered to exactly one consumer (the drain happens
+//! under the state mutex), and a consumer that drains a batch while
+//! items remain passes the baton by re-notifying another waiter, so a
+//! burst larger than one consumer's `max` cannot strand work behind a
+//! straggler window.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
@@ -86,35 +94,55 @@ impl<T> BoundedQueue<T> {
     pub fn pop_batch(&self, max: usize, window: Duration) -> Vec<T> {
         assert!(max > 0);
         let mut st = self.state.lock().unwrap();
-        // Phase 1: wait for the first item.
-        while st.items.is_empty() {
-            if st.closed {
-                return Vec::new();
-            }
-            st = self.not_empty.wait(st).unwrap();
-        }
-        let deadline = Instant::now() + window;
-        // Phase 2: batch window.
         loop {
-            if st.items.len() >= max || st.closed {
-                break;
+            // Phase 1: wait for the first item.
+            while st.items.is_empty() {
+                if st.closed {
+                    return Vec::new();
+                }
+                st = self.not_empty.wait(st).unwrap();
             }
-            let now = Instant::now();
-            if now >= deadline {
-                break;
+            let deadline = Instant::now() + window;
+            // Phase 2: batch window.
+            loop {
+                if st.items.len() >= max || st.closed {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, timeout) =
+                    self.not_empty.wait_timeout(st, deadline - now).unwrap();
+                st = guard;
+                if timeout.timed_out() {
+                    break;
+                }
             }
-            let (guard, timeout) = self.not_empty.wait_timeout(st, deadline - now).unwrap();
-            st = guard;
-            if timeout.timed_out() {
-                break;
+            let take = st.items.len().min(max);
+            if take == 0 {
+                // A sibling consumer drained the items this consumer
+                // saw in phase 1 while it waited out its straggler
+                // window. An empty return must mean closed+drained —
+                // consumers exit on it — so go back to waiting.
+                if st.closed {
+                    return Vec::new();
+                }
+                continue;
             }
+            let batch: Vec<T> = st.items.drain(..take).collect();
+            for _ in 0..take {
+                self.not_full.notify_one();
+            }
+            if !st.items.is_empty() {
+                // Baton pass: leftover items mean another consumer (if
+                // any is parked) has work right now — a push's
+                // notify_one may have been absorbed by this consumer's
+                // straggler window.
+                self.not_empty.notify_one();
+            }
+            return batch;
         }
-        let take = st.items.len().min(max);
-        let batch: Vec<T> = st.items.drain(..take).collect();
-        for _ in 0..take {
-            self.not_full.notify_one();
-        }
-        batch
     }
 
     /// Close: unblock all waiters; further pushes fail.
@@ -197,6 +225,88 @@ mod tests {
         q.close();
         assert!(t.join().unwrap().is_empty());
         assert_eq!(q.push(1), Err(QueueError::Closed));
+    }
+
+    #[test]
+    fn multi_consumer_every_item_delivered_exactly_once() {
+        // Four consumers drain one queue concurrently; every pushed item
+        // must come back exactly once across all of them.
+        let q = Arc::new(BoundedQueue::<u32>::new(256));
+        let consumers: Vec<_> = (0..4)
+            .map(|_| {
+                let q = q.clone();
+                thread::spawn(move || {
+                    let mut got = Vec::new();
+                    loop {
+                        let batch = q.pop_batch(8, Duration::from_millis(1));
+                        if batch.is_empty() {
+                            return got; // closed + drained
+                        }
+                        got.extend(batch);
+                    }
+                })
+            })
+            .collect();
+        for i in 0..200u32 {
+            q.push(i).unwrap();
+        }
+        q.close();
+        let mut all: Vec<u32> =
+            consumers.into_iter().flat_map(|t| t.join().unwrap()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..200).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn burst_larger_than_one_batch_reaches_second_consumer() {
+        // One consumer takes at most 4 items; a burst of 12 must not
+        // strand the remaining 8 behind its batch window — the baton
+        // pass wakes the second consumer.
+        let q = Arc::new(BoundedQueue::<u32>::new(64));
+        let consumers: Vec<_> = (0..2)
+            .map(|_| {
+                let q = q.clone();
+                thread::spawn(move || {
+                    let mut got = 0usize;
+                    loop {
+                        let batch = q.pop_batch(4, Duration::from_millis(200));
+                        if batch.is_empty() {
+                            return got;
+                        }
+                        got += batch.len();
+                    }
+                })
+            })
+            .collect();
+        thread::sleep(Duration::from_millis(20)); // both parked in phase 1
+        for i in 0..12u32 {
+            q.push(i).unwrap();
+        }
+        thread::sleep(Duration::from_millis(100));
+        q.close();
+        let total: usize = consumers.into_iter().map(|t| t.join().unwrap()).sum();
+        assert_eq!(total, 12);
+    }
+
+    #[test]
+    fn robbed_consumer_keeps_waiting_instead_of_returning_empty() {
+        // A consumer that saw items in phase 1 can have them all
+        // drained by a sibling during its straggler window. It must go
+        // back to waiting — an empty return means closed+drained, and
+        // pool workers exit on it.
+        let q = Arc::new(BoundedQueue::new(8));
+        q.push(1).unwrap();
+        let q2 = q.clone();
+        let victim = thread::spawn(move || q2.pop_batch(4, Duration::from_millis(300)));
+        // Let the victim enter its batch window, then steal the item.
+        thread::sleep(Duration::from_millis(30));
+        let stolen = q.pop_batch(4, Duration::ZERO);
+        assert_eq!(stolen, vec![1]);
+        // Past the victim's window: were it buggy it would now have
+        // returned an empty batch. Feed it a new item instead.
+        thread::sleep(Duration::from_millis(400));
+        q.push(2).unwrap();
+        assert_eq!(victim.join().unwrap(), vec![2]);
     }
 
     #[test]

@@ -1,17 +1,20 @@
-//! The coordinator proper: per-backend queues + worker threads, request
-//! routing, graceful shutdown.
+//! The coordinator proper: replicated worker pools over shared MPMC
+//! queues, queue-depth-aware request routing, graceful shutdown.
 //!
-//! Backends are supplied as *factories* executed inside each worker
-//! thread — the XLA backend's PJRT handles are not `Send`, so the
-//! runtime must be constructed where it is used. Worker startup is
-//! confirmed through a handshake channel so `Coordinator::start`
-//! surfaces backend construction errors synchronously.
+//! Each *pool* is one submission queue drained by `replicas` worker
+//! threads, every worker owning its own backend instance — the software
+//! mirror of the paper's array of parallel processing units. Backends
+//! are supplied as *factories* executed inside each worker thread — the
+//! XLA backend's PJRT handles are not `Send`, so the runtime must be
+//! constructed where it is used. Worker startup is confirmed through a
+//! handshake channel so [`Coordinator::start`] surfaces backend
+//! construction errors synchronously.
 
 use super::backend::Backend;
 use super::batcher::BatchPolicy;
 use super::metrics::Metrics;
 use super::queue::{BoundedQueue, QueueError};
-use super::request::{InferRequest, InferResult, InferResponse};
+use super::request::{InferRequest, InferResponse, InferResult};
 use anyhow::{bail, Context, Result};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver};
@@ -19,13 +22,63 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-/// Factory run on the worker thread to build its backend.
+/// Factory run once on a worker thread to build its backend.
 pub type BackendFactory = Box<dyn FnOnce() -> Result<Box<dyn Backend>> + Send>;
+
+/// Re-usable factory for replicated pools: called once per replica,
+/// each call on that replica's worker thread.
+pub type SharedBackendFactory = Arc<dyn Fn() -> Result<Box<dyn Backend>> + Send + Sync>;
+
+/// One worker pool: a name (the metrics / routing label), plus one
+/// backend factory per replica sharing a single submission queue.
+pub struct PoolSpec {
+    pub name: String,
+    factories: Vec<BackendFactory>,
+}
+
+impl PoolSpec {
+    /// A single-replica pool (the pre-replication coordinator shape).
+    pub fn single(name: impl Into<String>, factory: BackendFactory) -> PoolSpec {
+        PoolSpec { name: name.into(), factories: vec![factory] }
+    }
+
+    /// A pool of `replicas` workers, each building its own backend from
+    /// the shared factory.
+    pub fn replicated(
+        name: impl Into<String>,
+        replicas: usize,
+        factory: SharedBackendFactory,
+    ) -> PoolSpec {
+        let factories = (0..replicas.max(1))
+            .map(|_| {
+                let f = factory.clone();
+                Box::new(move || f()) as BackendFactory
+            })
+            .collect();
+        PoolSpec { name: name.into(), factories }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.factories.len()
+    }
+}
+
+impl From<(String, BackendFactory)> for PoolSpec {
+    fn from((name, factory): (String, BackendFactory)) -> PoolSpec {
+        PoolSpec::single(name, factory)
+    }
+}
+
+impl From<(String, SharedBackendFactory)> for PoolSpec {
+    fn from((name, factory): (String, SharedBackendFactory)) -> PoolSpec {
+        PoolSpec::replicated(name, 1, factory)
+    }
+}
 
 /// Coordinator-wide knobs.
 #[derive(Debug, Clone, Copy)]
 pub struct CoordinatorConfig {
-    /// Per-backend queue capacity (requests beyond this are shed).
+    /// Per-pool queue capacity (requests beyond this are shed).
     pub queue_capacity: usize,
     pub policy: BatchPolicy,
 }
@@ -51,76 +104,176 @@ pub enum SubmitError {
 pub struct Coordinator {
     queues: Vec<Arc<BoundedQueue<InferRequest>>>,
     names: Vec<String>,
+    replicas: Vec<usize>,
     workers: Vec<JoinHandle<()>>,
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
-    round_robin: AtomicUsize,
+    /// Rotates the scan start of least-loaded selection so queue-depth
+    /// ties do not all land on pool 0.
+    tie_break: AtomicUsize,
 }
 
 impl Coordinator {
-    /// Spawn one worker per `(name, factory)` pair; blocks until every
-    /// backend reports ready (or fails).
-    pub fn start(
-        backends: Vec<(String, BackendFactory)>,
+    /// Spawn every pool's workers; blocks until each replica's backend
+    /// reports ready (or fails). Accepts `(String, BackendFactory)`
+    /// pairs (single-replica pools) or explicit [`PoolSpec`]s.
+    pub fn start<P: Into<PoolSpec>>(
+        pools: Vec<P>,
         config: CoordinatorConfig,
     ) -> Result<Coordinator> {
         config.policy.validate().map_err(|e| anyhow::anyhow!(e))?;
-        if backends.is_empty() {
-            bail!("need at least one backend");
+        if pools.is_empty() {
+            bail!("need at least one backend pool");
         }
         let metrics = Arc::new(Metrics::new());
-        let mut queues = Vec::new();
+        let mut queues: Vec<Arc<BoundedQueue<InferRequest>>> = Vec::new();
         let mut names = Vec::new();
-        let mut workers = Vec::new();
-        for (name, factory) in backends {
+        let mut replicas = Vec::new();
+        let mut workers: Vec<JoinHandle<()>> = Vec::new();
+        // On any startup failure, close every queue created so far so
+        // already-spawned workers exit instead of leaking.
+        let fail = |queues: &[Arc<BoundedQueue<InferRequest>>],
+                        workers: &mut Vec<JoinHandle<()>>,
+                        e: anyhow::Error| {
+            for q in queues {
+                q.close();
+            }
+            for w in workers.drain(..) {
+                let _ = w.join();
+            }
+            Err(e)
+        };
+        for pool in pools {
+            let pool: PoolSpec = pool.into();
+            let name = pool.name;
+            if pool.factories.is_empty() {
+                return fail(
+                    &queues,
+                    &mut workers,
+                    anyhow::anyhow!("pool '{name}' has zero replicas"),
+                );
+            }
             let queue = Arc::new(BoundedQueue::<InferRequest>::new(config.queue_capacity));
-            let (ready_tx, ready_rx) = channel::<Result<()>>();
-            let worker = {
-                let queue = queue.clone();
-                let metrics = metrics.clone();
-                let name = name.clone();
-                let policy = config.policy;
-                std::thread::Builder::new()
-                    .name(format!("edgemlp-{name}"))
-                    .spawn(move || {
-                        let mut backend = match factory() {
-                            Ok(b) => {
-                                let _ = ready_tx.send(Ok(()));
-                                b
-                            }
-                            Err(e) => {
-                                let _ = ready_tx.send(Err(e));
-                                return;
-                            }
-                        };
-                        worker_loop(&name, backend.as_mut(), &queue, &metrics, policy);
-                    })
-                    .context("spawn worker")?
-            };
-            ready_rx
-                .recv()
-                .context("worker handshake lost")?
-                .with_context(|| format!("backend '{name}' failed to start"))?;
+            let n_replicas = pool.factories.len();
+            for (r, factory) in pool.factories.into_iter().enumerate() {
+                let (ready_tx, ready_rx) = channel::<Result<()>>();
+                let spawned = {
+                    let queue = queue.clone();
+                    let metrics = metrics.clone();
+                    let name = name.clone();
+                    let policy = config.policy;
+                    std::thread::Builder::new()
+                        .name(format!("edgemlp-{name}-r{r}"))
+                        .spawn(move || {
+                            let mut backend = match factory() {
+                                Ok(b) => {
+                                    let _ = ready_tx.send(Ok(()));
+                                    b
+                                }
+                                Err(e) => {
+                                    let _ = ready_tx.send(Err(e));
+                                    return;
+                                }
+                            };
+                            worker_loop(&name, backend.as_mut(), &queue, &metrics, policy);
+                        })
+                        .context("spawn worker")
+                };
+                let worker = match spawned {
+                    Ok(w) => w,
+                    Err(e) => {
+                        // The current pool's queue is not in `queues`
+                        // yet — close it so this pool's earlier
+                        // replicas exit before the join in `fail`.
+                        queue.close();
+                        return fail(&queues, &mut workers, e);
+                    }
+                };
+                workers.push(worker);
+                let ready = ready_rx
+                    .recv()
+                    .context("worker handshake lost")
+                    .and_then(|r| {
+                        r.with_context(|| {
+                            format!("backend '{name}' replica {r} failed to start")
+                        })
+                    });
+                if let Err(e) = ready {
+                    queue.close();
+                    return fail(&queues, &mut workers, e);
+                }
+            }
             queues.push(queue);
             names.push(name);
-            workers.push(worker);
+            replicas.push(n_replicas);
         }
         Ok(Coordinator {
             queues,
             names,
+            replicas,
             workers,
             metrics,
             next_id: AtomicU64::new(0),
-            round_robin: AtomicUsize::new(0),
+            tie_break: AtomicUsize::new(0),
         })
     }
 
+    /// Pool names, in submission-index order.
+    pub fn pool_names(&self) -> &[String] {
+        &self.names
+    }
+
+    /// Back-compat alias for [`Coordinator::pool_names`].
     pub fn backend_names(&self) -> &[String] {
         &self.names
     }
 
     pub fn backend_index(&self, name: &str) -> Option<usize> {
         self.names.iter().position(|n| n == name)
+    }
+
+    pub fn num_pools(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Worker replicas behind pool `idx`.
+    pub fn pool_replicas(&self, idx: usize) -> Option<usize> {
+        self.replicas.get(idx).copied()
+    }
+
+    /// Requests currently parked in pool `idx`'s queue.
+    pub fn queue_depth(&self, idx: usize) -> Option<usize> {
+        self.queues.get(idx).map(|q| q.len())
+    }
+
+    /// The least-loaded pool among `candidates` (queue depth; ties
+    /// broken by a rotating scan start so equally idle pools share
+    /// traffic). `None` if no candidate is a valid pool index.
+    pub fn least_loaded_of(&self, candidates: &[usize]) -> Option<usize> {
+        self.least_loaded_scan(candidates.len(), |k| candidates[k])
+    }
+
+    /// Shared scan: `index` maps a rotated scan position to a pool
+    /// index. Allocation-free, so the per-request [`Coordinator::submit`]
+    /// path can scan all pools without building an index `Vec`.
+    fn least_loaded_scan(
+        &self,
+        n: usize,
+        index: impl Fn(usize) -> usize,
+    ) -> Option<usize> {
+        if n == 0 {
+            return None;
+        }
+        let start = self.tie_break.fetch_add(1, Ordering::Relaxed);
+        let mut best: Option<(usize, usize)> = None; // (idx, depth)
+        for k in 0..n {
+            let idx = index((start + k) % n);
+            let Some(depth) = self.queue_depth(idx) else { continue };
+            if best.map(|(_, d)| depth < d).unwrap_or(true) {
+                best = Some((idx, depth));
+            }
+        }
+        best.map(|(idx, _)| idx)
     }
 
     pub fn metrics(&self) -> Arc<Metrics> {
@@ -138,13 +291,13 @@ impl Coordinator {
         (req, rx)
     }
 
-    /// Blocking submit to a specific backend.
+    /// Blocking submit to a specific pool.
     pub fn submit_to(
         &self,
-        backend: usize,
+        pool: usize,
         payload: Vec<f32>,
     ) -> Result<Receiver<InferResult>, SubmitError> {
-        let queue = self.queues.get(backend).ok_or(SubmitError::UnknownBackend)?;
+        let queue = self.queues.get(pool).ok_or(SubmitError::UnknownBackend)?;
         let (req, rx) = self.make_request(payload);
         match queue.push(req) {
             Ok(()) => Ok(rx),
@@ -157,10 +310,10 @@ impl Coordinator {
     /// shed or retry.
     pub fn try_submit_to(
         &self,
-        backend: usize,
+        pool: usize,
         payload: Vec<f32>,
     ) -> Result<Receiver<InferResult>, SubmitError> {
-        let queue = self.queues.get(backend).ok_or(SubmitError::UnknownBackend)?;
+        let queue = self.queues.get(pool).ok_or(SubmitError::UnknownBackend)?;
         let (req, rx) = self.make_request(payload);
         match queue.try_push(req) {
             Ok(()) => Ok(rx),
@@ -172,9 +325,13 @@ impl Coordinator {
         }
     }
 
-    /// Round-robin submit across backends.
+    /// Least-loaded submit across all pools: the request goes to the
+    /// pool with the shallowest queue, so a saturated pool stops
+    /// receiving new work while a drained one soaks it up.
     pub fn submit(&self, payload: Vec<f32>) -> Result<Receiver<InferResult>, SubmitError> {
-        let idx = self.round_robin.fetch_add(1, Ordering::Relaxed) % self.queues.len();
+        let idx = self
+            .least_loaded_scan(self.queues.len(), |k| k)
+            .ok_or(SubmitError::UnknownBackend)?;
         self.submit_to(idx, payload)
     }
 
@@ -212,7 +369,8 @@ impl Drop for Coordinator {
     }
 }
 
-/// Body of a backend worker thread.
+/// Body of a pool worker thread. `name` is the pool label — replicas
+/// share it, so metrics aggregate per pool.
 fn worker_loop(
     name: &str,
     backend: &mut dyn Backend,
@@ -277,6 +435,19 @@ mod tests {
         )
     }
 
+    /// Shared factory for a replicated echo pool; counts constructions.
+    fn shared_echo(
+        name: &'static str,
+        built: Arc<AtomicUsize>,
+    ) -> SharedBackendFactory {
+        Arc::new(move || {
+            built.fetch_add(1, Ordering::SeqCst);
+            Ok(Box::new(FnBackend::new(name, 16, |inputs: &[Vec<f32>]| {
+                Ok(inputs.iter().map(|v| v.iter().map(|x| x * 2.0).collect()).collect())
+            })) as Box<dyn Backend>)
+        })
+    }
+
     #[test]
     fn serves_requests_end_to_end() {
         let coord =
@@ -312,6 +483,116 @@ mod tests {
     }
 
     #[test]
+    fn replicated_pool_builds_one_backend_per_replica() {
+        let built = Arc::new(AtomicUsize::new(0));
+        let coord = Coordinator::start(
+            vec![PoolSpec::replicated("echo", 4, shared_echo("echo", built.clone()))],
+            CoordinatorConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(built.load(Ordering::SeqCst), 4);
+        assert_eq!(coord.num_pools(), 1);
+        assert_eq!(coord.pool_replicas(0), Some(4));
+        // All replicas answer from the shared queue.
+        let receivers: Vec<_> =
+            (0..64).map(|i| coord.submit(vec![i as f32]).unwrap()).collect();
+        for (i, rx) in receivers.into_iter().enumerate() {
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+            assert_eq!(resp.output, vec![2.0 * i as f32]);
+        }
+        assert_eq!(coord.metrics().snapshot().backends["echo"].requests, 64);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn replicas_serve_concurrently() {
+        // Each backend instance sleeps 60 ms per batch. Four requests
+        // through 4 replicas must overlap: well under the 240 ms a
+        // single worker would need (generous margin for CI jitter).
+        let slow: SharedBackendFactory = Arc::new(|| {
+            Ok(Box::new(FnBackend::new("slow", 1, |inputs: &[Vec<f32>]| {
+                std::thread::sleep(Duration::from_millis(60));
+                Ok(inputs.to_vec())
+            })) as Box<dyn Backend>)
+        });
+        let coord = Coordinator::start(
+            vec![PoolSpec::replicated("slow", 4, slow)],
+            CoordinatorConfig { queue_capacity: 16, policy: BatchPolicy::immediate(1) },
+        )
+        .unwrap();
+        let t0 = Instant::now();
+        let receivers: Vec<_> = (0..4).map(|i| coord.submit(vec![i as f32]).unwrap()).collect();
+        for rx in receivers {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        }
+        let elapsed = t0.elapsed();
+        assert!(
+            elapsed < Duration::from_millis(200),
+            "4 replicas took {elapsed:?} for 4 overlapping 60 ms requests"
+        );
+        coord.shutdown();
+    }
+
+    #[test]
+    fn submit_routes_to_least_loaded_pool() {
+        // Pool "clogged" has a backend wedged on a long sleep with
+        // requests parked behind it; pool "idle" is empty. Every
+        // depth-aware submit must land on "idle" — the saturated pool
+        // stops receiving new requests while the drained one soaks
+        // them up.
+        let wedge: (String, BackendFactory) = (
+            "clogged".into(),
+            Box::new(|| {
+                Ok(Box::new(FnBackend::new("clogged", 1, |inputs: &[Vec<f32>]| {
+                    std::thread::sleep(Duration::from_millis(150));
+                    Ok(inputs.to_vec())
+                })) as Box<dyn Backend>)
+            }),
+        );
+        let coord = Coordinator::start(
+            vec![wedge, echo_factory("idle")],
+            CoordinatorConfig { queue_capacity: 64, policy: BatchPolicy::immediate(1) },
+        )
+        .unwrap();
+        // Park 6 requests on the clogged pool (1 in flight + 5 queued).
+        let parked: Vec<_> =
+            (0..6).map(|_| coord.submit_to(0, vec![0.0]).unwrap()).collect();
+        // Give the worker a moment to pull the first one off the queue.
+        std::thread::sleep(Duration::from_millis(20));
+        let depth_before = coord.queue_depth(0).unwrap();
+        assert!(depth_before >= 4, "clogged queue depth {depth_before}");
+        // Depth-aware submits all route to the idle pool.
+        for i in 0..10 {
+            let rx = coord.submit(vec![i as f32]).unwrap();
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+            assert_eq!(resp.backend, "idle", "request {i} routed to the saturated pool");
+        }
+        assert!(
+            coord.queue_depth(0).unwrap() <= depth_before,
+            "saturated pool kept receiving new requests"
+        );
+        for rx in parked {
+            rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn least_loaded_breaks_ties_fairly() {
+        let coord = Coordinator::start(
+            vec![echo_factory("a"), echo_factory("b")],
+            CoordinatorConfig::default(),
+        )
+        .unwrap();
+        // Both queues empty: the rotating scan start must not pin every
+        // pick to pool 0.
+        let picks: Vec<usize> =
+            (0..10).map(|_| coord.least_loaded_of(&[0, 1]).unwrap()).collect();
+        assert!(picks.contains(&0) && picks.contains(&1), "ties all landed on {picks:?}");
+        coord.shutdown();
+    }
+
+    #[test]
     fn failing_backend_start_is_synchronous_error() {
         let failing: (String, BackendFactory) = (
             "bad".into(),
@@ -321,6 +602,53 @@ mod tests {
             Ok(_) => panic!("expected startup failure"),
             Err(e) => assert!(format!("{e:#}").contains("no device")),
         }
+    }
+
+    #[test]
+    fn failing_replica_start_cleans_up_earlier_pools() {
+        // Pool 0 starts fine; pool 1's factory fails. start() must
+        // error out and pool 0's worker must exit (not leak blocked on
+        // its queue) — verified by the join inside the failure path
+        // completing, i.e. this test not hanging.
+        let flaky: (String, BackendFactory) = (
+            "flaky".into(),
+            Box::new(|| anyhow::bail!("replica died")),
+        );
+        let err = Coordinator::start(
+            vec![echo_factory("ok"), flaky],
+            CoordinatorConfig::default(),
+        )
+        .err()
+        .expect("expected startup failure");
+        assert!(format!("{err:#}").contains("replica died"));
+    }
+
+    #[test]
+    fn failing_second_replica_does_not_deadlock_startup() {
+        // Replica 0 starts; replica 1's factory fails. The pool's queue
+        // is not yet registered at that point — startup must still
+        // close it so replica 0 exits and the cleanup join returns.
+        let calls = Arc::new(AtomicUsize::new(0));
+        let factory: SharedBackendFactory = {
+            let calls = calls.clone();
+            Arc::new(move || {
+                if calls.fetch_add(1, Ordering::SeqCst) == 0 {
+                    Ok(Box::new(FnBackend::new("ok", 4, |inputs: &[Vec<f32>]| {
+                        Ok(inputs.to_vec())
+                    })) as Box<dyn Backend>)
+                } else {
+                    anyhow::bail!("second replica died")
+                }
+            })
+        };
+        let err = Coordinator::start(
+            vec![PoolSpec::replicated("pool", 2, factory)],
+            CoordinatorConfig::default(),
+        )
+        .err()
+        .expect("expected startup failure");
+        assert!(format!("{err:#}").contains("second replica died"));
+        assert_eq!(calls.load(Ordering::SeqCst), 2);
     }
 
     #[test]

@@ -3,9 +3,11 @@
 //! ```text
 //! edgemlp train            --epochs 5 --out /tmp/mlp.emlp
 //! edgemlp infer            --model /tmp/mlp.emlp --backend fpga
-//! edgemlp serve            --addr 127.0.0.1:7878 --model /tmp/mlp.emlp
-//! edgemlp loadgen          --addr 127.0.0.1:7878 --requests 10000
-//! edgemlp ctl              --addr 127.0.0.1:7878 --op stats|ping|swap
+//! edgemlp serve            --addr 127.0.0.1:7878 --model /tmp/mlp.emlp \
+//!                          --replicas 4 --models qnet=/tmp/qnet.emlp
+//! edgemlp loadgen          --addr 127.0.0.1:7878 --requests 10000 \
+//!                          --model qnet --warmup 500
+//! edgemlp ctl              --addr 127.0.0.1:7878 --op stats|ping|swap|models
 //! edgemlp throughput       --requests 500       # in-process E6 sweep
 //! edgemlp table1           [--no-xla]         # paper Table I
 //! edgemlp fig5                                 # paper Figure 5
@@ -177,13 +179,11 @@ fn cmd_infer(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Start the real TCP server: coordinator + swappable backends behind
+/// Start the real TCP server: the replicated multi-model engine behind
 /// the wire protocol. Blocks until killed.
 fn cmd_serve(args: &Args) -> Result<()> {
-    use edgemlp::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
-    use edgemlp::serve::{
-        swappable_cpu_factory, swappable_fpga_factory, ModelRegistry, ServeConfig, Server,
-    };
+    use edgemlp::coordinator::{BatchPolicy, CoordinatorConfig};
+    use edgemlp::serve::{BackendKind, EngineConfig, ModelRegistry, ServeConfig, Server};
     use std::time::Duration;
 
     let addr = args.get("addr", "127.0.0.1:7878");
@@ -191,6 +191,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let random = args.get_bool("random").map_err(anyhow::Error::msg)?;
     let models = args.get("models", "");
     let backends = args.get("backends", "cpu,fpga");
+    let replicas: usize = args.get_parse("replicas", 1).map_err(anyhow::Error::msg)?;
     let queue_capacity: usize =
         args.get_parse("queue-capacity", 1024).map_err(anyhow::Error::msg)?;
     let max_batch: usize = args.get_parse("max-batch", 64).map_err(anyhow::Error::msg)?;
@@ -202,6 +203,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // error instead of a panic.
     if !(3..=15).contains(&spx_bits) {
         bail!("--spx-bits must be in 3..=15, got {spx_bits}");
+    }
+    if replicas == 0 {
+        bail!("--replicas must be at least 1");
     }
 
     let mlp = if random {
@@ -216,48 +220,64 @@ fn cmd_serve(args: &Args) -> Result<()> {
         })?
     };
     let registry = ModelRegistry::new("default", mlp, SpxConfig::sp2(spx_bits));
+    // Every --models entry is registered in the catalog AND served in
+    // its own slot, routable by name on the wire. When the name
+    // collides with an existing slot (e.g. "default"), add_slot is an
+    // idempotent no-op, so the freshly loaded version must be activated
+    // explicitly — otherwise the slot would keep serving the old
+    // weights while the CLI claims the new version is live.
     for entry in models.split(',').filter(|s| !s.is_empty()) {
         let (name, path) = entry
             .split_once('=')
             .with_context(|| format!("--models entry '{entry}' is not name=path"))?;
         let model = registry.load_blob(name, Path::new(path))?;
-        println!("registered model '{}' v{} from {path}", model.name, model.version);
+        let slot = registry.add_slot(name)?;
+        if slot.active().version != model.version {
+            registry.activate_into(name, name)?;
+        }
+        println!("serving model '{}' v{} from {path}", model.name, model.version);
     }
 
-    let mut factories = Vec::new();
+    let mut kinds = Vec::new();
     for b in backends.split(',').filter(|s| !s.is_empty()) {
         match b.trim() {
-            "cpu" => factories.push(("cpu".to_string(), swappable_cpu_factory(registry.clone()))),
-            "fpga" => factories.push((
-                "fpga".to_string(),
-                swappable_fpga_factory(registry.clone(), AccelConfig::default_fpga()),
-            )),
+            "cpu" => kinds.push(BackendKind::Cpu),
+            "fpga" => kinds.push(BackendKind::FpgaSim(AccelConfig::default_fpga())),
             other => bail!("unknown backend '{other}' (cpu|fpga)"),
         }
     }
-    let coord = Coordinator::start(
-        factories,
-        CoordinatorConfig {
-            queue_capacity,
-            policy: BatchPolicy::windowed(max_batch, Duration::from_secs_f64(window_ms / 1e3)),
-        },
-    )?;
-    let server = Server::start(
-        coord,
+    let server = Server::serve(
         registry.clone(),
         &addr,
-        ServeConfig { max_conns, ..ServeConfig::default() },
+        EngineConfig {
+            replicas,
+            backends: kinds,
+            coordinator: CoordinatorConfig {
+                queue_capacity,
+                policy: BatchPolicy::windowed(
+                    max_batch,
+                    Duration::from_secs_f64(window_ms / 1e3),
+                ),
+            },
+            serve: ServeConfig { max_conns, ..ServeConfig::default() },
+        },
     )?;
-    let active = registry.active();
     println!(
-        "serving on {} — backends [{backends}], model {} v{} ({}→{}), queue {queue_capacity}, \
-         batch {max_batch}@{window_ms}ms",
+        "serving on {} — backends [{backends}] × {replicas} replica(s), queue \
+         {queue_capacity}, batch {max_batch}@{window_ms}ms",
         server.local_addr(),
-        active.name,
-        active.version,
-        active.input_dim(),
-        active.output_dim(),
     );
+    for slot in registry.slots() {
+        let active = slot.active();
+        println!(
+            "  model {}: {} v{} ({}→{})",
+            slot.name(),
+            active.name,
+            active.version,
+            active.input_dim(),
+            active.output_dim(),
+        );
+    }
     println!("stop with ctrl-c; `edgemlp ctl --op stats` for live metrics");
     loop {
         std::thread::sleep(Duration::from_secs(3600));
@@ -270,6 +290,13 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
 
     let addr = args.get("addr", "127.0.0.1:7878");
     let backend_arg = args.get("backend", "any");
+    // Comma-separated model names; connections are spread across them.
+    let models: Vec<String> = args
+        .get("model", "")
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect();
     let config = LoadGenConfig {
         requests: args.get_parse("requests", 10_000).map_err(anyhow::Error::msg)?,
         connections: args.get_parse("connections", 8).map_err(anyhow::Error::msg)?,
@@ -278,10 +305,12 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         } else {
             backend_arg.parse().map_err(|e| anyhow::anyhow!("--backend: {e}"))?
         },
+        models,
         dim: args.get_parse("dim", 784).map_err(anyhow::Error::msg)?,
         rate_rps: args.get_parse("rate", 0.0).map_err(anyhow::Error::msg)?,
         batch: args.get_parse("batch", 1).map_err(anyhow::Error::msg)?,
         pipeline: args.get_parse("pipeline", 8).map_err(anyhow::Error::msg)?,
+        warmup: args.get_parse("warmup", 0).map_err(anyhow::Error::msg)?,
         seed: args.get_parse("seed", 7).map_err(anyhow::Error::msg)?,
     };
     args.finish().map_err(anyhow::Error::msg)?;
@@ -314,6 +343,7 @@ fn cmd_ctl(args: &Args) -> Result<()> {
     let addr = args.get("addr", "127.0.0.1:7878");
     let op = args.get("op", "stats");
     let model = args.get("model", "");
+    let into = args.get("into", "");
     args.finish().map_err(anyhow::Error::msg)?;
 
     let mut client = Client::connect(&addr)?;
@@ -325,11 +355,27 @@ fn cmd_ctl(args: &Args) -> Result<()> {
         "stats" => print!("{}", client.stats()?),
         "swap" => {
             if model.is_empty() {
-                bail!("--op swap needs --model <name>");
+                bail!("--op swap needs --model <name> (and optionally --into <slot>)");
             }
-            println!("{}", client.swap_model(&model)?);
+            println!("{}", client.swap_model_into(&into, &model)?);
         }
-        other => bail!("unknown op '{other}' (ping|stats|swap)"),
+        "models" => {
+            use edgemlp::bench_harness::Table;
+            let models = client.list_models()?;
+            let mut table =
+                Table::new(&["slot", "active model", "version", "dims", "generation"]);
+            for m in &models {
+                table.row(&[
+                    m.slot.clone(),
+                    m.model.clone(),
+                    m.version.to_string(),
+                    format!("{}→{}", m.input_dim, m.output_dim),
+                    m.generation.to_string(),
+                ]);
+            }
+            table.print();
+        }
+        other => bail!("unknown op '{other}' (ping|stats|swap|models)"),
     }
     Ok(())
 }

@@ -1,16 +1,23 @@
 //! Blocking wire-protocol client plus the load generator the serving
 //! benchmark and `edgemlp loadgen` drive.
 //!
-//! The client supports both call-and-wait methods (`infer`, `stats`,
-//! `swap_model`) and a pipelined pair (`send_infer` / `recv_infer`)
+//! The client speaks protocol v2: every inference can name a served
+//! model (the empty string routes to the server's default). It supports
+//! both call-and-wait methods (`infer`, `stats`, `swap_model`,
+//! `list_models`) and a pipelined pair (`send_infer` / `recv_infer`)
 //! that keeps a window of requests in flight on one connection — the
 //! open-loop load generator uses the latter so the server's dynamic
 //! batcher actually sees batches.
+//!
+//! The load generator spreads its connections across the configured
+//! model names (multi-model traffic from one invocation), optionally
+//! discards a warm-up prefix from the latency report, and renders a
+//! per-model percentile table.
 
-use super::wire::{self, Frame, Opcode, Status, BACKEND_ANY, DEFAULT_MAX_PAYLOAD};
+use super::wire::{self, Frame, ModelInfo, Opcode, Status, BACKEND_ANY, DEFAULT_MAX_PAYLOAD};
 use crate::util::rng::Pcg32;
 use anyhow::{bail, Context, Result};
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::time::{Duration, Instant};
@@ -78,10 +85,17 @@ impl Client {
         Ok(t0.elapsed())
     }
 
-    /// One inference round-trip on `backend` ([`BACKEND_ANY`] lets the
-    /// server round-robin).
+    /// One inference round-trip against the server's default model on
+    /// `backend` ([`BACKEND_ANY`] lets the server pick the least-loaded
+    /// pool).
     pub fn infer(&mut self, backend: u32, x: &[f32]) -> Result<InferReply> {
-        let id = self.send(Opcode::Infer, wire::encode_infer(backend, x))?;
+        self.infer_model(backend, "", x)
+    }
+
+    /// One inference round-trip against a named model (the empty name
+    /// is the server's default).
+    pub fn infer_model(&mut self, backend: u32, model: &str, x: &[f32]) -> Result<InferReply> {
+        let id = self.send_infer_model(backend, model, x)?;
         let (got, reply) = Self::parse_infer(self.recv()?)?;
         if got != id {
             bail!("response id {got} for request {id}");
@@ -92,7 +106,14 @@ impl Client {
     /// Send an inference without waiting; pair with
     /// [`Client::recv_infer`]. Replies arrive in send order.
     pub fn send_infer(&mut self, backend: u32, x: &[f32]) -> Result<u64> {
-        self.send(Opcode::Infer, wire::encode_infer(backend, x))
+        self.send_infer_model(backend, "", x)
+    }
+
+    /// Pipelined send against a named model.
+    pub fn send_infer_model(&mut self, backend: u32, model: &str, x: &[f32]) -> Result<u64> {
+        let payload =
+            wire::encode_infer(backend, model, x).map_err(|e| anyhow::anyhow!(e))?;
+        self.send(Opcode::Infer, payload)
     }
 
     /// Receive the next pipelined inference reply.
@@ -113,10 +134,20 @@ impl Client {
         Ok((id, reply))
     }
 
-    /// One batched inference round-trip.
+    /// One batched inference round-trip against the default model.
     pub fn infer_batch(&mut self, backend: u32, samples: &[Vec<f32>]) -> Result<BatchReply> {
+        self.infer_batch_model(backend, "", samples)
+    }
+
+    /// One batched inference round-trip against a named model.
+    pub fn infer_batch_model(
+        &mut self,
+        backend: u32,
+        model: &str,
+        samples: &[Vec<f32>],
+    ) -> Result<BatchReply> {
         let payload =
-            wire::encode_infer_batch(backend, samples).map_err(|e| anyhow::anyhow!(e))?;
+            wire::encode_infer_batch(backend, model, samples).map_err(|e| anyhow::anyhow!(e))?;
         let id = self.send(Opcode::InferBatch, payload)?;
         let resp = self.recv()?;
         if resp.request_id != id {
@@ -132,7 +163,7 @@ impl Client {
     }
 
     /// Metrics snapshot (text, includes latency percentiles and the
-    /// active model).
+    /// served models).
     pub fn stats(&mut self) -> Result<String> {
         let id = self.send(Opcode::Stats, Vec::new())?;
         let resp = self.recv()?;
@@ -142,16 +173,37 @@ impl Client {
         Ok(resp.message())
     }
 
-    /// Activate a registered model version; returns the server's
-    /// confirmation line.
-    pub fn swap_model(&mut self, name: &str) -> Result<String> {
-        let id = self.send(Opcode::SwapModel, wire::encode_str(name))?;
+    /// Enumerate the served models (slot, active version, dims,
+    /// generation).
+    pub fn list_models(&mut self) -> Result<Vec<ModelInfo>> {
+        let id = self.send(Opcode::ListModels, Vec::new())?;
         let resp = self.recv()?;
         if resp.request_id != id {
             bail!("response id {} for request {id}", resp.request_id);
         }
         if resp.status != Status::Ok {
-            bail!("swap to '{name}' failed: {} — {}", resp.status, resp.message());
+            bail!("list models failed: {} {}", resp.status, resp.message());
+        }
+        wire::decode_model_list(&resp.payload).map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Activate registered model `name` into the server's default slot
+    /// (v1 semantics); returns the server's confirmation line.
+    pub fn swap_model(&mut self, name: &str) -> Result<String> {
+        self.swap_model_into("", name)
+    }
+
+    /// Activate registered model `source` into serving slot `slot` (the
+    /// empty slot name targets the default slot).
+    pub fn swap_model_into(&mut self, slot: &str, source: &str) -> Result<String> {
+        let payload = wire::encode_swap(slot, source).map_err(|e| anyhow::anyhow!(e))?;
+        let id = self.send(Opcode::SwapModel, payload)?;
+        let resp = self.recv()?;
+        if resp.request_id != id {
+            bail!("response id {} for request {id}", resp.request_id);
+        }
+        if resp.status != Status::Ok {
+            bail!("swap to '{source}' failed: {} — {}", resp.status, resp.message());
         }
         Ok(resp.message())
     }
@@ -162,7 +214,7 @@ impl Client {
 // ---------------------------------------------------------------------------
 
 /// Load-generator knobs.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct LoadGenConfig {
     /// Total requests across all connections.
     pub requests: usize,
@@ -170,7 +222,10 @@ pub struct LoadGenConfig {
     pub connections: usize,
     /// Backend index, or [`BACKEND_ANY`].
     pub backend: u32,
-    /// Input dimension of the served model.
+    /// Model names to drive; connections are spread round-robin across
+    /// them. Empty = the server's default model only.
+    pub models: Vec<String>,
+    /// Input dimension of the served model(s).
     pub dim: usize,
     /// Offered load in requests/s across all connections; 0 = closed
     /// loop (each connection sends as fast as replies return).
@@ -180,6 +235,9 @@ pub struct LoadGenConfig {
     /// Outstanding requests per connection (pipelining window; only
     /// meaningful for `batch == 1`).
     pub pipeline: usize,
+    /// Ramp-up requests to exclude from the latency report (spread
+    /// across connections; they still count as sent/ok).
+    pub warmup: usize,
     pub seed: u64,
 }
 
@@ -189,24 +247,54 @@ impl Default for LoadGenConfig {
             requests: 10_000,
             connections: 8,
             backend: BACKEND_ANY,
+            models: Vec::new(),
             dim: 784,
             rate_rps: 0.0,
             batch: 1,
             pipeline: 1,
+            warmup: 0,
             seed: 7,
         }
     }
 }
 
+/// Per-model slice of a load-generator run.
+#[derive(Debug, Default, Clone)]
+pub struct ModelReport {
+    pub sent: usize,
+    pub ok: usize,
+    pub shed: usize,
+    pub errors: usize,
+    /// OK requests excluded from `latencies` as warm-up.
+    pub warmup_excluded: usize,
+    /// Client-observed seconds, send → reply, warm-up excluded.
+    pub latencies: Vec<f64>,
+}
+
+impl ModelReport {
+    fn merge(&mut self, other: &ModelReport) {
+        self.sent += other.sent;
+        self.ok += other.ok;
+        self.shed += other.shed;
+        self.errors += other.errors;
+        self.warmup_excluded += other.warmup_excluded;
+        self.latencies.extend_from_slice(&other.latencies);
+    }
+}
+
 /// Aggregated result of one load-generator run. `latencies` are
-/// client-observed seconds, send → reply.
+/// client-observed seconds, send → reply, with the warm-up prefix
+/// excluded; `per_model` breaks the same numbers down by model name.
 #[derive(Debug, Default, Clone)]
 pub struct LoadGenReport {
     pub sent: usize,
     pub ok: usize,
     pub shed: usize,
     pub errors: usize,
+    /// Requests answered OK but excluded from `latencies` as warm-up.
+    pub warmup_excluded: usize,
     pub latencies: Vec<f64>,
+    pub per_model: BTreeMap<String, ModelReport>,
     pub elapsed_s: f64,
 }
 
@@ -228,9 +316,11 @@ impl LoadGenReport {
         crate::util::percentile(&self.latencies, 99.0)
     }
 
+    /// The aggregate summary line plus a per-model percentile table.
     pub fn render(&self) -> String {
-        use crate::bench_harness::fmt_time;
-        format!(
+        use crate::bench_harness::{fmt_time, Table};
+        use crate::util::percentile;
+        let mut out = format!(
             "sent {} | ok {} | shed {} | errors {} | {:.0} req/s | p50 {} | p99 {}",
             self.sent,
             self.ok,
@@ -239,15 +329,39 @@ impl LoadGenReport {
             self.throughput_rps(),
             fmt_time(self.p50_s()),
             fmt_time(self.p99_s()),
-        )
+        );
+        if self.warmup_excluded > 0 {
+            out.push_str(&format!(" | warmup excluded {}", self.warmup_excluded));
+        }
+        out.push('\n');
+        let mut table =
+            Table::new(&["model", "sent", "ok", "shed", "err", "p50", "p95", "p99", "p99.9"]);
+        for (name, m) in &self.per_model {
+            let display = if name.is_empty() { "(default)" } else { name };
+            table.row(&[
+                display.to_string(),
+                m.sent.to_string(),
+                m.ok.to_string(),
+                m.shed.to_string(),
+                m.errors.to_string(),
+                fmt_time(percentile(&m.latencies, 50.0)),
+                fmt_time(percentile(&m.latencies, 95.0)),
+                fmt_time(percentile(&m.latencies, 99.0)),
+                fmt_time(percentile(&m.latencies, 99.9)),
+            ]);
+        }
+        out.push_str(&table.render());
+        out
     }
 
-    fn merge(&mut self, other: LoadGenReport) {
+    fn merge(&mut self, model: &str, other: ModelReport) {
         self.sent += other.sent;
         self.ok += other.ok;
         self.shed += other.shed;
         self.errors += other.errors;
-        self.latencies.extend(other.latencies);
+        self.warmup_excluded += other.warmup_excluded;
+        self.latencies.extend_from_slice(&other.latencies);
+        self.per_model.entry(model.to_string()).or_default().merge(&other);
     }
 }
 
@@ -256,7 +370,13 @@ impl LoadGenReport {
 pub fn run_loadgen(addr: std::net::SocketAddr, config: LoadGenConfig) -> Result<LoadGenReport> {
     anyhow::ensure!(config.connections > 0, "need at least one connection");
     anyhow::ensure!(config.batch > 0, "batch must be positive");
+    let models = if config.models.is_empty() {
+        vec![String::new()]
+    } else {
+        config.models.clone()
+    };
     let per_conn = config.requests.div_ceil(config.connections);
+    let warmup_per_conn = config.warmup.div_ceil(config.connections);
     let t0 = Instant::now();
     let mut threads = Vec::new();
     for c in 0..config.connections {
@@ -265,13 +385,19 @@ pub fn run_loadgen(addr: std::net::SocketAddr, config: LoadGenConfig) -> Result<
         if quota == 0 {
             break;
         }
-        threads.push(std::thread::spawn(move || -> Result<LoadGenReport> {
-            connection_worker(addr, config, quota, config.seed ^ (c as u64).wrapping_mul(0x9e37))
+        let config = config.clone();
+        let model = models[c % models.len()].clone();
+        threads.push(std::thread::spawn(move || -> Result<(String, ModelReport)> {
+            let seed = config.seed ^ (c as u64).wrapping_mul(0x9e37);
+            let report =
+                connection_worker(addr, &config, &model, quota, warmup_per_conn, seed)?;
+            Ok((model, report))
         }));
     }
     let mut report = LoadGenReport::default();
     for t in threads {
-        report.merge(t.join().expect("loadgen thread panicked")?);
+        let (model, conn_report) = t.join().expect("loadgen thread panicked")?;
+        report.merge(&model, conn_report);
     }
     report.elapsed_s = t0.elapsed().as_secs_f64();
     Ok(report)
@@ -279,13 +405,18 @@ pub fn run_loadgen(addr: std::net::SocketAddr, config: LoadGenConfig) -> Result<
 
 fn connection_worker(
     addr: std::net::SocketAddr,
-    config: LoadGenConfig,
+    config: &LoadGenConfig,
+    model: &str,
     quota: usize,
+    warmup: usize,
     seed: u64,
-) -> Result<LoadGenReport> {
+) -> Result<ModelReport> {
     let mut client = Client::connect(addr)?;
     let mut rng = Pcg32::new(seed);
-    let mut report = LoadGenReport::default();
+    let mut report = ModelReport::default();
+    // Completed samples so far — the first `warmup` are excluded from
+    // the latency vectors.
+    let mut completed = 0usize;
     let sample = |rng: &mut Pcg32| -> Vec<f32> {
         (0..config.dim).map(|_| rng.uniform() as f32).collect()
     };
@@ -311,11 +442,18 @@ fn connection_worker(
             let samples: Vec<Vec<f32>> = (0..b).map(|_| sample(&mut rng)).collect();
             pace(&mut rng);
             let t = Instant::now();
-            match client.infer_batch(config.backend, &samples)? {
+            match client.infer_batch_model(config.backend, model, &samples)? {
                 BatchReply::Outputs(rows) => {
                     anyhow::ensure!(rows.len() == b, "batch reply size {} != {b}", rows.len());
                     report.ok += b;
-                    report.latencies.push(t.elapsed().as_secs_f64());
+                    if completed >= warmup {
+                        report.latencies.push(t.elapsed().as_secs_f64());
+                    } else {
+                        // A batch straddling the warm-up boundary is
+                        // excluded whole — its latency is one sample.
+                        report.warmup_excluded += b;
+                    }
+                    completed += b;
                 }
                 BatchReply::Shed(_) => report.shed += b,
                 BatchReply::Failed { .. } => report.errors += b,
@@ -331,7 +469,8 @@ fn connection_worker(
     let mut in_flight: VecDeque<(u64, Instant)> = VecDeque::with_capacity(window);
     let drain_one = |client: &mut Client,
                      in_flight: &mut VecDeque<(u64, Instant)>,
-                     report: &mut LoadGenReport|
+                     report: &mut ModelReport,
+                     completed: &mut usize|
      -> Result<()> {
         let (id, sent_at) = in_flight.pop_front().expect("drain on empty window");
         let (got, reply) = client.recv_infer()?;
@@ -339,7 +478,12 @@ fn connection_worker(
         match reply {
             InferReply::Output(_) => {
                 report.ok += 1;
-                report.latencies.push(sent_at.elapsed().as_secs_f64());
+                if *completed >= warmup {
+                    report.latencies.push(sent_at.elapsed().as_secs_f64());
+                } else {
+                    report.warmup_excluded += 1;
+                }
+                *completed += 1;
             }
             InferReply::Shed(_) => report.shed += 1,
             InferReply::Failed { .. } => report.errors += 1,
@@ -348,16 +492,16 @@ fn connection_worker(
     };
     for _ in 0..quota {
         if in_flight.len() >= window {
-            drain_one(&mut client, &mut in_flight, &mut report)?;
+            drain_one(&mut client, &mut in_flight, &mut report, &mut completed)?;
         }
         let x = sample(&mut rng);
         pace(&mut rng);
-        let id = client.send_infer(config.backend, &x)?;
+        let id = client.send_infer_model(config.backend, model, &x)?;
         in_flight.push_back((id, Instant::now()));
         report.sent += 1;
     }
     while !in_flight.is_empty() {
-        drain_one(&mut client, &mut in_flight, &mut report)?;
+        drain_one(&mut client, &mut in_flight, &mut report, &mut completed)?;
     }
     Ok(report)
 }

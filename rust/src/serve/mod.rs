@@ -2,34 +2,43 @@
 //! [`crate::coordinator`].
 //!
 //! ```text
-//!  loadgen/client ──TCP──► acceptor ──► per-conn reader ─submit─► coordinator queues
-//!      ▲                                  (bounded pool)              │ batcher
-//!      │                               per-conn writer ◄──response───┘
-//!      └───────────── frames (wire.rs) ────────┘
+//!  loadgen/client ──TCP──► acceptor ──► per-conn reader ─submit─► model route
+//!      ▲                                  (bounded pool)              │ least-loaded pool pick
+//!      │                               per-conn writer ◄──response───┤
+//!      └───────────── frames (wire.rs, v2) ─────┘                    ▼
+//!                                               per-(backend × model) worker pools
+//!                                                        (N replicas each)
 //!
-//!  SwapModel ──► ModelRegistry (versioned EMLP + SPx blobs)
-//!                     │ generation counter
+//!  SwapModel ──► ModelRegistry: catalog (versioned EMLP + SPx blobs)
+//!                     │ per-slot generation counters
 //!                     ▼
-//!        Swappable{Cpu,Fpga}Backend refresh between batches
+//!        Swappable{Cpu,Fpga}Backend refresh from their slot between batches
 //! ```
 //!
-//! * [`wire`] — the versioned length-prefixed binary protocol
-//!   (`docs/wire-protocol.md` is the spec);
+//! * [`wire`] — the versioned length-prefixed binary protocol, v2 with
+//!   model-name routing and `ListModels` (`docs/wire-protocol.md` is
+//!   the spec; v1 frames still accepted);
 //! * [`server`] — `TcpListener` acceptor + bounded connection pool
 //!   bridging frames onto the coordinator's batching queues;
-//! * [`registry`] — hot-swappable versioned model store with EMLP+SPx
-//!   persistence and registry-following backends;
-//! * [`client`] — blocking client and the open/closed-loop load
-//!   generator behind `edgemlp loadgen` and `BENCH_serving.json`.
+//!   [`Server::serve`] assembles the replicated multi-model engine
+//!   from an [`EngineConfig`];
+//! * [`registry`] — catalog of versioned models + independently
+//!   hot-swappable serving slots with EMLP+SPx persistence and
+//!   slot-following backends;
+//! * [`client`] — blocking model-aware client and the open/closed-loop
+//!   load generator behind `edgemlp loadgen` and `BENCH_serving.json`.
 
 pub mod client;
 pub mod registry;
 pub mod server;
 pub mod wire;
 
-pub use client::{run_loadgen, BatchReply, Client, InferReply, LoadGenConfig, LoadGenReport};
-pub use registry::{
-    swappable_cpu_factory, swappable_fpga_factory, ModelRegistry, ModelVersion, SwapError,
+pub use client::{
+    run_loadgen, BatchReply, Client, InferReply, LoadGenConfig, LoadGenReport, ModelReport,
 };
-pub use server::{ServeConfig, Server};
-pub use wire::{Frame, Opcode, Status, BACKEND_ANY};
+pub use registry::{
+    swappable_cpu_factory, swappable_fpga_factory, ModelRegistry, ModelSlot, ModelVersion,
+    SwapError,
+};
+pub use server::{BackendKind, EngineConfig, ServeConfig, Server};
+pub use wire::{Frame, ModelInfo, Opcode, Status, BACKEND_ANY};

@@ -1,20 +1,28 @@
-//! Hot-swappable model registry: versioned EMLP blobs + SPx code
-//! tensors, atomically activated into running backends.
+//! Multi-model registry: a catalog of versioned EMLP blobs + SPx code
+//! tensors, served through independently hot-swappable *slots*.
 //!
-//! The registry holds every registered [`ModelVersion`] behind `Arc`s
-//! and tracks the active one plus a monotonically increasing
-//! *generation* counter. The swappable backends below check the
-//! generation between batches: a batch that is already on a backend
-//! finishes on the model it started with, the next batch picks up the
-//! newly activated version — so `SwapModel` never drops in-flight
-//! requests. Persistence reuses the EMLP blob format (`util::serde`):
-//! a model file carries the fp32 tensors [`Mlp::to_tensors`] emits plus
-//! sidecar tensors with the SPx level indices, per-tensor scales and
-//! per-layer data ranges, so the quantized model reloads bit-identically
-//! without re-running calibration.
+//! Two levels of naming:
+//!
+//! * the **catalog** holds every registered [`ModelVersion`] by name
+//!   (re-registering a name bumps its version) — the pool of swap
+//!   candidates;
+//! * **slots** ([`ModelSlot`]) are the names clients route by on the
+//!   wire. Each slot points at one catalog version and carries its own
+//!   monotonically increasing *generation* counter, so swapping one
+//!   served model never disturbs another.
+//!
+//! The swappable backends below hold an `Arc<ModelSlot>` and check its
+//! generation between batches: a batch already on a backend finishes on
+//! the model it started with, the next batch picks up the newly
+//! activated version — so `SwapModel` never drops in-flight requests.
+//! Persistence reuses the EMLP blob format (`util::serde`): a model
+//! file carries the fp32 tensors [`Mlp::to_tensors`] emits plus sidecar
+//! tensors with the SPx level indices, per-tensor scales and per-layer
+//! data ranges, so the quantized model reloads bit-identically without
+//! re-running calibration.
 
 use crate::coordinator::backend::{Backend, CpuBackend, FpgaBackend};
-use crate::coordinator::server::BackendFactory;
+use crate::coordinator::server::SharedBackendFactory;
 use crate::fpga::accelerator::{AccelConfig, Accelerator, QuantizedLayer, QuantizedMlp};
 use crate::fpga::stats::CycleStats;
 use crate::nn::Mlp;
@@ -48,13 +56,58 @@ impl ModelVersion {
     }
 }
 
+/// A serving slot: the unit of routing and of hot swap. Backends bound
+/// to the slot poll [`ModelSlot::generation`] (one atomic load) between
+/// batches and reload from [`ModelSlot::active`] when it moved.
+pub struct ModelSlot {
+    name: String,
+    generation: AtomicU64,
+    active: Mutex<Arc<ModelVersion>>,
+}
+
+impl ModelSlot {
+    fn new(name: &str, model: Arc<ModelVersion>) -> Arc<ModelSlot> {
+        Arc::new(ModelSlot {
+            name: name.to_string(),
+            generation: AtomicU64::new(1),
+            active: Mutex::new(model),
+        })
+    }
+
+    /// The slot name clients route by.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The model version currently served by this slot.
+    pub fn active(&self) -> Arc<ModelVersion> {
+        self.active.lock().unwrap().clone()
+    }
+
+    /// Swap generation (starts at 1, bumped per activation).
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::SeqCst)
+    }
+
+    /// Install `model` and bump the generation. The store happens
+    /// before the bump, so a backend that observes the new counter also
+    /// observes the new active model.
+    fn set_active(&self, model: Arc<ModelVersion>) -> u64 {
+        *self.active.lock().unwrap() = model;
+        self.generation.fetch_add(1, Ordering::SeqCst) + 1
+    }
+}
+
 /// Why a swap was refused.
 #[derive(Debug, PartialEq, Eq)]
 pub enum SwapError {
-    /// No model registered under that name.
+    /// No catalog model registered under that name.
     UnknownModel(String),
-    /// The named model's I/O shape differs from the active one — a swap
-    /// would break requests already sized for the current signature.
+    /// No serving slot with that name.
+    UnknownSlot(String),
+    /// The named model's I/O shape differs from the slot's active one —
+    /// a swap would break requests already sized for the current
+    /// signature.
     Incompatible(String),
 }
 
@@ -62,6 +115,7 @@ impl std::fmt::Display for SwapError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             SwapError::UnknownModel(name) => write!(f, "unknown model '{name}'"),
+            SwapError::UnknownSlot(name) => write!(f, "unknown serving slot '{name}'"),
             SwapError::Incompatible(msg) => write!(f, "incompatible model: {msg}"),
         }
     }
@@ -70,63 +124,95 @@ impl std::fmt::Display for SwapError {
 impl std::error::Error for SwapError {}
 
 struct RegistryInner {
-    models: BTreeMap<String, Arc<ModelVersion>>,
-    active: Arc<ModelVersion>,
+    catalog: BTreeMap<String, Arc<ModelVersion>>,
+    slots: BTreeMap<String, Arc<ModelSlot>>,
 }
 
-/// Thread-shared model store. See the module docs for the swap
-/// semantics.
+/// Thread-shared model store. See the module docs for the catalog/slot
+/// split and the swap semantics.
 pub struct ModelRegistry {
     spx: SpxConfig,
-    /// Bumped on every [`ModelRegistry::activate`]; backends compare it
-    /// against the generation they last refreshed at.
-    generation: AtomicU64,
+    /// Slot v1 clients (and the empty model name) route to.
+    default_slot: String,
     inner: Mutex<RegistryInner>,
 }
 
 impl ModelRegistry {
     /// Create a registry with `mlp` registered under `name` (version 1)
-    /// and active. `spx` is used to quantize every model registered
-    /// through [`ModelRegistry::register_mlp`].
+    /// and serving in a slot of the same name — the default slot. `spx`
+    /// is used to quantize every model registered through
+    /// [`ModelRegistry::register_mlp`].
     pub fn new(name: &str, mlp: Mlp, spx: SpxConfig) -> Arc<ModelRegistry> {
         let quantized = QuantizedMlp::from_mlp(&mlp, &spx, Calibration::MaxAbs, None);
         let first = Arc::new(ModelVersion { name: name.to_string(), version: 1, mlp, quantized });
-        let mut models = BTreeMap::new();
-        models.insert(name.to_string(), first.clone());
+        let mut catalog = BTreeMap::new();
+        catalog.insert(name.to_string(), first.clone());
+        let mut slots = BTreeMap::new();
+        slots.insert(name.to_string(), ModelSlot::new(name, first));
         Arc::new(ModelRegistry {
             spx,
-            generation: AtomicU64::new(1),
-            inner: Mutex::new(RegistryInner { models, active: first }),
+            default_slot: name.to_string(),
+            inner: Mutex::new(RegistryInner { catalog, slots }),
         })
     }
 
     /// Register (or re-register, bumping the version) a model under
-    /// `name` without activating it.
+    /// `name` in the catalog without activating it anywhere.
     pub fn register_mlp(&self, name: &str, mlp: Mlp) -> Arc<ModelVersion> {
         let quantized = QuantizedMlp::from_mlp(&mlp, &self.spx, Calibration::MaxAbs, None);
         let mut inner = self.inner.lock().unwrap();
-        let version = inner.models.get(name).map(|m| m.version + 1).unwrap_or(1);
+        let version = inner.catalog.get(name).map(|m| m.version + 1).unwrap_or(1);
         let model =
             Arc::new(ModelVersion { name: name.to_string(), version, mlp, quantized });
-        inner.models.insert(name.to_string(), model.clone());
+        inner.catalog.insert(name.to_string(), model.clone());
         model
     }
 
-    /// Atomically make `name` the active model. Fails if the name is
-    /// unknown or its I/O signature differs from the active model's.
-    /// Returns the model and the new generation.
-    pub fn activate(&self, name: &str) -> Result<(Arc<ModelVersion>, u64), SwapError> {
+    /// Start serving catalog model `name` in a slot of the same name
+    /// (idempotent: an existing slot is returned untouched).
+    pub fn add_slot(&self, name: &str) -> Result<Arc<ModelSlot>, SwapError> {
         let mut inner = self.inner.lock().unwrap();
+        if let Some(slot) = inner.slots.get(name) {
+            return Ok(slot.clone());
+        }
         let model = inner
-            .models
+            .catalog
             .get(name)
             .cloned()
             .ok_or_else(|| SwapError::UnknownModel(name.to_string()))?;
-        let active = &inner.active;
-        if model.input_dim() != active.input_dim() || model.output_dim() != active.output_dim()
+        let slot = ModelSlot::new(name, model);
+        inner.slots.insert(name.to_string(), slot.clone());
+        Ok(slot)
+    }
+
+    /// Atomically activate catalog model `source` into serving slot
+    /// `slot_name` (the empty string targets the default slot). Fails
+    /// if either name is unknown or the I/O signatures differ. Returns
+    /// the model and the slot's new generation.
+    pub fn activate_into(
+        &self,
+        slot_name: &str,
+        source: &str,
+    ) -> Result<(Arc<ModelVersion>, u64), SwapError> {
+        let slot_name =
+            if slot_name.is_empty() { self.default_slot.as_str() } else { slot_name };
+        let inner = self.inner.lock().unwrap();
+        let slot = inner
+            .slots
+            .get(slot_name)
+            .cloned()
+            .ok_or_else(|| SwapError::UnknownSlot(slot_name.to_string()))?;
+        let model = inner
+            .catalog
+            .get(source)
+            .cloned()
+            .ok_or_else(|| SwapError::UnknownModel(source.to_string()))?;
+        let active = slot.active();
+        if model.input_dim() != active.input_dim()
+            || model.output_dim() != active.output_dim()
         {
             return Err(SwapError::Incompatible(format!(
-                "'{name}' is {}→{}, active '{}' is {}→{}",
+                "'{source}' is {}→{}, slot '{slot_name}' serves '{}' at {}→{}",
                 model.input_dim(),
                 model.output_dim(),
                 active.name,
@@ -134,31 +220,63 @@ impl ModelRegistry {
                 active.output_dim()
             )));
         }
-        inner.active = model.clone();
-        // The generation bump happens under the lock so a backend that
-        // observes the new counter also observes the new active model.
-        let generation = self.generation.fetch_add(1, Ordering::SeqCst) + 1;
+        // set_active bumps the generation while we hold the registry
+        // lock, so concurrent activations into one slot serialize.
+        let generation = slot.set_active(model.clone());
         Ok((model, generation))
     }
 
-    /// The currently active model.
+    /// v1 semantics: activate catalog model `name` into the default
+    /// slot.
+    pub fn activate(&self, name: &str) -> Result<(Arc<ModelVersion>, u64), SwapError> {
+        self.activate_into("", name)
+    }
+
+    /// The default slot's active model (v1 view).
     pub fn active(&self) -> Arc<ModelVersion> {
-        self.inner.lock().unwrap().active.clone()
+        self.default_slot().active()
     }
 
-    /// Current swap generation (starts at 1, bumped per activate).
+    /// The default slot's generation (v1 view).
     pub fn generation(&self) -> u64 {
-        self.generation.load(Ordering::SeqCst)
+        self.default_slot().generation()
     }
 
-    /// Registered model names.
+    /// The slot v1 clients and the empty model name route to.
+    pub fn default_slot(&self) -> Arc<ModelSlot> {
+        self.inner.lock().unwrap().slots[&self.default_slot].clone()
+    }
+
+    pub fn default_slot_name(&self) -> &str {
+        &self.default_slot
+    }
+
+    /// Look up a serving slot; the empty name resolves to the default
+    /// slot.
+    pub fn slot(&self, name: &str) -> Option<Arc<ModelSlot>> {
+        let name = if name.is_empty() { self.default_slot.as_str() } else { name };
+        self.inner.lock().unwrap().slots.get(name).cloned()
+    }
+
+    /// Every serving slot, default first, the rest in name order —
+    /// the order engine pools are built in.
+    pub fn slots(&self) -> Vec<Arc<ModelSlot>> {
+        let inner = self.inner.lock().unwrap();
+        let mut out = vec![inner.slots[&self.default_slot].clone()];
+        out.extend(
+            inner.slots.iter().filter(|(n, _)| **n != self.default_slot).map(|(_, s)| s.clone()),
+        );
+        out
+    }
+
+    /// Registered catalog model names.
     pub fn names(&self) -> Vec<String> {
-        self.inner.lock().unwrap().models.keys().cloned().collect()
+        self.inner.lock().unwrap().catalog.keys().cloned().collect()
     }
 
-    /// Look up a registered model without activating it.
+    /// Look up a registered catalog model without activating it.
     pub fn get(&self, name: &str) -> Option<Arc<ModelVersion>> {
-        self.inner.lock().unwrap().models.get(name).cloned()
+        self.inner.lock().unwrap().catalog.get(name).cloned()
     }
 
     /// Persist `name`'s latest version: the fp32 tensors plus SPx
@@ -195,7 +313,8 @@ impl ModelRegistry {
 
     /// Load a blob written by [`ModelRegistry::save_blob`] (or a plain
     /// `Mlp::save` checkpoint, which is then quantized with the
-    /// registry's SPx config) and register it under `name`.
+    /// registry's SPx config) and register it in the catalog under
+    /// `name`.
     pub fn load_blob(&self, name: &str, path: &Path) -> Result<Arc<ModelVersion>> {
         let tensors =
             load_tensors(path).with_context(|| format!("load model blob {}", path.display()))?;
@@ -265,41 +384,41 @@ impl ModelRegistry {
             }
         };
         let mut inner = self.inner.lock().unwrap();
-        let version = inner.models.get(name).map(|m| m.version + 1).unwrap_or(1);
+        let version = inner.catalog.get(name).map(|m| m.version + 1).unwrap_or(1);
         let model = Arc::new(ModelVersion {
             name: name.to_string(),
             version,
             mlp,
             quantized,
         });
-        inner.models.insert(name.to_string(), model.clone());
+        inner.catalog.insert(name.to_string(), model.clone());
         Ok(model)
     }
 }
 
 // ---------------------------------------------------------------------------
-// Swappable backends: coordinator backends that refresh themselves from
-// the registry between batches.
+// Swappable backends: coordinator backends bound to one serving slot,
+// refreshing themselves from it between batches.
 // ---------------------------------------------------------------------------
 
-/// CPU backend following the registry's active model.
+/// CPU backend following a slot's active model.
 pub struct SwappableCpuBackend {
-    registry: Arc<ModelRegistry>,
+    slot: Arc<ModelSlot>,
     seen: u64,
     inner: CpuBackend,
 }
 
 impl SwappableCpuBackend {
-    pub fn new(registry: Arc<ModelRegistry>) -> Self {
-        let seen = registry.generation();
-        let inner = CpuBackend::new(registry.active().mlp.clone());
-        SwappableCpuBackend { registry, seen, inner }
+    pub fn new(slot: Arc<ModelSlot>) -> Self {
+        let seen = slot.generation();
+        let inner = CpuBackend::new(slot.active().mlp.clone());
+        SwappableCpuBackend { slot, seen, inner }
     }
 
     fn refresh(&mut self) {
-        let generation = self.registry.generation();
+        let generation = self.slot.generation();
         if generation != self.seen {
-            self.inner = CpuBackend::new(self.registry.active().mlp.clone());
+            self.inner = CpuBackend::new(self.slot.active().mlp.clone());
             self.seen = generation;
         }
     }
@@ -320,27 +439,27 @@ impl Backend for SwappableCpuBackend {
     }
 }
 
-/// FPGA-simulator backend following the registry's active model: a swap
+/// FPGA-simulator backend following a slot's active model: a swap
 /// rebuilds the [`Accelerator`] (decoded-weight caches and all) from
 /// the new version's SPx tensors.
 pub struct SwappableFpgaBackend {
-    registry: Arc<ModelRegistry>,
+    slot: Arc<ModelSlot>,
     config: AccelConfig,
     seen: u64,
     inner: FpgaBackend,
 }
 
 impl SwappableFpgaBackend {
-    pub fn new(registry: Arc<ModelRegistry>, config: AccelConfig) -> Self {
-        let seen = registry.generation();
-        let accel = Accelerator::new(registry.active().quantized.clone(), config);
-        SwappableFpgaBackend { registry, config, seen, inner: FpgaBackend::new(accel) }
+    pub fn new(slot: Arc<ModelSlot>, config: AccelConfig) -> Self {
+        let seen = slot.generation();
+        let accel = Accelerator::new(slot.active().quantized.clone(), config);
+        SwappableFpgaBackend { slot, config, seen, inner: FpgaBackend::new(accel) }
     }
 
     fn refresh(&mut self) {
-        let generation = self.registry.generation();
+        let generation = self.slot.generation();
         if generation != self.seen {
-            let accel = Accelerator::new(self.registry.active().quantized.clone(), self.config);
+            let accel = Accelerator::new(self.slot.active().quantized.clone(), self.config);
             self.inner = FpgaBackend::new(accel);
             self.seen = generation;
         }
@@ -362,26 +481,26 @@ impl Backend for SwappableFpgaBackend {
     }
 }
 
-/// Coordinator factory for a registry-backed CPU worker.
-pub fn swappable_cpu_factory(registry: Arc<ModelRegistry>) -> BackendFactory {
-    Box::new(move || Ok(Box::new(SwappableCpuBackend::new(registry)) as Box<dyn Backend>))
+/// Replicable coordinator factory for slot-following CPU workers.
+pub fn swappable_cpu_factory(slot: Arc<ModelSlot>) -> SharedBackendFactory {
+    Arc::new(move || Ok(Box::new(SwappableCpuBackend::new(slot.clone())) as Box<dyn Backend>))
 }
 
-/// Coordinator factory for a registry-backed FPGA-sim worker.
+/// Replicable coordinator factory for slot-following FPGA-sim workers.
 pub fn swappable_fpga_factory(
-    registry: Arc<ModelRegistry>,
+    slot: Arc<ModelSlot>,
     config: AccelConfig,
-) -> BackendFactory {
-    Box::new(move || {
-        Ok(Box::new(SwappableFpgaBackend::new(registry, config)) as Box<dyn Backend>)
+) -> SharedBackendFactory {
+    Arc::new(move || {
+        Ok(Box::new(SwappableFpgaBackend::new(slot.clone(), config)) as Box<dyn Backend>)
     })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::nn::mlp::MlpConfig;
     use crate::nn::activations::Activation;
+    use crate::nn::mlp::MlpConfig;
     use crate::util::rng::Pcg32;
     use std::path::PathBuf;
 
@@ -457,6 +576,49 @@ mod tests {
     }
 
     #[test]
+    fn slots_swap_independently() {
+        let reg = registry();
+        reg.register_mlp("qnet", small_mlp(2));
+        reg.register_mlp("qnet-v2", small_mlp(3));
+        let qnet = reg.add_slot("qnet").unwrap();
+        assert_eq!(qnet.name(), "qnet");
+        assert_eq!(qnet.generation(), 1);
+        assert_eq!(reg.slots().len(), 2);
+        // add_slot is idempotent.
+        assert!(Arc::ptr_eq(&reg.add_slot("qnet").unwrap(), &qnet));
+
+        // Swapping qnet's slot moves its generation, not the default's.
+        let (model, generation) = reg.activate_into("qnet", "qnet-v2").unwrap();
+        assert_eq!(model.name, "qnet-v2");
+        assert_eq!(generation, 2);
+        assert_eq!(qnet.generation(), 2);
+        assert_eq!(qnet.active().name, "qnet-v2");
+        assert_eq!(reg.generation(), 1, "default slot generation moved");
+        assert_eq!(reg.active().name, "default");
+
+        // Unknown slot is its own error.
+        assert!(matches!(
+            reg.activate_into("nope", "qnet"),
+            Err(SwapError::UnknownSlot(name)) if name == "nope"
+        ));
+        // Slot for a model that is not in the catalog.
+        assert!(matches!(reg.add_slot("missing"), Err(SwapError::UnknownModel(_))));
+        // Empty slot name routes to the default slot.
+        assert!(Arc::ptr_eq(&reg.slot("").unwrap(), &reg.default_slot()));
+        assert_eq!(reg.default_slot_name(), "default");
+    }
+
+    #[test]
+    fn slots_list_default_first() {
+        let reg = registry();
+        reg.register_mlp("alpha", small_mlp(2));
+        reg.add_slot("alpha").unwrap();
+        let names: Vec<String> =
+            reg.slots().iter().map(|s| s.name().to_string()).collect();
+        assert_eq!(names, vec!["default".to_string(), "alpha".to_string()]);
+    }
+
+    #[test]
     fn blob_roundtrip_preserves_quantized_model_bitwise() {
         let reg = registry();
         let file = TestFile::new("roundtrip");
@@ -483,18 +645,18 @@ mod tests {
     }
 
     #[test]
-    fn swappable_backends_follow_activation() {
+    fn swappable_backends_follow_slot_activation() {
         let reg = registry();
         let v2 = small_mlp(2);
         reg.register_mlp("v2", v2.clone());
         let x = vec![0.4f32; 8];
+        let slot = reg.default_slot();
 
-        let mut cpu = SwappableCpuBackend::new(reg.clone());
+        let mut cpu = SwappableCpuBackend::new(slot.clone());
         let (before, _) = cpu.infer(&[x.clone()]).unwrap();
         assert_eq!(before[0], reg.get("default").unwrap().mlp.forward_one(&x));
 
-        let mut fpga =
-            SwappableFpgaBackend::new(reg.clone(), AccelConfig::default_fpga());
+        let mut fpga = SwappableFpgaBackend::new(slot.clone(), AccelConfig::default_fpga());
         let (fpga_before, _) = fpga.infer(&[x.clone()]).unwrap();
 
         reg.activate("v2").unwrap();
@@ -504,5 +666,19 @@ mod tests {
 
         let (fpga_after, _) = fpga.infer(&[x.clone()]).unwrap();
         assert_ne!(fpga_before[0], fpga_after[0], "swap did not change fpga outputs");
+    }
+
+    #[test]
+    fn backend_on_one_slot_ignores_other_slots_swaps() {
+        let reg = registry();
+        reg.register_mlp("other", small_mlp(2));
+        reg.register_mlp("other-v2", small_mlp(3));
+        reg.add_slot("other").unwrap();
+        let x = vec![0.4f32; 8];
+        let mut cpu = SwappableCpuBackend::new(reg.default_slot());
+        let (before, _) = cpu.infer(&[x.clone()]).unwrap();
+        reg.activate_into("other", "other-v2").unwrap();
+        let (after, _) = cpu.infer(&[x.clone()]).unwrap();
+        assert_eq!(before[0], after[0], "default-slot backend reacted to another slot");
     }
 }

@@ -5,10 +5,18 @@
 //! Each accepted connection gets a *reader* thread (decodes frames,
 //! submits into the coordinator's batching queues) and a *writer*
 //! thread (resolves responses in submission order and puts them back on
-//! the wire, echoing each request's id). Because the reader never waits
-//! for inference to finish, a single connection can keep many requests
-//! in flight — that pipelining is what lets the dynamic batcher form
-//! real batches from one client.
+//! the wire, echoing each request's id and protocol version). Because
+//! the reader never waits for inference to finish, a single connection
+//! can keep many requests in flight — that pipelining is what lets the
+//! dynamic batcher form real batches from one client.
+//!
+//! Multi-model routing: every served model (a registry *slot*) owns a
+//! list of coordinator pools, one per backend kind, each pool holding
+//! `replicas` workers. A v2 `Infer`/`InferBatch` frame names its model;
+//! v1 frames (and the empty name) resolve to the default model.
+//! [`Server::serve`] builds the whole engine — pools, routes, registry
+//! wiring — from an [`EngineConfig`]; [`Server::start`] remains the
+//! low-level single-model entry for custom coordinators.
 //!
 //! Load shedding and shutdown map onto protocol status codes
 //! ([`SubmitError::Backpressure`] → `Status::Backpressure`,
@@ -16,11 +24,16 @@
 //! pool limit are answered with a `Status::Busy` error frame and
 //! dropped.
 
-use super::registry::ModelRegistry;
-use super::wire::{self, Frame, Opcode, ReadError, Status, BACKEND_ANY, DEFAULT_MAX_PAYLOAD};
+use super::registry::{ModelRegistry, ModelSlot, SwapError};
+use super::wire::{
+    self, Frame, ModelInfo, Opcode, ReadError, Status, BACKEND_ANY, DEFAULT_MAX_PAYLOAD,
+};
 use crate::coordinator::request::InferResult;
-use crate::coordinator::server::{Coordinator, SubmitError};
-use anyhow::{Context, Result};
+use crate::coordinator::server::{Coordinator, PoolSpec, SubmitError};
+use crate::coordinator::CoordinatorConfig;
+use crate::fpga::accelerator::AccelConfig;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -51,19 +64,67 @@ impl Default for ServeConfig {
     }
 }
 
+/// Which backend kinds an engine pool runs.
+#[derive(Debug, Clone, Copy)]
+pub enum BackendKind {
+    /// The f32 CPU forward ([`crate::coordinator::CpuBackend`]).
+    Cpu,
+    /// The cycle-accurate SPx accelerator simulator.
+    FpgaSim(AccelConfig),
+}
+
+impl BackendKind {
+    fn label(&self) -> &'static str {
+        match self {
+            BackendKind::Cpu => "cpu",
+            BackendKind::FpgaSim(_) => "fpga",
+        }
+    }
+}
+
+/// Everything [`Server::serve`] needs to assemble the engine: which
+/// backend kinds to run, how many replica workers per pool, and the
+/// coordinator/server knobs.
+pub struct EngineConfig {
+    /// Worker replicas per (backend kind × model) pool.
+    pub replicas: usize,
+    /// Backend kinds, in wire `backend`-index order.
+    pub backends: Vec<BackendKind>,
+    pub coordinator: CoordinatorConfig,
+    pub serve: ServeConfig,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            replicas: 1,
+            backends: vec![BackendKind::Cpu],
+            coordinator: CoordinatorConfig::default(),
+            serve: ServeConfig::default(),
+        }
+    }
+}
+
 /// How often blocked connection reads wake up to check the stop flag.
 const READ_TICK: Duration = Duration::from_millis(100);
+
+/// Routing entry for one served model: its slot, the coordinator pools
+/// serving it (in backend-kind order), and the cached input dimension
+/// (invariant for the server's lifetime — `activate_into` refuses dim
+/// changes), so per-frame validation does not lock the registry.
+struct ModelRoute {
+    slot: Arc<ModelSlot>,
+    pools: Vec<usize>,
+    input_dim: usize,
+}
 
 struct Shared {
     coord: Coordinator,
     registry: Arc<ModelRegistry>,
     config: ServeConfig,
-    /// Input dimension of the served model — invariant for the server's
-    /// lifetime (`ModelRegistry::activate` refuses dim changes), cached
-    /// here so per-frame validation does not lock the registry.
-    input_dim: usize,
+    routes: BTreeMap<String, ModelRoute>,
+    default_model: String,
     stop: AtomicBool,
-    round_robin: AtomicUsize,
     active_conns: AtomicUsize,
     conn_seq: AtomicUsize,
 }
@@ -78,25 +139,87 @@ pub struct Server {
 }
 
 impl Server {
+    /// Assemble and start the full engine: one coordinator pool per
+    /// (backend kind × registry slot), each pool `replicas` workers
+    /// deep, with routes wired so wire-protocol model names reach the
+    /// right pools. Pool labels are `"<kind>/<model>"` (the per-model
+    /// metrics breakdown).
+    pub fn serve(
+        registry: Arc<ModelRegistry>,
+        addr: &str,
+        engine: EngineConfig,
+    ) -> Result<Server> {
+        if engine.backends.is_empty() {
+            bail!("engine needs at least one backend kind");
+        }
+        let replicas = engine.replicas.max(1);
+        let mut pools = Vec::new();
+        let mut routes = BTreeMap::new();
+        for slot in registry.slots() {
+            let mut indices = Vec::with_capacity(engine.backends.len());
+            for kind in &engine.backends {
+                let factory = match kind {
+                    BackendKind::Cpu => super::registry::swappable_cpu_factory(slot.clone()),
+                    BackendKind::FpgaSim(config) => {
+                        super::registry::swappable_fpga_factory(slot.clone(), *config)
+                    }
+                };
+                indices.push(pools.len());
+                pools.push(PoolSpec::replicated(
+                    format!("{}/{}", kind.label(), slot.name()),
+                    replicas,
+                    factory,
+                ));
+            }
+            let input_dim = slot.active().input_dim();
+            routes.insert(
+                slot.name().to_string(),
+                ModelRoute { slot, pools: indices, input_dim },
+            );
+        }
+        let coord = Coordinator::start(pools, engine.coordinator)?;
+        let default_model = registry.default_slot_name().to_string();
+        Self::start_inner(coord, registry, routes, default_model, addr, engine.serve)
+    }
+
     /// Bind `addr` (use port 0 for an ephemeral port) and start
-    /// accepting. The server owns the coordinator; submit paths go
-    /// through the wire protocol from here on.
+    /// accepting on a caller-built coordinator. Single-model routing:
+    /// every pool of `coord` serves the registry's default slot, and
+    /// wire backend indices map straight onto pool indices.
     pub fn start(
         coord: Coordinator,
         registry: Arc<ModelRegistry>,
         addr: &str,
         config: ServeConfig,
     ) -> Result<Server> {
+        let slot = registry.default_slot();
+        let input_dim = slot.active().input_dim();
+        let mut routes = BTreeMap::new();
+        routes.insert(
+            slot.name().to_string(),
+            ModelRoute { slot, pools: (0..coord.num_pools()).collect(), input_dim },
+        );
+        let default_model = registry.default_slot_name().to_string();
+        Self::start_inner(coord, registry, routes, default_model, addr, config)
+    }
+
+    fn start_inner(
+        coord: Coordinator,
+        registry: Arc<ModelRegistry>,
+        routes: BTreeMap<String, ModelRoute>,
+        default_model: String,
+        addr: &str,
+        config: ServeConfig,
+    ) -> Result<Server> {
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
         let local_addr = listener.local_addr()?;
-        let input_dim = registry.active().input_dim();
         let shared = Arc::new(Shared {
             coord,
             registry,
             config,
-            input_dim,
+            routes,
+            default_model,
             stop: AtomicBool::new(false),
-            round_robin: AtomicUsize::new(0),
             active_conns: AtomicUsize::new(0),
             conn_seq: AtomicUsize::new(0),
         });
@@ -201,15 +324,14 @@ fn accept_loop(
         }
         if shared.active_conns.load(Ordering::SeqCst) >= shared.config.max_conns {
             // Over the pool bound: answer Busy, then close carefully so
-            // the frame survives (see `drain_then_close`).
+            // the frame survives (see `drain_then_close`). No request
+            // was read, so the frame goes out at MIN_VERSION — the one
+            // framing every supported client can parse.
             {
                 let mut w = BufWriter::new(&stream);
-                let frame = Frame::error(
-                    Opcode::Ping,
-                    0,
-                    Status::Busy,
-                    "server connection limit reached",
-                );
+                let frame =
+                    Frame::error(Opcode::Ping, 0, Status::Busy, "server connection limit reached")
+                        .at_version(wire::MIN_VERSION);
                 let _ = wire::write_frame(&mut w, &frame);
                 let _ = w.flush();
             }
@@ -245,13 +367,15 @@ impl Drop for ConnGuard {
 }
 
 /// Work items handed from the reader to the writer, in request order.
+/// `version` is the protocol version of the request being answered —
+/// the response frame echoes it.
 enum Outgoing {
     /// Response already known (ping, stats, errors, swap results).
     Ready(Frame),
     /// Waiting on one coordinator response.
-    Pending { request_id: u64, rx: Receiver<InferResult> },
+    Pending { version: u16, request_id: u64, rx: Receiver<InferResult> },
     /// Waiting on a whole submitted batch.
-    PendingBatch { request_id: u64, receivers: Vec<Receiver<InferResult>> },
+    PendingBatch { version: u16, request_id: u64, receivers: Vec<Receiver<InferResult>> },
 }
 
 fn handle_connection(stream: TcpStream, shared: &Shared) {
@@ -285,13 +409,15 @@ fn handle_connection(stream: TcpStream, shared: &Shared) {
             Err(ReadError::Eof) | Err(ReadError::Stopped) | Err(ReadError::Io(_)) => break,
             Err(ReadError::Protocol(msg)) => {
                 // The stream position is unreliable after a framing
-                // error: answer once, then close.
-                let _ = tx.send(Outgoing::Ready(Frame::error(
-                    Opcode::Ping,
-                    0,
-                    Status::BadRequest,
-                    &msg,
-                )));
+                // error: answer once, then close. The request version
+                // is unknown here, so frame the reply at MIN_VERSION —
+                // every supported client can parse it (a v1-only
+                // client would reject a v2 frame and lose the
+                // diagnostic).
+                let _ = tx.send(Outgoing::Ready(
+                    Frame::error(Opcode::Ping, 0, Status::BadRequest, &msg)
+                        .at_version(wire::MIN_VERSION),
+                ));
                 framing_error = true;
                 break;
             }
@@ -346,19 +472,22 @@ fn writer_loop(stream: TcpStream, rx: Receiver<Outgoing>, response_timeout: Dura
 fn resolve(item: Outgoing, timeout: Duration) -> Frame {
     match item {
         Outgoing::Ready(frame) => frame,
-        Outgoing::Pending { request_id, rx } => match rx.recv_timeout(timeout) {
+        Outgoing::Pending { version, request_id, rx } => match rx.recv_timeout(timeout) {
             Ok(Ok(resp)) => {
                 Frame::ok(Opcode::Infer, request_id, wire::encode_outputs(&resp.output))
+                    .at_version(version)
             }
-            Ok(Err(msg)) => Frame::error(Opcode::Infer, request_id, Status::BackendError, &msg),
+            Ok(Err(msg)) => Frame::error(Opcode::Infer, request_id, Status::BackendError, &msg)
+                .at_version(version),
             Err(_) => Frame::error(
                 Opcode::Infer,
                 request_id,
                 Status::Internal,
                 "response channel lost or timed out",
-            ),
+            )
+            .at_version(version),
         },
-        Outgoing::PendingBatch { request_id, receivers } => {
+        Outgoing::PendingBatch { version, request_id, receivers } => {
             // One deadline for the whole batch — a per-receiver timeout
             // would multiply worst-case head-of-line blocking by the
             // batch size.
@@ -375,6 +504,7 @@ fn resolve(item: Outgoing, timeout: Duration) -> Frame {
                             Status::BackendError,
                             &msg,
                         )
+                        .at_version(version)
                     }
                     Err(_) => {
                         return Frame::error(
@@ -383,10 +513,12 @@ fn resolve(item: Outgoing, timeout: Duration) -> Frame {
                             Status::Internal,
                             "response channel lost or timed out",
                         )
+                        .at_version(version)
                     }
                 }
             }
             Frame::ok(Opcode::InferBatch, request_id, wire::encode_batch_outputs(&rows))
+                .at_version(version)
         }
     }
 }
@@ -394,86 +526,145 @@ fn resolve(item: Outgoing, timeout: Duration) -> Frame {
 /// Handle one request frame. Returns `false` to close the connection.
 fn dispatch(frame: Frame, tx: &Sender<Outgoing>, shared: &Shared) -> bool {
     let id = frame.request_id;
+    let version = frame.version;
     let out = match frame.opcode {
         Opcode::Ping => Outgoing::Ready(Frame::ok(Opcode::Ping, id, frame.payload)),
         Opcode::Stats => {
             let snap = shared.coord.metrics().snapshot();
-            let active = shared.registry.active();
-            let text = format!(
-                "model: {} v{} (generation {})\nconnections: {}\n{}",
-                active.name,
-                active.version,
-                shared.registry.generation(),
+            let mut text = String::new();
+            for route in shared.routes.values() {
+                let active = route.slot.active();
+                let tag = if route.slot.name() == shared.default_model { " [default]" } else { "" };
+                text.push_str(&format!(
+                    "model {}{tag}: {} v{} ({}→{}, generation {})\n",
+                    route.slot.name(),
+                    active.name,
+                    active.version,
+                    active.input_dim(),
+                    active.output_dim(),
+                    route.slot.generation(),
+                ));
+            }
+            text.push_str(&format!(
+                "connections: {}\n{}",
                 shared.active_conns.load(Ordering::SeqCst),
                 snap.render()
-            );
+            ));
             Outgoing::Ready(Frame::ok(Opcode::Stats, id, text.into_bytes()))
         }
-        Opcode::SwapModel => match wire::decode_str(&frame.payload) {
+        Opcode::ListModels => {
+            if version < 2 {
+                bad_request(Opcode::ListModels, id, "ListModels requires protocol v2")
+            } else {
+                let models: Vec<ModelInfo> = shared
+                    .routes
+                    .values()
+                    .map(|route| {
+                        let active = route.slot.active();
+                        ModelInfo {
+                            slot: route.slot.name().to_string(),
+                            model: active.name.clone(),
+                            version: active.version,
+                            input_dim: active.input_dim() as u32,
+                            output_dim: active.output_dim() as u32,
+                            generation: route.slot.generation(),
+                        }
+                    })
+                    .collect();
+                match wire::encode_model_list(&models) {
+                    Ok(payload) => Outgoing::Ready(Frame::ok(Opcode::ListModels, id, payload)),
+                    Err(e) => Outgoing::Ready(Frame::error(
+                        Opcode::ListModels,
+                        id,
+                        Status::Internal,
+                        &e,
+                    )),
+                }
+            }
+        }
+        Opcode::SwapModel => match wire::decode_swap(&frame.payload, version) {
             Err(e) => bad_request(Opcode::SwapModel, id, &e),
-            Ok(name) => match shared.registry.activate(&name) {
+            Ok((slot, source)) => match shared.registry.activate_into(&slot, &source) {
                 Ok((model, generation)) => Outgoing::Ready(Frame::ok(
                     Opcode::SwapModel,
                     id,
                     format!(
-                        "model {} v{} active (generation {generation})",
-                        model.name, model.version
+                        "slot {} now serves {} v{} (generation {generation})",
+                        if slot.is_empty() { &shared.default_model } else { &slot },
+                        model.name,
+                        model.version
                     )
                     .into_bytes(),
                 )),
-                Err(e @ super::registry::SwapError::UnknownModel(_)) => Outgoing::Ready(
-                    Frame::error(Opcode::SwapModel, id, Status::UnknownModel, &e.to_string()),
-                ),
+                Err(e @ (SwapError::UnknownModel(_) | SwapError::UnknownSlot(_))) => {
+                    Outgoing::Ready(Frame::error(
+                        Opcode::SwapModel,
+                        id,
+                        Status::UnknownModel,
+                        &e.to_string(),
+                    ))
+                }
                 Err(e) => bad_request(Opcode::SwapModel, id, &e.to_string()),
             },
         },
-        Opcode::Infer => match wire::decode_infer(&frame.payload) {
+        Opcode::Infer => match wire::decode_infer(&frame.payload, version) {
             Err(e) => bad_request(Opcode::Infer, id, &e),
-            Ok((backend, x)) => match check_dim(shared, x.len())
-                .and_then(|()| resolve_backend(shared, backend))
-            {
+            Ok((backend, model, x)) => match resolve_pool(shared, &model, backend, x.len()) {
                 Err(out) => Outgoing::Ready(out.into_frame(Opcode::Infer, id)),
                 Ok(idx) => match shared.coord.try_submit_to(idx, x) {
-                    Ok(rx) => Outgoing::Pending { request_id: id, rx },
+                    Ok(rx) => Outgoing::Pending { version, request_id: id, rx },
                     Err(e) => Outgoing::Ready(submit_error_frame(Opcode::Infer, id, e)),
                 },
             },
         },
-        Opcode::InferBatch => match wire::decode_infer_batch(&frame.payload) {
+        Opcode::InferBatch => match wire::decode_infer_batch(&frame.payload, version) {
             Err(e) => bad_request(Opcode::InferBatch, id, &e),
-            Ok((backend, samples)) => match check_dim(shared, samples[0].len())
-                .and_then(|()| resolve_backend(shared, backend))
-            {
-                Err(out) => Outgoing::Ready(out.into_frame(Opcode::InferBatch, id)),
-                Ok(idx) => {
-                    let total = samples.len();
-                    let mut receivers = Vec::with_capacity(total);
-                    let mut failed = None;
-                    for x in samples {
-                        match shared.coord.try_submit_to(idx, x) {
-                            Ok(rx) => receivers.push(rx),
-                            Err(e) => {
-                                failed = Some(e);
-                                break;
+            Ok((backend, model, samples)) => {
+                match resolve_pool(shared, &model, backend, samples[0].len()) {
+                    Err(out) => Outgoing::Ready(out.into_frame(Opcode::InferBatch, id)),
+                    Ok(idx) => {
+                        let total = samples.len();
+                        let mut receivers = Vec::with_capacity(total);
+                        let mut failed = None;
+                        for x in samples {
+                            match shared.coord.try_submit_to(idx, x) {
+                                Ok(rx) => receivers.push(rx),
+                                Err(e) => {
+                                    failed = Some(e);
+                                    break;
+                                }
+                            }
+                        }
+                        match failed {
+                            // Partially submitted samples still run;
+                            // their receivers are dropped and the batch
+                            // is reported shed as a unit.
+                            Some(SubmitError::Backpressure) => Outgoing::Ready(Frame::error(
+                                Opcode::InferBatch,
+                                id,
+                                Status::Backpressure,
+                                &format!(
+                                    "queue full after {}/{total} samples",
+                                    receivers.len()
+                                ),
+                            )),
+                            Some(e) => {
+                                Outgoing::Ready(submit_error_frame(Opcode::InferBatch, id, e))
+                            }
+                            None => {
+                                Outgoing::PendingBatch { version, request_id: id, receivers }
                             }
                         }
                     }
-                    match failed {
-                        // Partially submitted samples still run; their
-                        // receivers are dropped and the batch is
-                        // reported shed as a unit.
-                        Some(SubmitError::Backpressure) => Outgoing::Ready(Frame::error(
-                            Opcode::InferBatch,
-                            id,
-                            Status::Backpressure,
-                            &format!("queue full after {}/{total} samples", receivers.len()),
-                        )),
-                        Some(e) => Outgoing::Ready(submit_error_frame(Opcode::InferBatch, id, e)),
-                        None => Outgoing::PendingBatch { request_id: id, receivers },
-                    }
                 }
-            },
+            }
         },
+    };
+    // Responses echo the request's protocol version (a v1 client never
+    // sees a v2 frame); pending items carry it to the writer instead.
+    let out = match out {
+        Outgoing::Ready(f) => Outgoing::Ready(f.at_version(version)),
+        other => other,
     };
     tx.send(out).is_ok()
 }
@@ -482,43 +673,51 @@ fn bad_request(opcode: Opcode, id: u64, msg: &str) -> Outgoing {
     Outgoing::Ready(Frame::error(opcode, id, Status::BadRequest, msg))
 }
 
-/// A backend-resolution failure, opcode-agnostic.
-struct BackendLookupError(Status, String);
+/// A routing failure, opcode-agnostic.
+struct RouteError(Status, String);
 
-impl BackendLookupError {
+impl RouteError {
     fn into_frame(self, opcode: Opcode, id: u64) -> Frame {
         Frame::error(opcode, id, self.0, &self.1)
     }
 }
 
-/// Reject wrong-dimension payloads before they reach a queue: a batch
-/// formed by the coordinator mixes requests from every connection, and
-/// one bad sample would fail the whole batch (`stage_inputs` errors are
-/// batch-wide) — other clients' valid requests must not pay for it.
-fn check_dim(shared: &Shared, got: usize) -> Result<(), BackendLookupError> {
-    let want = shared.input_dim;
-    if got != want {
-        return Err(BackendLookupError(
+/// Resolve `(model, backend, dim)` to a coordinator pool index.
+///
+/// Wrong-dimension payloads are rejected here, before they reach a
+/// queue: a batch formed by the coordinator mixes requests from every
+/// connection, and one bad sample would fail the whole batch
+/// (`stage_inputs` errors are batch-wide) — other clients' valid
+/// requests must not pay for it. [`BACKEND_ANY`] picks the least-loaded
+/// of the model's pools (queue depth).
+fn resolve_pool(
+    shared: &Shared,
+    model: &str,
+    requested: u32,
+    dim: usize,
+) -> Result<usize, RouteError> {
+    let name = if model.is_empty() { shared.default_model.as_str() } else { model };
+    let route = shared.routes.get(name).ok_or_else(|| {
+        RouteError(Status::UnknownModel, format!("unknown model '{name}'"))
+    })?;
+    if dim != route.input_dim {
+        return Err(RouteError(
             Status::BadRequest,
-            format!("input dimension {got} != model input {want}"),
+            format!("input dimension {dim} != model '{name}' input {}", route.input_dim),
         ));
     }
-    Ok(())
-}
-
-fn resolve_backend(shared: &Shared, requested: u32) -> Result<usize, BackendLookupError> {
-    let n = shared.coord.backend_names().len();
     if requested == BACKEND_ANY {
-        return Ok(shared.round_robin.fetch_add(1, Ordering::Relaxed) % n);
+        return shared.coord.least_loaded_of(&route.pools).ok_or_else(|| {
+            RouteError(Status::Internal, "model has no serving pools".into())
+        });
     }
     let idx = requested as usize;
-    if idx >= n {
-        return Err(BackendLookupError(
+    route.pools.get(idx).copied().ok_or_else(|| {
+        RouteError(
             Status::UnknownBackend,
-            format!("backend index {idx} out of range ({n} backends)"),
-        ));
-    }
-    Ok(idx)
+            format!("backend index {idx} out of range ({} backends)", route.pools.len()),
+        )
+    })
 }
 
 fn submit_error_frame(opcode: Opcode, id: u64, e: SubmitError) -> Frame {

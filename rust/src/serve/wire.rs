@@ -8,28 +8,42 @@
 //! u32 payload_len | payload bytes
 //! ```
 //!
+//! Version 2 adds a model-name field to `Infer`/`InferBatch` (routing
+//! across the multi-model registry), a two-name `SwapModel` payload
+//! (slot + source) and the `ListModels` opcode. Version-1 frames are
+//! still accepted: their payloads carry no model name and resolve to
+//! the server's default model, and the server answers a v1 request
+//! with a v1 frame (see `decode_*`'s `version` parameter).
+//!
 //! Requests always carry status [`Status::Ok`]; responses echo the
-//! request's opcode and id. A non-`Ok` status turns the payload into a
-//! UTF-8 error message. Coordinator-level failure modes map onto the
-//! status byte (`SubmitError::Backpressure` → [`Status::Backpressure`],
-//! `SubmitError::Closed` → [`Status::Closed`]) so clients can tell
-//! "retry later" apart from "server going away" without parsing text.
+//! request's opcode, id and version. A non-`Ok` status turns the
+//! payload into a UTF-8 error message. Coordinator-level failure modes
+//! map onto the status byte (`SubmitError::Backpressure` →
+//! [`Status::Backpressure`], `SubmitError::Closed` →
+//! [`Status::Closed`]) so clients can tell "retry later" apart from
+//! "server going away" without parsing text.
 
 use std::io::{ErrorKind, Read, Write};
 use std::sync::atomic::{AtomicBool, Ordering};
 
 /// Frame magic: "EMWP" (EdgeMlp Wire Protocol).
 pub const MAGIC: [u8; 4] = *b"EMWP";
-/// Protocol version; bumped on any incompatible frame-layout change.
-pub const VERSION: u16 = 1;
+/// Current protocol version; bumped on any incompatible frame-layout
+/// change.
+pub const VERSION: u16 = 2;
+/// Oldest version still accepted (v1 payloads carry no model names).
+pub const MIN_VERSION: u16 = 1;
 /// Fixed header size in bytes.
 pub const HEADER_LEN: usize = 20;
 /// Default cap on payload size — guards the server (and client) against
 /// hostile or corrupt length prefixes.
 pub const DEFAULT_MAX_PAYLOAD: u32 = 16 * 1024 * 1024;
-/// `Infer`/`InferBatch` backend field value asking the server to
-/// round-robin across its backends.
+/// `Infer`/`InferBatch` backend field value asking the server to pick
+/// the least-loaded of the model's pools.
 pub const BACKEND_ANY: u32 = u32::MAX;
+/// Cap on the v2 model-name field. Anything longer is a malformed
+/// payload — enforced before the name bytes are read.
+pub const MAX_MODEL_NAME_LEN: usize = 255;
 
 /// Request kinds a client can send; responses echo the opcode.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -43,8 +57,10 @@ pub enum Opcode {
     InferBatch = 2,
     /// Metrics snapshot (text payload with latency percentiles).
     Stats = 3,
-    /// Activate a registered model version by name.
+    /// Activate a registered model version into a serving slot.
     SwapModel = 4,
+    /// Enumerate the served models (v2 only).
+    ListModels = 5,
 }
 
 impl Opcode {
@@ -55,6 +71,7 @@ impl Opcode {
             2 => Some(Opcode::InferBatch),
             3 => Some(Opcode::Stats),
             4 => Some(Opcode::SwapModel),
+            5 => Some(Opcode::ListModels),
             _ => None,
         }
     }
@@ -76,7 +93,8 @@ pub enum Status {
     BadRequest = 4,
     /// The backend accepted the request and then failed.
     BackendError = 5,
-    /// `SwapModel` named a model the registry does not hold.
+    /// The request named a model (or serving slot) the server does not
+    /// hold.
     UnknownModel = 6,
     /// Connection rejected: the server is at its connection limit.
     Busy = 7,
@@ -107,9 +125,12 @@ impl std::fmt::Display for Status {
     }
 }
 
-/// One protocol frame, request or response.
+/// One protocol frame, request or response. `version` is the protocol
+/// version the frame was (or will be) framed with — responses echo the
+/// request's version so v1 clients never see v2 frames.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Frame {
+    pub version: u16,
     pub opcode: Opcode,
     pub status: Status,
     pub request_id: u64,
@@ -117,14 +138,27 @@ pub struct Frame {
 }
 
 impl Frame {
-    /// A success frame (request, or `Ok` response).
+    /// A success frame (request, or `Ok` response) at the current
+    /// version.
     pub fn ok(opcode: Opcode, request_id: u64, payload: Vec<u8>) -> Frame {
-        Frame { opcode, status: Status::Ok, request_id, payload }
+        Frame { version: VERSION, opcode, status: Status::Ok, request_id, payload }
     }
 
     /// An error response: status + UTF-8 message payload.
     pub fn error(opcode: Opcode, request_id: u64, status: Status, message: &str) -> Frame {
-        Frame { opcode, status, request_id, payload: message.as_bytes().to_vec() }
+        Frame {
+            version: VERSION,
+            opcode,
+            status,
+            request_id,
+            payload: message.as_bytes().to_vec(),
+        }
+    }
+
+    /// The same frame re-stamped with `version` (response echoing).
+    pub fn at_version(mut self, version: u16) -> Frame {
+        self.version = version;
+        self
     }
 
     /// The payload as an error message (lossy UTF-8).
@@ -164,7 +198,7 @@ impl std::error::Error for ReadError {}
 pub fn write_frame(w: &mut impl Write, frame: &Frame) -> std::io::Result<()> {
     let mut buf = Vec::with_capacity(HEADER_LEN + frame.payload.len());
     buf.extend_from_slice(&MAGIC);
-    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&frame.version.to_le_bytes());
     buf.push(frame.opcode as u8);
     buf.push(frame.status as u8);
     buf.extend_from_slice(&frame.request_id.to_le_bytes());
@@ -174,6 +208,8 @@ pub fn write_frame(w: &mut impl Write, frame: &Frame) -> std::io::Result<()> {
 }
 
 /// Read one frame, failing on payloads larger than `max_payload`.
+/// Versions [`MIN_VERSION`]..=[`VERSION`] are accepted; the frame
+/// records which one arrived.
 pub fn read_frame(r: &mut impl Read, max_payload: u32) -> Result<Frame, ReadError> {
     read_frame_with(r, max_payload, None)
 }
@@ -193,9 +229,9 @@ pub fn read_frame_with(
         return Err(ReadError::Protocol(format!("bad magic {:02x?}", &header[0..4])));
     }
     let version = u16::from_le_bytes([header[4], header[5]]);
-    if version != VERSION {
+    if !(MIN_VERSION..=VERSION).contains(&version) {
         return Err(ReadError::Protocol(format!(
-            "unsupported protocol version {version} (want {VERSION})"
+            "unsupported protocol version {version} (supported {MIN_VERSION}..={VERSION})"
         )));
     }
     let opcode = Opcode::from_u8(header[6])
@@ -211,7 +247,7 @@ pub fn read_frame_with(
     }
     let mut payload = vec![0u8; len as usize];
     read_full(r, &mut payload, stop, false)?;
-    Ok(Frame { opcode, status, request_id, payload })
+    Ok(Frame { version, opcode, status, request_id, payload })
 }
 
 /// `read_exact` that survives read-timeout ticks (checking `stop` on
@@ -249,7 +285,9 @@ fn read_full(
 
 // ---------------------------------------------------------------------------
 // Payload codecs. All multi-byte values little-endian, mirroring the
-// EMLP blob format in `util::serde`.
+// EMLP blob format in `util::serde`. The `decode_*` functions take the
+// frame's version and parse the matching layout; v1 layouts carry no
+// model names (the empty string routes to the server's default model).
 // ---------------------------------------------------------------------------
 
 /// Bounds-checked payload reader.
@@ -272,8 +310,16 @@ impl<'a> Buf<'a> {
         Ok(s)
     }
 
+    fn u16(&mut self) -> Result<u16, String> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
     fn u32(&mut self) -> Result<u32, String> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
     fn f32s(&mut self, n: usize) -> Result<Vec<f32>, String> {
@@ -282,6 +328,17 @@ impl<'a> Buf<'a> {
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
             .collect())
+    }
+
+    /// v2 model-name field: `u16 len | len UTF-8 bytes`, capped at
+    /// [`MAX_MODEL_NAME_LEN`] *before* the bytes are read.
+    fn name(&mut self) -> Result<String, String> {
+        let len = self.u16()? as usize;
+        if len > MAX_MODEL_NAME_LEN {
+            return Err(format!("model name length {len} exceeds cap {MAX_MODEL_NAME_LEN}"));
+        }
+        String::from_utf8(self.take(len)?.to_vec())
+            .map_err(|e| format!("model name not UTF-8: {e}"))
     }
 
     fn remaining(&self) -> usize {
@@ -303,33 +360,72 @@ fn push_f32s(out: &mut Vec<u8>, xs: &[f32]) {
     }
 }
 
-/// `Infer` request payload: `u32 backend | u32 dim | dim × f32`.
-pub fn encode_infer(backend: u32, x: &[f32]) -> Vec<u8> {
-    let mut out = Vec::with_capacity(8 + x.len() * 4);
-    out.extend_from_slice(&backend.to_le_bytes());
-    out.extend_from_slice(&(x.len() as u32).to_le_bytes());
-    push_f32s(&mut out, x);
-    out
+fn push_name(out: &mut Vec<u8>, name: &str) -> Result<(), String> {
+    if name.len() > MAX_MODEL_NAME_LEN {
+        return Err(format!(
+            "model name is {} bytes (cap {MAX_MODEL_NAME_LEN})",
+            name.len()
+        ));
+    }
+    out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+    out.extend_from_slice(name.as_bytes());
+    Ok(())
 }
 
-pub fn decode_infer(payload: &[u8]) -> Result<(u32, Vec<f32>), String> {
+/// Shared body of the v1/v2 `Infer` encoders: `model` is present in v2
+/// payloads only.
+fn encode_infer_body(backend: u32, model: Option<&str>, x: &[f32]) -> Result<Vec<u8>, String> {
+    let mut out = Vec::with_capacity(10 + model.map_or(0, str::len) + x.len() * 4);
+    out.extend_from_slice(&backend.to_le_bytes());
+    if let Some(model) = model {
+        push_name(&mut out, model)?;
+    }
+    out.extend_from_slice(&(x.len() as u32).to_le_bytes());
+    push_f32s(&mut out, x);
+    Ok(out)
+}
+
+/// v2 `Infer` request payload:
+/// `u32 backend | u16 model_len | model | u32 dim | dim × f32`.
+/// The empty model name routes to the server's default model.
+pub fn encode_infer(backend: u32, model: &str, x: &[f32]) -> Result<Vec<u8>, String> {
+    encode_infer_body(backend, Some(model), x)
+}
+
+/// v1 `Infer` request payload: `u32 backend | u32 dim | dim × f32`.
+pub fn encode_infer_v1(backend: u32, x: &[f32]) -> Vec<u8> {
+    encode_infer_body(backend, None, x).expect("nameless encoding is infallible")
+}
+
+/// Decode an `Infer` payload framed at `version`. v1 payloads resolve
+/// to the empty (default) model name.
+pub fn decode_infer(payload: &[u8], version: u16) -> Result<(u32, String, Vec<f32>), String> {
     let mut b = Buf::new(payload);
     let backend = b.u32()?;
+    let model = if version >= 2 { b.name()? } else { String::new() };
     let dim = b.u32()? as usize;
     let x = b.f32s(dim)?;
     b.finish()?;
-    Ok((backend, x))
+    Ok((backend, model, x))
 }
 
-/// `InferBatch` request payload:
-/// `u32 backend | u32 batch | u32 dim | batch × dim × f32`.
-pub fn encode_infer_batch(backend: u32, samples: &[Vec<f32>]) -> Result<Vec<u8>, String> {
+/// Shared body of the v1/v2 `InferBatch` encoders — one place for the
+/// ragged-batch validation so the two versions cannot diverge.
+fn encode_infer_batch_body(
+    backend: u32,
+    model: Option<&str>,
+    samples: &[Vec<f32>],
+) -> Result<Vec<u8>, String> {
     let dim = samples.first().map(|s| s.len()).unwrap_or(0);
     if samples.iter().any(|s| s.len() != dim) {
         return Err("ragged batch: samples differ in dimension".into());
     }
-    let mut out = Vec::with_capacity(12 + samples.len() * dim * 4);
+    let mut out =
+        Vec::with_capacity(14 + model.map_or(0, str::len) + samples.len() * dim * 4);
     out.extend_from_slice(&backend.to_le_bytes());
+    if let Some(model) = model {
+        push_name(&mut out, model)?;
+    }
     out.extend_from_slice(&(samples.len() as u32).to_le_bytes());
     out.extend_from_slice(&(dim as u32).to_le_bytes());
     for s in samples {
@@ -338,9 +434,30 @@ pub fn encode_infer_batch(backend: u32, samples: &[Vec<f32>]) -> Result<Vec<u8>,
     Ok(out)
 }
 
-pub fn decode_infer_batch(payload: &[u8]) -> Result<(u32, Vec<Vec<f32>>), String> {
+/// v2 `InferBatch` request payload:
+/// `u32 backend | u16 model_len | model | u32 batch | u32 dim | batch × dim × f32`.
+pub fn encode_infer_batch(
+    backend: u32,
+    model: &str,
+    samples: &[Vec<f32>],
+) -> Result<Vec<u8>, String> {
+    encode_infer_batch_body(backend, Some(model), samples)
+}
+
+/// v1 `InferBatch` request payload:
+/// `u32 backend | u32 batch | u32 dim | batch × dim × f32`.
+pub fn encode_infer_batch_v1(backend: u32, samples: &[Vec<f32>]) -> Result<Vec<u8>, String> {
+    encode_infer_batch_body(backend, None, samples)
+}
+
+/// Decode an `InferBatch` payload framed at `version`.
+pub fn decode_infer_batch(
+    payload: &[u8],
+    version: u16,
+) -> Result<(u32, String, Vec<Vec<f32>>), String> {
     let mut b = Buf::new(payload);
     let backend = b.u32()?;
+    let model = if version >= 2 { b.name()? } else { String::new() };
     let batch = b.u32()? as usize;
     let dim = b.u32()? as usize;
     check_grid(batch, dim, b.remaining())?;
@@ -349,7 +466,7 @@ pub fn decode_infer_batch(payload: &[u8]) -> Result<(u32, Vec<Vec<f32>>), String
         samples.push(b.f32s(dim)?);
     }
     b.finish()?;
-    Ok((backend, samples))
+    Ok((backend, model, samples))
 }
 
 /// Reject a declared `batch × dim` geometry that does not match the
@@ -410,7 +527,7 @@ pub fn decode_batch_outputs(payload: &[u8]) -> Result<Vec<Vec<f32>>, String> {
     Ok(rows)
 }
 
-/// Length-prefixed UTF-8 string (`SwapModel` request payload).
+/// Length-prefixed UTF-8 string — the v1 `SwapModel` request payload.
 pub fn encode_str(s: &str) -> Vec<u8> {
     let mut buf = Vec::with_capacity(4 + s.len());
     buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
@@ -426,6 +543,87 @@ pub fn decode_str(payload: &[u8]) -> Result<String, String> {
     Ok(s)
 }
 
+/// v2 `SwapModel` request payload: `u16 slot_len | slot | u16 src_len |
+/// src` — activate registered model `src` into serving slot `slot`
+/// (empty slot = the server's default slot).
+pub fn encode_swap(slot: &str, source: &str) -> Result<Vec<u8>, String> {
+    let mut out = Vec::with_capacity(4 + slot.len() + source.len());
+    push_name(&mut out, slot)?;
+    push_name(&mut out, source)?;
+    Ok(out)
+}
+
+/// Decode a `SwapModel` payload framed at `version` into
+/// `(slot, source)`. The v1 single-string form targets the default
+/// slot (empty slot name).
+pub fn decode_swap(payload: &[u8], version: u16) -> Result<(String, String), String> {
+    if version >= 2 {
+        let mut b = Buf::new(payload);
+        let slot = b.name()?;
+        let source = b.name()?;
+        b.finish()?;
+        Ok((slot, source))
+    } else {
+        Ok((String::new(), decode_str(payload)?))
+    }
+}
+
+/// One entry of a `ListModels` response: a serving slot and the model
+/// version currently active in it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelInfo {
+    /// Slot name clients route by (the `model` field of `Infer`).
+    pub slot: String,
+    /// Name of the catalog model active in the slot.
+    pub model: String,
+    /// Version of the active model.
+    pub version: u32,
+    pub input_dim: u32,
+    pub output_dim: u32,
+    /// The slot's swap generation (bumped per activation).
+    pub generation: u64,
+}
+
+/// `ListModels` response payload: `u32 count | count × (u16 slot_len |
+/// slot | u16 model_len | model | u32 version | u32 input_dim |
+/// u32 output_dim | u64 generation)`.
+pub fn encode_model_list(models: &[ModelInfo]) -> Result<Vec<u8>, String> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&(models.len() as u32).to_le_bytes());
+    for m in models {
+        push_name(&mut out, &m.slot)?;
+        push_name(&mut out, &m.model)?;
+        out.extend_from_slice(&m.version.to_le_bytes());
+        out.extend_from_slice(&m.input_dim.to_le_bytes());
+        out.extend_from_slice(&m.output_dim.to_le_bytes());
+        out.extend_from_slice(&m.generation.to_le_bytes());
+    }
+    Ok(out)
+}
+
+pub fn decode_model_list(payload: &[u8]) -> Result<Vec<ModelInfo>, String> {
+    let mut b = Buf::new(payload);
+    let count = b.u32()? as usize;
+    // Each entry is at least 24 bytes; reject a hostile count before
+    // allocating for it.
+    if (count as u64) * 24 > payload.len() as u64 {
+        return Err(format!("model count {count} exceeds payload size"));
+    }
+    let mut models = Vec::with_capacity(count);
+    for _ in 0..count {
+        models.push(ModelInfo {
+            slot: b.name()?,
+            model: b.name()?,
+            version: b.u32()?,
+            input_dim: b.u32()?,
+            output_dim: b.u32()?,
+            generation: b.u64()?,
+        });
+    }
+    b.finish()?;
+    Ok(models)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -439,12 +637,20 @@ mod tests {
 
     #[test]
     fn frame_roundtrip() {
-        let f = Frame::ok(Opcode::Infer, 42, encode_infer(0, &[1.0, -2.5]));
+        let f = Frame::ok(Opcode::Infer, 42, encode_infer(0, "mnist", &[1.0, -2.5]).unwrap());
         assert_eq!(roundtrip(&f), f);
         let e = Frame::error(Opcode::SwapModel, 7, Status::UnknownModel, "no such model");
         let back = roundtrip(&e);
         assert_eq!(back.status, Status::UnknownModel);
         assert_eq!(back.message(), "no such model");
+    }
+
+    #[test]
+    fn v1_frames_still_read() {
+        let f = Frame::ok(Opcode::Infer, 3, encode_infer_v1(0, &[1.0])).at_version(1);
+        let back = roundtrip(&f);
+        assert_eq!(back.version, 1);
+        assert_eq!(back, f);
     }
 
     #[test]
@@ -466,13 +672,18 @@ mod tests {
 
     #[test]
     fn wrong_version_rejected() {
-        let mut buf = Vec::new();
-        write_frame(&mut buf, &Frame::ok(Opcode::Ping, 0, Vec::new())).unwrap();
-        buf[4] = 99;
-        assert!(matches!(
-            read_frame(&mut Cursor::new(buf), DEFAULT_MAX_PAYLOAD),
-            Err(ReadError::Protocol(_))
-        ));
+        for bad in [0u16, 3, 99] {
+            let mut buf = Vec::new();
+            write_frame(&mut buf, &Frame::ok(Opcode::Ping, 0, Vec::new())).unwrap();
+            buf[4..6].copy_from_slice(&bad.to_le_bytes());
+            assert!(
+                matches!(
+                    read_frame(&mut Cursor::new(buf), DEFAULT_MAX_PAYLOAD),
+                    Err(ReadError::Protocol(_))
+                ),
+                "version {bad} accepted"
+            );
+        }
     }
 
     #[test]
@@ -513,26 +724,85 @@ mod tests {
     }
 
     #[test]
-    fn infer_payload_roundtrip() {
+    fn infer_payload_roundtrip_both_versions() {
         let x = vec![0.25f32, -1.0, 3.5];
-        let (backend, back) = decode_infer(&encode_infer(BACKEND_ANY, &x)).unwrap();
+        let (backend, model, back) =
+            decode_infer(&encode_infer(BACKEND_ANY, "qnet", &x).unwrap(), 2).unwrap();
         assert_eq!(backend, BACKEND_ANY);
+        assert_eq!(model, "qnet");
+        assert_eq!(back, x);
+        // v1: no model field, resolves to the default model.
+        let (backend, model, back) = decode_infer(&encode_infer_v1(0, &x), 1).unwrap();
+        assert_eq!(backend, 0);
+        assert_eq!(model, "");
         assert_eq!(back, x);
         // Trailing garbage rejected.
-        let mut p = encode_infer(0, &x);
+        let mut p = encode_infer(0, "", &x).unwrap();
         p.push(0);
-        assert!(decode_infer(&p).is_err());
+        assert!(decode_infer(&p, 2).is_err());
     }
 
     #[test]
-    fn infer_batch_payload_roundtrip() {
+    fn infer_batch_payload_roundtrip_both_versions() {
         let samples = vec![vec![1.0f32, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]];
-        let payload = encode_infer_batch(2, &samples).unwrap();
-        let (backend, back) = decode_infer_batch(&payload).unwrap();
+        let payload = encode_infer_batch(2, "mnist", &samples).unwrap();
+        let (backend, model, back) = decode_infer_batch(&payload, 2).unwrap();
         assert_eq!(backend, 2);
+        assert_eq!(model, "mnist");
         assert_eq!(back, samples);
-        assert!(encode_infer_batch(0, &[vec![1.0], vec![1.0, 2.0]]).is_err());
-        assert!(decode_infer_batch(&encode_infer_batch(0, &[]).unwrap()).is_err());
+        let payload = encode_infer_batch_v1(1, &samples).unwrap();
+        let (backend, model, back) = decode_infer_batch(&payload, 1).unwrap();
+        assert_eq!(backend, 1);
+        assert_eq!(model, "");
+        assert_eq!(back, samples);
+        assert!(encode_infer_batch(0, "", &[vec![1.0], vec![1.0, 2.0]]).is_err());
+        assert!(
+            decode_infer_batch(&encode_infer_batch(0, "", &[]).unwrap(), 2).is_err()
+        );
+    }
+
+    #[test]
+    fn model_name_length_is_capped() {
+        let long = "m".repeat(MAX_MODEL_NAME_LEN + 1);
+        assert!(encode_infer(0, &long, &[1.0]).is_err());
+        let ok = "m".repeat(MAX_MODEL_NAME_LEN);
+        let p = encode_infer(0, &ok, &[1.0]).unwrap();
+        assert_eq!(decode_infer(&p, 2).unwrap().1, ok);
+    }
+
+    #[test]
+    fn malformed_model_name_lengths_never_panic() {
+        // Property sweep: every u16 name-length value spliced into an
+        // otherwise valid v2 Infer payload either decodes cleanly (the
+        // true length) or errors — truncated names, oversized lengths
+        // and lengths pointing past the payload all included.
+        let x = vec![0.5f32; 4];
+        let good = encode_infer(0, "model", &x).unwrap();
+        for lied in 0..=u16::MAX {
+            let mut p = good.clone();
+            p[4..6].copy_from_slice(&lied.to_le_bytes());
+            match decode_infer(&p, 2) {
+                Ok((_, model, back)) => {
+                    assert_eq!(lied, 5, "length {lied} decoded");
+                    assert_eq!(model, "model");
+                    assert_eq!(back, x);
+                }
+                Err(msg) => assert!(!msg.is_empty()),
+            }
+        }
+        // Same splice on InferBatch.
+        let goodb = encode_infer_batch(0, "model", &[x.clone(), x]).unwrap();
+        for lied in [0u16, 1, 4, 6, 200, 255, 256, 1000, u16::MAX] {
+            let mut p = goodb.clone();
+            p[4..6].copy_from_slice(&lied.to_le_bytes());
+            match decode_infer_batch(&p, 2) {
+                Ok((_, model, _)) => {
+                    assert_eq!(lied, 5);
+                    assert_eq!(model, "model");
+                }
+                Err(msg) => assert!(!msg.is_empty()),
+            }
+        }
     }
 
     #[test]
@@ -543,11 +813,11 @@ mod tests {
         p.extend_from_slice(&0u32.to_le_bytes());
         p.extend_from_slice(&u32::MAX.to_le_bytes());
         p.extend_from_slice(&0u32.to_le_bytes());
-        assert!(decode_infer_batch(&p).is_err());
+        assert!(decode_infer_batch(&p, 1).is_err());
         // Declared geometry must match the byte count actually present.
-        let mut q = encode_infer_batch(0, &[vec![1.0f32; 4], vec![2.0f32; 4]]).unwrap();
+        let mut q = encode_infer_batch_v1(0, &[vec![1.0f32; 4], vec![2.0f32; 4]]).unwrap();
         q[4..8].copy_from_slice(&100u32.to_le_bytes()); // lie about batch
-        assert!(decode_infer_batch(&q).is_err());
+        assert!(decode_infer_batch(&q, 1).is_err());
         // Same guard on the response decoder (malicious server).
         let mut r = Vec::new();
         r.extend_from_slice(&u32::MAX.to_le_bytes());
@@ -564,9 +834,41 @@ mod tests {
     }
 
     #[test]
-    fn str_payload_roundtrip() {
-        assert_eq!(decode_str(&encode_str("model-v2")).unwrap(), "model-v2");
+    fn swap_payload_roundtrip_both_versions() {
+        let (slot, src) = decode_swap(&encode_swap("mnist", "mnist-v2").unwrap(), 2).unwrap();
+        assert_eq!((slot.as_str(), src.as_str()), ("mnist", "mnist-v2"));
+        // v1 single-string form: targets the default slot.
+        let (slot, src) = decode_swap(&encode_str("retrained"), 1).unwrap();
+        assert_eq!((slot.as_str(), src.as_str()), ("", "retrained"));
         assert!(decode_str(&[5, 0, 0, 0, b'a']).is_err()); // declared 5, got 1
+    }
+
+    #[test]
+    fn model_list_roundtrip() {
+        let models = vec![
+            ModelInfo {
+                slot: "mnist".into(),
+                model: "mnist".into(),
+                version: 3,
+                input_dim: 784,
+                output_dim: 10,
+                generation: 7,
+            },
+            ModelInfo {
+                slot: "qnet".into(),
+                model: "qnet-retrained".into(),
+                version: 1,
+                input_dim: 6,
+                output_dim: 3,
+                generation: 1,
+            },
+        ];
+        let payload = encode_model_list(&models).unwrap();
+        assert_eq!(decode_model_list(&payload).unwrap(), models);
+        // Hostile count rejected before allocation.
+        let mut p = Vec::new();
+        p.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_model_list(&p).is_err());
     }
 
     #[test]

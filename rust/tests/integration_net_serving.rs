@@ -1,6 +1,8 @@
 //! Integration: the network serving subsystem end-to-end over real TCP
-//! — load generator traffic, mixed single/batch frames, a mid-run model
-//! swap, load shedding under saturation, and protocol error handling.
+//! — load generator traffic, mixed single/batch frames, mid-run model
+//! swaps, multi-model routing with per-slot swaps, v1 protocol
+//! compatibility, load shedding under saturation, and protocol error
+//! handling.
 
 use edgemlp::coordinator::backend::{Backend, FnBackend};
 use edgemlp::coordinator::server::BackendFactory;
@@ -10,8 +12,8 @@ use edgemlp::nn::mlp::{Mlp, MlpConfig};
 use edgemlp::quant::spx::SpxConfig;
 use edgemlp::serve::wire;
 use edgemlp::serve::{
-    run_loadgen, swappable_cpu_factory, BatchReply, Client, InferReply, LoadGenConfig,
-    ModelRegistry, ServeConfig, Server, Status,
+    run_loadgen, swappable_cpu_factory, BackendKind, BatchReply, Client, EngineConfig,
+    InferReply, LoadGenConfig, ModelRegistry, ServeConfig, Server, Status,
 };
 use edgemlp::util::rng::Pcg32;
 use std::sync::Arc;
@@ -31,8 +33,8 @@ fn mnist_shaped(seed: u64) -> Mlp {
     )
 }
 
-/// Server with a swappable CPU backend, "default" (seed 1) active and
-/// "retrained" (seed 2) registered.
+/// Server with a swappable CPU backend pool, "default" (seed 1) active
+/// and "retrained" (seed 2) registered as a swap candidate.
 fn start_model_server(
     queue_capacity: usize,
     policy: BatchPolicy,
@@ -40,7 +42,7 @@ fn start_model_server(
     let registry = ModelRegistry::new("default", mnist_shaped(1), SpxConfig::sp2(5));
     registry.register_mlp("retrained", mnist_shaped(2));
     let coord = Coordinator::start(
-        vec![("cpu".into(), swappable_cpu_factory(registry.clone()))],
+        vec![("cpu".into(), swappable_cpu_factory(registry.default_slot()))],
         CoordinatorConfig { queue_capacity, policy },
     )
     .unwrap();
@@ -75,10 +77,11 @@ fn ping_and_stats_roundtrip() {
         other => panic!("expected output, got {other:?}"),
     }
     let stats = client.stats().unwrap();
-    assert!(stats.contains("model: default v1"), "{stats}");
-    assert!(stats.contains("backend cpu"), "{stats}");
+    assert!(stats.contains("default v1"), "{stats}");
+    assert!(stats.contains("pool cpu"), "{stats}");
     assert!(stats.contains("p50="), "{stats}");
     assert!(stats.contains("p99="), "{stats}");
+    assert!(stats.contains("p99.9="), "{stats}");
     server.shutdown();
 }
 
@@ -173,6 +176,292 @@ fn e2e_mixed_traffic_with_midrun_swap() {
     server.shutdown();
 }
 
+/// The multi-model acceptance scenario: two models served concurrently
+/// by a replicated engine, every response verified against the network
+/// it should have come from (no cross-routing), one model swapped
+/// mid-run without disturbing the other, zero lost responses.
+#[test]
+fn two_models_concurrent_traffic_with_independent_swap() {
+    let alpha_v1 = mnist_shaped(11);
+    let alpha_v2 = mnist_shaped(12);
+    let beta = mnist_shaped(13);
+    let registry = ModelRegistry::new("alpha", alpha_v1.clone(), SpxConfig::sp2(5));
+    registry.register_mlp("beta", beta.clone());
+    registry.add_slot("beta").unwrap();
+    registry.register_mlp("alpha-v2", alpha_v2.clone());
+    let server = Server::serve(
+        registry.clone(),
+        "127.0.0.1:0",
+        EngineConfig {
+            replicas: 2,
+            backends: vec![BackendKind::Cpu],
+            coordinator: CoordinatorConfig {
+                queue_capacity: 4096,
+                policy: BatchPolicy::windowed(32, Duration::from_millis(1)),
+            },
+            serve: ServeConfig::default(),
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+
+    // Distinct random probes per driver keep the verification honest.
+    let n_per_driver = 1200usize;
+    let window = 8usize;
+    let alpha_want_v1 = Arc::new(alpha_v1);
+    let alpha_want_v2 = Arc::new(alpha_v2);
+    let beta_want = Arc::new(beta);
+
+    // Drive `n` pipelined requests against `model`, verifying each
+    // response with `verify(probe, output)`.
+    fn drive(
+        addr: std::net::SocketAddr,
+        model: &str,
+        n: usize,
+        window: usize,
+        seed: u64,
+        mut verify: impl FnMut(&[f32], &[f32]),
+    ) -> usize {
+        let mut client = Client::connect(addr).unwrap();
+        let mut rng = Pcg32::new(seed);
+        let mut in_flight: std::collections::VecDeque<Vec<f32>> = Default::default();
+        let mut done = 0usize;
+        let drain =
+            |client: &mut Client, in_flight: &mut std::collections::VecDeque<Vec<f32>>| {
+                let x = in_flight.pop_front().unwrap();
+                match client.recv_infer().unwrap().1 {
+                    InferReply::Output(out) => (x, out),
+                    other => panic!("{other:?}"),
+                }
+            };
+        for _ in 0..n {
+            if in_flight.len() >= window {
+                let (x, out) = drain(&mut client, &mut in_flight);
+                verify(&x, &out);
+                done += 1;
+            }
+            let x: Vec<f32> = (0..784).map(|_| rng.uniform() as f32).collect();
+            client.send_infer_model(0, model, &x).unwrap();
+            in_flight.push_back(x);
+        }
+        while !in_flight.is_empty() {
+            let (x, out) = drain(&mut client, &mut in_flight);
+            verify(&x, &out);
+            done += 1;
+        }
+        done
+    }
+
+    // Driver for model "beta": runs continuously through the whole test
+    // — including across alpha's swap — and every output must match
+    // beta's network (a cross-routed response would carry alpha's
+    // weights and fail loudly).
+    let beta_driver = {
+        let beta_want = beta_want.clone();
+        std::thread::spawn(move || {
+            drive(addr, "beta", n_per_driver, window, 501, |x, out| {
+                assert_vec_close(out, &beta_want.forward_one(x), 1e-5)
+            })
+        })
+    };
+
+    // Driver for model "alpha", phased around the swap so the
+    // verification is exact: phase 1 must be served by alpha v1, and
+    // phase 2 (every request submitted after the swap ack, window
+    // drained at the barrier) must be served by alpha-v2. The
+    // in-flight-swap path is covered by `e2e_mixed_traffic_with_midrun_swap`.
+    let (phase1_done_tx, phase1_done_rx) = std::sync::mpsc::channel::<()>();
+    let (swapped_tx, swapped_rx) = std::sync::mpsc::channel::<()>();
+    let alpha_driver = {
+        let (v1, v2) = (alpha_want_v1.clone(), alpha_want_v2.clone());
+        std::thread::spawn(move || {
+            let half = n_per_driver / 2;
+            let done1 = drive(addr, "alpha", half, window, 502, |x, out| {
+                assert_vec_close(out, &v1.forward_one(x), 1e-5)
+            });
+            phase1_done_tx.send(()).unwrap();
+            swapped_rx.recv().unwrap();
+            let done2 = drive(addr, "alpha", n_per_driver - half, window, 503, |x, out| {
+                assert_vec_close(out, &v2.forward_one(x), 1e-5)
+            });
+            done1 + done2
+        })
+    };
+
+    // Swap alpha's slot once its phase-1 traffic is verified; beta's
+    // traffic keeps flowing throughout and its slot must not move.
+    phase1_done_rx.recv_timeout(Duration::from_secs(60)).unwrap();
+    let mut ctl = Client::connect(addr).unwrap();
+    let ack = ctl.swap_model_into("alpha", "alpha-v2").unwrap();
+    assert!(ack.contains("alpha-v2"), "{ack}");
+    swapped_tx.send(()).unwrap();
+
+    let beta_done = beta_driver.join().unwrap();
+    let alpha_done = alpha_driver.join().unwrap();
+    // Zero lost responses on both models.
+    assert_eq!(beta_done, n_per_driver);
+    assert_eq!(alpha_done, n_per_driver);
+
+    // Post-run probes: alpha serves v2, beta untouched.
+    let x = probe();
+    match ctl.infer_model(0, "alpha", &x).unwrap() {
+        InferReply::Output(out) => assert_vec_close(&out, &alpha_want_v2.forward_one(&x), 1e-5),
+        other => panic!("alpha post-probe: {other:?}"),
+    }
+    match ctl.infer_model(0, "beta", &x).unwrap() {
+        InferReply::Output(out) => assert_vec_close(&out, &beta_want.forward_one(&x), 1e-5),
+        other => panic!("beta post-probe: {other:?}"),
+    }
+
+    // ListModels reflects the independent generations.
+    let models = ctl.list_models().unwrap();
+    assert_eq!(models.len(), 2);
+    let alpha = models.iter().find(|m| m.slot == "alpha").unwrap();
+    let beta_info = models.iter().find(|m| m.slot == "beta").unwrap();
+    assert_eq!(alpha.model, "alpha-v2");
+    assert_eq!(alpha.generation, 2);
+    assert_eq!(beta_info.model, "beta");
+    assert_eq!(beta_info.generation, 1);
+
+    // Per-pool metrics carry the per-model labels, and nothing was
+    // shed or lost server-side.
+    let snap = server.metrics().snapshot();
+    assert!(snap.backends["cpu/alpha"].requests >= n_per_driver as u64);
+    assert!(snap.backends["cpu/beta"].requests >= n_per_driver as u64);
+    assert_eq!(snap.rejected, 0);
+    server.shutdown();
+}
+
+/// A v1-framed client (no model fields anywhere) must be served
+/// correctly by the v2 server: Ping, Infer, InferBatch and the
+/// single-string SwapModel all round-trip, and every response comes
+/// back framed at version 1.
+#[test]
+fn v1_client_compat_round_trip() {
+    let (server, _registry) =
+        start_model_server(256, BatchPolicy::windowed(16, Duration::from_millis(1)));
+    let want_v1 = mnist_shaped(1).forward_one(&probe());
+    let want_v2 = mnist_shaped(2).forward_one(&probe());
+
+    let mut raw = std::net::TcpStream::connect(server.local_addr()).unwrap();
+    let send = |raw: &mut std::net::TcpStream, frame: &wire::Frame| {
+        wire::write_frame(raw, &frame.clone().at_version(1)).unwrap();
+    };
+    let recv = |raw: &mut std::net::TcpStream| -> wire::Frame {
+        let frame = wire::read_frame(raw, wire::DEFAULT_MAX_PAYLOAD).unwrap();
+        assert_eq!(frame.version, 1, "server answered a v1 request with {frame:?}");
+        frame
+    };
+
+    // Ping.
+    send(&mut raw, &wire::Frame::ok(wire::Opcode::Ping, 1, b"v1".to_vec()));
+    let pong = recv(&mut raw);
+    assert_eq!(pong.status, Status::Ok);
+    assert_eq!(pong.payload, b"v1");
+
+    // Infer with the v1 payload layout (no model name).
+    send(
+        &mut raw,
+        &wire::Frame::ok(wire::Opcode::Infer, 2, wire::encode_infer_v1(0, &probe())),
+    );
+    let resp = recv(&mut raw);
+    assert_eq!(resp.status, Status::Ok);
+    assert_eq!(resp.request_id, 2);
+    assert_vec_close(&wire::decode_outputs(&resp.payload).unwrap(), &want_v1, 1e-5);
+
+    // InferBatch, v1 layout.
+    let samples = vec![probe(), probe(), probe()];
+    send(
+        &mut raw,
+        &wire::Frame::ok(
+            wire::Opcode::InferBatch,
+            3,
+            wire::encode_infer_batch_v1(0, &samples).unwrap(),
+        ),
+    );
+    let resp = recv(&mut raw);
+    assert_eq!(resp.status, Status::Ok);
+    let rows = wire::decode_batch_outputs(&resp.payload).unwrap();
+    assert_eq!(rows.len(), 3);
+    for row in &rows {
+        assert_vec_close(row, &want_v1, 1e-5);
+    }
+
+    // v1 single-string SwapModel targets the default slot.
+    send(
+        &mut raw,
+        &wire::Frame::ok(wire::Opcode::SwapModel, 4, wire::encode_str("retrained")),
+    );
+    let resp = recv(&mut raw);
+    assert_eq!(resp.status, Status::Ok, "{}", resp.message());
+
+    // The swap is visible to the same v1 client.
+    send(
+        &mut raw,
+        &wire::Frame::ok(wire::Opcode::Infer, 5, wire::encode_infer_v1(0, &probe())),
+    );
+    let resp = recv(&mut raw);
+    assert_eq!(resp.status, Status::Ok);
+    assert_vec_close(&wire::decode_outputs(&resp.payload).unwrap(), &want_v2, 1e-5);
+
+    // ListModels is v2-only: a v1 frame gets BadRequest, and the
+    // connection survives.
+    send(&mut raw, &wire::Frame::ok(wire::Opcode::ListModels, 6, Vec::new()));
+    let resp = recv(&mut raw);
+    assert_eq!(resp.status, Status::BadRequest);
+    send(&mut raw, &wire::Frame::ok(wire::Opcode::Ping, 7, Vec::new()));
+    assert_eq!(recv(&mut raw).status, Status::Ok);
+
+    server.shutdown();
+}
+
+/// Malformed v2 model-name lengths (truncated names, lengths past the
+/// cap) are answered with `BadRequest` frames, not crashes — and a
+/// syntactically valid frame carrying them never poisons the
+/// connection's other traffic.
+#[test]
+fn malformed_model_name_lengths_are_bad_requests() {
+    let (server, _registry) = start_model_server(64, BatchPolicy::immediate(8));
+    let mut client = Client::connect(server.local_addr()).unwrap();
+    let mut raw = std::net::TcpStream::connect(server.local_addr()).unwrap();
+
+    let good = wire::encode_infer(0, "model", &probe()).unwrap();
+    // Truncated (length points past the name), oversized (past the
+    // cap), and length-runs-into-payload variants.
+    for lied in [200u16, 256, 1000, u16::MAX] {
+        let mut payload = good.clone();
+        payload[4..6].copy_from_slice(&lied.to_le_bytes());
+        wire::write_frame(
+            &mut raw,
+            &wire::Frame::ok(wire::Opcode::Infer, lied as u64, payload),
+        )
+        .unwrap();
+        let resp = wire::read_frame(&mut raw, wire::DEFAULT_MAX_PAYLOAD).unwrap();
+        assert_eq!(resp.status, Status::BadRequest, "lied length {lied}: {resp:?}");
+        assert_eq!(resp.request_id, lied as u64);
+    }
+    // The abused connection still works (payload errors are not framing
+    // errors), and an innocent concurrent client was never affected.
+    wire::write_frame(&mut raw, &wire::Frame::ok(wire::Opcode::Ping, 9, Vec::new())).unwrap();
+    assert_eq!(
+        wire::read_frame(&mut raw, wire::DEFAULT_MAX_PAYLOAD).unwrap().status,
+        Status::Ok
+    );
+    match client.infer(0, &probe()).unwrap() {
+        InferReply::Output(out) => assert_eq!(out.len(), 10),
+        other => panic!("innocent client poisoned: {other:?}"),
+    }
+    // An unknown (but well-formed) model name is UnknownModel.
+    match client.infer_model(0, "nope", &probe()).unwrap() {
+        InferReply::Failed { status, message } => {
+            assert_eq!(status, Status::UnknownModel);
+            assert!(message.contains("nope"), "{message}");
+        }
+        other => panic!("expected UnknownModel, got {other:?}"),
+    }
+    server.shutdown();
+}
+
 /// A saturated coordinator queue must answer with `Backpressure` error
 /// frames — the wire mapping of `SubmitError::Backpressure` — while
 /// accepted requests still complete.
@@ -264,7 +553,10 @@ fn swap_to_unknown_model_is_error_frame() {
     let err = client.swap_model("nope").unwrap_err().to_string();
     assert!(err.contains("UnknownModel"), "{err}");
     assert!(err.contains("nope"), "{err}");
-    // The connection survives an error frame.
+    // Unknown slot is also an error frame, with its own message.
+    let err = client.swap_model_into("ghost-slot", "retrained").unwrap_err().to_string();
+    assert!(err.contains("ghost-slot"), "{err}");
+    // The connection survives error frames.
     client.ping().unwrap();
     server.shutdown();
 }
@@ -294,6 +586,8 @@ fn bad_magic_answered_then_connection_closed() {
     raw.write_all(&[0xde; 32]).unwrap();
     let frame = wire::read_frame(&mut raw, wire::DEFAULT_MAX_PAYLOAD).unwrap();
     assert_eq!(frame.status, Status::BadRequest);
+    // Framed at v1 — parseable by every supported client generation.
+    assert_eq!(frame.version, 1);
     assert!(frame.message().contains("magic"), "{}", frame.message());
     // Server closes after a framing error.
     let mut rest = Vec::new();
@@ -306,7 +600,7 @@ fn bad_magic_answered_then_connection_closed() {
 fn over_limit_connection_gets_busy_frame() {
     let registry = ModelRegistry::new("default", mnist_shaped(1), SpxConfig::sp2(5));
     let coord = Coordinator::start(
-        vec![("cpu".into(), swappable_cpu_factory(registry.clone()))],
+        vec![("cpu".into(), swappable_cpu_factory(registry.default_slot()))],
         CoordinatorConfig { queue_capacity: 64, policy: BatchPolicy::immediate(8) },
     )
     .unwrap();
@@ -322,6 +616,7 @@ fn over_limit_connection_gets_busy_frame() {
     let mut second = std::net::TcpStream::connect(server.local_addr()).unwrap();
     let frame = wire::read_frame(&mut second, wire::DEFAULT_MAX_PAYLOAD).unwrap();
     assert_eq!(frame.status, Status::Busy);
+    assert_eq!(frame.version, 1, "pre-request frames must be v1-parseable");
     // The first connection is unaffected.
     first.ping().unwrap();
     server.shutdown();
