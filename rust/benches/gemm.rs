@@ -1,11 +1,15 @@
 //! Bench: the blocked GEMM vs the seed single-pass baseline at the
-//! Table-I layer shapes, plus the batched SPx serving kernel vs the
-//! per-sample stream path. Emits `BENCH_gemm.json` (override the path
-//! with `EDGEMLP_BENCH_JSON`) so future PRs have a perf trajectory.
-//! `cargo bench --bench gemm` — see EXPERIMENTS.md §Perf.
+//! Table-I layer shapes, the batched SPx serving kernel vs the
+//! per-sample stream path, and the E9 SIMD-dispatch/worker-pool matrix
+//! (forced-scalar vs native, one thread vs the persistent pool). Emits
+//! `BENCH_gemm.json` (override the path with `EDGEMLP_BENCH_JSON`) so
+//! future PRs have a perf trajectory — compare against the committed
+//! repo-root baseline with `tools/bench_delta.py`. `cargo bench
+//! --bench gemm` — see EXPERIMENTS.md §Perf and §Perf gains.
 
 use edgemlp::bench_harness::{bench, fmt_time, BenchConfig, BenchJson, Table};
 use edgemlp::fpga::accelerator::{AccelConfig, Accelerator, QuantizedMlp};
+use edgemlp::nn::kernels::{gemm::configured_threads, gemm_into_with, simd, DispatchPath};
 use edgemlp::nn::mlp::{Mlp, MlpConfig};
 use edgemlp::nn::tensor::Matrix;
 use edgemlp::quant::spx::SpxConfig;
@@ -89,8 +93,67 @@ fn main() {
     json.num("spx_per_sample_samples_per_s", stream_sps);
     json.num("spx_batch_speedup", batch_sps / stream_sps);
 
+    // ---- E9: SIMD dispatch + persistent worker pool (§Perf gains). ----
+    // Forced-scalar vs the native path at one thread isolates the SIMD
+    // micro-kernel win (acceptance: ≥ 2× at 256³ on AVX2/NEON hosts);
+    // the pooled row adds the persistent worker pool at the default
+    // thread cap — the serving path's configuration.
+    let native = simd::native_path();
+    // The same cap gemm_into runs under (EDGEMLP_GEMM_THREADS-aware),
+    // so the recorded pool numbers describe the real serving config.
+    let pool_threads = configured_threads();
+    json.text("gemm_dispatch_path", native.name());
+    json.num("gemm_pool_threads", pool_threads as f64);
+    let mut e9 = Table::new(&["kernel", "shape", "mean", "GFLOP/s", "vs scalar 1t"]);
+    for &(m, k, n) in &[(256usize, 256usize, 256usize), (256, 784, 128), (64, 784, 128)] {
+        let a = Matrix::random_uniform(m, k, 1.0, &mut rng);
+        let b = Matrix::random_uniform(n, k, 1.0, &mut rng);
+        let mut out = Matrix::zeros(m, n);
+        let label = format!("{m}x{k}x{n}");
+        let scalar_1t = bench(&format!("scalar 1t {label}"), cfg, || {
+            gemm_into_with(DispatchPath::Scalar, 1, &mut out, &a, false, &b, true)
+        });
+        let simd_1t = bench(&format!("simd 1t {label}"), cfg, || {
+            gemm_into_with(native, 1, &mut out, &a, false, &b, true)
+        });
+        let simd_pool = bench(&format!("simd pool {label}"), cfg, || {
+            gemm_into_with(native, pool_threads, &mut out, &a, false, &b, true)
+        });
+        let rows: [(&str, &edgemlp::bench_harness::Timing); 3] = [
+            ("gemm scalar 1t", &scalar_1t),
+            ("gemm simd 1t", &simd_1t),
+            ("gemm simd pool", &simd_pool),
+        ];
+        for (name, t) in rows {
+            e9.row(&[
+                name.into(),
+                label.clone(),
+                fmt_time(t.mean_s()),
+                format!("{:.2}", gflops(m, k, n, t.mean_s())),
+                format!("{:.2}x", scalar_1t.mean_s() / t.mean_s()),
+            ]);
+        }
+        json.num(&format!("gemm_scalar_{label}_gflops"), gflops(m, k, n, scalar_1t.mean_s()));
+        json.num(&format!("gemm_simd_{label}_gflops"), gflops(m, k, n, simd_1t.mean_s()));
+        json.num(&format!("gemm_simd_{label}_speedup"), scalar_1t.mean_s() / simd_1t.mean_s());
+        json.num(
+            &format!("gemm_simd_pool_{label}_gflops"),
+            gflops(m, k, n, simd_pool.mean_s()),
+        );
+        json.num(
+            &format!("gemm_simd_pool_{label}_speedup"),
+            simd_1t.mean_s() / simd_pool.mean_s(),
+        );
+    }
+
     println!("\n=== GEMM + batched-SPx kernel bench (EXPERIMENTS.md §Perf) ===\n");
     table.print();
+    println!(
+        "\n=== E9: SIMD dispatch ({} on this host) + worker pool ({} threads) ===\n",
+        native.name(),
+        pool_threads
+    );
+    e9.print();
 
     let path = std::env::var("EDGEMLP_BENCH_JSON").unwrap_or_else(|_| "BENCH_gemm.json".into());
     json.write(Path::new(&path)).expect("write bench json");

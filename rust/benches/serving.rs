@@ -127,6 +127,7 @@ fn main() {
 
     let mut sweep_table = Table::new(&["replicas", "req/s", "p50", "p99", "vs 1 replica"]);
     let mut base_rps = 0.0f64;
+    let (mut best_r, mut best_rps) = (1usize, 0.0f64);
     for &r in &sweep {
         let server = Server::serve(registry(), "127.0.0.1:0", engine(r, vec![BackendKind::Cpu]))
             .expect("start sweep server");
@@ -150,6 +151,10 @@ fn main() {
         if r == 1 {
             base_rps = rps;
         }
+        if rps > best_rps {
+            best_rps = rps;
+            best_r = r;
+        }
         let speedup = if base_rps > 0.0 { rps / base_rps } else { 0.0 };
         sweep_table.row(&[
             r.to_string(),
@@ -165,6 +170,17 @@ fn main() {
     }
     json.num("serving_replica_sweep_max", *sweep.last().unwrap() as f64);
     json.num("serving_replica_sweep_cores", cores as f64);
+    // serving_pool_*: the engine's replicated worker pool at its best
+    // operating point — the headline the perf trajectory tracks for the
+    // serving path. (The GEMM worker pool is measured in
+    // BENCH_gemm.json's gemm_simd_pool_* keys: this process pins
+    // EDGEMLP_GEMM_THREADS=1 so replication stays the only variable.)
+    json.num("serving_pool_best_replicas", best_r as f64);
+    json.num("serving_pool_best_rps", best_rps);
+    json.num(
+        "serving_pool_speedup",
+        if base_rps > 0.0 { best_rps / base_rps } else { 0.0 },
+    );
 
     println!("\n=== E8: replica sweep, CPU backend (EXPERIMENTS.md §Scaling) ===\n");
     sweep_table.print();

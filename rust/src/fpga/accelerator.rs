@@ -11,10 +11,10 @@
 
 use super::pipeline::{run_matvec, LayerRun, PipelineConfig};
 use super::power::EnergyModel;
-use super::pu::to_fixed;
+use super::pu::quantize_data_into;
 use super::stats::CycleStats;
 use crate::nn::activations::{sigmoid_lut, Activation};
-use crate::nn::kernels::{spx_matmul_batch, transpose_to_columns};
+use crate::nn::kernels::{simd, spx_matmul_batch, transpose_to_columns};
 use crate::nn::mlp::{argmax, Mlp};
 use crate::nn::tensor::Matrix;
 use crate::quant::spx::{SpxConfig, SpxTensor};
@@ -284,7 +284,10 @@ impl Accelerator {
 /// One quantized layer of the batched path: quantize `src` to Q1.15,
 /// run the weight-stationary kernel into `dst` (resized in place —
 /// every element is overwritten), then bias + activation in the same
-/// element order as the per-sample path.
+/// element order as the per-sample path. Every stage is
+/// SIMD-dispatched ([`crate::nn::kernels::simd`]) and bit-identical to
+/// the scalar per-sample loop (pinned by
+/// `forward_batch_matches_infer_one_bitwise`).
 fn spx_layer_pass(
     layer: &QuantizedLayer,
     src: &Matrix,
@@ -295,9 +298,7 @@ fn spx_layer_pass(
     let batch = src.rows;
     let (m, n) = (layer.w.shape[0], layer.w.shape[1]);
     debug_assert_eq!(src.cols, n);
-    let lut = sigmoid_lut();
-    d_fixed.clear();
-    d_fixed.extend(src.data.iter().map(|&v| to_fixed(v, layer.d_scale)));
+    quantize_data_into(&src.data, layer.d_scale, d_fixed);
     transpose_to_columns(d_fixed, batch, n, d_t);
     dst.rows = batch;
     dst.cols = m;
@@ -305,16 +306,7 @@ fn spx_layer_pass(
     // Stats sink None: Accelerator::infer_batch reports the cached
     // simulator trace instead (see Accelerator::per_sample_stats).
     spx_matmul_batch(&layer.w, d_t, batch, layer.d_scale, &mut dst.data, None);
-    for row in dst.data.chunks_exact_mut(m) {
-        for (o, &bias) in row.iter_mut().zip(&layer.b) {
-            *o += bias;
-            *o = match layer.activation {
-                Activation::Sigmoid => lut.eval(*o),
-                Activation::Relu => o.max(0.0),
-                Activation::Identity => *o,
-            };
-        }
-    }
+    simd::active_path().bias_activation(&mut dst.data, &layer.b, layer.activation);
 }
 
 #[cfg(test)]

@@ -197,9 +197,25 @@ pub fn dot_shift_add_reference(
 
 /// Quantize a whole data vector once (shared across the m rows that all
 /// multiply the same `d`, exactly as the reorganized-row preprocessing
-/// reuses `d`).
+/// reuses `d`). Allocating wrapper around [`quantize_data_into`].
 pub fn quantize_data(d: &[f32], d_scale: f32) -> Vec<i32> {
-    d.iter().map(|&x| to_fixed(x, d_scale)).collect()
+    let mut out = Vec::new();
+    quantize_data_into(d, d_scale, &mut out);
+    out
+}
+
+/// [`quantize_data`] into a caller-owned buffer (resized in place) —
+/// the allocation-free variant the batched accelerator/backends use on
+/// the serving hot path. SIMD-dispatched
+/// ([`crate::nn::kernels::simd`]); every path is bit-identical to
+/// [`to_fixed`] per element (pinned by property tests).
+pub fn quantize_data_into(d: &[f32], d_scale: f32, out: &mut Vec<i32>) {
+    // Reshape only — every element is overwritten below, so the warm
+    // steady state skips the zero-fill a clear()+resize would redo.
+    if out.len() != d.len() {
+        out.resize(d.len(), 0);
+    }
+    crate::nn::kernels::simd::active_path().quantize_into(d, d_scale, out);
 }
 
 #[cfg(test)]
@@ -291,6 +307,22 @@ mod tests {
                 assert_eq!(fast.to_bits(), slow.to_bits(), "row {row}");
                 assert_eq!(s1, s2, "stats diverged at row {row}");
             }
+        });
+    }
+
+    #[test]
+    fn quantize_data_into_matches_quantize_data() {
+        property("quantize_data_into == per-element to_fixed", 32, |rng| {
+            let n = rng.index(50);
+            let scale = rng.range(0.05, 3.0) as f32;
+            let lim = 2.0 * scale as f64;
+            let d: Vec<f32> = (0..n).map(|_| rng.range(-lim, lim) as f32).collect();
+            let want: Vec<i32> = d.iter().map(|&x| to_fixed(x, scale)).collect();
+            assert_eq!(quantize_data(&d, scale), want);
+            // The into-variant reuses (and fully overwrites) its buffer.
+            let mut buf = vec![99i32; 3];
+            quantize_data_into(&d, scale, &mut buf);
+            assert_eq!(buf, want);
         });
     }
 

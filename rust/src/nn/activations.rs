@@ -93,9 +93,22 @@ impl SigmoidLut {
             return self.table[256];
         }
         let pos = (x - Self::LO) / (Self::HI - Self::LO) * 256.0;
-        let i = pos as usize;
+        // Clamp the cell index: for x just below HI (e.g. the largest
+        // f32 < 8.0), `x - LO` rounds up to the full span and `pos`
+        // lands exactly on 256.0 — the unclamped index would read one
+        // past the table. With i = 255 the lerp degenerates to
+        // `table[256]`, continuous with the saturated branch. The SIMD
+        // LUT (`nn::kernels::simd`) clamps identically, which keeps the
+        // two paths bit-equal.
+        let i = (pos as usize).min(255);
         let frac = pos - i as f32;
         self.table[i] * (1.0 - frac) + self.table[i + 1] * frac
+    }
+
+    /// The raw 257-entry table (index 256 closes the last lerp cell) —
+    /// read by the SIMD gather LUT in [`crate::nn::kernels::simd`].
+    pub fn table(&self) -> &[f32; 257] {
+        &self.table
     }
 }
 
@@ -162,6 +175,22 @@ mod tests {
             max_err = max_err.max((lut.eval(x) - sigmoid(x)).abs());
         }
         assert!(max_err < 1e-3, "LUT max error {max_err}");
+    }
+
+    #[test]
+    fn lut_eval_just_below_hi_does_not_overrun() {
+        // Largest f32 < 8.0: (x - LO) rounds up to the full 16.0 span,
+        // so pos == 256.0 exactly — the pre-clamp code indexed past the
+        // table here. Must evaluate (to the saturated value, since the
+        // lerp cell collapses) rather than panic.
+        let lut = SigmoidLut::new();
+        let x = f32::from_bits(0x40FF_FFFF);
+        assert!(x < SigmoidLut::HI);
+        assert_eq!(lut.eval(x), lut.eval(SigmoidLut::HI));
+        // And the mirrored point just above LO stays in the first cell.
+        let y = f32::from_bits(0xC0FF_FFFF);
+        assert!(y > SigmoidLut::LO);
+        assert!((lut.eval(y) - sigmoid(y)).abs() < 1e-3);
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Cache-blocked, multithreaded f32 GEMM (EXPERIMENTS.md §Perf).
+//! Cache-blocked, SIMD-dispatched, pool-threaded f32 GEMM
+//! (EXPERIMENTS.md §Perf, §Perf gains).
 //!
 //! Structure follows the BLIS/GotoBLAS decomposition:
 //!
@@ -17,35 +18,57 @@
 //! operand transposition; `A·B`, `A·Bᵀ` and `Aᵀ·B` all funnel through
 //! the same inner loop and differ only in how packing walks the source.
 //!
-//! Parallelism: the output rows are split into contiguous bands, one
-//! `std::thread::scope` worker per band. Each band re-packs B itself —
-//! redundant work that buys zero synchronization (the right trade at
-//! the few-hundred-row shapes this crate serves). Small problems
-//! (< ~2 MFLOP) stay on the calling thread. Packing buffers are
-//! thread-local, so the single-thread path (every small/medium shape)
-//! re-uses warm scratch and allocates nothing per call; the parallel
-//! path pays a thread spawn + cold panel allocation per worker per
-//! call — acceptable against its O(m·n·k) work, and a pool would be
-//! the upgrade if profiles ever say otherwise.
+//! The micro-kernel itself is **runtime-dispatched**
+//! ([`crate::nn::kernels::simd`]): AVX2+FMA on x86_64 (6×16 f32 FMA
+//! tile), NEON on aarch64 (8×8), with the portable scalar 8×8 kernel as
+//! the universal fallback (`EDGEMLP_FORCE_SCALAR=1` pins it). Packing
+//! is shared — only the tile constants and the inner loop change per
+//! ISA.
+//!
+//! Parallelism: the output is split into contiguous bands — along `m`
+//! (each band re-packs B itself: redundant work that buys zero
+//! synchronization), or along `n` when the product is too short to
+//! split by rows (small serving batches: m=8 × wide layers; each column
+//! band then re-packs A). Bands run on a lazily-created **persistent
+//! worker pool** ([`super::pool`]): parked threads with per-band job
+//! handoff, so the serving path stops paying a thread spawn plus a
+//! cold-scratch allocation per call — worker-thread-local packing
+//! buffers stay warm across calls. Small problems (< ~1 MFLOP) stay on
+//! the calling thread, which also always computes band 0 itself.
+//!
+//! Determinism: blocking is a function of shape and dispatch path only,
+//! and each output element is accumulated by exactly one band in a
+//! fixed k-order (band boundaries only decide *which* thread computes
+//! an element, never the order of its additions), so results are
+//! bitwise reproducible across calls and thread counts. Across
+//! *dispatch paths* results differ within FMA tolerance — see
+//! docs/simd-dispatch.md.
 
+use crate::nn::kernels::pool::{self, Latch, LatchGuard};
+use crate::nn::kernels::simd::{self, DispatchPath, MicroOut};
 use crate::nn::tensor::Matrix;
 use std::cell::RefCell;
 
-/// Micro-kernel rows: C rows accumulated in registers at once.
+/// Scalar micro-kernel rows (the fallback tile; SIMD paths carry their
+/// own tile constants — see [`DispatchPath::gemm_mr`]).
 pub const MR: usize = 8;
-/// Micro-kernel columns: one SIMD-width worth of C columns.
+/// Scalar micro-kernel columns.
 pub const NR: usize = 8;
-/// Row-block: A panel is `MC×KC` (~64 KiB — L2-resident).
-const MC: usize = 64;
 /// Depth-block: panels span this much of the k dimension.
 const KC: usize = 256;
 /// Column-block: B panel is `KC×NC` (~512 KiB — outer-cache resident).
 const NC: usize = 512;
 
-/// Threads stop paying for themselves below this many FLOPs.
-const MIN_PARALLEL_FLOPS: f64 = 2.0e6;
+/// Threads stop paying for themselves below this many FLOPs. The
+/// pre-pool kernel drew this line at 2 MFLOP to amortize a per-call
+/// thread spawn; a parked-worker handoff costs microseconds, so the
+/// bar drops to where the batch-8 serving layer (m=8, k=784, n=128 =
+/// 1.6 MFLOP — the shape the column split exists for) clears it.
+const MIN_PARALLEL_FLOPS: f64 = 1.0e6;
 
 /// Per-thread packing scratch, reused across calls on the same thread.
+/// Pool workers are persistent, so their scratch stays warm across
+/// GEMM calls — the point of the pool.
 #[derive(Default)]
 struct Scratch {
     a_panel: Vec<f32>,
@@ -83,25 +106,51 @@ impl<'a> MatView<'a> {
     }
 }
 
-/// One band's worth of work: rows `row0..row0+rows` of `op(A)` against
-/// all of `op(B)` (`kdim×n`).
+/// One band of the output: a row range × column range rectangle.
+#[derive(Clone, Copy)]
+struct Band {
+    row0: usize,
+    rows: usize,
+    col0: usize,
+    cols: usize,
+}
+
+/// One band's worth of work: rows `row0..row0+rows` × columns
+/// `col0..col0+cols` of `op(A)·op(B)`, written into the full `ldc`-
+/// stride output.
 struct BandJob<'a> {
     a: MatView<'a>,
     b: MatView<'a>,
-    row0: usize,
-    rows: usize,
-    n: usize,
+    path: DispatchPath,
+    band: Band,
+    ldc: usize,
     kdim: usize,
 }
 
-/// `out = op(A) · op(B)` where `op` is transpose when the flag is set.
+/// `out = op(A) · op(B)` where `op` is transpose when the flag is set,
+/// on the active dispatch path with the configured thread cap.
 ///
 /// `out` must already have shape `m×n` (`m`/`n` being the dims of the
 /// *operated* matrices); its contents are overwritten. Deterministic:
-/// the same shape always uses the same blocking, so results are
-/// bitwise reproducible across calls and thread counts (each output
-/// element is accumulated by exactly one worker in a fixed k-order).
+/// bitwise reproducible across calls and thread counts (see module
+/// docs).
 pub fn gemm_into(out: &mut Matrix, a: &Matrix, ta: bool, b: &Matrix, tb: bool) {
+    gemm_into_with(simd::active_path(), configured_threads(), out, a, ta, b, tb);
+}
+
+/// [`gemm_into`] with an explicit dispatch path and thread cap —
+/// the entry point parity tests and the perf benches use to compare
+/// forced-scalar vs native and single-thread vs pool without touching
+/// the process-wide latches.
+pub fn gemm_into_with(
+    path: DispatchPath,
+    max_threads: usize,
+    out: &mut Matrix,
+    a: &Matrix,
+    ta: bool,
+    b: &Matrix,
+    tb: bool,
+) {
     let (m, kdim) = if ta { (a.cols, a.rows) } else { (a.rows, a.cols) };
     let (kb, n) = if tb { (b.cols, b.rows) } else { (b.rows, b.cols) };
     assert_eq!(kdim, kb, "gemm inner dims: {m}x{kdim} · {kb}x{n}");
@@ -118,26 +167,90 @@ pub fn gemm_into(out: &mut Matrix, a: &Matrix, ta: bool, b: &Matrix, tb: bool) {
     }
     let av = MatView::new(a, ta);
     let bv = MatView::new(b, tb);
-    let nt = num_threads(m, n, kdim);
-    if nt <= 1 {
-        let job = BandJob { a: av, b: bv, row0: 0, rows: m, n, kdim };
-        with_scratch(|s| gemm_band(&mut out.data, &job, s));
+    // One raw base pointer per operand, created once and shared by
+    // every band (re-deriving pointers mid-flight would invalidate the
+    // outstanding ones under the aliasing rules).
+    let c_ptr = out.data.as_mut_ptr();
+    // The single-band decision allocates nothing: sub-threshold serving
+    // shapes run thousands of times a second and must stay alloc-free.
+    let Some(bands) = band_plan(path, max_threads.max(1), m, n, kdim) else {
+        let whole = Band { row0: 0, rows: m, col0: 0, cols: n };
+        let job = BandJob { a: av, b: bv, path, band: whole, ldc: n, kdim };
+        // Safety: we hold `&mut out` for the whole call; the single
+        // band covers exactly the m×n buffer.
+        with_scratch(|s| unsafe { gemm_band(c_ptr, &job, s) });
         return;
-    }
-    let band = m.div_ceil(nt);
-    std::thread::scope(|scope| {
-        for (t, c_band) in out.data.chunks_mut(band * n).enumerate() {
-            let rows = c_band.len() / n;
-            let job = BandJob { a: av, b: bv, row0: t * band, rows, n, kdim };
-            scope.spawn(move || with_scratch(|s| gemm_band(c_band, &job, s)));
+    };
+
+    struct SendConst(*const f32);
+    unsafe impl Send for SendConst {}
+    struct SendMut(*mut f32);
+    unsafe impl Send for SendMut {}
+
+    // Size the pool for whichever is larger: the env-configured cap or
+    // this call's explicit request (the E9 bench sweeps past the env
+    // default). Latched by the first multi-band call — so if an earlier
+    // call latched it smaller than this request, re-plan against the
+    // real worker count rather than queueing surplus bands that would
+    // each redundantly re-pack their panels (and misreport a thread
+    // sweep). Any band plan yields bitwise-identical results, so this
+    // only changes scheduling.
+    let pool = pool::global(configured_threads().max(max_threads).saturating_sub(1));
+    let workers_cap = pool.workers() + 1;
+    let bands = if bands.len() > workers_cap {
+        match band_plan(path, workers_cap, m, n, kdim) {
+            Some(replanned) => replanned,
+            None => bands,
         }
-    });
+    } else {
+        bands
+    };
+    let latch = Latch::new(bands.len() - 1);
+    let (a_ptr, a_len, a_cols) = (a.data.as_ptr(), a.data.len(), av.cols);
+    let (b_ptr, b_len, b_cols) = (b.data.as_ptr(), b.data.len(), bv.cols);
+    for &band in &bands[1..] {
+        let latch = latch.clone();
+        let (ap, bp, cp) = (SendConst(a_ptr), SendConst(b_ptr), SendMut(c_ptr));
+        pool.submit(Box::new(move || {
+            let _guard = LatchGuard(latch);
+            // Safety: the dispatching call blocks on the latch before
+            // returning (even if a band panics), so the borrows behind
+            // these raw parts outlive the job; bands write disjoint
+            // rectangles of the output.
+            let av = MatView {
+                data: unsafe { std::slice::from_raw_parts(ap.0, a_len) },
+                cols: a_cols,
+                trans: ta,
+            };
+            let bv = MatView {
+                data: unsafe { std::slice::from_raw_parts(bp.0, b_len) },
+                cols: b_cols,
+                trans: tb,
+            };
+            let job = BandJob { a: av, b: bv, path, band, ldc: n, kdim };
+            with_scratch(|s| unsafe { gemm_band(cp.0, &job, s) });
+        }));
+    }
+    // The dispatching thread computes band 0 itself; a panic there must
+    // still wait out the workers before unwinding past the borrows.
+    let job0 = BandJob { a: av, b: bv, path, band: bands[0], ldc: n, kdim };
+    let inline = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        with_scratch(|s| unsafe { gemm_band(c_ptr, &job0, s) })
+    }));
+    let worker_panicked = latch.wait();
+    if let Err(payload) = inline {
+        std::panic::resume_unwind(payload);
+    }
+    if worker_panicked {
+        panic!("gemm pool worker panicked while computing a band");
+    }
 }
 
 /// Worker-thread cap: `EDGEMLP_GEMM_THREADS` env override, else
-/// available parallelism capped at 8 (row bands beyond that stop
-/// scaling at MLP-sized shapes).
-fn configured_threads() -> usize {
+/// available parallelism capped at 8 (bands beyond that stop scaling
+/// at MLP-sized shapes). Read once. Public so the benches can report
+/// the cap [`gemm_into`] actually runs under.
+pub fn configured_threads() -> usize {
     static OVERRIDE: once_cell::sync::Lazy<Option<usize>> = once_cell::sync::Lazy::new(|| {
         std::env::var("EDGEMLP_GEMM_THREADS").ok().and_then(|s| s.parse().ok())
     });
@@ -147,48 +260,77 @@ fn configured_threads() -> usize {
     std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1).min(8)
 }
 
-fn num_threads(m: usize, n: usize, kdim: usize) -> usize {
-    let cap = configured_threads();
+/// Split the `m×n` output into bands for `cap` threads: by rows when
+/// there are at least two `2·MR` strips of them, else by columns
+/// (wide-but-short products — small serving batches against wide
+/// layers — previously never parallelized). `None` means "run the
+/// whole product on the calling thread" (the cap is 1, or the problem
+/// is under the FLOP threshold, or it is too small to band at all) —
+/// returned without allocating, since that is the per-request hot
+/// path. A `Some` always holds ≥ 2 bands.
+fn band_plan(path: DispatchPath, cap: usize, m: usize, n: usize, kdim: usize) -> Option<Vec<Band>> {
     if cap <= 1 {
-        return 1;
+        return None;
     }
     let flops = 2.0 * m as f64 * n as f64 * kdim as f64;
     if flops < MIN_PARALLEL_FLOPS {
-        return 1;
+        return None;
     }
-    // Keep at least a couple of MR strips per band.
-    cap.min(m.div_ceil(2 * MR)).max(1)
+    let by_rows = cap.min(m.div_ceil(2 * path.gemm_mr()));
+    if by_rows > 1 {
+        let band = m.div_ceil(by_rows);
+        return Some(
+            (0..m)
+                .step_by(band)
+                .map(|row0| Band { row0, rows: band.min(m - row0), col0: 0, cols: n })
+                .collect(),
+        );
+    }
+    let by_cols = cap.min(n.div_ceil(2 * path.gemm_nr()));
+    if by_cols > 1 {
+        let band = n.div_ceil(by_cols);
+        return Some(
+            (0..n)
+                .step_by(band)
+                .map(|col0| Band { row0: 0, rows: m, col0, cols: band.min(n - col0) })
+                .collect(),
+        );
+    }
+    None
 }
 
-/// Serial blocked GEMM over one row band. `c` is the band's `rows×n`
-/// slice of the output (assumed zeroed), row `i` of `c` being row
-/// `job.row0 + i` of the full product.
-fn gemm_band(c: &mut [f32], job: &BandJob<'_>, scratch: &mut Scratch) {
-    let (n, kdim, m) = (job.n, job.kdim, job.rows);
-    for jc in (0..n).step_by(NC) {
-        let nc = NC.min(n - jc);
-        for pc in (0..kdim).step_by(KC) {
-            let kc = KC.min(kdim - pc);
-            pack_b(job.b, pc, jc, kc, nc, &mut scratch.b_panel);
-            for ic in (0..m).step_by(MC) {
-                let mc = MC.min(m - ic);
-                pack_a(job.a, job.row0 + ic, pc, mc, kc, &mut scratch.a_panel);
-                for jr in (0..nc).step_by(NR) {
-                    let nr = NR.min(nc - jr);
-                    let bp = &scratch.b_panel[(jr / NR) * NR * kc..][..NR * kc];
-                    for ir in (0..mc).step_by(MR) {
-                        let mr = MR.min(mc - ir);
-                        let ap = &scratch.a_panel[(ir / MR) * MR * kc..][..MR * kc];
-                        let mut acc = [[0.0f32; NR]; MR];
-                        micro_kernel(ap, bp, &mut acc);
-                        // Write back the valid mr×nr corner (padding
-                        // rows/cols accumulated zeros).
-                        for (i, acc_row) in acc.iter().enumerate().take(mr) {
-                            let base = (ic + ir + i) * n + jc + jr;
-                            for (cv, &av) in c[base..base + nr].iter_mut().zip(acc_row) {
-                                *cv += av;
-                            }
-                        }
+/// Serial blocked GEMM over one band of the output, written through the
+/// full-matrix base pointer `c` at row stride `job.ldc`.
+///
+/// # Safety
+/// `c` must be valid for writes over the band's rectangle at stride
+/// `job.ldc`, and no other thread may touch that rectangle
+/// concurrently (bands are disjoint by construction).
+unsafe fn gemm_band(c: *mut f32, job: &BandJob<'_>, scratch: &mut Scratch) {
+    let path = job.path;
+    let (mr, nr, mc) = (path.gemm_mr(), path.gemm_nr(), path.gemm_mc());
+    let Band { row0, rows, col0, cols } = job.band;
+    for jc in (0..cols).step_by(NC) {
+        let ncb = NC.min(cols - jc);
+        for pc in (0..job.kdim).step_by(KC) {
+            let kc = KC.min(job.kdim - pc);
+            pack_b(job.b, pc, col0 + jc, kc, ncb, nr, &mut scratch.b_panel);
+            for ic in (0..rows).step_by(mc) {
+                let mcb = mc.min(rows - ic);
+                pack_a(job.a, row0 + ic, pc, mcb, kc, mr, &mut scratch.a_panel);
+                for jr in (0..ncb).step_by(nr) {
+                    let nrc = nr.min(ncb - jr);
+                    let bp = &scratch.b_panel[(jr / nr) * nr * kc..][..nr * kc];
+                    for ir in (0..mcb).step_by(mr) {
+                        let mrc = mr.min(mcb - ir);
+                        let ap = &scratch.a_panel[(ir / mr) * mr * kc..][..mr * kc];
+                        let corner = c.add((row0 + ic + ir) * job.ldc + col0 + jc + jr);
+                        path.micro_kernel(
+                            ap,
+                            bp,
+                            kc,
+                            MicroOut { ptr: corner, ldc: job.ldc, mr: mrc, nr: nrc },
+                        );
                     }
                 }
             }
@@ -196,34 +338,27 @@ fn gemm_band(c: &mut [f32], job: &BandJob<'_>, scratch: &mut Scratch) {
     }
 }
 
-/// The register-tiled inner loop: `acc += Ap · Bp` over one depth
-/// block. `ap` is `kc` column-slices of `MR` A values; `bp` is `kc`
-/// row-slices of `NR` B values; both unit-stride by construction.
-#[inline(always)]
-fn micro_kernel(ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
-    for (ak, bk) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
-        for (i, acc_row) in acc.iter_mut().enumerate() {
-            let ai = ak[i];
-            for (av, &bv) in acc_row.iter_mut().zip(bk) {
-                *av += ai * bv;
-            }
-        }
-    }
-}
-
-/// Pack rows `r0..r0+mc`, depth `k0..k0+kc` of `op(A)` into `MR`-row
+/// Pack rows `r0..r0+mc`, depth `k0..k0+kc` of `op(A)` into `mr`-row
 /// strips, column-major within a strip (`buf[strip][k][i]`), zero-
 /// padding the final partial strip.
-fn pack_a(a: MatView<'_>, r0: usize, k0: usize, mc: usize, kc: usize, buf: &mut Vec<f32>) {
-    let strips = mc.div_ceil(MR);
+fn pack_a(
+    a: MatView<'_>,
+    r0: usize,
+    k0: usize,
+    mc: usize,
+    kc: usize,
+    mr: usize,
+    buf: &mut Vec<f32>,
+) {
+    let strips = mc.div_ceil(mr);
     buf.clear();
-    buf.resize(strips * MR * kc, 0.0);
+    buf.resize(strips * mr * kc, 0.0);
     for s in 0..strips {
-        let dst = &mut buf[s * MR * kc..(s + 1) * MR * kc];
-        let rbase = r0 + s * MR;
-        let rows = MR.min(mc - s * MR);
+        let dst = &mut buf[s * mr * kc..(s + 1) * mr * kc];
+        let rbase = r0 + s * mr;
+        let rows = mr.min(mc - s * mr);
         for k in 0..kc {
-            let col = &mut dst[k * MR..k * MR + rows];
+            let col = &mut dst[k * mr..k * mr + rows];
             for (i, slot) in col.iter_mut().enumerate() {
                 *slot = a.at(rbase + i, k0 + k);
             }
@@ -231,19 +366,27 @@ fn pack_a(a: MatView<'_>, r0: usize, k0: usize, mc: usize, kc: usize, buf: &mut 
     }
 }
 
-/// Pack depth `k0..k0+kc`, columns `j0..j0+nc` of `op(B)` into `NR`-
+/// Pack depth `k0..k0+kc`, columns `j0..j0+nc` of `op(B)` into `nr`-
 /// column strips, row-major within a strip (`buf[strip][k][j]`), zero-
 /// padding the final partial strip.
-fn pack_b(b: MatView<'_>, k0: usize, j0: usize, kc: usize, nc: usize, buf: &mut Vec<f32>) {
-    let strips = nc.div_ceil(NR);
+fn pack_b(
+    b: MatView<'_>,
+    k0: usize,
+    j0: usize,
+    kc: usize,
+    nc: usize,
+    nr: usize,
+    buf: &mut Vec<f32>,
+) {
+    let strips = nc.div_ceil(nr);
     buf.clear();
-    buf.resize(strips * NR * kc, 0.0);
+    buf.resize(strips * nr * kc, 0.0);
     for s in 0..strips {
-        let dst = &mut buf[s * NR * kc..(s + 1) * NR * kc];
-        let jbase = j0 + s * NR;
-        let cols = NR.min(nc - s * NR);
+        let dst = &mut buf[s * nr * kc..(s + 1) * nr * kc];
+        let jbase = j0 + s * nr;
+        let cols = nr.min(nc - s * nr);
         for k in 0..kc {
-            let row = &mut dst[k * NR..k * NR + cols];
+            let row = &mut dst[k * nr..k * nr + cols];
             for (j, slot) in row.iter_mut().enumerate() {
                 *slot = b.at(k0 + k, jbase + j);
             }
@@ -343,8 +486,8 @@ mod tests {
 
     #[test]
     fn multithreaded_band_split_matches_naive() {
-        // Big enough to clear MIN_PARALLEL_FLOPS → exercises the
-        // scoped-thread row-band path (when >1 core is available).
+        // Big enough to clear MIN_PARALLEL_FLOPS → exercises the pooled
+        // row-band path (when >1 core is available).
         let mut rng = Pcg32::new(3);
         check_all_ops(150, 300, 70, &mut rng);
     }
@@ -376,6 +519,99 @@ mod tests {
         gemm_into(&mut out1, &a, false, &b, false);
         gemm_into(&mut out2, &a, false, &b, false);
         assert_eq!(out1.data, out2.data);
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts_and_paths() {
+        // The pool must not cost reproducibility: for every dispatch
+        // path, any thread cap must give the bitwise-identical result —
+        // tall shapes (row bands), wide-short shapes (column bands),
+        // and sub-threshold shapes (no bands) alike.
+        let mut rng = Pcg32::new(7);
+        for &(m, k, n) in &[(150usize, 300usize, 70usize), (8, 700, 400), (9, 11, 13)] {
+            let a = Matrix::random_uniform(m, k, 1.0, &mut rng);
+            let b = Matrix::random_uniform(k, n, 1.0, &mut rng);
+            for path in simd::test_paths() {
+                let mut reference = Matrix::zeros(m, n);
+                gemm_into_with(path, 1, &mut reference, &a, false, &b, false);
+                for threads in [2usize, 3, 5, 8] {
+                    let mut out = Matrix::zeros(m, n);
+                    gemm_into_with(path, threads, &mut out, &a, false, &b, false);
+                    let bits_equal = out
+                        .data
+                        .iter()
+                        .zip(&reference.data)
+                        .all(|(x, y)| x.to_bits() == y.to_bits());
+                    assert!(
+                        bits_equal,
+                        "path {} threads {threads} shape {m}x{k}x{n} diverged",
+                        path.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_paths_match_scalar_within_fma_tolerance() {
+        // FMA fuses the multiply-add, so SIMD results differ from
+        // scalar in the last bits but must stay within accumulation
+        // tolerance for every op combination and ragged shape.
+        property("gemm SIMD == scalar (fma tol)", 16, |rng| {
+            let m = 1 + rng.index(40);
+            let k = 1 + rng.index(80);
+            let n = 1 + rng.index(40);
+            let a = Matrix::random_uniform(m, k, 1.0, rng);
+            let bt = Matrix::random_uniform(n, k, 1.0, rng);
+            let mut want = Matrix::zeros(m, n);
+            gemm_into_with(DispatchPath::Scalar, 1, &mut want, &a, false, &bt, true);
+            for path in simd::test_paths() {
+                let mut got = Matrix::zeros(m, n);
+                gemm_into_with(path, 1, &mut got, &a, false, &bt, true);
+                assert_allclose(&got.data, &want.data, 1e-4, 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn wide_short_products_split_into_column_bands() {
+        // m = 8 is under 2·MR for every path, so the plan must fall
+        // through to column bands once the FLOP threshold is met — and
+        // the banded result must equal the single-thread one bitwise.
+        for path in simd::test_paths() {
+            let plan = band_plan(path, 4, 8, 400, 700)
+                .unwrap_or_else(|| panic!("path {}: expected column bands", path.name()));
+            assert!(plan.len() > 1);
+            assert!(plan.iter().all(|b| b.rows == 8 && b.row0 == 0));
+            let total: usize = plan.iter().map(|b| b.cols).sum();
+            assert_eq!(total, 400);
+            for w in plan.windows(2) {
+                assert_eq!(w[0].col0 + w[0].cols, w[1].col0, "bands must tile n");
+            }
+        }
+        // The motivating serving shape (batch 8 × the 784→128 layer,
+        // 1.6 MFLOP) must clear the post-pool threshold and split.
+        let serving = band_plan(DispatchPath::Scalar, 4, 8, 128, 784)
+            .expect("batch-8 serving layer must column-split");
+        assert!(serving.len() > 1);
+        assert!(serving.iter().all(|b| b.rows == 8));
+        // Genuinely tiny products still stay whole.
+        assert!(band_plan(DispatchPath::Scalar, 4, 8, 10, 128).is_none());
+    }
+
+    #[test]
+    fn row_band_plan_tiles_m() {
+        for path in simd::test_paths() {
+            let plan = band_plan(path, 4, 150, 70, 300)
+                .unwrap_or_else(|| panic!("path {}: expected row bands", path.name()));
+            assert!(plan.len() > 1);
+            assert!(plan.iter().all(|b| b.cols == 70 && b.col0 == 0));
+            let total: usize = plan.iter().map(|b| b.rows).sum();
+            assert_eq!(total, 150);
+            for w in plan.windows(2) {
+                assert_eq!(w[0].row0 + w[0].rows, w[1].row0, "bands must tile m");
+            }
+        }
     }
 
     #[test]

@@ -1,25 +1,35 @@
-//! Software hot-path kernels (EXPERIMENTS.md §Perf).
+//! Software hot-path kernels (EXPERIMENTS.md §Perf, §Perf gains).
 //!
 //! The paper's whole premise is that matrix multiplication dominates
 //! MLP inference time, so the *software* baselines the experiments
 //! measure against (the "CPU" row of Table I, the coordinator's
 //! serving throughput) must be real kernels rather than naive loops:
 //!
-//! * [`gemm`] — a cache-blocked f32 GEMM in the BLIS style: an `MR×NR`
-//!   register-tiled micro-kernel over packed operand panels, row-band
-//!   parallelism via `std::thread::scope`, and a single-thread fallback
-//!   for small shapes. It backs every `Matrix::matmul*` entry point
-//!   through reusable thread-local packing scratch.
+//! * [`gemm`] — a cache-blocked f32 GEMM in the BLIS style: a
+//!   runtime-dispatched `MR×NR` register-tiled micro-kernel (AVX2+FMA /
+//!   NEON / scalar — see [`simd`]) over packed operand panels, with
+//!   row- or column-band parallelism on a persistent worker pool
+//!   ([`pool`]). It backs every `Matrix::matmul*` entry point through
+//!   reusable thread-local packing scratch.
 //! * [`spx_batch`] — a batched, weight-stationary SPx shift-add kernel
 //!   over the element-major [`crate::quant::spx::PackedCodes`] stream:
-//!   one pass over a weight row's codes serves the whole batch, where
-//!   the per-sample path re-reads the codes for every sample. Bit-
-//!   identical to [`crate::fpga::pu::dot_shift_add`] per sample (the
-//!   accumulator is exact integer arithmetic, so summation order does
-//!   not matter), which a property test pins down.
+//!   one pass over a weight row's codes serves the whole batch, with
+//!   the fast-row MAC vectorized as an exact widening `i32×i32→i64`
+//!   multiply-accumulate. Bit-identical to
+//!   [`crate::fpga::pu::dot_shift_add`] per sample on every dispatch
+//!   path (integer arithmetic — summation order cannot matter), which
+//!   property tests pin down.
+//! * [`simd`] — the dispatch layer itself: runtime ISA detection,
+//!   `EDGEMLP_FORCE_SCALAR=1` override, and the per-ISA kernels for
+//!   the GEMM micro-tile, the SPx MAC, Q1.15 quantization, the batch
+//!   transpose and the bias+activation output stage
+//!   (docs/simd-dispatch.md).
 
 pub mod gemm;
+pub mod pool;
+pub mod simd;
 pub mod spx_batch;
 
-pub use gemm::gemm_into;
+pub use gemm::{gemm_into, gemm_into_with};
+pub use simd::{active_path, force_scalar, native_path, DispatchPath};
 pub use spx_batch::{spx_matmul_batch, transpose_to_columns};

@@ -1,0 +1,178 @@
+//! Persistent GEMM worker pool (EXPERIMENTS.md §Perf gains).
+//!
+//! The pre-pool kernel paid a `std::thread::scope` spawn plus a cold
+//! packing-scratch allocation per worker *per call* — fine for training
+//! batches, measurable on the serving path where the same shapes run
+//! thousands of times a second. This pool spawns its workers once
+//! (lazily, on the first multi-band GEMM), parks them in a blocking
+//! `recv`, and hands each one band-sized jobs; worker-thread-local
+//! packing scratch therefore stays warm across calls.
+//!
+//! Shape of a dispatch (`gemm::gemm_into`): the caller keeps band 0 for
+//! itself, submits bands `1..nt` here, then blocks on a [`Latch`] until
+//! every submitted band counted down. Band closures erase their borrow
+//! lifetimes (raw parts), which is sound *because* the caller always
+//! waits — including when a band panics: [`LatchGuard`] counts down
+//! during unwinding, the worker survives via `catch_unwind`, and the
+//! caller re-raises the failure after the barrier.
+
+use once_cell::sync::OnceCell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+
+pub(crate) type Task = Box<dyn FnOnce() + Send + 'static>;
+
+pub(crate) struct Pool {
+    /// One channel per worker: per-band handoff with no shared queue
+    /// contention. `Mutex` rather than relying on `Sender: Sync`
+    /// (stabilized later than this crate's MSRV posture).
+    senders: Vec<Mutex<Sender<Task>>>,
+    cursor: AtomicUsize,
+}
+
+static POOL: OnceCell<Pool> = OnceCell::new();
+
+/// The process-wide pool, created on first use with `workers` threads.
+/// The size is latched by the first caller — consistent with the
+/// `EDGEMLP_GEMM_THREADS` cap it is derived from, which is itself
+/// read once.
+pub(crate) fn global(workers: usize) -> &'static Pool {
+    POOL.get_or_init(|| Pool::new(workers.max(1)))
+}
+
+impl Pool {
+    fn new(workers: usize) -> Pool {
+        let mut senders = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (tx, rx) = channel::<Task>();
+            std::thread::Builder::new()
+                .name(format!("edgemlp-gemm-{w}"))
+                .spawn(move || {
+                    // Parked in `recv` between jobs. The loop only ends
+                    // when the sender side (a process-lifetime static)
+                    // is gone, i.e. at process teardown.
+                    while let Ok(task) = rx.recv() {
+                        // A panicking band must not take the worker
+                        // down with it: the job's LatchGuard has
+                        // already recorded the panic for the caller.
+                        let _ = catch_unwind(AssertUnwindSafe(task));
+                    }
+                })
+                .expect("spawn gemm pool worker");
+            senders.push(Mutex::new(tx));
+        }
+        Pool { senders, cursor: AtomicUsize::new(0) }
+    }
+
+    /// Worker-thread count (pool sizing is latched at creation; the
+    /// GEMM dispatcher re-plans band counts against it).
+    pub(crate) fn workers(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Hand one job to a worker (rotating assignment; jobs queue in the
+    /// worker's channel when it is busy, so more bands than workers is
+    /// fine — they drain in order).
+    pub(crate) fn submit(&self, task: Task) {
+        let i = self.cursor.fetch_add(1, Ordering::Relaxed) % self.senders.len();
+        self.senders[i]
+            .lock()
+            .expect("gemm pool sender poisoned")
+            .send(task)
+            .expect("gemm pool worker exited");
+    }
+}
+
+/// A countdown barrier: the dispatching thread waits until every
+/// submitted band has finished (successfully or by panic).
+pub(crate) struct Latch {
+    remaining: Mutex<usize>,
+    all_done: Condvar,
+    panicked: AtomicBool,
+}
+
+impl Latch {
+    pub(crate) fn new(jobs: usize) -> Arc<Latch> {
+        Arc::new(Latch {
+            remaining: Mutex::new(jobs),
+            all_done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        })
+    }
+
+    fn count_down(&self, job_panicked: bool) {
+        if job_panicked {
+            self.panicked.store(true, Ordering::SeqCst);
+        }
+        let mut left = self.remaining.lock().expect("gemm latch poisoned");
+        *left -= 1;
+        if *left == 0 {
+            self.all_done.notify_all();
+        }
+    }
+
+    /// Block until every job counted down. Returns true if any panicked.
+    pub(crate) fn wait(&self) -> bool {
+        let mut left = self.remaining.lock().expect("gemm latch poisoned");
+        while *left > 0 {
+            left = self.all_done.wait(left).expect("gemm latch poisoned");
+        }
+        self.panicked.load(Ordering::SeqCst)
+    }
+}
+
+/// Counts its latch down on drop — on normal completion *and* during
+/// unwinding, so a panicking band can never leave the caller blocked.
+pub(crate) struct LatchGuard(pub(crate) Arc<Latch>);
+
+impl Drop for LatchGuard {
+    fn drop(&mut self) {
+        self.0.count_down(std::thread::panicking());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn pool_runs_jobs_and_latch_releases() {
+        let pool = global(4);
+        assert!(pool.workers() >= 1);
+        static HITS: AtomicU32 = AtomicU32::new(0);
+        let latch = Latch::new(16);
+        for _ in 0..16 {
+            let l = latch.clone();
+            pool.submit(Box::new(move || {
+                let _g = LatchGuard(l);
+                HITS.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        assert!(!latch.wait(), "no job panicked");
+        assert_eq!(HITS.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn panicking_job_is_reported_and_worker_survives() {
+        let pool = global(4);
+        let latch = Latch::new(1);
+        let l = latch.clone();
+        pool.submit(Box::new(move || {
+            let _g = LatchGuard(l);
+            panic!("boom");
+        }));
+        assert!(latch.wait(), "panic must be recorded");
+        // The worker that ran the panicking job must still accept work.
+        let latch2 = Latch::new(pool.workers() * 2);
+        for _ in 0..pool.workers() * 2 {
+            let l = latch2.clone();
+            pool.submit(Box::new(move || {
+                let _g = LatchGuard(l);
+            }));
+        }
+        assert!(!latch2.wait());
+    }
+}

@@ -1,0 +1,346 @@
+//! AVX2 + FMA kernels (x86_64). Every function carries
+//! `#[target_feature(enable = "avx2,fma")]` and must only be called
+//! after runtime detection — [`super::DispatchPath::Avx2Fma`] can only
+//! be constructed on a host that passed `is_x86_feature_detected!`.
+//!
+//! Exactness notes:
+//! * `mac_i32` uses `vpmuldq` (signed 32×32→64 multiply) — exact
+//!   integer arithmetic, bit-identical to the scalar loop in any order;
+//! * `quantize_into` rounds with the default nearest-even conversion
+//!   then *fixes ties back to round-half-away-from-zero*, matching
+//!   `f32::round` (and therefore `to_fixed`) bit-for-bit;
+//! * `transpose_to_columns` is pure data movement;
+//! * the f32 GEMM micro-kernel fuses multiply-adds, so it matches the
+//!   scalar kernel only to FMA tolerance (docs/simd-dispatch.md).
+
+use super::MicroOut;
+use crate::nn::activations::{sigmoid_lut, Activation, SigmoidLut};
+use core::arch::x86_64::*;
+
+/// Full AVX2 tile: 6 rows × 16 columns (two `ymm` of C per row — 12
+/// accumulator registers + 2 B streams + 1 broadcast stays inside the
+/// 16-register file).
+pub(crate) const MR: usize = 6;
+pub(crate) const NR: usize = 16;
+
+/// 6×16 f32 FMA micro-kernel: `out += Ap · Bp` over one depth block.
+///
+/// # Safety
+/// Requires AVX2+FMA. `out.ptr` must be valid for writes of the clipped
+/// `out.mr × out.nr` corner at row stride `out.ldc` and unaliased by
+/// other threads; `ap`/`bp` must hold at least `6*kc` / `16*kc` values.
+#[target_feature(enable = "avx2,fma")]
+pub(crate) unsafe fn micro_6x16(ap: &[f32], bp: &[f32], kc: usize, out: MicroOut) {
+    debug_assert!(ap.len() >= MR * kc && bp.len() >= NR * kc);
+    debug_assert!(out.mr <= MR && out.nr <= NR);
+    let mut acc = [[_mm256_setzero_ps(); 2]; MR];
+    let mut a = ap.as_ptr();
+    let mut b = bp.as_ptr();
+    for _ in 0..kc {
+        let b0 = _mm256_loadu_ps(b);
+        let b1 = _mm256_loadu_ps(b.add(8));
+        for (i, acc_row) in acc.iter_mut().enumerate() {
+            let ai = _mm256_set1_ps(*a.add(i));
+            acc_row[0] = _mm256_fmadd_ps(ai, b0, acc_row[0]);
+            acc_row[1] = _mm256_fmadd_ps(ai, b1, acc_row[1]);
+        }
+        a = a.add(MR);
+        b = b.add(NR);
+    }
+    if out.mr == MR && out.nr == NR {
+        // Full tile: vector read-modify-write straight into C.
+        for (i, acc_row) in acc.iter().enumerate() {
+            let c = out.ptr.add(i * out.ldc);
+            _mm256_storeu_ps(c, _mm256_add_ps(_mm256_loadu_ps(c), acc_row[0]));
+            let c8 = c.add(8);
+            _mm256_storeu_ps(c8, _mm256_add_ps(_mm256_loadu_ps(c8), acc_row[1]));
+        }
+    } else {
+        // Edge tile: spill the accumulators and add the valid corner.
+        // Per-element arithmetic is identical to the full-tile path
+        // (one f32 add of the same lane value), so tiling stays
+        // deterministic across band splits.
+        let mut buf = [[0.0f32; NR]; MR];
+        for (acc_row, buf_row) in acc.iter().zip(buf.iter_mut()) {
+            _mm256_storeu_ps(buf_row.as_mut_ptr(), acc_row[0]);
+            _mm256_storeu_ps(buf_row.as_mut_ptr().add(8), acc_row[1]);
+        }
+        for (i, buf_row) in buf.iter().enumerate().take(out.mr) {
+            let c = out.ptr.add(i * out.ldc);
+            for (j, &v) in buf_row.iter().enumerate().take(out.nr) {
+                *c.add(j) += v;
+            }
+        }
+    }
+}
+
+/// `acc[i] += col[i] as i64 * v`, 4 lanes at a time. Exact: `vpmuldq`
+/// multiplies the sign-extended low dwords into full 64-bit products.
+///
+/// # Safety
+/// Requires AVX2. `acc` and `col` must be equal length; `v` must fit
+/// in `i32`.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn mac_i32(acc: &mut [i64], col: &[i32], v: i64) {
+    debug_assert_eq!(acc.len(), col.len());
+    let n = acc.len();
+    let vb = _mm256_set1_epi64x(v);
+    let mut i = 0;
+    while i + 4 <= n {
+        let df = _mm256_cvtepi32_epi64(_mm_loadu_si128(col.as_ptr().add(i) as *const __m128i));
+        let prod = _mm256_mul_epi32(df, vb);
+        let a = _mm256_loadu_si256(acc.as_ptr().add(i) as *const __m256i);
+        _mm256_storeu_si256(
+            acc.as_mut_ptr().add(i) as *mut __m256i,
+            _mm256_add_epi64(a, prod),
+        );
+        i += 4;
+    }
+    while i < n {
+        acc[i] += col[i] as i64 * v;
+        i += 1;
+    }
+}
+
+/// Vectorized [`crate::fpga::pu::to_fixed`] over a slice: divide,
+/// scale to Q1.15, clamp, round-half-away-from-zero, 8 lanes at a time.
+///
+/// The conversion instruction rounds ties to even; ties are then fixed
+/// to away-from-zero (`diff == ±0.5` exactly iff the scaled value sat
+/// halfway, because the subtraction of an f32 and its nearest integer
+/// is exact), matching `f32::round` bit-for-bit. Clamping *before* the
+/// round is equivalent to the scalar round-then-clamp for every finite
+/// input and keeps the conversion in-range.
+///
+/// # Safety
+/// Requires AVX2. `out.len()` must equal `d.len()`.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn quantize_into(d: &[f32], d_scale: f32, out: &mut [i32]) {
+    debug_assert_eq!(d.len(), out.len());
+    if !(d_scale > 0.0) {
+        // to_fixed maps everything to 0 when the scale is degenerate.
+        out.fill(0);
+        return;
+    }
+    let scale = _mm256_set1_ps(d_scale);
+    let amp = _mm256_set1_ps(32768.0);
+    let lo = _mm256_set1_ps(-32768.0);
+    let hi = _mm256_set1_ps(32767.0);
+    let half = _mm256_set1_ps(0.5);
+    let neg_half = _mm256_set1_ps(-0.5);
+    let zero = _mm256_setzero_ps();
+    let n = d.len();
+    let mut i = 0;
+    while i + 8 <= n {
+        let x = _mm256_loadu_ps(d.as_ptr().add(i));
+        let y = _mm256_mul_ps(_mm256_div_ps(x, scale), amp);
+        let yc = _mm256_min_ps(_mm256_max_ps(y, lo), hi);
+        let r = _mm256_cvtps_epi32(yc); // nearest-even (default MXCSR)
+        let diff = _mm256_sub_ps(yc, _mm256_cvtepi32_ps(r));
+        let tie_up = _mm256_and_ps(
+            _mm256_cmp_ps::<_CMP_EQ_OQ>(diff, half),
+            _mm256_cmp_ps::<_CMP_GT_OQ>(yc, zero),
+        );
+        let tie_dn = _mm256_and_ps(
+            _mm256_cmp_ps::<_CMP_EQ_OQ>(diff, neg_half),
+            _mm256_cmp_ps::<_CMP_LT_OQ>(yc, zero),
+        );
+        // Masks are all-ones (-1): subtracting adds 1, adding subtracts 1.
+        let r = _mm256_sub_epi32(r, _mm256_castps_si256(tie_up));
+        let r = _mm256_add_epi32(r, _mm256_castps_si256(tie_dn));
+        // NaN lanes: `max_ps` clamped them to `lo`, but the scalar cast
+        // (`NaN as i32`) yields 0 — force the same here so every path
+        // stays bit-identical even on hostile inputs.
+        let nan = _mm256_cmp_ps::<_CMP_UNORD_Q>(y, y);
+        let r = _mm256_andnot_si256(_mm256_castps_si256(nan), r);
+        _mm256_storeu_si256(out.as_mut_ptr().add(i) as *mut __m256i, r);
+        i += 8;
+    }
+    while i < n {
+        out[i] = crate::fpga::pu::to_fixed(d[i], d_scale);
+        i += 1;
+    }
+}
+
+/// 8×8-blocked i32 transpose: `out[j*batch + b] = d[b*n + j]`.
+///
+/// # Safety
+/// Requires AVX2. `d.len()` and `out.len()` must equal `batch * n`.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn transpose_to_columns(d: &[i32], batch: usize, n: usize, out: &mut [i32]) {
+    debug_assert_eq!(d.len(), batch * n);
+    debug_assert_eq!(out.len(), batch * n);
+    let bblocks = batch - batch % 8;
+    let jblocks = n - n % 8;
+    for b0 in (0..bblocks).step_by(8) {
+        for j0 in (0..jblocks).step_by(8) {
+            let src = d.as_ptr().add(b0 * n + j0);
+            let r0 = _mm256_loadu_si256(src as *const __m256i);
+            let r1 = _mm256_loadu_si256(src.add(n) as *const __m256i);
+            let r2 = _mm256_loadu_si256(src.add(2 * n) as *const __m256i);
+            let r3 = _mm256_loadu_si256(src.add(3 * n) as *const __m256i);
+            let r4 = _mm256_loadu_si256(src.add(4 * n) as *const __m256i);
+            let r5 = _mm256_loadu_si256(src.add(5 * n) as *const __m256i);
+            let r6 = _mm256_loadu_si256(src.add(6 * n) as *const __m256i);
+            let r7 = _mm256_loadu_si256(src.add(7 * n) as *const __m256i);
+            // 32-bit interleave within 128-bit lanes…
+            let t0 = _mm256_unpacklo_epi32(r0, r1);
+            let t1 = _mm256_unpackhi_epi32(r0, r1);
+            let t2 = _mm256_unpacklo_epi32(r2, r3);
+            let t3 = _mm256_unpackhi_epi32(r2, r3);
+            let t4 = _mm256_unpacklo_epi32(r4, r5);
+            let t5 = _mm256_unpackhi_epi32(r4, r5);
+            let t6 = _mm256_unpacklo_epi32(r6, r7);
+            let t7 = _mm256_unpackhi_epi32(r6, r7);
+            // …then 64-bit interleave…
+            let u0 = _mm256_unpacklo_epi64(t0, t2);
+            let u1 = _mm256_unpackhi_epi64(t0, t2);
+            let u2 = _mm256_unpacklo_epi64(t1, t3);
+            let u3 = _mm256_unpackhi_epi64(t1, t3);
+            let u4 = _mm256_unpacklo_epi64(t4, t6);
+            let u5 = _mm256_unpackhi_epi64(t4, t6);
+            let u6 = _mm256_unpacklo_epi64(t5, t7);
+            let u7 = _mm256_unpackhi_epi64(t5, t7);
+            // …then stitch the 128-bit halves into whole columns.
+            let c0 = _mm256_permute2x128_si256::<0x20>(u0, u4);
+            let c1 = _mm256_permute2x128_si256::<0x20>(u1, u5);
+            let c2 = _mm256_permute2x128_si256::<0x20>(u2, u6);
+            let c3 = _mm256_permute2x128_si256::<0x20>(u3, u7);
+            let c4 = _mm256_permute2x128_si256::<0x31>(u0, u4);
+            let c5 = _mm256_permute2x128_si256::<0x31>(u1, u5);
+            let c6 = _mm256_permute2x128_si256::<0x31>(u2, u6);
+            let c7 = _mm256_permute2x128_si256::<0x31>(u3, u7);
+            let dst = out.as_mut_ptr().add(j0 * batch + b0);
+            _mm256_storeu_si256(dst as *mut __m256i, c0);
+            _mm256_storeu_si256(dst.add(batch) as *mut __m256i, c1);
+            _mm256_storeu_si256(dst.add(2 * batch) as *mut __m256i, c2);
+            _mm256_storeu_si256(dst.add(3 * batch) as *mut __m256i, c3);
+            _mm256_storeu_si256(dst.add(4 * batch) as *mut __m256i, c4);
+            _mm256_storeu_si256(dst.add(5 * batch) as *mut __m256i, c5);
+            _mm256_storeu_si256(dst.add(6 * batch) as *mut __m256i, c6);
+            _mm256_storeu_si256(dst.add(7 * batch) as *mut __m256i, c7);
+        }
+        // Column tail for these 8 samples.
+        for j in jblocks..n {
+            for bi in 0..8 {
+                out[j * batch + b0 + bi] = d[(b0 + bi) * n + j];
+            }
+        }
+    }
+    // Sample tail, all columns.
+    for b in bblocks..batch {
+        for j in 0..n {
+            out[j * batch + b] = d[b * n + j];
+        }
+    }
+}
+
+/// Bias + activation over `bias.len()`-wide rows, bit-identical to the
+/// scalar loop (the sigmoid LUT lerp reproduces the scalar expression
+/// tree: separate multiplies and adds, no FMA contraction).
+///
+/// # Safety
+/// Requires AVX2. `data.len()` must be a multiple of `bias.len()`,
+/// which must be non-zero.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn bias_activation(data: &mut [f32], bias: &[f32], act: Activation) {
+    for row in data.chunks_exact_mut(bias.len()) {
+        match act {
+            Activation::Sigmoid => bias_sigmoid_row(row, bias),
+            Activation::Relu => bias_relu_row(row, bias),
+            Activation::Identity => bias_identity_row(row, bias),
+        }
+    }
+}
+
+/// # Safety
+/// Requires AVX2; `row.len() == bias.len()`.
+#[target_feature(enable = "avx2")]
+unsafe fn bias_identity_row(row: &mut [f32], bias: &[f32]) {
+    let n = row.len();
+    let mut i = 0;
+    while i + 8 <= n {
+        let x = _mm256_add_ps(
+            _mm256_loadu_ps(row.as_ptr().add(i)),
+            _mm256_loadu_ps(bias.as_ptr().add(i)),
+        );
+        _mm256_storeu_ps(row.as_mut_ptr().add(i), x);
+        i += 8;
+    }
+    while i < n {
+        row[i] += bias[i];
+        i += 1;
+    }
+}
+
+/// # Safety
+/// Requires AVX2; `row.len() == bias.len()`.
+#[target_feature(enable = "avx2")]
+unsafe fn bias_relu_row(row: &mut [f32], bias: &[f32]) {
+    let zero = _mm256_setzero_ps();
+    let n = row.len();
+    let mut i = 0;
+    while i + 8 <= n {
+        let x = _mm256_add_ps(
+            _mm256_loadu_ps(row.as_ptr().add(i)),
+            _mm256_loadu_ps(bias.as_ptr().add(i)),
+        );
+        // max(x, 0) with x first: a NaN sum yields 0, like f32::max.
+        _mm256_storeu_ps(row.as_mut_ptr().add(i), _mm256_max_ps(x, zero));
+        i += 8;
+    }
+    while i < n {
+        row[i] = (row[i] + bias[i]).max(0.0);
+        i += 1;
+    }
+}
+
+/// Gather-based 256-entry sigmoid LUT, replicating
+/// [`SigmoidLut::eval`]'s exact expression tree lane-wise (same
+/// subtract/divide/multiply sequence, truncating index, same lerp; the
+/// `x <= LO` / `x >= HI` saturation branches become blends).
+///
+/// # Safety
+/// Requires AVX2; `row.len() == bias.len()`.
+#[target_feature(enable = "avx2")]
+unsafe fn bias_sigmoid_row(row: &mut [f32], bias: &[f32]) {
+    let lut = sigmoid_lut();
+    let table = lut.table().as_ptr();
+    let lo = _mm256_set1_ps(SigmoidLut::LO);
+    let hi = _mm256_set1_ps(SigmoidLut::HI);
+    let span = _mm256_set1_ps(SigmoidLut::HI - SigmoidLut::LO);
+    let entries = _mm256_set1_ps(256.0);
+    let one = _mm256_set1_ps(1.0);
+    let t_lo = _mm256_set1_ps(*table);
+    let t_hi = _mm256_set1_ps(*table.add(256));
+    let idx_max = _mm256_set1_epi32(255);
+    let idx_min = _mm256_setzero_si256();
+    let n = row.len();
+    let mut i = 0;
+    while i + 8 <= n {
+        let x = _mm256_add_ps(
+            _mm256_loadu_ps(row.as_ptr().add(i)),
+            _mm256_loadu_ps(bias.as_ptr().add(i)),
+        );
+        let pos = _mm256_mul_ps(_mm256_div_ps(_mm256_sub_ps(x, lo), span), entries);
+        // Truncate like `pos as usize`; clamp only to keep the gather
+        // in-bounds for saturated lanes (their lerp is blended away).
+        let idx = _mm256_min_epi32(_mm256_max_epi32(_mm256_cvttps_epi32(pos), idx_min), idx_max);
+        let frac = _mm256_sub_ps(pos, _mm256_cvtepi32_ps(idx));
+        let t0 = _mm256_i32gather_ps::<4>(table, idx);
+        let t1 = _mm256_i32gather_ps::<4>(table.add(1), idx);
+        let lerp = _mm256_add_ps(
+            _mm256_mul_ps(t0, _mm256_sub_ps(one, frac)),
+            _mm256_mul_ps(t1, frac),
+        );
+        let sat_lo = _mm256_cmp_ps::<_CMP_LE_OQ>(x, lo);
+        let sat_hi = _mm256_cmp_ps::<_CMP_GE_OQ>(x, hi);
+        let res = _mm256_blendv_ps(_mm256_blendv_ps(lerp, t_lo, sat_lo), t_hi, sat_hi);
+        _mm256_storeu_ps(row.as_mut_ptr().add(i), res);
+        i += 8;
+    }
+    while i < n {
+        row[i] = lut.eval(row[i] + bias[i]);
+        i += 1;
+    }
+}

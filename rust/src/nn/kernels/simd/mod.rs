@@ -1,0 +1,446 @@
+//! Runtime-dispatched SIMD back-ends for the hot-loop kernels
+//! (EXPERIMENTS.md §Perf gains, docs/simd-dispatch.md).
+//!
+//! RedMulE and FantastIC4 get their efficiency from wide, register-
+//! resident MAC datapaths; the CPU analogue is SIMD. Three hot loops
+//! dispatch through [`DispatchPath`]:
+//!
+//! * the GEMM micro-kernel ([`super::gemm`]) — per-ISA `MR×NR` f32 FMA
+//!   register tiles over the same packed panels (packing already
+//!   produces unit-stride streams, so only the micro-kernel and the
+//!   tile constants change per ISA);
+//! * the batched SPx fast-row MAC ([`super::spx_batch`]) — a widening
+//!   `i32 × i32 → i64` multiply-accumulate. Integer arithmetic is
+//!   associative, so the vector form is **bit-identical** to the scalar
+//!   shift-add datapath (pinned by property tests);
+//! * the batch staging around it — Q1.15 quantization
+//!   ([`crate::fpga::pu::quantize_data_into`]), the batch transpose,
+//!   and the bias + activation output stage.
+//!
+//! Detection happens once per process (`std::arch` feature detection on
+//! x86_64; NEON is architecturally guaranteed on aarch64) and is
+//! overridable with `EDGEMLP_FORCE_SCALAR=1`, which pins every kernel
+//! to the portable scalar fallback. Tests and benches bypass the latch
+//! with explicit-path entry points (`gemm_into_with`, the `*_path`
+//! kernel internals) so both paths run in one process.
+//!
+//! Exactness contract: integer kernels (SPx MAC, quantization,
+//! transpose) are bit-identical across paths; the f32 GEMM micro-kernel
+//! may fuse multiply-adds, so its results match scalar only to FMA
+//! tolerance (see docs/simd-dispatch.md for why that split is safe).
+
+pub mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+
+use crate::nn::activations::Activation;
+use once_cell::sync::Lazy;
+
+/// One SIMD back-end. Variants exist only on architectures that can
+/// execute them, so holding a non-`Scalar` path is proof the ISA is
+/// compiled in (construction additionally proves it was detected).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchPath {
+    /// Portable fallback — the reference semantics for every kernel.
+    Scalar,
+    /// AVX2 + FMA: 8-lane f32 FMA, 4-lane widening i32 MAC.
+    #[cfg(target_arch = "x86_64")]
+    Avx2Fma,
+    /// NEON: 4-lane f32 FMA, 2-lane widening i32 MAC.
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+/// `EDGEMLP_FORCE_SCALAR` (any value except `0`/empty) pins
+/// [`active_path`] to [`DispatchPath::Scalar`]. Latched on first read.
+pub fn force_scalar() -> bool {
+    static FORCE: Lazy<bool> = Lazy::new(|| {
+        std::env::var("EDGEMLP_FORCE_SCALAR")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false)
+    });
+    *FORCE
+}
+
+/// Best path the host CPU supports, ignoring `EDGEMLP_FORCE_SCALAR`.
+/// Used by tests/benches to exercise the native kernels explicitly.
+pub fn native_path() -> DispatchPath {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return DispatchPath::Avx2Fma;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return DispatchPath::Neon;
+        }
+    }
+    DispatchPath::Scalar
+}
+
+/// The process-wide dispatch decision: [`native_path`] unless
+/// `EDGEMLP_FORCE_SCALAR` says otherwise. Latched on first use.
+pub fn active_path() -> DispatchPath {
+    static ACTIVE: Lazy<DispatchPath> = Lazy::new(|| {
+        if force_scalar() {
+            DispatchPath::Scalar
+        } else {
+            native_path()
+        }
+    });
+    *ACTIVE
+}
+
+/// Destination of one micro-kernel call: the top-left corner of the
+/// (clipped) `mr×nr` output tile, written with row stride `ldc`.
+#[derive(Clone, Copy)]
+pub(crate) struct MicroOut {
+    pub ptr: *mut f32,
+    /// Row stride of the full output matrix.
+    pub ldc: usize,
+    /// Valid rows of this tile (`<=` the path's full `MR`).
+    pub mr: usize,
+    /// Valid columns of this tile (`<=` the path's full `NR`).
+    pub nr: usize,
+}
+
+impl DispatchPath {
+    /// Human-readable name (bench JSON, docs).
+    pub fn name(self) -> &'static str {
+        match self {
+            DispatchPath::Scalar => "scalar",
+            #[cfg(target_arch = "x86_64")]
+            DispatchPath::Avx2Fma => "avx2+fma",
+            #[cfg(target_arch = "aarch64")]
+            DispatchPath::Neon => "neon",
+        }
+    }
+
+    /// GEMM micro-kernel rows (register-tile height). Sourced from the
+    /// back-end modules' own constants — the unsafe kernels stride
+    /// their pointers by these, so a single definition per ISA keeps
+    /// packing and kernel in lock-step by construction.
+    pub fn gemm_mr(self) -> usize {
+        match self {
+            DispatchPath::Scalar => scalar::MR,
+            #[cfg(target_arch = "x86_64")]
+            DispatchPath::Avx2Fma => avx2::MR,
+            #[cfg(target_arch = "aarch64")]
+            DispatchPath::Neon => neon::MR,
+        }
+    }
+
+    /// GEMM micro-kernel columns (SIMD lanes of C per row); sourced
+    /// from the back-end modules like [`DispatchPath::gemm_mr`].
+    pub fn gemm_nr(self) -> usize {
+        match self {
+            DispatchPath::Scalar => scalar::NR,
+            #[cfg(target_arch = "x86_64")]
+            DispatchPath::Avx2Fma => avx2::NR,
+            #[cfg(target_arch = "aarch64")]
+            DispatchPath::Neon => neon::NR,
+        }
+    }
+
+    /// GEMM row-block: the smallest multiple of the path's `MR` that
+    /// is ≥ 64 rows, so packed A panels stay ~L2-resident and waste no
+    /// partial strips mid-matrix (64 for 8-row tiles, 66 for AVX2's 6).
+    pub fn gemm_mc(self) -> usize {
+        64usize.div_ceil(self.gemm_mr()) * self.gemm_mr()
+    }
+
+    /// The register-tiled GEMM inner loop over one depth block:
+    /// `out += Ap · Bp`. `ap` is `kc` column-slices of `MR` A values,
+    /// `bp` is `kc` row-slices of `NR` B values (both zero-padded to the
+    /// full tile); only the clipped `out.mr × out.nr` corner is written.
+    ///
+    /// # Safety
+    /// `out.ptr` must be valid for writes of the clipped tile at row
+    /// stride `out.ldc`, and must not alias memory any other thread is
+    /// touching. `ap`/`bp` must hold at least `MR*kc` / `NR*kc` values.
+    pub(crate) unsafe fn micro_kernel(self, ap: &[f32], bp: &[f32], kc: usize, out: MicroOut) {
+        match self {
+            DispatchPath::Scalar => scalar::micro_8x8(ap, bp, kc, out),
+            #[cfg(target_arch = "x86_64")]
+            DispatchPath::Avx2Fma => avx2::micro_6x16(ap, bp, kc, out),
+            #[cfg(target_arch = "aarch64")]
+            DispatchPath::Neon => neon::micro_8x8(ap, bp, kc, out),
+        }
+    }
+
+    /// `acc[i] += col[i] as i64 * v` — the SPx fast-row MAC. `v` is a
+    /// precomputed signed shift sum and must fit in `i32` (guaranteed:
+    /// `|v| <= x · 2^(G-1) < 2^17`). Exact integer arithmetic, so every
+    /// path produces bit-identical accumulators.
+    pub(crate) fn mac_i32(self, acc: &mut [i64], col: &[i32], v: i64) {
+        debug_assert_eq!(acc.len(), col.len());
+        debug_assert!(i32::try_from(v).is_ok(), "shift sum {v} exceeds i32");
+        match self {
+            DispatchPath::Scalar => scalar::mac_i32(acc, col, v),
+            #[cfg(target_arch = "x86_64")]
+            // Safety: the variant only exists after AVX2 detection.
+            DispatchPath::Avx2Fma => unsafe { avx2::mac_i32(acc, col, v) },
+            #[cfg(target_arch = "aarch64")]
+            // Safety: the variant only exists after NEON detection.
+            DispatchPath::Neon => unsafe { neon::mac_i32(acc, col, v) },
+        }
+    }
+
+    /// Q1.15 quantization of a whole vector: `out[i]` is bit-identical
+    /// to [`crate::fpga::pu::to_fixed`]`(d[i], d_scale)` on every path
+    /// (the x86 kernel fixes nearest-even ties back to the scalar
+    /// round-half-away semantics; NEON's `FCVTAS` is ties-away
+    /// natively). `out.len()` must equal `d.len()`.
+    pub(crate) fn quantize_into(self, d: &[f32], d_scale: f32, out: &mut [i32]) {
+        debug_assert_eq!(d.len(), out.len());
+        match self {
+            DispatchPath::Scalar => scalar::quantize_into(d, d_scale, out),
+            #[cfg(target_arch = "x86_64")]
+            // Safety: the variant only exists after AVX2 detection.
+            DispatchPath::Avx2Fma => unsafe { avx2::quantize_into(d, d_scale, out) },
+            #[cfg(target_arch = "aarch64")]
+            // Safety: the variant only exists after NEON detection.
+            DispatchPath::Neon => unsafe { neon::quantize_into(d, d_scale, out) },
+        }
+    }
+
+    /// Transpose a row-major `batch×n` i32 batch into column-major
+    /// `n×batch` (`out[j*batch + b] = d[b*n + j]`). Pure data movement —
+    /// bit-identical on every path. `out.len()` must equal `d.len()`.
+    pub(crate) fn transpose_to_columns(self, d: &[i32], batch: usize, n: usize, out: &mut [i32]) {
+        debug_assert_eq!(d.len(), batch * n);
+        debug_assert_eq!(out.len(), batch * n);
+        match self {
+            DispatchPath::Scalar => scalar::transpose_to_columns(d, batch, n, out),
+            #[cfg(target_arch = "x86_64")]
+            // Safety: the variant only exists after AVX2 detection.
+            DispatchPath::Avx2Fma => unsafe { avx2::transpose_to_columns(d, batch, n, out) },
+            #[cfg(target_arch = "aarch64")]
+            // NEON has no gather/scatter win here; the scalar loop is
+            // already load/store bound.
+            DispatchPath::Neon => scalar::transpose_to_columns(d, batch, n, out),
+        }
+    }
+
+    /// Output stage of the batched SPx path: per `bias.len()`-wide row,
+    /// `x += bias` then the activation — bit-identical to the scalar
+    /// per-element loop (sigmoid goes through the same 256-entry LUT
+    /// with the same lerp expression tree). `data.len()` must be a
+    /// multiple of `bias.len()`.
+    pub(crate) fn bias_activation(self, data: &mut [f32], bias: &[f32], act: Activation) {
+        if bias.is_empty() {
+            return;
+        }
+        debug_assert_eq!(data.len() % bias.len(), 0);
+        match self {
+            DispatchPath::Scalar => scalar::bias_activation(data, bias, act),
+            #[cfg(target_arch = "x86_64")]
+            // Safety: the variant only exists after AVX2 detection.
+            DispatchPath::Avx2Fma => unsafe { avx2::bias_activation(data, bias, act) },
+            #[cfg(target_arch = "aarch64")]
+            // NEON FMAX propagates NaN where `f32::max` quiets it; the
+            // sigmoid LUT needs a gather. Vector bias+ReLU isn't worth
+            // splitting semantics — keep the whole stage scalar on NEON.
+            DispatchPath::Neon => scalar::bias_activation(data, bias, act),
+        }
+    }
+}
+
+/// The dispatch paths a parity test should cover on this host: always
+/// `Scalar`, plus the native path when it differs.
+pub fn test_paths() -> Vec<DispatchPath> {
+    let mut paths = vec![DispatchPath::Scalar];
+    let native = native_path();
+    if native != DispatchPath::Scalar {
+        paths.push(native);
+    }
+    paths
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::pu::to_fixed;
+    use crate::util::check::property;
+
+    #[test]
+    fn active_path_is_consistent_and_named() {
+        let p = active_path();
+        assert_eq!(p, active_path(), "latched value must be stable");
+        assert!(!p.name().is_empty());
+        for p in test_paths() {
+            assert!(p.gemm_mr() > 0 && p.gemm_nr() > 0);
+            assert!(p.gemm_mc() >= p.gemm_mr());
+        }
+    }
+
+    #[test]
+    fn mac_i32_matches_scalar_bitwise() {
+        property("SIMD i32·i64 MAC == scalar", 32, |rng| {
+            let n = rng.index(40);
+            let col: Vec<i32> =
+                (0..n).map(|_| rng.range(-32768.0, 32768.0) as i32).collect();
+            let v = rng.range(-65536.0, 65536.0) as i64;
+            let init: Vec<i64> = (0..n).map(|_| rng.normal() as i64 * 1000).collect();
+            let mut want = init.clone();
+            scalar::mac_i32(&mut want, &col, v);
+            for path in test_paths() {
+                let mut got = init.clone();
+                path.mac_i32(&mut got, &col, v);
+                assert_eq!(got, want, "path {}", path.name());
+            }
+        });
+    }
+
+    #[test]
+    fn quantize_matches_to_fixed_bitwise() {
+        property("SIMD quantize == to_fixed", 32, |rng| {
+            let n = rng.index(40);
+            let scale = rng.range(0.1, 4.0) as f32;
+            let d: Vec<f32> =
+                (0..n).map(|_| rng.range(-2.0 * scale as f64, 2.0 * scale as f64) as f32).collect();
+            let want: Vec<i32> = d.iter().map(|&x| to_fixed(x, scale)).collect();
+            for path in test_paths() {
+                let mut got = vec![0i32; n];
+                path.quantize_into(&d, scale, &mut got);
+                assert_eq!(got, want, "path {}", path.name());
+            }
+        });
+    }
+
+    #[test]
+    fn quantize_ties_round_away_from_zero_on_every_path() {
+        // Inputs engineered so `x/d_scale · 2^15` lands exactly on
+        // k + 0.5 — where nearest-even and the scalar round-half-away
+        // semantics disagree. (2k+1)/2^16 is exactly representable.
+        let d_scale = 1.0f32;
+        let mut d = Vec::new();
+        for k in [0i32, 1, 2, 3, 100, 2001, 32700] {
+            let x = (2 * k + 1) as f32 / 65536.0;
+            d.push(x);
+            d.push(-x);
+        }
+        // Saturation edges and zero, mixed in so the vector body (not
+        // just the tail) sees them.
+        d.extend_from_slice(&[0.0, 2.0, -2.0, 0.999_97, -0.999_99]);
+        let want: Vec<i32> = d.iter().map(|&x| to_fixed(x, d_scale)).collect();
+        for path in test_paths() {
+            let mut got = vec![0i32; d.len()];
+            path.quantize_into(&d, d_scale, &mut got);
+            assert_eq!(got, want, "path {}", path.name());
+        }
+    }
+
+    #[test]
+    fn quantize_non_finite_inputs_match_scalar() {
+        // NaN casts to 0 (`NaN as i32`), infinities saturate — on every
+        // path, in vector-body and tail positions alike.
+        let mut d = vec![0.25f32; 19];
+        d[1] = f32::NAN;
+        d[4] = f32::INFINITY;
+        d[9] = f32::NEG_INFINITY;
+        d[17] = f32::NAN; // scalar tail lane
+        let want: Vec<i32> = d.iter().map(|&x| to_fixed(x, 1.0)).collect();
+        assert_eq!((want[1], want[4], want[9]), (0, 32767, -32768));
+        for path in test_paths() {
+            let mut got = vec![7i32; d.len()];
+            path.quantize_into(&d, 1.0, &mut got);
+            assert_eq!(got, want, "path {}", path.name());
+        }
+    }
+
+    #[test]
+    fn quantize_degenerate_scale_yields_zeros() {
+        let d = vec![0.5f32; 19];
+        for path in test_paths() {
+            for scale in [0.0f32, -1.0] {
+                let mut got = vec![7i32; d.len()];
+                path.quantize_into(&d, scale, &mut got);
+                assert!(got.iter().all(|&v| v == 0), "path {}", path.name());
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_matches_scalar_bitwise() {
+        property("SIMD transpose == scalar", 24, |rng| {
+            let batch = rng.index(21);
+            let n = rng.index(21);
+            let d: Vec<i32> = (0..batch * n).map(|_| rng.next_u32() as i32).collect();
+            let mut want = vec![0i32; batch * n];
+            scalar::transpose_to_columns(&d, batch, n, &mut want);
+            for path in test_paths() {
+                let mut got = vec![0i32; batch * n];
+                path.transpose_to_columns(&d, batch, n, &mut got);
+                assert_eq!(got, want, "path {} batch {batch} n {n}", path.name());
+            }
+        });
+    }
+
+    #[test]
+    fn bias_activation_matches_scalar_bitwise() {
+        use crate::nn::activations::sigmoid_lut;
+        property("SIMD bias+activation == scalar", 24, |rng| {
+            let m = 1 + rng.index(20);
+            let batch = 1 + rng.index(5);
+            let bias: Vec<f32> = (0..m).map(|_| rng.normal() as f32).collect();
+            // Cover the LUT saturation region (|x| > 8) as well as the
+            // interpolated interior.
+            let data: Vec<f32> =
+                (0..batch * m).map(|_| rng.range(-12.0, 12.0) as f32).collect();
+            for act in [Activation::Sigmoid, Activation::Relu, Activation::Identity] {
+                let mut want = data.clone();
+                scalar::bias_activation(&mut want, &bias, act);
+                // Independent oracle for one row: the literal per-element
+                // loop the accelerator used before this module existed.
+                let lut = sigmoid_lut();
+                for (w, (i, &x)) in want.iter().zip(data.iter().enumerate()).take(m) {
+                    let z = x + bias[i % m];
+                    let e = match act {
+                        Activation::Sigmoid => lut.eval(z),
+                        Activation::Relu => z.max(0.0),
+                        Activation::Identity => z,
+                    };
+                    assert_eq!(w.to_bits(), e.to_bits());
+                }
+                for path in test_paths() {
+                    let mut got = data.clone();
+                    path.bias_activation(&mut got, &bias, act);
+                    for (g, w) in got.iter().zip(&want) {
+                        assert_eq!(
+                            g.to_bits(),
+                            w.to_bits(),
+                            "path {} act {act:?}",
+                            path.name()
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn bias_activation_hits_lut_boundaries_exactly() {
+        // x == LO and x == HI must take the saturated branch on every
+        // path (the scalar code returns table[0]/table[256] there).
+        let bias = vec![0.0f32; 10];
+        let data: Vec<f32> = vec![
+            -8.0, 8.0, -7.999_999, 7.999_999, -100.0, 100.0, 0.0, -0.031_25, 0.031_25, 4.5,
+        ];
+        let mut want = data.clone();
+        scalar::bias_activation(&mut want, &bias, Activation::Sigmoid);
+        for path in test_paths() {
+            let mut got = data.clone();
+            path.bias_activation(&mut got, &bias, Activation::Sigmoid);
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(g.to_bits(), w.to_bits(), "path {} idx {i}", path.name());
+            }
+        }
+    }
+}

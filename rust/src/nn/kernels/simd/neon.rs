@@ -1,0 +1,127 @@
+//! NEON kernels (aarch64). NEON is architecturally mandatory on
+//! aarch64, but every function still carries
+//! `#[target_feature(enable = "neon")]` and is only reached through
+//! [`super::DispatchPath::Neon`], which is constructed after
+//! `is_aarch64_feature_detected!("neon")`.
+//!
+//! Exactness notes mirror the AVX2 back-end: the integer kernels
+//! (`mac_i32` via `SMULL`, `quantize_into` via `FCVTAS` — which rounds
+//! ties away from zero natively, exactly `f32::round`'s rule) are
+//! bit-identical to scalar; the f32 GEMM micro-kernel fuses
+//! multiply-adds and matches scalar only to FMA tolerance. The batch
+//! transpose and the bias+activation stage stay on the scalar fallback
+//! (see `DispatchPath::{transpose_to_columns, bias_activation}`).
+
+use super::MicroOut;
+use core::arch::aarch64::*;
+
+/// Full NEON tile: 8 rows × 8 columns (two `float32x4` of C per row —
+/// 16 accumulator registers out of the 32-register file).
+pub(crate) const MR: usize = 8;
+pub(crate) const NR: usize = 8;
+
+/// 8×8 f32 FMA micro-kernel: `out += Ap · Bp` over one depth block.
+///
+/// # Safety
+/// Requires NEON. `out.ptr` must be valid for writes of the clipped
+/// `out.mr × out.nr` corner at row stride `out.ldc` and unaliased by
+/// other threads; `ap`/`bp` must hold at least `8*kc` values each.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn micro_8x8(ap: &[f32], bp: &[f32], kc: usize, out: MicroOut) {
+    debug_assert!(ap.len() >= MR * kc && bp.len() >= NR * kc);
+    debug_assert!(out.mr <= MR && out.nr <= NR);
+    let mut acc = [[vdupq_n_f32(0.0); 2]; MR];
+    let mut a = ap.as_ptr();
+    let mut b = bp.as_ptr();
+    for _ in 0..kc {
+        let b0 = vld1q_f32(b);
+        let b1 = vld1q_f32(b.add(4));
+        for (i, acc_row) in acc.iter_mut().enumerate() {
+            let ai = vdupq_n_f32(*a.add(i));
+            acc_row[0] = vfmaq_f32(acc_row[0], ai, b0);
+            acc_row[1] = vfmaq_f32(acc_row[1], ai, b1);
+        }
+        a = a.add(MR);
+        b = b.add(NR);
+    }
+    if out.mr == MR && out.nr == NR {
+        for (i, acc_row) in acc.iter().enumerate() {
+            let c = out.ptr.add(i * out.ldc);
+            vst1q_f32(c, vaddq_f32(vld1q_f32(c), acc_row[0]));
+            let c4 = c.add(4);
+            vst1q_f32(c4, vaddq_f32(vld1q_f32(c4), acc_row[1]));
+        }
+    } else {
+        let mut buf = [[0.0f32; NR]; MR];
+        for (acc_row, buf_row) in acc.iter().zip(buf.iter_mut()) {
+            vst1q_f32(buf_row.as_mut_ptr(), acc_row[0]);
+            vst1q_f32(buf_row.as_mut_ptr().add(4), acc_row[1]);
+        }
+        for (i, buf_row) in buf.iter().enumerate().take(out.mr) {
+            let c = out.ptr.add(i * out.ldc);
+            for (j, &v) in buf_row.iter().enumerate().take(out.nr) {
+                *c.add(j) += v;
+            }
+        }
+    }
+}
+
+/// `acc[i] += col[i] as i64 * v` via `SMULL` widening multiplies,
+/// 4 lanes per iteration. Exact integer arithmetic.
+///
+/// # Safety
+/// Requires NEON. `acc` and `col` must be equal length; `v` must fit
+/// in `i32`.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn mac_i32(acc: &mut [i64], col: &[i32], v: i64) {
+    debug_assert_eq!(acc.len(), col.len());
+    let n = acc.len();
+    let vv = vdup_n_s32(v as i32);
+    let mut i = 0;
+    while i + 4 <= n {
+        let df = vld1q_s32(col.as_ptr().add(i));
+        let lo = vmull_s32(vget_low_s32(df), vv);
+        let hi = vmull_s32(vget_high_s32(df), vv);
+        let a0 = vld1q_s64(acc.as_ptr().add(i));
+        let a1 = vld1q_s64(acc.as_ptr().add(i + 2));
+        vst1q_s64(acc.as_mut_ptr().add(i), vaddq_s64(a0, lo));
+        vst1q_s64(acc.as_mut_ptr().add(i + 2), vaddq_s64(a1, hi));
+        i += 4;
+    }
+    while i < n {
+        acc[i] += col[i] as i64 * v;
+        i += 1;
+    }
+}
+
+/// Vectorized [`crate::fpga::pu::to_fixed`]: divide, scale to Q1.15,
+/// round with `FCVTAS` (nearest, ties away from zero — `f32::round`'s
+/// exact rule, saturating on overflow), then clamp to the Q1.15 range.
+///
+/// # Safety
+/// Requires NEON. `out.len()` must equal `d.len()`.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn quantize_into(d: &[f32], d_scale: f32, out: &mut [i32]) {
+    debug_assert_eq!(d.len(), out.len());
+    if !(d_scale > 0.0) {
+        out.fill(0);
+        return;
+    }
+    let scale = vdupq_n_f32(d_scale);
+    let amp = vdupq_n_f32(32768.0);
+    let lo = vdupq_n_s32(-32768);
+    let hi = vdupq_n_s32(32767);
+    let n = d.len();
+    let mut i = 0;
+    while i + 4 <= n {
+        let x = vld1q_f32(d.as_ptr().add(i));
+        let y = vmulq_f32(vdivq_f32(x, scale), amp);
+        let r = vcvtaq_s32_f32(y);
+        vst1q_s32(out.as_mut_ptr().add(i), vminq_s32(vmaxq_s32(r, lo), hi));
+        i += 4;
+    }
+    while i < n {
+        out[i] = crate::fpga::pu::to_fixed(d[i], d_scale);
+        i += 1;
+    }
+}

@@ -1,0 +1,81 @@
+//! Portable scalar kernels — the universal fallback and the reference
+//! semantics every SIMD path is tested against. These are the loops the
+//! pre-dispatch code ran, so `EDGEMLP_FORCE_SCALAR=1` reproduces the
+//! old behaviour exactly.
+
+use super::MicroOut;
+use crate::fpga::pu::to_fixed;
+use crate::nn::activations::{sigmoid_lut, Activation};
+
+/// Full scalar tile height/width (mirrors the pre-dispatch constants).
+pub(crate) const MR: usize = 8;
+pub(crate) const NR: usize = 8;
+
+/// The 8×8 register-tiled inner loop: `out += Ap · Bp` over one depth
+/// block. Eight independent accumulator rows let the compiler vectorize
+/// the f32 reduction even without explicit intrinsics.
+///
+/// # Safety
+/// `out.ptr` must be valid for writes of the clipped `out.mr × out.nr`
+/// corner at row stride `out.ldc` and unaliased by other threads.
+pub(crate) unsafe fn micro_8x8(ap: &[f32], bp: &[f32], kc: usize, out: MicroOut) {
+    debug_assert!(ap.len() >= MR * kc && bp.len() >= NR * kc);
+    debug_assert!(out.mr <= MR && out.nr <= NR);
+    let mut acc = [[0.0f32; NR]; MR];
+    for (ak, bk) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)).take(kc) {
+        for (i, acc_row) in acc.iter_mut().enumerate() {
+            let ai = ak[i];
+            for (av, &bv) in acc_row.iter_mut().zip(bk) {
+                *av += ai * bv;
+            }
+        }
+    }
+    for (i, acc_row) in acc.iter().enumerate().take(out.mr) {
+        let row = out.ptr.add(i * out.ldc);
+        for (j, &av) in acc_row.iter().enumerate().take(out.nr) {
+            *row.add(j) += av;
+        }
+    }
+}
+
+/// `acc[i] += col[i] as i64 * v`.
+pub(crate) fn mac_i32(acc: &mut [i64], col: &[i32], v: i64) {
+    for (a, &df) in acc.iter_mut().zip(col) {
+        *a += df as i64 * v;
+    }
+}
+
+/// Per-element [`to_fixed`].
+pub(crate) fn quantize_into(d: &[f32], d_scale: f32, out: &mut [i32]) {
+    for (o, &x) in out.iter_mut().zip(d) {
+        *o = to_fixed(x, d_scale);
+    }
+}
+
+/// `out[j*batch + b] = d[b*n + j]`.
+pub(crate) fn transpose_to_columns(d: &[i32], batch: usize, n: usize, out: &mut [i32]) {
+    if batch == 0 || n == 0 {
+        return;
+    }
+    for (b, row) in d.chunks_exact(n).enumerate() {
+        for (j, &v) in row.iter().enumerate() {
+            out[j * batch + b] = v;
+        }
+    }
+}
+
+/// Bias broadcast + activation over `bias.len()`-wide rows — the exact
+/// per-element loop the accelerator's batch path always used.
+pub(crate) fn bias_activation(data: &mut [f32], bias: &[f32], act: Activation) {
+    let lut = sigmoid_lut();
+    for row in data.chunks_exact_mut(bias.len()) {
+        for (o, &b) in row.iter_mut().zip(bias) {
+            *o += b;
+            *o = match act {
+                Activation::Sigmoid => lut.eval(*o),
+                Activation::Relu => o.max(0.0),
+                Activation::Identity => *o,
+            };
+        }
+    }
+}

@@ -1,5 +1,5 @@
 //! Batched, weight-stationary SPx shift-add matmul (EXPERIMENTS.md
-//! §Perf).
+//! §Perf, §Perf gains).
 //!
 //! [`crate::fpga::pu::dot_shift_add`] streams a weight row's packed
 //! codes once *per sample*; for a batch of `B` samples that re-reads
@@ -9,15 +9,23 @@
 //! sample in the block — one pass over the codes per batch, the same
 //! weight-stationary dataflow RedMulE/FantastIC4 use in hardware.
 //!
+//! The fast-row inner loop (`acc[b] += d[b] · v` with `v` the
+//! precomputed shift sum) is SIMD-dispatched
+//! ([`crate::nn::kernels::simd`]): a widening `i32×i32→i64`
+//! multiply-accumulate, 4 lanes per step on AVX2/NEON.
+//!
 //! Bit-exactness: the accumulator is plain `i64` arithmetic (the fast
 //! path multiplies by the precomputed shift sum, the fallback replays
 //! the shifts), so each sample's dot product is the *identical integer*
 //! the per-sample path computes — integer addition is associative, so
-//! the loop interchange cannot change a single bit. A property test
-//! pins the outputs (and the event accounting) to the per-sample path.
+//! neither the loop interchange nor the vector width can change a
+//! single bit. Property tests pin the outputs (and the event
+//! accounting) to the per-sample path on every available dispatch
+//! path.
 
 use crate::fpga::pu::{from_fixed, packed_term};
 use crate::fpga::stats::CycleStats;
+use crate::nn::kernels::simd::{self, DispatchPath};
 use crate::quant::spx::{SpxTensor, FIXED_GUARD_BITS};
 
 /// Samples processed per weight pass: keeps the `i64` accumulator block
@@ -27,19 +35,20 @@ const BB: usize = 128;
 
 /// Transpose a row-major `batch×n` fixed-point batch into column-major
 /// `n×batch` (`out[j * batch + b]`), reusing `out`'s allocation.
+/// SIMD-dispatched (8×8 i32 blocks on AVX2); pure data movement, so
+/// bit-identical on every path.
 pub fn transpose_to_columns(d_fixed: &[i32], batch: usize, n: usize, out: &mut Vec<i32>) {
     assert_eq!(d_fixed.len(), batch * n, "batch {batch} × n {n} vs len {}", d_fixed.len());
-    out.clear();
-    out.resize(batch * n, 0);
-    for (b, row) in d_fixed.chunks_exact(n.max(1)).enumerate().take(batch) {
-        for (j, &v) in row.iter().enumerate() {
-            out[j * batch + b] = v;
-        }
+    // Reshape only — the transpose writes every element, so the warm
+    // steady state skips the zero-fill a clear()+resize would redo.
+    if out.len() != batch * n {
+        out.resize(batch * n, 0);
     }
+    simd::active_path().transpose_to_columns(d_fixed, batch, n, out);
 }
 
 /// `out[b][r] = (w · d_b)` for every sample `b` in the batch, through
-/// the fixed-point shift-add datapath.
+/// the fixed-point shift-add datapath, on the active dispatch path.
 ///
 /// * `w` — SPx-quantized `m×n` weight matrix.
 /// * `d_t` — column-major `n×batch` Q1.15 data (see
@@ -53,6 +62,20 @@ pub fn transpose_to_columns(d_fixed: &[i32], batch: usize, n: usize, out: &mut V
 ///   [`crate::fpga::accelerator::Accelerator::infer_batch`], which
 ///   scales a cached per-sample trace) pass `None` and skip the work.
 pub fn spx_matmul_batch(
+    w: &SpxTensor,
+    d_t: &[i32],
+    batch: usize,
+    d_scale: f32,
+    out: &mut [f32],
+    stats: Option<&mut CycleStats>,
+) {
+    spx_matmul_batch_path(simd::active_path(), w, d_t, batch, d_scale, out, stats);
+}
+
+/// [`spx_matmul_batch`] pinned to an explicit dispatch path — the
+/// parity tests drive both forced-scalar and native through this.
+pub(crate) fn spx_matmul_batch_path(
+    path: DispatchPath,
     w: &SpxTensor,
     d_t: &[i32],
     batch: usize,
@@ -78,16 +101,15 @@ pub fn spx_matmul_batch(
             if packed.row_fast[r] {
                 // Every code k in this row satisfies k ≤ G, so the MAC
                 // collapses to an integer multiply by the precomputed
-                // signed shift sum — same as the per-sample fast path.
+                // signed shift sum — same as the per-sample fast path,
+                // vectorized as a widening i32 MAC (exact).
                 let values = packed.row_values(r);
                 for (j, &v) in values.iter().enumerate() {
                     if v == 0 {
                         continue; // absent weight: contributes exactly 0
                     }
                     let col = &d_t[j * batch + b0..j * batch + b0 + bb];
-                    for (a, &df) in acc.iter_mut().zip(col) {
-                        *a += df as i64 * v;
-                    }
+                    path.mac_i32(acc, col, v);
                 }
             } else {
                 // Rare rows with k > G replay the literal barrel shifts.
@@ -124,19 +146,28 @@ mod tests {
     use crate::quant::Calibration;
     use crate::util::check::property;
 
-    fn run_batched(w: &SpxTensor, d: &[Vec<f32>], d_scale: f32) -> (Vec<f32>, CycleStats) {
+    fn run_batched_path(
+        path: DispatchPath,
+        w: &SpxTensor,
+        d: &[Vec<f32>],
+        d_scale: f32,
+    ) -> (Vec<f32>, CycleStats) {
         let (m, n) = (w.shape[0], w.shape[1]);
         let batch = d.len();
         let mut flat = Vec::with_capacity(batch * n);
         for row in d {
             flat.extend(quantize_data(row, d_scale));
         }
-        let mut d_t = Vec::new();
-        transpose_to_columns(&flat, batch, n, &mut d_t);
+        let mut d_t = vec![0i32; batch * n];
+        path.transpose_to_columns(&flat, batch, n, &mut d_t);
         let mut out = vec![0.0f32; batch * m];
         let mut stats = CycleStats::default();
-        spx_matmul_batch(w, &d_t, batch, d_scale, &mut out, Some(&mut stats));
+        spx_matmul_batch_path(path, w, &d_t, batch, d_scale, &mut out, Some(&mut stats));
         (out, stats)
+    }
+
+    fn run_batched(w: &SpxTensor, d: &[Vec<f32>], d_scale: f32) -> (Vec<f32>, CycleStats) {
+        run_batched_path(simd::active_path(), w, d, d_scale)
     }
 
     fn run_per_sample(w: &SpxTensor, d: &[Vec<f32>], d_scale: f32) -> (Vec<f32>, CycleStats) {
@@ -160,7 +191,7 @@ mod tests {
     }
 
     #[test]
-    fn batched_matches_per_sample_bitwise() {
+    fn batched_matches_per_sample_bitwise_on_every_path() {
         property("batched SPx == per-sample dot", 24, |rng| {
             let m = 1 + rng.index(6);
             let n = 1 + rng.index(32);
@@ -172,10 +203,12 @@ mod tests {
             let d: Vec<Vec<f32>> = (0..batch)
                 .map(|_| (0..n).map(|_| rng.range(-1.0, 1.0) as f32).collect())
                 .collect();
-            let (fast, s1) = run_batched(&w, &d, 1.0);
             let (slow, s2) = run_per_sample(&w, &d, 1.0);
-            assert_bitwise_eq(&fast, &slow);
-            assert_eq!(s1, s2, "event accounting diverged");
+            for path in simd::test_paths() {
+                let (fast, s1) = run_batched_path(path, &w, &d, 1.0);
+                assert_bitwise_eq(&fast, &slow);
+                assert_eq!(s1, s2, "event accounting diverged on {}", path.name());
+            }
         });
     }
 
@@ -193,9 +226,11 @@ mod tests {
             "test setup: expected a non-fast row, codes too shallow"
         );
         let d: Vec<Vec<f32>> = (0..5).map(|b| vec![0.1 * (b as f32 + 1.0); n]).collect();
-        let (fast, _) = run_batched(&w, &d, 1.0);
         let (slow, _) = run_per_sample(&w, &d, 1.0);
-        assert_bitwise_eq(&fast, &slow);
+        for path in simd::test_paths() {
+            let (fast, _) = run_batched_path(path, &w, &d, 1.0);
+            assert_bitwise_eq(&fast, &slow);
+        }
     }
 
     #[test]
@@ -233,6 +268,20 @@ mod tests {
         for b in 0..3 {
             for j in 0..4 {
                 assert_eq!(t[j * 3 + b], flat[b * 4 + j]);
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_round_trips_at_simd_block_sizes() {
+        // Exercise the 8×8-blocked path (batch and n ≥ 8, with tails).
+        let (batch, n) = (13, 19);
+        let flat: Vec<i32> = (0..(batch * n) as i32).collect();
+        let mut t = Vec::new();
+        transpose_to_columns(&flat, batch, n, &mut t);
+        for b in 0..batch {
+            for j in 0..n {
+                assert_eq!(t[j * batch + b], flat[b * n + j], "b {b} j {j}");
             }
         }
     }

@@ -1,0 +1,70 @@
+#!/usr/bin/env python3
+"""Print baseline-vs-current deltas for the flat BENCH_*.json files.
+
+Usage: bench_delta.py <baseline.json> <current.json>
+
+Both files are flat JSON objects written by bench_harness::BenchJson
+(numbers or strings; `null` for non-finite samples). Matching numeric
+keys are compared and printed as an aligned table with the relative
+delta; keys present on only one side are listed afterwards so renamed
+or newly added bench keys are visible in the CI log. Informational
+only: always exits 0 when both files parse (perf gating stays a human
+decision — CI hosts are too noisy for hard thresholds).
+"""
+
+import json
+import sys
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench_delta: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(1)
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__.strip(), file=sys.stderr)
+        sys.exit(1)
+    base_path, cur_path = sys.argv[1], sys.argv[2]
+    base, cur = load(base_path), load(cur_path)
+
+    numeric = lambda v: isinstance(v, (int, float)) and not isinstance(v, bool)
+    shared = [k for k in cur if k in base and numeric(base[k]) and numeric(cur[k])]
+
+    print(f"\n== bench delta: {base_path} (baseline) vs {cur_path} (current) ==")
+    if isinstance(base.get("baseline_note"), str):
+        print(f"baseline note: {base['baseline_note']}")
+    if shared:
+        width = max(len(k) for k in shared)
+        print(f"{'key':<{width}}  {'baseline':>12}  {'current':>12}  {'delta':>8}")
+        for k in shared:
+            b, c = float(base[k]), float(cur[k])
+            delta = f"{(c - b) / b * 100.0:+7.1f}%" if b != 0 else "     n/a"
+            print(f"{k:<{width}}  {b:>12.4g}  {c:>12.4g}  {delta}")
+    else:
+        print("no matching numeric keys")
+
+    # Differing string keys (e.g. gemm_dispatch_path baseline=avx2+fma
+    # vs current=scalar) invalidate every numeric delta above — surface
+    # them loudly instead of dropping them as non-numeric.
+    for k in cur:
+        if k in base and isinstance(base[k], str) and base[k] != cur[k]:
+            print(f"MISMATCHED CONTEXT {k}: baseline={base[k]!r} current={cur[k]!r}")
+
+    only_base = [k for k in base if k not in cur]
+    only_cur = [k for k in cur if k not in base]
+    if only_base:
+        print(f"baseline-only keys: {', '.join(sorted(only_base))}")
+    if only_cur:
+        print(f"current-only keys:  {', '.join(sorted(only_cur))}")
+
+
+if __name__ == "__main__":
+    try:
+        main()
+    except BrokenPipeError:  # e.g. piped into `head`
+        sys.exit(0)
