@@ -1,7 +1,9 @@
 //! Bench: end-to-end TCP serving throughput/latency of the network
 //! subsystem (wire protocol → connection pool → model routing →
 //! coordinator worker pools → CPU/FPGA-sim backends), plus the E8
-//! replica-scaling sweep. Emits `BENCH_serving.json` (override the
+//! replica-scaling sweep and the E10 stage-pipelined depth sweep
+//! (pipelined vs monolithic CPU at depths 1..4, single replica).
+//! Emits `BENCH_serving.json` (override the
 //! path with `EDGEMLP_BENCH_JSON`) alongside `BENCH_gemm.json` for the
 //! perf trajectory. `cargo bench --bench serving` — see EXPERIMENTS.md
 //! §Serving and §Scaling the engine.
@@ -184,6 +186,55 @@ fn main() {
 
     println!("\n=== E8: replica sweep, CPU backend (EXPERIMENTS.md §Scaling) ===\n");
     sweep_table.print();
+
+    // ---- E10: stage-pipelined backend vs monolithic (depth sweep). ----
+    // Single replica, EDGEMLP_GEMM_THREADS=1 process-wide: the layer
+    // stages are the only parallelism, so the depth sweep isolates the
+    // pipeline's contribution. Speedup is against the monolithic
+    // 1-replica CPU point measured in E8 (`base_rps`) — same model,
+    // same load shape, same thread budget per layer.
+    let depths = [1usize, 2, 3, 4];
+    let mut pipe_table = Table::new(&["depth", "req/s", "p50", "p99", "vs monolithic"]);
+    for &depth in &depths {
+        let server = Server::serve(
+            registry(),
+            "127.0.0.1:0",
+            engine(1, vec![BackendKind::PipelineCpu { depth }]),
+        )
+        .expect("start pipeline server");
+        let report = run_loadgen(
+            server.local_addr(),
+            LoadGenConfig {
+                requests: sweep_requests,
+                connections: 8,
+                backend: 0,
+                dim: 784,
+                batch: 1,
+                pipeline: 8,
+                warmup,
+                ..LoadGenConfig::default()
+            },
+        )
+        .expect("pipeline loadgen");
+        server.shutdown();
+        assert_eq!(report.ok + report.shed + report.errors, report.sent, "lost responses");
+        let rps = report.throughput_rps();
+        let speedup = if base_rps > 0.0 { rps / base_rps } else { 0.0 };
+        pipe_table.row(&[
+            depth.to_string(),
+            format!("{rps:.0}"),
+            fmt_time(report.p50_s()),
+            fmt_time(report.p99_s()),
+            format!("{speedup:.2}x"),
+        ]);
+        json.num(&format!("serving_pipeline_{depth}_rps"), rps);
+        json.num(&format!("serving_pipeline_{depth}_p99_ms"), report.p99_s() * 1e3);
+        json.num(&format!("serving_pipeline_{depth}_speedup"), speedup);
+    }
+    json.num("serving_pipeline_monolithic_rps", base_rps);
+
+    println!("\n=== E10: stage-pipelined backend, depth sweep (EXPERIMENTS.md §E10) ===\n");
+    pipe_table.print();
 
     let path =
         std::env::var("EDGEMLP_BENCH_JSON").unwrap_or_else(|_| "BENCH_serving.json".into());

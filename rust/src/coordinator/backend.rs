@@ -13,13 +13,17 @@
 
 use crate::fpga::accelerator::Accelerator;
 use crate::fpga::stats::CycleStats;
+use crate::nn::kernels::pipeline::StageSnapshot;
 use crate::nn::mlp::ForwardScratch;
 use crate::nn::tensor::Matrix;
 use crate::nn::Mlp;
 use anyhow::Result;
 
 /// Stage a batch of flattened samples into a reusable `B × d` matrix.
-fn stage_inputs(staging: &mut Matrix, inputs: &[Vec<f32>], d: usize) -> Result<()> {
+/// Shared with the stage-pipelined backends
+/// ([`crate::serve::pipeline_backend`]), so every batch-oriented
+/// backend validates per-sample dimensions identically.
+pub(crate) fn stage_inputs(staging: &mut Matrix, inputs: &[Vec<f32>], d: usize) -> Result<()> {
     staging.resize_zeroed(inputs.len(), d);
     for (i, sample) in inputs.iter().enumerate() {
         anyhow::ensure!(sample.len() == d, "sample {i}: {} != input dim {d}", sample.len());
@@ -36,6 +40,13 @@ pub trait Backend {
     /// Run a batch; `inputs[i]` is one flattened sample. Returns one
     /// output per input plus simulator stats if this backend has them.
     fn infer(&mut self, inputs: &[Vec<f32>]) -> Result<(Vec<Vec<f32>>, Option<CycleStats>)>;
+    /// Per-stage occupancy/stall counters, for stage-pipelined backends
+    /// only (`None` for monolithic ones). The worker loop forwards the
+    /// latest snapshot into the metrics sink after each batch, which is
+    /// how they reach `MetricsSnapshot::render` and the `Stats` opcode.
+    fn stage_stats(&self) -> Option<Vec<StageSnapshot>> {
+        None
+    }
 }
 
 /// Table I "CPU": the pure-rust MLP forward at f32, batched through the
@@ -162,7 +173,8 @@ mod tests {
 
     fn mnist_mlp() -> Mlp {
         let mut rng = Pcg32::new(1);
-        Mlp::new(MlpConfig { sizes: vec![8, 6, 3], activations: MlpConfig::paper_mnist().activations }, &mut rng)
+        let activations = MlpConfig::paper_mnist().activations;
+        Mlp::new(MlpConfig { sizes: vec![8, 6, 3], activations }, &mut rng)
     }
 
     #[test]

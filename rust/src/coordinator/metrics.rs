@@ -4,6 +4,7 @@
 //! inference work — confirmed in the §Perf pass).
 
 use crate::fpga::stats::CycleStats;
+use crate::nn::kernels::pipeline::StageSnapshot;
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 
@@ -102,6 +103,10 @@ pub struct BackendMetrics {
     pub errors: u64,
     /// Accumulated simulator events (FPGA backend only).
     pub cycle_stats: CycleStats,
+    /// Latest per-stage occupancy/stall snapshot (stage-pipelined
+    /// backends only; empty for monolithic ones). Cumulative since the
+    /// backend was built — the worker refreshes it after every batch.
+    pub stages: Vec<StageSnapshot>,
 }
 
 impl BackendMetrics {
@@ -130,7 +135,10 @@ impl MetricsSnapshot {
     /// One line per pool with counters and latency percentiles — what
     /// the serving `Stats` opcode puts on the wire. Pool labels embed
     /// the served model for engine-built pools (`cpu/mnist`), so this
-    /// is the per-pool/per-model breakdown.
+    /// is the per-pool/per-model breakdown. Stage-pipelined pools get
+    /// one extra line per stage: occupancy (busy fraction of observed
+    /// wall time) and the stall split between waiting for upstream
+    /// input and blocking on a full downstream channel.
     pub fn render(&self) -> String {
         use crate::bench_harness::fmt_time;
         let mut out = format!("rejected: {}\n", self.rejected);
@@ -148,6 +156,20 @@ impl MetricsSnapshot {
                 fmt_time(m.latency.p999_s()),
                 fmt_time(m.latency.max_s()),
             ));
+            for s in &m.stages {
+                let total = s.busy_s + s.stall_in_s + s.stall_out_s;
+                let pct = |part: f64| if total > 0.0 { 100.0 * part / total } else { 0.0 };
+                out.push_str(&format!(
+                    "  stage {}: jobs={} failed={} occupancy={:.1}% stall_in={:.1}% \
+                     stall_out={:.1}%\n",
+                    s.label,
+                    s.processed,
+                    s.failed,
+                    100.0 * s.occupancy(),
+                    pct(s.stall_in_s),
+                    pct(s.stall_out_s),
+                ));
+            }
         }
         out
     }
@@ -194,6 +216,15 @@ impl Metrics {
     pub fn record_error(&self, backend: &str) {
         let mut inner = self.inner.lock().unwrap();
         inner.backends.entry(backend.to_string()).or_default().errors += 1;
+    }
+
+    /// Install the latest per-stage snapshot for a stage-pipelined
+    /// backend (counters are cumulative, so replacing is correct; with
+    /// replicated workers the last reporter wins — each replica's
+    /// pipeline has the same shape).
+    pub fn record_stage_stats(&self, backend: &str, stages: Vec<StageSnapshot>) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.backends.entry(backend.to_string()).or_default().stages = stages;
     }
 
     /// A request was shed due to backpressure.
@@ -317,6 +348,34 @@ mod tests {
         assert!(text.contains("p50="));
         assert!(text.contains("p99="));
         assert!(text.contains("p99.9="));
+    }
+
+    #[test]
+    fn render_includes_stage_lines_for_pipelined_pools() {
+        let m = Metrics::new();
+        m.record_batch("pipeline/default", 2, &[1e-3; 2], None);
+        m.record_stage_stats(
+            "pipeline/default",
+            vec![
+                StageSnapshot {
+                    label: "layer0".into(),
+                    processed: 4,
+                    failed: 1,
+                    busy_s: 0.75,
+                    stall_in_s: 0.25,
+                    stall_out_s: 0.0,
+                },
+                StageSnapshot { label: "layer1".into(), processed: 4, ..Default::default() },
+            ],
+        );
+        let text = m.snapshot().render();
+        assert!(text.contains("stage layer0: jobs=4 failed=1 occupancy=75.0%"), "{text}");
+        assert!(text.contains("stall_in=25.0%"), "{text}");
+        assert!(text.contains("stage layer1: jobs=4 failed=0 occupancy=0.0%"), "{text}");
+        // Monolithic pools render no stage lines.
+        let m2 = Metrics::new();
+        m2.record_batch("cpu", 1, &[1e-3], None);
+        assert!(!m2.snapshot().render().contains("stage "), "{}", m2.snapshot().render());
     }
 
     #[test]

@@ -15,7 +15,9 @@ use super::batcher::BatchPolicy;
 use super::metrics::Metrics;
 use super::queue::{BoundedQueue, QueueError};
 use super::request::{InferRequest, InferResponse, InferResult};
+use crate::nn::kernels::pipeline::panic_message;
 use anyhow::{bail, Context, Result};
+use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver};
 use std::sync::Arc;
@@ -385,7 +387,18 @@ fn worker_loop(
             return; // closed + drained
         }
         let inputs: Vec<Vec<f32>> = batch.iter().map(|r| r.payload.clone()).collect();
-        match backend.infer(&inputs) {
+        // Fault containment: a backend that panics mid-batch fails only
+        // this batch's requests (they get error responses below) — the
+        // worker survives, keeps its queue position, and the pool keeps
+        // serving. Pinned by `rust/tests/fault_injection.rs`.
+        let result = match std::panic::catch_unwind(AssertUnwindSafe(|| backend.infer(&inputs))) {
+            Ok(r) => r,
+            Err(payload) => Err(anyhow::anyhow!(
+                "backend panicked mid-batch: {}",
+                panic_message(payload.as_ref())
+            )),
+        };
+        match result {
             Ok((outputs, cycle_stats)) => {
                 debug_assert_eq!(outputs.len(), batch.len());
                 let now = Instant::now();
@@ -413,6 +426,12 @@ fn worker_loop(
                     let _ = req.respond_to.send(Err(msg.clone()));
                 }
             }
+        }
+        // Refresh stage counters on BOTH outcomes: a failing pipeline's
+        // `failed`/occupancy lines are most useful exactly when batches
+        // are failing.
+        if let Some(stages) = backend.stage_stats() {
+            metrics.record_stage_stats(name, stages);
         }
     }
 }
@@ -667,6 +686,44 @@ mod tests {
         assert!(result.unwrap_err().contains("kaboom"));
         assert_eq!(coord.metrics().snapshot().backends["flaky"].errors, 1);
         coord.shutdown();
+    }
+
+    #[test]
+    fn panicking_backend_fails_batch_but_worker_survives() {
+        // Inputs with a negative marker detonate the backend; the
+        // requests of that batch get error responses, the worker thread
+        // survives, and later requests are served normally.
+        let bomb: (String, BackendFactory) = (
+            "bomb".into(),
+            Box::new(|| {
+                Ok(Box::new(FnBackend::new("bomb", 8, |inputs: &[Vec<f32>]| {
+                    if inputs.iter().any(|x| x[0] < 0.0) {
+                        panic!("injected backend fault");
+                    }
+                    Ok(inputs.to_vec())
+                })) as Box<dyn Backend>)
+            }),
+        );
+        let coord = Coordinator::start(
+            vec![bomb],
+            CoordinatorConfig { queue_capacity: 64, policy: BatchPolicy::immediate(1) },
+        )
+        .unwrap();
+        let rx = coord.submit(vec![1.0]).unwrap();
+        assert_eq!(rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap().output, vec![1.0]);
+        // Poisoned batch: an error response, not a hang or a lost reply.
+        let rx = coord.submit(vec![-1.0]).unwrap();
+        let err = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap_err();
+        assert!(err.contains("panicked"), "{err}");
+        assert!(err.contains("injected backend fault"), "{err}");
+        // The single worker survived the panic and keeps serving.
+        for i in 0..10 {
+            let rx = coord.submit(vec![i as f32]).unwrap();
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+            assert_eq!(resp.output, vec![i as f32]);
+        }
+        assert_eq!(coord.metrics().snapshot().backends["bomb"].errors, 1);
+        coord.shutdown(); // joins cleanly — the worker is still alive
     }
 
     #[test]

@@ -30,6 +30,41 @@ pub struct QuantizedLayer {
     pub d_scale: f32,
 }
 
+impl QuantizedLayer {
+    /// One quantized layer of the batched path: quantize `src` to
+    /// Q1.15, run the weight-stationary kernel into `dst` (resized in
+    /// place — every element is overwritten), then bias + activation in
+    /// the same element order as the per-sample path. Every stage is
+    /// SIMD-dispatched ([`crate::nn::kernels::simd`]) and bit-identical
+    /// to the scalar per-sample loop (pinned by
+    /// `forward_batch_matches_infer_one_bitwise`). This is the single
+    /// per-layer code path [`Accelerator::forward_batch`] and the
+    /// stage-pipelined backend
+    /// ([`crate::serve::pipeline_backend::PipelineFpgaBackend`]) share;
+    /// `d_fixed`/`d_t` are caller-owned fixed-point staging buffers,
+    /// reused across calls.
+    pub fn forward_batch_into(
+        &self,
+        src: &Matrix,
+        dst: &mut Matrix,
+        d_fixed: &mut Vec<i32>,
+        d_t: &mut Vec<i32>,
+    ) {
+        let batch = src.rows;
+        let (m, n) = (self.w.shape[0], self.w.shape[1]);
+        debug_assert_eq!(src.cols, n);
+        quantize_data_into(&src.data, self.d_scale, d_fixed);
+        transpose_to_columns(d_fixed, batch, n, d_t);
+        dst.rows = batch;
+        dst.cols = m;
+        dst.data.resize(batch * m, 0.0);
+        // Stats sink None: Accelerator::infer_batch reports the cached
+        // simulator trace instead (see Accelerator::per_sample_stats).
+        spx_matmul_batch(&self.w, d_t, batch, self.d_scale, &mut dst.data, None);
+        simd::active_path().bias_activation(&mut dst.data, &self.b, self.activation);
+    }
+}
+
 /// An MLP with SPx-quantized weights, ready for the accelerator.
 #[derive(Debug, Clone)]
 pub struct QuantizedMlp {
@@ -246,11 +281,11 @@ impl Accelerator {
         let mut d_t: Vec<i32> = Vec::new();
         for (li, layer) in self.model.layers.iter().enumerate() {
             if li == 0 {
-                spx_layer_pass(layer, x, &mut ping, &mut d_fixed, &mut d_t);
+                layer.forward_batch_into(x, &mut ping, &mut d_fixed, &mut d_t);
             } else if li % 2 == 1 {
-                spx_layer_pass(layer, &ping, &mut pong, &mut d_fixed, &mut d_t);
+                layer.forward_batch_into(&ping, &mut pong, &mut d_fixed, &mut d_t);
             } else {
-                spx_layer_pass(layer, &pong, &mut ping, &mut d_fixed, &mut d_t);
+                layer.forward_batch_into(&pong, &mut ping, &mut d_fixed, &mut d_t);
             }
         }
         // Layer i writes ping when i is even (cf. Mlp::forward_with).
@@ -271,6 +306,15 @@ impl Accelerator {
         (outputs, stats)
     }
 
+    /// Simulator stats for a `batch`-sample run: `batch ×` the cached
+    /// (data-independent) per-sample trace — what
+    /// [`Accelerator::infer_batch`] reports, exposed so backends that
+    /// compute the outputs elsewhere (the stage-pipelined backend) can
+    /// report identical accounting.
+    pub fn batch_stats(&self, batch: usize) -> CycleStats {
+        self.per_sample_stats().scaled(batch as u64)
+    }
+
     /// Lazily computed single-sample simulator trace (the input values
     /// are irrelevant: every counter is shape/weight-dependent only).
     fn per_sample_stats(&self) -> &CycleStats {
@@ -279,34 +323,6 @@ impl Accelerator {
             self.infer_one(&zeros).1
         })
     }
-}
-
-/// One quantized layer of the batched path: quantize `src` to Q1.15,
-/// run the weight-stationary kernel into `dst` (resized in place —
-/// every element is overwritten), then bias + activation in the same
-/// element order as the per-sample path. Every stage is
-/// SIMD-dispatched ([`crate::nn::kernels::simd`]) and bit-identical to
-/// the scalar per-sample loop (pinned by
-/// `forward_batch_matches_infer_one_bitwise`).
-fn spx_layer_pass(
-    layer: &QuantizedLayer,
-    src: &Matrix,
-    dst: &mut Matrix,
-    d_fixed: &mut Vec<i32>,
-    d_t: &mut Vec<i32>,
-) {
-    let batch = src.rows;
-    let (m, n) = (layer.w.shape[0], layer.w.shape[1]);
-    debug_assert_eq!(src.cols, n);
-    quantize_data_into(&src.data, layer.d_scale, d_fixed);
-    transpose_to_columns(d_fixed, batch, n, d_t);
-    dst.rows = batch;
-    dst.cols = m;
-    dst.data.resize(batch * m, 0.0);
-    // Stats sink None: Accelerator::infer_batch reports the cached
-    // simulator trace instead (see Accelerator::per_sample_stats).
-    spx_matmul_batch(&layer.w, d_t, batch, layer.d_scale, &mut dst.data, None);
-    simd::active_path().bias_activation(&mut dst.data, &layer.b, layer.activation);
 }
 
 #[cfg(test)]

@@ -4,7 +4,8 @@
 //! edgemlp train            --epochs 5 --out /tmp/mlp.emlp
 //! edgemlp infer            --model /tmp/mlp.emlp --backend fpga
 //! edgemlp serve            --addr 127.0.0.1:7878 --model /tmp/mlp.emlp \
-//!                          --replicas 4 --models qnet=/tmp/qnet.emlp
+//!                          --replicas 4 --models qnet=/tmp/qnet.emlp \
+//!                          --backends cpu,fpga,pipeline --pipeline-depth 4
 //! edgemlp loadgen          --addr 127.0.0.1:7878 --requests 10000 \
 //!                          --model qnet --warmup 500
 //! edgemlp ctl              --addr 127.0.0.1:7878 --op stats|ping|swap|models
@@ -190,7 +191,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let model_path = PathBuf::from(args.get("model", "/tmp/edgemlp_mlp.emlp"));
     let random = args.get_bool("random").map_err(anyhow::Error::msg)?;
     let models = args.get("models", "");
-    let backends = args.get("backends", "cpu,fpga");
+    // `--backend pipeline` is accepted as an alias for `--backends`
+    // (the singular reads naturally when serving one kind).
+    let backend_alias = args.get("backend", "cpu,fpga");
+    let backends = args.get("backends", &backend_alias);
+    let pipeline_depth: usize = args.get_parse("pipeline-depth", 2).map_err(anyhow::Error::msg)?;
     let replicas: usize = args.get_parse("replicas", 1).map_err(anyhow::Error::msg)?;
     let queue_capacity: usize =
         args.get_parse("queue-capacity", 1024).map_err(anyhow::Error::msg)?;
@@ -206,6 +211,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     if replicas == 0 {
         bail!("--replicas must be at least 1");
+    }
+    if !(1..=64).contains(&pipeline_depth) {
+        bail!("--pipeline-depth must be in 1..=64, got {pipeline_depth}");
     }
 
     let mlp = if random {
@@ -243,7 +251,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         match b.trim() {
             "cpu" => kinds.push(BackendKind::Cpu),
             "fpga" => kinds.push(BackendKind::FpgaSim(AccelConfig::default_fpga())),
-            other => bail!("unknown backend '{other}' (cpu|fpga)"),
+            "pipeline" => kinds.push(BackendKind::PipelineCpu { depth: pipeline_depth }),
+            "pipeline-fpga" => kinds.push(BackendKind::PipelineFpga {
+                config: AccelConfig::default_fpga(),
+                depth: pipeline_depth,
+            }),
+            other => bail!("unknown backend '{other}' (cpu|fpga|pipeline|pipeline-fpga)"),
         }
     }
     let server = Server::serve(

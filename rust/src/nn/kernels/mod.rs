@@ -24,12 +24,20 @@
 //!   the GEMM micro-tile, the SPx MAC, Q1.15 quantization, the batch
 //!   transpose and the bias+activation output stage
 //!   (docs/simd-dispatch.md).
+//! * [`pipeline`] — the generic stage pipeline behind the
+//!   stage-pipelined serving backend
+//!   ([`crate::serve::pipeline_backend`]): one dedicated thread per
+//!   stage, bounded SPSC channels, per-stage occupancy/stall counters,
+//!   and panic containment that fails one job instead of the pipeline
+//!   (docs/pipelined-engine.md).
 
 pub mod gemm;
+pub mod pipeline;
 pub mod pool;
 pub mod simd;
 pub mod spx_batch;
 
 pub use gemm::{gemm_into, gemm_into_with};
+pub use pipeline::{StageError, StageFn, StagePipeline, StageSnapshot};
 pub use simd::{active_path, force_scalar, native_path, DispatchPath};
 pub use spx_batch::{spx_matmul_batch, transpose_to_columns};

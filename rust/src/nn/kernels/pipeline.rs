@@ -1,0 +1,459 @@
+//! Generic stage pipeline: the software analogue of the paper's §3.1 PU
+//! stagger, lifted from rows to whole layers (docs/pipelined-engine.md).
+//!
+//! A [`StagePipeline`] is a fixed chain of worker threads, one per
+//! stage, connected by bounded SPSC channels of capacity `depth`. Jobs
+//! enter at stage 0 and exit after the last stage, strictly in
+//! submission order; while job *i* is in stage *k*, job *i+1* can be in
+//! stage *k−1* — up to `depth` jobs overlap in flight, exactly the
+//! stagger [`crate::fpga::pipeline`] models analytically for the FPGA
+//! fabric. The serving backends
+//! ([`crate::serve::pipeline_backend`]) put one MLP layer in each
+//! stage, so a batch streams through the layer chain the way a sample
+//! streams through the paper's PU array.
+//!
+//! Fault containment: a stage that panics poisons only the job it was
+//! holding. The panic is caught, the job is forwarded as a
+//! [`StageError`] (later stages pass it through untouched), the stage
+//! thread survives, and the driver receives `Err` for that job in its
+//! ordinal position — subsequent jobs are unaffected. Pinned by the
+//! fault-injection suite (`rust/tests/fault_injection.rs`).
+//!
+//! Observability: every stage counts jobs processed/failed and splits
+//! its wall time into *busy* (running the stage function), *stall-in*
+//! (waiting for upstream) and *stall-out* (blocked pushing downstream).
+//! [`StagePipeline::snapshots`] exposes them as [`StageSnapshot`]s,
+//! which the coordinator surfaces through
+//! [`crate::coordinator::MetricsSnapshot::render`].
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// A stage body: transform the job in place. Runs on the stage's own
+/// dedicated thread, so it may own heavyweight state (layer weights,
+/// scratch buffers) captured by the closure.
+pub type StageFn<J> = Box<dyn FnMut(&mut J) + Send + 'static>;
+
+/// Why a job came out of the pipeline as `Err`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StageError {
+    /// Index of the stage whose function panicked.
+    pub stage: usize,
+    /// The panic message (best-effort downcast).
+    pub message: String,
+}
+
+impl std::fmt::Display for StageError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "pipeline stage {} panicked: {}", self.stage, self.message)
+    }
+}
+
+impl std::error::Error for StageError {}
+
+/// Best-effort extraction of a panic payload's message.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".into()
+    }
+}
+
+/// Point-in-time view of one stage's counters.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StageSnapshot {
+    /// The stage's label (e.g. `layer0`).
+    pub label: String,
+    /// Jobs whose stage function completed.
+    pub processed: u64,
+    /// Jobs whose stage function panicked (forwarded as [`StageError`]).
+    pub failed: u64,
+    /// Seconds spent running the stage function.
+    pub busy_s: f64,
+    /// Seconds spent waiting for upstream input.
+    pub stall_in_s: f64,
+    /// Seconds spent blocked pushing downstream.
+    pub stall_out_s: f64,
+}
+
+impl StageSnapshot {
+    /// Fraction of observed wall time the stage spent computing —
+    /// `busy / (busy + stall_in + stall_out)`, 0.0 before any work.
+    pub fn occupancy(&self) -> f64 {
+        let total = self.busy_s + self.stall_in_s + self.stall_out_s;
+        if total > 0.0 {
+            self.busy_s / total
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Per-stage counters (nanosecond-resolution, lock-free updates).
+#[derive(Default)]
+struct StageCounter {
+    processed: AtomicU64,
+    failed: AtomicU64,
+    busy_ns: AtomicU64,
+    stall_in_ns: AtomicU64,
+    stall_out_ns: AtomicU64,
+}
+
+/// What travels the channels: a live job, or the error that poisoned it.
+enum Slot<J> {
+    Ok(J),
+    Failed(StageError),
+}
+
+struct ChanState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded SPSC channel (capacity = pipeline depth). `Mutex` + two
+/// `Condvar`s, mirroring [`crate::coordinator::queue::BoundedQueue`]
+/// minus the batch-draining pop this single-successor topology never
+/// needs.
+struct Chan<T> {
+    state: Mutex<ChanState<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+impl<T> Chan<T> {
+    fn new(capacity: usize) -> Arc<Chan<T>> {
+        Arc::new(Chan {
+            state: Mutex::new(ChanState { items: VecDeque::new(), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity: capacity.max(1),
+        })
+    }
+
+    /// Blocking push; `Err` returns the item when the channel closed.
+    fn push(&self, item: T) -> Result<(), T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(item);
+            }
+            if st.items.len() < self.capacity {
+                st.items.push_back(item);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Blocking pop; `None` means closed *and* drained.
+    fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+/// A running stage pipeline over jobs of type `J`. See the module docs
+/// for the threading model; [`StagePipeline::submit`] /
+/// [`StagePipeline::recv`] are the driver's two entry points, and
+/// results come back in submission order.
+///
+/// The driver is responsible for bounding its in-flight count at
+/// `depth` (submit at most `depth` jobs before draining): within that
+/// bound neither call can deadlock, because the exit channel alone can
+/// hold `depth` finished jobs.
+pub struct StagePipeline<J: Send + 'static> {
+    input: Arc<Chan<Slot<J>>>,
+    output: Arc<Chan<Slot<J>>>,
+    counters: Arc<Vec<StageCounter>>,
+    labels: Vec<String>,
+    threads: Vec<JoinHandle<()>>,
+    depth: usize,
+}
+
+impl<J: Send + 'static> StagePipeline<J> {
+    /// Spawn one thread per stage, chained by channels of capacity
+    /// `depth` (clamped to ≥ 1). `name` prefixes the thread names.
+    pub fn new(name: &str, depth: usize, stages: Vec<(String, StageFn<J>)>) -> StagePipeline<J> {
+        assert!(!stages.is_empty(), "pipeline needs at least one stage");
+        let depth = depth.max(1);
+        let n = stages.len();
+        let chans: Vec<Arc<Chan<Slot<J>>>> = (0..=n).map(|_| Chan::new(depth)).collect();
+        let counters: Arc<Vec<StageCounter>> =
+            Arc::new((0..n).map(|_| StageCounter::default()).collect());
+        let mut labels = Vec::with_capacity(n);
+        let mut threads = Vec::with_capacity(n);
+        for (k, (label, mut f)) in stages.into_iter().enumerate() {
+            let input = chans[k].clone();
+            let output = chans[k + 1].clone();
+            let counters = counters.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("edgemlp-{name}-s{k}"))
+                .spawn(move || stage_loop(k, &mut f, &input, &output, &counters[k]))
+                .expect("spawn pipeline stage");
+            labels.push(label);
+            threads.push(handle);
+        }
+        StagePipeline {
+            input: chans[0].clone(),
+            output: chans[n].clone(),
+            counters,
+            labels,
+            threads,
+            depth,
+        }
+    }
+
+    /// Maximum in-flight jobs the channels were sized for.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    pub fn num_stages(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// Enqueue a job at stage 0. Returns `false` if the pipeline was
+    /// shut down. Blocks while the entry channel is full — which a
+    /// driver that keeps ≤ `depth` jobs in flight never observes for
+    /// long.
+    pub fn submit(&self, job: J) -> bool {
+        self.input.push(Slot::Ok(job)).is_ok()
+    }
+
+    /// Dequeue the next finished job, in submission order: the job
+    /// itself, or the [`StageError`] that poisoned it. `None` means the
+    /// pipeline was shut down and drained.
+    pub fn recv(&self) -> Option<Result<J, StageError>> {
+        match self.output.pop()? {
+            Slot::Ok(job) => Some(Ok(job)),
+            Slot::Failed(e) => Some(Err(e)),
+        }
+    }
+
+    /// Current per-stage counters, in stage order.
+    pub fn snapshots(&self) -> Vec<StageSnapshot> {
+        self.labels
+            .iter()
+            .zip(self.counters.iter())
+            .map(|(label, c)| StageSnapshot {
+                label: label.clone(),
+                processed: c.processed.load(Ordering::Relaxed),
+                failed: c.failed.load(Ordering::Relaxed),
+                busy_s: c.busy_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+                stall_in_s: c.stall_in_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+                stall_out_s: c.stall_out_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+            })
+            .collect()
+    }
+}
+
+impl<J: Send + 'static> Drop for StagePipeline<J> {
+    fn drop(&mut self) {
+        // Closing the entry channel cascades stage by stage: each stage
+        // drains what it already has, then closes its own output. Any
+        // jobs still in flight (≤ depth, which the exit channel can
+        // hold) park in the exit channel and are dropped with it.
+        self.input.close();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Body of one stage thread.
+fn stage_loop<J, F: FnMut(&mut J)>(
+    stage: usize,
+    f: &mut F,
+    input: &Chan<Slot<J>>,
+    output: &Chan<Slot<J>>,
+    counter: &StageCounter,
+) {
+    loop {
+        let t_in = Instant::now();
+        let Some(slot) = input.pop() else {
+            // Upstream closed and drained: propagate the close so the
+            // next stage (or the driver) can wind down too.
+            output.close();
+            return;
+        };
+        counter.stall_in_ns.fetch_add(t_in.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let slot = match slot {
+            // A job an earlier stage poisoned passes through untouched —
+            // it must still come out in order so the driver can account
+            // for it.
+            Slot::Failed(e) => Slot::Failed(e),
+            Slot::Ok(mut job) => {
+                let t_busy = Instant::now();
+                let result = catch_unwind(AssertUnwindSafe(|| f(&mut job)));
+                counter.busy_ns.fetch_add(t_busy.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                match result {
+                    Ok(()) => {
+                        counter.processed.fetch_add(1, Ordering::Relaxed);
+                        Slot::Ok(job)
+                    }
+                    Err(payload) => {
+                        // The job's buffers are in an unknown state —
+                        // drop them; only the error travels on.
+                        counter.failed.fetch_add(1, Ordering::Relaxed);
+                        Slot::Failed(StageError {
+                            stage,
+                            message: panic_message(payload.as_ref()),
+                        })
+                    }
+                }
+            }
+        };
+        let t_out = Instant::now();
+        if output.push(slot).is_err() {
+            return; // downstream closed mid-shutdown
+        }
+        counter.stall_out_ns.fetch_add(t_out.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn adder_stages(n: usize) -> Vec<(String, StageFn<i64>)> {
+        let mut stages: Vec<(String, StageFn<i64>)> = Vec::new();
+        for k in 0..n {
+            stages.push((format!("s{k}"), Box::new(|j: &mut i64| *j += 1)));
+        }
+        stages
+    }
+
+    #[test]
+    fn jobs_come_back_in_order() {
+        let pipe = StagePipeline::new("order", 4, adder_stages(3));
+        assert_eq!(pipe.num_stages(), 3);
+        assert_eq!(pipe.depth(), 4);
+        for round in 0..5 {
+            for i in 0..4i64 {
+                assert!(pipe.submit(round * 10 + i));
+            }
+            for i in 0..4i64 {
+                assert_eq!(pipe.recv().unwrap().unwrap(), round * 10 + i + 3);
+            }
+        }
+        let snaps = pipe.snapshots();
+        assert_eq!(snaps.len(), 3);
+        for s in &snaps {
+            assert_eq!(s.processed, 20);
+            assert_eq!(s.failed, 0);
+            assert!((0.0..=1.0).contains(&s.occupancy()));
+        }
+    }
+
+    #[test]
+    fn stages_overlap_in_flight_jobs() {
+        // 3 stages × 30 ms each, 4 jobs. Sequential would be 360 ms;
+        // pipelined fill+drain is ~(3 + 3) × 30 = 180 ms. Sleeping
+        // threads need no cores, so the bound holds on any CI box.
+        let mut stages: Vec<(String, StageFn<u32>)> = Vec::new();
+        for k in 0..3 {
+            let f: StageFn<u32> = Box::new(|_| std::thread::sleep(Duration::from_millis(30)));
+            stages.push((format!("s{k}"), f));
+        }
+        let pipe = StagePipeline::new("overlap", 4, stages);
+        let t0 = Instant::now();
+        for i in 0..4 {
+            assert!(pipe.submit(i));
+        }
+        for _ in 0..4 {
+            pipe.recv().unwrap().unwrap();
+        }
+        let elapsed = t0.elapsed();
+        assert!(
+            elapsed < Duration::from_millis(300),
+            "4 jobs × 3 staggered 30 ms stages took {elapsed:?} (sequential would be 360 ms)"
+        );
+        // Interior stages saw real overlap: they stalled waiting for
+        // input at least once after their first job.
+        let snaps = pipe.snapshots();
+        assert!(snaps[0].busy_s > 0.0);
+    }
+
+    #[test]
+    fn panicking_stage_poisons_one_job_and_survives() {
+        let stages: Vec<(String, StageFn<i64>)> = vec![
+            ("double".into(), Box::new(|j: &mut i64| *j *= 2)),
+            (
+                "bomb".into(),
+                Box::new(|j: &mut i64| {
+                    if *j == 26 {
+                        panic!("injected stage fault");
+                    }
+                    *j += 1;
+                }),
+            ),
+        ];
+        let pipe = StagePipeline::new("bomb", 4, stages);
+        for i in [1i64, 13, 2] {
+            assert!(pipe.submit(i));
+        }
+        assert_eq!(pipe.recv().unwrap().unwrap(), 3);
+        let err = pipe.recv().unwrap().unwrap_err();
+        assert_eq!(err.stage, 1);
+        assert!(err.message.contains("injected stage fault"), "{err}");
+        assert_eq!(pipe.recv().unwrap().unwrap(), 5);
+        // The pipeline (including the stage that panicked) keeps
+        // serving jobs afterwards.
+        for i in 0..8i64 {
+            assert!(pipe.submit(i));
+            assert_eq!(pipe.recv().unwrap().unwrap(), i * 2 + 1);
+        }
+        let snaps = pipe.snapshots();
+        assert_eq!(snaps[1].failed, 1);
+        assert_eq!(snaps[1].processed, 10);
+    }
+
+    #[test]
+    fn drop_with_jobs_in_flight_does_not_deadlock() {
+        let pipe = StagePipeline::new("drop", 3, adder_stages(4));
+        for i in 0..3 {
+            assert!(pipe.submit(i));
+        }
+        drop(pipe); // joins all four stage threads
+    }
+
+    #[test]
+    fn submit_after_drop_is_rejected_cleanly() {
+        let pipe = StagePipeline::new("closed", 2, adder_stages(1));
+        pipe.input.close();
+        assert!(!pipe.submit(1));
+        assert!(pipe.recv().is_none());
+    }
+
+    #[test]
+    fn occupancy_of_empty_snapshot_is_zero() {
+        let s = StageSnapshot::default();
+        assert_eq!(s.occupancy(), 0.0);
+    }
+}

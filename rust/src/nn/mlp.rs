@@ -25,6 +25,20 @@ pub struct Layer {
     pub activation: Activation,
 }
 
+impl Layer {
+    /// One layer of the batched forward: `dst = σ(src · Wᵀ + b)`, with
+    /// `dst` resized in place. This is the *single* per-layer code path
+    /// — [`Mlp::forward_with`], [`Mlp::forward_trace_into`] and the
+    /// stage-pipelined backend
+    /// ([`crate::serve::pipeline_backend::PipelineCpuBackend`]) all
+    /// funnel through it, so a stage thread that owns a `Layer` clone
+    /// computes bit-for-bit what the monolithic forward computes.
+    pub fn forward_into(&self, src: &Matrix, dst: &mut Matrix) {
+        src.matmul_bt_into(&self.w, dst);
+        apply_bias_activation(dst, self);
+    }
+}
+
 /// Architecture description: layer sizes plus activations.
 #[derive(Debug, Clone, PartialEq)]
 pub struct MlpConfig {
@@ -164,14 +178,11 @@ impl Mlp {
         let ForwardScratch { ping, pong } = scratch;
         for (li, layer) in self.layers.iter().enumerate() {
             if li == 0 {
-                x.matmul_bt_into(&layer.w, ping);
-                apply_bias_activation(ping, layer);
+                layer.forward_into(x, ping);
             } else if li % 2 == 1 {
-                ping.matmul_bt_into(&layer.w, pong);
-                apply_bias_activation(pong, layer);
+                layer.forward_into(ping, pong);
             } else {
-                pong.matmul_bt_into(&layer.w, ping);
-                apply_bias_activation(ping, layer);
+                layer.forward_into(pong, ping);
             }
         }
         // Layer i writes ping when i is even, so an odd layer count
@@ -204,9 +215,7 @@ impl Mlp {
         acts[0].copy_from(x);
         for (i, layer) in self.layers.iter().enumerate() {
             let (before, after) = acts.split_at_mut(i + 1);
-            let dst = &mut after[0];
-            before[i].matmul_bt_into(&layer.w, dst);
-            apply_bias_activation(dst, layer);
+            layer.forward_into(&before[i], &mut after[0]);
         }
     }
 
@@ -379,6 +388,66 @@ mod tests {
             let got = mlp.forward_with(&x, &mut scratch);
             assert_eq!(got, &expect);
         }
+    }
+
+    #[test]
+    fn forward_rows_bitwise_stable_under_chunking() {
+        // The contract the stage-pipelined backend's micro-batching
+        // rests on: a row of the batched forward is bit-identical
+        // whether the row rides in the full batch or in any contiguous
+        // row chunk. The blocked GEMM guarantees it by construction —
+        // each output element's additions happen in a fixed k-order
+        // that neither `m` nor the band plan can change.
+        let mut rng = Pcg32::new(31);
+        for sizes in [vec![11usize, 7, 3], vec![784, 128, 10], vec![6, 64, 64, 3]] {
+            let n_layers = sizes.len() - 1;
+            let mlp = Mlp::new(
+                MlpConfig { sizes, activations: vec![Activation::Sigmoid; n_layers] },
+                &mut rng,
+            );
+            let batch = 9usize;
+            let x = Matrix::random_uniform(batch, mlp.input_dim(), 1.0, &mut rng);
+            let full = mlp.forward(&x);
+            for chunk in [1usize, 2, 4, 9] {
+                let mut r0 = 0;
+                while r0 < batch {
+                    let rows = chunk.min(batch - r0);
+                    let mut sub = Matrix::zeros(rows, x.cols);
+                    sub.data.copy_from_slice(&x.data[r0 * x.cols..(r0 + rows) * x.cols]);
+                    let sub_out = mlp.forward(&sub);
+                    for r in 0..rows {
+                        for (a, b) in sub_out.row(r).iter().zip(full.row(r0 + r)) {
+                            assert_eq!(
+                                a.to_bits(),
+                                b.to_bits(),
+                                "row {} chunk {chunk}",
+                                r0 + r
+                            );
+                        }
+                    }
+                    r0 += rows;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn layer_forward_into_is_the_forward_with_code_path() {
+        // `Layer::forward_into` chained manually must reproduce
+        // `forward_with` bit for bit — it IS the code path, and the
+        // stage-pipelined backend holds per-stage `Layer` clones that
+        // call exactly this entry point.
+        let mut rng = Pcg32::new(32);
+        let mlp = tiny(&mut rng);
+        let x = Matrix::random_uniform(5, 4, 2.0, &mut rng);
+        let want = mlp.forward(&x);
+        let mut cur = x;
+        let mut next = Matrix::zeros(0, 0);
+        for layer in &mlp.layers {
+            layer.forward_into(&cur, &mut next);
+            std::mem::swap(&mut cur, &mut next);
+        }
+        assert_eq!(cur, want);
     }
 
     #[test]

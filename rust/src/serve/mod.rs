@@ -25,16 +25,24 @@
 //! * [`registry`] — catalog of versioned models + independently
 //!   hot-swappable serving slots with EMLP+SPx persistence and
 //!   slot-following backends;
+//! * [`pipeline_backend`] — the stage-pipelined execution backend (one
+//!   thread per MLP layer, `depth` micro-batches in flight, bitwise
+//!   identical to the monolithic forward — docs/pipelined-engine.md);
 //! * [`client`] — blocking model-aware client and the open/closed-loop
 //!   load generator behind `edgemlp loadgen` and `BENCH_serving.json`.
 
 pub mod client;
+pub mod pipeline_backend;
 pub mod registry;
 pub mod server;
 pub mod wire;
 
 pub use client::{
     run_loadgen, BatchReply, Client, InferReply, LoadGenConfig, LoadGenReport, ModelReport,
+};
+pub use pipeline_backend::{
+    pipeline_cpu_factory, pipeline_fpga_factory, PipelineCpuBackend, PipelineFpgaBackend,
+    SwappablePipelineCpuBackend, SwappablePipelineFpgaBackend,
 };
 pub use registry::{
     swappable_cpu_factory, swappable_fpga_factory, ModelRegistry, ModelSlot, ModelVersion,

@@ -1,0 +1,550 @@
+//! The stage-pipelined execution backend: one dedicated thread per MLP
+//! layer, bounded SPSC channels between them, up to `depth` micro-
+//! batches in flight — the software analogue of the paper's §3.1 PU
+//! stagger at layer granularity (docs/pipelined-engine.md).
+//!
+//! A submitted batch is split into ≤ `depth` contiguous row chunks and
+//! streamed through the layer chain: chunk *i* is in layer *k* while
+//! chunk *i+1* is in layer *k−1*, so every stage (core) stays busy once
+//! the pipeline fills. Each stage owns a clone of its layer's weights
+//! plus the job-resident ping/pong activation buffers, and calls the
+//! *same* per-layer entry point the monolithic paths use —
+//! [`crate::nn::mlp::Layer::forward_into`] for f32,
+//! [`crate::fpga::accelerator::QuantizedLayer::forward_batch_into`] for
+//! SPx — on the same process-wide dispatch path.
+//!
+//! **Bitwise contract**: outputs equal [`crate::nn::Mlp::forward_with`]
+//! / [`crate::fpga::accelerator::Accelerator::forward_batch`] bit for
+//! bit at every depth. Chunking is safe because the blocked GEMM
+//! accumulates every output element in a fixed k-order that neither the
+//! row count nor the band plan can change (pinned by
+//! `forward_rows_bitwise_stable_under_chunking` in `nn/mlp.rs`), and
+//! the SPx datapath is exact integer arithmetic. The randomized
+//! conformance suite (`rust/tests/conformance.rs`) pins the contract
+//! across shapes, batch sizes, dispatch paths and depths 1..4.
+//!
+//! Fault containment: a panicking stage fails only the chunks of the
+//! batch it was processing — [`Backend::infer`] returns `Err` for that
+//! batch (error responses for its requests), the stage threads survive,
+//! and the next batch proceeds normally (`tests/fault_injection.rs`).
+
+use super::registry::ModelSlot;
+use crate::coordinator::backend::{stage_inputs, Backend};
+use crate::coordinator::server::SharedBackendFactory;
+use crate::fpga::accelerator::{AccelConfig, Accelerator};
+use crate::fpga::stats::CycleStats;
+use crate::nn::kernels::pipeline::{StageError, StageFn, StagePipeline, StageSnapshot};
+use crate::nn::tensor::Matrix;
+use crate::nn::Mlp;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// A job flowing through the f32 layer chain: the chunk's activations
+/// ping-pong between the two job-owned buffers, so a warm pipeline
+/// allocates nothing per batch.
+#[derive(Default)]
+struct CpuJob {
+    cur: Matrix,
+    next: Matrix,
+}
+
+/// A job flowing through the SPx layer chain; carries the fixed-point
+/// staging vectors [`crate::fpga::accelerator::QuantizedLayer::forward_batch_into`]
+/// reuses.
+#[derive(Default)]
+struct SpxJob {
+    cur: Matrix,
+    next: Matrix,
+    d_fixed: Vec<i32>,
+    d_t: Vec<i32>,
+}
+
+/// Field access the shared chunk driver needs from either job type.
+trait PipelineJob: Default + Send + 'static {
+    fn cur(&self) -> &Matrix;
+    fn cur_mut(&mut self) -> &mut Matrix;
+}
+
+impl PipelineJob for CpuJob {
+    fn cur(&self) -> &Matrix {
+        &self.cur
+    }
+
+    fn cur_mut(&mut self) -> &mut Matrix {
+        &mut self.cur
+    }
+}
+
+impl PipelineJob for SpxJob {
+    fn cur(&self) -> &Matrix {
+        &self.cur
+    }
+
+    fn cur_mut(&mut self) -> &mut Matrix {
+        &mut self.cur
+    }
+}
+
+/// Split `batch` rows into at most `depth` contiguous chunks of near-
+/// equal size — the micro-batches that overlap in flight.
+fn chunk_ranges(batch: usize, depth: usize) -> Vec<(usize, usize)> {
+    if batch == 0 {
+        return Vec::new();
+    }
+    let n_chunks = depth.min(batch).max(1);
+    let per = batch.div_ceil(n_chunks);
+    let mut out = Vec::with_capacity(n_chunks);
+    let mut r0 = 0;
+    while r0 < batch {
+        let rows = per.min(batch - r0);
+        out.push((r0, rows));
+        r0 += rows;
+    }
+    out
+}
+
+/// Stream `x` through the pipeline in row chunks and reassemble the
+/// output in submission order. On a stage panic the remaining chunks
+/// are still drained (the pipeline stays aligned for the next batch)
+/// and the whole batch reports the stage error.
+fn run_chunks<J: PipelineJob>(
+    pipe: &StagePipeline<J>,
+    free: &mut Vec<J>,
+    x: &Matrix,
+    out_dim: usize,
+) -> Result<Matrix> {
+    let chunks = chunk_ranges(x.rows, pipe.depth());
+    for &(r0, rows) in &chunks {
+        let mut job = free.pop().unwrap_or_default();
+        let cur = job.cur_mut();
+        cur.resize_zeroed(rows, x.cols);
+        cur.data.copy_from_slice(&x.data[r0 * x.cols..(r0 + rows) * x.cols]);
+        if !pipe.submit(job) {
+            bail!("stage pipeline is shut down");
+        }
+    }
+    let mut out = Matrix::zeros(x.rows, out_dim);
+    let mut failure: Option<StageError> = None;
+    for &(r0, rows) in &chunks {
+        match pipe.recv() {
+            None => bail!("stage pipeline closed mid-batch"),
+            Some(Err(e)) => failure = Some(e),
+            Some(Ok(job)) => {
+                let cur = job.cur();
+                debug_assert_eq!((cur.rows, cur.cols), (rows, out_dim));
+                out.data[r0 * out_dim..(r0 + rows) * out_dim].copy_from_slice(&cur.data);
+                free.push(job);
+            }
+        }
+    }
+    if let Some(e) = failure {
+        bail!("{e}");
+    }
+    Ok(out)
+}
+
+/// Stage-pipelined f32 backend: per-layer stage threads over
+/// [`crate::nn::mlp::Layer::forward_into`]. Output is bitwise identical
+/// to [`Mlp::forward_with`] at every depth.
+pub struct PipelineCpuBackend {
+    pub mlp: Mlp,
+    name: String,
+    pipe: StagePipeline<CpuJob>,
+    staging: Matrix,
+    free: Vec<CpuJob>,
+}
+
+impl PipelineCpuBackend {
+    pub fn new(mlp: Mlp, depth: usize) -> Self {
+        let mut stages: Vec<(String, StageFn<CpuJob>)> = Vec::with_capacity(mlp.layers.len());
+        for (i, layer) in mlp.layers.iter().enumerate() {
+            // The stage thread owns its layer's weights: the clone moves
+            // into the stage closure.
+            let layer = layer.clone();
+            let f: StageFn<CpuJob> = Box::new(move |job| {
+                layer.forward_into(&job.cur, &mut job.next);
+                std::mem::swap(&mut job.cur, &mut job.next);
+            });
+            stages.push((format!("layer{i}"), f));
+        }
+        PipelineCpuBackend {
+            mlp,
+            name: "pipeline".into(),
+            pipe: StagePipeline::new("cpu-pipe", depth, stages),
+            staging: Matrix::zeros(0, 0),
+            free: Vec::new(),
+        }
+    }
+
+    /// In-flight micro-batch bound the pipeline was built with.
+    pub fn depth(&self) -> usize {
+        self.pipe.depth()
+    }
+
+    /// Batched forward through the stage pipeline — what the
+    /// conformance suite compares bitwise against
+    /// [`Mlp::forward_with`].
+    pub fn forward_batch(&mut self, x: &Matrix) -> Result<Matrix> {
+        assert_eq!(x.cols, self.mlp.input_dim(), "input dim");
+        run_chunks(&self.pipe, &mut self.free, x, self.mlp.output_dim())
+    }
+}
+
+impl Backend for PipelineCpuBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn max_batch(&self) -> usize {
+        256
+    }
+
+    fn infer(&mut self, inputs: &[Vec<f32>]) -> Result<(Vec<Vec<f32>>, Option<CycleStats>)> {
+        stage_inputs(&mut self.staging, inputs, self.mlp.input_dim())?;
+        let y = run_chunks(&self.pipe, &mut self.free, &self.staging, self.mlp.output_dim())?;
+        let out = (0..inputs.len()).map(|r| y.row(r).to_vec()).collect();
+        Ok((out, None))
+    }
+
+    fn stage_stats(&self) -> Option<Vec<StageSnapshot>> {
+        Some(self.pipe.snapshots())
+    }
+}
+
+/// Stage-pipelined SPx backend: per-layer stage threads over
+/// [`crate::fpga::accelerator::QuantizedLayer::forward_batch_into`].
+/// Output is bitwise identical to [`Accelerator::forward_batch`] at
+/// every depth; simulator stats are the same data-independent
+/// `trace × B` accounting [`Accelerator::infer_batch`] reports.
+pub struct PipelineFpgaBackend {
+    pub accel: Accelerator,
+    name: String,
+    pipe: StagePipeline<SpxJob>,
+    staging: Matrix,
+    free: Vec<SpxJob>,
+}
+
+impl PipelineFpgaBackend {
+    pub fn new(accel: Accelerator, depth: usize) -> Self {
+        let n_layers = accel.model.layers.len();
+        let mut stages: Vec<(String, StageFn<SpxJob>)> = Vec::with_capacity(n_layers);
+        for (i, layer) in accel.model.layers.iter().enumerate() {
+            let layer = layer.clone();
+            let f: StageFn<SpxJob> = Box::new(move |job| {
+                layer.forward_batch_into(&job.cur, &mut job.next, &mut job.d_fixed, &mut job.d_t);
+                std::mem::swap(&mut job.cur, &mut job.next);
+            });
+            stages.push((format!("layer{i}"), f));
+        }
+        PipelineFpgaBackend {
+            name: "pipeline-fpga".into(),
+            pipe: StagePipeline::new("fpga-pipe", depth, stages),
+            staging: Matrix::zeros(0, 0),
+            free: Vec::new(),
+            accel,
+        }
+    }
+
+    fn input_dim(&self) -> usize {
+        self.accel.model.layers[0].w.shape[1]
+    }
+
+    fn output_dim(&self) -> usize {
+        self.accel.model.layers.last().unwrap().w.shape[0]
+    }
+
+    pub fn depth(&self) -> usize {
+        self.pipe.depth()
+    }
+
+    /// Batched forward through the stage pipeline — what the
+    /// conformance suite compares bitwise against
+    /// [`Accelerator::forward_batch`].
+    pub fn forward_batch(&mut self, x: &Matrix) -> Result<Matrix> {
+        assert_eq!(x.cols, self.input_dim(), "input dim");
+        let out_dim = self.output_dim();
+        run_chunks(&self.pipe, &mut self.free, x, out_dim)
+    }
+}
+
+impl Backend for PipelineFpgaBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn max_batch(&self) -> usize {
+        64
+    }
+
+    fn infer(&mut self, inputs: &[Vec<f32>]) -> Result<(Vec<Vec<f32>>, Option<CycleStats>)> {
+        stage_inputs(&mut self.staging, inputs, self.input_dim())?;
+        let out_dim = self.output_dim();
+        let y = run_chunks(&self.pipe, &mut self.free, &self.staging, out_dim)?;
+        let out = (0..inputs.len()).map(|r| y.row(r).to_vec()).collect();
+        Ok((out, Some(self.accel.batch_stats(inputs.len()))))
+    }
+
+    fn stage_stats(&self) -> Option<Vec<StageSnapshot>> {
+        Some(self.pipe.snapshots())
+    }
+}
+
+/// Stage-pipelined CPU backend following a slot's active model: a swap
+/// tears down the old stage threads and rebuilds the pipeline from the
+/// new version between batches (same generation protocol as
+/// [`super::registry::SwappableCpuBackend`]).
+pub struct SwappablePipelineCpuBackend {
+    slot: Arc<ModelSlot>,
+    depth: usize,
+    seen: u64,
+    inner: PipelineCpuBackend,
+}
+
+impl SwappablePipelineCpuBackend {
+    pub fn new(slot: Arc<ModelSlot>, depth: usize) -> Self {
+        let seen = slot.generation();
+        let inner = PipelineCpuBackend::new(slot.active().mlp.clone(), depth);
+        SwappablePipelineCpuBackend { slot, depth, seen, inner }
+    }
+
+    fn refresh(&mut self) {
+        let generation = self.slot.generation();
+        if generation != self.seen {
+            self.inner = PipelineCpuBackend::new(self.slot.active().mlp.clone(), self.depth);
+            self.seen = generation;
+        }
+    }
+}
+
+impl Backend for SwappablePipelineCpuBackend {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn max_batch(&self) -> usize {
+        self.inner.max_batch()
+    }
+
+    fn infer(&mut self, inputs: &[Vec<f32>]) -> Result<(Vec<Vec<f32>>, Option<CycleStats>)> {
+        self.refresh();
+        self.inner.infer(inputs)
+    }
+
+    fn stage_stats(&self) -> Option<Vec<StageSnapshot>> {
+        self.inner.stage_stats()
+    }
+}
+
+/// Stage-pipelined SPx backend following a slot's active model.
+pub struct SwappablePipelineFpgaBackend {
+    slot: Arc<ModelSlot>,
+    config: AccelConfig,
+    depth: usize,
+    seen: u64,
+    inner: PipelineFpgaBackend,
+}
+
+impl SwappablePipelineFpgaBackend {
+    pub fn new(slot: Arc<ModelSlot>, config: AccelConfig, depth: usize) -> Self {
+        let seen = slot.generation();
+        let accel = Accelerator::new(slot.active().quantized.clone(), config);
+        let inner = PipelineFpgaBackend::new(accel, depth);
+        SwappablePipelineFpgaBackend { slot, config, depth, seen, inner }
+    }
+
+    fn refresh(&mut self) {
+        let generation = self.slot.generation();
+        if generation != self.seen {
+            let accel = Accelerator::new(self.slot.active().quantized.clone(), self.config);
+            self.inner = PipelineFpgaBackend::new(accel, self.depth);
+            self.seen = generation;
+        }
+    }
+}
+
+impl Backend for SwappablePipelineFpgaBackend {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn max_batch(&self) -> usize {
+        self.inner.max_batch()
+    }
+
+    fn infer(&mut self, inputs: &[Vec<f32>]) -> Result<(Vec<Vec<f32>>, Option<CycleStats>)> {
+        self.refresh();
+        self.inner.infer(inputs)
+    }
+
+    fn stage_stats(&self) -> Option<Vec<StageSnapshot>> {
+        self.inner.stage_stats()
+    }
+}
+
+/// Replicable coordinator factory for slot-following stage-pipelined
+/// CPU workers.
+pub fn pipeline_cpu_factory(slot: Arc<ModelSlot>, depth: usize) -> SharedBackendFactory {
+    Arc::new(move || {
+        Ok(Box::new(SwappablePipelineCpuBackend::new(slot.clone(), depth)) as Box<dyn Backend>)
+    })
+}
+
+/// Replicable coordinator factory for slot-following stage-pipelined
+/// SPx workers.
+pub fn pipeline_fpga_factory(
+    slot: Arc<ModelSlot>,
+    config: AccelConfig,
+    depth: usize,
+) -> SharedBackendFactory {
+    Arc::new(move || {
+        Ok(Box::new(SwappablePipelineFpgaBackend::new(slot.clone(), config, depth))
+            as Box<dyn Backend>)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::accelerator::QuantizedMlp;
+    use crate::nn::activations::Activation;
+    use crate::nn::mlp::{ForwardScratch, MlpConfig};
+    use crate::quant::spx::SpxConfig;
+    use crate::quant::Calibration;
+    use crate::serve::ModelRegistry;
+    use crate::util::rng::Pcg32;
+
+    fn small_mlp(seed: u64) -> Mlp {
+        let mut rng = Pcg32::new(seed);
+        Mlp::new(
+            MlpConfig {
+                sizes: vec![8, 6, 3],
+                activations: vec![Activation::Sigmoid, Activation::Sigmoid],
+            },
+            &mut rng,
+        )
+    }
+
+    fn assert_bitwise(a: &Matrix, b: &Matrix, ctx: &str) {
+        assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{ctx}: shape");
+        for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: element {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn cpu_pipeline_bitwise_matches_forward_with() {
+        let mlp = small_mlp(1);
+        let mut rng = Pcg32::new(2);
+        let mut scratch = ForwardScratch::new();
+        for depth in 1..=4usize {
+            let mut be = PipelineCpuBackend::new(mlp.clone(), depth);
+            assert_eq!(be.depth(), depth);
+            for &batch in &[1usize, 3, 7] {
+                let x = Matrix::random_uniform(batch, 8, 1.0, &mut rng);
+                let want = mlp.forward_with(&x, &mut scratch).clone();
+                let got = be.forward_batch(&x).unwrap();
+                assert_bitwise(&got, &want, &format!("depth {depth} batch {batch}"));
+            }
+        }
+    }
+
+    #[test]
+    fn fpga_pipeline_bitwise_matches_forward_batch() {
+        let mlp = small_mlp(3);
+        let q = QuantizedMlp::from_mlp(&mlp, &SpxConfig::sp2(5), Calibration::MaxAbs, None);
+        let mut rng = Pcg32::new(4);
+        for depth in 1..=4usize {
+            let accel = Accelerator::new(q.clone(), AccelConfig::default_fpga());
+            let mut be = PipelineFpgaBackend::new(accel, depth);
+            for &batch in &[1usize, 2, 6] {
+                let x = Matrix::random_uniform(batch, 8, 1.0, &mut rng);
+                let want = be.accel.forward_batch(&x);
+                let got = be.forward_batch(&x).unwrap();
+                assert_bitwise(&got, &want, &format!("depth {depth} batch {batch}"));
+            }
+        }
+    }
+
+    #[test]
+    fn backend_infer_matches_per_sample_and_reports_stats() {
+        let mlp = small_mlp(5);
+        let q = QuantizedMlp::from_mlp(&mlp, &SpxConfig::sp2(5), Calibration::MaxAbs, None);
+        let accel = Accelerator::new(q, AccelConfig::default_fpga());
+        let mut be = PipelineFpgaBackend::new(accel, 2);
+        let inputs: Vec<Vec<f32>> = (0..5).map(|i| vec![0.1 * (i as f32 + 1.0); 8]).collect();
+        let (out, stats) = be.infer(&inputs).unwrap();
+        assert_eq!(out.len(), 5);
+        for (i, sample) in inputs.iter().enumerate() {
+            let (want, _) = be.accel.infer_one(sample);
+            assert_eq!(out[i], want, "sample {i}");
+        }
+        // Same accounting as the monolithic batched path.
+        let staged = Matrix::from_vec(5, 8, inputs.concat());
+        let (_, want_stats) = be.accel.infer_batch(&staged);
+        assert_eq!(stats.unwrap(), want_stats);
+    }
+
+    #[test]
+    fn stage_stats_cover_every_layer() {
+        let mut be = PipelineCpuBackend::new(small_mlp(6), 2);
+        let inputs = vec![vec![0.5f32; 8]; 4];
+        be.infer(&inputs).unwrap();
+        let stats = be.stage_stats().unwrap();
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats[0].label, "layer0");
+        assert_eq!(stats[1].label, "layer1");
+        // 4 samples at depth 2 split into 2 chunks per stage.
+        assert_eq!(stats[0].processed, 2);
+        assert_eq!(stats[1].processed, 2);
+    }
+
+    #[test]
+    fn cpu_pipeline_rejects_bad_dims() {
+        let mut be = PipelineCpuBackend::new(small_mlp(7), 2);
+        assert!(be.infer(&[vec![0.0; 5]]).is_err());
+        // The pipeline is still usable afterwards.
+        let (out, _) = be.infer(&[vec![0.25; 8]]).unwrap();
+        assert_eq!(out[0].len(), 3);
+    }
+
+    #[test]
+    fn swappable_pipeline_backends_follow_slot_activation() {
+        let reg = ModelRegistry::new("default", small_mlp(1), SpxConfig::sp2(5));
+        let v2 = small_mlp(2);
+        reg.register_mlp("v2", v2.clone());
+        let x = vec![0.4f32; 8];
+        let slot = reg.default_slot();
+
+        let mut cpu = SwappablePipelineCpuBackend::new(slot.clone(), 2);
+        let (before, _) = cpu.infer(&[x.clone()]).unwrap();
+        assert_eq!(before[0], reg.get("default").unwrap().mlp.forward_one(&x));
+
+        let mut fpga =
+            SwappablePipelineFpgaBackend::new(slot.clone(), AccelConfig::default_fpga(), 2);
+        let (fpga_before, _) = fpga.infer(&[x.clone()]).unwrap();
+
+        reg.activate("v2").unwrap();
+        let (after, _) = cpu.infer(&[x.clone()]).unwrap();
+        assert_eq!(after[0], v2.forward_one(&x));
+        assert_ne!(before[0], after[0], "swap did not change cpu outputs");
+        let (fpga_after, _) = fpga.infer(&[x.clone()]).unwrap();
+        assert_ne!(fpga_before[0], fpga_after[0], "swap did not change fpga outputs");
+    }
+
+    #[test]
+    fn chunk_ranges_cover_the_batch_exactly() {
+        for batch in 0..20usize {
+            for depth in 1..6usize {
+                let chunks = chunk_ranges(batch, depth);
+                assert!(chunks.len() <= depth.max(1));
+                let mut next = 0usize;
+                for &(r0, rows) in &chunks {
+                    assert_eq!(r0, next);
+                    assert!(rows > 0);
+                    next = r0 + rows;
+                }
+                assert_eq!(next, batch);
+            }
+        }
+    }
+}

@@ -24,6 +24,7 @@
 //! pool limit are answered with a `Status::Busy` error frame and
 //! dropped.
 
+use super::pipeline_backend::{pipeline_cpu_factory, pipeline_fpga_factory};
 use super::registry::{ModelRegistry, ModelSlot, SwapError};
 use super::wire::{
     self, Frame, ModelInfo, Opcode, ReadError, Status, BACKEND_ANY, DEFAULT_MAX_PAYLOAD,
@@ -71,6 +72,23 @@ pub enum BackendKind {
     Cpu,
     /// The cycle-accurate SPx accelerator simulator.
     FpgaSim(AccelConfig),
+    /// The stage-pipelined f32 forward
+    /// ([`super::pipeline_backend::PipelineCpuBackend`]): one thread
+    /// per layer, `depth` micro-batches in flight, bitwise identical
+    /// outputs to [`BackendKind::Cpu`].
+    PipelineCpu {
+        /// Maximum in-flight micro-batches (CLI `--pipeline-depth`).
+        depth: usize,
+    },
+    /// The stage-pipelined SPx path
+    /// ([`super::pipeline_backend::PipelineFpgaBackend`]): bitwise
+    /// identical outputs to [`BackendKind::FpgaSim`].
+    PipelineFpga {
+        /// Simulator microarchitecture (same as [`BackendKind::FpgaSim`]).
+        config: AccelConfig,
+        /// Maximum in-flight micro-batches (CLI `--pipeline-depth`).
+        depth: usize,
+    },
 }
 
 impl BackendKind {
@@ -78,6 +96,8 @@ impl BackendKind {
         match self {
             BackendKind::Cpu => "cpu",
             BackendKind::FpgaSim(_) => "fpga",
+            BackendKind::PipelineCpu { .. } => "pipeline",
+            BackendKind::PipelineFpga { .. } => "pipeline-fpga",
         }
     }
 }
@@ -162,6 +182,12 @@ impl Server {
                     BackendKind::Cpu => super::registry::swappable_cpu_factory(slot.clone()),
                     BackendKind::FpgaSim(config) => {
                         super::registry::swappable_fpga_factory(slot.clone(), *config)
+                    }
+                    BackendKind::PipelineCpu { depth } => {
+                        pipeline_cpu_factory(slot.clone(), *depth)
+                    }
+                    BackendKind::PipelineFpga { config, depth } => {
+                        pipeline_fpga_factory(slot.clone(), *config, *depth)
                     }
                 };
                 indices.push(pools.len());

@@ -1,0 +1,236 @@
+//! Cross-backend conformance suite (ISSUE 5 satellite): for seeded
+//! random MLP shapes — ragged, 1-layer, wide-short, deep, paper-sized —
+//! the CPU batched forward, the SPx accelerator path and the new
+//! stage-pipelined backends must agree:
+//!
+//! * **bitwise** between each pipelined backend (depths 1..4) and its
+//!   monolithic reference (`Mlp::forward_with` /
+//!   `Accelerator::forward_batch`), on whatever dispatch path the
+//!   process latched (CI runs this suite natively, under
+//!   `EDGEMLP_FORCE_SCALAR=1`, and under `EDGEMLP_GEMM_THREADS=1`);
+//! * **bitwise** between the SPx batched kernel and the per-sample
+//!   stream engine, and across GEMM thread counts per path;
+//! * within **FMA tolerance** between the f32 forward on forced-scalar
+//!   and native SIMD paths (`test_paths()` drives both through
+//!   `gemm_into_with` in one process);
+//! * within **quantization tolerance** between the f32 and SPx
+//!   backends on calibrated high-bit codes.
+
+use edgemlp::coordinator::backend::Backend;
+use edgemlp::fpga::accelerator::{AccelConfig, Accelerator, QuantizedMlp};
+use edgemlp::nn::activations::Activation;
+use edgemlp::nn::kernels::gemm::{configured_threads, gemm_into_with};
+use edgemlp::nn::kernels::simd::test_paths;
+use edgemlp::nn::kernels::{active_path, DispatchPath};
+use edgemlp::nn::mlp::{ForwardScratch, Mlp, MlpConfig};
+use edgemlp::nn::tensor::Matrix;
+use edgemlp::quant::spx::SpxConfig;
+use edgemlp::quant::Calibration;
+use edgemlp::serve::{PipelineCpuBackend, PipelineFpgaBackend};
+use edgemlp::util::check::assert_allclose;
+use edgemlp::util::rng::Pcg32;
+
+/// The shape zoo: ragged widths, a 1-layer net, wide-short (the
+/// column-banded GEMM shape), a deep narrow net, and the paper's MNIST
+/// network (large enough to trigger multi-band GEMM plans).
+fn shapes() -> Vec<Vec<usize>> {
+    vec![
+        vec![9, 7],
+        vec![12, 8, 4],
+        vec![17, 5, 9, 3],
+        vec![300, 9],
+        vec![6, 64, 64, 3],
+        vec![33, 128, 1],
+        vec![784, 128, 10],
+    ]
+}
+
+fn sigmoid_mlp(sizes: &[usize], rng: &mut Pcg32) -> Mlp {
+    Mlp::new(
+        MlpConfig {
+            sizes: sizes.to_vec(),
+            activations: vec![Activation::Sigmoid; sizes.len() - 1],
+        },
+        rng,
+    )
+}
+
+fn batches() -> [usize; 3] {
+    [1, 3, 8]
+}
+
+#[track_caller]
+fn assert_bitwise(a: &Matrix, b: &Matrix, ctx: &str) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{ctx}: shape");
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: element {i}: {x} vs {y}");
+    }
+}
+
+/// Layer-by-layer forward through `gemm_into_with` on an explicit
+/// dispatch path and thread cap, with the same bias/activation tail as
+/// `Layer::forward_into` — the path-pinned reference the cross-path
+/// checks compare.
+fn forward_with_path(path: DispatchPath, threads: usize, mlp: &Mlp, x: &Matrix) -> Matrix {
+    let mut cur = x.clone();
+    for layer in &mlp.layers {
+        let mut next = Matrix::zeros(cur.rows, layer.w.rows);
+        gemm_into_with(path, threads, &mut next, &cur, false, &layer.w, true);
+        next.add_row_inplace(&layer.b);
+        let act = layer.activation;
+        next.map_inplace(|v| act.apply(v));
+        cur = next;
+    }
+    cur
+}
+
+/// The pipelined CPU backend must reproduce `Mlp::forward_with` bit for
+/// bit on every shape, batch size and depth 1..4 — the tentpole's
+/// acceptance contract.
+#[test]
+fn cpu_pipeline_bitwise_across_shapes_batches_and_depths() {
+    let mut rng = Pcg32::new(0x51);
+    for sizes in shapes() {
+        let mlp = sigmoid_mlp(&sizes, &mut rng);
+        let mut scratch = ForwardScratch::new();
+        for depth in 1..=4usize {
+            let mut be = PipelineCpuBackend::new(mlp.clone(), depth);
+            for &batch in &batches() {
+                let x = Matrix::random_uniform(batch, mlp.input_dim(), 1.0, &mut rng);
+                let want = mlp.forward_with(&x, &mut scratch).clone();
+                let got = be.forward_batch(&x).unwrap();
+                let ctx = format!("shape {sizes:?} depth {depth} batch {batch}");
+                assert_bitwise(&got, &want, &ctx);
+                // The Backend::infer path (staging + per-row extraction)
+                // must carry the same bits.
+                let inputs: Vec<Vec<f32>> = (0..batch).map(|r| x.row(r).to_vec()).collect();
+                let (rows, stats) = be.infer(&inputs).unwrap();
+                assert!(stats.is_none());
+                for (r, row) in rows.iter().enumerate() {
+                    for (a, b) in row.iter().zip(want.row(r)) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: infer row {r}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The pipelined SPx backend must reproduce
+/// `Accelerator::forward_batch` bit for bit (exact integer datapath) on
+/// every shape, batch size and depth 1..4.
+#[test]
+fn spx_pipeline_bitwise_across_shapes_batches_and_depths() {
+    let mut rng = Pcg32::new(0x52);
+    for sizes in shapes() {
+        let mlp = sigmoid_mlp(&sizes, &mut rng);
+        let q = QuantizedMlp::from_mlp(&mlp, &SpxConfig::sp2(5), Calibration::MaxAbs, None);
+        for depth in 1..=4usize {
+            let accel = Accelerator::new(q.clone(), AccelConfig::default_fpga());
+            let mut be = PipelineFpgaBackend::new(accel, depth);
+            for &batch in &batches() {
+                let x = Matrix::random_uniform(batch, mlp.input_dim(), 1.0, &mut rng);
+                let want = be.accel.forward_batch(&x);
+                let got = be.forward_batch(&x).unwrap();
+                let ctx = format!("shape {sizes:?} depth {depth} batch {batch}");
+                assert_bitwise(&got, &want, &ctx);
+            }
+        }
+    }
+}
+
+/// The SPx batched kernel stays bit-identical to the per-sample stream
+/// engine on every random shape (broader than the fixed-shape unit
+/// test in `fpga/accelerator.rs`).
+#[test]
+fn spx_batch_bitwise_matches_per_sample_on_random_shapes() {
+    let mut rng = Pcg32::new(0x53);
+    for sizes in shapes() {
+        let mlp = sigmoid_mlp(&sizes, &mut rng);
+        let q = QuantizedMlp::from_mlp(&mlp, &SpxConfig::sp2(5), Calibration::MaxAbs, None);
+        let accel = Accelerator::new(q, AccelConfig::default_fpga());
+        let batch = 5usize;
+        let x = Matrix::random_uniform(batch, mlp.input_dim(), 1.0, &mut rng);
+        let batched = accel.forward_batch(&x);
+        for b in 0..batch {
+            let (single, _) = accel.infer_one(x.row(b));
+            for (got, want) in batched.row(b).iter().zip(&single) {
+                assert_eq!(got.to_bits(), want.to_bits(), "shape {sizes:?} sample {b}");
+            }
+        }
+    }
+}
+
+/// Forced-scalar and native SIMD paths agree within FMA tolerance, and
+/// each path is bitwise deterministic across GEMM thread counts —
+/// `test_paths()` runs both in one process, no env gymnastics needed.
+#[test]
+fn dispatch_paths_agree_within_fma_tolerance() {
+    let mut rng = Pcg32::new(0x54);
+    for sizes in shapes() {
+        let mlp = sigmoid_mlp(&sizes, &mut rng);
+        let x = Matrix::random_uniform(6, mlp.input_dim(), 1.0, &mut rng);
+        let scalar = forward_with_path(DispatchPath::Scalar, 1, &mlp, &x);
+        for path in test_paths() {
+            let single = forward_with_path(path, 1, &mlp, &x);
+            let banded = forward_with_path(path, 4, &mlp, &x);
+            let ctx = format!("shape {sizes:?} path {}", path.name());
+            assert_bitwise(&banded, &single, &format!("{ctx}: thread-count determinism"));
+            assert_allclose(&single.data, &scalar.data, 1e-4, 1e-3);
+        }
+    }
+}
+
+/// On the process's active dispatch path, the layer-by-layer
+/// `gemm_into_with` reference IS the `Mlp::forward` code path — bit for
+/// bit. Run natively this pins the SIMD path; under
+/// `EDGEMLP_FORCE_SCALAR=1` (the CI forced-scalar pass) it pins the
+/// scalar one.
+#[test]
+fn active_path_layerwise_reference_is_forward_bitwise() {
+    let mut rng = Pcg32::new(0x55);
+    for sizes in shapes() {
+        let mlp = sigmoid_mlp(&sizes, &mut rng);
+        let x = Matrix::random_uniform(4, mlp.input_dim(), 1.0, &mut rng);
+        let manual = forward_with_path(active_path(), configured_threads(), &mlp, &x);
+        let forward = mlp.forward(&x);
+        assert_bitwise(&manual, &forward, &format!("shape {sizes:?}"));
+    }
+}
+
+/// f32 and SPx backends agree within quantization tolerance on
+/// calibrated high-bit codes — the cross-backend sanity bound (exact
+/// agreement is impossible: the SPx path quantizes weights *and* data).
+#[test]
+fn cpu_and_spx_agree_within_quantization_tolerance() {
+    let mut rng = Pcg32::new(0x56);
+    for sizes in shapes() {
+        let mlp = sigmoid_mlp(&sizes, &mut rng);
+        let batch = 4usize;
+        let x = Matrix::random_uniform(batch, mlp.input_dim(), 1.0, &mut rng);
+        // Calibrate per-layer data ranges on the probe batch itself so
+        // the Q1.15 staging never clips.
+        let q =
+            QuantizedMlp::from_mlp(&mlp, &SpxConfig::spx(8, 2), Calibration::MaxAbs, Some(&x));
+        let accel = Accelerator::new(q, AccelConfig::default_fpga());
+        let spx = accel.forward_batch(&x);
+        let fp32 = mlp.forward(&x);
+        assert_allclose(&spx.data, &fp32.data, 0.15, 0.15);
+    }
+}
+
+/// Relu/identity networks (unbounded activations — the Q-network
+/// family) hold the same bitwise pipeline contract as sigmoid ones.
+#[test]
+fn qnet_activations_hold_the_bitwise_contract() {
+    let mut rng = Pcg32::new(0x57);
+    let mlp = Mlp::new(MlpConfig::paper_qnet(), &mut rng);
+    let mut scratch = ForwardScratch::new();
+    for depth in 1..=4usize {
+        let mut be = PipelineCpuBackend::new(mlp.clone(), depth);
+        let x = Matrix::random_uniform(7, mlp.input_dim(), 2.0, &mut rng);
+        let want = mlp.forward_with(&x, &mut scratch).clone();
+        let got = be.forward_batch(&x).unwrap();
+        assert_bitwise(&got, &want, &format!("qnet depth {depth}"));
+    }
+}

@@ -596,6 +596,60 @@ fn bad_magic_answered_then_connection_closed() {
     server.shutdown();
 }
 
+/// The stage-pipelined backend end-to-end over TCP: registered as its
+/// own engine backend kind, bitwise identical to the monolithic CPU
+/// forward, with per-stage occupancy surfaced by the Stats opcode.
+#[test]
+fn pipeline_backend_serves_bitwise_and_reports_stage_occupancy() {
+    let registry = ModelRegistry::new("default", mnist_shaped(1), SpxConfig::sp2(5));
+    let server = Server::serve(
+        registry,
+        "127.0.0.1:0",
+        EngineConfig {
+            replicas: 1,
+            backends: vec![BackendKind::Cpu, BackendKind::PipelineCpu { depth: 3 }],
+            coordinator: CoordinatorConfig {
+                queue_capacity: 1024,
+                policy: BatchPolicy::windowed(16, Duration::from_millis(1)),
+            },
+            serve: ServeConfig::default(),
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+    let want = mnist_shaped(1).forward_one(&probe());
+
+    let mut client = Client::connect(addr).unwrap();
+    // Backend 1 is the pipelined pool; its outputs must equal the
+    // monolithic forward bit for bit — the tentpole contract, observed
+    // over the real wire.
+    for round in 0..40 {
+        match client.infer(1, &probe()).unwrap() {
+            InferReply::Output(out) => {
+                assert_eq!(out.len(), want.len());
+                for (a, b) in out.iter().zip(&want) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "round {round}");
+                }
+            }
+            other => panic!("pipeline backend failed: {other:?}"),
+        }
+    }
+    // The monolithic CPU pool (backend 0) returns the same bits.
+    match client.infer(0, &probe()).unwrap() {
+        InferReply::Output(out) => {
+            for (a, b) in out.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        other => panic!("cpu backend failed: {other:?}"),
+    }
+    let stats = client.stats().unwrap();
+    assert!(stats.contains("pool pipeline/default"), "{stats}");
+    assert!(stats.contains("stage layer0"), "{stats}");
+    assert!(stats.contains("occupancy="), "{stats}");
+    server.shutdown();
+}
+
 #[test]
 fn over_limit_connection_gets_busy_frame() {
     let registry = ModelRegistry::new("default", mnist_shaped(1), SpxConfig::sp2(5));

@@ -1,0 +1,123 @@
+#!/usr/bin/env python3
+"""Regenerate the committed wire-protocol fuzz corpus.
+
+Usage: gen_wire_corpus.py [out_dir]   (default: rust/tests/data/wire_corpus)
+
+Each .bin file is a byte stream a hostile (or merely old) client might
+write to one TCP connection. `rust/tests/wire_fuzz.rs` replays every
+file against a live server and checks the expectation encoded in the
+filename prefix:
+
+  frame_*    framing error: at most one error frame (BadRequest, v1,
+             id 0) then a clean close; never a panic.
+  payload_*  well-framed but hostile payload: >= 1 response, every one
+             with a non-Ok status; the connection is not poisoned.
+  mixed_*    interleaved valid v1/v2 frames (possibly ending in
+             garbage): the server must answer what is answerable and
+             survive.
+
+The layout mirrors docs/wire-protocol.md: 20-byte header
+`"EMWP" | u16 version | u8 opcode | u8 status | u64 id | u32 len`,
+little-endian throughout.
+"""
+
+import os
+import struct
+import sys
+
+MAGIC = b"EMWP"
+
+
+def frame(version, opcode, status, req_id, payload):
+    return MAGIC + struct.pack("<HBBQI", version, opcode, status, req_id, len(payload)) + payload
+
+
+def name(s):
+    b = s.encode()
+    return struct.pack("<H", len(b)) + b
+
+
+def f32s(xs):
+    return b"".join(struct.pack("<f", x) for x in xs)
+
+
+def infer_v2(backend, model, xs):
+    return struct.pack("<I", backend) + name(model) + struct.pack("<I", len(xs)) + f32s(xs)
+
+
+def infer_v1(backend, xs):
+    return struct.pack("<I", backend) + struct.pack("<I", len(xs)) + f32s(xs)
+
+
+def main():
+    out = sys.argv[1] if len(sys.argv) > 1 else "rust/tests/data/wire_corpus"
+    os.makedirs(out, exist_ok=True)
+    dim8 = [0.25] * 8  # the fuzz server's model is 8-dimensional
+
+    corpus = {}
+
+    # --- framing errors: error frame (or nothing) + close ---
+    corpus["frame_truncated_header.bin"] = frame(2, 0, 0, 1, b"")[:10]
+    corpus["frame_bad_magic.bin"] = b"XXWP" + frame(2, 0, 0, 1, b"")[4:]
+    corpus["frame_bad_version_0.bin"] = frame(0, 0, 0, 1, b"")
+    corpus["frame_bad_version_99.bin"] = frame(99, 0, 0, 1, b"")
+    corpus["frame_bad_opcode.bin"] = frame(2, 200, 0, 1, b"")
+    corpus["frame_bad_status.bin"] = frame(2, 0, 200, 1, b"")
+    # Declares a payload over the 16 MiB cap; no payload bytes follow.
+    corpus["frame_oversized_len.bin"] = MAGIC + struct.pack("<HBBQI", 2, 1, 0, 1, 0xFFFFFFFF)
+    # Declares 100 payload bytes, delivers 10, then the stream ends.
+    corpus["frame_truncated_payload.bin"] = (
+        MAGIC + struct.pack("<HBBQI", 2, 0, 0, 1, 100) + b"\x00" * 10
+    )
+
+    # --- hostile payloads inside valid frames: BadRequest, no close ---
+    # batch = u32::MAX with dim = 0 in a 12-byte payload (alloc bomb).
+    corpus["payload_batch_geometry_bomb.bin"] = frame(
+        1, 2, 0, 2, struct.pack("<III", 0, 0xFFFFFFFF, 0)
+    )
+    # Declared geometry disagrees with the bytes present.
+    corpus["payload_batch_count_lie.bin"] = frame(
+        1,
+        2,
+        0,
+        3,
+        struct.pack("<III", 0, 100, 8) + f32s(dim8) * 2,
+    )
+    corpus["payload_infer_trailing_garbage.bin"] = frame(
+        2, 1, 0, 4, infer_v2(0, "", dim8) + b"\x00"
+    )
+    # v2 model-name length pointing far past the payload.
+    corpus["payload_model_name_overflow.bin"] = frame(
+        2, 1, 0, 5, struct.pack("<IH", 0, 0xFFFF) + f32s(dim8)
+    )
+    # ListModels framed at v1 (the opcode is v2-only).
+    corpus["payload_listmodels_v1.bin"] = frame(1, 5, 0, 6, b"")
+    # SwapModel naming a slot/model the server does not hold.
+    corpus["payload_swap_unknown.bin"] = frame(2, 4, 0, 7, name("ghost") + name("nope"))
+    # Well-formed Infer whose dimension mismatches the served model.
+    corpus["payload_infer_wrong_dim.bin"] = frame(2, 1, 0, 8, infer_v2(0, "", [1.0, 2.0, 3.0]))
+    # v1 Infer with a dim lying about the f32s present.
+    corpus["payload_infer_v1_dim_lie.bin"] = frame(
+        1, 1, 0, 9, struct.pack("<II", 0, 1000) + f32s(dim8)
+    )
+
+    # --- mixed v1/v2 traffic on one connection ---
+    corpus["mixed_v1_v2_round_trip.bin"] = (
+        frame(1, 0, 0, 10, b"ping-v1")
+        + frame(2, 0, 0, 11, b"ping-v2")
+        + frame(1, 1, 0, 12, infer_v1(0, dim8))
+        + frame(2, 1, 0, 13, infer_v2(0, "", dim8))
+    )
+    corpus["mixed_valid_then_garbage.bin"] = (
+        frame(2, 0, 0, 14, b"ok") + frame(1, 1, 0, 15, infer_v1(0, dim8)) + b"\xde" * 24
+    )
+
+    for fname, data in sorted(corpus.items()):
+        with open(os.path.join(out, fname), "wb") as f:
+            f.write(data)
+        print(f"{fname}: {len(data)} bytes")
+    print(f"wrote {len(corpus)} corpus files to {out}")
+
+
+if __name__ == "__main__":
+    main()
