@@ -7,7 +7,7 @@
 //! repo-root baseline with `tools/bench_delta.py`. `cargo bench
 //! --bench gemm` — see EXPERIMENTS.md §Perf and §Perf gains.
 
-use edgemlp::bench_harness::{bench, fmt_time, BenchConfig, BenchJson, Table};
+use edgemlp::bench_harness::{bench, fmt_time, BenchConfig, BenchJson, HostFingerprint, Table};
 use edgemlp::fpga::accelerator::{AccelConfig, Accelerator, QuantizedMlp};
 use edgemlp::nn::kernels::{gemm::configured_threads, gemm_into_with, simd, DispatchPath};
 use edgemlp::nn::mlp::{Mlp, MlpConfig};
@@ -155,6 +155,7 @@ fn main() {
     );
     e9.print();
 
+    HostFingerprint::detect().stamp(&mut json);
     let path = std::env::var("EDGEMLP_BENCH_JSON").unwrap_or_else(|_| "BENCH_gemm.json".into());
     json.write(Path::new(&path)).expect("write bench json");
     println!("\nwrote {path}");

@@ -1,8 +1,10 @@
 //! Bench: end-to-end TCP serving throughput/latency of the network
 //! subsystem (wire protocol → connection pool → model routing →
 //! coordinator worker pools → CPU/FPGA-sim backends), plus the E8
-//! replica-scaling sweep and the E10 stage-pipelined depth sweep
-//! (pipelined vs monolithic CPU at depths 1..4, single replica).
+//! replica-scaling sweep, the E10 stage-pipelined depth sweep
+//! (pipelined vs monolithic CPU at depths 1..4, single replica), and
+//! the E11 SLO sweep (deadline-carrying load at 0.5×/1×/2× capacity:
+//! attainment and shed-rate curves under admission control).
 //! Emits `BENCH_serving.json` (override the
 //! path with `EDGEMLP_BENCH_JSON`) alongside `BENCH_gemm.json` for the
 //! perf trajectory. `cargo bench --bench serving` — see EXPERIMENTS.md
@@ -13,13 +15,14 @@
 //! only parallelism variable the sweep measures (intra-op threading
 //! would otherwise oversubscribe the cores and mask the scaling).
 
-use edgemlp::bench_harness::{fmt_time, BenchJson, Table};
+use edgemlp::bench_harness::{fmt_time, BenchJson, HostFingerprint, Table};
 use edgemlp::coordinator::{BatchPolicy, CoordinatorConfig};
 use edgemlp::fpga::accelerator::AccelConfig;
 use edgemlp::nn::mlp::{Mlp, MlpConfig};
 use edgemlp::quant::spx::SpxConfig;
 use edgemlp::serve::{
-    run_loadgen, BackendKind, EngineConfig, LoadGenConfig, ModelRegistry, ServeConfig, Server,
+    run_loadgen, run_slo_sweep, BackendKind, EngineConfig, LoadGenConfig, ModelRegistry,
+    ServeConfig, Server,
 };
 use edgemlp::util::rng::Pcg32;
 use std::path::Path;
@@ -236,6 +239,56 @@ fn main() {
     println!("\n=== E10: stage-pipelined backend, depth sweep (EXPERIMENTS.md §E10) ===\n");
     pipe_table.print();
 
+    // ---- E11: SLO attainment & shed rate under rising offered load. ----
+    // Deadline-carrying traffic against a single-replica CPU pool at
+    // 0.5×/1×/2× the capacity measured in E8 (`base_rps`). Graceful
+    // degradation means attainment among accepted requests holds near
+    // 1.0 at every rung while admission control sheds the overload
+    // (docs/serving-resilience.md) — the 2× rung is the acceptance
+    // scenario, not a failure mode.
+    let server = Server::serve(registry(), "127.0.0.1:0", engine(1, vec![BackendKind::Cpu]))
+        .expect("start slo server");
+    let slo_base_rps = base_rps.max(50.0);
+    let slo_config = LoadGenConfig {
+        requests: if quick { 500 } else { 4_000 },
+        connections: 4,
+        backend: 0,
+        dim: 784,
+        batch: 1,
+        pipeline: 8,
+        rate_rps: slo_base_rps,
+        deadline_us: 50_000,
+        ..LoadGenConfig::default()
+    };
+    let factors = [0.5, 1.0, 2.0];
+    let points = run_slo_sweep(server.local_addr(), &slo_config, &factors).expect("slo sweep");
+    server.shutdown();
+    let mut slo_table =
+        Table::new(&["rate (rps)", "sent", "ok", "shed+expired", "attainment", "p99"]);
+    for (factor, p) in factors.iter().zip(&points) {
+        assert_eq!(p.ok + p.shed + p.expired + p.errors, p.sent, "lost responses");
+        slo_table.row(&[
+            format!("{:.0}", p.rate_rps),
+            p.sent.to_string(),
+            p.ok.to_string(),
+            (p.shed + p.expired).to_string(),
+            format!("{:.1}%", p.attainment * 100.0),
+            fmt_time(p.p99_s),
+        ]);
+        // Keys are by load factor, not absolute rate — absolute capacity
+        // varies per host, the shape of the curve is what trends.
+        let label = format!("{factor}x").replace('.', "_");
+        json.num(&format!("serving_slo_{label}_attainment"), p.attainment);
+        json.num(&format!("serving_slo_{label}_shed_rate"), p.shed_rate);
+        json.num(&format!("serving_slo_{label}_p99_ms"), p.p99_s * 1e3);
+    }
+    json.num("serving_slo_base_rps", slo_base_rps);
+    json.num("serving_slo_deadline_ms", slo_config.deadline_us as f64 / 1e3);
+
+    println!("\n=== E11: SLO sweep, deadline 50 ms (EXPERIMENTS.md §E11) ===\n");
+    slo_table.print();
+
+    HostFingerprint::detect().stamp(&mut json);
     let path =
         std::env::var("EDGEMLP_BENCH_JSON").unwrap_or_else(|_| "BENCH_serving.json".into());
     json.write(Path::new(&path)).expect("write bench json");

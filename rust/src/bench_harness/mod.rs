@@ -154,6 +154,42 @@ impl BenchJson {
     }
 }
 
+/// Host fingerprint for `BENCH_*.json` provenance: core count, ISA,
+/// SIMD dispatch path, and GEMM pool width. `tools/bench_delta.py`
+/// arms its regression gate only when the baseline carries these keys
+/// (a fingerprint-less baseline is provisional) and disarms it when
+/// they differ — numbers from different hosts are not comparable.
+#[derive(Debug, Clone)]
+pub struct HostFingerprint {
+    pub cores: usize,
+    pub arch: &'static str,
+    pub dispatch_path: &'static str,
+    pub gemm_threads: usize,
+}
+
+impl HostFingerprint {
+    /// Detect the fingerprint of this process. Respects
+    /// `EDGEMLP_FORCE_SCALAR` and `EDGEMLP_GEMM_THREADS`, so it
+    /// describes the configuration actually benchmarked, not the raw
+    /// silicon.
+    pub fn detect() -> Self {
+        HostFingerprint {
+            cores: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            arch: std::env::consts::ARCH,
+            dispatch_path: crate::nn::kernels::active_path().name(),
+            gemm_threads: crate::nn::kernels::gemm::configured_threads(),
+        }
+    }
+
+    /// Stamp the `host_*` keys into a bench JSON object.
+    pub fn stamp(&self, json: &mut BenchJson) {
+        json.num("host_cores", self.cores as f64);
+        json.text("host_arch", self.arch);
+        json.text("host_dispatch_path", self.dispatch_path);
+        json.num("host_gemm_threads", self.gemm_threads as f64);
+    }
+}
+
 /// An aligned text table writer for bench reports (also understood by
 /// EXPERIMENTS.md — the benches print markdown tables).
 pub struct Table {
@@ -261,6 +297,20 @@ mod tests {
         j.num("x", 1.0);
         j.write(&path).unwrap();
         assert_eq!(std::fs::read_to_string(&path).unwrap(), j.render());
+    }
+
+    #[test]
+    fn host_fingerprint_stamps_all_keys() {
+        let fp = HostFingerprint::detect();
+        assert!(fp.cores >= 1);
+        assert!(fp.gemm_threads >= 1);
+        assert!(!fp.dispatch_path.is_empty());
+        let mut j = BenchJson::new();
+        fp.stamp(&mut j);
+        let s = j.render();
+        for key in ["host_cores", "host_arch", "host_dispatch_path", "host_gemm_threads"] {
+            assert!(s.contains(key), "fingerprint must emit {key}");
+        }
     }
 
     #[test]

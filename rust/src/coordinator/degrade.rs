@@ -1,0 +1,216 @@
+//! Degraded-mode controller: the scheduler-level analogue of the
+//! paper's precision-for-power dial. When a model's pools stay
+//! saturated past a dwell threshold, `BACKEND_ANY` traffic is routed to
+//! the model's cheapest backend (e.g. the SPx shift-add datapath
+//! instead of CPU f32) until load subsides — trading a little accuracy
+//! for queue headroom instead of letting deadlines blow out.
+//!
+//! The controller is a pure hysteresis state machine over an occupancy
+//! signal in `[0, 1]` (queue depth / capacity of the best pool the
+//! router could pick). Hysteresis is double: separate enter/exit
+//! thresholds AND separate dwell times, so occupancy flapping around
+//! either threshold cannot flap the mode. Every method takes `now`
+//! explicitly — tests drive it with a synthetic clock, and the server
+//! samples it on each routing decision and `Health` poll.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Hysteresis thresholds for [`DegradeController`].
+#[derive(Debug, Clone, Copy)]
+pub struct DegradePolicy {
+    /// Enter degraded mode after occupancy stays `>= enter_occupancy`
+    /// for `enter_after`.
+    pub enter_occupancy: f64,
+    /// Leave degraded mode after occupancy stays `< exit_occupancy`
+    /// for `exit_after`. Must be below `enter_occupancy` for the
+    /// hysteresis band to exist.
+    pub exit_occupancy: f64,
+    pub enter_after: Duration,
+    pub exit_after: Duration,
+}
+
+impl Default for DegradePolicy {
+    fn default() -> Self {
+        DegradePolicy {
+            enter_occupancy: 0.75,
+            exit_occupancy: 0.25,
+            enter_after: Duration::from_millis(250),
+            exit_after: Duration::from_millis(500),
+        }
+    }
+}
+
+impl DegradePolicy {
+    pub fn validate(&self) -> Result<(), String> {
+        if !(0.0..=1.0).contains(&self.enter_occupancy)
+            || !(0.0..=1.0).contains(&self.exit_occupancy)
+        {
+            return Err("degrade occupancy thresholds must be in [0, 1]".into());
+        }
+        if self.exit_occupancy >= self.enter_occupancy {
+            return Err(format!(
+                "degrade exit occupancy {} must be below enter occupancy {} \
+                 (no hysteresis band)",
+                self.exit_occupancy, self.enter_occupancy
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[derive(Debug, Default)]
+struct DegradeState {
+    degraded: bool,
+    /// Start of the current continuous stretch above the enter
+    /// threshold (while normal) or below the exit threshold (while
+    /// degraded). Cleared whenever the signal leaves the stretch.
+    stretch_start: Option<Instant>,
+    transitions: u64,
+}
+
+/// The per-model mode state machine. Interior-mutable so routing
+/// threads can observe through a shared reference.
+#[derive(Debug)]
+pub struct DegradeController {
+    policy: DegradePolicy,
+    state: Mutex<DegradeState>,
+}
+
+impl DegradeController {
+    pub fn new(policy: DegradePolicy) -> DegradeController {
+        debug_assert!(policy.validate().is_ok());
+        DegradeController { policy, state: Mutex::new(DegradeState::default()) }
+    }
+
+    /// Feed one occupancy sample at `now`; returns the (possibly newly
+    /// flipped) degraded flag. Also returns whether this sample flipped
+    /// the mode, so the caller can count transitions exactly once.
+    pub fn observe(&self, occupancy: f64, now: Instant) -> (bool, bool) {
+        let mut st = self.state.lock().unwrap();
+        let (in_stretch, dwell) = if st.degraded {
+            (occupancy < self.policy.exit_occupancy, self.policy.exit_after)
+        } else {
+            (occupancy >= self.policy.enter_occupancy, self.policy.enter_after)
+        };
+        if !in_stretch {
+            st.stretch_start = None;
+            return (st.degraded, false);
+        }
+        let start = *st.stretch_start.get_or_insert(now);
+        if now.saturating_duration_since(start) >= dwell {
+            st.degraded = !st.degraded;
+            st.stretch_start = None;
+            st.transitions += 1;
+            return (st.degraded, true);
+        }
+        (st.degraded, false)
+    }
+
+    pub fn is_degraded(&self) -> bool {
+        self.state.lock().unwrap().degraded
+    }
+
+    pub fn transitions(&self) -> u64 {
+        self.state.lock().unwrap().transitions
+    }
+
+    pub fn policy(&self) -> DegradePolicy {
+        self.policy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn controller() -> DegradeController {
+        DegradeController::new(DegradePolicy {
+            enter_occupancy: 0.8,
+            exit_occupancy: 0.2,
+            enter_after: Duration::from_millis(100),
+            exit_after: Duration::from_millis(200),
+        })
+    }
+
+    /// Synthetic clock: all tests drive `observe` with explicit
+    /// instants, so no sleeping and no wall-clock flakiness.
+    fn clock() -> impl FnMut(u64) -> Instant {
+        let epoch = Instant::now();
+        move |ms| epoch + Duration::from_millis(ms)
+    }
+
+    #[test]
+    fn enters_only_after_sustained_saturation() {
+        let c = controller();
+        let mut at = clock();
+        // A short burst above the threshold is not enough.
+        assert_eq!(c.observe(0.9, at(0)), (false, false));
+        assert_eq!(c.observe(0.9, at(50)), (false, false));
+        // Dip below: the stretch resets.
+        assert_eq!(c.observe(0.5, at(60)), (false, false));
+        assert_eq!(c.observe(0.9, at(70)), (false, false));
+        assert_eq!(c.observe(0.9, at(150)), (false, false)); // only 80ms in
+        // Sustained past the dwell: flip.
+        assert_eq!(c.observe(0.9, at(170)), (true, true));
+        assert_eq!(c.transitions(), 1);
+        // Further saturated samples do not re-flip.
+        assert_eq!(c.observe(0.95, at(400)), (true, false));
+        assert_eq!(c.transitions(), 1);
+    }
+
+    #[test]
+    fn exits_only_after_sustained_calm() {
+        let c = controller();
+        let mut at = clock();
+        c.observe(1.0, at(0));
+        assert_eq!(c.observe(1.0, at(100)), (true, true));
+        // Calm, but not for long enough.
+        assert_eq!(c.observe(0.1, at(110)), (true, false));
+        assert_eq!(c.observe(0.1, at(250)), (true, false)); // 140ms < 200ms
+        // A load spike resets the calm stretch.
+        assert_eq!(c.observe(0.5, at(260)), (true, false));
+        assert_eq!(c.observe(0.1, at(270)), (true, false));
+        assert_eq!(c.observe(0.1, at(400)), (true, false)); // 130ms back in
+        assert_eq!(c.observe(0.1, at(470)), (false, true)); // 200ms: recover
+        assert_eq!(c.transitions(), 2);
+    }
+
+    #[test]
+    fn flapping_inside_the_band_never_flips() {
+        // Occupancy oscillating between the two thresholds (0.2..0.8)
+        // belongs to neither stretch — the mode must hold steady.
+        let c = controller();
+        let mut at = clock();
+        for t in 0..50u64 {
+            let occ = if t % 2 == 0 { 0.3 } else { 0.7 };
+            let (deg, flipped) = c.observe(occ, at(t * 50));
+            assert!(!deg && !flipped, "t={t}");
+        }
+        assert_eq!(c.transitions(), 0);
+    }
+
+    #[test]
+    fn boundary_samples_count_toward_the_correct_side() {
+        let c = controller();
+        let mut at = clock();
+        // Exactly at the enter threshold counts as saturated (>=).
+        c.observe(0.8, at(0));
+        assert_eq!(c.observe(0.8, at(100)), (true, true));
+        // Exactly at the exit threshold is NOT calm (<).
+        c.observe(0.2, at(110));
+        assert_eq!(c.observe(0.2, at(500)), (true, false));
+        // Just below it is.
+        c.observe(0.19, at(510));
+        assert_eq!(c.observe(0.19, at(710)), (false, true));
+    }
+
+    #[test]
+    fn policy_validation_rejects_inverted_band() {
+        assert!(DegradePolicy::default().validate().is_ok());
+        let bad = DegradePolicy { enter_occupancy: 0.3, exit_occupancy: 0.5, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = DegradePolicy { enter_occupancy: 1.5, ..Default::default() };
+        assert!(bad.validate().is_err());
+    }
+}

@@ -101,6 +101,12 @@ pub struct BackendMetrics {
     pub batches: u64,
     pub batch_size_sum: u64,
     pub errors: u64,
+    /// Requests shed at this pool's queue (backpressure / admission).
+    pub shed: u64,
+    /// Requests answered `Expired` for this pool: rejected at admission
+    /// because the estimated wait overshot the deadline, or expired in
+    /// the queue before a worker reached them.
+    pub expired: u64,
     /// Accumulated simulator events (FPGA backend only).
     pub cycle_stats: CycleStats,
     /// Latest per-stage occupancy/stall snapshot (stage-pipelined
@@ -124,6 +130,10 @@ impl BackendMetrics {
 pub struct MetricsSnapshot {
     pub backends: BTreeMap<String, BackendMetrics>,
     pub rejected: u64,
+    /// Total `Expired` answers across pools (admission + in-queue).
+    pub expired: u64,
+    /// Degraded-mode flips (normal→degraded and back) since startup.
+    pub degraded_transitions: u64,
 }
 
 impl MetricsSnapshot {
@@ -141,14 +151,19 @@ impl MetricsSnapshot {
     /// input and blocking on a full downstream channel.
     pub fn render(&self) -> String {
         use crate::bench_harness::fmt_time;
-        let mut out = format!("rejected: {}\n", self.rejected);
+        let mut out = format!(
+            "rejected: {} expired: {} degraded_transitions: {}\n",
+            self.rejected, self.expired, self.degraded_transitions
+        );
         for (name, m) in &self.backends {
             out.push_str(&format!(
-                "pool {name}: requests={} batches={} errors={} mean_batch={:.1} \
-                 p50={} p95={} p99={} p99.9={} max={}\n",
+                "pool {name}: requests={} batches={} errors={} shed={} expired={} \
+                 mean_batch={:.1} p50={} p95={} p99={} p99.9={} max={}\n",
                 m.requests,
                 m.batches,
                 m.errors,
+                m.shed,
+                m.expired,
                 m.mean_batch(),
                 fmt_time(m.latency.p50_s()),
                 fmt_time(m.latency.p95_s()),
@@ -185,6 +200,8 @@ pub struct Metrics {
 struct MetricsInner {
     backends: BTreeMap<String, BackendMetrics>,
     rejected: u64,
+    expired: u64,
+    degraded_transitions: u64,
 }
 
 impl Metrics {
@@ -232,9 +249,35 @@ impl Metrics {
         self.inner.lock().unwrap().rejected += 1;
     }
 
+    /// A request was shed at a known pool's full queue — the per-pool
+    /// flavor of [`Metrics::record_rejected`] (increments both).
+    pub fn record_shed(&self, backend: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.rejected += 1;
+        inner.backends.entry(backend.to_string()).or_default().shed += 1;
+    }
+
+    /// A request was answered `Expired` (admission reject or in-queue
+    /// expiry) at `backend`'s pool.
+    pub fn record_expired(&self, backend: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.expired += 1;
+        inner.backends.entry(backend.to_string()).or_default().expired += 1;
+    }
+
+    /// Degraded-mode routing flipped (either direction).
+    pub fn record_degraded_transition(&self) {
+        self.inner.lock().unwrap().degraded_transitions += 1;
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let inner = self.inner.lock().unwrap();
-        MetricsSnapshot { backends: inner.backends.clone(), rejected: inner.rejected }
+        MetricsSnapshot {
+            backends: inner.backends.clone(),
+            rejected: inner.rejected,
+            expired: inner.expired,
+            degraded_transitions: inner.degraded_transitions,
+        }
     }
 }
 
@@ -277,6 +320,29 @@ mod tests {
         assert!((snap.backends["cpu"].mean_batch() - 3.0).abs() < 1e-9);
         assert_eq!(snap.backends["fpga"].cycle_stats.macs, 10);
         assert_eq!(snap.rejected, 1);
+    }
+
+    #[test]
+    fn resilience_counters_aggregate() {
+        let m = Metrics::new();
+        m.record_shed("cpu");
+        m.record_shed("cpu");
+        m.record_expired("cpu");
+        m.record_expired("fpga");
+        m.record_degraded_transition();
+        m.record_degraded_transition();
+        m.record_rejected(); // pool-less legacy shed still counts globally
+        let snap = m.snapshot();
+        assert_eq!(snap.backends["cpu"].shed, 2);
+        assert_eq!(snap.backends["cpu"].expired, 1);
+        assert_eq!(snap.backends["fpga"].expired, 1);
+        assert_eq!(snap.rejected, 3);
+        assert_eq!(snap.expired, 2);
+        assert_eq!(snap.degraded_transitions, 2);
+        let text = snap.render();
+        assert!(text.contains("expired: 2"), "{text}");
+        assert!(text.contains("degraded_transitions: 2"), "{text}");
+        assert!(text.contains("shed=2"), "{text}");
     }
 
     #[test]

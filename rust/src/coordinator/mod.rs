@@ -26,6 +26,7 @@
 
 pub mod backend;
 pub mod batcher;
+pub mod degrade;
 pub mod metrics;
 pub mod queue;
 pub mod request;
@@ -33,6 +34,9 @@ pub mod server;
 
 pub use backend::{Backend, CpuBackend, FpgaBackend};
 pub use batcher::BatchPolicy;
+pub use degrade::{DegradeController, DegradePolicy};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use request::{InferRequest, InferResponse};
-pub use server::{Coordinator, CoordinatorConfig, PoolSpec, SharedBackendFactory};
+pub use request::{FailureKind, InferError, InferRequest, InferResponse};
+pub use server::{
+    Coordinator, CoordinatorConfig, PoolSpec, RequestQos, SharedBackendFactory, SubmitError,
+};

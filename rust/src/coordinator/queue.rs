@@ -10,10 +10,18 @@
 //! items remain passes the baton by re-notifying another waiter, so a
 //! burst larger than one consumer's `max` cannot strand work behind a
 //! straggler window.
+//!
+//! [`BoundedQueue::with_key`] turns the FIFO into a priority queue:
+//! items are held in ascending key order (stable — equal keys keep
+//! arrival order), which is how the coordinator gets earliest-deadline-
+//! first batch formation without a separate scheduler thread.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+/// Ordering key for [`BoundedQueue::with_key`].
+pub type KeyFn<T> = Box<dyn Fn(&T) -> u64 + Send + Sync>;
 
 /// Why a push or pop did not complete.
 #[derive(Debug, PartialEq, Eq)]
@@ -35,6 +43,8 @@ pub struct BoundedQueue<T> {
     not_full: Condvar,
     not_empty: Condvar,
     capacity: usize,
+    /// When set, items are kept sorted ascending by this key.
+    key_fn: Option<KeyFn<T>>,
 }
 
 impl<T> BoundedQueue<T> {
@@ -45,6 +55,35 @@ impl<T> BoundedQueue<T> {
             not_full: Condvar::new(),
             not_empty: Condvar::new(),
             capacity,
+            key_fn: None,
+        }
+    }
+
+    /// A priority variant: items are held in ascending `key` order, so
+    /// `pop_batch` always drains the smallest keys first. The insert is
+    /// stable (an item lands *after* existing items with an equal key),
+    /// preserving FIFO order within a key — deadline-free requests all
+    /// share one key and behave exactly like the plain FIFO.
+    pub fn with_key(capacity: usize, key: impl Fn(&T) -> u64 + Send + Sync + 'static) -> Self {
+        assert!(capacity > 0);
+        BoundedQueue {
+            state: Mutex::new(State { items: VecDeque::new(), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity,
+            key_fn: Some(Box::new(key)),
+        }
+    }
+
+    /// Ordered (or plain FIFO) insert into the locked state.
+    fn insert(&self, items: &mut VecDeque<T>, item: T) {
+        match &self.key_fn {
+            None => items.push_back(item),
+            Some(f) => {
+                let k = f(&item);
+                let idx = items.partition_point(|it| f(it) <= k);
+                items.insert(idx, item);
+            }
         }
     }
 
@@ -64,7 +103,7 @@ impl<T> BoundedQueue<T> {
                 return Err(QueueError::Closed);
             }
             if st.items.len() < self.capacity {
-                st.items.push_back(item);
+                self.insert(&mut st.items, item);
                 self.not_empty.notify_one();
                 return Ok(());
             }
@@ -82,7 +121,7 @@ impl<T> BoundedQueue<T> {
         if st.items.len() >= self.capacity {
             return Err(QueueError::Full);
         }
-        st.items.push_back(item);
+        self.insert(&mut st.items, item);
         self.not_empty.notify_one();
         Ok(())
     }
@@ -307,6 +346,32 @@ mod tests {
         thread::sleep(Duration::from_millis(400));
         q.push(2).unwrap();
         assert_eq!(victim.join().unwrap(), vec![2]);
+    }
+
+    #[test]
+    fn keyed_queue_drains_smallest_keys_first() {
+        // Key = the item itself: pop order is ascending regardless of
+        // push order — the EDF property batch formation relies on.
+        let q = BoundedQueue::with_key(16, |&x: &u64| x);
+        for v in [50u64, 10, 40, 20, 30] {
+            q.push(v).unwrap();
+        }
+        assert_eq!(q.pop_batch(3, Duration::ZERO), vec![10, 20, 30]);
+        // A later push with a smaller key jumps ahead of what remains.
+        q.try_push(5).unwrap();
+        assert_eq!(q.pop_batch(8, Duration::ZERO), vec![5, 40, 50]);
+    }
+
+    #[test]
+    fn keyed_queue_is_fifo_within_equal_keys() {
+        // (key, arrival) pairs: equal keys must keep arrival order, so
+        // deadline-free traffic (one shared key) stays strictly FIFO.
+        let q = BoundedQueue::with_key(16, |&(k, _): &(u64, u32)| k);
+        for (i, k) in [7u64, 7, 3, 7, 3].into_iter().enumerate() {
+            q.push((k, i as u32)).unwrap();
+        }
+        let batch = q.pop_batch(8, Duration::ZERO);
+        assert_eq!(batch, vec![(3, 2), (3, 4), (7, 0), (7, 1), (7, 3)]);
     }
 
     #[test]

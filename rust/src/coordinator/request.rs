@@ -3,9 +3,52 @@
 use std::sync::mpsc::Sender;
 use std::time::Instant;
 
+/// Scheduling rank riding on every request: lower runs sooner. The wire
+/// layer maps its `Priority` enum onto this (High=0, Normal=1, Low=2);
+/// the coordinator itself only compares ranks, keeping it independent
+/// of wire-protocol types.
+pub const PRIORITY_NORMAL: u8 = 1;
+
+/// Why a request failed without producing an output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailureKind {
+    /// The backend accepted the request and then failed (panic, error).
+    Backend,
+    /// The request's deadline passed before a worker reached it — no
+    /// inference was computed.
+    Expired,
+}
+
+/// A structured failure: the kind drives the wire status a server maps
+/// it to (`Backend` → `BackendError`, `Expired` → `Expired`), the
+/// message is diagnostic text.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InferError {
+    pub kind: FailureKind,
+    pub message: String,
+}
+
+impl InferError {
+    pub fn backend(message: impl Into<String>) -> InferError {
+        InferError { kind: FailureKind::Backend, message: message.into() }
+    }
+
+    pub fn expired(message: impl Into<String>) -> InferError {
+        InferError { kind: FailureKind::Expired, message: message.into() }
+    }
+}
+
+impl std::fmt::Display for InferError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.message)
+    }
+}
+
+impl std::error::Error for InferError {}
+
 /// What a request's response channel carries: the response, or a
-/// backend error description.
-pub type InferResult = Result<InferResponse, String>;
+/// structured failure.
+pub type InferResult = Result<InferResponse, InferError>;
 
 /// A single inference request: one flattened input vector.
 pub struct InferRequest {
@@ -13,8 +56,23 @@ pub struct InferRequest {
     pub payload: Vec<f32>,
     /// Enqueue timestamp — latency is measured from here.
     pub enqueued_at: Instant,
+    /// Completion deadline. A worker that pops this request after the
+    /// deadline answers `Expired` instead of running the backend, and
+    /// admission control rejects it up front when the estimated queue
+    /// wait alone already overshoots. `None` = the pre-v3 behavior.
+    pub deadline: Option<Instant>,
+    /// Scheduling rank (lower first); see [`PRIORITY_NORMAL`].
+    pub priority: u8,
     /// Oneshot-style response channel.
     pub respond_to: Sender<InferResult>,
+}
+
+impl InferRequest {
+    /// True once `now` is past the deadline (never for deadline-free
+    /// requests).
+    pub fn expired_at(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
 }
 
 /// The answer: output vector plus accounting.
@@ -34,6 +92,7 @@ pub struct InferResponse {
 mod tests {
     use super::*;
     use std::sync::mpsc::channel;
+    use std::time::Duration;
 
     #[test]
     fn request_roundtrip_through_channel() {
@@ -42,6 +101,8 @@ mod tests {
             id: 7,
             payload: vec![1.0, 2.0],
             enqueued_at: Instant::now(),
+            deadline: None,
+            priority: PRIORITY_NORMAL,
             respond_to: tx,
         };
         req.respond_to
@@ -56,5 +117,34 @@ mod tests {
         let resp = rx.recv().unwrap().unwrap();
         assert_eq!(resp.id, 7);
         assert_eq!(resp.batch_size, 1);
+    }
+
+    #[test]
+    fn expiry_is_deadline_relative() {
+        let (tx, _rx) = channel();
+        let now = Instant::now();
+        let mut req = InferRequest {
+            id: 1,
+            payload: vec![],
+            enqueued_at: now,
+            deadline: None,
+            priority: PRIORITY_NORMAL,
+            respond_to: tx,
+        };
+        assert!(!req.expired_at(now + Duration::from_secs(3600)));
+        req.deadline = Some(now + Duration::from_millis(50));
+        assert!(!req.expired_at(now));
+        assert!(req.expired_at(now + Duration::from_millis(50)));
+        assert!(req.expired_at(now + Duration::from_secs(1)));
+    }
+
+    #[test]
+    fn error_kinds_distinguish_expiry_from_backend_failure() {
+        let e = InferError::expired("deadline passed in queue");
+        assert_eq!(e.kind, FailureKind::Expired);
+        assert_eq!(e.to_string(), "deadline passed in queue");
+        let b = InferError::backend("kaboom");
+        assert_eq!(b.kind, FailureKind::Backend);
+        assert_ne!(e, b);
     }
 }

@@ -14,7 +14,7 @@ use super::backend::Backend;
 use super::batcher::BatchPolicy;
 use super::metrics::Metrics;
 use super::queue::{BoundedQueue, QueueError};
-use super::request::{InferRequest, InferResponse, InferResult};
+use super::request::{InferError, InferRequest, InferResponse, InferResult, PRIORITY_NORMAL};
 use crate::nn::kernels::pipeline::panic_message;
 use anyhow::{bail, Context, Result};
 use std::panic::AssertUnwindSafe;
@@ -22,7 +22,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Factory run once on a worker thread to build its backend.
 pub type BackendFactory = Box<dyn FnOnce() -> Result<Box<dyn Backend>> + Send>;
@@ -100,6 +100,59 @@ pub enum SubmitError {
     Closed,
     /// No backend with that name.
     UnknownBackend,
+    /// Admission control: the estimated queue wait alone already
+    /// overshoots the request's deadline, so computing the answer would
+    /// only waste a worker on a result nobody can use. Rejected on
+    /// arrival, nothing enqueued.
+    Expired {
+        /// The wait estimate that sank the request (for diagnostics).
+        estimated_wait: Duration,
+    },
+}
+
+/// Per-request scheduling inputs carried into the coordinator. The wire
+/// layer maps its `Qos` onto this (deadline budget → absolute
+/// [`Instant`], `Priority` → rank) so the coordinator stays independent
+/// of wire-protocol types.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestQos {
+    /// Absolute completion deadline; `None` = pre-v3 behavior.
+    pub deadline: Option<Instant>,
+    /// Scheduling rank, lower first (see
+    /// [`PRIORITY_NORMAL`](super::request::PRIORITY_NORMAL)).
+    pub priority: u8,
+}
+
+impl RequestQos {
+    /// No deadline, normal priority.
+    pub fn none() -> RequestQos {
+        RequestQos { deadline: None, priority: PRIORITY_NORMAL }
+    }
+
+    pub fn with_deadline(deadline: Instant) -> RequestQos {
+        RequestQos { deadline: Some(deadline), priority: PRIORITY_NORMAL }
+    }
+}
+
+impl Default for RequestQos {
+    fn default() -> Self {
+        RequestQos::none()
+    }
+}
+
+/// EDF ordering key: priority rank in the top 8 bits, deadline (µs
+/// since the coordinator's epoch) below. Within a priority, earlier
+/// deadlines drain first and deadline-free requests sort after every
+/// deadline (all sharing one key, so they stay FIFO among themselves).
+fn edf_key(req: &InferRequest, epoch: Instant) -> u64 {
+    const NO_DEADLINE: u64 = (1 << 56) - 1;
+    let d = match req.deadline {
+        Some(d) => {
+            (d.saturating_duration_since(epoch).as_micros() as u64).min(NO_DEADLINE - 1)
+        }
+        None => NO_DEADLINE,
+    };
+    ((req.priority as u64) << 56) | d
 }
 
 /// Running coordinator. Drop or call [`Coordinator::shutdown`] to stop.
@@ -107,12 +160,20 @@ pub struct Coordinator {
     queues: Vec<Arc<BoundedQueue<InferRequest>>>,
     names: Vec<String>,
     replicas: Vec<usize>,
+    /// Per-pool EWMA of per-request service time in nanoseconds (0 =
+    /// no observation yet). Written by workers after every successful
+    /// batch; read by admission control. Racy load/store is fine — it
+    /// is a smoothed estimate, not an invariant.
+    service_ema_ns: Vec<Arc<AtomicU64>>,
     workers: Vec<JoinHandle<()>>,
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
     /// Rotates the scan start of least-loaded selection so queue-depth
     /// ties do not all land on pool 0.
     tie_break: AtomicUsize,
+    queue_capacity: usize,
+    /// Time origin of the EDF queue keys.
+    epoch: Instant,
 }
 
 impl Coordinator {
@@ -128,9 +189,11 @@ impl Coordinator {
             bail!("need at least one backend pool");
         }
         let metrics = Arc::new(Metrics::new());
+        let epoch = Instant::now();
         let mut queues: Vec<Arc<BoundedQueue<InferRequest>>> = Vec::new();
         let mut names = Vec::new();
         let mut replicas = Vec::new();
+        let mut service_ema_ns: Vec<Arc<AtomicU64>> = Vec::new();
         let mut workers: Vec<JoinHandle<()>> = Vec::new();
         // On any startup failure, close every queue created so far so
         // already-spawned workers exit instead of leaking.
@@ -155,7 +218,13 @@ impl Coordinator {
                     anyhow::anyhow!("pool '{name}' has zero replicas"),
                 );
             }
-            let queue = Arc::new(BoundedQueue::<InferRequest>::new(config.queue_capacity));
+            // EDF queue: drains by (priority, deadline); deadline-free
+            // traffic shares one key and stays FIFO.
+            let queue = Arc::new(BoundedQueue::<InferRequest>::with_key(
+                config.queue_capacity,
+                move |r| edf_key(r, epoch),
+            ));
+            let ema = Arc::new(AtomicU64::new(0));
             let n_replicas = pool.factories.len();
             for (r, factory) in pool.factories.into_iter().enumerate() {
                 let (ready_tx, ready_rx) = channel::<Result<()>>();
@@ -164,6 +233,7 @@ impl Coordinator {
                     let metrics = metrics.clone();
                     let name = name.clone();
                     let policy = config.policy;
+                    let ema = ema.clone();
                     std::thread::Builder::new()
                         .name(format!("edgemlp-{name}-r{r}"))
                         .spawn(move || {
@@ -177,7 +247,7 @@ impl Coordinator {
                                     return;
                                 }
                             };
-                            worker_loop(&name, backend.as_mut(), &queue, &metrics, policy);
+                            worker_loop(&name, backend.as_mut(), &queue, &metrics, policy, &ema);
                         })
                         .context("spawn worker")
                 };
@@ -208,15 +278,19 @@ impl Coordinator {
             queues.push(queue);
             names.push(name);
             replicas.push(n_replicas);
+            service_ema_ns.push(ema);
         }
         Ok(Coordinator {
             queues,
             names,
             replicas,
+            service_ema_ns,
             workers,
             metrics,
             next_id: AtomicU64::new(0),
             tie_break: AtomicUsize::new(0),
+            queue_capacity: config.queue_capacity,
+            epoch,
         })
     }
 
@@ -282,15 +356,66 @@ impl Coordinator {
         self.metrics.clone()
     }
 
-    fn make_request(&self, payload: Vec<f32>) -> (InferRequest, Receiver<InferResult>) {
+    /// Per-pool queue capacity (every pool shares one configured value).
+    pub fn queue_capacity(&self) -> usize {
+        self.queue_capacity
+    }
+
+    /// Admission-control wait estimate for pool `pool`: queued requests
+    /// × smoothed per-request service time ÷ replicas. Zero until the
+    /// pool has served its first batch — unknown cost admits
+    /// optimistically rather than shedding blind.
+    pub fn estimated_wait(&self, pool: usize) -> Duration {
+        let depth = self.queue_depth(pool).unwrap_or(0) as u64;
+        let ema = self
+            .service_ema_ns
+            .get(pool)
+            .map(|e| e.load(Ordering::Relaxed))
+            .unwrap_or(0);
+        let replicas = self.replicas.get(pool).copied().unwrap_or(1).max(1) as u64;
+        Duration::from_nanos(depth.saturating_mul(ema) / replicas)
+    }
+
+    fn make_request(
+        &self,
+        payload: Vec<f32>,
+        qos: RequestQos,
+    ) -> (InferRequest, Receiver<InferResult>) {
         let (tx, rx) = channel();
         let req = InferRequest {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             payload,
             enqueued_at: Instant::now(),
+            deadline: qos.deadline,
+            priority: qos.priority,
             respond_to: tx,
         };
         (req, rx)
+    }
+
+    /// Reject-on-arrival check: with a deadline set, a completion
+    /// estimate (queue wait + own service) that overshoots it means the
+    /// answer would be computed for nobody. Err = shed now, nothing
+    /// enqueued.
+    fn admit(&self, pool: usize, qos: &RequestQos) -> Result<(), SubmitError> {
+        let Some(deadline) = qos.deadline else { return Ok(()) };
+        // Queue wait plus the request's own service time: under
+        // sustained overload the queue pins at the admission boundary,
+        // and without the service term every admitted request would
+        // finish exactly AT its deadline — a coin flip instead of an
+        // SLO.
+        let service = Duration::from_nanos(
+            self.service_ema_ns
+                .get(pool)
+                .map(|e| e.load(Ordering::Relaxed))
+                .unwrap_or(0),
+        );
+        let estimated_wait = self.estimated_wait(pool) + service;
+        if Instant::now() + estimated_wait > deadline {
+            self.metrics.record_expired(&self.names[pool]);
+            return Err(SubmitError::Expired { estimated_wait });
+        }
+        Ok(())
     }
 
     /// Blocking submit to a specific pool.
@@ -299,8 +424,20 @@ impl Coordinator {
         pool: usize,
         payload: Vec<f32>,
     ) -> Result<Receiver<InferResult>, SubmitError> {
+        self.submit_to_qos(pool, payload, RequestQos::none())
+    }
+
+    /// Blocking submit with scheduling inputs; deadline-infeasible
+    /// requests are rejected at admission with [`SubmitError::Expired`].
+    pub fn submit_to_qos(
+        &self,
+        pool: usize,
+        payload: Vec<f32>,
+        qos: RequestQos,
+    ) -> Result<Receiver<InferResult>, SubmitError> {
         let queue = self.queues.get(pool).ok_or(SubmitError::UnknownBackend)?;
-        let (req, rx) = self.make_request(payload);
+        self.admit(pool, &qos)?;
+        let (req, rx) = self.make_request(payload, qos);
         match queue.push(req) {
             Ok(()) => Ok(rx),
             Err(QueueError::Closed) => Err(SubmitError::Closed),
@@ -315,13 +452,26 @@ impl Coordinator {
         pool: usize,
         payload: Vec<f32>,
     ) -> Result<Receiver<InferResult>, SubmitError> {
+        self.try_submit_to_qos(pool, payload, RequestQos::none())
+    }
+
+    /// Non-blocking submit with scheduling inputs: admission control
+    /// first (deadline-infeasible → [`SubmitError::Expired`]), then a
+    /// full queue sheds with `Backpressure`.
+    pub fn try_submit_to_qos(
+        &self,
+        pool: usize,
+        payload: Vec<f32>,
+        qos: RequestQos,
+    ) -> Result<Receiver<InferResult>, SubmitError> {
         let queue = self.queues.get(pool).ok_or(SubmitError::UnknownBackend)?;
-        let (req, rx) = self.make_request(payload);
+        self.admit(pool, &qos)?;
+        let (req, rx) = self.make_request(payload, qos);
         match queue.try_push(req) {
             Ok(()) => Ok(rx),
             Err(QueueError::Closed) => Err(SubmitError::Closed),
             Err(QueueError::Full) => {
-                self.metrics.record_rejected();
+                self.metrics.record_shed(&self.names[pool]);
                 Err(SubmitError::Backpressure)
             }
         }
@@ -331,10 +481,19 @@ impl Coordinator {
     /// pool with the shallowest queue, so a saturated pool stops
     /// receiving new work while a drained one soaks it up.
     pub fn submit(&self, payload: Vec<f32>) -> Result<Receiver<InferResult>, SubmitError> {
+        self.submit_qos(payload, RequestQos::none())
+    }
+
+    /// Least-loaded submit with scheduling inputs.
+    pub fn submit_qos(
+        &self,
+        payload: Vec<f32>,
+        qos: RequestQos,
+    ) -> Result<Receiver<InferResult>, SubmitError> {
         let idx = self
             .least_loaded_scan(self.queues.len(), |k| k)
             .ok_or(SubmitError::UnknownBackend)?;
-        self.submit_to(idx, payload)
+        self.submit_to_qos(idx, payload, qos)
     }
 
     /// Close the submission queues without consuming the coordinator:
@@ -379,14 +538,41 @@ fn worker_loop(
     queue: &BoundedQueue<InferRequest>,
     metrics: &Metrics,
     policy: BatchPolicy,
+    service_ema_ns: &AtomicU64,
 ) {
     let max_batch = policy.max_batch.min(backend.max_batch()).max(1);
     loop {
-        let batch = queue.pop_batch(max_batch, policy.max_wait);
+        let mut batch = queue.pop_batch(max_batch, policy.max_wait);
         if batch.is_empty() {
             return; // closed + drained
         }
+        // Second expiry gate (after admission): requests whose deadline
+        // passed while queued are answered `Expired` without touching
+        // the backend — running them would starve still-feasible work.
+        let now = Instant::now();
+        let mut expired = 0u64;
+        batch.retain(|req| {
+            if req.expired_at(now) {
+                expired += 1;
+                let _ = req
+                    .respond_to
+                    .send(Err(InferError::expired(format!(
+                        "backend '{name}': deadline passed after {:.1} ms in queue",
+                        now.duration_since(req.enqueued_at).as_secs_f64() * 1e3
+                    ))));
+                false
+            } else {
+                true
+            }
+        });
+        for _ in 0..expired {
+            metrics.record_expired(name);
+        }
+        if batch.is_empty() {
+            continue;
+        }
         let inputs: Vec<Vec<f32>> = batch.iter().map(|r| r.payload.clone()).collect();
+        let infer_start = Instant::now();
         // Fault containment: a backend that panics mid-batch fails only
         // this batch's requests (they get error responses below) — the
         // worker survives, keeps its queue position, and the pool keeps
@@ -402,6 +588,14 @@ fn worker_loop(
             Ok((outputs, cycle_stats)) => {
                 debug_assert_eq!(outputs.len(), batch.len());
                 let now = Instant::now();
+                // Feed the admission estimator: smoothed per-request
+                // service time (EWMA, alpha = 1/8). First observation
+                // seeds the average directly.
+                let per_req_ns = (now.duration_since(infer_start).as_nanos() as u64)
+                    / batch.len().max(1) as u64;
+                let old = service_ema_ns.load(Ordering::Relaxed);
+                let ema = if old == 0 { per_req_ns } else { (old * 7 + per_req_ns) / 8 };
+                service_ema_ns.store(ema.max(1), Ordering::Relaxed);
                 let latencies: Vec<f64> = batch
                     .iter()
                     .map(|r| now.duration_since(r.enqueued_at).as_secs_f64())
@@ -421,9 +615,9 @@ fn worker_loop(
             }
             Err(e) => {
                 metrics.record_error(name);
-                let msg = format!("backend '{name}': {e:#}");
+                let err = InferError::backend(format!("backend '{name}': {e:#}"));
                 for req in batch {
-                    let _ = req.respond_to.send(Err(msg.clone()));
+                    let _ = req.respond_to.send(Err(err.clone()));
                 }
             }
         }
@@ -683,7 +877,9 @@ mod tests {
         let coord = Coordinator::start(vec![flaky], CoordinatorConfig::default()).unwrap();
         let rx = coord.submit(vec![1.0]).unwrap();
         let result = rx.recv_timeout(Duration::from_secs(5)).unwrap();
-        assert!(result.unwrap_err().contains("kaboom"));
+        let err = result.unwrap_err();
+        assert_eq!(err.kind, crate::coordinator::request::FailureKind::Backend);
+        assert!(err.message.contains("kaboom"));
         assert_eq!(coord.metrics().snapshot().backends["flaky"].errors, 1);
         coord.shutdown();
     }
@@ -714,8 +910,8 @@ mod tests {
         // Poisoned batch: an error response, not a hang or a lost reply.
         let rx = coord.submit(vec![-1.0]).unwrap();
         let err = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap_err();
-        assert!(err.contains("panicked"), "{err}");
-        assert!(err.contains("injected backend fault"), "{err}");
+        assert!(err.message.contains("panicked"), "{err}");
+        assert!(err.message.contains("injected backend fault"), "{err}");
         // The single worker survived the panic and keeps serving.
         for i in 0..10 {
             let rx = coord.submit(vec![i as f32]).unwrap();
@@ -853,6 +1049,186 @@ mod tests {
         assert_eq!(coord.backend_index("b"), Some(1));
         let rx = coord.submit_to(1, vec![3.0]).unwrap();
         assert_eq!(rx.recv().unwrap().unwrap().backend, "b");
+        coord.shutdown();
+    }
+
+    /// A pool whose single worker sleeps `ms` per request.
+    fn sleepy_factory(name: &str, ms: u64) -> (String, BackendFactory) {
+        let n = name.to_string();
+        (
+            n.clone(),
+            Box::new(move || {
+                Ok(Box::new(FnBackend::new(n, 1, move |inputs: &[Vec<f32>]| {
+                    std::thread::sleep(Duration::from_millis(ms));
+                    Ok(inputs.to_vec())
+                })) as Box<dyn Backend>)
+            }),
+        )
+    }
+
+    #[test]
+    fn admission_rejects_infeasible_deadline_on_arrival() {
+        let coord = Coordinator::start(
+            vec![sleepy_factory("slow", 40)],
+            CoordinatorConfig { queue_capacity: 64, policy: BatchPolicy::immediate(1) },
+        )
+        .unwrap();
+        // Warm the service-time estimator with a few real requests.
+        for _ in 0..3 {
+            coord.submit_to(0, vec![1.0]).unwrap().recv_timeout(Duration::from_secs(5))
+                .unwrap()
+                .unwrap();
+        }
+        assert!(coord.estimated_wait(0).is_zero(), "empty queue must estimate zero wait");
+        // Park a backlog so the wait estimate is deep (~10 × 40 ms),
+        // then offer a 1 ms deadline: reject at admission, nothing
+        // enqueued.
+        let parked: Vec<_> =
+            (0..10).map(|_| coord.submit_to(0, vec![0.0]).unwrap()).collect();
+        let depth_before = coord.queue_depth(0).unwrap();
+        let qos = RequestQos::with_deadline(Instant::now() + Duration::from_millis(1));
+        match coord.try_submit_to_qos(0, vec![9.0], qos) {
+            Err(SubmitError::Expired { estimated_wait }) => {
+                assert!(estimated_wait > Duration::from_millis(1), "wait {estimated_wait:?}");
+            }
+            other => panic!("expected Expired, got {other:?}"),
+        }
+        // The worker drains concurrently, so depth can only have
+        // shrunk; growth would mean the rejected request was enqueued.
+        assert!(coord.queue_depth(0).unwrap() <= depth_before, "rejected request enqueued");
+        assert_eq!(coord.metrics().snapshot().expired, 1);
+        // A feasible deadline on the same backlog is still admitted.
+        let qos = RequestQos::with_deadline(Instant::now() + Duration::from_secs(30));
+        let rx = coord.try_submit_to_qos(0, vec![2.0], qos).unwrap();
+        assert_eq!(
+            rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap().output,
+            vec![2.0]
+        );
+        for rx in parked {
+            rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn queued_request_expiring_in_place_is_answered_expired() {
+        // The estimator is cold (EMA = 0) so admission is optimistic and
+        // lets a 30 ms deadline through — but the request sits behind a
+        // 120 ms batch and must come back `Expired`, never silently
+        // dropped and never run.
+        let coord = Coordinator::start(
+            vec![sleepy_factory("slow", 120)],
+            CoordinatorConfig { queue_capacity: 64, policy: BatchPolicy::immediate(1) },
+        )
+        .unwrap();
+        let _wedge = coord.submit_to(0, vec![0.0]).unwrap();
+        std::thread::sleep(Duration::from_millis(20)); // worker picks up the wedge
+        let qos = RequestQos::with_deadline(Instant::now() + Duration::from_millis(30));
+        let rx = coord.submit_to_qos(0, vec![1.0], qos).unwrap();
+        let err = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap_err();
+        assert_eq!(err.kind, crate::coordinator::request::FailureKind::Expired);
+        assert!(err.message.contains("deadline passed"), "{err}");
+        assert!(coord.metrics().snapshot().expired >= 1);
+        coord.shutdown();
+    }
+
+    /// Single worker that sleeps `ms` per batch and appends every
+    /// payload marker it actually serves, in service order.
+    fn recording_factory(
+        name: &str,
+        ms: u64,
+        served: Arc<std::sync::Mutex<Vec<f32>>>,
+    ) -> (String, BackendFactory) {
+        let n = name.to_string();
+        (
+            n.clone(),
+            Box::new(move || {
+                Ok(Box::new(FnBackend::new(n, 1, move |inputs: &[Vec<f32>]| {
+                    std::thread::sleep(Duration::from_millis(ms));
+                    served.lock().unwrap().extend(inputs.iter().map(|v| v[0]));
+                    Ok(inputs.to_vec())
+                })) as Box<dyn Backend>)
+            }),
+        )
+    }
+
+    #[test]
+    fn edf_serves_earliest_deadline_first() {
+        // Wedge the single worker, then enqueue deadlines out of
+        // arrival order. The EDF queue must drain earliest-first, with
+        // the deadline-free request last — asserted on the order the
+        // backend actually served, not on recv timing.
+        let served = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let coord = Coordinator::start(
+            vec![recording_factory("slow", 60, served.clone())],
+            CoordinatorConfig { queue_capacity: 64, policy: BatchPolicy::immediate(1) },
+        )
+        .unwrap();
+        let wedge = coord.submit_to(0, vec![0.0]).unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        let now = Instant::now();
+        let mut pending = vec![
+            coord
+                .submit_to_qos(
+                    0,
+                    vec![3.0],
+                    RequestQos::with_deadline(now + Duration::from_secs(30)),
+                )
+                .unwrap(),
+            coord.submit_to(0, vec![4.0]).unwrap(), // deadline-free
+            coord
+                .submit_to_qos(
+                    0,
+                    vec![1.0],
+                    RequestQos::with_deadline(now + Duration::from_secs(10)),
+                )
+                .unwrap(),
+            coord
+                .submit_to_qos(
+                    0,
+                    vec![2.0],
+                    RequestQos::with_deadline(now + Duration::from_secs(20)),
+                )
+                .unwrap(),
+        ];
+        wedge.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        for rx in pending.drain(..) {
+            rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        }
+        assert_eq!(*served.lock().unwrap(), vec![0.0, 1.0, 2.0, 3.0, 4.0]);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn high_priority_jumps_deadline_queue() {
+        // Normal-priority with a near deadline vs high-priority with a
+        // far one: priority dominates the EDF key.
+        let served = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let coord = Coordinator::start(
+            vec![recording_factory("slow", 60, served.clone())],
+            CoordinatorConfig { queue_capacity: 64, policy: BatchPolicy::immediate(1) },
+        )
+        .unwrap();
+        let wedge = coord.submit_to(0, vec![0.0]).unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        let now = Instant::now();
+        let normal = coord
+            .submit_to_qos(0, vec![2.0], RequestQos::with_deadline(now + Duration::from_secs(1)))
+            .unwrap();
+        let high = coord
+            .submit_to_qos(
+                0,
+                vec![1.0],
+                RequestQos {
+                    deadline: Some(now + Duration::from_secs(30)),
+                    priority: 0, // High rank
+                },
+            )
+            .unwrap();
+        wedge.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        high.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        normal.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        assert_eq!(*served.lock().unwrap(), vec![0.0, 1.0, 2.0]);
         coord.shutdown();
     }
 }

@@ -8,7 +8,7 @@
 //!                          --backends cpu,fpga,pipeline --pipeline-depth 4
 //! edgemlp loadgen          --addr 127.0.0.1:7878 --requests 10000 \
 //!                          --model qnet --warmup 500
-//! edgemlp ctl              --addr 127.0.0.1:7878 --op stats|ping|swap|models
+//! edgemlp ctl              --addr 127.0.0.1:7878 --op stats|ping|health|swap|models
 //! edgemlp throughput       --requests 500       # in-process E6 sweep
 //! edgemlp table1           [--no-xla]         # paper Table I
 //! edgemlp fig5                                 # paper Figure 5
@@ -183,7 +183,7 @@ fn cmd_infer(args: &Args) -> Result<()> {
 /// Start the real TCP server: the replicated multi-model engine behind
 /// the wire protocol. Blocks until killed.
 fn cmd_serve(args: &Args) -> Result<()> {
-    use edgemlp::coordinator::{BatchPolicy, CoordinatorConfig};
+    use edgemlp::coordinator::{BatchPolicy, CoordinatorConfig, DegradePolicy};
     use edgemlp::serve::{BackendKind, EngineConfig, ModelRegistry, ServeConfig, Server};
     use std::time::Duration;
 
@@ -203,7 +203,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let window_ms: f64 = args.get_parse("window-ms", 2.0).map_err(anyhow::Error::msg)?;
     let max_conns: usize = args.get_parse("max-conns", 64).map_err(anyhow::Error::msg)?;
     let spx_bits: u32 = args.get_parse("spx-bits", 5).map_err(anyhow::Error::msg)?;
+    let read_timeout_s: f64 =
+        args.get_parse("read-timeout-s", 30.0).map_err(anyhow::Error::msg)?;
+    let mut degrade = DegradePolicy::default();
+    degrade.enter_occupancy =
+        args.get_parse("degrade-enter", degrade.enter_occupancy).map_err(anyhow::Error::msg)?;
+    degrade.exit_occupancy =
+        args.get_parse("degrade-exit", degrade.exit_occupancy).map_err(anyhow::Error::msg)?;
     args.finish().map_err(anyhow::Error::msg)?;
+    if !(read_timeout_s > 0.0) {
+        bail!("--read-timeout-s must be positive, got {read_timeout_s}");
+    }
+    degrade.validate().map_err(anyhow::Error::msg)?;
     // SpxConfig::sp2 asserts on its range; turn bad flags into a CLI
     // error instead of a panic.
     if !(3..=15).contains(&spx_bits) {
@@ -272,7 +283,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     Duration::from_secs_f64(window_ms / 1e3),
                 ),
             },
-            serve: ServeConfig { max_conns, ..ServeConfig::default() },
+            serve: ServeConfig {
+                max_conns,
+                read_timeout: Duration::from_secs_f64(read_timeout_s),
+                degrade,
+                ..ServeConfig::default()
+            },
         },
     )?;
     println!(
@@ -299,7 +315,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 /// Drive a running server with synthetic load and report latency.
 fn cmd_loadgen(args: &Args) -> Result<()> {
-    use edgemlp::serve::{run_loadgen, LoadGenConfig, BACKEND_ANY};
+    use edgemlp::serve::{run_loadgen, run_slo_sweep, LoadGenConfig, Priority, BACKEND_ANY};
 
     let addr = args.get("addr", "127.0.0.1:7878");
     let backend_arg = args.get("backend", "any");
@@ -325,7 +341,20 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         pipeline: args.get_parse("pipeline", 8).map_err(anyhow::Error::msg)?,
         warmup: args.get_parse("warmup", 0).map_err(anyhow::Error::msg)?,
         seed: args.get_parse("seed", 7).map_err(anyhow::Error::msg)?,
+        deadline_us: {
+            let ms: f64 = args.get_parse("deadline-ms", 0.0).map_err(anyhow::Error::msg)?;
+            (ms * 1e3) as u64
+        },
+        priority: match args.get("priority", "normal").as_str() {
+            "normal" => Priority::Normal,
+            "high" => Priority::High,
+            "low" => Priority::Low,
+            other => bail!("unknown --priority '{other}' (normal|high|low)"),
+        },
     };
+    // `--sweep 0.5,1,2,4` replays the same scenario at multiples of
+    // `--rate` and prints the SLO attainment / shed-rate curve.
+    let sweep = args.get("sweep", "");
     args.finish().map_err(anyhow::Error::msg)?;
 
     // Resolve hostnames too, so `--addr localhost:7878` works like it
@@ -344,6 +373,41 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         })
         .copied()
         .with_context(|| format!("--addr '{addr}': no resolved address accepts connections"))?;
+    if !sweep.is_empty() {
+        use edgemlp::bench_harness::Table;
+        let factors: Vec<f64> = sweep
+            .split(',')
+            .map(|s| s.trim().parse().map_err(|e| anyhow::anyhow!("--sweep: {e}")))
+            .collect::<Result<_>>()?;
+        let points = run_slo_sweep(addr, &config, &factors)
+            .context("--sweep needs --rate > 0 and --deadline-ms > 0")?;
+        let mut table = Table::new(&[
+            "rate (rps)",
+            "sent",
+            "ok",
+            "shed",
+            "expired",
+            "errors",
+            "attainment",
+            "shed rate",
+            "p99",
+        ]);
+        for p in &points {
+            table.row(&[
+                format!("{:.0}", p.rate_rps),
+                p.sent.to_string(),
+                p.ok.to_string(),
+                p.shed.to_string(),
+                p.expired.to_string(),
+                p.errors.to_string(),
+                format!("{:.1}%", p.attainment * 100.0),
+                format!("{:.1}%", p.shed_rate * 100.0),
+                format!("{:.2} ms", p.p99_s * 1e3),
+            ]);
+        }
+        table.print();
+        return Ok(());
+    }
     let report = run_loadgen(addr, config)?;
     println!("{}", report.render());
     Ok(())
@@ -366,6 +430,29 @@ fn cmd_ctl(args: &Args) -> Result<()> {
             println!("pong from {addr} in {:.1} µs", rtt.as_secs_f64() * 1e6);
         }
         "stats" => print!("{}", client.stats()?),
+        "health" => {
+            use edgemlp::bench_harness::Table;
+            let h = client.health()?;
+            println!(
+                "degraded: {} | transitions: {} | read timeouts: {}",
+                if h.degraded { "YES" } else { "no" },
+                h.degraded_transitions,
+                h.read_timeouts
+            );
+            let mut table =
+                Table::new(&["pool", "depth", "capacity", "replicas", "shed", "expired"]);
+            for p in &h.pools {
+                table.row(&[
+                    p.name.clone(),
+                    p.queue_depth.to_string(),
+                    p.queue_capacity.to_string(),
+                    p.replicas.to_string(),
+                    p.shed.to_string(),
+                    p.expired.to_string(),
+                ]);
+            }
+            table.print();
+        }
         "swap" => {
             if model.is_empty() {
                 bail!("--op swap needs --model <name> (and optionally --into <slot>)");
@@ -388,7 +475,7 @@ fn cmd_ctl(args: &Args) -> Result<()> {
             }
             table.print();
         }
-        other => bail!("unknown op '{other}' (ping|stats|swap|models)"),
+        other => bail!("unknown op '{other}' (ping|stats|health|swap|models)"),
     }
     Ok(())
 }

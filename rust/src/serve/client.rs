@@ -14,12 +14,15 @@
 //! discards a warm-up prefix from the latency report, and renders a
 //! per-model percentile table.
 
-use super::wire::{self, Frame, ModelInfo, Opcode, Status, BACKEND_ANY, DEFAULT_MAX_PAYLOAD};
+use super::wire::{
+    self, Frame, HealthReport, ModelInfo, Opcode, Priority, Qos, Status, BACKEND_ANY,
+    DEFAULT_MAX_PAYLOAD,
+};
 use crate::util::rng::Pcg32;
 use anyhow::{bail, Context, Result};
 use std::collections::{BTreeMap, VecDeque};
 use std::io::{BufReader, BufWriter, Write};
-use std::net::{TcpStream, ToSocketAddrs};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
 use std::time::{Duration, Instant};
 
 /// Outcome of one inference request, load-shed and failure modes
@@ -61,12 +64,30 @@ impl Client {
         })
     }
 
+    /// Cap how long any single read/write on this connection may block.
+    /// The retrying client sets this to its per-attempt budget so a
+    /// wedged server turns into a retryable transport error instead of
+    /// an indefinite hang.
+    pub fn set_io_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        self.reader.get_ref().set_read_timeout(timeout).context("set read timeout")?;
+        self.writer.get_ref().set_write_timeout(timeout).context("set write timeout")?;
+        Ok(())
+    }
+
     fn send(&mut self, opcode: Opcode, payload: Vec<u8>) -> Result<u64> {
         let id = self.next_id;
         self.next_id += 1;
+        self.send_with_id(id, opcode, payload)?;
+        Ok(id)
+    }
+
+    /// Write a frame under a caller-chosen request id. The retrying
+    /// client reuses one id across attempts of the same logical request
+    /// so duplicate submissions are observable server-side.
+    fn send_with_id(&mut self, id: u64, opcode: Opcode, payload: Vec<u8>) -> Result<()> {
         wire::write_frame(&mut self.writer, &Frame::ok(opcode, id, payload))?;
         self.writer.flush()?;
-        Ok(id)
+        Ok(())
     }
 
     fn recv(&mut self) -> Result<Frame> {
@@ -103,6 +124,23 @@ impl Client {
         Ok(reply)
     }
 
+    /// One inference round-trip with explicit QoS (deadline budget +
+    /// priority).
+    pub fn infer_qos(
+        &mut self,
+        backend: u32,
+        model: &str,
+        qos: Qos,
+        x: &[f32],
+    ) -> Result<InferReply> {
+        let id = self.send_infer_qos(backend, model, qos, x)?;
+        let (got, reply) = Self::parse_infer(self.recv()?)?;
+        if got != id {
+            bail!("response id {got} for request {id}");
+        }
+        Ok(reply)
+    }
+
     /// Send an inference without waiting; pair with
     /// [`Client::recv_infer`]. Replies arrive in send order.
     pub fn send_infer(&mut self, backend: u32, x: &[f32]) -> Result<u64> {
@@ -111,9 +149,35 @@ impl Client {
 
     /// Pipelined send against a named model.
     pub fn send_infer_model(&mut self, backend: u32, model: &str, x: &[f32]) -> Result<u64> {
+        self.send_infer_qos(backend, model, Qos::NONE, x)
+    }
+
+    /// Pipelined send with explicit QoS.
+    pub fn send_infer_qos(
+        &mut self,
+        backend: u32,
+        model: &str,
+        qos: Qos,
+        x: &[f32],
+    ) -> Result<u64> {
         let payload =
-            wire::encode_infer(backend, model, x).map_err(|e| anyhow::anyhow!(e))?;
+            wire::encode_infer_qos(backend, model, qos, x).map_err(|e| anyhow::anyhow!(e))?;
         self.send(Opcode::Infer, payload)
+    }
+
+    /// Pipelined QoS send under a caller-chosen request id (see
+    /// [`RetryingClient`]).
+    pub fn send_infer_qos_id(
+        &mut self,
+        id: u64,
+        backend: u32,
+        model: &str,
+        qos: Qos,
+        x: &[f32],
+    ) -> Result<()> {
+        let payload =
+            wire::encode_infer_qos(backend, model, qos, x).map_err(|e| anyhow::anyhow!(e))?;
+        self.send_with_id(id, Opcode::Infer, payload)
     }
 
     /// Receive the next pipelined inference reply.
@@ -146,8 +210,20 @@ impl Client {
         model: &str,
         samples: &[Vec<f32>],
     ) -> Result<BatchReply> {
-        let payload =
-            wire::encode_infer_batch(backend, model, samples).map_err(|e| anyhow::anyhow!(e))?;
+        self.infer_batch_qos(backend, model, Qos::NONE, samples)
+    }
+
+    /// One batched inference round-trip with explicit QoS (one deadline
+    /// and priority for the whole batch).
+    pub fn infer_batch_qos(
+        &mut self,
+        backend: u32,
+        model: &str,
+        qos: Qos,
+        samples: &[Vec<f32>],
+    ) -> Result<BatchReply> {
+        let payload = wire::encode_infer_batch_qos(backend, model, qos, samples)
+            .map_err(|e| anyhow::anyhow!(e))?;
         let id = self.send(Opcode::InferBatch, payload)?;
         let resp = self.recv()?;
         if resp.request_id != id {
@@ -171,6 +247,20 @@ impl Client {
             bail!("stats failed: {} {}", resp.status, resp.message());
         }
         Ok(resp.message())
+    }
+
+    /// Resilience counters: per-pool queue depths, shed/expired counts,
+    /// degraded-mode state (protocol v3).
+    pub fn health(&mut self) -> Result<HealthReport> {
+        let id = self.send(Opcode::Health, Vec::new())?;
+        let resp = self.recv()?;
+        if resp.request_id != id {
+            bail!("response id {} for request {id}", resp.request_id);
+        }
+        if resp.status != Status::Ok {
+            bail!("health failed: {} {}", resp.status, resp.message());
+        }
+        wire::decode_health(&resp.payload).map_err(|e| anyhow::anyhow!(e))
     }
 
     /// Enumerate the served models (slot, active version, dims,
@@ -210,6 +300,160 @@ impl Client {
 }
 
 // ---------------------------------------------------------------------------
+// Retry policy.
+// ---------------------------------------------------------------------------
+
+/// Bounded retry with exponential backoff and multiplicative jitter.
+///
+/// What retries and what does not: `Busy` (connection limit), shed
+/// (`Backpressure`), admission-`Expired`, connect failures, and
+/// per-attempt timeouts are transient — load-dependent — so they retry.
+/// `BadRequest`, `UnknownModel`, and other semantic failures would fail
+/// identically on every attempt and are returned immediately.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Total tries including the first (1 = no retry).
+    pub max_attempts: u32,
+    /// Backoff before the first retry; doubles per further retry.
+    pub base_backoff: Duration,
+    /// Backoff growth cap.
+    pub max_backoff: Duration,
+    /// Fraction of each backoff randomized away, in `[0, 1]`: the delay
+    /// is uniform in `[backoff × (1 − jitter), backoff]`. Keeps a
+    /// synchronized herd of shed clients from re-arriving in lockstep.
+    pub jitter: f64,
+    /// Per-attempt I/O budget (connect + round-trip). An attempt
+    /// overrunning it is abandoned and its connection dropped.
+    pub attempt_timeout: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 4,
+            base_backoff: Duration::from_millis(10),
+            max_backoff: Duration::from_secs(1),
+            jitter: 0.5,
+            attempt_timeout: Duration::from_secs(2),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The delay before retry number `retry` (0-based: the delay after
+    /// the first failed attempt is `backoff_for(0, ..)`). Deterministic
+    /// given the RNG state — unit tests drive it with a seeded
+    /// [`Pcg32`].
+    pub fn backoff_for(&self, retry: u32, rng: &mut Pcg32) -> Duration {
+        let exp = self.base_backoff.as_secs_f64() * 2f64.powi(retry.min(30) as i32);
+        let capped = exp.min(self.max_backoff.as_secs_f64());
+        let jitter = self.jitter.clamp(0.0, 1.0);
+        Duration::from_secs_f64(capped * (1.0 - jitter * rng.uniform()))
+    }
+}
+
+/// Whether a reply is worth retrying (load-transient) or final.
+fn retryable_status(status: Status) -> bool {
+    matches!(status, Status::Busy | Status::Backpressure | Status::Expired)
+}
+
+/// A client wrapper applying a [`RetryPolicy`] to single inferences.
+///
+/// At-most-once by construction: every logical request keeps ONE wire
+/// request id across all its attempts, and whenever an attempt is
+/// abandoned (timeout, transport error, `Busy`) the whole connection is
+/// dropped — a late reply to an abandoned attempt can never be consumed,
+/// so the caller sees at most one answer per logical request.
+pub struct RetryingClient {
+    addr: SocketAddr,
+    policy: RetryPolicy,
+    conn: Option<Client>,
+    rng: Pcg32,
+    next_id: u64,
+}
+
+impl RetryingClient {
+    /// Lazily connecting — the first attempt dials.
+    pub fn new(addr: SocketAddr, policy: RetryPolicy, seed: u64) -> RetryingClient {
+        RetryingClient { addr, policy, conn: None, rng: Pcg32::new(seed), next_id: 0 }
+    }
+
+    /// One logical inference: up to `max_attempts` tries, backoff with
+    /// jitter between them. Returns the final reply and how many
+    /// attempts it took; `Err` only when every attempt died on
+    /// transport (the last transport error).
+    pub fn infer_qos(
+        &mut self,
+        backend: u32,
+        model: &str,
+        qos: Qos,
+        x: &[f32],
+    ) -> Result<(InferReply, u32)> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let max_attempts = self.policy.max_attempts.max(1);
+        let mut attempts = 0u32;
+        loop {
+            attempts += 1;
+            let outcome = self.attempt(id, backend, model, qos, x);
+            match outcome {
+                Ok(reply) => {
+                    let retry = match &reply {
+                        InferReply::Shed(_) => true,
+                        InferReply::Failed { status, .. } => {
+                            if *status == Status::Busy {
+                                // Busy connections are closed server-side;
+                                // do not reuse ours.
+                                self.conn = None;
+                            }
+                            retryable_status(*status)
+                        }
+                        InferReply::Output(_) => false,
+                    };
+                    if !retry || attempts >= max_attempts {
+                        return Ok((reply, attempts));
+                    }
+                }
+                Err(e) => {
+                    if attempts >= max_attempts {
+                        return Err(e.context(format!("after {attempts} attempts")));
+                    }
+                }
+            }
+            std::thread::sleep(self.policy.backoff_for(attempts - 1, &mut self.rng));
+        }
+    }
+
+    fn attempt(
+        &mut self,
+        id: u64,
+        backend: u32,
+        model: &str,
+        qos: Qos,
+        x: &[f32],
+    ) -> Result<InferReply> {
+        if self.conn.is_none() {
+            let mut c = Client::connect(self.addr)?;
+            c.set_io_timeout(Some(self.policy.attempt_timeout))?;
+            self.conn = Some(c);
+        }
+        let conn = self.conn.as_mut().expect("connection just ensured");
+        let result = (|| {
+            conn.send_infer_qos_id(id, backend, model, qos, x)?;
+            let (got, reply) = conn.recv_infer()?;
+            anyhow::ensure!(got == id, "reply id {got} for request {id}");
+            Ok(reply)
+        })();
+        if result.is_err() {
+            // Abandoned attempt: a reply may still be in flight for this
+            // id. Dropping the connection guarantees it is never read.
+            self.conn = None;
+        }
+        result
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Load generator.
 // ---------------------------------------------------------------------------
 
@@ -239,6 +483,12 @@ pub struct LoadGenConfig {
     /// across connections; they still count as sent/ok).
     pub warmup: usize,
     pub seed: u64,
+    /// Per-request deadline budget in µs; 0 = no deadline. With a
+    /// deadline set the report additionally tracks `expired` counts and
+    /// deadline attainment (the SLO scenarios).
+    pub deadline_us: u64,
+    /// Priority stamped on every request.
+    pub priority: Priority,
 }
 
 impl Default for LoadGenConfig {
@@ -254,7 +504,15 @@ impl Default for LoadGenConfig {
             pipeline: 1,
             warmup: 0,
             seed: 7,
+            deadline_us: 0,
+            priority: Priority::Normal,
         }
+    }
+}
+
+impl LoadGenConfig {
+    fn qos(&self) -> Qos {
+        Qos { deadline_us: self.deadline_us, priority: self.priority }
     }
 }
 
@@ -264,9 +522,15 @@ pub struct ModelReport {
     pub sent: usize,
     pub ok: usize,
     pub shed: usize,
+    /// Requests answered `Status::Expired` (admission reject or
+    /// in-queue expiry) — deliberate load shedding, not errors.
+    pub expired: usize,
     pub errors: usize,
     /// OK requests excluded from `latencies` as warm-up.
     pub warmup_excluded: usize,
+    /// OK requests whose client-observed latency met the configured
+    /// deadline (only tracked when `deadline_us > 0`).
+    pub deadline_met: usize,
     /// Client-observed seconds, send → reply, warm-up excluded.
     pub latencies: Vec<f64>,
 }
@@ -276,8 +540,10 @@ impl ModelReport {
         self.sent += other.sent;
         self.ok += other.ok;
         self.shed += other.shed;
+        self.expired += other.expired;
         self.errors += other.errors;
         self.warmup_excluded += other.warmup_excluded;
+        self.deadline_met += other.deadline_met;
         self.latencies.extend_from_slice(&other.latencies);
     }
 }
@@ -290,9 +556,17 @@ pub struct LoadGenReport {
     pub sent: usize,
     pub ok: usize,
     pub shed: usize,
+    /// Requests answered `Status::Expired` by admission control or
+    /// in-queue expiry.
+    pub expired: usize,
     pub errors: usize,
     /// Requests answered OK but excluded from `latencies` as warm-up.
     pub warmup_excluded: usize,
+    /// OK requests that met the deadline (when one was configured).
+    pub deadline_met: usize,
+    /// The deadline the run was driven with (µs; 0 = none) — lets the
+    /// report render attainment without re-asking the config.
+    pub deadline_us: u64,
     pub latencies: Vec<f64>,
     pub per_model: BTreeMap<String, ModelReport>,
     pub elapsed_s: f64,
@@ -303,6 +577,23 @@ impl LoadGenReport {
     pub fn throughput_rps(&self) -> f64 {
         if self.elapsed_s > 0.0 {
             self.ok as f64 / self.elapsed_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of accepted (OK) requests that met the deadline; `None`
+    /// without a configured deadline or without any OK request.
+    pub fn attainment(&self) -> Option<f64> {
+        (self.deadline_us > 0 && self.ok > 0)
+            .then(|| self.deadline_met as f64 / self.ok as f64)
+    }
+
+    /// Fraction of sent requests deliberately shed (backpressure +
+    /// expiry) rather than served.
+    pub fn shed_rate(&self) -> f64 {
+        if self.sent > 0 {
+            (self.shed + self.expired) as f64 / self.sent as f64
         } else {
             0.0
         }
@@ -321,21 +612,30 @@ impl LoadGenReport {
         use crate::bench_harness::{fmt_time, Table};
         use crate::util::percentile;
         let mut out = format!(
-            "sent {} | ok {} | shed {} | errors {} | {:.0} req/s | p50 {} | p99 {}",
+            "sent {} | ok {} | shed {} | expired {} | errors {} | {:.0} req/s | p50 {} | p99 {}",
             self.sent,
             self.ok,
             self.shed,
+            self.expired,
             self.errors,
             self.throughput_rps(),
             fmt_time(self.p50_s()),
             fmt_time(self.p99_s()),
         );
+        if let Some(att) = self.attainment() {
+            out.push_str(&format!(
+                " | attainment {:.1}% of {} ms deadline",
+                att * 100.0,
+                self.deadline_us as f64 / 1e3
+            ));
+        }
         if self.warmup_excluded > 0 {
             out.push_str(&format!(" | warmup excluded {}", self.warmup_excluded));
         }
         out.push('\n');
-        let mut table =
-            Table::new(&["model", "sent", "ok", "shed", "err", "p50", "p95", "p99", "p99.9"]);
+        let mut table = Table::new(&[
+            "model", "sent", "ok", "shed", "expired", "err", "p50", "p95", "p99", "p99.9",
+        ]);
         for (name, m) in &self.per_model {
             let display = if name.is_empty() { "(default)" } else { name };
             table.row(&[
@@ -343,6 +643,7 @@ impl LoadGenReport {
                 m.sent.to_string(),
                 m.ok.to_string(),
                 m.shed.to_string(),
+                m.expired.to_string(),
                 m.errors.to_string(),
                 fmt_time(percentile(&m.latencies, 50.0)),
                 fmt_time(percentile(&m.latencies, 95.0)),
@@ -358,8 +659,10 @@ impl LoadGenReport {
         self.sent += other.sent;
         self.ok += other.ok;
         self.shed += other.shed;
+        self.expired += other.expired;
         self.errors += other.errors;
         self.warmup_excluded += other.warmup_excluded;
+        self.deadline_met += other.deadline_met;
         self.latencies.extend_from_slice(&other.latencies);
         self.per_model.entry(model.to_string()).or_default().merge(&other);
     }
@@ -395,12 +698,62 @@ pub fn run_loadgen(addr: std::net::SocketAddr, config: LoadGenConfig) -> Result<
         }));
     }
     let mut report = LoadGenReport::default();
+    report.deadline_us = config.deadline_us;
     for t in threads {
         let (model, conn_report) = t.join().expect("loadgen thread panicked")?;
         report.merge(&model, conn_report);
     }
     report.elapsed_s = t0.elapsed().as_secs_f64();
     Ok(report)
+}
+
+/// One point of an SLO sweep: the offered load and what came of it.
+#[derive(Debug, Clone)]
+pub struct SloPoint {
+    pub rate_rps: f64,
+    pub sent: usize,
+    pub ok: usize,
+    pub shed: usize,
+    pub expired: usize,
+    pub errors: usize,
+    /// Deadline attainment among accepted requests (1.0 when nothing
+    /// completed).
+    pub attainment: f64,
+    pub shed_rate: f64,
+    pub p99_s: f64,
+}
+
+/// Drive the same deadline-carrying workload at a ladder of offered
+/// rates (`rate_factors` × `config.rate_rps`) and report the attainment
+/// and shed-rate curves — the "does overload degrade gracefully"
+/// scenario: attainment among accepted requests should hold near 100%
+/// while the shed rate absorbs the overload.
+pub fn run_slo_sweep(
+    addr: std::net::SocketAddr,
+    config: &LoadGenConfig,
+    rate_factors: &[f64],
+) -> Result<Vec<SloPoint>> {
+    anyhow::ensure!(config.rate_rps > 0.0, "SLO sweep needs a base rate (rate_rps > 0)");
+    anyhow::ensure!(config.deadline_us > 0, "SLO sweep needs a deadline (deadline_us > 0)");
+    let mut points = Vec::with_capacity(rate_factors.len());
+    for (i, factor) in rate_factors.iter().enumerate() {
+        let mut step = config.clone();
+        step.rate_rps = config.rate_rps * factor;
+        step.seed = config.seed.wrapping_add(i as u64);
+        let report = run_loadgen(addr, step)?;
+        points.push(SloPoint {
+            rate_rps: config.rate_rps * factor,
+            sent: report.sent,
+            ok: report.ok,
+            shed: report.shed,
+            expired: report.expired,
+            errors: report.errors,
+            attainment: report.attainment().unwrap_or(1.0),
+            shed_rate: report.shed_rate(),
+            p99_s: report.p99_s(),
+        });
+    }
+    Ok(points)
 }
 
 fn connection_worker(
@@ -435,6 +788,8 @@ fn connection_worker(
         }
     };
 
+    let qos = config.qos();
+    let deadline_s = config.deadline_us as f64 / 1e6;
     if config.batch > 1 {
         let mut sent = 0usize;
         while sent < quota {
@@ -442,12 +797,16 @@ fn connection_worker(
             let samples: Vec<Vec<f32>> = (0..b).map(|_| sample(&mut rng)).collect();
             pace(&mut rng);
             let t = Instant::now();
-            match client.infer_batch_model(config.backend, model, &samples)? {
+            match client.infer_batch_qos(config.backend, model, qos, &samples)? {
                 BatchReply::Outputs(rows) => {
                     anyhow::ensure!(rows.len() == b, "batch reply size {} != {b}", rows.len());
                     report.ok += b;
+                    let latency = t.elapsed().as_secs_f64();
+                    if qos.has_deadline() && latency <= deadline_s {
+                        report.deadline_met += b;
+                    }
                     if completed >= warmup {
-                        report.latencies.push(t.elapsed().as_secs_f64());
+                        report.latencies.push(latency);
                     } else {
                         // A batch straddling the warm-up boundary is
                         // excluded whole — its latency is one sample.
@@ -456,6 +815,7 @@ fn connection_worker(
                     completed += b;
                 }
                 BatchReply::Shed(_) => report.shed += b,
+                BatchReply::Failed { status: Status::Expired, .. } => report.expired += b,
                 BatchReply::Failed { .. } => report.errors += b,
             }
             sent += b;
@@ -478,14 +838,19 @@ fn connection_worker(
         match reply {
             InferReply::Output(_) => {
                 report.ok += 1;
+                let latency = sent_at.elapsed().as_secs_f64();
+                if qos.has_deadline() && latency <= deadline_s {
+                    report.deadline_met += 1;
+                }
                 if *completed >= warmup {
-                    report.latencies.push(sent_at.elapsed().as_secs_f64());
+                    report.latencies.push(latency);
                 } else {
                     report.warmup_excluded += 1;
                 }
                 *completed += 1;
             }
             InferReply::Shed(_) => report.shed += 1,
+            InferReply::Failed { status: Status::Expired, .. } => report.expired += 1,
             InferReply::Failed { .. } => report.errors += 1,
         }
         Ok(())
@@ -496,7 +861,7 @@ fn connection_worker(
         }
         let x = sample(&mut rng);
         pace(&mut rng);
-        let id = client.send_infer_model(config.backend, model, &x)?;
+        let id = client.send_infer_qos(config.backend, model, qos, &x)?;
         in_flight.push_back((id, Instant::now()));
         report.sent += 1;
     }
@@ -504,4 +869,98 @@ fn connection_worker(
         drain_one(&mut client, &mut in_flight, &mut report, &mut completed)?;
     }
     Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 5,
+            base_backoff: Duration::from_millis(10),
+            max_backoff: Duration::from_millis(200),
+            jitter: 0.5,
+            attempt_timeout: Duration::from_secs(1),
+        }
+    }
+
+    #[test]
+    fn backoff_schedule_doubles_then_caps() {
+        // jitter = 0 makes the schedule exact: 10, 20, 40, 80, 160,
+        // then pinned at the 200 ms cap.
+        let p = RetryPolicy { jitter: 0.0, ..policy() };
+        let mut rng = Pcg32::new(1);
+        let ms: Vec<u128> =
+            (0..7).map(|i| p.backoff_for(i, &mut rng).as_millis()).collect();
+        assert_eq!(ms, vec![10, 20, 40, 80, 160, 200, 200]);
+    }
+
+    #[test]
+    fn jitter_stays_inside_declared_bounds() {
+        let p = policy();
+        let mut rng = Pcg32::new(42);
+        for retry in 0..6u32 {
+            let nominal =
+                (p.base_backoff.as_secs_f64() * 2f64.powi(retry as i32))
+                    .min(p.max_backoff.as_secs_f64());
+            for _ in 0..200 {
+                let d = p.backoff_for(retry, &mut rng).as_secs_f64();
+                assert!(
+                    d <= nominal + 1e-9 && d >= nominal * (1.0 - p.jitter) - 1e-9,
+                    "retry {retry}: {d}s outside [{}, {nominal}]",
+                    nominal * (1.0 - p.jitter)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn jittered_backoffs_are_deterministic_per_seed_and_spread() {
+        let p = policy();
+        let seq = |seed: u64| -> Vec<Duration> {
+            let mut rng = Pcg32::new(seed);
+            (0..8).map(|i| p.backoff_for(i, &mut rng)).collect()
+        };
+        assert_eq!(seq(7), seq(7), "same seed must reproduce the schedule");
+        assert_ne!(seq(7), seq(8), "different seeds should de-synchronize clients");
+        // Two same-retry draws from one stream differ (herd spreading).
+        let mut rng = Pcg32::new(3);
+        let a = p.backoff_for(3, &mut rng);
+        let b = p.backoff_for(3, &mut rng);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn huge_retry_index_does_not_overflow() {
+        let p = policy();
+        let mut rng = Pcg32::new(1);
+        // 2^retry would overflow f64 exponent ranges for huge retries;
+        // the cap keeps it finite and at max_backoff.
+        let d = p.backoff_for(u32::MAX, &mut rng);
+        assert!(d <= p.max_backoff);
+    }
+
+    #[test]
+    fn connect_failures_exhaust_the_attempt_budget() {
+        // An address nothing listens on: every attempt is a connect
+        // failure, and after max_attempts the last error surfaces.
+        let addr: SocketAddr = {
+            // Bind-then-drop yields a port that is closed right after.
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let p = RetryPolicy {
+            max_attempts: 3,
+            base_backoff: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(2),
+            jitter: 0.0,
+            attempt_timeout: Duration::from_millis(200),
+        };
+        let mut c = RetryingClient::new(addr, p, 11);
+        let err = c
+            .infer_qos(BACKEND_ANY, "", Qos::NONE, &[0.0])
+            .expect_err("no server — must exhaust retries");
+        assert!(format!("{err:#}").contains("after 3 attempts"), "{err:#}");
+    }
 }

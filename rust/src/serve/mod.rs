@@ -5,7 +5,7 @@
 //!  loadgen/client ──TCP──► acceptor ──► per-conn reader ─submit─► model route
 //!      ▲                                  (bounded pool)              │ least-loaded pool pick
 //!      │                               per-conn writer ◄──response───┤
-//!      └───────────── frames (wire.rs, v2) ─────┘                    ▼
+//!      └───────────── frames (wire.rs, v3) ─────┘                    ▼
 //!                                               per-(backend × model) worker pools
 //!                                                        (N replicas each)
 //!
@@ -38,7 +38,8 @@ pub mod server;
 pub mod wire;
 
 pub use client::{
-    run_loadgen, BatchReply, Client, InferReply, LoadGenConfig, LoadGenReport, ModelReport,
+    run_loadgen, run_slo_sweep, BatchReply, Client, InferReply, LoadGenConfig, LoadGenReport,
+    ModelReport, RetryPolicy, RetryingClient, SloPoint,
 };
 pub use pipeline_backend::{
     pipeline_cpu_factory, pipeline_fpga_factory, PipelineCpuBackend, PipelineFpgaBackend,
@@ -49,4 +50,6 @@ pub use registry::{
     SwapError,
 };
 pub use server::{BackendKind, EngineConfig, ServeConfig, Server};
-pub use wire::{Frame, ModelInfo, Opcode, Status, BACKEND_ANY};
+pub use wire::{
+    Frame, HealthReport, ModelInfo, Opcode, PoolHealth, Priority, Qos, Status, BACKEND_ANY,
+};

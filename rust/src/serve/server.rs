@@ -27,21 +27,23 @@
 use super::pipeline_backend::{pipeline_cpu_factory, pipeline_fpga_factory};
 use super::registry::{ModelRegistry, ModelSlot, SwapError};
 use super::wire::{
-    self, Frame, ModelInfo, Opcode, ReadError, Status, BACKEND_ANY, DEFAULT_MAX_PAYLOAD,
+    self, Frame, HealthReport, ModelInfo, Opcode, PoolHealth, ReadError, Status, BACKEND_ANY,
+    DEFAULT_MAX_PAYLOAD,
 };
-use crate::coordinator::request::InferResult;
-use crate::coordinator::server::{Coordinator, PoolSpec, SubmitError};
+use crate::coordinator::degrade::{DegradeController, DegradePolicy};
+use crate::coordinator::request::{FailureKind, InferResult};
+use crate::coordinator::server::{Coordinator, PoolSpec, RequestQos, SubmitError};
 use crate::coordinator::CoordinatorConfig;
 use crate::fpga::accelerator::AccelConfig;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Server knobs.
 #[derive(Debug, Clone, Copy)]
@@ -53,6 +55,13 @@ pub struct ServeConfig {
     /// How long the writer waits for one inference result before
     /// answering `Status::Internal`.
     pub response_timeout: Duration,
+    /// Reader deadline per frame: a connection that stays silent — or
+    /// dribbles a partial frame — longer than this is answered
+    /// `Status::Timeout` and closed, so slowloris peers cannot pin
+    /// connection-pool slots (`docs/serving-resilience.md`).
+    pub read_timeout: Duration,
+    /// Degraded-mode hysteresis; every model's controller shares it.
+    pub degrade: DegradePolicy,
 }
 
 impl Default for ServeConfig {
@@ -61,6 +70,8 @@ impl Default for ServeConfig {
             max_conns: 64,
             max_payload: DEFAULT_MAX_PAYLOAD,
             response_timeout: Duration::from_secs(30),
+            read_timeout: Duration::from_secs(30),
+            degrade: DegradePolicy::default(),
         }
     }
 }
@@ -100,6 +111,19 @@ impl BackendKind {
             BackendKind::PipelineFpga { .. } => "pipeline-fpga",
         }
     }
+
+    /// Relative serving cost, lower = cheaper. Degraded mode routes
+    /// `BACKEND_ANY` traffic to the model's cheapest kind — the SPx
+    /// shift-add datapaths beat the f32 CPU forwards, mirroring the
+    /// paper's precision-for-power trade.
+    fn cost_rank(&self) -> u8 {
+        match self {
+            BackendKind::FpgaSim(_) => 0,
+            BackendKind::PipelineFpga { .. } => 1,
+            BackendKind::PipelineCpu { .. } => 2,
+            BackendKind::Cpu => 3,
+        }
+    }
 }
 
 /// Everything [`Server::serve`] needs to assemble the engine: which
@@ -136,6 +160,12 @@ struct ModelRoute {
     slot: Arc<ModelSlot>,
     pools: Vec<usize>,
     input_dim: usize,
+    /// Hysteresis state machine deciding when sustained saturation
+    /// flips this model's `BACKEND_ANY` routing to `cheapest_pool`.
+    degrade: DegradeController,
+    /// The pool degraded mode routes to (cheapest
+    /// [`BackendKind::cost_rank`] among `pools`).
+    cheapest_pool: usize,
 }
 
 struct Shared {
@@ -147,6 +177,9 @@ struct Shared {
     stop: AtomicBool,
     active_conns: AtomicUsize,
     conn_seq: AtomicUsize,
+    /// Connections closed by the reader deadline (slowloris defense);
+    /// surfaced by the `Health` opcode.
+    read_timeouts: AtomicU64,
 }
 
 /// A running server. [`Server::shutdown`] (or drop) stops accepting,
@@ -172,6 +205,7 @@ impl Server {
         if engine.backends.is_empty() {
             bail!("engine needs at least one backend kind");
         }
+        engine.serve.degrade.validate().map_err(|e| anyhow::anyhow!(e))?;
         let replicas = engine.replicas.max(1);
         let mut pools = Vec::new();
         let mut routes = BTreeMap::new();
@@ -198,9 +232,24 @@ impl Server {
                 ));
             }
             let input_dim = slot.active().input_dim();
+            // Position of the cheapest backend kind in this route's
+            // pool list, precomputed so degraded routing is a lookup.
+            let cheapest = engine
+                .backends
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, k)| k.cost_rank())
+                .map(|(i, _)| indices[i])
+                .expect("backends is non-empty");
             routes.insert(
                 slot.name().to_string(),
-                ModelRoute { slot, pools: indices, input_dim },
+                ModelRoute {
+                    slot,
+                    pools: indices,
+                    input_dim,
+                    degrade: DegradeController::new(engine.serve.degrade),
+                    cheapest_pool: cheapest,
+                },
             );
         }
         let coord = Coordinator::start(pools, engine.coordinator)?;
@@ -218,12 +267,21 @@ impl Server {
         addr: &str,
         config: ServeConfig,
     ) -> Result<Server> {
+        config.degrade.validate().map_err(|e| anyhow::anyhow!(e))?;
         let slot = registry.default_slot();
         let input_dim = slot.active().input_dim();
         let mut routes = BTreeMap::new();
         routes.insert(
             slot.name().to_string(),
-            ModelRoute { slot, pools: (0..coord.num_pools()).collect(), input_dim },
+            ModelRoute {
+                slot,
+                pools: (0..coord.num_pools()).collect(),
+                input_dim,
+                degrade: DegradeController::new(config.degrade),
+                // A caller-built coordinator carries no backend-kind
+                // info; degraded mode falls back to the first pool.
+                cheapest_pool: 0,
+            },
         );
         let default_model = registry.default_slot_name().to_string();
         Self::start_inner(coord, registry, routes, default_model, addr, config)
@@ -248,6 +306,7 @@ impl Server {
             stop: AtomicBool::new(false),
             active_conns: AtomicUsize::new(0),
             conn_seq: AtomicUsize::new(0),
+            read_timeouts: AtomicU64::new(0),
         });
         let conns = Arc::new(Mutex::new(Vec::new()));
         let acceptor = {
@@ -425,14 +484,38 @@ fn handle_connection(stream: TcpStream, shared: &Shared) {
     let mut reader = BufReader::new(stream);
     let mut framing_error = false;
     loop {
-        match wire::read_frame_with(&mut reader, shared.config.max_payload, Some(&shared.stop))
-        {
+        // The deadline restarts per frame: an active connection can
+        // live forever, one that goes silent — or drips a partial
+        // header — is cut off (slowloris defense).
+        let deadline = Instant::now() + shared.config.read_timeout;
+        match wire::read_frame_deadline(
+            &mut reader,
+            shared.config.max_payload,
+            Some(&shared.stop),
+            Some(deadline),
+        ) {
             Ok(frame) => {
                 if !dispatch(frame, &tx, shared) {
                     break;
                 }
             }
             Err(ReadError::Eof) | Err(ReadError::Stopped) | Err(ReadError::Io(_)) => break,
+            Err(ReadError::TimedOut) => {
+                shared.read_timeouts.fetch_add(1, Ordering::Relaxed);
+                // No request id to echo and the version is unknown —
+                // frame the goodbye at MIN_VERSION like framing errors.
+                let _ = tx.send(Outgoing::Ready(
+                    Frame::error(
+                        Opcode::Ping,
+                        0,
+                        Status::Timeout,
+                        "read deadline exceeded — closing idle/stalled connection",
+                    )
+                    .at_version(wire::MIN_VERSION),
+                ));
+                framing_error = true; // same careful close as below
+                break;
+            }
             Err(ReadError::Protocol(msg)) => {
                 // The stream position is unreliable after a framing
                 // error: answer once, then close. The request version
@@ -494,6 +577,14 @@ fn writer_loop(stream: TcpStream, rx: Receiver<Outgoing>, response_timeout: Dura
     }
 }
 
+/// The wire status one coordinator failure maps to.
+fn failure_status(kind: FailureKind) -> Status {
+    match kind {
+        FailureKind::Backend => Status::BackendError,
+        FailureKind::Expired => Status::Expired,
+    }
+}
+
 /// Turn one queued work item into the frame that goes on the wire.
 fn resolve(item: Outgoing, timeout: Duration) -> Frame {
     match item {
@@ -503,8 +594,10 @@ fn resolve(item: Outgoing, timeout: Duration) -> Frame {
                 Frame::ok(Opcode::Infer, request_id, wire::encode_outputs(&resp.output))
                     .at_version(version)
             }
-            Ok(Err(msg)) => Frame::error(Opcode::Infer, request_id, Status::BackendError, &msg)
-                .at_version(version),
+            Ok(Err(e)) => {
+                Frame::error(Opcode::Infer, request_id, failure_status(e.kind), &e.message)
+                    .at_version(version)
+            }
             Err(_) => Frame::error(
                 Opcode::Infer,
                 request_id,
@@ -523,12 +616,12 @@ fn resolve(item: Outgoing, timeout: Duration) -> Frame {
                 let left = deadline.saturating_duration_since(std::time::Instant::now());
                 match rx.recv_timeout(left) {
                     Ok(Ok(resp)) => rows.push(resp.output),
-                    Ok(Err(msg)) => {
+                    Ok(Err(e)) => {
                         return Frame::error(
                             Opcode::InferBatch,
                             request_id,
-                            Status::BackendError,
-                            &msg,
+                            failure_status(e.kind),
+                            &e.message,
                         )
                         .at_version(version)
                     }
@@ -633,27 +726,43 @@ fn dispatch(frame: Frame, tx: &Sender<Outgoing>, shared: &Shared) -> bool {
                 Err(e) => bad_request(Opcode::SwapModel, id, &e.to_string()),
             },
         },
+        Opcode::Health => {
+            if version < 3 {
+                bad_request(Opcode::Health, id, "Health requires protocol v3")
+            } else {
+                let report = health_report(shared);
+                match wire::encode_health(&report) {
+                    Ok(payload) => Outgoing::Ready(Frame::ok(Opcode::Health, id, payload)),
+                    Err(e) => {
+                        Outgoing::Ready(Frame::error(Opcode::Health, id, Status::Internal, &e))
+                    }
+                }
+            }
+        }
         Opcode::Infer => match wire::decode_infer(&frame.payload, version) {
             Err(e) => bad_request(Opcode::Infer, id, &e),
-            Ok((backend, model, x)) => match resolve_pool(shared, &model, backend, x.len()) {
+            Ok(req) => match resolve_pool(shared, &req.model, req.backend, req.x.len()) {
                 Err(out) => Outgoing::Ready(out.into_frame(Opcode::Infer, id)),
-                Ok(idx) => match shared.coord.try_submit_to(idx, x) {
-                    Ok(rx) => Outgoing::Pending { version, request_id: id, rx },
-                    Err(e) => Outgoing::Ready(submit_error_frame(Opcode::Infer, id, e)),
-                },
+                Ok(idx) => {
+                    match shared.coord.try_submit_to_qos(idx, req.x, request_qos(req.qos)) {
+                        Ok(rx) => Outgoing::Pending { version, request_id: id, rx },
+                        Err(e) => Outgoing::Ready(submit_error_frame(Opcode::Infer, id, e)),
+                    }
+                }
             },
         },
         Opcode::InferBatch => match wire::decode_infer_batch(&frame.payload, version) {
             Err(e) => bad_request(Opcode::InferBatch, id, &e),
-            Ok((backend, model, samples)) => {
-                match resolve_pool(shared, &model, backend, samples[0].len()) {
+            Ok(req) => {
+                match resolve_pool(shared, &req.model, req.backend, req.samples[0].len()) {
                     Err(out) => Outgoing::Ready(out.into_frame(Opcode::InferBatch, id)),
                     Ok(idx) => {
-                        let total = samples.len();
+                        let total = req.samples.len();
+                        let qos = request_qos(req.qos);
                         let mut receivers = Vec::with_capacity(total);
                         let mut failed = None;
-                        for x in samples {
-                            match shared.coord.try_submit_to(idx, x) {
+                        for x in req.samples {
+                            match shared.coord.try_submit_to_qos(idx, x, qos) {
                                 Ok(rx) => receivers.push(rx),
                                 Err(e) => {
                                     failed = Some(e);
@@ -699,6 +808,49 @@ fn bad_request(opcode: Opcode, id: u64, msg: &str) -> Outgoing {
     Outgoing::Ready(Frame::error(opcode, id, Status::BadRequest, msg))
 }
 
+/// Map a wire QoS onto coordinator scheduling inputs. The wire deadline
+/// is a *relative* budget (µs from server receipt — client and server
+/// clocks need not agree); it becomes absolute here, so queueing and
+/// service time all burn the same budget.
+fn request_qos(qos: wire::Qos) -> RequestQos {
+    RequestQos {
+        deadline: qos
+            .has_deadline()
+            .then(|| Instant::now() + Duration::from_micros(qos.deadline_us)),
+        priority: qos.priority.rank(),
+    }
+}
+
+/// Snapshot the resilience counters for one `Health` response.
+fn health_report(shared: &Shared) -> HealthReport {
+    let snap = shared.coord.metrics().snapshot();
+    let capacity = shared.coord.queue_capacity() as u32;
+    let pools = shared
+        .coord
+        .pool_names()
+        .iter()
+        .enumerate()
+        .map(|(i, name)| {
+            // Pools that have not served yet have no metrics entry.
+            let m = snap.backends.get(name);
+            PoolHealth {
+                name: name.clone(),
+                queue_depth: shared.coord.queue_depth(i).unwrap_or(0) as u32,
+                queue_capacity: capacity,
+                replicas: shared.coord.pool_replicas(i).unwrap_or(0) as u32,
+                shed: m.map_or(0, |m| m.shed),
+                expired: m.map_or(0, |m| m.expired),
+            }
+        })
+        .collect();
+    HealthReport {
+        degraded: shared.routes.values().any(|r| r.degrade.is_degraded()),
+        degraded_transitions: snap.degraded_transitions,
+        read_timeouts: shared.read_timeouts.load(Ordering::Relaxed),
+        pools,
+    }
+}
+
 /// A routing failure, opcode-agnostic.
 struct RouteError(Status, String);
 
@@ -733,9 +885,23 @@ fn resolve_pool(
         ));
     }
     if requested == BACKEND_ANY {
-        return shared.coord.least_loaded_of(&route.pools).ok_or_else(|| {
+        let idx = shared.coord.least_loaded_of(&route.pools).ok_or_else(|| {
             RouteError(Status::Internal, "model has no serving pools".into())
-        });
+        })?;
+        // Degraded-mode check rides the routing decision: the occupancy
+        // of the best pool the router could pick is the load signal.
+        // Sustained saturation flips `BACKEND_ANY` traffic onto the
+        // cheapest backend; explicitly indexed requests are untouched.
+        let capacity = shared.coord.queue_capacity().max(1);
+        let occupancy = shared.coord.queue_depth(idx).unwrap_or(0) as f64 / capacity as f64;
+        let (degraded, flipped) = route.degrade.observe(occupancy, Instant::now());
+        if flipped {
+            shared.coord.metrics().record_degraded_transition();
+        }
+        if degraded {
+            return Ok(route.cheapest_pool);
+        }
+        return Ok(idx);
     }
     let idx = requested as usize;
     route.pools.get(idx).copied().ok_or_else(|| {
@@ -757,5 +923,43 @@ fn submit_error_frame(opcode: Opcode, id: u64, e: SubmitError) -> Frame {
         SubmitError::UnknownBackend => {
             Frame::error(opcode, id, Status::UnknownBackend, "unknown backend")
         }
+        SubmitError::Expired { estimated_wait } => Frame::error(
+            opcode,
+            id,
+            Status::Expired,
+            &format!(
+                "deadline infeasible: estimated queue wait {:.1} ms already exceeds it",
+                estimated_wait.as_secs_f64() * 1e3
+            ),
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Degraded mode must prefer the SPx shift-add datapaths over the
+    /// f32 CPU forwards — the paper's precision-for-power trade.
+    #[test]
+    fn cheapest_backend_is_the_quantized_datapath() {
+        let kinds = [
+            BackendKind::Cpu,
+            BackendKind::PipelineCpu { depth: 2 },
+            BackendKind::PipelineFpga { config: AccelConfig::default_fpga(), depth: 2 },
+            BackendKind::FpgaSim(AccelConfig::default_fpga()),
+        ];
+        let cheapest = kinds.iter().min_by_key(|k| k.cost_rank()).unwrap();
+        assert!(matches!(cheapest, BackendKind::FpgaSim(_)));
+        let mut ranks: Vec<u8> = kinds.iter().map(|k| k.cost_rank()).collect();
+        ranks.sort_unstable();
+        assert_eq!(ranks, vec![0, 1, 2, 3], "cost ranks must be a strict order");
+    }
+
+    #[test]
+    fn serve_config_defaults_are_safe() {
+        let c = ServeConfig::default();
+        assert!(c.read_timeout >= Duration::from_secs(1), "read deadline too twitchy");
+        assert!(c.degrade.validate().is_ok());
     }
 }

@@ -10,10 +10,16 @@
 //!
 //! Version 2 adds a model-name field to `Infer`/`InferBatch` (routing
 //! across the multi-model registry), a two-name `SwapModel` payload
-//! (slot + source) and the `ListModels` opcode. Version-1 frames are
-//! still accepted: their payloads carry no model name and resolve to
-//! the server's default model, and the server answers a v1 request
-//! with a v1 frame (see `decode_*`'s `version` parameter).
+//! (slot + source) and the `ListModels` opcode. Version 3 adds
+//! per-request quality-of-service fields to `Infer`/`InferBatch`
+//! (`u64 deadline_us | u8 priority`, see [`Qos`]), the [`Opcode::Health`]
+//! opcode (per-pool queue depth, shed/expiry counters, degraded-mode
+//! state) and the [`Status::Expired`]/[`Status::Timeout`] statuses.
+//! Version-1 and version-2 frames are still accepted: their payloads
+//! carry no QoS fields and default to "no deadline, normal priority"
+//! (v1 additionally carries no model name and resolves to the server's
+//! default model), and the server answers each request at the version
+//! it arrived with (see `decode_*`'s `version` parameter).
 //!
 //! Requests always carry status [`Status::Ok`]; responses echo the
 //! request's opcode, id and version. A non-`Ok` status turns the
@@ -25,12 +31,13 @@
 
 use std::io::{ErrorKind, Read, Write};
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
 
 /// Frame magic: "EMWP" (EdgeMlp Wire Protocol).
 pub const MAGIC: [u8; 4] = *b"EMWP";
 /// Current protocol version; bumped on any incompatible frame-layout
 /// change.
-pub const VERSION: u16 = 2;
+pub const VERSION: u16 = 3;
 /// Oldest version still accepted (v1 payloads carry no model names).
 pub const MIN_VERSION: u16 = 1;
 /// Fixed header size in bytes.
@@ -44,6 +51,11 @@ pub const BACKEND_ANY: u32 = u32::MAX;
 /// Cap on the v2 model-name field. Anything longer is a malformed
 /// payload — enforced before the name bytes are read.
 pub const MAX_MODEL_NAME_LEN: usize = 255;
+/// Cap on the v3 `deadline_us` field (1 hour). A deadline beyond this
+/// is a malformed payload, not a very patient client — it guards
+/// against nonsense values like `u64::MAX` overflowing deadline
+/// arithmetic server-side.
+pub const MAX_DEADLINE_US: u64 = 3_600_000_000;
 
 /// Request kinds a client can send; responses echo the opcode.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -61,6 +73,9 @@ pub enum Opcode {
     SwapModel = 4,
     /// Enumerate the served models (v2 only).
     ListModels = 5,
+    /// Resilience snapshot: per-pool queue depth, shed/expiry counters
+    /// and degraded-mode state (v3 only).
+    Health = 6,
 }
 
 impl Opcode {
@@ -72,6 +87,7 @@ impl Opcode {
             3 => Some(Opcode::Stats),
             4 => Some(Opcode::SwapModel),
             5 => Some(Opcode::ListModels),
+            6 => Some(Opcode::Health),
             _ => None,
         }
     }
@@ -100,6 +116,14 @@ pub enum Status {
     Busy = 7,
     /// Unexpected server-side failure (response channel lost, timeout).
     Internal = 8,
+    /// The request's deadline cannot be (or was not) met: rejected at
+    /// admission because the estimated queue wait already exceeds the
+    /// deadline, or expired in the queue before a worker reached it.
+    /// No inference was computed (v3).
+    Expired = 9,
+    /// The connection sat idle (or mid-frame) past the server's read
+    /// deadline and is being closed to free its slot (v3).
+    Timeout = 10,
 }
 
 impl Status {
@@ -114,6 +138,8 @@ impl Status {
             6 => Some(Status::UnknownModel),
             7 => Some(Status::Busy),
             8 => Some(Status::Internal),
+            9 => Some(Status::Expired),
+            10 => Some(Status::Timeout),
             _ => None,
         }
     }
@@ -122,6 +148,78 @@ impl Status {
 impl std::fmt::Display for Status {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "{self:?}")
+    }
+}
+
+/// v3 request priority. Lower [`Priority::rank`] is served first; ties
+/// (and every pre-v3 request) keep FIFO order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[repr(u8)]
+pub enum Priority {
+    /// The default for every request, including all v1/v2 traffic.
+    #[default]
+    Normal = 0,
+    /// Jumps the queue ahead of `Normal`/`Low` work.
+    High = 1,
+    /// Yields to everything else (offline/batch traffic).
+    Low = 2,
+}
+
+impl Priority {
+    pub fn from_u8(v: u8) -> Option<Priority> {
+        match v {
+            0 => Some(Priority::Normal),
+            1 => Some(Priority::High),
+            2 => Some(Priority::Low),
+            _ => None,
+        }
+    }
+
+    /// Scheduling rank: smaller runs first (High < Normal < Low). This
+    /// is deliberately distinct from the wire byte, which keeps 0 as
+    /// the compatible "normal" default.
+    pub fn rank(self) -> u8 {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Low => 2,
+        }
+    }
+}
+
+/// Per-request quality of service carried by v3 `Infer`/`InferBatch`
+/// payloads. The deadline is a *relative* completion budget in
+/// microseconds from the moment the server decodes the request — never
+/// an absolute timestamp, so client and server clocks need not agree.
+/// `deadline_us == 0` means "no deadline" (the v1/v2 behavior).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Qos {
+    /// Completion budget in µs from server receipt; 0 = none. Capped at
+    /// [`MAX_DEADLINE_US`] by the codec.
+    pub deadline_us: u64,
+    pub priority: Priority,
+}
+
+impl Qos {
+    /// No deadline, normal priority — what every v1/v2 request gets.
+    pub const NONE: Qos = Qos { deadline_us: 0, priority: Priority::Normal };
+
+    pub fn with_deadline_us(deadline_us: u64) -> Qos {
+        Qos { deadline_us, priority: Priority::Normal }
+    }
+
+    pub fn has_deadline(&self) -> bool {
+        self.deadline_us > 0
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        if self.deadline_us > MAX_DEADLINE_US {
+            return Err(format!(
+                "deadline {}µs exceeds cap {MAX_DEADLINE_US}µs",
+                self.deadline_us
+            ));
+        }
+        Ok(())
     }
 }
 
@@ -179,6 +277,9 @@ pub enum ReadError {
     Eof,
     /// The caller's stop flag was raised while waiting for bytes.
     Stopped,
+    /// The caller's read deadline passed before a full frame arrived —
+    /// the peer is idle or dribbling a partial frame (slowloris).
+    TimedOut,
 }
 
 impl std::fmt::Display for ReadError {
@@ -188,6 +289,7 @@ impl std::fmt::Display for ReadError {
             ReadError::Protocol(m) => write!(f, "protocol error: {m}"),
             ReadError::Eof => write!(f, "connection closed"),
             ReadError::Stopped => write!(f, "stopped"),
+            ReadError::TimedOut => write!(f, "read deadline exceeded"),
         }
     }
 }
@@ -223,8 +325,24 @@ pub fn read_frame_with(
     max_payload: u32,
     stop: Option<&AtomicBool>,
 ) -> Result<Frame, ReadError> {
+    read_frame_deadline(r, max_payload, stop, None)
+}
+
+/// [`read_frame_with`] plus a hard read deadline: if `deadline` passes
+/// before one complete frame has arrived, the read fails with
+/// [`ReadError::TimedOut`]. The deadline is only observed on socket
+/// read-timeout ticks, so the underlying reader must have a read
+/// timeout set (the server uses `READ_TICK`) — granularity is one tick.
+/// This is the slowloris defense: both a silent connection and one
+/// dribbling a partial frame trip it.
+pub fn read_frame_deadline(
+    r: &mut impl Read,
+    max_payload: u32,
+    stop: Option<&AtomicBool>,
+    deadline: Option<Instant>,
+) -> Result<Frame, ReadError> {
     let mut header = [0u8; HEADER_LEN];
-    read_full(r, &mut header, stop, true)?;
+    read_full(r, &mut header, stop, deadline, true)?;
     if header[0..4] != MAGIC {
         return Err(ReadError::Protocol(format!("bad magic {:02x?}", &header[0..4])));
     }
@@ -246,16 +364,18 @@ pub fn read_frame_with(
         )));
     }
     let mut payload = vec![0u8; len as usize];
-    read_full(r, &mut payload, stop, false)?;
+    read_full(r, &mut payload, stop, deadline, false)?;
     Ok(Frame { version, opcode, status, request_id, payload })
 }
 
-/// `read_exact` that survives read-timeout ticks (checking `stop` on
-/// each) and distinguishes boundary EOF from mid-frame truncation.
+/// `read_exact` that survives read-timeout ticks (checking `stop` and
+/// the read `deadline` on each) and distinguishes boundary EOF from
+/// mid-frame truncation.
 fn read_full(
     r: &mut impl Read,
     buf: &mut [u8],
     stop: Option<&AtomicBool>,
+    deadline: Option<Instant>,
     eof_ok_at_start: bool,
 ) -> Result<(), ReadError> {
     let mut filled = 0;
@@ -271,11 +391,20 @@ fn read_full(
             Ok(n) => filled += n,
             Err(e) if e.kind() == ErrorKind::Interrupted => {}
             Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
-                match stop {
-                    Some(s) if s.load(Ordering::Relaxed) => return Err(ReadError::Stopped),
-                    Some(_) => {} // timeout tick: keep waiting
-                    None => return Err(ReadError::Io(e)),
+                if let Some(s) = stop {
+                    if s.load(Ordering::Relaxed) {
+                        return Err(ReadError::Stopped);
+                    }
                 }
+                if let Some(d) = deadline {
+                    if Instant::now() >= d {
+                        return Err(ReadError::TimedOut);
+                    }
+                }
+                if stop.is_none() && deadline.is_none() {
+                    return Err(ReadError::Io(e));
+                }
+                // timeout tick: keep waiting
             }
             Err(e) => return Err(ReadError::Io(e)),
         }
@@ -287,7 +416,8 @@ fn read_full(
 // Payload codecs. All multi-byte values little-endian, mirroring the
 // EMLP blob format in `util::serde`. The `decode_*` functions take the
 // frame's version and parse the matching layout; v1 layouts carry no
-// model names (the empty string routes to the server's default model).
+// model names (the empty string routes to the server's default model)
+// and pre-v3 layouts carry no QoS fields (defaulting to `Qos::NONE`).
 // ---------------------------------------------------------------------------
 
 /// Bounds-checked payload reader.
@@ -341,6 +471,21 @@ impl<'a> Buf<'a> {
             .map_err(|e| format!("model name not UTF-8: {e}"))
     }
 
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// v3 QoS fields: `u64 deadline_us | u8 priority`, both validated.
+    fn qos(&mut self) -> Result<Qos, String> {
+        let deadline_us = self.u64()?;
+        let raw = self.u8()?;
+        let priority =
+            Priority::from_u8(raw).ok_or_else(|| format!("unknown priority value {raw}"))?;
+        let qos = Qos { deadline_us, priority };
+        qos.validate()?;
+        Ok(qos)
+    }
+
     fn remaining(&self) -> usize {
         self.bytes.len() - self.pos
     }
@@ -372,48 +517,106 @@ fn push_name(out: &mut Vec<u8>, name: &str) -> Result<(), String> {
     Ok(())
 }
 
-/// Shared body of the v1/v2 `Infer` encoders: `model` is present in v2
-/// payloads only.
-fn encode_infer_body(backend: u32, model: Option<&str>, x: &[f32]) -> Result<Vec<u8>, String> {
-    let mut out = Vec::with_capacity(10 + model.map_or(0, str::len) + x.len() * 4);
+fn push_qos(out: &mut Vec<u8>, qos: Qos) -> Result<(), String> {
+    qos.validate()?;
+    out.extend_from_slice(&qos.deadline_us.to_le_bytes());
+    out.push(qos.priority as u8);
+    Ok(())
+}
+
+/// A decoded `Infer` request payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferReq {
+    pub backend: u32,
+    /// Empty = the server's default model (always empty for v1).
+    pub model: String,
+    /// `Qos::NONE` for every pre-v3 payload.
+    pub qos: Qos,
+    pub x: Vec<f32>,
+}
+
+/// Shared body of the v1/v2/v3 `Infer` encoders: `model` is present in
+/// v2+ payloads, `qos` in v3 payloads only.
+fn encode_infer_body(
+    backend: u32,
+    model: Option<&str>,
+    qos: Option<Qos>,
+    x: &[f32],
+) -> Result<Vec<u8>, String> {
+    let mut out = Vec::with_capacity(19 + model.map_or(0, str::len) + x.len() * 4);
     out.extend_from_slice(&backend.to_le_bytes());
     if let Some(model) = model {
         push_name(&mut out, model)?;
+    }
+    if let Some(qos) = qos {
+        push_qos(&mut out, qos)?;
     }
     out.extend_from_slice(&(x.len() as u32).to_le_bytes());
     push_f32s(&mut out, x);
     Ok(out)
 }
 
-/// v2 `Infer` request payload:
-/// `u32 backend | u16 model_len | model | u32 dim | dim × f32`.
-/// The empty model name routes to the server's default model.
+/// v3 `Infer` request payload with explicit QoS: `u32 backend |
+/// u16 model_len | model | u64 deadline_us | u8 priority | u32 dim |
+/// dim × f32`. The empty model name routes to the server's default
+/// model.
+pub fn encode_infer_qos(
+    backend: u32,
+    model: &str,
+    qos: Qos,
+    x: &[f32],
+) -> Result<Vec<u8>, String> {
+    encode_infer_body(backend, Some(model), Some(qos), x)
+}
+
+/// v3 `Infer` request payload with default QoS (no deadline, normal
+/// priority) — the common case, and what [`Frame::ok`]'s `VERSION`
+/// stamp expects.
 pub fn encode_infer(backend: u32, model: &str, x: &[f32]) -> Result<Vec<u8>, String> {
-    encode_infer_body(backend, Some(model), x)
+    encode_infer_qos(backend, model, Qos::NONE, x)
+}
+
+/// v2 `Infer` request payload (no QoS fields):
+/// `u32 backend | u16 model_len | model | u32 dim | dim × f32`.
+pub fn encode_infer_v2(backend: u32, model: &str, x: &[f32]) -> Result<Vec<u8>, String> {
+    encode_infer_body(backend, Some(model), None, x)
 }
 
 /// v1 `Infer` request payload: `u32 backend | u32 dim | dim × f32`.
 pub fn encode_infer_v1(backend: u32, x: &[f32]) -> Vec<u8> {
-    encode_infer_body(backend, None, x).expect("nameless encoding is infallible")
+    encode_infer_body(backend, None, None, x).expect("nameless encoding is infallible")
 }
 
 /// Decode an `Infer` payload framed at `version`. v1 payloads resolve
-/// to the empty (default) model name.
-pub fn decode_infer(payload: &[u8], version: u16) -> Result<(u32, String, Vec<f32>), String> {
+/// to the empty (default) model name; pre-v3 payloads to `Qos::NONE`.
+pub fn decode_infer(payload: &[u8], version: u16) -> Result<InferReq, String> {
     let mut b = Buf::new(payload);
     let backend = b.u32()?;
     let model = if version >= 2 { b.name()? } else { String::new() };
+    let qos = if version >= 3 { b.qos()? } else { Qos::NONE };
     let dim = b.u32()? as usize;
     let x = b.f32s(dim)?;
     b.finish()?;
-    Ok((backend, model, x))
+    Ok(InferReq { backend, model, qos, x })
 }
 
-/// Shared body of the v1/v2 `InferBatch` encoders — one place for the
-/// ragged-batch validation so the two versions cannot diverge.
+/// A decoded `InferBatch` request payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferBatchReq {
+    pub backend: u32,
+    /// Empty = the server's default model (always empty for v1).
+    pub model: String,
+    /// One QoS for the whole batch; `Qos::NONE` for pre-v3 payloads.
+    pub qos: Qos,
+    pub samples: Vec<Vec<f32>>,
+}
+
+/// Shared body of the v1/v2/v3 `InferBatch` encoders — one place for
+/// the ragged-batch validation so the versions cannot diverge.
 fn encode_infer_batch_body(
     backend: u32,
     model: Option<&str>,
+    qos: Option<Qos>,
     samples: &[Vec<f32>],
 ) -> Result<Vec<u8>, String> {
     let dim = samples.first().map(|s| s.len()).unwrap_or(0);
@@ -421,10 +624,13 @@ fn encode_infer_batch_body(
         return Err("ragged batch: samples differ in dimension".into());
     }
     let mut out =
-        Vec::with_capacity(14 + model.map_or(0, str::len) + samples.len() * dim * 4);
+        Vec::with_capacity(23 + model.map_or(0, str::len) + samples.len() * dim * 4);
     out.extend_from_slice(&backend.to_le_bytes());
     if let Some(model) = model {
         push_name(&mut out, model)?;
+    }
+    if let Some(qos) = qos {
+        push_qos(&mut out, qos)?;
     }
     out.extend_from_slice(&(samples.len() as u32).to_le_bytes());
     out.extend_from_slice(&(dim as u32).to_le_bytes());
@@ -434,30 +640,49 @@ fn encode_infer_batch_body(
     Ok(out)
 }
 
-/// v2 `InferBatch` request payload:
-/// `u32 backend | u16 model_len | model | u32 batch | u32 dim | batch × dim × f32`.
+/// v3 `InferBatch` request payload with explicit QoS:
+/// `u32 backend | u16 model_len | model | u64 deadline_us | u8 priority
+/// | u32 batch | u32 dim | batch × dim × f32`.
+pub fn encode_infer_batch_qos(
+    backend: u32,
+    model: &str,
+    qos: Qos,
+    samples: &[Vec<f32>],
+) -> Result<Vec<u8>, String> {
+    encode_infer_batch_body(backend, Some(model), Some(qos), samples)
+}
+
+/// v3 `InferBatch` request payload with default QoS.
 pub fn encode_infer_batch(
     backend: u32,
     model: &str,
     samples: &[Vec<f32>],
 ) -> Result<Vec<u8>, String> {
-    encode_infer_batch_body(backend, Some(model), samples)
+    encode_infer_batch_qos(backend, model, Qos::NONE, samples)
+}
+
+/// v2 `InferBatch` request payload (no QoS fields):
+/// `u32 backend | u16 model_len | model | u32 batch | u32 dim | batch × dim × f32`.
+pub fn encode_infer_batch_v2(
+    backend: u32,
+    model: &str,
+    samples: &[Vec<f32>],
+) -> Result<Vec<u8>, String> {
+    encode_infer_batch_body(backend, Some(model), None, samples)
 }
 
 /// v1 `InferBatch` request payload:
 /// `u32 backend | u32 batch | u32 dim | batch × dim × f32`.
 pub fn encode_infer_batch_v1(backend: u32, samples: &[Vec<f32>]) -> Result<Vec<u8>, String> {
-    encode_infer_batch_body(backend, None, samples)
+    encode_infer_batch_body(backend, None, None, samples)
 }
 
 /// Decode an `InferBatch` payload framed at `version`.
-pub fn decode_infer_batch(
-    payload: &[u8],
-    version: u16,
-) -> Result<(u32, String, Vec<Vec<f32>>), String> {
+pub fn decode_infer_batch(payload: &[u8], version: u16) -> Result<InferBatchReq, String> {
     let mut b = Buf::new(payload);
     let backend = b.u32()?;
     let model = if version >= 2 { b.name()? } else { String::new() };
+    let qos = if version >= 3 { b.qos()? } else { Qos::NONE };
     let batch = b.u32()? as usize;
     let dim = b.u32()? as usize;
     check_grid(batch, dim, b.remaining())?;
@@ -466,7 +691,7 @@ pub fn decode_infer_batch(
         samples.push(b.f32s(dim)?);
     }
     b.finish()?;
-    Ok((backend, model, samples))
+    Ok(InferBatchReq { backend, model, qos, samples })
 }
 
 /// Reject a declared `batch × dim` geometry that does not match the
@@ -624,6 +849,87 @@ pub fn decode_model_list(payload: &[u8]) -> Result<Vec<ModelInfo>, String> {
     Ok(models)
 }
 
+/// One pool's slice of a `Health` response.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PoolHealth {
+    /// Pool label (`"<backend>/<slot>"`).
+    pub name: String,
+    /// Requests currently queued (instantaneous).
+    pub queue_depth: u32,
+    /// The queue's bound — depth/capacity is the occupancy signal the
+    /// degraded-mode controller watches.
+    pub queue_capacity: u32,
+    pub replicas: u32,
+    /// Requests shed at admission because the queue was full.
+    pub shed: u64,
+    /// Requests answered `Expired` (admission reject + in-queue expiry).
+    pub expired: u64,
+}
+
+/// `Health` (v3) response body: the resilience counters a load balancer
+/// or operator polls to see shedding and degradation as they happen.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct HealthReport {
+    /// True while degraded-mode routing is active for any model.
+    pub degraded: bool,
+    /// Mode flips (normal→degraded and back) since startup.
+    pub degraded_transitions: u64,
+    /// Connections closed by the server's read deadline (slowloris).
+    pub read_timeouts: u64,
+    pub pools: Vec<PoolHealth>,
+}
+
+/// `Health` response payload: `u8 degraded | u64 transitions |
+/// u64 read_timeouts | u32 count | count × (u16 name_len | name |
+/// u32 depth | u32 capacity | u32 replicas | u64 shed | u64 expired)`.
+/// The request payload is empty.
+pub fn encode_health(report: &HealthReport) -> Result<Vec<u8>, String> {
+    let mut out = Vec::with_capacity(21 + report.pools.len() * 32);
+    out.push(report.degraded as u8);
+    out.extend_from_slice(&report.degraded_transitions.to_le_bytes());
+    out.extend_from_slice(&report.read_timeouts.to_le_bytes());
+    out.extend_from_slice(&(report.pools.len() as u32).to_le_bytes());
+    for p in &report.pools {
+        push_name(&mut out, &p.name)?;
+        out.extend_from_slice(&p.queue_depth.to_le_bytes());
+        out.extend_from_slice(&p.queue_capacity.to_le_bytes());
+        out.extend_from_slice(&p.replicas.to_le_bytes());
+        out.extend_from_slice(&p.shed.to_le_bytes());
+        out.extend_from_slice(&p.expired.to_le_bytes());
+    }
+    Ok(out)
+}
+
+pub fn decode_health(payload: &[u8]) -> Result<HealthReport, String> {
+    let mut b = Buf::new(payload);
+    let degraded = match b.u8()? {
+        0 => false,
+        1 => true,
+        other => return Err(format!("bad degraded flag {other}")),
+    };
+    let degraded_transitions = b.u64()?;
+    let read_timeouts = b.u64()?;
+    let count = b.u32()? as usize;
+    // Each entry is at least 30 bytes; reject a hostile count before
+    // allocating for it.
+    if (count as u64) * 30 > payload.len() as u64 {
+        return Err(format!("pool count {count} exceeds payload size"));
+    }
+    let mut pools = Vec::with_capacity(count);
+    for _ in 0..count {
+        pools.push(PoolHealth {
+            name: b.name()?,
+            queue_depth: b.u32()?,
+            queue_capacity: b.u32()?,
+            replicas: b.u32()?,
+            shed: b.u64()?,
+            expired: b.u64()?,
+        });
+    }
+    b.finish()?;
+    Ok(HealthReport { degraded, degraded_transitions, read_timeouts, pools })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -672,7 +978,7 @@ mod tests {
 
     #[test]
     fn wrong_version_rejected() {
-        for bad in [0u16, 3, 99] {
+        for bad in [0u16, 4, 99] {
             let mut buf = Vec::new();
             write_frame(&mut buf, &Frame::ok(Opcode::Ping, 0, Vec::new())).unwrap();
             buf[4..6].copy_from_slice(&bad.to_le_bytes());
@@ -724,40 +1030,87 @@ mod tests {
     }
 
     #[test]
-    fn infer_payload_roundtrip_both_versions() {
+    fn infer_payload_roundtrip_all_versions() {
         let x = vec![0.25f32, -1.0, 3.5];
-        let (backend, model, back) =
-            decode_infer(&encode_infer(BACKEND_ANY, "qnet", &x).unwrap(), 2).unwrap();
-        assert_eq!(backend, BACKEND_ANY);
-        assert_eq!(model, "qnet");
-        assert_eq!(back, x);
+        // v3 with explicit QoS.
+        let qos = Qos { deadline_us: 50_000, priority: Priority::High };
+        let req =
+            decode_infer(&encode_infer_qos(BACKEND_ANY, "qnet", qos, &x).unwrap(), 3).unwrap();
+        assert_eq!(req.backend, BACKEND_ANY);
+        assert_eq!(req.model, "qnet");
+        assert_eq!(req.qos, qos);
+        assert_eq!(req.x, x);
+        // v3 default QoS (the plain encoder).
+        let req = decode_infer(&encode_infer(BACKEND_ANY, "qnet", &x).unwrap(), 3).unwrap();
+        assert_eq!(req.qos, Qos::NONE);
+        assert!(!req.qos.has_deadline());
+        // v2: no QoS fields, defaults to none.
+        let req = decode_infer(&encode_infer_v2(BACKEND_ANY, "qnet", &x).unwrap(), 2).unwrap();
+        assert_eq!(req.model, "qnet");
+        assert_eq!(req.qos, Qos::NONE);
+        assert_eq!(req.x, x);
         // v1: no model field, resolves to the default model.
-        let (backend, model, back) = decode_infer(&encode_infer_v1(0, &x), 1).unwrap();
-        assert_eq!(backend, 0);
-        assert_eq!(model, "");
-        assert_eq!(back, x);
+        let req = decode_infer(&encode_infer_v1(0, &x), 1).unwrap();
+        assert_eq!(req.backend, 0);
+        assert_eq!(req.model, "");
+        assert_eq!(req.qos, Qos::NONE);
+        assert_eq!(req.x, x);
         // Trailing garbage rejected.
         let mut p = encode_infer(0, "", &x).unwrap();
         p.push(0);
-        assert!(decode_infer(&p, 2).is_err());
+        assert!(decode_infer(&p, 3).is_err());
     }
 
     #[test]
-    fn infer_batch_payload_roundtrip_both_versions() {
+    fn qos_field_validation() {
+        let x = vec![1.0f32];
+        // Unknown priority byte rejected.
+        let mut p = encode_infer_qos(0, "", Qos::NONE, &x).unwrap();
+        // Layout: backend(4) | name_len(2) | deadline(8) | priority(1)…
+        p[14] = 9;
+        let err = decode_infer(&p, 3).unwrap_err();
+        assert!(err.contains("priority"), "{err}");
+        // Absurd deadline rejected by both encoder and decoder.
+        let absurd = Qos::with_deadline_us(MAX_DEADLINE_US + 1);
+        assert!(encode_infer_qos(0, "", absurd, &x).is_err());
+        let mut p = encode_infer_qos(0, "", Qos::NONE, &x).unwrap();
+        p[6..14].copy_from_slice(&u64::MAX.to_le_bytes());
+        let err = decode_infer(&p, 3).unwrap_err();
+        assert!(err.contains("deadline"), "{err}");
+        // Truncated QoS fields are a truncated payload, not a panic.
+        let good = encode_infer_qos(0, "", Qos::with_deadline_us(1000), &x).unwrap();
+        for cut in 7..15 {
+            assert!(decode_infer(&good[..cut], 3).is_err(), "cut at {cut}");
+        }
+        // The deadline cap itself is encodable.
+        let max = Qos::with_deadline_us(MAX_DEADLINE_US);
+        let p = encode_infer_qos(0, "", max, &x).unwrap();
+        assert_eq!(decode_infer(&p, 3).unwrap().qos, max);
+    }
+
+    #[test]
+    fn infer_batch_payload_roundtrip_all_versions() {
         let samples = vec![vec![1.0f32, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]];
-        let payload = encode_infer_batch(2, "mnist", &samples).unwrap();
-        let (backend, model, back) = decode_infer_batch(&payload, 2).unwrap();
-        assert_eq!(backend, 2);
-        assert_eq!(model, "mnist");
-        assert_eq!(back, samples);
+        let qos = Qos { deadline_us: 2_000, priority: Priority::Low };
+        let payload = encode_infer_batch_qos(2, "mnist", qos, &samples).unwrap();
+        let req = decode_infer_batch(&payload, 3).unwrap();
+        assert_eq!(req.backend, 2);
+        assert_eq!(req.model, "mnist");
+        assert_eq!(req.qos, qos);
+        assert_eq!(req.samples, samples);
+        let payload = encode_infer_batch_v2(2, "mnist", &samples).unwrap();
+        let req = decode_infer_batch(&payload, 2).unwrap();
+        assert_eq!(req.model, "mnist");
+        assert_eq!(req.qos, Qos::NONE);
+        assert_eq!(req.samples, samples);
         let payload = encode_infer_batch_v1(1, &samples).unwrap();
-        let (backend, model, back) = decode_infer_batch(&payload, 1).unwrap();
-        assert_eq!(backend, 1);
-        assert_eq!(model, "");
-        assert_eq!(back, samples);
+        let req = decode_infer_batch(&payload, 1).unwrap();
+        assert_eq!(req.backend, 1);
+        assert_eq!(req.model, "");
+        assert_eq!(req.samples, samples);
         assert!(encode_infer_batch(0, "", &[vec![1.0], vec![1.0, 2.0]]).is_err());
         assert!(
-            decode_infer_batch(&encode_infer_batch(0, "", &[]).unwrap(), 2).is_err()
+            decode_infer_batch(&encode_infer_batch(0, "", &[]).unwrap(), 3).is_err()
         );
     }
 
@@ -767,7 +1120,7 @@ mod tests {
         assert!(encode_infer(0, &long, &[1.0]).is_err());
         let ok = "m".repeat(MAX_MODEL_NAME_LEN);
         let p = encode_infer(0, &ok, &[1.0]).unwrap();
-        assert_eq!(decode_infer(&p, 2).unwrap().1, ok);
+        assert_eq!(decode_infer(&p, 3).unwrap().model, ok);
     }
 
     #[test]
@@ -781,11 +1134,11 @@ mod tests {
         for lied in 0..=u16::MAX {
             let mut p = good.clone();
             p[4..6].copy_from_slice(&lied.to_le_bytes());
-            match decode_infer(&p, 2) {
-                Ok((_, model, back)) => {
+            match decode_infer(&p, 3) {
+                Ok(req) => {
                     assert_eq!(lied, 5, "length {lied} decoded");
-                    assert_eq!(model, "model");
-                    assert_eq!(back, x);
+                    assert_eq!(req.model, "model");
+                    assert_eq!(req.x, x);
                 }
                 Err(msg) => assert!(!msg.is_empty()),
             }
@@ -795,10 +1148,10 @@ mod tests {
         for lied in [0u16, 1, 4, 6, 200, 255, 256, 1000, u16::MAX] {
             let mut p = goodb.clone();
             p[4..6].copy_from_slice(&lied.to_le_bytes());
-            match decode_infer_batch(&p, 2) {
-                Ok((_, model, _)) => {
+            match decode_infer_batch(&p, 3) {
+                Ok(req) => {
                     assert_eq!(lied, 5);
-                    assert_eq!(model, "model");
+                    assert_eq!(req.model, "model");
                 }
                 Err(msg) => assert!(!msg.is_empty()),
             }
@@ -891,5 +1244,88 @@ mod tests {
             read_frame(&mut AlwaysTimeout, 1024),
             Err(ReadError::Io(_))
         ));
+    }
+
+    #[test]
+    fn read_deadline_trips_on_stalled_reader() {
+        // A reader that yields one byte then stalls forever simulates a
+        // slowloris client mid-frame.
+        struct Dribble {
+            sent: bool,
+        }
+        impl std::io::Read for Dribble {
+            fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+                if self.sent {
+                    Err(std::io::Error::from(ErrorKind::WouldBlock))
+                } else {
+                    self.sent = true;
+                    buf[0] = b'E';
+                    Ok(1)
+                }
+            }
+        }
+        // Deadline already in the past: first WouldBlock tick trips it.
+        let past = Instant::now() - std::time::Duration::from_millis(1);
+        assert!(matches!(
+            read_frame_deadline(&mut Dribble { sent: false }, 1024, None, Some(past)),
+            Err(ReadError::TimedOut)
+        ));
+        // A raised stop flag still wins over the deadline.
+        let stop = AtomicBool::new(true);
+        assert!(matches!(
+            read_frame_deadline(&mut Dribble { sent: false }, 1024, Some(&stop), Some(past)),
+            Err(ReadError::Stopped)
+        ));
+        // With a generous deadline a complete frame still reads fine.
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::ok(Opcode::Ping, 7, b"hi".to_vec())).unwrap();
+        let far = Instant::now() + std::time::Duration::from_secs(60);
+        let frame =
+            read_frame_deadline(&mut Cursor::new(buf), 1024, None, Some(far)).unwrap();
+        assert_eq!(frame.request_id, 7);
+    }
+
+    #[test]
+    fn health_payload_roundtrip() {
+        let report = HealthReport {
+            degraded: true,
+            degraded_transitions: 3,
+            read_timeouts: 2,
+            pools: vec![
+                PoolHealth {
+                    name: "cpu/default".into(),
+                    queue_depth: 17,
+                    queue_capacity: 1024,
+                    replicas: 2,
+                    shed: 40,
+                    expired: 9,
+                },
+                PoolHealth {
+                    name: "fpga/default".into(),
+                    queue_depth: 0,
+                    queue_capacity: 1024,
+                    replicas: 1,
+                    shed: 0,
+                    expired: 0,
+                },
+            ],
+        };
+        let payload = encode_health(&report).unwrap();
+        assert_eq!(decode_health(&payload).unwrap(), report);
+        // Hostile pool count rejected before allocation.
+        let mut p = vec![0u8];
+        p.extend_from_slice(&0u64.to_le_bytes());
+        p.extend_from_slice(&0u64.to_le_bytes());
+        p.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_health(&p).is_err());
+        // Bad degraded flag rejected.
+        let mut p = encode_health(&report).unwrap();
+        p[0] = 7;
+        assert!(decode_health(&p).is_err());
+        // Truncation anywhere is an error, not a panic.
+        let good = encode_health(&report).unwrap();
+        for cut in 0..good.len() {
+            assert!(decode_health(&good[..cut]).is_err(), "cut at {cut}");
+        }
     }
 }

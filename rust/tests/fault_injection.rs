@@ -8,12 +8,13 @@
 
 use edgemlp::coordinator::backend::{Backend, FnBackend};
 use edgemlp::coordinator::queue::BoundedQueue;
-use edgemlp::coordinator::server::{PoolSpec, SharedBackendFactory};
+use edgemlp::coordinator::request::FailureKind;
+use edgemlp::coordinator::server::{PoolSpec, RequestQos, SharedBackendFactory, SubmitError};
 use edgemlp::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
 use edgemlp::nn::kernels::{StageFn, StagePipeline};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Echo backend that panics on any sample whose first element is
 /// negative — the injected fault.
@@ -50,8 +51,8 @@ fn worker_panic_fails_only_its_batch() {
         let result = rx.recv_timeout(Duration::from_secs(10)).unwrap();
         if i % 5 == 0 {
             let err = result.unwrap_err();
-            assert!(err.contains("panicked"), "request {i}: {err}");
-            assert!(err.contains("injected worker fault"), "request {i}: {err}");
+            assert!(err.message.contains("panicked"), "request {i}: {err}");
+            assert!(err.message.contains("injected worker fault"), "request {i}: {err}");
         } else {
             assert_eq!(result.unwrap().output, vec![1.0, i as f32], "request {i}");
         }
@@ -152,6 +153,100 @@ fn repeated_stage_panics_at_full_depth_preserve_order_and_survive() {
     assert_eq!(snaps[0].processed as usize, n, "stage 0 sees every job");
     assert_eq!(snaps[1].failed as usize, n / 5, "one failure per poisoned job");
     assert_eq!(snaps[1].processed as usize, n - n / 5);
+}
+
+/// A worker wedged on a long batch is itself a fault for everything
+/// queued behind it: deadline-carrying requests stuck past their budget
+/// must come back `Expired` — a structured answer, never a silent drop
+/// — and must not reach the backend at all.
+#[test]
+fn requests_expiring_behind_wedged_worker_are_answered_not_run() {
+    let ran = Arc::new(AtomicUsize::new(0));
+    let wedge_factory: SharedBackendFactory = {
+        let ran = ran.clone();
+        Arc::new(move || {
+            let ran = ran.clone();
+            Ok(Box::new(FnBackend::new("wedge", 1, move |inputs: &[Vec<f32>]| {
+                ran.fetch_add(1, Ordering::SeqCst);
+                // The first (marker < 0) request wedges the worker long
+                // enough for everything queued behind it to expire.
+                if inputs[0][0] < 0.0 {
+                    std::thread::sleep(Duration::from_millis(150));
+                }
+                Ok(inputs.to_vec())
+            })) as Box<dyn Backend>)
+        })
+    };
+    let coord = Coordinator::start(
+        vec![PoolSpec::replicated("wedge", 1, wedge_factory)],
+        CoordinatorConfig { queue_capacity: 64, policy: BatchPolicy::immediate(1) },
+    )
+    .unwrap();
+    let wedge = coord.submit(vec![-1.0]).unwrap();
+    std::thread::sleep(Duration::from_millis(30)); // worker picks it up
+    // Five doomed requests: 20 ms budgets behind a 150 ms wedge. The
+    // estimator is still cold (no completed batch), so admission lets
+    // them through — the dequeue-side gate must catch them.
+    let doomed: Vec<_> = (0..5)
+        .map(|i| {
+            let qos = RequestQos::with_deadline(Instant::now() + Duration::from_millis(20));
+            coord.submit_to_qos(0, vec![i as f32], qos).unwrap()
+        })
+        .collect();
+    for (i, rx) in doomed.into_iter().enumerate() {
+        let err = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap_err();
+        assert_eq!(err.kind, FailureKind::Expired, "request {i}: {err}");
+    }
+    wedge.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+    // Only the wedge request ever reached the backend.
+    assert_eq!(ran.load(Ordering::SeqCst), 1, "expired requests must not run");
+    assert_eq!(coord.metrics().snapshot().expired, 5);
+    // The pool is healthy afterwards: a deadline-free request succeeds.
+    let rx = coord.submit(vec![7.0]).unwrap();
+    assert_eq!(rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap().output, vec![7.0]);
+    coord.shutdown();
+}
+
+/// Once the service-time estimator is warm, a saturated pool rejects
+/// infeasible deadlines at admission — synchronously, before anything
+/// is enqueued — while feasible and deadline-free traffic keeps
+/// flowing.
+#[test]
+fn admission_control_sheds_infeasible_work_under_backlog() {
+    let slow: SharedBackendFactory = Arc::new(|| {
+        Ok(Box::new(FnBackend::new("slow", 1, |inputs: &[Vec<f32>]| {
+            std::thread::sleep(Duration::from_millis(30));
+            Ok(inputs.to_vec())
+        })) as Box<dyn Backend>)
+    });
+    let coord = Coordinator::start(
+        vec![PoolSpec::replicated("slow", 1, slow)],
+        CoordinatorConfig { queue_capacity: 64, policy: BatchPolicy::immediate(1) },
+    )
+    .unwrap();
+    // Warm the estimator, then build a backlog.
+    for _ in 0..3 {
+        coord.submit(vec![0.0]).unwrap().recv_timeout(Duration::from_secs(5))
+            .unwrap()
+            .unwrap();
+    }
+    let backlog: Vec<_> = (0..12).map(|_| coord.submit_to(0, vec![0.0]).unwrap()).collect();
+    // ~12 × 30 ms of queue ahead; a 5 ms budget is hopeless.
+    let qos = RequestQos::with_deadline(Instant::now() + Duration::from_millis(5));
+    match coord.try_submit_to_qos(0, vec![1.0], qos) {
+        Err(SubmitError::Expired { estimated_wait }) => {
+            assert!(estimated_wait >= Duration::from_millis(5), "wait {estimated_wait:?}");
+        }
+        other => panic!("expected admission Expired, got {other:?}"),
+    }
+    // Deadline-free traffic is untouched by admission control.
+    let rx = coord.try_submit_to(0, vec![2.0]).unwrap();
+    for b in backlog {
+        b.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+    }
+    assert_eq!(rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap().output, vec![2.0]);
+    assert!(coord.metrics().snapshot().expired >= 1);
+    coord.shutdown();
 }
 
 /// Closing the queue while multiple consumers are mid-drain (some in

@@ -1,0 +1,379 @@
+//! Integration: serving resilience under hostile and overload
+//! conditions — slowloris read deadlines freeing connection slots,
+//! at-most-once retries over real TCP, admission-control `Expired`
+//! frames, `Health` introspection, degraded-mode hysteresis, v2
+//! framing against the v3 server, and an overload SLO smoke test
+//! proving nothing is silently dropped.
+
+use edgemlp::coordinator::backend::{Backend, FnBackend};
+use edgemlp::coordinator::server::BackendFactory;
+use edgemlp::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, DegradePolicy};
+use edgemlp::nn::activations::Activation;
+use edgemlp::nn::mlp::{Mlp, MlpConfig};
+use edgemlp::quant::spx::SpxConfig;
+use edgemlp::serve::wire::{self, Frame};
+use edgemlp::serve::{
+    run_loadgen, Client, InferReply, LoadGenConfig, ModelRegistry, Opcode, Qos, RetryPolicy,
+    RetryingClient, ServeConfig, Server, Status, BACKEND_ANY,
+};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+fn mnist_shaped(seed: u64) -> Mlp {
+    let mut rng = edgemlp::util::rng::Pcg32::new(seed);
+    Mlp::new(
+        MlpConfig {
+            sizes: vec![784, 32, 10],
+            activations: vec![Activation::Sigmoid, Activation::Sigmoid],
+        },
+        &mut rng,
+    )
+}
+
+fn probe() -> Vec<f32> {
+    vec![0.37f32; 784]
+}
+
+/// Echo server with one deliberately slow single-replica pool: every
+/// request takes `service_ms`, so queue depth — and with it admission
+/// control, expiry, shedding, and degraded mode — is test-controlled.
+fn slow_echo_server(service_ms: u64, queue_capacity: usize, config: ServeConfig) -> Server {
+    let registry = ModelRegistry::new("default", mnist_shaped(1), SpxConfig::sp2(5));
+    let slow: BackendFactory = Box::new(move || {
+        Ok(Box::new(FnBackend::new("slow", 1, move |inputs: &[Vec<f32>]| {
+            std::thread::sleep(Duration::from_millis(service_ms));
+            Ok(inputs.to_vec())
+        })) as Box<dyn Backend>)
+    });
+    let coord = Coordinator::start(
+        vec![("slow".into(), slow)],
+        CoordinatorConfig { queue_capacity, policy: BatchPolicy::immediate(1) },
+    )
+    .unwrap();
+    Server::start(coord, registry, "127.0.0.1:0", config).unwrap()
+}
+
+/// A slowloris peer — half a frame header, then silence — must be
+/// answered `Timeout`, disconnected, and its connection slot reused.
+#[test]
+fn stalled_half_frame_times_out_and_frees_the_only_slot() {
+    let server = slow_echo_server(
+        1,
+        64,
+        ServeConfig {
+            max_conns: 1,
+            read_timeout: Duration::from_millis(300),
+            ..ServeConfig::default()
+        },
+    );
+    let addr = server.local_addr();
+
+    let mut stalled = TcpStream::connect(addr).unwrap();
+    stalled.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    stalled.write_all(b"EMWP\x03\x00").unwrap(); // magic + version, then stall
+    let goodbye = wire::read_frame(&mut stalled, 1 << 20).unwrap();
+    assert_eq!(goodbye.status, Status::Timeout, "{goodbye:?}");
+    assert!(goodbye.message().contains("deadline"), "{}", goodbye.message());
+    let mut rest = Vec::new();
+    assert_eq!(stalled.read_to_end(&mut rest).unwrap(), 0, "server must hang up");
+
+    // max_conns is 1: this connect can only be served because the
+    // stalled connection was evicted. The slot release races the
+    // eviction by a hair, so tolerate a few Busy bounces.
+    let mut served = None;
+    for _ in 0..100 {
+        let mut client = Client::connect(addr).unwrap();
+        match client.infer(0, &probe()) {
+            Ok(InferReply::Output(out)) => {
+                served = Some((client, out));
+                break;
+            }
+            Ok(_) | Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+    let (mut client, out) = served.expect("freed slot never served a well-behaved client");
+    assert_eq!(out, probe());
+    let health = client.health().unwrap();
+    assert!(health.read_timeouts >= 1, "{health:?}");
+    server.shutdown();
+}
+
+/// A deadline the queue backlog makes infeasible is answered
+/// `Expired` at admission; deadline-free requests behind the same
+/// backlog are all still served, and `Health` reports the tally.
+#[test]
+fn infeasible_deadline_is_expired_at_admission_over_tcp() {
+    let server = slow_echo_server(30, 64, ServeConfig::default());
+    let addr = server.local_addr();
+    let mut client = Client::connect(addr).unwrap();
+
+    // Warm the admission estimator with served requests.
+    for _ in 0..3 {
+        match client.infer(0, &probe()).unwrap() {
+            InferReply::Output(out) => assert_eq!(out, probe()),
+            other => panic!("warmup failed: {other:?}"),
+        }
+    }
+
+    // Wedge the single worker behind a backlog, then ask for the
+    // impossible: a 1 ms budget against a ~30 ms/request pool.
+    let mut pending = Vec::new();
+    for _ in 0..6 {
+        pending.push(client.send_infer(0, &probe()).unwrap());
+    }
+    let doomed = client.send_infer_qos(0, "", Qos::with_deadline_us(1_000), &probe()).unwrap();
+
+    let mut replies = HashMap::new();
+    for _ in 0..pending.len() + 1 {
+        let (id, reply) = client.recv_infer().unwrap();
+        replies.insert(id, reply);
+    }
+    match replies.remove(&doomed).expect("no reply for the doomed request") {
+        InferReply::Failed { status, message } => {
+            assert_eq!(status, Status::Expired, "{message}");
+            assert!(message.contains("infeasible"), "{message}");
+        }
+        other => panic!("expected admission rejection, got {other:?}"),
+    }
+    for id in pending {
+        match replies.remove(&id).expect("backlogged request lost") {
+            InferReply::Output(out) => assert_eq!(out, probe()),
+            other => panic!("deadline-free request must still be served: {other:?}"),
+        }
+    }
+
+    let health = client.health().unwrap();
+    assert_eq!(health.pools.len(), 1, "{health:?}");
+    let pool = &health.pools[0];
+    assert_eq!(pool.name, "slow");
+    assert_eq!(pool.queue_capacity, 64);
+    assert_eq!(pool.replicas, 1);
+    assert!(pool.expired >= 1, "{health:?}");
+    assert!(!health.degraded, "{health:?}");
+
+    // Health is v3-only: a v2-framed Health request is a BadRequest,
+    // not a protocol violation that kills the connection.
+    let mut raw = TcpStream::connect(addr).unwrap();
+    raw.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let req = Frame {
+        version: 2,
+        opcode: Opcode::Health,
+        status: Status::Ok,
+        request_id: 9,
+        payload: Vec::new(),
+    };
+    wire::write_frame(&mut raw, &req).unwrap();
+    let resp = wire::read_frame(&mut raw, 1 << 20).unwrap();
+    assert_eq!(resp.status, Status::BadRequest, "{resp:?}");
+    assert_eq!(resp.request_id, 9);
+    server.shutdown();
+}
+
+/// A v2-framed client round-trips unchanged against the v3 server,
+/// and responses echo the request's protocol version.
+#[test]
+fn v2_framed_client_round_trips_against_the_v3_server() {
+    let server = slow_echo_server(0, 64, ServeConfig::default());
+    let addr = server.local_addr();
+    let mut raw = TcpStream::connect(addr).unwrap();
+    raw.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+
+    let payload = wire::encode_infer_v2(0, "default", &probe()).unwrap();
+    let req =
+        Frame { version: 2, opcode: Opcode::Infer, status: Status::Ok, request_id: 77, payload };
+    wire::write_frame(&mut raw, &req).unwrap();
+    let resp = wire::read_frame(&mut raw, 1 << 20).unwrap();
+    assert_eq!(resp.version, 2, "responses must echo the request version");
+    assert_eq!(resp.request_id, 77);
+    assert_eq!(resp.status, Status::Ok, "{}", resp.message());
+    let out = wire::decode_outputs(&resp.payload).unwrap();
+    assert_eq!(out, probe());
+    server.shutdown();
+}
+
+/// The retrying client is at-most-once over real TCP: all attempts of
+/// one logical request share one wire id, an abandoned attempt's late
+/// reply is never consumed, and distinct logical requests use
+/// distinct ids.
+#[test]
+fn retried_request_keeps_one_wire_id_and_consumes_at_most_one_reply() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let seen = Arc::new(Mutex::new(Vec::new()));
+    let seen_srv = seen.clone();
+    let fake = std::thread::spawn(move || {
+        // Attempt 1: swallow the request and reply only after the
+        // client has abandoned the attempt — the duplicate-answer trap.
+        let (mut c1, _) = listener.accept().unwrap();
+        let f1 = wire::read_frame(&mut c1, 1 << 20).unwrap();
+        seen_srv.lock().unwrap().push(f1.request_id);
+        let late = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(400));
+            let _ = wire::write_frame(
+                &mut c1,
+                &Frame::ok(Opcode::Infer, f1.request_id, wire::encode_outputs(&[9.0])),
+            );
+        });
+        // Attempt 2 arrives on a fresh connection: answer immediately.
+        let (mut c2, _) = listener.accept().unwrap();
+        let f2 = wire::read_frame(&mut c2, 1 << 20).unwrap();
+        seen_srv.lock().unwrap().push(f2.request_id);
+        wire::write_frame(
+            &mut c2,
+            &Frame::ok(Opcode::Infer, f2.request_id, wire::encode_outputs(&[1.0, 2.0])),
+        )
+        .unwrap();
+        // The connection is healthy, so the next logical request rides
+        // it — under a new wire id.
+        let f3 = wire::read_frame(&mut c2, 1 << 20).unwrap();
+        seen_srv.lock().unwrap().push(f3.request_id);
+        wire::write_frame(
+            &mut c2,
+            &Frame::ok(Opcode::Infer, f3.request_id, wire::encode_outputs(&[3.0])),
+        )
+        .unwrap();
+        late.join().unwrap();
+    });
+
+    let policy = RetryPolicy {
+        max_attempts: 3,
+        base_backoff: Duration::from_millis(5),
+        max_backoff: Duration::from_millis(20),
+        jitter: 0.0,
+        attempt_timeout: Duration::from_millis(150),
+    };
+    let mut rc = RetryingClient::new(addr, policy, 42);
+    let (reply, attempts) = rc.infer_qos(0, "", Qos::NONE, &[0.5; 4]).unwrap();
+    assert_eq!(attempts, 2, "first attempt should have timed out");
+    match reply {
+        InferReply::Output(out) => assert_eq!(out, vec![1.0, 2.0]),
+        other => panic!("retry did not recover: {other:?}"),
+    }
+    let (reply2, attempts2) = rc.infer_qos(0, "", Qos::NONE, &[0.5; 4]).unwrap();
+    assert_eq!(attempts2, 1);
+    match reply2 {
+        InferReply::Output(out) => {
+            assert_eq!(out, vec![3.0], "late duplicate reply must never be consumed")
+        }
+        other => panic!("second logical request failed: {other:?}"),
+    }
+
+    fake.join().unwrap();
+    let seen = seen.lock().unwrap();
+    assert_eq!(seen.len(), 3, "{seen:?}");
+    assert_eq!(seen[0], seen[1], "attempts of one logical request must reuse its wire id");
+    assert_ne!(seen[1], seen[2], "distinct logical requests must use distinct ids");
+}
+
+/// Sustained saturation flips `BACKEND_ANY` routing into degraded
+/// mode; an idle queue flips it back, and `Health` counts both
+/// transitions. A zero-dwell policy makes the flips deterministic.
+#[test]
+fn degraded_mode_enters_under_saturation_and_recovers() {
+    let server = slow_echo_server(
+        2,
+        64,
+        ServeConfig {
+            degrade: DegradePolicy {
+                enter_occupancy: 0.01,
+                exit_occupancy: 0.005,
+                enter_after: Duration::ZERO,
+                exit_after: Duration::ZERO,
+            },
+            ..ServeConfig::default()
+        },
+    );
+    let addr = server.local_addr();
+    let mut client = Client::connect(addr).unwrap();
+
+    // Saturate: 48 pipelined BACKEND_ANY requests against a ~2 ms/req
+    // single worker. The router samples queue occupancy on every
+    // BACKEND_ANY decision, and the reader enqueues far faster than
+    // the worker drains, so a saturated sample is guaranteed.
+    for _ in 0..48 {
+        client.send_infer(BACKEND_ANY, &probe()).unwrap();
+    }
+    for _ in 0..48 {
+        let (_, reply) = client.recv_infer().unwrap();
+        assert!(matches!(reply, InferReply::Output(_)), "{reply:?}");
+    }
+    let mut watcher = Client::connect(addr).unwrap();
+    let health = watcher.health().unwrap();
+    assert!(health.degraded, "sustained saturation must flip degraded mode: {health:?}");
+    assert!(health.degraded_transitions >= 1, "{health:?}");
+
+    // The queue is drained; the next BACKEND_ANY decision samples zero
+    // occupancy and recovers.
+    match client.infer(BACKEND_ANY, &probe()).unwrap() {
+        InferReply::Output(out) => assert_eq!(out, probe()),
+        other => panic!("recovery request failed: {other:?}"),
+    }
+    let health = watcher.health().unwrap();
+    assert!(!health.degraded, "idle queue must recover normal mode: {health:?}");
+    assert!(health.degraded_transitions >= 2, "{health:?}");
+    server.shutdown();
+}
+
+/// The graceful-degradation acceptance scenario: ~2× capacity offered
+/// with deadlines. Infeasible work is shed (`Expired`/`Backpressure`),
+/// accepted work overwhelmingly meets its deadline, and every request
+/// is accounted for — nothing silently dropped.
+#[test]
+fn overload_sheds_gracefully_and_accounts_for_every_request() {
+    // ~5 ms/request single worker ⇒ ~200 req/s capacity; offer ~2×
+    // into a queue only 8 deep (worst-case wait ~45 ms « 100 ms
+    // deadline, so accepted requests comfortably meet it).
+    let server = slow_echo_server(5, 8, ServeConfig::default());
+    let addr = server.local_addr();
+
+    let mut client = Client::connect(addr).unwrap();
+    for _ in 0..3 {
+        match client.infer(0, &probe()).unwrap() {
+            InferReply::Output(_) => {}
+            other => panic!("warmup: {other:?}"),
+        }
+    }
+    // With a warm estimator, a deadline smaller than one service time
+    // is infeasible even against an empty queue: Expired at admission.
+    match client.infer_qos(0, "", Qos::with_deadline_us(1_000), &probe()).unwrap() {
+        InferReply::Failed { status, message } => {
+            assert_eq!(status, Status::Expired, "{message}")
+        }
+        other => panic!("sub-service-time deadline admitted: {other:?}"),
+    }
+
+    let report = run_loadgen(
+        addr,
+        LoadGenConfig {
+            requests: 300,
+            connections: 4,
+            backend: 0,
+            dim: 784,
+            rate_rps: 400.0,
+            pipeline: 16,
+            deadline_us: 100_000,
+            seed: 11,
+            ..LoadGenConfig::default()
+        },
+    )
+    .unwrap();
+
+    assert_eq!(report.sent, 300, "{report:?}");
+    assert_eq!(
+        report.ok + report.shed + report.expired + report.errors,
+        report.sent,
+        "requests vanished: {report:?}"
+    );
+    assert_eq!(report.errors, 0, "{report:?}");
+    assert!(report.ok > 0, "{report:?}");
+    // 2× overload into an 8-deep queue must shed or expire something.
+    assert!(report.shed + report.expired > 0, "{report:?}");
+    // Accepted work meets the SLO (the ≥95% acceptance bar; asserted
+    // at 90% to absorb CI scheduling noise).
+    let attainment = report.attainment().expect("deadline set and requests served");
+    assert!(attainment >= 0.9, "attainment {attainment}: {report:?}");
+    server.shutdown();
+}

@@ -1,19 +1,59 @@
 #!/usr/bin/env python3
-"""Print baseline-vs-current deltas for the flat BENCH_*.json files.
+"""Compare flat BENCH_*.json files and gate on perf regressions.
 
-Usage: bench_delta.py <baseline.json> <current.json>
+Usage: bench_delta.py [--max-regress PCT] <baseline.json> <current.json>
 
 Both files are flat JSON objects written by bench_harness::BenchJson
 (numbers or strings; `null` for non-finite samples). Matching numeric
 keys are compared and printed as an aligned table with the relative
 delta; keys present on only one side are listed afterwards so renamed
-or newly added bench keys are visible in the CI log. Informational
-only: always exits 0 when both files parse (perf gating stays a human
-decision — CI hosts are too noisy for hard thresholds).
+or newly added bench keys are visible in the CI log.
+
+Regression gate
+---------------
+A key regresses when it moves in its bad direction by more than the
+threshold (--max-regress, or env BENCH_DELTA_MAX_REGRESS; default
+10%). Direction is inferred from the key name: throughput-like keys
+(rps, gflops, speedup, attainment, ...) are higher-better; time-like
+keys (*_ms, *_s, *_ns, *p50*, *p99*, ...) are lower-better. Keys whose
+direction cannot be inferred never gate.
+
+The gate is ARMED only when the baseline carries a host fingerprint
+(the host_* keys stamped by bench_harness::HostFingerprint) and it
+matches the current run's fingerprint. A fingerprint-less baseline is
+PROVISIONAL — deltas print but never fail. A mismatched fingerprint
+(different core count, ISA, or SIMD dispatch path) disarms the gate
+and prints MISMATCHED CONTEXT loudly: numbers from different hosts are
+not comparable.
+
+Exit codes: 0 ok / informational, 1 usage or unreadable input,
+2 regression past threshold on an armed gate.
 """
 
 import json
+import os
 import sys
+
+FINGERPRINT_KEYS = ("host_cores", "host_arch", "host_dispatch_path", "host_gemm_threads")
+
+# Substrings (checked against the lowercased key) that mark a metric
+# where larger is better.
+HIGHER_BETTER = ("rps", "gflops", "speedup", "throughput", "attainment", "per_s", "ops")
+# Suffixes / substrings marking a metric where smaller is better.
+LOWER_BETTER_SUFFIX = ("_ms", "_s", "_us", "_ns")
+LOWER_BETTER_SUBSTR = ("p50", "p99", "latency", "shed_rate", "expired", "errors")
+
+
+def direction(key):
+    """+1 higher-better, -1 lower-better, 0 unknown (never gates)."""
+    k = key.lower()
+    if k.startswith("host_"):
+        return 0
+    if any(s in k for s in HIGHER_BETTER):
+        return +1
+    if k.endswith(LOWER_BETTER_SUFFIX) or any(s in k for s in LOWER_BETTER_SUBSTR):
+        return -1
+    return 0
 
 
 def load(path):
@@ -25,30 +65,77 @@ def load(path):
         sys.exit(1)
 
 
-def main():
-    if len(sys.argv) != 3:
+def parse_args(argv):
+    threshold = float(os.environ.get("BENCH_DELTA_MAX_REGRESS", "10"))
+    paths = []
+    it = iter(argv)
+    for a in it:
+        if a == "--max-regress":
+            nxt = next(it, None)
+            if nxt is None:
+                print("bench_delta: --max-regress needs a value", file=sys.stderr)
+                sys.exit(1)
+            threshold = float(nxt)
+        elif a.startswith("--max-regress="):
+            threshold = float(a.split("=", 1)[1])
+        else:
+            paths.append(a)
+    if len(paths) != 2 or threshold < 0:
         print(__doc__.strip(), file=sys.stderr)
         sys.exit(1)
-    base_path, cur_path = sys.argv[1], sys.argv[2]
+    return threshold, paths[0], paths[1]
+
+
+def main():
+    threshold, base_path, cur_path = parse_args(sys.argv[1:])
     base, cur = load(base_path), load(cur_path)
 
     numeric = lambda v: isinstance(v, (int, float)) and not isinstance(v, bool)
     shared = [k for k in cur if k in base and numeric(base[k]) and numeric(cur[k])]
 
+    # Gate arming: baseline must carry a full fingerprint, and it must
+    # match the current run's.
+    base_fp = {k: base.get(k) for k in FINGERPRINT_KEYS}
+    cur_fp = {k: cur.get(k) for k in FINGERPRINT_KEYS}
+    provisional = any(v is None for v in base_fp.values())
+    fp_mismatch = not provisional and base_fp != cur_fp
+    armed = not provisional and not fp_mismatch
+
     print(f"\n== bench delta: {base_path} (baseline) vs {cur_path} (current) ==")
     if isinstance(base.get("baseline_note"), str):
         print(f"baseline note: {base['baseline_note']}")
+    if provisional:
+        print("baseline is PROVISIONAL (no host fingerprint) — gate disarmed, deltas informational")
+    elif fp_mismatch:
+        print("host fingerprint differs — gate disarmed, deltas informational")
+    else:
+        print(f"gate armed: fail on >{threshold:g}% regression (direction-aware)")
+
+    regressions = []
     if shared:
         width = max(len(k) for k in shared)
         print(f"{'key':<{width}}  {'baseline':>12}  {'current':>12}  {'delta':>8}")
         for k in shared:
             b, c = float(base[k]), float(cur[k])
-            delta = f"{(c - b) / b * 100.0:+7.1f}%" if b != 0 else "     n/a"
-            print(f"{k:<{width}}  {b:>12.4g}  {c:>12.4g}  {delta}")
+            if b != 0:
+                pct = (c - b) / b * 100.0
+                delta = f"{pct:+7.1f}%"
+            else:
+                pct = None
+                delta = "     n/a"
+            mark = ""
+            if pct is not None:
+                d = direction(k)
+                regressed = (d > 0 and pct < -threshold) or (d < 0 and pct > threshold)
+                if regressed:
+                    mark = "  << REGRESSION" if armed else "  (regression; gate disarmed)"
+                    if armed:
+                        regressions.append((k, pct))
+            print(f"{k:<{width}}  {b:>12.4g}  {c:>12.4g}  {delta}{mark}")
     else:
         print("no matching numeric keys")
 
-    # Differing string keys (e.g. gemm_dispatch_path baseline=avx2+fma
+    # Differing string keys (e.g. host_dispatch_path baseline=avx2+fma
     # vs current=scalar) invalidate every numeric delta above — surface
     # them loudly instead of dropping them as non-numeric.
     for k in cur:
@@ -61,6 +148,11 @@ def main():
         print(f"baseline-only keys: {', '.join(sorted(only_base))}")
     if only_cur:
         print(f"current-only keys:  {', '.join(sorted(only_cur))}")
+
+    if regressions:
+        keys = ", ".join(f"{k} ({pct:+.1f}%)" for k, pct in regressions)
+        print(f"bench_delta: FAIL — {len(regressions)} regression(s) past {threshold:g}%: {keys}")
+        sys.exit(2)
 
 
 if __name__ == "__main__":

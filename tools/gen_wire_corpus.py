@@ -12,7 +12,7 @@ filename prefix:
              id 0) then a clean close; never a panic.
   payload_*  well-framed but hostile payload: >= 1 response, every one
              with a non-Ok status; the connection is not poisoned.
-  mixed_*    interleaved valid v1/v2 frames (possibly ending in
+  mixed_*    interleaved valid v1/v2/v3 frames (possibly ending in
              garbage): the server must answer what is answerable and
              survive.
 
@@ -47,6 +47,20 @@ def infer_v2(backend, model, xs):
 
 def infer_v1(backend, xs):
     return struct.pack("<I", backend) + struct.pack("<I", len(xs)) + f32s(xs)
+
+
+def qos(deadline_us, priority):
+    return struct.pack("<QB", deadline_us, priority)
+
+
+def infer_v3(backend, model, xs, deadline_us=0, priority=0):
+    return (
+        struct.pack("<I", backend)
+        + name(model)
+        + qos(deadline_us, priority)
+        + struct.pack("<I", len(xs))
+        + f32s(xs)
+    )
 
 
 def main():
@@ -100,6 +114,29 @@ def main():
     corpus["payload_infer_v1_dim_lie.bin"] = frame(
         1, 1, 0, 9, struct.pack("<II", 0, 1000) + f32s(dim8)
     )
+    # --- hostile v3 QoS fields ---
+    # Payload ends four bytes into the u64 deadline field.
+    corpus["payload_infer_v3_truncated_deadline.bin"] = frame(
+        3, 1, 0, 20, struct.pack("<I", 0) + name("") + struct.pack("<I", 0xDEAD)
+    )
+    # Deadline beyond the 1-hour protocol cap (u64::MAX µs).
+    corpus["payload_infer_v3_absurd_deadline.bin"] = frame(
+        3, 1, 0, 21, infer_v3(0, "", dim8, deadline_us=0xFFFFFFFFFFFFFFFF)
+    )
+    # Priority byte outside the defined set {0, 1, 2}.
+    corpus["payload_infer_v3_unknown_priority.bin"] = frame(
+        3, 1, 0, 22, infer_v3(0, "", dim8, priority=7)
+    )
+    # v3 QoS fields inside a v2 frame read as trailing garbage.
+    corpus["payload_infer_v2_with_qos_tail.bin"] = frame(
+        2, 1, 0, 23, infer_v3(0, "", dim8, deadline_us=50_000)
+    )
+    # v3 batch whose QoS fields swallow the batch/dim geometry.
+    corpus["payload_batch_v3_truncated_qos.bin"] = frame(
+        3, 2, 0, 24, struct.pack("<I", 0) + name("") + qos(1_000, 0)
+    )
+    # Health framed at v2 (the opcode is v3-only).
+    corpus["payload_health_v2.bin"] = frame(2, 6, 0, 25, b"")
 
     # --- mixed v1/v2 traffic on one connection ---
     corpus["mixed_v1_v2_round_trip.bin"] = (
@@ -110,6 +147,13 @@ def main():
     )
     corpus["mixed_valid_then_garbage.bin"] = (
         frame(2, 0, 0, 14, b"ok") + frame(1, 1, 0, 15, infer_v1(0, dim8)) + b"\xde" * 24
+    )
+    # v3 traffic with QoS set, a Health poll, then a legacy v1 ping —
+    # one connection speaking all three versions.
+    corpus["mixed_v3_qos_health_then_v1.bin"] = (
+        frame(3, 1, 0, 16, infer_v3(0, "", dim8, deadline_us=3_000_000, priority=1))
+        + frame(3, 6, 0, 17, b"")
+        + frame(1, 0, 0, 18, b"old-ping")
     )
 
     for fname, data in sorted(corpus.items()):
