@@ -18,6 +18,8 @@
 use edgemlp::bench_harness::{fmt_time, BenchJson, HostFingerprint, Table};
 use edgemlp::coordinator::{BatchPolicy, CoordinatorConfig};
 use edgemlp::fpga::accelerator::AccelConfig;
+use edgemlp::fpga::power::EnergyModel;
+use edgemlp::obs::pool_energy;
 use edgemlp::nn::mlp::{Mlp, MlpConfig};
 use edgemlp::quant::spx::SpxConfig;
 use edgemlp::serve::{
@@ -107,6 +109,21 @@ fn main() {
         json.num(&format!("serving_{}_p50_ms", s.label), report.p50_s() * 1e3);
         json.num(&format!("serving_{}_p99_ms", s.label), report.p99_s() * 1e3);
         json.num(&format!("serving_{}_shed", s.label), report.shed as f64);
+    }
+
+    // ---- E12: perf-per-watt — modeled energy for the SPx pool. ----
+    // The same accounting the server exposes on /metrics and Stats
+    // (obs::pool_energy over the pool's aggregate CycleStats); the
+    // "energy" keys are lower-better for bench_delta.py.
+    let snap = server.metrics().snapshot();
+    if let Some(m) = snap.backends.get("fpga/default") {
+        let e = pool_energy(&EnergyModel::default_fpga(), m, 1.0);
+        json.num("serving_fpga_energy_mj_per_sample", e.mj_per_sample);
+        json.num("serving_fpga_energy_j_per_request", e.j_per_request);
+        println!(
+            "\nfpga pool modeled energy: {:.4} mJ/sample, {:.6} J/request",
+            e.mj_per_sample, e.j_per_request
+        );
     }
     server.shutdown();
 

@@ -72,24 +72,56 @@ impl Histogram {
         self.quantile_s(0.999)
     }
 
-    /// Approximate quantile from the buckets (upper bound of the bucket
-    /// containing the q-th sample). Edge cases, pinned by tests: an
-    /// empty histogram reports 0.0 for every quantile, and a histogram
-    /// whose samples all fell into one bucket reports that bucket's
-    /// upper bound for every quantile (`q = 0.0` included).
+    /// Approximate quantile from the buckets with within-bucket linear
+    /// interpolation: the q-th ranked sample lands in some bucket
+    /// [lo, hi); assuming samples spread uniformly inside the bucket,
+    /// the estimate is `lo + frac·(hi − lo)` where `frac` is the
+    /// target rank's position among that bucket's samples. Power-of-two
+    /// buckets bound the error to one bucket width, so the estimate is
+    /// always within 2× of the exact sample quantile (pinned by
+    /// `interpolated_quantiles_track_exact_sample_quantiles`).
+    ///
+    /// Edge cases, pinned by tests: an empty histogram reports 0.0 for
+    /// every quantile, and estimates are clamped to the observed
+    /// maximum (skipped when the only observation is 0.0 so that a
+    /// recorded sample never reports as "no latency").
     pub fn quantile_s(&self, q: f64) -> f64 {
         if self.count == 0 {
             return 0.0;
         }
-        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
         let mut seen = 0u64;
         for (i, &c) in self.buckets.iter().enumerate() {
-            seen += c;
-            if seen >= target.max(1) {
-                return (1u64 << (i + 1)) as f64 * 1e-6;
+            if c > 0 && seen + c >= target {
+                let lo_us = if i == 0 { 0.0 } else { (1u64 << i) as f64 };
+                let hi_us = (1u64 << (i + 1)) as f64;
+                let frac = (target - seen) as f64 / c as f64;
+                let v = (lo_us + frac * (hi_us - lo_us)) * 1e-6;
+                return if self.max_s > 0.0 { v.min(self.max_s) } else { v };
             }
+            seen += c;
         }
         self.max_s
+    }
+
+    /// Total of recorded values in seconds (the Prometheus `_sum`
+    /// counterpart to [`Histogram::count`]).
+    pub fn sum_s(&self) -> f64 {
+        self.sum_s
+    }
+
+    /// Cumulative bucket view for Prometheus exposition: one
+    /// `(le_us, cumulative_count)` entry per bucket, where
+    /// `le_us = 2^(i+1)` is bucket i's inclusive upper bound in
+    /// microseconds and the count covers every sample ≤ that bound.
+    pub fn cumulative_buckets(&self) -> Vec<(u64, u64)> {
+        let mut out = Vec::with_capacity(self.buckets.len());
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            out.push((1u64 << (i + 1), cum));
+        }
+        out
     }
 }
 
@@ -134,6 +166,14 @@ pub struct MetricsSnapshot {
     pub expired: u64,
     /// Degraded-mode flips (normal→degraded and back) since startup.
     pub degraded_transitions: u64,
+    /// Connections turned away with `Busy` at accept time (connection
+    /// cap reached) — these never reach a pool, so they are invisible
+    /// to the per-pool shed counters.
+    pub busy_rejected: u64,
+    /// `BadRequest` answers by cause label (e.g. "magic", "version",
+    /// "opcode", "payload"). Causes are short stable strings — they
+    /// become the `cause` label on `edgemlp_bad_requests_total`.
+    pub bad_requests: BTreeMap<String, u64>,
 }
 
 impl MetricsSnapshot {
@@ -152,8 +192,13 @@ impl MetricsSnapshot {
     pub fn render(&self) -> String {
         use crate::bench_harness::fmt_time;
         let mut out = format!(
-            "rejected: {} expired: {} degraded_transitions: {}\n",
-            self.rejected, self.expired, self.degraded_transitions
+            "rejected: {} expired: {} degraded_transitions: {} busy_rejected: {} \
+             bad_requests: {}\n",
+            self.rejected,
+            self.expired,
+            self.degraded_transitions,
+            self.busy_rejected,
+            self.bad_requests.values().sum::<u64>(),
         );
         for (name, m) in &self.backends {
             out.push_str(&format!(
@@ -202,6 +247,8 @@ struct MetricsInner {
     rejected: u64,
     expired: u64,
     degraded_transitions: u64,
+    busy_rejected: u64,
+    bad_requests: BTreeMap<String, u64>,
 }
 
 impl Metrics {
@@ -270,6 +317,19 @@ impl Metrics {
         self.inner.lock().unwrap().degraded_transitions += 1;
     }
 
+    /// A connection was turned away with `Busy` at accept time.
+    pub fn record_busy_rejected(&self) {
+        self.inner.lock().unwrap().busy_rejected += 1;
+    }
+
+    /// A frame drew a `BadRequest` answer; `cause` is a short stable
+    /// label naming what was malformed (it becomes a Prometheus label
+    /// value, so keep the vocabulary small and fixed).
+    pub fn record_bad_request(&self, cause: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        *inner.bad_requests.entry(cause.to_string()).or_default() += 1;
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let inner = self.inner.lock().unwrap();
         MetricsSnapshot {
@@ -277,6 +337,8 @@ impl Metrics {
             rejected: inner.rejected,
             expired: inner.expired,
             degraded_transitions: inner.degraded_transitions,
+            busy_rejected: inner.busy_rejected,
+            bad_requests: inner.bad_requests.clone(),
         }
     }
 }
@@ -387,17 +449,62 @@ mod tests {
     }
 
     #[test]
-    fn single_bucket_histogram_reports_bucket_bound_for_all_quantiles() {
-        // All samples in the [1024, 2048) µs bucket: every quantile —
-        // including q = 0 — reports that bucket's upper bound.
+    fn single_bucket_histogram_interpolates_within_the_bucket() {
+        // All samples in the [1024, 2048) µs bucket: quantiles sweep
+        // linearly across the bucket with rank (no more "every quantile
+        // reports the upper bound"), stay inside
+        // [bucket_lo, min(bucket_hi, max)], and are monotone in q.
         let mut h = Histogram::default();
         for _ in 0..100 {
             h.record(1.5e-3);
         }
-        let bound = h.quantile_s(1.0);
-        assert!((bound - 2048e-6).abs() < 1e-9, "bound {bound}");
-        for q in [0.0, 0.25, 0.5, 0.99, 0.999] {
-            assert_eq!(h.quantile_s(q), bound, "q={q}");
+        let lo = 1024e-6;
+        let mut prev = 0.0;
+        for q in [0.0, 0.25, 0.5, 0.99, 0.999, 1.0] {
+            let v = h.quantile_s(q);
+            assert!(v >= lo && v <= h.max_s() + 1e-12, "q={q} v={v}");
+            assert!(v >= prev, "q={q} not monotone: {v} < {prev}");
+            prev = v;
+        }
+        // Interpolation actually spreads the estimates: the low and
+        // high quantiles must not collapse to one value.
+        assert!(h.quantile_s(1.0) > h.quantile_s(0.0), "quantiles collapsed");
+        // The top quantile clamps to the observed max, not the bucket
+        // upper bound (2048 µs would overreport by ~37%).
+        assert!((h.quantile_s(1.0) - 1.5e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn interpolated_quantiles_track_exact_sample_quantiles() {
+        // Randomized pin of the satellite fix: latencies spread
+        // log-uniformly across four decades (10 µs .. 100 ms) via a
+        // deterministic LCG, then p50/p90/p99 are compared against the
+        // exact sorted-sample quantiles. Tolerance: power-of-two
+        // buckets bound the interpolation error to one bucket width,
+        // so the estimate must land within 2× of the exact value
+        // (the pre-fix upper-bound rule failed this at ~2× bias high).
+        let mut state = 0x853c49e6748fea9b_u64;
+        let mut next_unit = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (state >> 11) as f64 / (1u64 << 53) as f64
+        };
+        let mut h = Histogram::default();
+        let mut samples = Vec::with_capacity(10_000);
+        for _ in 0..10_000 {
+            let lat = 1e-5 * 10f64.powf(4.0 * next_unit());
+            h.record(lat);
+            samples.push(lat);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.5, 0.9, 0.99] {
+            let rank = ((q * samples.len() as f64).ceil() as usize).max(1);
+            let exact = samples[rank - 1];
+            let est = h.quantile_s(q);
+            let ratio = est / exact;
+            assert!(
+                ratio > 0.5 && ratio < 2.0,
+                "q={q}: est {est} vs exact {exact} (ratio {ratio})"
+            );
         }
     }
 
@@ -450,5 +557,40 @@ mod tests {
         h.record(0.0);
         assert_eq!(h.count(), 1);
         assert!(h.quantile_s(1.0) > 0.0);
+    }
+
+    #[test]
+    fn cumulative_buckets_cover_all_samples() {
+        let mut h = Histogram::default();
+        h.record(1e-6); // 1 µs → bucket 0, le 2
+        h.record(3e-6); // 3 µs → bucket 1, le 4
+        h.record(3e-6);
+        h.record(1e-3); // 1000 µs → bucket 9, le 1024
+        let cum = h.cumulative_buckets();
+        assert_eq!(cum.len(), 32);
+        assert_eq!(cum[0], (2, 1));
+        assert_eq!(cum[1], (4, 3));
+        assert_eq!(cum[8], (512, 3));
+        assert_eq!(cum[9], (1024, 4));
+        assert_eq!(cum[31].1, h.count(), "last bucket must be cumulative total");
+        assert!(cum.windows(2).all(|w| w[0].1 <= w[1].1 && w[0].0 < w[1].0));
+        assert!((h.sum_s() - (1e-6 + 3e-6 + 3e-6 + 1e-3)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn busy_and_bad_request_counters_surface_in_snapshot() {
+        let m = Metrics::new();
+        m.record_busy_rejected();
+        m.record_busy_rejected();
+        m.record_bad_request("magic");
+        m.record_bad_request("version");
+        m.record_bad_request("version");
+        let snap = m.snapshot();
+        assert_eq!(snap.busy_rejected, 2);
+        assert_eq!(snap.bad_requests["magic"], 1);
+        assert_eq!(snap.bad_requests["version"], 2);
+        let text = snap.render();
+        assert!(text.contains("busy_rejected: 2"), "{text}");
+        assert!(text.contains("bad_requests: 3"), "{text}");
     }
 }

@@ -16,6 +16,7 @@ use super::metrics::Metrics;
 use super::queue::{BoundedQueue, QueueError};
 use super::request::{InferError, InferRequest, InferResponse, InferResult, PRIORITY_NORMAL};
 use crate::nn::kernels::pipeline::panic_message;
+use crate::obs::trace::TraceRecorder;
 use anyhow::{bail, Context, Result};
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -174,6 +175,10 @@ pub struct Coordinator {
     queue_capacity: usize,
     /// Time origin of the EDF queue keys.
     epoch: Instant,
+    /// Request-lifecycle trace sink plus one pre-built per-pool track
+    /// label (`Arc<str>` so the hot path clones a pointer, not a
+    /// string). `None` = tracing disabled, zero cost.
+    trace: Option<(Arc<TraceRecorder>, Vec<Arc<str>>)>,
 }
 
 impl Coordinator {
@@ -183,6 +188,21 @@ impl Coordinator {
     pub fn start<P: Into<PoolSpec>>(
         pools: Vec<P>,
         config: CoordinatorConfig,
+    ) -> Result<Coordinator> {
+        Coordinator::start_traced(pools, config, None)
+    }
+
+    /// [`Coordinator::start`] with an optional request-lifecycle trace
+    /// recorder. When set, the coordinator emits `queue` events
+    /// (enqueue / shed / admit-expired instants, a "queued" span per
+    /// dequeue) and `worker` events (an "infer" span per batch,
+    /// writeback / expired instants per request), all on the pool's
+    /// track. Kept out of [`CoordinatorConfig`] so that `Copy` config
+    /// struct — and every literal constructing it — stays unchanged.
+    pub fn start_traced<P: Into<PoolSpec>>(
+        pools: Vec<P>,
+        config: CoordinatorConfig,
+        tracer: Option<Arc<TraceRecorder>>,
     ) -> Result<Coordinator> {
         config.policy.validate().map_err(|e| anyhow::anyhow!(e))?;
         if pools.is_empty() {
@@ -194,6 +214,7 @@ impl Coordinator {
         let mut names = Vec::new();
         let mut replicas = Vec::new();
         let mut service_ema_ns: Vec<Arc<AtomicU64>> = Vec::new();
+        let mut tracks: Vec<Arc<str>> = Vec::new();
         let mut workers: Vec<JoinHandle<()>> = Vec::new();
         // On any startup failure, close every queue created so far so
         // already-spawned workers exit instead of leaking.
@@ -226,6 +247,7 @@ impl Coordinator {
             ));
             let ema = Arc::new(AtomicU64::new(0));
             let n_replicas = pool.factories.len();
+            let track: Arc<str> = Arc::from(name.as_str());
             for (r, factory) in pool.factories.into_iter().enumerate() {
                 let (ready_tx, ready_rx) = channel::<Result<()>>();
                 let spawned = {
@@ -234,6 +256,7 @@ impl Coordinator {
                     let name = name.clone();
                     let policy = config.policy;
                     let ema = ema.clone();
+                    let trace = tracer.as_ref().map(|t| (t.clone(), track.clone()));
                     std::thread::Builder::new()
                         .name(format!("edgemlp-{name}-r{r}"))
                         .spawn(move || {
@@ -247,7 +270,15 @@ impl Coordinator {
                                     return;
                                 }
                             };
-                            worker_loop(&name, backend.as_mut(), &queue, &metrics, policy, &ema);
+                            worker_loop(
+                                &name,
+                                backend.as_mut(),
+                                &queue,
+                                &metrics,
+                                policy,
+                                &ema,
+                                trace.as_ref(),
+                            );
                         })
                         .context("spawn worker")
                 };
@@ -279,6 +310,7 @@ impl Coordinator {
             names.push(name);
             replicas.push(n_replicas);
             service_ema_ns.push(ema);
+            tracks.push(track);
         }
         Ok(Coordinator {
             queues,
@@ -291,7 +323,20 @@ impl Coordinator {
             tie_break: AtomicUsize::new(0),
             queue_capacity: config.queue_capacity,
             epoch,
+            trace: tracer.map(|t| (t, tracks)),
         })
+    }
+
+    /// Emit a queue-lifecycle instant on pool `pool`'s track, if a
+    /// trace recorder is attached and enabled.
+    fn trace_instant(&self, pool: usize, name: &'static str, request_id: u64) {
+        if let Some((rec, tracks)) = &self.trace {
+            if rec.enabled() {
+                if let Some(track) = tracks.get(pool) {
+                    rec.instant("queue", name, Some(track.clone()), request_id);
+                }
+            }
+        }
     }
 
     /// Pool names, in submission-index order.
@@ -413,6 +458,8 @@ impl Coordinator {
         let estimated_wait = self.estimated_wait(pool) + service;
         if Instant::now() + estimated_wait > deadline {
             self.metrics.record_expired(&self.names[pool]);
+            // Rejected before an id is allocated — req 0 on the trace.
+            self.trace_instant(pool, "admit_expired", 0);
             return Err(SubmitError::Expired { estimated_wait });
         }
         Ok(())
@@ -438,8 +485,12 @@ impl Coordinator {
         let queue = self.queues.get(pool).ok_or(SubmitError::UnknownBackend)?;
         self.admit(pool, &qos)?;
         let (req, rx) = self.make_request(payload, qos);
+        let id = req.id;
         match queue.push(req) {
-            Ok(()) => Ok(rx),
+            Ok(()) => {
+                self.trace_instant(pool, "enqueue", id);
+                Ok(rx)
+            }
             Err(QueueError::Closed) => Err(SubmitError::Closed),
             Err(QueueError::Full) => unreachable!("push blocks on full"),
         }
@@ -467,11 +518,16 @@ impl Coordinator {
         let queue = self.queues.get(pool).ok_or(SubmitError::UnknownBackend)?;
         self.admit(pool, &qos)?;
         let (req, rx) = self.make_request(payload, qos);
+        let id = req.id;
         match queue.try_push(req) {
-            Ok(()) => Ok(rx),
+            Ok(()) => {
+                self.trace_instant(pool, "enqueue", id);
+                Ok(rx)
+            }
             Err(QueueError::Closed) => Err(SubmitError::Closed),
             Err(QueueError::Full) => {
                 self.metrics.record_shed(&self.names[pool]);
+                self.trace_instant(pool, "shed", id);
                 Err(SubmitError::Backpressure)
             }
         }
@@ -539,12 +595,29 @@ fn worker_loop(
     metrics: &Metrics,
     policy: BatchPolicy,
     service_ema_ns: &AtomicU64,
+    trace: Option<&(Arc<TraceRecorder>, Arc<str>)>,
 ) {
     let max_batch = policy.max_batch.min(backend.max_batch()).max(1);
+    let trace = trace.filter(|t| t.0.capacity() > 0);
     loop {
         let mut batch = queue.pop_batch(max_batch, policy.max_wait);
         if batch.is_empty() {
             return; // closed + drained
+        }
+        // One "queued" span per dequeued request: enqueue → now is the
+        // time it sat parked (the batcher wait window included).
+        if let Some((rec, track)) = trace {
+            if rec.enabled() {
+                for req in &batch {
+                    rec.span(
+                        "queue",
+                        "queued",
+                        Some(track.clone()),
+                        rec.instant_us(req.enqueued_at),
+                        req.id,
+                    );
+                }
+            }
         }
         // Second expiry gate (after admission): requests whose deadline
         // passed while queued are answered `Expired` without touching
@@ -554,6 +627,11 @@ fn worker_loop(
         batch.retain(|req| {
             if req.expired_at(now) {
                 expired += 1;
+                if let Some((rec, track)) = trace {
+                    if rec.enabled() {
+                        rec.instant("worker", "expired", Some(track.clone()), req.id);
+                    }
+                }
                 let _ = req
                     .respond_to
                     .send(Err(InferError::expired(format!(
@@ -572,6 +650,7 @@ fn worker_loop(
             continue;
         }
         let inputs: Vec<Vec<f32>> = batch.iter().map(|r| r.payload.clone()).collect();
+        let first_id = batch.first().map(|r| r.id).unwrap_or(0);
         let infer_start = Instant::now();
         // Fault containment: a backend that panics mid-batch fails only
         // this batch's requests (they get error responses below) — the
@@ -584,6 +663,19 @@ fn worker_loop(
                 panic_message(payload.as_ref())
             )),
         };
+        // One "infer" span per batch, labeled by the first request's id
+        // (the batch's other members are visible via their writebacks).
+        if let Some((rec, track)) = trace {
+            if rec.enabled() {
+                rec.span(
+                    "worker",
+                    "infer",
+                    Some(track.clone()),
+                    rec.instant_us(infer_start),
+                    first_id,
+                );
+            }
+        }
         match result {
             Ok((outputs, cycle_stats)) => {
                 debug_assert_eq!(outputs.len(), batch.len());
@@ -604,6 +696,11 @@ fn worker_loop(
                 for ((req, output), &latency_s) in
                     batch.into_iter().zip(outputs).zip(&latencies)
                 {
+                    if let Some((rec, track)) = trace {
+                        if rec.enabled() {
+                            rec.instant("worker", "writeback", Some(track.clone()), req.id);
+                        }
+                    }
                     let _ = req.respond_to.send(Ok(InferResponse {
                         id: req.id,
                         output,
@@ -1196,6 +1293,53 @@ mod tests {
             rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
         }
         assert_eq!(*served.lock().unwrap(), vec![0.0, 1.0, 2.0, 3.0, 4.0]);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn traced_coordinator_records_request_lifecycle() {
+        let rec = TraceRecorder::new(1024);
+        let coord = Coordinator::start_traced(
+            vec![echo_factory("echo")],
+            CoordinatorConfig { queue_capacity: 8, policy: BatchPolicy::immediate(4) },
+            Some(rec.clone()),
+        )
+        .unwrap();
+        for i in 0..3 {
+            let rx = coord.submit(vec![i as f32]).unwrap();
+            rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        }
+        coord.shutdown();
+        let events = rec.snapshot();
+        let count = |cat: &str, name: &str| {
+            events.iter().filter(|e| e.cat == cat && e.name == name).count()
+        };
+        assert_eq!(count("queue", "enqueue"), 3);
+        assert_eq!(count("queue", "queued"), 3);
+        assert_eq!(count("worker", "writeback"), 3);
+        assert!(count("worker", "infer") >= 1, "no infer span recorded");
+        // Everything landed on the pool's track.
+        assert!(events
+            .iter()
+            .all(|e| e.track.as_deref() == Some("echo")), "wrong track: {events:?}");
+        // Queued spans measure enqueue → dequeue, so they carry a
+        // duration; enqueue/writeback are instants.
+        assert!(events
+            .iter()
+            .filter(|e| e.name == "queued")
+            .all(|e| e.dur_us.is_some()));
+    }
+
+    #[test]
+    fn untraced_coordinator_has_no_trace_overhead_path() {
+        // The default constructor wires no recorder: nothing to record
+        // into, and the lifecycle hooks must stay on the None path.
+        let coord =
+            Coordinator::start(vec![echo_factory("echo")], CoordinatorConfig::default())
+                .unwrap();
+        assert!(coord.trace.is_none());
+        let rx = coord.submit(vec![1.0]).unwrap();
+        rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
         coord.shutdown();
     }
 

@@ -20,7 +20,9 @@
 //! * **L3 (this crate)** — the coordinator: request [`coordinator`]
 //!   (batching, routing, backpressure), the [`serve`] network subsystem
 //!   (binary wire protocol, TCP server, hot-swappable model registry,
-//!   load generator), the [`runtime`] that executes AOT-compiled XLA
+//!   load generator), the [`obs`] observability layer (request tracing,
+//!   Prometheus exposition, energy accounting), the [`runtime`] that
+//!   executes AOT-compiled XLA
 //!   artifacts via PJRT, and every substrate the paper depends on: a
 //!   cycle-accurate [`fpga`] simulator with a power model, a pure-Rust
 //!   [`nn`] training stack, the [`data`] pipeline and the [`rl`]
@@ -39,6 +41,7 @@ pub mod data;
 pub mod experiments;
 pub mod fpga;
 pub mod nn;
+pub mod obs;
 pub mod quant;
 pub mod rl;
 pub mod runtime;

@@ -5,10 +5,12 @@
 //! edgemlp infer            --model /tmp/mlp.emlp --backend fpga
 //! edgemlp serve            --addr 127.0.0.1:7878 --model /tmp/mlp.emlp \
 //!                          --replicas 4 --models qnet=/tmp/qnet.emlp \
-//!                          --backends cpu,fpga,pipeline --pipeline-depth 4
+//!                          --backends cpu,fpga,pipeline --pipeline-depth 4 \
+//!                          --metrics-addr 127.0.0.1:9184 --trace-capacity 8192
 //! edgemlp loadgen          --addr 127.0.0.1:7878 --requests 10000 \
 //!                          --model qnet --warmup 500
-//! edgemlp ctl              --addr 127.0.0.1:7878 --op stats|ping|health|swap|models
+//! edgemlp ctl              --addr 127.0.0.1:7878 \
+//!                          --op stats|ping|health|swap|models|metrics|trace
 //! edgemlp throughput       --requests 500       # in-process E6 sweep
 //! edgemlp table1           [--no-xla]         # paper Table I
 //! edgemlp fig5                                 # paper Figure 5
@@ -205,6 +207,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let spx_bits: u32 = args.get_parse("spx-bits", 5).map_err(anyhow::Error::msg)?;
     let read_timeout_s: f64 =
         args.get_parse("read-timeout-s", 30.0).map_err(anyhow::Error::msg)?;
+    // Observability knobs: `--metrics-addr host:port` starts the
+    // Prometheus sidecar; `--trace-capacity 0` disables request
+    // tracing.
+    let metrics_addr = args.get("metrics-addr", "");
+    let trace_capacity: usize =
+        args.get_parse("trace-capacity", 8192).map_err(anyhow::Error::msg)?;
     let mut degrade = DegradePolicy::default();
     degrade.enter_occupancy =
         args.get_parse("degrade-enter", degrade.enter_occupancy).map_err(anyhow::Error::msg)?;
@@ -287,6 +295,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 max_conns,
                 read_timeout: Duration::from_secs_f64(read_timeout_s),
                 degrade,
+                metrics_addr: (!metrics_addr.is_empty()).then(|| metrics_addr.clone()),
+                trace_capacity,
                 ..ServeConfig::default()
             },
         },
@@ -296,6 +306,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
          {queue_capacity}, batch {max_batch}@{window_ms}ms",
         server.local_addr(),
     );
+    if let Some(m) = server.metrics_local_addr() {
+        println!("  metrics: http://{m}/metrics");
+    }
     for slot in registry.slots() {
         let active = slot.active();
         println!(
@@ -410,6 +423,16 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     }
     let report = run_loadgen(addr, config)?;
     println!("{}", report.render());
+    // Surface the server's modeled energy accounting (Stats appends
+    // `energy ...` lines computed from aggregate CycleStats). Best
+    // effort: an old server without the lines just prints nothing.
+    if let Ok(mut client) = edgemlp::serve::Client::connect(addr) {
+        if let Ok(stats) = client.stats() {
+            for line in stats.lines().filter(|l| l.starts_with("energy ")) {
+                println!("{line}");
+            }
+        }
+    }
     Ok(())
 }
 
@@ -421,6 +444,7 @@ fn cmd_ctl(args: &Args) -> Result<()> {
     let op = args.get("op", "stats");
     let model = args.get("model", "");
     let into = args.get("into", "");
+    let out = args.get("out", "");
     args.finish().map_err(anyhow::Error::msg)?;
 
     let mut client = Client::connect(&addr)?;
@@ -434,11 +458,17 @@ fn cmd_ctl(args: &Args) -> Result<()> {
             use edgemlp::bench_harness::Table;
             let h = client.health()?;
             println!(
-                "degraded: {} | transitions: {} | read timeouts: {}",
+                "degraded: {} | transitions: {} | read timeouts: {} | busy rejected: {}",
                 if h.degraded { "YES" } else { "no" },
                 h.degraded_transitions,
-                h.read_timeouts
+                h.read_timeouts,
+                h.busy_rejected,
             );
+            if !h.bad_requests.is_empty() {
+                let causes: Vec<String> =
+                    h.bad_requests.iter().map(|(c, n)| format!("{c}={n}")).collect();
+                println!("bad requests: {}", causes.join(" "));
+            }
             let mut table =
                 Table::new(&["pool", "depth", "capacity", "replicas", "shed", "expired"]);
             for p in &h.pools {
@@ -475,7 +505,18 @@ fn cmd_ctl(args: &Args) -> Result<()> {
             }
             table.print();
         }
-        other => bail!("unknown op '{other}' (ping|stats|health|swap|models)"),
+        "metrics" => print!("{}", client.metrics_text()?),
+        "trace" => {
+            let json = client.dump_trace()?;
+            if out.is_empty() {
+                println!("{json}");
+            } else {
+                std::fs::write(&out, &json)
+                    .with_context(|| format!("write trace to {out}"))?;
+                println!("wrote {} bytes to {out} (load in Perfetto / chrome://tracing)", json.len());
+            }
+        }
+        other => bail!("unknown op '{other}' (ping|stats|health|swap|models|metrics|trace)"),
     }
     Ok(())
 }

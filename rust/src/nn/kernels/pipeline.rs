@@ -24,8 +24,14 @@
 //! (waiting for upstream) and *stall-out* (blocked pushing downstream).
 //! [`StagePipeline::snapshots`] exposes them as [`StageSnapshot`]s,
 //! which the coordinator surfaces through
-//! [`crate::coordinator::MetricsSnapshot::render`].
+//! [`crate::coordinator::MetricsSnapshot::render`]. A pipeline built
+//! with [`StagePipeline::new_traced`] additionally emits one `"run"`
+//! span per job per stage into the given
+//! [`crate::obs::trace::TraceRecorder`] (track `"<name>/<label>"`,
+//! `request_id` = the job's submission sequence number), so the
+//! per-stage stagger is visible on a Perfetto timeline.
 
+use crate::obs::trace::TraceRecorder;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -199,6 +205,18 @@ impl<J: Send + 'static> StagePipeline<J> {
     /// Spawn one thread per stage, chained by channels of capacity
     /// `depth` (clamped to ≥ 1). `name` prefixes the thread names.
     pub fn new(name: &str, depth: usize, stages: Vec<(String, StageFn<J>)>) -> StagePipeline<J> {
+        Self::new_traced(name, depth, stages, None)
+    }
+
+    /// [`StagePipeline::new`] with a trace recorder: each stage emits a
+    /// `"run"` span per job onto track `"<name>/<label>"`. Passing
+    /// `None` (or a disabled recorder) costs nothing on the job path.
+    pub fn new_traced(
+        name: &str,
+        depth: usize,
+        stages: Vec<(String, StageFn<J>)>,
+        tracer: Option<Arc<TraceRecorder>>,
+    ) -> StagePipeline<J> {
         assert!(!stages.is_empty(), "pipeline needs at least one stage");
         let depth = depth.max(1);
         let n = stages.len();
@@ -211,9 +229,12 @@ impl<J: Send + 'static> StagePipeline<J> {
             let input = chans[k].clone();
             let output = chans[k + 1].clone();
             let counters = counters.clone();
+            let trace = tracer
+                .as_ref()
+                .map(|t| (t.clone(), Arc::<str>::from(format!("{name}/{label}").as_str())));
             let handle = std::thread::Builder::new()
                 .name(format!("edgemlp-{name}-s{k}"))
-                .spawn(move || stage_loop(k, &mut f, &input, &output, &counters[k]))
+                .spawn(move || stage_loop(k, &mut f, &input, &output, &counters[k], trace))
                 .expect("spawn pipeline stage");
             labels.push(label);
             threads.push(handle);
@@ -292,7 +313,11 @@ fn stage_loop<J, F: FnMut(&mut J)>(
     input: &Chan<Slot<J>>,
     output: &Chan<Slot<J>>,
     counter: &StageCounter,
+    trace: Option<(Arc<TraceRecorder>, Arc<str>)>,
 ) {
+    // Local job ordinal: channels are SPSC and ordered, so this matches
+    // the submission sequence — it labels the stage's trace spans.
+    let mut seq: u64 = 0;
     loop {
         let t_in = Instant::now();
         let Some(slot) = input.pop() else {
@@ -311,6 +336,13 @@ fn stage_loop<J, F: FnMut(&mut J)>(
                 let t_busy = Instant::now();
                 let result = catch_unwind(AssertUnwindSafe(|| f(&mut job)));
                 counter.busy_ns.fetch_add(t_busy.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                seq += 1;
+                if let Some((rec, track)) = &trace {
+                    if rec.enabled() {
+                        let start_us = rec.instant_us(t_busy);
+                        rec.span("stage", "run", Some(track.clone()), start_us, seq);
+                    }
+                }
                 match result {
                     Ok(()) => {
                         counter.processed.fetch_add(1, Ordering::Relaxed);
@@ -455,5 +487,35 @@ mod tests {
     fn occupancy_of_empty_snapshot_is_zero() {
         let s = StageSnapshot::default();
         assert_eq!(s.occupancy(), 0.0);
+    }
+
+    #[test]
+    fn traced_pipeline_emits_one_run_span_per_job_per_stage() {
+        let rec = TraceRecorder::new(64);
+        let pipe = StagePipeline::new_traced("tp", 2, adder_stages(2), Some(rec.clone()));
+        for i in 0..3i64 {
+            assert!(pipe.submit(i));
+        }
+        for i in 0..3i64 {
+            assert_eq!(pipe.recv().unwrap().unwrap(), i + 2);
+        }
+        let events = rec.snapshot();
+        let runs: Vec<_> =
+            events.iter().filter(|e| e.cat == "stage" && e.name == "run").collect();
+        assert_eq!(runs.len(), 6, "2 stages × 3 jobs");
+        assert!(runs.iter().all(|e| e.dur_us.is_some()));
+        for stage in ["tp/s0", "tp/s1"] {
+            let seqs: Vec<u64> = runs
+                .iter()
+                .filter(|e| e.track.as_deref() == Some(stage))
+                .map(|e| e.request_id)
+                .collect();
+            assert_eq!(seqs, vec![1, 2, 3], "{stage}");
+        }
+        // The untraced constructor records nothing anywhere.
+        let quiet = StagePipeline::new("quiet", 2, adder_stages(1));
+        assert!(quiet.submit(1));
+        quiet.recv().unwrap().unwrap();
+        assert_eq!(rec.snapshot().len(), events.len());
     }
 }

@@ -1,0 +1,132 @@
+//! Per-pool energy accounting: the dormant activity-based
+//! [`EnergyModel`] applied to the [`CycleStats`] that already flow from
+//! the SPx backends into the serving metrics.
+//!
+//! Attribution rules (documented in `docs/observability.md`):
+//!
+//! * **Dynamic** energy is charged per pool from that pool's
+//!   accumulated simulator events — it is exactly
+//!   [`EnergyModel::dynamic_energy_j`] over the pool's aggregate
+//!   `CycleStats`, so joules/request reported here are consistent with
+//!   the model applied to the run's aggregate trace by construction.
+//! * **Static** draw belongs to the board, not to any one pool;
+//!   reporting `static_w × elapsed` per pool would multiply-count it.
+//!   It is exposed once, server-wide, as `edgemlp_static_power_watts`.
+//! * Pools without simulator stats (pure f32 CPU pools) report zero
+//!   dynamic energy — the activity model covers the simulated SPx
+//!   datapath only. That absence is itself the paper's comparison
+//!   point, not a gap to paper over.
+
+use crate::coordinator::metrics::{BackendMetrics, MetricsSnapshot};
+use crate::fpga::power::EnergyModel;
+
+/// Energy view of one pool over the server's lifetime.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PoolEnergy {
+    /// Activity-based dynamic energy, joules.
+    pub dynamic_j: f64,
+    /// Joules per served request (0 when no requests).
+    pub j_per_request: f64,
+    /// Millijoules per sample (batch members; 0 when no samples).
+    pub mj_per_sample: f64,
+    /// Average dynamic power over `elapsed_s`, watts.
+    pub avg_dynamic_w: f64,
+}
+
+/// Compute the energy view of one pool's metrics over `elapsed_s`
+/// seconds of server lifetime.
+pub fn pool_energy(model: &EnergyModel, m: &BackendMetrics, elapsed_s: f64) -> PoolEnergy {
+    let dynamic_j = model.dynamic_energy_j(&m.cycle_stats);
+    let per = |num: f64, den: u64| if den == 0 { 0.0 } else { num / den as f64 };
+    PoolEnergy {
+        dynamic_j,
+        j_per_request: per(dynamic_j, m.requests),
+        mj_per_sample: per(dynamic_j * 1e3, m.batch_size_sum),
+        avg_dynamic_w: if elapsed_s > 0.0 { dynamic_j / elapsed_s } else { 0.0 },
+    }
+}
+
+/// Human-oriented energy lines appended to the `Stats` opcode text:
+/// one line per pool with nonzero simulator activity, plus the static
+/// draw. Empty string when no pool has activity stats.
+pub fn render_energy_text(model: &EnergyModel, snap: &MetricsSnapshot, elapsed_s: f64) -> String {
+    let mut out = String::new();
+    for (name, m) in &snap.backends {
+        let e = pool_energy(model, m, elapsed_s);
+        if e.dynamic_j <= 0.0 {
+            continue;
+        }
+        out.push_str(&format!(
+            "energy {name}: {:.6} J dynamic ({:.6} J/req, {:.4} mJ/sample, avg {:.4} W)\n",
+            e.dynamic_j, e.j_per_request, e.mj_per_sample, e.avg_dynamic_w
+        ));
+    }
+    if !out.is_empty() {
+        out.push_str(&format!("energy static: {:.2} W board draw (not per-pool)\n", model.static_w));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::stats::CycleStats;
+
+    fn pool_with(stats: CycleStats, requests: u64, samples: u64) -> BackendMetrics {
+        BackendMetrics {
+            requests,
+            batch_size_sum: samples,
+            cycle_stats: stats,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn pool_energy_matches_model_exactly() {
+        let model = EnergyModel::default_fpga();
+        let stats = CycleStats { shifts: 1000, adds: 500, mults: 10, ..Default::default() };
+        let m = pool_with(stats, 20, 40);
+        let e = pool_energy(&model, &m, 2.0);
+        let expect = model.dynamic_energy_j(&stats);
+        assert!(expect > 0.0);
+        assert_eq!(e.dynamic_j, expect);
+        assert_eq!(e.j_per_request, expect / 20.0);
+        assert_eq!(e.mj_per_sample, expect * 1e3 / 40.0);
+        assert_eq!(e.avg_dynamic_w, expect / 2.0);
+    }
+
+    #[test]
+    fn zero_denominators_defend() {
+        let model = EnergyModel::default_fpga();
+        let m = pool_with(CycleStats { shifts: 5, ..Default::default() }, 0, 0);
+        let e = pool_energy(&model, &m, 0.0);
+        assert!(e.dynamic_j > 0.0);
+        assert_eq!(e.j_per_request, 0.0);
+        assert_eq!(e.mj_per_sample, 0.0);
+        assert_eq!(e.avg_dynamic_w, 0.0);
+    }
+
+    #[test]
+    fn cpu_pools_report_zero_and_render_nothing() {
+        let model = EnergyModel::default_fpga();
+        let mut snap = MetricsSnapshot {
+            backends: Default::default(),
+            rejected: 0,
+            expired: 0,
+            degraded_transitions: 0,
+            busy_rejected: 0,
+            bad_requests: Default::default(),
+        };
+        snap.backends.insert("cpu/default".into(), pool_with(CycleStats::default(), 10, 10));
+        assert_eq!(render_energy_text(&model, &snap, 1.0), "");
+        // Add an active SPx pool: one energy line + the static line.
+        snap.backends.insert(
+            "fpga/default".into(),
+            pool_with(CycleStats { macs: 100, shifts: 300, adds: 400, ..Default::default() }, 10, 10),
+        );
+        let text = render_energy_text(&model, &snap, 1.0);
+        assert!(text.contains("energy fpga/default:"), "{text}");
+        assert!(!text.contains("cpu/default"), "{text}");
+        assert!(text.contains("energy static: 2.50 W"), "{text}");
+    }
+}

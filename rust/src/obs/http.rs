@@ -1,0 +1,229 @@
+//! Minimal std-only HTTP sidecar for `GET /metrics` — enough of
+//! HTTP/1.1 for a Prometheus scraper or `curl`, and nothing more: one
+//! accept thread, one short-lived handler thread per request,
+//! connection-close semantics, a small header cap and a read deadline
+//! so a stalled scraper cannot pin the listener.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Longest request head (request line + headers) we accept.
+const MAX_HEAD: usize = 8 * 1024;
+/// A scraper that cannot finish its request head in this window is cut.
+const READ_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Handle to the running sidecar; dropping it stops the listener.
+pub struct MetricsHttp {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsHttp {
+    /// Bind `addr` (e.g. `"127.0.0.1:9100"`, port 0 for ephemeral) and
+    /// serve `GET /metrics` with the text `render` produces per scrape.
+    pub fn start(
+        addr: &str,
+        render: Arc<dyn Fn() -> String + Send + Sync>,
+    ) -> std::io::Result<MetricsHttp> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("metrics-http".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop_flag.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    let render = render.clone();
+                    // Handler threads are short-lived (one response,
+                    // close); detached is fine — shutdown only needs
+                    // the listener gone.
+                    let _ = std::thread::Builder::new()
+                        .name("metrics-conn".into())
+                        .spawn(move || handle(stream, &*render));
+                }
+            })
+            .expect("spawn metrics-http thread");
+        Ok(MetricsHttp { addr: local, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the listener and join the accept thread.
+    pub fn shutdown(mut self) {
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Wake the blocking accept with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsHttp {
+    fn drop(&mut self) {
+        if self.handle.is_some() {
+            self.stop_inner();
+        }
+    }
+}
+
+fn handle(mut stream: TcpStream, render: &dyn Fn() -> String) {
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let _ = stream.set_nodelay(true);
+    let Some(path) = read_request_path(&mut stream) else {
+        let _ = respond(&mut stream, 400, "Bad Request", "malformed request\n", "text/plain");
+        return;
+    };
+    match path.as_str() {
+        "/metrics" => {
+            let body = render();
+            let _ = respond(
+                &mut stream,
+                200,
+                "OK",
+                &body,
+                "text/plain; version=0.0.4; charset=utf-8",
+            );
+        }
+        "/" => {
+            let _ = respond(
+                &mut stream,
+                200,
+                "OK",
+                "edgemlp metrics sidecar — scrape /metrics\n",
+                "text/plain; charset=utf-8",
+            );
+        }
+        _ => {
+            let _ = respond(&mut stream, 404, "Not Found", "not found\n", "text/plain");
+        }
+    }
+}
+
+/// Read up to the end of the request head and return the request-line
+/// path for a GET; `None` for anything malformed, oversized, or not
+/// GET.
+fn read_request_path(stream: &mut TcpStream) -> Option<String> {
+    let mut head = Vec::with_capacity(256);
+    let mut buf = [0u8; 512];
+    while !head.windows(4).any(|w| w == b"\r\n\r\n") {
+        if head.len() > MAX_HEAD {
+            return None;
+        }
+        match stream.read(&mut buf) {
+            Ok(0) | Err(_) => return None,
+            Ok(n) => head.extend_from_slice(&buf[..n]),
+        }
+    }
+    let text = String::from_utf8_lossy(&head);
+    let request_line = text.lines().next()?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next()?;
+    let path = parts.next()?;
+    if method != "GET" {
+        return None;
+    }
+    Some(path.to_string())
+}
+
+fn respond(
+    stream: &mut TcpStream,
+    code: u16,
+    reason: &str,
+    body: &str,
+    content_type: &str,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {code} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn get(addr: SocketAddr, path: &str) -> (u16, String) {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream
+            .write_all(format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").as_bytes())
+            .unwrap();
+        let mut resp = String::new();
+        stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        stream.read_to_string(&mut resp).unwrap();
+        let code: u16 = resp.split_whitespace().nth(1).unwrap().parse().unwrap();
+        let body = resp.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+        (code, body)
+    }
+
+    #[test]
+    fn serves_metrics_and_404s_the_rest() {
+        let http = MetricsHttp::start(
+            "127.0.0.1:0",
+            Arc::new(|| "edgemlp_up 1\n".to_string()),
+        )
+        .unwrap();
+        let addr = http.local_addr();
+        let (code, body) = get(addr, "/metrics");
+        assert_eq!(code, 200);
+        assert_eq!(body, "edgemlp_up 1\n");
+        let (code, _) = get(addr, "/nope");
+        assert_eq!(code, 404);
+        let (code, _) = get(addr, "/");
+        assert_eq!(code, 200);
+        http.shutdown();
+    }
+
+    #[test]
+    fn render_runs_per_scrape() {
+        let hits = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let h2 = hits.clone();
+        let http = MetricsHttp::start(
+            "127.0.0.1:0",
+            Arc::new(move || format!("scrapes {}\n", h2.fetch_add(1, Ordering::SeqCst) + 1)),
+        )
+        .unwrap();
+        let addr = http.local_addr();
+        assert_eq!(get(addr, "/metrics").1, "scrapes 1\n");
+        assert_eq!(get(addr, "/metrics").1, "scrapes 2\n");
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+        http.shutdown();
+    }
+
+    #[test]
+    fn non_get_is_rejected_not_panicked() {
+        let http =
+            MetricsHttp::start("127.0.0.1:0", Arc::new(|| String::new())).unwrap();
+        let addr = http.local_addr();
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(b"POST /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        stream.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+        // The sidecar survives.
+        let (code, _) = get(addr, "/metrics");
+        assert_eq!(code, 200);
+        http.shutdown();
+    }
+}

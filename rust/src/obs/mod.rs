@@ -1,0 +1,31 @@
+//! Observability layer: request lifecycle tracing, Prometheus
+//! text-format exposition, and per-pool energy accounting.
+//!
+//! The serving stack already *measures* (per-pool counters, latency
+//! histograms, stage occupancy, simulator cycle stats); this module is
+//! how those measurements leave the process:
+//!
+//! * [`trace`] — a bounded ring-buffer [`trace::TraceRecorder`]
+//!   capturing timestamped per-request events (accept → decode →
+//!   admit/shed → enqueue → dequeue → infer → per-stage run →
+//!   writeback), exportable as Chrome trace-event JSON for
+//!   Perfetto / `chrome://tracing`.
+//! * [`prometheus`] — renders a `MetricsSnapshot` + `HealthReport` +
+//!   energy model as Prometheus text exposition format 0.0.4.
+//! * [`http`] — a std-only `GET /metrics` sidecar listener.
+//! * [`energy`] — applies the activity-based
+//!   [`crate::fpga::power::EnergyModel`] to per-pool `CycleStats` for
+//!   joules/request, mJ/sample, and average-watts figures.
+//!
+//! See `docs/observability.md` for the metric-family inventory, the
+//! trace event schema, and the energy model's assumptions.
+
+pub mod energy;
+pub mod http;
+pub mod prometheus;
+pub mod trace;
+
+pub use energy::{pool_energy, render_energy_text, PoolEnergy};
+pub use http::MetricsHttp;
+pub use prometheus::render_prometheus;
+pub use trace::{TraceEvent, TraceRecorder};

@@ -1,0 +1,358 @@
+//! Prometheus text-format (version 0.0.4) exposition of the serving
+//! metrics: every [`MetricsSnapshot`] field — per-pool counters, the
+//! native histogram buckets, shed/expired/degraded state, stage
+//! occupancy, energy — as properly typed, labeled families.
+//!
+//! Family and label names are part of the observable API and pinned by
+//! a golden-file test; `tools/check_metrics.py` validates the rendered
+//! format (and the required families) in CI against a live `/metrics`
+//! scrape. All lines of one family are contiguous, as the exposition
+//! format requires.
+
+use super::energy::pool_energy;
+use crate::coordinator::metrics::MetricsSnapshot;
+use crate::fpga::power::EnergyModel;
+use crate::serve::wire::HealthReport;
+
+/// Render one scrape. `uptime_s` is the server's lifetime (the energy
+/// power denominators), `trace_len`/`trace_dropped` the trace ring's
+/// current state.
+pub fn render_prometheus(
+    snap: &MetricsSnapshot,
+    health: &HealthReport,
+    energy: &EnergyModel,
+    uptime_s: f64,
+    trace_len: u64,
+    trace_dropped: u64,
+) -> String {
+    let mut out = String::with_capacity(4096);
+    let pools = &snap.backends;
+
+    family(&mut out, "edgemlp_uptime_seconds", "gauge", "Seconds since the server started.");
+    sample(&mut out, "edgemlp_uptime_seconds", &[], uptime_s);
+
+    family(&mut out, "edgemlp_degraded", "gauge", "1 while degraded-mode routing is active.");
+    sample(&mut out, "edgemlp_degraded", &[], if health.degraded { 1.0 } else { 0.0 });
+
+    family(
+        &mut out,
+        "edgemlp_degraded_transitions_total",
+        "counter",
+        "Degraded-mode flips (enter + exit) since startup.",
+    );
+    sample(&mut out, "edgemlp_degraded_transitions_total", &[], snap.degraded_transitions as f64);
+
+    family(
+        &mut out,
+        "edgemlp_read_timeouts_total",
+        "counter",
+        "Connections closed by the per-frame read deadline.",
+    );
+    sample(&mut out, "edgemlp_read_timeouts_total", &[], health.read_timeouts as f64);
+
+    family(
+        &mut out,
+        "edgemlp_busy_rejected_total",
+        "counter",
+        "Connections refused at the connection-pool limit (Busy).",
+    );
+    sample(&mut out, "edgemlp_busy_rejected_total", &[], snap.busy_rejected as f64);
+
+    family(
+        &mut out,
+        "edgemlp_shed_total",
+        "counter",
+        "Requests shed by backpressure across all pools.",
+    );
+    sample(&mut out, "edgemlp_shed_total", &[], snap.rejected as f64);
+
+    family(
+        &mut out,
+        "edgemlp_expired_total",
+        "counter",
+        "Requests answered Expired (admission + in-queue) across all pools.",
+    );
+    sample(&mut out, "edgemlp_expired_total", &[], snap.expired as f64);
+
+    family(
+        &mut out,
+        "edgemlp_bad_requests_total",
+        "counter",
+        "Requests answered BadRequest, by cause.",
+    );
+    for (cause, n) in &snap.bad_requests {
+        sample(&mut out, "edgemlp_bad_requests_total", &[("cause", cause)], *n as f64);
+    }
+
+    family(
+        &mut out,
+        "edgemlp_trace_buffer_events",
+        "gauge",
+        "Lifecycle events currently held in the trace ring.",
+    );
+    sample(&mut out, "edgemlp_trace_buffer_events", &[], trace_len as f64);
+
+    family(
+        &mut out,
+        "edgemlp_trace_dropped_total",
+        "counter",
+        "Trace events dropped (oldest-first) because the ring was full.",
+    );
+    sample(&mut out, "edgemlp_trace_dropped_total", &[], trace_dropped as f64);
+
+    family(
+        &mut out,
+        "edgemlp_static_power_watts",
+        "gauge",
+        "Modeled board static draw (server-wide, not per pool).",
+    );
+    sample(&mut out, "edgemlp_static_power_watts", &[], energy.static_w);
+
+    // ---- per-pool counter families ----
+    let pool_counter = |out: &mut String, name: &str, help: &str, f: &dyn Fn(&str) -> f64| {
+        family(out, name, "counter", help);
+        for pool in pools.keys() {
+            sample(out, name, &[("pool", pool)], f(pool));
+        }
+    };
+    pool_counter(&mut out, "edgemlp_pool_requests_total", "Requests served, per pool.", &|p| {
+        pools[p].requests as f64
+    });
+    pool_counter(
+        &mut out,
+        "edgemlp_pool_samples_total",
+        "Samples executed (batch members), per pool.",
+        &|p| pools[p].batch_size_sum as f64,
+    );
+    pool_counter(&mut out, "edgemlp_pool_batches_total", "Batches executed, per pool.", &|p| {
+        pools[p].batches as f64
+    });
+    pool_counter(&mut out, "edgemlp_pool_errors_total", "Failed requests, per pool.", &|p| {
+        pools[p].errors as f64
+    });
+    pool_counter(&mut out, "edgemlp_pool_shed_total", "Requests shed, per pool.", &|p| {
+        pools[p].shed as f64
+    });
+    pool_counter(&mut out, "edgemlp_pool_expired_total", "Requests expired, per pool.", &|p| {
+        pools[p].expired as f64
+    });
+
+    // ---- queue gauges (from the health view; names match pools) ----
+    let health_gauge = |out: &mut String, name: &str, help: &str, f: &dyn Fn(usize) -> f64| {
+        family(out, name, "gauge", help);
+        for (i, p) in health.pools.iter().enumerate() {
+            sample(out, name, &[("pool", &p.name)], f(i));
+        }
+    };
+    health_gauge(&mut out, "edgemlp_pool_queue_depth", "Requests currently queued.", &|i| {
+        health.pools[i].queue_depth as f64
+    });
+    health_gauge(&mut out, "edgemlp_pool_queue_capacity", "Configured queue bound.", &|i| {
+        health.pools[i].queue_capacity as f64
+    });
+    health_gauge(&mut out, "edgemlp_pool_replicas", "Worker replicas draining the queue.", &|i| {
+        health.pools[i].replicas as f64
+    });
+
+    // ---- latency histogram (native Prometheus histogram format) ----
+    family(
+        &mut out,
+        "edgemlp_request_latency_seconds",
+        "histogram",
+        "Per-request latency (enqueue to response), per pool.",
+    );
+    for (pool, m) in pools {
+        for (le_us, cum) in m.latency.cumulative_buckets() {
+            let le = format_us_as_s(le_us);
+            sample(
+                &mut out,
+                "edgemlp_request_latency_seconds_bucket",
+                &[("pool", pool), ("le", &le)],
+                cum as f64,
+            );
+        }
+        sample(
+            &mut out,
+            "edgemlp_request_latency_seconds_bucket",
+            &[("pool", pool), ("le", "+Inf")],
+            m.latency.count() as f64,
+        );
+        sample(&mut out, "edgemlp_request_latency_seconds_sum", &[("pool", pool)], m.latency.sum_s());
+        sample(
+            &mut out,
+            "edgemlp_request_latency_seconds_count",
+            &[("pool", pool)],
+            m.latency.count() as f64,
+        );
+    }
+
+    // ---- stage occupancy (stage-pipelined pools only) ----
+    let stage_family = |out: &mut String, name: &str, ty: &str, help: &str, f: &dyn Fn(&str, usize) -> f64| {
+        family(out, name, ty, help);
+        for (pool, m) in pools {
+            for (si, s) in m.stages.iter().enumerate() {
+                sample(out, name, &[("pool", pool), ("stage", &s.label)], f(pool, si));
+            }
+        }
+    };
+    stage_family(&mut out, "edgemlp_stage_jobs_total", "counter", "Jobs a stage completed.", &|p, i| {
+        pools[p].stages[i].processed as f64
+    });
+    stage_family(&mut out, "edgemlp_stage_failed_total", "counter", "Jobs a stage failed.", &|p, i| {
+        pools[p].stages[i].failed as f64
+    });
+    stage_family(
+        &mut out,
+        "edgemlp_stage_busy_seconds_total",
+        "counter",
+        "Wall time a stage spent computing.",
+        &|p, i| pools[p].stages[i].busy_s,
+    );
+    stage_family(
+        &mut out,
+        "edgemlp_stage_stall_in_seconds_total",
+        "counter",
+        "Wall time a stage waited for upstream input.",
+        &|p, i| pools[p].stages[i].stall_in_s,
+    );
+    stage_family(
+        &mut out,
+        "edgemlp_stage_stall_out_seconds_total",
+        "counter",
+        "Wall time a stage blocked on a full downstream channel.",
+        &|p, i| pools[p].stages[i].stall_out_s,
+    );
+    stage_family(
+        &mut out,
+        "edgemlp_stage_occupancy_ratio",
+        "gauge",
+        "Busy fraction of a stage's observed wall time.",
+        &|p, i| pools[p].stages[i].occupancy(),
+    );
+
+    // ---- energy (activity model × accumulated CycleStats) ----
+    let energies: Vec<(&String, super::energy::PoolEnergy)> =
+        pools.iter().map(|(name, m)| (name, pool_energy(energy, m, uptime_s))).collect();
+    let energy_family = |out: &mut String, name: &str, ty: &str, help: &str, f: &dyn Fn(&super::energy::PoolEnergy) -> f64| {
+        family(out, name, ty, help);
+        for (pool, e) in &energies {
+            sample(out, name, &[("pool", pool)], f(e));
+        }
+    };
+    energy_family(
+        &mut out,
+        "edgemlp_pool_energy_joules_total",
+        "counter",
+        "Modeled dynamic energy consumed by the pool's datapath.",
+        &|e| e.dynamic_j,
+    );
+    energy_family(
+        &mut out,
+        "edgemlp_pool_energy_joules_per_request",
+        "gauge",
+        "Modeled dynamic joules per served request.",
+        &|e| e.j_per_request,
+    );
+    energy_family(
+        &mut out,
+        "edgemlp_pool_energy_mj_per_sample",
+        "gauge",
+        "Modeled dynamic millijoules per executed sample.",
+        &|e| e.mj_per_sample,
+    );
+    energy_family(
+        &mut out,
+        "edgemlp_pool_power_watts",
+        "gauge",
+        "Average modeled dynamic power over the server's lifetime.",
+        &|e| e.avg_dynamic_w,
+    );
+
+    out
+}
+
+fn family(out: &mut String, name: &str, ty: &str, help: &str) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {ty}\n"));
+}
+
+fn sample(out: &mut String, name: &str, labels: &[(&str, &str)], value: f64) {
+    out.push_str(name);
+    if !labels.is_empty() {
+        out.push('{');
+        for (i, (k, v)) in labels.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("{k}=\"{}\"", escape_label(v)));
+        }
+        out.push('}');
+    }
+    out.push(' ');
+    out.push_str(&format_value(value));
+    out.push('\n');
+}
+
+/// Prometheus label-value escaping: backslash, double quote, newline.
+fn escape_label(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Integral values render without a fraction; everything else uses
+/// Rust's shortest round-trip float form (valid Prometheus floats).
+fn format_value(v: f64) -> String {
+    if v.is_finite() && v.fract() == 0.0 && v.abs() < 9.007_199_254_740_992e15 {
+        format!("{v:.0}")
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Exact decimal rendering of a microsecond count as seconds, with
+/// trailing zeros trimmed (`2 → "0.000002"`, `2097152 → "2.097152"`,
+/// `2000000 → "2"`) — keeps histogram `le` bounds clean and stable.
+fn format_us_as_s(us: u64) -> String {
+    let whole = us / 1_000_000;
+    let frac = us % 1_000_000;
+    if frac == 0 {
+        return format!("{whole}");
+    }
+    let mut s = format!("{whole}.{frac:06}");
+    while s.ends_with('0') {
+        s.pop();
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_us_trims_cleanly() {
+        assert_eq!(format_us_as_s(2), "0.000002");
+        assert_eq!(format_us_as_s(2_097_152), "2.097152");
+        assert_eq!(format_us_as_s(2_000_000), "2");
+        assert_eq!(format_us_as_s(1_048_576), "1.048576");
+    }
+
+    #[test]
+    fn format_value_integral_vs_float() {
+        assert_eq!(format_value(5.0), "5");
+        assert_eq!(format_value(0.5), "0.5");
+        assert_eq!(format_value(0.0), "0");
+    }
+
+    #[test]
+    fn label_escaping() {
+        assert_eq!(escape_label("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+}

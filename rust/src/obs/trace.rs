@@ -1,0 +1,333 @@
+//! Bounded request-lifecycle trace recorder.
+//!
+//! A single process-wide ring buffer of timestamped events, shared as
+//! `Arc<TraceRecorder>` by the connection layer, the coordinator, and
+//! the stage pipelines. The hot-path cost is one atomic load when
+//! tracing is off and one short mutex-protected ring push when it is
+//! on — no allocation per event beyond an occasional `Arc<str>` clone
+//! for the track label. When the ring is full the **oldest** event is
+//! dropped and counted, so the buffer always holds the most recent
+//! window of activity.
+//!
+//! [`TraceRecorder::export_chrome_json`] renders the ring as Chrome
+//! trace-event JSON (the `{"traceEvents": [...]}` format loadable in
+//! Perfetto / `chrome://tracing`): each distinct `(category, track)`
+//! pair becomes one named thread row, spans become `ph:"X"` complete
+//! events and point events become `ph:"i"` instants, so a pipeline
+//! stall or an EDF inversion is visible as a timeline instead of being
+//! inferred from counters. Schema documented in
+//! `docs/observability.md`.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// One recorded lifecycle event. `dur_us: Some(_)` is a span (rendered
+/// `ph:"X"`), `None` an instant (`ph:"i"`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Coarse category: `"conn"`, `"queue"`, `"worker"`, `"stage"`.
+    pub cat: &'static str,
+    /// Event name: `"accept"`, `"decode"`, `"enqueue"`, `"queued"`,
+    /// `"shed"`, `"expired"`, `"infer"`, `"run"`, `"writeback"`, …
+    pub name: &'static str,
+    /// Timeline row within the category (pool name, stage label);
+    /// `None` collapses onto the category's own row.
+    pub track: Option<Arc<str>>,
+    /// Microseconds since the recorder's epoch.
+    pub ts_us: u64,
+    /// Span duration in microseconds; `None` for instants.
+    pub dur_us: Option<u64>,
+    /// The request id the event belongs to (0 when not applicable;
+    /// stage events carry the job sequence number instead).
+    pub request_id: u64,
+}
+
+/// Thread-shared bounded trace ring. Construct once per server via
+/// [`TraceRecorder::new`] and clone the `Arc` into every layer.
+#[derive(Debug)]
+pub struct TraceRecorder {
+    enabled: AtomicBool,
+    dropped: AtomicU64,
+    epoch: Instant,
+    capacity: usize,
+    ring: Mutex<VecDeque<TraceEvent>>,
+}
+
+impl TraceRecorder {
+    /// A recorder holding at most `capacity` events. `capacity == 0`
+    /// disables recording entirely (every `record` is one relaxed
+    /// atomic load).
+    pub fn new(capacity: usize) -> Arc<Self> {
+        Arc::new(TraceRecorder {
+            enabled: AtomicBool::new(capacity > 0),
+            dropped: AtomicU64::new(0),
+            epoch: Instant::now(),
+            capacity,
+            ring: Mutex::new(VecDeque::with_capacity(capacity.min(1024))),
+        })
+    }
+
+    /// A permanently disabled recorder (for paths that require one).
+    pub fn off() -> Arc<Self> {
+        Self::new(0)
+    }
+
+    /// Whether events are currently being recorded. Call sites can use
+    /// this to skip timestamp capture for span events entirely.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Configured ring capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Microseconds since the recorder's epoch.
+    #[inline]
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Convert an [`Instant`] (e.g. a request's `enqueued_at`) to
+    /// microseconds on this recorder's timeline. Instants predating the
+    /// epoch saturate to 0.
+    pub fn instant_us(&self, at: Instant) -> u64 {
+        at.saturating_duration_since(self.epoch).as_micros() as u64
+    }
+
+    /// Record a point event at the current time.
+    pub fn instant(&self, cat: &'static str, name: &'static str, track: Option<Arc<str>>, request_id: u64) {
+        if !self.enabled() {
+            return;
+        }
+        self.push(TraceEvent { cat, name, track, ts_us: self.now_us(), dur_us: None, request_id });
+    }
+
+    /// Record a span that started at `start_us` (on this recorder's
+    /// timeline) and ends now.
+    pub fn span(&self, cat: &'static str, name: &'static str, track: Option<Arc<str>>, start_us: u64, request_id: u64) {
+        if !self.enabled() {
+            return;
+        }
+        let now = self.now_us();
+        self.push(TraceEvent {
+            cat,
+            name,
+            track,
+            ts_us: start_us.min(now),
+            dur_us: Some(now.saturating_sub(start_us)),
+            request_id,
+        });
+    }
+
+    /// Record a fully specified span.
+    pub fn span_at(&self, cat: &'static str, name: &'static str, track: Option<Arc<str>>, start_us: u64, dur_us: u64, request_id: u64) {
+        if !self.enabled() {
+            return;
+        }
+        self.push(TraceEvent { cat, name, track, ts_us: start_us, dur_us: Some(dur_us), request_id });
+    }
+
+    fn push(&self, ev: TraceEvent) {
+        let mut ring = self.ring.lock().unwrap();
+        if ring.len() >= self.capacity {
+            ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(ev);
+    }
+
+    /// Events dropped because the ring was full (oldest-first).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Events currently held.
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Copy out the current ring contents, oldest first.
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        self.ring.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// Render the ring as Chrome trace-event JSON. Each distinct
+    /// `(cat, track)` pair becomes one named thread row (pid 1);
+    /// `otherData.dropped_events` reports the overflow count.
+    pub fn export_chrome_json(&self) -> String {
+        let events = self.snapshot();
+        let dropped = self.dropped();
+        // Stable row assignment: sorted by (cat, track).
+        let mut rows: BTreeMap<(String, String), u64> = BTreeMap::new();
+        for ev in &events {
+            let key = (ev.cat.to_string(), ev.track.as_deref().unwrap_or("").to_string());
+            let next = rows.len() as u64 + 1;
+            rows.entry(key).or_insert(next);
+        }
+        let mut out = String::with_capacity(events.len() * 96 + 256);
+        out.push_str("{\"traceEvents\":[");
+        let mut first = true;
+        let mut emit = |s: String, first: &mut bool, out: &mut String| {
+            if !*first {
+                out.push(',');
+            }
+            *first = false;
+            out.push_str(&s);
+        };
+        for ((cat, track), tid) in &rows {
+            let label = if track.is_empty() { cat.clone() } else { format!("{cat} {track}") };
+            emit(
+                format!(
+                    "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{tid},\
+                     \"args\":{{\"name\":\"{}\"}}}}",
+                    escape_json(&label)
+                ),
+                &mut first,
+                &mut out,
+            );
+        }
+        for ev in &events {
+            let key = (ev.cat.to_string(), ev.track.as_deref().unwrap_or("").to_string());
+            let tid = rows[&key];
+            match ev.dur_us {
+                Some(dur) => emit(
+                    format!(
+                        "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"pid\":1,\"tid\":{tid},\
+                         \"ts\":{},\"dur\":{dur},\"args\":{{\"req\":{}}}}}",
+                        escape_json(ev.name),
+                        escape_json(ev.cat),
+                        ev.ts_us,
+                        ev.request_id
+                    ),
+                    &mut first,
+                    &mut out,
+                ),
+                None => emit(
+                    format!(
+                        "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"i\",\"s\":\"t\",\"pid\":1,\
+                         \"tid\":{tid},\"ts\":{},\"args\":{{\"req\":{}}}}}",
+                        escape_json(ev.name),
+                        escape_json(ev.cat),
+                        ev.ts_us,
+                        ev.request_id
+                    ),
+                    &mut first,
+                    &mut out,
+                ),
+            }
+        }
+        out.push_str(&format!(
+            "],\"displayTimeUnit\":\"ms\",\"otherData\":{{\"dropped_events\":\"{dropped}\"}}}}"
+        ));
+        out
+    }
+}
+
+/// Escape a string for a JSON string literal (RFC 8259).
+pub(crate) fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let t = TraceRecorder::new(4);
+        for i in 0..6u64 {
+            t.instant("conn", "accept", None, i);
+        }
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.dropped(), 2);
+        let events = t.snapshot();
+        // Events 0 and 1 fell off the front; 2..=5 remain in order.
+        assert_eq!(events.iter().map(|e| e.request_id).collect::<Vec<_>>(), vec![2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let t = TraceRecorder::off();
+        assert!(!t.enabled());
+        t.instant("conn", "accept", None, 1);
+        t.span("worker", "infer", None, 0, 1);
+        assert_eq!(t.len(), 0);
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn span_measures_forward_from_start() {
+        let t = TraceRecorder::new(8);
+        let start = t.now_us();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        t.span("worker", "infer", Some(Arc::from("cpu/default")), start, 7);
+        let events = t.snapshot();
+        assert_eq!(events.len(), 1);
+        let ev = &events[0];
+        assert_eq!(ev.request_id, 7);
+        assert!(ev.dur_us.unwrap() >= 1_000, "{ev:?}");
+        assert_eq!(ev.track.as_deref(), Some("cpu/default"));
+    }
+
+    #[test]
+    fn chrome_export_has_rows_spans_and_instants() {
+        let t = TraceRecorder::new(16);
+        t.instant("queue", "enqueue", Some(Arc::from("cpu/default")), 1);
+        t.span_at("worker", "infer", Some(Arc::from("cpu/default")), 10, 25, 1);
+        t.instant("conn", "accept", None, 0);
+        let json = t.export_chrome_json();
+        assert!(json.starts_with("{\"traceEvents\":["), "{json}");
+        assert!(json.ends_with('}'), "{json}");
+        // One thread_name metadata row per distinct (cat, track).
+        assert_eq!(json.matches("\"thread_name\"").count(), 3, "{json}");
+        assert!(json.contains("\"name\":\"worker cpu/default\""), "{json}");
+        assert!(json.contains("\"ph\":\"X\""), "{json}");
+        assert!(json.contains("\"ph\":\"i\""), "{json}");
+        assert!(json.contains("\"dur\":25"), "{json}");
+        assert!(json.contains("\"dropped_events\":\"0\""), "{json}");
+        // Structurally balanced (cheap well-formedness check; the CI
+        // smoke job additionally json.load()s a live dump).
+        assert_eq!(json.matches('{').count(), json.matches('}').count(), "{json}");
+        assert_eq!(json.matches('[').count(), json.matches(']').count(), "{json}");
+    }
+
+    #[test]
+    fn export_reports_dropped_count() {
+        let t = TraceRecorder::new(2);
+        for i in 0..5u64 {
+            t.instant("conn", "accept", None, i);
+        }
+        let json = t.export_chrome_json();
+        assert!(json.contains("\"dropped_events\":\"3\""), "{json}");
+    }
+
+    #[test]
+    fn instant_us_saturates_before_epoch() {
+        let t = TraceRecorder::new(2);
+        let before = Instant::now() - std::time::Duration::from_secs(10);
+        // An Instant captured before the recorder existed maps to 0,
+        // not a panic or an underflow.
+        assert_eq!(t.instant_us(before.min(t.epoch)), 0);
+    }
+}

@@ -249,6 +249,36 @@ impl Client {
         Ok(resp.message())
     }
 
+    /// Prometheus text exposition over the wire (`StatsV2`, protocol
+    /// v4) — byte-identical to the `/metrics` sidecar body, for
+    /// environments where only the inference port is reachable.
+    pub fn metrics_text(&mut self) -> Result<String> {
+        let id = self.send(Opcode::StatsV2, Vec::new())?;
+        let resp = self.recv()?;
+        if resp.request_id != id {
+            bail!("response id {} for request {id}", resp.request_id);
+        }
+        if resp.status != Status::Ok {
+            bail!("metrics failed: {} {}", resp.status, resp.message());
+        }
+        Ok(resp.message())
+    }
+
+    /// Export the server's request-lifecycle trace ring as Chrome
+    /// trace-event JSON (`DumpTrace`, protocol v4) — loadable in
+    /// Perfetto / `chrome://tracing`.
+    pub fn dump_trace(&mut self) -> Result<String> {
+        let id = self.send(Opcode::DumpTrace, Vec::new())?;
+        let resp = self.recv()?;
+        if resp.request_id != id {
+            bail!("response id {} for request {id}", resp.request_id);
+        }
+        if resp.status != Status::Ok {
+            bail!("trace dump failed: {} {}", resp.status, resp.message());
+        }
+        Ok(resp.message())
+    }
+
     /// Resilience counters: per-pool queue depths, shed/expired counts,
     /// degraded-mode state (protocol v3).
     pub fn health(&mut self) -> Result<HealthReport> {
@@ -370,12 +400,39 @@ pub struct RetryingClient {
     conn: Option<Client>,
     rng: Pcg32,
     next_id: u64,
+    /// Wire attempts made over this client's lifetime (first tries +
+    /// retries). Retries may land on fresh connections and even a
+    /// different server replica, so the server cannot correlate them —
+    /// the client is the only place retry pressure is countable
+    /// (`docs/observability.md`).
+    attempts_total: u64,
+    /// The subset of `attempts_total` that re-tried an earlier attempt
+    /// of the same logical request.
+    retries_total: u64,
 }
 
 impl RetryingClient {
     /// Lazily connecting — the first attempt dials.
     pub fn new(addr: SocketAddr, policy: RetryPolicy, seed: u64) -> RetryingClient {
-        RetryingClient { addr, policy, conn: None, rng: Pcg32::new(seed), next_id: 0 }
+        RetryingClient {
+            addr,
+            policy,
+            conn: None,
+            rng: Pcg32::new(seed),
+            next_id: 0,
+            attempts_total: 0,
+            retries_total: 0,
+        }
+    }
+
+    /// Total wire attempts this client has made (first tries + retries).
+    pub fn attempts_total(&self) -> u64 {
+        self.attempts_total
+    }
+
+    /// Wire attempts that were retries of an earlier logical request.
+    pub fn retries_total(&self) -> u64 {
+        self.retries_total
     }
 
     /// One logical inference: up to `max_attempts` tries, backoff with
@@ -395,6 +452,10 @@ impl RetryingClient {
         let mut attempts = 0u32;
         loop {
             attempts += 1;
+            self.attempts_total += 1;
+            if attempts > 1 {
+                self.retries_total += 1;
+            }
             let outcome = self.attempt(id, backend, model, qos, x);
             match outcome {
                 Ok(reply) => {
@@ -962,5 +1023,12 @@ mod tests {
             .infer_qos(BACKEND_ANY, "", Qos::NONE, &[0.0])
             .expect_err("no server — must exhaust retries");
         assert!(format!("{err:#}").contains("after 3 attempts"), "{err:#}");
+        // Counter semantics: 3 attempts, of which 2 were retries.
+        assert_eq!(c.attempts_total(), 3);
+        assert_eq!(c.retries_total(), 2);
+        // A second logical request keeps accumulating.
+        let _ = c.infer_qos(BACKEND_ANY, "", Qos::NONE, &[0.0]);
+        assert_eq!(c.attempts_total(), 6);
+        assert_eq!(c.retries_total(), 4);
     }
 }

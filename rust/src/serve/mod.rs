@@ -30,6 +30,13 @@
 //!   identical to the monolithic forward — docs/pipelined-engine.md);
 //! * [`client`] — blocking model-aware client and the open/closed-loop
 //!   load generator behind `edgemlp loadgen` and `BENCH_serving.json`.
+//!
+//! Observability rides on top of this subsystem: the server threads a
+//! [`crate::obs::TraceRecorder`] through the coordinator and the
+//! pipeline stages (exported by the v4 `DumpTrace` opcode), renders
+//! Prometheus text via `StatsV2` or the `--metrics-addr` sidecar, and
+//! appends modeled energy figures to `Stats` — see [`crate::obs`] and
+//! `docs/observability.md`.
 
 pub mod client;
 pub mod pipeline_backend;
@@ -42,7 +49,8 @@ pub use client::{
     ModelReport, RetryPolicy, RetryingClient, SloPoint,
 };
 pub use pipeline_backend::{
-    pipeline_cpu_factory, pipeline_fpga_factory, PipelineCpuBackend, PipelineFpgaBackend,
+    pipeline_cpu_factory, pipeline_cpu_factory_traced, pipeline_fpga_factory,
+    pipeline_fpga_factory_traced, PipelineCpuBackend, PipelineFpgaBackend,
     SwappablePipelineCpuBackend, SwappablePipelineFpgaBackend,
 };
 pub use registry::{

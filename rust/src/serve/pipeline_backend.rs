@@ -36,6 +36,7 @@ use crate::fpga::stats::CycleStats;
 use crate::nn::kernels::pipeline::{StageError, StageFn, StagePipeline, StageSnapshot};
 use crate::nn::tensor::Matrix;
 use crate::nn::Mlp;
+use crate::obs::trace::TraceRecorder;
 use anyhow::{bail, Result};
 use std::sync::Arc;
 
@@ -156,6 +157,13 @@ pub struct PipelineCpuBackend {
 
 impl PipelineCpuBackend {
     pub fn new(mlp: Mlp, depth: usize) -> Self {
+        Self::new_traced(mlp, depth, None)
+    }
+
+    /// [`PipelineCpuBackend::new`] with a trace recorder: each layer
+    /// stage emits a `"run"` span per chunk onto track
+    /// `"cpu-pipe/layer<i>"`.
+    pub fn new_traced(mlp: Mlp, depth: usize, tracer: Option<Arc<TraceRecorder>>) -> Self {
         let mut stages: Vec<(String, StageFn<CpuJob>)> = Vec::with_capacity(mlp.layers.len());
         for (i, layer) in mlp.layers.iter().enumerate() {
             // The stage thread owns its layer's weights: the clone moves
@@ -170,7 +178,7 @@ impl PipelineCpuBackend {
         PipelineCpuBackend {
             mlp,
             name: "pipeline".into(),
-            pipe: StagePipeline::new("cpu-pipe", depth, stages),
+            pipe: StagePipeline::new_traced("cpu-pipe", depth, stages, tracer),
             staging: Matrix::zeros(0, 0),
             free: Vec::new(),
         }
@@ -226,6 +234,17 @@ pub struct PipelineFpgaBackend {
 
 impl PipelineFpgaBackend {
     pub fn new(accel: Accelerator, depth: usize) -> Self {
+        Self::new_traced(accel, depth, None)
+    }
+
+    /// [`PipelineFpgaBackend::new`] with a trace recorder: each layer
+    /// stage emits a `"run"` span per chunk onto track
+    /// `"fpga-pipe/layer<i>"`.
+    pub fn new_traced(
+        accel: Accelerator,
+        depth: usize,
+        tracer: Option<Arc<TraceRecorder>>,
+    ) -> Self {
         let n_layers = accel.model.layers.len();
         let mut stages: Vec<(String, StageFn<SpxJob>)> = Vec::with_capacity(n_layers);
         for (i, layer) in accel.model.layers.iter().enumerate() {
@@ -238,7 +257,7 @@ impl PipelineFpgaBackend {
         }
         PipelineFpgaBackend {
             name: "pipeline-fpga".into(),
-            pipe: StagePipeline::new("fpga-pipe", depth, stages),
+            pipe: StagePipeline::new_traced("fpga-pipe", depth, stages, tracer),
             staging: Matrix::zeros(0, 0),
             free: Vec::new(),
             accel,
@@ -297,20 +316,36 @@ pub struct SwappablePipelineCpuBackend {
     slot: Arc<ModelSlot>,
     depth: usize,
     seen: u64,
+    tracer: Option<Arc<TraceRecorder>>,
     inner: PipelineCpuBackend,
 }
 
 impl SwappablePipelineCpuBackend {
     pub fn new(slot: Arc<ModelSlot>, depth: usize) -> Self {
+        Self::new_traced(slot, depth, None)
+    }
+
+    /// Trace-capable variant; the recorder survives swaps (each rebuilt
+    /// pipeline keeps emitting onto the same ring).
+    pub fn new_traced(
+        slot: Arc<ModelSlot>,
+        depth: usize,
+        tracer: Option<Arc<TraceRecorder>>,
+    ) -> Self {
         let seen = slot.generation();
-        let inner = PipelineCpuBackend::new(slot.active().mlp.clone(), depth);
-        SwappablePipelineCpuBackend { slot, depth, seen, inner }
+        let inner =
+            PipelineCpuBackend::new_traced(slot.active().mlp.clone(), depth, tracer.clone());
+        SwappablePipelineCpuBackend { slot, depth, seen, tracer, inner }
     }
 
     fn refresh(&mut self) {
         let generation = self.slot.generation();
         if generation != self.seen {
-            self.inner = PipelineCpuBackend::new(self.slot.active().mlp.clone(), self.depth);
+            self.inner = PipelineCpuBackend::new_traced(
+                self.slot.active().mlp.clone(),
+                self.depth,
+                self.tracer.clone(),
+            );
             self.seen = generation;
         }
     }
@@ -341,22 +376,33 @@ pub struct SwappablePipelineFpgaBackend {
     config: AccelConfig,
     depth: usize,
     seen: u64,
+    tracer: Option<Arc<TraceRecorder>>,
     inner: PipelineFpgaBackend,
 }
 
 impl SwappablePipelineFpgaBackend {
     pub fn new(slot: Arc<ModelSlot>, config: AccelConfig, depth: usize) -> Self {
+        Self::new_traced(slot, config, depth, None)
+    }
+
+    /// Trace-capable variant; the recorder survives swaps.
+    pub fn new_traced(
+        slot: Arc<ModelSlot>,
+        config: AccelConfig,
+        depth: usize,
+        tracer: Option<Arc<TraceRecorder>>,
+    ) -> Self {
         let seen = slot.generation();
         let accel = Accelerator::new(slot.active().quantized.clone(), config);
-        let inner = PipelineFpgaBackend::new(accel, depth);
-        SwappablePipelineFpgaBackend { slot, config, depth, seen, inner }
+        let inner = PipelineFpgaBackend::new_traced(accel, depth, tracer.clone());
+        SwappablePipelineFpgaBackend { slot, config, depth, seen, tracer, inner }
     }
 
     fn refresh(&mut self) {
         let generation = self.slot.generation();
         if generation != self.seen {
             let accel = Accelerator::new(self.slot.active().quantized.clone(), self.config);
-            self.inner = PipelineFpgaBackend::new(accel, self.depth);
+            self.inner = PipelineFpgaBackend::new_traced(accel, self.depth, self.tracer.clone());
             self.seen = generation;
         }
     }
@@ -384,8 +430,22 @@ impl Backend for SwappablePipelineFpgaBackend {
 /// Replicable coordinator factory for slot-following stage-pipelined
 /// CPU workers.
 pub fn pipeline_cpu_factory(slot: Arc<ModelSlot>, depth: usize) -> SharedBackendFactory {
+    pipeline_cpu_factory_traced(slot, depth, None)
+}
+
+/// [`pipeline_cpu_factory`] with a trace recorder shared by every
+/// replica the coordinator builds from this factory.
+pub fn pipeline_cpu_factory_traced(
+    slot: Arc<ModelSlot>,
+    depth: usize,
+    tracer: Option<Arc<TraceRecorder>>,
+) -> SharedBackendFactory {
     Arc::new(move || {
-        Ok(Box::new(SwappablePipelineCpuBackend::new(slot.clone(), depth)) as Box<dyn Backend>)
+        Ok(Box::new(SwappablePipelineCpuBackend::new_traced(
+            slot.clone(),
+            depth,
+            tracer.clone(),
+        )) as Box<dyn Backend>)
     })
 }
 
@@ -396,9 +456,24 @@ pub fn pipeline_fpga_factory(
     config: AccelConfig,
     depth: usize,
 ) -> SharedBackendFactory {
+    pipeline_fpga_factory_traced(slot, config, depth, None)
+}
+
+/// [`pipeline_fpga_factory`] with a trace recorder shared by every
+/// replica the coordinator builds from this factory.
+pub fn pipeline_fpga_factory_traced(
+    slot: Arc<ModelSlot>,
+    config: AccelConfig,
+    depth: usize,
+    tracer: Option<Arc<TraceRecorder>>,
+) -> SharedBackendFactory {
     Arc::new(move || {
-        Ok(Box::new(SwappablePipelineFpgaBackend::new(slot.clone(), config, depth))
-            as Box<dyn Backend>)
+        Ok(Box::new(SwappablePipelineFpgaBackend::new_traced(
+            slot.clone(),
+            config,
+            depth,
+            tracer.clone(),
+        )) as Box<dyn Backend>)
     })
 }
 

@@ -24,7 +24,7 @@
 //! pool limit are answered with a `Status::Busy` error frame and
 //! dropped.
 
-use super::pipeline_backend::{pipeline_cpu_factory, pipeline_fpga_factory};
+use super::pipeline_backend::{pipeline_cpu_factory_traced, pipeline_fpga_factory_traced};
 use super::registry::{ModelRegistry, ModelSlot, SwapError};
 use super::wire::{
     self, Frame, HealthReport, ModelInfo, Opcode, PoolHealth, ReadError, Status, BACKEND_ANY,
@@ -35,6 +35,8 @@ use crate::coordinator::request::{FailureKind, InferResult};
 use crate::coordinator::server::{Coordinator, PoolSpec, RequestQos, SubmitError};
 use crate::coordinator::CoordinatorConfig;
 use crate::fpga::accelerator::AccelConfig;
+use crate::fpga::power::EnergyModel;
+use crate::obs::{render_energy_text, render_prometheus, MetricsHttp, TraceRecorder};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::io::{BufReader, BufWriter, Write};
@@ -46,7 +48,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// Server knobs.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct ServeConfig {
     /// Connection-pool bound; further connections get `Status::Busy`.
     pub max_conns: usize,
@@ -62,6 +64,14 @@ pub struct ServeConfig {
     pub read_timeout: Duration,
     /// Degraded-mode hysteresis; every model's controller shares it.
     pub degrade: DegradePolicy,
+    /// Bind address for the Prometheus exposition sidecar
+    /// (`GET /metrics`); `None` = no sidecar. The same text is always
+    /// reachable in-band via the `StatsV2` opcode.
+    pub metrics_addr: Option<String>,
+    /// Request-lifecycle trace ring capacity, in events; 0 disables
+    /// tracing entirely (the recorder still exists so `DumpTrace`
+    /// answers an empty trace instead of an error).
+    pub trace_capacity: usize,
 }
 
 impl Default for ServeConfig {
@@ -72,6 +82,8 @@ impl Default for ServeConfig {
             response_timeout: Duration::from_secs(30),
             read_timeout: Duration::from_secs(30),
             degrade: DegradePolicy::default(),
+            metrics_addr: None,
+            trace_capacity: 8192,
         }
     }
 }
@@ -180,6 +192,16 @@ struct Shared {
     /// Connections closed by the reader deadline (slowloris defense);
     /// surfaced by the `Health` opcode.
     read_timeouts: AtomicU64,
+    /// Request-lifecycle trace ring shared with the coordinator and
+    /// pipeline stages; the `DumpTrace` opcode exports it.
+    tracer: Arc<TraceRecorder>,
+    /// Per-operation energy coefficients used to convert aggregate
+    /// [`crate::fpga::accelerator::CycleStats`] into joules on the
+    /// `Stats` / `StatsV2` responses and the `/metrics` sidecar.
+    energy: EnergyModel,
+    /// Server start, the origin of `edgemlp_uptime_seconds` and the
+    /// window for average-power figures.
+    start: Instant,
 }
 
 /// A running server. [`Server::shutdown`] (or drop) stops accepting,
@@ -189,6 +211,8 @@ pub struct Server {
     local_addr: SocketAddr,
     acceptor: Option<JoinHandle<()>>,
     conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    /// Prometheus exposition sidecar, when `metrics_addr` was set.
+    metrics_http: Option<MetricsHttp>,
 }
 
 impl Server {
@@ -207,6 +231,13 @@ impl Server {
         }
         engine.serve.degrade.validate().map_err(|e| anyhow::anyhow!(e))?;
         let replicas = engine.replicas.max(1);
+        // One trace ring for the whole engine: connection handlers, the
+        // coordinator's queues/workers, and every pipeline stage write
+        // into it. Capacity 0 keeps the recorder (DumpTrace still
+        // answers) but disables recording.
+        let tracer = TraceRecorder::new(engine.serve.trace_capacity);
+        let pool_tracer =
+            if engine.serve.trace_capacity > 0 { Some(tracer.clone()) } else { None };
         let mut pools = Vec::new();
         let mut routes = BTreeMap::new();
         for slot in registry.slots() {
@@ -218,10 +249,15 @@ impl Server {
                         super::registry::swappable_fpga_factory(slot.clone(), *config)
                     }
                     BackendKind::PipelineCpu { depth } => {
-                        pipeline_cpu_factory(slot.clone(), *depth)
+                        pipeline_cpu_factory_traced(slot.clone(), *depth, pool_tracer.clone())
                     }
                     BackendKind::PipelineFpga { config, depth } => {
-                        pipeline_fpga_factory(slot.clone(), *config, *depth)
+                        pipeline_fpga_factory_traced(
+                            slot.clone(),
+                            *config,
+                            *depth,
+                            pool_tracer.clone(),
+                        )
                     }
                 };
                 indices.push(pools.len());
@@ -252,9 +288,9 @@ impl Server {
                 },
             );
         }
-        let coord = Coordinator::start(pools, engine.coordinator)?;
+        let coord = Coordinator::start_traced(pools, engine.coordinator, pool_tracer)?;
         let default_model = registry.default_slot_name().to_string();
-        Self::start_inner(coord, registry, routes, default_model, addr, engine.serve)
+        Self::start_inner(coord, registry, routes, default_model, addr, engine.serve, tracer)
     }
 
     /// Bind `addr` (use port 0 for an ephemeral port) and start
@@ -284,7 +320,10 @@ impl Server {
             },
         );
         let default_model = registry.default_slot_name().to_string();
-        Self::start_inner(coord, registry, routes, default_model, addr, config)
+        // A caller-built coordinator carries no tracer, so only the
+        // connection-level events record on this path.
+        let tracer = TraceRecorder::new(config.trace_capacity);
+        Self::start_inner(coord, registry, routes, default_model, addr, config, tracer)
     }
 
     fn start_inner(
@@ -294,9 +333,11 @@ impl Server {
         default_model: String,
         addr: &str,
         config: ServeConfig,
+        tracer: Arc<TraceRecorder>,
     ) -> Result<Server> {
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
         let local_addr = listener.local_addr()?;
+        let metrics_addr = config.metrics_addr.clone();
         let shared = Arc::new(Shared {
             coord,
             registry,
@@ -307,7 +348,22 @@ impl Server {
             active_conns: AtomicUsize::new(0),
             conn_seq: AtomicUsize::new(0),
             read_timeouts: AtomicU64::new(0),
+            tracer,
+            energy: EnergyModel::default_fpga(),
+            start: Instant::now(),
         });
+        let metrics_http = match metrics_addr {
+            Some(addr) => {
+                let render_shared = shared.clone();
+                let render: Arc<dyn Fn() -> String + Send + Sync> =
+                    Arc::new(move || render_metrics_text(&render_shared));
+                Some(
+                    MetricsHttp::start(&addr, render)
+                        .with_context(|| format!("bind metrics sidecar {addr}"))?,
+                )
+            }
+            None => None,
+        };
         let conns = Arc::new(Mutex::new(Vec::new()));
         let acceptor = {
             let shared = shared.clone();
@@ -317,7 +373,7 @@ impl Server {
                 .spawn(move || accept_loop(listener, shared, conns))
                 .context("spawn acceptor")?
         };
-        Ok(Server { shared, local_addr, acceptor: Some(acceptor), conns })
+        Ok(Server { shared, local_addr, acceptor: Some(acceptor), conns, metrics_http })
     }
 
     /// The bound address (resolves ephemeral ports).
@@ -330,6 +386,17 @@ impl Server {
         self.shared.coord.metrics()
     }
 
+    /// The request-lifecycle trace ring (what `DumpTrace` exports).
+    pub fn tracer(&self) -> Arc<TraceRecorder> {
+        self.shared.tracer.clone()
+    }
+
+    /// Bound address of the Prometheus sidecar, when one is running
+    /// (resolves ephemeral ports).
+    pub fn metrics_local_addr(&self) -> Option<SocketAddr> {
+        self.metrics_http.as_ref().map(|m| m.local_addr())
+    }
+
     /// Stop accepting, wind down connection threads (their in-flight
     /// responses are still written), close the coordinator queues and
     /// join everything.
@@ -339,6 +406,9 @@ impl Server {
 
     fn stop_and_join(&mut self) {
         self.shared.stop.store(true, Ordering::SeqCst);
+        if let Some(m) = self.metrics_http.take() {
+            m.shutdown();
+        }
         // Unblock the acceptor with a throwaway connection. A bind to
         // 0.0.0.0/:: is not connectable on every platform — aim the
         // wakeup at loopback on the bound port instead.
@@ -412,6 +482,10 @@ fn accept_loop(
             // the frame survives (see `drain_then_close`). No request
             // was read, so the frame goes out at MIN_VERSION — the one
             // framing every supported client can parse.
+            shared.coord.metrics().record_busy_rejected();
+            if shared.tracer.enabled() {
+                shared.tracer.instant("conn", "busy_reject", None, 0);
+            }
             {
                 let mut w = BufWriter::new(&stream);
                 let frame =
@@ -464,6 +538,9 @@ enum Outgoing {
 }
 
 fn handle_connection(stream: TcpStream, shared: &Shared) {
+    if shared.tracer.enabled() {
+        shared.tracer.instant("conn", "accept", None, 0);
+    }
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(READ_TICK));
     let write_stream = match stream.try_clone() {
@@ -495,6 +572,9 @@ fn handle_connection(stream: TcpStream, shared: &Shared) {
             Some(deadline),
         ) {
             Ok(frame) => {
+                if shared.tracer.enabled() {
+                    shared.tracer.instant("conn", "decode", None, frame.request_id);
+                }
                 if !dispatch(frame, &tx, shared) {
                     break;
                 }
@@ -523,6 +603,10 @@ fn handle_connection(stream: TcpStream, shared: &Shared) {
                 // every supported client can parse it (a v1-only
                 // client would reject a v2 frame and lose the
                 // diagnostic).
+                shared.coord.metrics().record_bad_request(framing_cause(&msg));
+                if shared.tracer.enabled() {
+                    shared.tracer.instant("conn", "bad_request", None, 0);
+                }
                 let _ = tx.send(Outgoing::Ready(
                     Frame::error(Opcode::Ping, 0, Status::BadRequest, &msg)
                         .at_version(wire::MIN_VERSION),
@@ -669,11 +753,56 @@ fn dispatch(frame: Frame, tx: &Sender<Outgoing>, shared: &Shared) -> bool {
                 shared.active_conns.load(Ordering::SeqCst),
                 snap.render()
             ));
+            text.push_str(&render_energy_text(
+                &shared.energy,
+                &snap,
+                shared.start.elapsed().as_secs_f64(),
+            ));
             Outgoing::Ready(Frame::ok(Opcode::Stats, id, text.into_bytes()))
+        }
+        Opcode::StatsV2 => {
+            if version < 4 {
+                bad_request(
+                    shared,
+                    "version_gate",
+                    Opcode::StatsV2,
+                    id,
+                    "StatsV2 requires protocol v4",
+                )
+            } else {
+                Outgoing::Ready(Frame::ok(
+                    Opcode::StatsV2,
+                    id,
+                    render_metrics_text(shared).into_bytes(),
+                ))
+            }
+        }
+        Opcode::DumpTrace => {
+            if version < 4 {
+                bad_request(
+                    shared,
+                    "version_gate",
+                    Opcode::DumpTrace,
+                    id,
+                    "DumpTrace requires protocol v4",
+                )
+            } else {
+                Outgoing::Ready(Frame::ok(
+                    Opcode::DumpTrace,
+                    id,
+                    shared.tracer.export_chrome_json().into_bytes(),
+                ))
+            }
         }
         Opcode::ListModels => {
             if version < 2 {
-                bad_request(Opcode::ListModels, id, "ListModels requires protocol v2")
+                bad_request(
+                    shared,
+                    "version_gate",
+                    Opcode::ListModels,
+                    id,
+                    "ListModels requires protocol v2",
+                )
             } else {
                 let models: Vec<ModelInfo> = shared
                     .routes
@@ -702,7 +831,7 @@ fn dispatch(frame: Frame, tx: &Sender<Outgoing>, shared: &Shared) -> bool {
             }
         }
         Opcode::SwapModel => match wire::decode_swap(&frame.payload, version) {
-            Err(e) => bad_request(Opcode::SwapModel, id, &e),
+            Err(e) => bad_request(shared, "decode_swap", Opcode::SwapModel, id, &e),
             Ok((slot, source)) => match shared.registry.activate_into(&slot, &source) {
                 Ok((model, generation)) => Outgoing::Ready(Frame::ok(
                     Opcode::SwapModel,
@@ -723,15 +852,17 @@ fn dispatch(frame: Frame, tx: &Sender<Outgoing>, shared: &Shared) -> bool {
                         &e.to_string(),
                     ))
                 }
-                Err(e) => bad_request(Opcode::SwapModel, id, &e.to_string()),
+                Err(e) => bad_request(shared, "swap_rejected", Opcode::SwapModel, id, &e.to_string()),
             },
         },
         Opcode::Health => {
             if version < 3 {
-                bad_request(Opcode::Health, id, "Health requires protocol v3")
+                bad_request(shared, "version_gate", Opcode::Health, id, "Health requires protocol v3")
             } else {
                 let report = health_report(shared);
-                match wire::encode_health(&report) {
+                // Encode at the REQUEST's version: the v4 extension
+                // block would be trailing garbage to a v3 decoder.
+                match wire::encode_health_at(&report, version) {
                     Ok(payload) => Outgoing::Ready(Frame::ok(Opcode::Health, id, payload)),
                     Err(e) => {
                         Outgoing::Ready(Frame::error(Opcode::Health, id, Status::Internal, &e))
@@ -740,7 +871,7 @@ fn dispatch(frame: Frame, tx: &Sender<Outgoing>, shared: &Shared) -> bool {
             }
         }
         Opcode::Infer => match wire::decode_infer(&frame.payload, version) {
-            Err(e) => bad_request(Opcode::Infer, id, &e),
+            Err(e) => bad_request(shared, "decode_infer", Opcode::Infer, id, &e),
             Ok(req) => match resolve_pool(shared, &req.model, req.backend, req.x.len()) {
                 Err(out) => Outgoing::Ready(out.into_frame(Opcode::Infer, id)),
                 Ok(idx) => {
@@ -752,7 +883,7 @@ fn dispatch(frame: Frame, tx: &Sender<Outgoing>, shared: &Shared) -> bool {
             },
         },
         Opcode::InferBatch => match wire::decode_infer_batch(&frame.payload, version) {
-            Err(e) => bad_request(Opcode::InferBatch, id, &e),
+            Err(e) => bad_request(shared, "decode_infer", Opcode::InferBatch, id, &e),
             Ok(req) => {
                 match resolve_pool(shared, &req.model, req.backend, req.samples[0].len()) {
                     Err(out) => Outgoing::Ready(out.into_frame(Opcode::InferBatch, id)),
@@ -804,7 +935,41 @@ fn dispatch(frame: Frame, tx: &Sender<Outgoing>, shared: &Shared) -> bool {
     tx.send(out).is_ok()
 }
 
-fn bad_request(opcode: Opcode, id: u64, msg: &str) -> Outgoing {
+/// Stable cause label for a framing-level protocol error, keyed off the
+/// diagnostic text (`wire::read_frame*`'s messages are the source of
+/// truth; anything unrecognized lands in "framing").
+fn framing_cause(msg: &str) -> &'static str {
+    if msg.contains("magic") {
+        "magic"
+    } else if msg.contains("version") {
+        "version"
+    } else if msg.contains("opcode") {
+        "opcode"
+    } else if msg.contains("status") {
+        "status"
+    } else if msg.contains("exceeds cap") {
+        "payload_cap"
+    } else if msg.contains("mid-frame") {
+        "truncated"
+    } else {
+        "framing"
+    }
+}
+
+/// Answer `Status::BadRequest` and bump the per-cause counter. `cause`
+/// is a low-cardinality stable label (it becomes a Prometheus label
+/// value), NOT the free-form diagnostic.
+fn bad_request(
+    shared: &Shared,
+    cause: &'static str,
+    opcode: Opcode,
+    id: u64,
+    msg: &str,
+) -> Outgoing {
+    shared.coord.metrics().record_bad_request(cause);
+    if shared.tracer.enabled() {
+        shared.tracer.instant("conn", "bad_request", None, id);
+    }
     Outgoing::Ready(Frame::error(opcode, id, Status::BadRequest, msg))
 }
 
@@ -819,6 +984,21 @@ fn request_qos(qos: wire::Qos) -> RequestQos {
             .then(|| Instant::now() + Duration::from_micros(qos.deadline_us)),
         priority: qos.priority.rank(),
     }
+}
+
+/// Render the full Prometheus exposition text — the `/metrics` sidecar
+/// body and the `StatsV2` payload are byte-identical.
+fn render_metrics_text(shared: &Shared) -> String {
+    let snap = shared.coord.metrics().snapshot();
+    let health = health_report(shared);
+    render_prometheus(
+        &snap,
+        &health,
+        &shared.energy,
+        shared.start.elapsed().as_secs_f64(),
+        shared.tracer.len() as u64,
+        shared.tracer.dropped(),
+    )
 }
 
 /// Snapshot the resilience counters for one `Health` response.
@@ -848,6 +1028,8 @@ fn health_report(shared: &Shared) -> HealthReport {
         degraded_transitions: snap.degraded_transitions,
         read_timeouts: shared.read_timeouts.load(Ordering::Relaxed),
         pools,
+        busy_rejected: snap.busy_rejected,
+        bad_requests: snap.bad_requests.clone(),
     }
 }
 
@@ -879,6 +1061,7 @@ fn resolve_pool(
         RouteError(Status::UnknownModel, format!("unknown model '{name}'"))
     })?;
     if dim != route.input_dim {
+        shared.coord.metrics().record_bad_request("input_dim");
         return Err(RouteError(
             Status::BadRequest,
             format!("input dimension {dim} != model '{name}' input {}", route.input_dim),
@@ -961,5 +1144,20 @@ mod tests {
         let c = ServeConfig::default();
         assert!(c.read_timeout >= Duration::from_secs(1), "read deadline too twitchy");
         assert!(c.degrade.validate().is_ok());
+        assert!(c.metrics_addr.is_none(), "no sidecar unless asked");
+        assert!(c.trace_capacity > 0, "tracing should default on");
+    }
+
+    /// The per-cause BadRequest labels must stay stable against the
+    /// exact diagnostics `wire::read_frame*` produces today.
+    #[test]
+    fn framing_causes_match_wire_diagnostics() {
+        assert_eq!(framing_cause("bad magic [58, 4d, 57, 50]"), "magic");
+        assert_eq!(framing_cause("unsupported protocol version 9 (supported 1..=4)"), "version");
+        assert_eq!(framing_cause("unknown opcode 200"), "opcode");
+        assert_eq!(framing_cause("unknown status 77"), "status");
+        assert_eq!(framing_cause("payload length 999 exceeds cap 16"), "payload_cap");
+        assert_eq!(framing_cause("connection closed mid-frame"), "truncated");
+        assert_eq!(framing_cause("something new"), "framing");
     }
 }

@@ -15,11 +15,20 @@
 //! (`u64 deadline_us | u8 priority`, see [`Qos`]), the [`Opcode::Health`]
 //! opcode (per-pool queue depth, shed/expiry counters, degraded-mode
 //! state) and the [`Status::Expired`]/[`Status::Timeout`] statuses.
-//! Version-1 and version-2 frames are still accepted: their payloads
-//! carry no QoS fields and default to "no deadline, normal priority"
-//! (v1 additionally carries no model name and resolves to the server's
-//! default model), and the server answers each request at the version
-//! it arrived with (see `decode_*`'s `version` parameter).
+//! Version 4 adds the observability opcodes — [`Opcode::DumpTrace`]
+//! (Chrome trace-event JSON payload of the server's request-lifecycle
+//! ring buffer) and [`Opcode::StatsV2`] (machine-readable Prometheus
+//! text exposition, the same families `GET /metrics` serves) — and an
+//! extension block on the `Health` response carrying the
+//! busy-rejection and bad-request-by-cause counters. Pre-v4 `Health`
+//! responses omit the extension, so v3 clients decode exactly the
+//! bytes they always did.
+//!
+//! Version-1 through version-3 frames are still accepted: their
+//! payloads carry no QoS fields and default to "no deadline, normal
+//! priority" (v1 additionally carries no model name and resolves to
+//! the server's default model), and the server answers each request at
+//! the version it arrived with (see `decode_*`'s `version` parameter).
 //!
 //! Requests always carry status [`Status::Ok`]; responses echo the
 //! request's opcode, id and version. A non-`Ok` status turns the
@@ -37,7 +46,7 @@ use std::time::Instant;
 pub const MAGIC: [u8; 4] = *b"EMWP";
 /// Current protocol version; bumped on any incompatible frame-layout
 /// change.
-pub const VERSION: u16 = 3;
+pub const VERSION: u16 = 4;
 /// Oldest version still accepted (v1 payloads carry no model names).
 pub const MIN_VERSION: u16 = 1;
 /// Fixed header size in bytes.
@@ -74,8 +83,18 @@ pub enum Opcode {
     /// Enumerate the served models (v2 only).
     ListModels = 5,
     /// Resilience snapshot: per-pool queue depth, shed/expiry counters
-    /// and degraded-mode state (v3 only).
+    /// and degraded-mode state (v3+).
     Health = 6,
+    /// Dump the server's request-lifecycle trace ring buffer. The
+    /// request payload is empty; the response payload is Chrome
+    /// trace-event JSON, loadable in Perfetto / `chrome://tracing`
+    /// (v4 only).
+    DumpTrace = 7,
+    /// Machine-readable metrics snapshot: the response payload is the
+    /// Prometheus text exposition (format 0.0.4) — byte-identical
+    /// families to what the `--metrics-addr` HTTP sidecar serves, so
+    /// wire-only clients aren't second-class (v4 only).
+    StatsV2 = 8,
 }
 
 impl Opcode {
@@ -88,6 +107,8 @@ impl Opcode {
             4 => Some(Opcode::SwapModel),
             5 => Some(Opcode::ListModels),
             6 => Some(Opcode::Health),
+            7 => Some(Opcode::DumpTrace),
+            8 => Some(Opcode::StatsV2),
             _ => None,
         }
     }
@@ -877,14 +898,29 @@ pub struct HealthReport {
     /// Connections closed by the server's read deadline (slowloris).
     pub read_timeouts: u64,
     pub pools: Vec<PoolHealth>,
+    /// Connections turned away with `Busy` at accept time (v4
+    /// extension; 0 when decoding a pre-v4 payload).
+    pub busy_rejected: u64,
+    /// `BadRequest` answers by cause label (v4 extension; empty when
+    /// decoding a pre-v4 payload).
+    pub bad_requests: Vec<(String, u64)>,
 }
 
 /// `Health` response payload: `u8 degraded | u64 transitions |
 /// u64 read_timeouts | u32 count | count × (u16 name_len | name |
-/// u32 depth | u32 capacity | u32 replicas | u64 shed | u64 expired)`.
-/// The request payload is empty.
+/// u32 depth | u32 capacity | u32 replicas | u64 shed | u64 expired)`,
+/// followed (v4+ framing only) by an extension block
+/// `u64 busy_rejected | u32 cause_count | count × (u16 len | cause |
+/// u64 n)`. The request payload is empty.
 pub fn encode_health(report: &HealthReport) -> Result<Vec<u8>, String> {
-    let mut out = Vec::with_capacity(21 + report.pools.len() * 32);
+    encode_health_at(report, VERSION)
+}
+
+/// [`encode_health`] framed for `version`: pre-v4 payloads omit the
+/// extension block so old clients decode exactly the bytes they
+/// always did.
+pub fn encode_health_at(report: &HealthReport, version: u16) -> Result<Vec<u8>, String> {
+    let mut out = Vec::with_capacity(33 + report.pools.len() * 32);
     out.push(report.degraded as u8);
     out.extend_from_slice(&report.degraded_transitions.to_le_bytes());
     out.extend_from_slice(&report.read_timeouts.to_le_bytes());
@@ -896,6 +932,14 @@ pub fn encode_health(report: &HealthReport) -> Result<Vec<u8>, String> {
         out.extend_from_slice(&p.replicas.to_le_bytes());
         out.extend_from_slice(&p.shed.to_le_bytes());
         out.extend_from_slice(&p.expired.to_le_bytes());
+    }
+    if version >= 4 {
+        out.extend_from_slice(&report.busy_rejected.to_le_bytes());
+        out.extend_from_slice(&(report.bad_requests.len() as u32).to_le_bytes());
+        for (cause, n) in &report.bad_requests {
+            push_name(&mut out, cause)?;
+            out.extend_from_slice(&n.to_le_bytes());
+        }
     }
     Ok(out)
 }
@@ -926,8 +970,33 @@ pub fn decode_health(payload: &[u8]) -> Result<HealthReport, String> {
             expired: b.u64()?,
         });
     }
+    // v4 extension block, present iff bytes remain after the pools —
+    // pre-v4 payloads end exactly here.
+    let (busy_rejected, bad_requests) = if b.remaining() > 0 {
+        let busy = b.u64()?;
+        let cause_count = b.u32()? as usize;
+        // Each entry is at least 10 bytes; reject a hostile count
+        // before allocating for it.
+        if (cause_count as u64) * 10 > b.remaining() as u64 {
+            return Err(format!("cause count {cause_count} exceeds payload size"));
+        }
+        let mut causes = Vec::with_capacity(cause_count);
+        for _ in 0..cause_count {
+            causes.push((b.name()?, b.u64()?));
+        }
+        (busy, causes)
+    } else {
+        (0, Vec::new())
+    };
     b.finish()?;
-    Ok(HealthReport { degraded, degraded_transitions, read_timeouts, pools })
+    Ok(HealthReport {
+        degraded,
+        degraded_transitions,
+        read_timeouts,
+        pools,
+        busy_rejected,
+        bad_requests,
+    })
 }
 
 #[cfg(test)]
@@ -978,7 +1047,7 @@ mod tests {
 
     #[test]
     fn wrong_version_rejected() {
-        for bad in [0u16, 4, 99] {
+        for bad in [0u16, 5, 99] {
             let mut buf = Vec::new();
             write_frame(&mut buf, &Frame::ok(Opcode::Ping, 0, Vec::new())).unwrap();
             buf[4..6].copy_from_slice(&bad.to_le_bytes());
@@ -1309,6 +1378,8 @@ mod tests {
                     expired: 0,
                 },
             ],
+            busy_rejected: 5,
+            bad_requests: vec![("magic".into(), 2), ("version".into(), 1)],
         };
         let payload = encode_health(&report).unwrap();
         assert_eq!(decode_health(&payload).unwrap(), report);
@@ -1322,10 +1393,66 @@ mod tests {
         let mut p = encode_health(&report).unwrap();
         p[0] = 7;
         assert!(decode_health(&p).is_err());
-        // Truncation anywhere is an error, not a panic.
-        let good = encode_health(&report).unwrap();
-        for cut in 0..good.len() {
-            assert!(decode_health(&good[..cut]).is_err(), "cut at {cut}");
+        // Truncating the v3 base layout is always an error, not a
+        // panic. (Truncating a v4 payload exactly at the extension
+        // boundary yields a valid v3 payload by design — that case is
+        // pinned in `health_v4_extension_is_version_gated`.)
+        let base = encode_health_at(&report, 3).unwrap();
+        for cut in 0..base.len() {
+            assert!(decode_health(&base[..cut]).is_err(), "cut at {cut}");
         }
+        // Truncating *inside* the extension block is also an error.
+        let full = encode_health(&report).unwrap();
+        for cut in base.len() + 1..full.len() {
+            assert!(decode_health(&full[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn health_v4_extension_is_version_gated() {
+        let report = HealthReport {
+            degraded: false,
+            degraded_transitions: 1,
+            read_timeouts: 0,
+            pools: vec![PoolHealth {
+                name: "cpu/default".into(),
+                queue_depth: 1,
+                queue_capacity: 64,
+                replicas: 1,
+                shed: 0,
+                expired: 0,
+            }],
+            busy_rejected: 9,
+            bad_requests: vec![("opcode".into(), 4)],
+        };
+        // Pre-v4 framing omits the extension entirely; decoding it
+        // reports zeroed extension fields.
+        let v3 = encode_health_at(&report, 3).unwrap();
+        let back = decode_health(&v3).unwrap();
+        assert_eq!(back.busy_rejected, 0);
+        assert!(back.bad_requests.is_empty());
+        assert_eq!(back.pools, report.pools);
+        // v4 framing carries it, and the v4 payload is a strict
+        // extension: its prefix is byte-identical to the v3 payload.
+        let v4 = encode_health_at(&report, 4).unwrap();
+        assert_eq!(&v4[..v3.len()], &v3[..]);
+        assert_eq!(decode_health(&v4).unwrap(), report);
+        // Hostile cause count rejected before allocation.
+        let mut p = v3.clone();
+        p.extend_from_slice(&0u64.to_le_bytes());
+        p.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_health(&p).is_err());
+    }
+
+    #[test]
+    fn observability_opcodes_round_trip_at_v4() {
+        for (op, byte) in [(Opcode::DumpTrace, 7u8), (Opcode::StatsV2, 8u8)] {
+            assert_eq!(op as u8, byte);
+            assert_eq!(Opcode::from_u8(byte), Some(op));
+            let f = Frame::ok(op, 11, b"{}".to_vec());
+            assert_eq!(f.version, 4, "Frame::ok must stamp the current version");
+            assert_eq!(roundtrip(&f), f);
+        }
+        assert_eq!(Opcode::from_u8(9), None);
     }
 }

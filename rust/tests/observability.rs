@@ -1,0 +1,498 @@
+//! Integration: the observability surface end-to-end over real TCP —
+//! Prometheus sidecar scrapes (including racing a live load), the
+//! `StatsV2` and `DumpTrace` v4 opcodes, version gating for pre-v4
+//! clients, the Health v4 extension counters, trace-ring overflow
+//! semantics, and energy figures consistent with the `EnergyModel`
+//! applied to the server's aggregate cycle stats.
+
+use edgemlp::coordinator::{BatchPolicy, CoordinatorConfig};
+use edgemlp::fpga::accelerator::AccelConfig;
+use edgemlp::fpga::power::EnergyModel;
+use edgemlp::nn::activations::Activation;
+use edgemlp::nn::mlp::{Mlp, MlpConfig};
+use edgemlp::obs::pool_energy;
+use edgemlp::quant::spx::SpxConfig;
+use edgemlp::serve::wire;
+use edgemlp::serve::{
+    run_loadgen, BackendKind, Client, EngineConfig, InferReply, LoadGenConfig, ModelRegistry,
+    ServeConfig, Server, Status,
+};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+fn mnist_shaped(seed: u64) -> Mlp {
+    let mut rng = edgemlp::util::rng::Pcg32::new(seed);
+    Mlp::new(
+        MlpConfig {
+            sizes: vec![784, 32, 10],
+            activations: vec![Activation::Sigmoid, Activation::Sigmoid],
+        },
+        &mut rng,
+    )
+}
+
+fn start_engine(backends: Vec<BackendKind>, serve: ServeConfig) -> Server {
+    let registry = ModelRegistry::new("default", mnist_shaped(1), SpxConfig::sp2(5));
+    Server::serve(
+        registry,
+        "127.0.0.1:0",
+        EngineConfig {
+            replicas: 1,
+            backends,
+            coordinator: CoordinatorConfig {
+                queue_capacity: 1024,
+                policy: BatchPolicy::windowed(16, Duration::from_millis(1)),
+            },
+            serve,
+        },
+    )
+    .unwrap()
+}
+
+fn probe() -> Vec<f32> {
+    vec![0.37f32; 784]
+}
+
+/// One HTTP/1.1 scrape of the sidecar; returns (status line, body).
+fn scrape(addr: std::net::SocketAddr) -> (String, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.write_all(b"GET /metrics HTTP/1.1\r\nHost: edgemlp\r\nConnection: close\r\n\r\n")
+        .unwrap();
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).unwrap();
+    let text = String::from_utf8(buf).unwrap();
+    let (head, body) = text.split_once("\r\n\r\n").expect("no header/body split");
+    (head.lines().next().unwrap_or("").to_string(), body.to_string())
+}
+
+fn sample_value(line: &str) -> f64 {
+    line.rsplit(' ').next().unwrap().parse().unwrap()
+}
+
+/// Families the exposition must always carry, regardless of backends.
+const REQUIRED_FAMILIES: &[&str] = &[
+    "edgemlp_uptime_seconds",
+    "edgemlp_degraded",
+    "edgemlp_degraded_transitions_total",
+    "edgemlp_read_timeouts_total",
+    "edgemlp_busy_rejected_total",
+    "edgemlp_shed_total",
+    "edgemlp_expired_total",
+    "edgemlp_trace_buffer_events",
+    "edgemlp_trace_dropped_total",
+    "edgemlp_static_power_watts",
+    "edgemlp_pool_requests_total",
+    "edgemlp_pool_samples_total",
+    "edgemlp_pool_batches_total",
+    "edgemlp_pool_queue_depth",
+    "edgemlp_pool_queue_capacity",
+    "edgemlp_pool_replicas",
+    "edgemlp_request_latency_seconds",
+];
+
+/// Structural validity: required families present, every `# HELP`
+/// immediately followed by its `# TYPE`, histogram buckets cumulative
+/// and capped by `_count`. Mirrors `tools/check_metrics.py` so CI and
+/// the test suite enforce the same contract.
+fn assert_valid_exposition(text: &str) {
+    assert!(text.ends_with('\n'), "exposition must end with a newline");
+    for fam in REQUIRED_FAMILIES {
+        assert!(
+            text.contains(&format!("# TYPE {fam} ")),
+            "missing family {fam}\n---\n{text}"
+        );
+    }
+    let lines: Vec<&str> = text.lines().collect();
+    for (i, line) in lines.iter().enumerate() {
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let fam = rest.split(' ').next().unwrap();
+            let next = lines.get(i + 1).copied().unwrap_or("");
+            assert!(
+                next.starts_with(&format!("# TYPE {fam} ")),
+                "HELP for {fam} not followed by its TYPE: {next:?}"
+            );
+        }
+    }
+    // Histogram invariants per pool: buckets non-decreasing in le
+    // order, +Inf bucket equal to the series count.
+    let mut buckets: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    let mut counts: BTreeMap<String, f64> = BTreeMap::new();
+    for line in &lines {
+        if let Some(rest) = line.strip_prefix("edgemlp_request_latency_seconds_bucket{pool=\"") {
+            let pool = rest.split('"').next().unwrap().to_string();
+            buckets.entry(pool).or_default().push(sample_value(line));
+        } else if let Some(rest) =
+            line.strip_prefix("edgemlp_request_latency_seconds_count{pool=\"")
+        {
+            let pool = rest.split('"').next().unwrap().to_string();
+            counts.insert(pool, sample_value(line));
+        }
+    }
+    assert!(!buckets.is_empty(), "no latency histogram rendered");
+    for (pool, vs) in &buckets {
+        for w in vs.windows(2) {
+            assert!(w[1] >= w[0], "pool {pool}: buckets not cumulative: {vs:?}");
+        }
+        let count = counts.get(pool).unwrap_or_else(|| panic!("no _count for pool {pool}"));
+        assert_eq!(*vs.last().unwrap(), *count, "pool {pool}: +Inf bucket != count");
+    }
+}
+
+/// The sidecar serves valid exposition while a load generator hammers
+/// the engine — every scrape during the run must be a complete,
+/// internally consistent snapshot (no torn reads, no 5xx).
+#[test]
+fn sidecar_scrapes_stay_valid_under_load() {
+    let server = start_engine(
+        vec![BackendKind::Cpu, BackendKind::PipelineCpu { depth: 3 }],
+        ServeConfig { metrics_addr: Some("127.0.0.1:0".into()), ..ServeConfig::default() },
+    );
+    let addr = server.local_addr();
+    let maddr = server.metrics_local_addr().expect("sidecar did not start");
+
+    let load = std::thread::spawn(move || {
+        run_loadgen(
+            addr,
+            LoadGenConfig {
+                requests: 3000,
+                connections: 4,
+                backend: edgemlp::serve::BACKEND_ANY,
+                dim: 784,
+                pipeline: 8,
+                ..LoadGenConfig::default()
+            },
+        )
+        .unwrap()
+    });
+
+    let mut nonzero_requests_seen = false;
+    for round in 0..20 {
+        let (status, body) = scrape(maddr);
+        assert!(status.contains("200"), "scrape {round}: {status}");
+        assert_valid_exposition(&body);
+        if body
+            .lines()
+            .any(|l| l.starts_with("edgemlp_pool_requests_total{") && sample_value(l) > 0.0)
+        {
+            nonzero_requests_seen = true;
+        }
+    }
+    let report = load.join().unwrap();
+    assert_eq!(report.ok, report.sent, "{report:?}");
+
+    // A post-run scrape accounts for everything the loadgen sent.
+    let (_, body) = scrape(maddr);
+    assert_valid_exposition(&body);
+    let total: f64 = body
+        .lines()
+        .filter(|l| l.starts_with("edgemlp_pool_requests_total{"))
+        .map(sample_value)
+        .sum();
+    assert!(total >= report.sent as f64, "metrics lost requests: {total} < {}", report.sent);
+    assert!(nonzero_requests_seen, "no scrape ever observed live traffic");
+    server.shutdown();
+}
+
+/// An unknown path is 404, and the sidecar keeps serving afterwards.
+#[test]
+fn sidecar_unknown_path_is_404() {
+    let server = start_engine(
+        vec![BackendKind::Cpu],
+        ServeConfig { metrics_addr: Some("127.0.0.1:0".into()), ..ServeConfig::default() },
+    );
+    let maddr = server.metrics_local_addr().unwrap();
+    let mut s = TcpStream::connect(maddr).unwrap();
+    s.write_all(b"GET /nope HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n").unwrap();
+    let mut buf = String::new();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.read_to_string(&mut buf).unwrap();
+    assert!(buf.starts_with("HTTP/1.1 404"), "{buf}");
+    let (status, body) = scrape(maddr);
+    assert!(status.contains("200"), "{status}");
+    assert_valid_exposition(&body);
+    server.shutdown();
+}
+
+/// `StatsV2` returns the same exposition text in-band — no sidecar
+/// needed — and it validates under the same structural rules.
+#[test]
+fn statsv2_opcode_returns_valid_exposition() {
+    let server = start_engine(vec![BackendKind::Cpu], ServeConfig::default());
+    let mut client = Client::connect(server.local_addr()).unwrap();
+    for _ in 0..25 {
+        match client.infer(0, &probe()).unwrap() {
+            InferReply::Output(out) => assert_eq!(out.len(), 10),
+            other => panic!("{other:?}"),
+        }
+    }
+    let text = client.metrics_text().unwrap();
+    assert_valid_exposition(&text);
+    let served: f64 = text
+        .lines()
+        .filter(|l| l.starts_with("edgemlp_pool_requests_total{"))
+        .map(sample_value)
+        .sum();
+    assert!(served >= 25.0, "{served}");
+    server.shutdown();
+}
+
+/// `DumpTrace` over TCP for a stage-pipelined backend: the Chrome
+/// trace JSON must carry the full request lifecycle — connection
+/// instants, queue spans, worker infer spans, per-request writebacks,
+/// and one per-stage "run" span row per pipeline stage.
+#[test]
+fn dump_trace_carries_per_stage_spans() {
+    let server =
+        start_engine(vec![BackendKind::PipelineCpu { depth: 3 }], ServeConfig::default());
+    let mut client = Client::connect(server.local_addr()).unwrap();
+    for _ in 0..30 {
+        match client.infer(0, &probe()).unwrap() {
+            InferReply::Output(out) => assert_eq!(out.len(), 10),
+            other => panic!("{other:?}"),
+        }
+    }
+    let json = client.dump_trace().unwrap();
+    assert!(json.starts_with("{\"traceEvents\":["), "{json}");
+    assert!(json.ends_with('}'), "{json}");
+    // Connection lifecycle instants.
+    assert!(json.contains("\"name\":\"accept\",\"cat\":\"conn\""), "{json}");
+    assert!(json.contains("\"name\":\"decode\",\"cat\":\"conn\""), "{json}");
+    // Queueing: enqueue instants plus queued-duration spans.
+    assert!(json.contains("\"name\":\"enqueue\",\"cat\":\"queue\""), "{json}");
+    assert!(json.contains("\"name\":\"queued\",\"cat\":\"queue\",\"ph\":\"X\""), "{json}");
+    // Worker execution span and per-request writebacks.
+    assert!(json.contains("\"name\":\"infer\",\"cat\":\"worker\",\"ph\":\"X\""), "{json}");
+    assert!(json.contains("\"name\":\"writeback\",\"cat\":\"worker\""), "{json}");
+    // Per-stage rows: the 784→32→10 MLP pipelines as 2 layer stages,
+    // each a named thread row with "run" duration spans.
+    assert!(json.contains("\"name\":\"run\",\"cat\":\"stage\",\"ph\":\"X\""), "{json}");
+    for stage in ["layer0", "layer1"] {
+        assert!(json.contains(stage), "stage {stage} missing from trace rows: {json}");
+    }
+    assert!(json.contains("\"dropped_events\":\"0\""), "{json}");
+    server.shutdown();
+}
+
+/// `trace_capacity` bounds the ring: under overflow the newest events
+/// win, `len()` stays pinned at capacity, and the drop count is
+/// surfaced both in the export and on /metrics.
+#[test]
+fn trace_ring_overflow_drops_oldest_and_reports_it() {
+    let server = start_engine(
+        vec![BackendKind::Cpu],
+        ServeConfig { trace_capacity: 64, ..ServeConfig::default() },
+    );
+    let mut client = Client::connect(server.local_addr()).unwrap();
+    for _ in 0..200 {
+        match client.infer(0, &probe()).unwrap() {
+            InferReply::Output(_) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+    let tracer = server.tracer();
+    assert_eq!(tracer.len(), 64, "ring must cap at capacity");
+    assert!(tracer.dropped() > 0, "overflow must count drops");
+    let json = client.dump_trace().unwrap();
+    assert!(!json.contains("\"dropped_events\":\"0\""), "{json}");
+    let text = client.metrics_text().unwrap();
+    let dropped_line = text
+        .lines()
+        .find(|l| l.starts_with("edgemlp_trace_dropped_total "))
+        .expect("no trace_dropped family");
+    assert!(sample_value(dropped_line) > 0.0, "{dropped_line}");
+    let buffered_line = text
+        .lines()
+        .find(|l| l.starts_with("edgemlp_trace_buffer_events "))
+        .unwrap();
+    assert_eq!(sample_value(buffered_line), 64.0, "{buffered_line}");
+    server.shutdown();
+}
+
+/// With `trace_capacity: 0` tracing is fully disabled: `DumpTrace`
+/// still answers (an empty trace), and nothing accumulates.
+#[test]
+fn trace_capacity_zero_disables_tracing() {
+    let server = start_engine(
+        vec![BackendKind::Cpu],
+        ServeConfig { trace_capacity: 0, ..ServeConfig::default() },
+    );
+    let mut client = Client::connect(server.local_addr()).unwrap();
+    for _ in 0..10 {
+        client.infer(0, &probe()).unwrap();
+    }
+    assert_eq!(server.tracer().len(), 0);
+    assert_eq!(server.tracer().dropped(), 0);
+    let json = client.dump_trace().unwrap();
+    assert!(json.contains("\"traceEvents\":[]"), "{json}");
+    server.shutdown();
+}
+
+/// The v4 opcodes are version-gated: a v3 client sending `StatsV2` or
+/// `DumpTrace` gets `BadRequest` framed at v3, and the connection —
+/// plus its pre-v4 feature set — keeps working.
+#[test]
+fn v4_opcodes_rejected_below_v4() {
+    let server = start_engine(vec![BackendKind::Cpu], ServeConfig::default());
+    let mut raw = TcpStream::connect(server.local_addr()).unwrap();
+    for (id, opcode) in [(1u64, wire::Opcode::StatsV2), (2, wire::Opcode::DumpTrace)] {
+        wire::write_frame(&mut raw, &wire::Frame::ok(opcode, id, Vec::new()).at_version(3))
+            .unwrap();
+        let resp = wire::read_frame(&mut raw, wire::DEFAULT_MAX_PAYLOAD).unwrap();
+        assert_eq!(resp.status, Status::BadRequest, "{opcode:?}: {resp:?}");
+        assert_eq!(resp.request_id, id);
+        assert_eq!(resp.version, 3, "gating reply must echo the request version");
+        assert!(resp.message().contains("protocol"), "{}", resp.message());
+    }
+    // The same connection still serves v3 traffic.
+    wire::write_frame(
+        &mut raw,
+        &wire::Frame::ok(wire::Opcode::Ping, 3, Vec::new()).at_version(3),
+    )
+    .unwrap();
+    assert_eq!(wire::read_frame(&mut raw, wire::DEFAULT_MAX_PAYLOAD).unwrap().status, Status::Ok);
+    // And those rejections were themselves counted by cause.
+    let mut client = Client::connect(server.local_addr()).unwrap();
+    let health = client.health().unwrap();
+    let gated: u64 = health
+        .bad_requests
+        .iter()
+        .filter(|(c, _)| c == "version_gate")
+        .map(|(_, n)| *n)
+        .sum();
+    assert!(gated >= 2, "{:?}", health.bad_requests);
+    server.shutdown();
+}
+
+/// The Health v4 extension end-to-end: busy rejections (connection cap)
+/// and bad requests (wrong input dimension) are counted, labeled by
+/// cause, and visible to a v4 client — while a raw v3 health request
+/// still decodes cleanly without the extension block.
+#[test]
+fn health_extension_counts_busy_and_bad_requests() {
+    let registry = ModelRegistry::new("default", mnist_shaped(1), SpxConfig::sp2(5));
+    let server = Server::serve(
+        registry,
+        "127.0.0.1:0",
+        EngineConfig {
+            replicas: 1,
+            backends: vec![BackendKind::Cpu],
+            coordinator: CoordinatorConfig {
+                queue_capacity: 64,
+                policy: BatchPolicy::immediate(8),
+            },
+            serve: ServeConfig { max_conns: 1, ..ServeConfig::default() },
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+    let mut client = Client::connect(addr).unwrap();
+    client.ping().unwrap();
+
+    // Over-limit connection → Busy frame → busy_rejected counter.
+    let mut second = TcpStream::connect(addr).unwrap();
+    let frame = wire::read_frame(&mut second, wire::DEFAULT_MAX_PAYLOAD).unwrap();
+    assert_eq!(frame.status, Status::Busy);
+    drop(second);
+
+    // Wrong input dimension → BadRequest with cause "input_dim".
+    match client.infer(0, &[1.0, 2.0, 3.0]).unwrap() {
+        InferReply::Failed { status, .. } => assert_eq!(status, Status::BadRequest),
+        other => panic!("{other:?}"),
+    }
+
+    let health = client.health().unwrap();
+    assert!(health.busy_rejected >= 1, "{health:?}");
+    let input_dim: u64 = health
+        .bad_requests
+        .iter()
+        .filter(|(c, _)| c == "input_dim")
+        .map(|(_, n)| *n)
+        .sum();
+    assert!(input_dim >= 1, "{:?}", health.bad_requests);
+
+    // A v3 client's Health decode must not see the extension block.
+    // max_conns is 1 and `client` holds the slot — free it, then retry
+    // until the acceptor reclaims the slot (Busy frames race the drop).
+    drop(client);
+    let mut resp = None;
+    for _ in 0..100 {
+        let mut raw = TcpStream::connect(addr).unwrap();
+        raw.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let req = wire::Frame::ok(wire::Opcode::Health, 9, Vec::new()).at_version(3);
+        if wire::write_frame(&mut raw, &req).is_err() {
+            std::thread::sleep(Duration::from_millis(20));
+            continue;
+        }
+        match wire::read_frame(&mut raw, wire::DEFAULT_MAX_PAYLOAD) {
+            Ok(f) if f.status == Status::Busy => std::thread::sleep(Duration::from_millis(20)),
+            Ok(f) => {
+                resp = Some(f);
+                break;
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+    let resp = resp.expect("connection slot never freed");
+    assert_eq!(resp.status, Status::Ok);
+    assert_eq!(resp.version, 3);
+    let report = wire::decode_health(&resp.payload).unwrap();
+    assert_eq!(report.busy_rejected, 0, "v3 payload must omit the extension");
+    assert!(report.bad_requests.is_empty());
+    server.shutdown();
+}
+
+/// Energy accounting end-to-end on a simulated SPx pool: nonzero
+/// joules/request on Stats, the Prometheus families, and — the
+/// consistency contract — exactly `EnergyModel::default_fpga()` applied
+/// to the pool's aggregate `CycleStats`.
+#[test]
+fn fpga_pool_reports_consistent_nonzero_energy() {
+    let server =
+        start_engine(vec![BackendKind::FpgaSim(AccelConfig::default_fpga())], ServeConfig::default());
+    let mut client = Client::connect(server.local_addr()).unwrap();
+    let n = 40;
+    for _ in 0..n {
+        match client.infer(0, &probe()).unwrap() {
+            InferReply::Output(out) => assert_eq!(out.len(), 10),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    // Traffic has quiesced (closed loop): snapshot and scrape agree.
+    let snap = server.metrics().snapshot();
+    let pool = &snap.backends["fpga/default"];
+    assert_eq!(pool.requests, n);
+    let want = pool_energy(&EnergyModel::default_fpga(), pool, 1.0);
+    assert!(want.dynamic_j > 0.0, "simulated SPx pool must draw dynamic energy");
+    assert!(want.j_per_request > 0.0);
+
+    // Human-readable Stats lines.
+    let stats = client.stats().unwrap();
+    assert!(stats.contains("energy fpga/default:"), "{stats}");
+    assert!(stats.contains("J/req"), "{stats}");
+    assert!(stats.contains("energy static: 2.50 W"), "{stats}");
+
+    // Prometheus families carry the same numbers.
+    let text = client.metrics_text().unwrap();
+    let find = |name: &str| -> f64 {
+        text.lines()
+            .find(|l| l.starts_with(&format!("{name}{{pool=\"fpga/default\"}}")))
+            .map(sample_value)
+            .unwrap_or_else(|| panic!("no {name} sample\n{text}"))
+    };
+    let joules = find("edgemlp_pool_energy_joules_total");
+    let per_req = find("edgemlp_pool_energy_joules_per_request");
+    let mj_per_sample = find("edgemlp_pool_energy_mj_per_sample");
+    let close = |a: f64, b: f64| (a - b).abs() <= 1e-3 * b.abs().max(1e-12);
+    assert!(close(joules, want.dynamic_j), "{joules} vs {}", want.dynamic_j);
+    assert!(close(per_req, want.j_per_request), "{per_req} vs {}", want.j_per_request);
+    assert!(close(mj_per_sample, want.mj_per_sample), "{mj_per_sample} vs {}", want.mj_per_sample);
+
+    // Pure-CPU pools carry no dynamic energy: the absence is the
+    // paper's comparison point, and the model covers SPx only.
+    assert!(!stats.contains("energy cpu/"), "{stats}");
+    server.shutdown();
+}

@@ -41,7 +41,7 @@ FINGERPRINT_KEYS = ("host_cores", "host_arch", "host_dispatch_path", "host_gemm_
 HIGHER_BETTER = ("rps", "gflops", "speedup", "throughput", "attainment", "per_s", "ops")
 # Suffixes / substrings marking a metric where smaller is better.
 LOWER_BETTER_SUFFIX = ("_ms", "_s", "_us", "_ns")
-LOWER_BETTER_SUBSTR = ("p50", "p99", "latency", "shed_rate", "expired", "errors")
+LOWER_BETTER_SUBSTR = ("p50", "p99", "latency", "shed_rate", "expired", "errors", "energy")
 
 
 def direction(key):

@@ -1,0 +1,242 @@
+#!/usr/bin/env python3
+"""Validate edgemlp's Prometheus text exposition (format 0.0.4).
+
+Usage: check_metrics.py <file | http://host:port/metrics> [--require-pool POOL]
+
+Reads the exposition from a file (or `-` for stdin), or scrapes it over
+HTTP when the argument starts with http://. Checks, in order:
+
+  1. Line syntax: every line is a comment (# HELP / # TYPE), blank, or
+     a sample `name{labels} value` with a parseable float value.
+  2. Family structure: each # HELP is immediately followed by the
+     matching # TYPE; TYPE is one of counter/gauge/histogram; every
+     sample belongs to the most recently declared family (families are
+     contiguous, as the exposition format requires).
+  3. Required families: the serving engine's always-present inventory
+     (see docs/observability.md) must all be declared.
+  4. Histogram invariants, per labelset: cumulative buckets are
+     non-decreasing in declaration order, a +Inf bucket exists, and it
+     equals the matching _count sample.
+  5. Counters are non-negative.
+
+With --require-pool, at least one edgemlp_pool_requests_total sample
+must carry that pool label (CI uses this to prove the scrape observed
+the pool the smoke test exercised).
+
+Exit codes: 0 valid, 1 usage/IO error, 2 validation failure.
+"""
+
+import re
+import sys
+import urllib.request
+
+REQUIRED_FAMILIES = [
+    "edgemlp_uptime_seconds",
+    "edgemlp_degraded",
+    "edgemlp_degraded_transitions_total",
+    "edgemlp_read_timeouts_total",
+    "edgemlp_busy_rejected_total",
+    "edgemlp_shed_total",
+    "edgemlp_expired_total",
+    "edgemlp_bad_requests_total",
+    "edgemlp_trace_buffer_events",
+    "edgemlp_trace_dropped_total",
+    "edgemlp_static_power_watts",
+    "edgemlp_pool_requests_total",
+    "edgemlp_pool_samples_total",
+    "edgemlp_pool_batches_total",
+    "edgemlp_pool_errors_total",
+    "edgemlp_pool_shed_total",
+    "edgemlp_pool_expired_total",
+    "edgemlp_pool_queue_depth",
+    "edgemlp_pool_queue_capacity",
+    "edgemlp_pool_replicas",
+    "edgemlp_request_latency_seconds",
+    "edgemlp_pool_energy_joules_total",
+    "edgemlp_pool_energy_joules_per_request",
+    "edgemlp_pool_energy_mj_per_sample",
+    "edgemlp_pool_power_watts",
+]
+
+SAMPLE_RE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?:\{(?P<labels>[^}]*)\})?"
+    r" (?P<value>[^ ]+)$"
+)
+LABEL_RE = re.compile(r'^(?P<k>[a-zA-Z_][a-zA-Z0-9_]*)="(?P<v>(?:[^"\\]|\\.)*)"$')
+
+
+def fail(msg):
+    print(f"check_metrics: FAIL: {msg}", file=sys.stderr)
+    sys.exit(2)
+
+
+def parse_labels(raw):
+    if not raw:
+        return {}
+    labels = {}
+    # Label values are escaped (\\, \", \n) — split on commas outside
+    # quotes.
+    parts, depth, cur = [], False, ""
+    i = 0
+    while i < len(raw):
+        c = raw[i]
+        if c == "\\" and i + 1 < len(raw):
+            cur += raw[i : i + 2]
+            i += 2
+            continue
+        if c == '"':
+            depth = not depth
+        if c == "," and not depth:
+            parts.append(cur)
+            cur = ""
+        else:
+            cur += c
+        i += 1
+    if cur:
+        parts.append(cur)
+    for part in parts:
+        m = LABEL_RE.match(part)
+        if not m:
+            fail(f"malformed label pair {part!r}")
+        labels[m.group("k")] = m.group("v")
+    return labels
+
+
+def base_family(name):
+    for suffix in ("_bucket", "_sum", "_count"):
+        if name.endswith(suffix):
+            return name[: -len(suffix)]
+    return name
+
+
+def main():
+    args = [a for a in sys.argv[1:]]
+    require_pool = None
+    if "--require-pool" in args:
+        i = args.index("--require-pool")
+        try:
+            require_pool = args[i + 1]
+        except IndexError:
+            print(__doc__, file=sys.stderr)
+            return 1
+        del args[i : i + 2]
+    if len(args) != 1:
+        print(__doc__, file=sys.stderr)
+        return 1
+    src = args[0]
+    try:
+        if src.startswith("http://") or src.startswith("https://"):
+            with urllib.request.urlopen(src, timeout=10) as resp:
+                text = resp.read().decode("utf-8")
+        elif src == "-":
+            text = sys.stdin.read()
+        else:
+            with open(src, encoding="utf-8") as f:
+                text = f.read()
+    except OSError as e:
+        print(f"check_metrics: cannot read {src}: {e}", file=sys.stderr)
+        return 1
+
+    if not text.endswith("\n"):
+        fail("exposition does not end with a newline")
+
+    lines = text.splitlines()
+    declared = {}  # family -> type
+    helped = set()
+    current_family = None
+    closed_families = set()
+    # (family, labels-minus-le tuple) -> list of bucket values in order
+    buckets = {}
+    counts = {}
+    pool_requests_pools = set()
+
+    for lineno, line in enumerate(lines, 1):
+        if not line.strip():
+            continue
+        if line.startswith("# HELP "):
+            rest = line[len("# HELP ") :]
+            fam = rest.split(" ", 1)[0]
+            helped.add(fam)
+            nxt = lines[lineno] if lineno < len(lines) else ""
+            if not nxt.startswith(f"# TYPE {fam} "):
+                fail(f"line {lineno}: HELP {fam} not followed by its TYPE")
+            continue
+        if line.startswith("# TYPE "):
+            rest = line[len("# TYPE ") :]
+            try:
+                fam, ty = rest.split(" ", 1)
+            except ValueError:
+                fail(f"line {lineno}: malformed TYPE line {line!r}")
+            if ty not in ("counter", "gauge", "histogram"):
+                fail(f"line {lineno}: unknown type {ty!r} for {fam}")
+            if fam in declared:
+                fail(f"line {lineno}: family {fam} declared twice")
+            if current_family is not None:
+                closed_families.add(current_family)
+            if fam in closed_families:
+                fail(f"line {lineno}: family {fam} not contiguous")
+            declared[fam] = ty
+            current_family = fam
+            continue
+        if line.startswith("#"):
+            continue  # other comments are legal
+        m = SAMPLE_RE.match(line)
+        if not m:
+            fail(f"line {lineno}: unparseable sample {line!r}")
+        name, value_s = m.group("name"), m.group("value")
+        labels = parse_labels(m.group("labels"))
+        try:
+            value = float(value_s)
+        except ValueError:
+            fail(f"line {lineno}: non-float value {value_s!r}")
+        fam = base_family(name)
+        if fam != current_family:
+            fail(f"line {lineno}: sample {name} outside its family block "
+                 f"(current: {current_family})")
+        ty = declared[fam]
+        if ty == "counter" and value < 0:
+            fail(f"line {lineno}: counter {name} is negative ({value})")
+        if ty == "histogram":
+            key = (fam, tuple(sorted((k, v) for k, v in labels.items() if k != "le")))
+            if name.endswith("_bucket"):
+                buckets.setdefault(key, []).append((labels.get("le", ""), value))
+            elif name.endswith("_count"):
+                counts[key] = value
+        if name == "edgemlp_pool_requests_total" and "pool" in labels:
+            pool_requests_pools.add(labels["pool"])
+
+    missing = [f for f in REQUIRED_FAMILIES if f not in declared]
+    if missing:
+        fail(f"missing required families: {', '.join(missing)}")
+    unhelped = [f for f in declared if f not in helped]
+    if unhelped:
+        fail(f"families without HELP: {', '.join(unhelped)}")
+
+    if not buckets:
+        fail("no histogram buckets found")
+    for key, bs in buckets.items():
+        values = [v for _, v in bs]
+        for a, b in zip(values, values[1:]):
+            if b < a:
+                fail(f"{key}: buckets not cumulative: {values}")
+        les = [le for le, _ in bs]
+        if "+Inf" not in les:
+            fail(f"{key}: no +Inf bucket")
+        if key not in counts:
+            fail(f"{key}: histogram without _count")
+        if values[-1] != counts[key]:
+            fail(f"{key}: +Inf bucket {values[-1]} != count {counts[key]}")
+
+    if require_pool is not None and require_pool not in pool_requests_pools:
+        fail(f"no edgemlp_pool_requests_total sample for pool "
+             f"{require_pool!r} (saw: {sorted(pool_requests_pools)})")
+
+    nsamples = sum(1 for l in lines if l and not l.startswith("#"))
+    print(f"check_metrics: OK — {len(declared)} families, {nsamples} samples"
+          + (f", pool {require_pool!r} present" if require_pool else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,103 @@
+#!/usr/bin/env python3
+"""Validate a Chrome trace-event JSON dump from `edgemlp ctl --op trace`.
+
+Usage: check_trace.py <trace.json | -> [--require-cat CAT ...]
+
+Checks that the dump is what Perfetto / chrome://tracing will load:
+
+  1. Parses as JSON with a `traceEvents` list and an
+     `otherData.dropped_events` count (the ring-overflow report).
+  2. Every event carries the trace-event schema fields: name, ph, pid,
+     tid, and (for non-metadata events) a numeric ts; "X" spans carry a
+     numeric dur.
+  3. Thread rows are named: each (pid, tid) used by an event has a
+     thread_name metadata record.
+  4. Duration spans exist (ph == "X") — a dump of instants only means
+     span recording broke.
+  5. Each --require-cat category appears on at least one event (CI
+     passes stage/queue/worker/conn to prove the whole request
+     lifecycle was captured, per-pipeline-stage spans included).
+
+Exit codes: 0 valid, 1 usage/IO error, 2 validation failure.
+"""
+
+import json
+import sys
+
+
+def fail(msg):
+    print(f"check_trace: FAIL: {msg}", file=sys.stderr)
+    sys.exit(2)
+
+
+def main():
+    args = sys.argv[1:]
+    required_cats = []
+    while "--require-cat" in args:
+        i = args.index("--require-cat")
+        try:
+            required_cats.append(args[i + 1])
+        except IndexError:
+            print(__doc__, file=sys.stderr)
+            return 1
+        del args[i : i + 2]
+    if len(args) != 1:
+        print(__doc__, file=sys.stderr)
+        return 1
+    try:
+        text = sys.stdin.read() if args[0] == "-" else open(args[0], encoding="utf-8").read()
+    except OSError as e:
+        print(f"check_trace: cannot read {args[0]}: {e}", file=sys.stderr)
+        return 1
+    try:
+        doc = json.loads(text)
+    except json.JSONDecodeError as e:
+        fail(f"not valid JSON: {e}")
+
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        fail("no traceEvents list")
+    if "dropped_events" not in doc.get("otherData", {}):
+        fail("no otherData.dropped_events count")
+
+    named_threads = set()
+    used_threads = set()
+    spans = 0
+    cats = set()
+    for ev in events:
+        for field in ("name", "ph", "pid", "tid"):
+            if field not in ev:
+                fail(f"event missing {field!r}: {ev}")
+        if ev["ph"] == "M":
+            if ev["name"] == "thread_name":
+                named_threads.add((ev["pid"], ev["tid"]))
+            continue
+        if not isinstance(ev.get("ts"), (int, float)):
+            fail(f"event without numeric ts: {ev}")
+        used_threads.add((ev["pid"], ev["tid"]))
+        cats.add(ev.get("cat", ""))
+        if ev["ph"] == "X":
+            spans += 1
+            if not isinstance(ev.get("dur"), (int, float)):
+                fail(f"X span without numeric dur: {ev}")
+
+    unnamed = used_threads - named_threads
+    if unnamed:
+        fail(f"events on unnamed thread rows: {sorted(unnamed)}")
+    if used_threads and spans == 0:
+        fail("no duration spans (ph == 'X') in a non-empty trace")
+    missing = [c for c in required_cats if c not in cats]
+    if missing:
+        fail(f"required categories absent: {', '.join(missing)} (saw: {sorted(cats)})")
+
+    dropped = doc["otherData"]["dropped_events"]
+    print(
+        f"check_trace: OK — {len(events)} events ({spans} spans, "
+        f"{len(named_threads)} rows, categories: {', '.join(sorted(c for c in cats if c))}; "
+        f"dropped: {dropped})"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

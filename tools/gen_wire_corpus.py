@@ -12,7 +12,7 @@ filename prefix:
              id 0) then a clean close; never a panic.
   payload_*  well-framed but hostile payload: >= 1 response, every one
              with a non-Ok status; the connection is not poisoned.
-  mixed_*    interleaved valid v1/v2/v3 frames (possibly ending in
+  mixed_*    interleaved valid v1..v4 frames (possibly ending in
              garbage): the server must answer what is answerable and
              survive.
 
@@ -75,6 +75,8 @@ def main():
     corpus["frame_bad_magic.bin"] = b"XXWP" + frame(2, 0, 0, 1, b"")[4:]
     corpus["frame_bad_version_0.bin"] = frame(0, 0, 0, 1, b"")
     corpus["frame_bad_version_99.bin"] = frame(99, 0, 0, 1, b"")
+    # One past the newest supported version (v4) — the near-miss case.
+    corpus["frame_bad_version_5.bin"] = frame(5, 0, 0, 1, b"")
     corpus["frame_bad_opcode.bin"] = frame(2, 200, 0, 1, b"")
     corpus["frame_bad_status.bin"] = frame(2, 0, 200, 1, b"")
     # Declares a payload over the 16 MiB cap; no payload bytes follow.
@@ -137,6 +139,13 @@ def main():
     )
     # Health framed at v2 (the opcode is v3-only).
     corpus["payload_health_v2.bin"] = frame(2, 6, 0, 25, b"")
+    # --- v4 observability opcodes framed below their gate ---
+    # DumpTrace (7) and StatsV2 (8) are v4-only: pre-v4 framings are
+    # BadRequest without poisoning the connection.
+    corpus["payload_dumptrace_v1.bin"] = frame(1, 7, 0, 26, b"")
+    corpus["payload_dumptrace_v3.bin"] = frame(3, 7, 0, 27, b"")
+    corpus["payload_statsv2_v1.bin"] = frame(1, 8, 0, 28, b"")
+    corpus["payload_statsv2_v3.bin"] = frame(3, 8, 0, 29, b"")
 
     # --- mixed v1/v2 traffic on one connection ---
     corpus["mixed_v1_v2_round_trip.bin"] = (
@@ -149,11 +158,19 @@ def main():
         frame(2, 0, 0, 14, b"ok") + frame(1, 1, 0, 15, infer_v1(0, dim8)) + b"\xde" * 24
     )
     # v3 traffic with QoS set, a Health poll, then a legacy v1 ping —
-    # one connection speaking all three versions.
+    # one connection speaking three versions.
     corpus["mixed_v3_qos_health_then_v1.bin"] = (
         frame(3, 1, 0, 16, infer_v3(0, "", dim8, deadline_us=3_000_000, priority=1))
         + frame(3, 6, 0, 17, b"")
         + frame(1, 0, 0, 18, b"old-ping")
+    )
+    # v4 observability opcodes bracketed by legacy traffic — StatsV2
+    # and DumpTrace answered inline, then a v1 ping still works.
+    corpus["mixed_v4_obs_then_v1.bin"] = (
+        frame(4, 1, 0, 19, infer_v3(0, "", dim8))
+        + frame(4, 8, 0, 20, b"")
+        + frame(4, 7, 0, 21, b"")
+        + frame(1, 0, 0, 22, b"old-ping")
     )
 
     for fname, data in sorted(corpus.items()):

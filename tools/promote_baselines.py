@@ -1,0 +1,138 @@
+#!/usr/bin/env python3
+"""Promote CI-measured bench artifacts to committed baselines.
+
+Usage: promote_baselines.py <artifact.json> <committed_baseline.json> [...pairs]
+       promote_baselines.py --check <baseline.json> [...]
+
+The committed BENCH_*.json baselines at the repo root gate CI through
+tools/bench_delta.py — but the gate only ARMS when a baseline carries a
+host fingerprint (host_* keys stamped by bench_harness::HostFingerprint)
+matching the runner. The seed baselines are hand-estimated and
+fingerprint-less, marked PROVISIONAL, so the gate idles.
+
+This script is the promotion step documented in EXPERIMENTS.md: download
+the `bench-gemm` / `bench-serving` artifacts from a green CI run on the
+target runner class, then
+
+    tools/promote_baselines.py BENCH_gemm.json.artifact BENCH_gemm.json \\
+                               BENCH_serving.json.artifact BENCH_serving.json
+
+For each (artifact, baseline) pair it:
+  1. refuses artifacts missing the host fingerprint (they could never
+     arm the gate — promoting one would silently keep CI advisory);
+  2. refuses artifacts whose numeric key set lost keys vs the current
+     baseline (a shrunk artifact usually means a bench step silently
+     skipped — pass --allow-key-loss to override);
+  3. drops any `*_note` keys marking the old baseline PROVISIONAL and
+     writes the artifact over the baseline, stamping `promoted_from` so
+     the provenance is in the diff.
+
+--check mode verifies committed baselines are armed (fingerprinted and
+not PROVISIONAL) and exits 2 otherwise — CI can call it once baselines
+have been promoted, making a silent de-arm loud.
+
+Exit codes: 0 ok, 1 usage/IO, 2 validation refused.
+"""
+
+import json
+import sys
+
+FINGERPRINT_KEYS = ("host_cores", "host_arch", "host_dispatch_path", "host_gemm_threads")
+
+
+def load(path):
+    try:
+        with open(path, encoding="utf-8") as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"promote_baselines: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(1)
+
+
+def is_provisional(doc):
+    return any(
+        isinstance(v, str) and "PROVISIONAL" in v
+        for k, v in doc.items()
+        if k.endswith("_note")
+    )
+
+
+def fingerprinted(doc):
+    return all(k in doc for k in FINGERPRINT_KEYS)
+
+
+def numeric_keys(doc):
+    return {k for k, v in doc.items() if isinstance(v, (int, float)) and not k.startswith("host_")}
+
+
+def check(paths):
+    bad = False
+    for path in paths:
+        doc = load(path)
+        problems = []
+        if not fingerprinted(doc):
+            problems.append("no host fingerprint (gate cannot arm)")
+        if is_provisional(doc):
+            problems.append("still marked PROVISIONAL")
+        if problems:
+            print(f"{path}: {'; '.join(problems)}")
+            bad = True
+        else:
+            print(f"{path}: armed ({len(numeric_keys(doc))} gated keys)")
+    return 2 if bad else 0
+
+
+def promote(pairs, allow_key_loss):
+    for artifact_path, baseline_path in pairs:
+        artifact = load(artifact_path)
+        baseline = load(baseline_path)
+        if not fingerprinted(artifact):
+            print(
+                f"promote_baselines: REFUSED {artifact_path}: artifact has no "
+                f"host fingerprint ({', '.join(FINGERPRINT_KEYS)}); promoting "
+                "it would leave the regression gate disarmed",
+                file=sys.stderr,
+            )
+            return 2
+        lost = numeric_keys(baseline) - numeric_keys(artifact)
+        if lost and not allow_key_loss:
+            print(
+                f"promote_baselines: REFUSED {artifact_path}: artifact lost "
+                f"{len(lost)} keys the baseline tracks ({', '.join(sorted(lost)[:6])}"
+                f"{', ...' if len(lost) > 6 else ''}); a shrunk artifact usually "
+                "means a bench step silently skipped. Re-run with "
+                "--allow-key-loss to promote anyway.",
+                file=sys.stderr,
+            )
+            return 2
+        promoted = {k: v for k, v in artifact.items() if not k.endswith("_note")}
+        promoted["promoted_from"] = artifact_path
+        with open(baseline_path, "w", encoding="utf-8") as f:
+            json.dump(promoted, f, indent=2, sort_keys=True)
+            f.write("\n")
+        gained = numeric_keys(artifact) - numeric_keys(baseline)
+        print(
+            f"{baseline_path}: promoted from {artifact_path} "
+            f"({len(numeric_keys(artifact))} keys, +{len(gained)} new, gate ARMED)"
+        )
+    return 0
+
+
+def main():
+    args = sys.argv[1:]
+    allow_key_loss = "--allow-key-loss" in args
+    args = [a for a in args if a != "--allow-key-loss"]
+    if args and args[0] == "--check":
+        if len(args) < 2:
+            print(__doc__, file=sys.stderr)
+            return 1
+        return check(args[1:])
+    if not args or len(args) % 2 != 0:
+        print(__doc__, file=sys.stderr)
+        return 1
+    pairs = list(zip(args[0::2], args[1::2]))
+    return promote(pairs, allow_key_loss)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
