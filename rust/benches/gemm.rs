@@ -9,11 +9,15 @@
 
 use edgemlp::bench_harness::{bench, fmt_time, BenchConfig, BenchJson, HostFingerprint, Table};
 use edgemlp::fpga::accelerator::{AccelConfig, Accelerator, QuantizedMlp};
-use edgemlp::nn::kernels::{gemm::configured_threads, gemm_into_with, simd, DispatchPath};
+use edgemlp::nn::kernels::{
+    gemm::configured_threads, gemm_into_with, simd, vsq_matmul_batch, DispatchPath,
+};
 use edgemlp::nn::mlp::{Mlp, MlpConfig};
 use edgemlp::nn::tensor::Matrix;
 use edgemlp::quant::spx::SpxConfig;
+use edgemlp::quant::vsq::{quantize_data_i8_into, VsqTensor};
 use edgemlp::quant::Calibration;
+use edgemlp::serve::{ModelRegistry, Precision};
 use edgemlp::util::rng::Pcg32;
 use std::hint::black_box;
 use std::path::Path;
@@ -154,6 +158,67 @@ fn main() {
         pool_threads
     );
     e9.print();
+
+    // ---- VSQ int8/int4 integer kernels vs the f32 SIMD GEMM. ----
+    // Same serving shapes as E9 ((m,k,n) = (batch, fan_in, fan_out)),
+    // single thread, both sides on the native dispatch path: the f32
+    // row is `gemm_into_with(native, 1, ..)` and the integer rows are
+    // the weight-stationary `vsq_matmul_batch` (docs/quantization-modes.md).
+    // GFLOP/s counts the same 2·m·k·n useful MACs for every row, so the
+    // column is directly comparable across precisions.
+    let mut vsq_table = Table::new(&["kernel", "shape", "mean", "GFLOP/s", "vs f32 simd"]);
+    for &(m, k, n) in &[(256usize, 784usize, 128usize), (64, 784, 128)] {
+        let a = Matrix::random_uniform(m, k, 1.0, &mut rng);
+        let b = Matrix::random_uniform(n, k, 0.1, &mut rng);
+        let mut out = Matrix::zeros(m, n);
+        let label = format!("{m}x{k}x{n}");
+        let f32_1t = bench(&format!("f32 simd 1t {label}"), cfg, || {
+            gemm_into_with(native, 1, &mut out, &a, false, &b, true)
+        });
+        vsq_table.row(&[
+            "gemm f32 simd 1t".into(),
+            label.clone(),
+            fmt_time(f32_1t.mean_s()),
+            format!("{:.2}", gflops(m, k, n, f32_1t.mean_s())),
+            "1.00x".into(),
+        ]);
+        let mut x_q = Vec::new();
+        quantize_data_i8_into(&a.data, 1.0, &mut x_q);
+        let mut iout = vec![0.0f32; m * n];
+        for bits in [8u8, 4] {
+            let w = VsqTensor::encode(bits, 16, &b.data, n, k, Calibration::MaxAbs);
+            let timing = bench(&format!("vsq i{bits} {label}"), cfg, || {
+                vsq_matmul_batch(&w, &x_q, m, 1.0, &mut iout)
+            });
+            let speedup = f32_1t.mean_s() / timing.mean_s();
+            vsq_table.row(&[
+                format!("vsq int{bits}"),
+                label.clone(),
+                fmt_time(timing.mean_s()),
+                format!("{:.2}", gflops(m, k, n, timing.mean_s())),
+                format!("{speedup:.2}x"),
+            ]);
+            json.num(&format!("gemm_i{bits}_{label}_gflops"), gflops(m, k, n, timing.mean_s()));
+            json.num(&format!("gemm_i{bits}_{label}_speedup"), speedup);
+        }
+    }
+
+    // Weight footprint per served sample at each precision for the
+    // paper's MNIST network — lower-better keys (`bytes_per_sample`)
+    // so the delta gate flags any regression in model-streaming bytes.
+    let registry = ModelRegistry::new("default", mlp.clone(), SpxConfig::sp2(5));
+    let active = registry.slots()[0].active();
+    for (precision, key) in [
+        (Precision::F32, "f32_bytes_per_sample"),
+        (Precision::Spx, "spx_bytes_per_sample"),
+        (Precision::Int8, "int8_bytes_per_sample"),
+        (Precision::Int4, "int4_bytes_per_sample"),
+    ] {
+        json.num(key, active.weight_bytes(precision) as f64);
+    }
+
+    println!("\n=== VSQ int8/int4 kernels vs f32 SIMD (docs/quantization-modes.md) ===\n");
+    vsq_table.print();
 
     HostFingerprint::detect().stamp(&mut json);
     let path = std::env::var("EDGEMLP_BENCH_JSON").unwrap_or_else(|_| "BENCH_gemm.json".into());

@@ -15,4 +15,10 @@ fn main() {
     let rows = quant_ablation::run(scale, &bits);
     println!("\n=== Quantization ablation (§3.2) ===\n");
     println!("{}", quant_ablation::render(&rows, fp32));
+
+    // Serving-precision modes: the actual f32/SPx/int8/int4 datapaths
+    // end to end (EXPERIMENTS.md §Quantized serving).
+    let (pfp32, prows) = quant_ablation::run_precision_modes(scale);
+    println!("\n=== Accuracy vs serving precision ===\n");
+    println!("{}", quant_ablation::render_precision_modes(pfp32, &prows));
 }

@@ -67,10 +67,21 @@ fn main() {
     let mut json = BenchJson::new();
 
     // ---- Fixed scenarios (labels pinned since PR 2). ----
+    // The int8/int4 pools ride on the same engine: explicit backend
+    // indices keep the pinned scenarios on the pools they always hit,
+    // and the quantized pools add their own rows/keys.
     let server = Server::serve(
         registry(),
         "127.0.0.1:0",
-        engine(1, vec![BackendKind::Cpu, BackendKind::FpgaSim(AccelConfig::default_fpga())]),
+        engine(
+            1,
+            vec![
+                BackendKind::Cpu,
+                BackendKind::FpgaSim(AccelConfig::default_fpga()),
+                BackendKind::Int8,
+                BackendKind::Int4,
+            ],
+        ),
     )
     .expect("start server");
     let addr = server.local_addr();
@@ -79,6 +90,8 @@ fn main() {
         Scenario { label: "cpu_single_c8_p8", backend: 0, connections: 8, batch: 1, pipeline: 8 },
         Scenario { label: "cpu_batch16_c4", backend: 0, connections: 4, batch: 16, pipeline: 1 },
         Scenario { label: "fpga_single_c4_p8", backend: 1, connections: 4, batch: 1, pipeline: 8 },
+        Scenario { label: "int8_single_c8_p8", backend: 2, connections: 8, batch: 1, pipeline: 8 },
+        Scenario { label: "int4_single_c8_p8", backend: 3, connections: 8, batch: 1, pipeline: 8 },
     ];
 
     let mut table = Table::new(&["scenario", "requests", "req/s", "p50", "p99", "shed"]);
@@ -124,6 +137,19 @@ fn main() {
             "\nfpga pool modeled energy: {:.4} mJ/sample, {:.6} J/request",
             e.mj_per_sample, e.j_per_request
         );
+    }
+    // Per-precision weight footprint the engine registered at assembly
+    // (f32 on the CPU pool, SPx on the FPGA pool, VSQ on int8/int4) —
+    // lower-better `bytes_per_sample` keys for the delta gate.
+    for (pool, key) in [
+        ("cpu/default", "serving_f32_bytes_per_sample"),
+        ("fpga/default", "serving_spx_bytes_per_sample"),
+        ("int8/default", "serving_int8_bytes_per_sample"),
+        ("int4/default", "serving_int4_bytes_per_sample"),
+    ] {
+        if let Some(m) = snap.backends.get(pool) {
+            json.num(key, m.bytes_per_sample as f64);
+        }
     }
     server.shutdown();
 

@@ -16,6 +16,7 @@ use crate::fpga::stats::CycleStats;
 use crate::nn::kernels::pipeline::StageSnapshot;
 use crate::nn::mlp::ForwardScratch;
 use crate::nn::tensor::Matrix;
+use crate::nn::vsq::VsqMlp;
 use crate::nn::Mlp;
 use anyhow::Result;
 
@@ -126,6 +127,40 @@ impl Backend for FpgaBackend {
     }
 }
 
+/// Low-bit integer backend: the VSQ int8/int4 forward
+/// ([`crate::nn::vsq::VsqMlp`]) through the SIMD integer dot kernel.
+/// Moves 4–8× fewer weight bytes per sample than [`CpuBackend`], which
+/// is the point — see docs/quantization-modes.md.
+pub struct VsqBackend {
+    pub model: VsqMlp,
+    name: String,
+    staging: Matrix,
+}
+
+impl VsqBackend {
+    pub fn new(model: VsqMlp) -> Self {
+        let name = format!("int{}", model.bits());
+        VsqBackend { model, name, staging: Matrix::zeros(0, 0) }
+    }
+}
+
+impl Backend for VsqBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn max_batch(&self) -> usize {
+        256
+    }
+
+    fn infer(&mut self, inputs: &[Vec<f32>]) -> Result<(Vec<Vec<f32>>, Option<CycleStats>)> {
+        stage_inputs(&mut self.staging, inputs, self.model.input_dim())?;
+        let y = self.model.forward_batch(&self.staging);
+        let out = (0..inputs.len()).map(|r| y.row(r).to_vec()).collect();
+        Ok((out, None))
+    }
+}
+
 /// Adapter turning a closure into a [`Backend`] — used for the XLA
 /// backend (closure captures the non-`Send` runtime inside its worker
 /// thread) and for test doubles.
@@ -226,6 +261,23 @@ mod tests {
         let q = QuantizedMlp::from_mlp(&mlp, &SpxConfig::sp2(6), Calibration::MaxAbs, None);
         let mut be = FpgaBackend::new(Accelerator::new(q, AccelConfig::default_fpga()));
         assert!(be.infer(&[vec![0.0; 3]]).is_err());
+    }
+
+    #[test]
+    fn vsq_backend_matches_model_forward() {
+        let mlp = mnist_mlp();
+        for bits in [8u8, 4] {
+            let v = VsqMlp::from_mlp(&mlp, bits, 4, Calibration::MaxAbs, None);
+            let mut be = VsqBackend::new(v.clone());
+            assert_eq!(be.name(), format!("int{bits}"));
+            let inputs = vec![vec![0.3f32; 8], vec![0.7f32; 8]];
+            let (out, stats) = be.infer(&inputs).unwrap();
+            assert!(stats.is_none());
+            for (i, sample) in inputs.iter().enumerate() {
+                assert_eq!(out[i], v.forward_one(sample), "bits {bits} sample {i}");
+            }
+            assert!(be.infer(&[vec![0.0; 5]]).is_err(), "bad dims accepted");
+        }
     }
 
     #[test]

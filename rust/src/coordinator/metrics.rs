@@ -145,6 +145,11 @@ pub struct BackendMetrics {
     /// backends only; empty for monolithic ones). Cumulative since the
     /// backend was built — the worker refreshes it after every batch.
     pub stages: Vec<StageSnapshot>,
+    /// Weight bytes this pool streams per served sample (packed codes +
+    /// scales + biases at the pool's precision; 0 when the engine never
+    /// registered a figure). Lower is better — the serving bench
+    /// reports it as `<pool>_bytes_per_sample`.
+    pub bytes_per_sample: u64,
 }
 
 impl BackendMetrics {
@@ -201,9 +206,14 @@ impl MetricsSnapshot {
             self.bad_requests.values().sum::<u64>(),
         );
         for (name, m) in &self.backends {
+            let bytes = if m.bytes_per_sample > 0 {
+                format!(" bytes_per_sample={}", m.bytes_per_sample)
+            } else {
+                String::new()
+            };
             out.push_str(&format!(
                 "pool {name}: requests={} batches={} errors={} shed={} expired={} \
-                 mean_batch={:.1} p50={} p95={} p99={} p99.9={} max={}\n",
+                 mean_batch={:.1} p50={} p95={} p99={} p99.9={} max={}{bytes}\n",
                 m.requests,
                 m.batches,
                 m.errors,
@@ -328,6 +338,15 @@ impl Metrics {
     pub fn record_bad_request(&self, cause: &str) {
         let mut inner = self.inner.lock().unwrap();
         *inner.bad_requests.entry(cause.to_string()).or_default() += 1;
+    }
+
+    /// Register `backend`'s weight footprint in bytes per served sample
+    /// — a static property of the (model, precision) pair, set once at
+    /// engine assembly and surfaced by `Stats`, `StatsV2` and the
+    /// serving bench.
+    pub fn set_pool_bytes(&self, backend: &str, bytes: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.backends.entry(backend.to_string()).or_default().bytes_per_sample = bytes;
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -575,6 +594,24 @@ mod tests {
         assert_eq!(cum[31].1, h.count(), "last bucket must be cumulative total");
         assert!(cum.windows(2).all(|w| w[0].1 <= w[1].1 && w[0].0 < w[1].0));
         assert!((h.sum_s() - (1e-6 + 3e-6 + 3e-6 + 1e-3)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pool_bytes_register_once_and_survive_traffic() {
+        let m = Metrics::new();
+        m.set_pool_bytes("int4/default", 27_000);
+        m.set_pool_bytes("cpu/default", 407_000);
+        m.record_batch("int4/default", 2, &[1e-3; 2], None);
+        let snap = m.snapshot();
+        assert_eq!(snap.backends["int4/default"].bytes_per_sample, 27_000);
+        assert_eq!(snap.backends["int4/default"].requests, 2);
+        assert_eq!(snap.backends["cpu/default"].bytes_per_sample, 407_000);
+        let text = snap.render();
+        assert!(text.contains("bytes_per_sample=27000"), "{text}");
+        // Pools that never registered a figure render no bytes field.
+        let m2 = Metrics::new();
+        m2.record_batch("cpu", 1, &[1e-3], None);
+        assert!(!m2.snapshot().render().contains("bytes_per_sample"), "unregistered leaked");
     }
 
     #[test]

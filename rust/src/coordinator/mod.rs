@@ -32,7 +32,7 @@ pub mod queue;
 pub mod request;
 pub mod server;
 
-pub use backend::{Backend, CpuBackend, FpgaBackend};
+pub use backend::{Backend, CpuBackend, FpgaBackend, VsqBackend};
 pub use batcher::BatchPolicy;
 pub use degrade::{DegradeController, DegradePolicy};
 pub use metrics::{Metrics, MetricsSnapshot};

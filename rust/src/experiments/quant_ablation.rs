@@ -4,7 +4,9 @@
 
 use super::common::{trained_mnist_mlp, ExperimentScale, TrainedSetup};
 use crate::bench_harness::Table;
-use crate::nn::metrics::accuracy;
+use crate::nn::metrics::{accuracy, accuracy_from_preds};
+use crate::nn::mlp::argmax;
+use crate::nn::vsq::{f32_weight_bytes, VsqMlp, DEFAULT_GROUP_ROWS};
 use crate::nn::Mlp;
 use crate::quant::error::{sqnr_db, tail_split_mse};
 use crate::quant::spx::{SpxConfig, SpxTensor};
@@ -110,6 +112,83 @@ pub fn fp32_accuracy(scale: ExperimentScale) -> f64 {
     accuracy(&setup.mlp, &setup.test_set.inputs, &setup.test_set.labels)
 }
 
+/// One serving-precision cell of the accuracy-vs-bits ablation: unlike
+/// [`QuantRow`] (weight-only fake quantization), these rows run the
+/// ACTUAL serving datapaths end to end — the VSQ rows quantize
+/// activations to int8 per layer exactly as the int8/int4 pools do.
+#[derive(Debug, Clone)]
+pub struct PrecisionRow {
+    /// Serving-precision label (`f32`/`spx`/`int8`/`int4`).
+    pub precision: String,
+    pub accuracy: f64,
+    /// Weight bytes streamed per served sample at this precision.
+    pub bytes_per_sample: u64,
+}
+
+/// Accuracy vs serving precision on the MNIST head: f32, SPx (sp2 b=5,
+/// the serving default), and VSQ int8/int4 with per-row-group scales,
+/// each through its real forward path (EXPERIMENTS.md §Quantized
+/// serving). Returns `(fp32_accuracy, rows)`.
+pub fn run_precision_modes(scale: ExperimentScale) -> (f64, Vec<PrecisionRow>) {
+    let setup: TrainedSetup = trained_mnist_mlp(scale);
+    let test = &setup.test_set;
+    let fp32 = accuracy(&setup.mlp, &test.inputs, &test.labels);
+    let mut rows =
+        vec![PrecisionRow {
+            precision: "f32".into(),
+            accuracy: fp32,
+            bytes_per_sample: f32_weight_bytes(&setup.mlp),
+        }];
+
+    // SPx at the serving default (sp2, b=5): weight-only, the FPGA-sim
+    // pool decodes to f32 before the MAC.
+    let spx = quantize_model(&setup.mlp, &|w: &[f32]| {
+        SpxTensor::encode(&SpxConfig::sp2(5), w, &[w.len()], Calibration::MaxAbs).decode()
+    });
+    let spx_bits = crate::fpga::accelerator::QuantizedMlp::from_mlp(
+        &setup.mlp,
+        &SpxConfig::sp2(5),
+        Calibration::MaxAbs,
+        None,
+    )
+    .weight_bits();
+    let spx_bias: u64 = setup.mlp.layers.iter().map(|l| 4 * l.b.len() as u64).sum();
+    rows.push(PrecisionRow {
+        precision: "spx".into(),
+        accuracy: accuracy(&spx, &test.inputs, &test.labels),
+        bytes_per_sample: spx_bits.div_ceil(8) + spx_bias,
+    });
+
+    // VSQ int8/int4: weights AND activations quantized, the real
+    // integer kernel end to end.
+    for bits in [8u8, 4] {
+        let v = VsqMlp::from_mlp(&setup.mlp, bits, DEFAULT_GROUP_ROWS, Calibration::MaxAbs, None);
+        let out = v.forward_batch(&test.inputs);
+        let preds: Vec<usize> = (0..out.rows).map(|r| argmax(out.row(r))).collect();
+        rows.push(PrecisionRow {
+            precision: format!("int{bits}"),
+            accuracy: accuracy_from_preds(&preds, &test.labels),
+            bytes_per_sample: v.weight_bytes(),
+        });
+    }
+    (fp32, rows)
+}
+
+pub fn render_precision_modes(fp32: f64, rows: &[PrecisionRow]) -> String {
+    let mut table = Table::new(&["precision", "accuracy", "Δ vs f32", "bytes/sample", "vs f32"]);
+    let f32_bytes = rows.first().map(|r| r.bytes_per_sample).unwrap_or(0);
+    for r in rows {
+        table.row(&[
+            r.precision.clone(),
+            format!("{:.3}", r.accuracy),
+            format!("{:+.3}", r.accuracy - fp32),
+            r.bytes_per_sample.to_string(),
+            format!("{:.2}x", f32_bytes as f64 / r.bytes_per_sample.max(1) as f64),
+        ]);
+    }
+    table.render()
+}
+
 pub fn render(rows: &[QuantRow], fp32_acc: f64) -> String {
     let mut table = Table::new(&[
         "scheme",
@@ -158,6 +237,31 @@ mod tests {
         // relative to uniform.
         let uni = find("uniform");
         assert!(sp2.accuracy > uni.accuracy - 0.25);
+    }
+
+    #[test]
+    fn int8_precision_mode_holds_fp32_accuracy_within_one_point() {
+        // The tentpole acceptance criterion: the end-to-end int8 VSQ
+        // datapath (weights AND activations quantized) stays within
+        // 1% of f32 on the MNIST head, and the bytes column orders
+        // int4 < int8 < f32 with spx < f32.
+        let scale = ExperimentScale { n_train: 800, n_test: 300, epochs: 3 };
+        let (fp32, rows) = run_precision_modes(scale);
+        let find = |p: &str| rows.iter().find(|r| r.precision == p).unwrap();
+        let i8r = find("int8");
+        assert!(
+            (fp32 - i8r.accuracy).abs() <= 0.01,
+            "int8 accuracy {} drifted more than 1% from f32 {}",
+            i8r.accuracy,
+            fp32
+        );
+        // int4 may lose accuracy but must still beat chance by a wide
+        // margin on 10 classes.
+        assert!(find("int4").accuracy > 0.5, "int4 collapsed: {}", find("int4").accuracy);
+        let bytes = |p: &str| find(p).bytes_per_sample;
+        assert!(bytes("int4") < bytes("int8"));
+        assert!(bytes("int8") < bytes("f32"));
+        assert!(bytes("spx") < bytes("f32"));
     }
 
     #[test]

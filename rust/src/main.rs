@@ -5,7 +5,8 @@
 //! edgemlp infer            --model /tmp/mlp.emlp --backend fpga
 //! edgemlp serve            --addr 127.0.0.1:7878 --model /tmp/mlp.emlp \
 //!                          --replicas 4 --models qnet=/tmp/qnet.emlp \
-//!                          --backends cpu,fpga,pipeline --pipeline-depth 4 \
+//!                          --backends cpu,fpga,pipeline,int8 --pipeline-depth 4 \
+//!                          --precision int8 \
 //!                          --metrics-addr 127.0.0.1:9184 --trace-capacity 8192
 //! edgemlp loadgen          --addr 127.0.0.1:7878 --requests 10000 \
 //!                          --model qnet --warmup 500
@@ -186,7 +187,9 @@ fn cmd_infer(args: &Args) -> Result<()> {
 /// the wire protocol. Blocks until killed.
 fn cmd_serve(args: &Args) -> Result<()> {
     use edgemlp::coordinator::{BatchPolicy, CoordinatorConfig, DegradePolicy};
-    use edgemlp::serve::{BackendKind, EngineConfig, ModelRegistry, ServeConfig, Server};
+    use edgemlp::serve::{
+        BackendKind, EngineConfig, ModelRegistry, Precision, ServeConfig, Server,
+    };
     use std::time::Duration;
 
     let addr = args.get("addr", "127.0.0.1:7878");
@@ -205,6 +208,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let window_ms: f64 = args.get_parse("window-ms", 2.0).map_err(anyhow::Error::msg)?;
     let max_conns: usize = args.get_parse("max-conns", 64).map_err(anyhow::Error::msg)?;
     let spx_bits: u32 = args.get_parse("spx-bits", 5).map_err(anyhow::Error::msg)?;
+    // `--precision f32|spx|int8|int4` pins every slot's preferred
+    // serving precision; BACKEND_ANY then routes to matching pools.
+    let precision_arg = args.get("precision", "");
     let read_timeout_s: f64 =
         args.get_parse("read-timeout-s", 30.0).map_err(anyhow::Error::msg)?;
     // Observability knobs: `--metrics-addr host:port` starts the
@@ -234,6 +240,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if !(1..=64).contains(&pipeline_depth) {
         bail!("--pipeline-depth must be in 1..=64, got {pipeline_depth}");
     }
+    let precision: Option<Precision> = if precision_arg.is_empty() {
+        None
+    } else {
+        Some(
+            Precision::parse(&precision_arg)
+                .ok_or_else(|| anyhow::anyhow!("--precision '{precision_arg}' (f32|spx|int8|int4)"))?,
+        )
+    };
 
     let mlp = if random {
         let mut rng = Pcg32::new(2021);
@@ -275,8 +289,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 config: AccelConfig::default_fpga(),
                 depth: pipeline_depth,
             }),
-            other => bail!("unknown backend '{other}' (cpu|fpga|pipeline|pipeline-fpga)"),
+            "int8" => kinds.push(BackendKind::Int8),
+            "int4" => kinds.push(BackendKind::Int4),
+            other => {
+                bail!("unknown backend '{other}' (cpu|fpga|pipeline|pipeline-fpga|int8|int4)")
+            }
         }
+    }
+    if let Some(p) = precision {
+        for slot in registry.slots() {
+            slot.set_preferred_precision(Some(p));
+        }
+        println!("preferred precision: {p}");
     }
     let server = Server::serve(
         registry.clone(),
@@ -445,6 +469,7 @@ fn cmd_ctl(args: &Args) -> Result<()> {
     let model = args.get("model", "");
     let into = args.get("into", "");
     let out = args.get("out", "");
+    let precision_arg = args.get("precision", "");
     args.finish().map_err(anyhow::Error::msg)?;
 
     let mut client = Client::connect(&addr)?;
@@ -485,15 +510,23 @@ fn cmd_ctl(args: &Args) -> Result<()> {
         }
         "swap" => {
             if model.is_empty() {
-                bail!("--op swap needs --model <name> (and optionally --into <slot>)");
+                bail!("--op swap needs --model <name> (and optionally --into <slot>, \
+                       --precision f32|spx|int8|int4)");
             }
-            println!("{}", client.swap_model_into(&into, &model)?);
+            let precision = if precision_arg.is_empty() {
+                None
+            } else {
+                Some(edgemlp::serve::Precision::parse(&precision_arg).ok_or_else(|| {
+                    anyhow::anyhow!("--precision '{precision_arg}' (f32|spx|int8|int4)")
+                })?)
+            };
+            println!("{}", client.swap_model_with_precision(&into, &model, precision)?);
         }
         "models" => {
             use edgemlp::bench_harness::Table;
             let models = client.list_models()?;
             let mut table =
-                Table::new(&["slot", "active model", "version", "dims", "generation"]);
+                Table::new(&["slot", "active model", "version", "dims", "generation", "precision"]);
             for m in &models {
                 table.row(&[
                     m.slot.clone(),
@@ -501,6 +534,7 @@ fn cmd_ctl(args: &Args) -> Result<()> {
                     m.version.to_string(),
                     format!("{}→{}", m.input_dim, m.output_dim),
                     m.generation.to_string(),
+                    m.precision.label().to_string(),
                 ]);
             }
             table.print();
@@ -562,6 +596,9 @@ fn cmd_quant_ablation(args: &Args) -> Result<()> {
     let rows = quant_ablation::run(scale, &bits);
     println!("Quantization ablation (§3.2) — uniform vs PoT vs SP2 vs SPx\n");
     println!("{}", quant_ablation::render(&rows, fp32));
+    let (fp32_e2e, precision_rows) = quant_ablation::run_precision_modes(scale);
+    println!("\nServing-precision ablation — f32 vs SPx vs VSQ int8/int4 end to end\n");
+    println!("{}", quant_ablation::render_precision_modes(fp32_e2e, &precision_rows));
     Ok(())
 }
 

@@ -19,6 +19,11 @@
 //!   [`crate::fpga::pu::dot_shift_add`] per sample on every dispatch
 //!   path (integer arithmetic — summation order cannot matter), which
 //!   property tests pin down.
+//! * [`vsq_batch`] — the batched VSQ integer matmul (int8/int4 weights
+//!   with per-row-group scales, [`crate::quant::vsq`]): a
+//!   weight-stationary loop whose inner product is the SIMD-dispatched
+//!   widening `i8×i8→i32` dot — exact, so bit-identical across paths
+//!   and thread counts by construction.
 //! * [`simd`] — the dispatch layer itself: runtime ISA detection,
 //!   `EDGEMLP_FORCE_SCALAR=1` override, and the per-ISA kernels for
 //!   the GEMM micro-tile, the SPx MAC, Q1.15 quantization, the batch
@@ -36,8 +41,10 @@ pub mod pipeline;
 pub mod pool;
 pub mod simd;
 pub mod spx_batch;
+pub mod vsq_batch;
 
 pub use gemm::{gemm_into, gemm_into_with};
 pub use pipeline::{StageError, StageFn, StagePipeline, StageSnapshot};
 pub use simd::{active_path, force_scalar, native_path, DispatchPath};
 pub use spx_batch::{spx_matmul_batch, transpose_to_columns};
+pub use vsq_batch::vsq_matmul_batch;

@@ -102,6 +102,39 @@ pub(crate) unsafe fn mac_i32(acc: &mut [i64], col: &[i32], v: i64) {
     }
 }
 
+/// Widening i8 dot product `Σ a[i] as i32 * b[i] as i32`, 16 lanes per
+/// iteration: sign-extend to i16 (`vpmovsxbw`), multiply-add adjacent
+/// pairs into i32 (`vpmaddwd`), accumulate. Exact: products are
+/// ≤ 127² so the i16 multiplies cannot saturate, and the per-lane i32
+/// accumulators overflow only past ~10⁶ elements — far beyond any
+/// layer fan-in — so this is bit-identical to the scalar loop.
+///
+/// # Safety
+/// Requires AVX2. `a` and `b` must be equal length.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut acc = _mm256_setzero_si256();
+    let mut i = 0;
+    while i + 16 <= n {
+        let va = _mm256_cvtepi8_epi16(_mm_loadu_si128(a.as_ptr().add(i) as *const __m128i));
+        let vb = _mm256_cvtepi8_epi16(_mm_loadu_si128(b.as_ptr().add(i) as *const __m128i));
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(va, vb));
+        i += 16;
+    }
+    // Horizontal sum of the 8 i32 lanes.
+    let s = _mm_add_epi32(_mm256_castsi256_si128(acc), _mm256_extracti128_si256::<1>(acc));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b00_00_11_10>(s));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b00_00_00_01>(s));
+    let mut sum = _mm_cvtsi128_si32(s);
+    while i < n {
+        sum += a[i] as i32 * b[i] as i32;
+        i += 1;
+    }
+    sum
+}
+
 /// Vectorized [`crate::fpga::pu::to_fixed`] over a slice: divide,
 /// scale to Q1.15, clamp, round-half-away-from-zero, 8 lanes at a time.
 ///

@@ -13,6 +13,9 @@
 //!   `i32 × i32 → i64` multiply-accumulate. Integer arithmetic is
 //!   associative, so the vector form is **bit-identical** to the scalar
 //!   shift-add datapath (pinned by property tests);
+//! * the VSQ integer dot product ([`super::vsq_batch`]) — a widening
+//!   `i8 × i8 → i32` dot (`vpmaddwd` / `SMULL`+`SADALP`), likewise
+//!   exact and therefore bit-identical across paths;
 //! * the batch staging around it — Q1.15 quantization
 //!   ([`crate::fpga::pu::quantize_data_into`]), the batch transpose,
 //!   and the bias + activation output stage.
@@ -192,6 +195,24 @@ impl DispatchPath {
         }
     }
 
+    /// Widening i8 dot product `Σ a[i] as i32 * b[i] as i32` — the VSQ
+    /// integer GEMM inner loop (`super::vsq_batch`). Exact on every
+    /// path: products are ≤ 127², and i32 accumulation overflows only
+    /// past ~10⁶ elements, so the SIMD forms are bit-identical to the
+    /// scalar reference (pinned by `dot_i8_matches_scalar_bitwise`).
+    pub(crate) fn dot_i8(self, a: &[i8], b: &[i8]) -> i32 {
+        debug_assert_eq!(a.len(), b.len());
+        match self {
+            DispatchPath::Scalar => scalar::dot_i8(a, b),
+            #[cfg(target_arch = "x86_64")]
+            // Safety: the variant only exists after AVX2 detection.
+            DispatchPath::Avx2Fma => unsafe { avx2::dot_i8(a, b) },
+            #[cfg(target_arch = "aarch64")]
+            // Safety: the variant only exists after NEON detection.
+            DispatchPath::Neon => unsafe { neon::dot_i8(a, b) },
+        }
+    }
+
     /// Q1.15 quantization of a whole vector: `out[i]` is bit-identical
     /// to [`crate::fpga::pu::to_fixed`]`(d[i], d_scale)` on every path
     /// (the x86 kernel fixes nearest-even ties back to the scalar
@@ -296,6 +317,45 @@ mod tests {
                 assert_eq!(got, want, "path {}", path.name());
             }
         });
+    }
+
+    #[test]
+    fn dot_i8_matches_scalar_bitwise() {
+        property("SIMD i8 dot == scalar", 32, |rng| {
+            // Lengths straddle the 16-lane vector body, its tail, and
+            // the serving fan-ins; values span the full int8 range and
+            // the int4 subrange.
+            let n = match rng.index(4) {
+                0 => rng.index(40),
+                1 => 784,
+                2 => 128,
+                _ => 16 * (1 + rng.index(8)) + rng.index(16),
+            };
+            let int4 = rng.uniform() < 0.5;
+            let lim = if int4 { 7.0 } else { 127.0 };
+            let gen = |rng: &mut crate::util::rng::Pcg32| -> Vec<i8> {
+                (0..n).map(|_| rng.range(-lim - 0.49, lim + 0.49).round() as i8).collect()
+            };
+            let a = gen(rng);
+            let b = gen(rng);
+            let want = scalar::dot_i8(&a, &b);
+            for path in test_paths() {
+                assert_eq!(path.dot_i8(&a, &b), want, "path {} n {n}", path.name());
+            }
+        });
+    }
+
+    #[test]
+    fn dot_i8_extremes_and_empty() {
+        for path in test_paths() {
+            assert_eq!(path.dot_i8(&[], &[]), 0, "path {}", path.name());
+            // 784 × (-127·127) exercises the most negative realistic
+            // accumulation at the serving fan-in.
+            let a = vec![-127i8; 784];
+            let b = vec![127i8; 784];
+            assert_eq!(path.dot_i8(&a, &b), -127 * 127 * 784, "path {}", path.name());
+            assert_eq!(path.dot_i8(&b, &b), 127 * 127 * 784, "path {}", path.name());
+        }
     }
 
     #[test]

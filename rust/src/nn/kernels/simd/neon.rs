@@ -94,6 +94,35 @@ pub(crate) unsafe fn mac_i32(acc: &mut [i64], col: &[i32], v: i64) {
     }
 }
 
+/// Widening i8 dot product `Σ a[i] as i32 * b[i] as i32`, 16 lanes per
+/// iteration: `SMULL` the i8 halves into i16 products, then pairwise
+/// add-accumulate into i32 (`SADALP`). Exact — products are ≤ 127² and
+/// the i32 accumulators overflow only past ~10⁶ elements, so this is
+/// bit-identical to the scalar loop.
+///
+/// # Safety
+/// Requires NEON. `a` and `b` must be equal length.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut acc = vdupq_n_s32(0);
+    let mut i = 0;
+    while i + 16 <= n {
+        let va = vld1q_s8(a.as_ptr().add(i));
+        let vb = vld1q_s8(b.as_ptr().add(i));
+        acc = vpadalq_s16(acc, vmull_s8(vget_low_s8(va), vget_low_s8(vb)));
+        acc = vpadalq_s16(acc, vmull_s8(vget_high_s8(va), vget_high_s8(vb)));
+        i += 16;
+    }
+    let mut sum = vaddvq_s32(acc);
+    while i < n {
+        sum += a[i] as i32 * b[i] as i32;
+        i += 1;
+    }
+    sum
+}
+
 /// Vectorized [`crate::fpga::pu::to_fixed`]: divide, scale to Q1.15,
 /// round with `FCVTAS` (nearest, ties away from zero — `f32::round`'s
 /// exact rule, saturating on overflow), then clamp to the Q1.15 range.

@@ -45,6 +45,18 @@ pub(crate) fn mac_i32(acc: &mut [i64], col: &[i32], v: i64) {
     }
 }
 
+/// Widening i8 dot product: `Σ a[i] as i32 * b[i] as i32`. The VSQ
+/// integer GEMM's reference semantics — exact, so the SIMD forms are
+/// bit-identical by integer associativity.
+pub(crate) fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0i32;
+    for (&x, &y) in a.iter().zip(b) {
+        acc += x as i32 * y as i32;
+    }
+    acc
+}
+
 /// Per-element [`to_fixed`].
 pub(crate) fn quantize_into(d: &[f32], d_scale: f32, out: &mut [i32]) {
     for (o, &x) in out.iter_mut().zip(d) {

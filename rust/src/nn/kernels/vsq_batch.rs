@@ -1,0 +1,143 @@
+//! Batched, weight-stationary VSQ integer matmul (int8/int4 weights,
+//! per-row-group scales — see [`crate::quant::vsq`]).
+//!
+//! The dataflow mirrors [`super::spx_batch`]: weights stay resident
+//! while the batch streams past, but here both operands are plain `i8`
+//! rows, so no transpose is needed — a weight row and a sample row are
+//! both contiguous, and the inner loop is the SIMD-dispatched widening
+//! i8 dot product ([`super::simd::DispatchPath::dot_i8`]).
+//!
+//! Bit-exactness: the dot product is exact integer arithmetic (products
+//! ≤ 127², i32 accumulation), so every dispatch path produces the
+//! identical `i32`, and the single f32 scaling multiply per output
+//! element (`dot · w_scale·d_step`, one rounding) is likewise
+//! deterministic. The conformance suite pins batched-vs-per-sample and
+//! scalar-vs-SIMD identity across `test_paths()` and thread counts —
+//! thread-count invariance is structural (the kernel never splits a
+//! dot product).
+
+use crate::nn::kernels::simd::{self, DispatchPath};
+use crate::quant::vsq::{data_step, VsqTensor};
+
+/// `out[b][r] = (w_row_r · x_b) · scales[r/g] · d_scale/127` for every
+/// sample `b`, on the active dispatch path.
+///
+/// * `w` — VSQ-quantized `m×n` weight matrix.
+/// * `x_q` — row-major `batch×n` symmetric-int8 data codes (see
+///   [`crate::quant::vsq::quantize_data_i8_into`]).
+/// * `out` — row-major `batch×m` f32 output.
+pub fn vsq_matmul_batch(w: &VsqTensor, x_q: &[i8], batch: usize, d_scale: f32, out: &mut [f32]) {
+    vsq_matmul_batch_path(simd::active_path(), w, x_q, batch, d_scale, out);
+}
+
+/// [`vsq_matmul_batch`] pinned to an explicit dispatch path — parity
+/// tests drive forced-scalar and native through this.
+pub(crate) fn vsq_matmul_batch_path(
+    path: DispatchPath,
+    w: &VsqTensor,
+    x_q: &[i8],
+    batch: usize,
+    d_scale: f32,
+    out: &mut [f32],
+) {
+    let (m, n) = (w.rows(), w.cols());
+    assert_eq!(x_q.len(), batch * n, "data {} vs {batch}×{n}", x_q.len());
+    assert_eq!(out.len(), batch * m, "output {} vs {batch}×{m}", out.len());
+    if batch == 0 || m == 0 {
+        return;
+    }
+    let step = data_step(d_scale);
+    for r in 0..m {
+        let wr = w.row(r);
+        // One multiply per output element, outside the integer loop —
+        // the per-vector scale applied exactly once.
+        let row_scale = w.scale_for_row(r) * step;
+        for b in 0..batch {
+            let xb = &x_q[b * n..(b + 1) * n];
+            out[b * m + r] = path.dot_i8(wr, xb) as f32 * row_scale;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::vsq::quantize_data_i8_into;
+    use crate::quant::Calibration;
+    use crate::util::check::property;
+
+    /// Literal per-element reference: the semantics every path must hit.
+    fn reference(w: &VsqTensor, x_q: &[i8], batch: usize, d_scale: f32) -> Vec<f32> {
+        let (m, n) = (w.rows(), w.cols());
+        let step = data_step(d_scale);
+        let mut out = vec![0.0f32; batch * m];
+        for b in 0..batch {
+            for r in 0..m {
+                let mut acc = 0i32;
+                for j in 0..n {
+                    acc += w.row(r)[j] as i32 * x_q[b * n + j] as i32;
+                }
+                out[b * m + r] = acc as f32 * (w.scale_for_row(r) * step);
+            }
+        }
+        out
+    }
+
+    fn assert_bitwise_eq(got: &[f32], want: &[f32], ctx: &str) {
+        assert_eq!(got.len(), want.len(), "{ctx}");
+        for (i, (a, e)) in got.iter().zip(want).enumerate() {
+            assert_eq!(a.to_bits(), e.to_bits(), "{ctx} index {i}: {a} vs {e}");
+        }
+    }
+
+    #[test]
+    fn batched_matches_reference_bitwise_on_every_path() {
+        property("batched VSQ == per-element reference", 24, |rng| {
+            let bits = if rng.uniform() < 0.5 { 8u8 } else { 4 };
+            let m = 1 + rng.index(12);
+            let n = 1 + rng.index(100);
+            let batch = 1 + rng.index(9);
+            let group = 1 + rng.index(m);
+            let wdata: Vec<f32> = (0..m * n).map(|_| rng.normal() as f32).collect();
+            let w = VsqTensor::encode(bits, group, &wdata, m, n, Calibration::MaxAbs);
+            let d_scale = rng.range(0.5, 4.0) as f32;
+            let flat: Vec<f32> =
+                (0..batch * n).map(|_| rng.range(-1.0, 1.0) as f32).collect();
+            let mut x_q = Vec::new();
+            quantize_data_i8_into(&flat, d_scale, &mut x_q);
+            let want = reference(&w, &x_q, batch, d_scale);
+            for path in simd::test_paths() {
+                let mut got = vec![0.0f32; batch * m];
+                vsq_matmul_batch_path(path, &w, &x_q, batch, d_scale, &mut got);
+                assert_bitwise_eq(&got, &want, &format!("bits {bits} path {}", path.name()));
+            }
+        });
+    }
+
+    #[test]
+    fn serving_shape_matches_across_paths() {
+        // The 784→128 serving fan-in, where the SIMD body (not the
+        // tail) does nearly all the work.
+        let mut rng = crate::util::rng::Pcg32::new(23);
+        let (m, n, batch) = (128usize, 784usize, 3usize);
+        let wdata: Vec<f32> = (0..m * n).map(|_| rng.normal() as f32 * 0.1).collect();
+        let w = VsqTensor::encode(8, 16, &wdata, m, n, Calibration::MaxAbs);
+        let flat: Vec<f32> = (0..batch * n).map(|_| rng.range(-1.0, 1.0) as f32).collect();
+        let mut x_q = Vec::new();
+        quantize_data_i8_into(&flat, 1.0, &mut x_q);
+        let want = reference(&w, &x_q, batch, 1.0);
+        for path in simd::test_paths() {
+            let mut got = vec![0.0f32; batch * m];
+            vsq_matmul_batch_path(path, &w, &x_q, batch, 1.0, &mut got);
+            assert_bitwise_eq(&got, &want, path.name());
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let w = VsqTensor::encode(8, 2, &[0.25; 6], 2, 3, Calibration::MaxAbs);
+        let mut out = Vec::new();
+        vsq_matmul_batch(&w, &[], 0, 1.0, &mut out);
+        assert!(out.is_empty());
+    }
+}

@@ -14,6 +14,8 @@ pub mod metrics;
 pub mod mlp;
 pub mod tensor;
 pub mod train;
+pub mod vsq;
 
 pub use mlp::{Mlp, MlpConfig};
 pub use tensor::Matrix;
+pub use vsq::VsqMlp;

@@ -1,0 +1,262 @@
+//! VSQ model execution: an [`Mlp`] whose weights are int8/int4 with
+//! per-row-group scales ([`crate::quant::vsq`]), run through the
+//! batched integer kernel ([`crate::nn::kernels::vsq_batch`]).
+//!
+//! This is the low-bit sibling of
+//! [`crate::fpga::accelerator::QuantizedMlp`]: same layer sequencing,
+//! same SIMD-dispatched bias+activation output stage, but the matmul
+//! operand is 4–8× smaller than f32 — the serving win is memory
+//! bandwidth, not arithmetic (EXPERIMENTS.md §Quantized serving).
+//!
+//! Bit-exactness contract: the integer dot is exact on every dispatch
+//! path and the kernel never splits a reduction across threads, so a
+//! `VsqMlp` forward is bit-identical across `test_paths()` and
+//! `EDGEMLP_GEMM_THREADS` settings (pinned by the conformance suite).
+
+use crate::nn::activations::Activation;
+use crate::nn::kernels::{simd, vsq_matmul_batch};
+use crate::nn::mlp::Mlp;
+use crate::nn::tensor::Matrix;
+use crate::quant::vsq::{quantize_data_i8_into, VsqTensor};
+use crate::quant::Calibration;
+
+/// Default per-vector scale granularity: one f32 scale per 16 output
+/// rows — VS-Quant's sweet spot between per-tensor (too coarse at
+/// 4 bits) and per-row (scale storage ≈ int4 payload on small layers).
+pub const DEFAULT_GROUP_ROWS: usize = 16;
+
+/// One VSQ layer: integer weights, f32 bias, and the layer's symmetric
+/// int8 input range.
+#[derive(Debug, Clone)]
+pub struct VsqLayer {
+    pub w: VsqTensor,
+    pub b: Vec<f32>,
+    pub activation: Activation,
+    /// Symmetric int8 input range: inputs quantize as
+    /// `round(x · 127 / d_scale)`.
+    pub d_scale: f32,
+}
+
+impl VsqLayer {
+    /// One layer of the batched path: quantize `src` to int8 codes, run
+    /// the weight-stationary integer kernel into `dst` (resized in
+    /// place — every element is overwritten), then bias + activation in
+    /// the same SIMD-dispatched output stage the SPx path uses. `x_q`
+    /// is a caller-owned staging buffer reused across calls.
+    pub fn forward_batch_into(&self, src: &Matrix, dst: &mut Matrix, x_q: &mut Vec<i8>) {
+        let batch = src.rows;
+        let (m, n) = (self.w.rows(), self.w.cols());
+        debug_assert_eq!(src.cols, n);
+        quantize_data_i8_into(&src.data, self.d_scale, x_q);
+        dst.rows = batch;
+        dst.cols = m;
+        dst.data.resize(batch * m, 0.0);
+        vsq_matmul_batch(&self.w, x_q, batch, self.d_scale, &mut dst.data);
+        simd::active_path().bias_activation(&mut dst.data, &self.b, self.activation);
+    }
+}
+
+/// An MLP quantized to int8 or int4 with per-row-group scales.
+#[derive(Debug, Clone)]
+pub struct VsqMlp {
+    pub layers: Vec<VsqLayer>,
+    bits: u8,
+}
+
+impl VsqMlp {
+    /// Quantize a trained MLP to `bits` ∈ {8, 4}. `calib_inputs` (if
+    /// given) calibrates each layer's `d_scale` as the max-abs
+    /// activation over the batch; otherwise scales default to 1.0
+    /// (correct for sigmoid networks on `[0,1]` inputs — the paper's
+    /// MNIST setting). Deterministic: requantizing the same `Mlp`
+    /// reproduces the same codes and scales, which is what lets the
+    /// registry derive VSQ artifacts on load without a blob format
+    /// change.
+    pub fn from_mlp(
+        mlp: &Mlp,
+        bits: u8,
+        group_rows: usize,
+        calibration: Calibration,
+        calib_inputs: Option<&Matrix>,
+    ) -> Self {
+        let mut d_scales = vec![1.0f32; mlp.layers.len()];
+        if let Some(x) = calib_inputs {
+            let trace = mlp.forward_trace(x);
+            for (i, scale) in d_scales.iter_mut().enumerate() {
+                let max = trace[i].data.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                if max > 0.0 {
+                    *scale = max;
+                }
+            }
+        }
+        let layers = mlp
+            .layers
+            .iter()
+            .zip(d_scales)
+            .map(|(l, d_scale)| VsqLayer {
+                w: VsqTensor::encode(
+                    bits,
+                    group_rows,
+                    &l.w.data,
+                    l.w.rows,
+                    l.w.cols,
+                    calibration,
+                ),
+                b: l.b.clone(),
+                activation: l.activation,
+                d_scale,
+            })
+            .collect();
+        VsqMlp { layers, bits }
+    }
+
+    pub fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.layers[0].w.cols()
+    }
+
+    pub fn output_dim(&self) -> usize {
+        self.layers.last().expect("empty model").w.rows()
+    }
+
+    /// Batched forward: `x` is `B × input_dim`, result `B × output_dim`.
+    /// Ping-pong buffers like the SPx path; the int8 staging vector is
+    /// reused across layers.
+    pub fn forward_batch(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols, self.input_dim(), "input dim {} vs {}", x.cols, self.input_dim());
+        let mut ping = Matrix::zeros(0, 0);
+        let mut pong = Matrix::zeros(0, 0);
+        let mut x_q: Vec<i8> = Vec::new();
+        for (li, layer) in self.layers.iter().enumerate() {
+            if li == 0 {
+                layer.forward_batch_into(x, &mut ping, &mut x_q);
+            } else if li % 2 == 1 {
+                layer.forward_batch_into(&ping, &mut pong, &mut x_q);
+            } else {
+                layer.forward_batch_into(&pong, &mut ping, &mut x_q);
+            }
+        }
+        if self.layers.len() % 2 == 1 {
+            ping
+        } else {
+            pong
+        }
+    }
+
+    /// Single-sample forward — a batch of one through the same kernel,
+    /// so batch size can never change a bit.
+    pub fn forward_one(&self, x: &[f32]) -> Vec<f32> {
+        let m = Matrix::from_vec(1, x.len(), x.to_vec());
+        self.forward_batch(&m).data
+    }
+
+    /// Packed weight bytes streamed per sample: integer codes (int4
+    /// packs two per byte) + group scales + f32 biases. This is the
+    /// lower-better `bytes_per_sample` number metrics and benches
+    /// report per pool.
+    pub fn weight_bytes(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| l.w.bytes_total() as u64 + 4 * l.b.len() as u64)
+            .sum()
+    }
+}
+
+/// The f32 weight footprint of a plain [`Mlp`] (weights + biases), the
+/// baseline the VSQ/SPx `bytes_per_sample` numbers compare against.
+pub fn f32_weight_bytes(mlp: &Mlp) -> u64 {
+    mlp.layers
+        .iter()
+        .map(|l| 4 * (l.w.data.len() as u64 + l.b.len() as u64))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::mlp::MlpConfig;
+    use crate::util::check::assert_allclose;
+    use crate::util::rng::Pcg32;
+
+    fn small_mlp(rng: &mut Pcg32) -> Mlp {
+        Mlp::new(
+            MlpConfig {
+                sizes: vec![12, 8, 4],
+                activations: vec![Activation::Sigmoid, Activation::Sigmoid],
+            },
+            rng,
+        )
+    }
+
+    #[test]
+    fn forward_batch_matches_forward_one_bitwise() {
+        let mut rng = Pcg32::new(31);
+        let mlp = small_mlp(&mut rng);
+        for bits in [8u8, 4] {
+            let v = VsqMlp::from_mlp(&mlp, bits, 4, Calibration::MaxAbs, None);
+            for &batch in &[1usize, 2, 7] {
+                let x = Matrix::random_uniform(batch, 12, 1.0, &mut rng);
+                let batched = v.forward_batch(&x);
+                assert_eq!((batched.rows, batched.cols), (batch, 4));
+                for b in 0..batch {
+                    let single = v.forward_one(x.row(b));
+                    for (got, want) in batched.row(b).iter().zip(&single) {
+                        assert_eq!(got.to_bits(), want.to_bits(), "bits {bits} sample {b}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn int8_tracks_fp32_closely() {
+        let mut rng = Pcg32::new(32);
+        let mlp = small_mlp(&mut rng);
+        let v = VsqMlp::from_mlp(&mlp, 8, 4, Calibration::MaxAbs, None);
+        for _ in 0..8 {
+            let x: Vec<f32> = (0..12).map(|_| rng.uniform() as f32).collect();
+            let got = v.forward_one(&x);
+            let want = mlp.forward_one(&x);
+            // int8 weights + int8 data on a sigmoid net: a few ulps of
+            // the activation, far inside 1e-2.
+            assert_allclose(&got, &want, 2e-2, 2e-2);
+        }
+    }
+
+    #[test]
+    fn requantization_is_deterministic() {
+        let mut rng = Pcg32::new(33);
+        let mlp = small_mlp(&mut rng);
+        let a = VsqMlp::from_mlp(&mlp, 4, 4, Calibration::MaxAbs, None);
+        let b = VsqMlp::from_mlp(&mlp, 4, 4, Calibration::MaxAbs, None);
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(la.w, lb.w);
+        }
+    }
+
+    #[test]
+    fn weight_bytes_shrink_with_bits() {
+        let mut rng = Pcg32::new(34);
+        let mlp = Mlp::new(MlpConfig::paper_mnist(), &mut rng);
+        let v8 = VsqMlp::from_mlp(&mlp, 8, DEFAULT_GROUP_ROWS, Calibration::MaxAbs, None);
+        let v4 = VsqMlp::from_mlp(&mlp, 4, DEFAULT_GROUP_ROWS, Calibration::MaxAbs, None);
+        let f32b = f32_weight_bytes(&mlp);
+        assert!(v8.weight_bytes() * 3 < f32b, "{} vs {}", v8.weight_bytes(), f32b);
+        assert!(v4.weight_bytes() < v8.weight_bytes());
+        // Packed int4 ≈ half of int8 (scales + biases add a sliver).
+        assert!(v4.weight_bytes() * 2 < v8.weight_bytes() + f32b / 8);
+    }
+
+    #[test]
+    fn calibration_sets_layer_scales() {
+        let mut rng = Pcg32::new(35);
+        let mlp = small_mlp(&mut rng);
+        let x = Matrix::random_uniform(16, 12, 3.0, &mut rng);
+        let v = VsqMlp::from_mlp(&mlp, 8, 4, Calibration::MaxAbs, Some(&x));
+        assert!(v.layers[0].d_scale > 1.5);
+        assert!(v.layers[1].d_scale <= 1.0 + 1e-6);
+    }
+}

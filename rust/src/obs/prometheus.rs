@@ -137,6 +137,23 @@ pub fn render_prometheus(
         pools[p].expired as f64
     });
 
+    family(
+        &mut out,
+        "edgemlp_pool_bytes_per_sample",
+        "gauge",
+        "Weight bytes the pool streams per served sample at its precision.",
+    );
+    for (pool, m) in pools {
+        if m.bytes_per_sample > 0 {
+            sample(
+                &mut out,
+                "edgemlp_pool_bytes_per_sample",
+                &[("pool", pool)],
+                m.bytes_per_sample as f64,
+            );
+        }
+    }
+
     // ---- queue gauges (from the health view; names match pools) ----
     let health_gauge = |out: &mut String, name: &str, help: &str, f: &dyn Fn(usize) -> f64| {
         family(out, name, "gauge", help);

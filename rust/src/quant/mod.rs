@@ -10,12 +10,17 @@
 //! shift decomposition ([`spx::SpxCode`]) that the FPGA simulator's
 //! shift-add MACs and the Pallas kernel's exponent-field decode both use —
 //! bit-identical by construction, which the property tests pin down.
+//!
+//! [`vsq`] is the complementary *uniform* low-bit family: int8/int4 weight
+//! codes with per-row-group f32 scales (VS-Quant), feeding the SIMD integer
+//! dot kernels instead of the codebook machinery.
 
 pub mod calib;
 pub mod error;
 pub mod pot;
 pub mod spx;
 pub mod uniform;
+pub mod vsq;
 
 use crate::util::serde::NamedTensor;
 

@@ -1,0 +1,318 @@
+//! Per-vector-scaled low-bit integer quantization (VS-Quant after
+//! Keller et al.; see also FantastIC4's 4-bit MLPs in PAPERS.md).
+//!
+//! Where [`super::spx`] reproduces the paper's non-uniform shift-add
+//! levels, this module is the complementary *uniform* low-bit family:
+//! int8 / int4 weights with an f32 scale per **row group** (a "vector"
+//! of consecutive output rows). A small group recovers most of the
+//! accuracy a single per-tensor scale loses at 4 bits, while keeping
+//! the inner loop a pure integer dot product — the per-group scale is
+//! applied once per output element, outside the k-loop.
+//!
+//! Scale selection reuses the [`super::calib`] machinery against the
+//! matching symmetric [`super::uniform`] codebook (`uniform(8)` levels
+//! are exactly `k/127`, `uniform(4)` exactly `k/7`), so `MaxAbs`,
+//! `Percentile` and `MseSearch` all apply unchanged.
+//!
+//! The integer datapath is **exact**: products of two i8 values and
+//! their i32 accumulation over any realistic fan-in cannot overflow or
+//! round, so scalar and SIMD kernels agree bit-for-bit — the same
+//! contract the SPx shift-add path pins (see `nn/kernels/vsq_batch.rs`
+//! and the conformance suite).
+
+use super::{calib, uniform::uniform, Calibration};
+
+/// Largest representable magnitude for a symmetric `bits`-wide integer
+/// format: 127 for int8, 7 for int4 (restricted range, representable 0).
+pub fn qmax(bits: u8) -> i32 {
+    assert!(bits == 8 || bits == 4, "vsq bits must be 8 or 4, got {bits}");
+    (1i32 << (bits - 1)) - 1
+}
+
+/// A 2-D weight tensor quantized to int8 or int4 with one f32 scale per
+/// group of `group_rows` consecutive rows.
+///
+/// Values are stored one-per-byte as `i8` regardless of `bits` (int4
+/// values are clamped to `[-7, 7]`); [`bytes_total`](Self::bytes_total)
+/// reports the *packed* footprint (two int4 codes per byte) so the
+/// bandwidth accounting reflects what a packed deployment would move.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VsqTensor {
+    bits: u8,
+    rows: usize,
+    cols: usize,
+    group_rows: usize,
+    /// Row-major `rows × cols` integer codes.
+    q: Vec<i8>,
+    /// One scale per row group, `ceil(rows / group_rows)` entries.
+    /// Dequantized weight = `q[r][c] as f32 * scales[r / group_rows]`.
+    scales: Vec<f32>,
+}
+
+impl VsqTensor {
+    /// Quantize a row-major `rows × cols` f32 matrix. Each group of
+    /// `group_rows` rows gets its own `α` from `calibration`, mapped to
+    /// the integer scale `α / qmax`; codes are round-half-away-from-zero
+    /// with NaN → 0 (matching `fpga/pu.rs::to_fixed`'s convention).
+    pub fn encode(
+        bits: u8,
+        group_rows: usize,
+        data: &[f32],
+        rows: usize,
+        cols: usize,
+        calibration: Calibration,
+    ) -> Self {
+        assert!(group_rows > 0, "group_rows must be positive");
+        assert_eq!(data.len(), rows * cols, "data len != rows*cols");
+        let qm = qmax(bits) as f32;
+        let codebook = uniform(bits as u32);
+        let ngroups = rows.div_ceil(group_rows.min(rows.max(1)));
+        let mut scales = Vec::with_capacity(ngroups.max(1));
+        let mut q = vec![0i8; data.len()];
+        let mut g0 = 0usize;
+        while g0 < rows {
+            let g1 = (g0 + group_rows).min(rows);
+            let slice = &data[g0 * cols..g1 * cols];
+            let alpha = calib::pick_alpha(&codebook, slice, calibration);
+            let scale = if alpha > 0.0 { alpha / qm } else { 0.0 };
+            let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+            for (dst, &w) in q[g0 * cols..g1 * cols].iter_mut().zip(slice) {
+                let x = if w.is_finite() { w * inv } else { 0.0 };
+                *dst = x.round().clamp(-qm, qm) as i8;
+            }
+            scales.push(scale);
+            g0 = g1;
+        }
+        if rows == 0 {
+            scales.push(0.0);
+        }
+        VsqTensor { bits, rows, cols, group_rows, q, scales }
+    }
+
+    /// Rebuild from parts (deserialization path); validates invariants.
+    pub fn from_parts(
+        bits: u8,
+        rows: usize,
+        cols: usize,
+        group_rows: usize,
+        q: Vec<i8>,
+        scales: Vec<f32>,
+    ) -> Result<Self, String> {
+        if bits != 8 && bits != 4 {
+            return Err(format!("vsq bits must be 8 or 4, got {bits}"));
+        }
+        if group_rows == 0 {
+            return Err("group_rows must be positive".into());
+        }
+        if q.len() != rows * cols {
+            return Err(format!("q len {} != rows*cols {}", q.len(), rows * cols));
+        }
+        let want = rows.div_ceil(group_rows).max(1);
+        if scales.len() != want {
+            return Err(format!("scales len {} != {} groups", scales.len(), want));
+        }
+        let qm = qmax(bits) as i8;
+        if q.iter().any(|&v| v < -qm || v > qm) {
+            return Err(format!("code outside [-{qm}, {qm}]"));
+        }
+        if scales.iter().any(|s| !s.is_finite() || *s < 0.0) {
+            return Err("scale not finite or negative".into());
+        }
+        Ok(VsqTensor { bits, rows, cols, group_rows, q, scales })
+    }
+
+    pub fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn group_rows(&self) -> usize {
+        self.group_rows
+    }
+
+    pub fn scales(&self) -> &[f32] {
+        &self.scales
+    }
+
+    /// Row `r`'s integer codes (length `cols`).
+    pub fn row(&self, r: usize) -> &[i8] {
+        &self.q[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// The scale applied to row `r`'s dot products.
+    pub fn scale_for_row(&self, r: usize) -> f32 {
+        self.scales[r / self.group_rows]
+    }
+
+    /// Dequantize to row-major f32.
+    pub fn decode(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.q.len());
+        for r in 0..self.rows {
+            let s = self.scale_for_row(r);
+            out.extend(self.row(r).iter().map(|&v| v as f32 * s));
+        }
+        out
+    }
+
+    /// Packed weight bytes: one byte per int8 code, half a byte per
+    /// int4 code, plus 4 bytes per group scale.
+    pub fn bytes_total(&self) -> usize {
+        let code_bytes = match self.bits {
+            4 => self.q.len().div_ceil(2),
+            _ => self.q.len(),
+        };
+        code_bytes + 4 * self.scales.len()
+    }
+}
+
+/// Symmetric int8 activation quantization: `x → round(x · 127 / d_scale)`
+/// clamped to `±127`, NaN/inf → 0. The dequantization step is
+/// `d_scale / 127` — pair each dot product with
+/// `w_scale · d_scale / 127` to recover f32 (see `vsq_batch`).
+///
+/// Scalar on every dispatch path by design: quantization order never
+/// affects the integer codes, so path identity is structural.
+pub fn quantize_data_i8_into(data: &[f32], d_scale: f32, out: &mut Vec<i8>) {
+    out.clear();
+    out.reserve(data.len());
+    if !(d_scale.is_finite() && d_scale > 0.0) {
+        out.resize(data.len(), 0);
+        return;
+    }
+    let inv = 127.0 / d_scale;
+    for &x in data {
+        let v = if x.is_finite() { (x * inv).round().clamp(-127.0, 127.0) as i8 } else { 0 };
+        out.push(v);
+    }
+}
+
+/// The f32 step one data code represents: `d_scale / 127`.
+pub fn data_step(d_scale: f32) -> f32 {
+    d_scale / 127.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::property;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn qmax_values() {
+        assert_eq!(qmax(8), 127);
+        assert_eq!(qmax(4), 7);
+    }
+
+    #[test]
+    fn roundtrip_on_exact_levels() {
+        // Data already on int8 grid with per-group max 1.27 / 2.54 —
+        // encode/decode must be exact.
+        let data = [1.27f32, -0.64, 0.0, 0.01, 2.54, -1.27, 0.02, -2.54];
+        let t = VsqTensor::encode(8, 2, &data, 4, 2, Calibration::MaxAbs);
+        let back = t.decode();
+        for (a, b) in data.iter().zip(&back) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn group_scales_are_independent() {
+        // Row group 0 spans [-1,1], group 1 spans [-100,100]; per-group
+        // scales keep group 0's resolution fine.
+        let data = [1.0f32, -0.5, 100.0, -50.0];
+        let t = VsqTensor::encode(8, 1, &data, 2, 2, Calibration::MaxAbs);
+        assert_eq!(t.scales().len(), 2);
+        assert!((t.scale_for_row(0) - 1.0 / 127.0).abs() < 1e-9);
+        assert!((t.scale_for_row(1) - 100.0 / 127.0).abs() < 1e-6);
+        let back = t.decode();
+        assert!((back[1] - -0.5).abs() < 0.005, "fine group kept resolution: {}", back[1]);
+    }
+
+    #[test]
+    fn int4_codes_stay_in_range() {
+        let mut rng = Pcg32::new(11);
+        let data: Vec<f32> = (0..64).map(|_| rng.range(-3.0, 3.0) as f32).collect();
+        let t = VsqTensor::encode(4, 4, &data, 8, 8, Calibration::MaxAbs);
+        for r in 0..8 {
+            for &v in t.row(r) {
+                assert!((-7..=7).contains(&(v as i32)), "int4 code {v} out of range");
+            }
+        }
+    }
+
+    #[test]
+    fn nan_and_zero_groups_are_safe() {
+        let data = [f32::NAN, f32::INFINITY, 0.0, 0.0];
+        let t = VsqTensor::encode(8, 2, &data, 2, 2, Calibration::MaxAbs);
+        // NaN group calibrates to a NaN-free alpha only via max_abs fold
+        // (NaN.abs().max folds to the other values); codes must be finite.
+        for r in 0..2 {
+            for &v in t.row(r) {
+                assert!((-127..=127).contains(&(v as i32)));
+            }
+        }
+        let zero = VsqTensor::encode(8, 2, &[0.0; 4], 2, 2, Calibration::MaxAbs);
+        assert_eq!(zero.decode(), vec![0.0; 4]);
+    }
+
+    #[test]
+    fn bytes_total_accounts_packing() {
+        let data = vec![0.5f32; 128 * 10];
+        let t8 = VsqTensor::encode(8, 16, &data, 128, 10, Calibration::MaxAbs);
+        let t4 = VsqTensor::encode(4, 16, &data, 128, 10, Calibration::MaxAbs);
+        assert_eq!(t8.bytes_total(), 128 * 10 + 4 * 8);
+        assert_eq!(t4.bytes_total(), 128 * 10 / 2 + 4 * 8);
+    }
+
+    #[test]
+    fn from_parts_validates() {
+        assert!(VsqTensor::from_parts(8, 2, 2, 1, vec![0; 4], vec![0.1, 0.2]).is_ok());
+        assert!(VsqTensor::from_parts(5, 2, 2, 1, vec![0; 4], vec![0.1, 0.2]).is_err());
+        assert!(VsqTensor::from_parts(8, 2, 2, 1, vec![0; 3], vec![0.1, 0.2]).is_err());
+        assert!(VsqTensor::from_parts(8, 2, 2, 1, vec![0; 4], vec![0.1]).is_err());
+        assert!(VsqTensor::from_parts(4, 1, 2, 1, vec![8, 0], vec![0.1]).is_err());
+        assert!(VsqTensor::from_parts(8, 2, 2, 1, vec![0; 4], vec![0.1, f32::NAN]).is_err());
+    }
+
+    #[test]
+    fn data_quantizer_contract() {
+        let mut out = Vec::new();
+        quantize_data_i8_into(&[1.0, -1.0, 0.5, f32::NAN, 2.0], 1.0, &mut out);
+        assert_eq!(out, vec![127, -127, 64, 0, 127]);
+        quantize_data_i8_into(&[1.0, 2.0], 0.0, &mut out);
+        assert_eq!(out, vec![0, 0]);
+        quantize_data_i8_into(&[1.0, 2.0], f32::NAN, &mut out);
+        assert_eq!(out, vec![0, 0]);
+    }
+
+    #[test]
+    fn quant_error_bounded_by_half_step() {
+        property("vsq error bound", 32, |rng: &mut Pcg32| {
+            let bits = if rng.uniform() < 0.5 { 8u8 } else { 4 };
+            let rows = 1 + rng.index(12);
+            let cols = 1 + rng.index(24);
+            let group = 1 + rng.index(rows);
+            let data: Vec<f32> =
+                (0..rows * cols).map(|_| rng.range(-2.0, 2.0) as f32).collect();
+            let t = VsqTensor::encode(bits, group, &data, rows, cols, Calibration::MaxAbs);
+            let back = t.decode();
+            for r in 0..rows {
+                let half_step = t.scale_for_row(r) / 2.0;
+                for c in 0..cols {
+                    let (x, y) = (data[r * cols + c], back[r * cols + c]);
+                    assert!(
+                        (x - y).abs() <= half_step + 1e-6,
+                        "bits={bits} r={r} c={c} x={x} y={y}"
+                    );
+                }
+            }
+        });
+    }
+}

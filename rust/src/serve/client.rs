@@ -316,7 +316,21 @@ impl Client {
     /// Activate registered model `source` into serving slot `slot` (the
     /// empty slot name targets the default slot).
     pub fn swap_model_into(&mut self, slot: &str, source: &str) -> Result<String> {
-        let payload = wire::encode_swap(slot, source).map_err(|e| anyhow::anyhow!(e))?;
+        self.swap_model_with_precision(slot, source, None)
+    }
+
+    /// Activate registered model `source` into serving slot `slot`, and
+    /// optionally pin the slot's preferred serving precision (protocol
+    /// v4 — older servers reject the precision byte with `BadRequest`,
+    /// so callers talking to pre-v4 servers should pass `None`).
+    pub fn swap_model_with_precision(
+        &mut self,
+        slot: &str,
+        source: &str,
+        precision: Option<wire::Precision>,
+    ) -> Result<String> {
+        let payload =
+            wire::encode_swap_precision(slot, source, precision).map_err(|e| anyhow::anyhow!(e))?;
         let id = self.send(Opcode::SwapModel, payload)?;
         let resp = self.recv()?;
         if resp.request_id != id {

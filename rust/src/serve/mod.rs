@@ -23,8 +23,10 @@
 //!   [`Server::serve`] assembles the replicated multi-model engine
 //!   from an [`EngineConfig`];
 //! * [`registry`] — catalog of versioned models + independently
-//!   hot-swappable serving slots with EMLP+SPx persistence and
-//!   slot-following backends;
+//!   hot-swappable serving slots with EMLP+SPx persistence,
+//!   slot-following backends, and derived VSQ int8/int4 artifacts with
+//!   a per-slot precision preference ([`wire::Precision`],
+//!   docs/quantization-modes.md);
 //! * [`pipeline_backend`] — the stage-pipelined execution backend (one
 //!   thread per MLP layer, `depth` micro-batches in flight, bitwise
 //!   identical to the monolithic forward — docs/pipelined-engine.md);
@@ -54,10 +56,11 @@ pub use pipeline_backend::{
     SwappablePipelineCpuBackend, SwappablePipelineFpgaBackend,
 };
 pub use registry::{
-    swappable_cpu_factory, swappable_fpga_factory, ModelRegistry, ModelSlot, ModelVersion,
-    SwapError,
+    swappable_cpu_factory, swappable_fpga_factory, swappable_vsq_factory, ModelRegistry,
+    ModelSlot, ModelVersion, SwapError,
 };
 pub use server::{BackendKind, EngineConfig, ServeConfig, Server};
 pub use wire::{
-    Frame, HealthReport, ModelInfo, Opcode, PoolHealth, Priority, Qos, Status, BACKEND_ANY,
+    Frame, HealthReport, ModelInfo, Opcode, PoolHealth, Precision, Priority, Qos, Status,
+    BACKEND_ANY,
 };

@@ -21,18 +21,20 @@
 //! data ranges, so the quantized model reloads bit-identically without
 //! re-running calibration.
 
-use crate::coordinator::backend::{Backend, CpuBackend, FpgaBackend};
+use crate::coordinator::backend::{Backend, CpuBackend, FpgaBackend, VsqBackend};
 use crate::coordinator::server::SharedBackendFactory;
 use crate::fpga::accelerator::{AccelConfig, Accelerator, QuantizedLayer, QuantizedMlp};
 use crate::fpga::stats::CycleStats;
+use crate::nn::vsq::{VsqMlp, DEFAULT_GROUP_ROWS};
 use crate::nn::Mlp;
 use crate::quant::spx::{SpxConfig, SpxTensor};
 use crate::quant::Calibration;
+use crate::serve::wire::Precision;
 use crate::util::serde::{load_tensors, save_tensors, NamedTensor};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// One immutable registered model: the fp32 network plus its SPx
@@ -44,15 +46,44 @@ pub struct ModelVersion {
     pub version: u32,
     pub mlp: Mlp,
     pub quantized: QuantizedMlp,
+    /// Per-vector-scaled int8 artifact (see [`crate::quant::vsq`]).
+    /// Derived deterministically from `mlp` at registration/load time —
+    /// no blob format change needed, a reload requantizes to the exact
+    /// same codes.
+    pub vsq8: VsqMlp,
+    /// Per-vector-scaled int4 artifact.
+    pub vsq4: VsqMlp,
 }
 
 impl ModelVersion {
+    fn build(name: &str, version: u32, mlp: Mlp, quantized: QuantizedMlp) -> Arc<ModelVersion> {
+        let vsq8 = VsqMlp::from_mlp(&mlp, 8, DEFAULT_GROUP_ROWS, Calibration::MaxAbs, None);
+        let vsq4 = VsqMlp::from_mlp(&mlp, 4, DEFAULT_GROUP_ROWS, Calibration::MaxAbs, None);
+        Arc::new(ModelVersion { name: name.to_string(), version, mlp, quantized, vsq8, vsq4 })
+    }
+
     pub fn input_dim(&self) -> usize {
         self.mlp.input_dim()
     }
 
     pub fn output_dim(&self) -> usize {
         self.mlp.output_dim()
+    }
+
+    /// Packed weight bytes one sample streams under `precision` — the
+    /// lower-better `bytes_per_sample` number pools report in metrics.
+    pub fn weight_bytes(&self, precision: Precision) -> u64 {
+        match precision {
+            Precision::F32 => crate::nn::vsq::f32_weight_bytes(&self.mlp),
+            Precision::Spx => {
+                // SPx codes (sign + term bits) packed, plus f32 biases.
+                let bias: u64 =
+                    self.mlp.layers.iter().map(|l| 4 * l.b.len() as u64).sum();
+                self.quantized.weight_bits().div_ceil(8) + bias
+            }
+            Precision::Int8 => self.vsq8.weight_bytes(),
+            Precision::Int4 => self.vsq4.weight_bytes(),
+        }
     }
 }
 
@@ -63,7 +94,15 @@ pub struct ModelSlot {
     name: String,
     generation: AtomicU64,
     active: Mutex<Arc<ModelVersion>>,
+    /// Preferred serving precision for `BACKEND_ANY` traffic on this
+    /// slot, as a [`Precision`] wire byte; `NO_PREFERENCE` when unset.
+    /// Set via `serve --precision` or a v4 `SwapModel` precision byte;
+    /// read by routing and `ListModels`.
+    preferred: AtomicU8,
 }
+
+/// Sentinel for [`ModelSlot::preferred`]: no precision preference.
+const NO_PREFERENCE: u8 = u8::MAX;
 
 impl ModelSlot {
     fn new(name: &str, model: Arc<ModelVersion>) -> Arc<ModelSlot> {
@@ -71,7 +110,19 @@ impl ModelSlot {
             name: name.to_string(),
             generation: AtomicU64::new(1),
             active: Mutex::new(model),
+            preferred: AtomicU8::new(NO_PREFERENCE),
         })
+    }
+
+    /// The slot's preferred serving precision, if one was selected.
+    pub fn preferred_precision(&self) -> Option<Precision> {
+        Precision::from_u8(self.preferred.load(Ordering::SeqCst))
+    }
+
+    /// Select (or clear) the slot's preferred serving precision.
+    pub fn set_preferred_precision(&self, precision: Option<Precision>) {
+        let byte = precision.map(|p| p.as_u8()).unwrap_or(NO_PREFERENCE);
+        self.preferred.store(byte, Ordering::SeqCst);
     }
 
     /// The slot name clients route by.
@@ -144,7 +195,7 @@ impl ModelRegistry {
     /// [`ModelRegistry::register_mlp`].
     pub fn new(name: &str, mlp: Mlp, spx: SpxConfig) -> Arc<ModelRegistry> {
         let quantized = QuantizedMlp::from_mlp(&mlp, &spx, Calibration::MaxAbs, None);
-        let first = Arc::new(ModelVersion { name: name.to_string(), version: 1, mlp, quantized });
+        let first = ModelVersion::build(name, 1, mlp, quantized);
         let mut catalog = BTreeMap::new();
         catalog.insert(name.to_string(), first.clone());
         let mut slots = BTreeMap::new();
@@ -162,8 +213,7 @@ impl ModelRegistry {
         let quantized = QuantizedMlp::from_mlp(&mlp, &self.spx, Calibration::MaxAbs, None);
         let mut inner = self.inner.lock().unwrap();
         let version = inner.catalog.get(name).map(|m| m.version + 1).unwrap_or(1);
-        let model =
-            Arc::new(ModelVersion { name: name.to_string(), version, mlp, quantized });
+        let model = ModelVersion::build(name, version, mlp, quantized);
         inner.catalog.insert(name.to_string(), model.clone());
         model
     }
@@ -385,12 +435,7 @@ impl ModelRegistry {
         };
         let mut inner = self.inner.lock().unwrap();
         let version = inner.catalog.get(name).map(|m| m.version + 1).unwrap_or(1);
-        let model = Arc::new(ModelVersion {
-            name: name.to_string(),
-            version,
-            mlp,
-            quantized,
-        });
+        let model = ModelVersion::build(name, version, mlp, quantized);
         inner.catalog.insert(name.to_string(), model.clone());
         Ok(model)
     }
@@ -481,6 +526,55 @@ impl Backend for SwappableFpgaBackend {
     }
 }
 
+/// Low-bit integer backend following a slot's active model: a swap
+/// rebuilds the [`VsqBackend`] from the new version's pre-quantized
+/// int8/int4 artifact (no requantization on the serving path).
+pub struct SwappableVsqBackend {
+    slot: Arc<ModelSlot>,
+    bits: u8,
+    seen: u64,
+    inner: VsqBackend,
+}
+
+impl SwappableVsqBackend {
+    pub fn new(slot: Arc<ModelSlot>, bits: u8) -> Self {
+        let seen = slot.generation();
+        let inner = VsqBackend::new(Self::artifact(&slot, bits));
+        SwappableVsqBackend { slot, bits, seen, inner }
+    }
+
+    fn artifact(slot: &ModelSlot, bits: u8) -> VsqMlp {
+        let active = slot.active();
+        match bits {
+            4 => active.vsq4.clone(),
+            _ => active.vsq8.clone(),
+        }
+    }
+
+    fn refresh(&mut self) {
+        let generation = self.slot.generation();
+        if generation != self.seen {
+            self.inner = VsqBackend::new(Self::artifact(&self.slot, self.bits));
+            self.seen = generation;
+        }
+    }
+}
+
+impl Backend for SwappableVsqBackend {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn max_batch(&self) -> usize {
+        self.inner.max_batch()
+    }
+
+    fn infer(&mut self, inputs: &[Vec<f32>]) -> Result<(Vec<Vec<f32>>, Option<CycleStats>)> {
+        self.refresh();
+        self.inner.infer(inputs)
+    }
+}
+
 /// Replicable coordinator factory for slot-following CPU workers.
 pub fn swappable_cpu_factory(slot: Arc<ModelSlot>) -> SharedBackendFactory {
     Arc::new(move || Ok(Box::new(SwappableCpuBackend::new(slot.clone())) as Box<dyn Backend>))
@@ -493,6 +587,13 @@ pub fn swappable_fpga_factory(
 ) -> SharedBackendFactory {
     Arc::new(move || {
         Ok(Box::new(SwappableFpgaBackend::new(slot.clone(), config)) as Box<dyn Backend>)
+    })
+}
+
+/// Replicable coordinator factory for slot-following int8/int4 workers.
+pub fn swappable_vsq_factory(slot: Arc<ModelSlot>, bits: u8) -> SharedBackendFactory {
+    Arc::new(move || {
+        Ok(Box::new(SwappableVsqBackend::new(slot.clone(), bits)) as Box<dyn Backend>)
     })
 }
 
@@ -666,6 +767,69 @@ mod tests {
 
         let (fpga_after, _) = fpga.infer(&[x.clone()]).unwrap();
         assert_ne!(fpga_before[0], fpga_after[0], "swap did not change fpga outputs");
+    }
+
+    #[test]
+    fn vsq_artifacts_reload_bitwise_from_blob() {
+        // No VSQ sidecar exists in the blob format: the artifact is
+        // derived deterministically from the fp32 tensors, so a reload
+        // must reproduce the exact codes and scales.
+        let reg = registry();
+        let file = TestFile::new("vsq");
+        reg.save_blob("default", &file.0).unwrap();
+        let back = reg.load_blob("reloaded", &file.0).unwrap();
+        let orig = reg.get("default").unwrap();
+        for (a, b) in back.vsq8.layers.iter().zip(&orig.vsq8.layers) {
+            assert_eq!(a.w, b.w);
+            assert_eq!(a.d_scale, b.d_scale);
+        }
+        for (a, b) in back.vsq4.layers.iter().zip(&orig.vsq4.layers) {
+            assert_eq!(a.w, b.w);
+        }
+        assert_eq!(back.vsq8.bits(), 8);
+        assert_eq!(back.vsq4.bits(), 4);
+    }
+
+    #[test]
+    fn weight_bytes_order_across_precisions() {
+        let reg = registry();
+        let m = reg.active();
+        let f32b = m.weight_bytes(Precision::F32);
+        let spx = m.weight_bytes(Precision::Spx);
+        let i8b = m.weight_bytes(Precision::Int8);
+        let i4b = m.weight_bytes(Precision::Int4);
+        assert!(i4b < i8b, "int4 {i4b} !< int8 {i8b}");
+        assert!(i8b < f32b, "int8 {i8b} !< f32 {f32b}");
+        assert!(spx < f32b, "spx {spx} !< f32 {f32b}");
+    }
+
+    #[test]
+    fn slot_precision_preference_roundtrips() {
+        let reg = registry();
+        let slot = reg.default_slot();
+        assert_eq!(slot.preferred_precision(), None);
+        slot.set_preferred_precision(Some(Precision::Int4));
+        assert_eq!(slot.preferred_precision(), Some(Precision::Int4));
+        slot.set_preferred_precision(None);
+        assert_eq!(slot.preferred_precision(), None);
+    }
+
+    #[test]
+    fn swappable_vsq_backend_follows_slot_activation() {
+        let reg = registry();
+        let v2 = small_mlp(2);
+        reg.register_mlp("v2", v2.clone());
+        let x = vec![0.4f32; 8];
+        let slot = reg.default_slot();
+        for bits in [8u8, 4] {
+            let mut be = SwappableVsqBackend::new(slot.clone(), bits);
+            assert_eq!(be.name(), format!("int{bits}"));
+            let (before, _) = be.infer(&[x.clone()]).unwrap();
+            reg.activate("v2").unwrap();
+            let (after, _) = be.infer(&[x.clone()]).unwrap();
+            assert_ne!(before[0], after[0], "int{bits} swap did not change outputs");
+            reg.activate("default").unwrap();
+        }
     }
 
     #[test]

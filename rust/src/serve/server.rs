@@ -27,8 +27,8 @@
 use super::pipeline_backend::{pipeline_cpu_factory_traced, pipeline_fpga_factory_traced};
 use super::registry::{ModelRegistry, ModelSlot, SwapError};
 use super::wire::{
-    self, Frame, HealthReport, ModelInfo, Opcode, PoolHealth, ReadError, Status, BACKEND_ANY,
-    DEFAULT_MAX_PAYLOAD,
+    self, Frame, HealthReport, ModelInfo, Opcode, PoolHealth, Precision, ReadError, Status,
+    BACKEND_ANY, DEFAULT_MAX_PAYLOAD,
 };
 use crate::coordinator::degrade::{DegradeController, DegradePolicy};
 use crate::coordinator::request::{FailureKind, InferResult};
@@ -112,6 +112,12 @@ pub enum BackendKind {
         /// Maximum in-flight micro-batches (CLI `--pipeline-depth`).
         depth: usize,
     },
+    /// The VSQ int8 integer forward ([`crate::coordinator::VsqBackend`]):
+    /// per-row-group scaled int8 weights through the SIMD widening dot.
+    Int8,
+    /// The VSQ int4 variant — the smallest weight footprint the engine
+    /// can serve, and what degraded mode prefers.
+    Int4,
 }
 
 impl BackendKind {
@@ -121,19 +127,36 @@ impl BackendKind {
             BackendKind::FpgaSim(_) => "fpga",
             BackendKind::PipelineCpu { .. } => "pipeline",
             BackendKind::PipelineFpga { .. } => "pipeline-fpga",
+            BackendKind::Int8 => "int8",
+            BackendKind::Int4 => "int4",
         }
     }
 
-    /// Relative serving cost, lower = cheaper. Degraded mode routes
-    /// `BACKEND_ANY` traffic to the model's cheapest kind — the SPx
-    /// shift-add datapaths beat the f32 CPU forwards, mirroring the
-    /// paper's precision-for-power trade.
+    /// The numeric precision this kind serves at — what `ListModels`
+    /// reports for a slot with no explicit preference, and the key for
+    /// its weight-footprint metrics.
+    fn precision(&self) -> Precision {
+        match self {
+            BackendKind::Cpu | BackendKind::PipelineCpu { .. } => Precision::F32,
+            BackendKind::FpgaSim(_) | BackendKind::PipelineFpga { .. } => Precision::Spx,
+            BackendKind::Int8 => Precision::Int8,
+            BackendKind::Int4 => Precision::Int4,
+        }
+    }
+
+    /// Relative serving cost, lower = cheaper — ordered by weight bytes
+    /// moved per sample. Degraded mode routes `BACKEND_ANY` traffic to
+    /// the model's cheapest kind: the packed int4/int8 integer paths
+    /// beat the SPx shift-add datapaths, which beat the f32 CPU
+    /// forwards — the paper's precision-for-power trade.
     fn cost_rank(&self) -> u8 {
         match self {
-            BackendKind::FpgaSim(_) => 0,
-            BackendKind::PipelineFpga { .. } => 1,
-            BackendKind::PipelineCpu { .. } => 2,
-            BackendKind::Cpu => 3,
+            BackendKind::Int4 => 0,
+            BackendKind::Int8 => 1,
+            BackendKind::FpgaSim(_) => 2,
+            BackendKind::PipelineFpga { .. } => 3,
+            BackendKind::PipelineCpu { .. } => 4,
+            BackendKind::Cpu => 5,
         }
     }
 }
@@ -171,6 +194,11 @@ const READ_TICK: Duration = Duration::from_millis(100);
 struct ModelRoute {
     slot: Arc<ModelSlot>,
     pools: Vec<usize>,
+    /// Serving precision of each pool, parallel to `pools` — the
+    /// `ListModels` column and the filter for a slot's precision
+    /// preference (empty on the low-level [`Server::start`] path, where
+    /// backend kinds are unknown).
+    precisions: Vec<Precision>,
     input_dim: usize,
     /// Hysteresis state machine deciding when sustained saturation
     /// flips this model's `BACKEND_ANY` routing to `cheapest_pool`.
@@ -259,6 +287,12 @@ impl Server {
                             pool_tracer.clone(),
                         )
                     }
+                    BackendKind::Int8 => {
+                        super::registry::swappable_vsq_factory(slot.clone(), 8)
+                    }
+                    BackendKind::Int4 => {
+                        super::registry::swappable_vsq_factory(slot.clone(), 4)
+                    }
                 };
                 indices.push(pools.len());
                 pools.push(PoolSpec::replicated(
@@ -282,6 +316,7 @@ impl Server {
                 ModelRoute {
                     slot,
                     pools: indices,
+                    precisions: engine.backends.iter().map(|k| k.precision()).collect(),
                     input_dim,
                     degrade: DegradeController::new(engine.serve.degrade),
                     cheapest_pool: cheapest,
@@ -289,6 +324,19 @@ impl Server {
             );
         }
         let coord = Coordinator::start_traced(pools, engine.coordinator, pool_tracer)?;
+        // Register each pool's weight footprint (bytes streamed per
+        // sample) with the metrics sink — a static property of the
+        // (model, precision) pair: `activate_into` refuses dimension
+        // changes, so the figure holds across swaps.
+        for route in routes.values() {
+            let active = route.slot.active();
+            for (kind, _) in engine.backends.iter().zip(&route.pools) {
+                coord.metrics().set_pool_bytes(
+                    &format!("{}/{}", kind.label(), route.slot.name()),
+                    active.weight_bytes(kind.precision()),
+                );
+            }
+        }
         let default_model = registry.default_slot_name().to_string();
         Self::start_inner(coord, registry, routes, default_model, addr, engine.serve, tracer)
     }
@@ -312,6 +360,7 @@ impl Server {
             ModelRoute {
                 slot,
                 pools: (0..coord.num_pools()).collect(),
+                precisions: Vec::new(),
                 input_dim,
                 degrade: DegradeController::new(config.degrade),
                 // A caller-built coordinator carries no backend-kind
@@ -816,10 +865,13 @@ fn dispatch(frame: Frame, tx: &Sender<Outgoing>, shared: &Shared) -> bool {
                             input_dim: active.input_dim() as u32,
                             output_dim: active.output_dim() as u32,
                             generation: route.slot.generation(),
+                            precision: route_precision(route),
                         }
                     })
                     .collect();
-                match wire::encode_model_list(&models) {
+                // Encode at the REQUEST's version: the v4 precision
+                // suffix would be trailing garbage to a pre-v4 decoder.
+                match wire::encode_model_list_at(&models, version) {
                     Ok(payload) => Outgoing::Ready(Frame::ok(Opcode::ListModels, id, payload)),
                     Err(e) => Outgoing::Ready(Frame::error(
                         Opcode::ListModels,
@@ -830,20 +882,33 @@ fn dispatch(frame: Frame, tx: &Sender<Outgoing>, shared: &Shared) -> bool {
                 }
             }
         }
-        Opcode::SwapModel => match wire::decode_swap(&frame.payload, version) {
+        Opcode::SwapModel => match wire::decode_swap_precision(&frame.payload, version) {
             Err(e) => bad_request(shared, "decode_swap", Opcode::SwapModel, id, &e),
-            Ok((slot, source)) => match shared.registry.activate_into(&slot, &source) {
-                Ok((model, generation)) => Outgoing::Ready(Frame::ok(
-                    Opcode::SwapModel,
-                    id,
-                    format!(
-                        "slot {} now serves {} v{} (generation {generation})",
-                        if slot.is_empty() { &shared.default_model } else { &slot },
-                        model.name,
-                        model.version
-                    )
-                    .into_bytes(),
-                )),
+            Ok((slot, source, precision)) => match shared.registry.activate_into(&slot, &source)
+            {
+                Ok((model, generation)) => {
+                    let name =
+                        if slot.is_empty() { shared.default_model.as_str() } else { &slot };
+                    // The v4 precision byte pins the slot's serving
+                    // precision alongside the activation; absent, the
+                    // existing preference is left untouched.
+                    let precision_note = match (precision, shared.routes.get(name)) {
+                        (Some(p), Some(route)) => {
+                            route.slot.set_preferred_precision(Some(p));
+                            format!(", precision {p}")
+                        }
+                        _ => String::new(),
+                    };
+                    Outgoing::Ready(Frame::ok(
+                        Opcode::SwapModel,
+                        id,
+                        format!(
+                            "slot {name} now serves {} v{} (generation {generation}{precision_note})",
+                            model.name, model.version
+                        )
+                        .into_bytes(),
+                    ))
+                }
                 Err(e @ (SwapError::UnknownModel(_) | SwapError::UnknownSlot(_))) => {
                     Outgoing::Ready(Frame::error(
                         Opcode::SwapModel,
@@ -1033,6 +1098,18 @@ fn health_report(shared: &Shared) -> HealthReport {
     }
 }
 
+/// The precision `ListModels` reports for one slot: its pinned
+/// preference if an operator set one, else the precision of the route's
+/// first (wire index 0) backend kind. The low-level [`Server::start`]
+/// path carries no kind info and reports f32.
+fn route_precision(route: &ModelRoute) -> Precision {
+    route
+        .slot
+        .preferred_precision()
+        .or_else(|| route.precisions.first().copied())
+        .unwrap_or(Precision::F32)
+}
+
 /// A routing failure, opcode-agnostic.
 struct RouteError(Status, String);
 
@@ -1068,7 +1145,24 @@ fn resolve_pool(
         ));
     }
     if requested == BACKEND_ANY {
-        let idx = shared.coord.least_loaded_of(&route.pools).ok_or_else(|| {
+        // A pinned slot precision narrows `BACKEND_ANY` to the pools
+        // serving at it; if no pool matches (or the preference predates
+        // a backend-set change), every pool stays in play. Explicitly
+        // indexed requests bypass the preference entirely.
+        let preferred: Option<Vec<usize>> = route.slot.preferred_precision().map(|p| {
+            route
+                .pools
+                .iter()
+                .zip(&route.precisions)
+                .filter(|(_, prec)| **prec == p)
+                .map(|(i, _)| *i)
+                .collect()
+        });
+        let candidates: &[usize] = match &preferred {
+            Some(v) if !v.is_empty() => v,
+            _ => &route.pools,
+        };
+        let idx = shared.coord.least_loaded_of(candidates).ok_or_else(|| {
             RouteError(Status::Internal, "model has no serving pools".into())
         })?;
         // Degraded-mode check rides the routing decision: the occupancy
@@ -1122,7 +1216,8 @@ fn submit_error_frame(opcode: Opcode, id: u64, e: SubmitError) -> Frame {
 mod tests {
     use super::*;
 
-    /// Degraded mode must prefer the SPx shift-add datapaths over the
+    /// Degraded mode must prefer the lowest-bytes-per-sample datapath:
+    /// packed int4, then int8, then the SPx shift-add paths, then the
     /// f32 CPU forwards — the paper's precision-for-power trade.
     #[test]
     fn cheapest_backend_is_the_quantized_datapath() {
@@ -1131,12 +1226,40 @@ mod tests {
             BackendKind::PipelineCpu { depth: 2 },
             BackendKind::PipelineFpga { config: AccelConfig::default_fpga(), depth: 2 },
             BackendKind::FpgaSim(AccelConfig::default_fpga()),
+            BackendKind::Int8,
+            BackendKind::Int4,
         ];
         let cheapest = kinds.iter().min_by_key(|k| k.cost_rank()).unwrap();
-        assert!(matches!(cheapest, BackendKind::FpgaSim(_)));
+        assert!(matches!(cheapest, BackendKind::Int4));
         let mut ranks: Vec<u8> = kinds.iter().map(|k| k.cost_rank()).collect();
         ranks.sort_unstable();
-        assert_eq!(ranks, vec![0, 1, 2, 3], "cost ranks must be a strict order");
+        assert_eq!(ranks, vec![0, 1, 2, 3, 4, 5], "cost ranks must be a strict order");
+        // Without the integer kinds the SPx datapath stays cheapest —
+        // the pre-existing degraded-mode behavior.
+        let cheapest_spx = kinds[..4].iter().min_by_key(|k| k.cost_rank()).unwrap();
+        assert!(matches!(cheapest_spx, BackendKind::FpgaSim(_)));
+    }
+
+    /// Every backend kind maps to the wire precision its pool serves
+    /// at, and labels match the CLI spellings `Precision::parse` takes.
+    #[test]
+    fn backend_kinds_report_their_precision() {
+        let cases = [
+            (BackendKind::Cpu, Precision::F32),
+            (BackendKind::PipelineCpu { depth: 2 }, Precision::F32),
+            (BackendKind::FpgaSim(AccelConfig::default_fpga()), Precision::Spx),
+            (
+                BackendKind::PipelineFpga { config: AccelConfig::default_fpga(), depth: 2 },
+                Precision::Spx,
+            ),
+            (BackendKind::Int8, Precision::Int8),
+            (BackendKind::Int4, Precision::Int4),
+        ];
+        for (kind, want) in cases {
+            assert_eq!(kind.precision(), want, "{}", kind.label());
+        }
+        assert_eq!(Precision::parse(BackendKind::Int8.label()), Some(Precision::Int8));
+        assert_eq!(Precision::parse(BackendKind::Int4.label()), Some(Precision::Int4));
     }
 
     #[test]

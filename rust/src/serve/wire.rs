@@ -22,7 +22,12 @@
 //! extension block on the `Health` response carrying the
 //! busy-rejection and bad-request-by-cause counters. Pre-v4 `Health`
 //! responses omit the extension, so v3 clients decode exactly the
-//! bytes they always did.
+//! bytes they always did. Version 4 also carries the numeric-precision
+//! extensions: `ListModels` responses append one [`Precision`] byte per
+//! slot after the entry table, and `SwapModel` requests may append one
+//! optional [`Precision`] byte pinning the slot's serving precision —
+//! both strict suffix extensions, so every pre-v4 byte stays exactly
+//! where v1–v3 clients expect it.
 //!
 //! Version-1 through version-3 frames are still accepted: their
 //! payloads carry no QoS fields and default to "no deadline, normal
@@ -241,6 +246,66 @@ impl Qos {
             ));
         }
         Ok(())
+    }
+}
+
+/// Numeric precision a serving slot runs at — the v4 wire byte behind
+/// the `ListModels` precision column and the optional `SwapModel`
+/// precision preference (docs/quantization-modes.md).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+#[repr(u8)]
+pub enum Precision {
+    /// Full-precision f32 — the CPU baseline datapath.
+    #[default]
+    F32 = 0,
+    /// SPx shift-add codebook quantization — the FPGA datapath.
+    Spx = 1,
+    /// VSQ int8: per-row-group scaled integer weights.
+    Int8 = 2,
+    /// VSQ int4: per-row-group scaled, packed low-bit integer weights.
+    Int4 = 3,
+}
+
+impl Precision {
+    pub fn from_u8(v: u8) -> Option<Precision> {
+        match v {
+            0 => Some(Precision::F32),
+            1 => Some(Precision::Spx),
+            2 => Some(Precision::Int8),
+            3 => Some(Precision::Int4),
+            _ => None,
+        }
+    }
+
+    pub fn as_u8(self) -> u8 {
+        self as u8
+    }
+
+    /// Stable lowercase label used by the CLI, pool metrics and docs.
+    pub fn label(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Spx => "spx",
+            Precision::Int8 => "int8",
+            Precision::Int4 => "int4",
+        }
+    }
+
+    /// Parse an operator spelling of a precision mode (CLI flags).
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s.trim() {
+            "f32" | "fp32" | "float" => Some(Precision::F32),
+            "spx" => Some(Precision::Spx),
+            "int8" | "i8" => Some(Precision::Int8),
+            "int4" | "i4" => Some(Precision::Int4),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
     }
 }
 
@@ -799,18 +864,58 @@ pub fn encode_swap(slot: &str, source: &str) -> Result<Vec<u8>, String> {
     Ok(out)
 }
 
+/// [`encode_swap`] plus the v4 suffix extension: an optional trailing
+/// [`Precision`] byte pinning the slot's serving precision. `None`
+/// encodes exactly the v2 layout, so the payload stays decodable by
+/// pre-v4 servers.
+pub fn encode_swap_precision(
+    slot: &str,
+    source: &str,
+    precision: Option<Precision>,
+) -> Result<Vec<u8>, String> {
+    let mut out = encode_swap(slot, source)?;
+    if let Some(p) = precision {
+        out.push(p.as_u8());
+    }
+    Ok(out)
+}
+
 /// Decode a `SwapModel` payload framed at `version` into
 /// `(slot, source)`. The v1 single-string form targets the default
-/// slot (empty slot name).
+/// slot (empty slot name). A trailing precision byte (v4) is accepted
+/// and discarded — servers that act on it use
+/// [`decode_swap_precision`].
 pub fn decode_swap(payload: &[u8], version: u16) -> Result<(String, String), String> {
+    let (slot, source, _precision) = decode_swap_precision(payload, version)?;
+    Ok((slot, source))
+}
+
+/// [`decode_swap`] plus the v4 precision extension: one optional
+/// trailing byte selecting the slot's serving precision. Only v4
+/// framing may carry it — on v2/v3 payloads a trailing byte fails the
+/// exact-length check (`BadRequest`, never a panic), and an unknown
+/// precision value is rejected by name.
+pub fn decode_swap_precision(
+    payload: &[u8],
+    version: u16,
+) -> Result<(String, String, Option<Precision>), String> {
     if version >= 2 {
         let mut b = Buf::new(payload);
         let slot = b.name()?;
         let source = b.name()?;
+        let precision = if version >= 4 && b.remaining() > 0 {
+            let raw = b.u8()?;
+            Some(
+                Precision::from_u8(raw)
+                    .ok_or_else(|| format!("unknown precision value {raw}"))?,
+            )
+        } else {
+            None
+        };
         b.finish()?;
-        Ok((slot, source))
+        Ok((slot, source, precision))
     } else {
-        Ok((String::new(), decode_str(payload)?))
+        Ok((String::new(), decode_str(payload)?, None))
     }
 }
 
@@ -828,12 +933,24 @@ pub struct ModelInfo {
     pub output_dim: u32,
     /// The slot's swap generation (bumped per activation).
     pub generation: u64,
+    /// Numeric precision the slot serves at (v4 extension;
+    /// [`Precision::F32`] when decoding a pre-v4 payload).
+    pub precision: Precision,
+}
+
+/// `ListModels` response payload at the current version — see
+/// [`encode_model_list_at`].
+pub fn encode_model_list(models: &[ModelInfo]) -> Result<Vec<u8>, String> {
+    encode_model_list_at(models, VERSION)
 }
 
 /// `ListModels` response payload: `u32 count | count × (u16 slot_len |
 /// slot | u16 model_len | model | u32 version | u32 input_dim |
-/// u32 output_dim | u64 generation)`.
-pub fn encode_model_list(models: &[ModelInfo]) -> Result<Vec<u8>, String> {
+/// u32 output_dim | u64 generation)`, followed (v4+ framing only) by a
+/// suffix extension of `count` [`Precision`] bytes, one per entry in
+/// table order. Pre-v4 framing omits the suffix so old clients decode
+/// exactly the bytes they always did.
+pub fn encode_model_list_at(models: &[ModelInfo], version: u16) -> Result<Vec<u8>, String> {
     let mut out = Vec::new();
     out.extend_from_slice(&(models.len() as u32).to_le_bytes());
     for m in models {
@@ -843,6 +960,11 @@ pub fn encode_model_list(models: &[ModelInfo]) -> Result<Vec<u8>, String> {
         out.extend_from_slice(&m.input_dim.to_le_bytes());
         out.extend_from_slice(&m.output_dim.to_le_bytes());
         out.extend_from_slice(&m.generation.to_le_bytes());
+    }
+    if version >= 4 {
+        for m in models {
+            out.push(m.precision.as_u8());
+        }
     }
     Ok(out)
 }
@@ -864,7 +986,24 @@ pub fn decode_model_list(payload: &[u8]) -> Result<Vec<ModelInfo>, String> {
             input_dim: b.u32()?,
             output_dim: b.u32()?,
             generation: b.u64()?,
+            precision: Precision::F32,
         });
+    }
+    // v4 precision suffix, present iff bytes remain after the entry
+    // table — pre-v4 payloads end exactly here. A partial suffix is
+    // malformed: it is all entries or none.
+    if b.remaining() > 0 {
+        if b.remaining() != count {
+            return Err(format!(
+                "precision suffix has {} bytes for {count} models",
+                b.remaining()
+            ));
+        }
+        for m in models.iter_mut() {
+            let raw = b.u8()?;
+            m.precision = Precision::from_u8(raw)
+                .ok_or_else(|| format!("unknown precision value {raw}"))?;
+        }
     }
     b.finish()?;
     Ok(models)
@@ -1275,6 +1414,7 @@ mod tests {
                 input_dim: 784,
                 output_dim: 10,
                 generation: 7,
+                precision: Precision::Spx,
             },
             ModelInfo {
                 slot: "qnet".into(),
@@ -1283,6 +1423,7 @@ mod tests {
                 input_dim: 6,
                 output_dim: 3,
                 generation: 1,
+                precision: Precision::Int4,
             },
         ];
         let payload = encode_model_list(&models).unwrap();
@@ -1291,6 +1432,95 @@ mod tests {
         let mut p = Vec::new();
         p.extend_from_slice(&u32::MAX.to_le_bytes());
         assert!(decode_model_list(&p).is_err());
+    }
+
+    #[test]
+    fn precision_byte_contract() {
+        for (p, byte, label) in [
+            (Precision::F32, 0u8, "f32"),
+            (Precision::Spx, 1, "spx"),
+            (Precision::Int8, 2, "int8"),
+            (Precision::Int4, 3, "int4"),
+        ] {
+            assert_eq!(p.as_u8(), byte);
+            assert_eq!(Precision::from_u8(byte), Some(p));
+            assert_eq!(p.label(), label);
+            assert_eq!(Precision::parse(label), Some(p));
+            assert_eq!(p.to_string(), label);
+        }
+        assert_eq!(Precision::from_u8(4), None);
+        assert_eq!(Precision::from_u8(255), None);
+        assert_eq!(Precision::parse("int2"), None);
+        assert_eq!(Precision::parse(" int8 "), Some(Precision::Int8));
+    }
+
+    #[test]
+    fn model_list_precision_suffix_is_version_gated() {
+        let models = vec![
+            ModelInfo {
+                slot: "a".into(),
+                model: "a".into(),
+                version: 1,
+                input_dim: 8,
+                output_dim: 3,
+                generation: 2,
+                precision: Precision::Int8,
+            },
+            ModelInfo {
+                slot: "b".into(),
+                model: "b-v2".into(),
+                version: 2,
+                input_dim: 8,
+                output_dim: 3,
+                generation: 5,
+                precision: Precision::Int4,
+            },
+        ];
+        // Pre-v4 framing omits the suffix; decoding reports the f32
+        // default.
+        let v3 = encode_model_list_at(&models, 3).unwrap();
+        let back = decode_model_list(&v3).unwrap();
+        assert!(back.iter().all(|m| m.precision == Precision::F32));
+        assert_eq!(back[0].slot, "a");
+        // v4 framing is a strict extension: its prefix is byte-identical
+        // to the v3 payload, with one precision byte per entry after.
+        let v4 = encode_model_list_at(&models, 4).unwrap();
+        assert_eq!(&v4[..v3.len()], &v3[..]);
+        assert_eq!(v4.len(), v3.len() + models.len());
+        assert_eq!(decode_model_list(&v4).unwrap(), models);
+        // Unknown precision byte rejected by name.
+        let mut bad = v4.clone();
+        *bad.last_mut().unwrap() = 9;
+        let err = decode_model_list(&bad).unwrap_err();
+        assert!(err.contains("precision"), "{err}");
+        // A partial suffix (one byte for two models) is malformed.
+        let mut partial = v4.clone();
+        partial.pop();
+        assert!(decode_model_list(&partial).is_err());
+    }
+
+    #[test]
+    fn swap_precision_suffix_roundtrip_and_rejection() {
+        // With a precision byte, v4 decoding surfaces it.
+        let p = encode_swap_precision("mnist", "mnist-v2", Some(Precision::Int4)).unwrap();
+        let (slot, src, prec) = decode_swap_precision(&p, 4).unwrap();
+        assert_eq!((slot.as_str(), src.as_str()), ("mnist", "mnist-v2"));
+        assert_eq!(prec, Some(Precision::Int4));
+        // The plain decoder still accepts the payload (and discards it).
+        assert_eq!(decode_swap(&p, 4).unwrap().1, "mnist-v2");
+        // Without the byte, the payload is exactly the v2 layout.
+        let bare = encode_swap_precision("mnist", "mnist-v2", None).unwrap();
+        assert_eq!(bare, encode_swap("mnist", "mnist-v2").unwrap());
+        assert_eq!(decode_swap_precision(&bare, 4).unwrap().2, None);
+        // A trailing byte on pre-v4 framing is trailing garbage, not a
+        // precision — BadRequest territory, never a panic.
+        assert!(decode_swap_precision(&p, 2).is_err());
+        assert!(decode_swap_precision(&p, 3).is_err());
+        // An unknown precision value is rejected by name at v4.
+        let mut bad = bare.clone();
+        bad.push(9);
+        let err = decode_swap_precision(&bad, 4).unwrap_err();
+        assert!(err.contains("precision"), "{err}");
     }
 
     #[test]

@@ -21,10 +21,12 @@ use edgemlp::fpga::accelerator::{AccelConfig, Accelerator, QuantizedMlp};
 use edgemlp::nn::activations::Activation;
 use edgemlp::nn::kernels::gemm::{configured_threads, gemm_into_with};
 use edgemlp::nn::kernels::simd::test_paths;
-use edgemlp::nn::kernels::{active_path, DispatchPath};
+use edgemlp::nn::kernels::{active_path, vsq_matmul_batch, DispatchPath};
 use edgemlp::nn::mlp::{ForwardScratch, Mlp, MlpConfig};
 use edgemlp::nn::tensor::Matrix;
+use edgemlp::nn::vsq::VsqMlp;
 use edgemlp::quant::spx::SpxConfig;
+use edgemlp::quant::vsq::{data_step, quantize_data_i8_into, VsqTensor};
 use edgemlp::quant::Calibration;
 use edgemlp::serve::{PipelineCpuBackend, PipelineFpgaBackend};
 use edgemlp::util::check::assert_allclose;
@@ -216,6 +218,116 @@ fn cpu_and_spx_agree_within_quantization_tolerance() {
         let spx = accel.forward_batch(&x);
         let fp32 = mlp.forward(&x);
         assert_allclose(&spx.data, &fp32.data, 0.15, 0.15);
+    }
+}
+
+/// Longhand exact-integer reference for the VSQ kernel, written out in
+/// the test crate so it shares no code with the kernel under test: the
+/// i8×i8 products are exact in i32, so whatever dispatch path the
+/// process latched (native, `EDGEMLP_FORCE_SCALAR=1`, any
+/// `EDGEMLP_GEMM_THREADS`) must reproduce it bit for bit.
+fn vsq_reference(w: &VsqTensor, x_q: &[i8], batch: usize, d_scale: f32) -> Vec<f32> {
+    let (m, n) = (w.rows(), w.cols());
+    let step = data_step(d_scale);
+    let mut out = vec![0.0f32; batch * m];
+    for b in 0..batch {
+        for r in 0..m {
+            let mut acc = 0i32;
+            for (j, &wj) in w.row(r).iter().enumerate() {
+                acc += wj as i32 * x_q[b * n + j] as i32;
+            }
+            out[b * m + r] = acc as f32 * (w.scale_for_row(r) * step);
+        }
+    }
+    out
+}
+
+/// The int8/int4 VSQ kernel on the process's active dispatch path is
+/// bitwise identical to the longhand scalar reference, on ragged and
+/// serving shapes. CI runs this suite natively, under
+/// `EDGEMLP_FORCE_SCALAR=1`, and under `EDGEMLP_GEMM_THREADS=1`, so the
+/// three passes together pin scalar-vs-SIMD identity and thread-count
+/// invariance for the integer kernels.
+#[test]
+fn vsq_kernel_bitwise_matches_scalar_reference_on_active_path() {
+    let mut rng = Pcg32::new(0x58);
+    for &(m, n, batch) in
+        &[(9usize, 7usize, 1usize), (12, 8, 3), (5, 300, 2), (128, 784, 8), (10, 128, 8)]
+    {
+        for bits in [8u8, 4] {
+            let wdata: Vec<f32> = (0..m * n).map(|_| rng.normal() as f32 * 0.2).collect();
+            let w = VsqTensor::encode(bits, 16, &wdata, m, n, Calibration::MaxAbs);
+            let d_scale = rng.range(0.5, 3.0) as f32;
+            let flat: Vec<f32> =
+                (0..batch * n).map(|_| rng.range(-1.0, 1.0) as f32).collect();
+            let mut x_q = Vec::new();
+            quantize_data_i8_into(&flat, d_scale, &mut x_q);
+            let want = vsq_reference(&w, &x_q, batch, d_scale);
+            let mut got = vec![0.0f32; batch * m];
+            vsq_matmul_batch(&w, &x_q, batch, d_scale, &mut got);
+            for (i, (a, e)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    e.to_bits(),
+                    "bits {bits} shape {m}x{n} batch {batch} path {} element {i}: {a} vs {e}",
+                    active_path().name(),
+                );
+            }
+        }
+    }
+}
+
+/// The full VSQ model forward is batch-size invariant bit for bit on
+/// the shape zoo — the kernel never splits a reduction, so batching is
+/// pure loop ordering. Together with the kernel-reference row above
+/// (and the forced-scalar / single-thread CI passes re-running both)
+/// this extends the f32/SPx bitwise conformance contract to the
+/// int8/int4 serving pools.
+#[test]
+fn vsq_forward_batched_matches_per_sample_across_shapes() {
+    let mut rng = Pcg32::new(0x59);
+    for sizes in shapes() {
+        let mlp = sigmoid_mlp(&sizes, &mut rng);
+        for bits in [8u8, 4] {
+            let v = VsqMlp::from_mlp(&mlp, bits, 16, Calibration::MaxAbs, None);
+            let batch = 5usize;
+            let x = Matrix::random_uniform(batch, mlp.input_dim(), 1.0, &mut rng);
+            let batched = v.forward_batch(&x);
+            for b in 0..batch {
+                let single = v.forward_one(x.row(b));
+                for (got, want) in batched.row(b).iter().zip(&single) {
+                    assert_eq!(
+                        got.to_bits(),
+                        want.to_bits(),
+                        "shape {sizes:?} bits {bits} sample {b}"
+                    );
+                }
+            }
+            // Requantize-and-rerun determinism: the whole encode +
+            // forward pipeline reproduces itself.
+            let v2 = VsqMlp::from_mlp(&mlp, bits, 16, Calibration::MaxAbs, None);
+            assert_bitwise(
+                &v2.forward_batch(&x),
+                &batched,
+                &format!("shape {sizes:?} bits {bits} requantized"),
+            );
+        }
+    }
+}
+
+/// int8 end to end stays within quantization tolerance of the f32
+/// forward on sigmoid networks — the cross-precision sanity bound the
+/// MNIST ablation tightens to a 1% accuracy budget.
+#[test]
+fn cpu_and_vsq_int8_agree_within_quantization_tolerance() {
+    let mut rng = Pcg32::new(0x5a);
+    for sizes in shapes() {
+        let mlp = sigmoid_mlp(&sizes, &mut rng);
+        let v = VsqMlp::from_mlp(&mlp, 8, 16, Calibration::MaxAbs, None);
+        let x = Matrix::random_uniform(4, mlp.input_dim(), 1.0, &mut rng);
+        let got = v.forward_batch(&x);
+        let want = mlp.forward(&x);
+        assert_allclose(&got.data, &want.data, 5e-2, 5e-2);
     }
 }
 

@@ -87,6 +87,7 @@ const REQUIRED_FAMILIES: &[&str] = &[
     "edgemlp_pool_requests_total",
     "edgemlp_pool_samples_total",
     "edgemlp_pool_batches_total",
+    "edgemlp_pool_bytes_per_sample",
     "edgemlp_pool_queue_depth",
     "edgemlp_pool_queue_capacity",
     "edgemlp_pool_replicas",
@@ -441,6 +442,43 @@ fn health_extension_counts_busy_and_bad_requests() {
     let report = wire::decode_health(&resp.payload).unwrap();
     assert_eq!(report.busy_rejected, 0, "v3 payload must omit the extension");
     assert!(report.bad_requests.is_empty());
+    server.shutdown();
+}
+
+/// The per-pool weight-footprint gauge end-to-end: an engine mixing
+/// f32, int8 and int4 pools must expose one `bytes_per_sample` sample
+/// per pool, strictly ordered int4 < int8 < f32 — and the quantized
+/// pools still answer correct-looking inferences.
+#[test]
+fn pool_bytes_per_sample_orders_precisions() {
+    let server = start_engine(
+        vec![BackendKind::Cpu, BackendKind::Int8, BackendKind::Int4],
+        ServeConfig::default(),
+    );
+    let mut client = Client::connect(server.local_addr()).unwrap();
+    // One inference per explicit backend index: every pool serves.
+    for backend in 0..3u32 {
+        match client.infer(backend, &probe()).unwrap() {
+            InferReply::Output(out) => assert_eq!(out.len(), 10, "backend {backend}"),
+            other => panic!("backend {backend}: {other:?}"),
+        }
+    }
+    let text = client.metrics_text().unwrap();
+    assert_valid_exposition(&text);
+    let bytes = |pool: &str| -> f64 {
+        text.lines()
+            .find(|l| l.starts_with(&format!("edgemlp_pool_bytes_per_sample{{pool=\"{pool}\"}}")))
+            .map(sample_value)
+            .unwrap_or_else(|| panic!("no bytes_per_sample for {pool}\n{text}"))
+    };
+    let (f32b, i8b, i4b) = (bytes("cpu/default"), bytes("int8/default"), bytes("int4/default"));
+    assert!(i4b < i8b, "int4 {i4b} !< int8 {i8b}");
+    assert!(i8b < f32b, "int8 {i8b} !< f32 {f32b}");
+    // The 784→32→10 f32 model weighs 4·(784·32+32 + 32·10+10) bytes.
+    assert_eq!(f32b, 4.0 * ((784.0 * 32.0 + 32.0) + (32.0 * 10.0 + 10.0)));
+    // The human-readable Stats lines carry the same figures.
+    let stats = client.stats().unwrap();
+    assert!(stats.contains(&format!("bytes_per_sample={}", i4b as u64)), "{stats}");
     server.shutdown();
 }
 

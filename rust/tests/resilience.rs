@@ -13,8 +13,8 @@ use edgemlp::nn::mlp::{Mlp, MlpConfig};
 use edgemlp::quant::spx::SpxConfig;
 use edgemlp::serve::wire::{self, Frame};
 use edgemlp::serve::{
-    run_loadgen, Client, InferReply, LoadGenConfig, ModelRegistry, Opcode, Qos, RetryPolicy,
-    RetryingClient, ServeConfig, Server, Status, BACKEND_ANY,
+    run_loadgen, BackendKind, Client, EngineConfig, InferReply, LoadGenConfig, ModelRegistry,
+    Opcode, Qos, RetryPolicy, RetryingClient, ServeConfig, Server, Status, BACKEND_ANY,
 };
 use std::collections::HashMap;
 use std::io::{Read, Write};
@@ -314,6 +314,102 @@ fn degraded_mode_enters_under_saturation_and_recovers() {
     let health = watcher.health().unwrap();
     assert!(!health.degraded, "idle queue must recover normal mode: {health:?}");
     assert!(health.degraded_transitions >= 2, "{health:?}");
+    server.shutdown();
+}
+
+/// Degraded mode must shed precision, not requests: on an engine mixing
+/// f32, int8 and int4 pools, sustained saturation routes `BACKEND_ANY`
+/// traffic onto the lowest-bytes-per-sample pool — packed int4 — and an
+/// idle queue recovers least-loaded routing. The cheapest-pool choice is
+/// `BackendKind::cost_rank`, which orders pools by weight footprint.
+#[test]
+fn degraded_mode_routes_backend_any_to_the_lowest_bytes_pool() {
+    // A deliberately heavy head (≈217k MACs/sample, unoptimized test
+    // build) so the connection reader enqueues far faster than the
+    // worker pools drain — the saturated occupancy sample is guaranteed
+    // mid-burst, as in the hysteresis test above.
+    let mut rng = edgemlp::util::rng::Pcg32::new(7);
+    let mlp = Mlp::new(
+        MlpConfig {
+            sizes: vec![784, 256, 64, 10],
+            activations: vec![Activation::Sigmoid; 3],
+        },
+        &mut rng,
+    );
+    let registry = ModelRegistry::new("default", mlp, SpxConfig::sp2(5));
+    let server = Server::serve(
+        registry,
+        "127.0.0.1:0",
+        EngineConfig {
+            replicas: 1,
+            backends: vec![BackendKind::Cpu, BackendKind::Int8, BackendKind::Int4],
+            coordinator: CoordinatorConfig {
+                queue_capacity: 64,
+                policy: BatchPolicy::immediate(1),
+            },
+            serve: ServeConfig {
+                degrade: DegradePolicy {
+                    enter_occupancy: 0.01,
+                    exit_occupancy: 0.005,
+                    enter_after: Duration::ZERO,
+                    exit_after: Duration::ZERO,
+                },
+                ..ServeConfig::default()
+            },
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+    let mut client = Client::connect(addr).unwrap();
+
+    // Saturate: 48 pipelined BACKEND_ANY requests. The mode flips as
+    // soon as every pool holds work (≤ ~7 requests in), after which all
+    // remaining routing decisions land on the cheapest pool.
+    for _ in 0..48 {
+        client.send_infer(BACKEND_ANY, &probe()).unwrap();
+    }
+    for _ in 0..48 {
+        let (_, reply) = client.recv_infer().unwrap();
+        match reply {
+            InferReply::Output(out) => assert_eq!(out.len(), 10),
+            other => panic!("{other:?}"),
+        }
+    }
+    let mut watcher = Client::connect(addr).unwrap();
+    let health = watcher.health().unwrap();
+    assert!(health.degraded, "sustained saturation must flip degraded mode: {health:?}");
+
+    // The degraded stretch routed the bulk of the burst to int4 — the
+    // pool streaming the fewest weight bytes per sample — while the
+    // pre-flip spread left at most a handful on the f32/int8 pools.
+    let snap = server.metrics().snapshot();
+    let served = |pool: &str| {
+        snap.backends
+            .get(pool)
+            .unwrap_or_else(|| panic!("missing pool {pool}: {:?}", snap.backends.keys()))
+            .requests
+    };
+    let (f32r, i8r, i4r) = (served("cpu/default"), served("int8/default"), served("int4/default"));
+    assert_eq!(f32r + i8r + i4r, 48, "requests vanished");
+    assert!(
+        i4r > f32r && i4r > i8r,
+        "degraded routing must concentrate on the int4 pool: cpu={f32r} int8={i8r} int4={i4r}"
+    );
+    let bytes = |pool: &str| snap.backends[pool].bytes_per_sample;
+    assert!(
+        bytes("int4/default") < bytes("int8/default")
+            && bytes("int8/default") < bytes("cpu/default"),
+        "cheapest pool must also be the smallest footprint"
+    );
+
+    // Drained queue: the next BACKEND_ANY decision samples zero
+    // occupancy and recovers least-loaded routing.
+    match client.infer(BACKEND_ANY, &probe()).unwrap() {
+        InferReply::Output(out) => assert_eq!(out.len(), 10),
+        other => panic!("recovery request failed: {other:?}"),
+    }
+    let health = watcher.health().unwrap();
+    assert!(!health.degraded, "idle queue must recover normal mode: {health:?}");
     server.shutdown();
 }
 

@@ -36,6 +36,10 @@ import sys
 
 FINGERPRINT_KEYS = ("host_cores", "host_arch", "host_dispatch_path", "host_gemm_threads")
 
+# Lower-better substrings that would otherwise be swallowed by the
+# higher-better "per_s" match ("bytes_per_sample", "mj_per_sample") —
+# checked before everything else.
+LOWER_BETTER_FIRST = ("bytes_per_sample", "mj_per_sample")
 # Substrings (checked against the lowercased key) that mark a metric
 # where larger is better.
 HIGHER_BETTER = ("rps", "gflops", "speedup", "throughput", "attainment", "per_s", "ops")
@@ -49,6 +53,8 @@ def direction(key):
     k = key.lower()
     if k.startswith("host_"):
         return 0
+    if any(s in k for s in LOWER_BETTER_FIRST):
+        return -1
     if any(s in k for s in HIGHER_BETTER):
         return +1
     if k.endswith(LOWER_BETTER_SUFFIX) or any(s in k for s in LOWER_BETTER_SUBSTR):

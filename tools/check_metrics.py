@@ -48,6 +48,7 @@ REQUIRED_FAMILIES = [
     "edgemlp_pool_errors_total",
     "edgemlp_pool_shed_total",
     "edgemlp_pool_expired_total",
+    "edgemlp_pool_bytes_per_sample",
     "edgemlp_pool_queue_depth",
     "edgemlp_pool_queue_capacity",
     "edgemlp_pool_replicas",

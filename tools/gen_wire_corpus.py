@@ -110,6 +110,20 @@ def main():
     corpus["payload_listmodels_v1.bin"] = frame(1, 5, 0, 6, b"")
     # SwapModel naming a slot/model the server does not hold.
     corpus["payload_swap_unknown.bin"] = frame(2, 4, 0, 7, name("ghost") + name("nope"))
+    # --- hostile precision fields (v4 SwapModel suffix extension) ---
+    # Unknown precision byte (9 is outside {0..3}): BadRequest, never a
+    # panic — and never a swap.
+    corpus["payload_swap_unknown_precision.bin"] = frame(
+        4, 4, 0, 30, name("") + name("default") + bytes([9])
+    )
+    # The precision suffix on a version that forbids it (< v4) is
+    # trailing garbage: BadRequest, connection survives.
+    corpus["payload_swap_precision_v2.bin"] = frame(
+        2, 4, 0, 31, name("") + name("default") + bytes([2])
+    )
+    corpus["payload_swap_precision_v3.bin"] = frame(
+        3, 4, 0, 32, name("") + name("default") + bytes([2])
+    )
     # Well-formed Infer whose dimension mismatches the served model.
     corpus["payload_infer_wrong_dim.bin"] = frame(2, 1, 0, 8, infer_v2(0, "", [1.0, 2.0, 3.0]))
     # v1 Infer with a dim lying about the f32s present.
@@ -171,6 +185,12 @@ def main():
         + frame(4, 8, 0, 20, b"")
         + frame(4, 7, 0, 21, b"")
         + frame(1, 0, 0, 22, b"old-ping")
+    )
+    # Valid v4 no-op swap carrying the precision suffix (0 = f32), then
+    # legacy traffic — the extension must not poison the connection.
+    corpus["mixed_v4_swap_precision_then_v1.bin"] = (
+        frame(4, 4, 0, 33, name("") + name("default") + bytes([0]))
+        + frame(1, 0, 0, 34, b"old-ping")
     )
 
     for fname, data in sorted(corpus.items()):
