@@ -4,7 +4,10 @@
 //! replica-scaling sweep, the E10 stage-pipelined depth sweep
 //! (pipelined vs monolithic CPU at depths 1..4, single replica), and
 //! the E11 SLO sweep (deadline-carrying load at 0.5×/1×/2× capacity:
-//! attainment and shed-rate curves under admission control).
+//! attainment and shed-rate curves under admission control), and the
+//! E13 c10k scenario (live traffic with ~10k idle connections
+//! registered on the readiness event loop, plus a burst-reconnect
+//! storm — docs/async-net.md).
 //! Emits `BENCH_serving.json` (override the
 //! path with `EDGEMLP_BENCH_JSON`) alongside `BENCH_gemm.json` for the
 //! perf trajectory. `cargo bench --bench serving` — see EXPERIMENTS.md
@@ -57,6 +60,22 @@ fn engine(replicas: usize, backends: Vec<BackendKind>) -> EngineConfig {
         },
         serve: ServeConfig::default(),
     }
+}
+
+/// Resident set size in MiB from `/proc/self/status` (0.0 when the
+/// proc filesystem is unavailable — the RSS key is simply omitted).
+fn proc_rss_mb() -> f64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0.0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmRSS:") {
+            if let Some(kb) = rest.split_whitespace().next().and_then(|v| v.parse::<f64>().ok()) {
+                return kb / 1024.0;
+            }
+        }
+    }
+    0.0
 }
 
 fn main() {
@@ -330,6 +349,80 @@ fn main() {
 
     println!("\n=== E11: SLO sweep, deadline 50 ms (EXPERIMENTS.md §E11) ===\n");
     slo_table.print();
+
+    // ---- E13: c10k idle population + reconnect storm. ----
+    // The readiness event loop keeps thousands of mostly-idle
+    // connections registered on one thread while live traffic flows
+    // through the same loop — throughput/p99 of the live lane and the
+    // process RSS are the costs being tracked (docs/async-net.md).
+    // The idle population is clamped to the fd limit the OS actually
+    // grants: loadgen and server sockets both live in this process.
+    let idle_target: usize = if quick { 1_000 } else { 10_000 };
+    let fd_limit = edgemlp::serve::raise_nofile_limit(idle_target as u64 * 2 + 512);
+    let idle_conns = idle_target.min((fd_limit.saturating_sub(512) / 2) as usize);
+    let server = Server::serve(
+        registry(),
+        "127.0.0.1:0",
+        EngineConfig {
+            replicas: 1,
+            backends: vec![BackendKind::Cpu],
+            coordinator: CoordinatorConfig {
+                queue_capacity: 4096,
+                policy: BatchPolicy::windowed(64, Duration::from_millis(1)),
+            },
+            serve: ServeConfig {
+                max_conns: idle_conns + 64,
+                // Idle conns stall between pings for the whole run;
+                // keep the slowloris reaper out of the measurement.
+                read_timeout: Duration::from_secs(600),
+                ..ServeConfig::default()
+            },
+        },
+    )
+    .expect("start idle server");
+    let report = run_loadgen(
+        server.local_addr(),
+        LoadGenConfig {
+            requests: sweep_requests,
+            connections: 8,
+            backend: 0,
+            dim: 784,
+            batch: 1,
+            pipeline: 8,
+            warmup,
+            idle_conns,
+            ..LoadGenConfig::default()
+        },
+    )
+    .expect("idle loadgen");
+    assert_eq!(report.ok + report.shed + report.errors, report.sent, "lost responses");
+    let rss_mb = proc_rss_mb();
+    println!(
+        "\n=== E13: live traffic with {} idle conns registered (EXPERIMENTS.md §E13) ===\n",
+        report.idle_held
+    );
+    println!(
+        "{:.0} req/s | p99 {} | rss {:.0} MiB",
+        report.throughput_rps(),
+        fmt_time(report.p99_s()),
+        rss_mb
+    );
+    json.num("serving_idle10k_conns", report.idle_held as f64);
+    json.num("serving_idle10k_rps", report.throughput_rps());
+    json.num("serving_idle10k_p99_ms", report.p99_s() * 1e3);
+    if rss_mb > 0.0 {
+        json.num("serving_idle10k_rss_mb", rss_mb);
+    }
+
+    // Burst-reconnect churn against the same engine: accept path, slab
+    // slot recycling, and careful-close draining at full tilt.
+    let storm_cycles = if quick { 400 } else { 4_000 };
+    let storm = edgemlp::serve::run_reconnect_storm(server.local_addr(), 16, storm_cycles)
+        .expect("reconnect storm");
+    println!("{}", storm.render());
+    json.num("serving_storm_reconnects_per_s", storm.reconnects_per_s());
+    json.num("serving_storm_errors", storm.errors as f64);
+    server.shutdown();
 
     HostFingerprint::detect().stamp(&mut json);
     let path =

@@ -36,7 +36,9 @@ pub use backend::{Backend, CpuBackend, FpgaBackend, VsqBackend};
 pub use batcher::BatchPolicy;
 pub use degrade::{DegradeController, DegradePolicy};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use request::{FailureKind, InferError, InferRequest, InferResponse};
+pub use request::{
+    CompletionNotify, FailureKind, InferError, InferRequest, InferResponse, Responder,
+};
 pub use server::{
     Coordinator, CoordinatorConfig, PoolSpec, RequestQos, SharedBackendFactory, SubmitError,
 };

@@ -1,6 +1,8 @@
 //! Request/response types crossing the coordinator's queues.
 
-use std::sync::mpsc::Sender;
+use std::cell::Cell;
+use std::sync::mpsc::{SendError, Sender};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Scheduling rank riding on every request: lower runs sooner. The wire
@@ -50,6 +52,63 @@ impl std::error::Error for InferError {}
 /// structured failure.
 pub type InferResult = Result<InferResponse, InferError>;
 
+/// Completion hook riding along a [`Responder`]: invoked (from the
+/// worker thread) after every result send, so an event-driven caller
+/// can be nudged instead of blocking on the channel. The event loop
+/// hands in a closure that marks the connection ready and writes the
+/// wakeup pipe.
+pub type CompletionNotify = Arc<dyn Fn() + Send + Sync>;
+
+/// A request's response channel plus the optional completion hook.
+/// Thread-based callers (the `submit_*` APIs' default) carry no hook
+/// and behave exactly like a bare `Sender<InferResult>`.
+pub struct Responder {
+    tx: Sender<InferResult>,
+    notify: Option<CompletionNotify>,
+    sent: Cell<bool>,
+}
+
+impl Responder {
+    pub fn new(tx: Sender<InferResult>) -> Responder {
+        Responder { tx, notify: None, sent: Cell::new(false) }
+    }
+
+    pub fn with_notify(tx: Sender<InferResult>, notify: Option<CompletionNotify>) -> Responder {
+        Responder { tx, notify, sent: Cell::new(false) }
+    }
+
+    /// Send the result, then fire the completion hook. `&self` so the
+    /// expiry sweep can answer requests it only holds by reference.
+    pub fn send(&self, result: InferResult) -> Result<(), SendError<InferResult>> {
+        let out = self.tx.send(result);
+        self.sent.set(true);
+        if let Some(notify) = &self.notify {
+            notify();
+        }
+        out
+    }
+}
+
+impl Drop for Responder {
+    fn drop(&mut self) {
+        // A request dropped without an answer (queue torn down at
+        // shutdown) still wakes the waiting connection, which then
+        // observes the disconnected channel instead of sleeping until
+        // its response deadline.
+        if !self.sent.get() {
+            if let Some(notify) = &self.notify {
+                notify();
+            }
+        }
+    }
+}
+
+impl From<Sender<InferResult>> for Responder {
+    fn from(tx: Sender<InferResult>) -> Responder {
+        Responder::new(tx)
+    }
+}
+
 /// A single inference request: one flattened input vector.
 pub struct InferRequest {
     pub id: u64,
@@ -63,8 +122,8 @@ pub struct InferRequest {
     pub deadline: Option<Instant>,
     /// Scheduling rank (lower first); see [`PRIORITY_NORMAL`].
     pub priority: u8,
-    /// Oneshot-style response channel.
-    pub respond_to: Sender<InferResult>,
+    /// Oneshot-style response channel (+ optional completion hook).
+    pub respond_to: Responder,
 }
 
 impl InferRequest {
@@ -103,7 +162,7 @@ mod tests {
             enqueued_at: Instant::now(),
             deadline: None,
             priority: PRIORITY_NORMAL,
-            respond_to: tx,
+            respond_to: Responder::new(tx),
         };
         req.respond_to
             .send(Ok(InferResponse {
@@ -129,13 +188,36 @@ mod tests {
             enqueued_at: now,
             deadline: None,
             priority: PRIORITY_NORMAL,
-            respond_to: tx,
+            respond_to: tx.into(),
         };
         assert!(!req.expired_at(now + Duration::from_secs(3600)));
         req.deadline = Some(now + Duration::from_millis(50));
         assert!(!req.expired_at(now));
         assert!(req.expired_at(now + Duration::from_millis(50)));
         assert!(req.expired_at(now + Duration::from_secs(1)));
+    }
+
+    #[test]
+    fn responder_fires_hook_on_send_and_on_unanswered_drop() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let fired = Arc::new(AtomicUsize::new(0));
+        let hook: CompletionNotify = {
+            let fired = fired.clone();
+            Arc::new(move || {
+                fired.fetch_add(1, Ordering::SeqCst);
+            })
+        };
+        let (tx, rx) = channel();
+        let responder = Responder::with_notify(tx, Some(hook.clone()));
+        responder.send(Err(InferError::backend("boom"))).unwrap();
+        assert_eq!(fired.load(Ordering::SeqCst), 1, "send fires the hook");
+        drop(responder);
+        assert_eq!(fired.load(Ordering::SeqCst), 1, "an answered responder drops silently");
+        assert!(rx.recv().unwrap().is_err());
+
+        let (tx, _rx) = channel::<InferResult>();
+        drop(Responder::with_notify(tx, Some(hook)));
+        assert_eq!(fired.load(Ordering::SeqCst), 2, "unanswered drop still wakes the waiter");
     }
 
     #[test]

@@ -14,7 +14,10 @@ use super::backend::Backend;
 use super::batcher::BatchPolicy;
 use super::metrics::Metrics;
 use super::queue::{BoundedQueue, QueueError};
-use super::request::{InferError, InferRequest, InferResponse, InferResult, PRIORITY_NORMAL};
+use super::request::{
+    CompletionNotify, InferError, InferRequest, InferResponse, InferResult, Responder,
+    PRIORITY_NORMAL,
+};
 use crate::nn::kernels::pipeline::panic_message;
 use crate::obs::trace::TraceRecorder;
 use anyhow::{bail, Context, Result};
@@ -425,6 +428,7 @@ impl Coordinator {
         &self,
         payload: Vec<f32>,
         qos: RequestQos,
+        notify: Option<CompletionNotify>,
     ) -> (InferRequest, Receiver<InferResult>) {
         let (tx, rx) = channel();
         let req = InferRequest {
@@ -433,7 +437,7 @@ impl Coordinator {
             enqueued_at: Instant::now(),
             deadline: qos.deadline,
             priority: qos.priority,
-            respond_to: tx,
+            respond_to: Responder::with_notify(tx, notify),
         };
         (req, rx)
     }
@@ -484,7 +488,7 @@ impl Coordinator {
     ) -> Result<Receiver<InferResult>, SubmitError> {
         let queue = self.queues.get(pool).ok_or(SubmitError::UnknownBackend)?;
         self.admit(pool, &qos)?;
-        let (req, rx) = self.make_request(payload, qos);
+        let (req, rx) = self.make_request(payload, qos, None);
         let id = req.id;
         match queue.push(req) {
             Ok(()) => {
@@ -515,9 +519,25 @@ impl Coordinator {
         payload: Vec<f32>,
         qos: RequestQos,
     ) -> Result<Receiver<InferResult>, SubmitError> {
+        self.try_submit_to_qos_notify(pool, payload, qos, None)
+    }
+
+    /// [`Coordinator::try_submit_to_qos`] with a completion hook: the
+    /// worker fires `notify` right after pushing the result into the
+    /// returned channel (and on teardown if the request is dropped
+    /// unanswered). This is the event loop's handoff — one readiness
+    /// nudge per completion instead of a blocked thread per in-flight
+    /// request.
+    pub fn try_submit_to_qos_notify(
+        &self,
+        pool: usize,
+        payload: Vec<f32>,
+        qos: RequestQos,
+        notify: Option<CompletionNotify>,
+    ) -> Result<Receiver<InferResult>, SubmitError> {
         let queue = self.queues.get(pool).ok_or(SubmitError::UnknownBackend)?;
         self.admit(pool, &qos)?;
-        let (req, rx) = self.make_request(payload, qos);
+        let (req, rx) = self.make_request(payload, qos, notify);
         let id = req.id;
         match queue.try_push(req) {
             Ok(()) => {

@@ -9,7 +9,10 @@
 //!                          --precision int8 \
 //!                          --metrics-addr 127.0.0.1:9184 --trace-capacity 8192
 //! edgemlp loadgen          --addr 127.0.0.1:7878 --requests 10000 \
-//!                          --model qnet --warmup 500
+//!                          --model qnet --warmup 500 \
+//!                          --idle-conns 10000   # c10k background population
+//! edgemlp loadgen          --addr 127.0.0.1:7878 --storm --requests 5000 \
+//!                          --connections 16     # burst-reconnect churn
 //! edgemlp ctl              --addr 127.0.0.1:7878 \
 //!                          --op stats|ping|health|swap|models|metrics|trace
 //! edgemlp throughput       --requests 500       # in-process E6 sweep
@@ -229,6 +232,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         bail!("--read-timeout-s must be positive, got {read_timeout_s}");
     }
     degrade.validate().map_err(anyhow::Error::msg)?;
+    // One readiness loop serves every connection, so the fd limit is
+    // the real connection ceiling — raise it to cover --max-conns
+    // (best effort; the hard limit caps what we can get).
+    let nofile = edgemlp::serve::raise_nofile_limit(max_conns as u64 + 128);
+    if nofile < max_conns as u64 + 16 {
+        eprintln!(
+            "warning: fd limit {nofile} is below --max-conns {max_conns} + headroom; \
+             the server will Busy-reject or fail accepts at the fd ceiling"
+        );
+    }
     // SpxConfig::sp2 asserts on its range; turn bad flags into a CLI
     // error instead of a panic.
     if !(3..=15).contains(&spx_bits) {
@@ -388,11 +401,21 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             "low" => Priority::Low,
             other => bail!("unknown --priority '{other}' (normal|high|low)"),
         },
+        // `--idle-conns N` holds N extra idle connections open for the
+        // whole run (the c10k background population). The client host
+        // needs fd headroom for them too.
+        idle_conns: args.get_parse("idle-conns", 0).map_err(anyhow::Error::msg)?,
     };
     // `--sweep 0.5,1,2,4` replays the same scenario at multiples of
     // `--rate` and prints the SLO attainment / shed-rate curve.
     let sweep = args.get("sweep", "");
+    // `--storm` switches to the burst-reconnect scenario: --requests
+    // connect→ping→disconnect cycles across --connections threads.
+    let storm = args.get_bool("storm").map_err(anyhow::Error::msg)?;
     args.finish().map_err(anyhow::Error::msg)?;
+    if config.idle_conns > 0 {
+        edgemlp::serve::raise_nofile_limit(config.idle_conns as u64 + 256);
+    }
 
     // Resolve hostnames too, so `--addr localhost:7878` works like it
     // does for `serve` and `ctl` — and probe each resolved address,
@@ -410,6 +433,12 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         })
         .copied()
         .with_context(|| format!("--addr '{addr}': no resolved address accepts connections"))?;
+    if storm {
+        let report =
+            edgemlp::serve::run_reconnect_storm(addr, config.connections, config.requests)?;
+        println!("{}", report.render());
+        return Ok(());
+    }
     if !sweep.is_empty() {
         use edgemlp::bench_harness::Table;
         let factors: Vec<f64> = sweep

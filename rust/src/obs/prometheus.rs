@@ -12,11 +12,12 @@
 use super::energy::pool_energy;
 use crate::coordinator::metrics::MetricsSnapshot;
 use crate::fpga::power::EnergyModel;
-use crate::serve::wire::HealthReport;
+use crate::serve::wire::{HealthReport, LoopGauges};
 
 /// Render one scrape. `uptime_s` is the server's lifetime (the energy
 /// power denominators), `trace_len`/`trace_dropped` the trace ring's
-/// current state.
+/// current state, `loop_gauges` a point-in-time view of the readiness
+/// event loop.
 pub fn render_prometheus(
     snap: &MetricsSnapshot,
     health: &HealthReport,
@@ -24,6 +25,7 @@ pub fn render_prometheus(
     uptime_s: f64,
     trace_len: u64,
     trace_dropped: u64,
+    loop_gauges: &LoopGauges,
 ) -> String {
     let mut out = String::with_capacity(4096);
     let pools = &snap.backends;
@@ -107,6 +109,57 @@ pub fn render_prometheus(
         "Modeled board static draw (server-wide, not per pool).",
     );
     sample(&mut out, "edgemlp_static_power_watts", &[], energy.static_w);
+
+    // ---- readiness event loop ----
+    family(
+        &mut out,
+        "edgemlp_loop_registered_connections",
+        "gauge",
+        "Sockets registered with the readiness event loop.",
+    );
+    sample(
+        &mut out,
+        "edgemlp_loop_registered_connections",
+        &[],
+        loop_gauges.registered_conns as f64,
+    );
+
+    family(
+        &mut out,
+        "edgemlp_loop_ready_events_total",
+        "counter",
+        "Readiness events delivered by the poller since startup.",
+    );
+    sample(&mut out, "edgemlp_loop_ready_events_total", &[], loop_gauges.ready_events as f64);
+
+    family(
+        &mut out,
+        "edgemlp_loop_poll_ticks_total",
+        "counter",
+        "Poller wakeups (event batches + timer ticks) since startup.",
+    );
+    sample(&mut out, "edgemlp_loop_poll_ticks_total", &[], loop_gauges.poll_ticks as f64);
+
+    family(
+        &mut out,
+        "edgemlp_loop_pending_writeback_bytes",
+        "gauge",
+        "Response bytes accepted from the coordinator but not yet flushed.",
+    );
+    sample(
+        &mut out,
+        "edgemlp_loop_pending_writeback_bytes",
+        &[],
+        loop_gauges.pending_writeback_bytes as f64,
+    );
+
+    family(
+        &mut out,
+        "edgemlp_loop_timer_wheel_depth",
+        "gauge",
+        "Live entries in the event loop's timer wheel.",
+    );
+    sample(&mut out, "edgemlp_loop_timer_wheel_depth", &[], loop_gauges.timer_depth as f64);
 
     // ---- per-pool counter families ----
     let pool_counter = |out: &mut String, name: &str, help: &str, f: &dyn Fn(&str) -> f64| {

@@ -23,6 +23,8 @@ use anyhow::{bail, Context, Result};
 use std::collections::{BTreeMap, VecDeque};
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Outcome of one inference request, load-shed and failure modes
@@ -564,6 +566,13 @@ pub struct LoadGenConfig {
     pub deadline_us: u64,
     /// Priority stamped on every request.
     pub priority: Priority,
+    /// Extra connections that ping once and then sit idle for the whole
+    /// run — the c10k scenario's background population. They occupy
+    /// server connection slots and poller registrations but generate no
+    /// traffic, so the active connections' latency measures the event
+    /// loop's ability to ignore them. The server's `--read-timeout-s`
+    /// must exceed the run duration or they get reaped mid-run.
+    pub idle_conns: usize,
 }
 
 impl Default for LoadGenConfig {
@@ -581,6 +590,7 @@ impl Default for LoadGenConfig {
             seed: 7,
             deadline_us: 0,
             priority: Priority::Normal,
+            idle_conns: 0,
         }
     }
 }
@@ -642,6 +652,10 @@ pub struct LoadGenReport {
     /// The deadline the run was driven with (µs; 0 = none) — lets the
     /// report render attainment without re-asking the config.
     pub deadline_us: u64,
+    /// Idle background connections successfully opened and held for the
+    /// whole run (≤ `LoadGenConfig::idle_conns`; fewer when the client
+    /// host's fd limit bites first).
+    pub idle_held: usize,
     pub latencies: Vec<f64>,
     pub per_model: BTreeMap<String, ModelReport>,
     pub elapsed_s: f64,
@@ -707,6 +721,9 @@ impl LoadGenReport {
         if self.warmup_excluded > 0 {
             out.push_str(&format!(" | warmup excluded {}", self.warmup_excluded));
         }
+        if self.idle_held > 0 {
+            out.push_str(&format!(" | idle conns held {}", self.idle_held));
+        }
         out.push('\n');
         let mut table = Table::new(&[
             "model", "sent", "ok", "shed", "expired", "err", "p50", "p95", "p99", "p99.9",
@@ -755,6 +772,10 @@ pub fn run_loadgen(addr: std::net::SocketAddr, config: LoadGenConfig) -> Result<
     };
     let per_conn = config.requests.div_ceil(config.connections);
     let warmup_per_conn = config.warmup.div_ceil(config.connections);
+    // The idle population connects (and verifies liveness with one
+    // ping) BEFORE the clock starts, so the active connections measure
+    // a server already holding `idle_conns` registered sockets.
+    let (idle_stop, idle_threads) = hold_idle_connections(addr, config.idle_conns);
     let t0 = Instant::now();
     let mut threads = Vec::new();
     for c in 0..config.connections {
@@ -777,6 +798,136 @@ pub fn run_loadgen(addr: std::net::SocketAddr, config: LoadGenConfig) -> Result<
     for t in threads {
         let (model, conn_report) = t.join().expect("loadgen thread panicked")?;
         report.merge(&model, conn_report);
+    }
+    report.elapsed_s = t0.elapsed().as_secs_f64();
+    idle_stop.store(true, Ordering::Relaxed);
+    for t in idle_threads {
+        report.idle_held += t.join().unwrap_or(0);
+    }
+    Ok(report)
+}
+
+/// Open `count` connections that each verify liveness with one ping and
+/// then sit fully idle until the returned stop flag flips — the c10k
+/// background population. Returns once every opener has finished
+/// connecting, so the caller's clock starts against the full
+/// population. Connect failures stop that opener early (client-side fd
+/// limits); the openers hold whatever they managed to get.
+fn hold_idle_connections(
+    addr: std::net::SocketAddr,
+    count: usize,
+) -> (Arc<AtomicBool>, Vec<std::thread::JoinHandle<usize>>) {
+    let stop = Arc::new(AtomicBool::new(false));
+    if count == 0 {
+        return (stop, Vec::new());
+    }
+    let openers = count.min(8);
+    let per = count.div_ceil(openers);
+    let (ready_tx, ready_rx) = std::sync::mpsc::channel::<()>();
+    let mut threads = Vec::new();
+    for o in 0..openers {
+        let quota = per.min(count.saturating_sub(o * per));
+        if quota == 0 {
+            break;
+        }
+        let stop = stop.clone();
+        let ready_tx = ready_tx.clone();
+        threads.push(std::thread::spawn(move || {
+            let mut held = Vec::with_capacity(quota);
+            for _ in 0..quota {
+                match Client::connect(addr) {
+                    Ok(mut c) => {
+                        if c.ping().is_err() {
+                            break;
+                        }
+                        held.push(c);
+                    }
+                    Err(_) => break,
+                }
+            }
+            let opened = held.len();
+            let _ = ready_tx.send(());
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            drop(held);
+            opened
+        }));
+    }
+    drop(ready_tx);
+    for _ in &threads {
+        let _ = ready_rx.recv();
+    }
+    (stop, threads)
+}
+
+/// Outcome of a reconnect storm ([`run_reconnect_storm`]).
+#[derive(Debug, Default, Clone)]
+pub struct StormReport {
+    /// Full connect → ping → disconnect cycles that succeeded.
+    pub reconnects: usize,
+    /// Cycles that failed at any step (connect refused, ping error).
+    pub errors: usize,
+    pub elapsed_s: f64,
+}
+
+impl StormReport {
+    pub fn reconnects_per_s(&self) -> f64 {
+        if self.elapsed_s > 0.0 {
+            self.reconnects as f64 / self.elapsed_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "storm: {} reconnects | {} errors | {:.0} reconnects/s",
+            self.reconnects,
+            self.errors,
+            self.reconnects_per_s()
+        )
+    }
+}
+
+/// Burst-reconnect scenario: `connections` threads each run
+/// connect → ping → disconnect cycles as fast as the server accepts
+/// them, `cycles` cycles in total. Exercises the accept path, slab
+/// slot recycling, and careful-close draining under churn — the
+/// complement of the idle-population scenario.
+pub fn run_reconnect_storm(
+    addr: std::net::SocketAddr,
+    connections: usize,
+    cycles: usize,
+) -> Result<StormReport> {
+    anyhow::ensure!(connections > 0, "need at least one connection");
+    let per = cycles.div_ceil(connections);
+    let t0 = Instant::now();
+    let mut threads = Vec::new();
+    for c in 0..connections {
+        let quota = per.min(cycles.saturating_sub(c * per));
+        if quota == 0 {
+            break;
+        }
+        threads.push(std::thread::spawn(move || {
+            let (mut ok, mut errors) = (0usize, 0usize);
+            for _ in 0..quota {
+                match Client::connect(addr) {
+                    Ok(mut client) => match client.ping() {
+                        Ok(_) => ok += 1,
+                        Err(_) => errors += 1,
+                    },
+                    Err(_) => errors += 1,
+                }
+            }
+            (ok, errors)
+        }));
+    }
+    let mut report = StormReport::default();
+    for t in threads {
+        let (ok, errors) = t.join().expect("storm thread panicked");
+        report.reconnects += ok;
+        report.errors += errors;
     }
     report.elapsed_s = t0.elapsed().as_secs_f64();
     Ok(report)

@@ -1,0 +1,664 @@
+//! Per-connection state machine for the event-driven serving layer.
+//!
+//! One [`Conn`] owns a nonblocking socket, an incremental
+//! [`FrameAssembler`] for the read side, and an ordered writeback queue
+//! of [`Outgoing`] items for the write side. The event loop in
+//! `serve/server.rs` drives it: readable events feed [`Conn::read_ready`]
+//! (which returns the complete frames decoded this pass), dispatch
+//! enqueues one [`Outgoing`] per request, and [`Conn::pump`] resolves
+//! the queue head and flushes bytes whenever the socket, a coordinator
+//! completion, or a timer says progress is possible.
+//!
+//! Ordering guarantee: responses leave in request order. Only the queue
+//! *head* is ever resolved; a pending head blocks everything behind it
+//! exactly like the old per-connection writer thread did, and its
+//! response deadline starts when it becomes head — matching the old
+//! `recv_timeout(response_timeout)` semantics item for item.
+//!
+//! Close discipline (mirrors the thread-based server byte for byte):
+//!
+//! - *clean* close (peer EOF, shutdown): flush the queue, then close.
+//! - *careful* close (framing error, read timeout, Busy): flush the
+//!   goodbye frame, send our FIN, then discard inbound bytes for up to
+//!   [`DRAIN_BUDGET`] (or until the peer's FIN) so the error frame is
+//!   not destroyed by a RST on common TCP stacks.
+
+use super::wire::{self, Frame, FrameAssembler, Opcode, Status};
+use crate::coordinator::request::{CompletionNotify, FailureKind, InferResult};
+use crate::serve::poll::WakePipe;
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::{Receiver, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// How long a careful close keeps discarding inbound bytes while
+/// waiting for the peer's FIN (the old `drain_then_close` budget).
+pub const DRAIN_BUDGET: Duration = Duration::from_millis(250);
+
+/// A connection whose write buffer makes no progress for this long is
+/// force-closed — the old writer thread's `set_write_timeout` bound.
+pub const WRITE_STALL: Duration = Duration::from_secs(10);
+
+/// Cap on bytes consumed from one socket per readable event, so a
+/// firehose peer cannot starve the rest of the loop. Level-triggered
+/// polling re-reports the socket until it is drained.
+const READ_PASS_BYTES: usize = 256 * 1024;
+
+/// Work items queued for writeback, in request order. `version` is the
+/// protocol version of the request being answered — the response frame
+/// echoes it.
+pub enum Outgoing {
+    /// Response already known (ping, stats, errors, swap results).
+    Ready(Frame),
+    /// Waiting on one coordinator response. `deadline` arms lazily when
+    /// the item reaches the queue head.
+    Pending {
+        version: u16,
+        request_id: u64,
+        rx: Receiver<InferResult>,
+        deadline: Option<Instant>,
+    },
+    /// Waiting on a whole submitted batch; `rows` collects resolved
+    /// outputs and `next` indexes the first unresolved receiver. One
+    /// deadline covers the whole batch (a per-receiver timeout would
+    /// multiply worst-case head-of-line blocking by the batch size).
+    PendingBatch {
+        version: u16,
+        request_id: u64,
+        receivers: Vec<Receiver<InferResult>>,
+        rows: Vec<Vec<f32>>,
+        next: usize,
+        deadline: Option<Instant>,
+    },
+}
+
+/// The wire status one coordinator failure maps to.
+pub fn failure_status(kind: FailureKind) -> Status {
+    match kind {
+        FailureKind::Backend => Status::BackendError,
+        FailureKind::Expired => Status::Expired,
+    }
+}
+
+/// What one readable event produced.
+#[derive(Default)]
+pub struct ReadPass {
+    /// Complete frames decoded this pass, in arrival order.
+    pub frames: Vec<Frame>,
+    /// Framing-level protocol error: answer once, then careful-close.
+    /// Frames in `frames` arrived *before* the poison byte and must
+    /// still be dispatched first.
+    pub framing_error: Option<String>,
+}
+
+/// One registered connection.
+pub struct Conn {
+    stream: TcpStream,
+    /// Slab-slot reuse guard: timer entries and completion notifies
+    /// carry the generation they were created for and are ignored once
+    /// the slot is recycled.
+    pub generation: u64,
+    assembler: FrameAssembler,
+    outq: VecDeque<Outgoing>,
+    /// Serialized-but-unsent response bytes (`wpos` = flushed prefix).
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// No more requests will be dispatched (close in progress).
+    pub closing: bool,
+    /// Careful close: FIN + drain so a goodbye frame survives.
+    careful: bool,
+    /// Peer sent its FIN.
+    pub peer_eof: bool,
+    fin_sent: bool,
+    /// Socket is dead (reset, I/O error) — tear down immediately.
+    broken: bool,
+    drain_deadline: Option<Instant>,
+    /// Per-frame read deadline (slowloris defense). Restarts when a
+    /// complete frame arrives, never on partial bytes — identical to
+    /// the blocking reader, whose deadline covered the whole frame.
+    pub read_deadline: Option<Instant>,
+    read_timeout: Duration,
+    response_timeout: Duration,
+    last_write_progress: Instant,
+    /// Whether this connection occupies a slot in `active_conns`
+    /// (Busy-rejected connections do not).
+    pub counted: bool,
+    /// Earliest timer-wheel entry armed for this connection, so the
+    /// loop re-arms only when a deadline moves earlier.
+    pub timer_armed_for: Option<Instant>,
+}
+
+impl Conn {
+    pub fn new(
+        stream: TcpStream,
+        generation: u64,
+        now: Instant,
+        read_timeout: Duration,
+        response_timeout: Duration,
+    ) -> Conn {
+        Conn {
+            stream,
+            generation,
+            assembler: FrameAssembler::new(),
+            outq: VecDeque::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            closing: false,
+            careful: false,
+            peer_eof: false,
+            fin_sent: false,
+            broken: false,
+            drain_deadline: None,
+            read_deadline: Some(now + read_timeout),
+            read_timeout,
+            response_timeout,
+            last_write_progress: now,
+            counted: true,
+            timer_armed_for: None,
+        }
+    }
+
+    pub fn stream(&self) -> &TcpStream {
+        &self.stream
+    }
+
+    /// Begin closing: queued responses still flush; `careful` adds the
+    /// FIN-then-drain tail that protects a just-queued goodbye frame.
+    pub fn begin_close(&mut self, careful: bool) {
+        self.closing = true;
+        self.careful = self.careful || careful;
+        self.read_deadline = None;
+    }
+
+    pub fn enqueue(&mut self, out: Outgoing) {
+        self.outq.push_back(out);
+    }
+
+    /// Unflushed response bytes (the `pending_writeback_bytes` gauge).
+    pub fn writeback_bytes(&self) -> u64 {
+        (self.wbuf.len() - self.wpos) as u64
+    }
+
+    /// Consume whatever the socket has (bounded per pass) and decode
+    /// complete frames. While closing we only discard inbound bytes,
+    /// watching for the peer's FIN.
+    pub fn read_ready(&mut self, now: Instant, max_payload: u32) -> ReadPass {
+        let mut pass = ReadPass::default();
+        let mut buf = [0u8; 16 * 1024];
+        let mut taken = 0usize;
+        let mut saw_eof = false;
+        while taken < READ_PASS_BYTES {
+            match self.stream.read(&mut buf) {
+                Ok(0) => {
+                    saw_eof = true;
+                    break;
+                }
+                Ok(n) => {
+                    taken += n;
+                    if !self.closing {
+                        self.assembler.push(&buf[..n]);
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(_) => {
+                    self.broken = true;
+                    return pass;
+                }
+            }
+        }
+        if self.closing {
+            if saw_eof {
+                self.peer_eof = true;
+            }
+            return pass;
+        }
+        loop {
+            match self.assembler.next_frame(max_payload) {
+                Ok(Some(frame)) => {
+                    // A complete frame restarts the per-frame deadline.
+                    self.read_deadline = Some(now + self.read_timeout);
+                    pass.frames.push(frame);
+                }
+                Ok(None) => break,
+                Err(msg) => {
+                    pass.framing_error = Some(msg);
+                    break;
+                }
+            }
+        }
+        if saw_eof {
+            // The peer's FIN arrived in this pass; a careful close need
+            // not wait for another readiness event to observe it.
+            self.peer_eof = true;
+            if pass.framing_error.is_none() {
+                if self.assembler.is_mid_frame() {
+                    // EOF inside a frame is a truncation, not a clean
+                    // close — same diagnostic as the blocking reader.
+                    pass.framing_error = Some(FrameAssembler::eof_mid_frame());
+                } else {
+                    self.read_deadline = None;
+                }
+            }
+        }
+        pass
+    }
+
+    /// Resolve as much of the writeback queue head as possible and
+    /// flush serialized bytes to the socket. Call whenever the socket
+    /// became writable, a completion notify fired, or a timer expired.
+    pub fn pump(&mut self, now: Instant) {
+        if self.broken {
+            return;
+        }
+        self.resolve_heads(now);
+        self.flush(now);
+        if self.wpos == self.wbuf.len() {
+            self.wbuf.clear();
+            self.wpos = 0;
+        }
+        // Fully flushed and nothing queued: take the careful-close FIN
+        // step (clean closes just report done()).
+        if self.closing
+            && self.outq.is_empty()
+            && self.wbuf.is_empty()
+            && self.careful
+            && !self.fin_sent
+        {
+            let _ = self.stream.shutdown(std::net::Shutdown::Write);
+            self.fin_sent = true;
+            self.drain_deadline = Some(now + DRAIN_BUDGET);
+        }
+    }
+
+    /// Serialize every head item that is already resolvable into
+    /// `wbuf`, stopping at the first one still waiting — ordered
+    /// writeback, exactly like the old writer thread.
+    fn resolve_heads(&mut self, now: Instant) {
+        while let Some(head) = self.outq.pop_front() {
+            match self.resolve_one(head, now) {
+                Ok(frame) => {
+                    // Vec<u8> is an infallible writer.
+                    let _ = wire::write_frame(&mut self.wbuf, &frame);
+                }
+                Err(unresolved) => {
+                    self.outq.push_front(unresolved);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Resolve one item to its response frame, or hand it back if its
+    /// result has not arrived (and its deadline has not passed).
+    fn resolve_one(&self, head: Outgoing, now: Instant) -> Result<Frame, Outgoing> {
+        match head {
+            Outgoing::Ready(f) => Ok(f),
+            Outgoing::Pending { version, request_id, rx, mut deadline } => {
+                // The response clock starts when the item becomes head
+                // — the old writer's recv_timeout(response_timeout).
+                let d = *deadline.get_or_insert(now + self.response_timeout);
+                match rx.try_recv() {
+                    Ok(Ok(resp)) => Ok(Frame::ok(
+                        Opcode::Infer,
+                        request_id,
+                        wire::encode_outputs(&resp.output),
+                    )
+                    .at_version(version)),
+                    Ok(Err(e)) => Ok(Frame::error(
+                        Opcode::Infer,
+                        request_id,
+                        failure_status(e.kind),
+                        &e.message,
+                    )
+                    .at_version(version)),
+                    Err(TryRecvError::Disconnected) => {
+                        Ok(lost_frame(Opcode::Infer, request_id, version))
+                    }
+                    Err(TryRecvError::Empty) if now >= d => {
+                        Ok(lost_frame(Opcode::Infer, request_id, version))
+                    }
+                    Err(TryRecvError::Empty) => {
+                        Err(Outgoing::Pending { version, request_id, rx, deadline })
+                    }
+                }
+            }
+            Outgoing::PendingBatch {
+                version,
+                request_id,
+                receivers,
+                mut rows,
+                mut next,
+                mut deadline,
+            } => {
+                let d = *deadline.get_or_insert(now + self.response_timeout);
+                loop {
+                    if next >= receivers.len() {
+                        return Ok(Frame::ok(
+                            Opcode::InferBatch,
+                            request_id,
+                            wire::encode_batch_outputs(&rows),
+                        )
+                        .at_version(version));
+                    }
+                    match receivers[next].try_recv() {
+                        Ok(Ok(resp)) => {
+                            rows.push(resp.output);
+                            next += 1;
+                        }
+                        // One failure fails the whole batch.
+                        Ok(Err(e)) => {
+                            return Ok(Frame::error(
+                                Opcode::InferBatch,
+                                request_id,
+                                failure_status(e.kind),
+                                &e.message,
+                            )
+                            .at_version(version))
+                        }
+                        Err(TryRecvError::Disconnected) => {
+                            return Ok(lost_frame(Opcode::InferBatch, request_id, version))
+                        }
+                        Err(TryRecvError::Empty) if now >= d => {
+                            return Ok(lost_frame(Opcode::InferBatch, request_id, version))
+                        }
+                        Err(TryRecvError::Empty) => {
+                            return Err(Outgoing::PendingBatch {
+                                version,
+                                request_id,
+                                receivers,
+                                rows,
+                                next,
+                                deadline,
+                            })
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Push `wbuf` bytes at the socket until done or `WouldBlock`.
+    fn flush(&mut self, now: Instant) {
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => {
+                    self.broken = true;
+                    return;
+                }
+                Ok(n) => {
+                    self.wpos += n;
+                    self.last_write_progress = now;
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(_) => {
+                    self.broken = true;
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Read interest: serving connections always listen; a careful
+    /// close keeps listening (to discard) until the peer's FIN.
+    pub fn want_read(&self) -> bool {
+        if self.broken || self.peer_eof {
+            return false;
+        }
+        if self.closing {
+            self.careful && self.fin_sent
+        } else {
+            true
+        }
+    }
+
+    /// Write interest: only while flushed-but-unsent bytes exist (a
+    /// pending head needs a completion notify, not socket readiness).
+    pub fn want_write(&self) -> bool {
+        !self.broken && self.wpos < self.wbuf.len()
+    }
+
+    /// The earliest instant at which this connection needs a timer
+    /// kick: per-frame read deadline, head response deadline, careful
+    /// drain budget, or the write-stall bound.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        let mut next: Option<Instant> = None;
+        let mut fold = |d: Option<Instant>| {
+            next = match (next, d) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, b) => a.or(b),
+            };
+        };
+        if !self.closing && !self.peer_eof {
+            fold(self.read_deadline);
+        }
+        fold(match self.outq.front() {
+            Some(Outgoing::Pending { deadline, .. })
+            | Some(Outgoing::PendingBatch { deadline, .. }) => *deadline,
+            _ => None,
+        });
+        fold(self.drain_deadline);
+        if self.wpos < self.wbuf.len() {
+            fold(Some(self.last_write_progress + WRITE_STALL));
+        }
+        next
+    }
+
+    /// The read deadline fired: the peer stalled mid-frame (or went
+    /// silent) past the timeout.
+    pub fn read_deadline_expired(&self, now: Instant) -> bool {
+        !self.closing && self.read_deadline.is_some_and(|d| now >= d)
+    }
+
+    /// True once the connection should be torn down and its slot freed.
+    pub fn done(&self, now: Instant) -> bool {
+        if self.broken {
+            return true;
+        }
+        // A peer that stops reading while we still owe it bytes would
+        // pin the slot forever; the old writer thread bounded this with
+        // a 10s write timeout.
+        if self.wpos < self.wbuf.len() && now >= self.last_write_progress + WRITE_STALL {
+            return true;
+        }
+        if !(self.closing && self.outq.is_empty() && self.wbuf.len() == self.wpos) {
+            return false;
+        }
+        if !self.careful {
+            return true;
+        }
+        // Careful close: wait for the peer's FIN or the drain budget.
+        self.fin_sent && (self.peer_eof || self.drain_deadline.is_some_and(|d| now >= d))
+    }
+}
+
+/// The frame answering a response channel that died or timed out —
+/// identical text to the old writer thread's.
+fn lost_frame(opcode: Opcode, request_id: u64, version: u16) -> Frame {
+    Frame::error(opcode, request_id, Status::Internal, "response channel lost or timed out")
+        .at_version(version)
+}
+
+/// Completion mailbox between coordinator worker threads and the event
+/// loop: workers push the finished connection's token and tap the wake
+/// pipe; the loop drains the tokens on its next pass and pumps those
+/// connections.
+pub struct NotifyHub {
+    wake: WakePipe,
+    ready: Mutex<Vec<u64>>,
+}
+
+impl NotifyHub {
+    pub fn new(wake: WakePipe) -> NotifyHub {
+        NotifyHub { wake, ready: Mutex::new(Vec::new()) }
+    }
+
+    pub fn wake_fd(&self) -> std::os::unix::io::RawFd {
+        self.wake.read_fd()
+    }
+
+    /// Nudge the loop without marking any connection ready (shutdown).
+    pub fn wake(&self) {
+        self.wake.wake();
+    }
+
+    /// A completion hook bound to one connection token. Cheap to clone
+    /// per request (it is an `Arc`).
+    pub fn notifier(self: &Arc<Self>, token: u64) -> CompletionNotify {
+        let hub = self.clone();
+        Arc::new(move || hub.push(token))
+    }
+
+    fn push(&self, token: u64) {
+        let was_empty = {
+            let mut ready = self.ready.lock().unwrap();
+            let was_empty = ready.is_empty();
+            ready.push(token);
+            was_empty
+        };
+        // One wake byte per batch of completions: with tokens already
+        // queued a wakeup is guaranteed to be pending (or the loop is
+        // mid-pass and will swap the vec before sleeping).
+        if was_empty {
+            self.wake.wake();
+        }
+    }
+
+    /// Swallow pending wake bytes and take the ready-token batch.
+    pub fn drain_ready(&self, out: &mut Vec<u64>) {
+        self.wake.drain();
+        out.clear();
+        let mut ready = self.ready.lock().unwrap();
+        std::mem::swap(out, &mut ready);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn pair() -> (TcpStream, TcpStream) {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+        (client, server)
+    }
+
+    #[test]
+    fn ordered_writeback_blocks_behind_a_pending_head() {
+        let (mut client, server) = pair();
+        let now = Instant::now();
+        let mut conn =
+            Conn::new(server, 0, now, Duration::from_secs(30), Duration::from_secs(30));
+        let (tx, rx) = channel::<InferResult>();
+        conn.enqueue(Outgoing::Pending { version: 1, request_id: 1, rx, deadline: None });
+        conn.enqueue(Outgoing::Ready(Frame::ok(Opcode::Ping, 2, vec![]).at_version(1)));
+        conn.pump(now);
+        assert_eq!(conn.writeback_bytes(), 0, "nothing resolvable yet");
+
+        tx.send(Ok(crate::coordinator::request::InferResponse {
+            id: 1,
+            output: vec![1.0],
+            latency_s: 0.0,
+            backend: "t".into(),
+            batch_size: 1,
+        }))
+        .unwrap();
+        conn.pump(now);
+        client.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        let mut r = std::io::BufReader::new(&mut client);
+        let f1 = wire::read_frame(&mut r, wire::DEFAULT_MAX_PAYLOAD).unwrap();
+        let f2 = wire::read_frame(&mut r, wire::DEFAULT_MAX_PAYLOAD).unwrap();
+        assert_eq!((f1.request_id, f1.status), (1, Status::Ok));
+        assert_eq!((f2.request_id, f2.status), (2, Status::Ok));
+    }
+
+    #[test]
+    fn head_deadline_is_armed_lazily_and_times_out_to_internal() {
+        let (mut client, server) = pair();
+        let t0 = Instant::now();
+        let mut conn =
+            Conn::new(server, 0, t0, Duration::from_secs(30), Duration::from_millis(100));
+        let (_tx, rx) = channel::<InferResult>();
+        conn.enqueue(Outgoing::Pending { version: 1, request_id: 9, rx, deadline: None });
+        conn.pump(t0);
+        assert_eq!(
+            conn.next_deadline(),
+            Some(t0 + Duration::from_millis(100)),
+            "head deadline armed when the item became head, earlier than the read deadline"
+        );
+        conn.pump(t0 + Duration::from_millis(100));
+        client.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        let mut r = std::io::BufReader::new(&mut client);
+        let f = wire::read_frame(&mut r, wire::DEFAULT_MAX_PAYLOAD).unwrap();
+        assert_eq!(f.status, Status::Internal);
+        assert!(f.message().contains("lost or timed out"));
+    }
+
+    #[test]
+    fn careful_close_sends_fin_after_the_goodbye_and_waits_for_peer() {
+        let (mut client, server) = pair();
+        let t0 = Instant::now();
+        let mut conn =
+            Conn::new(server, 0, t0, Duration::from_secs(30), Duration::from_secs(30));
+        conn.enqueue(Outgoing::Ready(
+            Frame::error(Opcode::Ping, 0, Status::Busy, "server connection limit reached")
+                .at_version(wire::MIN_VERSION),
+        ));
+        conn.begin_close(true);
+        conn.pump(t0);
+        assert!(!conn.done(t0), "drain window still open");
+        assert!(conn.want_read(), "discarding until the peer's FIN");
+
+        client.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        let mut r = std::io::BufReader::new(&mut client);
+        let f = wire::read_frame(&mut r, wire::DEFAULT_MAX_PAYLOAD).unwrap();
+        assert_eq!(f.status, Status::Busy);
+        drop(r);
+        drop(client); // peer FIN
+        std::thread::sleep(Duration::from_millis(20));
+        let now = Instant::now();
+        let pass = conn.read_ready(now, wire::DEFAULT_MAX_PAYLOAD);
+        assert!(pass.frames.is_empty() && pass.framing_error.is_none());
+        assert!(conn.done(now), "peer FIN completes the careful close");
+    }
+
+    #[test]
+    fn read_pass_reports_frames_then_poison_in_order() {
+        let (mut client, server) = pair();
+        let now = Instant::now();
+        let mut conn =
+            Conn::new(server, 0, now, Duration::from_secs(30), Duration::from_secs(30));
+        let mut bytes = Vec::new();
+        wire::write_frame(&mut bytes, &Frame::ok(Opcode::Ping, 1, vec![]).at_version(1)).unwrap();
+        wire::write_frame(&mut bytes, &Frame::ok(Opcode::Ping, 2, vec![]).at_version(1)).unwrap();
+        bytes.extend_from_slice(&[0xde; 32]);
+        client.write_all(&bytes).unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        let pass = conn.read_ready(now, wire::DEFAULT_MAX_PAYLOAD);
+        assert_eq!(pass.frames.len(), 2, "valid frames before the poison still dispatch");
+        assert!(pass.framing_error.unwrap().contains("magic"));
+    }
+
+    #[test]
+    fn notify_hub_batches_tokens_across_threads() {
+        let hub = Arc::new(NotifyHub::new(WakePipe::new().unwrap()));
+        let n1 = hub.notifier(3);
+        let n2 = hub.notifier(8);
+        let t = std::thread::spawn(move || n2());
+        n1();
+        t.join().unwrap();
+        n1();
+        let mut out = Vec::new();
+        hub.drain_ready(&mut out);
+        out.sort_unstable();
+        assert_eq!(out, vec![3, 3, 8]);
+        hub.drain_ready(&mut out);
+        assert!(out.is_empty());
+    }
+}

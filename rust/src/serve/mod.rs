@@ -2,10 +2,12 @@
 //! [`crate::coordinator`].
 //!
 //! ```text
-//!  loadgen/client ──TCP──► acceptor ──► per-conn reader ─submit─► model route
-//!      ▲                                  (bounded pool)              │ least-loaded pool pick
-//!      │                               per-conn writer ◄──response───┤
-//!      └───────────── frames (wire.rs, v3) ─────┘                    ▼
+//!  loadgen/client ──TCP──► readiness event loop (epoll/kqueue, 1 thread)
+//!      ▲                     │ nonblocking accept + incremental decode
+//!      │                     ├─submit─► model route ──► least-loaded pool pick
+//!      │                     ▼                                        │
+//!      └── frames ◄── ordered writeback ◄── completion wakeups ◄──────┤
+//!         (wire.rs, v4)                                               ▼
 //!                                               per-(backend × model) worker pools
 //!                                                        (N replicas each)
 //!
@@ -18,10 +20,15 @@
 //! * [`wire`] — the versioned length-prefixed binary protocol, v2 with
 //!   model-name routing and `ListModels` (`docs/wire-protocol.md` is
 //!   the spec; v1 frames still accepted);
-//! * [`server`] — `TcpListener` acceptor + bounded connection pool
-//!   bridging frames onto the coordinator's batching queues;
-//!   [`Server::serve`] assembles the replicated multi-model engine
-//!   from an [`EngineConfig`];
+//! * [`server`] — the single-threaded readiness event loop bridging
+//!   frames onto the coordinator's batching queues (c10k-class:
+//!   thread count is O(pools), not O(connections) —
+//!   `docs/async-net.md`); [`Server::serve`] assembles the replicated
+//!   multi-model engine from an [`EngineConfig`];
+//! * [`poll`] — the std-only epoll/kqueue readiness abstraction
+//!   ([`poll::Poller`]), wakeup pipe, and coarse timer wheel;
+//! * [`conn`] — the per-connection state machine: incremental frame
+//!   reassembly, ordered writeback, careful-close draining;
 //! * [`registry`] — catalog of versioned models + independently
 //!   hot-swappable serving slots with EMLP+SPx persistence,
 //!   slot-following backends, and derived VSQ int8/int4 artifacts with
@@ -41,14 +48,16 @@
 //! `docs/observability.md`.
 
 pub mod client;
+pub mod conn;
 pub mod pipeline_backend;
+pub mod poll;
 pub mod registry;
 pub mod server;
 pub mod wire;
 
 pub use client::{
-    run_loadgen, run_slo_sweep, BatchReply, Client, InferReply, LoadGenConfig, LoadGenReport,
-    ModelReport, RetryPolicy, RetryingClient, SloPoint,
+    run_loadgen, run_reconnect_storm, run_slo_sweep, BatchReply, Client, InferReply,
+    LoadGenConfig, LoadGenReport, ModelReport, RetryPolicy, RetryingClient, SloPoint, StormReport,
 };
 pub use pipeline_backend::{
     pipeline_cpu_factory, pipeline_cpu_factory_traced, pipeline_fpga_factory,
@@ -59,8 +68,9 @@ pub use registry::{
     swappable_cpu_factory, swappable_fpga_factory, swappable_vsq_factory, ModelRegistry,
     ModelSlot, ModelVersion, SwapError,
 };
+pub use poll::raise_nofile_limit;
 pub use server::{BackendKind, EngineConfig, ServeConfig, Server};
 pub use wire::{
-    Frame, HealthReport, ModelInfo, Opcode, PoolHealth, Precision, Priority, Qos, Status,
-    BACKEND_ANY,
+    Frame, HealthReport, LoopGauges, ModelInfo, Opcode, PoolHealth, Precision, Priority, Qos,
+    Status, BACKEND_ANY,
 };

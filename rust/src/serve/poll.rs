@@ -1,0 +1,671 @@
+//! Readiness polling for the event-driven connection layer: a minimal
+//! epoll (Linux) / kqueue (macOS, BSDs) wrapper, the wakeup pipe that
+//! lets coordinator workers nudge the loop from their threads, a
+//! coarse timer wheel for read deadlines and drain budgets, and the
+//! loop gauges exported on `/metrics`, `Stats`, and v4 `Health`
+//! (docs/async-net.md).
+//!
+//! Everything here is std + self-declared libc FFI — no external
+//! crates. The syscall surface is deliberately tiny: create/ctl/wait
+//! on the OS readiness queue, an unnamed pipe, and `{get,set}rlimit`
+//! for the file-descriptor ceiling a c10k process runs into first.
+
+use std::io;
+use std::os::unix::io::RawFd;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use super::wire::LoopGauges;
+
+/// One readiness notification. Error/hangup conditions are folded into
+/// `readable`/`writable` so the connection discovers them from the
+/// next `read(2)`/`write(2)` instead of a separate code path.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+}
+
+/// Upper bound on events drained per [`Poller::wait`] call.
+pub const MAX_EVENTS: usize = 1024;
+
+#[cfg(any(target_os = "linux", target_os = "android"))]
+mod sys {
+    use super::Event;
+    use std::ffi::c_int;
+    use std::io;
+    use std::os::unix::io::RawFd;
+    use std::time::Duration;
+
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+    const EPOLLRDHUP: u32 = 0x2000;
+    const EPOLL_CTL_ADD: c_int = 1;
+    const EPOLL_CTL_DEL: c_int = 2;
+    const EPOLL_CTL_MOD: c_int = 3;
+    const EPOLL_CLOEXEC: c_int = 0o2000000;
+
+    // The kernel ABI packs this struct on x86-64 (a 12-byte layout);
+    // other architectures use natural alignment.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: c_int) -> c_int;
+        fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+    }
+
+    pub struct Selector {
+        fd: RawFd,
+    }
+
+    impl Selector {
+        pub fn new() -> io::Result<Selector> {
+            let fd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if fd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Selector { fd })
+        }
+
+        fn ctl(
+            &self,
+            op: c_int,
+            fd: RawFd,
+            token: u64,
+            readable: bool,
+            writable: bool,
+        ) -> io::Result<()> {
+            let mut events = EPOLLERR | EPOLLHUP;
+            if readable {
+                events |= EPOLLIN | EPOLLRDHUP;
+            }
+            if writable {
+                events |= EPOLLOUT;
+            }
+            let mut ev = EpollEvent { events, data: token };
+            let rc = unsafe { epoll_ctl(self.fd, op, fd, &mut ev) };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub fn add(&self, fd: RawFd, token: u64, r: bool, w: bool) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, token, r, w)
+        }
+
+        pub fn modify(&self, fd: RawFd, token: u64, r: bool, w: bool) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, token, r, w)
+        }
+
+        pub fn delete(&self, fd: RawFd) -> io::Result<()> {
+            let mut ev = EpollEvent { events: 0, data: 0 };
+            let rc = unsafe { epoll_ctl(self.fd, EPOLL_CTL_DEL, fd, &mut ev) };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub fn wait(&self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+            let mut buf = [EpollEvent { events: 0, data: 0 }; super::MAX_EVENTS];
+            let timeout_ms: c_int = match timeout {
+                None => -1,
+                Some(d) => d.as_millis().min(i32::MAX as u128) as c_int,
+            };
+            let n = unsafe {
+                epoll_wait(self.fd, buf.as_mut_ptr(), super::MAX_EVENTS as c_int, timeout_ms)
+            };
+            if n < 0 {
+                let err = io::Error::last_os_error();
+                if err.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(err);
+            }
+            for ev in buf.iter().take(n as usize) {
+                // Copy out of the (possibly packed) struct before use.
+                let events = ev.events;
+                let data = ev.data;
+                out.push(Event {
+                    token: data,
+                    readable: events & (EPOLLIN | EPOLLRDHUP | EPOLLERR | EPOLLHUP) != 0,
+                    writable: events & (EPOLLOUT | EPOLLERR | EPOLLHUP) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for Selector {
+        fn drop(&mut self) {
+            unsafe { super::close(self.fd) };
+        }
+    }
+
+    extern "C" {
+        fn pipe2(fds: *mut c_int, flags: c_int) -> c_int;
+    }
+
+    const O_NONBLOCK: c_int = 0o4000;
+    const O_CLOEXEC: c_int = 0o2000000;
+
+    pub fn make_pipe() -> io::Result<(RawFd, RawFd)> {
+        let mut fds = [0 as c_int; 2];
+        if unsafe { pipe2(fds.as_mut_ptr(), O_NONBLOCK | O_CLOEXEC) } < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok((fds[0], fds[1]))
+    }
+
+    pub const RLIMIT_NOFILE: c_int = 7;
+}
+
+#[cfg(any(
+    target_os = "macos",
+    target_os = "ios",
+    target_os = "freebsd",
+    target_os = "netbsd",
+    target_os = "openbsd",
+    target_os = "dragonfly"
+))]
+mod sys {
+    use super::Event;
+    use std::ffi::{c_int, c_void};
+    use std::io;
+    use std::os::unix::io::RawFd;
+    use std::ptr;
+    use std::time::Duration;
+
+    const EVFILT_READ: i16 = -1;
+    const EVFILT_WRITE: i16 = -2;
+    const EV_ADD: u16 = 0x0001;
+    const EV_DELETE: u16 = 0x0002;
+    const EV_ENABLE: u16 = 0x0004;
+    const EV_DISABLE: u16 = 0x0008;
+    const EV_ERROR: u16 = 0x4000;
+    const EV_EOF: u16 = 0x8000;
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    struct Kevent {
+        ident: usize,
+        filter: i16,
+        flags: u16,
+        fflags: u32,
+        data: isize,
+        udata: *mut c_void,
+    }
+
+    #[repr(C)]
+    struct Timespec {
+        tv_sec: isize,
+        tv_nsec: isize,
+    }
+
+    extern "C" {
+        fn kqueue() -> c_int;
+        fn kevent(
+            kq: c_int,
+            changelist: *const Kevent,
+            nchanges: c_int,
+            eventlist: *mut Kevent,
+            nevents: c_int,
+            timeout: *const Timespec,
+        ) -> c_int;
+    }
+
+    pub struct Selector {
+        fd: RawFd,
+    }
+
+    impl Selector {
+        pub fn new() -> io::Result<Selector> {
+            let fd = unsafe { kqueue() };
+            if fd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Selector { fd })
+        }
+
+        fn apply(&self, fd: RawFd, token: u64, r: bool, w: bool) -> io::Result<()> {
+            let mk = |filter: i16, on: bool| Kevent {
+                ident: fd as usize,
+                filter,
+                flags: EV_ADD | if on { EV_ENABLE } else { EV_DISABLE },
+                fflags: 0,
+                data: 0,
+                udata: token as *mut c_void,
+            };
+            let changes = [mk(EVFILT_READ, r), mk(EVFILT_WRITE, w)];
+            let rc = unsafe {
+                kevent(self.fd, changes.as_ptr(), 2, ptr::null_mut(), 0, ptr::null())
+            };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub fn add(&self, fd: RawFd, token: u64, r: bool, w: bool) -> io::Result<()> {
+            self.apply(fd, token, r, w)
+        }
+
+        pub fn modify(&self, fd: RawFd, token: u64, r: bool, w: bool) -> io::Result<()> {
+            self.apply(fd, token, r, w)
+        }
+
+        pub fn delete(&self, fd: RawFd) -> io::Result<()> {
+            for filter in [EVFILT_READ, EVFILT_WRITE] {
+                let change = Kevent {
+                    ident: fd as usize,
+                    filter,
+                    flags: EV_DELETE,
+                    fflags: 0,
+                    data: 0,
+                    udata: ptr::null_mut(),
+                };
+                // A filter that was never enabled reports ENOENT —
+                // harmless on teardown.
+                unsafe { kevent(self.fd, &change, 1, ptr::null_mut(), 0, ptr::null()) };
+            }
+            Ok(())
+        }
+
+        pub fn wait(&self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+            let mut buf = [Kevent {
+                ident: 0,
+                filter: 0,
+                flags: 0,
+                fflags: 0,
+                data: 0,
+                udata: ptr::null_mut(),
+            }; super::MAX_EVENTS];
+            let ts;
+            let ts_ptr = match timeout {
+                None => ptr::null(),
+                Some(d) => {
+                    ts = Timespec {
+                        tv_sec: d.as_secs() as isize,
+                        tv_nsec: d.subsec_nanos() as isize,
+                    };
+                    &ts as *const Timespec
+                }
+            };
+            let n = unsafe {
+                kevent(
+                    self.fd,
+                    ptr::null(),
+                    0,
+                    buf.as_mut_ptr(),
+                    super::MAX_EVENTS as c_int,
+                    ts_ptr,
+                )
+            };
+            if n < 0 {
+                let err = io::Error::last_os_error();
+                if err.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(err);
+            }
+            for ev in buf.iter().take(n as usize) {
+                if ev.flags & EV_ERROR != 0 {
+                    continue;
+                }
+                let eof = ev.flags & EV_EOF != 0;
+                out.push(Event {
+                    token: ev.udata as u64,
+                    readable: ev.filter == EVFILT_READ || eof,
+                    writable: ev.filter == EVFILT_WRITE || eof,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for Selector {
+        fn drop(&mut self) {
+            unsafe { super::close(self.fd) };
+        }
+    }
+
+    extern "C" {
+        fn pipe(fds: *mut c_int) -> c_int;
+        fn fcntl(fd: c_int, cmd: c_int, arg: c_int) -> c_int;
+    }
+
+    const F_SETFD: c_int = 2;
+    const F_SETFL: c_int = 4;
+    const FD_CLOEXEC: c_int = 1;
+    const O_NONBLOCK: c_int = 0x0004;
+
+    pub fn make_pipe() -> io::Result<(RawFd, RawFd)> {
+        let mut fds = [0 as c_int; 2];
+        if unsafe { pipe(fds.as_mut_ptr()) } < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        for fd in fds {
+            unsafe {
+                fcntl(fd, F_SETFL, O_NONBLOCK);
+                fcntl(fd, F_SETFD, FD_CLOEXEC);
+            }
+        }
+        Ok((fds[0], fds[1]))
+    }
+
+    pub const RLIMIT_NOFILE: std::ffi::c_int = 8;
+}
+
+extern "C" {
+    fn close(fd: std::ffi::c_int) -> std::ffi::c_int;
+    fn read(fd: std::ffi::c_int, buf: *mut u8, count: usize) -> isize;
+    fn write(fd: std::ffi::c_int, buf: *const u8, count: usize) -> isize;
+    fn getrlimit(resource: std::ffi::c_int, rlim: *mut Rlimit) -> std::ffi::c_int;
+    fn setrlimit(resource: std::ffi::c_int, rlim: *const Rlimit) -> std::ffi::c_int;
+}
+
+#[repr(C)]
+struct Rlimit {
+    cur: u64,
+    max: u64,
+}
+
+/// Raise the soft `RLIMIT_NOFILE` toward `want` (clamped to the hard
+/// limit) and return the effective soft limit. c10k needs fds, not
+/// threads: each in-process client/server connection pair costs two.
+/// Best-effort — callers clamp their connection counts to the result.
+pub fn raise_nofile_limit(want: u64) -> u64 {
+    unsafe {
+        let mut lim = Rlimit { cur: 0, max: 0 };
+        if getrlimit(sys::RLIMIT_NOFILE, &mut lim) != 0 {
+            return 0;
+        }
+        if lim.cur >= want {
+            return lim.cur;
+        }
+        let target = want.min(lim.max);
+        let new = Rlimit { cur: target, max: lim.max };
+        if setrlimit(sys::RLIMIT_NOFILE, &new) == 0 {
+            target
+        } else {
+            lim.cur
+        }
+    }
+}
+
+/// OS readiness queue behind a poller-shaped API. Level-triggered on
+/// both platforms: an event repeats every wait until the condition
+/// (unread bytes, writable buffer space) is consumed.
+pub struct Poller {
+    selector: sys::Selector,
+}
+
+impl Poller {
+    pub fn new() -> io::Result<Poller> {
+        Ok(Poller { selector: sys::Selector::new()? })
+    }
+
+    pub fn add(&self, fd: RawFd, token: u64, readable: bool, writable: bool) -> io::Result<()> {
+        self.selector.add(fd, token, readable, writable)
+    }
+
+    pub fn modify(&self, fd: RawFd, token: u64, readable: bool, writable: bool) -> io::Result<()> {
+        self.selector.modify(fd, token, readable, writable)
+    }
+
+    pub fn delete(&self, fd: RawFd) -> io::Result<()> {
+        self.selector.delete(fd)
+    }
+
+    /// Block until readiness or `timeout`, appending events to `out`
+    /// (cleared first). A signal interruption returns empty, not an
+    /// error — callers just re-poll.
+    pub fn wait(&self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+        out.clear();
+        self.selector.wait(out, timeout)
+    }
+}
+
+/// Self-pipe waker: coordinator workers (and `Server::shutdown`) write
+/// one byte from their threads; the loop has the read end registered
+/// and drains it on wakeup. Writes into a full pipe are dropped — a
+/// full pipe already guarantees a pending wakeup.
+pub struct WakePipe {
+    read_fd: RawFd,
+    write_fd: RawFd,
+}
+
+impl WakePipe {
+    pub fn new() -> io::Result<WakePipe> {
+        let (r, w) = sys::make_pipe()?;
+        Ok(WakePipe { read_fd: r, write_fd: w })
+    }
+
+    /// The fd to register with the [`Poller`].
+    pub fn read_fd(&self) -> RawFd {
+        self.read_fd
+    }
+
+    /// Nudge the loop. Safe from any thread; `write(2)` on a pipe is
+    /// atomic for single bytes.
+    pub fn wake(&self) {
+        let byte = [1u8];
+        unsafe { write(self.write_fd, byte.as_ptr(), 1) };
+    }
+
+    /// Swallow all pending wakeup bytes (called by the loop once per
+    /// readiness event on the read end).
+    pub fn drain(&self) {
+        let mut buf = [0u8; 64];
+        loop {
+            let n = unsafe { read(self.read_fd, buf.as_mut_ptr(), buf.len()) };
+            if n <= 0 {
+                return;
+            }
+        }
+    }
+}
+
+impl Drop for WakePipe {
+    fn drop(&mut self) {
+        unsafe {
+            close(self.read_fd);
+            close(self.write_fd);
+        }
+    }
+}
+
+/// Loop-owned counters exported as gauges. Shared as `Arc<LoopStats>`
+/// between the event loop (writer) and the metrics/Stats/Health render
+/// paths (readers); all accesses relaxed — these are monitoring
+/// signals, not synchronization.
+#[derive(Debug, Default)]
+pub struct LoopStats {
+    pub registered_conns: AtomicU64,
+    pub ready_events: AtomicU64,
+    pub poll_ticks: AtomicU64,
+    pub pending_writeback_bytes: AtomicU64,
+    pub timer_depth: AtomicU64,
+}
+
+impl LoopStats {
+    pub fn gauges(&self) -> LoopGauges {
+        LoopGauges {
+            registered_conns: self.registered_conns.load(Ordering::Relaxed),
+            ready_events: self.ready_events.load(Ordering::Relaxed),
+            poll_ticks: self.poll_ticks.load(Ordering::Relaxed),
+            pending_writeback_bytes: self.pending_writeback_bytes.load(Ordering::Relaxed),
+            timer_depth: self.timer_depth.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Hashed-wheel timer with a fixed tick. Entries are `(token,
+/// generation)` hints, not authoritative deadlines: when one fires the
+/// loop re-checks the connection's actual deadline and reschedules if
+/// it moved (per-frame deadline restarts never touch the wheel).
+/// Deadlines beyond the wheel horizon land in the furthest slot and
+/// re-arm on fire, so arbitrarily long `--read-timeout-s` values work.
+pub struct TimerWheel {
+    slots: Vec<Vec<(u64, u64)>>,
+    tick: Duration,
+    cursor: usize,
+    origin: Instant,
+    live: usize,
+}
+
+impl TimerWheel {
+    pub fn new(nslots: usize, tick: Duration, now: Instant) -> TimerWheel {
+        assert!(nslots >= 2 && tick > Duration::ZERO);
+        TimerWheel {
+            slots: (0..nslots).map(|_| Vec::new()).collect(),
+            tick,
+            cursor: 0,
+            origin: now,
+            live: 0,
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.live
+    }
+
+    /// Arm a `(token, generation)` entry to fire at or shortly after
+    /// `deadline` (granularity: one tick).
+    pub fn schedule(&mut self, now: Instant, deadline: Instant, token: u64, generation: u64) {
+        let delay = deadline.saturating_duration_since(now);
+        let ticks = (delay.as_nanos() / self.tick.as_nanos()).saturating_add(1);
+        let ticks = ticks.min(self.slots.len() as u128 - 1) as usize;
+        let slot = (self.cursor + ticks) % self.slots.len();
+        self.slots[slot].push((token, generation));
+        self.live += 1;
+    }
+
+    /// Advance the wheel to `now`, draining every slot whose time has
+    /// come into `fired`.
+    pub fn advance(&mut self, now: Instant, fired: &mut Vec<(u64, u64)>) {
+        let tick_ns = self.tick.as_nanos();
+        let steps = now.saturating_duration_since(self.origin).as_nanos() / tick_ns;
+        if steps == 0 {
+            return;
+        }
+        for _ in 0..steps.min(self.slots.len() as u128) {
+            self.cursor = (self.cursor + 1) % self.slots.len();
+            let drained = std::mem::take(&mut self.slots[self.cursor]);
+            self.live -= drained.len();
+            fired.extend(drained);
+        }
+        let advanced = tick_ns.saturating_mul(steps);
+        self.origin += Duration::from_nanos(advanced.min(u64::MAX as u128) as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+
+    #[test]
+    fn poller_reports_readability_and_wakeups() {
+        let poller = Poller::new().unwrap();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let mut client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+        poller.add(server.as_raw_fd(), 7, true, false).unwrap();
+
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+        assert!(events.is_empty(), "no bytes yet, no readiness");
+
+        client.write_all(b"x").unwrap();
+        poller.wait(&mut events, Some(Duration::from_secs(2))).unwrap();
+        assert!(events.iter().any(|e| e.token == 7 && e.readable));
+
+        // Level-triggered: unread bytes keep the event repeating.
+        poller.wait(&mut events, Some(Duration::from_millis(50))).unwrap();
+        assert!(events.iter().any(|e| e.token == 7 && e.readable));
+
+        // Writable interest on an idle socket fires immediately.
+        poller.modify(server.as_raw_fd(), 7, true, true).unwrap();
+        poller.wait(&mut events, Some(Duration::from_secs(2))).unwrap();
+        assert!(events.iter().any(|e| e.token == 7 && e.writable));
+        poller.delete(server.as_raw_fd()).unwrap();
+    }
+
+    #[test]
+    fn wake_pipe_crosses_threads() {
+        let poller = Poller::new().unwrap();
+        let pipe = std::sync::Arc::new(WakePipe::new().unwrap());
+        poller.add(pipe.read_fd(), 1, true, false).unwrap();
+
+        let remote = pipe.clone();
+        let t = std::thread::spawn(move || remote.wake());
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_secs(2))).unwrap();
+        t.join().unwrap();
+        assert!(events.iter().any(|e| e.token == 1 && e.readable));
+        pipe.drain();
+        // Drained: the readiness condition is gone.
+        poller.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+        assert!(events.is_empty());
+    }
+
+    #[test]
+    fn timer_wheel_fires_once_per_entry_and_tracks_depth() {
+        let t0 = Instant::now();
+        let mut wheel = TimerWheel::new(8, Duration::from_millis(10), t0);
+        wheel.schedule(t0, t0 + Duration::from_millis(25), 1, 0);
+        wheel.schedule(t0, t0 + Duration::from_millis(5), 2, 9);
+        assert_eq!(wheel.depth(), 2);
+
+        let mut fired = Vec::new();
+        wheel.advance(t0 + Duration::from_millis(11), &mut fired);
+        assert_eq!(fired, vec![(2, 9)]);
+        assert_eq!(wheel.depth(), 1);
+
+        fired.clear();
+        wheel.advance(t0 + Duration::from_millis(60), &mut fired);
+        assert_eq!(fired, vec![(1, 0)]);
+        assert_eq!(wheel.depth(), 0);
+    }
+
+    #[test]
+    fn timer_wheel_horizon_overflow_still_fires() {
+        // A deadline past the wheel span lands in the furthest slot;
+        // the loop re-checks real deadlines on fire, so early firing
+        // is correct as long as the entry is never lost.
+        let t0 = Instant::now();
+        let mut wheel = TimerWheel::new(4, Duration::from_millis(10), t0);
+        wheel.schedule(t0, t0 + Duration::from_secs(3600), 5, 1);
+        let mut fired = Vec::new();
+        wheel.advance(t0 + Duration::from_millis(200), &mut fired);
+        assert_eq!(fired, vec![(5, 1)]);
+    }
+
+    #[test]
+    fn nofile_limit_is_monotone() {
+        let before = raise_nofile_limit(0);
+        assert!(before > 0);
+        let after = raise_nofile_limit(before);
+        assert!(after >= before);
+    }
+}

@@ -1,14 +1,19 @@
-//! The TCP serving front-end: a `TcpListener` acceptor plus a bounded
-//! pool of per-connection worker threads layered on the
+//! The TCP serving front-end: a single-threaded readiness event loop
+//! (epoll on Linux, kqueue on macOS/BSD — `serve/poll.rs`) driving
+//! per-connection state machines (`serve/conn.rs`) layered on the
 //! [`crate::coordinator::Coordinator`].
 //!
-//! Each accepted connection gets a *reader* thread (decodes frames,
-//! submits into the coordinator's batching queues) and a *writer*
-//! thread (resolves responses in submission order and puts them back on
-//! the wire, echoing each request's id and protocol version). Because
-//! the reader never waits for inference to finish, a single connection
-//! can keep many requests in flight — that pipelining is what lets the
-//! dynamic batcher form real batches from one client.
+//! Every socket is nonblocking and registered with the OS readiness
+//! queue; one loop thread accepts, decodes frames incrementally from
+//! partial reads, submits into the coordinator's batching queues, and
+//! flushes responses in request order as sockets become writable.
+//! Coordinator workers hand completions back through a wakeup pipe
+//! ([`NotifyHub`]), so connection count is a memory problem, not a
+//! thread-count problem: the process runs O(pools + 1) threads whether
+//! it holds ten connections or ten thousand (docs/async-net.md).
+//! Because the loop never waits for inference to finish, a single
+//! connection can keep many requests in flight — that pipelining is
+//! what lets the dynamic batcher form real batches from one client.
 //!
 //! Multi-model routing: every served model (a registry *slot*) owns a
 //! list of coordinator pools, one per backend kind, each pool holding
@@ -22,28 +27,31 @@
 //! ([`SubmitError::Backpressure`] → `Status::Backpressure`,
 //! [`SubmitError::Closed`] → `Status::Closed`); connections over the
 //! pool limit are answered with a `Status::Busy` error frame and
-//! dropped.
+//! dropped. Per-frame read deadlines (the slowloris defense) are
+//! enforced by a timer wheel inside the loop instead of blocking
+//! socket timeouts.
 
+use super::conn::{Conn, NotifyHub, Outgoing};
 use super::pipeline_backend::{pipeline_cpu_factory_traced, pipeline_fpga_factory_traced};
 use super::registry::{ModelRegistry, ModelSlot, SwapError};
 use super::wire::{
-    self, Frame, HealthReport, ModelInfo, Opcode, PoolHealth, Precision, ReadError, Status,
-    BACKEND_ANY, DEFAULT_MAX_PAYLOAD,
+    self, Frame, HealthReport, ModelInfo, Opcode, PoolHealth, Precision, Status, BACKEND_ANY,
+    DEFAULT_MAX_PAYLOAD,
 };
 use crate::coordinator::degrade::{DegradeController, DegradePolicy};
-use crate::coordinator::request::{FailureKind, InferResult};
+use crate::coordinator::request::CompletionNotify;
 use crate::coordinator::server::{Coordinator, PoolSpec, RequestQos, SubmitError};
 use crate::coordinator::CoordinatorConfig;
 use crate::fpga::accelerator::AccelConfig;
 use crate::fpga::power::EnergyModel;
 use crate::obs::{render_energy_text, render_prometheus, MetricsHttp, TraceRecorder};
+use crate::serve::poll::{Event, LoopStats, Poller, TimerWheel, WakePipe};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
-use std::io::{BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -54,8 +62,10 @@ pub struct ServeConfig {
     pub max_conns: usize,
     /// Per-frame payload cap.
     pub max_payload: u32,
-    /// How long the writer waits for one inference result before
-    /// answering `Status::Internal`.
+    /// How long the writeback path waits for one inference result
+    /// (clock starts when the item reaches the head of its
+    /// connection's response queue) before answering
+    /// `Status::Internal`.
     pub response_timeout: Duration,
     /// Reader deadline per frame: a connection that stays silent — or
     /// dribbles a partial frame — longer than this is answered
@@ -184,8 +194,17 @@ impl Default for EngineConfig {
     }
 }
 
-/// How often blocked connection reads wake up to check the stop flag.
+/// The event loop's poll timeout — the ceiling on how stale a timer
+/// check can be, and the timer wheel's tick.
 const READ_TICK: Duration = Duration::from_millis(100);
+
+/// Timer-wheel slots: 64 ticks × 100 ms ≈ 6.4 s horizon; deadlines
+/// beyond it re-arm on fire (`poll.rs`).
+const TIMER_SLOTS: usize = 64;
+
+/// How long a graceful shutdown waits for in-flight responses to flush
+/// before force-closing the remaining connections.
+const STOP_GRACE: Duration = Duration::from_secs(5);
 
 /// Routing entry for one served model: its slot, the coordinator pools
 /// serving it (in backend-kind order), and the cached input dimension
@@ -216,7 +235,6 @@ struct Shared {
     default_model: String,
     stop: AtomicBool,
     active_conns: AtomicUsize,
-    conn_seq: AtomicUsize,
     /// Connections closed by the reader deadline (slowloris defense);
     /// surfaced by the `Health` opcode.
     read_timeouts: AtomicU64,
@@ -227,6 +245,10 @@ struct Shared {
     /// [`crate::fpga::accelerator::CycleStats`] into joules on the
     /// `Stats` / `StatsV2` responses and the `/metrics` sidecar.
     energy: EnergyModel,
+    /// Event-loop gauges (registered connections, ready events, poll
+    /// ticks, writeback backlog, timer depth) — written by the loop,
+    /// read by `/metrics`, `Stats`, and v4 `Health`.
+    loop_stats: LoopStats,
     /// Server start, the origin of `edgemlp_uptime_seconds` and the
     /// window for average-power figures.
     start: Instant,
@@ -237,8 +259,9 @@ struct Shared {
 pub struct Server {
     shared: Arc<Shared>,
     local_addr: SocketAddr,
-    acceptor: Option<JoinHandle<()>>,
-    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    evloop: Option<JoinHandle<()>>,
+    /// Wakes the loop from other threads (completions and shutdown).
+    hub: Arc<NotifyHub>,
     /// Prometheus exposition sidecar, when `metrics_addr` was set.
     metrics_http: Option<MetricsHttp>,
 }
@@ -385,6 +408,7 @@ impl Server {
         tracer: Arc<TraceRecorder>,
     ) -> Result<Server> {
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        listener.set_nonblocking(true).context("nonblocking listener")?;
         let local_addr = listener.local_addr()?;
         let metrics_addr = config.metrics_addr.clone();
         let shared = Arc::new(Shared {
@@ -395,10 +419,10 @@ impl Server {
             default_model,
             stop: AtomicBool::new(false),
             active_conns: AtomicUsize::new(0),
-            conn_seq: AtomicUsize::new(0),
             read_timeouts: AtomicU64::new(0),
             tracer,
             energy: EnergyModel::default_fpga(),
+            loop_stats: LoopStats::default(),
             start: Instant::now(),
         });
         let metrics_http = match metrics_addr {
@@ -413,16 +437,16 @@ impl Server {
             }
             None => None,
         };
-        let conns = Arc::new(Mutex::new(Vec::new()));
-        let acceptor = {
+        let hub = Arc::new(NotifyHub::new(WakePipe::new().context("wakeup pipe")?));
+        let evloop = {
             let shared = shared.clone();
-            let conns = conns.clone();
+            let hub = hub.clone();
             std::thread::Builder::new()
-                .name("edgemlp-accept".into())
-                .spawn(move || accept_loop(listener, shared, conns))
-                .context("spawn acceptor")?
+                .name("edgemlp-evloop".into())
+                .spawn(move || EventLoop::new(listener, shared, hub).run())
+                .context("spawn event loop")?
         };
-        Ok(Server { shared, local_addr, acceptor: Some(acceptor), conns, metrics_http })
+        Ok(Server { shared, local_addr, evloop: Some(evloop), hub, metrics_http })
     }
 
     /// The bound address (resolves ephemeral ports).
@@ -446,7 +470,7 @@ impl Server {
         self.metrics_http.as_ref().map(|m| m.local_addr())
     }
 
-    /// Stop accepting, wind down connection threads (their in-flight
+    /// Stop accepting, wind down connections (their in-flight
     /// responses are still written), close the coordinator queues and
     /// join everything.
     pub fn shutdown(mut self) {
@@ -458,30 +482,14 @@ impl Server {
         if let Some(m) = self.metrics_http.take() {
             m.shutdown();
         }
-        // Unblock the acceptor with a throwaway connection. A bind to
-        // 0.0.0.0/:: is not connectable on every platform — aim the
-        // wakeup at loopback on the bound port instead.
-        let mut wake = self.local_addr;
-        if wake.ip().is_unspecified() {
-            match wake.ip() {
-                std::net::IpAddr::V4(_) => {
-                    wake.set_ip(std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST))
-                }
-                std::net::IpAddr::V6(_) => {
-                    wake.set_ip(std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST))
-                }
-            }
-        }
-        let _ = TcpStream::connect_timeout(&wake, Duration::from_secs(1));
-        if let Some(h) = self.acceptor.take() {
+        // The wakeup pipe interrupts the loop's poll immediately.
+        self.hub.wake();
+        if let Some(h) = self.evloop.take() {
             let _ = h.join();
         }
-        for h in self.conns.lock().unwrap().drain(..) {
-            let _ = h.join();
-        }
-        // Queues close only after every connection finished submitting;
-        // workers drain what is left and exit (joined by Coordinator's
-        // Drop when `shared` goes away).
+        // Queues close only after the loop finished submitting; workers
+        // drain what is left and exit (joined by Coordinator's Drop
+        // when `shared` goes away).
         self.shared.coord.stop();
     }
 }
@@ -494,289 +502,419 @@ impl Drop for Server {
     }
 }
 
-fn accept_loop(
+/// Reserved poller token for the listening socket.
+const LISTENER_TOKEN: u64 = u64::MAX;
+/// Reserved poller token for the wakeup pipe's read end.
+const WAKER_TOKEN: u64 = u64::MAX - 1;
+
+/// Connection tokens pack (generation << 32) | slot index, so an event
+/// or timer entry for a recycled slot is recognized as stale.
+fn conn_token(generation: u64, idx: usize) -> u64 {
+    ((generation & 0xffff_ffff) << 32) | (idx as u64 & 0xffff_ffff)
+}
+
+fn token_slot(token: u64) -> usize {
+    (token & 0xffff_ffff) as usize
+}
+
+fn token_generation(token: u64) -> u64 {
+    token >> 32
+}
+
+/// One occupied slab slot: the connection, its per-request completion
+/// hook, and the interest last registered with the poller (so identical
+/// interest never re-issues a syscall).
+struct ConnSlot {
+    conn: Conn,
+    notify: CompletionNotify,
+    reg_r: bool,
+    reg_w: bool,
+}
+
+/// The readiness event loop: owns every connection, the poller, and
+/// the timer wheel. Runs on the single `edgemlp-evloop` thread.
+struct EventLoop {
     listener: TcpListener,
     shared: Arc<Shared>,
-    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
-) {
-    loop {
-        let (stream, _peer) = match listener.accept() {
-            Ok(s) => s,
-            Err(_) if shared.stop.load(Ordering::SeqCst) => return,
-            Err(_) => {
-                // Persistent failures (e.g. EMFILE when the fd limit is
-                // hit) must not busy-spin the acceptor core.
-                std::thread::sleep(Duration::from_millis(10));
-                continue;
+    hub: Arc<NotifyHub>,
+    poller: Poller,
+    slots: Vec<Option<ConnSlot>>,
+    free: Vec<usize>,
+    generation: u64,
+    wheel: TimerWheel,
+    /// Connections registered with the poller (counted + Busy drains).
+    live: usize,
+    /// Sum of unflushed writeback bytes across connections, maintained
+    /// incrementally around every state change.
+    pending_wb: u64,
+    /// Accept backoff after fd exhaustion: a level-triggered readable
+    /// listener that cannot accept would otherwise spin the loop.
+    accept_paused_until: Option<Instant>,
+    stopping: bool,
+    stop_deadline: Option<Instant>,
+}
+
+impl EventLoop {
+    fn new(listener: TcpListener, shared: Arc<Shared>, hub: Arc<NotifyHub>) -> EventLoop {
+        EventLoop {
+            listener,
+            shared,
+            hub,
+            poller: Poller::new().expect("create poller"),
+            slots: Vec::new(),
+            free: Vec::new(),
+            generation: 0,
+            wheel: TimerWheel::new(TIMER_SLOTS, READ_TICK, Instant::now()),
+            live: 0,
+            pending_wb: 0,
+            accept_paused_until: None,
+            stopping: false,
+            stop_deadline: None,
+        }
+    }
+
+    fn run(mut self) {
+        if self.poller.add(self.listener.as_raw_fd(), LISTENER_TOKEN, true, false).is_err() {
+            return;
+        }
+        if self.poller.add(self.hub.wake_fd(), WAKER_TOKEN, true, false).is_err() {
+            return;
+        }
+        let shared = self.shared.clone();
+        let mut events: Vec<Event> = Vec::new();
+        let mut ready_tokens: Vec<u64> = Vec::new();
+        let mut fired: Vec<(u64, u64)> = Vec::new();
+        loop {
+            if self.poller.wait(&mut events, Some(READ_TICK)).is_err() {
+                return;
+            }
+            let now = Instant::now();
+            let stats = &shared.loop_stats;
+            stats.poll_ticks.fetch_add(1, Ordering::Relaxed);
+            stats.ready_events.fetch_add(events.len() as u64, Ordering::Relaxed);
+
+            if !self.stopping && shared.stop.load(Ordering::SeqCst) {
+                self.begin_stop(now);
+            }
+
+            let mut accept_ready = false;
+            let mut waker_ready = false;
+            for ev in &events {
+                match ev.token {
+                    LISTENER_TOKEN => accept_ready = true,
+                    WAKER_TOKEN => waker_ready = true,
+                    token => self.service_conn(token, ev.readable, ev.writable, now),
+                }
+            }
+
+            if waker_ready || self.stopping {
+                self.hub.drain_ready(&mut ready_tokens);
+                for &token in &ready_tokens {
+                    self.service_conn(token, false, false, now);
+                }
+            }
+
+            // Timers: entries are hints — re-check the connection's
+            // real deadlines and re-arm if they moved.
+            self.wheel.advance(now, &mut fired);
+            for &(token, generation) in &fired {
+                if token_generation(token) == generation & 0xffff_ffff {
+                    self.on_timer(token, now);
+                }
+            }
+            fired.clear();
+
+            if accept_ready && !self.stopping {
+                self.accept_ready(now);
+            }
+            if let Some(until) = self.accept_paused_until {
+                if now >= until {
+                    self.accept_paused_until = None;
+                    let _ = self.poller.modify(
+                        self.listener.as_raw_fd(),
+                        LISTENER_TOKEN,
+                        true,
+                        false,
+                    );
+                }
+            }
+
+            stats.registered_conns.store(self.live as u64, Ordering::Relaxed);
+            stats.pending_writeback_bytes.store(self.pending_wb, Ordering::Relaxed);
+            stats.timer_depth.store(self.wheel.depth() as u64, Ordering::Relaxed);
+
+            if self.stopping {
+                let past_grace = self.stop_deadline.is_some_and(|d| now >= d);
+                if self.live == 0 || past_grace {
+                    self.close_all();
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Accept everything the backlog holds (level-triggered: stopping
+    /// early just re-reports, but draining avoids an extra poll pass).
+    fn accept_ready(&mut self, now: Instant) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    if self.shared.tracer.enabled() {
+                        self.shared.tracer.instant("conn", "accept", None, 0);
+                    }
+                    let _ = stream.set_nodelay(true);
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let over_limit = self.shared.active_conns.load(Ordering::SeqCst)
+                        >= self.shared.config.max_conns;
+                    self.register(stream, over_limit, now);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::ConnectionAborted
+                            | std::io::ErrorKind::ConnectionReset
+                            | std::io::ErrorKind::Interrupted
+                    ) =>
+                {
+                    continue
+                }
+                Err(_) => {
+                    // Likely fd exhaustion: a readable-but-unacceptable
+                    // listener would spin the loop, so mask it briefly.
+                    self.accept_paused_until = Some(now + Duration::from_millis(10));
+                    let _ = self.poller.modify(
+                        self.listener.as_raw_fd(),
+                        LISTENER_TOKEN,
+                        false,
+                        false,
+                    );
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Register one accepted socket. Over-limit connections become
+    /// uncounted Busy drains: the goodbye frame flushes through the
+    /// same careful-close machinery as every other goodbye. No request
+    /// was read, so the frame goes out at MIN_VERSION — the one framing
+    /// every supported client can parse.
+    fn register(&mut self, stream: TcpStream, over_limit: bool, now: Instant) {
+        let idx = match self.free.pop() {
+            Some(i) => i,
+            None => {
+                self.slots.push(None);
+                self.slots.len() - 1
             }
         };
-        if shared.stop.load(Ordering::SeqCst) {
-            return;
-        }
-        // Reap finished handlers so the vec stays bounded.
-        {
-            let mut held = conns.lock().unwrap();
-            let mut live = Vec::with_capacity(held.len());
-            for h in held.drain(..) {
-                if h.is_finished() {
-                    let _ = h.join();
-                } else {
-                    live.push(h);
-                }
+        self.generation += 1;
+        let generation = self.generation;
+        let token = conn_token(generation, idx);
+        let mut conn = Conn::new(
+            stream,
+            generation,
+            now,
+            self.shared.config.read_timeout,
+            self.shared.config.response_timeout,
+        );
+        if over_limit {
+            self.shared.coord.metrics().record_busy_rejected();
+            if self.shared.tracer.enabled() {
+                self.shared.tracer.instant("conn", "busy_reject", None, 0);
             }
-            *held = live;
-        }
-        if shared.active_conns.load(Ordering::SeqCst) >= shared.config.max_conns {
-            // Over the pool bound: answer Busy, then close carefully so
-            // the frame survives (see `drain_then_close`). No request
-            // was read, so the frame goes out at MIN_VERSION — the one
-            // framing every supported client can parse.
-            shared.coord.metrics().record_busy_rejected();
-            if shared.tracer.enabled() {
-                shared.tracer.instant("conn", "busy_reject", None, 0);
-            }
-            {
-                let mut w = BufWriter::new(&stream);
-                let frame =
-                    Frame::error(Opcode::Ping, 0, Status::Busy, "server connection limit reached")
-                        .at_version(wire::MIN_VERSION);
-                let _ = wire::write_frame(&mut w, &frame);
-                let _ = w.flush();
-            }
-            // Off-thread: the drain can dwell up to its deadline and
-            // must not stall the acceptor during a connection flood.
-            std::thread::spawn(move || drain_then_close(stream));
-            continue;
-        }
-        shared.active_conns.fetch_add(1, Ordering::SeqCst);
-        let id = shared.conn_seq.fetch_add(1, Ordering::Relaxed);
-        let shared2 = shared.clone();
-        let handle = std::thread::Builder::new()
-            .name(format!("edgemlp-conn-{id}"))
-            .spawn(move || {
-                let _guard = ConnGuard(shared2.clone());
-                handle_connection(stream, &shared2);
-            });
-        match handle {
-            Ok(h) => conns.lock().unwrap().push(h),
-            Err(_) => {
-                shared.active_conns.fetch_sub(1, Ordering::SeqCst);
-            }
-        }
-    }
-}
-
-struct ConnGuard(Arc<Shared>);
-
-impl Drop for ConnGuard {
-    fn drop(&mut self) {
-        self.0.active_conns.fetch_sub(1, Ordering::SeqCst);
-    }
-}
-
-/// Work items handed from the reader to the writer, in request order.
-/// `version` is the protocol version of the request being answered —
-/// the response frame echoes it.
-enum Outgoing {
-    /// Response already known (ping, stats, errors, swap results).
-    Ready(Frame),
-    /// Waiting on one coordinator response.
-    Pending { version: u16, request_id: u64, rx: Receiver<InferResult> },
-    /// Waiting on a whole submitted batch.
-    PendingBatch { version: u16, request_id: u64, receivers: Vec<Receiver<InferResult>> },
-}
-
-fn handle_connection(stream: TcpStream, shared: &Shared) {
-    if shared.tracer.enabled() {
-        shared.tracer.instant("conn", "accept", None, 0);
-    }
-    let _ = stream.set_nodelay(true);
-    let _ = stream.set_read_timeout(Some(READ_TICK));
-    let write_stream = match stream.try_clone() {
-        Ok(s) => s,
-        Err(_) => return,
-    };
-    let _ = write_stream.set_write_timeout(Some(Duration::from_secs(10)));
-    let (tx, rx) = channel::<Outgoing>();
-    let response_timeout = shared.config.response_timeout;
-    let writer = std::thread::Builder::new()
-        .name("edgemlp-conn-writer".into())
-        .spawn(move || writer_loop(write_stream, rx, response_timeout));
-    let writer = match writer {
-        Ok(w) => w,
-        Err(_) => return,
-    };
-
-    let mut reader = BufReader::new(stream);
-    let mut framing_error = false;
-    loop {
-        // The deadline restarts per frame: an active connection can
-        // live forever, one that goes silent — or drips a partial
-        // header — is cut off (slowloris defense).
-        let deadline = Instant::now() + shared.config.read_timeout;
-        match wire::read_frame_deadline(
-            &mut reader,
-            shared.config.max_payload,
-            Some(&shared.stop),
-            Some(deadline),
-        ) {
-            Ok(frame) => {
-                if shared.tracer.enabled() {
-                    shared.tracer.instant("conn", "decode", None, frame.request_id);
-                }
-                if !dispatch(frame, &tx, shared) {
-                    break;
-                }
-            }
-            Err(ReadError::Eof) | Err(ReadError::Stopped) | Err(ReadError::Io(_)) => break,
-            Err(ReadError::TimedOut) => {
-                shared.read_timeouts.fetch_add(1, Ordering::Relaxed);
-                // No request id to echo and the version is unknown —
-                // frame the goodbye at MIN_VERSION like framing errors.
-                let _ = tx.send(Outgoing::Ready(
-                    Frame::error(
-                        Opcode::Ping,
-                        0,
-                        Status::Timeout,
-                        "read deadline exceeded — closing idle/stalled connection",
-                    )
+            conn.counted = false;
+            conn.enqueue(Outgoing::Ready(
+                Frame::error(Opcode::Ping, 0, Status::Busy, "server connection limit reached")
                     .at_version(wire::MIN_VERSION),
-                ));
-                framing_error = true; // same careful close as below
-                break;
-            }
-            Err(ReadError::Protocol(msg)) => {
-                // The stream position is unreliable after a framing
-                // error: answer once, then close. The request version
-                // is unknown here, so frame the reply at MIN_VERSION —
-                // every supported client can parse it (a v1-only
-                // client would reject a v2 frame and lose the
-                // diagnostic).
-                shared.coord.metrics().record_bad_request(framing_cause(&msg));
-                if shared.tracer.enabled() {
-                    shared.tracer.instant("conn", "bad_request", None, 0);
-                }
-                let _ = tx.send(Outgoing::Ready(
-                    Frame::error(Opcode::Ping, 0, Status::BadRequest, &msg)
-                        .at_version(wire::MIN_VERSION),
-                ));
-                framing_error = true;
-                break;
-            }
+            ));
+            conn.begin_close(true);
+        } else {
+            self.shared.active_conns.fetch_add(1, Ordering::SeqCst);
         }
-    }
-    // Dropping the sender lets the writer drain every queued/pending
-    // response before exiting — in-flight work is never dropped.
-    drop(tx);
-    let _ = writer.join();
-    if framing_error {
-        // A malformed stream usually has more bytes in flight; closing
-        // with unread data would RST away the BadRequest frame.
-        drain_then_close(reader.into_inner());
-    }
-}
-
-/// Close a socket so that a just-written error frame survives: send our
-/// FIN first, then briefly discard whatever the peer already sent —
-/// closing with unread receive data turns into a RST that destroys
-/// in-flight output on common TCP stacks.
-fn drain_then_close(mut stream: TcpStream) {
-    use std::io::Read;
-    let _ = stream.shutdown(std::net::Shutdown::Write);
-    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
-    let mut sink = [0u8; 4096];
-    let deadline = std::time::Instant::now() + Duration::from_millis(250);
-    while std::time::Instant::now() < deadline {
-        match stream.read(&mut sink) {
-            Ok(0) => break, // peer acknowledged the FIN and closed
-            Ok(_) => {}
-            Err(e)
-                if matches!(
-                    e.kind(),
-                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-                ) => {}
-            Err(_) => break,
-        }
-    }
-}
-
-fn writer_loop(stream: TcpStream, rx: Receiver<Outgoing>, response_timeout: Duration) {
-    let mut w = BufWriter::new(stream);
-    for item in rx {
-        let frame = resolve(item, response_timeout);
-        if wire::write_frame(&mut w, &frame).is_err() || w.flush().is_err() {
+        let (reg_r, reg_w) = (conn.want_read(), conn.want_write());
+        if self.poller.add(conn.stream().as_raw_fd(), token, reg_r, reg_w).is_err() {
+            if conn.counted {
+                self.shared.active_conns.fetch_sub(1, Ordering::SeqCst);
+            }
+            self.free.push(idx);
             return;
         }
+        let notify = self.hub.notifier(token);
+        self.slots[idx] = Some(ConnSlot { conn, notify, reg_r, reg_w });
+        self.live += 1;
+        self.touch(idx, now);
     }
-}
 
-/// The wire status one coordinator failure maps to.
-fn failure_status(kind: FailureKind) -> Status {
-    match kind {
-        FailureKind::Backend => Status::BackendError,
-        FailureKind::Expired => Status::Expired,
+    /// Route one event/notify/timer to its connection, ignoring stale
+    /// tokens from recycled slots.
+    fn service_conn(&mut self, token: u64, readable: bool, writable: bool, now: Instant) {
+        let idx = token_slot(token);
+        let Some(Some(slot)) = self.slots.get_mut(idx) else { return };
+        if slot.conn.generation & 0xffff_ffff != token_generation(token) {
+            return;
+        }
+        if readable {
+            let max_payload = self.shared.config.max_payload;
+            let pass = slot.conn.read_ready(now, max_payload);
+            self.handle_pass(idx, pass);
+        }
+        // Writability (and a bare completion notify) need no dedicated
+        // handling: `touch` pumps, which always attempts a flush.
+        let _ = writable;
+        self.touch(idx, now);
     }
-}
 
-/// Turn one queued work item into the frame that goes on the wire.
-fn resolve(item: Outgoing, timeout: Duration) -> Frame {
-    match item {
-        Outgoing::Ready(frame) => frame,
-        Outgoing::Pending { version, request_id, rx } => match rx.recv_timeout(timeout) {
-            Ok(Ok(resp)) => {
-                Frame::ok(Opcode::Infer, request_id, wire::encode_outputs(&resp.output))
-                    .at_version(version)
+    /// Dispatch the frames one read pass produced, then apply its
+    /// framing-error verdict.
+    fn handle_pass(&mut self, idx: usize, pass: super::conn::ReadPass) {
+        for frame in pass.frames {
+            let Some(Some(slot)) = self.slots.get_mut(idx) else { return };
+            if slot.conn.closing {
+                break;
             }
-            Ok(Err(e)) => {
-                Frame::error(Opcode::Infer, request_id, failure_status(e.kind), &e.message)
-                    .at_version(version)
+            if self.shared.tracer.enabled() {
+                self.shared.tracer.instant("conn", "decode", None, frame.request_id);
             }
-            Err(_) => Frame::error(
-                Opcode::Infer,
-                request_id,
-                Status::Internal,
-                "response channel lost or timed out",
-            )
-            .at_version(version),
-        },
-        Outgoing::PendingBatch { version, request_id, receivers } => {
-            // One deadline for the whole batch — a per-receiver timeout
-            // would multiply worst-case head-of-line blocking by the
-            // batch size.
-            let deadline = std::time::Instant::now() + timeout;
-            let mut rows = Vec::with_capacity(receivers.len());
-            for rx in receivers {
-                let left = deadline.saturating_duration_since(std::time::Instant::now());
-                match rx.recv_timeout(left) {
-                    Ok(Ok(resp)) => rows.push(resp.output),
-                    Ok(Err(e)) => {
-                        return Frame::error(
-                            Opcode::InferBatch,
-                            request_id,
-                            failure_status(e.kind),
-                            &e.message,
-                        )
-                        .at_version(version)
+            let notify = slot.notify.clone();
+            let out = dispatch(frame, &self.shared, &notify);
+            let Some(Some(slot)) = self.slots.get_mut(idx) else { return };
+            slot.conn.enqueue(out);
+        }
+        let Some(Some(slot)) = self.slots.get_mut(idx) else { return };
+        if let Some(msg) = pass.framing_error {
+            // The stream position is unreliable after a framing error:
+            // answer once, then close. The request version is unknown
+            // here, so frame the reply at MIN_VERSION — every supported
+            // client can parse it (a v1-only client would reject a v2
+            // frame and lose the diagnostic).
+            self.shared.coord.metrics().record_bad_request(framing_cause(&msg));
+            if self.shared.tracer.enabled() {
+                self.shared.tracer.instant("conn", "bad_request", None, 0);
+            }
+            slot.conn.enqueue(Outgoing::Ready(
+                Frame::error(Opcode::Ping, 0, Status::BadRequest, &msg)
+                    .at_version(wire::MIN_VERSION),
+            ));
+            slot.conn.begin_close(true);
+        } else if slot.conn.peer_eof && !slot.conn.closing {
+            // Clean half-close: the peer wants its remaining answers,
+            // then we close without ceremony.
+            slot.conn.begin_close(false);
+        }
+    }
+
+    /// Pump a connection, refresh its poller interest and timer, and
+    /// tear it down once finished.
+    fn touch(&mut self, idx: usize, now: Instant) {
+        let Some(Some(slot)) = self.slots.get_mut(idx) else { return };
+        let wb_before = slot.conn.writeback_bytes();
+        slot.conn.pump(now);
+        let wb_after = slot.conn.writeback_bytes();
+        self.pending_wb = self.pending_wb - wb_before + wb_after;
+        let Some(Some(slot)) = self.slots.get_mut(idx) else { return };
+        if slot.conn.done(now) {
+            self.close(idx);
+            return;
+        }
+        let (want_r, want_w) = (slot.conn.want_read(), slot.conn.want_write());
+        if (want_r, want_w) != (slot.reg_r, slot.reg_w) {
+            let token = conn_token(slot.conn.generation, idx);
+            let _ = self.poller.modify(slot.conn.stream().as_raw_fd(), token, want_r, want_w);
+            slot.reg_r = want_r;
+            slot.reg_w = want_w;
+        }
+        // Arm the earliest deadline if the wheel holds nothing at least
+        // that early for this connection.
+        if let Some(d) = slot.conn.next_deadline() {
+            let rearm = match slot.conn.timer_armed_for {
+                Some(armed) => d < armed,
+                None => true,
+            };
+            if rearm {
+                let token = conn_token(slot.conn.generation, idx);
+                self.wheel.schedule(now, d, token, slot.conn.generation);
+                slot.conn.timer_armed_for = Some(d);
+            }
+        }
+    }
+
+    /// A timer entry fired: apply whichever deadline actually expired
+    /// (the read deadline answers Timeout; response/drain/stall
+    /// deadlines are enforced inside `pump`/`done`).
+    fn on_timer(&mut self, token: u64, now: Instant) {
+        let idx = token_slot(token);
+        let Some(Some(slot)) = self.slots.get_mut(idx) else { return };
+        if slot.conn.generation & 0xffff_ffff != token_generation(token) {
+            return;
+        }
+        slot.conn.timer_armed_for = None;
+        if slot.conn.read_deadline_expired(now) {
+            self.shared.read_timeouts.fetch_add(1, Ordering::Relaxed);
+            // No request id to echo and the version is unknown — frame
+            // the goodbye at MIN_VERSION like framing errors.
+            slot.conn.enqueue(Outgoing::Ready(
+                Frame::error(
+                    Opcode::Ping,
+                    0,
+                    Status::Timeout,
+                    "read deadline exceeded — closing idle/stalled connection",
+                )
+                .at_version(wire::MIN_VERSION),
+            ));
+            slot.conn.begin_close(true);
+        }
+        self.touch(idx, now);
+    }
+
+    /// Graceful shutdown begins: stop accepting, mark every connection
+    /// for a clean close (queued responses still flush), give them a
+    /// grace window.
+    fn begin_stop(&mut self, now: Instant) {
+        self.stopping = true;
+        self.stop_deadline = Some(now + STOP_GRACE);
+        let _ =
+            self.poller.modify(self.listener.as_raw_fd(), LISTENER_TOKEN, false, false);
+        for idx in 0..self.slots.len() {
+            let occupied = match self.slots.get_mut(idx) {
+                Some(Some(slot)) => {
+                    if !slot.conn.closing {
+                        slot.conn.begin_close(false);
                     }
-                    Err(_) => {
-                        return Frame::error(
-                            Opcode::InferBatch,
-                            request_id,
-                            Status::Internal,
-                            "response channel lost or timed out",
-                        )
-                        .at_version(version)
-                    }
+                    true
                 }
+                _ => false,
+            };
+            if occupied {
+                self.touch(idx, now);
             }
-            Frame::ok(Opcode::InferBatch, request_id, wire::encode_batch_outputs(&rows))
-                .at_version(version)
+        }
+    }
+
+    /// Tear down one connection and recycle its slot.
+    fn close(&mut self, idx: usize) {
+        let Some(entry) = self.slots.get_mut(idx).and_then(|s| s.take()) else { return };
+        self.pending_wb -= entry.conn.writeback_bytes();
+        let _ = self.poller.delete(entry.conn.stream().as_raw_fd());
+        if entry.conn.counted {
+            self.shared.active_conns.fetch_sub(1, Ordering::SeqCst);
+        }
+        self.live -= 1;
+        self.free.push(idx);
+    }
+
+    /// Force-close whatever is left (shutdown past the grace window).
+    fn close_all(&mut self) {
+        for idx in 0..self.slots.len() {
+            self.close(idx);
         }
     }
 }
 
-/// Handle one request frame. Returns `false` to close the connection.
-fn dispatch(frame: Frame, tx: &Sender<Outgoing>, shared: &Shared) -> bool {
+/// Handle one request frame, producing its (possibly pending) response.
+fn dispatch(frame: Frame, shared: &Shared, notify: &CompletionNotify) -> Outgoing {
     let id = frame.request_id;
     let version = frame.version;
     let out = match frame.opcode {
@@ -797,6 +935,15 @@ fn dispatch(frame: Frame, tx: &Sender<Outgoing>, shared: &Shared) -> bool {
                     route.slot.generation(),
                 ));
             }
+            let g = shared.loop_stats.gauges();
+            text.push_str(&format!(
+                "event loop: {} registered, {} ready events / {} ticks, {} writeback bytes, {} timers\n",
+                g.registered_conns,
+                g.ready_events,
+                g.poll_ticks,
+                g.pending_writeback_bytes,
+                g.timer_depth,
+            ));
             text.push_str(&format!(
                 "connections: {}\n{}",
                 shared.active_conns.load(Ordering::SeqCst),
@@ -925,9 +1072,10 @@ fn dispatch(frame: Frame, tx: &Sender<Outgoing>, shared: &Shared) -> bool {
                 bad_request(shared, "version_gate", Opcode::Health, id, "Health requires protocol v3")
             } else {
                 let report = health_report(shared);
-                // Encode at the REQUEST's version: the v4 extension
-                // block would be trailing garbage to a v3 decoder.
-                match wire::encode_health_at(&report, version) {
+                // Encode at the REQUEST's version: the v4 extension and
+                // loop-gauge blocks would be trailing garbage to a v3
+                // decoder.
+                match wire::encode_health_loop(&report, &shared.loop_stats.gauges(), version) {
                     Ok(payload) => Outgoing::Ready(Frame::ok(Opcode::Health, id, payload)),
                     Err(e) => {
                         Outgoing::Ready(Frame::error(Opcode::Health, id, Status::Internal, &e))
@@ -940,8 +1088,15 @@ fn dispatch(frame: Frame, tx: &Sender<Outgoing>, shared: &Shared) -> bool {
             Ok(req) => match resolve_pool(shared, &req.model, req.backend, req.x.len()) {
                 Err(out) => Outgoing::Ready(out.into_frame(Opcode::Infer, id)),
                 Ok(idx) => {
-                    match shared.coord.try_submit_to_qos(idx, req.x, request_qos(req.qos)) {
-                        Ok(rx) => Outgoing::Pending { version, request_id: id, rx },
+                    match shared.coord.try_submit_to_qos_notify(
+                        idx,
+                        req.x,
+                        request_qos(req.qos),
+                        Some(notify.clone()),
+                    ) {
+                        Ok(rx) => {
+                            Outgoing::Pending { version, request_id: id, rx, deadline: None }
+                        }
                         Err(e) => Outgoing::Ready(submit_error_frame(Opcode::Infer, id, e)),
                     }
                 }
@@ -958,7 +1113,12 @@ fn dispatch(frame: Frame, tx: &Sender<Outgoing>, shared: &Shared) -> bool {
                         let mut receivers = Vec::with_capacity(total);
                         let mut failed = None;
                         for x in req.samples {
-                            match shared.coord.try_submit_to_qos(idx, x, qos) {
+                            match shared.coord.try_submit_to_qos_notify(
+                                idx,
+                                x,
+                                qos,
+                                Some(notify.clone()),
+                            ) {
                                 Ok(rx) => receivers.push(rx),
                                 Err(e) => {
                                     failed = Some(e);
@@ -982,9 +1142,14 @@ fn dispatch(frame: Frame, tx: &Sender<Outgoing>, shared: &Shared) -> bool {
                             Some(e) => {
                                 Outgoing::Ready(submit_error_frame(Opcode::InferBatch, id, e))
                             }
-                            None => {
-                                Outgoing::PendingBatch { version, request_id: id, receivers }
-                            }
+                            None => Outgoing::PendingBatch {
+                                version,
+                                request_id: id,
+                                rows: Vec::with_capacity(receivers.len()),
+                                next: 0,
+                                receivers,
+                                deadline: None,
+                            },
                         }
                     }
                 }
@@ -992,12 +1157,11 @@ fn dispatch(frame: Frame, tx: &Sender<Outgoing>, shared: &Shared) -> bool {
         },
     };
     // Responses echo the request's protocol version (a v1 client never
-    // sees a v2 frame); pending items carry it to the writer instead.
-    let out = match out {
+    // sees a v2 frame); pending items carry it to the writeback path.
+    match out {
         Outgoing::Ready(f) => Outgoing::Ready(f.at_version(version)),
         other => other,
-    };
-    tx.send(out).is_ok()
+    }
 }
 
 /// Stable cause label for a framing-level protocol error, keyed off the
@@ -1063,6 +1227,7 @@ fn render_metrics_text(shared: &Shared) -> String {
         shared.start.elapsed().as_secs_f64(),
         shared.tracer.len() as u64,
         shared.tracer.dropped(),
+        &shared.loop_stats.gauges(),
     )
 }
 
@@ -1282,5 +1447,19 @@ mod tests {
         assert_eq!(framing_cause("payload length 999 exceeds cap 16"), "payload_cap");
         assert_eq!(framing_cause("connection closed mid-frame"), "truncated");
         assert_eq!(framing_cause("something new"), "framing");
+    }
+
+    /// Token packing must round-trip (slot, generation) and never
+    /// collide with the reserved listener/waker tokens for any slot a
+    /// real slab can hold.
+    #[test]
+    fn conn_tokens_round_trip_and_avoid_reserved_values() {
+        for (generation, idx) in [(1u64, 0usize), (7, 42), (0xffff_fffe, 123_456)] {
+            let t = conn_token(generation, idx);
+            assert_eq!(token_slot(t), idx);
+            assert_eq!(token_generation(t), generation & 0xffff_ffff);
+            assert_ne!(t, LISTENER_TOKEN);
+            assert_ne!(t, WAKER_TOKEN);
+        }
     }
 }

@@ -429,29 +429,108 @@ pub fn read_frame_deadline(
 ) -> Result<Frame, ReadError> {
     let mut header = [0u8; HEADER_LEN];
     read_full(r, &mut header, stop, deadline, true)?;
+    let (version, opcode, status, request_id, len) =
+        parse_header(&header, max_payload).map_err(ReadError::Protocol)?;
+    let mut payload = vec![0u8; len];
+    read_full(r, &mut payload, stop, deadline, false)?;
+    Ok(Frame { version, opcode, status, request_id, payload })
+}
+
+/// Validate a complete wire header and return its fields. Checks run in
+/// a fixed order (magic, version, opcode, status, payload cap) so every
+/// framing path — the blocking readers above and the incremental
+/// [`FrameAssembler`] — reports byte-identical diagnostics.
+fn parse_header(
+    header: &[u8; HEADER_LEN],
+    max_payload: u32,
+) -> Result<(u16, Opcode, Status, u64, usize), String> {
     if header[0..4] != MAGIC {
-        return Err(ReadError::Protocol(format!("bad magic {:02x?}", &header[0..4])));
+        return Err(format!("bad magic {:02x?}", &header[0..4]));
     }
     let version = u16::from_le_bytes([header[4], header[5]]);
     if !(MIN_VERSION..=VERSION).contains(&version) {
-        return Err(ReadError::Protocol(format!(
+        return Err(format!(
             "unsupported protocol version {version} (supported {MIN_VERSION}..={VERSION})"
-        )));
+        ));
     }
-    let opcode = Opcode::from_u8(header[6])
-        .ok_or_else(|| ReadError::Protocol(format!("unknown opcode {}", header[6])))?;
-    let status = Status::from_u8(header[7])
-        .ok_or_else(|| ReadError::Protocol(format!("unknown status {}", header[7])))?;
+    let opcode =
+        Opcode::from_u8(header[6]).ok_or_else(|| format!("unknown opcode {}", header[6]))?;
+    let status =
+        Status::from_u8(header[7]).ok_or_else(|| format!("unknown status {}", header[7]))?;
     let request_id = u64::from_le_bytes(header[8..16].try_into().unwrap());
     let len = u32::from_le_bytes(header[16..20].try_into().unwrap());
     if len > max_payload {
-        return Err(ReadError::Protocol(format!(
-            "payload length {len} exceeds cap {max_payload}"
-        )));
+        return Err(format!("payload length {len} exceeds cap {max_payload}"));
     }
-    let mut payload = vec![0u8; len as usize];
-    read_full(r, &mut payload, stop, deadline, false)?;
-    Ok(Frame { version, opcode, status, request_id, payload })
+    Ok((version, opcode, status, request_id, len as usize))
+}
+
+/// Incremental frame decoder for nonblocking sockets: feed it whatever
+/// `read(2)` returned and pull complete frames out. Semantics are
+/// byte-identical to [`read_frame_deadline`] over the same stream:
+/// header fields are validated (via the shared [`parse_header`]) only
+/// once all [`HEADER_LEN`] bytes have arrived, in the same order and
+/// with the same diagnostic strings, and an EOF between frames is
+/// distinguished from one mid-frame by [`FrameAssembler::is_mid_frame`].
+#[derive(Debug, Default)]
+pub struct FrameAssembler {
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl FrameAssembler {
+    pub fn new() -> Self {
+        FrameAssembler { buf: Vec::new(), pos: 0 }
+    }
+
+    /// Append bytes received from the socket.
+    pub fn push(&mut self, bytes: &[u8]) {
+        // Compact lazily so a long-lived connection does not grow the
+        // buffer by the total number of bytes it ever received.
+        if self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        } else if self.pos > 4096 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet consumed as complete frames.
+    pub fn buffered_len(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// True when a frame has partially arrived — an EOF now is a
+    /// mid-frame truncation, not a clean close between frames.
+    pub fn is_mid_frame(&self) -> bool {
+        self.buffered_len() > 0
+    }
+
+    /// The diagnostic the blocking reader reports for a mid-frame EOF.
+    pub fn eof_mid_frame() -> String {
+        "connection closed mid-frame".to_string()
+    }
+
+    /// Try to extract the next complete frame. `Ok(None)` means more
+    /// bytes are needed; errors carry the same diagnostics as
+    /// [`read_frame_deadline`] and poison the stream (framing is
+    /// unrecoverable once violated).
+    pub fn next_frame(&mut self, max_payload: u32) -> Result<Option<Frame>, String> {
+        let pending = &self.buf[self.pos..];
+        if pending.len() < HEADER_LEN {
+            return Ok(None);
+        }
+        let header: [u8; HEADER_LEN] = pending[..HEADER_LEN].try_into().unwrap();
+        let (version, opcode, status, request_id, len) = parse_header(&header, max_payload)?;
+        if pending.len() < HEADER_LEN + len {
+            return Ok(None);
+        }
+        let payload = pending[HEADER_LEN..HEADER_LEN + len].to_vec();
+        self.pos += HEADER_LEN + len;
+        Ok(Some(Frame { version, opcode, status, request_id, payload }))
+    }
 }
 
 /// `read_exact` that survives read-timeout ticks (checking `stop` and
@@ -1084,6 +1163,52 @@ pub fn encode_health_at(report: &HealthReport, version: u16) -> Result<Vec<u8>, 
 }
 
 pub fn decode_health(payload: &[u8]) -> Result<HealthReport, String> {
+    decode_health_loop(payload).map(|(report, _)| report)
+}
+
+/// Event-loop gauges the server appends to v4 `Health` responses as a
+/// trailing block after the v4 extension: a point-in-time view of the
+/// readiness loop (docs/async-net.md). Like the v4 extension itself,
+/// the block is present iff bytes remain — pre-loop payloads decode to
+/// `None`, and truncation inside the block is malformed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct LoopGauges {
+    /// Sockets currently registered with the poller (serving +
+    /// draining connections; the listener and waker are excluded).
+    pub registered_conns: u64,
+    /// Readiness events delivered by the poller since startup.
+    pub ready_events: u64,
+    /// Poller wakeups (event batches + timer ticks) since startup.
+    pub poll_ticks: u64,
+    /// Response bytes accepted from the coordinator but not yet
+    /// flushed to sockets.
+    pub pending_writeback_bytes: u64,
+    /// Live timer-wheel entries (read deadlines + drain budgets).
+    pub timer_depth: u64,
+}
+
+/// [`encode_health_at`] plus the trailing [`LoopGauges`] block
+/// (`5 × u64`, v4+ framing only — pre-v4 payloads are byte-identical
+/// to [`encode_health_at`]).
+pub fn encode_health_loop(
+    report: &HealthReport,
+    gauges: &LoopGauges,
+    version: u16,
+) -> Result<Vec<u8>, String> {
+    let mut out = encode_health_at(report, version)?;
+    if version >= 4 {
+        out.extend_from_slice(&gauges.registered_conns.to_le_bytes());
+        out.extend_from_slice(&gauges.ready_events.to_le_bytes());
+        out.extend_from_slice(&gauges.poll_ticks.to_le_bytes());
+        out.extend_from_slice(&gauges.pending_writeback_bytes.to_le_bytes());
+        out.extend_from_slice(&gauges.timer_depth.to_le_bytes());
+    }
+    Ok(out)
+}
+
+/// [`decode_health`] that also surfaces the trailing [`LoopGauges`]
+/// block when the server sent one (`None` for pre-loop payloads).
+pub fn decode_health_loop(payload: &[u8]) -> Result<(HealthReport, Option<LoopGauges>), String> {
     let mut b = Buf::new(payload);
     let degraded = match b.u8()? {
         0 => false,
@@ -1127,15 +1252,31 @@ pub fn decode_health(payload: &[u8]) -> Result<HealthReport, String> {
     } else {
         (0, Vec::new())
     };
+    // Loop-gauge block, present iff bytes remain after the extension —
+    // payloads from servers without the readiness loop end exactly here.
+    let gauges = if b.remaining() > 0 {
+        Some(LoopGauges {
+            registered_conns: b.u64()?,
+            ready_events: b.u64()?,
+            poll_ticks: b.u64()?,
+            pending_writeback_bytes: b.u64()?,
+            timer_depth: b.u64()?,
+        })
+    } else {
+        None
+    };
     b.finish()?;
-    Ok(HealthReport {
-        degraded,
-        degraded_transitions,
-        read_timeouts,
-        pools,
-        busy_rejected,
-        bad_requests,
-    })
+    Ok((
+        HealthReport {
+            degraded,
+            degraded_transitions,
+            read_timeouts,
+            pools,
+            busy_rejected,
+            bad_requests,
+        },
+        gauges,
+    ))
 }
 
 #[cfg(test)]
@@ -1684,5 +1825,144 @@ mod tests {
             assert_eq!(roundtrip(&f), f);
         }
         assert_eq!(Opcode::from_u8(9), None);
+    }
+
+    /// Pull frames off `bytes` with the blocking reader until EOF or a
+    /// framing error, mirroring what a connection thread used to see.
+    fn drain_blocking(bytes: &[u8]) -> (Vec<Frame>, Option<String>) {
+        let mut cur = Cursor::new(bytes.to_vec());
+        let mut frames = Vec::new();
+        loop {
+            match read_frame(&mut cur, DEFAULT_MAX_PAYLOAD) {
+                Ok(f) => frames.push(f),
+                Err(ReadError::Eof) => return (frames, None),
+                Err(ReadError::Protocol(m)) => return (frames, Some(m)),
+                Err(e) => panic!("unexpected read error {e:?}"),
+            }
+        }
+    }
+
+    /// Same stream through the incremental assembler, `chunk` bytes at
+    /// a time, with the EOF-mid-frame rule the event loop applies.
+    fn drain_incremental(bytes: &[u8], chunk: usize) -> (Vec<Frame>, Option<String>) {
+        let mut asm = FrameAssembler::new();
+        let mut frames = Vec::new();
+        for c in bytes.chunks(chunk.max(1)) {
+            asm.push(c);
+            loop {
+                match asm.next_frame(DEFAULT_MAX_PAYLOAD) {
+                    Ok(Some(f)) => frames.push(f),
+                    Ok(None) => break,
+                    Err(m) => return (frames, Some(m)),
+                }
+            }
+        }
+        if asm.is_mid_frame() {
+            (frames, Some(FrameAssembler::eof_mid_frame()))
+        } else {
+            (frames, None)
+        }
+    }
+
+    #[test]
+    fn frame_assembler_matches_blocking_reader_at_every_chunk_size() {
+        let mut valid = Vec::new();
+        write_frame(&mut valid, &Frame::ok(Opcode::Ping, 1, b"ping".to_vec())).unwrap();
+        write_frame(
+            &mut valid,
+            &Frame::ok(Opcode::Infer, 2, encode_infer(BACKEND_ANY, "m", &[0.5; 16]).unwrap()),
+        )
+        .unwrap();
+        write_frame(&mut valid, &Frame::ok(Opcode::Health, 3, Vec::new()).at_version(3)).unwrap();
+
+        let mut bad_magic = vec![0xde; HEADER_LEN];
+        let mut bad_version = valid[..HEADER_LEN].to_vec();
+        bad_version[4] = 99;
+        let mut bad_opcode = valid[..HEADER_LEN].to_vec();
+        bad_opcode[6] = 0xff;
+        let mut bad_status = valid[..HEADER_LEN].to_vec();
+        bad_status[7] = 0xee;
+        let mut oversized = valid[..HEADER_LEN].to_vec();
+        oversized[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
+        let truncated_header = valid[..10].to_vec();
+        let truncated_payload = valid[..HEADER_LEN + 2].to_vec();
+        let mut valid_then_garbage = valid.clone();
+        valid_then_garbage.extend_from_slice(&[0xde, 0xad, 0xbe, 0xef]);
+        bad_magic.extend_from_slice(b"trailing");
+        let streams: Vec<Vec<u8>> = vec![
+            valid.clone(),
+            bad_magic,
+            bad_version,
+            bad_opcode,
+            bad_status,
+            oversized,
+            truncated_header,
+            truncated_payload,
+            valid_then_garbage,
+            Vec::new(),
+        ];
+        for (i, stream) in streams.iter().enumerate() {
+            let want = drain_blocking(stream);
+            for chunk in [1, 2, 3, 7, stream.len().max(1)] {
+                let got = drain_incremental(stream, chunk);
+                assert_eq!(got, want, "stream {i} chunk {chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn frame_assembler_validates_nothing_before_a_full_header() {
+        // The blocking reader buffers the full 20-byte header before
+        // any validation; the assembler must not report bad magic off
+        // a prefix.
+        let mut asm = FrameAssembler::new();
+        asm.push(&[0xde, 0xad]);
+        assert_eq!(asm.next_frame(DEFAULT_MAX_PAYLOAD), Ok(None));
+        assert!(asm.is_mid_frame());
+        asm.push(&vec![0u8; HEADER_LEN - 2]);
+        let err = asm.next_frame(DEFAULT_MAX_PAYLOAD).unwrap_err();
+        assert!(err.contains("bad magic"), "{err}");
+    }
+
+    #[test]
+    fn health_loop_gauges_block_is_a_strict_suffix() {
+        let report = HealthReport {
+            degraded: false,
+            degraded_transitions: 2,
+            read_timeouts: 1,
+            pools: vec![PoolHealth {
+                name: "cpu/default".into(),
+                queue_depth: 3,
+                queue_capacity: 64,
+                replicas: 1,
+                shed: 1,
+                expired: 0,
+            }],
+            busy_rejected: 4,
+            bad_requests: vec![("magic".into(), 1)],
+        };
+        let gauges = LoopGauges {
+            registered_conns: 11,
+            ready_events: 222,
+            poll_ticks: 333,
+            pending_writeback_bytes: 44,
+            timer_depth: 5,
+        };
+        // v4 payload with gauges is a strict byte extension of the
+        // gauge-less v4 payload, which old decoders keep accepting.
+        let v4 = encode_health_at(&report, 4).unwrap();
+        let full = encode_health_loop(&report, &gauges, 4).unwrap();
+        assert_eq!(&full[..v4.len()], &v4[..]);
+        assert_eq!(decode_health_loop(&full).unwrap(), (report.clone(), Some(gauges)));
+        assert_eq!(decode_health(&full).unwrap(), report);
+        // Gauge-less payloads decode to None, pre-v4 framing omits the
+        // block entirely.
+        assert_eq!(decode_health_loop(&v4).unwrap(), (report.clone(), None));
+        let v3 = encode_health_loop(&report, &gauges, 3).unwrap();
+        assert_eq!(v3, encode_health_at(&report, 3).unwrap());
+        // Truncating inside the gauge block is malformed, not a panic.
+        for cut in v4.len() + 1..full.len() {
+            assert!(decode_health_loop(&full[..cut]).is_err(), "cut at {cut}");
+        }
     }
 }

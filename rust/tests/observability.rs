@@ -84,6 +84,11 @@ const REQUIRED_FAMILIES: &[&str] = &[
     "edgemlp_trace_buffer_events",
     "edgemlp_trace_dropped_total",
     "edgemlp_static_power_watts",
+    "edgemlp_loop_registered_connections",
+    "edgemlp_loop_ready_events_total",
+    "edgemlp_loop_poll_ticks_total",
+    "edgemlp_loop_pending_writeback_bytes",
+    "edgemlp_loop_timer_wheel_depth",
     "edgemlp_pool_requests_total",
     "edgemlp_pool_samples_total",
     "edgemlp_pool_batches_total",
@@ -237,6 +242,78 @@ fn statsv2_opcode_returns_valid_exposition() {
         .map(sample_value)
         .sum();
     assert!(served >= 25.0, "{served}");
+    server.shutdown();
+}
+
+/// The readiness event loop exports its gauges on all three surfaces:
+/// the human-readable `Stats` summary line, the trailing gauge block
+/// on v4 `Health` payloads, and the `edgemlp_loop_*` Prometheus
+/// families — with values consistent with a loop that is actually
+/// ticking and holding this test's connections registered.
+#[test]
+fn event_loop_gauges_on_stats_health_and_metrics() {
+    let server = start_engine(vec![BackendKind::Cpu], ServeConfig::default());
+    let addr = server.local_addr();
+    let mut client = Client::connect(addr).unwrap();
+    for _ in 0..10 {
+        match client.infer(0, &probe()).unwrap() {
+            InferReply::Output(out) => assert_eq!(out.len(), 10),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    // Human-readable Stats carries the one-line loop summary.
+    let stats = client.stats().unwrap();
+    let line = stats
+        .lines()
+        .find(|l| l.starts_with("event loop: "))
+        .unwrap_or_else(|| panic!("no event-loop line in Stats:\n{stats}"));
+    for needle in ["registered", "ready events", "ticks", "writeback bytes", "timers"] {
+        assert!(line.contains(needle), "{line}");
+    }
+
+    // The v4 Health payload ends with the gauge block: this connection
+    // is registered with the loop, and the loop has ticked.
+    let mut raw = TcpStream::connect(addr).unwrap();
+    raw.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let req = wire::Frame::ok(wire::Opcode::Health, 7, Vec::new());
+    wire::write_frame(&mut raw, &req).unwrap();
+    let resp = wire::read_frame(&mut raw, wire::DEFAULT_MAX_PAYLOAD).unwrap();
+    assert_eq!(resp.status, Status::Ok);
+    let (_, gauges) = wire::decode_health_loop(&resp.payload).unwrap();
+    let gauges = gauges.expect("v4 Health must carry the loop gauge block");
+    assert!(gauges.registered_conns >= 1, "{gauges:?}");
+    assert!(gauges.poll_ticks >= 1, "{gauges:?}");
+    assert!(gauges.ready_events >= 1, "{gauges:?}");
+    drop(raw);
+
+    // A v3 Health payload must not grow the block (framing unchanged
+    // for pre-v4 clients).
+    let mut old = TcpStream::connect(addr).unwrap();
+    old.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let req = wire::Frame::ok(wire::Opcode::Health, 8, Vec::new()).at_version(3);
+    wire::write_frame(&mut old, &req).unwrap();
+    let resp = wire::read_frame(&mut old, wire::DEFAULT_MAX_PAYLOAD).unwrap();
+    assert_eq!(resp.status, Status::Ok);
+    let (_, gauges) = wire::decode_health_loop(&resp.payload).unwrap();
+    assert_eq!(gauges, None, "v3 Health must omit the gauge block");
+    drop(old);
+
+    // And the Prometheus families, already pinned by REQUIRED_FAMILIES
+    // via assert_valid_exposition — additionally check live values.
+    let text = client.metrics_text().unwrap();
+    assert_valid_exposition(&text);
+    let find = |fam: &str| {
+        text.lines()
+            .find(|l| l.starts_with(&format!("{fam} ")))
+            .map(sample_value)
+            .unwrap_or_else(|| panic!("no sample for {fam}\n---\n{text}"))
+    };
+    assert!(find("edgemlp_loop_registered_connections") >= 1.0);
+    assert!(find("edgemlp_loop_poll_ticks_total") >= 1.0);
+    assert!(find("edgemlp_loop_ready_events_total") >= 1.0);
+    assert!(find("edgemlp_loop_pending_writeback_bytes") >= 0.0);
+    assert!(find("edgemlp_loop_timer_wheel_depth") >= 0.0);
     server.shutdown();
 }
 

@@ -101,6 +101,78 @@ fn stalled_half_frame_times_out_and_frees_the_only_slot() {
     server.shutdown();
 }
 
+/// The slowloris defense at c10k-class scale (ISSUE 9 satellite): a
+/// thousand concurrently stalled half-frame connections each get
+/// exactly one `Timeout` goodbye, every slot is freed, and the server's
+/// thread count stays flat while they are registered — connections are
+/// a memory problem for the event loop, not a thread problem.
+#[test]
+fn a_thousand_stalled_connections_all_time_out_and_free_their_slots() {
+    // Client and server sockets both live in this process; scale the
+    // population down if the fd limit cannot cover 2× connections.
+    let fd_limit = edgemlp::serve::raise_nofile_limit(4096);
+    let stalled_n: usize = if fd_limit >= 2500 { 1000 } else { 100 };
+    let server = slow_echo_server(
+        1,
+        64,
+        ServeConfig {
+            max_conns: stalled_n + 8,
+            read_timeout: Duration::from_millis(500),
+            ..ServeConfig::default()
+        },
+    );
+    let addr = server.local_addr();
+    let threads_before = thread_count();
+
+    let mut stalled = Vec::with_capacity(stalled_n);
+    for _ in 0..stalled_n {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        s.write_all(b"EMWP\x03\x00").unwrap(); // magic + version, then stall
+        stalled.push(s);
+    }
+    // Every connection is registered with the loop, yet no thread was
+    // spawned for any of them (tolerance for unrelated runtime threads).
+    if let (Some(before), Some(during)) = (threads_before, thread_count()) {
+        assert!(
+            during <= before + 2,
+            "thread count grew with connections: {before} -> {during}"
+        );
+    }
+
+    for mut s in stalled {
+        let goodbye = wire::read_frame(&mut s, 1 << 20).unwrap();
+        assert_eq!(goodbye.status, Status::Timeout, "{goodbye:?}");
+        assert!(goodbye.message().contains("deadline"), "{}", goodbye.message());
+        let mut rest = Vec::new();
+        assert_eq!(s.read_to_end(&mut rest).unwrap(), 0, "exactly one goodbye, then hang up");
+    }
+
+    // All slots freed: a well-behaved client is served (tolerate the
+    // slot-release race like the single-connection variant).
+    let mut served = None;
+    for _ in 0..100 {
+        let mut client = Client::connect(addr).unwrap();
+        match client.infer(0, &probe()) {
+            Ok(InferReply::Output(out)) => {
+                served = Some((client, out));
+                break;
+            }
+            Ok(_) | Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+    let (mut client, out) = served.expect("freed slots never served a well-behaved client");
+    assert_eq!(out, probe());
+    let health = client.health().unwrap();
+    assert!(health.read_timeouts >= stalled_n as u64, "{health:?}");
+    server.shutdown();
+}
+
+/// Best-effort OS thread count for this process (`None` off Linux).
+fn thread_count() -> Option<usize> {
+    std::fs::read_dir("/proc/self/task").ok().map(|d| d.count())
+}
+
 /// A deadline the queue backlog makes infeasible is answered
 /// `Expired` at admission; deadline-free requests behind the same
 /// backlog are all still served, and `Health` reports the tally.

@@ -45,7 +45,16 @@ LOWER_BETTER_FIRST = ("bytes_per_sample", "mj_per_sample")
 HIGHER_BETTER = ("rps", "gflops", "speedup", "throughput", "attainment", "per_s", "ops")
 # Suffixes / substrings marking a metric where smaller is better.
 LOWER_BETTER_SUFFIX = ("_ms", "_s", "_us", "_ns")
-LOWER_BETTER_SUBSTR = ("p50", "p99", "latency", "shed_rate", "expired", "errors", "energy")
+LOWER_BETTER_SUBSTR = (
+    "p50",
+    "p99",
+    "latency",
+    "shed_rate",
+    "expired",
+    "errors",
+    "energy",
+    "rss",
+)
 
 
 def direction(key):

@@ -42,6 +42,11 @@ REQUIRED_FAMILIES = [
     "edgemlp_trace_buffer_events",
     "edgemlp_trace_dropped_total",
     "edgemlp_static_power_watts",
+    "edgemlp_loop_registered_connections",
+    "edgemlp_loop_ready_events_total",
+    "edgemlp_loop_poll_ticks_total",
+    "edgemlp_loop_pending_writeback_bytes",
+    "edgemlp_loop_timer_wheel_depth",
     "edgemlp_pool_requests_total",
     "edgemlp_pool_samples_total",
     "edgemlp_pool_batches_total",
