@@ -7,7 +7,9 @@
 //! attainment and shed-rate curves under admission control), and the
 //! E13 c10k scenario (live traffic with ~10k idle connections
 //! registered on the readiness event loop, plus a burst-reconnect
-//! storm — docs/async-net.md).
+//! storm — docs/async-net.md), and the E14 power-budget autoscale
+//! scenario (replica band under a step load, budget-gated
+//! accuracy-for-power degradation — docs/autoscaling.md).
 //! Emits `BENCH_serving.json` (override the
 //! path with `EDGEMLP_BENCH_JSON`) alongside `BENCH_gemm.json` for the
 //! perf trajectory. `cargo bench --bench serving` — see EXPERIMENTS.md
@@ -19,14 +21,15 @@
 //! would otherwise oversubscribe the cores and mask the scaling).
 
 use edgemlp::bench_harness::{fmt_time, BenchJson, HostFingerprint, Table};
-use edgemlp::coordinator::{BatchPolicy, CoordinatorConfig};
+use edgemlp::coordinator::{AutoscalePolicy, BatchPolicy, CoordinatorConfig};
 use edgemlp::fpga::accelerator::AccelConfig;
 use edgemlp::fpga::power::EnergyModel;
-use edgemlp::obs::pool_energy;
+use edgemlp::nn::activations::Activation;
 use edgemlp::nn::mlp::{Mlp, MlpConfig};
+use edgemlp::obs::pool_energy;
 use edgemlp::quant::spx::SpxConfig;
 use edgemlp::serve::{
-    run_loadgen, run_slo_sweep, BackendKind, EngineConfig, LoadGenConfig, ModelRegistry,
+    run_loadgen, run_slo_sweep, BackendKind, Client, EngineConfig, LoadGenConfig, ModelRegistry,
     ServeConfig, Server,
 };
 use edgemlp::util::rng::Pcg32;
@@ -59,6 +62,8 @@ fn engine(replicas: usize, backends: Vec<BackendKind>) -> EngineConfig {
             policy: BatchPolicy::windowed(64, Duration::from_millis(1)),
         },
         serve: ServeConfig::default(),
+        autoscale: None,
+        power_budget_w: None,
     }
 }
 
@@ -377,6 +382,8 @@ fn main() {
                 read_timeout: Duration::from_secs(600),
                 ..ServeConfig::default()
             },
+            autoscale: None,
+            power_budget_w: None,
         },
     )
     .expect("start idle server");
@@ -422,6 +429,101 @@ fn main() {
     println!("{}", storm.render());
     json.num("serving_storm_reconnects_per_s", storm.reconnects_per_s());
     json.num("serving_storm_errors", storm.errors as f64);
+    server.shutdown();
+
+    // ---- E14: power-budget autoscale under a step load. ----
+    // A slow-draining CPU pool (wide MLP, 256-deep queue) behind a
+    // [1, 4] replica band: the closed-loop burst holds queue occupancy
+    // above the scale-up threshold so replicas grow, and once the load
+    // stops the controller walks the pool back to the floor (the settle
+    // time is the recorded figure). The 1 W power budget sits below the
+    // energy model's 2.5 W static floor, so the budget gate must also
+    // latch accuracy-for-power degradation — int8/int4 pools are
+    // present as the cheap routing target — without shedding anything.
+    let wide = {
+        let mut rng = Pcg32::new(2024);
+        Mlp::new(
+            MlpConfig {
+                sizes: vec![784, 512, 256, 10],
+                activations: vec![Activation::Sigmoid; 3],
+            },
+            &mut rng,
+        )
+    };
+    let policy = AutoscalePolicy {
+        scale_up_occupancy: 0.1,
+        scale_down_occupancy: 0.02,
+        dwell: Duration::from_millis(100),
+        cooldown: Duration::from_millis(250),
+        sample_every: Duration::from_millis(25),
+        ..AutoscalePolicy::band(1, 4)
+    };
+    let server = Server::serve(
+        ModelRegistry::new("default", wide, SpxConfig::sp2(5)),
+        "127.0.0.1:0",
+        EngineConfig {
+            replicas: 1,
+            backends: vec![BackendKind::Cpu, BackendKind::Int8, BackendKind::Int4],
+            coordinator: CoordinatorConfig {
+                queue_capacity: 256,
+                policy: BatchPolicy::windowed(64, Duration::from_millis(1)),
+            },
+            serve: ServeConfig::default(),
+            autoscale: Some(policy),
+            power_budget_w: Some(1.0),
+        },
+    )
+    .expect("start autoscale server");
+    let burst = if quick { 4_000 } else { 20_000 };
+    let report = run_loadgen(
+        server.local_addr(),
+        LoadGenConfig {
+            requests: burst,
+            connections: 16,
+            backend: 0,
+            dim: 784,
+            batch: 1,
+            pipeline: 8,
+            warmup: burst / 10,
+            ..LoadGenConfig::default()
+        },
+    )
+    .expect("autoscale loadgen");
+    assert_eq!(report.ok + report.shed + report.errors, report.sent, "lost responses");
+
+    // The step back down: poll Health until the loaded pool returns to
+    // the replica floor (60 s cap so a stuck controller still reports).
+    let mut client = Client::connect(server.local_addr()).expect("autoscale ctl client");
+    let settle_start = std::time::Instant::now();
+    let (health, auto, settle_s) = loop {
+        let (health, _, auto) = client.health_full().expect("health");
+        let auto = auto.expect("autoscale health block");
+        let at_floor = health.pools.iter().all(|p| (p.replicas as usize) <= policy.min);
+        if at_floor || settle_start.elapsed() > Duration::from_secs(60) {
+            break (health, auto, settle_start.elapsed().as_secs_f64());
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    let watts = auto.power_mw as f64 / 1e3;
+    let shed: u64 = health.pools.iter().map(|p| p.shed).sum();
+    assert!(auto.scale_ups >= 1, "burst never tripped a scale-up: {auto:?}");
+    assert!(auto.power_degraded, "1 W budget under the 2.5 W static floor must degrade");
+    assert_eq!(shed, 0, "degradation must precede shedding");
+    println!("\n=== E14: power-budget autoscale, step load (EXPERIMENTS.md §E14) ===\n");
+    println!(
+        "{:.0} req/s | p99 {} | {} ups / {} downs | settle {settle_s:.1} s | \
+         {watts:.2} W (budget 1.00 W) | power-degraded {}",
+        report.throughput_rps(),
+        fmt_time(report.p99_s()),
+        auto.scale_ups,
+        auto.scale_downs,
+        auto.power_degraded,
+    );
+    json.num("serving_autoscale_rps", report.throughput_rps());
+    json.num("serving_autoscale_p99_ms", report.p99_s() * 1e3);
+    json.num("serving_autoscale_settle_s", settle_s);
+    json.num("serving_autoscale_watts", watts);
+    json.num("serving_autoscale_scale_ups", auto.scale_ups as f64);
     server.shutdown();
 
     HostFingerprint::detect().stamp(&mut json);

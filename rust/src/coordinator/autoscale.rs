@@ -1,0 +1,615 @@
+//! Power-budget replica autoscaling: a feedback controller that samples
+//! each pool's queue occupancy on a fixed cadence and resizes its
+//! replica set within a configured band ([`Coordinator::scale_to`]),
+//! plus a server-wide power budget that trades accuracy for watts
+//! before any request is shed.
+//!
+//! Two nested control loops, mirroring the paper's precision-for-power
+//! dial at the fleet level:
+//!
+//! * **Replica loop** — per pool, a hysteresis controller
+//!   ([`PoolScaler`]): occupancy sustained above the scale-up threshold
+//!   for a dwell grows the pool by one replica; sustained below the
+//!   scale-down threshold shrinks it. A cooldown between actions keeps
+//!   a square-wave load from flapping the replica count, and shrinking
+//!   retires workers gracefully — a retired worker finishes the batch
+//!   it already claimed, so scale-down mid-traffic never loses a
+//!   response.
+//! * **Power loop** — the modeled board draw (static + windowed dynamic
+//!   from the energy model) is compared against `--power-budget-w`
+//!   through its own hysteresis ([`BudgetGate`]). Overshooting the
+//!   budget for a dwell latches the *power* half of every route's
+//!   degrade mode ([`super::degrade::DegradeController::set_power`]),
+//!   re-routing `BACKEND_ANY` traffic to the cheapest (lowest-bit)
+//!   pool; recovering at-or-under budget for the dwell releases it.
+//!   Degradation fires before load shedding by construction: it is a
+//!   routing decision made at admission, not a rejection.
+//!
+//! The decision cores ([`PoolScaler`], [`BudgetGate`]) are pure state
+//! machines over explicit `now` instants, tested with a synthetic
+//! clock; [`Autoscaler`] is the thin sampling thread around them.
+
+use super::server::Coordinator;
+use anyhow::{Context, Result};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Replica-band and controller knobs for one [`Autoscaler`].
+#[derive(Debug, Clone, Copy)]
+pub struct AutoscalePolicy {
+    /// Replica floor per scalable pool (≥ 1).
+    pub min: usize,
+    /// Replica ceiling per scalable pool (≥ `min`).
+    pub max: usize,
+    /// Grow when occupancy stays `>= scale_up_occupancy` for `dwell`.
+    pub scale_up_occupancy: f64,
+    /// Shrink when occupancy stays `<= scale_down_occupancy` for
+    /// `dwell`. Must sit below `scale_up_occupancy` so a hysteresis
+    /// band exists.
+    pub scale_down_occupancy: f64,
+    /// How long a stretch must hold before the controller acts on it.
+    pub dwell: Duration,
+    /// Minimum spacing between two scaling actions on one pool —
+    /// the flap-resistance knob.
+    pub cooldown: Duration,
+    /// Sampling cadence of the autoscaler thread.
+    pub sample_every: Duration,
+}
+
+impl AutoscalePolicy {
+    /// Default controller knobs over an explicit `[min, max]` band.
+    pub fn band(min: usize, max: usize) -> AutoscalePolicy {
+        AutoscalePolicy {
+            min,
+            max,
+            scale_up_occupancy: 0.5,
+            scale_down_occupancy: 0.05,
+            dwell: Duration::from_millis(300),
+            cooldown: Duration::from_secs(1),
+            sample_every: Duration::from_millis(100),
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.min == 0 {
+            return Err("autoscale min replicas must be >= 1".into());
+        }
+        if self.max < self.min {
+            return Err(format!(
+                "autoscale max replicas {} must be >= min {}",
+                self.max, self.min
+            ));
+        }
+        if !(0.0..=1.0).contains(&self.scale_up_occupancy)
+            || !(0.0..=1.0).contains(&self.scale_down_occupancy)
+        {
+            return Err("autoscale occupancy thresholds must be in [0, 1]".into());
+        }
+        if self.scale_down_occupancy >= self.scale_up_occupancy {
+            return Err(format!(
+                "autoscale scale-down occupancy {} must be below scale-up occupancy {} \
+                 (no hysteresis band)",
+                self.scale_down_occupancy, self.scale_up_occupancy
+            ));
+        }
+        if self.sample_every.is_zero() {
+            return Err("autoscale sample interval must be nonzero".into());
+        }
+        Ok(())
+    }
+}
+
+/// What one occupancy sample asks the coordinator to do.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    Up,
+    Down,
+    Hold,
+}
+
+/// Per-pool replica controller: double hysteresis (threshold band +
+/// dwell) plus an action cooldown. Pure — every input arrives as an
+/// explicit sample, so tests drive it with a synthetic clock.
+#[derive(Debug)]
+pub struct PoolScaler {
+    policy: AutoscalePolicy,
+    over_since: Option<Instant>,
+    under_since: Option<Instant>,
+    last_action: Option<Instant>,
+}
+
+impl PoolScaler {
+    pub fn new(policy: AutoscalePolicy) -> PoolScaler {
+        PoolScaler { policy, over_since: None, under_since: None, last_action: None }
+    }
+
+    fn cooled(&self, now: Instant) -> bool {
+        match self.last_action {
+            Some(t) => now.saturating_duration_since(t) >= self.policy.cooldown,
+            None => true,
+        }
+    }
+
+    /// Feed one occupancy sample for a pool currently at `replicas`
+    /// active workers. `Up`/`Down` means the caller should resize by
+    /// one replica now; the scaler has already started its cooldown.
+    pub fn decide(&mut self, occupancy: f64, replicas: usize, now: Instant) -> ScaleDecision {
+        let p = self.policy;
+        if occupancy >= p.scale_up_occupancy {
+            self.under_since = None;
+            let start = *self.over_since.get_or_insert(now);
+            if now.saturating_duration_since(start) >= p.dwell
+                && replicas < p.max
+                && self.cooled(now)
+            {
+                self.over_since = None;
+                self.last_action = Some(now);
+                return ScaleDecision::Up;
+            }
+        } else if occupancy <= p.scale_down_occupancy {
+            self.over_since = None;
+            let start = *self.under_since.get_or_insert(now);
+            if now.saturating_duration_since(start) >= p.dwell
+                && replicas > p.min
+                && self.cooled(now)
+            {
+                self.under_since = None;
+                self.last_action = Some(now);
+                return ScaleDecision::Down;
+            }
+        } else {
+            // Inside the hysteresis band: neither stretch accumulates.
+            self.over_since = None;
+            self.under_since = None;
+        }
+        ScaleDecision::Hold
+    }
+}
+
+/// Hysteresis over the power budget: strictly over budget for `dwell`
+/// latches degraded; at-or-under budget for `dwell` releases it. Draw
+/// exactly at the budget is *within* it — a server running precisely
+/// at its cap is compliant, not degraded.
+#[derive(Debug)]
+pub struct BudgetGate {
+    budget_w: f64,
+    dwell: Duration,
+    over_since: Option<Instant>,
+    under_since: Option<Instant>,
+    degraded: bool,
+}
+
+impl BudgetGate {
+    pub fn new(budget_w: f64, dwell: Duration) -> BudgetGate {
+        BudgetGate { budget_w, dwell, over_since: None, under_since: None, degraded: false }
+    }
+
+    pub fn degraded(&self) -> bool {
+        self.degraded
+    }
+
+    /// Feed one power sample; returns the (possibly newly flipped)
+    /// degraded flag.
+    pub fn observe(&mut self, watts: f64, now: Instant) -> bool {
+        if !self.degraded {
+            if watts > self.budget_w {
+                let start = *self.over_since.get_or_insert(now);
+                if now.saturating_duration_since(start) >= self.dwell {
+                    self.degraded = true;
+                    self.over_since = None;
+                }
+            } else {
+                self.over_since = None;
+            }
+        } else if watts <= self.budget_w {
+            let start = *self.under_since.get_or_insert(now);
+            if now.saturating_duration_since(start) >= self.dwell {
+                self.degraded = false;
+                self.under_since = None;
+            }
+        } else {
+            self.under_since = None;
+        }
+        self.degraded
+    }
+}
+
+/// Shared counters the autoscaler thread maintains and the metrics /
+/// health endpoints export. All relaxed atomics — they are telemetry,
+/// not synchronization.
+#[derive(Debug, Default)]
+pub struct AutoscaleStats {
+    pub scale_ups: AtomicU64,
+    pub scale_downs: AtomicU64,
+    /// Modeled board draw at the last sample, milliwatts.
+    pub power_mw: AtomicU64,
+    /// Configured power budget, milliwatts (0 = no budget).
+    pub budget_mw: AtomicU64,
+    pub power_degraded: AtomicBool,
+    pub samples: AtomicU64,
+}
+
+/// Callbacks wiring the autoscaler to the serving layer without a
+/// dependency cycle: the server owns the energy model and the routes,
+/// the autoscaler owns the control loop.
+pub struct AutoscaleHooks {
+    /// Returns the modeled board draw (static + windowed dynamic) in
+    /// watts. Called once per sample when a budget is configured.
+    pub power_watts: Box<dyn FnMut() -> f64 + Send>,
+    /// Latch (`true`) or release (`false`) the power half of every
+    /// route's degrade mode. Called only on budget-gate edges.
+    pub set_power_degraded: Box<dyn FnMut(bool) + Send>,
+}
+
+impl AutoscaleHooks {
+    /// No-op hooks for budget-less autoscaling (and tests).
+    pub fn disabled() -> AutoscaleHooks {
+        AutoscaleHooks {
+            power_watts: Box::new(|| 0.0),
+            set_power_degraded: Box::new(|_| {}),
+        }
+    }
+}
+
+/// The sampling thread. Holds the coordinator behind an `Arc`; stop it
+/// with [`Autoscaler::shutdown`] (or Drop) *before* the coordinator is
+/// shut down for a clean exit, though a closed coordinator is also
+/// harmless — `scale_to` keeps working on closed queues.
+pub struct Autoscaler {
+    stop: Arc<AtomicBool>,
+    handle: Mutex<Option<JoinHandle<()>>>,
+    stats: Arc<AutoscaleStats>,
+    policy: AutoscalePolicy,
+    budget_w: Option<f64>,
+}
+
+impl Autoscaler {
+    /// Clamp every scalable pool into `[min, max]` immediately, then
+    /// start the sampling thread.
+    pub fn spawn(
+        coord: Arc<Coordinator>,
+        policy: AutoscalePolicy,
+        budget_w: Option<f64>,
+        mut hooks: AutoscaleHooks,
+    ) -> Result<Autoscaler> {
+        policy.validate().map_err(anyhow::Error::msg)?;
+        for i in 0..coord.num_pools() {
+            if coord.scalable(i) {
+                let r = coord.pool_replicas(i).unwrap_or(1);
+                let target = r.clamp(policy.min, policy.max);
+                if target != r {
+                    coord
+                        .scale_to(i, target)
+                        .with_context(|| format!("clamp pool {i} into autoscale band"))?;
+                }
+            }
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(AutoscaleStats::default());
+        stats
+            .budget_mw
+            .store(budget_w.map(|w| (w * 1e3) as u64).unwrap_or(0), Ordering::Relaxed);
+        let handle = {
+            let stop = stop.clone();
+            let stats = stats.clone();
+            std::thread::Builder::new()
+                .name("edgemlp-autoscale".into())
+                .spawn(move || {
+                    let mut scalers: Vec<PoolScaler> =
+                        (0..coord.num_pools()).map(|_| PoolScaler::new(policy)).collect();
+                    let mut gate = budget_w.map(|b| BudgetGate::new(b, policy.dwell));
+                    let mut degraded = false;
+                    while !stop.load(Ordering::Acquire) {
+                        std::thread::sleep(policy.sample_every);
+                        if stop.load(Ordering::Acquire) {
+                            break;
+                        }
+                        let now = Instant::now();
+                        let cap = coord.queue_capacity().max(1) as f64;
+                        for (i, scaler) in scalers.iter_mut().enumerate() {
+                            if !coord.scalable(i) {
+                                continue;
+                            }
+                            let depth = coord.queue_depth(i).unwrap_or(0) as f64;
+                            let replicas = coord.pool_replicas(i).unwrap_or(1);
+                            match scaler.decide(depth / cap, replicas, now) {
+                                ScaleDecision::Up => {
+                                    if coord.scale_to(i, replicas + 1).is_ok() {
+                                        stats.scale_ups.fetch_add(1, Ordering::Relaxed);
+                                        coord.trace_scale_event(i, "scale_up");
+                                    }
+                                }
+                                ScaleDecision::Down => {
+                                    if coord.scale_to(i, replicas - 1).is_ok() {
+                                        stats.scale_downs.fetch_add(1, Ordering::Relaxed);
+                                        coord.trace_scale_event(i, "scale_down");
+                                    }
+                                }
+                                ScaleDecision::Hold => {}
+                            }
+                        }
+                        if let Some(gate) = gate.as_mut() {
+                            let watts = (hooks.power_watts)();
+                            stats.power_mw.store((watts.max(0.0) * 1e3) as u64, Ordering::Relaxed);
+                            let deg = gate.observe(watts, now);
+                            if deg != degraded {
+                                degraded = deg;
+                                (hooks.set_power_degraded)(deg);
+                                stats.power_degraded.store(deg, Ordering::Relaxed);
+                            }
+                        }
+                        stats.samples.fetch_add(1, Ordering::Relaxed);
+                    }
+                })
+                .context("spawn autoscaler thread")?
+        };
+        Ok(Autoscaler { stop, handle: Mutex::new(Some(handle)), stats, policy, budget_w })
+    }
+
+    pub fn stats(&self) -> Arc<AutoscaleStats> {
+        self.stats.clone()
+    }
+
+    pub fn policy(&self) -> AutoscalePolicy {
+        self.policy
+    }
+
+    pub fn budget_w(&self) -> Option<f64> {
+        self.budget_w
+    }
+
+    /// Stop the sampling thread and join it. Idempotent.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Autoscaler {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::{Backend, FnBackend};
+    use crate::coordinator::batcher::BatchPolicy;
+    use crate::coordinator::server::{
+        CoordinatorConfig, PoolSpec, SharedBackendFactory,
+    };
+
+    fn policy() -> AutoscalePolicy {
+        AutoscalePolicy {
+            min: 1,
+            max: 4,
+            scale_up_occupancy: 0.5,
+            scale_down_occupancy: 0.1,
+            dwell: Duration::from_millis(300),
+            cooldown: Duration::from_secs(2),
+            sample_every: Duration::from_millis(100),
+        }
+    }
+
+    /// Synthetic clock, as in the degrade controller tests.
+    fn clock() -> impl FnMut(u64) -> Instant {
+        let epoch = Instant::now();
+        move |ms| epoch + Duration::from_millis(ms)
+    }
+
+    #[test]
+    fn scaler_grows_after_sustained_saturation_only() {
+        let mut s = PoolScaler::new(policy());
+        let mut at = clock();
+        assert_eq!(s.decide(0.9, 1, at(0)), ScaleDecision::Hold);
+        assert_eq!(s.decide(0.9, 1, at(200)), ScaleDecision::Hold); // < dwell
+        assert_eq!(s.decide(0.2, 1, at(250)), ScaleDecision::Hold); // stretch reset
+        assert_eq!(s.decide(0.9, 1, at(300)), ScaleDecision::Hold);
+        assert_eq!(s.decide(0.9, 1, at(650)), ScaleDecision::Up); // 350 ms sustained
+        // Cooldown gates the next action even under sustained load.
+        assert_eq!(s.decide(0.9, 2, at(1100)), ScaleDecision::Hold);
+        assert_eq!(s.decide(0.9, 2, at(2700)), ScaleDecision::Up); // cooled + dwelled
+    }
+
+    #[test]
+    fn scaler_shrinks_after_sustained_idle_and_respects_floor() {
+        let mut s = PoolScaler::new(policy());
+        let mut at = clock();
+        assert_eq!(s.decide(0.0, 3, at(0)), ScaleDecision::Hold);
+        assert_eq!(s.decide(0.05, 3, at(350)), ScaleDecision::Down);
+        // At the floor, idle never shrinks further.
+        let mut s = PoolScaler::new(policy());
+        assert_eq!(s.decide(0.0, 1, at(1000)), ScaleDecision::Hold);
+        assert_eq!(s.decide(0.0, 1, at(5000)), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn scaler_holds_at_ceiling_and_with_min_equals_max() {
+        let mut s = PoolScaler::new(policy());
+        let mut at = clock();
+        assert_eq!(s.decide(1.0, 4, at(0)), ScaleDecision::Hold);
+        assert_eq!(s.decide(1.0, 4, at(1000)), ScaleDecision::Hold); // at max
+        // min == max: a degenerate band never acts in either direction.
+        let fixed = AutoscalePolicy { min: 2, max: 2, ..policy() };
+        let mut s = PoolScaler::new(fixed);
+        for t in 0..20u64 {
+            let occ = if t < 10 { 1.0 } else { 0.0 };
+            assert_eq!(s.decide(occ, 2, at(t * 500)), ScaleDecision::Hold, "t={t}");
+        }
+    }
+
+    #[test]
+    fn cooldown_bounds_actions_under_square_wave_load() {
+        // Occupancy square wave: 600 ms at 0.9, 600 ms at 0.0, sampled
+        // every 100 ms for 12 s. Each half-period outlasts the 300 ms
+        // dwell, so a cooldown-less controller would act ~every half
+        // period (~20 times). The 2 s cooldown bounds it to ≤ 7.
+        let mut s = PoolScaler::new(policy());
+        let mut at = clock();
+        let mut replicas = 2usize;
+        let mut actions = 0u32;
+        for tick in 0..120u64 {
+            let ms = tick * 100;
+            let occ = if (ms / 600) % 2 == 0 { 0.9 } else { 0.0 };
+            match s.decide(occ, replicas, at(ms)) {
+                ScaleDecision::Up => {
+                    replicas += 1;
+                    actions += 1;
+                }
+                ScaleDecision::Down => {
+                    replicas -= 1;
+                    actions += 1;
+                }
+                ScaleDecision::Hold => {}
+            }
+            assert!((1..=4).contains(&replicas), "left the band at {replicas}");
+        }
+        assert!(actions >= 1, "controller never acted");
+        assert!(actions <= 7, "{actions} actions in 12 s despite a 2 s cooldown");
+    }
+
+    #[test]
+    fn budget_gate_is_exact_at_the_boundary() {
+        let mut g = BudgetGate::new(5.0, Duration::from_millis(300));
+        let mut at = clock();
+        // Draw exactly at the budget, indefinitely: never degraded.
+        for t in 0..20u64 {
+            assert!(!g.observe(5.0, at(t * 100)), "t={t}");
+        }
+        // Strictly over, sustained: degraded after the dwell.
+        assert!(!g.observe(5.001, at(3000)));
+        assert!(!g.observe(5.001, at(3200)));
+        assert!(g.observe(5.001, at(3350)));
+        // Back to exactly at budget: that counts as compliant and
+        // releases after the dwell.
+        assert!(g.observe(5.0, at(3400)));
+        assert!(!g.observe(5.0, at(3750)));
+    }
+
+    #[test]
+    fn budget_gate_flicker_does_not_flip() {
+        let mut g = BudgetGate::new(5.0, Duration::from_millis(300));
+        let mut at = clock();
+        for t in 0..30u64 {
+            let w = if t % 2 == 0 { 6.0 } else { 4.0 };
+            assert!(!g.observe(w, at(t * 100)), "flickering draw latched at t={t}");
+        }
+    }
+
+    #[test]
+    fn policy_validation_rejects_bad_bands() {
+        assert!(AutoscalePolicy::band(1, 4).validate().is_ok());
+        assert!(AutoscalePolicy::band(2, 2).validate().is_ok());
+        assert!(AutoscalePolicy::band(0, 4).validate().is_err());
+        assert!(AutoscalePolicy::band(4, 1).validate().is_err());
+        let p = AutoscalePolicy { scale_down_occupancy: 0.8, ..AutoscalePolicy::band(1, 4) };
+        assert!(p.validate().is_err());
+        let p = AutoscalePolicy { sample_every: Duration::ZERO, ..AutoscalePolicy::band(1, 4) };
+        assert!(p.validate().is_err());
+    }
+
+    fn wait_until(timeout: Duration, mut cond: impl FnMut() -> bool) -> bool {
+        let t0 = Instant::now();
+        while t0.elapsed() < timeout {
+            if cond() {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        cond()
+    }
+
+    #[test]
+    fn autoscaler_tracks_load_and_budget_end_to_end() {
+        // Workers block until the gate opens, so a flooded queue pins
+        // occupancy at ~1.0 (scale up to max); opening the gate drains
+        // it to 0.0 (scale back down to min). The power probe is a
+        // shared cell, so the budget crossing is equally deterministic.
+        let gate = Arc::new(AtomicBool::new(false));
+        let factory: SharedBackendFactory = {
+            let gate = gate.clone();
+            Arc::new(move || {
+                let gate = gate.clone();
+                Ok(Box::new(FnBackend::new("pool", 1, move |inputs: &[Vec<f32>]| {
+                    while !gate.load(Ordering::Acquire) {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Ok(inputs.to_vec())
+                })) as Box<dyn Backend>)
+            })
+        };
+        let coord = Arc::new(
+            crate::coordinator::server::Coordinator::start(
+                vec![PoolSpec::replicated("pool", 1, factory)],
+                CoordinatorConfig { queue_capacity: 8, policy: BatchPolicy::immediate(1) },
+            )
+            .unwrap(),
+        );
+        let policy = AutoscalePolicy {
+            min: 1,
+            max: 3,
+            scale_up_occupancy: 0.5,
+            scale_down_occupancy: 0.1,
+            dwell: Duration::from_millis(40),
+            cooldown: Duration::from_millis(60),
+            sample_every: Duration::from_millis(20),
+        };
+        let power = Arc::new(Mutex::new(10.0f64)); // over the 5 W budget
+        let degraded_seen = Arc::new(AtomicBool::new(false));
+        let hooks = AutoscaleHooks {
+            power_watts: {
+                let p = power.clone();
+                Box::new(move || *p.lock().unwrap())
+            },
+            set_power_degraded: {
+                let d = degraded_seen.clone();
+                Box::new(move |on| d.store(on, Ordering::Release))
+            },
+        };
+        let scaler = Autoscaler::spawn(coord.clone(), policy, Some(5.0), hooks).unwrap();
+        // Flood: one request wedges each worker, the rest park in the
+        // queue and hold occupancy over the scale-up threshold.
+        let receivers: Vec<_> =
+            (0..8).filter_map(|i| coord.try_submit_to(0, vec![i as f32]).ok()).collect();
+        assert!(
+            wait_until(Duration::from_secs(10), || coord.pool_replicas(0) == Some(3)),
+            "never scaled up to max (replicas {:?})",
+            coord.pool_replicas(0)
+        );
+        assert!(
+            wait_until(Duration::from_secs(10), || degraded_seen.load(Ordering::Acquire)),
+            "10 W draw against a 5 W budget never degraded"
+        );
+        // Open the gate: the queue drains, idle dwell shrinks the pool
+        // back to the floor.
+        gate.store(true, Ordering::Release);
+        for rx in receivers {
+            rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        }
+        assert!(
+            wait_until(Duration::from_secs(10), || coord.pool_replicas(0) == Some(1)),
+            "never scaled back down to min (replicas {:?})",
+            coord.pool_replicas(0)
+        );
+        // Draw drops under budget: the degrade latch releases.
+        *power.lock().unwrap() = 2.0;
+        assert!(
+            wait_until(Duration::from_secs(10), || !degraded_seen.load(Ordering::Acquire)),
+            "under-budget draw never released the degrade latch"
+        );
+        let stats = scaler.stats();
+        assert!(stats.scale_ups.load(Ordering::Relaxed) >= 2);
+        assert!(stats.scale_downs.load(Ordering::Relaxed) >= 2);
+        assert!(stats.samples.load(Ordering::Relaxed) > 0);
+        assert_eq!(stats.budget_mw.load(Ordering::Relaxed), 5000);
+        assert!(!stats.power_degraded.load(Ordering::Relaxed));
+        scaler.shutdown();
+        drop(scaler);
+        Arc::try_unwrap(coord).ok().unwrap().shutdown();
+    }
+}

@@ -48,6 +48,16 @@ pub trait Backend {
     fn stage_stats(&self) -> Option<Vec<StageSnapshot>> {
         None
     }
+    /// One representative sample for warm-up timing. A worker runs it
+    /// once (off-queue, unmetered) right after construction and seeds
+    /// the pool's admission-control service EMA from the measured
+    /// latency, so a tight-deadline burst against a fresh pool is shed
+    /// on arrival instead of fully admitted and expired at dequeue.
+    /// `None` (the default, and what test doubles keep) skips
+    /// calibration: the estimator starts cold and admits optimistically.
+    fn calibration_input(&self) -> Option<Vec<f32>> {
+        None
+    }
 }
 
 /// Table I "CPU": the pure-rust MLP forward at f32, batched through the
@@ -85,6 +95,10 @@ impl Backend for CpuBackend {
         let y = self.mlp.forward_with(&self.staging, &mut self.scratch);
         let out = (0..inputs.len()).map(|r| y.row(r).to_vec()).collect();
         Ok((out, None))
+    }
+
+    fn calibration_input(&self) -> Option<Vec<f32>> {
+        Some(vec![0.0; self.mlp.input_dim()])
     }
 }
 
@@ -125,6 +139,10 @@ impl Backend for FpgaBackend {
         let out = (0..inputs.len()).map(|r| y.row(r).to_vec()).collect();
         Ok((out, Some(stats)))
     }
+
+    fn calibration_input(&self) -> Option<Vec<f32>> {
+        Some(vec![0.0; self.accel.model.layers[0].w.shape[1]])
+    }
 }
 
 /// Low-bit integer backend: the VSQ int8/int4 forward
@@ -158,6 +176,10 @@ impl Backend for VsqBackend {
         let y = self.model.forward_batch(&self.staging);
         let out = (0..inputs.len()).map(|r| y.row(r).to_vec()).collect();
         Ok((out, None))
+    }
+
+    fn calibration_input(&self) -> Option<Vec<f32>> {
+        Some(vec![0.0; self.model.input_dim()])
     }
 }
 
@@ -278,6 +300,24 @@ mod tests {
             }
             assert!(be.infer(&[vec![0.0; 5]]).is_err(), "bad dims accepted");
         }
+    }
+
+    #[test]
+    fn calibration_inputs_match_model_dims() {
+        // Real backends offer a correctly sized warm-up sample, so the
+        // startup calibration forward cannot fail on a dim mismatch;
+        // the closure adapter (test doubles, XLA) stays calibration-free
+        // so cold-estimator tests keep their semantics.
+        let mlp = mnist_mlp();
+        let cpu = CpuBackend::new(mlp.clone());
+        assert_eq!(cpu.calibration_input().unwrap().len(), 8);
+        let q = QuantizedMlp::from_mlp(&mlp, &SpxConfig::sp2(6), Calibration::MaxAbs, None);
+        let fpga = FpgaBackend::new(Accelerator::new(q, AccelConfig::default_fpga()));
+        assert_eq!(fpga.calibration_input().unwrap().len(), 8);
+        let vsq = VsqBackend::new(VsqMlp::from_mlp(&mlp, 8, 4, Calibration::MaxAbs, None));
+        assert_eq!(vsq.calibration_input().unwrap().len(), 8);
+        let fnb = FnBackend::new("echo", 4, |inputs: &[Vec<f32>]| Ok(inputs.to_vec()));
+        assert!(fnb.calibration_input().is_none());
     }
 
     #[test]

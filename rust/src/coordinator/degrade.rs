@@ -12,6 +12,15 @@
 //! either threshold cannot flap the mode. Every method takes `now`
 //! explicitly — tests drive it with a synthetic clock, and the server
 //! samples it on each routing decision and `Health` poll.
+//!
+//! Since the power-budget autoscaler landed, the mode is **two-signal**:
+//! occupancy (hysteresis above) OR an externally latched power signal
+//! ([`DegradeController::set_power`], raised by the autoscaler when the
+//! modeled board draw overshoots `--power-budget-w`, with its own
+//! hysteresis applied *before* the latch). The route is degraded while
+//! either signal holds; transitions are counted on edges of the
+//! combined flag, so flipping one signal while the other already holds
+//! the mode is not a new transition.
 
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -61,12 +70,21 @@ impl DegradePolicy {
 
 #[derive(Debug, Default)]
 struct DegradeState {
-    degraded: bool,
+    /// Occupancy-signal half of the mode (hysteresis state machine).
+    occ_degraded: bool,
+    /// Power-signal half, latched by the autoscaler's budget hysteresis.
+    power_degraded: bool,
     /// Start of the current continuous stretch above the enter
     /// threshold (while normal) or below the exit threshold (while
     /// degraded). Cleared whenever the signal leaves the stretch.
     stretch_start: Option<Instant>,
     transitions: u64,
+}
+
+impl DegradeState {
+    fn degraded(&self) -> bool {
+        self.occ_degraded || self.power_degraded
+    }
 }
 
 /// The per-model mode state machine. Interior-mutable so routing
@@ -85,30 +103,56 @@ impl DegradeController {
 
     /// Feed one occupancy sample at `now`; returns the (possibly newly
     /// flipped) degraded flag. Also returns whether this sample flipped
-    /// the mode, so the caller can count transitions exactly once.
+    /// the mode, so the caller can count transitions exactly once. The
+    /// returned flag is the *combined* mode (occupancy OR power), and a
+    /// flip is an edge of that combined flag — an occupancy recovery
+    /// while the power signal still holds reports no flip.
     pub fn observe(&self, occupancy: f64, now: Instant) -> (bool, bool) {
         let mut st = self.state.lock().unwrap();
-        let (in_stretch, dwell) = if st.degraded {
+        let before = st.degraded();
+        let (in_stretch, dwell) = if st.occ_degraded {
             (occupancy < self.policy.exit_occupancy, self.policy.exit_after)
         } else {
             (occupancy >= self.policy.enter_occupancy, self.policy.enter_after)
         };
         if !in_stretch {
             st.stretch_start = None;
-            return (st.degraded, false);
+            return (st.degraded(), false);
         }
         let start = *st.stretch_start.get_or_insert(now);
         if now.saturating_duration_since(start) >= dwell {
-            st.degraded = !st.degraded;
+            st.occ_degraded = !st.occ_degraded;
             st.stretch_start = None;
-            st.transitions += 1;
-            return (st.degraded, true);
+            if st.degraded() != before {
+                st.transitions += 1;
+                return (st.degraded(), true);
+            }
         }
-        (st.degraded, false)
+        (st.degraded(), false)
+    }
+
+    /// Latch or clear the power half of the mode. The caller applies
+    /// its own hysteresis (budget dwell) before flipping this — the
+    /// controller only combines the signals. Returns whether the
+    /// combined degraded flag flipped, so transitions can be counted.
+    pub fn set_power(&self, over_budget: bool) -> bool {
+        let mut st = self.state.lock().unwrap();
+        let before = st.degraded();
+        st.power_degraded = over_budget;
+        let flipped = st.degraded() != before;
+        if flipped {
+            st.transitions += 1;
+        }
+        flipped
+    }
+
+    /// The power half of the combined mode, alone.
+    pub fn power_degraded(&self) -> bool {
+        self.state.lock().unwrap().power_degraded
     }
 
     pub fn is_degraded(&self) -> bool {
-        self.state.lock().unwrap().degraded
+        self.state.lock().unwrap().degraded()
     }
 
     pub fn transitions(&self) -> u64 {
@@ -203,6 +247,47 @@ mod tests {
         // Just below it is.
         c.observe(0.19, at(510));
         assert_eq!(c.observe(0.19, at(710)), (false, true));
+    }
+
+    #[test]
+    fn power_signal_degrades_independently_of_occupancy() {
+        let c = controller();
+        let mut at = clock();
+        assert!(!c.is_degraded());
+        // Power latch raises the combined mode with no occupancy input.
+        assert!(c.set_power(true));
+        assert!(c.is_degraded() && c.power_degraded());
+        assert_eq!(c.transitions(), 1);
+        // Idempotent latch: no new transition.
+        assert!(!c.set_power(true));
+        assert_eq!(c.transitions(), 1);
+        // Calm occupancy samples cannot clear a power-held mode.
+        assert_eq!(c.observe(0.0, at(0)), (true, false));
+        assert_eq!(c.observe(0.0, at(1000)), (true, false));
+        assert!(c.set_power(false));
+        assert!(!c.is_degraded());
+        assert_eq!(c.transitions(), 2);
+    }
+
+    #[test]
+    fn overlapping_signals_count_combined_edges_only() {
+        // Occupancy enters first, then power joins, then occupancy
+        // recovers: the mode must hold (power still over budget) and
+        // the recovery is not a counted transition.
+        let c = controller();
+        let mut at = clock();
+        c.observe(1.0, at(0));
+        assert_eq!(c.observe(1.0, at(100)), (true, true));
+        assert_eq!(c.transitions(), 1);
+        assert!(!c.set_power(true), "already degraded — no combined edge");
+        assert_eq!(c.transitions(), 1);
+        // Occupancy half recovers (calm past exit dwell)...
+        c.observe(0.1, at(110));
+        assert_eq!(c.observe(0.1, at(310)), (true, false), "power still holds the mode");
+        // ...and only the power release ends the degraded stretch.
+        assert!(c.set_power(false));
+        assert!(!c.is_degraded());
+        assert_eq!(c.transitions(), 2);
     }
 
     #[test]

@@ -24,6 +24,7 @@
 //! router picks the pool with the shallowest queue instead of blind
 //! round-robin.
 
+pub mod autoscale;
 pub mod backend;
 pub mod batcher;
 pub mod degrade;
@@ -32,6 +33,7 @@ pub mod queue;
 pub mod request;
 pub mod server;
 
+pub use autoscale::{Autoscaler, AutoscaleHooks, AutoscalePolicy, AutoscaleStats};
 pub use backend::{Backend, CpuBackend, FpgaBackend, VsqBackend};
 pub use batcher::BatchPolicy;
 pub use degrade::{DegradeController, DegradePolicy};

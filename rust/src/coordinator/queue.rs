@@ -17,6 +17,7 @@
 //! first batch formation without a separate scheduler thread.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -131,15 +132,39 @@ impl<T> BoundedQueue<T> {
     /// first item for stragglers. Returns an empty vec only when the
     /// queue is closed and drained.
     pub fn pop_batch(&self, max: usize, window: Duration) -> Vec<T> {
+        static NEVER: AtomicBool = AtomicBool::new(false);
+        self.pop_batch_cancel(max, window, &NEVER)
+    }
+
+    /// [`BoundedQueue::pop_batch`] with a per-consumer cancel flag: a
+    /// consumer whose flag is raised stops waiting for work and returns
+    /// empty as soon as it holds no items, without closing the queue
+    /// for its siblings. A batch already claimed is still returned in
+    /// full — cancellation is checked only while empty-handed, so a
+    /// retiring pool worker can never drop a request. Pair a raised
+    /// flag with [`BoundedQueue::nudge`] so a parked consumer actually
+    /// wakes to observe it.
+    pub fn pop_batch_cancel(
+        &self,
+        max: usize,
+        window: Duration,
+        cancel: &AtomicBool,
+    ) -> Vec<T> {
         assert!(max > 0);
         let mut st = self.state.lock().unwrap();
         loop {
             // Phase 1: wait for the first item.
             while st.items.is_empty() {
-                if st.closed {
+                if st.closed || cancel.load(Ordering::Acquire) {
                     return Vec::new();
                 }
                 st = self.not_empty.wait(st).unwrap();
+            }
+            if cancel.load(Ordering::Acquire) {
+                // Items exist but this consumer is retiring: leave them
+                // for a sibling and make sure one is awake to take them.
+                self.not_empty.notify_one();
+                return Vec::new();
             }
             let deadline = Instant::now() + window;
             // Phase 2: batch window.
@@ -182,6 +207,15 @@ impl<T> BoundedQueue<T> {
             }
             return batch;
         }
+    }
+
+    /// Wake every parked consumer without changing queue state, so
+    /// consumers whose cancel flag was just raised re-check it. Spurious
+    /// wakeups are harmless — non-cancelled consumers go straight back
+    /// to waiting.
+    pub fn nudge(&self) {
+        let _st = self.state.lock().unwrap();
+        self.not_empty.notify_all();
     }
 
     /// Close: unblock all waiters; further pushes fail.
@@ -372,6 +406,37 @@ mod tests {
         }
         let batch = q.pop_batch(8, Duration::ZERO);
         assert_eq!(batch, vec![(3, 2), (3, 4), (7, 0), (7, 1), (7, 3)]);
+    }
+
+    #[test]
+    fn cancelled_consumer_returns_empty_without_closing_queue() {
+        // Raise one consumer's cancel flag and nudge: it returns empty
+        // while the queue stays open and a sibling still gets the work.
+        let q = Arc::new(BoundedQueue::<u32>::new(8));
+        let cancel = Arc::new(AtomicBool::new(false));
+        let (q2, c2) = (q.clone(), cancel.clone());
+        let retiring =
+            thread::spawn(move || q2.pop_batch_cancel(4, Duration::from_millis(50), &c2));
+        thread::sleep(Duration::from_millis(20)); // parked in phase 1
+        cancel.store(true, Ordering::Release);
+        q.nudge();
+        assert!(retiring.join().unwrap().is_empty());
+        assert!(!q.is_closed());
+        q.push(7).unwrap();
+        assert_eq!(q.pop_batch(4, Duration::ZERO), vec![7]);
+    }
+
+    #[test]
+    fn cancelled_consumer_leaves_queued_items_to_siblings() {
+        // Items are already waiting when the cancelled consumer arrives:
+        // it must not claim them, and must wake a sibling to take them.
+        let q = Arc::new(BoundedQueue::<u32>::new(8));
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        let cancel = AtomicBool::new(true);
+        assert!(q.pop_batch_cancel(4, Duration::from_millis(50), &cancel).is_empty());
+        assert_eq!(q.len(), 2, "cancelled consumer consumed items");
+        assert_eq!(q.pop_batch(4, Duration::ZERO), vec![1, 2]);
     }
 
     #[test]

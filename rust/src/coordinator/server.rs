@@ -22,9 +22,9 @@ use crate::nn::kernels::pipeline::panic_message;
 use crate::obs::trace::TraceRecorder;
 use anyhow::{bail, Context, Result};
 use std::panic::AssertUnwindSafe;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -37,19 +37,26 @@ pub type SharedBackendFactory = Arc<dyn Fn() -> Result<Box<dyn Backend>> + Send 
 
 /// One worker pool: a name (the metrics / routing label), plus one
 /// backend factory per replica sharing a single submission queue.
+/// Replicated pools keep their [`SharedBackendFactory`] so the
+/// coordinator can spawn additional replicas after startup
+/// ([`Coordinator::scale_to`]); single-factory pools cannot grow.
 pub struct PoolSpec {
     pub name: String,
     factories: Vec<BackendFactory>,
+    shared: Option<SharedBackendFactory>,
 }
 
 impl PoolSpec {
     /// A single-replica pool (the pre-replication coordinator shape).
+    /// Not scalable — there is no factory left to build a second
+    /// replica from.
     pub fn single(name: impl Into<String>, factory: BackendFactory) -> PoolSpec {
-        PoolSpec { name: name.into(), factories: vec![factory] }
+        PoolSpec { name: name.into(), factories: vec![factory], shared: None }
     }
 
     /// A pool of `replicas` workers, each building its own backend from
-    /// the shared factory.
+    /// the shared factory. The factory is retained, so the pool can be
+    /// rescaled at runtime.
     pub fn replicated(
         name: impl Into<String>,
         replicas: usize,
@@ -61,7 +68,7 @@ impl PoolSpec {
                 Box::new(move || f()) as BackendFactory
             })
             .collect();
-        PoolSpec { name: name.into(), factories }
+        PoolSpec { name: name.into(), factories, shared: Some(factory) }
     }
 
     pub fn replicas(&self) -> usize {
@@ -159,29 +166,177 @@ fn edf_key(req: &InferRequest, epoch: Instant) -> u64 {
     ((req.priority as u64) << 56) | d
 }
 
+/// One worker behind a pool: its join handle plus the retire flag its
+/// loop polls between batches. Raising the flag (and nudging the
+/// queue) makes the worker finish whatever batch it already claimed
+/// and then exit without taking more work.
+struct WorkerHandle {
+    retire: Arc<AtomicBool>,
+    handle: JoinHandle<()>,
+}
+
+/// Replica membership of one pool. `active` workers drain the queue;
+/// `retiring` workers have their flag raised and are joined
+/// opportunistically on the next resize (or at shutdown).
+#[derive(Default)]
+struct PoolWorkers {
+    active: Vec<WorkerHandle>,
+    retiring: Vec<WorkerHandle>,
+}
+
+/// One running pool: the submission queue, the admission-control
+/// signals, and the (dynamically sized) worker set draining it. The
+/// hot-path signals stay lock-free atomics; only replica membership —
+/// touched by [`Coordinator::scale_to`] and shutdown — sits behind a
+/// mutex.
+struct Pool {
+    name: String,
+    queue: Arc<BoundedQueue<InferRequest>>,
+    /// EWMA of per-request service time in nanoseconds (0 = no
+    /// observation yet). Seeded by the calibration forward at replica
+    /// startup, then written by workers after every successful batch;
+    /// read by admission control. Racy load/store is fine — it is a
+    /// smoothed estimate, not an invariant.
+    service_ema_ns: Arc<AtomicU64>,
+    /// Admissions granted but not yet pushed into the queue. Counted
+    /// into the wait estimate so a burst of concurrent submits cannot
+    /// all reason against the same (stale) queue depth and over-admit.
+    in_flight_admits: AtomicU64,
+    /// Active replica count, mirrored from `workers.active.len()` so
+    /// the estimator and health snapshots read it without the lock.
+    replicas: AtomicUsize,
+    /// Retained factory for replicated pools; `None` marks the pool
+    /// unscalable (its one-shot factory was consumed at startup).
+    shared_factory: Option<SharedBackendFactory>,
+    workers: Mutex<PoolWorkers>,
+    /// Monotonic replica sequence, so rescales never reuse a thread
+    /// name.
+    spawn_seq: AtomicUsize,
+    /// Pre-built trace track label (`Arc<str>` so the hot path clones
+    /// a pointer, not a string).
+    track: Arc<str>,
+}
+
+/// Spawn one replica worker thread for a pool and block until its
+/// backend reports ready (or fails — then the thread is already gone
+/// and the error is returned synchronously). Before the ready
+/// handshake the worker runs one unmetered calibration forward (if the
+/// backend offers a [`Backend::calibration_input`]) and seeds the
+/// pool's admission EMA from the measured latency — only from cold
+/// (`compare_exchange` from 0), so a mid-traffic rescale never
+/// clobbers live observations with a one-shot sample.
+#[allow(clippy::too_many_arguments)]
+fn spawn_replica(
+    name: &str,
+    seq: usize,
+    factory: BackendFactory,
+    queue: &Arc<BoundedQueue<InferRequest>>,
+    metrics: &Arc<Metrics>,
+    policy: BatchPolicy,
+    ema: &Arc<AtomicU64>,
+    trace: Option<(Arc<TraceRecorder>, Arc<str>)>,
+) -> Result<WorkerHandle> {
+    let (ready_tx, ready_rx) = channel::<Result<()>>();
+    let retire = Arc::new(AtomicBool::new(false));
+    let handle = {
+        let queue = queue.clone();
+        let metrics = metrics.clone();
+        let name = name.to_string();
+        let ema = ema.clone();
+        let retire = retire.clone();
+        std::thread::Builder::new()
+            .name(format!("edgemlp-{name}-r{seq}"))
+            .spawn(move || {
+                let mut backend = match factory() {
+                    Ok(b) => b,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                if let Some(sample) = backend.calibration_input() {
+                    let t0 = Instant::now();
+                    if backend.infer(std::slice::from_ref(&sample)).is_ok() {
+                        let ns = (t0.elapsed().as_nanos() as u64).max(1);
+                        let _ = ema.compare_exchange(0, ns, Ordering::Relaxed, Ordering::Relaxed);
+                    }
+                }
+                let _ = ready_tx.send(Ok(()));
+                worker_loop(
+                    &name,
+                    backend.as_mut(),
+                    &queue,
+                    &metrics,
+                    policy,
+                    &ema,
+                    &retire,
+                    trace.as_ref(),
+                );
+            })
+            .context("spawn worker")?
+    };
+    let ready = ready_rx.recv().context("worker handshake lost").and_then(|r| {
+        r.with_context(|| format!("backend '{name}' replica {seq} failed to start"))
+    });
+    match ready {
+        Ok(()) => Ok(WorkerHandle { retire, handle }),
+        Err(e) => {
+            // A failed handshake means the thread already returned (it
+            // only errors before entering the worker loop) — reap it
+            // before surfacing the error.
+            let _ = handle.join();
+            Err(e)
+        }
+    }
+}
+
+/// Close every built pool's queue, then join all their workers —
+/// the startup-failure cleanup path.
+fn teardown(pools: Vec<Pool>) {
+    for p in &pools {
+        p.queue.close();
+    }
+    for p in pools {
+        let w = p.workers.into_inner().unwrap();
+        for h in w.active.into_iter().chain(w.retiring) {
+            let _ = h.handle.join();
+        }
+    }
+}
+
+/// RAII token for one granted admission that has not reached its queue
+/// yet. While held, the request stays counted in the pool's
+/// `in_flight_admits`, so concurrent admissions see each other either
+/// there or (after the push completes and the guard drops) in the
+/// queue depth — never in neither.
+struct AdmitGuard<'a>(&'a AtomicU64);
+
+impl Drop for AdmitGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
 /// Running coordinator. Drop or call [`Coordinator::shutdown`] to stop.
 pub struct Coordinator {
-    queues: Vec<Arc<BoundedQueue<InferRequest>>>,
+    pools: Vec<Pool>,
+    /// Pool names in submission-index order, duplicated out of `pools`
+    /// so [`Coordinator::pool_names`] can hand out a plain slice.
     names: Vec<String>,
-    replicas: Vec<usize>,
-    /// Per-pool EWMA of per-request service time in nanoseconds (0 =
-    /// no observation yet). Written by workers after every successful
-    /// batch; read by admission control. Racy load/store is fine — it
-    /// is a smoothed estimate, not an invariant.
-    service_ema_ns: Vec<Arc<AtomicU64>>,
-    workers: Vec<JoinHandle<()>>,
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
     /// Rotates the scan start of least-loaded selection so queue-depth
     /// ties do not all land on pool 0.
     tie_break: AtomicUsize,
     queue_capacity: usize,
+    /// Batching knobs, retained so replicas spawned by a later
+    /// [`Coordinator::scale_to`] run the same policy as startup ones.
+    policy: BatchPolicy,
     /// Time origin of the EDF queue keys.
     epoch: Instant,
-    /// Request-lifecycle trace sink plus one pre-built per-pool track
-    /// label (`Arc<str>` so the hot path clones a pointer, not a
-    /// string). `None` = tracing disabled, zero cost.
-    trace: Option<(Arc<TraceRecorder>, Vec<Arc<str>>)>,
+    /// Request-lifecycle trace sink. `None` = tracing disabled, zero
+    /// cost.
+    trace: Option<Arc<TraceRecorder>>,
 }
 
 impl Coordinator {
@@ -213,34 +368,14 @@ impl Coordinator {
         }
         let metrics = Arc::new(Metrics::new());
         let epoch = Instant::now();
-        let mut queues: Vec<Arc<BoundedQueue<InferRequest>>> = Vec::new();
-        let mut names = Vec::new();
-        let mut replicas = Vec::new();
-        let mut service_ema_ns: Vec<Arc<AtomicU64>> = Vec::new();
-        let mut tracks: Vec<Arc<str>> = Vec::new();
-        let mut workers: Vec<JoinHandle<()>> = Vec::new();
-        // On any startup failure, close every queue created so far so
-        // already-spawned workers exit instead of leaking.
-        let fail = |queues: &[Arc<BoundedQueue<InferRequest>>],
-                        workers: &mut Vec<JoinHandle<()>>,
-                        e: anyhow::Error| {
-            for q in queues {
-                q.close();
-            }
-            for w in workers.drain(..) {
-                let _ = w.join();
-            }
-            Err(e)
-        };
-        for pool in pools {
-            let pool: PoolSpec = pool.into();
-            let name = pool.name;
-            if pool.factories.is_empty() {
-                return fail(
-                    &queues,
-                    &mut workers,
-                    anyhow::anyhow!("pool '{name}' has zero replicas"),
-                );
+        let mut built: Vec<Pool> = Vec::new();
+        let mut names: Vec<String> = Vec::new();
+        for spec in pools {
+            let spec: PoolSpec = spec.into();
+            let name = spec.name;
+            if spec.factories.is_empty() {
+                teardown(built);
+                bail!("pool '{name}' has zero replicas");
             }
             // EDF queue: drains by (priority, deadline); deadline-free
             // traffic shares one key and stays FIFO.
@@ -249,97 +384,149 @@ impl Coordinator {
                 move |r| edf_key(r, epoch),
             ));
             let ema = Arc::new(AtomicU64::new(0));
-            let n_replicas = pool.factories.len();
             let track: Arc<str> = Arc::from(name.as_str());
-            for (r, factory) in pool.factories.into_iter().enumerate() {
-                let (ready_tx, ready_rx) = channel::<Result<()>>();
-                let spawned = {
-                    let queue = queue.clone();
-                    let metrics = metrics.clone();
-                    let name = name.clone();
-                    let policy = config.policy;
-                    let ema = ema.clone();
-                    let trace = tracer.as_ref().map(|t| (t.clone(), track.clone()));
-                    std::thread::Builder::new()
-                        .name(format!("edgemlp-{name}-r{r}"))
-                        .spawn(move || {
-                            let mut backend = match factory() {
-                                Ok(b) => {
-                                    let _ = ready_tx.send(Ok(()));
-                                    b
-                                }
-                                Err(e) => {
-                                    let _ = ready_tx.send(Err(e));
-                                    return;
-                                }
-                            };
-                            worker_loop(
-                                &name,
-                                backend.as_mut(),
-                                &queue,
-                                &metrics,
-                                policy,
-                                &ema,
-                                trace.as_ref(),
-                            );
-                        })
-                        .context("spawn worker")
-                };
-                let worker = match spawned {
-                    Ok(w) => w,
+            let mut active: Vec<WorkerHandle> = Vec::new();
+            let mut spawn_err = None;
+            for (r, factory) in spec.factories.into_iter().enumerate() {
+                let trace = tracer.as_ref().map(|t| (t.clone(), track.clone()));
+                match spawn_replica(
+                    &name,
+                    r,
+                    factory,
+                    &queue,
+                    &metrics,
+                    config.policy,
+                    &ema,
+                    trace,
+                ) {
+                    Ok(h) => active.push(h),
                     Err(e) => {
-                        // The current pool's queue is not in `queues`
-                        // yet — close it so this pool's earlier
-                        // replicas exit before the join in `fail`.
-                        queue.close();
-                        return fail(&queues, &mut workers, e);
+                        spawn_err = Some(e);
+                        break;
                     }
-                };
-                workers.push(worker);
-                let ready = ready_rx
-                    .recv()
-                    .context("worker handshake lost")
-                    .and_then(|r| {
-                        r.with_context(|| {
-                            format!("backend '{name}' replica {r} failed to start")
-                        })
-                    });
-                if let Err(e) = ready {
-                    queue.close();
-                    return fail(&queues, &mut workers, e);
                 }
             }
-            queues.push(queue);
+            // Register the (possibly partially spawned) pool before
+            // checking for errors: teardown then closes this pool's
+            // queue too, so its earlier replicas exit instead of
+            // leaking blocked on an open queue.
+            let n = active.len();
+            built.push(Pool {
+                name: name.clone(),
+                queue,
+                service_ema_ns: ema,
+                in_flight_admits: AtomicU64::new(0),
+                replicas: AtomicUsize::new(n),
+                shared_factory: spec.shared,
+                workers: Mutex::new(PoolWorkers { active, retiring: Vec::new() }),
+                spawn_seq: AtomicUsize::new(n),
+                track,
+            });
             names.push(name);
-            replicas.push(n_replicas);
-            service_ema_ns.push(ema);
-            tracks.push(track);
+            if let Some(e) = spawn_err {
+                teardown(built);
+                return Err(e);
+            }
         }
         Ok(Coordinator {
-            queues,
+            pools: built,
             names,
-            replicas,
-            service_ema_ns,
-            workers,
             metrics,
             next_id: AtomicU64::new(0),
             tie_break: AtomicUsize::new(0),
             queue_capacity: config.queue_capacity,
+            policy: config.policy,
             epoch,
-            trace: tracer.map(|t| (t, tracks)),
+            trace: tracer,
         })
     }
 
     /// Emit a queue-lifecycle instant on pool `pool`'s track, if a
     /// trace recorder is attached and enabled.
     fn trace_instant(&self, pool: usize, name: &'static str, request_id: u64) {
-        if let Some((rec, tracks)) = &self.trace {
+        if let Some(rec) = &self.trace {
             if rec.enabled() {
-                if let Some(track) = tracks.get(pool) {
-                    rec.instant("queue", name, Some(track.clone()), request_id);
+                if let Some(p) = self.pools.get(pool) {
+                    rec.instant("queue", name, Some(p.track.clone()), request_id);
                 }
             }
         }
+    }
+
+    /// Emit an autoscale lifecycle instant (`scale_up` / `scale_down`)
+    /// on pool `pool`'s track.
+    pub(crate) fn trace_scale_event(&self, pool: usize, name: &'static str) {
+        if let Some(rec) = &self.trace {
+            if rec.enabled() {
+                if let Some(p) = self.pools.get(pool) {
+                    rec.instant("autoscale", name, Some(p.track.clone()), 0);
+                }
+            }
+        }
+    }
+
+    /// Whether [`Coordinator::scale_to`] can resize pool `idx` — true
+    /// for pools built from a retained [`SharedBackendFactory`].
+    pub fn scalable(&self, idx: usize) -> bool {
+        self.pools.get(idx).is_some_and(|p| p.shared_factory.is_some())
+    }
+
+    /// Resize pool `pool` to `target` active replicas (clamped to at
+    /// least 1). Growing spawns workers from the pool's retained
+    /// shared factory — pools built from one-shot factories refuse.
+    /// Shrinking retires the most recently spawned workers first: each
+    /// finishes whatever batch it already claimed and then exits
+    /// without taking more work, so scale-down mid-traffic never loses
+    /// a response. Retired threads are reaped opportunistically on the
+    /// next resize and joined at shutdown. Returns the active replica
+    /// count after the change.
+    pub fn scale_to(&self, pool: usize, target: usize) -> Result<usize> {
+        let p = self
+            .pools
+            .get(pool)
+            .ok_or_else(|| anyhow::anyhow!("no such pool index: {pool}"))?;
+        let target = target.max(1);
+        let mut w = p.workers.lock().unwrap();
+        let mut i = 0;
+        while i < w.retiring.len() {
+            if w.retiring[i].handle.is_finished() {
+                let h = w.retiring.swap_remove(i);
+                let _ = h.handle.join();
+            } else {
+                i += 1;
+            }
+        }
+        while w.active.len() > target {
+            let h = w.active.pop().expect("active.len() > target >= 1");
+            h.retire.store(true, Ordering::Release);
+            w.retiring.push(h);
+            p.replicas.store(w.active.len(), Ordering::Relaxed);
+            // Wake parked consumers so an idle retired worker observes
+            // its flag now instead of at the next enqueue.
+            p.queue.nudge();
+        }
+        while w.active.len() < target {
+            let Some(shared) = &p.shared_factory else {
+                bail!("pool '{}' is not scalable (built from a one-shot factory)", p.name);
+            };
+            let f = shared.clone();
+            let factory: BackendFactory = Box::new(move || f());
+            let seq = p.spawn_seq.fetch_add(1, Ordering::Relaxed);
+            let trace = self.trace.as_ref().map(|t| (t.clone(), p.track.clone()));
+            let h = spawn_replica(
+                &p.name,
+                seq,
+                factory,
+                &p.queue,
+                &self.metrics,
+                self.policy,
+                &p.service_ema_ns,
+                trace,
+            )?;
+            w.active.push(h);
+            p.replicas.store(w.active.len(), Ordering::Relaxed);
+        }
+        Ok(w.active.len())
     }
 
     /// Pool names, in submission-index order.
@@ -357,17 +544,18 @@ impl Coordinator {
     }
 
     pub fn num_pools(&self) -> usize {
-        self.queues.len()
+        self.pools.len()
     }
 
-    /// Worker replicas behind pool `idx`.
+    /// Active worker replicas behind pool `idx` (excludes retiring
+    /// workers still finishing their last batch).
     pub fn pool_replicas(&self, idx: usize) -> Option<usize> {
-        self.replicas.get(idx).copied()
+        self.pools.get(idx).map(|p| p.replicas.load(Ordering::Relaxed))
     }
 
     /// Requests currently parked in pool `idx`'s queue.
     pub fn queue_depth(&self, idx: usize) -> Option<usize> {
-        self.queues.get(idx).map(|q| q.len())
+        self.pools.get(idx).map(|p| p.queue.len())
     }
 
     /// The least-loaded pool among `candidates` (queue depth; ties
@@ -409,18 +597,17 @@ impl Coordinator {
         self.queue_capacity
     }
 
-    /// Admission-control wait estimate for pool `pool`: queued requests
-    /// × smoothed per-request service time ÷ replicas. Zero until the
-    /// pool has served its first batch — unknown cost admits
+    /// Admission-control wait estimate for pool `pool`: (queued
+    /// requests + admissions still in flight toward the queue) ×
+    /// smoothed per-request service time ÷ replicas. Zero until the
+    /// pool has an estimate — real backends seed it from a calibration
+    /// forward at startup; estimator-less pools (test doubles) admit
     /// optimistically rather than shedding blind.
     pub fn estimated_wait(&self, pool: usize) -> Duration {
-        let depth = self.queue_depth(pool).unwrap_or(0) as u64;
-        let ema = self
-            .service_ema_ns
-            .get(pool)
-            .map(|e| e.load(Ordering::Relaxed))
-            .unwrap_or(0);
-        let replicas = self.replicas.get(pool).copied().unwrap_or(1).max(1) as u64;
+        let Some(p) = self.pools.get(pool) else { return Duration::ZERO };
+        let depth = p.queue.len() as u64 + p.in_flight_admits.load(Ordering::Relaxed);
+        let ema = p.service_ema_ns.load(Ordering::Relaxed);
+        let replicas = p.replicas.load(Ordering::Relaxed).max(1) as u64;
         Duration::from_nanos(depth.saturating_mul(ema) / replicas)
     }
 
@@ -445,28 +632,39 @@ impl Coordinator {
     /// Reject-on-arrival check: with a deadline set, a completion
     /// estimate (queue wait + own service) that overshoots it means the
     /// answer would be computed for nobody. Err = shed now, nothing
-    /// enqueued.
-    fn admit(&self, pool: usize, qos: &RequestQos) -> Result<(), SubmitError> {
-        let Some(deadline) = qos.deadline else { return Ok(()) };
+    /// enqueued. On success returns an [`AdmitGuard`] the caller must
+    /// hold across the queue push: it keeps this admission counted in
+    /// the estimate's `pending` term so a concurrent burst cannot all
+    /// admit against the same stale queue depth. (The estimate can
+    /// over-count — a guard whose push ultimately sheds still inflated
+    /// concurrent estimates — which errs toward shedding, never toward
+    /// admitting work that cannot finish.)
+    fn admit(&self, pool: usize, qos: &RequestQos) -> Result<Option<AdmitGuard<'_>>, SubmitError> {
+        let p = self.pools.get(pool).ok_or(SubmitError::UnknownBackend)?;
+        let Some(deadline) = qos.deadline else { return Ok(None) };
+        // Pre-increment value: earlier concurrent admissions are in
+        // `pending` (guard still held) or already in the queue depth —
+        // our own slot is not double-counted.
+        let pending = p.in_flight_admits.fetch_add(1, Ordering::AcqRel);
+        let guard = AdmitGuard(&p.in_flight_admits);
+        let ema = p.service_ema_ns.load(Ordering::Relaxed);
+        let replicas = p.replicas.load(Ordering::Relaxed).max(1) as u64;
+        let depth = p.queue.len() as u64 + pending;
         // Queue wait plus the request's own service time: under
         // sustained overload the queue pins at the admission boundary,
         // and without the service term every admitted request would
         // finish exactly AT its deadline — a coin flip instead of an
         // SLO.
-        let service = Duration::from_nanos(
-            self.service_ema_ns
-                .get(pool)
-                .map(|e| e.load(Ordering::Relaxed))
-                .unwrap_or(0),
-        );
-        let estimated_wait = self.estimated_wait(pool) + service;
+        let estimated_wait =
+            Duration::from_nanos((depth.saturating_mul(ema) / replicas).saturating_add(ema));
         if Instant::now() + estimated_wait > deadline {
-            self.metrics.record_expired(&self.names[pool]);
+            drop(guard);
+            self.metrics.record_expired(&p.name);
             // Rejected before an id is allocated — req 0 on the trace.
             self.trace_instant(pool, "admit_expired", 0);
             return Err(SubmitError::Expired { estimated_wait });
         }
-        Ok(())
+        Ok(Some(guard))
     }
 
     /// Blocking submit to a specific pool.
@@ -486,11 +684,12 @@ impl Coordinator {
         payload: Vec<f32>,
         qos: RequestQos,
     ) -> Result<Receiver<InferResult>, SubmitError> {
-        let queue = self.queues.get(pool).ok_or(SubmitError::UnknownBackend)?;
-        self.admit(pool, &qos)?;
+        let p = self.pools.get(pool).ok_or(SubmitError::UnknownBackend)?;
+        // Held across the push: see `admit`.
+        let _admit = self.admit(pool, &qos)?;
         let (req, rx) = self.make_request(payload, qos, None);
         let id = req.id;
-        match queue.push(req) {
+        match p.queue.push(req) {
             Ok(()) => {
                 self.trace_instant(pool, "enqueue", id);
                 Ok(rx)
@@ -535,18 +734,19 @@ impl Coordinator {
         qos: RequestQos,
         notify: Option<CompletionNotify>,
     ) -> Result<Receiver<InferResult>, SubmitError> {
-        let queue = self.queues.get(pool).ok_or(SubmitError::UnknownBackend)?;
-        self.admit(pool, &qos)?;
+        let p = self.pools.get(pool).ok_or(SubmitError::UnknownBackend)?;
+        // Held across the push: see `admit`.
+        let _admit = self.admit(pool, &qos)?;
         let (req, rx) = self.make_request(payload, qos, notify);
         let id = req.id;
-        match queue.try_push(req) {
+        match p.queue.try_push(req) {
             Ok(()) => {
                 self.trace_instant(pool, "enqueue", id);
                 Ok(rx)
             }
             Err(QueueError::Closed) => Err(SubmitError::Closed),
             Err(QueueError::Full) => {
-                self.metrics.record_shed(&self.names[pool]);
+                self.metrics.record_shed(&p.name);
                 self.trace_instant(pool, "shed", id);
                 Err(SubmitError::Backpressure)
             }
@@ -567,7 +767,7 @@ impl Coordinator {
         qos: RequestQos,
     ) -> Result<Receiver<InferResult>, SubmitError> {
         let idx = self
-            .least_loaded_scan(self.queues.len(), |k| k)
+            .least_loaded_scan(self.pools.len(), |k| k)
             .ok_or(SubmitError::UnknownBackend)?;
         self.submit_to_qos(idx, payload, qos)
     }
@@ -579,35 +779,45 @@ impl Coordinator {
     /// therefore cannot call [`Coordinator::shutdown`]; joining happens
     /// in `Drop`.
     pub fn stop(&self) {
-        for q in &self.queues {
-            q.close();
+        for p in &self.pools {
+            p.queue.close();
+        }
+    }
+
+    /// Close every queue and join every worker — active and retiring.
+    fn join_all(&mut self) {
+        for p in &self.pools {
+            p.queue.close();
+        }
+        for p in &self.pools {
+            let mut w = p.workers.lock().unwrap();
+            for h in w.active.drain(..) {
+                let _ = h.handle.join();
+            }
+            for h in w.retiring.drain(..) {
+                let _ = h.handle.join();
+            }
         }
     }
 
     /// Close queues and join workers (drains in-flight requests).
     pub fn shutdown(mut self) {
-        for q in &self.queues {
-            q.close();
-        }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.join_all();
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        for q in &self.queues {
-            q.close();
-        }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.join_all();
     }
 }
 
 /// Body of a pool worker thread. `name` is the pool label — replicas
-/// share it, so metrics aggregate per pool.
+/// share it, so metrics aggregate per pool. `retire` is this worker's
+/// scale-down flag: once raised, the next `pop_batch_cancel` returns
+/// empty instead of claiming more work (a batch already claimed is
+/// finished in full first) and the loop exits.
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     name: &str,
     backend: &mut dyn Backend,
@@ -615,14 +825,15 @@ fn worker_loop(
     metrics: &Metrics,
     policy: BatchPolicy,
     service_ema_ns: &AtomicU64,
+    retire: &AtomicBool,
     trace: Option<&(Arc<TraceRecorder>, Arc<str>)>,
 ) {
     let max_batch = policy.max_batch.min(backend.max_batch()).max(1);
     let trace = trace.filter(|t| t.0.capacity() > 0);
     loop {
-        let mut batch = queue.pop_batch(max_batch, policy.max_wait);
+        let mut batch = queue.pop_batch_cancel(max_batch, policy.max_wait, retire);
         if batch.is_empty() {
-            return; // closed + drained
+            return; // closed + drained, or retired by a scale-down
         }
         // One "queued" span per dequeued request: enqueue → now is the
         // time it sat parked (the batcher wait window included).
@@ -1313,6 +1524,218 @@ mod tests {
             rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
         }
         assert_eq!(*served.lock().unwrap(), vec![0.0, 1.0, 2.0, 3.0, 4.0]);
+        coord.shutdown();
+    }
+
+    /// Backend that advertises a calibration input; every forward —
+    /// the startup calibration pass included — sleeps `ms`.
+    struct CalibratedSleeper {
+        ms: u64,
+    }
+
+    impl Backend for CalibratedSleeper {
+        fn name(&self) -> &str {
+            "cal"
+        }
+
+        fn max_batch(&self) -> usize {
+            1
+        }
+
+        fn infer(
+            &mut self,
+            inputs: &[Vec<f32>],
+        ) -> Result<(Vec<Vec<f32>>, Option<crate::fpga::stats::CycleStats>)> {
+            std::thread::sleep(Duration::from_millis(self.ms));
+            Ok((inputs.to_vec(), None))
+        }
+
+        fn calibration_input(&self) -> Option<Vec<f32>> {
+            Some(vec![0.0])
+        }
+    }
+
+    #[test]
+    fn calibration_seeds_estimator_to_shed_cold_burst() {
+        // The backend takes ~60 ms per forward and offers a calibration
+        // input, so startup seeds the service estimator before the pool
+        // sees traffic: the very first deadline-checked request with a
+        // 5 ms budget is rejected on arrival instead of admitted cold
+        // and expired at dequeue 60 ms later.
+        let factory: SharedBackendFactory =
+            Arc::new(|| Ok(Box::new(CalibratedSleeper { ms: 60 }) as Box<dyn Backend>));
+        let coord = Coordinator::start(
+            vec![PoolSpec::replicated("cal", 1, factory)],
+            CoordinatorConfig { queue_capacity: 16, policy: BatchPolicy::immediate(1) },
+        )
+        .unwrap();
+        // The calibration forward is unmetered — no served requests yet.
+        let snap = coord.metrics().snapshot();
+        assert_eq!(snap.backends.get("cal").map(|b| b.requests).unwrap_or(0), 0);
+        let qos = RequestQos::with_deadline(Instant::now() + Duration::from_millis(5));
+        match coord.try_submit_to_qos(0, vec![1.0], qos) {
+            Err(SubmitError::Expired { estimated_wait }) => {
+                assert!(estimated_wait >= Duration::from_millis(5), "wait {estimated_wait:?}");
+            }
+            other => panic!("cold-start burst was admitted: {other:?}"),
+        }
+        assert_eq!(coord.metrics().snapshot().expired, 1);
+        // A feasible budget on the same fresh pool is still served.
+        let qos = RequestQos::with_deadline(Instant::now() + Duration::from_secs(30));
+        let rx = coord.try_submit_to_qos(0, vec![2.0], qos).unwrap();
+        assert_eq!(
+            rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap().output,
+            vec![2.0]
+        );
+        coord.shutdown();
+    }
+
+    #[test]
+    fn concurrent_admissions_share_one_wait_estimate() {
+        // 32 threads race tight-deadline submits against a single
+        // 40 ms/request worker. Each admission stays counted against
+        // the estimate while its push is in flight, so the burst cannot
+        // all reason against the same empty queue: only the handful
+        // that fit the 400 ms budget are admitted, the rest shed on
+        // arrival (instead of all 32 admitted and most expiring in
+        // place).
+        let factory: SharedBackendFactory =
+            Arc::new(|| Ok(Box::new(CalibratedSleeper { ms: 40 }) as Box<dyn Backend>));
+        let coord = Arc::new(
+            Coordinator::start(
+                vec![PoolSpec::replicated("cal", 1, factory)],
+                CoordinatorConfig { queue_capacity: 64, policy: BatchPolicy::immediate(1) },
+            )
+            .unwrap(),
+        );
+        let deadline = Instant::now() + Duration::from_millis(400);
+        let admitted = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let shed = Arc::new(AtomicUsize::new(0));
+        let threads: Vec<_> = (0..32)
+            .map(|i| {
+                let coord = coord.clone();
+                let admitted = admitted.clone();
+                let shed = shed.clone();
+                std::thread::spawn(move || {
+                    let qos = RequestQos::with_deadline(deadline);
+                    match coord.try_submit_to_qos(0, vec![i as f32], qos) {
+                        Ok(rx) => admitted.lock().unwrap().push(rx),
+                        Err(SubmitError::Expired { .. }) => {
+                            shed.fetch_add(1, Ordering::SeqCst);
+                        }
+                        Err(e) => panic!("unexpected {e:?}"),
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let admitted = Arc::try_unwrap(admitted).ok().unwrap().into_inner().unwrap();
+        let n = admitted.len();
+        assert!(n >= 1, "everything shed — estimator seeded wrong");
+        assert!(n <= 12, "{n} of 32 admitted against a 400 ms budget at 40 ms/request");
+        assert_eq!(n + shed.load(Ordering::SeqCst), 32);
+        for rx in admitted {
+            let _ = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        }
+        // The in-flight counter drained back to zero: a modest fresh
+        // deadline against the now-empty queue is admitted again.
+        let qos = RequestQos::with_deadline(Instant::now() + Duration::from_millis(300));
+        let rx = coord.try_submit_to_qos(0, vec![99.0], qos).expect("leaked in-flight admits");
+        rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        drop(rx);
+        Arc::try_unwrap(coord).ok().unwrap().shutdown();
+    }
+
+    #[test]
+    fn scale_up_adds_serving_replicas() {
+        let built = Arc::new(AtomicUsize::new(0));
+        let coord = Coordinator::start(
+            vec![PoolSpec::replicated("echo", 1, shared_echo("echo", built.clone()))],
+            CoordinatorConfig { queue_capacity: 64, policy: BatchPolicy::immediate(1) },
+        )
+        .unwrap();
+        assert!(coord.scalable(0));
+        assert_eq!(coord.pool_replicas(0), Some(1));
+        assert_eq!(coord.scale_to(0, 3).unwrap(), 3);
+        assert_eq!(built.load(Ordering::SeqCst), 3);
+        assert_eq!(coord.pool_replicas(0), Some(3));
+        // All replicas (startup and scaled-up alike) answer from the
+        // shared queue.
+        let receivers: Vec<_> =
+            (0..30).map(|i| coord.submit(vec![i as f32]).unwrap()).collect();
+        for (i, rx) in receivers.into_iter().enumerate() {
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+            assert_eq!(resp.output, vec![2.0 * i as f32]);
+        }
+        assert_eq!(coord.metrics().snapshot().backends["echo"].requests, 30);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn scale_down_with_in_flight_batch_loses_no_responses() {
+        // Three replicas, 80 ms per request; park work on all of them,
+        // then drop to one replica mid-flight. Retiring workers finish
+        // the batch they already claimed, queued leftovers fall to the
+        // survivor: every submitted request is answered.
+        let slow: SharedBackendFactory = Arc::new(|| {
+            Ok(Box::new(FnBackend::new("slow", 1, |inputs: &[Vec<f32>]| {
+                std::thread::sleep(Duration::from_millis(80));
+                Ok(inputs.to_vec())
+            })) as Box<dyn Backend>)
+        });
+        let coord = Coordinator::start(
+            vec![PoolSpec::replicated("slow", 3, slow)],
+            CoordinatorConfig { queue_capacity: 64, policy: BatchPolicy::immediate(1) },
+        )
+        .unwrap();
+        let receivers: Vec<_> =
+            (0..12).map(|i| coord.submit_to(0, vec![i as f32]).unwrap()).collect();
+        // Let the replicas claim their first batches before retiring.
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(coord.scale_to(0, 1).unwrap(), 1);
+        assert_eq!(coord.pool_replicas(0), Some(1));
+        for (i, rx) in receivers.into_iter().enumerate() {
+            let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+            assert_eq!(resp.output, vec![i as f32], "request {i} lost in scale-down");
+        }
+        // The survivor keeps serving new work.
+        let rx = coord.submit_to(0, vec![42.0]).unwrap();
+        assert_eq!(
+            rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap().output,
+            vec![42.0]
+        );
+        coord.shutdown();
+    }
+
+    #[test]
+    fn rescale_to_current_size_is_a_no_op() {
+        // min == max in the autoscaler collapses to scale_to(current):
+        // no backend built, no worker retired.
+        let built = Arc::new(AtomicUsize::new(0));
+        let coord = Coordinator::start(
+            vec![PoolSpec::replicated("echo", 2, shared_echo("echo", built.clone()))],
+            CoordinatorConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(coord.scale_to(0, 2).unwrap(), 2);
+        assert_eq!(built.load(Ordering::SeqCst), 2, "no-op rescale built a backend");
+        assert_eq!(coord.pool_replicas(0), Some(2));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn single_factory_pool_refuses_to_scale() {
+        let coord =
+            Coordinator::start(vec![echo_factory("echo")], CoordinatorConfig::default())
+                .unwrap();
+        assert!(!coord.scalable(0));
+        let err = coord.scale_to(0, 2).unwrap_err();
+        assert!(format!("{err:#}").contains("not scalable"), "{err:#}");
+        // Shrinking clamps at one replica and is a no-op here.
+        assert_eq!(coord.scale_to(0, 0).unwrap(), 1);
+        assert_eq!(coord.pool_replicas(0), Some(1));
         coord.shutdown();
     }
 

@@ -7,6 +7,7 @@
 //!                          --replicas 4 --models qnet=/tmp/qnet.emlp \
 //!                          --backends cpu,fpga,pipeline,int8 --pipeline-depth 4 \
 //!                          --precision int8 \
+//!                          --autoscale 1:4 --power-budget-w 3.0 \
 //!                          --metrics-addr 127.0.0.1:9184 --trace-capacity 8192
 //! edgemlp loadgen          --addr 127.0.0.1:7878 --requests 10000 \
 //!                          --model qnet --warmup 500 \
@@ -14,7 +15,7 @@
 //! edgemlp loadgen          --addr 127.0.0.1:7878 --storm --requests 5000 \
 //!                          --connections 16     # burst-reconnect churn
 //! edgemlp ctl              --addr 127.0.0.1:7878 \
-//!                          --op stats|ping|health|swap|models|metrics|trace
+//!                          --op stats|ping|health|autoscale|swap|models|metrics|trace
 //! edgemlp throughput       --requests 500       # in-process E6 sweep
 //! edgemlp table1           [--no-xla]         # paper Table I
 //! edgemlp fig5                                 # paper Figure 5
@@ -189,7 +190,7 @@ fn cmd_infer(args: &Args) -> Result<()> {
 /// Start the real TCP server: the replicated multi-model engine behind
 /// the wire protocol. Blocks until killed.
 fn cmd_serve(args: &Args) -> Result<()> {
-    use edgemlp::coordinator::{BatchPolicy, CoordinatorConfig, DegradePolicy};
+    use edgemlp::coordinator::{AutoscalePolicy, BatchPolicy, CoordinatorConfig, DegradePolicy};
     use edgemlp::serve::{
         BackendKind, EngineConfig, ModelRegistry, Precision, ServeConfig, Server,
     };
@@ -227,6 +228,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         args.get_parse("degrade-enter", degrade.enter_occupancy).map_err(anyhow::Error::msg)?;
     degrade.exit_occupancy =
         args.get_parse("degrade-exit", degrade.exit_occupancy).map_err(anyhow::Error::msg)?;
+    // `--autoscale min:max` runs the replica feedback controller over
+    // every pool; `--power-budget-w W` adds the accuracy-for-power
+    // loop (usable on its own too — the replica band then stays fixed).
+    let autoscale_arg = args.get("autoscale", "");
+    let power_budget_arg: f64 =
+        args.get_parse("power-budget-w", 0.0).map_err(anyhow::Error::msg)?;
     args.finish().map_err(anyhow::Error::msg)?;
     if !(read_timeout_s > 0.0) {
         bail!("--read-timeout-s must be positive, got {read_timeout_s}");
@@ -261,6 +268,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 .ok_or_else(|| anyhow::anyhow!("--precision '{precision_arg}' (f32|spx|int8|int4)"))?,
         )
     };
+    let autoscale: Option<AutoscalePolicy> = if autoscale_arg.is_empty() {
+        None
+    } else {
+        let (lo, hi) = autoscale_arg
+            .split_once(':')
+            .with_context(|| format!("--autoscale '{autoscale_arg}' is not min:max"))?;
+        let min: usize =
+            lo.trim().parse().map_err(|e| anyhow::anyhow!("--autoscale min: {e}"))?;
+        let max: usize =
+            hi.trim().parse().map_err(|e| anyhow::anyhow!("--autoscale max: {e}"))?;
+        let policy = AutoscalePolicy::band(min, max);
+        policy.validate().map_err(anyhow::Error::msg)?;
+        Some(policy)
+    };
+    if power_budget_arg < 0.0 || !power_budget_arg.is_finite() {
+        bail!("--power-budget-w must be a positive number of watts, got {power_budget_arg}");
+    }
+    let power_budget_w = (power_budget_arg > 0.0).then_some(power_budget_arg);
 
     let mlp = if random {
         let mut rng = Pcg32::new(2021);
@@ -336,6 +361,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 trace_capacity,
                 ..ServeConfig::default()
             },
+            autoscale,
+            power_budget_w,
         },
     )?;
     println!(
@@ -345,6 +372,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     if let Some(m) = server.metrics_local_addr() {
         println!("  metrics: http://{m}/metrics");
+    }
+    if let Some(p) = &autoscale {
+        println!("  autoscale: [{}, {}] replicas per pool", p.min, p.max);
+    }
+    if let Some(w) = power_budget_w {
+        println!("  power budget: {w} W (accuracy-for-power degrade before shedding)");
     }
     for slot in registry.slots() {
         let active = slot.active();
@@ -568,6 +601,41 @@ fn cmd_ctl(args: &Args) -> Result<()> {
             }
             table.print();
         }
+        "autoscale" => {
+            let (h, _, autoscale) = client.health_full()?;
+            match autoscale {
+                None => println!("server sent no autoscale block (pre-autoscaler build)"),
+                Some(a) if !a.enabled => println!("autoscaler: off (fixed replica counts)"),
+                Some(a) => {
+                    let budget = if a.budget_mw == 0 {
+                        "none".to_string()
+                    } else {
+                        format!("{:.2} W", a.budget_mw as f64 / 1e3)
+                    };
+                    println!(
+                        "autoscaler: band [{}, {}] | {} scale-ups / {} scale-downs | \
+                         power {:.3} W (budget {budget}) | power-degraded: {}",
+                        a.min_replicas,
+                        a.max_replicas,
+                        a.scale_ups,
+                        a.scale_downs,
+                        a.power_mw as f64 / 1e3,
+                        if a.power_degraded { "YES" } else { "no" },
+                    );
+                    use edgemlp::bench_harness::Table;
+                    let mut table = Table::new(&["pool", "replicas", "depth", "capacity"]);
+                    for p in &h.pools {
+                        table.row(&[
+                            p.name.clone(),
+                            p.replicas.to_string(),
+                            p.queue_depth.to_string(),
+                            p.queue_capacity.to_string(),
+                        ]);
+                    }
+                    table.print();
+                }
+            }
+        }
         "metrics" => print!("{}", client.metrics_text()?),
         "trace" => {
             let json = client.dump_trace()?;
@@ -579,7 +647,9 @@ fn cmd_ctl(args: &Args) -> Result<()> {
                 println!("wrote {} bytes to {out} (load in Perfetto / chrome://tracing)", json.len());
             }
         }
-        other => bail!("unknown op '{other}' (ping|stats|health|swap|models|metrics|trace)"),
+        other => {
+            bail!("unknown op '{other}' (ping|stats|health|autoscale|swap|models|metrics|trace)")
+        }
     }
     Ok(())
 }

@@ -27,5 +27,5 @@ pub mod trace;
 
 pub use energy::{pool_energy, render_energy_text, PoolEnergy};
 pub use http::MetricsHttp;
-pub use prometheus::render_prometheus;
+pub use prometheus::{render_prometheus, AutoscaleExport};
 pub use trace::{TraceEvent, TraceRecorder};

@@ -14,10 +14,41 @@ use crate::coordinator::metrics::MetricsSnapshot;
 use crate::fpga::power::EnergyModel;
 use crate::serve::wire::{HealthReport, LoopGauges};
 
+/// Autoscaler state for one scrape. The families it feeds are emitted
+/// unconditionally — a server running without an autoscaler exports
+/// zero counters and a degenerate replica band (`min == max ==
+/// current`), so dashboards and `tools/check_metrics.py` see the same
+/// family set either way.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AutoscaleExport {
+    /// True when an autoscaler thread is running.
+    pub enabled: bool,
+    /// Configured replica floor (meaningful only when `enabled`).
+    pub min_replicas: u64,
+    /// Configured replica ceiling (meaningful only when `enabled`).
+    pub max_replicas: u64,
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    /// Modeled board draw at the autoscaler's last sample, watts.
+    pub power_w: f64,
+    /// Configured power budget, watts (0 = no budget).
+    pub budget_w: f64,
+    /// True while the power budget holds degraded routing latched.
+    pub power_degraded: bool,
+}
+
+impl AutoscaleExport {
+    /// The no-autoscaler export: all zeros, band collapsed to current.
+    pub fn disabled() -> AutoscaleExport {
+        AutoscaleExport::default()
+    }
+}
+
 /// Render one scrape. `uptime_s` is the server's lifetime (the energy
 /// power denominators), `trace_len`/`trace_dropped` the trace ring's
 /// current state, `loop_gauges` a point-in-time view of the readiness
-/// event loop.
+/// event loop, `autoscale` the autoscaler's counters (or
+/// [`AutoscaleExport::disabled`]).
 pub fn render_prometheus(
     snap: &MetricsSnapshot,
     health: &HealthReport,
@@ -26,6 +57,7 @@ pub fn render_prometheus(
     trace_len: u64,
     trace_dropped: u64,
     loop_gauges: &LoopGauges,
+    autoscale: &AutoscaleExport,
 ) -> String {
     let mut out = String::with_capacity(4096);
     let pools = &snap.backends;
@@ -223,6 +255,83 @@ pub fn render_prometheus(
     health_gauge(&mut out, "edgemlp_pool_replicas", "Worker replicas draining the queue.", &|i| {
         health.pools[i].replicas as f64
     });
+
+    // ---- autoscaler (families always present; zeros when disabled) ----
+    health_gauge(
+        &mut out,
+        "edgemlp_pool_replicas_current",
+        "Active worker replicas (the autoscaler's controlled variable).",
+        &|i| health.pools[i].replicas as f64,
+    );
+    health_gauge(
+        &mut out,
+        "edgemlp_pool_replicas_min",
+        "Autoscale replica floor (current replicas when not autoscaling).",
+        &|i| {
+            if autoscale.enabled {
+                autoscale.min_replicas as f64
+            } else {
+                health.pools[i].replicas as f64
+            }
+        },
+    );
+    health_gauge(
+        &mut out,
+        "edgemlp_pool_replicas_max",
+        "Autoscale replica ceiling (current replicas when not autoscaling).",
+        &|i| {
+            if autoscale.enabled {
+                autoscale.max_replicas as f64
+            } else {
+                health.pools[i].replicas as f64
+            }
+        },
+    );
+
+    family(
+        &mut out,
+        "edgemlp_autoscale_scale_ups_total",
+        "counter",
+        "Replica-add actions taken by the autoscaler.",
+    );
+    sample(&mut out, "edgemlp_autoscale_scale_ups_total", &[], autoscale.scale_ups as f64);
+
+    family(
+        &mut out,
+        "edgemlp_autoscale_scale_downs_total",
+        "counter",
+        "Replica-retire actions taken by the autoscaler.",
+    );
+    sample(&mut out, "edgemlp_autoscale_scale_downs_total", &[], autoscale.scale_downs as f64);
+
+    family(
+        &mut out,
+        "edgemlp_autoscale_power_watts",
+        "gauge",
+        "Modeled board draw (static + windowed dynamic) at the last autoscale sample.",
+    );
+    sample(&mut out, "edgemlp_autoscale_power_watts", &[], autoscale.power_w);
+
+    family(
+        &mut out,
+        "edgemlp_autoscale_power_budget_watts",
+        "gauge",
+        "Configured power budget (0 = no budget).",
+    );
+    sample(&mut out, "edgemlp_autoscale_power_budget_watts", &[], autoscale.budget_w);
+
+    family(
+        &mut out,
+        "edgemlp_autoscale_power_degraded",
+        "gauge",
+        "1 while the power budget holds accuracy-for-power degradation latched.",
+    );
+    sample(
+        &mut out,
+        "edgemlp_autoscale_power_degraded",
+        &[],
+        if autoscale.power_degraded { 1.0 } else { 0.0 },
+    );
 
     // ---- latency histogram (native Prometheus histogram format) ----
     family(

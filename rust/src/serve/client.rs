@@ -295,6 +295,23 @@ impl Client {
         wire::decode_health(&resp.payload).map_err(|e| anyhow::anyhow!(e))
     }
 
+    /// [`Client::health`] plus the trailing v4 blocks: event-loop
+    /// gauges and autoscaler state (`None` when the server predates
+    /// either block).
+    pub fn health_full(
+        &mut self,
+    ) -> Result<(HealthReport, Option<wire::LoopGauges>, Option<wire::AutoscaleHealth>)> {
+        let id = self.send(Opcode::Health, Vec::new())?;
+        let resp = self.recv()?;
+        if resp.request_id != id {
+            bail!("response id {} for request {id}", resp.request_id);
+        }
+        if resp.status != Status::Ok {
+            bail!("health failed: {} {}", resp.status, resp.message());
+        }
+        wire::decode_health_full(&resp.payload).map_err(|e| anyhow::anyhow!(e))
+    }
+
     /// Enumerate the served models (slot, active version, dims,
     /// generation).
     pub fn list_models(&mut self) -> Result<Vec<ModelInfo>> {

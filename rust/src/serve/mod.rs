@@ -71,6 +71,6 @@ pub use registry::{
 pub use poll::raise_nofile_limit;
 pub use server::{BackendKind, EngineConfig, ServeConfig, Server};
 pub use wire::{
-    Frame, HealthReport, LoopGauges, ModelInfo, Opcode, PoolHealth, Precision, Priority, Qos,
-    Status, BACKEND_ANY,
+    AutoscaleHealth, Frame, HealthReport, LoopGauges, ModelInfo, Opcode, PoolHealth, Precision,
+    Priority, Qos, Status, BACKEND_ANY,
 };

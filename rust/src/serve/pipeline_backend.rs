@@ -217,6 +217,10 @@ impl Backend for PipelineCpuBackend {
     fn stage_stats(&self) -> Option<Vec<StageSnapshot>> {
         Some(self.pipe.snapshots())
     }
+
+    fn calibration_input(&self) -> Option<Vec<f32>> {
+        Some(vec![0.0; self.mlp.input_dim()])
+    }
 }
 
 /// Stage-pipelined SPx backend: per-layer stage threads over
@@ -306,6 +310,10 @@ impl Backend for PipelineFpgaBackend {
     fn stage_stats(&self) -> Option<Vec<StageSnapshot>> {
         Some(self.pipe.snapshots())
     }
+
+    fn calibration_input(&self) -> Option<Vec<f32>> {
+        Some(vec![0.0; self.input_dim()])
+    }
 }
 
 /// Stage-pipelined CPU backend following a slot's active model: a swap
@@ -368,6 +376,10 @@ impl Backend for SwappablePipelineCpuBackend {
     fn stage_stats(&self) -> Option<Vec<StageSnapshot>> {
         self.inner.stage_stats()
     }
+
+    fn calibration_input(&self) -> Option<Vec<f32>> {
+        self.inner.calibration_input()
+    }
 }
 
 /// Stage-pipelined SPx backend following a slot's active model.
@@ -424,6 +436,10 @@ impl Backend for SwappablePipelineFpgaBackend {
 
     fn stage_stats(&self) -> Option<Vec<StageSnapshot>> {
         self.inner.stage_stats()
+    }
+
+    fn calibration_input(&self) -> Option<Vec<f32>> {
+        self.inner.calibration_input()
     }
 }
 

@@ -547,10 +547,15 @@ impl TimerWheel {
     }
 
     /// Arm a `(token, generation)` entry to fire at or shortly after
-    /// `deadline` (granularity: one tick).
+    /// `deadline` (granularity: one tick). Uses ceiling division so a
+    /// sub-tick or already-lapsed deadline fires on the very next
+    /// `advance` instead of a full slot later; the floor is one tick
+    /// because `advance` steps the cursor before draining, so the
+    /// current slot would otherwise wait a whole wheel revolution.
     pub fn schedule(&mut self, now: Instant, deadline: Instant, token: u64, generation: u64) {
         let delay = deadline.saturating_duration_since(now);
-        let ticks = (delay.as_nanos() / self.tick.as_nanos()).saturating_add(1);
+        let tick_ns = self.tick.as_nanos();
+        let ticks = delay.as_nanos().div_ceil(tick_ns).max(1);
         let ticks = ticks.min(self.slots.len() as u128 - 1) as usize;
         let slot = (self.cursor + ticks) % self.slots.len();
         self.slots[slot].push((token, generation));
@@ -646,6 +651,42 @@ mod tests {
         wheel.advance(t0 + Duration::from_millis(60), &mut fired);
         assert_eq!(fired, vec![(1, 0)]);
         assert_eq!(wheel.depth(), 0);
+    }
+
+    #[test]
+    fn timer_wheel_past_due_deadline_fires_on_next_advance() {
+        // A deadline that already lapsed (or lands inside the current
+        // tick) must fire on the very next advance, not a full slot
+        // later — the old floor-plus-one placement pushed it one 100 ms
+        // slot out and read/drain deadlines fired up to two ticks late.
+        let t0 = Instant::now();
+        let mut wheel = TimerWheel::new(8, Duration::from_millis(10), t0);
+        let now = t0 + Duration::from_millis(2);
+        wheel.schedule(now, t0, 3, 4); // lapsed 2 ms ago
+        wheel.schedule(now, now, 5, 6); // due exactly now
+        assert_eq!(wheel.depth(), 2);
+
+        let mut fired = Vec::new();
+        wheel.advance(t0 + Duration::from_millis(11), &mut fired);
+        fired.sort_unstable();
+        assert_eq!(fired, vec![(3, 4), (5, 6)]);
+        assert_eq!(wheel.depth(), 0);
+    }
+
+    #[test]
+    fn timer_wheel_exact_tick_multiple_is_not_a_tick_late() {
+        // ceil(20 ms / 10 ms) = 2 slots: due at the second advance
+        // step, where the old floor+1 arithmetic parked it at 3 and it
+        // fired a full tick after its deadline.
+        let t0 = Instant::now();
+        let mut wheel = TimerWheel::new(8, Duration::from_millis(10), t0);
+        wheel.schedule(t0, t0 + Duration::from_millis(20), 7, 0);
+
+        let mut fired = Vec::new();
+        wheel.advance(t0 + Duration::from_millis(11), &mut fired);
+        assert!(fired.is_empty(), "not due at tick 1");
+        wheel.advance(t0 + Duration::from_millis(21), &mut fired);
+        assert_eq!(fired, vec![(7, 0)]);
     }
 
     #[test]

@@ -482,6 +482,10 @@ impl Backend for SwappableCpuBackend {
         self.refresh();
         self.inner.infer(inputs)
     }
+
+    fn calibration_input(&self) -> Option<Vec<f32>> {
+        self.inner.calibration_input()
+    }
 }
 
 /// FPGA-simulator backend following a slot's active model: a swap
@@ -523,6 +527,10 @@ impl Backend for SwappableFpgaBackend {
     fn infer(&mut self, inputs: &[Vec<f32>]) -> Result<(Vec<Vec<f32>>, Option<CycleStats>)> {
         self.refresh();
         self.inner.infer(inputs)
+    }
+
+    fn calibration_input(&self) -> Option<Vec<f32>> {
+        self.inner.calibration_input()
     }
 }
 
@@ -572,6 +580,10 @@ impl Backend for SwappableVsqBackend {
     fn infer(&mut self, inputs: &[Vec<f32>]) -> Result<(Vec<Vec<f32>>, Option<CycleStats>)> {
         self.refresh();
         self.inner.infer(inputs)
+    }
+
+    fn calibration_input(&self) -> Option<Vec<f32>> {
+        self.inner.calibration_input()
     }
 }
 

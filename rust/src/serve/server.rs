@@ -38,13 +38,18 @@ use super::wire::{
     self, Frame, HealthReport, ModelInfo, Opcode, PoolHealth, Precision, Status, BACKEND_ANY,
     DEFAULT_MAX_PAYLOAD,
 };
+use crate::coordinator::autoscale::{
+    AutoscaleHooks, AutoscalePolicy, AutoscaleStats, Autoscaler,
+};
 use crate::coordinator::degrade::{DegradeController, DegradePolicy};
 use crate::coordinator::request::CompletionNotify;
 use crate::coordinator::server::{Coordinator, PoolSpec, RequestQos, SubmitError};
 use crate::coordinator::CoordinatorConfig;
 use crate::fpga::accelerator::AccelConfig;
 use crate::fpga::power::EnergyModel;
-use crate::obs::{render_energy_text, render_prometheus, MetricsHttp, TraceRecorder};
+use crate::obs::{
+    render_energy_text, render_prometheus, AutoscaleExport, MetricsHttp, TraceRecorder,
+};
 use crate::serve::poll::{Event, LoopStats, Poller, TimerWheel, WakePipe};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -175,12 +180,24 @@ impl BackendKind {
 /// backend kinds to run, how many replica workers per pool, and the
 /// coordinator/server knobs.
 pub struct EngineConfig {
-    /// Worker replicas per (backend kind × model) pool.
+    /// Worker replicas per (backend kind × model) pool. When
+    /// `autoscale` is set this is only the starting point — the
+    /// controller clamps it into the band at startup.
     pub replicas: usize,
     /// Backend kinds, in wire `backend`-index order.
     pub backends: Vec<BackendKind>,
     pub coordinator: CoordinatorConfig,
     pub serve: ServeConfig,
+    /// Replica-band feedback controller (CLI `--autoscale min:max`);
+    /// `None` = fixed replica counts.
+    pub autoscale: Option<AutoscalePolicy>,
+    /// Server-wide power budget in watts (CLI `--power-budget-w`).
+    /// Modeled draw sustained strictly over it latches the power half
+    /// of every route's degrade mode — `BACKEND_ANY` traffic re-routes
+    /// to the cheapest (lowest-bit) pool *before* anything is shed.
+    /// Works with or without `autoscale` (without, a degenerate
+    /// fixed-size controller still runs the power loop).
+    pub power_budget_w: Option<f64>,
 }
 
 impl Default for EngineConfig {
@@ -190,6 +207,8 @@ impl Default for EngineConfig {
             backends: vec![BackendKind::Cpu],
             coordinator: CoordinatorConfig::default(),
             serve: ServeConfig::default(),
+            autoscale: None,
+            power_budget_w: None,
         }
     }
 }
@@ -227,11 +246,23 @@ struct ModelRoute {
     cheapest_pool: usize,
 }
 
+/// What the metrics/health renderers need to know about a running
+/// autoscaler: its live counters plus the static band and budget.
+struct AutoscaleView {
+    stats: Arc<AutoscaleStats>,
+    policy: AutoscalePolicy,
+    budget_w: Option<f64>,
+}
+
 struct Shared {
-    coord: Coordinator,
+    /// Behind an `Arc` because the autoscaler thread samples and
+    /// resizes pools through its own handle.
+    coord: Arc<Coordinator>,
     registry: Arc<ModelRegistry>,
     config: ServeConfig,
-    routes: BTreeMap<String, ModelRoute>,
+    /// Behind an `Arc` because the autoscaler's power hook latches
+    /// degrade mode on every route without holding `Shared`.
+    routes: Arc<BTreeMap<String, ModelRoute>>,
     default_model: String,
     stop: AtomicBool,
     active_conns: AtomicUsize,
@@ -252,6 +283,9 @@ struct Shared {
     /// Server start, the origin of `edgemlp_uptime_seconds` and the
     /// window for average-power figures.
     start: Instant,
+    /// Autoscaler counters for the metrics/health surfaces; `None`
+    /// when no controller is running (families still render as zeros).
+    autoscale: Option<AutoscaleView>,
 }
 
 /// A running server. [`Server::shutdown`] (or drop) stops accepting,
@@ -264,6 +298,10 @@ pub struct Server {
     hub: Arc<NotifyHub>,
     /// Prometheus exposition sidecar, when `metrics_addr` was set.
     metrics_http: Option<MetricsHttp>,
+    /// Replica/power feedback controller, when the engine asked for
+    /// one. Shut down before the coordinator so no resize races the
+    /// queue teardown.
+    autoscaler: Option<Autoscaler>,
 }
 
 impl Server {
@@ -281,6 +319,14 @@ impl Server {
             bail!("engine needs at least one backend kind");
         }
         engine.serve.degrade.validate().map_err(|e| anyhow::anyhow!(e))?;
+        if let Some(p) = &engine.autoscale {
+            p.validate().map_err(anyhow::Error::msg)?;
+        }
+        if let Some(w) = engine.power_budget_w {
+            if !w.is_finite() || w <= 0.0 {
+                bail!("power budget must be a positive number of watts (got {w})");
+            }
+        }
         let replicas = engine.replicas.max(1);
         // One trace ring for the whole engine: connection handlers, the
         // coordinator's queues/workers, and every pipeline stage write
@@ -361,7 +407,26 @@ impl Server {
             }
         }
         let default_model = registry.default_slot_name().to_string();
-        Self::start_inner(coord, registry, routes, default_model, addr, engine.serve, tracer)
+        // A power budget without a replica band still needs the
+        // sampling thread: run the controller over a degenerate
+        // (fixed-size) band so only the power loop acts.
+        let autoscale = match (engine.autoscale, engine.power_budget_w) {
+            (Some(policy), budget) => Some((policy, budget)),
+            (None, Some(budget)) => {
+                Some((AutoscalePolicy::band(replicas, replicas), Some(budget)))
+            }
+            (None, None) => None,
+        };
+        Self::start_inner(
+            coord,
+            registry,
+            routes,
+            default_model,
+            addr,
+            engine.serve,
+            tracer,
+            autoscale,
+        )
     }
 
     /// Bind `addr` (use port 0 for an ephemeral port) and start
@@ -395,9 +460,10 @@ impl Server {
         // A caller-built coordinator carries no tracer, so only the
         // connection-level events record on this path.
         let tracer = TraceRecorder::new(config.trace_capacity);
-        Self::start_inner(coord, registry, routes, default_model, addr, config, tracer)
+        Self::start_inner(coord, registry, routes, default_model, addr, config, tracer, None)
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn start_inner(
         coord: Coordinator,
         registry: Arc<ModelRegistry>,
@@ -406,11 +472,27 @@ impl Server {
         addr: &str,
         config: ServeConfig,
         tracer: Arc<TraceRecorder>,
+        autoscale: Option<(AutoscalePolicy, Option<f64>)>,
     ) -> Result<Server> {
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
         listener.set_nonblocking(true).context("nonblocking listener")?;
         let local_addr = listener.local_addr()?;
         let metrics_addr = config.metrics_addr.clone();
+        let coord = Arc::new(coord);
+        let routes = Arc::new(routes);
+        let energy = EnergyModel::default_fpga();
+        let autoscaler = match autoscale {
+            Some((policy, budget_w)) => {
+                let hooks = autoscale_hooks(&coord, &routes, energy);
+                Some(Autoscaler::spawn(coord.clone(), policy, budget_w, hooks)?)
+            }
+            None => None,
+        };
+        let autoscale_view = autoscaler.as_ref().map(|a| AutoscaleView {
+            stats: a.stats(),
+            policy: a.policy(),
+            budget_w: a.budget_w(),
+        });
         let shared = Arc::new(Shared {
             coord,
             registry,
@@ -421,9 +503,10 @@ impl Server {
             active_conns: AtomicUsize::new(0),
             read_timeouts: AtomicU64::new(0),
             tracer,
-            energy: EnergyModel::default_fpga(),
+            energy,
             loop_stats: LoopStats::default(),
             start: Instant::now(),
+            autoscale: autoscale_view,
         });
         let metrics_http = match metrics_addr {
             Some(addr) => {
@@ -446,7 +529,7 @@ impl Server {
                 .spawn(move || EventLoop::new(listener, shared, hub).run())
                 .context("spawn event loop")?
         };
-        Ok(Server { shared, local_addr, evloop: Some(evloop), hub, metrics_http })
+        Ok(Server { shared, local_addr, evloop: Some(evloop), hub, metrics_http, autoscaler })
     }
 
     /// The bound address (resolves ephemeral ports).
@@ -462,6 +545,11 @@ impl Server {
     /// The request-lifecycle trace ring (what `DumpTrace` exports).
     pub fn tracer(&self) -> Arc<TraceRecorder> {
         self.shared.tracer.clone()
+    }
+
+    /// The autoscaler's live counters, when a controller is running.
+    pub fn autoscale_stats(&self) -> Option<Arc<AutoscaleStats>> {
+        self.autoscaler.as_ref().map(|a| a.stats())
     }
 
     /// Bound address of the Prometheus sidecar, when one is running
@@ -481,6 +569,11 @@ impl Server {
         self.shared.stop.store(true, Ordering::SeqCst);
         if let Some(m) = self.metrics_http.take() {
             m.shutdown();
+        }
+        // The autoscaler goes first so no resize races the coordinator
+        // teardown below.
+        if let Some(a) = self.autoscaler.take() {
+            a.shutdown();
         }
         // The wakeup pipe interrupts the loop's poll immediately.
         self.hub.wake();
@@ -944,6 +1037,22 @@ fn dispatch(frame: Frame, shared: &Shared, notify: &CompletionNotify) -> Outgoin
                 g.pending_writeback_bytes,
                 g.timer_depth,
             ));
+            if let Some(a) = &shared.autoscale {
+                let budget = match a.budget_w {
+                    Some(w) => format!("{w:.2} W"),
+                    None => "none".to_string(),
+                };
+                text.push_str(&format!(
+                    "autoscale: band [{}, {}], {} ups / {} downs, \
+                     power {:.3} W (budget {budget}), power-degraded {}\n",
+                    a.policy.min,
+                    a.policy.max,
+                    a.stats.scale_ups.load(Ordering::Relaxed),
+                    a.stats.scale_downs.load(Ordering::Relaxed),
+                    a.stats.power_mw.load(Ordering::Relaxed) as f64 / 1e3,
+                    a.stats.power_degraded.load(Ordering::Relaxed),
+                ));
+            }
             text.push_str(&format!(
                 "connections: {}\n{}",
                 shared.active_conns.load(Ordering::SeqCst),
@@ -1072,10 +1181,15 @@ fn dispatch(frame: Frame, shared: &Shared, notify: &CompletionNotify) -> Outgoin
                 bad_request(shared, "version_gate", Opcode::Health, id, "Health requires protocol v3")
             } else {
                 let report = health_report(shared);
-                // Encode at the REQUEST's version: the v4 extension and
-                // loop-gauge blocks would be trailing garbage to a v3
-                // decoder.
-                match wire::encode_health_loop(&report, &shared.loop_stats.gauges(), version) {
+                // Encode at the REQUEST's version: the v4 extension,
+                // loop-gauge, and autoscale blocks would be trailing
+                // garbage to a v3 decoder.
+                match wire::encode_health_full(
+                    &report,
+                    &shared.loop_stats.gauges(),
+                    &autoscale_health(shared),
+                    version,
+                ) {
                     Ok(payload) => Outgoing::Ready(Frame::ok(Opcode::Health, id, payload)),
                     Err(e) => {
                         Outgoing::Ready(Frame::error(Opcode::Health, id, Status::Internal, &e))
@@ -1215,6 +1329,87 @@ fn request_qos(qos: wire::Qos) -> RequestQos {
     }
 }
 
+/// Build the closures wiring an [`Autoscaler`] to this engine: a power
+/// probe that differentiates the energy model's accumulated dynamic
+/// joules into watts over each sampling window, and a latch applying
+/// budget overruns to every route's degrade controller.
+fn autoscale_hooks(
+    coord: &Arc<Coordinator>,
+    routes: &Arc<BTreeMap<String, ModelRoute>>,
+    energy: EnergyModel,
+) -> AutoscaleHooks {
+    // Modeled draw = static board power + Δ(dynamic joules)/Δt across
+    // the sampling window. The first sample has no window yet and
+    // reports the static floor.
+    let metrics = coord.metrics();
+    let mut last: Option<(Instant, f64)> = None;
+    let power_watts = Box::new(move || {
+        let now = Instant::now();
+        let total: f64 = metrics
+            .snapshot()
+            .backends
+            .values()
+            .map(|m| energy.dynamic_energy_j(&m.cycle_stats))
+            .sum();
+        let watts = match last {
+            Some((t0, j0)) => {
+                let dt = now.duration_since(t0).as_secs_f64().max(1e-9);
+                energy.static_w + (total - j0).max(0.0) / dt
+            }
+            None => energy.static_w,
+        };
+        last = Some((now, total));
+        watts
+    });
+    let metrics = coord.metrics();
+    let routes = routes.clone();
+    let set_power_degraded = Box::new(move |over: bool| {
+        for route in routes.values() {
+            if route.degrade.set_power(over) {
+                metrics.record_degraded_transition();
+            }
+        }
+    });
+    AutoscaleHooks { power_watts, set_power_degraded }
+}
+
+/// The autoscaler's counters for one scrape
+/// ([`AutoscaleExport::disabled`] when no controller runs — the
+/// families still render, as zeros over a collapsed band).
+fn autoscale_export(shared: &Shared) -> AutoscaleExport {
+    match &shared.autoscale {
+        Some(a) => AutoscaleExport {
+            enabled: true,
+            min_replicas: a.policy.min as u64,
+            max_replicas: a.policy.max as u64,
+            scale_ups: a.stats.scale_ups.load(Ordering::Relaxed),
+            scale_downs: a.stats.scale_downs.load(Ordering::Relaxed),
+            power_w: a.stats.power_mw.load(Ordering::Relaxed) as f64 / 1e3,
+            budget_w: a.budget_w.unwrap_or(0.0),
+            power_degraded: a.stats.power_degraded.load(Ordering::Relaxed),
+        },
+        None => AutoscaleExport::disabled(),
+    }
+}
+
+/// The autoscale block for one v4 `Health` response (all zeros with
+/// `enabled = false` when no controller runs).
+fn autoscale_health(shared: &Shared) -> wire::AutoscaleHealth {
+    match &shared.autoscale {
+        Some(a) => wire::AutoscaleHealth {
+            enabled: true,
+            min_replicas: a.policy.min as u32,
+            max_replicas: a.policy.max as u32,
+            scale_ups: a.stats.scale_ups.load(Ordering::Relaxed),
+            scale_downs: a.stats.scale_downs.load(Ordering::Relaxed),
+            power_mw: a.stats.power_mw.load(Ordering::Relaxed),
+            budget_mw: a.stats.budget_mw.load(Ordering::Relaxed),
+            power_degraded: a.stats.power_degraded.load(Ordering::Relaxed),
+        },
+        None => wire::AutoscaleHealth::default(),
+    }
+}
+
 /// Render the full Prometheus exposition text — the `/metrics` sidecar
 /// body and the `StatsV2` payload are byte-identical.
 fn render_metrics_text(shared: &Shared) -> String {
@@ -1228,6 +1423,7 @@ fn render_metrics_text(shared: &Shared) -> String {
         shared.tracer.len() as u64,
         shared.tracer.dropped(),
         &shared.loop_stats.gauges(),
+        &autoscale_export(shared),
     )
 }
 

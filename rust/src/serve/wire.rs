@@ -1206,9 +1206,73 @@ pub fn encode_health_loop(
     Ok(out)
 }
 
+/// Autoscaler state the server appends to v4 `Health` responses as a
+/// trailing block after [`LoopGauges`]. Like the blocks before it, the
+/// block is present iff bytes remain — payloads from servers without
+/// the autoscaler end exactly at the loop gauges, and truncation inside
+/// the block is malformed. A non-autoscaling server that *does* send
+/// the block marks it `enabled = false` with zeroed counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct AutoscaleHealth {
+    /// True when an autoscaler thread is running.
+    pub enabled: bool,
+    /// Configured replica floor per scalable pool.
+    pub min_replicas: u32,
+    /// Configured replica ceiling per scalable pool.
+    pub max_replicas: u32,
+    /// Replica-add actions taken since startup.
+    pub scale_ups: u64,
+    /// Replica-retire actions taken since startup.
+    pub scale_downs: u64,
+    /// Modeled board draw at the last sample, milliwatts.
+    pub power_mw: u64,
+    /// Configured power budget, milliwatts (0 = no budget).
+    pub budget_mw: u64,
+    /// True while the power budget holds degraded routing latched.
+    pub power_degraded: bool,
+}
+
+/// [`encode_health_loop`] plus the trailing [`AutoscaleHealth`] block
+/// (`u8 enabled | u32 min | u32 max | u64 ups | u64 downs |
+/// u64 power_mw | u64 budget_mw | u8 power_degraded`, v4+ framing only).
+pub fn encode_health_full(
+    report: &HealthReport,
+    gauges: &LoopGauges,
+    autoscale: &AutoscaleHealth,
+    version: u16,
+) -> Result<Vec<u8>, String> {
+    let mut out = encode_health_loop(report, gauges, version)?;
+    if version >= 4 {
+        out.push(autoscale.enabled as u8);
+        out.extend_from_slice(&autoscale.min_replicas.to_le_bytes());
+        out.extend_from_slice(&autoscale.max_replicas.to_le_bytes());
+        out.extend_from_slice(&autoscale.scale_ups.to_le_bytes());
+        out.extend_from_slice(&autoscale.scale_downs.to_le_bytes());
+        out.extend_from_slice(&autoscale.power_mw.to_le_bytes());
+        out.extend_from_slice(&autoscale.budget_mw.to_le_bytes());
+        out.push(autoscale.power_degraded as u8);
+    }
+    Ok(out)
+}
+
+/// [`decode_health_loop`] that also surfaces the trailing
+/// [`AutoscaleHealth`] block when the server sent one (`None` for
+/// payloads from servers without the autoscaler).
+pub fn decode_health_full(
+    payload: &[u8],
+) -> Result<(HealthReport, Option<LoopGauges>, Option<AutoscaleHealth>), String> {
+    decode_health_parts(payload)
+}
+
 /// [`decode_health`] that also surfaces the trailing [`LoopGauges`]
 /// block when the server sent one (`None` for pre-loop payloads).
 pub fn decode_health_loop(payload: &[u8]) -> Result<(HealthReport, Option<LoopGauges>), String> {
+    decode_health_parts(payload).map(|(report, gauges, _)| (report, gauges))
+}
+
+fn decode_health_parts(
+    payload: &[u8],
+) -> Result<(HealthReport, Option<LoopGauges>, Option<AutoscaleHealth>), String> {
     let mut b = Buf::new(payload);
     let degraded = match b.u8()? {
         0 => false,
@@ -1265,6 +1329,38 @@ pub fn decode_health_loop(payload: &[u8]) -> Result<(HealthReport, Option<LoopGa
     } else {
         None
     };
+    // Autoscale block, present iff bytes remain after the loop gauges —
+    // payloads from servers without the autoscaler end exactly here.
+    let autoscale = if b.remaining() > 0 {
+        let enabled = match b.u8()? {
+            0 => false,
+            1 => true,
+            other => return Err(format!("bad autoscale enabled flag {other}")),
+        };
+        let min_replicas = b.u32()?;
+        let max_replicas = b.u32()?;
+        let scale_ups = b.u64()?;
+        let scale_downs = b.u64()?;
+        let power_mw = b.u64()?;
+        let budget_mw = b.u64()?;
+        let power_degraded = match b.u8()? {
+            0 => false,
+            1 => true,
+            other => return Err(format!("bad autoscale degraded flag {other}")),
+        };
+        Some(AutoscaleHealth {
+            enabled,
+            min_replicas,
+            max_replicas,
+            scale_ups,
+            scale_downs,
+            power_mw,
+            budget_mw,
+            power_degraded,
+        })
+    } else {
+        None
+    };
     b.finish()?;
     Ok((
         HealthReport {
@@ -1276,6 +1372,7 @@ pub fn decode_health_loop(payload: &[u8]) -> Result<(HealthReport, Option<LoopGa
             bad_requests,
         },
         gauges,
+        autoscale,
     ))
 }
 
@@ -1963,6 +2060,59 @@ mod tests {
         // Truncating inside the gauge block is malformed, not a panic.
         for cut in v4.len() + 1..full.len() {
             assert!(decode_health_loop(&full[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn health_autoscale_block_is_a_strict_suffix() {
+        let report = HealthReport {
+            degraded: true,
+            degraded_transitions: 3,
+            read_timeouts: 0,
+            pools: vec![PoolHealth {
+                name: "int4/default".into(),
+                queue_depth: 1,
+                queue_capacity: 64,
+                replicas: 3,
+                shed: 0,
+                expired: 0,
+            }],
+            busy_rejected: 0,
+            bad_requests: Vec::new(),
+        };
+        let gauges = LoopGauges { registered_conns: 7, ..LoopGauges::default() };
+        let autoscale = AutoscaleHealth {
+            enabled: true,
+            min_replicas: 1,
+            max_replicas: 4,
+            scale_ups: 9,
+            scale_downs: 6,
+            power_mw: 3125,
+            budget_mw: 1000,
+            power_degraded: true,
+        };
+        // The autoscale block is a strict byte extension of the loop
+        // payload; every older decoder keeps accepting the full frame.
+        let with_loop = encode_health_loop(&report, &gauges, 4).unwrap();
+        let full = encode_health_full(&report, &gauges, &autoscale, 4).unwrap();
+        assert_eq!(&full[..with_loop.len()], &with_loop[..]);
+        assert_eq!(
+            decode_health_full(&full).unwrap(),
+            (report.clone(), Some(gauges), Some(autoscale))
+        );
+        assert_eq!(decode_health_loop(&full).unwrap(), (report.clone(), Some(gauges)));
+        assert_eq!(decode_health(&full).unwrap(), report);
+        // Autoscale-less payloads decode to None; pre-v4 framing omits
+        // every trailing block.
+        assert_eq!(decode_health_full(&with_loop).unwrap().2, None);
+        let v3 = encode_health_full(&report, &gauges, &autoscale, 3).unwrap();
+        assert_eq!(v3, encode_health_at(&report, 3).unwrap());
+        // A disabled autoscaler still round-trips (all-zero block).
+        let off = encode_health_full(&report, &gauges, &AutoscaleHealth::default(), 4).unwrap();
+        assert_eq!(decode_health_full(&off).unwrap().2, Some(AutoscaleHealth::default()));
+        // Truncating inside the autoscale block is malformed, not a panic.
+        for cut in with_loop.len() + 1..full.len() {
+            assert!(decode_health_full(&full[..cut]).is_err(), "cut at {cut}");
         }
     }
 }

@@ -200,6 +200,8 @@ fn two_models_concurrent_traffic_with_independent_swap() {
                 policy: BatchPolicy::windowed(32, Duration::from_millis(1)),
             },
             serve: ServeConfig::default(),
+            autoscale: None,
+            power_budget_w: None,
         },
     )
     .unwrap();
@@ -613,6 +615,8 @@ fn pipeline_backend_serves_bitwise_and_reports_stage_occupancy() {
                 policy: BatchPolicy::windowed(16, Duration::from_millis(1)),
             },
             serve: ServeConfig::default(),
+            autoscale: None,
+            power_budget_w: None,
         },
     )
     .unwrap();

@@ -5,7 +5,7 @@
 //! semantics, and energy figures consistent with the `EnergyModel`
 //! applied to the server's aggregate cycle stats.
 
-use edgemlp::coordinator::{BatchPolicy, CoordinatorConfig};
+use edgemlp::coordinator::{AutoscalePolicy, BatchPolicy, CoordinatorConfig};
 use edgemlp::fpga::accelerator::AccelConfig;
 use edgemlp::fpga::power::EnergyModel;
 use edgemlp::nn::activations::Activation;
@@ -15,7 +15,7 @@ use edgemlp::quant::spx::SpxConfig;
 use edgemlp::serve::wire;
 use edgemlp::serve::{
     run_loadgen, BackendKind, Client, EngineConfig, InferReply, LoadGenConfig, ModelRegistry,
-    ServeConfig, Server, Status,
+    ServeConfig, Server, Status, BACKEND_ANY,
 };
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
@@ -46,6 +46,8 @@ fn start_engine(backends: Vec<BackendKind>, serve: ServeConfig) -> Server {
                 policy: BatchPolicy::windowed(16, Duration::from_millis(1)),
             },
             serve,
+            autoscale: None,
+            power_budget_w: None,
         },
     )
     .unwrap()
@@ -96,6 +98,14 @@ const REQUIRED_FAMILIES: &[&str] = &[
     "edgemlp_pool_queue_depth",
     "edgemlp_pool_queue_capacity",
     "edgemlp_pool_replicas",
+    "edgemlp_pool_replicas_current",
+    "edgemlp_pool_replicas_min",
+    "edgemlp_pool_replicas_max",
+    "edgemlp_autoscale_scale_ups_total",
+    "edgemlp_autoscale_scale_downs_total",
+    "edgemlp_autoscale_power_watts",
+    "edgemlp_autoscale_power_budget_watts",
+    "edgemlp_autoscale_power_degraded",
     "edgemlp_request_latency_seconds",
 ];
 
@@ -462,6 +472,8 @@ fn health_extension_counts_busy_and_bad_requests() {
                 policy: BatchPolicy::immediate(8),
             },
             serve: ServeConfig { max_conns: 1, ..ServeConfig::default() },
+            autoscale: None,
+            power_budget_w: None,
         },
     )
     .unwrap();
@@ -609,5 +621,94 @@ fn fpga_pool_reports_consistent_nonzero_energy() {
     // Pure-CPU pools carry no dynamic energy: the absence is the
     // paper's comparison point, and the model covers SPx only.
     assert!(!stats.contains("energy cpu/"), "{stats}");
+    server.shutdown();
+}
+
+/// The power-budget loop end-to-end: with a budget below the 2.5 W
+/// static floor, the gate must latch accuracy-for-power degradation,
+/// re-route `BACKEND_ANY` onto the cheapest quantized pool, surface the
+/// state on the Health autoscale block and the Prometheus exposition —
+/// and shed nothing while doing it.
+#[test]
+fn power_budget_degrades_routing_before_shedding() {
+    let registry = ModelRegistry::new("default", mnist_shaped(1), SpxConfig::sp2(5));
+    let server = Server::serve(
+        registry,
+        "127.0.0.1:0",
+        EngineConfig {
+            replicas: 1,
+            backends: vec![
+                BackendKind::FpgaSim(AccelConfig::default_fpga()),
+                BackendKind::Int8,
+                BackendKind::Int4,
+            ],
+            coordinator: CoordinatorConfig {
+                queue_capacity: 1024,
+                policy: BatchPolicy::windowed(16, Duration::from_millis(1)),
+            },
+            serve: ServeConfig::default(),
+            autoscale: Some(AutoscalePolicy {
+                sample_every: Duration::from_millis(10),
+                dwell: Duration::from_millis(30),
+                ..AutoscalePolicy::band(1, 2)
+            }),
+            power_budget_w: Some(1.0),
+        },
+    )
+    .unwrap();
+    let mut client = Client::connect(server.local_addr()).unwrap();
+
+    // The static floor alone (2.5 W) exceeds the 1 W budget, so the
+    // gate must latch after its dwell. Poll the Health autoscale block.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    let auto = loop {
+        let (_, _, auto) = client.health_full().unwrap();
+        let auto = auto.expect("v4 health must carry the autoscale block");
+        assert!(auto.enabled);
+        if auto.power_degraded {
+            break auto;
+        }
+        assert!(std::time::Instant::now() < deadline, "budget gate never latched: {auto:?}");
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    assert_eq!((auto.min_replicas, auto.max_replicas), (1, 2));
+    assert_eq!(auto.budget_mw, 1_000);
+    assert!(auto.power_mw >= 2_500, "power below the static floor: {auto:?}");
+
+    // Degraded `BACKEND_ANY` traffic lands on the cheapest pool (int4).
+    let n: u64 = 24;
+    for _ in 0..n {
+        match client.infer(BACKEND_ANY, &probe()).unwrap() {
+            InferReply::Output(out) => assert_eq!(out.len(), 10),
+            other => panic!("{other:?}"),
+        }
+    }
+    let snap = server.metrics().snapshot();
+    assert_eq!(snap.backends["int4/default"].requests, n, "ANY must route to int4");
+    let (health, _, _) = client.health_full().unwrap();
+    assert!(health.degraded, "power degrade must show on the health flag");
+    let shed: u64 = health.pools.iter().map(|p| p.shed).sum();
+    assert_eq!(shed, 0, "degradation must precede shedding");
+
+    // The exposition carries the same story.
+    let text = client.metrics_text().unwrap();
+    assert_valid_exposition(&text);
+    let scalar = |name: &str| -> f64 {
+        text.lines()
+            .find(|l| l.starts_with(name) && !l.starts_with("# "))
+            .map(sample_value)
+            .unwrap_or_else(|| panic!("no {name} sample\n{text}"))
+    };
+    assert_eq!(scalar("edgemlp_autoscale_power_degraded "), 1.0);
+    assert_eq!(scalar("edgemlp_autoscale_power_budget_watts "), 1.0);
+    assert!(scalar("edgemlp_autoscale_power_watts ") >= 2.5);
+    let band = |name: &str| -> f64 {
+        text.lines()
+            .find(|l| l.starts_with(&format!("{name}{{")))
+            .map(sample_value)
+            .unwrap_or_else(|| panic!("no {name} sample\n{text}"))
+    };
+    assert_eq!(band("edgemlp_pool_replicas_min"), 1.0);
+    assert_eq!(band("edgemlp_pool_replicas_max"), 2.0);
     server.shutdown();
 }

@@ -428,6 +428,8 @@ fn degraded_mode_routes_backend_any_to_the_lowest_bytes_pool() {
                 },
                 ..ServeConfig::default()
             },
+            autoscale: None,
+            power_budget_w: None,
         },
     )
     .unwrap();

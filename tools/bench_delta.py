@@ -54,6 +54,8 @@ LOWER_BETTER_SUBSTR = (
     "errors",
     "energy",
     "rss",
+    "watts",
+    "settle",
 )
 
 

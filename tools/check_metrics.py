@@ -57,6 +57,14 @@ REQUIRED_FAMILIES = [
     "edgemlp_pool_queue_depth",
     "edgemlp_pool_queue_capacity",
     "edgemlp_pool_replicas",
+    "edgemlp_pool_replicas_current",
+    "edgemlp_pool_replicas_min",
+    "edgemlp_pool_replicas_max",
+    "edgemlp_autoscale_scale_ups_total",
+    "edgemlp_autoscale_scale_downs_total",
+    "edgemlp_autoscale_power_watts",
+    "edgemlp_autoscale_power_budget_watts",
+    "edgemlp_autoscale_power_degraded",
     "edgemlp_request_latency_seconds",
     "edgemlp_pool_energy_joules_total",
     "edgemlp_pool_energy_joules_per_request",
